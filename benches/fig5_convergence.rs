@@ -1,0 +1,61 @@
+//! Figure 5 — "Convergence performance of sparsified- and non-sparsified-
+//! distributed training on 16 GPUs."
+//!
+//! Real training (PJRT MLP classifier on Gaussian clusters) across 16
+//! simulated ranks for every sparsifier; reports held-out loss against
+//! *simulated wall-clock* (compute measured, comm from the α–β model) —
+//! the paper's x-axis.
+//!
+//! Shape to match the paper: exdyna reaches a given loss in the least
+//! simulated time; hard-threshold converges per-iteration but pays comm;
+//! topk/cltk incomparably slower per unit time (selection cost), cltk
+//! additionally converges worse per iteration (stale delegated selection);
+//! dense matches exdyna per-iteration but pays the full all-reduce.
+
+use exdyna::config::ExperimentConfig;
+use exdyna::coordinator::ExDynaCfg;
+use exdyna::runtime::{Engine, Manifest, ModelRuntime};
+use exdyna::sparsifiers::make_sparsifier_factory;
+use exdyna::training::real::{RealTrainer, RealTrainerCfg, SelectBackend};
+use exdyna::training::LrSchedule;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let iters = if quick { 40 } else { 150 };
+    let ranks = 16;
+    let d = 0.005; // MLP has 77k params; d=0.005 => k~384, a realistic load
+    let _ = ExperimentConfig::clone; // (keep config type linked for docs)
+
+    let engine = Engine::cpu()?;
+    let manifest = Manifest::load("artifacts")?;
+    println!("# Fig. 5 — convergence vs simulated time (MLP/clusters, {ranks} ranks, d = {d}, {iters} iters)\n");
+    println!("method,iter,sim_time_s,eval_loss");
+    let mut summaries = Vec::new();
+    for sp in ["exdyna", "hard-threshold", "topk", "cltk", "dense"] {
+        let rt = ModelRuntime::load(&engine, &manifest, "mlp")?;
+        let cfg = RealTrainerCfg {
+            n_ranks: ranks,
+            iters,
+            lr: LrSchedule::constant(0.5),
+            seed: 11,
+            backend: SelectBackend::Host,
+            eval_every: (iters / 12).max(1),
+        };
+        // hard-threshold δ for this model: plausible-but-static guess
+        let factory = make_sparsifier_factory(sp, d, 0.004, ExDynaCfg::default_for(ranks))?;
+        let mut tr = RealTrainer::new(rt, cfg, factory.as_ref())?;
+        tr.run()?;
+        for e in &tr.evals {
+            println!("{sp},{},{:.4},{:.4}", e.t, e.sim_time, e.loss);
+        }
+        let final_loss = tr.evals.last().map(|e| e.loss).unwrap_or(f64::NAN);
+        let total_time = tr.trace.cumulative_time().last().copied().unwrap_or(0.0);
+        summaries.push((sp, final_loss, total_time));
+    }
+    eprintln!("\n# summary (final held-out loss, total simulated time):");
+    for (sp, loss, time) in &summaries {
+        eprintln!("  {sp:<15} loss {loss:.4}  sim_time {time:.2}s");
+    }
+    eprintln!("\nexpected shape: exdyna lowest sim_time at comparable loss; cltk worst loss; topk/cltk largest sim_time.");
+    Ok(())
+}

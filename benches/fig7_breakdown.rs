@@ -1,0 +1,71 @@
+//! Figure 7 — "Training time breakdown of threshold-based sparsifiers and
+//! non-sparsified distributed training on 16 GPUs" + the §V-B text claims
+//! ("training times of CLT-k were 6.31x/3.38x/12.79x higher than ExDyna
+//! …, Top-k 6.51x/3.50x/12.85x").
+//!
+//! Per-iteration simulated time split into computation / selection /
+//! communication for every method on the Table II workloads, plus the
+//! slowdown-vs-ExDyna ratio rows for the sorting-based sparsifiers.
+//!
+//! Shape to match the paper: exdyna fastest everywhere; hard-threshold
+//! adds comm overhead; topk/cltk pay large selection costs (ratios in the
+//! several-x range, largest on the LSTM profile whose huge tensors make
+//! top-k most expensive relative to compute).
+
+use exdyna::bench::Table;
+use exdyna::config::preset;
+use exdyna::grad::synth::SynthGen;
+use exdyna::sparsifiers::make_sparsifier_factory;
+use exdyna::training::sim::run_sim;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (iters, scale) = if quick { (40, 0.01) } else { (150, 0.03) };
+    let ranks = 16;
+    let d = 0.001;
+
+    println!("# Fig. 7 — per-iteration time breakdown (16 workers, d = {d}; scale {scale})\n");
+    let mut table = Table::new(&[
+        "workload", "method", "compute_ms", "select_ms", "comm_ms", "total_ms", "slowdown vs exdyna",
+    ]);
+    let mut ratio_lines = Vec::new();
+    for w in ["resnet152", "inception-v4", "lstm"] {
+        let cfg = preset(w, scale, ranks, iters)?;
+        let gen = SynthGen::new(cfg.model.clone(), ranks, cfg.sim.rho, cfg.sim.seed, false);
+        let mut exdyna_total = f64::NAN;
+        let mut per_method = Vec::new();
+        for sp in ["exdyna", "hard-threshold", "dense", "topk", "cltk"] {
+            let factory = make_sparsifier_factory(sp, d, cfg.hard_delta, cfg.exdyna)?;
+            let trace = run_sim(&gen, factory.as_ref(), &cfg.sim)?;
+            let (c, s, m, tot) = trace.mean_breakdown();
+            if sp == "exdyna" {
+                exdyna_total = tot;
+            }
+            per_method.push((sp, tot));
+            table.row(&[
+                w.to_string(),
+                sp.to_string(),
+                format!("{:.2}", c * 1e3),
+                format!("{:.3}", s * 1e3),
+                format!("{:.2}", m * 1e3),
+                format!("{:.2}", tot * 1e3),
+                format!("{:.2}x", tot / exdyna_total),
+            ]);
+        }
+        for (sp, tot) in per_method {
+            if sp == "topk" || sp == "cltk" {
+                ratio_lines.push(format!(
+                    "  {sp:<5} on {w:<13}: {:.2}x slower than exdyna (paper: {} range)",
+                    tot / exdyna_total,
+                    if sp == "cltk" { "3.38-12.79x" } else { "3.50-12.85x" }
+                ));
+            }
+        }
+    }
+    println!("{}", table.render());
+    println!("# §V-B ratio check (sorting-based sparsifiers vs exdyna):");
+    for l in ratio_lines {
+        println!("{l}");
+    }
+    Ok(())
+}

@@ -1,0 +1,101 @@
+//! Selection-cost microbenchmark — Table I's "gradient selection cost"
+//! column quantified, plus the perf-pass baseline for the L3 hot path.
+//!
+//! Compares, across vector sizes:
+//!   * threshold scan, reference branchy implementation
+//!   * threshold scan, optimized two-pass (the ExDyna hot path)
+//!   * top-k via quickselect (O(n), optimized baseline)
+//!   * top-k via binary heap (O(n log k), the paper's cost model)
+//!   * partition-window scan (ExDyna per-rank share at n = 16)
+//!   * SIDCo 3-stage threshold estimation (fit overhead only)
+//!   * PJRT fused sparsify_step (Pallas artifact), when artifacts exist
+
+use exdyna::bench::{bench_for, fmt_time, Table};
+use exdyna::coordinator::selection::{select_indices, select_indices_scan};
+use exdyna::sparsifiers::sidco::Sidco;
+use exdyna::sparsifiers::{top_k_select, top_k_select_heap};
+use exdyna::util::Rng;
+use std::hint::black_box;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let budget = if quick { 0.1 } else { 0.5 };
+    let sizes: &[usize] = if quick {
+        &[1 << 20]
+    } else {
+        &[1 << 18, 1 << 21, 1 << 23]
+    };
+    println!("# selection cost per call (d = 0.001 equivalent threshold)\n");
+    let mut table = Table::new(&["n", "method", "median", "per-elem", "k out"]);
+    for &n in sizes {
+        let mut rng = Rng::new(7);
+        let mut acc = vec![0f32; n];
+        rng.fill_normal(&mut acc, 0.0, 0.01);
+        let k = (n / 1000).max(1);
+        // threshold matching d=0.001 on N(0, 0.01): ~3.29 sigma
+        let delta = 0.0329f32;
+        let mut push = |name: &str, med: f64, kout: usize| {
+            table.row(&[
+                n.to_string(),
+                name.to_string(),
+                fmt_time(med),
+                fmt_time(med / n as f64),
+                kout.to_string(),
+            ]);
+        };
+        let r = bench_for("scan-ref", budget, || {
+            black_box(select_indices_scan(black_box(&acc), 0, n, delta));
+        });
+        push("threshold scan (ref)", r.median_s(), select_indices_scan(&acc, 0, n, delta).len());
+        let r = bench_for("scan-opt", budget, || {
+            black_box(select_indices(black_box(&acc), 0, n, delta));
+        });
+        push("threshold scan (opt)", r.median_s(), select_indices(&acc, 0, n, delta).len());
+        let win = n / 16;
+        let r = bench_for("scan-window", budget, || {
+            black_box(select_indices(black_box(&acc), 0, win, delta));
+        });
+        push("exdyna window (n/16)", r.median_s(), select_indices(&acc, 0, win, delta).len());
+        let r = bench_for("topk-select", budget, || {
+            black_box(top_k_select(black_box(&acc), k));
+        });
+        push("top-k quickselect", r.median_s(), k);
+        let r = bench_for("topk-heap", budget, || {
+            black_box(top_k_select_heap(black_box(&acc), k));
+        });
+        push("top-k heap (paper cost)", r.median_s(), k);
+        let sidco = Sidco::new(0.001, 3)?;
+        let r = bench_for("sidco-fit", budget, || {
+            black_box(sidco.estimate_threshold(black_box(&acc)));
+        });
+        push("sidco 3-stage fit", r.median_s(), 0);
+    }
+    println!("{}", table.render());
+
+    // PJRT path (optional: needs artifacts)
+    if std::path::Path::new("artifacts/manifest.txt").exists() {
+        use exdyna::runtime::{Engine, Manifest, ModelRuntime};
+        let engine = Engine::cpu()?;
+        let manifest = Manifest::load("artifacts")?;
+        let rt = ModelRuntime::load(&engine, &manifest, "mlp")?;
+        let n = rt.meta.n_padded;
+        let mut rng = Rng::new(9);
+        let mut err = vec![0f32; n];
+        let mut grad = vec![0f32; n];
+        rng.fill_normal(&mut err, 0.0, 0.005);
+        rng.fill_normal(&mut grad, 0.0, 0.05);
+        let r = bench_for("pjrt-sparsify", budget.max(0.3), || {
+            black_box(
+                rt.sparsify_step(&err, &grad, 0.1, 0, n / 16, 0.0329)
+                    .unwrap(),
+            );
+        });
+        println!(
+            "pjrt fused sparsify_step (Pallas, n={n}): median {} ({} per elem incl. host<->device copies)",
+            fmt_time(r.median_s()),
+            fmt_time(r.median_s() / n as f64)
+        );
+    }
+    println!("\nexpected shape: window scan << full scan << quickselect < heap; sidco fit ~ multiple full passes.");
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! Table I — "Strengths and weaknesses of state-of-the-art gradient
+//! sparsifiers and the proposed ExDyna."
+//!
+//! Rather than restating the paper's qualitative matrix, every cell is
+//! *measured* on a common workload (ResNet-18 profile, 8 workers,
+//! d = 0.001):
+//!   * gradient build-up   — overlap factor Σk_i / |union| > 1.05?
+//!   * all-gather padding  — mean f(t) (1.0 = none)
+//!   * inaccurate threshold — tail density error vs target > 50%?
+//!   * threshold tuning    — needs an offline δ choice? (structural)
+//!   * worker idling       — selection concentrated on one rank? (structural)
+//!   * selection cost      — measured per-iteration selection ms
+//!   * extra overhead      — measured non-selection coordinator ms
+
+use exdyna::bench::Table;
+use exdyna::config::preset;
+use exdyna::grad::synth::SynthGen;
+use exdyna::sparsifiers::make_sparsifier_factory;
+use exdyna::training::sim::run_sim;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (iters, scale) = if quick { (60, 0.01) } else { (200, 0.05) };
+    let ranks = 8;
+    let d = 0.001;
+    let cfg = preset("resnet18", scale, ranks, iters)?;
+    let gen = SynthGen::new(cfg.model.clone(), ranks, cfg.sim.rho, cfg.sim.seed, false);
+
+    println!("# Table I — measured sparsifier property matrix (resnet18 profile, {ranks} workers, d = {d})\n");
+    let mut table = Table::new(&[
+        "sparsifier",
+        "build-up",
+        "padding f(t)",
+        "thr. inaccurate",
+        "thr. tuning",
+        "idling",
+        "select_ms",
+    ]);
+    for sp in ["topk", "cltk", "hard-threshold", "sidco", "exdyna"] {
+        let factory = make_sparsifier_factory(sp, d, cfg.hard_delta, cfg.exdyna)?;
+        let trace = run_sim(&gen, factory.as_ref(), &cfg.sim)?;
+        let tail: Vec<_> = trace.records.iter().skip(iters / 3).collect();
+        let nt = tail.len() as f64;
+        let sum_k: f64 = tail.iter().map(|r| r.k_sum as f64).sum::<f64>() / nt;
+        let union: f64 = tail.iter().map(|r| r.k_actual as f64).sum::<f64>() / nt;
+        let overlap = sum_k / union.max(1.0);
+        let density = trace.mean_density_tail(iters - iters / 3);
+        let density_err = (density - d).abs() / d;
+        let f_mean = trace.f_ratio_summary().mean();
+        let (_, sel, _, _) = trace.mean_breakdown();
+        table.row(&[
+            sp.to_string(),
+            if overlap > 1.05 {
+                format!("Yes ({overlap:.2}x)")
+            } else {
+                "No".into()
+            },
+            if sp == "cltk" { "n/a (bcast)".into() } else { format!("{f_mean:.2}") },
+            if density_err > 0.5 {
+                format!("Yes ({:.0}% off)", density_err * 100.0)
+            } else {
+                format!("No ({:.0}% off)", density_err * 100.0)
+            },
+            // structural facts
+            if sp == "hard-threshold" { "Yes" } else { "No" }.into(),
+            if sp == "cltk" { "Yes" } else { "No" }.into(),
+            format!("{:.3}", sel * 1e3),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("expected shape (paper Table I): only exdyna has No build-up + low f(t) + accurate threshold + low select cost.");
+    Ok(())
+}

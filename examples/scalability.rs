@@ -1,0 +1,56 @@
+//! Scalability scenario: how each sparsifier's per-iteration cost scales
+//! from 2 to 16 workers on an Inception-v4-sized workload (the paper's
+//! scale-out axis, Figs. 2/8).
+//!
+//! Run: `cargo run --release --offline --example scalability`
+
+use exdyna::bench::Table;
+use exdyna::cli::{Args, OptSpec};
+use exdyna::config::preset;
+use exdyna::grad::synth::SynthGen;
+use exdyna::sparsifiers::make_sparsifier_factory;
+use exdyna::training::sim::run_sim;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let specs = [
+        OptSpec { name: "scale", takes_value: true, help: "model scale (default 0.05)" },
+        OptSpec { name: "iters", takes_value: true, help: "iterations per point (default 60)" },
+        OptSpec { name: "ranks", takes_value: true, help: "comma list (default 2,4,8,16)" },
+    ];
+    let args = Args::parse(&argv, &specs)?;
+    let scale: f64 = args.parse_or("scale", 0.05)?;
+    let iters: usize = args.parse_or("iters", 60)?;
+    let rank_list: Vec<usize> = args.list_or("ranks", &[2, 4, 8, 16])?;
+
+    println!("== scale-out sweep: inception-v4 profile (scale {scale}), {iters} iters/point ==\n");
+    let mut table = Table::new(&[
+        "ranks", "sparsifier", "density", "f(t)", "select_ms", "comm_ms", "total_ms", "vs dense",
+    ]);
+    for &n in &rank_list {
+        let cfg = preset("inception-v4", scale, n, iters)?;
+        let gen = SynthGen::new(cfg.model.clone(), n, cfg.sim.rho, cfg.sim.seed, false);
+        let mut dense_total = f64::NAN;
+        for sp in ["dense", "exdyna", "hard-threshold", "topk"] {
+            let factory = make_sparsifier_factory(sp, 0.001, cfg.hard_delta, cfg.exdyna)?;
+            let trace = run_sim(&gen, factory.as_ref(), &cfg.sim)?;
+            let (_, s, m, tot) = trace.mean_breakdown();
+            if sp == "dense" {
+                dense_total = tot;
+            }
+            table.row(&[
+                n.to_string(),
+                sp.to_string(),
+                format!("{:.5}", trace.mean_density_tail(iters / 3)),
+                format!("{:.2}", trace.f_ratio_summary().mean()),
+                format!("{:.3}", s * 1e3),
+                format!("{:.2}", m * 1e3),
+                format!("{:.2}", tot * 1e3),
+                format!("{:.2}x", dense_total / tot),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    println!("(total_ms = simulated cluster time per iteration: modeled compute + measured select + modeled comm)");
+    Ok(())
+}

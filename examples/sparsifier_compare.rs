@@ -1,0 +1,57 @@
+//! Sparsifier comparison scenario: density control + threshold behaviour
+//! of every sparsifier on one workload (the Fig. 6 story, interactive).
+//!
+//! Run: `cargo run --release --offline --example sparsifier_compare`
+
+use exdyna::bench::Table;
+use exdyna::cli::{Args, OptSpec};
+use exdyna::config::preset;
+use exdyna::grad::synth::SynthGen;
+use exdyna::sparsifiers::make_sparsifier_factory;
+use exdyna::training::sim::run_sim;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let specs = [
+        OptSpec { name: "preset", takes_value: true, help: "workload (default resnet152)" },
+        OptSpec { name: "scale", takes_value: true, help: "model scale (default 0.05)" },
+        OptSpec { name: "iters", takes_value: true, help: "iterations (default 200)" },
+        OptSpec { name: "ranks", takes_value: true, help: "workers (default 8)" },
+        OptSpec { name: "out", takes_value: true, help: "CSV directory (default results/)" },
+    ];
+    let args = Args::parse(&argv, &specs)?;
+    let preset_name = args.str_or("preset", "resnet152");
+    let scale: f64 = args.parse_or("scale", 0.05)?;
+    let iters: usize = args.parse_or("iters", 200)?;
+    let ranks: usize = args.parse_or("ranks", 8)?;
+    let outdir = args.str_or("out", "results");
+
+    let cfg = preset(&preset_name, scale, ranks, iters)?;
+    let gen = SynthGen::new(cfg.model.clone(), ranks, cfg.sim.rho, cfg.sim.seed, false);
+    println!(
+        "== {preset_name} (n_g = {}, d = 0.001) on {ranks} workers, {iters} iterations ==\n",
+        gen.n_g()
+    );
+
+    let mut table = Table::new(&[
+        "sparsifier", "density(tail)", "xTarget", "f(t)", "delta(final)", "global_err(final)",
+    ]);
+    for sp in ["exdyna", "hard-threshold", "topk", "cltk", "sidco"] {
+        let factory = make_sparsifier_factory(sp, 0.001, cfg.hard_delta, cfg.exdyna)?;
+        let trace = run_sim(&gen, factory.as_ref(), &cfg.sim)?;
+        let d = trace.mean_density_tail(iters / 3);
+        let last = trace.records.last().unwrap();
+        table.row(&[
+            sp.to_string(),
+            format!("{d:.6}"),
+            format!("{:.1}x", d / 0.001),
+            format!("{:.2}", trace.f_ratio_summary().mean()),
+            format!("{:.3e}", last.delta),
+            format!("{:.4}", last.global_err),
+        ]);
+        trace.write_csv(format!("{outdir}/compare_{sp}.csv"))?;
+    }
+    println!("{}", table.render());
+    println!("CSV traces -> {outdir}/compare_*.csv (density/f(t)/delta per iteration)");
+    Ok(())
+}

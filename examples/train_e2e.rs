@@ -1,0 +1,149 @@
+//! End-to-end driver: train a real transformer LM through all three
+//! layers — L2 JAX fwd/bwd and L1 Pallas selection (both AOT-compiled to
+//! HLO and executed via PJRT from this Rust process), coordinated by the
+//! L3 ExDyna sparsifier across simulated data-parallel ranks.
+//!
+//! Proves the full composition on a real workload (Markov token corpus):
+//! the loss curve must descend from ~ln(V) toward the stream's bigram
+//! entropy floor, while the actual density tracks the user-set target.
+//! Results are recorded in EXPERIMENTS.md.
+//!
+//! Run: `make e2e` (or `cargo run --release --offline --example train_e2e
+//! -- --iters 300 --ranks 4`)
+
+use exdyna::cli::{Args, OptSpec};
+use exdyna::coordinator::{ExDyna, ExDynaCfg};
+use exdyna::runtime::{Engine, Manifest, ModelRuntime};
+use exdyna::sparsifiers::dense::Dense;
+use exdyna::training::real::{RealTrainer, RealTrainerCfg, SelectBackend};
+use exdyna::training::LrSchedule;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let specs = [
+        OptSpec { name: "iters", takes_value: true, help: "training iterations (default 300)" },
+        OptSpec { name: "ranks", takes_value: true, help: "simulated workers (default 4)" },
+        OptSpec { name: "model", takes_value: true, help: "tiny|small (default tiny)" },
+        OptSpec { name: "density", takes_value: true, help: "target density (default 0.01)" },
+        OptSpec { name: "skip-dense", takes_value: false, help: "skip the dense baseline run" },
+        OptSpec { name: "host-select", takes_value: false, help: "use host selection instead of the Pallas artifact" },
+    ];
+    let args = Args::parse(&argv, &specs)?;
+    let iters: usize = args.parse_or("iters", 300)?;
+    let ranks: usize = args.parse_or("ranks", 4)?;
+    let density: f64 = args.parse_or("density", 0.01)?;
+    let model = args.str_or("model", "tiny");
+
+    let engine = Engine::cpu()?;
+    let manifest = Manifest::load("artifacts")?;
+    let rt = ModelRuntime::load(&engine, &manifest, &model)?;
+    println!(
+        "== end-to-end: transformer '{model}' ({} params, vocab {}) on {ranks} simulated ranks ==",
+        rt.meta.n_params, rt.meta.vocab
+    );
+    println!(
+        "   selection backend: {}",
+        if args.flag("host-select") { "host (Rust scan)" } else { "PJRT (Pallas sparsify_step artifact)" }
+    );
+
+    let cfg = RealTrainerCfg {
+        n_ranks: ranks,
+        iters,
+        lr: LrSchedule::step(1.0, iters * 2 / 3, 0.3),
+        seed: 7,
+        backend: if args.flag("host-select") {
+            SelectBackend::Host
+        } else {
+            SelectBackend::Pjrt
+        },
+        eval_every: (iters / 15).max(1),
+    };
+
+    // --- ExDyna run -----------------------------------------------------
+    let mut cfg_x = ExDynaCfg::default_for(ranks);
+    cfg_x.density = density;
+    let mut trainer = RealTrainer::new(
+        ModelRuntime::load(&engine, &manifest, &model)?,
+        cfg,
+        &move |n_g, n| Ok(Box::new(ExDyna::new(n_g, n, cfg_x)?)),
+    )?;
+    let t0 = std::time::Instant::now();
+    for t in 0..iters {
+        let rec = trainer.step(t)?;
+        if t % (iters / 15).max(1) == 0 || t + 1 == iters {
+            println!(
+                "  [exdyna] iter {t:>4}  loss {:.4}  density {:.5} (target {density})  f(t) {:.2}  delta {:.2e}",
+                rec.loss, rec.density, rec.f_ratio, rec.delta
+            );
+        }
+    }
+    println!("  [exdyna] wall time {:.1}s", t0.elapsed().as_secs_f64());
+    let first = trainer.trace.records.first().unwrap().loss;
+    let last_losses: Vec<f64> = trainer
+        .trace
+        .records
+        .iter()
+        .rev()
+        .take(10)
+        .map(|r| r.loss)
+        .collect();
+    let last = last_losses.iter().sum::<f64>() / last_losses.len() as f64;
+    let tail_density = trainer.trace.mean_density_tail(iters / 3);
+    println!(
+        "  [exdyna] loss {first:.3} -> {last:.3}; tail density {tail_density:.5}; sim time/iter {:.4}s",
+        trainer.trace.mean_breakdown().3
+    );
+    trainer.trace.write_csv("results/e2e_exdyna.csv")?;
+    println!("  [exdyna] trace -> results/e2e_exdyna.csv");
+
+    // --- baselines (same model, same data) -------------------------------
+    // Timing note: the PJRT-select run above proves the three-layer
+    // composition, but its measured select time includes host<->device
+    // literal copies that do not exist on the paper's hardware (the
+    // kernel reads device-resident buffers). For the timing comparison we
+    // therefore run ExDyna with the host backend (whose measured scan IS
+    // the representative cost) plus the dense baseline.
+    if !args.flag("skip-dense") {
+        let mut host_cfg = cfg;
+        host_cfg.backend = SelectBackend::Host;
+        let mut host_tr = RealTrainer::new(
+            ModelRuntime::load(&engine, &manifest, &model)?,
+            host_cfg,
+            &move |n_g, n| Ok(Box::new(ExDyna::new(n_g, n, cfg_x)?)),
+        )?;
+        host_tr.run()?;
+        let mut dense_tr = RealTrainer::new(
+            ModelRuntime::load(&engine, &manifest, &model)?,
+            host_cfg,
+            &|_, _| Ok(Box::new(Dense)),
+        )?;
+        dense_tr.run()?;
+        let tail_loss = |tr: &RealTrainer| -> f64 {
+            tr.trace.records.iter().rev().take(10).map(|r| r.loss).sum::<f64>() / 10.0
+        };
+        let (hc, hs, hm, ht) = host_tr.trace.mean_breakdown();
+        let (dc, ds, dm, dt) = dense_tr.trace.mean_breakdown();
+        println!("\n== comparison (simulated cluster time per iteration) ==");
+        println!("  method        loss(final)  compute    select     comm       total");
+        println!(
+            "  exdyna(host)  {:.3}        {hc:.4}s  {hs:.6}s  {hm:.6}s  {ht:.4}s",
+            tail_loss(&host_tr)
+        );
+        println!(
+            "  dense         {:.3}        {dc:.4}s  {ds:.6}s  {dm:.6}s  {dt:.4}s",
+            tail_loss(&dense_tr)
+        );
+        println!("  comm reduction: {:.1}x; loss gap: {:.3}", dm / hm.max(1e-12), (tail_loss(&host_tr) - tail_loss(&dense_tr)).abs());
+        dense_tr.trace.write_csv("results/e2e_dense.csv")?;
+        host_tr.trace.write_csv("results/e2e_exdyna_host.csv")?;
+    }
+
+    // hard success criteria for CI-style use
+    assert!(last < first - 0.5, "loss must descend: {first} -> {last}");
+    assert!(
+        tail_density < density * 3.0 && tail_density > density / 3.0,
+        "density must track target: {tail_density} vs {density}"
+    );
+    println!("\nE2E OK: loss descended and density tracked the target.");
+    Ok(())
+}

@@ -1,0 +1,2 @@
+# Build-time-only package: JAX model + Pallas kernels + AOT export.
+# Never imported at runtime — the Rust binary consumes artifacts/*.hlo.txt.

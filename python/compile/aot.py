@@ -1,0 +1,224 @@
+"""AOT export: lower every L2/L1 computation to HLO *text* artifacts.
+
+Interchange is HLO text, not a serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (the version
+behind the published `xla` 0.1.6 crate) rejects; the text parser reassigns
+ids and round-trips cleanly.
+
+Run once via `make artifacts`; Python never appears on the request path.
+
+Outputs (artifacts/):
+  transformer_<name>.hlo.txt        (flat_params, tokens) -> (loss, grads)
+  transformer_<name>_init.hlo.txt   (key u32[2])          -> (flat_params,)
+  mlp.hlo.txt / mlp_init.hlo.txt    likewise for the MLP classifier
+  sparsify_<N>.hlo.txt              fused EF+select over padded flat size N
+  block_stats_<NB>x<BS>.hlo.txt     per-block workload stats
+  sgd_apply_<N>.hlo.txt             x -= lr_over_n * update
+  manifest.txt                      key=value metadata the Rust side parses
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import block_stats
+from .kernels.threshold_select import TILE
+
+PRESETS = {
+    "tiny": M.TransformerCfg(
+        vocab=256, d_model=128, n_layers=2, n_heads=4, d_ff=512, seq_len=64, batch=8
+    ),
+    "small": M.TransformerCfg(
+        vocab=4096, d_model=256, n_layers=4, n_heads=8, d_ff=1024, seq_len=128, batch=4
+    ),
+}
+
+MLP_CFG = M.MlpCfg()
+
+# block size used by the exported block_stats artifacts; must match the
+# Rust default (config/presets). Multiple of 32 per paper Alg. 2 and of
+# 128 for TPU lane alignment.
+BLOCK_SIZE = 1024
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def dump(fn, example_args, path):
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)} chars)")
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def export_transformer(name, cfg, outdir, manifest):
+    spec, fwdbwd = M.transformer_fwdbwd(cfg)
+    n = spec.total
+    npad = M.padded_len(n)
+    art = f"transformer_{name}.hlo.txt"
+    init_art = f"transformer_{name}_init.hlo.txt"
+    dump(
+        lambda fp, toks: fwdbwd(fp, toks),
+        (f32(n), jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len + 1), jnp.int32)),
+        os.path.join(outdir, art),
+    )
+    dump(
+        lambda key: (spec.init(jax.random.wrap_key_data(key)),),
+        (jax.ShapeDtypeStruct((2,), jnp.uint32),),
+        os.path.join(outdir, init_art),
+    )
+    m = manifest.setdefault(f"model.{name}", {})
+    m.update(
+        kind="transformer",
+        n_params=n,
+        n_padded=npad,
+        batch=cfg.batch,
+        seq_len=cfg.seq_len,
+        vocab=cfg.vocab,
+        d_model=cfg.d_model,
+        n_layers=cfg.n_layers,
+        artifact=art,
+        init=init_art,
+        sparsify=f"sparsify_{npad}.hlo.txt",
+        sgd=f"sgd_apply_{n}.hlo.txt",
+    )
+    m["layers"] = ";".join(f"{nm}:{off}:{_sz(sh)}" for nm, off, sh in spec.entries)
+    return n, npad
+
+
+def _sz(shape):
+    out = 1
+    for s in shape:
+        out *= s
+    return out
+
+
+def export_mlp(outdir, manifest):
+    cfg = MLP_CFG
+    spec, fwdbwd = M.mlp_fwdbwd(cfg)
+    n = spec.total
+    npad = M.padded_len(n)
+    dump(
+        lambda fp, x, y: fwdbwd(fp, x, y),
+        (f32(n), f32(cfg.batch, cfg.in_dim), i32(cfg.batch)),
+        os.path.join(outdir, "mlp.hlo.txt"),
+    )
+    dump(
+        lambda key: (spec.init(jax.random.wrap_key_data(key)),),
+        (jax.ShapeDtypeStruct((2,), jnp.uint32),),
+        os.path.join(outdir, "mlp_init.hlo.txt"),
+    )
+    m = manifest.setdefault("model.mlp", {})
+    m.update(
+        kind="mlp",
+        n_params=n,
+        n_padded=npad,
+        batch=cfg.batch,
+        in_dim=cfg.in_dim,
+        classes=cfg.classes,
+        artifact="mlp.hlo.txt",
+        init="mlp_init.hlo.txt",
+        sparsify=f"sparsify_{npad}.hlo.txt",
+        sgd=f"sgd_apply_{n}.hlo.txt",
+    )
+    m["layers"] = ";".join(f"{nm}:{off}:{_sz(sh)}" for nm, off, sh in spec.entries)
+    return n, npad
+
+
+def export_sparsify(npad, outdir):
+    dump(
+        lambda err, grad, lr, st, en, de: M.sparsify_step(
+            err, grad, lr, st, en, de, n=npad
+        ),
+        (f32(npad), f32(npad), f32(), i32(), i32(), f32()),
+        os.path.join(outdir, f"sparsify_{npad}.hlo.txt"),
+    )
+
+
+def export_sgd(n, outdir):
+    dump(
+        lambda p, u, lr: (M.sgd_apply(p, u, lr),),
+        (f32(n), f32(n), f32()),
+        os.path.join(outdir, f"sgd_apply_{n}.hlo.txt"),
+    )
+
+
+def export_block_stats(npad, outdir, manifest):
+    nb = npad // BLOCK_SIZE
+    # block_stats requires n_blocks % ROWS == 0; npad is a multiple of
+    # TILE=8192 and BLOCK_SIZE=1024 -> nb multiple of 8 == ROWS. Assert it.
+    assert nb % 8 == 0, (npad, nb)
+    dump(
+        lambda acc, de: block_stats(acc, de, n_blocks=nb, block_size=BLOCK_SIZE),
+        (f32(npad), f32()),
+        os.path.join(outdir, f"block_stats_{nb}x{BLOCK_SIZE}.hlo.txt"),
+    )
+    manifest.setdefault("block_stats", {})[f"{nb}x{BLOCK_SIZE}"] = (
+        f"block_stats_{nb}x{BLOCK_SIZE}.hlo.txt"
+    )
+
+
+def write_manifest(manifest, outdir):
+    path = os.path.join(outdir, "manifest.txt")
+    lines = [f"tile={TILE}", f"block_size={BLOCK_SIZE}"]
+    for group, kv in sorted(manifest.items()):
+        for k, v in sorted(kv.items()):
+            lines.append(f"{group}.{k}={v}")
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"  wrote {path}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--models",
+        default="tiny,mlp",
+        help="comma list from {tiny,small,mlp}; 'small' is the e2e LM",
+    )
+    args = ap.parse_args()
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+    manifest: dict = {}
+    sizes = set()
+    wanted = set(args.models.split(","))
+    for name in ("tiny", "small"):
+        if name in wanted:
+            print(f"[aot] transformer '{name}'")
+            n, npad = export_transformer(name, PRESETS[name], outdir, manifest)
+            sizes.add((n, npad))
+    if "mlp" in wanted:
+        print("[aot] mlp")
+        n, npad = export_mlp(outdir, manifest)
+        sizes.add((n, npad))
+    for n, npad in sorted(sizes):
+        print(f"[aot] pipeline artifacts for n={n} (padded {npad})")
+        export_sparsify(npad, outdir)
+        export_sgd(n, outdir)
+        export_block_stats(npad, outdir, manifest)
+    write_manifest(manifest, outdir)
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

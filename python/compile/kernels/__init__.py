@@ -1,0 +1,5 @@
+# L1: Pallas kernels for the sparsification hot-spots + pure-jnp oracles.
+from . import ref  # noqa: F401
+from .block_stats import ROWS, block_stats  # noqa: F401
+from .error_feedback import error_feedback  # noqa: F401
+from .threshold_select import TILE, pad_to_tile, threshold_select  # noqa: F401

@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: per-block workload statistics (feeds Alg. 3).
+
+Dynamic partition allocation needs, per fine-grained block, the number of
+would-be-selected gradients (the "workload") — the coordinator compares
+adjacent partitions' workloads and migrates blocks. Computing the counts at
+block granularity (rather than partition granularity) is what lets the
+topology be re-cut without touching gradient data.
+
+Grid layout: one grid step per block row-group. The flat accumulator is
+viewed as (n_blocks, block_size); each step reduces ROWS blocks at once so
+the VPU reduction stays wide (block_size is a multiple of 128 by
+construction — the Rust-side Alg. 2 rounds to 32 per the paper, and the
+default config uses 1024/4096 which are also lane-aligned).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Blocks reduced per grid step; keeps VMEM tile = ROWS*block_size*4 bytes.
+ROWS = 8
+
+
+def _stats_kernel(delta_ref, acc_ref, cnt_ref, abs_ref):
+    a = jnp.abs(acc_ref[...])  # (ROWS, block_size)
+    cnt_ref[...] = jnp.sum((a >= delta_ref[0]).astype(jnp.int32), axis=1)
+    abs_ref[...] = jnp.sum(a, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("n_blocks", "block_size"))
+def block_stats(acc, delta, *, n_blocks, block_size):
+    """Per-block selection counts and |.|-sums.
+
+    Args:
+      acc:        f32[n_blocks * block_size] flat accumulator.
+      delta:      f32[] threshold.
+      n_blocks:   static; must be a multiple of ROWS (callers pad blocks).
+      block_size: static block width.
+
+    Returns:
+      counts: i32[n_blocks]
+      abssum: f32[n_blocks]
+    """
+    if n_blocks % ROWS != 0:
+        raise ValueError(f"n_blocks={n_blocks} must be a multiple of {ROWS}")
+    delta = jnp.asarray(delta, jnp.float32).reshape(1)
+    acc2 = acc.reshape(n_blocks, block_size)
+    return pl.pallas_call(
+        _stats_kernel,
+        grid=(n_blocks // ROWS,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda t: (0,)),
+            pl.BlockSpec((ROWS, block_size), lambda t: (t, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((ROWS,), lambda t: (t,)),
+            pl.BlockSpec((ROWS,), lambda t: (t,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_blocks,), jnp.int32),
+            jax.ShapeDtypeStruct((n_blocks,), jnp.float32),
+        ],
+        interpret=True,
+    )(delta, acc2)

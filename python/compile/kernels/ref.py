@@ -1,0 +1,70 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the *correctness ground truth* for every L1 kernel. pytest
+(python/tests/) asserts the Pallas implementations against these under
+hypothesis-driven shape/dtype/parameter sweeps, and the same semantics are
+re-implemented in Rust (rust/src/coordinator/selection.rs) for the simulated
+ranks — three implementations, one oracle.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def threshold_select_ref(acc, start, end, delta):
+    """Partition-wise exclusive gradient selection (paper Alg. 4).
+
+    Returns (mask, count):
+      mask[i]  = 1.0 where start <= i < end and |acc[i]| >= delta, else 0.0
+      count    = number of selected elements (int32 scalar)
+
+    The compaction to an index list is done by the caller (host / L3): a
+    dynamic-size output does not fit the static-shape AOT model, and the
+    mask representation is exactly what the all-reduce path consumes.
+    """
+    n = acc.shape[0]
+    idx = jnp.arange(n)
+    in_part = (idx >= start) & (idx < end)
+    hit = (jnp.abs(acc) >= delta) & in_part
+    mask = hit.astype(acc.dtype)
+    count = jnp.sum(hit.astype(jnp.int32))
+    return mask, count
+
+
+def block_stats_ref(acc, block_size, delta):
+    """Per-block workload statistics feeding dynamic partition allocation.
+
+    Splits `acc` (length must be a multiple of block_size) into blocks and
+    returns (counts, abssum):
+      counts[b] = #{i in block b : |acc[i]| >= delta}   (int32)
+      abssum[b] = sum_{i in block b} |acc[i]|           (acc.dtype)
+
+    The coordinator uses counts to decide block migration (paper Alg. 3)
+    and abssum as a magnitude profile for diagnostics.
+    """
+    a = jnp.abs(acc.reshape(-1, block_size))
+    counts = jnp.sum((a >= delta).astype(jnp.int32), axis=1)
+    abssum = jnp.sum(a, axis=1)
+    return counts, abssum
+
+
+def error_feedback_ref(err, grad, lr, mask):
+    """Error-feedback accumulate + extract (paper Alg. 1 lines 8, 12, 18-19).
+
+    acc      = err + lr * grad
+    selected = acc * mask          (what enters the all-reduce)
+    new_err  = acc * (1 - mask)    (carried to the next iteration)
+    """
+    acc = err + lr * grad
+    selected = acc * mask
+    new_err = acc - selected
+    return selected, new_err
+
+
+def sgd_step_ref(param, update, lr_over_n):
+    """Model update x_{t+1} = x_t - (1/n) * g_t (paper Alg. 1 line 17).
+
+    `update` is the aggregated (all-reduced) sparse gradient sum; lr is
+    already folded into the accumulators, so only the 1/n factor remains.
+    """
+    return param - lr_over_n * update

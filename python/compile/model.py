@@ -1,0 +1,243 @@
+"""L2: JAX compute graphs lowered AOT and executed from the Rust coordinator.
+
+Everything here works on *flat* f32 parameter/gradient vectors so the Rust
+side never deals with pytrees: a model is (n_params, fwdbwd(flat_params,
+batch) -> (loss, flat_grads)). The sparsification pipeline (Pallas kernels)
+is fused into `sparsify_step`, the single artifact on the per-iteration hot
+path.
+
+Models:
+  - transformer_lm: decoder-only transformer LM (pre-LN, learned positions,
+    untied output head) — the end-to-end training workload.
+  - mlp_classifier: 2-hidden-layer MLP on dense features — the fast
+    convergence workload for Fig. 5/8-style sweeps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import error_feedback, threshold_select
+from .kernels.threshold_select import TILE
+
+
+# --------------------------------------------------------------------------
+# flat-parameter helpers
+# --------------------------------------------------------------------------
+
+class FlatSpec:
+    """Orders a list of named shapes into one flat f32 vector.
+
+    The layout (name, offset, shape) is exported to the artifact manifest so
+    the Rust side can map layer ranges to flat offsets (used by the synthetic
+    gradient generator's per-layer profiles and by diagnostics).
+    """
+
+    def __init__(self):
+        self.entries = []  # (name, offset, shape)
+        self.total = 0
+
+    def add(self, name: str, shape: Tuple[int, ...]) -> None:
+        size = int(math.prod(shape))
+        self.entries.append((name, self.total, shape))
+        self.total += size
+
+    def slices(self, flat):
+        out = {}
+        for name, off, shape in self.entries:
+            size = int(math.prod(shape))
+            out[name] = jax.lax.dynamic_slice(flat, (off,), (size,)).reshape(shape)
+        return out
+
+    def init(self, key, scale_overrides=None):
+        """He/Glorot-ish init, matched per entry kind by name suffix."""
+        parts = []
+        for name, _off, shape in self.entries:
+            key, sub = jax.random.split(key)
+            if name.endswith("_b") or name.endswith("_scale_zero"):
+                parts.append(jnp.zeros(shape, jnp.float32).reshape(-1))
+            elif name.endswith("_ln_g"):
+                parts.append(jnp.ones(shape, jnp.float32).reshape(-1))
+            else:
+                fan_in = shape[0] if len(shape) > 1 else max(shape[0], 1)
+                std = 1.0 / math.sqrt(fan_in)
+                if scale_overrides and name in scale_overrides:
+                    std = scale_overrides[name]
+                parts.append((jax.random.normal(sub, shape) * std).reshape(-1))
+        return jnp.concatenate(parts)
+
+
+# --------------------------------------------------------------------------
+# transformer LM
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TransformerCfg:
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ff: int = 512
+    seq_len: int = 64
+    batch: int = 8
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+def transformer_spec(cfg: TransformerCfg) -> FlatSpec:
+    s = FlatSpec()
+    s.add("tok_embed", (cfg.vocab, cfg.d_model))
+    s.add("pos_embed", (cfg.seq_len, cfg.d_model))
+    for i in range(cfg.n_layers):
+        p = f"layer{i}_"
+        s.add(p + "attn_ln_g", (cfg.d_model,))
+        s.add(p + "attn_ln_b", (cfg.d_model,))
+        s.add(p + "wqkv", (cfg.d_model, 3 * cfg.d_model))
+        s.add(p + "wo", (cfg.d_model, cfg.d_model))
+        s.add(p + "mlp_ln_g", (cfg.d_model,))
+        s.add(p + "mlp_ln_b", (cfg.d_model,))
+        s.add(p + "w1", (cfg.d_model, cfg.d_ff))
+        s.add(p + "w1_b", (cfg.d_ff,))
+        s.add(p + "w2", (cfg.d_ff, cfg.d_model))
+        s.add(p + "w2_b", (cfg.d_model,))
+    s.add("final_ln_g", (cfg.d_model,))
+    s.add("final_ln_b", (cfg.d_model,))
+    s.add("head", (cfg.d_model, cfg.vocab))
+    return s
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _attention(x, wqkv, wo, cfg: TransformerCfg):
+    b, s, d = x.shape
+    qkv = x @ wqkv  # (b, s, 3d)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):
+        return t.reshape(b, s, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    scores = (q @ k.transpose(0, 1, 3, 2)) / math.sqrt(cfg.head_dim)
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(causal, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = (probs @ v).transpose(0, 2, 1, 3).reshape(b, s, d)
+    return out @ wo
+
+
+def transformer_loss(flat_params, tokens, cfg: TransformerCfg, spec: FlatSpec):
+    """Next-token cross-entropy. tokens: i32[batch, seq_len+1]."""
+    p = spec.slices(flat_params)
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    x = p["tok_embed"][inp] + p["pos_embed"][None, : cfg.seq_len]
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}_"
+        h = _layer_norm(x, p[pre + "attn_ln_g"], p[pre + "attn_ln_b"])
+        x = x + _attention(h, p[pre + "wqkv"], p[pre + "wo"], cfg)
+        h = _layer_norm(x, p[pre + "mlp_ln_g"], p[pre + "mlp_ln_b"])
+        h = jax.nn.gelu(h @ p[pre + "w1"] + p[pre + "w1_b"])
+        x = x + h @ p[pre + "w2"] + p[pre + "w2_b"]
+    x = _layer_norm(x, p["final_ln_g"], p["final_ln_b"])
+    logits = x @ p["head"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def transformer_fwdbwd(cfg: TransformerCfg):
+    spec = transformer_spec(cfg)
+
+    def fwdbwd(flat_params, tokens):
+        loss, grads = jax.value_and_grad(
+            lambda fp: transformer_loss(fp, tokens, cfg, spec)
+        )(flat_params)
+        return loss, grads
+
+    return spec, fwdbwd
+
+
+# --------------------------------------------------------------------------
+# MLP classifier
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MlpCfg:
+    in_dim: int = 32
+    hidden: int = 256
+    classes: int = 10
+    batch: int = 64
+
+
+def mlp_spec(cfg: MlpCfg) -> FlatSpec:
+    s = FlatSpec()
+    s.add("w1", (cfg.in_dim, cfg.hidden))
+    s.add("w1_b", (cfg.hidden,))
+    s.add("w2", (cfg.hidden, cfg.hidden))
+    s.add("w2_b", (cfg.hidden,))
+    s.add("w3", (cfg.hidden, cfg.classes))
+    s.add("w3_b", (cfg.classes,))
+    return s
+
+
+def mlp_loss(flat_params, x, y, cfg: MlpCfg, spec: FlatSpec):
+    p = spec.slices(flat_params)
+    h = jax.nn.relu(x @ p["w1"] + p["w1_b"])
+    h = jax.nn.relu(h @ p["w2"] + p["w2_b"])
+    logits = h @ p["w3"] + p["w3_b"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def mlp_fwdbwd(cfg: MlpCfg):
+    spec = mlp_spec(cfg)
+
+    def fwdbwd(flat_params, x, y):
+        loss, grads = jax.value_and_grad(
+            lambda fp: mlp_loss(fp, x, y, cfg, spec)
+        )(flat_params)
+        return loss, grads
+
+    return spec, fwdbwd
+
+
+# --------------------------------------------------------------------------
+# fused sparsification pipeline (the hot-path artifact)
+# --------------------------------------------------------------------------
+
+def sparsify_step(err, grad, lr, start, end, delta, *, n):
+    """Alg. 1 lines 8+10+12+18-19 fused, built on the L1 Pallas kernels.
+
+    acc = err + lr*grad; mask,counts = select(acc, [start,end), delta);
+    selected = acc*mask; new_err = acc - selected.
+
+    Returns (selected, new_err, counts) with counts summing to k_i. The
+    Rust coordinator compacts `selected` into (idx, val) pairs for the
+    padded all-gather and feeds sum(counts) into online threshold scaling.
+    """
+    # accumulate via the fused EF kernel with an all-ones mask is wasteful;
+    # instead compute acc inline (XLA fuses it into the select kernel's
+    # input read) and use the EF kernel for extract/carry.
+    acc = err + lr * grad
+    mask, counts = threshold_select(acc, start, end, delta, n=n)
+    selected, new_err = error_feedback(err, grad, mask, lr, n=n)
+    return selected, new_err, counts
+
+
+def sgd_apply(flat_params, update, lr_over_n):
+    """x_{t+1} = x_t - (1/n) * g_t (lr folded into accumulators)."""
+    return flat_params - lr_over_n * update
+
+
+def padded_len(n: int) -> int:
+    return n + ((-n) % TILE)

@@ -1,0 +1,173 @@
+"""L1 Pallas kernels vs the pure-jnp oracle (`kernels/ref.py`).
+
+Hypothesis sweeps shapes, windows, thresholds and dtypes; the Pallas
+implementations (interpret=True) must agree with the reference bit-for-bit
+on masks/counts and to float tolerance on sums.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    ROWS,
+    TILE,
+    block_stats,
+    error_feedback,
+    pad_to_tile,
+    ref,
+    threshold_select,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def normals(seed, n, sigma=0.02):
+    return (jax.random.normal(jax.random.PRNGKey(seed), (n,)) * sigma).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# threshold_select
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    tiles=st.integers(1, 4),
+    delta=st.floats(1e-4, 0.1),
+    data=st.data(),
+)
+def test_select_matches_ref(seed, tiles, delta, data):
+    n = tiles * TILE
+    start = data.draw(st.integers(0, n))
+    end = data.draw(st.integers(start, n))
+    acc = normals(seed, n)
+    mask, counts = threshold_select(acc, start, end, delta, n=n)
+    rmask, rcount = ref.threshold_select_ref(acc, start, end, delta)
+    np.testing.assert_array_equal(np.asarray(mask), np.asarray(rmask))
+    assert int(counts.sum()) == int(rcount)
+
+
+def test_select_counts_are_per_tile():
+    n = 3 * TILE
+    acc = jnp.ones(n)
+    mask, counts = threshold_select(acc, TILE, 2 * TILE, 0.5, n=n)
+    assert counts.shape == (3,)
+    assert int(counts[0]) == 0
+    assert int(counts[1]) == TILE
+    assert int(counts[2]) == 0
+    assert float(mask.sum()) == TILE
+
+
+def test_select_empty_window():
+    n = TILE
+    acc = jnp.ones(n)
+    mask, counts = threshold_select(acc, 100, 100, 0.5, n=n)
+    assert int(counts.sum()) == 0
+    assert float(jnp.abs(mask).sum()) == 0.0
+
+
+def test_select_threshold_inclusive():
+    n = TILE
+    acc = jnp.full((n,), 0.5)
+    _, counts = threshold_select(acc, 0, n, 0.5, n=n)
+    assert int(counts.sum()) == n  # |x| >= delta is inclusive
+
+
+def test_select_negative_values_count():
+    n = TILE
+    acc = jnp.full((n,), -1.0)
+    _, counts = threshold_select(acc, 0, 10, 0.5, n=n)
+    assert int(counts.sum()) == 10
+
+
+def test_select_rejects_unaligned():
+    with pytest.raises(ValueError):
+        threshold_select(jnp.ones(100), 0, 10, 0.5, n=100)
+
+
+def test_pad_to_tile():
+    x = jnp.ones(100)
+    p = pad_to_tile(x)
+    assert p.shape[0] == TILE
+    assert float(p[:100].sum()) == 100.0
+    assert float(p[100:].sum()) == 0.0
+    assert pad_to_tile(jnp.ones(TILE)).shape[0] == TILE
+
+
+# ---------------------------------------------------------------------------
+# block_stats
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    groups=st.integers(1, 4),
+    block_size=st.sampled_from([128, 256, 1024]),
+    delta=st.floats(1e-4, 0.1),
+)
+def test_block_stats_matches_ref(seed, groups, block_size, delta):
+    n_blocks = groups * ROWS
+    acc = normals(seed, n_blocks * block_size)
+    counts, abssum = block_stats(acc, delta, n_blocks=n_blocks, block_size=block_size)
+    rc, ra = ref.block_stats_ref(acc, block_size, delta)
+    np.testing.assert_array_equal(np.asarray(counts), np.asarray(rc))
+    np.testing.assert_allclose(np.asarray(abssum), np.asarray(ra), rtol=1e-5)
+
+
+def test_block_stats_rejects_bad_rows():
+    with pytest.raises(ValueError):
+        block_stats(jnp.ones(3 * 128), 0.5, n_blocks=3, block_size=128)
+
+
+def test_block_stats_totals_match_select():
+    n = 2 * TILE
+    acc = normals(99, n)
+    delta = 0.01
+    counts, _ = block_stats(acc, delta, n_blocks=n // 1024, block_size=1024)
+    _, sel_counts = threshold_select(acc, 0, n, delta, n=n)
+    assert int(counts.sum()) == int(sel_counts.sum())
+
+
+# ---------------------------------------------------------------------------
+# error_feedback
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    tiles=st.integers(1, 3),
+    lr=st.floats(1e-3, 1.0),
+)
+def test_error_feedback_matches_ref(seed, tiles, lr):
+    n = tiles * TILE
+    err = normals(seed, n)
+    grad = normals(seed + 1, n, sigma=0.1)
+    mask = (jnp.abs(normals(seed + 2, n)) > 0.02).astype(jnp.float32)
+    sel, new_err = error_feedback(err, grad, mask, lr, n=n)
+    rsel, rerr = ref.error_feedback_ref(err, grad, lr, mask)
+    np.testing.assert_allclose(np.asarray(sel), np.asarray(rsel), rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(new_err), np.asarray(rerr), rtol=1e-5, atol=1e-7)
+
+
+def test_error_feedback_conservation():
+    # selected + new_err == err + lr*grad exactly (one rounding each side)
+    n = TILE
+    err = normals(5, n)
+    grad = normals(6, n, sigma=0.1)
+    mask = (jnp.abs(err) > 0.01).astype(jnp.float32)
+    lr = 0.25
+    sel, new_err = error_feedback(err, grad, mask, lr, n=n)
+    np.testing.assert_allclose(
+        np.asarray(sel + new_err), np.asarray(err + lr * grad), rtol=1e-6, atol=1e-8
+    )
+
+
+def test_error_feedback_all_selected_zeroes_error():
+    n = TILE
+    err = normals(7, n)
+    grad = normals(8, n)
+    sel, new_err = error_feedback(err, grad, jnp.ones(n), 0.5, n=n)
+    assert float(jnp.abs(new_err).max()) == 0.0
+    np.testing.assert_allclose(np.asarray(sel), np.asarray(err + 0.5 * grad), rtol=1e-6)

@@ -1,0 +1,180 @@
+//! Micro-benchmark harness (no `criterion` in the offline build).
+//!
+//! Same discipline: warmup, many timed iterations, median/p95 reporting.
+//! Used by `benches/*.rs` (declared `harness = false`) and the perf pass.
+
+use crate::util::Summary;
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    /// Case label.
+    pub name: String,
+    /// Timing summary in seconds per iteration.
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    /// Median seconds per iteration.
+    pub fn median_s(&self) -> f64 {
+        self.summary.median()
+    }
+
+    /// Human line: `name  median  p95  (iters)`.
+    pub fn row(&self) -> String {
+        format!(
+            "{:<42} median {:>12} p95 {:>12} ({} samples)",
+            self.name,
+            fmt_time(self.summary.median()),
+            fmt_time(self.summary.percentile(95.0)),
+            self.summary.count()
+        )
+    }
+}
+
+/// Format seconds human-readably.
+pub fn fmt_time(s: f64) -> String {
+    if !s.is_finite() {
+        "n/a".to_string()
+    } else if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Time `f` with `warmup` discarded runs and `samples` measured runs.
+/// `f` must do one unit of work per call; use `std::hint::black_box` on
+/// inputs/outputs inside.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut summary = Summary::new();
+    for _ in 0..samples {
+        let st = Instant::now();
+        f();
+        summary.push(st.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        summary,
+    }
+}
+
+/// Time budget-bounded variant: runs until `budget_s` elapsed (at least
+/// 3 samples).
+pub fn bench_for<F: FnMut()>(name: &str, budget_s: f64, mut f: F) -> BenchResult {
+    // one warmup
+    f();
+    let mut summary = Summary::new();
+    let start = Instant::now();
+    while start.elapsed().as_secs_f64() < budget_s || summary.count() < 3 {
+        let st = Instant::now();
+        f();
+        summary.push(st.elapsed().as_secs_f64());
+        if summary.count() > 10_000 {
+            break;
+        }
+    }
+    BenchResult {
+        name: name.to_string(),
+        summary,
+    }
+}
+
+/// Simple fixed-width table printer for bench binaries.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with headers.
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row.
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], widths: &[usize]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let mut x = 0u64;
+        let r = bench("noop", 2, 10, || {
+            x = std::hint::black_box(x + 1);
+        });
+        assert_eq!(r.summary.count(), 10);
+        assert!(r.median_s() >= 0.0);
+        assert!(r.row().contains("noop"));
+    }
+
+    #[test]
+    fn bench_for_respects_min_samples() {
+        let r = bench_for("fast", 0.0, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.summary.count() >= 3);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" µs"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["a", "bbbb"]);
+        t.row(&["xx".into(), "y".into()]);
+        let s = t.render();
+        assert!(s.contains("a   bbbb"));
+        assert!(s.lines().count() == 3);
+    }
+}

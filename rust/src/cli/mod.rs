@@ -1,0 +1,179 @@
+//! Hand-rolled CLI argument parser (no `clap` in the offline build).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! generates usage text from declared options.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Declared option for usage rendering.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    /// Long name without `--`.
+    pub name: &'static str,
+    /// Takes a value?
+    pub takes_value: bool,
+    /// Help line.
+    pub help: &'static str,
+}
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    /// Positional arguments in order.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv` (without the program name) against `specs`.
+    pub fn parse(argv: &[String], specs: &[OptSpec]) -> Result<Self> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = specs.iter().find(|s| s.name == name).ok_or_else(|| {
+                    Error::invalid(format!("unknown option --{name}"))
+                })?;
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| Error::invalid(format!("--{name} needs a value")))?
+                            .clone(),
+                    };
+                    args.values.insert(name, v);
+                } else {
+                    if inline.is_some() {
+                        return Err(Error::invalid(format!("--{name} takes no value")));
+                    }
+                    args.flags.push(name);
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    /// Is a boolean flag present?
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Raw string value.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    /// String with default.
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    /// Parse a typed value with default.
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<T>()
+                .map_err(|_| Error::invalid(format!("--{name}: cannot parse '{s}'"))),
+        }
+    }
+
+    /// Comma-separated list of a typed value.
+    pub fn list_or<T: std::str::FromStr>(&self, name: &str, default: &[T]) -> Result<Vec<T>>
+    where
+        T: Clone,
+    {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .filter(|p| !p.is_empty())
+                .map(|p| {
+                    p.trim()
+                        .parse::<T>()
+                        .map_err(|_| Error::invalid(format!("--{name}: bad element '{p}'")))
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Render usage text.
+pub fn usage(prog: &str, about: &str, specs: &[OptSpec]) -> String {
+    let mut s = format!("{about}\n\nUSAGE: {prog} [OPTIONS]\n\nOPTIONS:\n");
+    for o in specs {
+        let head = if o.takes_value {
+            format!("--{} <v>", o.name)
+        } else {
+            format!("--{}", o.name)
+        };
+        s.push_str(&format!("  {head:<22} {}\n", o.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec {
+                name: "ranks",
+                takes_value: true,
+                help: "worker count",
+            },
+            OptSpec {
+                name: "fast",
+                takes_value: false,
+                help: "fast mode",
+            },
+        ]
+    }
+
+    fn sv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_forms() {
+        let a = Args::parse(&sv(&["--ranks", "8", "--fast", "pos1"]), &specs()).unwrap();
+        assert_eq!(a.parse_or("ranks", 0usize).unwrap(), 8);
+        assert!(a.flag("fast"));
+        assert_eq!(a.positional, vec!["pos1"]);
+        let b = Args::parse(&sv(&["--ranks=16"]), &specs()).unwrap();
+        assert_eq!(b.parse_or("ranks", 0usize).unwrap(), 16);
+    }
+
+    #[test]
+    fn errors_on_unknown_and_missing() {
+        assert!(Args::parse(&sv(&["--nope"]), &specs()).is_err());
+        assert!(Args::parse(&sv(&["--ranks"]), &specs()).is_err());
+        assert!(Args::parse(&sv(&["--fast=1"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn typed_defaults_and_lists() {
+        let a = Args::parse(&sv(&[]), &specs()).unwrap();
+        assert_eq!(a.parse_or("ranks", 4usize).unwrap(), 4);
+        let b = Args::parse(&sv(&["--ranks", "2,4,8"]), &specs()).unwrap();
+        assert_eq!(b.list_or::<usize>("ranks", &[1]).unwrap(), vec![2, 4, 8]);
+        assert!(b.parse_or::<usize>("ranks", 0).is_err()); // "2,4,8" not a usize
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = usage("exdyna", "about", &specs());
+        assert!(u.contains("--ranks"));
+        assert!(u.contains("--fast"));
+    }
+}

@@ -1,0 +1,146 @@
+//! Padded sparse all-gather (paper Alg. 1 line 11, Eqs. (2)–(5)) and the
+//! CLT-k leader broadcast.
+//!
+//! The all-gather really merges the per-rank selections (bit-exact data
+//! movement) and simultaneously charges the α–β clock for the *padded*
+//! payload: every rank must send `m_t = max_i k_i` entries, zero-padding
+//! its own `k_i` up to `m_t` — the overhead ExDyna's dynamic partition
+//! allocation attacks.
+
+use super::costmodel::CostModel;
+use crate::coordinator::SelectOutput;
+
+/// Outcome of the metadata + payload all-gather.
+#[derive(Clone, Debug)]
+pub struct AllGatherResult {
+    /// Sorted union of all selected indices (`idx_t` in Alg. 1).
+    pub union_idx: Vec<u32>,
+    /// Per-rank selection counts (`k_t` vector in Alg. 1).
+    pub k_by_rank: Vec<usize>,
+    /// `m_t = max_i k_i` — the padded per-rank payload in entries.
+    pub m_t: usize,
+    /// Total entries moved on the wire: `n · m_t` (includes padding).
+    pub padded_entries: usize,
+    /// Traffic-increase ratio `f(t) = n·m_t / Σk_i` of Eq. (5)
+    /// (1.0 = perfectly balanced; NaN when nothing was selected).
+    pub f_ratio: f64,
+    /// Modeled wall-clock of the payload all-gather (plus the tiny
+    /// metadata all-gather), seconds.
+    pub time_s: f64,
+}
+
+/// Merge per-rank selections with padded-all-gather semantics and charge
+/// the cost model.
+pub fn allgather_sparse(outs: &[SelectOutput], net: &CostModel) -> AllGatherResult {
+    let n = outs.len();
+    debug_assert_eq!(n, net.topo.n_ranks);
+    let k_by_rank: Vec<usize> = outs.iter().map(|o| o.len()).collect();
+    let m_t = k_by_rank.iter().copied().max().unwrap_or(0);
+    let total_k: usize = k_by_rank.iter().sum();
+
+    // merge + dedup (duplicates exist only for build-up sparsifiers)
+    let mut union_idx: Vec<u32> = Vec::with_capacity(total_k);
+    for o in outs {
+        union_idx.extend_from_slice(&o.idx);
+    }
+    union_idx.sort_unstable();
+    union_idx.dedup();
+
+    // metadata all-gather (k_i, 8 bytes each) + padded payload all-gather
+    let meta_t = net.allgather(std::mem::size_of::<u64>());
+    let payload_t = net.allgather(m_t * CostModel::SPARSE_ENTRY_BYTES);
+
+    AllGatherResult {
+        union_idx,
+        k_by_rank,
+        m_t,
+        padded_entries: n * m_t,
+        f_ratio: if total_k == 0 {
+            f64::NAN
+        } else {
+            (n * m_t) as f64 / total_k as f64
+        },
+        time_s: meta_t + payload_t,
+    }
+}
+
+/// CLT-k: broadcast the leader's selection to every rank; non-leader
+/// selections must be empty. Returns (indices, modeled time).
+pub fn broadcast_selection(
+    outs: &[SelectOutput],
+    leader: usize,
+    net: &CostModel,
+) -> (Vec<u32>, f64) {
+    debug_assert!(outs
+        .iter()
+        .enumerate()
+        .all(|(r, o)| r == leader || o.is_empty()));
+    let idx = outs[leader].idx.clone();
+    let bytes = idx.len() * CostModel::SPARSE_ENTRY_BYTES;
+    (idx, net.broadcast(bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sel(idx: &[u32]) -> SelectOutput {
+        SelectOutput {
+            idx: idx.to_vec(),
+            val: idx.iter().map(|&i| i as f32).collect(),
+        }
+    }
+
+    #[test]
+    fn union_dedups_and_sorts() {
+        let outs = vec![sel(&[5, 1, 9]), sel(&[9, 2])];
+        let net = CostModel::paper_testbed(2);
+        let r = allgather_sparse(&outs, &net);
+        assert_eq!(r.union_idx, vec![1, 2, 5, 9]);
+        assert_eq!(r.k_by_rank, vec![3, 2]);
+        assert_eq!(r.m_t, 3);
+        assert_eq!(r.padded_entries, 6);
+        assert!((r.f_ratio - 6.0 / 5.0).abs() < 1e-12);
+        assert!(r.time_s > 0.0);
+    }
+
+    #[test]
+    fn balanced_workload_gives_f_one() {
+        let outs = vec![sel(&[0, 1]), sel(&[2, 3]), sel(&[4, 5]), sel(&[6, 7])];
+        let net = CostModel::paper_testbed(4);
+        let r = allgather_sparse(&outs, &net);
+        assert!((r.f_ratio - 1.0).abs() < 1e-12);
+        assert_eq!(r.union_idx.len(), 8);
+    }
+
+    #[test]
+    fn imbalance_inflates_f_and_time() {
+        let balanced = vec![sel(&[0, 1]), sel(&[2, 3])];
+        let skewed = vec![sel(&[0, 1, 2, 3]), sel(&[])];
+        let net = CostModel::paper_testbed(2);
+        let rb = allgather_sparse(&balanced, &net);
+        let rs = allgather_sparse(&skewed, &net);
+        assert!(rs.f_ratio > rb.f_ratio);
+        assert!(rs.time_s > rb.time_s, "padding must cost wire time");
+        assert_eq!(rs.f_ratio, 2.0); // n*m/Σk = 2*4/4
+    }
+
+    #[test]
+    fn empty_round_is_nan_f() {
+        let outs = vec![sel(&[]), sel(&[])];
+        let net = CostModel::paper_testbed(2);
+        let r = allgather_sparse(&outs, &net);
+        assert!(r.f_ratio.is_nan());
+        assert_eq!(r.m_t, 0);
+        assert!(r.union_idx.is_empty());
+    }
+
+    #[test]
+    fn broadcast_takes_leader_set() {
+        let outs = vec![sel(&[]), sel(&[3, 4, 5]), sel(&[])];
+        let net = CostModel::paper_testbed(3);
+        let (idx, t) = broadcast_selection(&outs, 1, &net);
+        assert_eq!(idx, vec![3, 4, 5]);
+        assert!(t > 0.0);
+    }
+}

@@ -1,0 +1,82 @@
+//! All-reduce: dense ring (non-sparsified baseline) and the sparse
+//! union-indexed reduction of Alg. 1 lines 12–13.
+
+use super::costmodel::CostModel;
+
+/// Dense ring all-reduce (SUM): element-wise sum of the per-rank vectors;
+/// every rank receives the sum. Returns (sum, modeled time).
+pub fn dense_allreduce(per_rank: &[Vec<f32>], net: &CostModel) -> (Vec<f32>, f64) {
+    assert!(!per_rank.is_empty());
+    let n_g = per_rank[0].len();
+    debug_assert!(per_rank.iter().all(|v| v.len() == n_g));
+    let mut sum = vec![0f32; n_g];
+    for v in per_rank {
+        for (s, &x) in sum.iter_mut().zip(v.iter()) {
+            *s += x;
+        }
+    }
+    let t = net.allreduce(n_g * CostModel::DENSE_ENTRY_BYTES);
+    (sum, t)
+}
+
+/// Sparse all-reduce over the union index set: every rank contributes
+/// `acc_i[idx]` for each union index (Alg. 1 line 12: `g_i = acc_i[idx_t]`),
+/// and the SUM over ranks comes back (line 13). Returns (summed values
+/// aligned with `union_idx`, modeled time).
+pub fn sparse_allreduce_union(
+    accs: &[&[f32]],
+    union_idx: &[u32],
+    net: &CostModel,
+) -> (Vec<f32>, f64) {
+    let mut out = vec![0f32; union_idx.len()];
+    for acc in accs {
+        for (o, &i) in out.iter_mut().zip(union_idx.iter()) {
+            *o += acc[i as usize];
+        }
+    }
+    let t = net.allreduce(union_idx.len() * CostModel::DENSE_ENTRY_BYTES);
+    (out, t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_sums_elementwise() {
+        let a = vec![vec![1.0, 2.0], vec![10.0, 20.0], vec![100.0, 200.0]];
+        let net = CostModel::paper_testbed(3);
+        let (s, t) = dense_allreduce(&a, &net);
+        assert_eq!(s, vec![111.0, 222.0]);
+        assert!(t > 0.0);
+    }
+
+    #[test]
+    fn sparse_union_gathers_from_all_ranks() {
+        // rank 0 selected index 1, rank 1 selected index 3; both
+        // contribute their accumulator values at BOTH indices (line 12).
+        let acc0 = vec![0.0, 5.0, 0.0, 7.0];
+        let acc1 = vec![0.0, 1.0, 0.0, 2.0];
+        let net = CostModel::paper_testbed(2);
+        let (vals, _) = sparse_allreduce_union(&[&acc0, &acc1], &[1, 3], &net);
+        assert_eq!(vals, vec![6.0, 9.0]);
+    }
+
+    #[test]
+    fn sparse_cheaper_than_dense_at_low_density() {
+        let net = CostModel::paper_testbed(8);
+        let n_g = 1_000_000;
+        let dense_t = net.allreduce(n_g * 4);
+        let sparse_t = net.allreduce(n_g / 1000 * 4);
+        assert!(sparse_t < dense_t / 2.0, "{sparse_t} vs {dense_t}");
+    }
+
+    #[test]
+    fn empty_union_is_free_data() {
+        let acc0 = vec![1.0f32];
+        let net = CostModel::paper_testbed(1);
+        let (vals, t) = sparse_allreduce_union(&[acc0.as_slice()], &[], &net);
+        assert!(vals.is_empty());
+        assert_eq!(t, 0.0);
+    }
+}

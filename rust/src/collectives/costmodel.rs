@@ -1,0 +1,145 @@
+//! α–β timing model for the collectives.
+//!
+//! Standard algorithm costs (Chan et al., "Collective communication:
+//! theory, practice, and experience"):
+//!
+//! * ring all-gather, `B` bytes per rank:      `(n-1)·α + (n-1)·B·β`
+//! * ring all-reduce, `B` bytes total vector:  `2(n-1)·α + 2·(n-1)/n·B·β`
+//! * binomial-tree broadcast, `B` bytes:       `⌈log₂n⌉·(α + B·β)`
+//!
+//! These are *models*, not measurements — the simulator charges them to a
+//! virtual clock so figure shapes (who wins, crossovers) reproduce the
+//! paper's cluster behaviour deterministically on one box.
+
+use super::topology::Topology;
+
+/// Timing calculator bound to a topology.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// Cluster shape + link parameters.
+    pub topo: Topology,
+}
+
+impl CostModel {
+    /// Model over the given topology.
+    pub fn new(topo: Topology) -> Self {
+        CostModel { topo }
+    }
+
+    /// Paper-like 2×8 V100 cluster.
+    pub fn paper_testbed(n_ranks: usize) -> Self {
+        CostModel::new(Topology::paper_testbed(n_ranks))
+    }
+
+    /// Ring all-gather time where each rank contributes `bytes_per_rank`.
+    pub fn allgather(&self, bytes_per_rank: usize) -> f64 {
+        let n = self.topo.n_ranks as f64;
+        if self.topo.n_ranks <= 1 {
+            return 0.0;
+        }
+        (n - 1.0) * self.topo.alpha() + (n - 1.0) * bytes_per_rank as f64 * self.topo.beta()
+    }
+
+    /// Ring all-reduce time over a `bytes` vector (reduce-scatter +
+    /// all-gather).
+    pub fn allreduce(&self, bytes: usize) -> f64 {
+        let n = self.topo.n_ranks as f64;
+        if self.topo.n_ranks <= 1 {
+            return 0.0;
+        }
+        2.0 * (n - 1.0) * self.topo.alpha()
+            + 2.0 * ((n - 1.0) / n) * bytes as f64 * self.topo.beta()
+    }
+
+    /// Binomial-tree broadcast of `bytes` from one root.
+    pub fn broadcast(&self, bytes: usize) -> f64 {
+        let n = self.topo.n_ranks;
+        if n <= 1 {
+            return 0.0;
+        }
+        let hops = (usize::BITS - (n - 1).leading_zeros()) as f64; // ceil(log2 n)
+        hops * (self.topo.alpha() + bytes as f64 * self.topo.beta())
+    }
+
+    /// Bytes of one sparse (idx u32 + val f32) entry.
+    pub const SPARSE_ENTRY_BYTES: usize = 8;
+
+    /// Bytes of one dense f32 gradient.
+    pub const DENSE_ENTRY_BYTES: usize = 4;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cm(n: usize) -> CostModel {
+        CostModel::paper_testbed(n)
+    }
+
+    #[test]
+    fn single_rank_is_free() {
+        let m = cm(1);
+        assert_eq!(m.allgather(1_000_000), 0.0);
+        assert_eq!(m.allreduce(1_000_000), 0.0);
+        assert_eq!(m.broadcast(1_000_000), 0.0);
+    }
+
+    #[test]
+    fn allgather_scales_linearly_in_payload() {
+        let m = cm(8);
+        let t1 = m.allgather(1_000);
+        let t2 = m.allgather(2_000);
+        assert!(t2 > t1);
+        // subtract latency term: bandwidth part doubles
+        let lat = 7.0 * m.topo.alpha();
+        assert!(((t2 - lat) / (t1 - lat) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn allreduce_bandwidth_term_grows_with_n() {
+        // 2(n-1)/n B β is increasing in n toward 2Bβ
+        let small = cm(2).allreduce(10_000_000) - 2.0 * cm(2).topo.alpha();
+        let large = cm(8).allreduce(10_000_000) - 14.0 * cm(8).topo.alpha();
+        assert!(large > small);
+    }
+
+    #[test]
+    fn broadcast_log_hops() {
+        let m = cm(16);
+        let t = m.broadcast(0);
+        assert!((t - 4.0 * m.topo.alpha()).abs() < 1e-12);
+        let m9 = cm(9);
+        assert!((m9.broadcast(0) - 4.0 * m9.topo.alpha()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sparse_beats_dense_at_low_density() {
+        // the whole point of the paper: at d=0.001 with no build-up,
+        // allgather(k/n entries) + allreduce(k values) << dense allreduce
+        let n = 16;
+        let n_g = 25_000_000usize;
+        let k = n_g / 1000;
+        let m = cm(n);
+        let sparse = m.allgather((k / n) * CostModel::SPARSE_ENTRY_BYTES)
+            + m.allreduce(k * CostModel::DENSE_ENTRY_BYTES);
+        let dense = m.allreduce(n_g * CostModel::DENSE_ENTRY_BYTES);
+        // latency floors both sides; bandwidth-wise sparse is ~1000x
+        // lighter, net a large end-to-end win
+        assert!(sparse * 3.0 < dense, "sparse {sparse} dense {dense}");
+    }
+
+    #[test]
+    fn buildup_erases_the_advantage() {
+        // n× build-up plus n× padding can push sparse above dense at
+        // moderate density — the Fig. 2 pathology
+        let n = 16;
+        let n_g = 25_000_000usize;
+        let k = n_g * 3 / 100; // inaccurate threshold: actual d = 0.03
+        let m = cm(n);
+        // hard-threshold worst case: m_t ≈ k (imbalance), union ≈ n·k/2
+        let padded = m.allgather(k * CostModel::SPARSE_ENTRY_BYTES);
+        let union_reduce = m.allreduce(n * k / 2 * CostModel::DENSE_ENTRY_BYTES);
+        let dense = m.allreduce(n_g * CostModel::DENSE_ENTRY_BYTES);
+        assert!(padded + union_reduce > dense * 0.5, "{} vs {}", padded + union_reduce, dense);
+    }
+}

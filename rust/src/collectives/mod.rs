@@ -1,0 +1,24 @@
+//! In-process collective-communication substrate with an α–β cost model.
+//!
+//! Replaces the paper's NCCL/OpenMPI layer (DESIGN.md §2). The data
+//! movement is executed for real (the simulated ranks exchange actual
+//! index/value vectors, so correctness is bit-exact), while the *time*
+//! each collective would take on a cluster is computed from the classic
+//! α–β (latency–bandwidth) model with ring/tree algorithms — the same
+//! payload arithmetic the paper's Eqs. (2)–(5) are built on:
+//!
+//! * padded all-gather: every rank contributes `m_t = max_i k_i` entries
+//!   (zero-padded), Eq. (2)–(4);
+//! * sparse all-reduce over the union index set (Alg. 1 line 13);
+//! * dense ring all-reduce for the non-sparsified baseline;
+//! * leader broadcast for CLT-k.
+
+pub mod allgather;
+pub mod allreduce;
+pub mod costmodel;
+pub mod topology;
+
+pub use allgather::{allgather_sparse, broadcast_selection, AllGatherResult};
+pub use allreduce::{dense_allreduce, sparse_allreduce_union};
+pub use costmodel::CostModel;
+pub use topology::Topology;

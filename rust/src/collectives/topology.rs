@@ -1,0 +1,82 @@
+//! Cluster topology description for the cost model.
+//!
+//! Mirrors the paper's testbed shape: `nodes × gpus_per_node` workers,
+//! fast intra-node links (NVLink) and a slower inter-node fabric. Ring
+//! collectives are bottlenecked by their slowest link, so the effective
+//! (α, β) of a ring spanning nodes is the inter-node pair — the standard
+//! flat-ring approximation.
+
+/// Physical layout of the simulated cluster.
+#[derive(Clone, Copy, Debug)]
+pub struct Topology {
+    /// Total workers (n).
+    pub n_ranks: usize,
+    /// Workers per node (8 on the paper's testbed).
+    pub gpus_per_node: usize,
+    /// Intra-node latency per message, seconds (NVLink ≈ 5 µs).
+    pub alpha_intra: f64,
+    /// Intra-node bandwidth, bytes/second (NVLink ≈ 60 GB/s effective).
+    pub beta_intra_bw: f64,
+    /// Inter-node latency per message, seconds (IB ≈ 20 µs).
+    pub alpha_inter: f64,
+    /// Inter-node bandwidth, bytes/second (IB ≈ 10 GB/s effective).
+    pub beta_inter_bw: f64,
+}
+
+impl Topology {
+    /// Paper-like testbed: two nodes of eight V100s.
+    pub fn paper_testbed(n_ranks: usize) -> Self {
+        Topology {
+            n_ranks,
+            gpus_per_node: 8,
+            alpha_intra: 5e-6,
+            beta_intra_bw: 60e9,
+            alpha_inter: 20e-6,
+            beta_inter_bw: 10e9,
+        }
+    }
+
+    /// Does a ring over all ranks cross node boundaries?
+    pub fn multi_node(&self) -> bool {
+        self.n_ranks > self.gpus_per_node
+    }
+
+    /// Effective per-hop latency of a full ring (slowest link).
+    pub fn alpha(&self) -> f64 {
+        if self.multi_node() {
+            self.alpha_inter
+        } else {
+            self.alpha_intra
+        }
+    }
+
+    /// Effective per-byte time of a full ring (slowest link).
+    pub fn beta(&self) -> f64 {
+        if self.multi_node() {
+            1.0 / self.beta_inter_bw
+        } else {
+            1.0 / self.beta_intra_bw
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_node_uses_fast_links() {
+        let t = Topology::paper_testbed(8);
+        assert!(!t.multi_node());
+        assert_eq!(t.alpha(), 5e-6);
+        assert!((t.beta() - 1.0 / 60e9).abs() < 1e-24);
+    }
+
+    #[test]
+    fn multi_node_bottlenecked_by_fabric() {
+        let t = Topology::paper_testbed(16);
+        assert!(t.multi_node());
+        assert_eq!(t.alpha(), 20e-6);
+        assert!((t.beta() - 1.0 / 10e9).abs() < 1e-24);
+    }
+}

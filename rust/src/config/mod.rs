@@ -1,0 +1,12 @@
+//! Configuration system: a TOML-subset parser plus typed experiment
+//! configs and the Table II application presets.
+//!
+//! The offline build has no `serde`/`toml`, so [`toml`] implements the
+//! subset the configs need: `[section]` headers, `key = value` with
+//! strings, integers, floats, booleans, and flat arrays.
+
+pub mod presets;
+pub mod toml;
+
+pub use presets::{preset, preset_names, ExperimentConfig};
+pub use toml::{TomlDoc, TomlValue};

@@ -1,0 +1,275 @@
+//! Minimal TOML-subset parser (sections, scalars, flat arrays).
+//!
+//! Supported:
+//! ```toml
+//! # comment
+//! [section]
+//! name = "string"
+//! n = 16
+//! d = 0.001
+//! flag = true
+//! sizes = [2, 4, 8, 16]
+//! ```
+//!
+//! Not supported (rejected with errors, never silently misparsed):
+//! nested tables in one header, inline tables, multi-line strings,
+//! datetimes, table arrays.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// A parsed scalar or flat array.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    /// Quoted string.
+    Str(String),
+    /// Integer.
+    Int(i64),
+    /// Float.
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+    /// Flat homogeneous-ish array.
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    /// As string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    /// As integer (ints only).
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    /// As float (accepts ints).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    /// As boolean.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    /// As array slice.
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: `section.key -> value` (root keys use section "").
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    map: BTreeMap<(String, String), TomlValue>,
+}
+
+impl TomlDoc {
+    /// Parse a document.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| {
+                    Error::config(format!("line {}: unterminated section", ln + 1))
+                })?;
+                if name.contains('[') || name.is_empty() {
+                    return Err(Error::config(format!("line {}: bad section name", ln + 1)));
+                }
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                Error::config(format!("line {}: expected key = value", ln + 1))
+            })?;
+            let key = k.trim();
+            if key.is_empty() {
+                return Err(Error::config(format!("line {}: empty key", ln + 1)));
+            }
+            let value = parse_value(v.trim(), ln + 1)?;
+            doc.map
+                .insert((section.clone(), key.to_string()), value);
+        }
+        Ok(doc)
+    }
+
+    /// Load from a file.
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+
+    /// Look up `section.key`.
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.map.get(&(section.to_string(), key.to_string()))
+    }
+
+    /// Typed getters with defaults.
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+    /// Integer with default.
+    pub fn int_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(|v| v.as_int()).unwrap_or(default)
+    }
+    /// Float with default.
+    pub fn float_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key)
+            .and_then(|v| v.as_float())
+            .unwrap_or(default)
+    }
+    /// Bool with default.
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+    /// All `(key, value)` pairs of a section.
+    pub fn section(&self, section: &str) -> Vec<(&str, &TomlValue)> {
+        self.map
+            .iter()
+            .filter(|((s, _), _)| s == section)
+            .map(|((_, k), v)| (k.as_str(), v))
+            .collect()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive but safe for our subset: '#' inside quoted strings is not
+    // supported in config values we generate.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, ln: usize) -> Result<TomlValue> {
+    if s.is_empty() {
+        return Err(Error::config(format!("line {ln}: empty value")));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| Error::config(format!("line {ln}: unterminated string")))?;
+        if inner.contains('"') {
+            return Err(Error::config(format!("line {ln}: embedded quote")));
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| Error::config(format!("line {ln}: unterminated array")))?;
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            let p = part.trim();
+            if p.is_empty() {
+                continue;
+            }
+            items.push(parse_value(p, ln)?);
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(Error::config(format!("line {ln}: cannot parse value '{s}'")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_types() {
+        let doc = TomlDoc::parse(
+            r#"
+# top comment
+name = "exdyna"   # trailing comment
+[run]
+ranks = 16
+density = 0.001
+fast = true
+scales = [2, 4, 8, 16]
+mix = [1, 2.5]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("", "name", "?"), "exdyna");
+        assert_eq!(doc.int_or("run", "ranks", 0), 16);
+        assert!((doc.float_or("run", "density", 0.0) - 0.001).abs() < 1e-12);
+        assert!(doc.bool_or("run", "fast", false));
+        let arr = doc.get("run", "scales").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 4);
+        assert_eq!(arr[0].as_int(), Some(2));
+        assert_eq!(
+            doc.get("run", "mix").unwrap().as_array().unwrap()[1].as_float(),
+            Some(2.5)
+        );
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let doc = TomlDoc::parse("").unwrap();
+        assert_eq!(doc.int_or("x", "y", 7), 7);
+        assert_eq!(doc.str_or("x", "y", "d"), "d");
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let doc = TomlDoc::parse("x = 3").unwrap();
+        assert_eq!(doc.float_or("", "x", 0.0), 3.0);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(TomlDoc::parse("[open").is_err());
+        assert!(TomlDoc::parse("novalue").is_err());
+        assert!(TomlDoc::parse("x = ").is_err());
+        assert!(TomlDoc::parse("x = \"unterminated").is_err());
+        assert!(TomlDoc::parse("x = [1, 2").is_err());
+        assert!(TomlDoc::parse("x = what").is_err());
+        assert!(TomlDoc::parse("[]").is_err());
+    }
+
+    #[test]
+    fn section_listing() {
+        let doc = TomlDoc::parse("[a]\nx = 1\ny = 2\n[b]\nz = 3").unwrap();
+        let a = doc.section("a");
+        assert_eq!(a.len(), 2);
+    }
+}

@@ -1,0 +1,312 @@
+//! Dynamic partition allocation (paper Alg. 3).
+//!
+//! Each iteration, every rank runs this identical deterministic routine on
+//! the all-gathered per-rank selection counts:
+//!
+//! 1. **Un-rotate** the counts: rank `i` held partition
+//!    `((t-1) % n + i) % n` last iteration, so `k_t` indexed by rank is
+//!    permuted into `k` indexed by partition (Alg. 3 lines 2–6).
+//! 2. **Re-balance**: for each adjacent pair `(i, i+1)`, if one partition
+//!    selected more than `α×` the mean and the other less than `1/α×`,
+//!    migrate `blk_move` blocks from the heavy to the light side (guarded
+//!    by `min_blk`), shifting the estimated workload
+//!    `k_move = blk_move · sz_blk · density` with it (lines 9–28).
+//! 3. **Cyclic allocation**: rank `r` is handed partition
+//!    `(t % n + r) % n` (lines 29–32), so over `n` iterations every rank
+//!    sweeps the entire gradient vector — the property that lets local
+//!    accumulators stay unbiased with exclusive search spaces.
+//!
+//! Complexity is O(n) in the worker count and independent of model size —
+//! the "near-zero additional overhead" row of Table I.
+
+use super::partition::PartitionLayout;
+use crate::error::{Error, Result};
+
+/// Tunables for Alg. 3 (paper defaults in parentheses).
+#[derive(Clone, Copy, Debug)]
+pub struct AllocationCfg {
+    /// Imbalance trigger `α > 1`: a pair re-balances only when one side is
+    /// above `α ×` mean and the other below `1/α ×` mean (2.0).
+    pub alpha: f64,
+    /// Blocks migrated per adjustment (4).
+    pub blk_move: usize,
+    /// Minimum blocks a partition may shrink to (4).
+    pub min_blk: usize,
+}
+
+impl Default for AllocationCfg {
+    fn default() -> Self {
+        AllocationCfg {
+            alpha: 2.0,
+            blk_move: 4,
+            min_blk: 4,
+        }
+    }
+}
+
+/// Replicated allocator state: the partition layout evolves identically on
+/// every rank from the shared `k_per_rank` metadata.
+#[derive(Clone, Debug)]
+pub struct Allocator {
+    cfg: AllocationCfg,
+    layout: PartitionLayout,
+}
+
+impl Allocator {
+    /// Wrap an initial layout (from [`PartitionLayout::new`], Alg. 2).
+    pub fn new(layout: PartitionLayout, cfg: AllocationCfg) -> Result<Self> {
+        if cfg.alpha <= 1.0 {
+            return Err(Error::invalid(format!("alpha must be > 1 (got {})", cfg.alpha)));
+        }
+        if cfg.blk_move == 0 || cfg.min_blk == 0 {
+            return Err(Error::invalid("blk_move and min_blk must be > 0"));
+        }
+        layout.validate()?;
+        Ok(Allocator { cfg, layout })
+    }
+
+    /// Current topology (read-only).
+    pub fn layout(&self) -> &PartitionLayout {
+        &self.layout
+    }
+
+    /// Partition index assigned to `rank` at iteration `t` (Alg. 3 l.29).
+    pub fn partition_of(&self, t: usize, rank: usize) -> usize {
+        let n = self.layout.n_partitions();
+        (t % n + rank) % n
+    }
+
+    /// Rank that owns partition `p` at iteration `t` (inverse mapping).
+    pub fn rank_of(&self, t: usize, p: usize) -> usize {
+        let n = self.layout.n_partitions();
+        (p + n - t % n) % n
+    }
+
+    /// Alg. 3: re-balance the topology from last iteration's per-rank
+    /// counts, then return this rank's element range `[start, end)` for
+    /// iteration `t`. `k_by_rank` is the metadata all-gather output; pass
+    /// `None` on the very first iteration (no history yet).
+    ///
+    /// Also returns the per-partition workload estimate after migration
+    /// (`k_t` in Alg. 1 line 16 terms) for diagnostics.
+    pub fn allocate(
+        &mut self,
+        t: usize,
+        rank: usize,
+        k_by_rank: Option<&[usize]>,
+    ) -> Result<(usize, usize)> {
+        let n = self.layout.n_partitions();
+        if let Some(k_by_rank) = k_by_rank {
+            if k_by_rank.len() != n {
+                return Err(Error::invalid(format!(
+                    "k_by_rank has {} entries, expected {n}",
+                    k_by_rank.len()
+                )));
+            }
+            if t > 0 {
+                self.rebalance(t, k_by_rank)?;
+            }
+        }
+        let p = self.partition_of(t, rank);
+        Ok(self.layout.elem_range(p))
+    }
+
+    /// The adjacent-pair migration pass (Alg. 3 lines 2–28), exposed for
+    /// property tests. `k_by_rank` are counts indexed by *rank* from
+    /// iteration `t-1`.
+    pub fn rebalance(&mut self, t: usize, k_by_rank: &[usize]) -> Result<Vec<f64>> {
+        let n = self.layout.n_partitions();
+        // lines 2-6: permute rank-indexed counts into partition order.
+        // rank i held partition ((t-1) % n + i) % n.
+        let mut k = vec![0f64; n];
+        for (i, &ki) in k_by_rank.iter().enumerate() {
+            let j = ((t - 1) % n + i) % n;
+            k[j] = ki as f64;
+        }
+        let total: f64 = k.iter().sum();
+        if total <= 0.0 {
+            return Ok(k); // nothing selected; topology untouched
+        }
+        let pk_prev = total / n as f64; // mean workload per partition
+        let den_prev = total / self.layout.n_g as f64; // density estimate
+        let k_move = self.cfg.blk_move as f64 * self.layout.sz_blk as f64 * den_prev;
+        let alpha = self.cfg.alpha;
+        for i in 0..n - 1 {
+            let det = k[i] / pk_prev;
+            let det2 = k[i + 1] / pk_prev;
+            if det > alpha && det2 < 1.0 / alpha {
+                // heavy left, light right: move blocks left -> right
+                if self.layout.blk_part[i] < self.cfg.blk_move + self.cfg.min_blk {
+                    continue;
+                }
+                self.layout.blk_part[i] -= self.cfg.blk_move;
+                self.layout.blk_part[i + 1] += self.cfg.blk_move;
+                self.layout.blk_pos[i + 1] -= self.cfg.blk_move;
+                k[i] -= k_move;
+                k[i + 1] += k_move;
+            } else if det < 1.0 / alpha && det2 > alpha {
+                // light left, heavy right: move blocks right -> left
+                if self.layout.blk_part[i + 1] < self.cfg.blk_move + self.cfg.min_blk {
+                    continue;
+                }
+                self.layout.blk_part[i] += self.cfg.blk_move;
+                self.layout.blk_part[i + 1] -= self.cfg.blk_move;
+                self.layout.blk_pos[i + 1] += self.cfg.blk_move;
+                k[i] += k_move;
+                k[i + 1] -= k_move;
+            }
+        }
+        debug_assert!(self.layout.validate().is_ok());
+        Ok(k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn alloc(n_g: usize, n_b: usize, n: usize) -> Allocator {
+        Allocator::new(
+            PartitionLayout::new(n_g, n_b, n).unwrap(),
+            AllocationCfg::default(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn cyclic_rotation_is_bijective_and_advances() {
+        let a = alloc(32 * 640, 640, 4);
+        for t in 0..10 {
+            let parts: Vec<usize> = (0..4).map(|r| a.partition_of(t, r)).collect();
+            let mut sorted = parts.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, vec![0, 1, 2, 3], "t={t}: {parts:?}");
+            for r in 0..4 {
+                assert_eq!(a.rank_of(t, a.partition_of(t, r)), r);
+                // next iteration hands the next partition to the same rank
+                assert_eq!(a.partition_of(t + 1, r), (a.partition_of(t, r) + 1) % 4);
+            }
+        }
+    }
+
+    #[test]
+    fn balanced_workload_leaves_topology_unchanged() {
+        let mut a = alloc(32 * 640, 640, 4);
+        let before = a.layout().clone();
+        a.rebalance(1, &[100, 100, 100, 100]).unwrap();
+        assert_eq!(*a.layout(), before);
+    }
+
+    fn alloc_a(n_g: usize, n_b: usize, n: usize, alpha: f64) -> Allocator {
+        Allocator::new(
+            PartitionLayout::new(n_g, n_b, n).unwrap(),
+            AllocationCfg {
+                alpha,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn heavy_left_light_right_migrates() {
+        // note: with n=2 the imbalance ratio det = k_i / mean is bounded
+        // by n = 2, so the paper's alpha = 2 can never fire; use 1.5.
+        let mut a = alloc_a(32 * 640, 640, 2, 1.5);
+        // t=1 => (t-1)%n = 0, so rank order == partition order
+        let before = a.layout().clone();
+        a.rebalance(1, &[1000, 10]).unwrap();
+        assert_eq!(a.layout().blk_part[0], before.blk_part[0] - 4);
+        assert_eq!(a.layout().blk_part[1], before.blk_part[1] + 4);
+        a.layout().validate().unwrap();
+    }
+
+    #[test]
+    fn heavy_right_light_left_migrates_back() {
+        let mut a = alloc_a(32 * 640, 640, 2, 1.5);
+        let before = a.layout().clone();
+        a.rebalance(1, &[10, 1000]).unwrap();
+        assert_eq!(a.layout().blk_part[0], before.blk_part[0] + 4);
+        assert_eq!(a.layout().blk_part[1], before.blk_part[1] - 4);
+    }
+
+    #[test]
+    fn rotation_aware_unpermute() {
+        // at t=2 with n=2: rank i held partition (1 + i) % 2, so rank 0's
+        // count belongs to partition 1. Heavy rank 0 => heavy partition 1.
+        let mut a = alloc_a(32 * 640, 640, 2, 1.5);
+        let before = a.layout().clone();
+        a.rebalance(2, &[1000, 10]).unwrap();
+        // partition 1 heavy, partition 0 light -> blocks move right->left
+        assert_eq!(a.layout().blk_part[0], before.blk_part[0] + 4);
+    }
+
+    #[test]
+    fn min_blk_floor_respected() {
+        let layout = PartitionLayout::new(32 * 16, 16, 2).unwrap(); // 8 blocks each
+        let mut a = Allocator::new(
+            layout,
+            AllocationCfg {
+                alpha: 2.0,
+                blk_move: 4,
+                min_blk: 8,
+            },
+        )
+        .unwrap();
+        let before = a.layout().clone();
+        // would shrink partition 0 below min_blk=8 -> must be skipped
+        a.rebalance(1, &[1000, 10]).unwrap();
+        assert_eq!(*a.layout(), before);
+    }
+
+    #[test]
+    fn zero_counts_are_noop() {
+        let mut a = alloc(32 * 640, 640, 4);
+        let before = a.layout().clone();
+        a.rebalance(1, &[0, 0, 0, 0]).unwrap();
+        assert_eq!(*a.layout(), before);
+    }
+
+    #[test]
+    fn block_total_conserved_under_many_rounds() {
+        let mut a = alloc(32 * 6400, 6400, 8);
+        let mut rng = crate::util::Rng::new(42);
+        for t in 1..200 {
+            let k: Vec<usize> = (0..8).map(|_| rng.usize(2000)).collect();
+            a.rebalance(t, &k).unwrap();
+            a.layout().validate().unwrap();
+            assert_eq!(a.layout().blk_part.iter().sum::<usize>(), 6400);
+        }
+    }
+
+    #[test]
+    fn allocate_returns_this_ranks_range() {
+        let mut a = alloc(32 * 640, 640, 4);
+        let (s0, e0) = a.allocate(0, 0, None).unwrap();
+        let (s1, e1) = a.allocate(0, 1, None).unwrap();
+        assert_eq!(e0 - s0, 32 * 160);
+        assert_eq!(s1, e0);
+        assert!(e1 > s1);
+    }
+
+    #[test]
+    fn bad_cfg_rejected() {
+        let l = PartitionLayout::new(32 * 64, 64, 2).unwrap();
+        assert!(Allocator::new(
+            l.clone(),
+            AllocationCfg {
+                alpha: 1.0,
+                ..Default::default()
+            }
+        )
+        .is_err());
+        assert!(Allocator::new(
+            l,
+            AllocationCfg {
+                blk_move: 0,
+                ..Default::default()
+            }
+        )
+        .is_err());
+    }
+}

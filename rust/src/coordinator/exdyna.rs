@@ -1,0 +1,302 @@
+//! The composed ExDyna sparsifier (paper Alg. 1's per-iteration logic).
+//!
+//! Wires together the four mechanisms:
+//! Alg. 2 ([`PartitionLayout`]) → Alg. 3 ([`Allocator`]) →
+//! Alg. 4 ([`select_indices`]) → Alg. 5 ([`OnlineThreshold`]),
+//! and exposes them through the [`Sparsifier`] trait so the trainer and
+//! the bench harness treat ExDyna exactly like every baseline.
+//!
+//! One `ExDyna` instance runs per rank; all instances evolve identical
+//! topology/threshold state from the shared metadata (replicated
+//! coordinator — see module docs of [`crate::coordinator`]).
+
+use super::allocation::{AllocationCfg, Allocator};
+use super::partition::PartitionLayout;
+use super::selection::{select_indices, SelectOutput};
+use super::threshold::{OnlineThreshold, ThresholdCfg};
+use crate::error::Result;
+use crate::sparsifiers::{RoundCtx, SelectPlan, Sparsifier};
+
+/// Full ExDyna configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ExDynaCfg {
+    /// User-set communication density `d = k / n_g` (0.001).
+    pub density: f64,
+    /// Number of fine-grained blocks `n_b` (Alg. 2). The paper uses
+    /// "fine-grained" without fixing a value; default 64 blocks/worker.
+    pub n_blocks: usize,
+    /// Alg. 3 tunables.
+    pub alloc: AllocationCfg,
+    /// Alg. 5 tunables.
+    pub threshold: ThresholdCfg,
+    /// Disable Alg. 3 re-balancing (static topology) — the "coarse-grained
+    /// partitioning" ablation of Fig. 9 (partitions still rotate).
+    pub dynamic_allocation: bool,
+}
+
+impl ExDynaCfg {
+    /// Paper-default configuration for `n` workers.
+    pub fn default_for(n: usize) -> Self {
+        ExDynaCfg {
+            density: 0.001,
+            n_blocks: 64 * n.max(1),
+            alloc: AllocationCfg::default(),
+            threshold: ThresholdCfg::default(),
+            dynamic_allocation: true,
+        }
+    }
+}
+
+/// Per-rank ExDyna replica.
+pub struct ExDyna {
+    cfg: ExDynaCfg,
+    n_g: usize,
+    k_user: usize,
+    allocator: Allocator,
+    threshold: OnlineThreshold,
+    /// Last observed per-rank counts (drives next allocation + scaling).
+    pending_k: Option<Vec<usize>>,
+    /// Window actually used at the last `select` (diagnostics).
+    last_window: (usize, usize),
+}
+
+impl ExDyna {
+    /// Build a replica for a model with `n_g` gradients on `n` ranks.
+    pub fn new(n_g: usize, n: usize, cfg: ExDynaCfg) -> Result<Self> {
+        let layout = PartitionLayout::new(n_g, cfg.n_blocks, n)?;
+        let allocator = Allocator::new(layout, cfg.alloc)?;
+        let threshold = OnlineThreshold::new(cfg.threshold)?;
+        let k_user = ((cfg.density * n_g as f64).round() as usize).max(1);
+        Ok(ExDyna {
+            cfg,
+            n_g,
+            k_user,
+            allocator,
+            threshold,
+            pending_k: None,
+            last_window: (0, 0),
+        })
+    }
+
+    /// User-set k (`d · n_g`).
+    pub fn k_user(&self) -> usize {
+        self.k_user
+    }
+
+    /// Current partition topology (for Fig. 9 style diagnostics).
+    pub fn layout(&self) -> &PartitionLayout {
+        self.allocator.layout()
+    }
+
+    /// Window used by the most recent `select`.
+    pub fn last_window(&self) -> (usize, usize) {
+        self.last_window
+    }
+}
+
+impl Sparsifier for ExDyna {
+    fn name(&self) -> String {
+        if self.cfg.dynamic_allocation {
+            "exdyna".into()
+        } else {
+            "exdyna-coarse".into()
+        }
+    }
+
+    fn builds_up(&self) -> bool {
+        false // exclusive partitions: the defining property
+    }
+
+    fn select(&mut self, ctx: &RoundCtx, acc: &[f32]) -> Result<SelectOutput> {
+        let plan = self.plan(ctx, acc)?.expect("ExDyna always plans");
+        // Alg. 4: exclusive threshold selection in [start, end).
+        Ok(select_indices(acc, plan.start, plan.end, plan.delta))
+    }
+
+    fn plan(&mut self, ctx: &RoundCtx, acc: &[f32]) -> Result<Option<SelectPlan>> {
+        debug_assert!(acc.len() >= self.n_g);
+
+        // Alg. 3: re-balance from last round's metadata, pick this rank's
+        // partition in cyclic order.
+        let k_feedback = if self.cfg.dynamic_allocation {
+            self.pending_k.take()
+        } else {
+            None
+        };
+        let (start, end) = self
+            .allocator
+            .allocate(ctx.t, ctx.rank, k_feedback.as_deref())?;
+        self.last_window = (start, end);
+        let _ = acc; // replicas must not adapt to local data outside Alg. 5
+        Ok(Some(SelectPlan {
+            start,
+            end,
+            delta: self.threshold.delta(),
+        }))
+    }
+
+    fn observe(&mut self, _t: usize, k_by_rank: &[usize]) -> Result<()> {
+        // Alg. 5: scale δ from the global actual k'.
+        let k_actual: usize = k_by_rank.iter().sum();
+        self.threshold.update(self.k_user, k_actual);
+        // stash counts for the next iteration's Alg. 3 pass
+        self.pending_k = Some(k_by_rank.to_vec());
+        Ok(())
+    }
+
+    fn delta(&self) -> Option<f32> {
+        Some(self.threshold.delta())
+    }
+
+    fn target_density(&self) -> f64 {
+        self.cfg.density
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn gaussian(seed: u64, n: usize, sigma: f32) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut v = vec![0f32; n];
+        rng.fill_normal(&mut v, 0.0, sigma);
+        v
+    }
+
+    /// Drive `n` replicas for `iters` rounds over a shared gradient stream
+    /// and return (replicas, per-round union counts).
+    fn drive(
+        n: usize,
+        n_g: usize,
+        iters: usize,
+        cfg: ExDynaCfg,
+    ) -> (Vec<ExDyna>, Vec<usize>) {
+        let mut reps: Vec<ExDyna> = (0..n).map(|_| ExDyna::new(n_g, n, cfg).unwrap()).collect();
+        let mut unions = Vec::new();
+        for t in 0..iters {
+            let acc = gaussian(1000 + t as u64, n_g, 0.01);
+            let mut k_by_rank = vec![0usize; n];
+            let mut all_idx: Vec<u32> = Vec::new();
+            for (r, rep) in reps.iter_mut().enumerate() {
+                let ctx = RoundCtx {
+                    t,
+                    rank: r,
+                    n_ranks: n,
+                };
+                let out = rep.select(&ctx, &acc).unwrap();
+                k_by_rank[r] = out.len();
+                all_idx.extend_from_slice(&out.idx);
+            }
+            // no build-up: all indices globally unique
+            let mut dedup = all_idx.clone();
+            dedup.sort_unstable();
+            dedup.dedup();
+            assert_eq!(dedup.len(), all_idx.len(), "build-up at t={t}");
+            unions.push(all_idx.len());
+            for rep in reps.iter_mut() {
+                rep.observe(t, &k_by_rank).unwrap();
+            }
+        }
+        (reps, unions)
+    }
+
+    #[test]
+    fn no_gradient_buildup_ever() {
+        let cfg = ExDynaCfg::default_for(4);
+        drive(4, 32 * 1024, 30, cfg);
+    }
+
+    #[test]
+    fn replicas_stay_consistent() {
+        let cfg = ExDynaCfg::default_for(4);
+        let (reps, _) = drive(4, 32 * 1024, 25, cfg);
+        let d0 = reps[0].delta().unwrap();
+        let l0 = reps[0].layout().clone();
+        for rep in &reps[1..] {
+            assert_eq!(rep.delta().unwrap(), d0, "threshold replicas diverged");
+            assert_eq!(*rep.layout(), l0, "topology replicas diverged");
+        }
+    }
+
+    #[test]
+    fn density_tracks_user_setting() {
+        let n_g = 128 * 1024;
+        let mut cfg = ExDynaCfg::default_for(8);
+        cfg.density = 0.002;
+        let (_, unions) = drive(8, n_g, 120, cfg);
+        let k_user = (0.002 * n_g as f64) as usize;
+        // average of the last 40 rounds within the hysteresis band (β=2)
+        let tail = &unions[80..];
+        let avg = tail.iter().sum::<usize>() as f64 / tail.len() as f64;
+        assert!(
+            avg > k_user as f64 / 2.0 && avg < k_user as f64 * 2.0,
+            "avg k' = {avg}, user k = {k_user}"
+        );
+    }
+
+    #[test]
+    fn selection_confined_to_own_window() {
+        let n = 4;
+        let n_g = 32 * 2048;
+        let mut rep = ExDyna::new(n_g, n, ExDynaCfg::default_for(n)).unwrap();
+        let acc = gaussian(9, n_g, 0.01);
+        let out = rep
+            .select(
+                &RoundCtx {
+                    t: 0,
+                    rank: 2,
+                    n_ranks: n,
+                },
+                &acc,
+            )
+            .unwrap();
+        let (s, e) = rep.last_window();
+        assert!(out.idx.iter().all(|&i| (s..e).contains(&(i as usize))));
+        assert!(e > s);
+    }
+
+    #[test]
+    fn coarse_mode_never_rebalances() {
+        let n = 4;
+        let n_g = 32 * 4096;
+        let mut cfg = ExDynaCfg::default_for(n);
+        cfg.dynamic_allocation = false;
+        let (reps, _) = drive(n, n_g, 40, cfg);
+        // static topology: equal split must persist
+        let bp = &reps[0].layout().blk_part;
+        assert!(bp.iter().all(|&b| b == bp[0]), "{bp:?}");
+        assert_eq!(reps[0].name(), "exdyna-coarse");
+    }
+
+    #[test]
+    fn union_equals_global_threshold_set() {
+        // with a shared acc and shared δ, the union of per-rank selections
+        // must equal whole-vector selection at δ
+        let n = 4;
+        let n_g = 32 * 2048;
+        let mut reps: Vec<ExDyna> = (0..n)
+            .map(|_| ExDyna::new(n_g, n, ExDynaCfg::default_for(n)).unwrap())
+            .collect();
+        let acc = gaussian(33, n_g, 0.01);
+        let delta = reps[0].delta().unwrap();
+        let mut union: Vec<u32> = Vec::new();
+        for (r, rep) in reps.iter_mut().enumerate() {
+            let out = rep
+                .select(
+                    &RoundCtx {
+                        t: 0,
+                        rank: r,
+                        n_ranks: n,
+                    },
+                    &acc,
+                )
+                .unwrap();
+            union.extend_from_slice(&out.idx);
+        }
+        union.sort_unstable();
+        let whole = crate::coordinator::select_indices(&acc, 0, n_g, delta);
+        assert_eq!(union, whole.idx);
+    }
+}

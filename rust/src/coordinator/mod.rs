@@ -1,0 +1,29 @@
+//! The paper's coordination contribution (ExDyna, Algs. 1–5).
+//!
+//! * [`partition`] — block-based gradient vector partitioning (Alg. 2).
+//! * [`allocation`] — dynamic partition allocation + cyclic rotation
+//!   (Alg. 3).
+//! * [`selection`] — partition-wise exclusive threshold selection
+//!   (Alg. 4; Rust mirror of the L1 Pallas kernel, used by the simulated
+//!   ranks and as the optimized host fallback).
+//! * [`threshold`] — online threshold scaling (Alg. 5).
+//! * [`exdyna`] — the composed sparsifier (Alg. 1 inner logic) exposed via
+//!   the [`crate::sparsifiers::Sparsifier`] trait.
+//!
+//! Every rank runs a *replica* of this coordinator state, advanced purely
+//! from all-gathered metadata (`k` per rank) — exactly like the paper's
+//! implementation, where each worker derives the identical partition
+//! topology and threshold deterministically. Replica consistency is a
+//! tested invariant (see `rust/tests/coordinator_props.rs`).
+
+pub mod allocation;
+pub mod exdyna;
+pub mod partition;
+pub mod selection;
+pub mod threshold;
+
+pub use allocation::{AllocationCfg, Allocator};
+pub use exdyna::{ExDyna, ExDynaCfg};
+pub use partition::PartitionLayout;
+pub use selection::{select_indices, select_indices_scan, SelectOutput};
+pub use threshold::{OnlineThreshold, ThresholdCfg};

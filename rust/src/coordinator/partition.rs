@@ -1,0 +1,208 @@
+//! Block-based gradient vector partitioning (paper Alg. 2).
+//!
+//! The flat gradient vector (`n_g` elements) is divided into `n_b` blocks
+//! of `sz_blk = (n_g / n_b) - (n_g / n_b) % 32` elements (the `% 32`
+//! keeps blocks warp-aligned on CUDA; it is also lane-friendly on TPU —
+//! see DESIGN.md §Hardware-Adaptation). Contiguous blocks are grouped into
+//! `n` non-overlapping partitions, one per worker; partitions own whole
+//! blocks, so the topology can later be re-cut at block granularity
+//! without touching gradient data.
+//!
+//! The paper's footnote 4 ("we do consider the remainder in our
+//! implementation") is handled here by attaching the tail range
+//! `[n_b * sz_blk, n_g)` to whichever partition owns the final block.
+
+use crate::error::{Error, Result};
+
+/// Partition topology: who owns which contiguous block range.
+///
+/// Invariants (property-tested):
+/// * `blk_part` sums to `n_blocks`; every partition ≥ 1 block.
+/// * `blk_pos[i+1] = blk_pos[i] + blk_part[i]`, `blk_pos[0] = 0`.
+/// * Element ranges of all partitions tile `[0, n_g)` exactly.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PartitionLayout {
+    /// Total number of gradients in the model.
+    pub n_g: usize,
+    /// Elements per block (multiple of 32).
+    pub sz_blk: usize,
+    /// Number of whole blocks (`n_b` in the paper).
+    pub n_blocks: usize,
+    /// Blocks per partition (`blk_part` in Alg. 2), length = n workers.
+    pub blk_part: Vec<usize>,
+    /// First block index per partition (`blk_pos`), length = n workers.
+    pub blk_pos: Vec<usize>,
+}
+
+impl PartitionLayout {
+    /// Alg. 2: initialize `n` partitions over `n_b` blocks of the flat
+    /// vector of `n_g` gradients.
+    ///
+    /// Errors if the request cannot produce ≥1 block of ≥32 elements per
+    /// partition (degenerate configurations the paper implicitly excludes).
+    pub fn new(n_g: usize, n_b: usize, n: usize) -> Result<Self> {
+        if n == 0 || n_b == 0 || n_g == 0 {
+            return Err(Error::invalid(format!(
+                "partitioning needs n_g,n_b,n > 0 (got {n_g},{n_b},{n})"
+            )));
+        }
+        if n_b < n {
+            return Err(Error::invalid(format!(
+                "need at least one block per worker: n_b={n_b} < n={n}"
+            )));
+        }
+        let temp = n_g / n_b;
+        let sz_blk = temp - temp % 32; // Alg. 2 line 2
+        if sz_blk == 0 {
+            return Err(Error::invalid(format!(
+                "block size underflow: n_g={n_g}, n_b={n_b} gives <32 elems/block"
+            )));
+        }
+        let quotient = n_b / n;
+        let remainder = n_b % n;
+        let mut blk_part = vec![0usize; n];
+        for (i, bp) in blk_part.iter_mut().enumerate() {
+            *bp = if i < remainder { quotient + 1 } else { quotient };
+        }
+        let mut blk_pos = vec![0usize; n];
+        for i in 1..n {
+            blk_pos[i] = blk_pos[i - 1] + blk_part[i - 1];
+        }
+        Ok(PartitionLayout {
+            n_g,
+            sz_blk,
+            n_blocks: n_b,
+            blk_part,
+            blk_pos,
+        })
+    }
+
+    /// Number of partitions (= workers).
+    pub fn n_partitions(&self) -> usize {
+        self.blk_part.len()
+    }
+
+    /// Element range `[start, end)` of partition `p`. The partition owning
+    /// the final block also owns the remainder tail `[n_b*sz_blk, n_g)`.
+    pub fn elem_range(&self, p: usize) -> (usize, usize) {
+        let st = self.blk_pos[p] * self.sz_blk;
+        let last_blk = self.blk_pos[p] + self.blk_part[p];
+        let mut en = last_blk * self.sz_blk;
+        if last_blk == self.n_blocks {
+            en = self.n_g; // tail ownership
+        }
+        (st, en)
+    }
+
+    /// Number of elements owned by partition `p`.
+    pub fn elem_count(&self, p: usize) -> usize {
+        let (s, e) = self.elem_range(p);
+        e - s
+    }
+
+    /// Validate all structural invariants; used by tests and debug builds.
+    pub fn validate(&self) -> Result<()> {
+        let n = self.n_partitions();
+        if self.blk_part.len() != n || self.blk_pos.len() != n {
+            return Err(Error::invariant("length mismatch"));
+        }
+        if self.blk_pos[0] != 0 {
+            return Err(Error::invariant("blk_pos[0] != 0"));
+        }
+        for i in 0..n {
+            if self.blk_part[i] == 0 {
+                return Err(Error::invariant(format!("partition {i} empty")));
+            }
+            if i + 1 < n && self.blk_pos[i + 1] != self.blk_pos[i] + self.blk_part[i] {
+                return Err(Error::invariant(format!("gap/overlap at {i}")));
+            }
+        }
+        if self.blk_pos[n - 1] + self.blk_part[n - 1] != self.n_blocks {
+            return Err(Error::invariant("blocks not fully covered"));
+        }
+        if self.sz_blk % 32 != 0 || self.sz_blk == 0 {
+            return Err(Error::invariant("sz_blk not a positive multiple of 32"));
+        }
+        // element ranges tile [0, n_g)
+        let mut cursor = 0usize;
+        for p in 0..n {
+            let (s, e) = self.elem_range(p);
+            if s != cursor || e < s {
+                return Err(Error::invariant(format!("element range break at {p}")));
+            }
+            cursor = e;
+        }
+        if cursor != self.n_g {
+            return Err(Error::invariant(format!(
+                "ranges end at {cursor}, expected n_g={}",
+                self.n_g
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn even_split() {
+        let l = PartitionLayout::new(32 * 64, 64, 4).unwrap();
+        assert_eq!(l.sz_blk, 32);
+        assert_eq!(l.blk_part, vec![16, 16, 16, 16]);
+        assert_eq!(l.blk_pos, vec![0, 16, 32, 48]);
+        l.validate().unwrap();
+        assert_eq!(l.elem_range(0), (0, 512));
+        assert_eq!(l.elem_range(3), (1536, 2048));
+    }
+
+    #[test]
+    fn remainder_blocks_go_to_leading_partitions() {
+        // 10 blocks over 4 workers -> 3,3,2,2
+        let l = PartitionLayout::new(32 * 10, 10, 4).unwrap();
+        assert_eq!(l.blk_part, vec![3, 3, 2, 2]);
+        l.validate().unwrap();
+    }
+
+    #[test]
+    fn element_tail_owned_by_last_partition() {
+        // n_g = 1000, n_b = 4 -> temp=250, sz_blk=224, tail = 1000-896=104
+        let l = PartitionLayout::new(1000, 4, 2).unwrap();
+        assert_eq!(l.sz_blk, 224);
+        l.validate().unwrap();
+        let (_, e) = l.elem_range(1);
+        assert_eq!(e, 1000);
+        let total: usize = (0..2).map(|p| l.elem_count(p)).sum();
+        assert_eq!(total, 1000);
+    }
+
+    #[test]
+    fn degenerate_inputs_rejected() {
+        assert!(PartitionLayout::new(0, 4, 2).is_err());
+        assert!(PartitionLayout::new(100, 0, 2).is_err());
+        assert!(PartitionLayout::new(100, 4, 0).is_err());
+        assert!(PartitionLayout::new(100, 2, 4).is_err()); // fewer blocks than workers
+        assert!(PartitionLayout::new(100, 4, 2).is_err()); // sz_blk < 32
+    }
+
+    #[test]
+    fn single_worker_owns_everything() {
+        let l = PartitionLayout::new(4096, 8, 1).unwrap();
+        l.validate().unwrap();
+        assert_eq!(l.elem_range(0), (0, 4096));
+    }
+
+    #[test]
+    fn paper_scale_shapes() {
+        // ~25M gradients (ResNet-50-ish), 4096 blocks, 16 workers
+        let l = PartitionLayout::new(25_557_032, 4096, 16).unwrap();
+        l.validate().unwrap();
+        assert_eq!(l.sz_blk % 32, 0);
+        assert_eq!(l.blk_part.iter().sum::<usize>(), 4096);
+        // all partitions within one block of each other
+        let min = *l.blk_part.iter().min().unwrap();
+        let max = *l.blk_part.iter().max().unwrap();
+        assert!(max - min <= 1);
+    }
+}

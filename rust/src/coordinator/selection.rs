@@ -1,0 +1,222 @@
+//! Partition-wise exclusive gradient selection (paper Alg. 4).
+//!
+//! Rust mirror of the L1 Pallas `threshold_select` kernel, used on the
+//! simulated ranks' hot path. Semantics are fixed by the shared oracle
+//! (`python/compile/kernels/ref.py`): select exactly the indices
+//! `i ∈ [start, end)` with `|acc[i]| ≥ δ`.
+//!
+//! Two implementations:
+//! * [`select_indices_scan`] — straightforward branchy scan (reference).
+//! * [`select_indices`] — the optimized hot path: chunked, branch-light
+//!   two-pass scan that first counts hits per chunk (pure vectorizable
+//!   compare+sum, no data-dependent branches) and then compacts only the
+//!   chunks that contain hits. At d ≈ 0.001 almost every chunk is empty,
+//!   so pass 2 touches ~0.1% of the data and pass 1 runs at memory
+//!   bandwidth — the same reason the paper's CUDA kernel is "near-zero"
+//!   cost.
+
+/// Result of one rank's selection: parallel `idx`/`val` arrays.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SelectOutput {
+    /// Selected flat indices (ascending).
+    pub idx: Vec<u32>,
+    /// Accumulator values at those indices.
+    pub val: Vec<f32>,
+}
+
+impl SelectOutput {
+    /// Number of selected gradients (`k_i`).
+    pub fn len(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// True when nothing was selected.
+    pub fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+}
+
+/// Reference scan (kept for differential testing and readability).
+pub fn select_indices_scan(acc: &[f32], start: usize, end: usize, delta: f32) -> SelectOutput {
+    let mut out = SelectOutput::default();
+    for i in start..end.min(acc.len()) {
+        if acc[i].abs() >= delta {
+            out.idx.push(i as u32);
+            out.val.push(acc[i]);
+        }
+    }
+    out
+}
+
+/// Chunk width for the two-pass scan. One cache-friendly unit; also the
+/// granularity at which pass 2 revisits data.
+const CHUNK: usize = 1024;
+
+/// Optimized threshold selection over `[start, end)` (see module docs).
+pub fn select_indices(acc: &[f32], start: usize, end: usize, delta: f32) -> SelectOutput {
+    let end = end.min(acc.len());
+    if start >= end {
+        return SelectOutput::default();
+    }
+    let slice = &acc[start..end];
+    // Pass 1: branchless per-chunk hit counts.
+    let n_chunks = slice.len().div_ceil(CHUNK);
+    let mut counts = vec![0u32; n_chunks];
+    let mut total = 0u32;
+    for (c, chunk) in slice.chunks(CHUNK).enumerate() {
+        let mut cnt = 0u32;
+        for &x in chunk {
+            // abs-compare compiles to a mask+cmp; bool as u32 avoids branches
+            cnt += (x.abs() >= delta) as u32;
+        }
+        counts[c] = cnt;
+        total += cnt;
+    }
+    // Pass 2: compact only chunks with hits.
+    let mut out = SelectOutput {
+        idx: Vec::with_capacity(total as usize),
+        val: Vec::with_capacity(total as usize),
+    };
+    for (c, chunk) in slice.chunks(CHUNK).enumerate() {
+        if counts[c] == 0 {
+            continue;
+        }
+        let base = start + c * CHUNK;
+        for (j, &x) in chunk.iter().enumerate() {
+            if x.abs() >= delta {
+                out.idx.push((base + j) as u32);
+                out.val.push(x);
+            }
+        }
+    }
+    out
+}
+
+/// Count-only variant (pass 1 alone): used where only `k_i` is needed,
+/// e.g. threshold calibration sweeps.
+pub fn count_over_threshold(acc: &[f32], start: usize, end: usize, delta: f32) -> usize {
+    let end = end.min(acc.len());
+    if start >= end {
+        return 0;
+    }
+    acc[start..end]
+        .iter()
+        .map(|&x| (x.abs() >= delta) as usize)
+        .sum()
+}
+
+/// Compact a dense mask-multiplied payload (the PJRT `sparsify_step`
+/// output) into `(idx, val)` pairs. `selected[i] != 0` marks a hit; exact
+/// zeros that were genuinely selected are impossible because selection
+/// requires `|acc| ≥ δ > 0`.
+pub fn compact_masked(selected: &[f32], start: usize, end: usize) -> SelectOutput {
+    let mut out = SelectOutput::default();
+    for i in start..end.min(selected.len()) {
+        let v = selected[i];
+        if v != 0.0 {
+            out.idx.push(i as u32);
+            out.val.push(v);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_acc(seed: u64, n: usize) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut v = vec![0f32; n];
+        rng.fill_normal(&mut v, 0.0, 0.01);
+        v
+    }
+
+    #[test]
+    fn scan_matches_definition() {
+        let acc = vec![0.5, -0.2, 0.05, -0.7, 0.0, 0.3];
+        let out = select_indices_scan(&acc, 0, 6, 0.3);
+        assert_eq!(out.idx, vec![0, 3, 5]);
+        assert_eq!(out.val, vec![0.5, -0.7, 0.3]);
+    }
+
+    #[test]
+    fn optimized_matches_scan_randomized() {
+        let mut rng = Rng::new(99);
+        for case in 0..50 {
+            let n = 1 + rng.usize(20_000);
+            let acc = random_acc(case, n);
+            let start = rng.usize(n);
+            let end = start + rng.usize(n - start + 1);
+            let delta = 0.001 + rng.f32() * 0.05;
+            let a = select_indices_scan(&acc, start, end, delta);
+            let b = select_indices(&acc, start, end, delta);
+            assert_eq!(a, b, "case {case} n={n} [{start},{end}) d={delta}");
+        }
+    }
+
+    #[test]
+    fn window_respected() {
+        let acc = vec![1.0; 100];
+        let out = select_indices(&acc, 10, 20, 0.5);
+        assert_eq!(out.len(), 10);
+        assert!(out.idx.iter().all(|&i| (10..20).contains(&(i as usize))));
+    }
+
+    #[test]
+    fn empty_and_degenerate_windows() {
+        let acc = vec![1.0; 100];
+        assert!(select_indices(&acc, 50, 50, 0.1).is_empty());
+        assert!(select_indices(&acc, 80, 20, 0.1).is_empty());
+        // end beyond len is clamped
+        let out = select_indices(&acc, 90, 500, 0.1);
+        assert_eq!(out.len(), 10);
+    }
+
+    #[test]
+    fn threshold_boundary_is_inclusive() {
+        let acc = vec![0.5, 0.49999, -0.5];
+        let out = select_indices(&acc, 0, 3, 0.5);
+        assert_eq!(out.idx, vec![0, 2]);
+    }
+
+    #[test]
+    fn count_matches_select() {
+        let acc = random_acc(7, 50_000);
+        let c = count_over_threshold(&acc, 100, 40_000, 0.01);
+        let s = select_indices(&acc, 100, 40_000, 0.01);
+        assert_eq!(c, s.len());
+        assert!(c > 0);
+    }
+
+    #[test]
+    fn compact_masked_roundtrip() {
+        let acc = random_acc(13, 10_000);
+        let delta = 0.015;
+        let (start, end) = (123, 9_800);
+        let direct = select_indices(&acc, start, end, delta);
+        // build the dense masked payload the PJRT path would return
+        let mut masked = vec![0f32; acc.len()];
+        for (i, &v) in direct.idx.iter().zip(direct.val.iter()) {
+            masked[*i as usize] = v;
+        }
+        let compacted = compact_masked(&masked, start, end);
+        assert_eq!(direct, compacted);
+    }
+
+    #[test]
+    fn indices_ascending_and_disjoint_across_partitions() {
+        let acc = random_acc(21, 30_000);
+        let ranges = [(0usize, 10_000usize), (10_000, 22_000), (22_000, 30_000)];
+        let mut all: Vec<u32> = Vec::new();
+        for (s, e) in ranges {
+            let out = select_indices(&acc, s, e, 0.01);
+            assert!(out.idx.windows(2).all(|w| w[0] < w[1]));
+            all.extend_from_slice(&out.idx);
+        }
+        // disjoint + union == whole-vector selection
+        let whole = select_indices(&acc, 0, 30_000, 0.01);
+        assert_eq!(all, whole.idx);
+    }
+}

@@ -1,0 +1,50 @@
+//! Crate-wide error type.
+
+/// Unified error for the ExDyna crate.
+#[derive(thiserror::Error, Debug)]
+pub enum Error {
+    /// Errors surfaced by the XLA / PJRT runtime layer.
+    #[error("xla: {0}")]
+    Xla(#[from] xla::Error),
+
+    /// Filesystem / IO errors (artifact loading, metric sinks).
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Configuration parse/validation errors.
+    #[error("config: {0}")]
+    Config(String),
+
+    /// Artifact manifest problems (missing model, size mismatch, ...).
+    #[error("manifest: {0}")]
+    Manifest(String),
+
+    /// Invariant violations in the coordinator (should never fire in
+    /// correct builds; surfaced instead of panicking on user input).
+    #[error("invariant: {0}")]
+    Invariant(String),
+
+    /// Invalid argument combinations from the CLI or public API.
+    #[error("invalid argument: {0}")]
+    InvalidArg(String),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Helper for config errors.
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+
+    /// Helper for invariant violations.
+    pub fn invariant(msg: impl Into<String>) -> Self {
+        Error::Invariant(msg.into())
+    }
+
+    /// Helper for invalid arguments.
+    pub fn invalid(msg: impl Into<String>) -> Self {
+        Error::InvalidArg(msg.into())
+    }
+}

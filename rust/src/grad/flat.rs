@@ -1,0 +1,53 @@
+//! Flat gradient-vector helpers shared by the trainer and benches.
+
+/// `params[idx[j]] -= scale * vals[j]` — the sparse model update of
+/// Alg. 1 line 17 restricted to the union index set.
+pub fn apply_sparse_update(params: &mut [f32], idx: &[u32], vals: &[f32], scale: f32) {
+    debug_assert_eq!(idx.len(), vals.len());
+    for (&i, &v) in idx.iter().zip(vals.iter()) {
+        params[i as usize] -= scale * v;
+    }
+}
+
+/// Zero the accumulator at the union indices (Alg. 1 line 18):
+/// coordinates that were globally applied must not be re-sent.
+pub fn zero_at(acc: &mut [f32], idx: &[u32]) {
+    for &i in idx {
+        acc[i as usize] = 0.0;
+    }
+}
+
+/// `acc = err + lr * grad` into a reusable buffer (Alg. 1 line 8).
+pub fn accumulate_into(acc: &mut [f32], err: &[f32], grad: &[f32], lr: f32) {
+    debug_assert_eq!(acc.len(), err.len());
+    debug_assert_eq!(acc.len(), grad.len());
+    for ((a, &e), &g) in acc.iter_mut().zip(err.iter()).zip(grad.iter()) {
+        *a = e + lr * g;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_update_touches_only_listed() {
+        let mut p = vec![1.0, 2.0, 3.0, 4.0];
+        apply_sparse_update(&mut p, &[1, 3], &[10.0, 20.0], 0.1);
+        assert_eq!(p, vec![1.0, 1.0, 3.0, 2.0]);
+    }
+
+    #[test]
+    fn zero_at_clears() {
+        let mut a = vec![1.0, 2.0, 3.0];
+        zero_at(&mut a, &[0, 2]);
+        assert_eq!(a, vec![0.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn accumulate() {
+        let mut acc = vec![0.0; 3];
+        accumulate_into(&mut acc, &[1.0, 1.0, 1.0], &[1.0, 2.0, 3.0], 0.5);
+        assert_eq!(acc, vec![1.5, 2.0, 2.5]);
+    }
+}

@@ -1,0 +1,9 @@
+//! Gradient substrate: flat-vector utilities and the synthetic gradient
+//! generator that stands in for the paper's CIFAR/WikiText workloads
+//! (DESIGN.md §2 — substitution table).
+
+pub mod flat;
+pub mod synth;
+
+pub use flat::{apply_sparse_update, zero_at};
+pub use synth::{DecayCfg, SynthGen, SynthModel};

@@ -1,0 +1,429 @@
+//! Synthetic gradient generator — the workload substitute for the paper's
+//! ResNet/Inception/LSTM training runs (DESIGN.md §2).
+//!
+//! Sparsifier behaviour depends on the gradient *magnitude structure*,
+//! not the task, so the generator reproduces the three properties that
+//! drive every effect the paper measures:
+//!
+//! 1. **Layer-varying scales** — per-layer σ drawn log-normally over ~2
+//!    decades ("gradient magnitude varies with the model layer it belongs
+//!    to", §II). This is what creates workload imbalance across
+//!    partitions (Fig. 9) and defeats fixed thresholds (Fig. 6).
+//! 2. **Temporal decay + lr-drop** — global scale follows
+//!    `c + (1−c)·exp(−t/τ)`, with a step drop at the lr-decay iteration
+//!    (the density cliff in Fig. 6 at iter 14,600).
+//! 3. **Cross-worker correlation** — each rank sees
+//!    `√ρ·shared + √(1−ρ)·own` noise, so per-rank top-k sets overlap
+//!    only partially: the gradient build-up factor lands between 1 and n
+//!    as in Fig. 1.
+//!
+//! Two fill modes:
+//! * `exact` — fresh Marsaglia-polar normals every call (gold standard).
+//! * `fast`  — a pre-generated normal pool read at per-(iteration, layer,
+//!   rank) offsets; identical marginal distribution, ~20× cheaper, used
+//!   by the long bench sweeps (1 CPU core budget). Differential tests
+//!   pin its moments and tail mass against `exact`.
+
+use crate::util::Rng;
+
+/// Temporal scale schedule.
+#[derive(Clone, Copy, Debug)]
+pub struct DecayCfg {
+    /// Initial global scale multiplier.
+    pub sigma0: f32,
+    /// Floor fraction `c` (scale decays toward `c·sigma0`).
+    pub floor: f32,
+    /// Decay time constant τ in iterations.
+    pub tau: f64,
+    /// Iteration at which the lr-decay drop fires (`usize::MAX` = never).
+    pub lr_drop_at: usize,
+    /// Multiplier applied after the drop (e.g. 0.3).
+    pub lr_drop_factor: f32,
+}
+
+impl Default for DecayCfg {
+    fn default() -> Self {
+        DecayCfg {
+            sigma0: 1.0,
+            floor: 0.25,
+            tau: 2000.0,
+            lr_drop_at: usize::MAX,
+            lr_drop_factor: 0.3,
+        }
+    }
+}
+
+impl DecayCfg {
+    /// Global scale at iteration `t`.
+    pub fn scale(&self, t: usize) -> f32 {
+        let base = self.floor + (1.0 - self.floor) * (-(t as f64) / self.tau).exp() as f32;
+        let drop = if t >= self.lr_drop_at {
+            self.lr_drop_factor
+        } else {
+            1.0
+        };
+        self.sigma0 * base * drop
+    }
+}
+
+/// A synthetic model: named layer sizes with per-layer base scales.
+#[derive(Clone, Debug)]
+pub struct SynthModel {
+    /// Profile name (figures key on it).
+    pub name: String,
+    /// `(size, sigma)` per layer.
+    pub layers: Vec<(usize, f32)>,
+    /// Total gradients.
+    pub n_g: usize,
+    /// Temporal schedule.
+    pub decay: DecayCfg,
+}
+
+impl SynthModel {
+    /// Build a profile: `n_layers` layers sized by a truncated power-law
+    /// (few huge tensors + many small ones, like real CNNs/LSTMs), scaled
+    /// so the total is `n_g`; per-layer σ log-normal over ~2 decades.
+    pub fn profile(name: &str, n_g: usize, n_layers: usize, seed: u64, decay: DecayCfg) -> Self {
+        let mut rng = Rng::new(seed);
+        // power-law-ish raw sizes
+        let mut raw: Vec<f64> = (0..n_layers)
+            .map(|_| {
+                let u = rng.f64().max(1e-9);
+                u.powf(-0.7) // heavy upper tail
+            })
+            .collect();
+        let total: f64 = raw.iter().sum();
+        for r in raw.iter_mut() {
+            *r /= total;
+        }
+        let mut layers: Vec<(usize, f32)> = raw
+            .iter()
+            .map(|&f| {
+                let size = ((f * n_g as f64) as usize).max(64);
+                let sigma = rng.lognormal(-4.6, 1.15) as f32; // median ~1e-2, ~2 decades
+                (size, sigma)
+            })
+            .collect();
+        // fix rounding so sizes sum exactly to n_g
+        let sum: usize = layers.iter().map(|l| l.0).sum();
+        if sum > n_g {
+            let mut excess = sum - n_g;
+            for l in layers.iter_mut().rev() {
+                let cut = excess.min(l.0.saturating_sub(64));
+                l.0 -= cut;
+                excess -= cut;
+                if excess == 0 {
+                    break;
+                }
+            }
+        } else {
+            layers.last_mut().unwrap().0 += n_g - sum;
+        }
+        let n_g = layers.iter().map(|l| l.0).sum();
+        SynthModel {
+            name: name.to_string(),
+            layers,
+            n_g,
+            decay,
+        }
+    }
+
+    /// The three Fig. 1/2 profiles (scaled by `scale` to fit the 1-core
+    /// testbed; 1.0 = paper size).
+    pub fn resnet18(scale: f64) -> Self {
+        Self::profile("resnet18", (11.2e6 * scale) as usize, 60, 181, DecayCfg::default())
+    }
+    /// GoogLeNet-like profile.
+    pub fn googlenet(scale: f64) -> Self {
+        Self::profile("googlenet", (6.6e6 * scale) as usize, 110, 182, DecayCfg::default())
+    }
+    /// SENet-18-like profile.
+    pub fn senet18(scale: f64) -> Self {
+        Self::profile("senet18", (11.3e6 * scale) as usize, 80, 183, DecayCfg::default())
+    }
+    /// The three Table II / Fig. 5–10 profiles.
+    pub fn resnet152(scale: f64) -> Self {
+        Self::profile("resnet152", (60.2e6 * scale) as usize, 155, 184, DecayCfg {
+            lr_drop_at: usize::MAX,
+            ..Default::default()
+        })
+    }
+    /// Inception-v4-like profile.
+    pub fn inception_v4(scale: f64) -> Self {
+        Self::profile("inception-v4", (42.7e6 * scale) as usize, 150, 185, DecayCfg::default())
+    }
+    /// 2-layer LSTM + embeddings profile (few huge tensors).
+    pub fn lstm(scale: f64) -> Self {
+        Self::profile("lstm", (28.9e6 * scale) as usize, 12, 186, DecayCfg::default())
+    }
+}
+
+/// Size of the pre-generated normal pool in `fast` mode. Prime-ish odd
+/// length so layer/rank offsets cycle through misaligned windows.
+const POOL: usize = 1 << 21; // 2M samples, 8 MiB
+
+/// Generator state for one experiment.
+pub struct SynthGen {
+    /// Model profile.
+    pub model: SynthModel,
+    n_ranks: usize,
+    /// Cross-worker correlation ρ ∈ [0,1].
+    rho: f32,
+    seed: u64,
+    /// Fast-mode pools: standard-normal samples (shared + per-rank view).
+    pool: Vec<f32>,
+    exact: bool,
+}
+
+impl SynthGen {
+    /// New generator; `exact=false` enables the pooled fast path.
+    pub fn new(model: SynthModel, n_ranks: usize, rho: f32, seed: u64, exact: bool) -> Self {
+        let mut rng = Rng::new(seed ^ 0xA5A5_5A5A);
+        let mut pool = vec![0f32; if exact { 0 } else { POOL }];
+        if !exact {
+            rng.fill_normal(&mut pool, 0.0, 1.0);
+        }
+        SynthGen {
+            model,
+            n_ranks,
+            rho: rho.clamp(0.0, 1.0),
+            seed,
+            pool,
+            exact,
+        }
+    }
+
+    /// Total gradients.
+    pub fn n_g(&self) -> usize {
+        self.model.n_g
+    }
+
+    /// Fill `out` (length `n_g`) with rank `rank`'s stochastic gradient at
+    /// iteration `t`.
+    pub fn grad_into(&self, t: usize, rank: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.model.n_g);
+        debug_assert!(rank < self.n_ranks);
+        let g_scale = self.model.decay.scale(t);
+        let w_shared = self.rho.sqrt();
+        let w_own = (1.0 - self.rho).sqrt();
+        let mut off = 0usize;
+        for (li, &(size, sigma)) in self.model.layers.iter().enumerate() {
+            let s = sigma * g_scale;
+            let dst = &mut out[off..off + size];
+            if self.exact {
+                let mut shared = Rng::new(self.mix(t, li, usize::MAX));
+                let mut own = Rng::new(self.mix(t, li, rank));
+                for d in dst.iter_mut() {
+                    let sh = shared.normal() as f32;
+                    let ow = own.normal() as f32;
+                    *d = s * (w_shared * sh + w_own * ow);
+                }
+            } else {
+                // pooled: two independent *sequential* windows into the
+                // pool (perf pass #1: the original per-element hashed
+                // index for the own-noise stream was a random 8 MiB
+                // gather — cache-hostile and ~3x slower than streaming;
+                // two distinct sequential offsets keep the streams
+                // uncorrelated while reading at memcpy speed).
+                let sh_off = (self.mix(t, li, usize::MAX) as usize) & (POOL - 1);
+                let ow_off = (self.mix(t, li, rank) as usize) & (POOL - 1);
+                let pool = &self.pool;
+                let a = w_shared * s;
+                let b = w_own * s;
+                for (j, d) in dst.iter_mut().enumerate() {
+                    let sh = pool[(sh_off + j) & (POOL - 1)];
+                    let ow = pool[(ow_off + j) & (POOL - 1)];
+                    *d = a * sh + b * ow;
+                }
+            }
+            off += size;
+        }
+    }
+
+    /// Fused generate-and-accumulate (perf pass #2): writes
+    /// `acc = err + lr * grad(t, rank)` in one pass, skipping the
+    /// intermediate gradient buffer — saves one full-vector write + read
+    /// per rank per iteration on the (memory-bound) simulation hot path.
+    /// Semantically identical to `grad_into` + `flat::accumulate_into`
+    /// (differential-tested).
+    pub fn accumulate_into(&self, t: usize, rank: usize, err: &[f32], lr: f32, acc: &mut [f32]) {
+        debug_assert_eq!(acc.len(), self.model.n_g);
+        debug_assert_eq!(err.len(), self.model.n_g);
+        let g_scale = self.model.decay.scale(t);
+        let w_shared = self.rho.sqrt();
+        let w_own = (1.0 - self.rho).sqrt();
+        let mut off = 0usize;
+        for (li, &(size, sigma)) in self.model.layers.iter().enumerate() {
+            let s = sigma * g_scale;
+            let dst = &mut acc[off..off + size];
+            let e = &err[off..off + size];
+            if self.exact {
+                let mut shared = Rng::new(self.mix(t, li, usize::MAX));
+                let mut own = Rng::new(self.mix(t, li, rank));
+                for (d, &ev) in dst.iter_mut().zip(e.iter()) {
+                    let sh = shared.normal() as f32;
+                    let ow = own.normal() as f32;
+                    *d = ev + lr * (s * (w_shared * sh + w_own * ow));
+                }
+            } else {
+                let sh_off = (self.mix(t, li, usize::MAX) as usize) & (POOL - 1);
+                let ow_off = (self.mix(t, li, rank) as usize) & (POOL - 1);
+                let pool = &self.pool;
+                let a = lr * w_shared * s;
+                let b = lr * w_own * s;
+                for (j, (d, &ev)) in dst.iter_mut().zip(e.iter()).enumerate() {
+                    let sh = pool[(sh_off + j) & (POOL - 1)];
+                    let ow = pool[(ow_off + j) & (POOL - 1)];
+                    *d = ev + a * sh + b * ow;
+                }
+            }
+            off += size;
+        }
+    }
+
+    /// Per-(t, layer, rank) stream seed; `rank = usize::MAX` = shared.
+    fn mix(&self, t: usize, layer: usize, rank: usize) -> u64 {
+        let mut h = self.seed ^ 0x9E37_79B9_7F4A_7C15;
+        for v in [t as u64, layer as u64, rank as u64] {
+            h ^= v.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            h = h.rotate_left(23).wrapping_mul(0x94D0_49BB_1331_11EB);
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_model(seed: u64) -> SynthModel {
+        SynthModel::profile("test", 100_000, 10, seed, DecayCfg::default())
+    }
+
+    #[test]
+    fn profile_sizes_sum_exactly() {
+        for scale in [0.01, 0.05] {
+            for m in [
+                SynthModel::resnet18(scale),
+                SynthModel::googlenet(scale),
+                SynthModel::lstm(scale),
+            ] {
+                assert_eq!(m.layers.iter().map(|l| l.0).sum::<usize>(), m.n_g);
+                assert!(m.layers.iter().all(|l| l.0 >= 64));
+            }
+        }
+    }
+
+    #[test]
+    fn layer_sigmas_span_decades() {
+        let m = SynthModel::resnet152(0.02);
+        let sigmas: Vec<f32> = m.layers.iter().map(|l| l.1).collect();
+        let max = sigmas.iter().cloned().fold(0.0f32, f32::max);
+        let min = sigmas.iter().cloned().fold(f32::INFINITY, f32::min);
+        assert!(max / min > 10.0, "span {max}/{min}");
+    }
+
+    #[test]
+    fn decay_schedule_monotone_until_drop() {
+        let d = DecayCfg {
+            lr_drop_at: 100,
+            ..Default::default()
+        };
+        assert!(d.scale(0) > d.scale(50));
+        assert!(d.scale(50) > d.scale(99));
+        // drop fires
+        assert!(d.scale(100) < d.scale(99) * 0.5);
+    }
+
+    #[test]
+    fn deterministic_per_tuple() {
+        let gen = SynthGen::new(small_model(1), 4, 0.5, 7, false);
+        let mut a = vec![0f32; gen.n_g()];
+        let mut b = vec![0f32; gen.n_g()];
+        gen.grad_into(3, 2, &mut a);
+        gen.grad_into(3, 2, &mut b);
+        assert_eq!(a, b);
+        gen.grad_into(4, 2, &mut b);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn ranks_correlated_but_not_identical() {
+        let gen = SynthGen::new(small_model(2), 4, 0.5, 9, false);
+        let mut a = vec![0f32; gen.n_g()];
+        let mut b = vec![0f32; gen.n_g()];
+        gen.grad_into(0, 0, &mut a);
+        gen.grad_into(0, 1, &mut b);
+        assert_ne!(a, b);
+        // empirical correlation ~ rho = 0.5
+        let n = a.len() as f64;
+        let ma = a.iter().map(|&x| x as f64).sum::<f64>() / n;
+        let mb = b.iter().map(|&x| x as f64).sum::<f64>() / n;
+        let mut cov = 0.0;
+        let mut va = 0.0;
+        let mut vb = 0.0;
+        for (&x, &y) in a.iter().zip(b.iter()) {
+            cov += (x as f64 - ma) * (y as f64 - mb);
+            va += (x as f64 - ma).powi(2);
+            vb += (y as f64 - mb).powi(2);
+        }
+        let corr = cov / (va.sqrt() * vb.sqrt());
+        assert!((corr - 0.5).abs() < 0.1, "corr {corr}");
+    }
+
+    #[test]
+    fn fast_mode_matches_exact_moments_and_tails() {
+        let model = small_model(3);
+        let fast = SynthGen::new(model.clone(), 2, 0.0, 11, false);
+        let exact = SynthGen::new(model, 2, 0.0, 11, true);
+        let mut f = vec![0f32; fast.n_g()];
+        let mut e = vec![0f32; exact.n_g()];
+        fast.grad_into(0, 0, &mut f);
+        exact.grad_into(0, 0, &mut e);
+        // compare per-layer std and tail mass at 2σ
+        let mut off = 0;
+        for &(size, _sigma) in fast.model.layers.iter() {
+            let sf = crate::util::stats::l2_norm(&f[off..off + size]) / (size as f64).sqrt();
+            let se = crate::util::stats::l2_norm(&e[off..off + size]) / (size as f64).sqrt();
+            assert!(
+                (sf / se - 1.0).abs() < 0.2,
+                "layer std mismatch: fast {sf} exact {se}"
+            );
+            let tf = f[off..off + size].iter().filter(|x| x.abs() as f64 > 2.0 * se).count();
+            let te = e[off..off + size].iter().filter(|x| x.abs() as f64 > 2.0 * se).count();
+            let (tf, te) = (tf.max(1) as f64, te.max(1) as f64);
+            assert!(tf / te < 3.0 && te / tf < 3.0, "tail mismatch {tf} vs {te}");
+            off += size;
+        }
+    }
+
+    #[test]
+    fn fused_accumulate_matches_two_pass() {
+        let gen = SynthGen::new(small_model(6), 2, 0.5, 21, false);
+        let n = gen.n_g();
+        let mut rng = Rng::new(77);
+        let mut err = vec![0f32; n];
+        rng.fill_normal(&mut err, 0.0, 0.02);
+        let lr = 0.125f32; // power of two: exact float identity
+        // two-pass reference
+        let mut grad = vec![0f32; n];
+        gen.grad_into(4, 1, &mut grad);
+        let want: Vec<f32> = err.iter().zip(grad.iter()).map(|(&e, &g)| e + lr * g).collect();
+        // fused
+        let mut acc = vec![0f32; n];
+        gen.accumulate_into(4, 1, &err, lr, &mut acc);
+        for (i, (&a, &w)) in acc.iter().zip(want.iter()).enumerate() {
+            assert!((a - w).abs() <= 1e-7 * (1.0 + w.abs()), "i={i}: {a} vs {w}");
+        }
+    }
+
+    #[test]
+    fn rho_one_makes_ranks_identical() {
+        let gen = SynthGen::new(small_model(4), 3, 1.0, 13, false);
+        let mut a = vec![0f32; gen.n_g()];
+        let mut b = vec![0f32; gen.n_g()];
+        gen.grad_into(5, 0, &mut a);
+        gen.grad_into(5, 2, &mut b);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,38 @@
+//! # ExDyna — scalable gradient sparsification for distributed training
+//!
+//! A Rust + JAX + Pallas reproduction of Yoon & Oh, *"Preserving
+//! Near-Optimal Gradient Sparsification Cost for Scalable Distributed Deep
+//! Learning"* (2024).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): partition-wise
+//!   threshold selection, per-block workload stats, fused error feedback.
+//! * **L2** — JAX models (`python/compile/model.py`): transformer LM and
+//!   MLP forward/backward over *flat* parameter vectors.
+//! * **L3** — this crate: the paper's contribution (block-based
+//!   partitioning, dynamic partition allocation, partition-wise exclusive
+//!   selection, online threshold scaling), the baseline sparsifiers it is
+//!   evaluated against, a collective-communication substrate with an α–β
+//!   cost model, a distributed trainer with error feedback, and a PJRT
+//!   runtime that executes the AOT artifacts. Python never runs on the
+//!   training hot path.
+//!
+//! Entry points: [`training::Trainer`] for simulated multi-rank training,
+//! [`runtime::Engine`] for executing AOT'd models, `exdyna` (the binary)
+//! for the CLI, and `benches/` for every figure/table of the paper.
+
+pub mod bench;
+pub mod cli;
+pub mod collectives;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod grad;
+pub mod metrics;
+pub mod runtime;
+pub mod sparsifiers;
+pub mod training;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,201 @@
+//! Metrics: per-iteration records, traces, and CSV sinks.
+//!
+//! Every figure of the paper regenerates from these records:
+//! density (Figs. 1, 6), time breakdown (Figs. 2, 7), f(t) (Fig. 9),
+//! threshold vs global error (Fig. 10), loss-vs-simulated-time
+//! (Figs. 5, 8).
+
+use crate::util::Summary;
+use std::io::Write;
+use std::path::Path;
+
+/// One training iteration's measurements.
+#[derive(Clone, Debug, Default)]
+pub struct IterRecord {
+    /// Iteration number.
+    pub t: usize,
+    /// Mean training loss across ranks (NaN for synthetic runs).
+    pub loss: f64,
+    /// User-set k (d·n_g).
+    pub k_user: usize,
+    /// Aggregated selected count |union| (the paper's "actual" k').
+    pub k_actual: usize,
+    /// Sum of per-rank selected counts before dedup (Σ k_i); the ratio
+    /// `k_sum / k_actual` ∈ [1, n] is the gradient build-up overlap.
+    pub k_sum: usize,
+    /// Actual density k'/n_g.
+    pub density: f64,
+    /// All-gather traffic ratio f(t) of Eq. (5).
+    pub f_ratio: f64,
+    /// Threshold δ_t (0 for non-threshold sparsifiers).
+    pub delta: f64,
+    /// Global error ‖e_t‖ of Eq. (1).
+    pub global_err: f64,
+    /// Measured compute (fwd/bwd or synth-gen) seconds this iteration.
+    pub t_compute: f64,
+    /// Measured gradient-selection seconds.
+    pub t_select: f64,
+    /// Modeled communication seconds (α–β clock).
+    pub t_comm: f64,
+}
+
+impl IterRecord {
+    /// Total simulated wall-clock of this iteration.
+    pub fn t_total(&self) -> f64 {
+        self.t_compute + self.t_select + self.t_comm
+    }
+}
+
+/// A run's full trace plus run-level metadata.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    /// Sparsifier name.
+    pub sparsifier: String,
+    /// Workload/model name.
+    pub workload: String,
+    /// Number of ranks.
+    pub n_ranks: usize,
+    /// Records in iteration order.
+    pub records: Vec<IterRecord>,
+}
+
+impl Trace {
+    /// New empty trace.
+    pub fn new(sparsifier: &str, workload: &str, n_ranks: usize) -> Self {
+        Trace {
+            sparsifier: sparsifier.to_string(),
+            workload: workload.to_string(),
+            n_ranks,
+            records: Vec::new(),
+        }
+    }
+
+    /// Append one record.
+    pub fn push(&mut self, r: IterRecord) {
+        self.records.push(r);
+    }
+
+    /// Mean actual density over the last `tail` records (all if fewer).
+    pub fn mean_density_tail(&self, tail: usize) -> f64 {
+        let s = self.records.len().saturating_sub(tail);
+        let xs: Vec<f64> = self.records[s..].iter().map(|r| r.density).collect();
+        crate::util::stats::mean(&xs)
+    }
+
+    /// Summary of f(t) ignoring NaN rounds.
+    pub fn f_ratio_summary(&self) -> Summary {
+        let mut s = Summary::new();
+        for r in &self.records {
+            if r.f_ratio.is_finite() {
+                s.push(r.f_ratio);
+            }
+        }
+        s
+    }
+
+    /// Mean per-iteration breakdown `(compute, select, comm, total)`.
+    pub fn mean_breakdown(&self) -> (f64, f64, f64, f64) {
+        let n = self.records.len().max(1) as f64;
+        let c = self.records.iter().map(|r| r.t_compute).sum::<f64>() / n;
+        let s = self.records.iter().map(|r| r.t_select).sum::<f64>() / n;
+        let m = self.records.iter().map(|r| r.t_comm).sum::<f64>() / n;
+        (c, s, m, c + s + m)
+    }
+
+    /// Cumulative simulated time at each iteration.
+    pub fn cumulative_time(&self) -> Vec<f64> {
+        let mut acc = 0.0;
+        self.records
+            .iter()
+            .map(|r| {
+                acc += r.t_total();
+                acc
+            })
+            .collect()
+    }
+
+    /// Write the trace as CSV (header + one row per iteration).
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(
+            f,
+            "t,loss,k_user,k_actual,k_sum,density,f_ratio,delta,global_err,t_compute,t_select,t_comm,t_total"
+        )?;
+        for r in &self.records {
+            writeln!(
+                f,
+                "{},{},{},{},{},{},{},{},{},{},{},{},{}",
+                r.t,
+                r.loss,
+                r.k_user,
+                r.k_actual,
+                r.k_sum,
+                r.density,
+                r.f_ratio,
+                r.delta,
+                r.global_err,
+                r.t_compute,
+                r.t_select,
+                r.t_comm,
+                r.t_total()
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(t: usize, density: f64, f_ratio: f64) -> IterRecord {
+        IterRecord {
+            t,
+            density,
+            f_ratio,
+            t_compute: 1.0,
+            t_select: 0.5,
+            t_comm: 2.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn tail_density_and_breakdown() {
+        let mut tr = Trace::new("exdyna", "resnet", 4);
+        for t in 0..10 {
+            tr.push(rec(t, if t < 5 { 0.01 } else { 0.001 }, 1.2));
+        }
+        assert!((tr.mean_density_tail(5) - 0.001).abs() < 1e-12);
+        let (c, s, m, tot) = tr.mean_breakdown();
+        assert_eq!((c, s, m), (1.0, 0.5, 2.0));
+        assert_eq!(tot, 3.5);
+        assert_eq!(tr.cumulative_time()[9], 35.0);
+    }
+
+    #[test]
+    fn f_summary_skips_nan() {
+        let mut tr = Trace::new("x", "y", 2);
+        tr.push(rec(0, 0.001, f64::NAN));
+        tr.push(rec(1, 0.001, 1.5));
+        let s = tr.f_ratio_summary();
+        assert_eq!(s.count(), 1);
+        assert_eq!(s.mean(), 1.5);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut tr = Trace::new("exdyna", "m", 2);
+        tr.push(rec(0, 0.001, 1.0));
+        let dir = std::env::temp_dir().join("exdyna_test_metrics");
+        let p = dir.join("t.csv");
+        tr.write_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("t,loss,"));
+        assert_eq!(text.lines().count(), 2);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

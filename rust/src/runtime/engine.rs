@@ -1,0 +1,222 @@
+//! Compile-once / execute-many wrappers over the `xla` PJRT CPU client.
+//!
+//! [`Engine`] owns the `PjRtClient` and a cache of compiled executables
+//! keyed by artifact path. [`ModelRuntime`] is the model-level facade the
+//! trainer uses: `init_params`, `fwdbwd`, `sparsify_step`, `sgd_apply` —
+//! all operating on flat `Vec<f32>`s, matching the L2 convention.
+
+use crate::error::{Error, Result};
+use crate::runtime::manifest::{Manifest, ModelMeta};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+/// A compiled HLO executable plus call helpers.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Artifact path (diagnostics).
+    pub path: String,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the decomposed output tuple.
+    /// All artifacts are lowered with `return_tuple=True`, so the single
+    /// output buffer is always a tuple literal.
+    pub fn call(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs = self.exe.execute::<xla::Literal>(inputs)?;
+        let lit = bufs[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// PJRT client + executable cache. Engines are cheap to clone (Rc).
+#[derive(Clone)]
+pub struct Engine {
+    inner: Rc<EngineInner>,
+}
+
+struct EngineInner {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT engine.
+    pub fn cpu() -> Result<Self> {
+        Ok(Engine {
+            inner: Rc::new(EngineInner {
+                client: xla::PjRtClient::cpu()?,
+                cache: RefCell::new(HashMap::new()),
+            }),
+        })
+    }
+
+    /// Platform name reported by PJRT (e.g. `"cpu"`).
+    pub fn platform(&self) -> String {
+        self.inner.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached by path).
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<Rc<Executable>> {
+        let key = path.as_ref().to_string_lossy().to_string();
+        if let Some(e) = self.inner.cache.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        if !path.as_ref().exists() {
+            return Err(Error::Manifest(format!(
+                "artifact {} missing (run `make artifacts`)",
+                key
+            )));
+        }
+        let proto = xla::HloModuleProto::from_text_file(&key)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.inner.client.compile(&comp)?;
+        let wrapped = Rc::new(Executable { exe, path: key.clone() });
+        self.inner.cache.borrow_mut().insert(key, wrapped.clone());
+        Ok(wrapped)
+    }
+}
+
+/// Output of one fused sparsify step (paper Alg. 1 lines 8–19 sans comm).
+pub struct SparsifyOut {
+    /// `acc * mask` — dense masked payload, length `n_padded`.
+    pub selected: Vec<f32>,
+    /// Carried accumulator `e_{i,t+1}`, length `n_padded`.
+    pub new_err: Vec<f32>,
+    /// Number of selected gradients `k_i` (sum of per-tile counts).
+    pub count: usize,
+}
+
+/// Model-level facade: all AOT artifacts of one model, typed.
+pub struct ModelRuntime {
+    engine: Engine,
+    /// Model metadata from the manifest.
+    pub meta: ModelMeta,
+    fwdbwd: Rc<Executable>,
+    init: Rc<Executable>,
+    sparsify: Rc<Executable>,
+    sgd: Rc<Executable>,
+}
+
+impl ModelRuntime {
+    /// Load every artifact of `model` from the manifest.
+    pub fn load(engine: &Engine, manifest: &Manifest, model: &str) -> Result<Self> {
+        let meta = manifest.model(model)?.clone();
+        Ok(ModelRuntime {
+            engine: engine.clone(),
+            fwdbwd: engine.load(manifest.path(&meta.artifact))?,
+            init: engine.load(manifest.path(&meta.init))?,
+            sparsify: engine.load(manifest.path(&meta.sparsify))?,
+            sgd: engine.load(manifest.path(&meta.sgd))?,
+            meta,
+        })
+    }
+
+    /// Engine handle (for loading auxiliary artifacts).
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Draw initial parameters from the AOT init computation.
+    pub fn init_params(&self, seed: u64) -> Result<Vec<f32>> {
+        let key = [(seed >> 32) as u32, seed as u32];
+        let lit = xla::Literal::vec1(&key);
+        let out = self.init.call(&[lit])?;
+        let params = out[0].to_vec::<f32>()?;
+        if params.len() != self.meta.n_params {
+            return Err(Error::invariant(format!(
+                "init returned {} params, manifest says {}",
+                params.len(),
+                self.meta.n_params
+            )));
+        }
+        Ok(params)
+    }
+
+    /// Transformer fwd/bwd: `tokens` is `i32[batch, seq_len+1]` row-major.
+    /// Returns `(loss, flat_grads)`.
+    pub fn fwdbwd_lm(&self, params: &[f32], tokens: &[i32]) -> Result<(f32, Vec<f32>)> {
+        let want = self.meta.batch * (self.meta.seq_len + 1);
+        if tokens.len() != want {
+            return Err(Error::invalid(format!(
+                "tokens len {} != batch*(seq+1) = {want}",
+                tokens.len()
+            )));
+        }
+        let p = xla::Literal::vec1(params);
+        let t = xla::Literal::vec1(tokens)
+            .reshape(&[self.meta.batch as i64, (self.meta.seq_len + 1) as i64])?;
+        let out = self.fwdbwd.call(&[p, t])?;
+        let loss = out[0].to_vec::<f32>()?[0];
+        let grads = out[1].to_vec::<f32>()?;
+        Ok((loss, grads))
+    }
+
+    /// MLP fwd/bwd: `x` is `f32[batch, in_dim]` row-major, `y` is
+    /// `i32[batch]`. Returns `(loss, flat_grads)`.
+    pub fn fwdbwd_mlp(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, Vec<f32>)> {
+        if x.len() != self.meta.batch * self.meta.in_dim || y.len() != self.meta.batch {
+            return Err(Error::invalid("mlp batch shape mismatch".to_string()));
+        }
+        let p = xla::Literal::vec1(params);
+        let xl = xla::Literal::vec1(x)
+            .reshape(&[self.meta.batch as i64, self.meta.in_dim as i64])?;
+        let yl = xla::Literal::vec1(y);
+        let out = self.fwdbwd.call(&[p, xl, yl])?;
+        let loss = out[0].to_vec::<f32>()?[0];
+        let grads = out[1].to_vec::<f32>()?;
+        Ok((loss, grads))
+    }
+
+    /// Fused error-feedback + partition-window threshold selection
+    /// (Pallas kernels under the hood). `err`/`grad` must have length
+    /// `n_padded`; `[start, end)` is this rank's partition window.
+    pub fn sparsify_step(
+        &self,
+        err: &[f32],
+        grad: &[f32],
+        lr: f32,
+        start: usize,
+        end: usize,
+        delta: f32,
+    ) -> Result<SparsifyOut> {
+        let n = self.meta.n_padded;
+        if err.len() != n || grad.len() != n {
+            return Err(Error::invalid(format!(
+                "sparsify expects padded len {n}, got err={} grad={}",
+                err.len(),
+                grad.len()
+            )));
+        }
+        let out = self.sparsify.call(&[
+            xla::Literal::vec1(err),
+            xla::Literal::vec1(grad),
+            xla::Literal::scalar(lr),
+            xla::Literal::scalar(start as i32),
+            xla::Literal::scalar(end as i32),
+            xla::Literal::scalar(delta),
+        ])?;
+        let selected = out[0].to_vec::<f32>()?;
+        let new_err = out[1].to_vec::<f32>()?;
+        let counts = out[2].to_vec::<i32>()?;
+        Ok(SparsifyOut {
+            selected,
+            new_err,
+            count: counts.iter().map(|&c| c as usize).sum(),
+        })
+    }
+
+    /// `params -= lr_over_n * update` via the AOT artifact.
+    pub fn sgd_apply(&self, params: &[f32], update: &[f32], lr_over_n: f32) -> Result<Vec<f32>> {
+        if params.len() != self.meta.n_params || update.len() != self.meta.n_params {
+            return Err(Error::invalid("sgd_apply length mismatch".to_string()));
+        }
+        let out = self.sgd.call(&[
+            xla::Literal::vec1(params),
+            xla::Literal::vec1(update),
+            xla::Literal::scalar(lr_over_n),
+        ])?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+}

@@ -1,0 +1,262 @@
+//! Parser for `artifacts/manifest.txt` (written by `python/compile/aot.py`).
+//!
+//! Plain `key=value` lines; model entries are grouped under
+//! `model.<name>.<field>`. The manifest is the single source of truth for
+//! flat sizes, artifact file names and the layer layout the synthetic
+//! gradient generator uses for per-layer profiles.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One `name:offset:size` layer entry of the flat parameter layout.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LayerEntry {
+    /// Parameter name (e.g. `layer0_wqkv`).
+    pub name: String,
+    /// Offset into the flat vector.
+    pub offset: usize,
+    /// Number of elements.
+    pub size: usize,
+}
+
+/// Metadata for one AOT-exported model.
+#[derive(Clone, Debug, Default)]
+pub struct ModelMeta {
+    /// Manifest key (`tiny`, `small`, `mlp`, ...).
+    pub name: String,
+    /// `transformer` or `mlp`.
+    pub kind: String,
+    /// Exact flat parameter/gradient length.
+    pub n_params: usize,
+    /// TILE-padded length used by the sparsify/block-stats artifacts.
+    pub n_padded: usize,
+    /// Batch size baked into the fwd/bwd artifact.
+    pub batch: usize,
+    /// Sequence length (transformers; 0 for MLP).
+    pub seq_len: usize,
+    /// Vocabulary size (transformers; 0 for MLP).
+    pub vocab: usize,
+    /// Input feature dim (MLP; 0 for transformers).
+    pub in_dim: usize,
+    /// Number of classes (MLP; 0 for transformers).
+    pub classes: usize,
+    /// fwd/bwd artifact file name.
+    pub artifact: String,
+    /// Parameter-init artifact file name.
+    pub init: String,
+    /// Fused sparsify-step artifact file name.
+    pub sparsify: String,
+    /// SGD-apply artifact file name.
+    pub sgd: String,
+    /// Flat layout (sorted by offset).
+    pub layers: Vec<LayerEntry>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    /// Artifact directory (for resolving file names).
+    pub dir: PathBuf,
+    /// Pallas tile width the padded sizes align to.
+    pub tile: usize,
+    /// Block size of the exported block-stats artifacts.
+    pub block_size: usize,
+    /// Models by name.
+    pub models: BTreeMap<String, ModelMeta>,
+}
+
+impl Manifest {
+    /// Load and parse `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Manifest(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let mut m = Manifest {
+            dir,
+            ..Default::default()
+        };
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (key, value) = line.split_once('=').ok_or_else(|| {
+                Error::Manifest(format!("line {}: missing '=': {line}", lineno + 1))
+            })?;
+            m.insert(key.trim(), value.trim(), lineno + 1)?;
+        }
+        for (name, meta) in &m.models {
+            if meta.n_params == 0 || meta.n_padded < meta.n_params {
+                return Err(Error::Manifest(format!(
+                    "model '{name}': bad sizes n_params={} n_padded={}",
+                    meta.n_params, meta.n_padded
+                )));
+            }
+        }
+        Ok(m)
+    }
+
+    fn insert(&mut self, key: &str, value: &str, lineno: usize) -> Result<()> {
+        let badnum =
+            |k: &str| Error::Manifest(format!("line {lineno}: bad number for {k}"));
+        match key {
+            "tile" => self.tile = value.parse().map_err(|_| badnum(key))?,
+            "block_size" => self.block_size = value.parse().map_err(|_| badnum(key))?,
+            k if k.starts_with("model.") => {
+                let rest = &k["model.".len()..];
+                let (name, field) = rest.split_once('.').ok_or_else(|| {
+                    Error::Manifest(format!("line {lineno}: bad model key {k}"))
+                })?;
+                let meta = self
+                    .models
+                    .entry(name.to_string())
+                    .or_insert_with(|| ModelMeta {
+                        name: name.to_string(),
+                        ..Default::default()
+                    });
+                match field {
+                    "kind" => meta.kind = value.to_string(),
+                    "n_params" => meta.n_params = value.parse().map_err(|_| badnum(k))?,
+                    "n_padded" => meta.n_padded = value.parse().map_err(|_| badnum(k))?,
+                    "batch" => meta.batch = value.parse().map_err(|_| badnum(k))?,
+                    "seq_len" => meta.seq_len = value.parse().map_err(|_| badnum(k))?,
+                    "vocab" => meta.vocab = value.parse().map_err(|_| badnum(k))?,
+                    "in_dim" => meta.in_dim = value.parse().map_err(|_| badnum(k))?,
+                    "classes" => meta.classes = value.parse().map_err(|_| badnum(k))?,
+                    "d_model" | "n_layers" => {} // informational only
+                    "artifact" => meta.artifact = value.to_string(),
+                    "init" => meta.init = value.to_string(),
+                    "sparsify" => meta.sparsify = value.to_string(),
+                    "sgd" => meta.sgd = value.to_string(),
+                    "layers" => meta.layers = parse_layers(value, lineno)?,
+                    other => {
+                        return Err(Error::Manifest(format!(
+                            "line {lineno}: unknown model field '{other}'"
+                        )))
+                    }
+                }
+            }
+            k if k.starts_with("block_stats.") => {} // looked up by file name
+            other => {
+                return Err(Error::Manifest(format!(
+                    "line {lineno}: unknown key '{other}'"
+                )))
+            }
+        }
+        Ok(())
+    }
+
+    /// Look up a model or fail with the available names.
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models.get(name).ok_or_else(|| {
+            Error::Manifest(format!(
+                "model '{name}' not in manifest (have: {})",
+                self.models
+                    .keys()
+                    .cloned()
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ))
+        })
+    }
+
+    /// Absolute path of an artifact file name.
+    pub fn path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+fn parse_layers(value: &str, lineno: usize) -> Result<Vec<LayerEntry>> {
+    let mut out = Vec::new();
+    for part in value.split(';').filter(|p| !p.is_empty()) {
+        let fields: Vec<&str> = part.split(':').collect();
+        if fields.len() != 3 {
+            return Err(Error::Manifest(format!(
+                "line {lineno}: bad layer entry '{part}'"
+            )));
+        }
+        out.push(LayerEntry {
+            name: fields[0].to_string(),
+            offset: fields[1].parse().map_err(|_| {
+                Error::Manifest(format!("line {lineno}: bad layer offset '{part}'"))
+            })?,
+            size: fields[2].parse().map_err(|_| {
+                Error::Manifest(format!("line {lineno}: bad layer size '{part}'"))
+            })?,
+        });
+    }
+    out.sort_by_key(|e| e.offset);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+tile=8192
+block_size=1024
+model.mlp.kind=mlp
+model.mlp.n_params=76810
+model.mlp.n_padded=81920
+model.mlp.batch=64
+model.mlp.in_dim=32
+model.mlp.classes=10
+model.mlp.artifact=mlp.hlo.txt
+model.mlp.init=mlp_init.hlo.txt
+model.mlp.sparsify=sparsify_81920.hlo.txt
+model.mlp.sgd=sgd_apply_76810.hlo.txt
+model.mlp.layers=w1:0:8192;w1_b:8192:256
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/x")).unwrap();
+        assert_eq!(m.tile, 8192);
+        assert_eq!(m.block_size, 1024);
+        let mlp = m.model("mlp").unwrap();
+        assert_eq!(mlp.n_params, 76810);
+        assert_eq!(mlp.n_padded, 81920);
+        assert_eq!(mlp.layers.len(), 2);
+        assert_eq!(mlp.layers[1].name, "w1_b");
+        assert_eq!(m.path("a.txt"), PathBuf::from("/x/a.txt"));
+    }
+
+    #[test]
+    fn unknown_model_fails_with_names() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/x")).unwrap();
+        let err = m.model("nope").unwrap_err().to_string();
+        assert!(err.contains("mlp"), "{err}");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("foo", PathBuf::new()).is_err());
+        assert!(Manifest::parse("model.x=1", PathBuf::new()).is_err());
+        assert!(Manifest::parse("model.x.n_params=zz", PathBuf::new()).is_err());
+        assert!(Manifest::parse("wat=1", PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_sizes() {
+        let bad = "model.m.kind=mlp\nmodel.m.n_params=10\nmodel.m.n_padded=5\n";
+        assert!(Manifest::parse(bad, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let m = Manifest::parse("# hi\n\ntile=8192\n", PathBuf::new()).unwrap();
+        assert_eq!(m.tile, 8192);
+    }
+}

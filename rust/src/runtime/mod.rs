@@ -1,0 +1,16 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! The compile path (`make artifacts`) runs Python once; afterwards the
+//! Rust binary is self-contained. Interchange is HLO *text* — see
+//! `python/compile/aot.py` for why (proto id width mismatch between
+//! jax ≥ 0.5 and xla_extension 0.5.1).
+//!
+//! * [`manifest`] parses `artifacts/manifest.txt` (model metadata).
+//! * [`engine`] wraps `PjRtClient`: compile-once executables with typed
+//!   call helpers and a model-level facade ([`engine::ModelRuntime`]).
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, Executable, ModelRuntime, SparsifyOut};
+pub use manifest::{Manifest, ModelMeta};

@@ -1,0 +1,112 @@
+//! CLT-k — cyclic local top-k (Chen et al., ScaleCom [16]; Table I row 2).
+//!
+//! Exactly one rank (the leader, rotating cyclically: `leader = t mod n`)
+//! performs a global top-k on **its own local accumulator** and broadcasts
+//! the selection; all other ranks idle through selection and then gather
+//! their values at the leader's indices. No build-up (one index set), but:
+//! * **worker idling** — n−1 ranks wait for the leader's top-k;
+//! * **model fidelity loss** — only the leader's local gradients steer the
+//!   selected coordinates; each rank gets the authority only every n-th
+//!   iteration, so local accumulators go stale (visible as the paper's
+//!   depressed convergence for CLT-k in Fig. 5).
+
+use super::{top_k_select, CommPattern, RoundCtx, Sparsifier};
+use crate::coordinator::SelectOutput;
+use crate::error::{Error, Result};
+
+/// Per-rank CLT-k replica.
+pub struct CltK {
+    n_g: usize,
+    k: usize,
+    density: f64,
+}
+
+impl CltK {
+    /// CLT-k targeting density `d` over `n_g` gradients.
+    pub fn new(n_g: usize, density: f64) -> Result<Self> {
+        if !(0.0..=1.0).contains(&density) || density == 0.0 {
+            return Err(Error::invalid(format!("density must be in (0,1] (got {density})")));
+        }
+        Ok(CltK {
+            n_g,
+            k: ((density * n_g as f64).round() as usize).max(1),
+            density,
+        })
+    }
+
+    /// Leader rank at iteration `t`.
+    pub fn leader(t: usize, n_ranks: usize) -> usize {
+        t % n_ranks
+    }
+}
+
+impl Sparsifier for CltK {
+    fn name(&self) -> String {
+        "cltk".into()
+    }
+
+    fn comm_pattern(&self) -> CommPattern {
+        CommPattern::LeaderBroadcast
+    }
+
+    fn builds_up(&self) -> bool {
+        false // single authoritative index set
+    }
+
+    fn select(&mut self, ctx: &RoundCtx, acc: &[f32]) -> Result<SelectOutput> {
+        debug_assert_eq!(acc.len(), self.n_g);
+        if ctx.rank == Self::leader(ctx.t, ctx.n_ranks) {
+            Ok(top_k_select(acc, self.k))
+        } else {
+            // non-leaders idle: the trainer broadcasts the leader's indices
+            Ok(SelectOutput::default())
+        }
+    }
+
+    fn target_density(&self) -> f64 {
+        self.density
+    }
+
+    fn is_sorting_based(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn only_leader_selects() {
+        let mut acc = vec![0f32; 4000];
+        Rng::new(4).fill_normal(&mut acc, 0.0, 1.0);
+        let mut s = CltK::new(4000, 0.01).unwrap();
+        for t in 0..8 {
+            for rank in 0..4 {
+                let out = s
+                    .select(&RoundCtx { t, rank, n_ranks: 4 }, &acc)
+                    .unwrap();
+                if rank == t % 4 {
+                    assert_eq!(out.len(), 40, "leader t={t}");
+                } else {
+                    assert!(out.is_empty(), "non-leader t={t} rank={rank}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn leadership_rotates() {
+        assert_eq!(CltK::leader(0, 4), 0);
+        assert_eq!(CltK::leader(5, 4), 1);
+        assert_eq!(CltK::leader(7, 4), 3);
+    }
+
+    #[test]
+    fn no_buildup_and_broadcast_pattern() {
+        let s = CltK::new(100, 0.1).unwrap();
+        assert!(!s.builds_up());
+        assert_eq!(s.comm_pattern(), CommPattern::LeaderBroadcast);
+    }
+}

@@ -1,0 +1,59 @@
+//! Coarse-grained static partitioning — the Fig. 9 ablation.
+//!
+//! Identical to ExDyna except Alg. 3's re-balancing is disabled: the
+//! topology stays the initial equal split forever (partitions still
+//! rotate cyclically across ranks). Under skewed gradient distributions
+//! the per-partition workloads diverge and the all-gather padding ratio
+//! `f(t)` grows — exactly the comparison the paper draws.
+
+use crate::coordinator::{ExDyna, ExDynaCfg};
+use crate::error::Result;
+
+/// Build the coarse-partitioning ablation: ExDyna with
+/// `dynamic_allocation = false` and `n` equal partitions (one block per
+/// partition would be the extreme; we keep the same block granularity so
+/// the only difference is the re-balancing).
+pub fn coarse_partition(n_g: usize, n: usize, mut cfg: ExDynaCfg) -> Result<ExDyna> {
+    cfg.dynamic_allocation = false;
+    ExDyna::new(n_g, n, cfg)
+}
+
+/// Alias so benches read naturally.
+pub use coarse_partition as CoarsePartitionBuilder;
+
+/// Marker type re-exported for the module table in [`crate::sparsifiers`].
+pub struct CoarsePartition;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsifiers::{RoundCtx, Sparsifier};
+    use crate::util::Rng;
+
+    #[test]
+    fn coarse_keeps_static_topology_under_skew() {
+        let n = 4;
+        let n_g = 32 * 4096;
+        let mut reps: Vec<_> = (0..n)
+            .map(|_| coarse_partition(n_g, n, ExDynaCfg::default_for(n)).unwrap())
+            .collect();
+        let mut rng = Rng::new(1);
+        // heavily skewed accumulator: all mass in the first quarter
+        for t in 0..30 {
+            let mut acc = vec![0f32; n_g];
+            rng.fill_normal(&mut acc[..n_g / 4], 0.0, 0.05);
+            let mut k = vec![0usize; n];
+            for (r, rep) in reps.iter_mut().enumerate() {
+                let out = rep
+                    .select(&RoundCtx { t, rank: r, n_ranks: n }, &acc)
+                    .unwrap();
+                k[r] = out.len();
+            }
+            for rep in reps.iter_mut() {
+                rep.observe(t, &k).unwrap();
+            }
+        }
+        let bp = &reps[0].layout().blk_part;
+        assert!(bp.iter().all(|&b| b == bp[0]), "topology moved: {bp:?}");
+    }
+}

@@ -1,0 +1,57 @@
+//! Non-sparsified baseline: dense ring all-reduce of the full gradient.
+//!
+//! `select` returns the whole accumulator (so error feedback degenerates
+//! to zero carried error — a tested property). The comm pattern tells the
+//! trainer to charge a dense all-reduce instead of all-gather + sparse
+//! all-reduce; this is the "non-sparsified" series of Figs. 2, 5 and 7.
+
+use super::{CommPattern, RoundCtx, Sparsifier};
+use crate::coordinator::SelectOutput;
+use crate::error::Result;
+
+/// Dense (no-op) sparsifier.
+#[derive(Default)]
+pub struct Dense;
+
+impl Sparsifier for Dense {
+    fn name(&self) -> String {
+        "dense".into()
+    }
+
+    fn comm_pattern(&self) -> CommPattern {
+        CommPattern::DenseAllReduce
+    }
+
+    fn builds_up(&self) -> bool {
+        false
+    }
+
+    fn select(&mut self, _ctx: &RoundCtx, acc: &[f32]) -> Result<SelectOutput> {
+        Ok(SelectOutput {
+            idx: (0..acc.len() as u32).collect(),
+            val: acc.to_vec(),
+        })
+    }
+
+    fn target_density(&self) -> f64 {
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selects_everything() {
+        let acc = vec![0.0, 1.0, -2.0];
+        let mut s = Dense;
+        let out = s
+            .select(&RoundCtx { t: 0, rank: 0, n_ranks: 2 }, &acc)
+            .unwrap();
+        assert_eq!(out.len(), 3);
+        assert_eq!(out.val, acc);
+        assert_eq!(s.target_density(), 1.0);
+        assert_eq!(s.comm_pattern(), CommPattern::DenseAllReduce);
+    }
+}

@@ -1,0 +1,140 @@
+//! Hard-threshold sparsifier (Sahu et al. [18]; Table I row 3).
+//!
+//! A **fixed** threshold δ chosen before training; every rank thresholds
+//! its whole accumulator. Selection is near-free, but:
+//! * the threshold cannot track the global error, so the actual density
+//!   drifts far above (or below) the user's target — the paper measures
+//!   up to 106.6× the user-set density (Fig. 6);
+//! * whole-vector selection on every rank ⇒ gradient build-up;
+//! * rank-dependent selection counts ⇒ heavy all-gather padding.
+
+use super::{RoundCtx, Sparsifier};
+use crate::coordinator::{select_indices, SelectOutput};
+use crate::error::{Error, Result};
+
+/// Per-rank hard-threshold replica.
+pub struct HardThreshold {
+    delta: f32,
+    density: f64,
+    calibrate: bool,
+}
+
+impl HardThreshold {
+    /// Fixed threshold `delta`; `density` is the *intended* target used
+    /// only for reporting (the method itself cannot enforce it).
+    pub fn new(delta: f32, density: f64) -> Result<Self> {
+        if delta <= 0.0 || !delta.is_finite() {
+            return Err(Error::invalid(format!("delta must be positive (got {delta})")));
+        }
+        Ok(HardThreshold {
+            delta,
+            density,
+            calibrate: false,
+        })
+    }
+
+    /// "Tuned before training" mode: the first `select` call estimates δ
+    /// as the `(1-d)`-quantile of the initial accumulator and freezes it.
+    /// This models the paper's offline threshold tuning — correct at
+    /// t = 0, then defeated as error feedback widens the accumulator
+    /// distribution (the Fig. 1/6 density inflation) and by lr decay
+    /// (the Fig. 6 cliff).
+    pub fn calibrated(density: f64) -> Result<Self> {
+        Ok(HardThreshold {
+            delta: 1.0,
+            density,
+            calibrate: true,
+        })
+    }
+
+    fn run_calibration(&mut self, acc: &[f32]) {
+        let mut probe: Vec<f32> = acc
+            .iter()
+            .step_by((acc.len() / 65_536).max(1))
+            .map(|x| x.abs())
+            .collect();
+        let rank = ((1.0 - self.density) * (probe.len() - 1) as f64).round() as usize;
+        let (_, nth, _) =
+            probe.select_nth_unstable_by(rank, |a, b| a.partial_cmp(b).unwrap());
+        if *nth > 0.0 {
+            self.delta = *nth;
+        }
+        self.calibrate = false;
+    }
+}
+
+impl Sparsifier for HardThreshold {
+    fn name(&self) -> String {
+        "hard-threshold".into()
+    }
+
+    fn select(&mut self, _ctx: &RoundCtx, acc: &[f32]) -> Result<SelectOutput> {
+        if self.calibrate {
+            self.run_calibration(acc);
+        }
+        Ok(select_indices(acc, 0, acc.len(), self.delta))
+    }
+
+    fn delta(&self) -> Option<f32> {
+        Some(self.delta)
+    }
+
+    fn target_density(&self) -> f64 {
+        self.density
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn threshold_is_fixed() {
+        let mut acc = vec![0f32; 10_000];
+        Rng::new(5).fill_normal(&mut acc, 0.0, 0.01);
+        let mut s = HardThreshold::new(0.02, 0.001).unwrap();
+        let ctx = RoundCtx { t: 0, rank: 0, n_ranks: 8 };
+        let k0 = s.select(&ctx, &acc).unwrap().len();
+        s.observe(0, &[k0]).unwrap(); // must be a no-op
+        assert_eq!(s.delta(), Some(0.02));
+        let k1 = s.select(&ctx, &acc).unwrap().len();
+        assert_eq!(k0, k1);
+    }
+
+    #[test]
+    fn density_drifts_with_gradient_scale() {
+        // same δ, doubled gradient magnitude -> far more selected:
+        // the inaccurate-threshold failure mode of Fig. 6
+        let mut small = vec![0f32; 20_000];
+        let mut big = vec![0f32; 20_000];
+        Rng::new(6).fill_normal(&mut small, 0.0, 0.01);
+        Rng::new(6).fill_normal(&mut big, 0.0, 0.03);
+        let mut s = HardThreshold::new(0.025, 0.001).unwrap();
+        let ctx = RoundCtx { t: 0, rank: 0, n_ranks: 8 };
+        let ks = s.select(&ctx, &small).unwrap().len();
+        let kb = s.select(&ctx, &big).unwrap().len();
+        assert!(kb > ks * 5, "ks={ks} kb={kb}");
+    }
+
+    #[test]
+    fn calibrated_mode_hits_target_at_t0_only() {
+        let mut acc = vec![0f32; 100_000];
+        Rng::new(9).fill_normal(&mut acc, 0.0, 0.01);
+        let mut s = HardThreshold::calibrated(0.001).unwrap();
+        let ctx = RoundCtx { t: 0, rank: 0, n_ranks: 8 };
+        let k0 = s.select(&ctx, &acc).unwrap().len();
+        assert!((50..200).contains(&k0), "t=0 calibration: k = {k0}");
+        // accumulator widens (error feedback) -> same delta over-selects
+        let wide: Vec<f32> = acc.iter().map(|x| x * 3.0).collect();
+        let k1 = s.select(&ctx, &wide).unwrap().len();
+        assert!(k1 > k0 * 5, "frozen delta must over-select: {k0} -> {k1}");
+    }
+
+    #[test]
+    fn rejects_nonpositive_delta() {
+        assert!(HardThreshold::new(0.0, 0.001).is_err());
+        assert!(HardThreshold::new(-1.0, 0.001).is_err());
+        assert!(HardThreshold::new(f32::NAN, 0.001).is_err());
+    }
+}

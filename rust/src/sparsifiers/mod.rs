@@ -1,0 +1,275 @@
+//! Sparsifier zoo: the [`Sparsifier`] trait plus every comparator in the
+//! paper's evaluation (Table I).
+//!
+//! | impl | paper row | selection | comm pattern |
+//! |------|-----------|-----------|--------------|
+//! | [`exdyna`](crate::coordinator::ExDyna) | ExDyna | partition-window threshold | all-gather |
+//! | [`topk::TopK`] | Top-k [15] | per-rank global top-k | all-gather |
+//! | [`cltk::CltK`] | CLT-k [16] | leader-only top-k | broadcast |
+//! | [`hard_threshold::HardThreshold`] | Hard-threshold [18] | fixed δ, whole vector | all-gather |
+//! | [`sidco::Sidco`] | SIDCo [19] | per-iteration statistical δ fit | all-gather |
+//! | [`dense::Dense`] | non-sparsified | — | dense all-reduce |
+//! | [`coarse::CoarsePartition`] | Fig. 9 ablation | static-partition threshold | all-gather |
+//!
+//! One instance exists **per rank**; coordination state (thresholds,
+//! topologies) is replicated and advanced deterministically from the
+//! metadata all-gather, mirroring the paper's implementation.
+
+pub mod cltk;
+pub mod coarse;
+pub mod dense;
+pub mod hard_threshold;
+pub mod sidco;
+pub mod topk;
+
+use crate::coordinator::SelectOutput;
+use crate::error::Result;
+
+/// How the selected gradients are aggregated (drives the cost model).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommPattern {
+    /// Padded all-gather of (idx, val) pairs, then sparse all-reduce over
+    /// the union (the paper's Alg. 1 lines 11–13).
+    AllGather,
+    /// Leader broadcasts its selection (CLT-k): workers idle during the
+    /// leader's top-k.
+    LeaderBroadcast,
+    /// Dense ring all-reduce of the full gradient (non-sparsified).
+    DenseAllReduce,
+}
+
+/// A "scan window [start, end) against threshold delta" selection plan
+/// (see [`Sparsifier::plan`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SelectPlan {
+    /// Window start (inclusive).
+    pub start: usize,
+    /// Window end (exclusive).
+    pub end: usize,
+    /// Threshold δ_t.
+    pub delta: f32,
+}
+
+/// Per-iteration context handed to [`Sparsifier::select`].
+#[derive(Clone, Copy, Debug)]
+pub struct RoundCtx {
+    /// Iteration number (0-based).
+    pub t: usize,
+    /// This rank.
+    pub rank: usize,
+    /// Total ranks.
+    pub n_ranks: usize,
+}
+
+/// A gradient sparsifier replica living on one rank.
+pub trait Sparsifier {
+    /// Display name (figures/tables key on it).
+    fn name(&self) -> String;
+
+    /// Aggregation pattern (default: padded all-gather).
+    fn comm_pattern(&self) -> CommPattern {
+        CommPattern::AllGather
+    }
+
+    /// Whether per-rank selections may overlap (gradient build-up).
+    fn builds_up(&self) -> bool {
+        true
+    }
+
+    /// Select gradients from this rank's accumulator `acc` (already
+    /// `e_{i,t} + η·G_{i,t}`, length `n_g`).
+    fn select(&mut self, ctx: &RoundCtx, acc: &[f32]) -> Result<SelectOutput>;
+
+    /// Window-threshold plan for sparsifiers whose selection is
+    /// expressible as "scan `[start, end)` against δ" (ExDyna). When
+    /// `Some`, the trainer may execute the scan *externally* — e.g. on
+    /// the PJRT path via the fused Pallas `sparsify_step` artifact —
+    /// instead of calling [`Sparsifier::select`]. Implementations must
+    /// advance exactly the same internal state as `select`.
+    fn plan(&mut self, _ctx: &RoundCtx, _acc: &[f32]) -> Result<Option<SelectPlan>> {
+        Ok(None)
+    }
+
+    /// Observe the per-rank selection counts (metadata all-gather output);
+    /// called on every rank after every iteration, *before* the next
+    /// `select`.
+    fn observe(&mut self, _t: usize, _k_by_rank: &[usize]) -> Result<()> {
+        Ok(())
+    }
+
+    /// Current threshold δ_t for threshold-based methods (trace output).
+    fn delta(&self) -> Option<f32> {
+        None
+    }
+
+    /// User-set density `d` this sparsifier aims for (1.0 for dense).
+    fn target_density(&self) -> f64;
+
+    /// Whether the selection cost scales like a sort (`O(n_g log k)`)
+    /// rather than a threshold scan — Table I's "gradient selection cost".
+    fn is_sorting_based(&self) -> bool {
+        false
+    }
+}
+
+/// Build a per-rank sparsifier factory by name — the single registry the
+/// CLI, examples and benches all share. `factory(n_g, n_ranks)` yields a
+/// fresh replica.
+pub fn make_sparsifier_factory(
+    name: &str,
+    density: f64,
+    hard_delta: f32,
+    exdyna_cfg: crate::coordinator::ExDynaCfg,
+) -> Result<Box<dyn Fn(usize, usize) -> Result<Box<dyn Sparsifier>>>> {
+    let name = name.to_string();
+    // validate the name eagerly so callers fail fast
+    const KNOWN: &[&str] = &[
+        "exdyna",
+        "exdyna-coarse",
+        "topk",
+        "cltk",
+        "hard-threshold",
+        "sidco",
+        "dense",
+    ];
+    if !KNOWN.contains(&name.as_str()) {
+        return Err(crate::error::Error::invalid(format!(
+            "unknown sparsifier '{name}' (have: {})",
+            KNOWN.join(", ")
+        )));
+    }
+    Ok(Box::new(move |n_g, n| -> Result<Box<dyn Sparsifier>> {
+        let mut cfg = exdyna_cfg;
+        cfg.density = density;
+        // n_blocks scales with rank count when the caller kept defaults
+        if cfg.n_blocks < n * crate::coordinator::allocation::AllocationCfg::default().min_blk {
+            cfg.n_blocks = 64 * n;
+        }
+        match name.as_str() {
+            "exdyna" => Ok(Box::new(crate::coordinator::ExDyna::new(n_g, n, cfg)?)),
+            "exdyna-coarse" => Ok(Box::new(coarse::coarse_partition(n_g, n, cfg)?)),
+            "topk" => Ok(Box::new(topk::TopK::new(n_g, density)?)),
+            "cltk" => Ok(Box::new(cltk::CltK::new(n_g, density)?)),
+            "hard-threshold" => Ok(if hard_delta > 0.0 {
+                Box::new(hard_threshold::HardThreshold::new(hard_delta, density)?)
+            } else {
+                Box::new(hard_threshold::HardThreshold::calibrated(density)?)
+            }),
+            "sidco" => Ok(Box::new(sidco::Sidco::new(density, 3)?)),
+            "dense" => Ok(Box::new(dense::Dense)),
+            _ => unreachable!("validated above"),
+        }
+    }))
+}
+
+/// Per-rank top-k selection used by Top-k and CLT-k: returns the `k`
+/// largest-|.| entries of `acc`, in ascending index order. O(n) via
+/// quickselect (`select_nth_unstable`), which is the *optimized* form —
+/// the paper's cost analysis assumes a heap/sort at `O(n log k)`, and the
+/// bench harness measures both (see `benches/fig7_breakdown.rs`).
+pub fn top_k_select(acc: &[f32], k: usize) -> SelectOutput {
+    let n = acc.len();
+    if k == 0 || n == 0 {
+        return SelectOutput::default();
+    }
+    let k = k.min(n);
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    let pivot = n - k;
+    order.select_nth_unstable_by(pivot, |&a, &b| {
+        acc[a as usize]
+            .abs()
+            .partial_cmp(&acc[b as usize].abs())
+            .unwrap()
+    });
+    let mut idx: Vec<u32> = order[pivot..].to_vec();
+    idx.sort_unstable();
+    let val = idx.iter().map(|&i| acc[i as usize]).collect();
+    SelectOutput { idx, val }
+}
+
+/// Heap-based top-k (`O(n log k)`), kept as the paper-cost baseline for
+/// the selection-cost benchmarks.
+pub fn top_k_select_heap(acc: &[f32], k: usize) -> SelectOutput {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    if k == 0 || acc.is_empty() {
+        return SelectOutput::default();
+    }
+    let k = k.min(acc.len());
+    // min-heap of (|val| as ordered bits, idx)
+    let mut heap: BinaryHeap<Reverse<(u32, u32)>> = BinaryHeap::with_capacity(k + 1);
+    for (i, &v) in acc.iter().enumerate() {
+        let key = v.abs().to_bits();
+        if heap.len() < k {
+            heap.push(Reverse((key, i as u32)));
+        } else if key > heap.peek().unwrap().0 .0 {
+            heap.pop();
+            heap.push(Reverse((key, i as u32)));
+        }
+    }
+    let mut idx: Vec<u32> = heap.into_iter().map(|Reverse((_, i))| i).collect();
+    idx.sort_unstable();
+    let val = idx.iter().map(|&i| acc[i as usize]).collect();
+    SelectOutput { idx, val }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn top_k_picks_largest_magnitudes() {
+        let acc = vec![0.1, -5.0, 0.2, 3.0, -0.05, 4.0];
+        let out = top_k_select(&acc, 3);
+        assert_eq!(out.idx, vec![1, 3, 5]);
+        assert_eq!(out.val, vec![-5.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn top_k_edge_cases() {
+        assert!(top_k_select(&[], 3).is_empty());
+        assert!(top_k_select(&[1.0, 2.0], 0).is_empty());
+        // k > n clamps
+        let out = top_k_select(&[1.0, -2.0], 10);
+        assert_eq!(out.idx, vec![0, 1]);
+    }
+
+    #[test]
+    fn quickselect_and_heap_agree() {
+        let mut rng = Rng::new(3);
+        for case in 0..20 {
+            let n = 10 + rng.usize(5000);
+            let mut acc = vec![0f32; n];
+            rng.fill_normal(&mut acc, 0.0, 1.0);
+            let k = 1 + rng.usize(n.min(200));
+            let a = top_k_select(&acc, k);
+            let b = top_k_select_heap(&acc, k);
+            // tie-breaking may differ on equal |values|; compare the
+            // magnitude multiset instead of exact indices
+            let mut ma: Vec<f32> = a.val.iter().map(|v| v.abs()).collect();
+            let mut mb: Vec<f32> = b.val.iter().map(|v| v.abs()).collect();
+            ma.sort_by(|x, y| x.partial_cmp(y).unwrap());
+            mb.sort_by(|x, y| x.partial_cmp(y).unwrap());
+            assert_eq!(ma, mb, "case {case}");
+            assert_eq!(a.len(), k);
+            assert_eq!(b.len(), k);
+        }
+    }
+
+    #[test]
+    fn top_k_threshold_property() {
+        // every selected |v| >= every unselected |v|
+        let mut rng = Rng::new(11);
+        let mut acc = vec![0f32; 2000];
+        rng.fill_normal(&mut acc, 0.0, 1.0);
+        let out = top_k_select(&acc, 50);
+        let min_sel = out.val.iter().map(|v| v.abs()).fold(f32::INFINITY, f32::min);
+        let sel: std::collections::HashSet<u32> = out.idx.iter().copied().collect();
+        for (i, &v) in acc.iter().enumerate() {
+            if !sel.contains(&(i as u32)) {
+                assert!(v.abs() <= min_sel);
+            }
+        }
+    }
+}

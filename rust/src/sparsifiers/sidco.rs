@@ -1,0 +1,181 @@
+//! SIDCo-style statistical threshold sparsifier (Abdelmoniem et al. [19];
+//! Table I row 4).
+//!
+//! Estimates a fresh threshold *every iteration* by fitting a sparsity-
+//! inducing distribution to the accumulator magnitudes and inverting its
+//! tail at the target density. We implement the multi-stage exponential
+//! fit of the SIDCo paper: stage 1 fits `|g| ~ Exp(λ)` on the full vector
+//! (λ̂ = mean|g|, δ = −λ̂·ln(d̂)); later stages re-fit on the tail above the
+//! current δ to correct the mismatch between the model and the true
+//! distribution.
+//!
+//! Accurate density without feedback, but every iteration pays full
+//! passes over the accumulator for the fits (the "very high additional
+//! overhead" cell of Table I), and whole-vector selection still causes
+//! build-up + padding.
+
+use super::{RoundCtx, Sparsifier};
+use crate::coordinator::{select_indices, SelectOutput};
+use crate::error::{Error, Result};
+
+/// Per-rank SIDCo replica.
+pub struct Sidco {
+    density: f64,
+    stages: usize,
+    last_delta: f32,
+}
+
+impl Sidco {
+    /// `stages` ≥ 1 fitting passes (SIDCo uses up to 3).
+    pub fn new(density: f64, stages: usize) -> Result<Self> {
+        if !(0.0..1.0).contains(&density) || density == 0.0 {
+            return Err(Error::invalid(format!("density must be in (0,1) (got {density})")));
+        }
+        if stages == 0 {
+            return Err(Error::invalid("stages must be >= 1"));
+        }
+        Ok(Sidco {
+            density,
+            stages,
+            last_delta: 0.0,
+        })
+    }
+
+    /// Multi-stage exponential-fit threshold estimate (exposed for tests
+    /// and the overhead benchmark).
+    ///
+    /// Each stage keeps a fraction `r = d^(1/stages)` of the *current*
+    /// tail by fitting `|g| - delta ~ Exp(lambda)` on it and inverting the
+    /// tail probability; after `stages` rounds the kept fraction is
+    /// `r^stages = d`. Splitting the extrapolation across stages is what
+    /// keeps the estimate bounded when the data is not exponential
+    /// (SIDCo's "multi-stage fitting").
+    pub fn estimate_threshold(&self, acc: &[f32]) -> f32 {
+        let n = acc.len();
+        if n == 0 {
+            return f32::MIN_POSITIVE;
+        }
+        let r = self.density.powf(1.0 / self.stages as f64); // per-stage keep
+        let mut delta = 0f64;
+        // stage-1 fit on the full vector
+        let mut mean: f64 = acc.iter().map(|&x| x.abs() as f64).sum::<f64>() / n as f64;
+        for _stage in 0..self.stages {
+            let lambda = mean.max(1e-300);
+            delta += -lambda * r.ln();
+            // re-fit on the tail above the cumulative delta
+            let mut tail_sum = 0f64;
+            let mut tail_n = 0usize;
+            for &x in acc {
+                let a = x.abs() as f64;
+                if a > delta {
+                    tail_sum += a - delta;
+                    tail_n += 1;
+                }
+            }
+            if tail_n == 0 {
+                break; // tail exhausted; delta is already conservative
+            }
+            mean = tail_sum / tail_n as f64;
+        }
+        (delta as f32).max(f32::MIN_POSITIVE)
+    }
+}
+
+impl Sparsifier for Sidco {
+    fn name(&self) -> String {
+        "sidco".into()
+    }
+
+    fn select(&mut self, _ctx: &RoundCtx, acc: &[f32]) -> Result<SelectOutput> {
+        let delta = self.estimate_threshold(acc);
+        self.last_delta = delta;
+        Ok(select_indices(acc, 0, acc.len(), delta))
+    }
+
+    fn delta(&self) -> Option<f32> {
+        Some(self.last_delta)
+    }
+
+    fn target_density(&self) -> f64 {
+        self.density
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Laplace-distributed gradients: |g| is exactly exponential, the
+    /// model SIDCo assumes — density must come out near target.
+    fn laplace(seed: u64, n: usize, scale: f32) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let u = rng.f32().max(1e-9);
+                -scale * u.ln() * rng.sign()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn density_close_on_matching_distribution() {
+        let acc = laplace(7, 200_000, 0.01);
+        let mut s = Sidco::new(0.001, 3).unwrap();
+        let out = s
+            .select(&RoundCtx { t: 0, rank: 0, n_ranks: 8 }, &acc)
+            .unwrap();
+        let want = 200.0;
+        let got = out.len() as f64;
+        assert!(
+            got > want * 0.5 && got < want * 2.0,
+            "selected {got}, want ~{want}"
+        );
+    }
+
+    #[test]
+    fn gaussian_mismatch_still_bounded() {
+        // |g| of a Gaussian is NOT exponential; multi-stage fit corrects
+        // the stage-1 bias substantially. Accept a 5x band (the paper's
+        // SIDCo achieves ~1x only with its best-matched model).
+        let mut acc = vec![0f32; 200_000];
+        Rng::new(8).fill_normal(&mut acc, 0.0, 0.01);
+        let mut s = Sidco::new(0.001, 3).unwrap();
+        let out = s
+            .select(&RoundCtx { t: 0, rank: 0, n_ranks: 8 }, &acc)
+            .unwrap();
+        let want = 200.0;
+        let got = out.len() as f64;
+        assert!(
+            got > want / 5.0 && got < want * 5.0,
+            "selected {got}, want ~{want}"
+        );
+    }
+
+    #[test]
+    fn multi_stage_beats_single_stage_on_gaussian() {
+        let mut acc = vec![0f32; 200_000];
+        Rng::new(9).fill_normal(&mut acc, 0.0, 0.01);
+        let want = 200f64;
+        let err = |stages: usize| {
+            let s = Sidco::new(0.001, stages).unwrap();
+            let d = s.estimate_threshold(&acc);
+            let k = acc.iter().filter(|x| x.abs() >= d).count() as f64;
+            (k - want).abs()
+        };
+        assert!(err(3) <= err(1), "3-stage {} vs 1-stage {}", err(3), err(1));
+    }
+
+    #[test]
+    fn rejects_bad_cfg() {
+        assert!(Sidco::new(0.0, 3).is_err());
+        assert!(Sidco::new(1.0, 3).is_err());
+        assert!(Sidco::new(0.001, 0).is_err());
+    }
+
+    #[test]
+    fn empty_acc_safe() {
+        let s = Sidco::new(0.001, 3).unwrap();
+        assert!(s.estimate_threshold(&[]) > 0.0);
+    }
+}

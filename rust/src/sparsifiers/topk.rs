@@ -1,0 +1,106 @@
+//! Top-k sparsifier (Alistarh et al. [15]; Table I row 1).
+//!
+//! Every rank independently selects the `k = d·n_g` largest-magnitude
+//! entries of its own accumulator. Exact density control per rank, but:
+//! * **gradient build-up** — the per-rank index sets overlap only
+//!   partially, so the aggregated set grows toward `n·k`;
+//! * **very high selection cost** — a global top-k per rank per iteration
+//!   (`O(n_g log k)` with a heap; our optimized quickselect is `O(n_g)`
+//!   but still dwarfs a threshold scan — both variants are benchmarked).
+
+use super::{top_k_select, RoundCtx, Sparsifier};
+use crate::coordinator::SelectOutput;
+use crate::error::{Error, Result};
+
+/// Per-rank Top-k replica.
+pub struct TopK {
+    n_g: usize,
+    k: usize,
+    density: f64,
+}
+
+impl TopK {
+    /// Top-k targeting density `d` over `n_g` gradients.
+    pub fn new(n_g: usize, density: f64) -> Result<Self> {
+        if !(0.0..=1.0).contains(&density) || density == 0.0 {
+            return Err(Error::invalid(format!("density must be in (0,1] (got {density})")));
+        }
+        Ok(TopK {
+            n_g,
+            k: ((density * n_g as f64).round() as usize).max(1),
+            density,
+        })
+    }
+
+    /// Per-rank k.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+}
+
+impl Sparsifier for TopK {
+    fn name(&self) -> String {
+        "topk".into()
+    }
+
+    fn select(&mut self, _ctx: &RoundCtx, acc: &[f32]) -> Result<SelectOutput> {
+        debug_assert_eq!(acc.len(), self.n_g);
+        Ok(top_k_select(acc, self.k))
+    }
+
+    fn target_density(&self) -> f64 {
+        self.density
+    }
+
+    fn is_sorting_based(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn selects_exactly_k() {
+        let mut rng = Rng::new(1);
+        let mut acc = vec![0f32; 10_000];
+        rng.fill_normal(&mut acc, 0.0, 1.0);
+        let mut s = TopK::new(acc.len(), 0.01).unwrap();
+        let out = s
+            .select(&RoundCtx { t: 0, rank: 0, n_ranks: 4 }, &acc)
+            .unwrap();
+        assert_eq!(out.len(), 100);
+    }
+
+    #[test]
+    fn build_up_occurs_across_ranks() {
+        // two ranks with different gradients overlap only partially
+        let mut a = vec![0f32; 5000];
+        let mut b = vec![0f32; 5000];
+        Rng::new(2).fill_normal(&mut a, 0.0, 1.0);
+        Rng::new(3).fill_normal(&mut b, 0.0, 1.0);
+        let mut s = TopK::new(5000, 0.01).unwrap();
+        let ctx = RoundCtx { t: 0, rank: 0, n_ranks: 2 };
+        let oa = s.select(&ctx, &a).unwrap();
+        let ob = s.select(&ctx, &b).unwrap();
+        let mut union: Vec<u32> = oa.idx.iter().chain(ob.idx.iter()).copied().collect();
+        union.sort_unstable();
+        union.dedup();
+        assert!(union.len() > oa.len(), "expected union > k (build-up)");
+        assert!(s.builds_up());
+    }
+
+    #[test]
+    fn rejects_bad_density() {
+        assert!(TopK::new(100, 0.0).is_err());
+        assert!(TopK::new(100, 1.5).is_err());
+    }
+
+    #[test]
+    fn k_at_least_one() {
+        let s = TopK::new(10, 0.001).unwrap();
+        assert_eq!(s.k(), 1);
+    }
+}

@@ -1,0 +1,20 @@
+//! Distributed training loops (paper Alg. 1).
+//!
+//! * [`sim`] — the simulated-cluster trainer: synthetic gradients, real
+//!   error-feedback/selection/aggregation dynamics, α–β virtual clock.
+//!   Drives the density / traffic / breakdown figures at paper scale.
+//! * [`real`] — the PJRT trainer: actual models (AOT transformer LM /
+//!   MLP) trained end-to-end across simulated ranks, optionally running
+//!   selection through the fused Pallas `sparsify_step` artifact.
+//! * [`data`] — deterministic synthetic datasets (classification
+//!   clusters, Markov token streams) sharded per rank.
+//! * [`schedule`] — learning-rate schedules.
+
+pub mod data;
+pub mod real;
+pub mod schedule;
+pub mod sim;
+
+pub use real::{RealTrainer, RealTrainerCfg, SelectBackend};
+pub use schedule::LrSchedule;
+pub use sim::{run_sim, SimCfg, SparsifierFactory};

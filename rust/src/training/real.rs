@@ -1,0 +1,331 @@
+//! PJRT trainer: real models (AOT transformer LM / MLP), real updates,
+//! simulated multi-rank data parallelism (paper Alg. 1 end-to-end).
+//!
+//! The forward/backward runs through the compiled L2 artifact; selection
+//! runs either on the host hot path ([`SelectBackend::Host`]) or through
+//! the fused L1 Pallas `sparsify_step` artifact ([`SelectBackend::Pjrt`])
+//! — proving the full three-layer composition. Communication time is
+//! charged by the α–β model exactly as in [`crate::training::sim`].
+
+use crate::collectives::{
+    allgather_sparse, broadcast_selection, sparse_allreduce_union, CostModel,
+};
+use crate::coordinator::selection::compact_masked;
+use crate::error::{Error, Result};
+use crate::grad::flat::{accumulate_into, apply_sparse_update};
+use crate::metrics::{IterRecord, Trace};
+use crate::runtime::ModelRuntime;
+use crate::sparsifiers::{CommPattern, RoundCtx, Sparsifier};
+use crate::training::data::{ClusterData, MarkovText};
+use crate::training::schedule::LrSchedule;
+use crate::util::stats::l2_norm;
+use std::time::Instant;
+
+/// Where Alg. 4's threshold scan executes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SelectBackend {
+    /// Optimized Rust scan (`coordinator::selection`).
+    Host,
+    /// Fused Pallas `sparsify_step` artifact via PJRT (only for
+    /// sparsifiers that expose a [`crate::sparsifiers::SelectPlan`]).
+    Pjrt,
+}
+
+/// Real-trainer configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct RealTrainerCfg {
+    /// Number of simulated ranks.
+    pub n_ranks: usize,
+    /// Training iterations.
+    pub iters: usize,
+    /// Learning-rate schedule.
+    pub lr: LrSchedule,
+    /// Master seed (params, data).
+    pub seed: u64,
+    /// Selection backend.
+    pub backend: SelectBackend,
+    /// Evaluate held-out loss every `eval_every` iterations (0 = never).
+    pub eval_every: usize,
+}
+
+impl Default for RealTrainerCfg {
+    fn default() -> Self {
+        RealTrainerCfg {
+            n_ranks: 4,
+            iters: 100,
+            lr: LrSchedule::constant(0.5),
+            seed: 7,
+            backend: SelectBackend::Host,
+            eval_every: 0,
+        }
+    }
+}
+
+/// One evaluation point (iteration, simulated time, held-out loss).
+#[derive(Clone, Copy, Debug)]
+pub struct EvalPoint {
+    /// Iteration index.
+    pub t: usize,
+    /// Cumulative simulated seconds.
+    pub sim_time: f64,
+    /// Held-out loss.
+    pub loss: f64,
+}
+
+enum Workload {
+    Mlp(ClusterData),
+    Lm(MarkovText),
+}
+
+/// Distributed trainer over a PJRT model.
+pub struct RealTrainer {
+    rt: ModelRuntime,
+    cfg: RealTrainerCfg,
+    net: CostModel,
+    sparsifiers: Vec<Box<dyn Sparsifier>>,
+    /// Replicated flat parameters.
+    pub params: Vec<f32>,
+    /// Per-rank error accumulators (padded length).
+    err: Vec<Vec<f32>>,
+    workload: Workload,
+    /// Trace of the run.
+    pub trace: Trace,
+    /// Held-out evaluations.
+    pub evals: Vec<EvalPoint>,
+    sim_clock: f64,
+}
+
+impl RealTrainer {
+    /// Build a trainer: one sparsifier replica per rank from `make`.
+    pub fn new(
+        rt: ModelRuntime,
+        cfg: RealTrainerCfg,
+        make: &dyn Fn(usize, usize) -> Result<Box<dyn Sparsifier>>,
+    ) -> Result<Self> {
+        let n_params = rt.meta.n_params;
+        let n_padded = rt.meta.n_padded;
+        let sparsifiers: Vec<Box<dyn Sparsifier>> = (0..cfg.n_ranks)
+            .map(|_| make(n_params, cfg.n_ranks))
+            .collect::<Result<_>>()?;
+        let workload = match rt.meta.kind.as_str() {
+            "mlp" => Workload::Mlp(ClusterData::new(
+                rt.meta.classes,
+                rt.meta.in_dim,
+                0.35,
+                cfg.seed ^ 0xDA7A,
+            )),
+            "transformer" => Workload::Lm(MarkovText::new(rt.meta.vocab, 0.9, cfg.seed ^ 0x7EE7)),
+            other => return Err(Error::invalid(format!("unknown model kind '{other}'"))),
+        };
+        let params = rt.init_params(cfg.seed)?;
+        let name = sparsifiers[0].name();
+        Ok(RealTrainer {
+            net: CostModel::paper_testbed(cfg.n_ranks),
+            trace: Trace::new(&name, &rt.meta.name.clone(), cfg.n_ranks),
+            err: vec![vec![0f32; n_padded]; cfg.n_ranks],
+            sparsifiers,
+            params,
+            workload,
+            rt,
+            cfg,
+            evals: Vec::new(),
+            sim_clock: 0.0,
+        })
+    }
+
+    fn fwdbwd(&self, rank: usize, t: usize) -> Result<(f32, Vec<f32>)> {
+        match &self.workload {
+            Workload::Mlp(d) => {
+                let (x, y) = d.batch(self.rt.meta.batch, rank, t, self.cfg.seed);
+                self.rt.fwdbwd_mlp(&self.params, &x, &y)
+            }
+            Workload::Lm(m) => {
+                let toks = m.batch(
+                    self.rt.meta.batch,
+                    self.rt.meta.seq_len + 1,
+                    rank,
+                    t,
+                    self.cfg.seed,
+                );
+                self.rt.fwdbwd_lm(&self.params, &toks)
+            }
+        }
+    }
+
+    /// Held-out loss (fixed pseudo-batch never used in training).
+    pub fn eval_loss(&self) -> Result<f64> {
+        let (loss, _) = self.fwdbwd(usize::MAX - 1, usize::MAX - 1)?;
+        Ok(loss as f64)
+    }
+
+    /// Run one training iteration; returns the record pushed to the trace.
+    pub fn step(&mut self, t: usize) -> Result<IterRecord> {
+        let n = self.cfg.n_ranks;
+        let n_params = self.rt.meta.n_params;
+        let n_padded = self.rt.meta.n_padded;
+        let lr = self.cfg.lr.lr(t);
+        let dense = matches!(
+            self.sparsifiers[0].comm_pattern(),
+            CommPattern::DenseAllReduce
+        );
+
+        // --- fwd/bwd per rank (parallel on a cluster => charge max)
+        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(n);
+        let mut losses = 0f64;
+        let mut t_compute = 0f64;
+        for r in 0..n {
+            let st = Instant::now();
+            let (loss, mut g) = self.fwdbwd(r, t)?;
+            t_compute = t_compute.max(st.elapsed().as_secs_f64());
+            losses += loss as f64;
+            g.resize(n_padded, 0.0);
+            grads.push(g);
+        }
+
+        // --- accumulate + select per rank
+        let mut accs: Vec<Vec<f32>> = Vec::with_capacity(n);
+        let mut outs = Vec::with_capacity(n);
+        let mut t_select = 0f64;
+        for r in 0..n {
+            let ctx = RoundCtx {
+                t,
+                rank: r,
+                n_ranks: n,
+            };
+            let mut acc = vec![0f32; n_padded];
+            accumulate_into(&mut acc, &self.err[r], &grads[r], lr);
+            let st = Instant::now();
+            let out = if dense {
+                crate::coordinator::SelectOutput {
+                    idx: (0..n_params as u32).collect(),
+                    val: acc[..n_params].to_vec(),
+                }
+            } else if self.cfg.backend == SelectBackend::Pjrt {
+                let plan = self.sparsifiers[r]
+                    .plan(&ctx, &acc[..n_params])?
+                    .ok_or_else(|| {
+                        Error::invalid(format!(
+                            "sparsifier '{}' has no window plan; PJRT backend needs one",
+                            self.sparsifiers[r].name()
+                        ))
+                    })?;
+                let sp = self.rt.sparsify_step(
+                    &self.err[r],
+                    &grads[r],
+                    lr,
+                    plan.start,
+                    plan.end,
+                    plan.delta,
+                )?;
+                // carry the kernel-produced accumulator (own hits zeroed)
+                acc = sp.new_err;
+                let mut out = compact_masked(&sp.selected, plan.start, plan.end);
+                debug_assert_eq!(out.len(), sp.count);
+                // values in `selected` are acc*mask — identical to acc at
+                // the hit coordinates, so out.val is already correct.
+                out.idx.shrink_to_fit();
+                out
+            } else {
+                self.sparsifiers[r].select(&ctx, &acc[..n_params])?
+            };
+            t_select = t_select.max(st.elapsed().as_secs_f64());
+            accs.push(acc);
+            outs.push(out);
+        }
+
+        // --- aggregate
+        let (union_idx, k_by_rank, f_ratio, t_comm, g_vals);
+        match self.sparsifiers[0].comm_pattern() {
+            CommPattern::DenseAllReduce => {
+                let slices: Vec<&[f32]> = accs.iter().map(|a| &a[..n_params]).collect();
+                let idx: Vec<u32> = (0..n_params as u32).collect();
+                let (vals, tr) = sparse_allreduce_union(&slices, &idx, &self.net);
+                // dense all-reduce wire cost, not the sparse one
+                let t_dense = self.net.allreduce(n_params * CostModel::DENSE_ENTRY_BYTES);
+                g_vals = vals;
+                union_idx = idx;
+                k_by_rank = vec![n_params; n];
+                f_ratio = 1.0;
+                t_comm = t_dense;
+                let _ = tr;
+            }
+            CommPattern::LeaderBroadcast => {
+                let leader = t % n;
+                let (idx, t_b) = broadcast_selection(&outs, leader, &self.net);
+                let slices: Vec<&[f32]> = accs.iter().map(|a| &a[..n_params]).collect();
+                let (vals, t_r) = sparse_allreduce_union(&slices, &idx, &self.net);
+                g_vals = vals;
+                k_by_rank = outs.iter().map(|o| o.len()).collect();
+                union_idx = idx;
+                f_ratio = 1.0;
+                t_comm = t_b + t_r;
+            }
+            CommPattern::AllGather => {
+                let ag = allgather_sparse(&outs, &self.net);
+                let slices: Vec<&[f32]> = accs.iter().map(|a| &a[..n_params]).collect();
+                let (vals, t_r) = sparse_allreduce_union(&slices, &ag.union_idx, &self.net);
+                g_vals = vals;
+                k_by_rank = ag.k_by_rank.clone();
+                f_ratio = ag.f_ratio;
+                t_comm = ag.time_s + t_r;
+                union_idx = ag.union_idx;
+            }
+        }
+
+        // --- model update x -= (1/n) g_t (lr already folded in acc)
+        apply_sparse_update(&mut self.params, &union_idx, &g_vals, 1.0 / n as f32);
+
+        // --- error carry: zero union coords everywhere, keep the rest
+        if !dense {
+            for r in 0..n {
+                for &i in &union_idx {
+                    accs[r][i as usize] = 0.0;
+                }
+                std::mem::swap(&mut self.err[r], &mut accs[r]);
+            }
+        }
+
+        // --- replica feedback
+        for sp in self.sparsifiers.iter_mut() {
+            sp.observe(t, &k_by_rank)?;
+        }
+
+        let global_err =
+            self.err.iter().map(|e| l2_norm(e)).sum::<f64>() / n as f64;
+        let k_actual = union_idx.len();
+        let rec = IterRecord {
+            t,
+            loss: losses / n as f64,
+            k_user: ((self.sparsifiers[0].target_density() * n_params as f64).round() as usize)
+                .max(1),
+            k_actual,
+            k_sum: k_by_rank.iter().sum(),
+            density: k_actual as f64 / n_params as f64,
+            f_ratio,
+            delta: self.sparsifiers[0].delta().unwrap_or(0.0) as f64,
+            global_err,
+            t_compute,
+            t_select,
+            t_comm,
+        };
+        self.sim_clock += rec.t_total();
+        self.trace.push(rec.clone());
+        if self.cfg.eval_every > 0 && (t % self.cfg.eval_every == 0 || t + 1 == self.cfg.iters) {
+            let loss = self.eval_loss()?;
+            self.evals.push(EvalPoint {
+                t,
+                sim_time: self.sim_clock,
+                loss,
+            });
+        }
+        Ok(rec)
+    }
+
+    /// Run all `cfg.iters` iterations.
+    pub fn run(&mut self) -> Result<()> {
+        for t in 0..self.cfg.iters {
+            self.step(t)?;
+        }
+        Ok(())
+    }
+}

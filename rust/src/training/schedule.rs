@@ -1,0 +1,63 @@
+//! Learning-rate schedules (constant + step decay, as in the paper's
+//! experiments where the lr decay fires mid-training and the density of
+//! hard-threshold collapses — Fig. 6).
+
+/// Step-decay learning-rate schedule.
+#[derive(Clone, Copy, Debug)]
+pub struct LrSchedule {
+    /// Base learning rate.
+    pub base: f32,
+    /// Iteration of the step drop (`usize::MAX` = never).
+    pub drop_at: usize,
+    /// Multiplier after the drop.
+    pub drop_factor: f32,
+}
+
+impl LrSchedule {
+    /// Constant schedule.
+    pub fn constant(base: f32) -> Self {
+        LrSchedule {
+            base,
+            drop_at: usize::MAX,
+            drop_factor: 1.0,
+        }
+    }
+
+    /// Step schedule dropping by `factor` at iteration `at`.
+    pub fn step(base: f32, at: usize, factor: f32) -> Self {
+        LrSchedule {
+            base,
+            drop_at: at,
+            drop_factor: factor,
+        }
+    }
+
+    /// η_t.
+    pub fn lr(&self, t: usize) -> f32 {
+        if t >= self.drop_at {
+            self.base * self.drop_factor
+        } else {
+            self.base
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_never_drops() {
+        let s = LrSchedule::constant(0.1);
+        assert_eq!(s.lr(0), 0.1);
+        assert_eq!(s.lr(1_000_000), 0.1);
+    }
+
+    #[test]
+    fn step_drops_once() {
+        let s = LrSchedule::step(0.1, 100, 0.1);
+        assert_eq!(s.lr(99), 0.1);
+        assert!((s.lr(100) - 0.01).abs() < 1e-9);
+        assert!((s.lr(500) - 0.01).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,44 @@
+//! Self-contained utilities: PRNG, statistics, and a mini property-test
+//! harness (the offline build has no `rand`/`proptest`/`criterion`).
+
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;
+pub use stats::Summary;
+
+/// Round `x` down to a multiple of `m` (m > 0).
+#[inline]
+pub fn round_down(x: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    x - x % m
+}
+
+/// Round `x` up to a multiple of `m` (m > 0).
+#[inline]
+pub fn round_up(x: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    x.div_ceil(m) * m
+}
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rounding() {
+        assert_eq!(round_down(100, 32), 96);
+        assert_eq!(round_down(96, 32), 96);
+        assert_eq!(round_up(100, 32), 128);
+        assert_eq!(round_up(96, 32), 96);
+        assert_eq!(ceil_div(7, 3), 3);
+        assert_eq!(ceil_div(6, 3), 2);
+    }
+}

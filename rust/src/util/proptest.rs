@@ -1,0 +1,188 @@
+//! Mini property-test harness (no `proptest` crate in the offline build).
+//!
+//! `check(seed, cases, gen, prop)` runs `prop` on `cases` inputs drawn by
+//! `gen` from a deterministic [`Rng`]; on failure it greedily shrinks via
+//! the strategy's `shrink` candidates and panics with the minimal failing
+//! input. Keeps the parts of proptest the invariant tests actually use:
+//! seeded generation, many cases, shrinking, readable failures.
+
+use super::rng::Rng;
+use std::fmt::Debug;
+
+/// A generation strategy: draw a value, and propose smaller variants.
+pub trait Strategy {
+    /// Generated value type.
+    type Value: Clone + Debug;
+    /// Draw one value.
+    fn gen(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate shrinks of `v`, in decreasing preference (may be empty).
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run a property over `cases` generated inputs; panic with the minimal
+/// failing case (after up to 200 shrink steps).
+pub fn check<S, F>(seed: u64, cases: usize, strat: &S, mut prop: F)
+where
+    S: Strategy,
+    F: FnMut(&S::Value) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let v = strat.gen(&mut rng);
+        if let Err(first_msg) = prop(&v) {
+            // shrink greedily
+            let mut cur = v;
+            let mut msg = first_msg;
+            let mut steps = 0;
+            'outer: while steps < 200 {
+                for cand in strat.shrink(&cur) {
+                    steps += 1;
+                    if let Err(m) = prop(&cand) {
+                        cur = cand;
+                        msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}, seed {seed}): {msg}\nminimal input: {cur:?}"
+            );
+        }
+    }
+}
+
+/// Uniform usize in [lo, hi], shrinking toward lo.
+pub struct UsizeRange {
+    /// inclusive lower bound
+    pub lo: usize,
+    /// inclusive upper bound
+    pub hi: usize,
+}
+
+impl Strategy for UsizeRange {
+    type Value = usize;
+    fn gen(&self, rng: &mut Rng) -> usize {
+        self.lo + rng.usize(self.hi - self.lo + 1)
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (*v - self.lo) / 2);
+            out.push(*v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Tuple strategy combinator for two independent strategies.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A: Strategy, B: Strategy> Strategy for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+    fn gen(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.gen(rng), self.1.gen(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+/// Vec of f32 drawn from N(0, sigma); shrinks by halving length.
+pub struct NormalVec {
+    /// minimum length
+    pub min_len: usize,
+    /// maximum length
+    pub max_len: usize,
+    /// standard deviation
+    pub sigma: f32,
+}
+
+impl Strategy for NormalVec {
+    type Value = Vec<f32>;
+    fn gen(&self, rng: &mut Rng) -> Vec<f32> {
+        let n = self.min_len + rng.usize(self.max_len - self.min_len + 1);
+        let mut v = vec![0f32; n];
+        rng.fill_normal(&mut v, 0.0, self.sigma);
+        v
+    }
+    fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+        if v.len() <= self.min_len {
+            return Vec::new();
+        }
+        let half = (v.len() / 2).max(self.min_len);
+        vec![v[..half].to_vec()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check(1, 50, &UsizeRange { lo: 0, hi: 10 }, |_v| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check(2, 100, &UsizeRange { lo: 0, hi: 100 }, |v| {
+            if *v >= 37 {
+                Err(format!("{v} too big"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn shrinks_to_minimal() {
+        let r = std::panic::catch_unwind(|| {
+            check(3, 100, &UsizeRange { lo: 0, hi: 1000 }, |v| {
+                if *v >= 37 {
+                    Err("boom".into())
+                } else {
+                    Ok(())
+                }
+            });
+        });
+        let msg = format!("{:?}", r.unwrap_err().downcast_ref::<String>());
+        assert!(msg.contains("minimal input: 37"), "{msg}");
+    }
+
+    #[test]
+    fn pair_and_vec_strategies() {
+        let strat = Pair(
+            UsizeRange { lo: 1, hi: 4 },
+            NormalVec {
+                min_len: 8,
+                max_len: 64,
+                sigma: 1.0,
+            },
+        );
+        check(4, 20, &strat, |(k, v)| {
+            if v.len() >= 8 && *k >= 1 {
+                Ok(())
+            } else {
+                Err("bad gen".into())
+            }
+        });
+    }
+}

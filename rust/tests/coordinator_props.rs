@@ -1,0 +1,342 @@
+//! Property-based invariant tests for the coordinator (DESIGN.md §7),
+//! driven by the in-house mini-proptest harness (`exdyna::util::proptest`).
+
+use exdyna::collectives::{allgather_sparse, dense_allreduce, CostModel};
+use exdyna::coordinator::allocation::{AllocationCfg, Allocator};
+use exdyna::coordinator::partition::PartitionLayout;
+use exdyna::coordinator::selection::{select_indices, select_indices_scan};
+use exdyna::coordinator::threshold::{OnlineThreshold, ThresholdCfg};
+use exdyna::coordinator::{ExDyna, ExDynaCfg, SelectOutput};
+use exdyna::sparsifiers::{RoundCtx, Sparsifier};
+use exdyna::util::proptest::{check, NormalVec, Pair, Strategy, UsizeRange};
+use exdyna::util::Rng;
+
+/// Random (n_g, n_b, n) partitioning instances.
+struct PartitionStrat;
+
+impl Strategy for PartitionStrat {
+    type Value = (usize, usize, usize);
+    fn gen(&self, rng: &mut Rng) -> Self::Value {
+        let n = 1 + rng.usize(32);
+        let n_b = n * (1 + rng.usize(64));
+        // ensure sz_blk >= 32: n_g/n_b >= 32
+        let n_g = n_b * (32 + rng.usize(512)) + rng.usize(1000);
+        (n_g, n_b, n)
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let (n_g, n_b, n) = *v;
+        let mut out = Vec::new();
+        if n > 1 {
+            out.push((n_g, n_b, n / 2 + 1));
+        }
+        if n_b > n * 2 {
+            out.push((n_g, n_b / 2, n));
+        }
+        if n_g > n_b * 64 {
+            out.push((n_g / 2, n_b, n));
+        }
+        out
+    }
+}
+
+#[test]
+fn prop_partition_tiles_the_vector() {
+    check(101, 200, &PartitionStrat, |&(n_g, n_b, n)| {
+        let l = PartitionLayout::new(n_g, n_b, n)
+            .map_err(|e| format!("constructor failed: {e}"))?;
+        l.validate().map_err(|e| format!("invalid layout: {e}"))?;
+        // balanced to within one block
+        let min = l.blk_part.iter().min().unwrap();
+        let max = l.blk_part.iter().max().unwrap();
+        if max - min > 1 {
+            return Err(format!("unbalanced init: {:?}", l.blk_part));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rebalance_conserves_blocks_and_stays_valid() {
+    check(
+        102,
+        120,
+        &Pair(PartitionStrat, UsizeRange { lo: 1, hi: 60 }),
+        |&((n_g, n_b, n), rounds)| {
+            let l = PartitionLayout::new(n_g, n_b, n).map_err(|e| e.to_string())?;
+            let mut a = Allocator::new(l, AllocationCfg::default()).map_err(|e| e.to_string())?;
+            let mut rng = Rng::new((n_g ^ rounds) as u64);
+            for t in 1..=rounds {
+                let k: Vec<usize> = (0..n).map(|_| rng.usize(10_000)).collect();
+                a.rebalance(t, &k).map_err(|e| e.to_string())?;
+                a.layout().validate().map_err(|e| format!("t={t}: {e}"))?;
+                if a.layout().blk_part.iter().sum::<usize>() != n_b {
+                    return Err(format!("block total changed at t={t}"));
+                }
+                if a.layout().blk_part.iter().any(|&b| b < 1) {
+                    return Err("empty partition after rebalance".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cyclic_allocation_is_bijection() {
+    check(
+        103,
+        100,
+        &Pair(PartitionStrat, UsizeRange { lo: 0, hi: 200 }),
+        |&((n_g, n_b, n), t)| {
+            let l = PartitionLayout::new(n_g, n_b, n).map_err(|e| e.to_string())?;
+            let a = Allocator::new(l, AllocationCfg::default()).map_err(|e| e.to_string())?;
+            let mut seen = vec![false; n];
+            for r in 0..n {
+                let p = a.partition_of(t, r);
+                if seen[p] {
+                    return Err(format!("partition {p} assigned twice at t={t}"));
+                }
+                seen[p] = true;
+                if a.rank_of(t, p) != r {
+                    return Err("rank_of/partition_of not inverse".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_selection_two_impls_agree_and_respect_window() {
+    let strat = Pair(
+        NormalVec {
+            min_len: 64,
+            max_len: 40_000,
+            sigma: 0.02,
+        },
+        UsizeRange { lo: 0, hi: 1000 },
+    );
+    check(104, 150, &strat, |(acc, salt)| {
+        let n = acc.len();
+        let mut rng = Rng::new(*salt as u64);
+        let start = rng.usize(n);
+        let end = start + rng.usize(n - start + 1);
+        let delta = 0.001 + rng.f32() * 0.05;
+        let a = select_indices(acc, start, end, delta);
+        let b = select_indices_scan(acc, start, end, delta);
+        if a != b {
+            return Err(format!("impls disagree on [{start},{end}) d={delta}"));
+        }
+        for &i in &a.idx {
+            let i = i as usize;
+            if !(start..end).contains(&i) {
+                return Err(format!("index {i} outside [{start},{end})"));
+            }
+            if acc[i].abs() < delta {
+                return Err(format!("selected below threshold at {i}"));
+            }
+        }
+        // completeness: nothing >= delta inside window is missed
+        let count_direct = acc[start..end.min(n)]
+            .iter()
+            .filter(|x| x.abs() >= delta)
+            .count();
+        if count_direct != a.len() {
+            return Err("missed selections".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_threshold_scaling_factors_and_positivity() {
+    let strat = Pair(UsizeRange { lo: 1, hi: 100_000 }, UsizeRange { lo: 0, hi: 500_000 });
+    let mut th = OnlineThreshold::new(ThresholdCfg::default()).unwrap();
+    check(105, 300, &strat, |&(k, k_actual)| {
+        let before = th.delta();
+        let sf = th.update(k, k_actual);
+        let valid = [1.3, 1.02, 1.005, 0.995, 0.98, 0.7];
+        if !valid.iter().any(|v| (sf - v).abs() < 1e-12) {
+            return Err(format!("unexpected scaling factor {sf}"));
+        }
+        let after = th.delta();
+        if !(after > 0.0 && after.is_finite()) {
+            return Err(format!("delta escaped: {after}"));
+        }
+        let expect = (before as f64 * sf) as f32;
+        if after != expect && after != f32::MIN_POSITIVE {
+            return Err("delta not scaled multiplicatively".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_exdyna_rounds_no_buildup_and_replica_consistency() {
+    struct RoundStrat;
+    impl Strategy for RoundStrat {
+        type Value = (usize, usize, u64);
+        fn gen(&self, rng: &mut Rng) -> Self::Value {
+            (2 + rng.usize(9), 10 + rng.usize(25), rng.next_u64())
+        }
+        fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+            let mut out = Vec::new();
+            if v.0 > 2 {
+                out.push((2, v.1, v.2));
+            }
+            if v.1 > 10 {
+                out.push((v.0, 10, v.2));
+            }
+            out
+        }
+    }
+    check(106, 25, &RoundStrat, |&(n, iters, seed)| {
+        let n_g = 32 * 2048;
+        let mut reps: Vec<ExDyna> = (0..n)
+            .map(|_| ExDyna::new(n_g, n, ExDynaCfg::default_for(n)).unwrap())
+            .collect();
+        let mut rng = Rng::new(seed);
+        let mut acc = vec![0f32; n_g];
+        for t in 0..iters {
+            rng.fill_normal(&mut acc, 0.0, 0.01);
+            let mut k = vec![0usize; n];
+            let mut all: Vec<u32> = Vec::new();
+            for (r, rep) in reps.iter_mut().enumerate() {
+                let out = rep
+                    .select(&RoundCtx { t, rank: r, n_ranks: n }, &acc)
+                    .map_err(|e| e.to_string())?;
+                k[r] = out.len();
+                all.extend_from_slice(&out.idx);
+            }
+            let mut dedup = all.clone();
+            dedup.sort_unstable();
+            dedup.dedup();
+            if dedup.len() != all.len() {
+                return Err(format!("build-up at t={t} (n={n})"));
+            }
+            for rep in reps.iter_mut() {
+                rep.observe(t, &k).map_err(|e| e.to_string())?;
+            }
+            // replicas identical
+            let d0 = reps[0].delta();
+            let l0 = reps[0].layout().clone();
+            for rep in &reps {
+                if rep.delta() != d0 || *rep.layout() != l0 {
+                    return Err(format!("replica divergence at t={t}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_allgather_padding_arithmetic() {
+    struct OutsStrat;
+    impl Strategy for OutsStrat {
+        type Value = Vec<usize>; // k per rank
+        fn gen(&self, rng: &mut Rng) -> Self::Value {
+            let n = 2 + rng.usize(15);
+            (0..n).map(|_| rng.usize(500)).collect()
+        }
+        fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+            if v.len() > 2 {
+                vec![v[..2].to_vec()]
+            } else {
+                Vec::new()
+            }
+        }
+    }
+    check(107, 150, &OutsStrat, |ks| {
+        let n = ks.len();
+        // disjoint index ranges per rank (exdyna-like)
+        let mut outs = Vec::new();
+        let mut base = 0u32;
+        for &k in ks {
+            let idx: Vec<u32> = (base..base + k as u32).collect();
+            let val = vec![1.0f32; k];
+            outs.push(SelectOutput { idx, val });
+            base += k as u32;
+        }
+        let net = CostModel::paper_testbed(n);
+        let r = allgather_sparse(&outs, &net);
+        let m = ks.iter().copied().max().unwrap_or(0);
+        let total: usize = ks.iter().sum();
+        if r.m_t != m || r.padded_entries != n * m {
+            return Err("padding arithmetic wrong".into());
+        }
+        if r.union_idx.len() != total {
+            return Err("disjoint union lost entries".into());
+        }
+        if total > 0 {
+            let expect_f = (n * m) as f64 / total as f64;
+            if (r.f_ratio - expect_f).abs() > 1e-12 {
+                return Err(format!("f(t) {} != {expect_f}", r.f_ratio));
+            }
+            if r.f_ratio < 1.0 {
+                return Err("f(t) below 1".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dense_allreduce_is_elementwise_sum() {
+    let strat = Pair(UsizeRange { lo: 1, hi: 8 }, UsizeRange { lo: 1, hi: 2000 });
+    check(108, 60, &strat, |&(n, len)| {
+        let mut rng = Rng::new((n * 31 + len) as u64);
+        let per_rank: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0f32; len];
+                rng.fill_normal(&mut v, 0.0, 1.0);
+                v
+            })
+            .collect();
+        let net = CostModel::paper_testbed(n);
+        let (sum, _) = dense_allreduce(&per_rank, &net);
+        for j in (0..len).step_by((len / 7).max(1)) {
+            let want: f32 = per_rank.iter().map(|v| v[j]).sum();
+            if (sum[j] - want).abs() > 1e-4 * (1.0 + want.abs()) {
+                return Err(format!("sum mismatch at {j}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_error_feedback_conservation_in_sim_round() {
+    // one full exdyna round: selected ∪ carried == accumulator exactly
+    check(109, 40, &UsizeRange { lo: 2, hi: 8 }, |&n| {
+        let n_g = 32 * 1024;
+        let mut reps: Vec<ExDyna> = (0..n)
+            .map(|_| ExDyna::new(n_g, n, ExDynaCfg::default_for(n)).unwrap())
+            .collect();
+        let mut rng = Rng::new(n as u64 * 7919);
+        let mut acc = vec![0f32; n_g];
+        rng.fill_normal(&mut acc, 0.0, 0.01);
+        for (r, rep) in reps.iter_mut().enumerate() {
+            let out = rep
+                .select(&RoundCtx { t: 0, rank: r, n_ranks: n }, &acc)
+                .map_err(|e| e.to_string())?;
+            // simulate the error carry for this rank
+            let mut carried = acc.clone();
+            for &i in &out.idx {
+                carried[i as usize] = 0.0;
+            }
+            // conservation: selected values + carried == acc
+            let mut recon = carried;
+            for (&i, &v) in out.idx.iter().zip(out.val.iter()) {
+                if recon[i as usize] != 0.0 {
+                    return Err("carried not zeroed at selected".into());
+                }
+                recon[i as usize] = v;
+            }
+            if recon != acc {
+                return Err(format!("rank {r}: selected+carried != acc"));
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,155 @@
+//! Integration tests for the PJRT runtime against real AOT artifacts.
+//!
+//! Requires `make artifacts` to have produced `artifacts/` (the Makefile
+//! dependency chain guarantees this for `make test`). These tests exercise
+//! the full L2/L1 -> HLO-text -> PJRT-compile -> execute path.
+
+use exdyna::runtime::{Engine, Manifest, ModelRuntime};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn load_mlp() -> ModelRuntime {
+    let engine = Engine::cpu().expect("pjrt cpu client");
+    let manifest = Manifest::load(artifacts_dir()).expect("manifest");
+    ModelRuntime::load(&engine, &manifest, "mlp").expect("mlp artifacts")
+}
+
+#[test]
+fn manifest_loads_and_lists_models() {
+    let manifest = Manifest::load(artifacts_dir()).unwrap();
+    assert!(manifest.tile > 0);
+    assert!(manifest.block_size > 0);
+    assert!(manifest.models.contains_key("mlp"));
+    assert!(manifest.models.contains_key("tiny"));
+}
+
+#[test]
+fn mlp_init_is_deterministic_and_sized() {
+    let rt = load_mlp();
+    let p1 = rt.init_params(42).unwrap();
+    let p2 = rt.init_params(42).unwrap();
+    let p3 = rt.init_params(43).unwrap();
+    assert_eq!(p1.len(), rt.meta.n_params);
+    assert_eq!(p1, p2, "same seed must reproduce params");
+    assert_ne!(p1, p3, "different seed must differ");
+    // finite and not all zero
+    assert!(p1.iter().all(|x| x.is_finite()));
+    assert!(p1.iter().any(|&x| x != 0.0));
+}
+
+#[test]
+fn mlp_fwdbwd_produces_finite_loss_and_grads() {
+    let rt = load_mlp();
+    let params = rt.init_params(1).unwrap();
+    let b = rt.meta.batch;
+    let d = rt.meta.in_dim;
+    let x: Vec<f32> = (0..b * d).map(|i| ((i % 7) as f32 - 3.0) * 0.1).collect();
+    let y: Vec<i32> = (0..b as i32).map(|i| i % rt.meta.classes as i32).collect();
+    let (loss, grads) = rt.fwdbwd_mlp(&params, &x, &y).unwrap();
+    assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+    // cross-entropy over `classes` classes starts near ln(classes)
+    let ln_c = (rt.meta.classes as f32).ln();
+    assert!((loss - ln_c).abs() < 1.5, "loss {loss} vs ln(C) {ln_c}");
+    assert_eq!(grads.len(), rt.meta.n_params);
+    assert!(grads.iter().all(|g| g.is_finite()));
+    assert!(grads.iter().any(|&g| g != 0.0));
+}
+
+#[test]
+fn sparsify_step_matches_scalar_reference() {
+    let rt = load_mlp();
+    let n = rt.meta.n_padded;
+    // deterministic pseudo-gradients
+    let err: Vec<f32> = (0..n).map(|i| ((i * 2654435761) as f32 / u32::MAX as f32 - 0.5) * 0.02).collect();
+    let grad: Vec<f32> = (0..n).map(|i| ((i * 40503) as f32 / u32::MAX as f32 - 0.5) * 0.2).collect();
+    let (lr, start, end, delta) = (0.1f32, 1000usize, 60000usize, 0.004f32);
+    let out = rt.sparsify_step(&err, &grad, lr, start, end, delta).unwrap();
+
+    // scalar reference (same semantics as python kernels/ref.py)
+    let mut ref_count = 0usize;
+    for i in 0..n {
+        let acc = err[i] + lr * grad[i];
+        let hit = i >= start && i < end && acc.abs() >= delta;
+        let sel = if hit { acc } else { 0.0 };
+        if hit {
+            ref_count += 1;
+        }
+        let tol = 1e-5 * (1.0 + sel.abs());
+        assert!(
+            (out.selected[i] - sel).abs() <= tol,
+            "selected[{i}] = {} want {sel}",
+            out.selected[i]
+        );
+        assert!(
+            (out.new_err[i] - (acc - sel)).abs() <= 1e-5 * (1.0 + (acc - sel).abs()),
+            "new_err[{i}]"
+        );
+    }
+    assert_eq!(out.count, ref_count);
+    assert!(out.count > 0, "threshold too high for test data");
+}
+
+#[test]
+fn sparsify_step_respects_partition_window() {
+    let rt = load_mlp();
+    let n = rt.meta.n_padded;
+    let err = vec![0f32; n];
+    let grad = vec![1f32; n]; // every |acc| = lr >= delta
+    let out = rt
+        .sparsify_step(&err, &grad, 0.1, 500, 1500, 0.05)
+        .unwrap();
+    assert_eq!(out.count, 1000, "exactly the window must be selected");
+    for (i, &s) in out.selected.iter().enumerate() {
+        let inside = (500..1500).contains(&i);
+        assert_eq!(s != 0.0, inside, "index {i}");
+    }
+}
+
+#[test]
+fn sgd_apply_matches_host_arithmetic() {
+    let rt = load_mlp();
+    let n = rt.meta.n_params;
+    let params: Vec<f32> = (0..n).map(|i| (i % 13) as f32 * 0.1).collect();
+    let update: Vec<f32> = (0..n).map(|i| ((i % 7) as f32 - 3.0)).collect();
+    let lr_over_n = 0.025f32;
+    let out = rt.sgd_apply(&params, &update, lr_over_n).unwrap();
+    for i in (0..n).step_by(997) {
+        let want = params[i] - lr_over_n * update[i];
+        assert!((out[i] - want).abs() < 1e-6, "i={i}");
+    }
+}
+
+#[test]
+fn one_sgd_step_reduces_mlp_loss() {
+    let rt = load_mlp();
+    let mut params = rt.init_params(7).unwrap();
+    let b = rt.meta.batch;
+    let d = rt.meta.in_dim;
+    // fixed batch => full-batch GD must descend with small lr
+    let x: Vec<f32> = (0..b * d)
+        .map(|i| (((i * 31 + 7) % 97) as f32 / 97.0 - 0.5) * 2.0)
+        .collect();
+    let y: Vec<i32> = (0..b).map(|i| (i % rt.meta.classes) as i32).collect();
+    let (loss0, grads) = rt.fwdbwd_mlp(&params, &x, &y).unwrap();
+    params = rt.sgd_apply(&params, &grads, 0.5).unwrap();
+    let (loss1, _) = rt.fwdbwd_mlp(&params, &x, &y).unwrap();
+    assert!(loss1 < loss0, "GD step must descend: {loss0} -> {loss1}");
+}
+
+#[test]
+fn transformer_tiny_fwdbwd_runs() {
+    let engine = Engine::cpu().unwrap();
+    let manifest = Manifest::load(artifacts_dir()).unwrap();
+    let rt = ModelRuntime::load(&engine, &manifest, "tiny").unwrap();
+    let params = rt.init_params(3).unwrap();
+    let tokens: Vec<i32> = (0..rt.meta.batch * (rt.meta.seq_len + 1))
+        .map(|i| (i % rt.meta.vocab) as i32)
+        .collect();
+    let (loss, grads) = rt.fwdbwd_lm(&params, &tokens).unwrap();
+    let ln_v = (rt.meta.vocab as f32).ln();
+    assert!(loss.is_finite() && (loss - ln_v).abs() < 2.0, "loss {loss} vs ln(V) {ln_v}");
+    assert_eq!(grads.len(), rt.meta.n_params);
+    assert!(grads.iter().all(|g| g.is_finite()));
+}

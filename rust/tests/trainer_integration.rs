@@ -1,0 +1,202 @@
+//! Integration tests across trainer + collectives + sparsifiers + runtime:
+//! full Alg. 1 rounds with real models and the equivalence of the host
+//! and PJRT (Pallas) selection backends.
+
+use exdyna::coordinator::{ExDyna, ExDynaCfg};
+use exdyna::grad::synth::{DecayCfg, SynthGen, SynthModel};
+use exdyna::runtime::{Engine, Manifest, ModelRuntime};
+use exdyna::sparsifiers::dense::Dense;
+use exdyna::sparsifiers::make_sparsifier_factory;
+use exdyna::training::real::{RealTrainer, RealTrainerCfg, SelectBackend};
+use exdyna::training::sim::{run_sim, SimCfg};
+use exdyna::training::LrSchedule;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn mlp_runtime() -> ModelRuntime {
+    let engine = Engine::cpu().unwrap();
+    let manifest = Manifest::load(artifacts_dir()).unwrap();
+    ModelRuntime::load(&engine, &manifest, "mlp").unwrap()
+}
+
+fn trainer_cfg(iters: usize, backend: SelectBackend) -> RealTrainerCfg {
+    RealTrainerCfg {
+        n_ranks: 4,
+        iters,
+        lr: LrSchedule::constant(0.5),
+        seed: 3,
+        backend,
+        eval_every: 0,
+    }
+}
+
+#[test]
+fn mlp_training_descends_with_exdyna() {
+    let cfg = trainer_cfg(40, SelectBackend::Host);
+    let mut cfg_x = ExDynaCfg::default_for(4);
+    cfg_x.density = 0.01;
+    let mut tr = RealTrainer::new(mlp_runtime(), cfg, &move |n_g, n| {
+        Ok(Box::new(ExDyna::new(n_g, n, cfg_x)?))
+    })
+    .unwrap();
+    tr.run().unwrap();
+    let first = tr.trace.records[0].loss;
+    let last = tr.trace.records.last().unwrap().loss;
+    assert!(
+        last < first * 0.7,
+        "training must descend: {first} -> {last}"
+    );
+    // density must approach the target after warm-up
+    let tail = tr.trace.mean_density_tail(15);
+    assert!(tail < 0.03 && tail > 0.003, "tail density {tail}");
+}
+
+#[test]
+fn mlp_training_descends_with_dense_and_zero_error() {
+    let cfg = trainer_cfg(25, SelectBackend::Host);
+    let mut tr = RealTrainer::new(mlp_runtime(), cfg, &|_, _| Ok(Box::new(Dense))).unwrap();
+    tr.run().unwrap();
+    let first = tr.trace.records[0].loss;
+    let last = tr.trace.records.last().unwrap().loss;
+    assert!(last < first * 0.8, "{first} -> {last}");
+    for r in &tr.trace.records {
+        assert_eq!(r.global_err, 0.0, "dense must carry no error");
+        assert_eq!(r.k_actual, tr.params.len());
+    }
+}
+
+#[test]
+fn pjrt_and_host_select_backends_agree() {
+    // identical runs, only the selection backend differs: traces must
+    // match exactly on counts and updates (same arithmetic, different
+    // execution engine — Pallas artifact vs Rust scan).
+    let mk = |backend| {
+        let cfg = trainer_cfg(12, backend);
+        let mut cfg_x = ExDynaCfg::default_for(4);
+        cfg_x.density = 0.01;
+        let mut tr = RealTrainer::new(mlp_runtime(), cfg, &move |n_g, n| {
+            Ok(Box::new(ExDyna::new(n_g, n, cfg_x)?))
+        })
+        .unwrap();
+        tr.run().unwrap();
+        tr
+    };
+    let host = mk(SelectBackend::Host);
+    let pjrt = mk(SelectBackend::Pjrt);
+    // t = 0: err is zero, acc = lr*grad has identical rounding on both
+    // paths -> counts must agree exactly
+    assert_eq!(
+        host.trace.records[0].k_actual,
+        pjrt.trace.records[0].k_actual
+    );
+    // t > 0: XLA fuses err + lr*grad into an FMA, so accumulators differ
+    // by ~1 ulp near the threshold; a borderline flip changes k', which
+    // perturbs δ, and the two trajectories drift chaotically while
+    // remaining statistically identical. Compare run-level statistics:
+    let dh = host.trace.mean_density_tail(6);
+    let dp = pjrt.trace.mean_density_tail(6);
+    assert!(
+        (dh / dp - 1.0).abs() < 0.3,
+        "tail densities diverged: {dh} vs {dp}"
+    );
+    // both runs must be descending comparably (12 early iterations of a
+    // steep loss curve amplify tiny perturbations, so compare loosely)
+    let lh = host.trace.records.last().unwrap().loss;
+    let lp = pjrt.trace.records.last().unwrap().loss;
+    let l0 = host.trace.records[0].loss;
+    assert!(lh < l0 && lp < l0, "both must descend: {l0} -> {lh}/{lp}");
+    assert!((lh - lp).abs() < 0.3, "final losses diverged: {lh} vs {lp}");
+    // (exact per-element agreement of the selection kernel itself is
+    // pinned by runtime_integration::sparsify_step_matches_scalar_reference)
+}
+
+#[test]
+fn cltk_converges_slower_than_exdyna_on_mlp() {
+    // the paper's model-fidelity claim: delegated selection hurts
+    let run = |sp: &str| {
+        let cfg = trainer_cfg(40, SelectBackend::Host);
+        let factory = make_sparsifier_factory(sp, 0.01, 0.004, ExDynaCfg::default_for(4)).unwrap();
+        let mut tr = RealTrainer::new(mlp_runtime(), cfg, factory.as_ref()).unwrap();
+        tr.run().unwrap();
+        tr.trace.records.last().unwrap().loss
+    };
+    let exdyna_loss = run("exdyna");
+    let cltk_loss = run("cltk");
+    assert!(
+        cltk_loss > exdyna_loss - 0.05,
+        "cltk should not beat exdyna: {cltk_loss} vs {exdyna_loss}"
+    );
+}
+
+#[test]
+fn sim_full_matrix_smoke() {
+    // every sparsifier completes a short sim run with coherent records
+    let model = SynthModel::profile("m", 96_000, 12, 3, DecayCfg::default());
+    let gen = SynthGen::new(model, 4, 0.5, 5, false);
+    let cfg = SimCfg {
+        n_ranks: 4,
+        iters: 12,
+        compute_s: 0.001,
+        ..Default::default()
+    };
+    for sp in [
+        "exdyna",
+        "exdyna-coarse",
+        "topk",
+        "cltk",
+        "hard-threshold",
+        "sidco",
+        "dense",
+    ] {
+        let factory = make_sparsifier_factory(sp, 0.002, 0.01, ExDynaCfg::default_for(4)).unwrap();
+        let trace = run_sim(&gen, factory.as_ref(), &cfg).unwrap();
+        assert_eq!(trace.records.len(), 12, "{sp}");
+        for r in &trace.records {
+            assert!(r.k_actual <= gen.n_g(), "{sp}");
+            assert!(r.k_sum >= r.k_actual, "{sp}: sum < union");
+            assert!(r.t_comm >= 0.0 && r.t_select >= 0.0, "{sp}");
+        }
+        // no-build-up sparsifiers have k_sum == k_actual (dense is
+        // excluded: its k_sum is n*n_g by definition of "every rank
+        // sends everything")
+        if sp.starts_with("exdyna") || sp == "cltk" {
+            for r in &trace.records {
+                assert_eq!(r.k_sum, r.k_actual, "{sp} must not build up");
+            }
+        }
+    }
+}
+
+#[test]
+fn lr_decay_shrinks_global_error_and_density_recovers() {
+    // Fig. 6 dynamics: after the lr drop the accumulator magnitudes fall,
+    // hard-threshold density collapses, exdyna re-tracks the target.
+    let mut model = SynthModel::resnet18(0.01);
+    model.decay.lr_drop_at = 60;
+    model.decay.lr_drop_factor = 0.2;
+    let gen = SynthGen::new(model, 4, 0.5, 9, false);
+    let cfg = SimCfg {
+        n_ranks: 4,
+        iters: 120,
+        lr: LrSchedule::step(0.1, 60, 0.1),
+        compute_s: 0.001,
+        ..Default::default()
+    };
+    let factory = make_sparsifier_factory("hard-threshold", 0.001, 0.012, ExDynaCfg::default_for(4)).unwrap();
+    let hard = run_sim(&gen, factory.as_ref(), &cfg).unwrap();
+    let before: f64 = hard.records[40..55].iter().map(|r| r.density).sum::<f64>() / 15.0;
+    let after: f64 = hard.records[100..].iter().map(|r| r.density).sum::<f64>() / 20.0;
+    assert!(
+        after < before * 0.8,
+        "hard-threshold density must drop after lr decay: {before} -> {after}"
+    );
+    let factory = make_sparsifier_factory("exdyna", 0.001, 0.012, ExDynaCfg::default_for(4)).unwrap();
+    let ex = run_sim(&gen, factory.as_ref(), &cfg).unwrap();
+    let ex_after = ex.mean_density_tail(20);
+    assert!(
+        ex_after > 0.0003 && ex_after < 0.003,
+        "exdyna must re-track after decay: {ex_after}"
+    );
+}
