@@ -11,7 +11,7 @@ use exdyna::config::preset;
 use exdyna::coordinator::{ExDyna, ExDynaCfg};
 use exdyna::grad::synth::SynthGen;
 use exdyna::training::sim::run_sim;
-fn main() -> anyhow::Result<()> {
+fn main() -> exdyna::Result<()> {
     for (alpha, blk_move, n_blocks) in [(2.0, 4, 1024), (1.5, 4, 1024), (1.3, 8, 1024), (1.2, 8, 2048)] {
         let cfg = preset("resnet152", 0.01, 16, 400)?;
         let gen = SynthGen::new(cfg.model.clone(), 16, 0.5, 42, false);

@@ -29,7 +29,7 @@ fn pearson(a: &[f64], b: &[f64]) -> f64 {
     cov / (va.sqrt() * vb.sqrt()).max(1e-30)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> exdyna::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
     let (iters, scale) = if quick { (100, 0.01) } else { (300, 0.02) };
     let ranks = 16;

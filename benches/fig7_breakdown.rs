@@ -18,7 +18,7 @@ use exdyna::grad::synth::SynthGen;
 use exdyna::sparsifiers::make_sparsifier_factory;
 use exdyna::training::sim::run_sim;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> exdyna::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
     let (iters, scale) = if quick { (40, 0.01) } else { (150, 0.03) };
     let ranks = 16;

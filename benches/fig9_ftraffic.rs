@@ -16,7 +16,7 @@ use exdyna::grad::synth::SynthGen;
 use exdyna::sparsifiers::make_sparsifier_factory;
 use exdyna::training::sim::run_sim;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> exdyna::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
     let (iters, scale) = if quick { (80, 0.01) } else { (300, 0.02) };
     let ranks = 16;

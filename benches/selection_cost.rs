@@ -17,7 +17,7 @@ use exdyna::sparsifiers::{top_k_select, top_k_select_heap};
 use exdyna::util::Rng;
 use std::hint::black_box;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> exdyna::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
     let budget = if quick { 0.1 } else { 0.5 };
     let sizes: &[usize] = if quick {
@@ -72,8 +72,8 @@ fn main() -> anyhow::Result<()> {
     }
     println!("{}", table.render());
 
-    // PJRT path (optional: needs artifacts)
-    if std::path::Path::new("artifacts/manifest.txt").exists() {
+    // PJRT path (optional: needs a real backend + artifacts)
+    if exdyna::runtime::pjrt_available() && std::path::Path::new("artifacts/manifest.txt").exists() {
         use exdyna::runtime::{Engine, Manifest, ModelRuntime};
         let engine = Engine::cpu()?;
         let manifest = Manifest::load("artifacts")?;

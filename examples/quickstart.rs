@@ -12,7 +12,7 @@ use exdyna::grad::synth::{SynthGen, SynthModel};
 use exdyna::sparsifiers::dense::Dense;
 use exdyna::training::sim::{run_sim, SimCfg};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> exdyna::Result<()> {
     let n_ranks = 8;
     let iters = 150;
 

@@ -11,24 +11,27 @@ use exdyna::grad::synth::SynthGen;
 use exdyna::sparsifiers::make_sparsifier_factory;
 use exdyna::training::sim::run_sim;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> exdyna::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let specs = [
         OptSpec { name: "scale", takes_value: true, help: "model scale (default 0.05)" },
         OptSpec { name: "iters", takes_value: true, help: "iterations per point (default 60)" },
         OptSpec { name: "ranks", takes_value: true, help: "comma list (default 2,4,8,16)" },
+        OptSpec { name: "engine", takes_value: true, help: "cluster engine: threaded|lockstep (default threaded)" },
     ];
     let args = Args::parse(&argv, &specs)?;
     let scale: f64 = args.parse_or("scale", 0.05)?;
     let iters: usize = args.parse_or("iters", 60)?;
     let rank_list: Vec<usize> = args.list_or("ranks", &[2, 4, 8, 16])?;
+    let engine = exdyna::cluster::EngineKind::parse(&args.str_or("engine", "threaded"))?;
 
-    println!("== scale-out sweep: inception-v4 profile (scale {scale}), {iters} iters/point ==\n");
+    println!("== scale-out sweep: inception-v4 profile (scale {scale}), {iters} iters/point, {engine} engine ==\n");
     let mut table = Table::new(&[
         "ranks", "sparsifier", "density", "f(t)", "select_ms", "comm_ms", "total_ms", "vs dense",
     ]);
     for &n in &rank_list {
-        let cfg = preset("inception-v4", scale, n, iters)?;
+        let mut cfg = preset("inception-v4", scale, n, iters)?;
+        cfg.sim.engine = engine;
         let gen = SynthGen::new(cfg.model.clone(), n, cfg.sim.rho, cfg.sim.seed, false);
         let mut dense_total = f64::NAN;
         for sp in ["dense", "exdyna", "hard-threshold", "topk"] {

@@ -10,7 +10,7 @@ use exdyna::grad::synth::SynthGen;
 use exdyna::sparsifiers::make_sparsifier_factory;
 use exdyna::training::sim::run_sim;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> exdyna::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let specs = [
         OptSpec { name: "preset", takes_value: true, help: "workload (default resnet152)" },

@@ -13,12 +13,12 @@
 
 use exdyna::cli::{Args, OptSpec};
 use exdyna::coordinator::{ExDyna, ExDynaCfg};
-use exdyna::runtime::{Engine, Manifest, ModelRuntime};
+use exdyna::runtime::{pjrt_available, Engine, Manifest, ModelRuntime};
 use exdyna::sparsifiers::dense::Dense;
 use exdyna::training::real::{RealTrainer, RealTrainerCfg, SelectBackend};
 use exdyna::training::LrSchedule;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> exdyna::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let specs = [
         OptSpec { name: "iters", takes_value: true, help: "training iterations (default 300)" },
@@ -34,6 +34,10 @@ fn main() -> anyhow::Result<()> {
     let density: f64 = args.parse_or("density", 0.01)?;
     let model = args.str_or("model", "tiny");
 
+    if !pjrt_available() {
+        eprintln!("train_e2e skipped: PJRT backend not built (stub runtime)");
+        return Ok(());
+    }
     let engine = Engine::cpu()?;
     let manifest = Manifest::load("artifacts")?;
     let rt = ModelRuntime::load(&engine, &manifest, &model)?;
@@ -57,6 +61,7 @@ fn main() -> anyhow::Result<()> {
             SelectBackend::Pjrt
         },
         eval_every: (iters / 15).max(1),
+        ..Default::default()
     };
 
     // --- ExDyna run -----------------------------------------------------

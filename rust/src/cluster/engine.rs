@@ -1,0 +1,211 @@
+//! The threaded cluster engine: one OS thread per rank.
+//!
+//! [`run_threaded`] is the shared-nothing counterpart of the lock-step
+//! `training::sim::run_lockstep`: it builds one sparsifier replica per
+//! rank, wires the ranks together with a [`LocalTransport`], launches
+//! each [`SimWorker`] on its own scoped thread, and merges the per-rank
+//! records into one [`Trace`] (rank 0's records — all deterministic
+//! fields are identical across ranks, and `t_select` is already the
+//! all-gathered cluster max).
+
+use crate::cluster::transport::{Endpoint, LocalTransport, Transport};
+use crate::cluster::worker::SimWorker;
+use crate::error::{Error, Result};
+use crate::grad::synth::SynthGen;
+use crate::metrics::{IterRecord, Trace};
+use crate::sparsifiers::Sparsifier;
+use crate::training::sim::{SimCfg, SparsifierFactory};
+
+/// When one rank fails, its peers fail their rendezvous with a generic
+/// "transport poisoned" error; surface the original failure instead of
+/// whichever rank happened to be joined first.
+pub(crate) fn pick_root_cause(errors: Vec<Error>) -> Error {
+    let mut fallback = None;
+    for e in errors {
+        let is_poison = matches!(&e, Error::Invariant(m) if m.contains("poisoned"));
+        if !is_poison {
+            return e;
+        }
+        fallback = Some(e);
+    }
+    fallback.expect("pick_root_cause called with no errors")
+}
+
+/// Facts about one threaded run, for tests and diagnostics.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterStats {
+    /// Ranks launched.
+    pub n_ranks: usize,
+    /// Distinct worker OS threads observed (must equal `n_ranks`).
+    pub distinct_threads: usize,
+}
+
+/// Run the simulated trainer with one thread per rank; returns the trace.
+pub fn run_threaded(
+    gen: &SynthGen,
+    make_sparsifier: &SparsifierFactory,
+    cfg: &SimCfg,
+) -> Result<Trace> {
+    run_threaded_with_stats(gen, make_sparsifier, cfg).map(|(trace, _)| trace)
+}
+
+/// [`run_threaded`] plus [`ClusterStats`] (used by the parity tests to
+/// prove real per-rank threading).
+pub fn run_threaded_with_stats(
+    gen: &SynthGen,
+    make_sparsifier: &SparsifierFactory,
+    cfg: &SimCfg,
+) -> Result<(Trace, ClusterStats)> {
+    let n = cfg.n_ranks;
+    if n == 0 {
+        return Err(Error::invalid("n_ranks must be >= 1"));
+    }
+    let n_g = gen.n_g();
+    // replicas are built on the launcher thread (the factory need not be
+    // Sync), then each is moved onto its rank's thread
+    let sparsifiers: Vec<Box<dyn Sparsifier>> = (0..n)
+        .map(|_| make_sparsifier(n_g, n))
+        .collect::<Result<_>>()?;
+    let name = sparsifiers[0].name();
+    let mut trace = Trace::new(&name, &gen.model.name, n);
+
+    let transport = LocalTransport::new(n);
+    let results: Vec<Result<(std::thread::ThreadId, Vec<IterRecord>)>> =
+        std::thread::scope(|scope| {
+            let transport = &transport;
+            let mut handles = Vec::with_capacity(n);
+            for (rank, sp) in sparsifiers.into_iter().enumerate() {
+                handles.push(scope.spawn(move || {
+                    let ep = Endpoint::new(rank, transport as &dyn Transport);
+                    let worker = SimWorker::new(rank, sp, gen, cfg, ep);
+                    let out = worker.run();
+                    if out.is_err() {
+                        // don't leave peers blocked at the rendezvous
+                        transport.abort();
+                    }
+                    out.map(|records| (std::thread::current().id(), records))
+                }));
+            }
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join()
+                        .unwrap_or_else(|_| Err(Error::invariant("cluster worker panicked")))
+                })
+                .collect()
+        });
+    let mut per_rank = Vec::with_capacity(n);
+    let mut errors = Vec::new();
+    for r in results {
+        match r {
+            Ok(v) => per_rank.push(v),
+            Err(e) => errors.push(e),
+        }
+    }
+    if !errors.is_empty() {
+        return Err(pick_root_cause(errors));
+    }
+
+    // ThreadId is not Ord; count distinct ids by linear scan (n is small)
+    let mut distinct: Vec<std::thread::ThreadId> = Vec::with_capacity(n);
+    for (id, _) in per_rank.iter() {
+        if !distinct.contains(id) {
+            distinct.push(*id);
+        }
+    }
+    let stats = ClusterStats {
+        n_ranks: n,
+        distinct_threads: distinct.len(),
+    };
+
+    // rank 0's records are the cluster trace (see SimWorker::run docs)
+    let (_, records) = per_rank.into_iter().next().expect("n >= 1");
+    for rec in records {
+        trace.push(rec);
+    }
+    Ok((trace, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{ExDyna, ExDynaCfg};
+    use crate::grad::synth::{DecayCfg, SynthModel};
+
+    #[test]
+    fn threaded_run_produces_full_trace_on_worker_threads() {
+        let n = 3;
+        let model = SynthModel::profile("t", 48_000, 6, 5, DecayCfg::default());
+        let gen = SynthGen::new(model, n, 0.5, 17, false);
+        let cfg = SimCfg {
+            n_ranks: n,
+            iters: 8,
+            compute_s: 0.01,
+            ..Default::default()
+        };
+        let (trace, stats) = run_threaded_with_stats(
+            &gen,
+            &|n_g, nr| Ok(Box::new(ExDyna::new(n_g, nr, ExDynaCfg::default_for(nr))?)),
+            &cfg,
+        )
+        .unwrap();
+        assert_eq!(trace.records.len(), 8);
+        assert_eq!(trace.n_ranks, n);
+        assert_eq!(stats.n_ranks, n);
+        assert_eq!(stats.distinct_threads, n, "one OS thread per rank");
+        for r in &trace.records {
+            assert!(r.k_actual > 0);
+            assert!(r.t_comm > 0.0);
+        }
+    }
+
+    #[test]
+    fn zero_ranks_rejected() {
+        let model = SynthModel::profile("t", 4_096, 3, 5, DecayCfg::default());
+        let gen = SynthGen::new(model, 1, 0.5, 17, false);
+        let cfg = SimCfg {
+            n_ranks: 0,
+            iters: 1,
+            ..Default::default()
+        };
+        let res = run_threaded(
+            &gen,
+            &|n_g, nr| Ok(Box::new(ExDyna::new(n_g, nr.max(1), ExDynaCfg::default_for(1))?)),
+            &cfg,
+        );
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn root_cause_preferred_over_poison_noise() {
+        let errs = vec![
+            Error::invariant("transport poisoned by a failed worker"),
+            Error::invalid("the real problem"),
+            Error::invariant("transport poisoned by a failed worker"),
+        ];
+        let picked = pick_root_cause(errs);
+        assert!(picked.to_string().contains("the real problem"), "{picked}");
+        // all-poisoned still yields an error
+        let picked = pick_root_cause(vec![Error::invariant(
+            "transport poisoned by a failed worker",
+        )]);
+        assert!(picked.to_string().contains("poisoned"));
+    }
+
+    #[test]
+    fn failing_factory_surfaces_before_launch() {
+        let model = SynthModel::profile("t", 4_096, 3, 5, DecayCfg::default());
+        let gen = SynthGen::new(model, 2, 0.5, 17, false);
+        let cfg = SimCfg {
+            n_ranks: 2,
+            iters: 1,
+            ..Default::default()
+        };
+        let res = run_threaded(
+            &gen,
+            &|_, _| Err(crate::error::Error::invalid("boom")),
+            &cfg,
+        );
+        assert!(res.is_err());
+    }
+}

@@ -1,0 +1,92 @@
+//! The cluster layer: rank workers, message transport, and the threaded
+//! training engine.
+//!
+//! The paper's subject is *scalability* — selection/communication cost as
+//! the worker count grows — so the trainer models a cluster, not a loop:
+//!
+//! * [`transport`] — the [`Transport`] abstraction collectives move
+//!   messages over, and [`LocalTransport`], the in-process
+//!   channels/barrier implementation (one OS thread per rank). Data
+//!   movement is real; the α–β [`CostModel`] charges what the operation
+//!   would cost on the modeled wire.
+//! * [`worker`] — [`SimWorker`]: one rank's Alg. 1 loop (own sparsifier
+//!   replica, own error/accumulator buffers), shared-nothing except the
+//!   transport.
+//! * [`engine`] — [`run_threaded`]: launch workers, merge per-rank
+//!   records into one trace.
+//!
+//! [`EngineKind`] selects between this engine and the legacy lock-step
+//! path (kept for bit-exact comparison; see
+//! `rust/tests/engine_parity.rs`). The choice threads through `SimCfg`,
+//! the TOML config, and the CLI (`--engine threaded|lockstep`).
+//!
+//! [CostModel]: crate::collectives::CostModel
+
+pub mod engine;
+pub mod transport;
+pub mod worker;
+
+pub use engine::{run_threaded, run_threaded_with_stats, ClusterStats};
+pub use transport::{Endpoint, LocalTransport, Message, Transport};
+pub use worker::SimWorker;
+
+use crate::error::{Error, Result};
+
+/// Which trainer engine executes the ranks.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EngineKind {
+    /// One OS thread per rank over a [`Transport`] (the default).
+    #[default]
+    Threaded,
+    /// Legacy single-thread lock-step execution (bit-exact reference).
+    Lockstep,
+}
+
+impl EngineKind {
+    /// Parse a CLI/config name.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "threaded" => Ok(EngineKind::Threaded),
+            "lockstep" => Ok(EngineKind::Lockstep),
+            other => Err(Error::invalid(format!(
+                "unknown engine '{other}' (have: threaded, lockstep)"
+            ))),
+        }
+    }
+
+    /// Canonical name (round-trips through [`EngineKind::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Threaded => "threaded",
+            EngineKind::Lockstep => "lockstep",
+        }
+    }
+}
+
+impl std::str::FromStr for EngineKind {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        EngineKind::parse(s)
+    }
+}
+
+impl std::fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_kind_roundtrips() {
+        for k in [EngineKind::Threaded, EngineKind::Lockstep] {
+            assert_eq!(EngineKind::parse(k.name()).unwrap(), k);
+            assert_eq!(k.name().parse::<EngineKind>().unwrap(), k);
+        }
+        assert!(EngineKind::parse("gpu").is_err());
+        assert_eq!(EngineKind::default(), EngineKind::Threaded);
+    }
+}

@@ -1,0 +1,306 @@
+//! Message transport between rank workers.
+//!
+//! [`Transport`] is the abstraction the per-rank collectives run over: a
+//! synchronous, rank-addressed all-gather (every collective in Alg. 1 —
+//! metadata all-gather, padded payload all-gather, sparse all-reduce
+//! contributions, leader broadcast — decomposes into "each rank
+//! contributes one message, every rank receives the rank-indexed
+//! vector"). Implementations move the bytes; the α–β [`CostModel`]
+//! separately charges what the operation *would* cost on the modeled
+//! wire, so data movement and wire-clock accounting stay decoupled.
+//!
+//! [`LocalTransport`] is the first implementation: in-process rendezvous
+//! for one OS thread per rank, built on a generation-counted slot board
+//! (mutex + condvar). Every round each rank deposits its message; the
+//! last arrival publishes the full board and wakes the others. A rank
+//! can only enter round `g+1` after consuming round `g`, so the
+//! published board is never overwritten early. A failed worker poisons
+//! the transport ([`Transport::abort`]) so peers error out instead of
+//! deadlocking at the rendezvous.
+//!
+//! [CostModel]: crate::collectives::CostModel
+
+use crate::coordinator::SelectOutput;
+use crate::error::{Error, Result};
+use std::sync::{Condvar, Mutex};
+
+/// One rank's contribution to a collective round.
+#[derive(Clone, Debug)]
+pub enum Message {
+    /// Selected (idx, val) pairs — the payload all-gather (its length is
+    /// simultaneously the `k_i` metadata).
+    Selection(SelectOutput),
+    /// Dense f32 payload — sparse all-reduce contributions.
+    Floats(Vec<f32>),
+    /// One f64 — timing metadata and diagnostics (select wall time,
+    /// error norms).
+    Scalar(f64),
+}
+
+/// Rank-addressed synchronous collectives. Implementations must be
+/// callable concurrently from one thread per rank.
+pub trait Transport: Send + Sync {
+    /// Cluster size.
+    fn n_ranks(&self) -> usize;
+
+    /// Synchronous all-gather: rank `rank` contributes `msg` and receives
+    /// every rank's message, rank-indexed. All ranks must call this the
+    /// same number of times in the same order (enforced by construction:
+    /// workers run identical control flow off replicated state).
+    fn allgather(&self, rank: usize, msg: Message) -> Result<Vec<Message>>;
+
+    /// Rendezvous barrier (default: a scalar all-gather).
+    fn barrier(&self, rank: usize) -> Result<()> {
+        self.allgather(rank, Message::Scalar(0.0)).map(|_| ())
+    }
+
+    /// Poison the transport: wake every waiter with an error. Called by a
+    /// worker that is about to exit with a failure so peers don't block
+    /// forever at the next rendezvous.
+    fn abort(&self);
+}
+
+struct Board {
+    slots: Vec<Option<Message>>,
+    arrived: usize,
+    generation: u64,
+    published: Vec<Message>,
+    poisoned: bool,
+}
+
+/// In-process transport for one OS thread per rank.
+pub struct LocalTransport {
+    n: usize,
+    board: Mutex<Board>,
+    cv: Condvar,
+}
+
+impl LocalTransport {
+    /// Transport for `n` ranks.
+    pub fn new(n: usize) -> Self {
+        LocalTransport {
+            n,
+            board: Mutex::new(Board {
+                slots: (0..n).map(|_| None).collect(),
+                arrived: 0,
+                generation: 0,
+                published: Vec::new(),
+                poisoned: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+impl Transport for LocalTransport {
+    fn n_ranks(&self) -> usize {
+        self.n
+    }
+
+    fn allgather(&self, rank: usize, msg: Message) -> Result<Vec<Message>> {
+        if rank >= self.n {
+            return Err(Error::invalid(format!(
+                "rank {rank} out of range (n = {})",
+                self.n
+            )));
+        }
+        let mut b = self.board.lock().unwrap();
+        if b.poisoned {
+            return Err(Error::invariant("transport poisoned by a failed worker"));
+        }
+        debug_assert!(b.slots[rank].is_none(), "rank {rank} double-deposited");
+        let my_gen = b.generation;
+        b.slots[rank] = Some(msg);
+        b.arrived += 1;
+        if b.arrived == self.n {
+            // last arrival: publish the board, open the next round
+            let msgs: Vec<Message> = b.slots.iter_mut().map(|s| s.take().unwrap()).collect();
+            b.published = msgs;
+            b.arrived = 0;
+            b.generation = b.generation.wrapping_add(1);
+            self.cv.notify_all();
+        } else {
+            while b.generation == my_gen && !b.poisoned {
+                b = self.cv.wait(b).unwrap();
+            }
+            if b.poisoned {
+                return Err(Error::invariant("transport poisoned by a failed worker"));
+            }
+        }
+        // each rank receives its own copy — the real data movement
+        Ok(b.published.clone())
+    }
+
+    fn abort(&self) {
+        let mut b = self.board.lock().unwrap();
+        b.poisoned = true;
+        self.cv.notify_all();
+    }
+}
+
+/// One rank's handle onto a transport: typed all-gather helpers that
+/// unwrap the [`Message`] envelope (an envelope mismatch means workers
+/// diverged in control flow — an invariant error, never silent).
+pub struct Endpoint<'a> {
+    /// This rank.
+    pub rank: usize,
+    tp: &'a dyn Transport,
+}
+
+impl<'a> Endpoint<'a> {
+    /// Handle for `rank` over `tp`.
+    pub fn new(rank: usize, tp: &'a dyn Transport) -> Self {
+        Endpoint { rank, tp }
+    }
+
+    /// Cluster size.
+    pub fn n_ranks(&self) -> usize {
+        self.tp.n_ranks()
+    }
+
+    /// Underlying transport (for `abort`).
+    pub fn transport(&self) -> &dyn Transport {
+        self.tp
+    }
+
+    /// All-gather per-rank selections (metadata + payload in one round).
+    pub fn allgather_select(&self, mine: SelectOutput) -> Result<Vec<SelectOutput>> {
+        let msgs = self.tp.allgather(self.rank, Message::Selection(mine))?;
+        msgs.into_iter()
+            .map(|m| match m {
+                Message::Selection(s) => Ok(s),
+                other => Err(envelope_mismatch("Selection", &other)),
+            })
+            .collect()
+    }
+
+    /// All-gather dense f32 payloads (all-reduce contributions).
+    pub fn allgather_floats(&self, mine: Vec<f32>) -> Result<Vec<Vec<f32>>> {
+        let msgs = self.tp.allgather(self.rank, Message::Floats(mine))?;
+        msgs.into_iter()
+            .map(|m| match m {
+                Message::Floats(v) => Ok(v),
+                other => Err(envelope_mismatch("Floats", &other)),
+            })
+            .collect()
+    }
+
+    /// All-gather one f64 per rank (timings, norms).
+    pub fn allgather_f64(&self, mine: f64) -> Result<Vec<f64>> {
+        let msgs = self.tp.allgather(self.rank, Message::Scalar(mine))?;
+        msgs.into_iter()
+            .map(|m| match m {
+                Message::Scalar(x) => Ok(x),
+                other => Err(envelope_mismatch("Scalar", &other)),
+            })
+            .collect()
+    }
+
+    /// Barrier.
+    pub fn barrier(&self) -> Result<()> {
+        self.tp.barrier(self.rank)
+    }
+}
+
+fn envelope_mismatch(want: &str, got: &Message) -> Error {
+    let got = match got {
+        Message::Selection(_) => "Selection",
+        Message::Floats(_) => "Floats",
+        Message::Scalar(_) => "Scalar",
+    };
+    Error::invariant(format!(
+        "transport envelope mismatch: expected {want}, got {got} — workers diverged"
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn single_rank_allgather_is_identity() {
+        let tp = LocalTransport::new(1);
+        let ep = Endpoint::new(0, &tp);
+        let got = ep.allgather_f64(2.5).unwrap();
+        assert_eq!(got, vec![2.5]);
+        // rounds are reusable
+        let got = ep.allgather_f64(3.5).unwrap();
+        assert_eq!(got, vec![3.5]);
+    }
+
+    #[test]
+    fn multi_rank_allgather_is_rank_indexed_over_rounds() {
+        let n = 4;
+        let rounds = 25;
+        let tp = Arc::new(LocalTransport::new(n));
+        let mut handles = Vec::new();
+        for rank in 0..n {
+            let tp = tp.clone();
+            handles.push(std::thread::spawn(move || {
+                let ep = Endpoint::new(rank, tp.as_ref());
+                for round in 0..rounds {
+                    let mine = (rank * 1000 + round) as f64;
+                    let got = ep.allgather_f64(mine).unwrap();
+                    let want: Vec<f64> =
+                        (0..n).map(|r| (r * 1000 + round) as f64).collect();
+                    assert_eq!(got, want, "rank {rank} round {round}");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn selections_roundtrip() {
+        let n = 2;
+        let tp = Arc::new(LocalTransport::new(n));
+        let mk = |r: usize| SelectOutput {
+            idx: vec![r as u32, 10 + r as u32],
+            val: vec![r as f32, -(r as f32)],
+        };
+        let mut handles = Vec::new();
+        for rank in 0..n {
+            let tp = tp.clone();
+            let mine = mk(rank);
+            handles.push(std::thread::spawn(move || {
+                let ep = Endpoint::new(rank, tp.as_ref());
+                ep.allgather_select(mine).unwrap()
+            }));
+        }
+        for h in handles {
+            let outs = h.join().unwrap();
+            assert_eq!(outs.len(), n);
+            for (r, o) in outs.iter().enumerate() {
+                assert_eq!(*o, mk(r));
+            }
+        }
+    }
+
+    #[test]
+    fn abort_unblocks_waiters_with_error() {
+        let tp = Arc::new(LocalTransport::new(2));
+        let tp2 = tp.clone();
+        let waiter = std::thread::spawn(move || {
+            let ep = Endpoint::new(0, tp2.as_ref());
+            ep.allgather_f64(1.0)
+        });
+        // give the waiter time to block, then poison instead of joining
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        tp.abort();
+        let res = waiter.join().unwrap();
+        assert!(res.is_err(), "poisoned transport must error, not hang");
+        // later calls fail fast
+        let ep = Endpoint::new(1, tp.as_ref());
+        assert!(ep.allgather_f64(2.0).is_err());
+    }
+
+    #[test]
+    fn out_of_range_rank_rejected() {
+        let tp = LocalTransport::new(2);
+        let ep = Endpoint::new(5, &tp);
+        assert!(ep.allgather_f64(0.0).is_err());
+    }
+}

@@ -1,0 +1,176 @@
+//! One rank's training loop (Alg. 1) as an independent worker.
+//!
+//! A [`SimWorker`] owns everything rank-local — the sparsifier replica,
+//! the error accumulator, the gradient buffer — and talks to its peers
+//! exclusively through an [`Endpoint`], via the per-rank collectives
+//! ([`allgather_sparse_rk`], [`broadcast_selection_rk`],
+//! [`sparse_allreduce_union_rk`]). Those share their merge/cost
+//! arithmetic with the lock-step collectives (and the [`StragglerCfg`]
+//! compute clock is common too), so for a fixed seed the two engines
+//! yield identical traces — `rust/tests/engine_parity.rs` pins this.
+//!
+//! [StragglerCfg]: crate::collectives::costmodel::StragglerCfg
+
+use crate::cluster::transport::Endpoint;
+use crate::collectives::{
+    allgather_sparse_rk, broadcast_selection_rk, sparse_allreduce_union_rk, CostModel,
+};
+use crate::coordinator::SelectOutput;
+use crate::error::Result;
+use crate::grad::synth::SynthGen;
+use crate::metrics::IterRecord;
+use crate::sparsifiers::{CommPattern, RoundCtx, Sparsifier};
+use crate::training::sim::SimCfg;
+use crate::util::stats::l2_norm;
+use std::time::Instant;
+
+/// One simulated rank running on its own OS thread.
+pub struct SimWorker<'a> {
+    rank: usize,
+    sp: Box<dyn Sparsifier>,
+    gen: &'a SynthGen,
+    cfg: &'a SimCfg,
+    net: CostModel,
+    ep: Endpoint<'a>,
+}
+
+impl<'a> SimWorker<'a> {
+    /// Worker for `rank` with its own sparsifier replica.
+    pub fn new(
+        rank: usize,
+        sp: Box<dyn Sparsifier>,
+        gen: &'a SynthGen,
+        cfg: &'a SimCfg,
+        ep: Endpoint<'a>,
+    ) -> Self {
+        let net = CostModel::paper_testbed(cfg.n_ranks).with_straggler(cfg.straggler);
+        SimWorker {
+            rank,
+            sp,
+            gen,
+            cfg,
+            net,
+            ep,
+        }
+    }
+
+    /// Run all iterations; returns this rank's records. Every
+    /// deterministic field (`k_actual`, `k_sum`, `delta`, `f_ratio`,
+    /// `global_err`, modeled times) is identical across ranks; `t_select`
+    /// is the all-gathered max so it is identical too.
+    pub fn run(mut self) -> Result<Vec<IterRecord>> {
+        let n = self.cfg.n_ranks;
+        let n_g = self.gen.n_g();
+        let dense = matches!(self.sp.comm_pattern(), CommPattern::DenseAllReduce);
+        let density = self.sp.target_density();
+        let k_user = ((density * n_g as f64).round() as usize).max(1);
+
+        let mut err = vec![0f32; if dense { 0 } else { n_g }];
+        let mut acc = vec![0f32; n_g];
+        let mut records = Vec::with_capacity(self.cfg.iters);
+        let mut last_global_err = 0.0;
+
+        for t in 0..self.cfg.iters {
+            let lr = self.cfg.lr.lr(t);
+            // --- compute + accumulate (Alg. 1 line 8)
+            if dense {
+                self.gen.grad_into(t, self.rank, &mut acc);
+                for a in acc.iter_mut() {
+                    *a = lr * *a;
+                }
+            } else {
+                self.gen.accumulate_into(t, self.rank, &err, lr, &mut acc);
+            }
+
+            // --- selection (Alg. 1 line 10)
+            let ctx = RoundCtx {
+                t,
+                rank: self.rank,
+                n_ranks: n,
+            };
+            let st = Instant::now();
+            let out = if dense {
+                SelectOutput::default()
+            } else {
+                self.sp.select(&ctx, &acc)?
+            };
+            let my_select = st.elapsed().as_secs_f64();
+
+            // --- aggregation (Alg. 1 lines 11-13) over the transport
+            let (union_idx, k_by_rank, f_ratio, t_comm, k_actual);
+            match self.sp.comm_pattern() {
+                CommPattern::DenseAllReduce => {
+                    union_idx = Vec::new();
+                    k_by_rank = vec![n_g; n];
+                    f_ratio = 1.0;
+                    k_actual = n_g;
+                    t_comm = self.net.allreduce(n_g * CostModel::DENSE_ENTRY_BYTES);
+                }
+                CommPattern::LeaderBroadcast => {
+                    let leader = t % n;
+                    let (idx, k_by, t_bcast) =
+                        broadcast_selection_rk(&self.ep, out, leader, &self.net)?;
+                    // the reduced sum is discarded in the simulated
+                    // trainer, exactly like the lock-step path
+                    let (_vals, t_red) =
+                        sparse_allreduce_union_rk(&self.ep, &acc, &idx, &self.net)?;
+                    k_by_rank = k_by;
+                    k_actual = idx.len();
+                    union_idx = idx;
+                    f_ratio = 1.0; // broadcast has no padding concept
+                    t_comm = t_bcast + t_red;
+                }
+                CommPattern::AllGather => {
+                    let ag = allgather_sparse_rk(&self.ep, out, &self.net)?;
+                    let (_vals, t_red) =
+                        sparse_allreduce_union_rk(&self.ep, &acc, &ag.union_idx, &self.net)?;
+                    k_by_rank = ag.k_by_rank;
+                    k_actual = ag.union_idx.len();
+                    f_ratio = ag.f_ratio;
+                    t_comm = ag.time_s + t_red;
+                    union_idx = ag.union_idx;
+                }
+            }
+
+            // --- error carry (Alg. 1 lines 18-19): zero union coords
+            if !dense {
+                for &i in &union_idx {
+                    acc[i as usize] = 0.0;
+                }
+                std::mem::swap(&mut err, &mut acc);
+            }
+
+            // --- feedback to the replica (Alg. 5 + Alg. 3 input)
+            self.sp.observe(t, &k_by_rank)?;
+
+            // --- diagnostics (same schedule on every rank)
+            if !dense && (t % self.cfg.err_every == 0 || t + 1 == self.cfg.iters) {
+                let norms = self.ep.allgather_f64(l2_norm(&err))?;
+                last_global_err = norms.iter().sum::<f64>() / n as f64;
+            }
+
+            // --- cluster-wide select critical path
+            let sel_times = self.ep.allgather_f64(my_select)?;
+            let t_select = sel_times.iter().fold(0.0f64, |a, &b| a.max(b));
+
+            records.push(IterRecord {
+                t,
+                loss: f64::NAN,
+                k_user,
+                k_actual,
+                k_sum: k_by_rank.iter().sum(),
+                density: k_actual as f64 / n_g as f64,
+                f_ratio,
+                delta: self.sp.delta().unwrap_or(0.0) as f64,
+                global_err: if dense { 0.0 } else { last_global_err },
+                t_compute: self
+                    .net
+                    .straggler
+                    .max_compute(t, self.cfg.compute_s, n),
+                t_select,
+                t_comm,
+            });
+        }
+        Ok(records)
+    }
+}

@@ -6,6 +6,12 @@
 //! payload: every rank must send `m_t = max_i k_i` entries, zero-padding
 //! its own `k_i` up to `m_t` — the overhead ExDyna's dynamic partition
 //! allocation attacks.
+//!
+//! The merge/cost arithmetic ([`merge_selections`]) is pure over the
+//! gathered selections, so the lock-step engine (selections already in
+//! one address space) and the threaded cluster engine (selections arrive
+//! through a [`crate::cluster::Transport`]) produce identical results by
+//! construction.
 
 use super::costmodel::CostModel;
 use crate::coordinator::SelectOutput;
@@ -22,16 +28,19 @@ pub struct AllGatherResult {
     /// Total entries moved on the wire: `n · m_t` (includes padding).
     pub padded_entries: usize,
     /// Traffic-increase ratio `f(t) = n·m_t / Σk_i` of Eq. (5)
-    /// (1.0 = perfectly balanced; NaN when nothing was selected).
+    /// (1.0 = perfectly balanced; NaN when nothing was selected — the
+    /// trace summary skips such rounds, see `Trace::f_ratio_summary`).
     pub f_ratio: f64,
     /// Modeled wall-clock of the payload all-gather (plus the tiny
     /// metadata all-gather), seconds.
     pub time_s: f64,
 }
 
-/// Merge per-rank selections with padded-all-gather semantics and charge
-/// the cost model.
-pub fn allgather_sparse(outs: &[SelectOutput], net: &CostModel) -> AllGatherResult {
+/// Pure merge + α–β accounting over already-gathered selections: the
+/// union/dedup, the padded-traffic ratio f(t) and the modeled wire time.
+/// Both trainer engines call exactly this after the selections have been
+/// moved (trivially, or via a transport).
+pub fn merge_selections(outs: &[SelectOutput], net: &CostModel) -> AllGatherResult {
     let n = outs.len();
     debug_assert_eq!(n, net.topo.n_ranks);
     let k_by_rank: Vec<usize> = outs.iter().map(|o| o.len()).collect();
@@ -62,6 +71,13 @@ pub fn allgather_sparse(outs: &[SelectOutput], net: &CostModel) -> AllGatherResu
         },
         time_s: meta_t + payload_t,
     }
+}
+
+/// Merge per-rank selections with padded-all-gather semantics and charge
+/// the cost model (lock-step convenience wrapper over
+/// [`merge_selections`]).
+pub fn allgather_sparse(outs: &[SelectOutput], net: &CostModel) -> AllGatherResult {
+    merge_selections(outs, net)
 }
 
 /// CLT-k: broadcast the leader's selection to every rank; non-leader

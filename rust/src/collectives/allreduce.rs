@@ -1,5 +1,12 @@
 //! All-reduce: dense ring (non-sparsified baseline) and the sparse
 //! union-indexed reduction of Alg. 1 lines 12–13.
+//!
+//! The reduction arithmetic is split from the data movement so the
+//! lock-step engine (which holds every rank's accumulator in one address
+//! space) and the threaded cluster engine (where contributions arrive
+//! through a [`crate::cluster::Transport`]) share bit-exact code:
+//! [`gather_contribution`] extracts one rank's wire payload and
+//! [`reduce_contributions`] sums payloads in rank order.
 
 use super::costmodel::CostModel;
 
@@ -9,14 +16,33 @@ pub fn dense_allreduce(per_rank: &[Vec<f32>], net: &CostModel) -> (Vec<f32>, f64
     assert!(!per_rank.is_empty());
     let n_g = per_rank[0].len();
     debug_assert!(per_rank.iter().all(|v| v.len() == n_g));
-    let mut sum = vec![0f32; n_g];
-    for v in per_rank {
-        for (s, &x) in sum.iter_mut().zip(v.iter()) {
-            *s += x;
-        }
-    }
+    let sum = reduce_contributions(per_rank);
     let t = net.allreduce(n_g * CostModel::DENSE_ENTRY_BYTES);
     (sum, t)
+}
+
+/// One rank's sparse all-reduce payload: `acc[idx]` for each union index
+/// (Alg. 1 line 12: `g_i = acc_i[idx_t]`). This is exactly what the rank
+/// puts on the wire.
+pub fn gather_contribution(acc: &[f32], union_idx: &[u32]) -> Vec<f32> {
+    union_idx.iter().map(|&i| acc[i as usize]).collect()
+}
+
+/// SUM-reduce equal-length per-rank payloads **in rank order** (the
+/// deterministic reduction order both engines share). Empty input yields
+/// an empty vector.
+pub fn reduce_contributions(per_rank: &[Vec<f32>]) -> Vec<f32> {
+    let Some(first) = per_rank.first() else {
+        return Vec::new();
+    };
+    let mut out = vec![0f32; first.len()];
+    for vals in per_rank {
+        debug_assert_eq!(vals.len(), out.len());
+        for (o, &x) in out.iter_mut().zip(vals.iter()) {
+            *o += x;
+        }
+    }
+    out
 }
 
 /// Sparse all-reduce over the union index set: every rank contributes
@@ -28,12 +54,11 @@ pub fn sparse_allreduce_union(
     union_idx: &[u32],
     net: &CostModel,
 ) -> (Vec<f32>, f64) {
-    let mut out = vec![0f32; union_idx.len()];
-    for acc in accs {
-        for (o, &i) in out.iter_mut().zip(union_idx.iter()) {
-            *o += acc[i as usize];
-        }
-    }
+    let contributions: Vec<Vec<f32>> = accs
+        .iter()
+        .map(|acc| gather_contribution(acc, union_idx))
+        .collect();
+    let out = reduce_contributions(&contributions);
     let t = net.allreduce(union_idx.len() * CostModel::DENSE_ENTRY_BYTES);
     (out, t)
 }
@@ -63,6 +88,20 @@ mod tests {
     }
 
     #[test]
+    fn split_pieces_match_fused_reduce() {
+        let acc0 = vec![0.5, -1.0, 2.0, 0.25];
+        let acc1 = vec![1.5, 3.0, -2.0, 0.75];
+        let idx = vec![0u32, 2, 3];
+        let net = CostModel::paper_testbed(2);
+        let (fused, _) = sparse_allreduce_union(&[&acc0, &acc1], &idx, &net);
+        let parts = vec![
+            gather_contribution(&acc0, &idx),
+            gather_contribution(&acc1, &idx),
+        ];
+        assert_eq!(reduce_contributions(&parts), fused);
+    }
+
+    #[test]
     fn sparse_cheaper_than_dense_at_low_density() {
         let net = CostModel::paper_testbed(8);
         let n_g = 1_000_000;
@@ -78,5 +117,10 @@ mod tests {
         let (vals, t) = sparse_allreduce_union(&[acc0.as_slice()], &[], &net);
         assert!(vals.is_empty());
         assert_eq!(t, 0.0);
+    }
+
+    #[test]
+    fn reduce_of_nothing_is_empty() {
+        assert!(reduce_contributions(&[]).is_empty());
     }
 }

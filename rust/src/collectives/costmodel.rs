@@ -1,4 +1,5 @@
-//! α–β timing model for the collectives.
+//! α–β timing model for the collectives, plus deterministic straggler /
+//! jitter injection for imbalance scenarios.
 //!
 //! Standard algorithm costs (Chan et al., "Collective communication:
 //! theory, practice, and experience"):
@@ -10,25 +11,144 @@
 //! These are *models*, not measurements — the simulator charges them to a
 //! virtual clock so figure shapes (who wins, crossovers) reproduce the
 //! paper's cluster behaviour deterministically on one box.
+//!
+//! [`StragglerCfg`] perturbs the modeled per-rank compute clock: a fixed
+//! slow rank (hardware straggler) and/or multiplicative per-`(rank, t)`
+//! jitter, both derived from a hash so lock-step and threaded engines
+//! charge identical times. This drives the paper's f(t)/imbalance story
+//! without touching measured selection time.
 
 use super::topology::Topology;
+
+/// Deterministic per-rank compute-time perturbation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StragglerCfg {
+    /// Rank permanently slowed; `usize::MAX` = no fixed straggler.
+    pub slow_rank: usize,
+    /// Multiplier applied to the slow rank's compute time (≥ 1).
+    pub slow_factor: f64,
+    /// Jitter amplitude `j`: every rank's compute time is scaled by
+    /// `1 + j·u(rank, t)` with `u ∈ [0, 1)` hash-derived. 0 = off.
+    pub jitter: f64,
+    /// Seed folded into the jitter hash.
+    pub seed: u64,
+}
+
+impl Default for StragglerCfg {
+    fn default() -> Self {
+        StragglerCfg {
+            slow_rank: usize::MAX,
+            slow_factor: 1.0,
+            jitter: 0.0,
+            seed: 0,
+        }
+    }
+}
+
+impl StragglerCfg {
+    /// Is any perturbation configured?
+    pub fn is_active(&self) -> bool {
+        (self.slow_rank != usize::MAX && self.slow_factor != 1.0) || self.jitter > 0.0
+    }
+
+    /// Reject configurations that would silently do nothing: a slow rank
+    /// outside `0..n_ranks`, or a slowdown factor with no rank to apply
+    /// it to.
+    pub fn validate(&self, n_ranks: usize) -> crate::error::Result<()> {
+        if self.slow_rank != usize::MAX && self.slow_rank >= n_ranks {
+            return Err(crate::error::Error::invalid(format!(
+                "straggler rank {} out of range (n_ranks = {n_ranks})",
+                self.slow_rank
+            )));
+        }
+        if self.slow_rank == usize::MAX && self.slow_factor != 1.0 {
+            return Err(crate::error::Error::invalid(format!(
+                "straggler factor {} given but no straggler rank set",
+                self.slow_factor
+            )));
+        }
+        if self.slow_rank != usize::MAX && self.slow_factor < 1.0 {
+            // max_compute takes the max over ranks, so a sub-1 factor on
+            // one rank never changes the critical path — silently inert
+            return Err(crate::error::Error::invalid(format!(
+                "straggler factor must be >= 1 (got {}); a sub-1 factor never \
+                 affects the max-over-ranks critical path",
+                self.slow_factor
+            )));
+        }
+        Ok(())
+    }
+
+    /// Hash-derived uniform in `[0, 1)` for `(rank, t)`.
+    fn unit(&self, rank: usize, t: usize) -> f64 {
+        let mut h = self.seed ^ 0xD6E8_FEB8_6659_FD93;
+        for v in [rank as u64 ^ 0x5851_F42D, t as u64] {
+            h ^= v.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+            h = h.rotate_left(31).wrapping_mul(0xC4CE_B9FE_1A85_EC53);
+        }
+        (h >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Multiplicative slowdown of `rank` at iteration `t` (≥ 1 when the
+    /// config is sane; exactly 1.0 when inactive).
+    pub fn factor(&self, rank: usize, t: usize) -> f64 {
+        let mut f = 1.0;
+        if rank == self.slow_rank {
+            f *= self.slow_factor;
+        }
+        if self.jitter > 0.0 {
+            f *= 1.0 + self.jitter * self.unit(rank, t);
+        }
+        f
+    }
+
+    /// Modeled compute seconds of `rank` at iteration `t` given the
+    /// unperturbed per-iteration time `base`.
+    pub fn compute(&self, rank: usize, t: usize, base: f64) -> f64 {
+        if self.is_active() {
+            base * self.factor(rank, t)
+        } else {
+            base
+        }
+    }
+
+    /// Iteration critical path: `max` over all `n` ranks' compute times —
+    /// what a synchronous data-parallel step waits for.
+    pub fn max_compute(&self, t: usize, base: f64, n: usize) -> f64 {
+        if !self.is_active() {
+            return base;
+        }
+        (0..n).fold(0.0f64, |m, r| m.max(self.compute(r, t, base)))
+    }
+}
 
 /// Timing calculator bound to a topology.
 #[derive(Clone, Copy, Debug)]
 pub struct CostModel {
     /// Cluster shape + link parameters.
     pub topo: Topology,
+    /// Per-rank compute perturbation (default: inactive).
+    pub straggler: StragglerCfg,
 }
 
 impl CostModel {
     /// Model over the given topology.
     pub fn new(topo: Topology) -> Self {
-        CostModel { topo }
+        CostModel {
+            topo,
+            straggler: StragglerCfg::default(),
+        }
     }
 
     /// Paper-like 2×8 V100 cluster.
     pub fn paper_testbed(n_ranks: usize) -> Self {
         CostModel::new(Topology::paper_testbed(n_ranks))
+    }
+
+    /// Attach a straggler/jitter model (builder style).
+    pub fn with_straggler(mut self, s: StragglerCfg) -> Self {
+        self.straggler = s;
+        self
     }
 
     /// Ring all-gather time where each rank contributes `bytes_per_rank`.
@@ -141,5 +261,71 @@ mod tests {
         let union_reduce = m.allreduce(n * k / 2 * CostModel::DENSE_ENTRY_BYTES);
         let dense = m.allreduce(n_g * CostModel::DENSE_ENTRY_BYTES);
         assert!(padded + union_reduce > dense * 0.5, "{} vs {}", padded + union_reduce, dense);
+    }
+
+    #[test]
+    fn inactive_straggler_is_identity() {
+        let s = StragglerCfg::default();
+        assert!(!s.is_active());
+        assert_eq!(s.compute(3, 17, 0.05), 0.05);
+        assert_eq!(s.max_compute(17, 0.05, 16), 0.05);
+    }
+
+    #[test]
+    fn fixed_straggler_sets_critical_path() {
+        let s = StragglerCfg {
+            slow_rank: 2,
+            slow_factor: 3.0,
+            ..Default::default()
+        };
+        assert!(s.is_active());
+        assert_eq!(s.compute(0, 0, 0.1), 0.1);
+        assert!((s.compute(2, 0, 0.1) - 0.3).abs() < 1e-15);
+        assert!((s.max_compute(0, 0.1, 4) - 0.3).abs() < 1e-15);
+    }
+
+    #[test]
+    fn validate_rejects_silent_noops() {
+        let ok = StragglerCfg {
+            slow_rank: 3,
+            slow_factor: 2.0,
+            ..Default::default()
+        };
+        assert!(ok.validate(4).is_ok());
+        assert!(ok.validate(3).is_err(), "rank 3 of 3 is out of range");
+        let orphan_factor = StragglerCfg {
+            slow_factor: 2.0,
+            ..Default::default()
+        };
+        assert!(orphan_factor.validate(4).is_err());
+        let sub_one = StragglerCfg {
+            slow_rank: 1,
+            slow_factor: 0.5,
+            ..Default::default()
+        };
+        assert!(sub_one.validate(4).is_err(), "sub-1 factor is inert");
+        assert!(StragglerCfg::default().validate(1).is_ok());
+    }
+
+    #[test]
+    fn jitter_is_deterministic_bounded_and_rank_varying() {
+        let s = StragglerCfg {
+            jitter: 0.5,
+            seed: 9,
+            ..Default::default()
+        };
+        for r in 0..8 {
+            for t in 0..20 {
+                let f = s.factor(r, t);
+                assert!((1.0..1.5).contains(&f), "factor {f}");
+                assert_eq!(f, s.factor(r, t), "must be deterministic");
+            }
+        }
+        // not all ranks identical at a fixed t
+        let f0 = s.factor(0, 5);
+        assert!((0..8).any(|r| s.factor(r, 5) != f0));
+        // max over ranks is charged
+        let m = s.max_compute(5, 1.0, 8);
+        assert!((0..8).all(|r| s.compute(r, 5, 1.0) <= m));
     }
 }

@@ -1,10 +1,10 @@
 //! In-process collective-communication substrate with an α–β cost model.
 //!
 //! Replaces the paper's NCCL/OpenMPI layer (DESIGN.md §2). The data
-//! movement is executed for real (the simulated ranks exchange actual
-//! index/value vectors, so correctness is bit-exact), while the *time*
-//! each collective would take on a cluster is computed from the classic
-//! α–β (latency–bandwidth) model with ring/tree algorithms — the same
+//! movement is executed for real (ranks exchange actual index/value
+//! vectors, so correctness is bit-exact), while the *time* each
+//! collective would take on a cluster is computed from the classic α–β
+//! (latency–bandwidth) model with ring/tree algorithms — the same
 //! payload arithmetic the paper's Eqs. (2)–(5) are built on:
 //!
 //! * padded all-gather: every rank contributes `m_t = max_i k_i` entries
@@ -12,13 +12,25 @@
 //! * sparse all-reduce over the union index set (Alg. 1 line 13);
 //! * dense ring all-reduce for the non-sparsified baseline;
 //! * leader broadcast for CLT-k.
+//!
+//! Each collective exists in two forms sharing one arithmetic core:
+//! the lock-step form ([`allgather_sparse`], [`sparse_allreduce_union`],
+//! [`broadcast_selection`]) operating on every rank's data at once, and
+//! the per-rank form ([`ranked`]) where each worker contributes its own
+//! message over a [`crate::cluster::Transport`]. [`costmodel`] also
+//! hosts the deterministic straggler/jitter hook
+//! ([`costmodel::StragglerCfg`]) for imbalance scenarios.
 
 pub mod allgather;
 pub mod allreduce;
 pub mod costmodel;
+pub mod ranked;
 pub mod topology;
 
-pub use allgather::{allgather_sparse, broadcast_selection, AllGatherResult};
-pub use allreduce::{dense_allreduce, sparse_allreduce_union};
-pub use costmodel::CostModel;
+pub use allgather::{allgather_sparse, broadcast_selection, merge_selections, AllGatherResult};
+pub use allreduce::{
+    dense_allreduce, gather_contribution, reduce_contributions, sparse_allreduce_union,
+};
+pub use costmodel::{CostModel, StragglerCfg};
+pub use ranked::{allgather_sparse_rk, broadcast_selection_rk, sparse_allreduce_union_rk};
 pub use topology::Topology;

@@ -1,0 +1,113 @@
+//! Per-rank collective operations over a [`Transport`] endpoint.
+//!
+//! These are the worker-side forms of the lock-step collectives: the data
+//! movement goes through the transport (each rank contributes its own
+//! message and receives the rank-indexed board), while the merge and
+//! wire-clock arithmetic is the *same* pure code the lock-step engine
+//! calls ([`merge_selections`], [`broadcast_selection`],
+//! [`gather_contribution`]/[`reduce_contributions`]) — which is what
+//! makes the two engines bit-identical for a fixed seed.
+//!
+//! [Transport]: crate::cluster::Transport
+
+use super::allgather::{broadcast_selection, merge_selections, AllGatherResult};
+use super::allreduce::{gather_contribution, reduce_contributions};
+use super::costmodel::CostModel;
+use crate::cluster::transport::Endpoint;
+use crate::coordinator::SelectOutput;
+use crate::error::Result;
+
+/// Padded sparse all-gather from one rank's perspective: contribute
+/// `mine`, receive the merged union/metadata/cost.
+pub fn allgather_sparse_rk(
+    ep: &Endpoint<'_>,
+    mine: SelectOutput,
+    net: &CostModel,
+) -> Result<AllGatherResult> {
+    let outs = ep.allgather_select(mine)?;
+    Ok(merge_selections(&outs, net))
+}
+
+/// CLT-k leader broadcast from one rank's perspective. Returns the
+/// leader's indices, the per-rank counts, and the modeled broadcast time.
+pub fn broadcast_selection_rk(
+    ep: &Endpoint<'_>,
+    mine: SelectOutput,
+    leader: usize,
+    net: &CostModel,
+) -> Result<(Vec<u32>, Vec<usize>, f64)> {
+    let outs = ep.allgather_select(mine)?;
+    let k_by_rank: Vec<usize> = outs.iter().map(|o| o.len()).collect();
+    let (idx, t) = broadcast_selection(&outs, leader, net);
+    Ok((idx, k_by_rank, t))
+}
+
+/// Sparse all-reduce over the union index set from one rank's
+/// perspective: contribute `acc[union_idx]`, receive the rank-ordered
+/// SUM and the modeled wire time.
+pub fn sparse_allreduce_union_rk(
+    ep: &Endpoint<'_>,
+    acc: &[f32],
+    union_idx: &[u32],
+    net: &CostModel,
+) -> Result<(Vec<f32>, f64)> {
+    let mine = gather_contribution(acc, union_idx);
+    let all = ep.allgather_floats(mine)?;
+    let sum = reduce_contributions(&all);
+    Ok((
+        sum,
+        net.allreduce(union_idx.len() * CostModel::DENSE_ENTRY_BYTES),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::transport::LocalTransport;
+    use crate::collectives::sparse_allreduce_union;
+    use std::sync::Arc;
+
+    #[test]
+    fn ranked_ops_match_lockstep_arithmetic() {
+        let n = 2;
+        let net = CostModel::paper_testbed(n);
+        let accs = [vec![1.0f32, 2.0, 3.0, 4.0], vec![10.0, 20.0, 30.0, 40.0]];
+        let sels = [
+            SelectOutput {
+                idx: vec![1, 3],
+                val: vec![2.0, 4.0],
+            },
+            SelectOutput {
+                idx: vec![0, 1],
+                val: vec![10.0, 20.0],
+            },
+        ];
+        // lock-step reference
+        let ag_ref = merge_selections(&sels, &net);
+        let acc_refs: Vec<&[f32]> = accs.iter().map(|a| a.as_slice()).collect();
+        let (sum_ref, t_ref) = sparse_allreduce_union(&acc_refs, &ag_ref.union_idx, &net);
+
+        // transport path
+        let tp = Arc::new(LocalTransport::new(n));
+        let mut handles = Vec::new();
+        for rank in 0..n {
+            let tp = tp.clone();
+            let acc = accs[rank].clone();
+            let sel = sels[rank].clone();
+            handles.push(std::thread::spawn(move || {
+                let ep = Endpoint::new(rank, tp.as_ref());
+                let net = CostModel::paper_testbed(2);
+                let ag = allgather_sparse_rk(&ep, sel, &net).unwrap();
+                let (sum, t) = sparse_allreduce_union_rk(&ep, &acc, &ag.union_idx, &net).unwrap();
+                (ag, sum, t)
+            }));
+        }
+        for h in handles {
+            let (ag, sum, t) = h.join().unwrap();
+            assert_eq!(ag.union_idx, ag_ref.union_idx);
+            assert_eq!(ag.k_by_rank, ag_ref.k_by_rank);
+            assert_eq!(sum, sum_ref);
+            assert_eq!(t, t_ref);
+        }
+    }
+}

@@ -74,6 +74,7 @@ pub fn preset(name: &str, scale: f64, n_ranks: usize, iters: usize) -> Result<Ex
         seed: 42,
         exact_gen: false,
         err_every: 10,
+        ..Default::default()
     };
     Ok(ExperimentConfig {
         name: name.to_string(),
@@ -99,6 +100,30 @@ pub fn from_toml(doc: &TomlDoc) -> Result<ExperimentConfig> {
     cfg.sim.seed = doc.int_or("experiment", "seed", 42) as u64;
     cfg.sim.rho = doc.float_or("experiment", "rho", 0.5) as f32;
     cfg.sim.compute_s = doc.float_or("experiment", "compute_s", cfg.sim.compute_s);
+    cfg.sim.engine =
+        crate::cluster::EngineKind::parse(&doc.str_or("experiment", "engine", "threaded"))?;
+    // [straggler] — deterministic imbalance injection (rank < 0 = none)
+    let slow_rank = doc.int_or("straggler", "rank", -1);
+    cfg.sim.straggler = crate::collectives::StragglerCfg {
+        slow_rank: if slow_rank < 0 {
+            usize::MAX
+        } else {
+            slow_rank as usize
+        },
+        slow_factor: doc.float_or("straggler", "factor", 1.0),
+        jitter: doc.float_or("straggler", "jitter", 0.0),
+        seed: doc.int_or("straggler", "seed", 0) as u64,
+    };
+    // same defaulting as the CLI: jitter with no explicit seed derives
+    // from the master seed, and a straggler rank with no factor gets a
+    // real slowdown instead of silently no-opping at 1.0
+    if cfg.sim.straggler.jitter > 0.0 && cfg.sim.straggler.seed == 0 {
+        cfg.sim.straggler.seed = cfg.sim.seed;
+    }
+    if cfg.sim.straggler.slow_rank != usize::MAX && cfg.sim.straggler.slow_factor == 1.0 {
+        cfg.sim.straggler.slow_factor = 2.0;
+    }
+    cfg.sim.straggler.validate(cfg.sim.n_ranks)?;
     cfg.exdyna.density = doc.float_or("exdyna", "density", 0.001);
     cfg.exdyna.n_blocks = doc.int_or("exdyna", "n_blocks", cfg.exdyna.n_blocks as i64) as usize;
     cfg.exdyna.alloc.alpha = doc.float_or("exdyna", "alpha", 2.0);
@@ -155,6 +180,33 @@ hard_delta = 0.02
         assert!((c.exdyna.density - 0.005).abs() < 1e-12);
         assert!((c.exdyna.threshold.gamma - 0.04).abs() < 1e-12);
         assert!((c.hard_delta - 0.02).abs() < 1e-7);
+    }
+
+    #[test]
+    fn toml_engine_and_straggler_sections() {
+        let doc = TomlDoc::parse(
+            r#"
+[experiment]
+preset = "resnet18"
+engine = "lockstep"
+[straggler]
+rank = 3
+factor = 2.5
+jitter = 0.1
+"#,
+        )
+        .unwrap();
+        let c = from_toml(&doc).unwrap();
+        assert_eq!(c.sim.engine, crate::cluster::EngineKind::Lockstep);
+        assert_eq!(c.sim.straggler.slow_rank, 3);
+        assert!((c.sim.straggler.slow_factor - 2.5).abs() < 1e-12);
+        assert!((c.sim.straggler.jitter - 0.1).abs() < 1e-12);
+        assert!(c.sim.straggler.is_active());
+        // defaults: threaded engine, inactive straggler
+        let d = TomlDoc::parse("[experiment]\npreset = \"lstm\"\n").unwrap();
+        let c2 = from_toml(&d).unwrap();
+        assert_eq!(c2.sim.engine, crate::cluster::EngineKind::Threaded);
+        assert!(!c2.sim.straggler.is_active());
     }
 
     #[test]

@@ -1,32 +1,65 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled `Display`/`Error` impls — the
+//! offline build carries no `thiserror`).
+
+use crate::runtime::xla;
+use std::fmt;
 
 /// Unified error for the ExDyna crate.
-#[derive(thiserror::Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Errors surfaced by the XLA / PJRT runtime layer.
-    #[error("xla: {0}")]
-    Xla(#[from] xla::Error),
+    Xla(xla::Error),
 
     /// Filesystem / IO errors (artifact loading, metric sinks).
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// Configuration parse/validation errors.
-    #[error("config: {0}")]
     Config(String),
 
     /// Artifact manifest problems (missing model, size mismatch, ...).
-    #[error("manifest: {0}")]
     Manifest(String),
 
     /// Invariant violations in the coordinator (should never fire in
     /// correct builds; surfaced instead of panicking on user input).
-    #[error("invariant: {0}")]
     Invariant(String),
 
     /// Invalid argument combinations from the CLI or public API.
-    #[error("invalid argument: {0}")]
     InvalidArg(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Xla(e) => write!(f, "xla: {e}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Config(m) => write!(f, "config: {m}"),
+            Error::Manifest(m) => write!(f, "manifest: {m}"),
+            Error::Invariant(m) => write!(f, "invariant: {m}"),
+            Error::InvalidArg(m) => write!(f, "invalid argument: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Xla(e) => Some(e),
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Crate-wide result alias.
@@ -46,5 +79,18 @@ impl Error {
     /// Helper for invalid arguments.
     pub fn invalid(msg: impl Into<String>) -> Self {
         Error::InvalidArg(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes_variant() {
+        assert!(Error::config("x").to_string().starts_with("config: "));
+        assert!(Error::invalid("y").to_string().contains("invalid"));
+        let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(io.to_string().contains("gone"));
     }
 }

@@ -4,26 +4,58 @@
 //! Near-Optimal Gradient Sparsification Cost for Scalable Distributed Deep
 //! Learning"* (2024).
 //!
+//! ## Architecture
+//!
 //! The crate is the **Layer-3 coordinator** of a three-layer stack:
 //!
 //! * **L1** — Pallas kernels (`python/compile/kernels/`): partition-wise
 //!   threshold selection, per-block workload stats, fused error feedback.
 //! * **L2** — JAX models (`python/compile/model.py`): transformer LM and
 //!   MLP forward/backward over *flat* parameter vectors.
-//! * **L3** — this crate: the paper's contribution (block-based
-//!   partitioning, dynamic partition allocation, partition-wise exclusive
-//!   selection, online threshold scaling), the baseline sparsifiers it is
-//!   evaluated against, a collective-communication substrate with an α–β
-//!   cost model, a distributed trainer with error feedback, and a PJRT
-//!   runtime that executes the AOT artifacts. Python never runs on the
-//!   training hot path.
+//! * **L3** — this crate, organised around a worker/transport cluster
+//!   engine:
 //!
-//! Entry points: [`training::Trainer`] for simulated multi-rank training,
+//! ```text
+//!   training::{run_sim, RealTrainer}        thin harnesses: launch rank
+//!        │            │                     workers, merge IterRecords
+//!        ▼            ▼
+//!   cluster::SimWorker / rank_step          one OS thread per rank; owns
+//!        │  (EngineKind::Threaded)          sparsifier replica + error
+//!        │   — or the lock-step loop,       buffers (shared-nothing)
+//!        │     kept bit-exact for parity —
+//!        ▼
+//!   cluster::Transport (LocalTransport)     data movement: rank-addressed
+//!        │                                  all-gather rendezvous
+//!        ▼
+//!   collectives::{merge_selections,         pure merge/reduce arithmetic
+//!       reduce_contributions, …}            shared by both engines
+//!        +
+//!   collectives::CostModel (α–β clock,      modeled wire time + the
+//!       StragglerCfg jitter hook)           straggler/imbalance injector
+//!        ▲
+//!   coordinator::{partition, allocation,    the paper's contribution
+//!       selection, threshold, ExDyna}       (Algs. 1–5), replicated
+//!   sparsifiers::*                          per rank (`Sparsifier: Send`)
+//!   runtime::{Engine, ModelRuntime}         PJRT execution of AOT
+//!                                           artifacts (stubbed offline)
+//! ```
+//!
+//! Data movement is executed for real (workers exchange actual
+//! index/value vectors over the transport, so correctness is bit-exact)
+//! while the α–β [`collectives::CostModel`] separately charges what each
+//! collective would cost on the modeled cluster. The engine choice
+//! threads through [`cluster::EngineKind`] → `SimCfg`/`RealTrainerCfg` →
+//! the CLI (`--engine threaded|lockstep`); `rust/tests/engine_parity.rs`
+//! proves the two engines emit identical traces for a fixed seed.
+//!
+//! Entry points: [`training::run_sim`] for simulated multi-rank training,
+//! [`training::RealTrainer`] for end-to-end model training,
 //! [`runtime::Engine`] for executing AOT'd models, `exdyna` (the binary)
 //! for the CLI, and `benches/` for every figure/table of the paper.
 
 pub mod bench;
 pub mod cli;
+pub mod cluster;
 pub mod collectives;
 pub mod config;
 pub mod coordinator;

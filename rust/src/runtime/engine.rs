@@ -4,13 +4,18 @@
 //! keyed by artifact path. [`ModelRuntime`] is the model-level facade the
 //! trainer uses: `init_params`, `fwdbwd`, `sparsify_step`, `sgd_apply` —
 //! all operating on flat `Vec<f32>`s, matching the L2 convention.
+//!
+//! Handles are `Arc`-shared and the cache sits behind a `Mutex`, so one
+//! engine/runtime can be shared across the threaded cluster engine's rank
+//! workers (`Engine: Send + Sync`). PJRT execution itself is re-entrant
+//! on the CPU client; the mutex only guards cache mutation.
 
+use super::xla;
 use crate::error::{Error, Result};
 use crate::runtime::manifest::{Manifest, ModelMeta};
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 /// A compiled HLO executable plus call helpers.
 pub struct Executable {
@@ -30,24 +35,24 @@ impl Executable {
     }
 }
 
-/// PJRT client + executable cache. Engines are cheap to clone (Rc).
+/// PJRT client + executable cache. Engines are cheap to clone (Arc).
 #[derive(Clone)]
 pub struct Engine {
-    inner: Rc<EngineInner>,
+    inner: Arc<EngineInner>,
 }
 
 struct EngineInner {
     client: xla::PjRtClient,
-    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
 }
 
 impl Engine {
     /// Create a CPU PJRT engine.
     pub fn cpu() -> Result<Self> {
         Ok(Engine {
-            inner: Rc::new(EngineInner {
+            inner: Arc::new(EngineInner {
                 client: xla::PjRtClient::cpu()?,
-                cache: RefCell::new(HashMap::new()),
+                cache: Mutex::new(HashMap::new()),
             }),
         })
     }
@@ -58,9 +63,9 @@ impl Engine {
     }
 
     /// Load + compile an HLO-text artifact (cached by path).
-    pub fn load(&self, path: impl AsRef<Path>) -> Result<Rc<Executable>> {
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<Arc<Executable>> {
         let key = path.as_ref().to_string_lossy().to_string();
-        if let Some(e) = self.inner.cache.borrow().get(&key) {
+        if let Some(e) = self.inner.cache.lock().unwrap().get(&key) {
             return Ok(e.clone());
         }
         if !path.as_ref().exists() {
@@ -72,8 +77,8 @@ impl Engine {
         let proto = xla::HloModuleProto::from_text_file(&key)?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self.inner.client.compile(&comp)?;
-        let wrapped = Rc::new(Executable { exe, path: key.clone() });
-        self.inner.cache.borrow_mut().insert(key, wrapped.clone());
+        let wrapped = Arc::new(Executable { exe, path: key.clone() });
+        self.inner.cache.lock().unwrap().insert(key, wrapped.clone());
         Ok(wrapped)
     }
 }
@@ -93,10 +98,10 @@ pub struct ModelRuntime {
     engine: Engine,
     /// Model metadata from the manifest.
     pub meta: ModelMeta,
-    fwdbwd: Rc<Executable>,
-    init: Rc<Executable>,
-    sparsify: Rc<Executable>,
-    sgd: Rc<Executable>,
+    fwdbwd: Arc<Executable>,
+    init: Arc<Executable>,
+    sparsify: Arc<Executable>,
+    sgd: Arc<Executable>,
 }
 
 impl ModelRuntime {

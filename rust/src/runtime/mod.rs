@@ -8,9 +8,23 @@
 //! * [`manifest`] parses `artifacts/manifest.txt` (model metadata).
 //! * [`engine`] wraps `PjRtClient`: compile-once executables with typed
 //!   call helpers and a model-level facade ([`engine::ModelRuntime`]).
+//! * [`xla`] is the in-crate binding layer: a stub in the offline build
+//!   (see its docs for swapping in the real `xla` crate). Probe
+//!   [`pjrt_available`] before requiring a working backend.
+//!
+//! The engine is `Send + Sync` (executable cache behind a mutex) so the
+//! threaded cluster engine can share one runtime across rank workers.
 
 pub mod engine;
 pub mod manifest;
+pub mod xla;
 
 pub use engine::{Engine, Executable, ModelRuntime, SparsifyOut};
 pub use manifest::{Manifest, ModelMeta};
+
+/// Is a working PJRT backend linked into this build? `false` with the
+/// in-crate stub; tests and benches that need real model execution skip
+/// themselves (loudly) when this returns `false`.
+pub fn pjrt_available() -> bool {
+    Engine::cpu().is_ok()
+}

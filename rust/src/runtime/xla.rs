@@ -1,0 +1,162 @@
+//! In-crate stand-in for the `xla` PJRT bindings.
+//!
+//! The offline build ships no `xla_extension`; this module mirrors the
+//! minimal API surface `runtime::engine` consumes so the crate compiles
+//! and tests run everywhere. Every entry point that would need the real
+//! runtime fails fast at [`PjRtClient::cpu`] with a descriptive error;
+//! callers probe availability via [`crate::runtime::pjrt_available`].
+//!
+//! Swapping in the real bindings is a two-line change: add the `xla`
+//! crate to `Cargo.toml` and replace `pub use self-stub` in
+//! `runtime/mod.rs` with `pub use ::xla`. The types and signatures here
+//! match the subset of `xla-rs` 0.5 the engine uses (`Literal::vec1`,
+//! `Literal::scalar`, `reshape`, `to_vec`, `to_tuple`,
+//! `PjRtLoadedExecutable::execute`, `HloModuleProto::from_text_file`).
+
+use std::fmt;
+
+/// Error type of the (stubbed) XLA layer.
+#[derive(Clone, Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable() -> Error {
+    Error(
+        "PJRT backend not built: this binary uses the in-crate xla stub \
+         (see rust/src/runtime/xla.rs for how to link the real bindings)"
+            .to_string(),
+    )
+}
+
+/// Scalar element types the literal wrappers accept.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u32 {}
+impl NativeType for u64 {}
+
+/// Host-side literal (shape-erased in the stub).
+#[derive(Clone, Debug, Default)]
+pub struct Literal;
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(_v: &[T]) -> Literal {
+        Literal
+    }
+
+    /// Rank-0 literal from a scalar.
+    pub fn scalar<T: NativeType>(_v: T) -> Literal {
+        Literal
+    }
+
+    /// Reshape to `dims`.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        Err(unavailable())
+    }
+
+    /// Copy out as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        Err(unavailable())
+    }
+
+    /// Decompose a tuple literal.
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        Err(unavailable())
+    }
+}
+
+/// Device-side buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Synchronously copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable())
+    }
+}
+
+/// Parsed HLO module.
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse an HLO-text artifact.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        Err(unavailable())
+    }
+}
+
+/// Computation wrapper accepted by [`PjRtClient::compile`].
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed proto.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given inputs; returns per-device output buffers.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable())
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Create the CPU client. Always fails in the stub build — callers
+    /// treat this as "backend unavailable" and degrade gracefully.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(unavailable())
+    }
+
+    /// PJRT platform name.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("stub"), "{err}");
+    }
+
+    #[test]
+    fn literal_constructors_are_total() {
+        // constructors must not fail (they run before any execution)
+        let _ = Literal::vec1(&[1.0f32, 2.0]);
+        let _ = Literal::vec1(&[1u32, 2]);
+        let _ = Literal::scalar(3i32);
+        assert!(Literal::vec1(&[0i64]).to_vec::<f32>().is_err());
+    }
+}

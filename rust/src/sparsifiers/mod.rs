@@ -62,7 +62,12 @@ pub struct RoundCtx {
 }
 
 /// A gradient sparsifier replica living on one rank.
-pub trait Sparsifier {
+///
+/// `Send` is required so a replica can move onto its rank's OS thread in
+/// the threaded cluster engine (`cluster::run_threaded`); all state must
+/// be rank-owned (replicated coordination advances from all-gathered
+/// metadata, never shared memory).
+pub trait Sparsifier: Send {
     /// Display name (figures/tables key on it).
     fn name(&self) -> String;
 

@@ -3,9 +3,13 @@
 //! * [`sim`] — the simulated-cluster trainer: synthetic gradients, real
 //!   error-feedback/selection/aggregation dynamics, α–β virtual clock.
 //!   Drives the density / traffic / breakdown figures at paper scale.
+//!   Runs on either engine ([`crate::cluster::EngineKind`]): threaded
+//!   (one OS thread per rank over a transport, the default) or the
+//!   legacy lock-step loop (bit-exact reference).
 //! * [`real`] — the PJRT trainer: actual models (AOT transformer LM /
-//!   MLP) trained end-to-end across simulated ranks, optionally running
-//!   selection through the fused Pallas `sparsify_step` artifact.
+//!   MLP) trained end-to-end across ranks, optionally running selection
+//!   through the fused Pallas `sparsify_step` artifact; same engine
+//!   choice per iteration.
 //! * [`data`] — deterministic synthetic datasets (classification
 //!   clusters, Markov token streams) sharded per rank.
 //! * [`schedule`] — learning-rate schedules.
@@ -17,4 +21,4 @@ pub mod sim;
 
 pub use real::{RealTrainer, RealTrainerCfg, SelectBackend};
 pub use schedule::LrSchedule;
-pub use sim::{run_sim, SimCfg, SparsifierFactory};
+pub use sim::{run_lockstep, run_sim, SimCfg, SparsifierFactory};

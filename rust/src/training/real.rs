@@ -1,16 +1,35 @@
 //! PJRT trainer: real models (AOT transformer LM / MLP), real updates,
-//! simulated multi-rank data parallelism (paper Alg. 1 end-to-end).
+//! multi-rank data parallelism (paper Alg. 1 end-to-end).
 //!
 //! The forward/backward runs through the compiled L2 artifact; selection
 //! runs either on the host hot path ([`SelectBackend::Host`]) or through
 //! the fused L1 Pallas `sparsify_step` artifact ([`SelectBackend::Pjrt`])
 //! — proving the full three-layer composition. Communication time is
 //! charged by the α–β model exactly as in [`crate::training::sim`].
+//!
+//! The trainer is a thin harness over per-rank state ([`RankState`]) and
+//! one shared per-rank step core ([`rank_compute_select`]):
+//!
+//! * **threaded** engine (default): every iteration fans the ranks out
+//!   onto one scoped OS thread each — fwd/bwd, error feedback, selection
+//!   and the transport-based aggregation all run rank-parallel (the
+//!   runtime is `Sync` and shared).
+//! * **lockstep** engine: the same per-rank core runs sequentially and
+//!   the aggregation uses the lock-step collectives — the bit-exact
+//!   reference path.
+//!
+//! Parameters stay replicated: the harness applies the identical
+//! aggregated update once per iteration, so both engines walk the same
+//! trajectory.
 
+use crate::cluster::transport::{Endpoint, LocalTransport, Transport};
+use crate::cluster::EngineKind;
 use crate::collectives::{
-    allgather_sparse, broadcast_selection, sparse_allreduce_union, CostModel,
+    allgather_sparse_rk, broadcast_selection, broadcast_selection_rk, merge_selections,
+    reduce_contributions, sparse_allreduce_union, sparse_allreduce_union_rk, CostModel,
 };
 use crate::coordinator::selection::compact_masked;
+use crate::coordinator::SelectOutput;
 use crate::error::{Error, Result};
 use crate::grad::flat::{accumulate_into, apply_sparse_update};
 use crate::metrics::{IterRecord, Trace};
@@ -34,7 +53,7 @@ pub enum SelectBackend {
 /// Real-trainer configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct RealTrainerCfg {
-    /// Number of simulated ranks.
+    /// Number of ranks.
     pub n_ranks: usize,
     /// Training iterations.
     pub iters: usize,
@@ -46,6 +65,8 @@ pub struct RealTrainerCfg {
     pub backend: SelectBackend,
     /// Evaluate held-out loss every `eval_every` iterations (0 = never).
     pub eval_every: usize,
+    /// Which engine executes the ranks each iteration.
+    pub engine: EngineKind,
 }
 
 impl Default for RealTrainerCfg {
@@ -57,6 +78,7 @@ impl Default for RealTrainerCfg {
             seed: 7,
             backend: SelectBackend::Host,
             eval_every: 0,
+            engine: EngineKind::default(),
         }
     }
 }
@@ -77,16 +99,238 @@ enum Workload {
     Lm(MarkovText),
 }
 
+/// Everything one rank owns: its sparsifier replica and its error
+/// accumulator (padded length).
+struct RankState {
+    sparsifier: Box<dyn Sparsifier>,
+    err: Vec<f32>,
+}
+
+/// Output of the shared per-rank compute/select core.
+struct ComputeSelect {
+    loss: f64,
+    t_compute: f64,
+    t_select: f64,
+    /// Accumulator `e + lr·G` (padded length; PJRT backend may have
+    /// already zeroed its own hits — see `rank_compute_select`).
+    acc: Vec<f32>,
+    /// This rank's selection.
+    out: SelectOutput,
+}
+
+/// Aggregation outcome of one iteration — identical on every rank; the
+/// harness takes rank 0's copy for the parameter update and the record.
+struct AggOut {
+    union_idx: Vec<u32>,
+    g_vals: Vec<f32>,
+    k_by_rank: Vec<usize>,
+    f_ratio: f64,
+    t_comm: f64,
+}
+
+/// What one rank's threaded step hands back to the harness for merging:
+/// this rank's own scalars plus the (replicated) aggregate.
+struct RankStepOut {
+    loss: f64,
+    t_compute: f64,
+    t_select: f64,
+    agg: AggOut,
+}
+
+fn fwdbwd(
+    rt: &ModelRuntime,
+    workload: &Workload,
+    params: &[f32],
+    seed: u64,
+    rank: usize,
+    t: usize,
+) -> Result<(f32, Vec<f32>)> {
+    match workload {
+        Workload::Mlp(d) => {
+            let (x, y) = d.batch(rt.meta.batch, rank, t, seed);
+            rt.fwdbwd_mlp(params, &x, &y)
+        }
+        Workload::Lm(m) => {
+            let toks = m.batch(rt.meta.batch, rt.meta.seq_len + 1, rank, t, seed);
+            rt.fwdbwd_lm(params, &toks)
+        }
+    }
+}
+
+/// One rank's fwd/bwd + error feedback + selection — the engine-agnostic
+/// core. All mutation is rank-local (`state`); shared inputs are read-only.
+fn rank_compute_select(
+    rank: usize,
+    t: usize,
+    state: &mut RankState,
+    rt: &ModelRuntime,
+    workload: &Workload,
+    params: &[f32],
+    cfg: &RealTrainerCfg,
+) -> Result<ComputeSelect> {
+    let n = cfg.n_ranks;
+    let n_params = rt.meta.n_params;
+    let n_padded = rt.meta.n_padded;
+    let lr = cfg.lr.lr(t);
+    let dense = matches!(
+        state.sparsifier.comm_pattern(),
+        CommPattern::DenseAllReduce
+    );
+
+    let st = Instant::now();
+    let (loss, mut grad) = fwdbwd(rt, workload, params, cfg.seed, rank, t)?;
+    let t_compute = st.elapsed().as_secs_f64();
+    grad.resize(n_padded, 0.0);
+
+    let ctx = RoundCtx {
+        t,
+        rank,
+        n_ranks: n,
+    };
+    let mut acc = vec![0f32; n_padded];
+    accumulate_into(&mut acc, &state.err, &grad, lr);
+    let st = Instant::now();
+    let out = if dense {
+        SelectOutput {
+            idx: (0..n_params as u32).collect(),
+            val: acc[..n_params].to_vec(),
+        }
+    } else if cfg.backend == SelectBackend::Pjrt {
+        let plan = state
+            .sparsifier
+            .plan(&ctx, &acc[..n_params])?
+            .ok_or_else(|| {
+                Error::invalid(format!(
+                    "sparsifier '{}' has no window plan; PJRT backend needs one",
+                    state.sparsifier.name()
+                ))
+            })?;
+        let sp = rt.sparsify_step(&state.err, &grad, lr, plan.start, plan.end, plan.delta)?;
+        // carry the kernel-produced accumulator (own hits zeroed)
+        acc = sp.new_err;
+        let mut out = compact_masked(&sp.selected, plan.start, plan.end);
+        debug_assert_eq!(out.len(), sp.count);
+        // values in `selected` are acc*mask — identical to acc at the hit
+        // coordinates, so out.val is already correct.
+        out.idx.shrink_to_fit();
+        out
+    } else {
+        state.sparsifier.select(&ctx, &acc[..n_params])?
+    };
+    let t_select = st.elapsed().as_secs_f64();
+    Ok(ComputeSelect {
+        loss: loss as f64,
+        t_compute,
+        t_select,
+        acc,
+        out,
+    })
+}
+
+/// Zero the union coordinates and swap the accumulator into the carried
+/// error (Alg. 1 lines 18–19), then feed the metadata back to the
+/// replica.
+fn rank_carry_and_observe(
+    state: &mut RankState,
+    mut acc: Vec<f32>,
+    union_idx: &[u32],
+    k_by_rank: &[usize],
+    t: usize,
+    dense: bool,
+) -> Result<()> {
+    if !dense {
+        for &i in union_idx {
+            acc[i as usize] = 0.0;
+        }
+        std::mem::swap(&mut state.err, &mut acc);
+    }
+    state.sparsifier.observe(t, k_by_rank)
+}
+
+/// One rank's full threaded iteration: the compute/select core plus the
+/// collective aggregation over the transport endpoint.
+#[allow(clippy::too_many_arguments)]
+fn rank_step_threaded(
+    rank: usize,
+    t: usize,
+    state: &mut RankState,
+    rt: &ModelRuntime,
+    workload: &Workload,
+    params: &[f32],
+    net: &CostModel,
+    cfg: &RealTrainerCfg,
+    ep: &Endpoint<'_>,
+) -> Result<RankStepOut> {
+    let n = cfg.n_ranks;
+    let n_params = rt.meta.n_params;
+    let dense = matches!(
+        state.sparsifier.comm_pattern(),
+        CommPattern::DenseAllReduce
+    );
+    let ComputeSelect {
+        loss,
+        t_compute,
+        t_select,
+        acc,
+        out,
+    } = rank_compute_select(rank, t, state, rt, workload, params, cfg)?;
+
+    let (union_idx, k_by_rank, f_ratio, t_comm, g_vals);
+    match state.sparsifier.comm_pattern() {
+        CommPattern::DenseAllReduce => {
+            let contributions = ep.allgather_floats(acc[..n_params].to_vec())?;
+            g_vals = reduce_contributions(&contributions);
+            union_idx = (0..n_params as u32).collect();
+            k_by_rank = vec![n_params; n];
+            f_ratio = 1.0;
+            // dense all-reduce wire cost, not the sparse one
+            t_comm = net.allreduce(n_params * CostModel::DENSE_ENTRY_BYTES);
+        }
+        CommPattern::LeaderBroadcast => {
+            let leader = t % n;
+            let (idx, k_by, t_b) = broadcast_selection_rk(ep, out, leader, net)?;
+            let (vals, t_r) = sparse_allreduce_union_rk(ep, &acc[..n_params], &idx, net)?;
+            g_vals = vals;
+            k_by_rank = k_by;
+            union_idx = idx;
+            f_ratio = 1.0;
+            t_comm = t_b + t_r;
+        }
+        CommPattern::AllGather => {
+            let ag = allgather_sparse_rk(ep, out, net)?;
+            let (vals, t_r) = sparse_allreduce_union_rk(ep, &acc[..n_params], &ag.union_idx, net)?;
+            g_vals = vals;
+            k_by_rank = ag.k_by_rank;
+            f_ratio = ag.f_ratio;
+            t_comm = ag.time_s + t_r;
+            union_idx = ag.union_idx;
+        }
+    }
+
+    rank_carry_and_observe(state, acc, &union_idx, &k_by_rank, t, dense)?;
+
+    Ok(RankStepOut {
+        loss,
+        t_compute,
+        t_select,
+        agg: AggOut {
+            union_idx,
+            g_vals,
+            k_by_rank,
+            f_ratio,
+            t_comm,
+        },
+    })
+}
+
 /// Distributed trainer over a PJRT model.
 pub struct RealTrainer {
     rt: ModelRuntime,
     cfg: RealTrainerCfg,
     net: CostModel,
-    sparsifiers: Vec<Box<dyn Sparsifier>>,
+    ranks: Vec<RankState>,
     /// Replicated flat parameters.
     pub params: Vec<f32>,
-    /// Per-rank error accumulators (padded length).
-    err: Vec<Vec<f32>>,
     workload: Workload,
     /// Trace of the run.
     pub trace: Trace,
@@ -104,8 +348,13 @@ impl RealTrainer {
     ) -> Result<Self> {
         let n_params = rt.meta.n_params;
         let n_padded = rt.meta.n_padded;
-        let sparsifiers: Vec<Box<dyn Sparsifier>> = (0..cfg.n_ranks)
-            .map(|_| make(n_params, cfg.n_ranks))
+        let ranks: Vec<RankState> = (0..cfg.n_ranks)
+            .map(|_| -> Result<RankState> {
+                Ok(RankState {
+                    sparsifier: make(n_params, cfg.n_ranks)?,
+                    err: vec![0f32; n_padded],
+                })
+            })
             .collect::<Result<_>>()?;
         let workload = match rt.meta.kind.as_str() {
             "mlp" => Workload::Mlp(ClusterData::new(
@@ -118,12 +367,11 @@ impl RealTrainer {
             other => return Err(Error::invalid(format!("unknown model kind '{other}'"))),
         };
         let params = rt.init_params(cfg.seed)?;
-        let name = sparsifiers[0].name();
+        let name = ranks[0].sparsifier.name();
         Ok(RealTrainer {
             net: CostModel::paper_testbed(cfg.n_ranks),
             trace: Trace::new(&name, &rt.meta.name.clone(), cfg.n_ranks),
-            err: vec![vec![0f32; n_padded]; cfg.n_ranks],
-            sparsifiers,
+            ranks,
             params,
             workload,
             rt,
@@ -133,180 +381,197 @@ impl RealTrainer {
         })
     }
 
-    fn fwdbwd(&self, rank: usize, t: usize) -> Result<(f32, Vec<f32>)> {
-        match &self.workload {
-            Workload::Mlp(d) => {
-                let (x, y) = d.batch(self.rt.meta.batch, rank, t, self.cfg.seed);
-                self.rt.fwdbwd_mlp(&self.params, &x, &y)
-            }
-            Workload::Lm(m) => {
-                let toks = m.batch(
-                    self.rt.meta.batch,
-                    self.rt.meta.seq_len + 1,
-                    rank,
-                    t,
-                    self.cfg.seed,
-                );
-                self.rt.fwdbwd_lm(&self.params, &toks)
-            }
-        }
-    }
-
     /// Held-out loss (fixed pseudo-batch never used in training).
     pub fn eval_loss(&self) -> Result<f64> {
-        let (loss, _) = self.fwdbwd(usize::MAX - 1, usize::MAX - 1)?;
+        let (loss, _) = fwdbwd(
+            &self.rt,
+            &self.workload,
+            &self.params,
+            self.cfg.seed,
+            usize::MAX - 1,
+            usize::MAX - 1,
+        )?;
         Ok(loss as f64)
+    }
+
+    /// One sequential (lock-step) iteration: per-rank core for every
+    /// rank, then the lock-step collectives, then carry/observe. Returns
+    /// `(summed losses, max t_compute, max t_select, aggregate)`.
+    fn step_lockstep(&mut self, t: usize) -> Result<(f64, f64, f64, AggOut)> {
+        let n = self.cfg.n_ranks;
+        let n_params = self.rt.meta.n_params;
+        let dense = matches!(
+            self.ranks[0].sparsifier.comm_pattern(),
+            CommPattern::DenseAllReduce
+        );
+
+        let mut cores: Vec<ComputeSelect> = Vec::with_capacity(n);
+        for (rank, state) in self.ranks.iter_mut().enumerate() {
+            cores.push(rank_compute_select(
+                rank,
+                t,
+                state,
+                &self.rt,
+                &self.workload,
+                &self.params,
+                &self.cfg,
+            )?);
+        }
+        let losses: f64 = cores.iter().map(|c| c.loss).sum();
+        let t_compute = cores.iter().fold(0.0f64, |a, c| a.max(c.t_compute));
+        let t_select = cores.iter().fold(0.0f64, |a, c| a.max(c.t_select));
+
+        let (union_idx, k_by_rank, f_ratio, t_comm, g_vals);
+        {
+            // take the selections out by value — no per-iteration clones
+            let outs: Vec<SelectOutput> = cores
+                .iter_mut()
+                .map(|c| std::mem::take(&mut c.out))
+                .collect();
+            let accs: Vec<&[f32]> = cores.iter().map(|c| &c.acc[..n_params]).collect();
+            match self.ranks[0].sparsifier.comm_pattern() {
+                CommPattern::DenseAllReduce => {
+                    let idx: Vec<u32> = (0..n_params as u32).collect();
+                    let (vals, _) = sparse_allreduce_union(&accs, &idx, &self.net);
+                    g_vals = vals;
+                    union_idx = idx;
+                    k_by_rank = vec![n_params; n];
+                    f_ratio = 1.0;
+                    t_comm = self.net.allreduce(n_params * CostModel::DENSE_ENTRY_BYTES);
+                }
+                CommPattern::LeaderBroadcast => {
+                    let leader = t % n;
+                    let (idx, t_b) = broadcast_selection(&outs, leader, &self.net);
+                    let (vals, t_r) = sparse_allreduce_union(&accs, &idx, &self.net);
+                    g_vals = vals;
+                    k_by_rank = outs.iter().map(|o| o.len()).collect();
+                    union_idx = idx;
+                    f_ratio = 1.0;
+                    t_comm = t_b + t_r;
+                }
+                CommPattern::AllGather => {
+                    let ag = merge_selections(&outs, &self.net);
+                    let (vals, t_r) = sparse_allreduce_union(&accs, &ag.union_idx, &self.net);
+                    g_vals = vals;
+                    k_by_rank = ag.k_by_rank;
+                    f_ratio = ag.f_ratio;
+                    t_comm = ag.time_s + t_r;
+                    union_idx = ag.union_idx;
+                }
+            }
+        }
+
+        for (state, core) in self.ranks.iter_mut().zip(cores.into_iter()) {
+            rank_carry_and_observe(state, core.acc, &union_idx, &k_by_rank, t, dense)?;
+        }
+
+        Ok((
+            losses,
+            t_compute,
+            t_select,
+            AggOut {
+                union_idx,
+                g_vals,
+                k_by_rank,
+                f_ratio,
+                t_comm,
+            },
+        ))
+    }
+
+    /// One threaded iteration: fan every rank onto its own scoped thread
+    /// over a fresh transport. (Spawning per step is deliberate for now:
+    /// `step()` is the public granularity and the fwd/bwd dominates the
+    /// spawn cost for real models; persistent run-length workers like
+    /// `cluster::run_threaded`'s are an open item for the hot path.)
+    fn step_threaded(&mut self, t: usize) -> Result<(f64, f64, f64, AggOut)> {
+        let n = self.cfg.n_ranks;
+        let transport = LocalTransport::new(n);
+        let rt = &self.rt;
+        let workload = &self.workload;
+        let net = &self.net;
+        let cfg = &self.cfg;
+        let params_ro: &[f32] = &self.params;
+
+        let results: Vec<Result<RankStepOut>> = std::thread::scope(|scope| {
+            let transport = &transport;
+            let mut handles = Vec::with_capacity(n);
+            for (rank, state) in self.ranks.iter_mut().enumerate() {
+                handles.push(scope.spawn(move || {
+                    let ep = Endpoint::new(rank, transport as &dyn Transport);
+                    let out = rank_step_threaded(
+                        rank, t, state, rt, workload, params_ro, net, cfg, &ep,
+                    );
+                    if out.is_err() {
+                        transport.abort();
+                    }
+                    out
+                }));
+            }
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join()
+                        .unwrap_or_else(|_| Err(Error::invariant("rank worker panicked")))
+                })
+                .collect()
+        });
+        let mut per_rank = Vec::with_capacity(n);
+        let mut errors = Vec::new();
+        for r in results {
+            match r {
+                Ok(v) => per_rank.push(v),
+                Err(e) => errors.push(e),
+            }
+        }
+        if !errors.is_empty() {
+            return Err(crate::cluster::engine::pick_root_cause(errors));
+        }
+        let losses: f64 = per_rank.iter().map(|o| o.loss).sum();
+        let t_compute = per_rank.iter().fold(0.0f64, |a, o| a.max(o.t_compute));
+        let t_select = per_rank.iter().fold(0.0f64, |a, o| a.max(o.t_select));
+        // every rank computed the identical aggregate; keep rank 0's
+        let first = per_rank.swap_remove(0);
+        Ok((losses, t_compute, t_select, first.agg))
     }
 
     /// Run one training iteration; returns the record pushed to the trace.
     pub fn step(&mut self, t: usize) -> Result<IterRecord> {
         let n = self.cfg.n_ranks;
         let n_params = self.rt.meta.n_params;
-        let n_padded = self.rt.meta.n_padded;
-        let lr = self.cfg.lr.lr(t);
-        let dense = matches!(
-            self.sparsifiers[0].comm_pattern(),
-            CommPattern::DenseAllReduce
-        );
-
-        // --- fwd/bwd per rank (parallel on a cluster => charge max)
-        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(n);
-        let mut losses = 0f64;
-        let mut t_compute = 0f64;
-        for r in 0..n {
-            let st = Instant::now();
-            let (loss, mut g) = self.fwdbwd(r, t)?;
-            t_compute = t_compute.max(st.elapsed().as_secs_f64());
-            losses += loss as f64;
-            g.resize(n_padded, 0.0);
-            grads.push(g);
-        }
-
-        // --- accumulate + select per rank
-        let mut accs: Vec<Vec<f32>> = Vec::with_capacity(n);
-        let mut outs = Vec::with_capacity(n);
-        let mut t_select = 0f64;
-        for r in 0..n {
-            let ctx = RoundCtx {
-                t,
-                rank: r,
-                n_ranks: n,
-            };
-            let mut acc = vec![0f32; n_padded];
-            accumulate_into(&mut acc, &self.err[r], &grads[r], lr);
-            let st = Instant::now();
-            let out = if dense {
-                crate::coordinator::SelectOutput {
-                    idx: (0..n_params as u32).collect(),
-                    val: acc[..n_params].to_vec(),
-                }
-            } else if self.cfg.backend == SelectBackend::Pjrt {
-                let plan = self.sparsifiers[r]
-                    .plan(&ctx, &acc[..n_params])?
-                    .ok_or_else(|| {
-                        Error::invalid(format!(
-                            "sparsifier '{}' has no window plan; PJRT backend needs one",
-                            self.sparsifiers[r].name()
-                        ))
-                    })?;
-                let sp = self.rt.sparsify_step(
-                    &self.err[r],
-                    &grads[r],
-                    lr,
-                    plan.start,
-                    plan.end,
-                    plan.delta,
-                )?;
-                // carry the kernel-produced accumulator (own hits zeroed)
-                acc = sp.new_err;
-                let mut out = compact_masked(&sp.selected, plan.start, plan.end);
-                debug_assert_eq!(out.len(), sp.count);
-                // values in `selected` are acc*mask — identical to acc at
-                // the hit coordinates, so out.val is already correct.
-                out.idx.shrink_to_fit();
-                out
-            } else {
-                self.sparsifiers[r].select(&ctx, &acc[..n_params])?
-            };
-            t_select = t_select.max(st.elapsed().as_secs_f64());
-            accs.push(acc);
-            outs.push(out);
-        }
-
-        // --- aggregate
-        let (union_idx, k_by_rank, f_ratio, t_comm, g_vals);
-        match self.sparsifiers[0].comm_pattern() {
-            CommPattern::DenseAllReduce => {
-                let slices: Vec<&[f32]> = accs.iter().map(|a| &a[..n_params]).collect();
-                let idx: Vec<u32> = (0..n_params as u32).collect();
-                let (vals, tr) = sparse_allreduce_union(&slices, &idx, &self.net);
-                // dense all-reduce wire cost, not the sparse one
-                let t_dense = self.net.allreduce(n_params * CostModel::DENSE_ENTRY_BYTES);
-                g_vals = vals;
-                union_idx = idx;
-                k_by_rank = vec![n_params; n];
-                f_ratio = 1.0;
-                t_comm = t_dense;
-                let _ = tr;
-            }
-            CommPattern::LeaderBroadcast => {
-                let leader = t % n;
-                let (idx, t_b) = broadcast_selection(&outs, leader, &self.net);
-                let slices: Vec<&[f32]> = accs.iter().map(|a| &a[..n_params]).collect();
-                let (vals, t_r) = sparse_allreduce_union(&slices, &idx, &self.net);
-                g_vals = vals;
-                k_by_rank = outs.iter().map(|o| o.len()).collect();
-                union_idx = idx;
-                f_ratio = 1.0;
-                t_comm = t_b + t_r;
-            }
-            CommPattern::AllGather => {
-                let ag = allgather_sparse(&outs, &self.net);
-                let slices: Vec<&[f32]> = accs.iter().map(|a| &a[..n_params]).collect();
-                let (vals, t_r) = sparse_allreduce_union(&slices, &ag.union_idx, &self.net);
-                g_vals = vals;
-                k_by_rank = ag.k_by_rank.clone();
-                f_ratio = ag.f_ratio;
-                t_comm = ag.time_s + t_r;
-                union_idx = ag.union_idx;
-            }
-        }
+        let (losses, t_compute, t_select, agg) = match self.cfg.engine {
+            EngineKind::Lockstep => self.step_lockstep(t)?,
+            EngineKind::Threaded => self.step_threaded(t)?,
+        };
 
         // --- model update x -= (1/n) g_t (lr already folded in acc)
-        apply_sparse_update(&mut self.params, &union_idx, &g_vals, 1.0 / n as f32);
+        apply_sparse_update(&mut self.params, &agg.union_idx, &agg.g_vals, 1.0 / n as f32);
 
-        // --- error carry: zero union coords everywhere, keep the rest
-        if !dense {
-            for r in 0..n {
-                for &i in &union_idx {
-                    accs[r][i as usize] = 0.0;
-                }
-                std::mem::swap(&mut self.err[r], &mut accs[r]);
-            }
-        }
-
-        // --- replica feedback
-        for sp in self.sparsifiers.iter_mut() {
-            sp.observe(t, &k_by_rank)?;
-        }
-
-        let global_err =
-            self.err.iter().map(|e| l2_norm(e)).sum::<f64>() / n as f64;
-        let k_actual = union_idx.len();
+        let dense = matches!(
+            self.ranks[0].sparsifier.comm_pattern(),
+            CommPattern::DenseAllReduce
+        );
+        let global_err = if dense {
+            0.0
+        } else {
+            self.ranks.iter().map(|r| l2_norm(&r.err)).sum::<f64>() / n as f64
+        };
+        let k_actual = agg.union_idx.len();
         let rec = IterRecord {
             t,
             loss: losses / n as f64,
-            k_user: ((self.sparsifiers[0].target_density() * n_params as f64).round() as usize)
+            k_user: ((self.ranks[0].sparsifier.target_density() * n_params as f64).round()
+                as usize)
                 .max(1),
             k_actual,
-            k_sum: k_by_rank.iter().sum(),
+            k_sum: agg.k_by_rank.iter().sum(),
             density: k_actual as f64 / n_params as f64,
-            f_ratio,
-            delta: self.sparsifiers[0].delta().unwrap_or(0.0) as f64,
+            f_ratio: agg.f_ratio,
+            delta: self.ranks[0].sparsifier.delta().unwrap_or(0.0) as f64,
             global_err,
             t_compute,
             t_select,
-            t_comm,
+            t_comm: agg.t_comm,
         };
         self.sim_clock += rec.t_total();
         self.trace.push(rec.clone());

@@ -4,18 +4,29 @@
 //! exclusive/overlapping selection, padded all-gather, union-indexed
 //! sparse all-reduce, accumulator zeroing — while the forward/backward
 //! compute and the wire time come from models (`compute_s` per iteration
-//! and the α–β clock), which is what lets one core reproduce 16-GPU
-//! figure shapes deterministically.
+//! and the α–β clock).
+//!
+//! Two engines execute the ranks ([`crate::cluster::EngineKind`]):
+//! * **threaded** (default) — one OS thread per rank, shared-nothing
+//!   workers over a [`crate::cluster::Transport`]
+//!   ([`crate::cluster::run_threaded`]); scale-out runs use the host's
+//!   cores and `t_select` is measured under genuine concurrency.
+//! * **lockstep** — the legacy single-thread loop ([`run_lockstep`]),
+//!   kept for bit-exact comparison; `rust/tests/engine_parity.rs` proves
+//!   both engines emit identical traces for a fixed seed.
 //!
 //! Timing semantics (per iteration, ranks run in parallel on a cluster):
-//! * `t_compute` = configured fwd/bwd time (max over ranks = same value);
+//! * `t_compute` = modeled fwd/bwd time, max over ranks under the
+//!   deterministic straggler/jitter model
+//!   ([`crate::collectives::StragglerCfg`]);
 //! * `t_select`  = **max** over ranks' measured selection wall time
 //!   (CLT-k's idle ranks naturally contribute ~0, leaving the leader's
 //!   top-k as the critical path — the paper's "worker idling");
 //! * `t_comm`    = modeled all-gather + all-reduce (+ broadcast) time.
 
+use crate::cluster::EngineKind;
 use crate::collectives::{
-    allgather_sparse, broadcast_selection, sparse_allreduce_union, CostModel,
+    allgather_sparse, broadcast_selection, sparse_allreduce_union, CostModel, StragglerCfg,
 };
 use crate::error::Result;
 use crate::grad::synth::SynthGen;
@@ -48,6 +59,10 @@ pub struct SimCfg {
     /// Compute the global error every `err_every` iterations (it is an
     /// O(n·n_g) diagnostic, not part of the algorithm).
     pub err_every: usize,
+    /// Which engine executes the ranks.
+    pub engine: EngineKind,
+    /// Deterministic per-rank compute perturbation (straggler/jitter).
+    pub straggler: StragglerCfg,
 }
 
 impl Default for SimCfg {
@@ -61,19 +76,36 @@ impl Default for SimCfg {
             seed: 42,
             exact_gen: false,
             err_every: 10,
+            engine: EngineKind::default(),
+            straggler: StragglerCfg::default(),
         }
     }
 }
 
-/// Run Alg. 1 over a synthetic workload; returns the full trace.
+/// Run Alg. 1 over a synthetic workload with the engine selected by
+/// `cfg.engine`; returns the full trace.
 pub fn run_sim(
+    gen: &SynthGen,
+    make_sparsifier: &SparsifierFactory,
+    cfg: &SimCfg,
+) -> Result<Trace> {
+    match cfg.engine {
+        EngineKind::Threaded => crate::cluster::run_threaded(gen, make_sparsifier, cfg),
+        EngineKind::Lockstep => run_lockstep(gen, make_sparsifier, cfg),
+    }
+}
+
+/// The legacy lock-step engine: all ranks advanced sequentially on the
+/// calling thread. Kept as the bit-exact reference for
+/// [`crate::cluster::run_threaded`].
+pub fn run_lockstep(
     gen: &SynthGen,
     make_sparsifier: &SparsifierFactory,
     cfg: &SimCfg,
 ) -> Result<Trace> {
     let n = cfg.n_ranks;
     let n_g = gen.n_g();
-    let net = CostModel::paper_testbed(n);
+    let net = CostModel::paper_testbed(n).with_straggler(cfg.straggler);
     let mut sparsifiers: Vec<Box<dyn Sparsifier>> =
         (0..n).map(|_| make_sparsifier(n_g, n)).collect::<Result<_>>()?;
     let name = sparsifiers[0].name();
@@ -180,7 +212,7 @@ pub fn run_sim(
             f_ratio,
             delta: sparsifiers[0].delta().unwrap_or(0.0) as f64,
             global_err: if dense { 0.0 } else { last_global_err },
-            t_compute: cfg.compute_s,
+            t_compute: net.straggler.max_compute(t, cfg.compute_s, n),
             t_select: t_select_max,
             t_comm,
         });
@@ -288,6 +320,31 @@ mod tests {
         for (a, b) in t1.records.iter().zip(t2.records.iter()) {
             assert_eq!(a.k_actual, b.k_actual);
             assert_eq!(a.delta, b.delta);
+        }
+    }
+
+    #[test]
+    fn straggler_charges_iteration_critical_path() {
+        let n = 4;
+        let gen = small_gen(n);
+        let mut c = cfg(n, 6);
+        c.straggler = StragglerCfg {
+            slow_rank: 1,
+            slow_factor: 4.0,
+            ..Default::default()
+        };
+        let trace = run_sim(
+            &gen,
+            &|n_g, nr| Ok(Box::new(ExDyna::new(n_g, nr, ExDynaCfg::default_for(nr))?)),
+            &c,
+        )
+        .unwrap();
+        for r in &trace.records {
+            assert!(
+                (r.t_compute - 4.0 * c.compute_s).abs() < 1e-12,
+                "straggler must set t_compute: {}",
+                r.t_compute
+            );
         }
     }
 }

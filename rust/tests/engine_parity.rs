@@ -1,0 +1,180 @@
+//! Engine parity: the threaded worker/transport cluster engine and the
+//! legacy lock-step engine must produce identical traces for a fixed
+//! seed — while the threaded engine really runs one OS thread per rank.
+//!
+//! Also pins the empty-round regression: rounds where nothing is
+//! selected carry `f_ratio = NaN` and must not poison
+//! `Trace::f_ratio_summary`.
+
+use exdyna::cluster::{run_threaded_with_stats, EngineKind};
+use exdyna::collectives::StragglerCfg;
+use exdyna::coordinator::ExDynaCfg;
+use exdyna::grad::synth::{DecayCfg, SynthGen, SynthModel};
+use exdyna::metrics::Trace;
+use exdyna::sparsifiers::make_sparsifier_factory;
+use exdyna::training::sim::{run_sim, SimCfg};
+
+fn small_gen(n_ranks: usize) -> SynthGen {
+    let model = SynthModel::profile("parity", 64_000, 8, 5, DecayCfg::default());
+    SynthGen::new(model, n_ranks, 0.5, 17, false)
+}
+
+fn cfg(n: usize, iters: usize, engine: EngineKind) -> SimCfg {
+    SimCfg {
+        n_ranks: n,
+        iters,
+        compute_s: 0.01,
+        engine,
+        ..Default::default()
+    }
+}
+
+/// Bitwise f64 equality that treats NaN == NaN (empty rounds).
+fn f64_eq(a: f64, b: f64) -> bool {
+    a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan())
+}
+
+fn assert_traces_identical(a: &Trace, b: &Trace, ctx: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{ctx}: length");
+    for (ra, rb) in a.records.iter().zip(b.records.iter()) {
+        let t = ra.t;
+        assert_eq!(ra.t, rb.t, "{ctx} t={t}");
+        assert_eq!(ra.k_user, rb.k_user, "{ctx} t={t}: k_user");
+        assert_eq!(ra.k_actual, rb.k_actual, "{ctx} t={t}: k_actual (union size)");
+        assert_eq!(ra.k_sum, rb.k_sum, "{ctx} t={t}: k_sum");
+        assert!(
+            f64_eq(ra.density, rb.density),
+            "{ctx} t={t}: density {} vs {}",
+            ra.density,
+            rb.density
+        );
+        assert!(
+            f64_eq(ra.f_ratio, rb.f_ratio),
+            "{ctx} t={t}: f_ratio {} vs {}",
+            ra.f_ratio,
+            rb.f_ratio
+        );
+        assert!(
+            f64_eq(ra.delta, rb.delta),
+            "{ctx} t={t}: delta {} vs {}",
+            ra.delta,
+            rb.delta
+        );
+        assert!(
+            f64_eq(ra.global_err, rb.global_err),
+            "{ctx} t={t}: global_err {} vs {}",
+            ra.global_err,
+            rb.global_err
+        );
+        assert!(
+            f64_eq(ra.t_compute, rb.t_compute),
+            "{ctx} t={t}: t_compute (modeled) {} vs {}",
+            ra.t_compute,
+            rb.t_compute
+        );
+        assert!(
+            f64_eq(ra.t_comm, rb.t_comm),
+            "{ctx} t={t}: t_comm (modeled) {} vs {}",
+            ra.t_comm,
+            rb.t_comm
+        );
+        // t_select is measured wall time — engine-dependent by design.
+    }
+}
+
+#[test]
+fn threaded_and_lockstep_traces_identical_for_every_sparsifier() {
+    let n = 4;
+    for sp in [
+        "exdyna",
+        "exdyna-coarse",
+        "topk",
+        "cltk",
+        "hard-threshold",
+        "sidco",
+        "dense",
+    ] {
+        let gen = small_gen(n);
+        let factory =
+            make_sparsifier_factory(sp, 0.002, 0.01, ExDynaCfg::default_for(n)).unwrap();
+        let lock = run_sim(&gen, factory.as_ref(), &cfg(n, 12, EngineKind::Lockstep)).unwrap();
+        let thr = run_sim(&gen, factory.as_ref(), &cfg(n, 12, EngineKind::Threaded)).unwrap();
+        assert_eq!(lock.sparsifier, thr.sparsifier, "{sp}");
+        assert_traces_identical(&lock, &thr, sp);
+    }
+}
+
+#[test]
+fn threaded_engine_runs_one_thread_per_rank() {
+    let n = 4;
+    let gen = small_gen(n);
+    let factory = make_sparsifier_factory("exdyna", 0.002, 0.01, ExDynaCfg::default_for(n)).unwrap();
+    let (trace, stats) = run_threaded_with_stats(
+        &gen,
+        factory.as_ref(),
+        &cfg(n, 6, EngineKind::Threaded),
+    )
+    .unwrap();
+    assert_eq!(stats.n_ranks, n);
+    assert_eq!(
+        stats.distinct_threads, n,
+        "every rank must run on its own OS thread"
+    );
+    assert_eq!(trace.records.len(), 6);
+}
+
+#[test]
+fn parity_holds_under_straggler_injection() {
+    let n = 4;
+    let gen = small_gen(n);
+    let straggler = StragglerCfg {
+        slow_rank: 2,
+        slow_factor: 3.0,
+        jitter: 0.2,
+        seed: 11,
+    };
+    let factory = make_sparsifier_factory("exdyna", 0.002, 0.01, ExDynaCfg::default_for(n)).unwrap();
+    let mut c_lock = cfg(n, 10, EngineKind::Lockstep);
+    c_lock.straggler = straggler;
+    let mut c_thr = cfg(n, 10, EngineKind::Threaded);
+    c_thr.straggler = straggler;
+    let lock = run_sim(&gen, factory.as_ref(), &c_lock).unwrap();
+    let thr = run_sim(&gen, factory.as_ref(), &c_thr).unwrap();
+    assert_traces_identical(&lock, &thr, "straggler");
+    // the straggler actually inflates the modeled compute critical path
+    for r in &lock.records {
+        assert!(
+            r.t_compute >= 3.0 * 0.01,
+            "straggler must set the critical path: {}",
+            r.t_compute
+        );
+    }
+}
+
+#[test]
+fn empty_rounds_keep_f_ratio_summary_finite() {
+    // a hard threshold far above every |acc| value selects nothing in
+    // the early rounds: f(t) is NaN there (no traffic to ratio), and the
+    // summary must skip those rounds rather than go NaN.
+    let n = 4;
+    let gen = small_gen(n);
+    let factory =
+        make_sparsifier_factory("hard-threshold", 0.001, 1e9, ExDynaCfg::default_for(n)).unwrap();
+    for engine in [EngineKind::Lockstep, EngineKind::Threaded] {
+        let trace = run_sim(&gen, factory.as_ref(), &cfg(n, 8, engine)).unwrap();
+        assert!(
+            trace.records.iter().any(|r| r.f_ratio.is_nan()),
+            "{engine}: expected empty rounds with NaN f(t)"
+        );
+        let s = trace.f_ratio_summary();
+        assert!(
+            s.mean().is_finite(),
+            "{engine}: summary mean must skip NaN rounds, got {}",
+            s.mean()
+        );
+        assert!(
+            s.count() < trace.records.len(),
+            "{engine}: NaN rounds must be excluded from the summary"
+        );
+    }
+}
