@@ -2,12 +2,13 @@
 //! cluster-engine wall-clock comparison.
 //!
 //! Part 1 (always): ExDyna on the resnet152 profile at n = 2, 4, 8, 16
-//! ranks, run on BOTH cluster engines. Reports, per scale:
-//! * host wall-clock of the whole run per engine (the threaded
-//!   worker/transport engine uses one OS thread per rank, so on a
-//!   multi-core host the rank loop parallelizes; lock-step executes
-//!   ranks sequentially) and the speedup ratio;
-//! * identical-trace check (the engines must agree bit-exactly on the
+//! ranks, run on ALL THREE execution modes — lock-step (single thread),
+//! threaded (one OS thread per rank), and tcp (one OS *process* per
+//! rank over loopback, via `exdyna launch` single-host mode). Reports,
+//! per scale:
+//! * host wall-clock of the whole run per mode and the
+//!   lockstep/threaded speedup ratio;
+//! * identical-trace check (all modes must agree bit-exactly on the
 //!   sparsification trajectory — tested properly in
 //!   `rust/tests/engine_parity.rs`);
 //! * simulated per-iteration time (the paper's scalability axis).
@@ -38,6 +39,9 @@ fn main() -> exdyna::Result<()> {
     println!("# Fig. 8 — scale-out: engine wall-clock + convergence (d = {d}, {iters} iters)\n");
     println!("## engine comparison (resnet152 profile, scale {scale})");
     println!("ranks,engine,wall_s,sim_iter_s,tail_density");
+    let launcher = env!("CARGO_BIN_EXE_exdyna");
+    let tmp = std::env::temp_dir().join(format!("exdyna_fig8_{}", std::process::id()));
+    std::fs::create_dir_all(&tmp)?;
     for ranks in [2usize, 4, 8, 16] {
         let cfg = preset("resnet152", scale, ranks, iters)?;
         let gen = SynthGen::new(cfg.model.clone(), ranks, cfg.sim.rho, cfg.sim.seed, false);
@@ -59,18 +63,58 @@ fn main() -> exdyna::Result<()> {
             );
             traces.push(trace);
         }
+        // tcp: the same run as one process per rank over loopback
+        // (single-host launch); wall-clock includes process startup +
+        // rendezvous — the honest cost of crossing the process boundary
+        let tcp_out = tmp.join(format!("tcp_n{ranks}.csv"));
+        let st = Instant::now();
+        let status = std::process::Command::new(launcher)
+            .args(["launch", "--preset", "resnet152", "--ranks", &ranks.to_string()])
+            .args(["--scale", &format!("{scale}")])
+            .args(["--iters", &iters.to_string()])
+            .args(["--density", &format!("{d}")])
+            .args(["--out", tcp_out.to_str().unwrap()])
+            .stdout(std::process::Stdio::null())
+            .stderr(std::process::Stdio::null())
+            .status();
+        let wall_tcp = st.elapsed().as_secs_f64();
+        let tcp_trace = match (&status, exdyna::metrics::Trace::read_csv(&tcp_out)) {
+            (Ok(s), Ok(t)) if s.success() => Some(t),
+            _ => None,
+        };
+        match &tcp_trace {
+            Some(t) => {
+                let (_, _, _, tot) = t.mean_breakdown();
+                println!(
+                    "{ranks},tcp,{:.3},{:.4},{:.6}",
+                    wall_tcp,
+                    tot,
+                    t.mean_density_tail(iters / 3)
+                );
+            }
+            None => eprintln!("# n = {ranks:<3} tcp launch failed ({status:?})"),
+        }
         let agree = traces[0]
             .records
             .iter()
             .zip(traces[1].records.iter())
             .all(|(a, b)| a.k_actual == b.k_actual && a.delta == b.delta);
+        let agree_tcp = tcp_trace
+            .map(|t| {
+                t.records
+                    .iter()
+                    .zip(traces[0].records.iter())
+                    .all(|(a, b)| a.k_actual == b.k_actual && a.delta == b.delta)
+            })
+            .unwrap_or(false);
         eprintln!(
-            "# n = {ranks:<3} lockstep {:.3}s  threaded {:.3}s  speedup {:.2}x  traces identical: {agree}",
+            "# n = {ranks:<3} lockstep {:.3}s  threaded {:.3}s  tcp {wall_tcp:.3}s  speedup {:.2}x  traces identical: {agree} (tcp: {agree_tcp})",
             wall[0],
             wall[1],
             wall[0] / wall[1].max(1e-9)
         );
     }
+    std::fs::remove_dir_all(&tmp).ok();
 
     // --- Part 2: real-model convergence by scale (needs PJRT + artifacts)
     if !pjrt_available() {

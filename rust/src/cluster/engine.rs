@@ -7,6 +7,11 @@
 //! records into one [`Trace`] (rank 0's records — all deterministic
 //! fields are identical across ranks, and `t_select` is already the
 //! all-gathered cluster max).
+//!
+//! [`run_rank_on_transport`] is the multi-process form: it runs exactly
+//! one rank's [`SimWorker`] over an externally-built transport (e.g. a
+//! [`crate::cluster::net::TcpTransport`]); the `exdyna launch`
+//! subcommand calls it once per process.
 
 use crate::cluster::transport::{Endpoint, LocalTransport, Transport};
 use crate::cluster::worker::SimWorker;
@@ -38,6 +43,49 @@ pub struct ClusterStats {
     pub n_ranks: usize,
     /// Distinct worker OS threads observed (must equal `n_ranks`).
     pub distinct_threads: usize,
+}
+
+/// Run one rank of a (typically multi-process) cluster over `transport`.
+/// Every deterministic trace field is identical on all ranks and
+/// `t_select` is the all-gathered max, so each rank returns the same
+/// merged cluster trace; rank 0's copy is canonical. A failed worker
+/// poisons the transport so peers error out instead of hanging.
+pub fn run_rank_on_transport(
+    gen: &SynthGen,
+    make_sparsifier: &SparsifierFactory,
+    cfg: &SimCfg,
+    rank: usize,
+    transport: &dyn Transport,
+) -> Result<Trace> {
+    let n = cfg.n_ranks;
+    if n == 0 {
+        return Err(Error::invalid("n_ranks must be >= 1"));
+    }
+    if n != transport.n_ranks() {
+        return Err(Error::invalid(format!(
+            "config says {n} ranks but the transport spans {}",
+            transport.n_ranks()
+        )));
+    }
+    if rank >= n {
+        return Err(Error::invalid(format!("rank {rank} out of range (n = {n})")));
+    }
+    let sp = make_sparsifier(gen.n_g(), n)?;
+    let name = sp.name();
+    let mut trace = Trace::new(&name, &gen.model.name, n);
+    // a panicking worker must poison the transport too, not just an Err
+    let _guard = crate::cluster::transport::AbortOnPanic(transport);
+    let ep = Endpoint::new(rank, transport);
+    let worker = SimWorker::new(rank, sp, gen, cfg, ep);
+    let out = worker.run();
+    if out.is_err() {
+        // don't leave remote peers blocked at the rendezvous
+        transport.abort();
+    }
+    for rec in out? {
+        trace.push(rec);
+    }
+    Ok(trace)
 }
 
 /// Run the simulated trainer with one thread per rank; returns the trace.
@@ -76,6 +124,11 @@ pub fn run_threaded_with_stats(
             let mut handles = Vec::with_capacity(n);
             for (rank, sp) in sparsifiers.into_iter().enumerate() {
                 handles.push(scope.spawn(move || {
+                    // a panic (vs an Err) must also poison the transport,
+                    // or the sibling joins below would block forever
+                    let _guard = crate::cluster::transport::AbortOnPanic(
+                        transport as &dyn Transport,
+                    );
                     let ep = Endpoint::new(rank, transport as &dyn Transport);
                     let worker = SimWorker::new(rank, sp, gen, cfg, ep);
                     let out = worker.run();
@@ -157,6 +210,59 @@ mod tests {
             assert!(r.k_actual > 0);
             assert!(r.t_comm > 0.0);
         }
+    }
+
+    #[test]
+    fn rank_on_transport_matches_threaded_trace() {
+        // run every rank of a LocalTransport cluster through the
+        // multi-process entry point; each rank's merged trace must agree
+        // with run_threaded on all deterministic fields
+        let n = 3;
+        let model = SynthModel::profile("t", 48_000, 6, 5, DecayCfg::default());
+        let gen = SynthGen::new(model, n, 0.5, 17, false);
+        let cfg = SimCfg {
+            n_ranks: n,
+            iters: 6,
+            compute_s: 0.01,
+            ..Default::default()
+        };
+        let mk = |n_g: usize, nr: usize| -> crate::error::Result<Box<dyn crate::sparsifiers::Sparsifier>> {
+            Ok(Box::new(ExDyna::new(n_g, nr, ExDynaCfg::default_for(nr))?))
+        };
+        let reference = run_threaded(&gen, &mk, &cfg).unwrap();
+        let tp = LocalTransport::new(n);
+        let traces: Vec<Trace> = std::thread::scope(|scope| {
+            let tp = &tp;
+            let gen = &gen;
+            let cfg = &cfg;
+            let handles: Vec<_> = (0..n)
+                .map(|rank| {
+                    scope.spawn(move || {
+                        run_rank_on_transport(gen, &mk, cfg, rank, tp as &dyn Transport)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap().unwrap()).collect()
+        });
+        for (rank, t) in traces.iter().enumerate() {
+            assert_eq!(t.records.len(), reference.records.len(), "rank {rank}");
+            for (a, b) in t.records.iter().zip(reference.records.iter()) {
+                assert_eq!(a.k_actual, b.k_actual, "rank {rank} t={}", a.t);
+                assert_eq!(a.k_sum, b.k_sum, "rank {rank} t={}", a.t);
+                assert_eq!(a.delta.to_bits(), b.delta.to_bits(), "rank {rank} t={}", a.t);
+                assert_eq!(
+                    a.t_comm.to_bits(),
+                    b.t_comm.to_bits(),
+                    "rank {rank} t={}",
+                    a.t
+                );
+            }
+        }
+        // bad rank / world mismatches are rejected up front
+        assert!(run_rank_on_transport(&gen, &mk, &cfg, n, &LocalTransport::new(n)).is_err());
+        let mut bad = cfg;
+        bad.n_ranks = n + 1;
+        assert!(run_rank_on_transport(&gen, &mk, &bad, 0, &LocalTransport::new(n)).is_err());
     }
 
     #[test]

@@ -1,32 +1,45 @@
-//! The cluster layer: rank workers, message transport, and the threaded
-//! training engine.
+//! The cluster layer: rank workers, message transports (in-process and
+//! socket), and the training engines that run over them.
 //!
 //! The paper's subject is *scalability* — selection/communication cost as
 //! the worker count grows — so the trainer models a cluster, not a loop:
 //!
 //! * [`transport`] — the [`Transport`] abstraction collectives move
-//!   messages over, and [`LocalTransport`], the in-process
-//!   channels/barrier implementation (one OS thread per rank). Data
-//!   movement is real; the α–β [`CostModel`] charges what the operation
-//!   would cost on the modeled wire.
+//!   messages over. Data movement is real; the α–β [`CostModel`] charges
+//!   what the operation would cost on the modeled wire. Two
+//!   implementations:
+//!   * [`LocalTransport`] — in-process rendezvous (mutex/condvar slot
+//!     board) for one OS thread per rank;
+//!   * [`net::TcpTransport`] — hub-mediated TCP star for one *process*
+//!     per rank (same host or across hosts), with a length-prefixed
+//!     checksummed wire codec ([`net::codec`]), a rank-claim handshake
+//!     ([`net::handshake`]), deadline-bounded IO and abort poisoning
+//!     that closes sockets so peers error out instead of hanging.
 //! * [`worker`] — [`SimWorker`]: one rank's Alg. 1 loop (own sparsifier
 //!   replica, own error/accumulator buffers), shared-nothing except the
-//!   transport.
-//! * [`engine`] — [`run_threaded`]: launch workers, merge per-rank
-//!   records into one trace.
+//!   transport. The same worker runs unchanged over either transport.
+//! * [`engine`] — [`run_threaded`]: launch thread-per-rank workers over
+//!   a [`LocalTransport`] and merge the records;
+//!   [`run_rank_on_transport`]: run one rank of a multi-process cluster
+//!   over any transport (the `exdyna launch` path).
 //!
-//! [`EngineKind`] selects between this engine and the legacy lock-step
-//! path (kept for bit-exact comparison; see
-//! `rust/tests/engine_parity.rs`). The choice threads through `SimCfg`,
-//! the TOML config, and the CLI (`--engine threaded|lockstep`).
+//! [`EngineKind`] selects between the threaded engine and the legacy
+//! lock-step path (kept for bit-exact comparison); [`TransportKind`]
+//! selects the transport (`transport = "tcp"` in TOML, or the `launch`
+//! CLI subcommand). `rust/tests/engine_parity.rs` pins trace equality
+//! across all three execution modes.
 //!
 //! [CostModel]: crate::collectives::CostModel
 
 pub mod engine;
+pub mod net;
 pub mod transport;
 pub mod worker;
 
-pub use engine::{run_threaded, run_threaded_with_stats, ClusterStats};
+pub use engine::{
+    run_rank_on_transport, run_threaded, run_threaded_with_stats, ClusterStats,
+};
+pub use net::{NetCfg, TcpTransport};
 pub use transport::{Endpoint, LocalTransport, Message, Transport};
 pub use worker::SimWorker;
 
@@ -76,6 +89,50 @@ impl std::fmt::Display for EngineKind {
     }
 }
 
+/// Which transport moves messages between ranks.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process rendezvous, one OS thread per rank (the default).
+    #[default]
+    Local,
+    /// TCP sockets, one process per rank (`exdyna launch`).
+    Tcp,
+}
+
+impl TransportKind {
+    /// Parse a CLI/config name.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "local" => Ok(TransportKind::Local),
+            "tcp" => Ok(TransportKind::Tcp),
+            other => Err(Error::invalid(format!(
+                "unknown transport '{other}' (have: local, tcp)"
+            ))),
+        }
+    }
+
+    /// Canonical name (round-trips through [`TransportKind::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::Local => "local",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+}
+
+impl std::str::FromStr for TransportKind {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        TransportKind::parse(s)
+    }
+}
+
+impl std::fmt::Display for TransportKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -88,5 +145,15 @@ mod tests {
         }
         assert!(EngineKind::parse("gpu").is_err());
         assert_eq!(EngineKind::default(), EngineKind::Threaded);
+    }
+
+    #[test]
+    fn transport_kind_roundtrips() {
+        for k in [TransportKind::Local, TransportKind::Tcp] {
+            assert_eq!(TransportKind::parse(k.name()).unwrap(), k);
+            assert_eq!(k.name().parse::<TransportKind>().unwrap(), k);
+        }
+        assert!(TransportKind::parse("carrier-pigeon").is_err());
+        assert_eq!(TransportKind::default(), TransportKind::Local);
     }
 }

@@ -1,0 +1,645 @@
+//! Wire codec: length-prefixed binary framing for every [`Message`]
+//! variant plus the handshake/control frames.
+//!
+//! Frame layout (all integers little-endian):
+//!
+//! ```text
+//! magic   u32   0x45584459 ("EXDY")
+//! version u16   PROTOCOL_VERSION
+//! kind    u8    frame discriminant
+//! len     u32   payload byte count (<= MAX_PAYLOAD)
+//! payload [u8; len]
+//! check   u32   FNV-1a over magic..payload (header + payload)
+//! ```
+//!
+//! Floats travel as their IEEE-754 bit patterns (`to_bits`/`from_bits`),
+//! so NaN payloads round-trip bit-exactly — the parity guarantee of
+//! `rust/tests/engine_parity.rs` survives the wire. Every decode error is
+//! a typed [`Error::Protocol`], never a panic: corrupt lengths are capped
+//! before allocation, truncated buffers and trailing bytes are rejected,
+//! and the checksum catches any single-byte flip (each FNV step is
+//! injective in both arguments, so one flipped byte always changes the
+//! final hash).
+
+use crate::cluster::transport::Message;
+use crate::coordinator::SelectOutput;
+use crate::error::{Error, Result};
+use std::io::{Read, Write};
+
+/// Frame magic ("EXDY").
+pub const MAGIC: u32 = 0x4558_4459;
+
+/// Wire protocol version; bumped on any layout change.
+pub const PROTOCOL_VERSION: u16 = 1;
+
+/// Hard cap on one frame's payload — guards allocation on corrupt
+/// length fields (a selection frame at this size would be ~16M entries,
+/// far beyond any workload in the repo).
+pub const MAX_PAYLOAD: u32 = 1 << 28;
+
+/// Header bytes before the payload: magic + version + kind + len.
+pub const HEADER_LEN: usize = 4 + 2 + 1 + 4;
+
+/// Everything that can cross the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// One collective round's contribution or board entry. The
+    /// generation counter lets both ends detect divergence/replay.
+    Data {
+        /// Round counter (must match the receiver's current round).
+        generation: u64,
+        /// The rank's message.
+        msg: Message,
+    },
+    /// Client → hub rank claim.
+    Hello {
+        /// Claimed world size.
+        world: u32,
+        /// Claimed rank (1..world; rank 0 is the hub itself).
+        rank: u32,
+    },
+    /// Hub → client: handshake accepted, cluster complete.
+    Welcome {
+        /// Confirmed world size.
+        world: u32,
+    },
+    /// Hub → client: handshake refused.
+    Reject {
+        /// Human-readable refusal reason.
+        reason: String,
+    },
+    /// Either direction: transport poisoned; the receiver must error out.
+    Abort,
+}
+
+const KIND_DATA: u8 = 0;
+const KIND_HELLO: u8 = 1;
+const KIND_WELCOME: u8 = 2;
+const KIND_REJECT: u8 = 3;
+const KIND_ABORT: u8 = 4;
+
+const MSG_SELECTION: u8 = 0;
+const MSG_FLOATS: u8 = 1;
+const MSG_SCALAR: u8 = 2;
+
+fn fnv1a(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811C_9DC5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(16_777_619);
+    }
+    h
+}
+
+fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    put_u32(buf, v.to_bits());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    put_u64(buf, v.to_bits());
+}
+
+/// Bounded cursor over a received payload.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).ok_or_else(|| {
+            Error::protocol(format!("length overflow reading {what}"))
+        })?;
+        if end > self.buf.len() {
+            return Err(Error::protocol(format!(
+                "truncated frame: need {n} bytes for {what}, have {}",
+                self.buf.len() - self.pos
+            )));
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn f32(&mut self, what: &str) -> Result<f32> {
+        Ok(f32::from_bits(self.u32(what)?))
+    }
+
+    fn f64(&mut self, what: &str) -> Result<f64> {
+        Ok(f64::from_bits(self.u64(what)?))
+    }
+
+    fn finish(&self, what: &str) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(Error::protocol(format!(
+                "{} trailing bytes after {what}",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn encode_message(buf: &mut Vec<u8>, msg: &Message) {
+    match msg {
+        Message::Selection(s) => {
+            buf.push(MSG_SELECTION);
+            put_u32(buf, s.idx.len() as u32);
+            for &i in &s.idx {
+                put_u32(buf, i);
+            }
+            for &v in &s.val {
+                put_f32(buf, v);
+            }
+        }
+        Message::Floats(v) => {
+            buf.push(MSG_FLOATS);
+            put_u32(buf, v.len() as u32);
+            for &x in v {
+                put_f32(buf, x);
+            }
+        }
+        Message::Scalar(x) => {
+            buf.push(MSG_SCALAR);
+            put_f64(buf, *x);
+        }
+    }
+}
+
+fn decode_message(c: &mut Cursor<'_>) -> Result<Message> {
+    match c.u8("message kind")? {
+        MSG_SELECTION => {
+            let n = c.u32("selection count")? as usize;
+            let mut idx = Vec::with_capacity(n.min(MAX_PAYLOAD as usize / 8));
+            for _ in 0..n {
+                idx.push(c.u32("selection index")?);
+            }
+            let mut val = Vec::with_capacity(idx.len());
+            for _ in 0..n {
+                val.push(c.f32("selection value")?);
+            }
+            Ok(Message::Selection(SelectOutput { idx, val }))
+        }
+        MSG_FLOATS => {
+            let n = c.u32("float count")? as usize;
+            let mut v = Vec::with_capacity(n.min(MAX_PAYLOAD as usize / 4));
+            for _ in 0..n {
+                v.push(c.f32("float value")?);
+            }
+            Ok(Message::Floats(v))
+        }
+        MSG_SCALAR => Ok(Message::Scalar(c.f64("scalar")?)),
+        other => Err(Error::protocol(format!("unknown message kind {other}"))),
+    }
+}
+
+fn encode_payload(frame: &Frame) -> (u8, Vec<u8>) {
+    let mut p = Vec::new();
+    let kind = match frame {
+        Frame::Data { generation, msg } => {
+            put_u64(&mut p, *generation);
+            encode_message(&mut p, msg);
+            KIND_DATA
+        }
+        Frame::Hello { world, rank } => {
+            put_u32(&mut p, *world);
+            put_u32(&mut p, *rank);
+            KIND_HELLO
+        }
+        Frame::Welcome { world } => {
+            put_u32(&mut p, *world);
+            KIND_WELCOME
+        }
+        Frame::Reject { reason } => {
+            let bytes = reason.as_bytes();
+            put_u32(&mut p, bytes.len() as u32);
+            p.extend_from_slice(bytes);
+            KIND_REJECT
+        }
+        Frame::Abort => KIND_ABORT,
+    };
+    (kind, p)
+}
+
+fn decode_payload(kind: u8, payload: &[u8]) -> Result<Frame> {
+    let mut c = Cursor::new(payload);
+    let frame = match kind {
+        KIND_DATA => {
+            let generation = c.u64("generation")?;
+            let msg = decode_message(&mut c)?;
+            Frame::Data { generation, msg }
+        }
+        KIND_HELLO => Frame::Hello {
+            world: c.u32("hello world size")?,
+            rank: c.u32("hello rank")?,
+        },
+        KIND_WELCOME => Frame::Welcome {
+            world: c.u32("welcome world size")?,
+        },
+        KIND_REJECT => {
+            let n = c.u32("reject reason length")? as usize;
+            let bytes = c.take(n, "reject reason")?;
+            let reason = String::from_utf8(bytes.to_vec())
+                .map_err(|_| Error::protocol("reject reason is not UTF-8"))?;
+            Frame::Reject { reason }
+        }
+        KIND_ABORT => Frame::Abort,
+        other => return Err(Error::protocol(format!("unknown frame kind {other}"))),
+    };
+    c.finish("frame payload")?;
+    Ok(frame)
+}
+
+/// Encode one frame to its complete wire bytes.
+pub fn encode_frame(frame: &Frame) -> Vec<u8> {
+    let (kind, payload) = encode_payload(frame);
+    let mut buf = Vec::with_capacity(HEADER_LEN + payload.len() + 4);
+    put_u32(&mut buf, MAGIC);
+    put_u16(&mut buf, PROTOCOL_VERSION);
+    buf.push(kind);
+    put_u32(&mut buf, payload.len() as u32);
+    buf.extend_from_slice(&payload);
+    let check = fnv1a(&buf);
+    put_u32(&mut buf, check);
+    buf
+}
+
+fn parse_header(h: &[u8; HEADER_LEN]) -> Result<(u8, u32)> {
+    let magic = u32::from_le_bytes([h[0], h[1], h[2], h[3]]);
+    if magic != MAGIC {
+        return Err(Error::protocol(format!(
+            "bad frame magic {magic:#010x} (want {MAGIC:#010x})"
+        )));
+    }
+    let version = u16::from_le_bytes([h[4], h[5]]);
+    if version != PROTOCOL_VERSION {
+        return Err(Error::protocol(format!(
+            "protocol version mismatch: peer speaks v{version}, this build speaks v{PROTOCOL_VERSION}"
+        )));
+    }
+    let kind = h[6];
+    let len = u32::from_le_bytes([h[7], h[8], h[9], h[10]]);
+    if len > MAX_PAYLOAD {
+        return Err(Error::protocol(format!(
+            "frame payload length {len} exceeds cap {MAX_PAYLOAD}"
+        )));
+    }
+    Ok((kind, len))
+}
+
+/// Decode one frame from a complete in-memory buffer (must contain
+/// exactly one frame).
+pub fn decode_frame(bytes: &[u8]) -> Result<Frame> {
+    if bytes.len() < HEADER_LEN + 4 {
+        return Err(Error::protocol(format!(
+            "truncated frame: {} bytes, need at least {}",
+            bytes.len(),
+            HEADER_LEN + 4
+        )));
+    }
+    let mut header = [0u8; HEADER_LEN];
+    header.copy_from_slice(&bytes[..HEADER_LEN]);
+    let (kind, len) = parse_header(&header)?;
+    let want = HEADER_LEN + len as usize + 4;
+    if bytes.len() != want {
+        return Err(Error::protocol(format!(
+            "frame length mismatch: buffer has {} bytes, header says {want}",
+            bytes.len()
+        )));
+    }
+    let body_end = HEADER_LEN + len as usize;
+    let stored = u32::from_le_bytes([
+        bytes[body_end],
+        bytes[body_end + 1],
+        bytes[body_end + 2],
+        bytes[body_end + 3],
+    ]);
+    let computed = fnv1a(&bytes[..body_end]);
+    if stored != computed {
+        return Err(Error::protocol(format!(
+            "frame checksum mismatch: stored {stored:#010x}, computed {computed:#010x}"
+        )));
+    }
+    decode_payload(kind, &bytes[HEADER_LEN..body_end])
+}
+
+fn map_read_err(e: std::io::Error, what: &str) -> Error {
+    match e.kind() {
+        std::io::ErrorKind::UnexpectedEof => {
+            Error::protocol(format!("peer closed connection mid-frame ({what})"))
+        }
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+            Error::net(format!("read timed out waiting for {what}"))
+        }
+        _ => Error::Io(e),
+    }
+}
+
+/// Read one frame from a stream. Timeouts surface as [`Error::Net`], a
+/// clean close before the first header byte as a distinguishable
+/// "connection closed" protocol error.
+pub fn read_frame(r: &mut impl Read) -> Result<Frame> {
+    let mut header = [0u8; HEADER_LEN];
+    // distinguish a clean close (0 bytes) from a mid-frame cut
+    let mut got = 0usize;
+    while got < HEADER_LEN {
+        match r.read(&mut header[got..]) {
+            Ok(0) => {
+                return Err(if got == 0 {
+                    Error::protocol("connection closed by peer")
+                } else {
+                    Error::protocol("peer closed connection mid-frame (header)")
+                });
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(map_read_err(e, "frame header")),
+        }
+    }
+    let (kind, len) = parse_header(&header)?;
+    let mut rest = vec![0u8; len as usize + 4];
+    r.read_exact(&mut rest)
+        .map_err(|e| map_read_err(e, "frame body"))?;
+    let body_end = len as usize;
+    let stored = u32::from_le_bytes([
+        rest[body_end],
+        rest[body_end + 1],
+        rest[body_end + 2],
+        rest[body_end + 3],
+    ]);
+    let mut hashed = Vec::with_capacity(HEADER_LEN + body_end);
+    hashed.extend_from_slice(&header);
+    hashed.extend_from_slice(&rest[..body_end]);
+    let computed = fnv1a(&hashed);
+    if stored != computed {
+        return Err(Error::protocol(format!(
+            "frame checksum mismatch: stored {stored:#010x}, computed {computed:#010x}"
+        )));
+    }
+    decode_payload(kind, &rest[..body_end])
+}
+
+/// Write one frame to a stream. Timeouts surface as [`Error::Net`].
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<()> {
+    write_bytes(w, &encode_frame(frame))
+}
+
+/// Write pre-encoded frame bytes (lets the hub encode a board once and
+/// fan the same bytes out to every peer).
+pub fn write_bytes(w: &mut impl Write, bytes: &[u8]) -> Result<()> {
+    w.write_all(bytes).map_err(|e| match e.kind() {
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+            Error::net("write timed out")
+        }
+        _ => Error::Io(e),
+    })?;
+    w.flush().map_err(Error::Io)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Strategy};
+    use crate::util::rng::Rng;
+
+    /// Random frames, biased toward Data payloads; injects NaN/Inf bit
+    /// patterns and empty selections.
+    struct FrameStrat;
+
+    fn gen_f32(rng: &mut Rng) -> f32 {
+        match rng.usize(5) {
+            0 => f32::NAN,
+            1 => f32::from_bits(0x7FC0_1234), // payload-carrying NaN
+            2 => f32::INFINITY,
+            _ => (rng.f32() - 0.5) * 1e6,
+        }
+    }
+
+    fn gen_message(rng: &mut Rng) -> Message {
+        match rng.usize(3) {
+            0 => {
+                let n = rng.usize(40); // 0 => empty selection
+                let idx: Vec<u32> = (0..n).map(|_| rng.next_u64() as u32).collect();
+                let val: Vec<f32> = (0..n).map(|_| gen_f32(rng)).collect();
+                Message::Selection(SelectOutput { idx, val })
+            }
+            1 => {
+                let n = rng.usize(40);
+                Message::Floats((0..n).map(|_| gen_f32(rng)).collect())
+            }
+            _ => Message::Scalar(if rng.usize(4) == 0 {
+                f64::NAN
+            } else {
+                rng.f64() * 1e9
+            }),
+        }
+    }
+
+    impl Strategy for FrameStrat {
+        type Value = Frame;
+        fn gen(&self, rng: &mut Rng) -> Frame {
+            match rng.usize(6) {
+                0 | 1 => Frame::Data {
+                    generation: rng.next_u64(),
+                    msg: gen_message(rng),
+                },
+                2 => Frame::Hello {
+                    world: rng.usize(64) as u32,
+                    rank: rng.usize(64) as u32,
+                },
+                3 => Frame::Welcome {
+                    world: rng.usize(64) as u32,
+                },
+                4 => Frame::Reject {
+                    reason: format!("reason-{}", rng.usize(1000)),
+                },
+                _ => Frame::Abort,
+            }
+        }
+    }
+
+    /// Canonical-bytes round trip: re-encoding the decoded frame must
+    /// reproduce the original bytes exactly, which proves bit-exact
+    /// payload round-trips even for NaN (where `PartialEq` can't).
+    #[test]
+    fn roundtrip_property_all_variants() {
+        check(0xC0DEC, 400, &FrameStrat, |frame| {
+            let bytes = encode_frame(frame);
+            let decoded = decode_frame(&bytes)
+                .map_err(|e| format!("decode failed: {e} for {frame:?}"))?;
+            let re = encode_frame(&decoded);
+            if re != bytes {
+                return Err(format!("re-encode differs for {frame:?}"));
+            }
+            // streaming path agrees with the in-memory path
+            let mut cursor: &[u8] = &bytes;
+            let streamed =
+                read_frame(&mut cursor).map_err(|e| format!("read_frame failed: {e}"))?;
+            if encode_frame(&streamed) != bytes {
+                return Err(format!("read_frame round trip differs for {frame:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empty_selection_roundtrips() {
+        let f = Frame::Data {
+            generation: 7,
+            msg: Message::Selection(SelectOutput::default()),
+        };
+        let bytes = encode_frame(&f);
+        assert_eq!(decode_frame(&bytes).unwrap(), f);
+    }
+
+    #[test]
+    fn nan_floats_roundtrip_bit_exactly() {
+        let vals = vec![f32::NAN, f32::from_bits(0x7FC0_0001), -0.0, f32::INFINITY];
+        let bits: Vec<u32> = vals.iter().map(|v| v.to_bits()).collect();
+        let f = Frame::Data {
+            generation: 1,
+            msg: Message::Floats(vals),
+        };
+        match decode_frame(&encode_frame(&f)).unwrap() {
+            Frame::Data {
+                msg: Message::Floats(got),
+                ..
+            } => {
+                let got_bits: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(got_bits, bits);
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+        let s = Frame::Data {
+            generation: 2,
+            msg: Message::Scalar(f64::NAN),
+        };
+        match decode_frame(&encode_frame(&s)).unwrap() {
+            Frame::Data {
+                msg: Message::Scalar(x),
+                ..
+            } => assert_eq!(x.to_bits(), f64::NAN.to_bits()),
+            other => panic!("wrong frame {other:?}"),
+        }
+    }
+
+    #[test]
+    fn every_truncation_is_rejected_not_panicking() {
+        let f = Frame::Data {
+            generation: 42,
+            msg: Message::Selection(SelectOutput {
+                idx: vec![3, 9, 11],
+                val: vec![1.0, -2.0, f32::NAN],
+            }),
+        };
+        let bytes = encode_frame(&f);
+        for k in 0..bytes.len() {
+            assert!(
+                decode_frame(&bytes[..k]).is_err(),
+                "prefix of {k} bytes must be rejected"
+            );
+            let mut cursor = &bytes[..k];
+            assert!(
+                read_frame(&mut cursor).is_err(),
+                "streamed prefix of {k} bytes must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn every_single_byte_flip_is_rejected() {
+        let f = Frame::Data {
+            generation: 3,
+            msg: Message::Floats(vec![1.5, -2.5, 0.0]),
+        };
+        let bytes = encode_frame(&f);
+        for pos in 0..bytes.len() {
+            for flip in [0x01u8, 0x80] {
+                let mut c = bytes.clone();
+                c[pos] ^= flip;
+                assert!(
+                    decode_frame(&c).is_err(),
+                    "flip {flip:#x} at byte {pos} must be rejected"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_length_rejected_before_allocation() {
+        // hand-build a header claiming a huge payload
+        let mut h = Vec::new();
+        put_u32(&mut h, MAGIC);
+        put_u16(&mut h, PROTOCOL_VERSION);
+        h.push(0);
+        put_u32(&mut h, u32::MAX);
+        h.extend_from_slice(&[0u8; 16]);
+        let err = decode_frame(&h).unwrap_err().to_string();
+        assert!(err.contains("exceeds cap"), "{err}");
+    }
+
+    #[test]
+    fn version_and_magic_mismatches_are_typed() {
+        let good = encode_frame(&Frame::Abort);
+        let mut bad_magic = good.clone();
+        bad_magic[0] ^= 0xFF;
+        let e = decode_frame(&bad_magic).unwrap_err().to_string();
+        assert!(e.contains("magic") || e.contains("checksum"), "{e}");
+
+        let mut bad_version = good.clone();
+        bad_version[4] = 99;
+        let e = decode_frame(&bad_version).unwrap_err().to_string();
+        assert!(e.contains("version"), "{e}");
+    }
+
+    #[test]
+    fn clean_close_is_distinguishable() {
+        let mut empty: &[u8] = &[];
+        let e = read_frame(&mut empty).unwrap_err().to_string();
+        assert!(e.contains("connection closed by peer"), "{e}");
+    }
+
+    #[test]
+    fn two_frames_stream_back_to_back() {
+        let a = Frame::Hello { world: 4, rank: 2 };
+        let b = Frame::Welcome { world: 4 };
+        let mut buf = encode_frame(&a);
+        buf.extend_from_slice(&encode_frame(&b));
+        let mut cursor: &[u8] = &buf;
+        assert_eq!(read_frame(&mut cursor).unwrap(), a);
+        assert_eq!(read_frame(&mut cursor).unwrap(), b);
+        assert!(read_frame(&mut cursor).is_err());
+    }
+}

@@ -1,0 +1,278 @@
+//! TCP rendezvous: rank 0 is the hub, ranks 1..n dial in and claim
+//! their slot.
+//!
+//! Protocol (all frames from [`codec`]):
+//!
+//! 1. every client connects to the hub's coordinator address (retrying
+//!    while the hub is still binding) and sends
+//!    [`Frame::Hello`]`{ world, rank }`;
+//! 2. the hub validates the claim — protocol version (checked by frame
+//!    decoding), world-size agreement, rank in `1..world`, no duplicate
+//!    claims — answering bad claims with [`Frame::Reject`] and dropping
+//!    them, without giving up on the slot (a well-behaved claimant may
+//!    still arrive before the deadline);
+//! 3. once every slot is filled the hub sends [`Frame::Welcome`] to all
+//!    clients, releasing them into the collective rounds together.
+//!
+//! All waits are bounded: the hub polls a non-blocking listener until
+//! `connect_timeout`, clients bound their dial-retry loop and their
+//! Welcome wait by the same budget, and every stream gets `io_timeout`
+//! read/write deadlines before it is handed to the transport.
+//!
+//! [`codec`]: crate::cluster::net::codec
+
+use crate::cluster::net::codec::{read_frame, write_frame, Frame};
+use crate::error::{Error, Result};
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+/// Socket-transport tunables, mirrored in TOML under `[transport]`.
+#[derive(Clone, Debug)]
+pub struct NetCfg {
+    /// Rendezvous address the hub binds and clients dial
+    /// (`host:port`).
+    pub coord_addr: String,
+    /// Budget for the whole rendezvous: client dial retries, the hub's
+    /// accept loop, and the client's wait for `Welcome`.
+    pub connect_timeout: Duration,
+    /// Per-read/write deadline during collective rounds; a peer that
+    /// stays silent longer than this surfaces [`Error::Net`] instead of
+    /// hanging the cluster.
+    pub io_timeout: Duration,
+}
+
+impl Default for NetCfg {
+    fn default() -> Self {
+        NetCfg {
+            coord_addr: "127.0.0.1:29400".to_string(),
+            connect_timeout: Duration::from_secs(30),
+            io_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+fn set_round_timeouts(stream: &TcpStream, cfg: &NetCfg) -> Result<()> {
+    stream.set_read_timeout(Some(cfg.io_timeout))?;
+    stream.set_write_timeout(Some(cfg.io_timeout))?;
+    stream.set_nodelay(true)?;
+    Ok(())
+}
+
+/// Hub side: bind `coord_addr`, collect one valid [`Frame::Hello`] per
+/// rank in `1..n`, then release everyone with [`Frame::Welcome`].
+/// Returns the streams rank-indexed (slot 0, the hub itself, is `None`).
+pub fn hub_rendezvous(n: usize, cfg: &NetCfg) -> Result<Vec<Option<TcpStream>>> {
+    let listener = TcpListener::bind(&cfg.coord_addr).map_err(|e| {
+        Error::net(format!("hub cannot bind {}: {e}", cfg.coord_addr))
+    })?;
+    listener.set_nonblocking(true)?;
+    let deadline = Instant::now() + cfg.connect_timeout;
+    let mut peers: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
+    let mut missing = n - 1;
+    while missing > 0 {
+        // checked every iteration (not only when accept would block), so
+        // a stream of garbage connections cannot extend the rendezvous
+        // past its budget
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            return Err(rendezvous_timeout(&peers, cfg));
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_nonblocking(false)?;
+                // the Hello read must not eat the whole rendezvous
+                // budget: a connection that sends nothing (port scanner,
+                // peer that died right after connect) is cut off at the
+                // deadline so legitimate ranks can still be seated
+                stream.set_read_timeout(Some(
+                    remaining
+                        .min(cfg.io_timeout)
+                        .max(Duration::from_millis(10)),
+                ))?;
+                stream.set_write_timeout(Some(cfg.io_timeout))?;
+                stream.set_nodelay(true)?;
+                let mut stream = stream;
+                match read_frame(&mut stream) {
+                    Ok(Frame::Hello { world, rank }) => {
+                        let reject = if world as usize != n {
+                            Some(format!(
+                                "world size mismatch: claim {world}, hub runs {n}"
+                            ))
+                        } else if rank == 0 || rank as usize >= n {
+                            Some(format!("rank {rank} out of range 1..{n}"))
+                        } else if peers[rank as usize].is_some() {
+                            Some(format!("rank {rank} already claimed"))
+                        } else {
+                            None
+                        };
+                        match reject {
+                            Some(reason) => {
+                                let _ = write_frame(
+                                    &mut stream,
+                                    &Frame::Reject { reason },
+                                );
+                                // dropped; keep waiting for a valid claim
+                            }
+                            None => {
+                                peers[rank as usize] = Some(stream);
+                                missing -= 1;
+                            }
+                        }
+                    }
+                    Ok(other) => {
+                        let _ = write_frame(
+                            &mut stream,
+                            &Frame::Reject {
+                                reason: format!("expected Hello, got {other:?}"),
+                            },
+                        );
+                    }
+                    Err(_) => {
+                        // undecodable (wrong version / garbage): drop it
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(Error::net(format!("hub accept failed: {e}"))),
+        }
+    }
+    for stream in peers.iter_mut().flatten() {
+        // seated peers may carry a deadline-clipped read timeout from
+        // the Hello phase; reset to the steady-state round deadlines
+        set_round_timeouts(stream, cfg)?;
+        write_frame(stream, &Frame::Welcome { world: n as u32 })?;
+    }
+    Ok(peers)
+}
+
+fn rendezvous_timeout(peers: &[Option<TcpStream>], cfg: &NetCfg) -> Error {
+    let absent: Vec<String> = peers
+        .iter()
+        .enumerate()
+        .skip(1)
+        .filter(|(_, s)| s.is_none())
+        .map(|(r, _)| r.to_string())
+        .collect();
+    Error::net(format!(
+        "rendezvous timed out after {:?}: still waiting for rank(s) {}",
+        cfg.connect_timeout,
+        absent.join(", ")
+    ))
+}
+
+/// Client side: dial the hub (retrying until the deadline — the hub
+/// process may not have bound yet), claim `rank`, and wait for
+/// [`Frame::Welcome`].
+pub fn client_rendezvous(n: usize, rank: usize, cfg: &NetCfg) -> Result<TcpStream> {
+    if rank == 0 || rank >= n {
+        return Err(Error::invalid(format!(
+            "client rank {rank} out of range 1..{n} (rank 0 is the hub)"
+        )));
+    }
+    let deadline = Instant::now() + cfg.connect_timeout;
+    let mut stream = loop {
+        match TcpStream::connect(&cfg.coord_addr) {
+            Ok(s) => break s,
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(Error::net(format!(
+                        "cannot reach hub at {} within {:?}: {e}",
+                        cfg.coord_addr, cfg.connect_timeout
+                    )));
+                }
+                std::thread::sleep(Duration::from_millis(25));
+            }
+        }
+    };
+    // Welcome may take up to the full rendezvous budget (the hub waits
+    // for every rank before releasing anyone)
+    stream.set_read_timeout(Some(cfg.connect_timeout))?;
+    stream.set_write_timeout(Some(cfg.io_timeout))?;
+    stream.set_nodelay(true)?;
+    write_frame(
+        &mut stream,
+        &Frame::Hello {
+            world: n as u32,
+            rank: rank as u32,
+        },
+    )?;
+    match read_frame(&mut stream)? {
+        Frame::Welcome { world } if world as usize == n => {
+            set_round_timeouts(&stream, cfg)?;
+            Ok(stream)
+        }
+        Frame::Welcome { world } => Err(Error::protocol(format!(
+            "hub confirmed world {world}, expected {n}"
+        ))),
+        Frame::Reject { reason } => Err(Error::protocol(format!(
+            "hub rejected rank {rank}: {reason}"
+        ))),
+        other => Err(Error::protocol(format!(
+            "expected Welcome, got {other:?}"
+        ))),
+    }
+}
+
+/// Pick a free loopback port by binding port 0 and reading it back.
+/// There is a small window in which another process could take it, but
+/// the single-host launcher hands the address straight to its children.
+pub fn free_loopback_addr() -> Result<String> {
+    let l = TcpListener::bind("127.0.0.1:0")?;
+    let addr = l.local_addr()?;
+    Ok(addr.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg(addr: &str) -> NetCfg {
+        NetCfg {
+            coord_addr: addr.to_string(),
+            connect_timeout: Duration::from_secs(10),
+            io_timeout: Duration::from_secs(5),
+        }
+    }
+
+    #[test]
+    fn two_rank_rendezvous_completes() {
+        let addr = free_loopback_addr().unwrap();
+        let cfg = quick_cfg(&addr);
+        let cfg2 = cfg.clone();
+        let client = std::thread::spawn(move || client_rendezvous(2, 1, &cfg2));
+        let peers = hub_rendezvous(2, &cfg).unwrap();
+        assert!(peers[0].is_none());
+        assert!(peers[1].is_some());
+        client.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn client_rank_zero_is_rejected_locally() {
+        let cfg = quick_cfg("127.0.0.1:1");
+        assert!(client_rendezvous(4, 0, &cfg).is_err());
+        assert!(client_rendezvous(4, 4, &cfg).is_err());
+    }
+
+    #[test]
+    fn hub_times_out_when_ranks_missing() {
+        let addr = free_loopback_addr().unwrap();
+        let cfg = NetCfg {
+            coord_addr: addr,
+            connect_timeout: Duration::from_millis(200),
+            io_timeout: Duration::from_millis(200),
+        };
+        let err = hub_rendezvous(3, &cfg).unwrap_err().to_string();
+        assert!(err.contains("timed out"), "{err}");
+        assert!(err.contains('1') && err.contains('2'), "missing ranks listed: {err}");
+    }
+
+    #[test]
+    fn free_addr_is_bindable() {
+        let a = free_loopback_addr().unwrap();
+        assert!(a.starts_with("127.0.0.1:"));
+        // the port is free again after the probe listener dropped
+        let _l = TcpListener::bind(&a).unwrap();
+    }
+}

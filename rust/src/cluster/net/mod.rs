@@ -1,0 +1,35 @@
+//! Networked transport: wire codec, TCP rendezvous, and the socket
+//! [`Transport`] implementation.
+//!
+//! This is the subsystem that takes the cluster engine across process
+//! (and host) boundaries, std-only:
+//!
+//! * [`codec`] — length-prefixed little-endian framing with a
+//!   magic/version header and FNV-1a checksum for every
+//!   [`Message`] variant plus the handshake frames; NaN payloads
+//!   round-trip bit-exactly, corrupt frames surface
+//!   [`Error::Protocol`](crate::error::Error::Protocol), never panics.
+//! * [`handshake`] — rank 0 listens as the rendezvous hub; ranks 1..n
+//!   dial in, claim their rank (world size, protocol version and
+//!   duplicate claims validated), and are released together. All waits
+//!   are deadline-bounded ([`NetCfg`]).
+//! * [`tcp`] — [`TcpTransport`]: hub-mediated all-gather (collect n
+//!   generation-stamped contributions, broadcast the rank-indexed
+//!   board) with read/write timeouts and abort poisoning that closes
+//!   sockets so peers error out instead of hanging.
+//!
+//! The `exdyna launch` CLI subcommand runs one rank per process over
+//! this transport (and forks the whole single-host cluster itself when
+//! no `--rank` is given); `rust/tests/engine_parity.rs` pins the merged
+//! multi-process trace bit-exact against both in-process engines.
+//!
+//! [Message]: crate::cluster::transport::Message
+//! [Transport]: crate::cluster::transport::Transport
+
+pub mod codec;
+pub mod handshake;
+pub mod tcp;
+
+pub use codec::{Frame, PROTOCOL_VERSION};
+pub use handshake::{free_loopback_addr, NetCfg};
+pub use tcp::TcpTransport;

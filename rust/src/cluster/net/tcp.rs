@@ -1,0 +1,304 @@
+//! [`TcpTransport`] — the [`Transport`] impl over `std::net::TcpStream`.
+//!
+//! Topology: hub-mediated star. Rank 0 (the hub) keeps one stream per
+//! peer; every all-gather round, each client sends its contribution as a
+//! generation-stamped [`Frame::Data`], the hub collects the full board
+//! (its own message in slot 0), encodes the board once, and fans the
+//! identical rank-indexed byte sequence out to every client. TCP gives
+//! per-peer ordering; the explicit generation counter turns any
+//! cross-rank divergence (a rank running a different round than the hub)
+//! into a typed [`Error::Protocol`] instead of silently mixing rounds.
+//!
+//! Failure semantics:
+//! * every read/write carries the `io_timeout` deadline from [`NetCfg`],
+//!   so a dead or wedged peer surfaces [`Error::Net`] within the timeout
+//!   on every rank — no deadlocks;
+//! * [`Transport::abort`] poisons the transport: it best-effort sends
+//!   [`Frame::Abort`] and then shuts both socket directions down, so
+//!   peers blocked in a read error out immediately (EOF / garbage
+//!   frames) rather than waiting out their timeout.
+//!
+//! [NetCfg]: crate::cluster::net::handshake::NetCfg
+
+use crate::cluster::net::codec::{encode_frame, read_frame, write_bytes, Frame};
+use crate::cluster::net::handshake::{client_rendezvous, hub_rendezvous, NetCfg};
+use crate::cluster::transport::{Message, Transport};
+use crate::error::{Error, Result};
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+enum Conn {
+    /// Rank 0: one stream per peer rank (slot 0 unused).
+    Hub { peers: Vec<Option<TcpStream>> },
+    /// Ranks 1..n: the single stream to the hub.
+    Client { hub: TcpStream },
+}
+
+struct State {
+    conn: Conn,
+    generation: u64,
+}
+
+/// Socket transport for one process-local rank of an n-rank cluster.
+pub struct TcpTransport {
+    n: usize,
+    rank: usize,
+    state: Mutex<State>,
+    /// `try_clone`d handles used only by [`Transport::abort`], which must
+    /// not take the state lock (a blocked round holds it).
+    shutdown_handles: Vec<TcpStream>,
+    poisoned: AtomicBool,
+}
+
+impl TcpTransport {
+    /// Rank 0: bind the rendezvous address and wait for ranks `1..n`.
+    pub fn hub(n: usize, cfg: &NetCfg) -> Result<Self> {
+        if n == 0 {
+            return Err(Error::invalid("world size must be >= 1"));
+        }
+        let peers = hub_rendezvous(n, cfg)?;
+        let mut handles = Vec::new();
+        for s in peers.iter().flatten() {
+            handles.push(s.try_clone()?);
+        }
+        Ok(TcpTransport {
+            n,
+            rank: 0,
+            state: Mutex::new(State {
+                conn: Conn::Hub { peers },
+                generation: 0,
+            }),
+            shutdown_handles: handles,
+            poisoned: AtomicBool::new(false),
+        })
+    }
+
+    /// Ranks 1..n: dial the hub and claim `rank`.
+    pub fn client(n: usize, rank: usize, cfg: &NetCfg) -> Result<Self> {
+        let hub = client_rendezvous(n, rank, cfg)?;
+        let handle = hub.try_clone()?;
+        Ok(TcpTransport {
+            n,
+            rank,
+            state: Mutex::new(State {
+                conn: Conn::Client { hub },
+                generation: 0,
+            }),
+            shutdown_handles: vec![handle],
+            poisoned: AtomicBool::new(false),
+        })
+    }
+
+    /// The rank this transport speaks for.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn expect_data(frame: Frame, want_gen: u64, from: &str) -> Result<Message> {
+        match frame {
+            Frame::Data { generation, msg } if generation == want_gen => Ok(msg),
+            Frame::Data { generation, .. } => Err(Error::protocol(format!(
+                "generation mismatch from {from}: got {generation}, expected {want_gen} — \
+                 workers diverged"
+            ))),
+            Frame::Abort => Err(Error::net(format!("peer {from} aborted the cluster"))),
+            other => Err(Error::protocol(format!(
+                "expected Data frame from {from}, got {other:?}"
+            ))),
+        }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn n_ranks(&self) -> usize {
+        self.n
+    }
+
+    fn allgather(&self, rank: usize, msg: Message) -> Result<Vec<Message>> {
+        if rank != self.rank {
+            return Err(Error::invalid(format!(
+                "this process's transport speaks for rank {}, not rank {rank}",
+                self.rank
+            )));
+        }
+        if self.poisoned.load(Ordering::SeqCst) {
+            return Err(Error::net("transport poisoned by a failed worker"));
+        }
+        let mut st = self.state.lock().unwrap();
+        let my_gen = st.generation;
+        let n = self.n;
+        // any early `?` below leaves the generation unchanged; the failed
+        // worker aborts the transport, so no later round can mix with it
+        let board = match &mut st.conn {
+            Conn::Hub { peers } => {
+                let mut slots: Vec<Option<Message>> = (0..n).map(|_| None).collect();
+                slots[0] = Some(msg);
+                for r in 1..n {
+                    let stream = peers[r]
+                        .as_mut()
+                        .expect("hub rendezvous filled every peer slot");
+                    let frame = read_frame(stream).map_err(|e| {
+                        Error::net(format!("reading rank {r}'s contribution: {e}"))
+                    })?;
+                    slots[r] = Some(Self::expect_data(frame, my_gen, &format!("rank {r}"))?);
+                }
+                let board: Vec<Message> =
+                    slots.into_iter().map(|m| m.expect("all slots filled")).collect();
+                // encode the rank-indexed board once, fan the same bytes out
+                let mut bytes = Vec::new();
+                for m in &board {
+                    bytes.extend_from_slice(&encode_frame(&Frame::Data {
+                        generation: my_gen,
+                        msg: m.clone(),
+                    }));
+                }
+                for r in 1..n {
+                    let stream = peers[r].as_mut().expect("peer slot filled");
+                    write_bytes(stream, &bytes).map_err(|e| {
+                        Error::net(format!("broadcasting board to rank {r}: {e}"))
+                    })?;
+                }
+                board
+            }
+            Conn::Client { hub } => {
+                write_bytes(
+                    hub,
+                    &encode_frame(&Frame::Data {
+                        generation: my_gen,
+                        msg,
+                    }),
+                )
+                .map_err(|e| Error::net(format!("sending contribution to hub: {e}")))?;
+                let mut board = Vec::with_capacity(n);
+                for r in 0..n {
+                    let frame = read_frame(hub).map_err(|e| {
+                        Error::net(format!("reading board entry {r} from hub: {e}"))
+                    })?;
+                    board.push(Self::expect_data(frame, my_gen, "hub")?);
+                }
+                board
+            }
+        };
+        st.generation = my_gen.wrapping_add(1);
+        Ok(board)
+    }
+
+    fn abort(&self) {
+        self.poisoned.store(true, Ordering::SeqCst);
+        let abort_bytes = encode_frame(&Frame::Abort);
+        for h in &self.shutdown_handles {
+            // best-effort polite notice, then force any blocked peer read
+            // to return; both may fail on an already-dead socket
+            let mut w: &TcpStream = h;
+            let _ = write_bytes(&mut w, &abort_bytes);
+            let _ = h.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::net::handshake::free_loopback_addr;
+    use crate::cluster::transport::Endpoint;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn cfg(addr: &str) -> NetCfg {
+        NetCfg {
+            coord_addr: addr.to_string(),
+            connect_timeout: Duration::from_secs(10),
+            io_timeout: Duration::from_secs(5),
+        }
+    }
+
+    /// Build an n-rank loopback cluster: returns one joined transport
+    /// per rank (hub at index 0), built concurrently.
+    fn loopback_cluster(n: usize) -> Vec<Arc<TcpTransport>> {
+        let addr = free_loopback_addr().unwrap();
+        let mut client_handles = Vec::new();
+        for rank in 1..n {
+            let c = cfg(&addr);
+            client_handles.push(std::thread::spawn(move || {
+                TcpTransport::client(n, rank, &c).map(Arc::new)
+            }));
+        }
+        let hub = Arc::new(TcpTransport::hub(n, &cfg(&addr)).unwrap());
+        let mut out = vec![hub];
+        for h in client_handles {
+            out.push(h.join().unwrap().unwrap());
+        }
+        out
+    }
+
+    #[test]
+    fn allgather_is_rank_indexed_over_rounds() {
+        let n = 3;
+        let rounds = 20;
+        let tps = loopback_cluster(n);
+        let mut handles = Vec::new();
+        for (rank, tp) in tps.into_iter().enumerate() {
+            handles.push(std::thread::spawn(move || {
+                let ep = Endpoint::new(rank, tp.as_ref());
+                for round in 0..rounds {
+                    let mine = (rank * 1000 + round) as f64;
+                    let got = ep.allgather_f64(mine).unwrap();
+                    let want: Vec<f64> =
+                        (0..n).map(|r| (r * 1000 + round) as f64).collect();
+                    assert_eq!(got, want, "rank {rank} round {round}");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn mixed_message_kinds_roundtrip() {
+        use crate::coordinator::SelectOutput;
+        let n = 2;
+        let tps = loopback_cluster(n);
+        let mut handles = Vec::new();
+        for (rank, tp) in tps.into_iter().enumerate() {
+            handles.push(std::thread::spawn(move || {
+                let ep = Endpoint::new(rank, tp.as_ref());
+                let sel = SelectOutput {
+                    idx: vec![rank as u32, 100 + rank as u32],
+                    val: vec![rank as f32, f32::NAN],
+                };
+                let sels = ep.allgather_select(sel).unwrap();
+                assert_eq!(sels.len(), n);
+                assert_eq!(sels[rank].idx[0], rank as u32);
+                assert!(sels[0].val[1].is_nan() && sels[1].val[1].is_nan());
+                let floats = ep.allgather_floats(vec![rank as f32; 4]).unwrap();
+                assert_eq!(floats[1], vec![1.0f32; 4]);
+                // empty selection survives the wire
+                let empty = ep.allgather_select(SelectOutput::default()).unwrap();
+                assert!(empty.iter().all(|s| s.is_empty()));
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn wrong_rank_call_is_rejected() {
+        let tps = loopback_cluster(2);
+        let err = tps[1]
+            .allgather(0, Message::Scalar(0.0))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("speaks for rank 1"), "{err}");
+    }
+
+    #[test]
+    fn single_rank_world_needs_no_sockets() {
+        let addr = free_loopback_addr().unwrap();
+        let tp = TcpTransport::hub(1, &cfg(&addr)).unwrap();
+        let got = tp.allgather(0, Message::Scalar(4.5)).unwrap();
+        assert_eq!(got, vec![Message::Scalar(4.5)]);
+    }
+}

@@ -25,7 +25,7 @@ use crate::error::{Error, Result};
 use std::sync::{Condvar, Mutex};
 
 /// One rank's contribution to a collective round.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum Message {
     /// Selected (idx, val) pairs — the payload all-gather (its length is
     /// simultaneously the `k_i` metadata).
@@ -202,6 +202,21 @@ impl<'a> Endpoint<'a> {
     }
 }
 
+/// RAII guard for worker threads: if the holding thread unwinds (a
+/// panic, not an `Err`), the transport is poisoned so peer ranks error
+/// out of their rendezvous instead of blocking forever. The explicit
+/// `Err` paths call [`Transport::abort`] themselves; this covers the
+/// path no `if out.is_err()` check can.
+pub(crate) struct AbortOnPanic<'a>(pub &'a dyn Transport);
+
+impl Drop for AbortOnPanic<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.abort();
+        }
+    }
+}
+
 fn envelope_mismatch(want: &str, got: &Message) -> Error {
     let got = match got {
         Message::Selection(_) => "Selection",
@@ -301,6 +316,20 @@ mod tests {
     fn out_of_range_rank_rejected() {
         let tp = LocalTransport::new(2);
         let ep = Endpoint::new(5, &tp);
+        assert!(ep.allgather_f64(0.0).is_err());
+    }
+
+    #[test]
+    fn panicking_worker_poisons_transport_via_guard() {
+        let tp = Arc::new(LocalTransport::new(2));
+        let tp2 = tp.clone();
+        let panicker = std::thread::spawn(move || {
+            let _guard = AbortOnPanic(tp2.as_ref() as &dyn Transport);
+            panic!("worker died without returning an Err");
+        });
+        assert!(panicker.join().is_err());
+        // the surviving rank must error out, not block forever
+        let ep = Endpoint::new(0, tp.as_ref());
         assert!(ep.allgather_f64(0.0).is_err());
     }
 }

@@ -17,6 +17,13 @@
 //! jitter, both derived from a hash so lock-step and threaded engines
 //! charge identical times. This drives the paper's f(t)/imbalance story
 //! without touching measured selection time.
+//!
+//! It also extends to the *wire* (heterogeneous-network scenario, the
+//! fig. 9 variant): `link_rank` marks one rank's NIC as degraded by
+//! `link_alpha_factor`/`link_beta_factor`. Ring and tree collectives are
+//! bottlenecked by their slowest participant, so one degraded link
+//! inflates the effective (α, β) of every collective the rank takes part
+//! in — which in this flat-ring model is all of them.
 
 use super::topology::Topology;
 
@@ -32,6 +39,14 @@ pub struct StragglerCfg {
     pub jitter: f64,
     /// Seed folded into the jitter hash.
     pub seed: u64,
+    /// Rank whose network link is degraded; `usize::MAX` = none. Ring
+    /// collectives are bottlenecked by their slowest link, so a single
+    /// degraded rank inflates every collective's effective (α, β).
+    pub link_rank: usize,
+    /// Multiplier on per-message latency α of the degraded link (≥ 1).
+    pub link_alpha_factor: f64,
+    /// Multiplier on per-byte time β of the degraded link (≥ 1).
+    pub link_beta_factor: f64,
 }
 
 impl Default for StragglerCfg {
@@ -41,14 +56,43 @@ impl Default for StragglerCfg {
             slow_factor: 1.0,
             jitter: 0.0,
             seed: 0,
+            link_rank: usize::MAX,
+            link_alpha_factor: 1.0,
+            link_beta_factor: 1.0,
         }
     }
 }
 
 impl StragglerCfg {
-    /// Is any perturbation configured?
+    /// Is any compute-clock perturbation configured?
     pub fn is_active(&self) -> bool {
         (self.slow_rank != usize::MAX && self.slow_factor != 1.0) || self.jitter > 0.0
+    }
+
+    /// Is a degraded network link configured?
+    pub fn link_active(&self) -> bool {
+        self.link_rank != usize::MAX
+            && (self.link_alpha_factor != 1.0 || self.link_beta_factor != 1.0)
+    }
+
+    /// Effective multiplier on every collective's α (1.0 when no link is
+    /// degraded).
+    pub fn link_alpha(&self) -> f64 {
+        if self.link_active() {
+            self.link_alpha_factor
+        } else {
+            1.0
+        }
+    }
+
+    /// Effective multiplier on every collective's β (1.0 when no link is
+    /// degraded).
+    pub fn link_beta(&self) -> f64 {
+        if self.link_active() {
+            self.link_beta_factor
+        } else {
+            1.0
+        }
     }
 
     /// Reject configurations that would silently do nothing: a slow rank
@@ -74,6 +118,32 @@ impl StragglerCfg {
                 "straggler factor must be >= 1 (got {}); a sub-1 factor never \
                  affects the max-over-ranks critical path",
                 self.slow_factor
+            )));
+        }
+        if self.link_rank != usize::MAX {
+            if self.link_rank >= n_ranks {
+                return Err(crate::error::Error::invalid(format!(
+                    "link straggler rank {} out of range (n_ranks = {n_ranks})",
+                    self.link_rank
+                )));
+            }
+            if self.link_alpha_factor < 1.0 || self.link_beta_factor < 1.0 {
+                return Err(crate::error::Error::invalid(format!(
+                    "link α/β factors must be >= 1 (got {}, {}); the ring is \
+                     bottlenecked by its slowest link, so a sub-1 factor is inert",
+                    self.link_alpha_factor, self.link_beta_factor
+                )));
+            }
+            if self.link_alpha_factor == 1.0 && self.link_beta_factor == 1.0 {
+                return Err(crate::error::Error::invalid(
+                    "link straggler rank set but both α/β factors are 1.0 — \
+                     a silent no-op",
+                ));
+            }
+        } else if self.link_alpha_factor != 1.0 || self.link_beta_factor != 1.0 {
+            return Err(crate::error::Error::invalid(format!(
+                "link α/β factors ({}, {}) given but no link straggler rank set",
+                self.link_alpha_factor, self.link_beta_factor
             )));
         }
         Ok(())
@@ -151,13 +221,25 @@ impl CostModel {
         self
     }
 
+    /// Effective per-hop latency: topology α inflated by a degraded link
+    /// ([`StragglerCfg::link_alpha`]) when one is configured.
+    pub fn eff_alpha(&self) -> f64 {
+        self.topo.alpha() * self.straggler.link_alpha()
+    }
+
+    /// Effective per-byte time: topology β inflated by a degraded link
+    /// ([`StragglerCfg::link_beta`]) when one is configured.
+    pub fn eff_beta(&self) -> f64 {
+        self.topo.beta() * self.straggler.link_beta()
+    }
+
     /// Ring all-gather time where each rank contributes `bytes_per_rank`.
     pub fn allgather(&self, bytes_per_rank: usize) -> f64 {
         let n = self.topo.n_ranks as f64;
         if self.topo.n_ranks <= 1 {
             return 0.0;
         }
-        (n - 1.0) * self.topo.alpha() + (n - 1.0) * bytes_per_rank as f64 * self.topo.beta()
+        (n - 1.0) * self.eff_alpha() + (n - 1.0) * bytes_per_rank as f64 * self.eff_beta()
     }
 
     /// Ring all-reduce time over a `bytes` vector (reduce-scatter +
@@ -167,8 +249,8 @@ impl CostModel {
         if self.topo.n_ranks <= 1 {
             return 0.0;
         }
-        2.0 * (n - 1.0) * self.topo.alpha()
-            + 2.0 * ((n - 1.0) / n) * bytes as f64 * self.topo.beta()
+        2.0 * (n - 1.0) * self.eff_alpha()
+            + 2.0 * ((n - 1.0) / n) * bytes as f64 * self.eff_beta()
     }
 
     /// Binomial-tree broadcast of `bytes` from one root.
@@ -178,7 +260,7 @@ impl CostModel {
             return 0.0;
         }
         let hops = (usize::BITS - (n - 1).leading_zeros()) as f64; // ceil(log2 n)
-        hops * (self.topo.alpha() + bytes as f64 * self.topo.beta())
+        hops * (self.eff_alpha() + bytes as f64 * self.eff_beta())
     }
 
     /// Bytes of one sparse (idx u32 + val f32) entry.
@@ -305,6 +387,63 @@ mod tests {
         };
         assert!(sub_one.validate(4).is_err(), "sub-1 factor is inert");
         assert!(StragglerCfg::default().validate(1).is_ok());
+    }
+
+    #[test]
+    fn degraded_link_inflates_every_collective() {
+        let base = cm(8);
+        let slow = cm(8).with_straggler(StragglerCfg {
+            link_rank: 3,
+            link_alpha_factor: 2.0,
+            link_beta_factor: 5.0,
+            ..Default::default()
+        });
+        assert!(slow.straggler.link_active());
+        assert_eq!(slow.eff_alpha(), 2.0 * base.topo.alpha());
+        assert_eq!(slow.eff_beta(), 5.0 * base.topo.beta());
+        for bytes in [0usize, 1_000, 1_000_000] {
+            assert!(slow.allgather(bytes) >= base.allgather(bytes));
+            assert!(slow.allreduce(bytes) >= base.allreduce(bytes));
+            assert!(slow.broadcast(bytes) >= base.broadcast(bytes));
+        }
+        // α-only inflation: latency term doubles, bandwidth term untouched
+        let lat_only = cm(8).with_straggler(StragglerCfg {
+            link_rank: 0,
+            link_alpha_factor: 2.0,
+            ..Default::default()
+        });
+        let lat = 7.0 * base.topo.alpha();
+        assert!((lat_only.allgather(1_000) - base.allgather(1_000) - lat).abs() < 1e-15);
+        // the compute clock is untouched by a link-only straggler
+        assert!(!lat_only.straggler.is_active());
+        assert_eq!(lat_only.straggler.max_compute(3, 0.05, 8), 0.05);
+    }
+
+    #[test]
+    fn link_validate_rejects_silent_noops() {
+        let ok = StragglerCfg {
+            link_rank: 2,
+            link_beta_factor: 4.0,
+            ..Default::default()
+        };
+        assert!(ok.validate(4).is_ok());
+        assert!(ok.validate(2).is_err(), "link rank 2 of 2 is out of range");
+        let noop = StragglerCfg {
+            link_rank: 1,
+            ..Default::default()
+        };
+        assert!(noop.validate(4).is_err(), "both factors 1.0 is a no-op");
+        let orphan = StragglerCfg {
+            link_beta_factor: 4.0,
+            ..Default::default()
+        };
+        assert!(orphan.validate(4).is_err(), "factor without a rank");
+        let sub_one = StragglerCfg {
+            link_rank: 1,
+            link_alpha_factor: 0.5,
+            ..Default::default()
+        };
+        assert!(sub_one.validate(4).is_err(), "sub-1 link factor is inert");
     }
 
     #[test]

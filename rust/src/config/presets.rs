@@ -1,12 +1,14 @@
 //! Experiment presets — the Table II applications translated to this
 //! testbed (DESIGN.md §2), plus a typed config assembled from TOML.
 
+use crate::cluster::{NetCfg, TransportKind};
 use crate::config::toml::TomlDoc;
 use crate::coordinator::ExDynaCfg;
 use crate::error::{Error, Result};
 use crate::grad::synth::SynthModel;
 use crate::training::schedule::LrSchedule;
 use crate::training::sim::SimCfg;
+use std::time::Duration;
 
 /// A fully-resolved simulated experiment.
 #[derive(Clone, Debug)]
@@ -23,6 +25,11 @@ pub struct ExperimentConfig {
     pub hard_delta: f32,
     /// Profile scale factor vs the paper's model (1.0 = full size).
     pub scale: f64,
+    /// Which transport moves rank messages (`transport = "tcp"` selects
+    /// the multi-process socket path; `sim` then defers to `launch`).
+    pub transport: TransportKind,
+    /// Socket-transport tunables (`[transport]` section).
+    pub net: NetCfg,
 }
 
 /// Names accepted by [`preset`].
@@ -87,6 +94,8 @@ pub fn preset(name: &str, scale: f64, n_ranks: usize, iters: usize) -> Result<Ex
         // criticizes, which error-feedback accumulation then defeats.
         hard_delta: 0.0,
         scale,
+        transport: TransportKind::default(),
+        net: NetCfg::default(),
     })
 }
 
@@ -102,8 +111,24 @@ pub fn from_toml(doc: &TomlDoc) -> Result<ExperimentConfig> {
     cfg.sim.compute_s = doc.float_or("experiment", "compute_s", cfg.sim.compute_s);
     cfg.sim.engine =
         crate::cluster::EngineKind::parse(&doc.str_or("experiment", "engine", "threaded"))?;
+    // [experiment] transport + [transport] — socket-transport tunables
+    cfg.transport = TransportKind::parse(&doc.str_or("experiment", "transport", "local"))?;
+    cfg.net.coord_addr = doc.str_or("transport", "coord_addr", &cfg.net.coord_addr);
+    cfg.net.connect_timeout = Duration::from_secs_f64(
+        doc.float_or(
+            "transport",
+            "connect_timeout_s",
+            cfg.net.connect_timeout.as_secs_f64(),
+        )
+        .max(0.001),
+    );
+    cfg.net.io_timeout = Duration::from_secs_f64(
+        doc.float_or("transport", "io_timeout_s", cfg.net.io_timeout.as_secs_f64())
+            .max(0.001),
+    );
     // [straggler] — deterministic imbalance injection (rank < 0 = none)
     let slow_rank = doc.int_or("straggler", "rank", -1);
+    let link_rank = doc.int_or("straggler", "link_rank", -1);
     cfg.sim.straggler = crate::collectives::StragglerCfg {
         slow_rank: if slow_rank < 0 {
             usize::MAX
@@ -113,6 +138,13 @@ pub fn from_toml(doc: &TomlDoc) -> Result<ExperimentConfig> {
         slow_factor: doc.float_or("straggler", "factor", 1.0),
         jitter: doc.float_or("straggler", "jitter", 0.0),
         seed: doc.int_or("straggler", "seed", 0) as u64,
+        link_rank: if link_rank < 0 {
+            usize::MAX
+        } else {
+            link_rank as usize
+        },
+        link_alpha_factor: doc.float_or("straggler", "link_alpha", 1.0),
+        link_beta_factor: doc.float_or("straggler", "link_beta", 1.0),
     };
     // same defaulting as the CLI: jitter with no explicit seed derives
     // from the master seed, and a straggler rank with no factor gets a
@@ -122,6 +154,13 @@ pub fn from_toml(doc: &TomlDoc) -> Result<ExperimentConfig> {
     }
     if cfg.sim.straggler.slow_rank != usize::MAX && cfg.sim.straggler.slow_factor == 1.0 {
         cfg.sim.straggler.slow_factor = 2.0;
+    }
+    // a bare link_rank degrades bandwidth 4x instead of silently no-opping
+    if cfg.sim.straggler.link_rank != usize::MAX
+        && cfg.sim.straggler.link_alpha_factor == 1.0
+        && cfg.sim.straggler.link_beta_factor == 1.0
+    {
+        cfg.sim.straggler.link_beta_factor = 4.0;
     }
     cfg.sim.straggler.validate(cfg.sim.n_ranks)?;
     cfg.exdyna.density = doc.float_or("exdyna", "density", 0.001);
@@ -207,6 +246,51 @@ jitter = 0.1
         let c2 = from_toml(&d).unwrap();
         assert_eq!(c2.sim.engine, crate::cluster::EngineKind::Threaded);
         assert!(!c2.sim.straggler.is_active());
+    }
+
+    #[test]
+    fn toml_transport_and_link_straggler_sections() {
+        let doc = TomlDoc::parse(
+            r#"
+[experiment]
+preset = "resnet18"
+transport = "tcp"
+[transport]
+coord_addr = "127.0.0.1:31999"
+connect_timeout_s = 5.0
+io_timeout_s = 2.5
+[straggler]
+link_rank = 2
+link_alpha = 3.0
+link_beta = 8.0
+"#,
+        )
+        .unwrap();
+        let c = from_toml(&doc).unwrap();
+        assert_eq!(c.transport, TransportKind::Tcp);
+        assert_eq!(c.net.coord_addr, "127.0.0.1:31999");
+        assert_eq!(c.net.connect_timeout, Duration::from_secs_f64(5.0));
+        assert_eq!(c.net.io_timeout, Duration::from_secs_f64(2.5));
+        assert_eq!(c.sim.straggler.link_rank, 2);
+        assert_eq!(c.sim.straggler.link_alpha_factor, 3.0);
+        assert_eq!(c.sim.straggler.link_beta_factor, 8.0);
+        assert!(c.sim.straggler.link_active());
+        // bare link_rank gets a real degradation, not a silent no-op
+        let d = TomlDoc::parse("[experiment]\npreset = \"lstm\"\n[straggler]\nlink_rank = 1\n")
+            .unwrap();
+        let c2 = from_toml(&d).unwrap();
+        assert_eq!(c2.sim.straggler.link_beta_factor, 4.0);
+        // defaults: local transport, inactive link
+        let e = TomlDoc::parse("[experiment]\npreset = \"lstm\"\n").unwrap();
+        let c3 = from_toml(&e).unwrap();
+        assert_eq!(c3.transport, TransportKind::Local);
+        assert!(!c3.sim.straggler.link_active());
+        // out-of-range link rank is rejected by validate
+        let f = TomlDoc::parse(
+            "[experiment]\npreset = \"lstm\"\nranks = 4\n[straggler]\nlink_rank = 9\n",
+        )
+        .unwrap();
+        assert!(from_toml(&f).is_err());
     }
 
     #[test]

@@ -25,6 +25,15 @@ pub enum Error {
 
     /// Invalid argument combinations from the CLI or public API.
     InvalidArg(String),
+
+    /// Wire-protocol violations on the socket transport (bad magic or
+    /// version, checksum mismatch, truncated/corrupt frames, handshake
+    /// refusals, generation divergence).
+    Protocol(String),
+
+    /// Network-level transport failures (connect/read/write timeouts,
+    /// peers lost mid-round, aborted clusters).
+    Net(String),
 }
 
 impl fmt::Display for Error {
@@ -36,6 +45,8 @@ impl fmt::Display for Error {
             Error::Manifest(m) => write!(f, "manifest: {m}"),
             Error::Invariant(m) => write!(f, "invariant: {m}"),
             Error::InvalidArg(m) => write!(f, "invalid argument: {m}"),
+            Error::Protocol(m) => write!(f, "protocol: {m}"),
+            Error::Net(m) => write!(f, "net: {m}"),
         }
     }
 }
@@ -80,6 +91,16 @@ impl Error {
     pub fn invalid(msg: impl Into<String>) -> Self {
         Error::InvalidArg(msg.into())
     }
+
+    /// Helper for wire-protocol violations.
+    pub fn protocol(msg: impl Into<String>) -> Self {
+        Error::Protocol(msg.into())
+    }
+
+    /// Helper for network transport failures.
+    pub fn net(msg: impl Into<String>) -> Self {
+        Error::Net(msg.into())
+    }
 }
 
 #[cfg(test)]
@@ -92,5 +113,7 @@ mod tests {
         assert!(Error::invalid("y").to_string().contains("invalid"));
         let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
         assert!(io.to_string().contains("gone"));
+        assert!(Error::protocol("bad frame").to_string().starts_with("protocol: "));
+        assert!(Error::net("timed out").to_string().starts_with("net: "));
     }
 }

@@ -19,19 +19,21 @@
 //!   training::{run_sim, RealTrainer}        thin harnesses: launch rank
 //!        │            │                     workers, merge IterRecords
 //!        ▼            ▼
-//!   cluster::SimWorker / rank_step          one OS thread per rank; owns
+//!   cluster::SimWorker / RankPool           one OS thread per rank; owns
 //!        │  (EngineKind::Threaded)          sparsifier replica + error
 //!        │   — or the lock-step loop,       buffers (shared-nothing)
 //!        │     kept bit-exact for parity —
 //!        ▼
-//!   cluster::Transport (LocalTransport)     data movement: rank-addressed
-//!        │                                  all-gather rendezvous
+//!   cluster::Transport                      data movement, rank-addressed
+//!        │     ├ LocalTransport             in-process rendezvous board
+//!        │     └ net::TcpTransport          one process per rank: framed
+//!        │         (codec + handshake)      checksummed wire, TCP hub
 //!        ▼
 //!   collectives::{merge_selections,         pure merge/reduce arithmetic
-//!       reduce_contributions, …}            shared by both engines
+//!       reduce_contributions, …}            shared by every engine
 //!        +
 //!   collectives::CostModel (α–β clock,      modeled wire time + the
-//!       StragglerCfg jitter hook)           straggler/imbalance injector
+//!       StragglerCfg jitter/link hook)      straggler/imbalance injector
 //!        ▲
 //!   coordinator::{partition, allocation,    the paper's contribution
 //!       selection, threshold, ExDyna}       (Algs. 1–5), replicated
@@ -45,13 +47,20 @@
 //! while the α–β [`collectives::CostModel`] separately charges what each
 //! collective would cost on the modeled cluster. The engine choice
 //! threads through [`cluster::EngineKind`] → `SimCfg`/`RealTrainerCfg` →
-//! the CLI (`--engine threaded|lockstep`); `rust/tests/engine_parity.rs`
-//! proves the two engines emit identical traces for a fixed seed.
+//! the CLI (`--engine threaded|lockstep`); the transport choice through
+//! [`cluster::TransportKind`] (`transport = "tcp"` in TOML, `exdyna
+//! launch` on the CLI — one process per rank over the
+//! [`cluster::net`] wire protocol, same-host or across hosts).
+//! `rust/tests/engine_parity.rs` proves all execution modes emit
+//! identical traces for a fixed seed — including across the process
+//! boundary.
 //!
 //! Entry points: [`training::run_sim`] for simulated multi-rank training,
 //! [`training::RealTrainer`] for end-to-end model training,
-//! [`runtime::Engine`] for executing AOT'd models, `exdyna` (the binary)
-//! for the CLI, and `benches/` for every figure/table of the paper.
+//! [`cluster::run_rank_on_transport`] for one rank of a distributed
+//! cluster, [`runtime::Engine`] for executing AOT'd models, `exdyna`
+//! (the binary) for the CLI (`sim`, `launch`, `real`, `info`), and
+//! `benches/` for every figure/table of the paper.
 
 pub mod bench;
 pub mod cli;

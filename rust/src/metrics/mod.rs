@@ -114,6 +114,67 @@ impl Trace {
             .collect()
     }
 
+    /// Read a trace back from a [`Trace::write_csv`] file. Floats are
+    /// written with Rust's shortest-round-trip `Display`, so every
+    /// finite f64 parses back bit-identical (NaN round-trips as NaN) —
+    /// which is what lets `rust/tests/engine_parity.rs` compare a trace
+    /// that crossed a process boundary against an in-process one. CSV
+    /// carries no run metadata, so `sparsifier`/`workload`/`n_ranks` are
+    /// left at their defaults.
+    pub fn read_csv(path: impl AsRef<Path>) -> crate::error::Result<Self> {
+        use crate::error::Error;
+        let text = std::fs::read_to_string(&path)?;
+        let mut lines = text.lines();
+        let header = lines
+            .next()
+            .ok_or_else(|| Error::invalid("empty trace CSV"))?;
+        if !header.starts_with("t,loss,") {
+            return Err(Error::invalid(format!(
+                "not a trace CSV (header '{header}')"
+            )));
+        }
+        let mut trace = Trace::default();
+        for (ln, line) in lines.enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let cols: Vec<&str> = line.split(',').collect();
+            if cols.len() != 13 {
+                return Err(Error::invalid(format!(
+                    "trace CSV row {}: expected 13 columns, got {}",
+                    ln + 2,
+                    cols.len()
+                )));
+            }
+            let pu = |i: usize| -> crate::error::Result<usize> {
+                cols[i].parse().map_err(|_| {
+                    Error::invalid(format!("trace CSV row {}: bad integer '{}'", ln + 2, cols[i]))
+                })
+            };
+            let pf = |i: usize| -> crate::error::Result<f64> {
+                cols[i].parse().map_err(|_| {
+                    Error::invalid(format!("trace CSV row {}: bad float '{}'", ln + 2, cols[i]))
+                })
+            };
+            trace.push(IterRecord {
+                t: pu(0)?,
+                loss: pf(1)?,
+                k_user: pu(2)?,
+                k_actual: pu(3)?,
+                k_sum: pu(4)?,
+                density: pf(5)?,
+                f_ratio: pf(6)?,
+                delta: pf(7)?,
+                global_err: pf(8)?,
+                t_compute: pf(9)?,
+                t_select: pf(10)?,
+                t_comm: pf(11)?,
+                // column 12 (t_total) is derived; recomputed on demand
+            });
+        }
+        Ok(trace)
+    }
+
     /// Write the trace as CSV (header + one row per iteration).
     pub fn write_csv(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
         if let Some(dir) = path.as_ref().parent() {
@@ -196,6 +257,38 @@ mod tests {
         let text = std::fs::read_to_string(&p).unwrap();
         assert!(text.starts_with("t,loss,"));
         assert_eq!(text.lines().count(), 2);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn csv_read_back_is_bit_exact() {
+        let mut tr = Trace::new("exdyna", "m", 2);
+        // adversarial floats: shortest-round-trip Display must survive
+        let mut r = rec(0, 1.0 / 3.0, f64::NAN);
+        r.loss = f64::NAN;
+        r.delta = 1.234_567_890_123_456_7e-12;
+        r.global_err = f64::MIN_POSITIVE;
+        tr.push(r);
+        tr.push(rec(1, 0.001, 1.5));
+        let dir = std::env::temp_dir().join(format!("exdyna_csv_rt_{}", std::process::id()));
+        let p = dir.join("t.csv");
+        tr.write_csv(&p).unwrap();
+        let back = Trace::read_csv(&p).unwrap();
+        assert_eq!(back.records.len(), tr.records.len());
+        for (a, b) in tr.records.iter().zip(back.records.iter()) {
+            assert_eq!(a.t, b.t);
+            assert_eq!(a.k_actual, b.k_actual);
+            assert!(a.loss.to_bits() == b.loss.to_bits() || (a.loss.is_nan() && b.loss.is_nan()));
+            assert_eq!(a.density.to_bits(), b.density.to_bits());
+            assert_eq!(a.delta.to_bits(), b.delta.to_bits());
+            assert_eq!(a.global_err.to_bits(), b.global_err.to_bits());
+            assert_eq!(a.t_comm.to_bits(), b.t_comm.to_bits());
+        }
+        // corrupt rows are typed errors, not panics
+        std::fs::write(dir.join("bad.csv"), "t,loss,nope\n1,2\n").unwrap();
+        assert!(Trace::read_csv(dir.join("bad.csv")).is_err());
+        std::fs::write(dir.join("bad2.csv"), "wrong header\n").unwrap();
+        assert!(Trace::read_csv(dir.join("bad2.csv")).is_err());
         std::fs::remove_dir_all(dir).ok();
     }
 }

@@ -10,10 +10,13 @@
 //! The trainer is a thin harness over per-rank state ([`RankState`]) and
 //! one shared per-rank step core ([`rank_compute_select`]):
 //!
-//! * **threaded** engine (default): every iteration fans the ranks out
-//!   onto one scoped OS thread each — fwd/bwd, error feedback, selection
-//!   and the transport-based aggregation all run rank-parallel (the
-//!   runtime is `Sync` and shared).
+//! * **threaded** engine (default): a [`RankPool`] of persistent worker
+//!   threads, one per rank, spawned once at construction and kept alive
+//!   across `step()` calls (each owns its rank's state and endpoint on a
+//!   long-lived [`LocalTransport`]; jobs and results flow over
+//!   channels). fwd/bwd, error feedback, selection and the
+//!   transport-based aggregation all run rank-parallel — with no
+//!   per-step thread spawn/join on the hot path.
 //! * **lockstep** engine: the same per-rank core runs sequentially and
 //!   the aggregation uses the lock-step collectives — the bit-exact
 //!   reference path.
@@ -38,6 +41,7 @@ use crate::sparsifiers::{CommPattern, RoundCtx, Sparsifier};
 use crate::training::data::{ClusterData, MarkovText};
 use crate::training::schedule::LrSchedule;
 use crate::util::stats::l2_norm;
+use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
 /// Where Alg. 4's threshold scan executes.
@@ -129,11 +133,29 @@ struct AggOut {
 }
 
 /// What one rank's threaded step hands back to the harness for merging:
-/// this rank's own scalars plus the (replicated) aggregate.
+/// this rank's own scalars plus the (replicated) aggregate. With the
+/// persistent pool the rank states live on the worker threads, so the
+/// post-carry error norm and threshold travel back with the result.
 struct RankStepOut {
     loss: f64,
     t_compute: f64,
     t_select: f64,
+    /// ‖err‖₂ after the carry (0 for dense).
+    err_norm: f64,
+    /// The sparsifier's threshold after `observe` (0 if none).
+    delta: f64,
+    agg: AggOut,
+}
+
+/// Engine-agnostic per-iteration outcome the harness records.
+struct StepOut {
+    losses: f64,
+    t_compute: f64,
+    t_select: f64,
+    /// Σ over ranks of the post-carry ‖err‖₂.
+    err_norm_sum: f64,
+    /// Rank 0's threshold after `observe`.
+    delta: f64,
     agg: AggOut,
 }
 
@@ -313,6 +335,8 @@ fn rank_step_threaded(
         loss,
         t_compute,
         t_select,
+        err_norm: if dense { 0.0 } else { l2_norm(&state.err) },
+        delta: state.sparsifier.delta().unwrap_or(0.0) as f64,
         agg: AggOut {
             union_idx,
             g_vals,
@@ -323,24 +347,155 @@ fn rank_step_threaded(
     })
 }
 
+/// One job for a persistent rank worker: the iteration index plus a
+/// read-only snapshot of the replicated parameters.
+struct StepJob {
+    t: usize,
+    params: Arc<Vec<f32>>,
+}
+
+/// Persistent rank workers for the threaded engine: one OS thread per
+/// rank, spawned once and kept alive across `step()` calls (ROADMAP
+/// open item — the old harness spawned scoped threads every step). Each
+/// worker owns its [`RankState`] and an endpoint on a shared long-lived
+/// [`LocalTransport`]; the harness feeds [`StepJob`]s and collects
+/// [`RankStepOut`]s over channels. A failed rank aborts the transport so
+/// its peers error out of the round instead of blocking, and the pool
+/// joins every worker on drop.
+struct RankPool {
+    jobs: Vec<mpsc::Sender<StepJob>>,
+    outs: Vec<mpsc::Receiver<Result<RankStepOut>>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl RankPool {
+    fn spawn(
+        states: Vec<RankState>,
+        rt: &Arc<ModelRuntime>,
+        workload: &Arc<Workload>,
+        net: CostModel,
+        cfg: RealTrainerCfg,
+    ) -> Self {
+        let n = states.len();
+        let transport = Arc::new(LocalTransport::new(n));
+        let mut jobs = Vec::with_capacity(n);
+        let mut outs = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for (rank, mut state) in states.into_iter().enumerate() {
+            let (job_tx, job_rx) = mpsc::channel::<StepJob>();
+            let (out_tx, out_rx) = mpsc::channel::<Result<RankStepOut>>();
+            let rt = Arc::clone(rt);
+            let workload = Arc::clone(workload);
+            let transport = Arc::clone(&transport);
+            let handle = std::thread::Builder::new()
+                .name(format!("rank{rank}"))
+                .spawn(move || {
+                    // a worker that panics (instead of returning Err)
+                    // must still poison the transport, or its peers
+                    // would block forever at the next rendezvous
+                    let _guard = crate::cluster::transport::AbortOnPanic(
+                        transport.as_ref() as &dyn Transport,
+                    );
+                    let ep = Endpoint::new(rank, transport.as_ref() as &dyn Transport);
+                    while let Ok(StepJob { t, params }) = job_rx.recv() {
+                        let out = rank_step_threaded(
+                            rank, t, &mut state, &rt, &workload, &params, &net, &cfg, &ep,
+                        );
+                        // release the snapshot BEFORE reporting back, so
+                        // the harness's Arc::make_mut never finds a live
+                        // clone and the update stays copy-free
+                        drop(params);
+                        if out.is_err() {
+                            // don't leave peers blocked at the rendezvous
+                            transport.abort();
+                        }
+                        if out_tx.send(out).is_err() {
+                            break; // harness dropped mid-run
+                        }
+                    }
+                })
+                .expect("spawn rank worker thread");
+            jobs.push(job_tx);
+            outs.push(out_rx);
+            handles.push(handle);
+        }
+        RankPool {
+            jobs,
+            outs,
+            handles,
+        }
+    }
+
+    /// Run one iteration on every rank; results are rank-ordered.
+    fn step(&self, t: usize, params: Arc<Vec<f32>>) -> Result<Vec<RankStepOut>> {
+        for tx in &self.jobs {
+            tx.send(StepJob {
+                t,
+                params: Arc::clone(&params),
+            })
+            .map_err(|_| Error::invariant("rank worker thread exited early"))?;
+        }
+        let mut oks = Vec::with_capacity(self.outs.len());
+        let mut errors = Vec::new();
+        for rx in &self.outs {
+            match rx.recv() {
+                Ok(Ok(v)) => oks.push(v),
+                Ok(Err(e)) => errors.push(e),
+                Err(_) => errors.push(Error::invariant("rank worker thread died")),
+            }
+        }
+        if !errors.is_empty() {
+            return Err(crate::cluster::engine::pick_root_cause(errors));
+        }
+        Ok(oks)
+    }
+}
+
+impl Drop for RankPool {
+    fn drop(&mut self) {
+        // closing the job channels ends every worker loop
+        self.jobs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Where the per-rank states live, by engine.
+enum EngineRanks {
+    /// Lock-step: states stay on the harness thread.
+    Inline(Vec<RankState>),
+    /// Threaded: states live on the persistent pool workers.
+    Pool(RankPool),
+}
+
 /// Distributed trainer over a PJRT model.
 pub struct RealTrainer {
-    rt: ModelRuntime,
+    rt: Arc<ModelRuntime>,
     cfg: RealTrainerCfg,
     net: CostModel,
-    ranks: Vec<RankState>,
-    /// Replicated flat parameters.
-    pub params: Vec<f32>,
-    workload: Workload,
+    ranks: EngineRanks,
+    /// Replicated flat parameters. Behind an `Arc` so the persistent
+    /// rank workers snapshot them copy-free each step; the workers drop
+    /// their clones before `step()` applies the update, so
+    /// `Arc::make_mut` never actually copies in the steady state.
+    pub params: Arc<Vec<f32>>,
+    workload: Arc<Workload>,
     /// Trace of the run.
     pub trace: Trace,
     /// Held-out evaluations.
     pub evals: Vec<EvalPoint>,
     sim_clock: f64,
+    /// Constant per run: rank 0's sparsifier communication pattern.
+    dense: bool,
+    /// Constant per run: rank 0's target density.
+    target_density: f64,
 }
 
 impl RealTrainer {
     /// Build a trainer: one sparsifier replica per rank from `make`.
+    /// Under the threaded engine this also spawns the persistent rank
+    /// workers, which live until the trainer is dropped.
     pub fn new(
         rt: ModelRuntime,
         cfg: RealTrainerCfg,
@@ -348,7 +503,7 @@ impl RealTrainer {
     ) -> Result<Self> {
         let n_params = rt.meta.n_params;
         let n_padded = rt.meta.n_padded;
-        let ranks: Vec<RankState> = (0..cfg.n_ranks)
+        let states: Vec<RankState> = (0..cfg.n_ranks)
             .map(|_| -> Result<RankState> {
                 Ok(RankState {
                     sparsifier: make(n_params, cfg.n_ranks)?,
@@ -366,11 +521,25 @@ impl RealTrainer {
             "transformer" => Workload::Lm(MarkovText::new(rt.meta.vocab, 0.9, cfg.seed ^ 0x7EE7)),
             other => return Err(Error::invalid(format!("unknown model kind '{other}'"))),
         };
-        let params = rt.init_params(cfg.seed)?;
-        let name = ranks[0].sparsifier.name();
+        let params = Arc::new(rt.init_params(cfg.seed)?);
+        let name = states[0].sparsifier.name();
+        let dense = matches!(
+            states[0].sparsifier.comm_pattern(),
+            CommPattern::DenseAllReduce
+        );
+        let target_density = states[0].sparsifier.target_density();
+        let net = CostModel::paper_testbed(cfg.n_ranks);
+        let rt = Arc::new(rt);
+        let workload = Arc::new(workload);
+        let ranks = match cfg.engine {
+            EngineKind::Lockstep => EngineRanks::Inline(states),
+            EngineKind::Threaded => {
+                EngineRanks::Pool(RankPool::spawn(states, &rt, &workload, net, cfg))
+            }
+        };
         Ok(RealTrainer {
-            net: CostModel::paper_testbed(cfg.n_ranks),
-            trace: Trace::new(&name, &rt.meta.name.clone(), cfg.n_ranks),
+            net,
+            trace: Trace::new(&name, &rt.meta.name, cfg.n_ranks),
             ranks,
             params,
             workload,
@@ -378,6 +547,8 @@ impl RealTrainer {
             cfg,
             evals: Vec::new(),
             sim_clock: 0.0,
+            dense,
+            target_density,
         })
     }
 
@@ -395,18 +566,22 @@ impl RealTrainer {
     }
 
     /// One sequential (lock-step) iteration: per-rank core for every
-    /// rank, then the lock-step collectives, then carry/observe. Returns
-    /// `(summed losses, max t_compute, max t_select, aggregate)`.
-    fn step_lockstep(&mut self, t: usize) -> Result<(f64, f64, f64, AggOut)> {
+    /// rank, then the lock-step collectives, then carry/observe.
+    fn step_lockstep(&mut self, t: usize) -> Result<StepOut> {
         let n = self.cfg.n_ranks;
         let n_params = self.rt.meta.n_params;
-        let dense = matches!(
-            self.ranks[0].sparsifier.comm_pattern(),
-            CommPattern::DenseAllReduce
-        );
+        let dense = self.dense;
+        let ranks = match &mut self.ranks {
+            EngineRanks::Inline(r) => r,
+            EngineRanks::Pool(_) => {
+                return Err(Error::invariant(
+                    "lock-step stepping a pool-backed trainer",
+                ))
+            }
+        };
 
         let mut cores: Vec<ComputeSelect> = Vec::with_capacity(n);
-        for (rank, state) in self.ranks.iter_mut().enumerate() {
+        for (rank, state) in ranks.iter_mut().enumerate() {
             cores.push(rank_compute_select(
                 rank,
                 t,
@@ -429,7 +604,7 @@ impl RealTrainer {
                 .map(|c| std::mem::take(&mut c.out))
                 .collect();
             let accs: Vec<&[f32]> = cores.iter().map(|c| &c.acc[..n_params]).collect();
-            match self.ranks[0].sparsifier.comm_pattern() {
+            match ranks[0].sparsifier.comm_pattern() {
                 CommPattern::DenseAllReduce => {
                     let idx: Vec<u32> = (0..n_params as u32).collect();
                     let (vals, _) = sparse_allreduce_union(&accs, &idx, &self.net);
@@ -461,116 +636,100 @@ impl RealTrainer {
             }
         }
 
-        for (state, core) in self.ranks.iter_mut().zip(cores.into_iter()) {
+        for (state, core) in ranks.iter_mut().zip(cores.into_iter()) {
             rank_carry_and_observe(state, core.acc, &union_idx, &k_by_rank, t, dense)?;
         }
+        let err_norm_sum = if dense {
+            0.0
+        } else {
+            ranks.iter().map(|r| l2_norm(&r.err)).sum::<f64>()
+        };
+        let delta = ranks[0].sparsifier.delta().unwrap_or(0.0) as f64;
 
-        Ok((
+        Ok(StepOut {
             losses,
             t_compute,
             t_select,
-            AggOut {
+            err_norm_sum,
+            delta,
+            agg: AggOut {
                 union_idx,
                 g_vals,
                 k_by_rank,
                 f_ratio,
                 t_comm,
             },
-        ))
+        })
     }
 
-    /// One threaded iteration: fan every rank onto its own scoped thread
-    /// over a fresh transport. (Spawning per step is deliberate for now:
-    /// `step()` is the public granularity and the fwd/bwd dominates the
-    /// spawn cost for real models; persistent run-length workers like
-    /// `cluster::run_threaded`'s are an open item for the hot path.)
-    fn step_threaded(&mut self, t: usize) -> Result<(f64, f64, f64, AggOut)> {
-        let n = self.cfg.n_ranks;
-        let transport = LocalTransport::new(n);
-        let rt = &self.rt;
-        let workload = &self.workload;
-        let net = &self.net;
-        let cfg = &self.cfg;
-        let params_ro: &[f32] = &self.params;
-
-        let results: Vec<Result<RankStepOut>> = std::thread::scope(|scope| {
-            let transport = &transport;
-            let mut handles = Vec::with_capacity(n);
-            for (rank, state) in self.ranks.iter_mut().enumerate() {
-                handles.push(scope.spawn(move || {
-                    let ep = Endpoint::new(rank, transport as &dyn Transport);
-                    let out = rank_step_threaded(
-                        rank, t, state, rt, workload, params_ro, net, cfg, &ep,
-                    );
-                    if out.is_err() {
-                        transport.abort();
-                    }
-                    out
-                }));
+    /// One threaded iteration: dispatch the step to the persistent rank
+    /// workers and merge their rank-ordered results. The only per-step
+    /// cost beyond the work itself is one parameter snapshot (the
+    /// workers read it lock-free through an `Arc`).
+    fn step_threaded(&mut self, t: usize) -> Result<StepOut> {
+        let pool = match &self.ranks {
+            EngineRanks::Pool(p) => p,
+            EngineRanks::Inline(_) => {
+                return Err(Error::invariant(
+                    "threaded stepping an inline-state trainer",
+                ))
             }
-            handles
-                .into_iter()
-                .map(|h| {
-                    h.join()
-                        .unwrap_or_else(|_| Err(Error::invariant("rank worker panicked")))
-                })
-                .collect()
-        });
-        let mut per_rank = Vec::with_capacity(n);
-        let mut errors = Vec::new();
-        for r in results {
-            match r {
-                Ok(v) => per_rank.push(v),
-                Err(e) => errors.push(e),
-            }
-        }
-        if !errors.is_empty() {
-            return Err(crate::cluster::engine::pick_root_cause(errors));
-        }
+        };
+        let mut per_rank = pool.step(t, Arc::clone(&self.params))?;
         let losses: f64 = per_rank.iter().map(|o| o.loss).sum();
         let t_compute = per_rank.iter().fold(0.0f64, |a, o| a.max(o.t_compute));
         let t_select = per_rank.iter().fold(0.0f64, |a, o| a.max(o.t_select));
+        let err_norm_sum: f64 = per_rank.iter().map(|o| o.err_norm).sum();
         // every rank computed the identical aggregate; keep rank 0's
         let first = per_rank.swap_remove(0);
-        Ok((losses, t_compute, t_select, first.agg))
+        Ok(StepOut {
+            losses,
+            t_compute,
+            t_select,
+            err_norm_sum,
+            delta: first.delta,
+            agg: first.agg,
+        })
     }
 
     /// Run one training iteration; returns the record pushed to the trace.
     pub fn step(&mut self, t: usize) -> Result<IterRecord> {
         let n = self.cfg.n_ranks;
         let n_params = self.rt.meta.n_params;
-        let (losses, t_compute, t_select, agg) = match self.cfg.engine {
+        let out = match self.cfg.engine {
             EngineKind::Lockstep => self.step_lockstep(t)?,
             EngineKind::Threaded => self.step_threaded(t)?,
         };
+        let agg = out.agg;
 
-        // --- model update x -= (1/n) g_t (lr already folded in acc)
-        apply_sparse_update(&mut self.params, &agg.union_idx, &agg.g_vals, 1.0 / n as f32);
-
-        let dense = matches!(
-            self.ranks[0].sparsifier.comm_pattern(),
-            CommPattern::DenseAllReduce
+        // --- model update x -= (1/n) g_t (lr already folded in acc);
+        // the workers have dropped their snapshots by now, so make_mut
+        // mutates in place without copying
+        apply_sparse_update(
+            Arc::make_mut(&mut self.params),
+            &agg.union_idx,
+            &agg.g_vals,
+            1.0 / n as f32,
         );
-        let global_err = if dense {
+
+        let global_err = if self.dense {
             0.0
         } else {
-            self.ranks.iter().map(|r| l2_norm(&r.err)).sum::<f64>() / n as f64
+            out.err_norm_sum / n as f64
         };
         let k_actual = agg.union_idx.len();
         let rec = IterRecord {
             t,
-            loss: losses / n as f64,
-            k_user: ((self.ranks[0].sparsifier.target_density() * n_params as f64).round()
-                as usize)
-                .max(1),
+            loss: out.losses / n as f64,
+            k_user: ((self.target_density * n_params as f64).round() as usize).max(1),
             k_actual,
             k_sum: agg.k_by_rank.iter().sum(),
             density: k_actual as f64 / n_params as f64,
             f_ratio: agg.f_ratio,
-            delta: self.ranks[0].sparsifier.delta().unwrap_or(0.0) as f64,
+            delta: out.delta,
             global_err,
-            t_compute,
-            t_select,
+            t_compute: out.t_compute,
+            t_select: out.t_select,
             t_comm: agg.t_comm,
         };
         self.sim_clock += rec.t_total();

@@ -15,6 +15,12 @@
 //!   kept for bit-exact comparison; `rust/tests/engine_parity.rs` proves
 //!   both engines emit identical traces for a fixed seed.
 //!
+//! A third execution mode lives outside this module: `exdyna launch`
+//! runs the same per-rank loop with one OS *process* per rank over the
+//! TCP transport ([`crate::cluster::run_rank_on_transport`] +
+//! [`crate::cluster::net`]); its merged trace is pinned bit-exact
+//! against both in-process engines by the same parity suite.
+//!
 //! Timing semantics (per iteration, ranks run in parallel on a cluster):
 //! * `t_compute` = modeled fwd/bwd time, max over ranks under the
 //!   deterministic straggler/jitter model

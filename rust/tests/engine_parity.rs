@@ -1,6 +1,8 @@
-//! Engine parity: the threaded worker/transport cluster engine and the
-//! legacy lock-step engine must produce identical traces for a fixed
-//! seed — while the threaded engine really runs one OS thread per rank.
+//! Engine parity: the threaded worker/transport cluster engine, the
+//! legacy lock-step engine, AND the multi-process TCP launch path must
+//! produce identical traces for a fixed seed — while the threaded
+//! engine really runs one OS thread per rank and the TCP path really
+//! runs one process per rank over loopback sockets.
 //!
 //! Also pins the empty-round regression: rounds where nothing is
 //! selected carry `f_ratio = NaN` and must not poison
@@ -132,6 +134,7 @@ fn parity_holds_under_straggler_injection() {
         slow_factor: 3.0,
         jitter: 0.2,
         seed: 11,
+        ..Default::default()
     };
     let factory = make_sparsifier_factory("exdyna", 0.002, 0.01, ExDynaCfg::default_for(n)).unwrap();
     let mut c_lock = cfg(n, 10, EngineKind::Lockstep);
@@ -149,6 +152,106 @@ fn parity_holds_under_straggler_injection() {
             r.t_compute
         );
     }
+}
+
+#[test]
+fn parity_holds_under_link_degradation() {
+    // the heterogeneous-network variant: one rank's degraded NIC inflates
+    // every collective's modeled (α, β) identically on both engines
+    let n = 4;
+    let gen = small_gen(n);
+    let straggler = StragglerCfg {
+        link_rank: 1,
+        link_alpha_factor: 2.0,
+        link_beta_factor: 6.0,
+        ..Default::default()
+    };
+    let factory = make_sparsifier_factory("exdyna", 0.002, 0.01, ExDynaCfg::default_for(n)).unwrap();
+    let baseline = run_sim(&gen, factory.as_ref(), &cfg(n, 10, EngineKind::Lockstep)).unwrap();
+    let mut c_lock = cfg(n, 10, EngineKind::Lockstep);
+    c_lock.straggler = straggler;
+    let mut c_thr = cfg(n, 10, EngineKind::Threaded);
+    c_thr.straggler = straggler;
+    let lock = run_sim(&gen, factory.as_ref(), &c_lock).unwrap();
+    let thr = run_sim(&gen, factory.as_ref(), &c_thr).unwrap();
+    assert_traces_identical(&lock, &thr, "link straggler");
+    // the degraded link must actually inflate the modeled wire time —
+    // and only the wire time (compute clock untouched)
+    for (slow, base) in lock.records.iter().zip(baseline.records.iter()) {
+        assert!(
+            slow.t_comm > base.t_comm,
+            "t={}: degraded link must slow comm ({} vs {})",
+            slow.t,
+            slow.t_comm,
+            base.t_comm
+        );
+        assert_eq!(
+            slow.t_compute.to_bits(),
+            base.t_compute.to_bits(),
+            "t={}: link degradation must not touch compute",
+            slow.t
+        );
+    }
+}
+
+/// The acceptance test of the socket-transport subsystem: a single-host
+/// `launch` run (one OS process per rank over TCP loopback) must emit a
+/// merged trace bit-identical to both in-process engines on the same
+/// seed. `--ranks 3 --scale 0.01` makes the launcher resolve exactly the
+/// `preset("resnet18", 0.01, 3, 8)` config built below.
+#[test]
+fn tcp_multiprocess_trace_matches_local_and_lockstep() {
+    let exe = env!("CARGO_BIN_EXE_exdyna");
+    let dir = std::env::temp_dir().join(format!("exdyna_tcp_parity_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = dir.join("tcp_trace.csv");
+    let output = std::process::Command::new(exe)
+        .args([
+            "launch",
+            "--ranks",
+            "3",
+            "--preset",
+            "resnet18",
+            "--scale",
+            "0.01",
+            "--iters",
+            "8",
+            "--seed",
+            "17",
+            "--density",
+            "0.002",
+            "--connect-timeout-s",
+            "120",
+            "--io-timeout-s",
+            "120",
+            "--out",
+            out.to_str().unwrap(),
+        ])
+        .output()
+        .expect("failed to spawn the single-host launcher");
+    assert!(
+        output.status.success(),
+        "launch failed (exit {:?})\nstdout:\n{}\nstderr:\n{}",
+        output.status.code(),
+        String::from_utf8_lossy(&output.stdout),
+        String::from_utf8_lossy(&output.stderr)
+    );
+    let tcp = Trace::read_csv(&out).expect("rank 0 must have written the merged trace");
+    assert_eq!(tcp.records.len(), 8);
+
+    // the identical experiment, in-process, on both engines
+    let mut cfg = exdyna::config::preset("resnet18", 0.01, 3, 8).unwrap();
+    cfg.sim.seed = 17;
+    let gen = SynthGen::new(cfg.model.clone(), 3, cfg.sim.rho, cfg.sim.seed, cfg.sim.exact_gen);
+    let factory = make_sparsifier_factory("exdyna", 0.002, cfg.hard_delta, cfg.exdyna).unwrap();
+    cfg.sim.engine = EngineKind::Lockstep;
+    let lock = run_sim(&gen, factory.as_ref(), &cfg.sim).unwrap();
+    cfg.sim.engine = EngineKind::Threaded;
+    let thr = run_sim(&gen, factory.as_ref(), &cfg.sim).unwrap();
+
+    assert_traces_identical(&tcp, &lock, "tcp-multiprocess vs lockstep");
+    assert_traces_identical(&tcp, &thr, "tcp-multiprocess vs threaded");
+    std::fs::remove_dir_all(dir).ok();
 }
 
 #[test]

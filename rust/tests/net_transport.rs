@@ -1,0 +1,281 @@
+//! Failure-path coverage for the socket transport (ISSUE 2 satellite):
+//! handshake rejections (rank collision, wrong world size, bad rank
+//! claims, undecodable garbage), mid-round peer loss surfacing a typed
+//! error on every rank within the timeout (no deadlock), and abort
+//! poisoning across the process... well, socket boundary. Everything
+//! runs in-process over loopback — the true multi-process path is
+//! covered by `engine_parity.rs`.
+
+use exdyna::cluster::net::codec::{read_frame, write_frame, Frame};
+use exdyna::cluster::net::{free_loopback_addr, NetCfg, TcpTransport};
+use exdyna::cluster::{run_rank_on_transport, run_threaded, Transport};
+use exdyna::coordinator::{ExDyna, ExDynaCfg};
+use exdyna::error::Result;
+use exdyna::grad::synth::{DecayCfg, SynthGen, SynthModel};
+use exdyna::sparsifiers::Sparsifier;
+use exdyna::training::sim::SimCfg;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn net_cfg(addr: &str, connect_s: f64, io_s: f64) -> NetCfg {
+    NetCfg {
+        coord_addr: addr.to_string(),
+        connect_timeout: Duration::from_secs_f64(connect_s),
+        io_timeout: Duration::from_secs_f64(io_s),
+    }
+}
+
+/// Concurrently construct a full n-rank loopback cluster.
+fn loopback_cluster(n: usize, io_s: f64) -> Vec<Arc<TcpTransport>> {
+    let addr = free_loopback_addr().unwrap();
+    let mut clients = Vec::new();
+    for rank in 1..n {
+        let cfg = net_cfg(&addr, 60.0, io_s);
+        clients.push(std::thread::spawn(move || {
+            TcpTransport::client(n, rank, &cfg).map(Arc::new)
+        }));
+    }
+    let hub = Arc::new(TcpTransport::hub(n, &net_cfg(&addr, 60.0, io_s)).unwrap());
+    let mut out = vec![hub];
+    for c in clients {
+        out.push(c.join().unwrap().unwrap());
+    }
+    out
+}
+
+/// Dial the hub with retries and send one Hello, returning the stream.
+fn raw_hello(addr: &str, world: u32, rank: u32) -> TcpStream {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut stream = loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => break s,
+            Err(e) => {
+                assert!(Instant::now() < deadline, "connect: {e}");
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    };
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    write_frame(&mut stream, &Frame::Hello { world, rank }).unwrap();
+    stream
+}
+
+#[test]
+fn rank_collision_rejects_the_second_claimant() {
+    // deterministic sequence: claimant A takes rank 2, then claimant B
+    // tries the same rank while the hub is still waiting for rank 1 —
+    // B must get a typed Reject and A must keep its slot
+    let n = 3;
+    let addr = free_loopback_addr().unwrap();
+    let hub_cfg = net_cfg(&addr, 30.0, 5.0);
+    let hub = std::thread::spawn(move || TcpTransport::hub(n, &hub_cfg));
+
+    let mut claimant_a = raw_hello(&addr, 3, 2);
+    std::thread::sleep(Duration::from_millis(300)); // let the hub seat A
+    let mut claimant_b = raw_hello(&addr, 3, 2);
+    match read_frame(&mut claimant_b).unwrap() {
+        Frame::Reject { reason } => {
+            assert!(reason.contains("already claimed"), "{reason}")
+        }
+        other => panic!("expected Reject for the duplicate claim, got {other:?}"),
+    }
+
+    // rank 1 arrives; the cluster completes and A is welcomed
+    let r1_cfg = net_cfg(&addr, 30.0, 5.0);
+    let r1 = std::thread::spawn(move || TcpTransport::client(n, 1, &r1_cfg));
+    match read_frame(&mut claimant_a).unwrap() {
+        Frame::Welcome { world } => assert_eq!(world, 3),
+        other => panic!("expected Welcome for the first claim, got {other:?}"),
+    }
+    assert!(r1.join().unwrap().is_ok());
+    assert!(hub.join().unwrap().is_ok());
+}
+
+#[test]
+fn wrong_world_size_is_rejected_and_hub_times_out() {
+    let n = 2;
+    let addr = free_loopback_addr().unwrap();
+    let client_cfg = net_cfg(&addr, 10.0, 2.0);
+    let client = std::thread::spawn(move || {
+        // claims world 5 against a world-2 hub
+        TcpTransport::client(5, 1, &client_cfg)
+    });
+    let hub_err = TcpTransport::hub(n, &net_cfg(&addr, 1.5, 1.0))
+        .err()
+        .expect("no valid rank 1 ever arrives")
+        .to_string();
+    assert!(hub_err.contains("timed out"), "{hub_err}");
+    let client_err = client.join().unwrap().err().expect("must be rejected").to_string();
+    assert!(client_err.contains("world size mismatch"), "{client_err}");
+}
+
+#[test]
+fn out_of_range_rank_claim_is_rejected_on_the_wire() {
+    let n = 2;
+    let addr = free_loopback_addr().unwrap();
+    let probe_addr = addr.clone();
+    let probe = std::thread::spawn(move || {
+        // hand-roll a Hello claiming an impossible rank
+        let mut stream = raw_hello(&probe_addr, 2, 7);
+        read_frame(&mut stream)
+    });
+    let hub_err = TcpTransport::hub(n, &net_cfg(&addr, 1.5, 1.0));
+    assert!(hub_err.is_err(), "rank 1 never legitimately arrives");
+    match probe.join().unwrap().unwrap() {
+        Frame::Reject { reason } => assert!(reason.contains("out of range"), "{reason}"),
+        other => panic!("expected Reject, got {other:?}"),
+    }
+}
+
+#[test]
+fn garbage_bytes_never_claim_a_rank() {
+    let n = 2;
+    let addr = free_loopback_addr().unwrap();
+    let probe_addr = addr.clone();
+    let probe = std::thread::spawn(move || {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let mut stream = loop {
+            match TcpStream::connect(&probe_addr) {
+                Ok(s) => break s,
+                Err(_) if Instant::now() < deadline => {
+                    std::thread::sleep(Duration::from_millis(20))
+                }
+                Err(e) => panic!("connect: {e}"),
+            }
+        };
+        use std::io::Write;
+        let _ = stream.write_all(b"GET / HTTP/1.1\r\n\r\n");
+        // keep the socket open so only the deadline can end the wait
+        std::thread::sleep(Duration::from_secs(2));
+    });
+    let err = TcpTransport::hub(n, &net_cfg(&addr, 1.5, 1.0))
+        .err()
+        .expect("garbage must not satisfy the rendezvous")
+        .to_string();
+    assert!(err.contains("timed out"), "{err}");
+    probe.join().unwrap();
+}
+
+#[test]
+fn mid_round_peer_loss_errors_all_ranks_within_timeout() {
+    let n = 3;
+    let io_s = 3.0;
+    let mut tps = loopback_cluster(n, io_s);
+    let rank2 = tps.pop().unwrap();
+    let rank1 = tps.pop().unwrap();
+    let hub = tps.pop().unwrap();
+
+    // rank 2 dies before the first round
+    drop(rank2);
+
+    let started = Instant::now();
+    let h1 = std::thread::spawn(move || {
+        let res = rank1.allgather(1, exdyna::cluster::Message::Scalar(1.0));
+        if res.is_err() {
+            rank1.abort();
+        }
+        res.map(|_| ())
+    });
+    let h0 = std::thread::spawn(move || {
+        let res = hub.allgather(0, exdyna::cluster::Message::Scalar(0.0));
+        if res.is_err() {
+            // a failed worker poisons the transport for its peers
+            hub.abort();
+        }
+        res.map(|_| ())
+    });
+    let r0 = h0.join().unwrap();
+    let r1 = h1.join().unwrap();
+    let elapsed = started.elapsed();
+    assert!(r0.is_err(), "hub must surface the lost peer");
+    assert!(r1.is_err(), "surviving client must error, not hang");
+    // bounded: EOF propagation is immediate; allow generous slack but
+    // stay well under any deadlock-scale wait
+    assert!(
+        elapsed < Duration::from_secs_f64(3.0 * io_s),
+        "errors took {elapsed:?}, expected well under 3x io_timeout"
+    );
+    let msg = r0.unwrap_err().to_string();
+    assert!(
+        msg.contains("rank 2") || msg.contains("closed") || msg.contains("timed out"),
+        "typed root cause: {msg}"
+    );
+}
+
+#[test]
+fn client_abort_poisons_the_hub() {
+    let n = 2;
+    let mut tps = loopback_cluster(n, 3.0);
+    let client = tps.pop().unwrap();
+    let hub = tps.pop().unwrap();
+    client.abort();
+    let err = hub
+        .allgather(0, exdyna::cluster::Message::Scalar(0.0))
+        .unwrap_err()
+        .to_string();
+    assert!(
+        err.contains("abort") || err.contains("closed"),
+        "hub must see the abort: {err}"
+    );
+    // and the aborting side fails fast locally
+    let err = client
+        .allgather(1, exdyna::cluster::Message::Scalar(0.0))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("poisoned"), "{err}");
+}
+
+/// In-process end-to-end: the full SimWorker loop over TCP loopback
+/// matches the threaded in-process engine bit-exactly (the process-
+/// boundary version of this lives in `engine_parity.rs`).
+#[test]
+fn simworker_over_tcp_matches_threaded_engine() {
+    let n = 2;
+    let model = SynthModel::profile("tcp-e2e", 48_000, 6, 5, DecayCfg::default());
+    let gen = SynthGen::new(model, n, 0.5, 23, false);
+    let cfg = SimCfg {
+        n_ranks: n,
+        iters: 5,
+        compute_s: 0.01,
+        ..Default::default()
+    };
+    let mk = |n_g: usize, nr: usize| -> Result<Box<dyn Sparsifier>> {
+        Ok(Box::new(ExDyna::new(n_g, nr, ExDynaCfg::default_for(nr))?))
+    };
+    let reference = run_threaded(&gen, &mk, &cfg).unwrap();
+
+    let tps = loopback_cluster(n, 30.0);
+    let traces: Vec<_> = std::thread::scope(|scope| {
+        let gen = &gen;
+        let cfg = &cfg;
+        let handles: Vec<_> = tps
+            .iter()
+            .enumerate()
+            .map(|(rank, tp)| {
+                let tp = Arc::clone(tp);
+                scope.spawn(move || {
+                    run_rank_on_transport(gen, &mk, cfg, rank, tp.as_ref() as &dyn Transport)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap().unwrap()).collect()
+    });
+    for (rank, trace) in traces.iter().enumerate() {
+        assert_eq!(trace.records.len(), cfg.iters, "rank {rank}");
+        for (a, b) in trace.records.iter().zip(reference.records.iter()) {
+            assert_eq!(a.k_actual, b.k_actual, "rank {rank} t={}", a.t);
+            assert_eq!(a.k_sum, b.k_sum, "rank {rank} t={}", a.t);
+            assert_eq!(a.delta.to_bits(), b.delta.to_bits(), "rank {rank} t={}", a.t);
+            assert_eq!(
+                a.global_err.to_bits(),
+                b.global_err.to_bits(),
+                "rank {rank} t={}",
+                a.t
+            );
+            assert_eq!(a.t_comm.to_bits(), b.t_comm.to_bits(), "rank {rank} t={}", a.t);
+        }
+    }
+}
