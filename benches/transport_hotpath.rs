@@ -1,0 +1,204 @@
+//! Transport hot-path microbench (ISSUE 3): per-round harness overhead
+//! of the collective round itself — padded selection all-gather + sparse
+//! union all-reduce + one scalar round — with the model compute and the
+//! sparsifier taken out of the loop (fixed selections), so what's
+//! measured is exactly the cost the paper says must stay negligible.
+//!
+//! Reports, per transport (local = in-process shared-board rendezvous,
+//! tcp = hub-star over loopback sockets) and cluster size n ∈ {2, 8, 16}:
+//! * wall-clock µs per round (whole cluster, steady state);
+//! * heap bytes + allocation count per round (counting global
+//!   allocator, enabled after warm-up) — the "MB copied" axis: with the
+//!   Arc-shared board this is ~0 for the local transport instead of the
+//!   old O(n²·k) per-round board clones.
+//!
+//! Run: `cargo bench --bench transport_hotpath [-- --quick]`
+
+use exdyna::cluster::net::{free_loopback_addr, NetCfg, TcpTransport};
+use exdyna::cluster::{Endpoint, LocalTransport, Transport};
+use exdyna::collectives::{
+    allgather_sparse_rk, sparse_allreduce_union_rk, CostModel, RoundScratch,
+};
+use exdyna::coordinator::SelectOutput;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static BYTES: AtomicU64 = AtomicU64::new(0);
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if ENABLED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+const K_PER_RANK: usize = 512;
+
+/// One rank's steady loop; rank 0 opens/closes the counting window and
+/// measures the steady wall time.
+fn rank_loop(
+    rank: usize,
+    n: usize,
+    tp: &dyn Transport,
+    warmup: usize,
+    steady: usize,
+) -> Duration {
+    let ep = Endpoint::new(rank, tp);
+    let net = CostModel::paper_testbed(n);
+    let sel = Arc::new(SelectOutput {
+        idx: ((rank * K_PER_RANK) as u32..((rank + 1) * K_PER_RANK) as u32).collect(),
+        val: vec![0.25f32; K_PER_RANK],
+    });
+    let acc = vec![0.5f32; n * K_PER_RANK];
+    let mut scratch = RoundScratch::new();
+    let mut started = Instant::now();
+    for round in 0..(warmup + steady) {
+        if rank == 0 && round == warmup {
+            ENABLED.store(true, Ordering::SeqCst);
+            started = Instant::now();
+        }
+        allgather_sparse_rk(
+            &ep,
+            Arc::clone(&sel),
+            &net,
+            &mut scratch.union_idx,
+            &mut scratch.k_by_rank,
+        )
+        .unwrap();
+        sparse_allreduce_union_rk(
+            &ep,
+            &acc,
+            &scratch.union_idx,
+            &net,
+            &mut scratch.send,
+            &mut scratch.reduced,
+        )
+        .unwrap();
+        ep.allgather_f64_fold(rank as f64, 0.0f64, |a, x| a.max(x))
+            .unwrap();
+    }
+    let steady_wall = started.elapsed();
+    if rank == 0 {
+        ENABLED.store(false, Ordering::SeqCst);
+    }
+    ep.barrier().unwrap();
+    steady_wall
+}
+
+struct Row {
+    mode: &'static str,
+    n: usize,
+    steady: usize,
+    wall: Duration,
+    allocs: u64,
+    bytes: u64,
+}
+
+impl Row {
+    fn print(&self) {
+        let us = self.wall.as_secs_f64() * 1e6 / self.steady as f64;
+        println!(
+            "{},{},{},{:.1},{:.1},{:.1}",
+            self.mode,
+            self.n,
+            self.steady,
+            us,
+            self.allocs as f64 / self.steady as f64,
+            self.bytes as f64 / self.steady as f64,
+        );
+    }
+}
+
+fn bench_local(n: usize, warmup: usize, steady: usize) -> Row {
+    ENABLED.store(false, Ordering::SeqCst);
+    ALLOCS.store(0, Ordering::SeqCst);
+    BYTES.store(0, Ordering::SeqCst);
+    let tp = Arc::new(LocalTransport::new(n));
+    let mut handles = Vec::with_capacity(n);
+    for rank in 0..n {
+        let tp = tp.clone();
+        handles.push(std::thread::spawn(move || {
+            rank_loop(rank, n, tp.as_ref(), warmup, steady)
+        }));
+    }
+    let mut wall = Duration::ZERO;
+    for (rank, h) in handles.into_iter().enumerate() {
+        let w = h.join().unwrap();
+        if rank == 0 {
+            wall = w;
+        }
+    }
+    Row {
+        mode: "local",
+        n,
+        steady,
+        wall,
+        allocs: ALLOCS.load(Ordering::SeqCst),
+        bytes: BYTES.load(Ordering::SeqCst),
+    }
+}
+
+fn bench_tcp(n: usize, warmup: usize, steady: usize) -> Row {
+    ENABLED.store(false, Ordering::SeqCst);
+    ALLOCS.store(0, Ordering::SeqCst);
+    BYTES.store(0, Ordering::SeqCst);
+    let addr = free_loopback_addr().unwrap();
+    let cfg = |addr: &str| NetCfg {
+        coord_addr: addr.to_string(),
+        connect_timeout: Duration::from_secs(60),
+        io_timeout: Duration::from_secs(60),
+    };
+    let mut client_handles = Vec::with_capacity(n);
+    for rank in 1..n {
+        let c = cfg(&addr);
+        client_handles.push(std::thread::spawn(move || {
+            let tp = TcpTransport::client(n, rank, &c).unwrap();
+            rank_loop(rank, n, &tp, warmup, steady)
+        }));
+    }
+    let hub = TcpTransport::hub(n, &cfg(&addr)).unwrap();
+    let wall = rank_loop(0, n, &hub, warmup, steady);
+    for h in client_handles {
+        h.join().unwrap();
+    }
+    Row {
+        mode: "tcp",
+        n,
+        steady,
+        wall,
+        allocs: ALLOCS.load(Ordering::SeqCst),
+        bytes: BYTES.load(Ordering::SeqCst),
+    }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (local_rounds, tcp_rounds) = if quick { (500, 100) } else { (2000, 400) };
+    println!(
+        "# transport hot path: k = {K_PER_RANK}/rank selection + union all-reduce + scalar round"
+    );
+    println!("# (allocs/bytes are per whole-cluster round, counted after warm-up)");
+    println!("mode,ranks,rounds,us_per_round,allocs_per_round,bytes_per_round");
+    for n in [2usize, 8, 16] {
+        bench_local(n, 20, local_rounds).print();
+    }
+    for n in [2usize, 8, 16] {
+        bench_tcp(n, 10, tcp_rounds).print();
+    }
+}

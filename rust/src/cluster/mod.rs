@@ -5,19 +5,32 @@
 //! the worker count grows — so the trainer models a cluster, not a loop:
 //!
 //! * [`transport`] — the [`Transport`] abstraction collectives move
-//!   messages over. Data movement is real; the α–β [`CostModel`] charges
-//!   what the operation would cost on the modeled wire. Two
+//!   messages over. Data movement is real but *zero-copy*: payloads are
+//!   `Arc`-shared and an all-gather returns the whole rank-indexed board
+//!   as one shared `Arc<[Message]>` slab, so fanning a round out to n
+//!   ranks is O(n) refcount bumps rather than O(n²·k) element copies.
+//!   The α–β [`CostModel`] independently charges what the operation
+//!   would cost on the modeled wire (padded payloads, every rank's
+//!   contribution) — the modeled clock always bills the real byte
+//!   volume, regardless of how cheaply the harness moved it. Two
 //!   implementations:
 //!   * [`LocalTransport`] — in-process rendezvous (mutex/condvar slot
-//!     board) for one OS thread per rank;
+//!     board) for one OS thread per rank; published board slabs are
+//!     double-buffered and recycled, so steady-state rounds make zero
+//!     heap allocations (pinned by `rust/tests/alloc_regression.rs`);
 //!   * [`net::TcpTransport`] — hub-mediated TCP star for one *process*
 //!     per rank (same host or across hosts), with a length-prefixed
-//!     checksummed wire codec ([`net::codec`]), a rank-claim handshake
-//!     ([`net::handshake`]), deadline-bounded IO and abort poisoning
-//!     that closes sockets so peers error out instead of hanging.
+//!     checksummed wire codec doing bulk little-endian slab conversion
+//!     ([`net::codec`]), persistent per-connection encode/decode
+//!     buffers, a rank-claim handshake ([`net::handshake`]),
+//!     deadline-bounded IO and abort poisoning that closes sockets so
+//!     peers error out instead of hanging.
 //! * [`worker`] — [`SimWorker`]: one rank's Alg. 1 loop (own sparsifier
-//!   replica, own error/accumulator buffers), shared-nothing except the
-//!   transport. The same worker runs unchanged over either transport.
+//!   replica, own error/accumulator buffers, own reusable
+//!   [`RoundScratch`]), shared-nothing except the transport. The same
+//!   worker runs unchanged over either transport.
+//!
+//! [RoundScratch]: crate::collectives::RoundScratch
 //! * [`engine`] — [`run_threaded`]: launch thread-per-rank workers over
 //!   a [`LocalTransport`] and merge the records;
 //!   [`run_rank_on_transport`]: run one rank of a multi-process cluster

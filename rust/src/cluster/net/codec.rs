@@ -16,15 +16,26 @@
 //! so NaN payloads round-trip bit-exactly — the parity guarantee of
 //! `rust/tests/engine_parity.rs` survives the wire. Every decode error is
 //! a typed [`Error::Protocol`], never a panic: corrupt lengths are capped
-//! before allocation, truncated buffers and trailing bytes are rejected,
-//! and the checksum catches any single-byte flip (each FNV step is
-//! injective in both arguments, so one flipped byte always changes the
-//! final hash).
+//! before allocation, declared element counts are checked against the
+//! remaining frame bytes *before* any buffer is sized from them,
+//! truncated buffers and trailing bytes are rejected, and the checksum
+//! catches any single-byte flip (each FNV step is injective in both
+//! arguments, so one flipped byte always changes the final hash).
+//!
+//! The hot path is bulk, not per-element: `u32`/`f32` arrays are
+//! converted through 4-byte little-endian slabs in both directions
+//! (chunked `to_le_bytes`/`from_le_bytes` over a pre-sized region, which
+//! the compiler turns into straight memory moves on little-endian
+//! targets), and the `*_append`/`*_with` entry points
+//! ([`encode_frame_append`], [`read_frame_with`]) work in caller-owned
+//! buffers so a steady-state peer reuses one encode and one decode
+//! buffer instead of allocating per frame.
 
 use crate::cluster::transport::Message;
 use crate::coordinator::SelectOutput;
 use crate::error::{Error, Result};
 use std::io::{Read, Write};
+use std::sync::Arc;
 
 /// Frame magic ("EXDY").
 pub const MAGIC: u32 = 0x4558_4459;
@@ -82,13 +93,18 @@ const MSG_SELECTION: u8 = 0;
 const MSG_FLOATS: u8 = 1;
 const MSG_SCALAR: u8 = 2;
 
-fn fnv1a(bytes: &[u8]) -> u32 {
-    let mut h: u32 = 0x811C_9DC5;
+const FNV_SEED: u32 = 0x811C_9DC5;
+
+fn fnv1a_update(mut h: u32, bytes: &[u8]) -> u32 {
     for &b in bytes {
         h ^= b as u32;
         h = h.wrapping_mul(16_777_619);
     }
     h
+}
+
+fn fnv1a(bytes: &[u8]) -> u32 {
+    fnv1a_update(FNV_SEED, bytes)
 }
 
 fn put_u16(buf: &mut Vec<u8>, v: u16) {
@@ -103,12 +119,29 @@ fn put_u64(buf: &mut Vec<u8>, v: u64) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_f32(buf: &mut Vec<u8>, v: f32) {
-    put_u32(buf, v.to_bits());
-}
-
 fn put_f64(buf: &mut Vec<u8>, v: f64) {
     put_u64(buf, v.to_bits());
+}
+
+/// Append `vals` as a little-endian 4-byte-per-element slab: one resize,
+/// then straight chunked stores (byte-identical to the per-element
+/// `put_u32` loop it replaces, but vectorizable).
+fn put_u32_slab(buf: &mut Vec<u8>, vals: &[u32]) {
+    let start = buf.len();
+    buf.resize(start + 4 * vals.len(), 0);
+    for (dst, v) in buf[start..].chunks_exact_mut(4).zip(vals) {
+        dst.copy_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Append `vals` as their IEEE-754 bit patterns, little-endian (see
+/// [`put_u32_slab`]; NaN-bit-exact).
+fn put_f32_slab(buf: &mut Vec<u8>, vals: &[f32]) {
+    let start = buf.len();
+    buf.resize(start + 4 * vals.len(), 0);
+    for (dst, v) in buf[start..].chunks_exact_mut(4).zip(vals) {
+        dst.copy_from_slice(&v.to_bits().to_le_bytes());
+    }
 }
 
 /// Bounded cursor over a received payload.
@@ -122,14 +155,32 @@ impl<'a> Cursor<'a> {
         Cursor { buf, pos: 0 }
     }
 
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Check that `n` more bytes exist without consuming them — used to
+    /// reject hostile declared counts *before* any allocation is sized
+    /// from them.
+    fn require(&self, n: usize, what: &str) -> Result<()> {
+        if n > self.remaining() {
+            return Err(Error::protocol(format!(
+                "declared {what} needs {n} bytes but only {} remain in the frame",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+
     fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
-        let end = self.pos.checked_add(n).ok_or_else(|| {
-            Error::protocol(format!("length overflow reading {what}"))
-        })?;
+        let end = self
+            .pos
+            .checked_add(n)
+            .ok_or_else(|| Error::protocol(format!("length overflow reading {what}")))?;
         if end > self.buf.len() {
             return Err(Error::protocol(format!(
                 "truncated frame: need {n} bytes for {what}, have {}",
-                self.buf.len() - self.pos
+                self.remaining()
             )));
         }
         let s = &self.buf[self.pos..end];
@@ -153,19 +204,47 @@ impl<'a> Cursor<'a> {
         ]))
     }
 
-    fn f32(&mut self, what: &str) -> Result<f32> {
-        Ok(f32::from_bits(self.u32(what)?))
-    }
-
     fn f64(&mut self, what: &str) -> Result<f64> {
         Ok(f64::from_bits(self.u64(what)?))
+    }
+
+    /// Decode `n` little-endian u32s in one bulk pass. The byte length
+    /// is validated by `take` before the output vector is allocated.
+    fn u32_slab(&mut self, n: usize, what: &str) -> Result<Vec<u32>> {
+        let byte_len = n
+            .checked_mul(4)
+            .ok_or_else(|| Error::protocol(format!("length overflow reading {what}")))?;
+        let bytes = self.take(byte_len, what)?;
+        let mut v = Vec::with_capacity(n);
+        v.extend(
+            bytes
+                .chunks_exact(4)
+                .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]])),
+        );
+        Ok(v)
+    }
+
+    /// Decode `n` f32 bit patterns in one bulk pass (NaN-bit-exact; see
+    /// [`Cursor::u32_slab`] for the validate-before-allocate contract).
+    fn f32_slab(&mut self, n: usize, what: &str) -> Result<Vec<f32>> {
+        let byte_len = n
+            .checked_mul(4)
+            .ok_or_else(|| Error::protocol(format!("length overflow reading {what}")))?;
+        let bytes = self.take(byte_len, what)?;
+        let mut v = Vec::with_capacity(n);
+        v.extend(
+            bytes
+                .chunks_exact(4)
+                .map(|b| f32::from_bits(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))),
+        );
+        Ok(v)
     }
 
     fn finish(&self, what: &str) -> Result<()> {
         if self.pos != self.buf.len() {
             return Err(Error::protocol(format!(
                 "{} trailing bytes after {what}",
-                self.buf.len() - self.pos
+                self.remaining()
             )));
         }
         Ok(())
@@ -177,19 +256,13 @@ fn encode_message(buf: &mut Vec<u8>, msg: &Message) {
         Message::Selection(s) => {
             buf.push(MSG_SELECTION);
             put_u32(buf, s.idx.len() as u32);
-            for &i in &s.idx {
-                put_u32(buf, i);
-            }
-            for &v in &s.val {
-                put_f32(buf, v);
-            }
+            put_u32_slab(buf, &s.idx);
+            put_f32_slab(buf, &s.val);
         }
         Message::Floats(v) => {
             buf.push(MSG_FLOATS);
             put_u32(buf, v.len() as u32);
-            for &x in v {
-                put_f32(buf, x);
-            }
+            put_f32_slab(buf, v);
         }
         Message::Scalar(x) => {
             buf.push(MSG_SCALAR);
@@ -202,55 +275,56 @@ fn decode_message(c: &mut Cursor<'_>) -> Result<Message> {
     match c.u8("message kind")? {
         MSG_SELECTION => {
             let n = c.u32("selection count")? as usize;
-            let mut idx = Vec::with_capacity(n.min(MAX_PAYLOAD as usize / 8));
-            for _ in 0..n {
-                idx.push(c.u32("selection index")?);
-            }
-            let mut val = Vec::with_capacity(idx.len());
-            for _ in 0..n {
-                val.push(c.f32("selection value")?);
-            }
-            Ok(Message::Selection(SelectOutput { idx, val }))
+            // idx + val slabs: 8 bytes per declared entry, proven
+            // present before either vector is allocated
+            let total = n
+                .checked_mul(8)
+                .ok_or_else(|| Error::protocol("selection count overflows"))?;
+            c.require(total, "selection payload")?;
+            let idx = c.u32_slab(n, "selection indices")?;
+            let val = c.f32_slab(n, "selection values")?;
+            Ok(Message::Selection(Arc::new(SelectOutput { idx, val })))
         }
         MSG_FLOATS => {
             let n = c.u32("float count")? as usize;
-            let mut v = Vec::with_capacity(n.min(MAX_PAYLOAD as usize / 4));
-            for _ in 0..n {
-                v.push(c.f32("float value")?);
-            }
-            Ok(Message::Floats(v))
+            let total = n
+                .checked_mul(4)
+                .ok_or_else(|| Error::protocol("float count overflows"))?;
+            c.require(total, "float payload")?;
+            let v = c.f32_slab(n, "float values")?;
+            Ok(Message::Floats(Arc::new(v)))
         }
         MSG_SCALAR => Ok(Message::Scalar(c.f64("scalar")?)),
         other => Err(Error::protocol(format!("unknown message kind {other}"))),
     }
 }
 
-fn encode_payload(frame: &Frame) -> (u8, Vec<u8>) {
-    let mut p = Vec::new();
-    let kind = match frame {
+/// Encode `frame`'s payload directly into `buf` (no intermediate payload
+/// vector); returns the frame kind.
+fn encode_payload_into(frame: &Frame, buf: &mut Vec<u8>) -> u8 {
+    match frame {
         Frame::Data { generation, msg } => {
-            put_u64(&mut p, *generation);
-            encode_message(&mut p, msg);
+            put_u64(buf, *generation);
+            encode_message(buf, msg);
             KIND_DATA
         }
         Frame::Hello { world, rank } => {
-            put_u32(&mut p, *world);
-            put_u32(&mut p, *rank);
+            put_u32(buf, *world);
+            put_u32(buf, *rank);
             KIND_HELLO
         }
         Frame::Welcome { world } => {
-            put_u32(&mut p, *world);
+            put_u32(buf, *world);
             KIND_WELCOME
         }
         Frame::Reject { reason } => {
             let bytes = reason.as_bytes();
-            put_u32(&mut p, bytes.len() as u32);
-            p.extend_from_slice(bytes);
+            put_u32(buf, bytes.len() as u32);
+            buf.extend_from_slice(bytes);
             KIND_REJECT
         }
         Frame::Abort => KIND_ABORT,
-    };
-    (kind, p)
+    }
 }
 
 fn decode_payload(kind: u8, payload: &[u8]) -> Result<Frame> {
@@ -282,17 +356,29 @@ fn decode_payload(kind: u8, payload: &[u8]) -> Result<Frame> {
     Ok(frame)
 }
 
-/// Encode one frame to its complete wire bytes.
+/// Append one frame's complete wire bytes to `buf` — the reusable-buffer
+/// form: the hub encodes a whole board into one persistent buffer and
+/// fans the identical byte run out to every peer.
+pub fn encode_frame_append(frame: &Frame, buf: &mut Vec<u8>) {
+    let frame_start = buf.len();
+    put_u32(buf, MAGIC);
+    put_u16(buf, PROTOCOL_VERSION);
+    buf.push(0); // kind, patched below
+    put_u32(buf, 0); // payload length, patched below
+    let body_start = buf.len();
+    let kind = encode_payload_into(frame, buf);
+    let len = (buf.len() - body_start) as u32;
+    buf[frame_start + 6] = kind;
+    buf[frame_start + 7..frame_start + 11].copy_from_slice(&len.to_le_bytes());
+    let check = fnv1a(&buf[frame_start..]);
+    put_u32(buf, check);
+}
+
+/// Encode one frame to its complete wire bytes (allocating wrapper over
+/// [`encode_frame_append`]).
 pub fn encode_frame(frame: &Frame) -> Vec<u8> {
-    let (kind, payload) = encode_payload(frame);
-    let mut buf = Vec::with_capacity(HEADER_LEN + payload.len() + 4);
-    put_u32(&mut buf, MAGIC);
-    put_u16(&mut buf, PROTOCOL_VERSION);
-    buf.push(kind);
-    put_u32(&mut buf, payload.len() as u32);
-    buf.extend_from_slice(&payload);
-    let check = fnv1a(&buf);
-    put_u32(&mut buf, check);
+    let mut buf = Vec::new();
+    encode_frame_append(frame, &mut buf);
     buf
 }
 
@@ -367,10 +453,12 @@ fn map_read_err(e: std::io::Error, what: &str) -> Error {
     }
 }
 
-/// Read one frame from a stream. Timeouts surface as [`Error::Net`], a
-/// clean close before the first header byte as a distinguishable
-/// "connection closed" protocol error.
-pub fn read_frame(r: &mut impl Read) -> Result<Frame> {
+/// Read one frame from a stream through a caller-owned scratch buffer
+/// (grown to the high-water frame size and reused, so a steady-state
+/// peer neither allocates nor re-zeroes per frame). Timeouts surface as
+/// [`Error::Net`], a clean close before the first header byte as a
+/// distinguishable "connection closed" protocol error.
+pub fn read_frame_with(r: &mut impl Read, scratch: &mut Vec<u8>) -> Result<Frame> {
     let mut header = [0u8; HEADER_LEN];
     // distinguish a clean close (0 bytes) from a mid-frame cut
     let mut got = 0usize;
@@ -389,26 +477,36 @@ pub fn read_frame(r: &mut impl Read) -> Result<Frame> {
         }
     }
     let (kind, len) = parse_header(&header)?;
-    let mut rest = vec![0u8; len as usize + 4];
-    r.read_exact(&mut rest)
-        .map_err(|e| map_read_err(e, "frame body"))?;
     let body_end = len as usize;
+    let need = body_end + 4;
+    if scratch.len() < need {
+        // grow once to the high-water mark; no per-frame re-zeroing of
+        // bytes read_exact is about to overwrite anyway
+        scratch.resize(need, 0);
+    }
+    let frame_buf = &mut scratch[..need];
+    r.read_exact(frame_buf)
+        .map_err(|e| map_read_err(e, "frame body"))?;
     let stored = u32::from_le_bytes([
-        rest[body_end],
-        rest[body_end + 1],
-        rest[body_end + 2],
-        rest[body_end + 3],
+        frame_buf[body_end],
+        frame_buf[body_end + 1],
+        frame_buf[body_end + 2],
+        frame_buf[body_end + 3],
     ]);
-    let mut hashed = Vec::with_capacity(HEADER_LEN + body_end);
-    hashed.extend_from_slice(&header);
-    hashed.extend_from_slice(&rest[..body_end]);
-    let computed = fnv1a(&hashed);
+    let computed = fnv1a_update(fnv1a_update(FNV_SEED, &header), &frame_buf[..body_end]);
     if stored != computed {
         return Err(Error::protocol(format!(
             "frame checksum mismatch: stored {stored:#010x}, computed {computed:#010x}"
         )));
     }
-    decode_payload(kind, &rest[..body_end])
+    decode_payload(kind, &frame_buf[..body_end])
+}
+
+/// Read one frame from a stream (allocating wrapper over
+/// [`read_frame_with`]).
+pub fn read_frame(r: &mut impl Read) -> Result<Frame> {
+    let mut scratch = Vec::new();
+    read_frame_with(r, &mut scratch)
 }
 
 /// Write one frame to a stream. Timeouts surface as [`Error::Net`].
@@ -453,11 +551,11 @@ mod tests {
                 let n = rng.usize(40); // 0 => empty selection
                 let idx: Vec<u32> = (0..n).map(|_| rng.next_u64() as u32).collect();
                 let val: Vec<f32> = (0..n).map(|_| gen_f32(rng)).collect();
-                Message::Selection(SelectOutput { idx, val })
+                Message::Selection(Arc::new(SelectOutput { idx, val }))
             }
             1 => {
                 let n = rng.usize(40);
-                Message::Floats((0..n).map(|_| gen_f32(rng)).collect())
+                Message::Floats(Arc::new((0..n).map(|_| gen_f32(rng)).collect()))
             }
             _ => Message::Scalar(if rng.usize(4) == 0 {
                 f64::NAN
@@ -510,6 +608,12 @@ mod tests {
             if encode_frame(&streamed) != bytes {
                 return Err(format!("read_frame round trip differs for {frame:?}"));
             }
+            // appending into a dirty reusable buffer yields the same bytes
+            let mut appended = vec![0xA5u8; 7];
+            encode_frame_append(frame, &mut appended);
+            if appended[7..] != bytes[..] {
+                return Err(format!("encode_frame_append differs for {frame:?}"));
+            }
             Ok(())
         });
     }
@@ -518,7 +622,7 @@ mod tests {
     fn empty_selection_roundtrips() {
         let f = Frame::Data {
             generation: 7,
-            msg: Message::Selection(SelectOutput::default()),
+            msg: Message::Selection(Arc::new(SelectOutput::default())),
         };
         let bytes = encode_frame(&f);
         assert_eq!(decode_frame(&bytes).unwrap(), f);
@@ -530,7 +634,7 @@ mod tests {
         let bits: Vec<u32> = vals.iter().map(|v| v.to_bits()).collect();
         let f = Frame::Data {
             generation: 1,
-            msg: Message::Floats(vals),
+            msg: Message::Floats(Arc::new(vals)),
         };
         match decode_frame(&encode_frame(&f)).unwrap() {
             Frame::Data {
@@ -559,10 +663,10 @@ mod tests {
     fn every_truncation_is_rejected_not_panicking() {
         let f = Frame::Data {
             generation: 42,
-            msg: Message::Selection(SelectOutput {
+            msg: Message::Selection(Arc::new(SelectOutput {
                 idx: vec![3, 9, 11],
                 val: vec![1.0, -2.0, f32::NAN],
-            }),
+            })),
         };
         let bytes = encode_frame(&f);
         for k in 0..bytes.len() {
@@ -582,7 +686,7 @@ mod tests {
     fn every_single_byte_flip_is_rejected() {
         let f = Frame::Data {
             generation: 3,
-            msg: Message::Floats(vec![1.5, -2.5, 0.0]),
+            msg: Message::Floats(Arc::new(vec![1.5, -2.5, 0.0])),
         };
         let bytes = encode_frame(&f);
         for pos in 0..bytes.len() {
@@ -610,6 +714,48 @@ mod tests {
         assert!(err.contains("exceeds cap"), "{err}");
     }
 
+    /// A hostile frame with a valid header and checksum whose *declared
+    /// element count* promises far more data than the frame carries must
+    /// be rejected up front — before any buffer is sized from the count.
+    #[test]
+    fn hostile_declared_count_rejected_before_allocation() {
+        // Floats message claiming 50M entries (~200 MB) with an empty body
+        let mut payload = Vec::new();
+        put_u64(&mut payload, 0); // generation
+        payload.push(MSG_FLOATS);
+        put_u32(&mut payload, 50_000_000);
+        let mut frame = Vec::new();
+        put_u32(&mut frame, MAGIC);
+        put_u16(&mut frame, PROTOCOL_VERSION);
+        frame.push(KIND_DATA);
+        put_u32(&mut frame, payload.len() as u32);
+        frame.extend_from_slice(&payload);
+        let check = fnv1a(&frame);
+        put_u32(&mut frame, check);
+        let err = decode_frame(&frame).unwrap_err();
+        assert!(matches!(err, Error::Protocol(_)), "{err}");
+        assert!(err.to_string().contains("remain"), "{err}");
+
+        // Selection variant: count covers the idx slab but not the vals —
+        // still rejected before the idx vector would be allocated
+        let mut payload = Vec::new();
+        put_u64(&mut payload, 0);
+        payload.push(MSG_SELECTION);
+        put_u32(&mut payload, 1000);
+        payload.extend_from_slice(&vec![0u8; 4000]); // idx bytes only
+        let mut frame = Vec::new();
+        put_u32(&mut frame, MAGIC);
+        put_u16(&mut frame, PROTOCOL_VERSION);
+        frame.push(KIND_DATA);
+        put_u32(&mut frame, payload.len() as u32);
+        frame.extend_from_slice(&payload);
+        let check = fnv1a(&frame);
+        put_u32(&mut frame, check);
+        let err = decode_frame(&frame).unwrap_err();
+        assert!(matches!(err, Error::Protocol(_)), "{err}");
+        assert!(err.to_string().contains("selection payload"), "{err}");
+    }
+
     #[test]
     fn version_and_magic_mismatches_are_typed() {
         let good = encode_frame(&Frame::Abort);
@@ -632,14 +778,15 @@ mod tests {
     }
 
     #[test]
-    fn two_frames_stream_back_to_back() {
+    fn two_frames_stream_back_to_back_through_one_scratch_buffer() {
         let a = Frame::Hello { world: 4, rank: 2 };
         let b = Frame::Welcome { world: 4 };
         let mut buf = encode_frame(&a);
         buf.extend_from_slice(&encode_frame(&b));
         let mut cursor: &[u8] = &buf;
-        assert_eq!(read_frame(&mut cursor).unwrap(), a);
-        assert_eq!(read_frame(&mut cursor).unwrap(), b);
-        assert!(read_frame(&mut cursor).is_err());
+        let mut scratch = vec![0xFFu8; 3]; // dirty reusable buffer
+        assert_eq!(read_frame_with(&mut cursor, &mut scratch).unwrap(), a);
+        assert_eq!(read_frame_with(&mut cursor, &mut scratch).unwrap(), b);
+        assert!(read_frame_with(&mut cursor, &mut scratch).is_err());
     }
 }

@@ -3,11 +3,15 @@
 //! Topology: hub-mediated star. Rank 0 (the hub) keeps one stream per
 //! peer; every all-gather round, each client sends its contribution as a
 //! generation-stamped [`Frame::Data`], the hub collects the full board
-//! (its own message in slot 0), encodes the board once, and fans the
-//! identical rank-indexed byte sequence out to every client. TCP gives
-//! per-peer ordering; the explicit generation counter turns any
-//! cross-rank divergence (a rank running a different round than the hub)
-//! into a typed [`Error::Protocol`] instead of silently mixing rounds.
+//! (its own message in slot 0), encodes the board once into a persistent
+//! buffer, and fans the identical rank-indexed byte sequence out to
+//! every client. Both ends reuse one encode and one decode buffer across
+//! rounds (no per-frame `Vec::new()`), and board payloads are
+//! `Arc`-shared [`Message`]s, so the only per-round copies are the
+//! unavoidable socket reads/writes. TCP gives per-peer ordering; the
+//! explicit generation counter turns any cross-rank divergence (a rank
+//! running a different round than the hub) into a typed
+//! [`Error::Protocol`] instead of silently mixing rounds.
 //!
 //! Failure semantics:
 //! * every read/write carries the `io_timeout` deadline from [`NetCfg`],
@@ -20,13 +24,15 @@
 //!
 //! [NetCfg]: crate::cluster::net::handshake::NetCfg
 
-use crate::cluster::net::codec::{encode_frame, read_frame, write_bytes, Frame};
+use crate::cluster::net::codec::{
+    encode_frame, encode_frame_append, read_frame_with, write_bytes, Frame,
+};
 use crate::cluster::net::handshake::{client_rendezvous, hub_rendezvous, NetCfg};
 use crate::cluster::transport::{Message, Transport};
 use crate::error::{Error, Result};
 use std::net::{Shutdown, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 enum Conn {
     /// Rank 0: one stream per peer rank (slot 0 unused).
@@ -38,6 +44,11 @@ enum Conn {
 struct State {
     conn: Conn,
     generation: u64,
+    /// Persistent encode buffer: a client's contribution frame, or the
+    /// hub's once-encoded whole-board fan-out bytes.
+    enc_buf: Vec<u8>,
+    /// Persistent decode scratch for incoming frame bodies.
+    dec_buf: Vec<u8>,
 }
 
 /// Socket transport for one process-local rank of an n-rank cluster.
@@ -68,6 +79,8 @@ impl TcpTransport {
             state: Mutex::new(State {
                 conn: Conn::Hub { peers },
                 generation: 0,
+                enc_buf: Vec::new(),
+                dec_buf: Vec::new(),
             }),
             shutdown_handles: handles,
             poisoned: AtomicBool::new(false),
@@ -84,6 +97,8 @@ impl TcpTransport {
             state: Mutex::new(State {
                 conn: Conn::Client { hub },
                 generation: 0,
+                enc_buf: Vec::new(),
+                dec_buf: Vec::new(),
             }),
             shutdown_handles: vec![handle],
             poisoned: AtomicBool::new(false),
@@ -115,7 +130,7 @@ impl Transport for TcpTransport {
         self.n
     }
 
-    fn allgather(&self, rank: usize, msg: Message) -> Result<Vec<Message>> {
+    fn allgather(&self, rank: usize, msg: Message) -> Result<Arc<[Message]>> {
         if rank != self.rank {
             return Err(Error::invalid(format!(
                 "this process's transport speaks for rank {}, not rank {rank}",
@@ -125,12 +140,18 @@ impl Transport for TcpTransport {
         if self.poisoned.load(Ordering::SeqCst) {
             return Err(Error::net("transport poisoned by a failed worker"));
         }
-        let mut st = self.state.lock().unwrap();
-        let my_gen = st.generation;
+        let mut guard = self.state.lock().unwrap();
+        let State {
+            conn,
+            generation,
+            enc_buf,
+            dec_buf,
+        } = &mut *guard;
+        let my_gen = *generation;
         let n = self.n;
         // any early `?` below leaves the generation unchanged; the failed
         // worker aborts the transport, so no later round can mix with it
-        let board = match &mut st.conn {
+        let board: Arc<[Message]> = match conn {
             Conn::Hub { peers } => {
                 let mut slots: Vec<Option<Message>> = (0..n).map(|_| None).collect();
                 slots[0] = Some(msg);
@@ -138,49 +159,58 @@ impl Transport for TcpTransport {
                     let stream = peers[r]
                         .as_mut()
                         .expect("hub rendezvous filled every peer slot");
-                    let frame = read_frame(stream).map_err(|e| {
+                    let frame = read_frame_with(stream, dec_buf).map_err(|e| {
                         Error::net(format!("reading rank {r}'s contribution: {e}"))
                     })?;
                     slots[r] = Some(Self::expect_data(frame, my_gen, &format!("rank {r}"))?);
                 }
-                let board: Vec<Message> =
-                    slots.into_iter().map(|m| m.expect("all slots filled")).collect();
-                // encode the rank-indexed board once, fan the same bytes out
-                let mut bytes = Vec::new();
-                for m in &board {
-                    bytes.extend_from_slice(&encode_frame(&Frame::Data {
-                        generation: my_gen,
-                        msg: m.clone(),
-                    }));
+                let board: Arc<[Message]> = slots
+                    .into_iter()
+                    .map(|m| m.expect("all slots filled"))
+                    .collect();
+                // encode the rank-indexed board once into the persistent
+                // buffer, fan the same bytes out (payloads are Arc-shared
+                // with the board — cloning a Message copies no elements)
+                enc_buf.clear();
+                for m in board.iter() {
+                    encode_frame_append(
+                        &Frame::Data {
+                            generation: my_gen,
+                            msg: m.clone(),
+                        },
+                        enc_buf,
+                    );
                 }
                 for r in 1..n {
                     let stream = peers[r].as_mut().expect("peer slot filled");
-                    write_bytes(stream, &bytes).map_err(|e| {
+                    write_bytes(stream, enc_buf).map_err(|e| {
                         Error::net(format!("broadcasting board to rank {r}: {e}"))
                     })?;
                 }
                 board
             }
             Conn::Client { hub } => {
-                write_bytes(
-                    hub,
-                    &encode_frame(&Frame::Data {
+                enc_buf.clear();
+                encode_frame_append(
+                    &Frame::Data {
                         generation: my_gen,
                         msg,
-                    }),
-                )
-                .map_err(|e| Error::net(format!("sending contribution to hub: {e}")))?;
+                    },
+                    enc_buf,
+                );
+                write_bytes(hub, enc_buf)
+                    .map_err(|e| Error::net(format!("sending contribution to hub: {e}")))?;
                 let mut board = Vec::with_capacity(n);
                 for r in 0..n {
-                    let frame = read_frame(hub).map_err(|e| {
+                    let frame = read_frame_with(hub, dec_buf).map_err(|e| {
                         Error::net(format!("reading board entry {r} from hub: {e}"))
                     })?;
                     board.push(Self::expect_data(frame, my_gen, "hub")?);
                 }
-                board
+                board.into()
             }
         };
-        st.generation = my_gen.wrapping_add(1);
+        *generation = my_gen.wrapping_add(1);
         Ok(board)
     }
 
@@ -202,7 +232,6 @@ mod tests {
     use super::*;
     use crate::cluster::net::handshake::free_loopback_addr;
     use crate::cluster::transport::Endpoint;
-    use std::sync::Arc;
     use std::time::Duration;
 
     fn cfg(addr: &str) -> NetCfg {
@@ -244,8 +273,7 @@ mod tests {
                 for round in 0..rounds {
                     let mine = (rank * 1000 + round) as f64;
                     let got = ep.allgather_f64(mine).unwrap();
-                    let want: Vec<f64> =
-                        (0..n).map(|r| (r * 1000 + round) as f64).collect();
+                    let want: Vec<f64> = (0..n).map(|r| (r * 1000 + round) as f64).collect();
                     assert_eq!(got, want, "rank {rank} round {round}");
                 }
             }));
@@ -264,18 +292,20 @@ mod tests {
         for (rank, tp) in tps.into_iter().enumerate() {
             handles.push(std::thread::spawn(move || {
                 let ep = Endpoint::new(rank, tp.as_ref());
-                let sel = SelectOutput {
+                let sel = Arc::new(SelectOutput {
                     idx: vec![rank as u32, 100 + rank as u32],
                     val: vec![rank as f32, f32::NAN],
-                };
+                });
                 let sels = ep.allgather_select(sel).unwrap();
                 assert_eq!(sels.len(), n);
                 assert_eq!(sels[rank].idx[0], rank as u32);
                 assert!(sels[0].val[1].is_nan() && sels[1].val[1].is_nan());
-                let floats = ep.allgather_floats(vec![rank as f32; 4]).unwrap();
-                assert_eq!(floats[1], vec![1.0f32; 4]);
+                let floats = ep.allgather_floats(Arc::new(vec![rank as f32; 4])).unwrap();
+                assert_eq!(*floats[1], vec![1.0f32; 4]);
                 // empty selection survives the wire
-                let empty = ep.allgather_select(SelectOutput::default()).unwrap();
+                let empty = ep
+                    .allgather_select(Arc::new(SelectOutput::default()))
+                    .unwrap();
                 assert!(empty.iter().all(|s| s.is_empty()));
             }));
         }
@@ -299,6 +329,6 @@ mod tests {
         let addr = free_loopback_addr().unwrap();
         let tp = TcpTransport::hub(1, &cfg(&addr)).unwrap();
         let got = tp.allgather(0, Message::Scalar(4.5)).unwrap();
-        assert_eq!(got, vec![Message::Scalar(4.5)]);
+        assert_eq!(&got[..], &[Message::Scalar(4.5)]);
     }
 }

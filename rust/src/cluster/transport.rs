@@ -9,12 +9,27 @@
 //! separately charges what the operation *would* cost on the modeled
 //! wire, so data movement and wire-clock accounting stay decoupled.
 //!
-//! [`LocalTransport`] is the first implementation: in-process rendezvous
-//! for one OS thread per rank, built on a generation-counted slot board
+//! **Zero-copy fan-out.** Payloads are reference-counted
+//! ([`Message::Selection`] holds `Arc<SelectOutput>`, [`Message::Floats`]
+//! holds `Arc<Vec<f32>>`) and [`Transport::allgather`] returns the whole
+//! rank-indexed board as one shared `Arc<[Message]>` slab. Handing the
+//! board to n ranks is therefore n refcount bumps — O(n) — instead of n
+//! deep copies of an n-message board — O(n²·k) element copies, which is
+//! what the naive `Vec<Message>` design cost per round. The *modeled*
+//! α–β clock still charges the real byte volume each collective would
+//! move on a wire (the padded payload, every rank's contribution), so
+//! traces are bit-identical to the copying implementation; only the
+//! harness overhead changes.
+//!
+//! [`LocalTransport`] is the in-process implementation: a rendezvous for
+//! one OS thread per rank, built on a generation-counted slot board
 //! (mutex + condvar). Every round each rank deposits its message; the
 //! last arrival publishes the full board and wakes the others. A rank
 //! can only enter round `g+1` after consuming round `g`, so the
-//! published board is never overwritten early. A failed worker poisons
+//! published board is never overwritten early. Published slabs are
+//! double-buffered and recycled once every rank has moved two rounds on,
+//! so a steady-state round performs **zero heap allocations**
+//! (`rust/tests/alloc_regression.rs` pins this). A failed worker poisons
 //! the transport ([`Transport::abort`]) so peers error out instead of
 //! deadlocking at the rendezvous.
 //!
@@ -22,16 +37,17 @@
 
 use crate::coordinator::SelectOutput;
 use crate::error::{Error, Result};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
-/// One rank's contribution to a collective round.
+/// One rank's contribution to a collective round. Payloads are behind
+/// `Arc`s so boards fan out by refcount, not by copy; `Clone` is O(1).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Message {
     /// Selected (idx, val) pairs — the payload all-gather (its length is
     /// simultaneously the `k_i` metadata).
-    Selection(SelectOutput),
+    Selection(Arc<SelectOutput>),
     /// Dense f32 payload — sparse all-reduce contributions.
-    Floats(Vec<f32>),
+    Floats(Arc<Vec<f32>>),
     /// One f64 — timing metadata and diagnostics (select wall time,
     /// error norms).
     Scalar(f64),
@@ -44,10 +60,11 @@ pub trait Transport: Send + Sync {
     fn n_ranks(&self) -> usize;
 
     /// Synchronous all-gather: rank `rank` contributes `msg` and receives
-    /// every rank's message, rank-indexed. All ranks must call this the
-    /// same number of times in the same order (enforced by construction:
-    /// workers run identical control flow off replicated state).
-    fn allgather(&self, rank: usize, msg: Message) -> Result<Vec<Message>>;
+    /// every rank's message, rank-indexed, as one shared slab. All ranks
+    /// must call this the same number of times in the same order
+    /// (enforced by construction: workers run identical control flow off
+    /// replicated state).
+    fn allgather(&self, rank: usize, msg: Message) -> Result<Arc<[Message]>>;
 
     /// Rendezvous barrier (default: a scalar all-gather).
     fn barrier(&self, rank: usize) -> Result<()> {
@@ -64,7 +81,12 @@ struct Board {
     slots: Vec<Option<Message>>,
     arrived: usize,
     generation: u64,
-    published: Vec<Message>,
+    published: Arc<[Message]>,
+    /// The round-before-last's slab, kept for recycling: once every rank
+    /// has deposited round `g+1` (a precondition of publishing it), no
+    /// rank can still hold a reference to round `g-1`'s board, so its
+    /// slab is uniquely owned again and can be overwritten in place.
+    spare: Option<Arc<[Message]>>,
     poisoned: bool,
 }
 
@@ -84,7 +106,8 @@ impl LocalTransport {
                 slots: (0..n).map(|_| None).collect(),
                 arrived: 0,
                 generation: 0,
-                published: Vec::new(),
+                published: Vec::new().into(),
+                spare: None,
                 poisoned: false,
             }),
             cv: Condvar::new(),
@@ -97,7 +120,7 @@ impl Transport for LocalTransport {
         self.n
     }
 
-    fn allgather(&self, rank: usize, msg: Message) -> Result<Vec<Message>> {
+    fn allgather(&self, rank: usize, msg: Message) -> Result<Arc<[Message]>> {
         if rank >= self.n {
             return Err(Error::invalid(format!(
                 "rank {rank} out of range (n = {})",
@@ -108,16 +131,44 @@ impl Transport for LocalTransport {
         if b.poisoned {
             return Err(Error::invariant("transport poisoned by a failed worker"));
         }
-        debug_assert!(b.slots[rank].is_none(), "rank {rank} double-deposited");
+        if b.slots[rank].is_some() {
+            // a real invariant error in every build profile — a silent
+            // overwrite here would corrupt a peer's board in release mode
+            return Err(Error::invariant(format!(
+                "rank {rank} double-deposited in round {}",
+                b.generation
+            )));
+        }
         let my_gen = b.generation;
         b.slots[rank] = Some(msg);
         b.arrived += 1;
         if b.arrived == self.n {
             // last arrival: publish the board, open the next round
-            let msgs: Vec<Message> = b.slots.iter_mut().map(|s| s.take().unwrap()).collect();
-            b.published = msgs;
-            b.arrived = 0;
-            b.generation = b.generation.wrapping_add(1);
+            let board = &mut *b;
+            let recycled = board.spare.take().and_then(|mut slab| {
+                if slab.len() == board.slots.len() && Arc::get_mut(&mut slab).is_some() {
+                    Some(slab)
+                } else {
+                    None // a caller retained an old board; fall back
+                }
+            });
+            let new_board: Arc<[Message]> = match recycled {
+                Some(mut slab) => {
+                    let dst = Arc::get_mut(&mut slab).expect("uniqueness checked above");
+                    for (d, s) in dst.iter_mut().zip(board.slots.iter_mut()) {
+                        *d = s.take().expect("all slots deposited");
+                    }
+                    slab
+                }
+                None => board
+                    .slots
+                    .iter_mut()
+                    .map(|s| s.take().expect("all slots deposited"))
+                    .collect(),
+            };
+            board.spare = Some(std::mem::replace(&mut board.published, new_board));
+            board.arrived = 0;
+            board.generation = board.generation.wrapping_add(1);
             self.cv.notify_all();
         } else {
             while b.generation == my_gen && !b.poisoned {
@@ -127,7 +178,8 @@ impl Transport for LocalTransport {
                 return Err(Error::invariant("transport poisoned by a failed worker"));
             }
         }
-        // each rank receives its own copy — the real data movement
+        // every rank shares the one published slab — a refcount bump, not
+        // a copy; the modeled wire cost is charged by the collectives
         Ok(b.published.clone())
     }
 
@@ -135,6 +187,62 @@ impl Transport for LocalTransport {
         let mut b = self.board.lock().unwrap();
         b.poisoned = true;
         self.cv.notify_all();
+    }
+}
+
+/// Rotating pool of reusable `Arc<Vec<f32>>` send buffers for
+/// [`Message::Floats`] contributions.
+///
+/// A buffer handed out in round `g` is shared with the peers (who drop
+/// their board clones before depositing round `g+1`) and with
+/// [`LocalTransport`] itself, which keeps the round-`g` slab alive as
+/// its recycling spare until the publish of round `g+2`. The buffer is
+/// therefore guaranteed uniquely owned again only at its owner's round
+/// `g+3` send — exactly the reuse distance the THREE-slot rotation
+/// provides (a 2-slot pool would find the transport's spare still
+/// holding the Arc and fall back to allocating every round). If a
+/// caller retains a board even longer the pool transparently falls back
+/// to a fresh buffer, so reuse is an optimization, never a correctness
+/// assumption.
+pub struct FloatBufPool {
+    bufs: [Arc<Vec<f32>>; 3],
+    next: usize,
+}
+
+impl FloatBufPool {
+    /// Empty pool; buffers grow to the working-set size on first use.
+    pub fn new() -> Self {
+        FloatBufPool {
+            bufs: [
+                Arc::new(Vec::new()),
+                Arc::new(Vec::new()),
+                Arc::new(Vec::new()),
+            ],
+            next: 0,
+        }
+    }
+
+    /// Hand out a shareable buffer, cleared and then filled by `fill`.
+    pub fn fill(&mut self, fill: impl FnOnce(&mut Vec<f32>)) -> Arc<Vec<f32>> {
+        let idx = self.next;
+        self.next = (idx + 1) % self.bufs.len();
+        let slot = &mut self.bufs[idx];
+        if Arc::get_mut(slot).is_none() {
+            // a peer still holds the handle from this slot's last round
+            // (only possible outside the steady state, e.g. a retained
+            // board) — fall back to a fresh buffer
+            *slot = Arc::new(Vec::new());
+        }
+        let buf = Arc::get_mut(slot).expect("slot is uniquely owned here");
+        buf.clear();
+        fill(buf);
+        Arc::clone(slot)
+    }
+}
+
+impl Default for FloatBufPool {
+    fn default() -> Self {
+        Self::new()
     }
 }
 
@@ -163,37 +271,65 @@ impl<'a> Endpoint<'a> {
         self.tp
     }
 
+    /// Raw all-gather: contribute `msg`, receive the shared rank-indexed
+    /// board. The allocation-free primitive the per-rank collectives
+    /// ([`crate::collectives::ranked`]) build on.
+    pub fn allgather(&self, msg: Message) -> Result<Arc<[Message]>> {
+        self.tp.allgather(self.rank, msg)
+    }
+
     /// All-gather per-rank selections (metadata + payload in one round).
-    pub fn allgather_select(&self, mine: SelectOutput) -> Result<Vec<SelectOutput>> {
-        let msgs = self.tp.allgather(self.rank, Message::Selection(mine))?;
-        msgs.into_iter()
+    /// The returned entries share the senders' buffers.
+    pub fn allgather_select(&self, mine: Arc<SelectOutput>) -> Result<Vec<Arc<SelectOutput>>> {
+        let board = self.tp.allgather(self.rank, Message::Selection(mine))?;
+        board
+            .iter()
             .map(|m| match m {
-                Message::Selection(s) => Ok(s),
-                other => Err(envelope_mismatch("Selection", &other)),
+                Message::Selection(s) => Ok(Arc::clone(s)),
+                other => Err(envelope_mismatch("Selection", other)),
             })
             .collect()
     }
 
-    /// All-gather dense f32 payloads (all-reduce contributions).
-    pub fn allgather_floats(&self, mine: Vec<f32>) -> Result<Vec<Vec<f32>>> {
-        let msgs = self.tp.allgather(self.rank, Message::Floats(mine))?;
-        msgs.into_iter()
+    /// All-gather dense f32 payloads (all-reduce contributions). The
+    /// returned entries share the senders' buffers.
+    pub fn allgather_floats(&self, mine: Arc<Vec<f32>>) -> Result<Vec<Arc<Vec<f32>>>> {
+        let board = self.tp.allgather(self.rank, Message::Floats(mine))?;
+        board
+            .iter()
             .map(|m| match m {
-                Message::Floats(v) => Ok(v),
-                other => Err(envelope_mismatch("Floats", &other)),
+                Message::Floats(v) => Ok(Arc::clone(v)),
+                other => Err(envelope_mismatch("Floats", other)),
             })
             .collect()
     }
 
     /// All-gather one f64 per rank (timings, norms).
     pub fn allgather_f64(&self, mine: f64) -> Result<Vec<f64>> {
-        let msgs = self.tp.allgather(self.rank, Message::Scalar(mine))?;
-        msgs.into_iter()
-            .map(|m| match m {
-                Message::Scalar(x) => Ok(x),
-                other => Err(envelope_mismatch("Scalar", &other)),
-            })
-            .collect()
+        self.allgather_f64_fold(mine, Vec::with_capacity(self.n_ranks()), |mut acc, x| {
+            acc.push(x);
+            acc
+        })
+    }
+
+    /// All-gather one f64 per rank and fold the rank-ordered values
+    /// without materializing them — the allocation-free form for sums
+    /// and maxima on the hot path.
+    pub fn allgather_f64_fold<T>(
+        &self,
+        mine: f64,
+        init: T,
+        mut f: impl FnMut(T, f64) -> T,
+    ) -> Result<T> {
+        let board = self.tp.allgather(self.rank, Message::Scalar(mine))?;
+        let mut acc = init;
+        for m in board.iter() {
+            match m {
+                Message::Scalar(x) => acc = f(acc, *x),
+                other => return Err(envelope_mismatch("Scalar", other)),
+            }
+        }
+        Ok(acc)
     }
 
     /// Barrier.
@@ -217,7 +353,7 @@ impl Drop for AbortOnPanic<'_> {
     }
 }
 
-fn envelope_mismatch(want: &str, got: &Message) -> Error {
+pub(crate) fn envelope_mismatch(want: &str, got: &Message) -> Error {
     let got = match got {
         Message::Selection(_) => "Selection",
         Message::Floats(_) => "Floats",
@@ -231,7 +367,7 @@ fn envelope_mismatch(want: &str, got: &Message) -> Error {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::Arc;
+    use std::time::Duration;
 
     #[test]
     fn single_rank_allgather_is_identity() {
@@ -257,8 +393,7 @@ mod tests {
                 for round in 0..rounds {
                     let mine = (rank * 1000 + round) as f64;
                     let got = ep.allgather_f64(mine).unwrap();
-                    let want: Vec<f64> =
-                        (0..n).map(|r| (r * 1000 + round) as f64).collect();
+                    let want: Vec<f64> = (0..n).map(|r| (r * 1000 + round) as f64).collect();
                     assert_eq!(got, want, "rank {rank} round {round}");
                 }
             }));
@@ -279,7 +414,7 @@ mod tests {
         let mut handles = Vec::new();
         for rank in 0..n {
             let tp = tp.clone();
-            let mine = mk(rank);
+            let mine = Arc::new(mk(rank));
             handles.push(std::thread::spawn(move || {
                 let ep = Endpoint::new(rank, tp.as_ref());
                 ep.allgather_select(mine).unwrap()
@@ -289,9 +424,52 @@ mod tests {
             let outs = h.join().unwrap();
             assert_eq!(outs.len(), n);
             for (r, o) in outs.iter().enumerate() {
-                assert_eq!(*o, mk(r));
+                assert_eq!(o.as_ref(), &mk(r));
             }
         }
+    }
+
+    #[test]
+    fn ranks_share_one_board_slab() {
+        // the O(n) fan-out claim at its root: both ranks' boards are the
+        // SAME allocation, and a shared payload is the sender's buffer
+        let n = 2;
+        let tp = Arc::new(LocalTransport::new(n));
+        let payload = Arc::new(vec![1.0f32, 2.0]);
+        let sent = Arc::clone(&payload);
+        let tp1 = tp.clone();
+        let h = std::thread::spawn(move || tp1.allgather(1, Message::Floats(sent)).unwrap());
+        let board0 = tp.allgather(0, Message::Floats(Arc::new(vec![0.5]))).unwrap();
+        let board1 = h.join().unwrap();
+        assert!(
+            Arc::ptr_eq(&board0, &board1),
+            "ranks must share one published slab"
+        );
+        match &board0[1] {
+            Message::Floats(v) => {
+                assert!(Arc::ptr_eq(v, &payload), "payload must not be copied")
+            }
+            other => panic!("wrong envelope {other:?}"),
+        }
+    }
+
+    #[test]
+    fn double_deposit_is_a_typed_error_in_all_builds() {
+        let tp = Arc::new(LocalTransport::new(2));
+        let tp2 = tp.clone();
+        // rank 0 deposits and blocks waiting for rank 1 ...
+        let blocked = std::thread::spawn(move || tp2.allgather(0, Message::Scalar(1.0)));
+        std::thread::sleep(Duration::from_millis(30));
+        // ... and a buggy second caller for rank 0 must get a typed
+        // error, not silently overwrite the slot (this used to be a
+        // debug_assert — release builds corrupted the board)
+        let err = tp
+            .allgather(0, Message::Scalar(2.0))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("double-deposited"), "{err}");
+        tp.abort();
+        assert!(blocked.join().unwrap().is_err());
     }
 
     #[test]
@@ -303,7 +481,7 @@ mod tests {
             ep.allgather_f64(1.0)
         });
         // give the waiter time to block, then poison instead of joining
-        std::thread::sleep(std::time::Duration::from_millis(20));
+        std::thread::sleep(Duration::from_millis(20));
         tp.abort();
         let res = waiter.join().unwrap();
         assert!(res.is_err(), "poisoned transport must error, not hang");
@@ -317,6 +495,30 @@ mod tests {
         let tp = LocalTransport::new(2);
         let ep = Endpoint::new(5, &tp);
         assert!(ep.allgather_f64(0.0).is_err());
+    }
+
+    #[test]
+    fn float_buf_pool_reuses_released_buffers() {
+        let mut pool = FloatBufPool::new();
+        let a = pool.fill(|b| b.extend_from_slice(&[1.0, 2.0]));
+        assert_eq!(*a, vec![1.0, 2.0]);
+        let a_ptr = Arc::as_ptr(&a);
+        drop(a);
+        // cycle through the rotation; the released slot must come back
+        let mut seen = false;
+        for i in 0..6 {
+            let b = pool.fill(|b| b.push(i as f32));
+            seen |= Arc::as_ptr(&b) == a_ptr;
+            assert_eq!(*b, vec![i as f32], "cleared before refill");
+        }
+        assert!(seen, "released buffer must be recycled");
+        // a retained buffer is never clobbered
+        let held = pool.fill(|b| b.push(7.0));
+        for i in 0..6 {
+            let b = pool.fill(|b| b.push(i as f32));
+            assert!(!Arc::ptr_eq(&b, &held), "live handle must not be reused");
+        }
+        assert_eq!(*held, vec![7.0]);
     }
 
     #[test]

@@ -1,19 +1,23 @@
 //! One rank's training loop (Alg. 1) as an independent worker.
 //!
 //! A [`SimWorker`] owns everything rank-local — the sparsifier replica,
-//! the error accumulator, the gradient buffer — and talks to its peers
-//! exclusively through an [`Endpoint`], via the per-rank collectives
+//! the error accumulator, the gradient buffer, and a [`RoundScratch`] of
+//! reusable collective buffers — and talks to its peers exclusively
+//! through an [`Endpoint`], via the per-rank collectives
 //! ([`allgather_sparse_rk`], [`broadcast_selection_rk`],
 //! [`sparse_allreduce_union_rk`]). Those share their merge/cost
 //! arithmetic with the lock-step collectives (and the [`StragglerCfg`]
 //! compute clock is common too), so for a fixed seed the two engines
 //! yield identical traces — `rust/tests/engine_parity.rs` pins this.
+//! The scratch keeps steady-state iterations free of transport/merge
+//! heap allocations (`rust/tests/alloc_regression.rs` pins that).
 //!
 //! [StragglerCfg]: crate::collectives::costmodel::StragglerCfg
 
 use crate::cluster::transport::Endpoint;
 use crate::collectives::{
     allgather_sparse_rk, broadcast_selection_rk, sparse_allreduce_union_rk, CostModel,
+    RoundScratch,
 };
 use crate::coordinator::SelectOutput;
 use crate::error::Result;
@@ -22,6 +26,7 @@ use crate::metrics::IterRecord;
 use crate::sparsifiers::{CommPattern, RoundCtx, Sparsifier};
 use crate::training::sim::SimCfg;
 use crate::util::stats::l2_norm;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// One simulated rank running on its own OS thread.
@@ -67,6 +72,7 @@ impl<'a> SimWorker<'a> {
 
         let mut err = vec![0f32; if dense { 0 } else { n_g }];
         let mut acc = vec![0f32; n_g];
+        let mut scratch = RoundScratch::new();
         let mut records = Vec::with_capacity(self.cfg.iters);
         let mut last_global_err = 0.0;
 
@@ -96,69 +102,94 @@ impl<'a> SimWorker<'a> {
             };
             let my_select = st.elapsed().as_secs_f64();
 
-            // --- aggregation (Alg. 1 lines 11-13) over the transport
-            let (union_idx, k_by_rank, f_ratio, t_comm, k_actual);
+            // --- aggregation (Alg. 1 lines 11-13) over the transport;
+            // union/counts/sums land in the reusable scratch buffers
+            let (f_ratio, t_comm, k_actual);
             match self.sp.comm_pattern() {
                 CommPattern::DenseAllReduce => {
-                    union_idx = Vec::new();
-                    k_by_rank = vec![n_g; n];
+                    scratch.union_idx.clear();
+                    scratch.k_by_rank.clear();
+                    scratch.k_by_rank.resize(n, n_g);
                     f_ratio = 1.0;
                     k_actual = n_g;
                     t_comm = self.net.allreduce(n_g * CostModel::DENSE_ENTRY_BYTES);
                 }
                 CommPattern::LeaderBroadcast => {
                     let leader = t % n;
-                    let (idx, k_by, t_bcast) =
-                        broadcast_selection_rk(&self.ep, out, leader, &self.net)?;
+                    let t_bcast = broadcast_selection_rk(
+                        &self.ep,
+                        Arc::new(out),
+                        leader,
+                        &self.net,
+                        &mut scratch.union_idx,
+                        &mut scratch.k_by_rank,
+                    )?;
                     // the reduced sum is discarded in the simulated
                     // trainer, exactly like the lock-step path
-                    let (_vals, t_red) =
-                        sparse_allreduce_union_rk(&self.ep, &acc, &idx, &self.net)?;
-                    k_by_rank = k_by;
-                    k_actual = idx.len();
-                    union_idx = idx;
+                    let t_red = sparse_allreduce_union_rk(
+                        &self.ep,
+                        &acc,
+                        &scratch.union_idx,
+                        &self.net,
+                        &mut scratch.send,
+                        &mut scratch.reduced,
+                    )?;
+                    k_actual = scratch.union_idx.len();
                     f_ratio = 1.0; // broadcast has no padding concept
                     t_comm = t_bcast + t_red;
                 }
                 CommPattern::AllGather => {
-                    let ag = allgather_sparse_rk(&self.ep, out, &self.net)?;
-                    let (_vals, t_red) =
-                        sparse_allreduce_union_rk(&self.ep, &acc, &ag.union_idx, &self.net)?;
-                    k_by_rank = ag.k_by_rank;
-                    k_actual = ag.union_idx.len();
-                    f_ratio = ag.f_ratio;
-                    t_comm = ag.time_s + t_red;
-                    union_idx = ag.union_idx;
+                    let stats = allgather_sparse_rk(
+                        &self.ep,
+                        Arc::new(out),
+                        &self.net,
+                        &mut scratch.union_idx,
+                        &mut scratch.k_by_rank,
+                    )?;
+                    let t_red = sparse_allreduce_union_rk(
+                        &self.ep,
+                        &acc,
+                        &scratch.union_idx,
+                        &self.net,
+                        &mut scratch.send,
+                        &mut scratch.reduced,
+                    )?;
+                    k_actual = scratch.union_idx.len();
+                    f_ratio = stats.f_ratio;
+                    t_comm = stats.time_s + t_red;
                 }
             }
 
             // --- error carry (Alg. 1 lines 18-19): zero union coords
             if !dense {
-                for &i in &union_idx {
+                for &i in &scratch.union_idx {
                     acc[i as usize] = 0.0;
                 }
                 std::mem::swap(&mut err, &mut acc);
             }
 
             // --- feedback to the replica (Alg. 5 + Alg. 3 input)
-            self.sp.observe(t, &k_by_rank)?;
+            self.sp.observe(t, &scratch.k_by_rank)?;
 
             // --- diagnostics (same schedule on every rank)
             if !dense && (t % self.cfg.err_every == 0 || t + 1 == self.cfg.iters) {
-                let norms = self.ep.allgather_f64(l2_norm(&err))?;
-                last_global_err = norms.iter().sum::<f64>() / n as f64;
+                let norm_sum = self
+                    .ep
+                    .allgather_f64_fold(l2_norm(&err), 0.0f64, |a, x| a + x)?;
+                last_global_err = norm_sum / n as f64;
             }
 
             // --- cluster-wide select critical path
-            let sel_times = self.ep.allgather_f64(my_select)?;
-            let t_select = sel_times.iter().fold(0.0f64, |a, &b| a.max(b));
+            let t_select = self
+                .ep
+                .allgather_f64_fold(my_select, 0.0f64, |a, x| a.max(x))?;
 
             records.push(IterRecord {
                 t,
                 loss: f64::NAN,
                 k_user,
                 k_actual,
-                k_sum: k_by_rank.iter().sum(),
+                k_sum: scratch.k_by_rank.iter().sum(),
                 density: k_actual as f64 / n_g as f64,
                 f_ratio,
                 delta: self.sp.delta().unwrap_or(0.0) as f64,

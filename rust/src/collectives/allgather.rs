@@ -7,22 +7,22 @@
 //! its own `k_i` up to `m_t` — the overhead ExDyna's dynamic partition
 //! allocation attacks.
 //!
-//! The merge/cost arithmetic ([`merge_selections`]) is pure over the
-//! gathered selections, so the lock-step engine (selections already in
-//! one address space) and the threaded cluster engine (selections arrive
-//! through a [`crate::cluster::Transport`]) produce identical results by
-//! construction.
+//! The merge/cost arithmetic lives in one core
+//! ([`merge_selections_iter`]) that writes into caller-owned reusable
+//! buffers, so steady-state rounds allocate nothing; every engine —
+//! lock-step, threaded, and the TCP process-per-rank path — funnels
+//! through it, which is what keeps the three bit-identical by
+//! construction. [`merge_selections`] is the allocating convenience
+//! wrapper.
 
 use super::costmodel::CostModel;
 use crate::coordinator::SelectOutput;
+use std::borrow::Borrow;
 
-/// Outcome of the metadata + payload all-gather.
-#[derive(Clone, Debug)]
-pub struct AllGatherResult {
-    /// Sorted union of all selected indices (`idx_t` in Alg. 1).
-    pub union_idx: Vec<u32>,
-    /// Per-rank selection counts (`k_t` vector in Alg. 1).
-    pub k_by_rank: Vec<usize>,
+/// Cost/metadata facts of one padded all-gather round. The union index
+/// set and per-rank counts live in the caller's reusable buffers.
+#[derive(Clone, Copy, Debug)]
+pub struct AllGatherStats {
     /// `m_t = max_i k_i` — the padded per-rank payload in entries.
     pub m_t: usize,
     /// Total entries moved on the wire: `n · m_t` (includes padding).
@@ -36,20 +36,50 @@ pub struct AllGatherResult {
     pub time_s: f64,
 }
 
+/// Outcome of the metadata + payload all-gather, with owned buffers
+/// (the allocating form — see [`AllGatherStats`] for the reusable one).
+#[derive(Clone, Debug)]
+pub struct AllGatherResult {
+    /// Sorted union of all selected indices (`idx_t` in Alg. 1).
+    pub union_idx: Vec<u32>,
+    /// Per-rank selection counts (`k_t` vector in Alg. 1).
+    pub k_by_rank: Vec<usize>,
+    /// `m_t = max_i k_i` — the padded per-rank payload in entries.
+    pub m_t: usize,
+    /// Total entries moved on the wire: `n · m_t` (includes padding).
+    pub padded_entries: usize,
+    /// Traffic-increase ratio `f(t)` of Eq. (5) (NaN on empty rounds).
+    pub f_ratio: f64,
+    /// Modeled wall-clock of the all-gather, seconds.
+    pub time_s: f64,
+}
+
 /// Pure merge + α–β accounting over already-gathered selections: the
-/// union/dedup, the padded-traffic ratio f(t) and the modeled wire time.
-/// Both trainer engines call exactly this after the selections have been
-/// moved (trivially, or via a transport).
-pub fn merge_selections(outs: &[SelectOutput], net: &CostModel) -> AllGatherResult {
-    let n = outs.len();
+/// union/dedup, the padded-traffic ratio f(t) and the modeled wire time,
+/// written into the caller's reusable `union_idx`/`k_by_rank` buffers
+/// (cleared first; capacity is retained across rounds, so steady-state
+/// calls are allocation-free). Both trainer engines call exactly this
+/// after the selections have been moved (trivially, or via a transport).
+pub fn merge_selections_iter<'a, I>(
+    sels: I,
+    net: &CostModel,
+    union_idx: &mut Vec<u32>,
+    k_by_rank: &mut Vec<usize>,
+) -> AllGatherStats
+where
+    I: Iterator<Item = &'a SelectOutput> + Clone,
+{
+    k_by_rank.clear();
+    k_by_rank.extend(sels.clone().map(|o| o.len()));
+    let n = k_by_rank.len();
     debug_assert_eq!(n, net.topo.n_ranks);
-    let k_by_rank: Vec<usize> = outs.iter().map(|o| o.len()).collect();
     let m_t = k_by_rank.iter().copied().max().unwrap_or(0);
     let total_k: usize = k_by_rank.iter().sum();
 
     // merge + dedup (duplicates exist only for build-up sparsifiers)
-    let mut union_idx: Vec<u32> = Vec::with_capacity(total_k);
-    for o in outs {
+    union_idx.clear();
+    union_idx.reserve(total_k);
+    for o in sels {
         union_idx.extend_from_slice(&o.idx);
     }
     union_idx.sort_unstable();
@@ -59,9 +89,7 @@ pub fn merge_selections(outs: &[SelectOutput], net: &CostModel) -> AllGatherResu
     let meta_t = net.allgather(std::mem::size_of::<u64>());
     let payload_t = net.allgather(m_t * CostModel::SPARSE_ENTRY_BYTES);
 
-    AllGatherResult {
-        union_idx,
-        k_by_rank,
+    AllGatherStats {
         m_t,
         padded_entries: n * m_t,
         f_ratio: if total_k == 0 {
@@ -73,27 +101,65 @@ pub fn merge_selections(outs: &[SelectOutput], net: &CostModel) -> AllGatherResu
     }
 }
 
+/// Allocating wrapper over [`merge_selections_iter`]: merge per-rank
+/// selections and return owned buffers. Generic over anything that
+/// borrows a [`SelectOutput`] (`SelectOutput` itself, `Arc<SelectOutput>`
+/// board entries, ...).
+pub fn merge_selections<S: Borrow<SelectOutput>>(outs: &[S], net: &CostModel) -> AllGatherResult {
+    let mut union_idx = Vec::new();
+    let mut k_by_rank = Vec::new();
+    let stats = merge_selections_iter(
+        outs.iter().map(|o| o.borrow()),
+        net,
+        &mut union_idx,
+        &mut k_by_rank,
+    );
+    AllGatherResult {
+        union_idx,
+        k_by_rank,
+        m_t: stats.m_t,
+        padded_entries: stats.padded_entries,
+        f_ratio: stats.f_ratio,
+        time_s: stats.time_s,
+    }
+}
+
 /// Merge per-rank selections with padded-all-gather semantics and charge
 /// the cost model (lock-step convenience wrapper over
 /// [`merge_selections`]).
-pub fn allgather_sparse(outs: &[SelectOutput], net: &CostModel) -> AllGatherResult {
+pub fn allgather_sparse<S: Borrow<SelectOutput>>(outs: &[S], net: &CostModel) -> AllGatherResult {
     merge_selections(outs, net)
 }
 
 /// CLT-k: broadcast the leader's selection to every rank; non-leader
-/// selections must be empty. Returns (indices, modeled time).
-pub fn broadcast_selection(
-    outs: &[SelectOutput],
+/// selections must be empty. The leader's indices land in the caller's
+/// reusable `idx` buffer (cleared first); returns the modeled time.
+pub fn broadcast_selection_into<S: Borrow<SelectOutput>>(
+    outs: &[S],
     leader: usize,
     net: &CostModel,
-) -> (Vec<u32>, f64) {
+    idx: &mut Vec<u32>,
+) -> f64 {
     debug_assert!(outs
         .iter()
         .enumerate()
-        .all(|(r, o)| r == leader || o.is_empty()));
-    let idx = outs[leader].idx.clone();
+        .all(|(r, o)| r == leader || o.borrow().is_empty()));
+    idx.clear();
+    idx.extend_from_slice(&outs[leader].borrow().idx);
     let bytes = idx.len() * CostModel::SPARSE_ENTRY_BYTES;
-    (idx, net.broadcast(bytes))
+    net.broadcast(bytes)
+}
+
+/// Allocating wrapper over [`broadcast_selection_into`]. Returns
+/// (indices, modeled time).
+pub fn broadcast_selection<S: Borrow<SelectOutput>>(
+    outs: &[S],
+    leader: usize,
+    net: &CostModel,
+) -> (Vec<u32>, f64) {
+    let mut idx = Vec::new();
+    let t = broadcast_selection_into(outs, leader, net, &mut idx);
+    (idx, t)
 }
 
 #[cfg(test)]
@@ -118,6 +184,28 @@ mod tests {
         assert_eq!(r.padded_entries, 6);
         assert!((r.f_ratio - 6.0 / 5.0).abs() < 1e-12);
         assert!(r.time_s > 0.0);
+    }
+
+    #[test]
+    fn reused_buffers_match_allocating_wrapper() {
+        let net = CostModel::paper_testbed(2);
+        let mut union_idx = vec![99u32; 64]; // stale content must not leak
+        let mut k_by_rank = vec![7usize; 64];
+        for outs in [
+            vec![sel(&[5, 1, 9]), sel(&[9, 2])],
+            vec![sel(&[0]), sel(&[])],
+            vec![sel(&[]), sel(&[])],
+        ] {
+            let reference = merge_selections(&outs, &net);
+            let stats =
+                merge_selections_iter(outs.iter(), &net, &mut union_idx, &mut k_by_rank);
+            assert_eq!(union_idx, reference.union_idx);
+            assert_eq!(k_by_rank, reference.k_by_rank);
+            assert_eq!(stats.m_t, reference.m_t);
+            assert_eq!(stats.padded_entries, reference.padded_entries);
+            assert_eq!(stats.f_ratio.to_bits(), reference.f_ratio.to_bits());
+            assert_eq!(stats.time_s.to_bits(), reference.time_s.to_bits());
+        }
     }
 
     #[test]

@@ -3,10 +3,12 @@
 //!
 //! The reduction arithmetic is split from the data movement so the
 //! lock-step engine (which holds every rank's accumulator in one address
-//! space) and the threaded cluster engine (where contributions arrive
-//! through a [`crate::cluster::Transport`]) share bit-exact code:
-//! [`gather_contribution`] extracts one rank's wire payload and
-//! [`reduce_contributions`] sums payloads in rank order.
+//! space) and the transport engines (where contributions arrive through
+//! a [`crate::cluster::Transport`]) share bit-exact code — and it is
+//! written against flat reusable buffers ([`gather_contribution_into`],
+//! [`accumulate_contribution`], [`reduce_contributions_into`]) so
+//! steady-state rounds allocate nothing. The `Vec`-returning forms are
+//! thin wrappers kept for convenience and tests.
 
 use super::costmodel::CostModel;
 
@@ -21,45 +23,97 @@ pub fn dense_allreduce(per_rank: &[Vec<f32>], net: &CostModel) -> (Vec<f32>, f64
     (sum, t)
 }
 
-/// One rank's sparse all-reduce payload: `acc[idx]` for each union index
-/// (Alg. 1 line 12: `g_i = acc_i[idx_t]`). This is exactly what the rank
-/// puts on the wire.
-pub fn gather_contribution(acc: &[f32], union_idx: &[u32]) -> Vec<f32> {
-    union_idx.iter().map(|&i| acc[i as usize]).collect()
+/// One rank's sparse all-reduce payload, written into a reusable buffer
+/// (cleared first): `acc[idx]` for each union index (Alg. 1 line 12:
+/// `g_i = acc_i[idx_t]`). This is exactly what the rank puts on the wire.
+pub fn gather_contribution_into(acc: &[f32], union_idx: &[u32], out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(union_idx.len());
+    out.extend(union_idx.iter().map(|&i| acc[i as usize]));
 }
 
-/// SUM-reduce equal-length per-rank payloads **in rank order** (the
-/// deterministic reduction order both engines share). Empty input yields
-/// an empty vector.
-pub fn reduce_contributions(per_rank: &[Vec<f32>]) -> Vec<f32> {
-    let Some(first) = per_rank.first() else {
-        return Vec::new();
-    };
-    let mut out = vec![0f32; first.len()];
-    for vals in per_rank {
-        debug_assert_eq!(vals.len(), out.len());
-        for (o, &x) in out.iter_mut().zip(vals.iter()) {
-            *o += x;
-        }
-    }
+/// Allocating wrapper over [`gather_contribution_into`].
+pub fn gather_contribution(acc: &[f32], union_idx: &[u32]) -> Vec<f32> {
+    let mut out = Vec::new();
+    gather_contribution_into(acc, union_idx, &mut out);
     out
 }
 
-/// Sparse all-reduce over the union index set: every rank contributes
-/// `acc_i[idx]` for each union index (Alg. 1 line 12: `g_i = acc_i[idx_t]`),
-/// and the SUM over ranks comes back (line 13). Returns (summed values
-/// aligned with `union_idx`, modeled time).
+/// Add one rank's payload into the running rank-ordered SUM — the single
+/// shared accumulation step every engine's reduction is built from.
+pub fn accumulate_contribution(out: &mut [f32], vals: &[f32]) {
+    debug_assert_eq!(vals.len(), out.len());
+    for (o, &x) in out.iter_mut().zip(vals.iter()) {
+        *o += x;
+    }
+}
+
+/// SUM-reduce equal-length per-rank payloads **in rank order** (the
+/// deterministic reduction order every engine shares) into a reusable
+/// buffer: `out` is reset to `len` zeros, then each rank's payload is
+/// added in turn. Capacity is retained across rounds.
+pub fn reduce_contributions_into<'a>(
+    parts: impl Iterator<Item = &'a [f32]>,
+    len: usize,
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    out.resize(len, 0.0);
+    for vals in parts {
+        accumulate_contribution(out, vals);
+    }
+}
+
+/// Allocating wrapper over [`reduce_contributions_into`]. Empty input
+/// yields an empty vector.
+pub fn reduce_contributions(per_rank: &[Vec<f32>]) -> Vec<f32> {
+    let len = per_rank.first().map(|v| v.len()).unwrap_or(0);
+    let mut out = Vec::new();
+    reduce_contributions_into(per_rank.iter().map(|v| v.as_slice()), len, &mut out);
+    out
+}
+
+/// Sparse all-reduce over the union index set, into a reusable buffer:
+/// every rank contributes `acc_i[idx]` for each union index (Alg. 1
+/// line 12), and `out` receives the SUM over ranks aligned with
+/// `union_idx` (line 13). Takes the rank accumulators as an iterator so
+/// callers need not materialize a slice-of-slices. Returns the modeled
+/// time.
+pub fn sparse_allreduce_union_iter<'a>(
+    accs: impl Iterator<Item = &'a [f32]>,
+    union_idx: &[u32],
+    net: &CostModel,
+    out: &mut Vec<f32>,
+) -> f64 {
+    out.clear();
+    out.resize(union_idx.len(), 0.0);
+    for acc in accs {
+        for (o, &i) in out.iter_mut().zip(union_idx.iter()) {
+            *o += acc[i as usize];
+        }
+    }
+    net.allreduce(union_idx.len() * CostModel::DENSE_ENTRY_BYTES)
+}
+
+/// Slice-of-slices wrapper over [`sparse_allreduce_union_iter`].
+pub fn sparse_allreduce_union_into(
+    accs: &[&[f32]],
+    union_idx: &[u32],
+    net: &CostModel,
+    out: &mut Vec<f32>,
+) -> f64 {
+    sparse_allreduce_union_iter(accs.iter().copied(), union_idx, net, out)
+}
+
+/// Allocating wrapper over [`sparse_allreduce_union_into`]. Returns
+/// (summed values aligned with `union_idx`, modeled time).
 pub fn sparse_allreduce_union(
     accs: &[&[f32]],
     union_idx: &[u32],
     net: &CostModel,
 ) -> (Vec<f32>, f64) {
-    let contributions: Vec<Vec<f32>> = accs
-        .iter()
-        .map(|acc| gather_contribution(acc, union_idx))
-        .collect();
-    let out = reduce_contributions(&contributions);
-    let t = net.allreduce(union_idx.len() * CostModel::DENSE_ENTRY_BYTES);
+    let mut out = Vec::new();
+    let t = sparse_allreduce_union_into(accs, union_idx, net, &mut out);
     (out, t)
 }
 
@@ -99,6 +153,23 @@ mod tests {
             gather_contribution(&acc1, &idx),
         ];
         assert_eq!(reduce_contributions(&parts), fused);
+    }
+
+    #[test]
+    fn reused_reduce_buffer_matches_and_clears_stale_state() {
+        let acc0 = vec![1.0f32, -2.0, 4.0];
+        let acc1 = vec![0.5f32, 0.25, -1.0];
+        let idx = vec![0u32, 2];
+        let net = CostModel::paper_testbed(2);
+        let (reference, t_ref) = sparse_allreduce_union(&[&acc0, &acc1], &idx, &net);
+        let mut out = vec![1e9f32; 32]; // stale content must not leak
+        let t = sparse_allreduce_union_into(&[&acc0, &acc1], &idx, &net, &mut out);
+        assert_eq!(out, reference);
+        assert_eq!(t.to_bits(), t_ref.to_bits());
+        // and the gathered-parts form agrees through the same buffer
+        let mut part = vec![7.0f32; 8];
+        gather_contribution_into(&acc0, &idx, &mut part);
+        assert_eq!(part, gather_contribution(&acc0, &idx));
     }
 
     #[test]

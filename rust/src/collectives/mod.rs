@@ -17,9 +17,13 @@
 //! the lock-step form ([`allgather_sparse`], [`sparse_allreduce_union`],
 //! [`broadcast_selection`]) operating on every rank's data at once, and
 //! the per-rank form ([`ranked`]) where each worker contributes its own
-//! message over a [`crate::cluster::Transport`]. [`costmodel`] also
-//! hosts the deterministic straggler/jitter hook
-//! ([`costmodel::StragglerCfg`]) for imbalance scenarios.
+//! message over a [`crate::cluster::Transport`]. The cores write into
+//! caller-owned reusable buffers (`*_into` / `*_iter` forms plus the
+//! per-worker [`ranked::RoundScratch`]), so steady-state collective
+//! rounds perform no heap allocations; the `Vec`-returning names are
+//! thin wrappers. [`costmodel`] also hosts the deterministic
+//! straggler/jitter hook ([`costmodel::StragglerCfg`]) for imbalance
+//! scenarios.
 
 pub mod allgather;
 pub mod allreduce;
@@ -27,10 +31,18 @@ pub mod costmodel;
 pub mod ranked;
 pub mod topology;
 
-pub use allgather::{allgather_sparse, broadcast_selection, merge_selections, AllGatherResult};
+pub use allgather::{
+    allgather_sparse, broadcast_selection, broadcast_selection_into, merge_selections,
+    merge_selections_iter, AllGatherResult, AllGatherStats,
+};
 pub use allreduce::{
-    dense_allreduce, gather_contribution, reduce_contributions, sparse_allreduce_union,
+    accumulate_contribution, dense_allreduce, gather_contribution, gather_contribution_into,
+    reduce_contributions, reduce_contributions_into, sparse_allreduce_union,
+    sparse_allreduce_union_into, sparse_allreduce_union_iter,
 };
 pub use costmodel::{CostModel, StragglerCfg};
-pub use ranked::{allgather_sparse_rk, broadcast_selection_rk, sparse_allreduce_union_rk};
+pub use ranked::{
+    allgather_sparse_rk, allreduce_dense_rk, broadcast_selection_rk, sparse_allreduce_union_rk,
+    RoundScratch,
+};
 pub use topology::Topology;

@@ -2,70 +2,176 @@
 //!
 //! These are the worker-side forms of the lock-step collectives: the data
 //! movement goes through the transport (each rank contributes its own
-//! message and receives the rank-indexed board), while the merge and
-//! wire-clock arithmetic is the *same* pure code the lock-step engine
-//! calls ([`merge_selections`], [`broadcast_selection`],
-//! [`gather_contribution`]/[`reduce_contributions`]) — which is what
-//! makes the two engines bit-identical for a fixed seed.
+//! message and receives the shared rank-indexed board), while the merge
+//! and wire-clock arithmetic is the *same* pure code the lock-step
+//! engine calls ([`merge_selections_iter`], [`broadcast_selection`],
+//! [`accumulate_contribution`]) — which is what makes the engines
+//! bit-identical for a fixed seed.
+//!
+//! Everything here is steady-state allocation-free: selections travel as
+//! `Arc<SelectOutput>` (one wrap at the selection boundary), float
+//! contributions come from the caller's rotating
+//! [`FloatBufPool`], and union/count/sum outputs land in the caller's
+//! [`RoundScratch`] buffers. Boards are read in place — no
+//! `Vec<Vec<f32>>` materialization — so a warm round touches the heap
+//! zero times (`rust/tests/alloc_regression.rs` pins this).
 //!
 //! [Transport]: crate::cluster::Transport
 
-use super::allgather::{broadcast_selection, merge_selections, AllGatherResult};
-use super::allreduce::{gather_contribution, reduce_contributions};
+use super::allgather::{merge_selections_iter, AllGatherStats};
+use super::allreduce::{accumulate_contribution, gather_contribution_into};
 use super::costmodel::CostModel;
-use crate::cluster::transport::Endpoint;
+use crate::cluster::transport::{envelope_mismatch, Endpoint, FloatBufPool, Message};
 use crate::coordinator::SelectOutput;
-use crate::error::Result;
+use crate::error::{Error, Result};
+use std::sync::Arc;
 
-/// Padded sparse all-gather from one rank's perspective: contribute
-/// `mine`, receive the merged union/metadata/cost.
-pub fn allgather_sparse_rk(
-    ep: &Endpoint<'_>,
-    mine: SelectOutput,
-    net: &CostModel,
-) -> Result<AllGatherResult> {
-    let outs = ep.allgather_select(mine)?;
-    Ok(merge_selections(&outs, net))
+/// One worker's reusable round-scratch: every buffer the per-rank
+/// collectives write into. Created once per worker (thread/process) and
+/// threaded through each iteration so the merge/reduce path performs no
+/// steady-state heap allocations — capacities grow to the working-set
+/// size during the first rounds and are retained.
+#[derive(Default)]
+pub struct RoundScratch {
+    /// Sorted union of selected indices (`idx_t`), or the leader's
+    /// indices under CLT-k broadcast.
+    pub union_idx: Vec<u32>,
+    /// Per-rank selection counts (`k_t`).
+    pub k_by_rank: Vec<usize>,
+    /// Rank-ordered SUM of the sparse all-reduce.
+    pub reduced: Vec<f32>,
+    /// Rotating send buffers for float contributions.
+    pub send: FloatBufPool,
 }
 
-/// CLT-k leader broadcast from one rank's perspective. Returns the
-/// leader's indices, the per-rank counts, and the modeled broadcast time.
+impl RoundScratch {
+    /// Empty scratch; buffers size themselves on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Validate that every board entry is a `Selection` and expose them as a
+/// cloneable borrowing iterator (no per-entry `Arc` clones, no interim
+/// `Vec`).
+fn board_selections(board: &[Message]) -> Result<impl Iterator<Item = &SelectOutput> + Clone> {
+    for m in board {
+        if !matches!(m, Message::Selection(_)) {
+            return Err(envelope_mismatch("Selection", m));
+        }
+    }
+    Ok(board.iter().map(|m| match m {
+        Message::Selection(s) => s.as_ref(),
+        _ => unreachable!("validated just above"),
+    }))
+}
+
+/// SUM-reduce a board of `Floats` messages in rank order into `out`
+/// (reset to `len` zeros first) — the transport-side twin of
+/// [`crate::collectives::reduce_contributions_into`], sharing its
+/// accumulation step.
+fn reduce_board_floats(board: &[Message], len: usize, out: &mut Vec<f32>) -> Result<()> {
+    out.clear();
+    out.resize(len, 0.0);
+    for m in board {
+        let Message::Floats(vals) = m else {
+            return Err(envelope_mismatch("Floats", m));
+        };
+        if vals.len() != len {
+            return Err(Error::invariant(format!(
+                "all-reduce contribution length mismatch: got {}, expected {len} — \
+                 workers diverged",
+                vals.len()
+            )));
+        }
+        accumulate_contribution(out, vals);
+    }
+    Ok(())
+}
+
+/// Padded sparse all-gather from one rank's perspective: contribute
+/// `mine`, receive the merged union/counts in the caller's buffers plus
+/// the round's cost/metadata stats.
+pub fn allgather_sparse_rk(
+    ep: &Endpoint<'_>,
+    mine: Arc<SelectOutput>,
+    net: &CostModel,
+    union_idx: &mut Vec<u32>,
+    k_by_rank: &mut Vec<usize>,
+) -> Result<AllGatherStats> {
+    let board = ep.allgather(Message::Selection(mine))?;
+    let sels = board_selections(&board)?;
+    Ok(merge_selections_iter(sels, net, union_idx, k_by_rank))
+}
+
+/// CLT-k leader broadcast from one rank's perspective. The leader's
+/// indices land in `idx`, the per-rank counts in `k_by_rank`; returns
+/// the modeled broadcast time.
 pub fn broadcast_selection_rk(
     ep: &Endpoint<'_>,
-    mine: SelectOutput,
+    mine: Arc<SelectOutput>,
     leader: usize,
     net: &CostModel,
-) -> Result<(Vec<u32>, Vec<usize>, f64)> {
-    let outs = ep.allgather_select(mine)?;
-    let k_by_rank: Vec<usize> = outs.iter().map(|o| o.len()).collect();
-    let (idx, t) = broadcast_selection(&outs, leader, net);
-    Ok((idx, k_by_rank, t))
+    idx: &mut Vec<u32>,
+    k_by_rank: &mut Vec<usize>,
+) -> Result<f64> {
+    let board = ep.allgather(Message::Selection(mine))?;
+    let sels = board_selections(&board)?;
+    k_by_rank.clear();
+    k_by_rank.extend(sels.clone().map(|o| o.len()));
+    let leader_sel = sels.clone().nth(leader).ok_or_else(|| {
+        Error::invariant(format!(
+            "broadcast leader {leader} out of range (board spans {} ranks)",
+            k_by_rank.len()
+        ))
+    })?;
+    debug_assert!(sels
+        .enumerate()
+        .all(|(r, o)| r == leader || o.is_empty()));
+    idx.clear();
+    idx.extend_from_slice(&leader_sel.idx);
+    Ok(net.broadcast(idx.len() * CostModel::SPARSE_ENTRY_BYTES))
 }
 
 /// Sparse all-reduce over the union index set from one rank's
-/// perspective: contribute `acc[union_idx]`, receive the rank-ordered
-/// SUM and the modeled wire time.
+/// perspective: contribute `acc[union_idx]` (through the rotating send
+/// pool), receive the rank-ordered SUM in `reduced`, return the modeled
+/// wire time.
 pub fn sparse_allreduce_union_rk(
     ep: &Endpoint<'_>,
     acc: &[f32],
     union_idx: &[u32],
     net: &CostModel,
-) -> Result<(Vec<f32>, f64)> {
-    let mine = gather_contribution(acc, union_idx);
-    let all = ep.allgather_floats(mine)?;
-    let sum = reduce_contributions(&all);
-    Ok((
-        sum,
-        net.allreduce(union_idx.len() * CostModel::DENSE_ENTRY_BYTES),
-    ))
+    send: &mut FloatBufPool,
+    reduced: &mut Vec<f32>,
+) -> Result<f64> {
+    let mine = send.fill(|buf| gather_contribution_into(acc, union_idx, buf));
+    let board = ep.allgather(Message::Floats(mine))?;
+    reduce_board_floats(&board, union_idx.len(), reduced)?;
+    Ok(net.allreduce(union_idx.len() * CostModel::DENSE_ENTRY_BYTES))
+}
+
+/// Dense all-reduce from one rank's perspective: contribute the full
+/// `vals` vector, receive the rank-ordered SUM in `reduced`, return the
+/// modeled ring all-reduce time.
+pub fn allreduce_dense_rk(
+    ep: &Endpoint<'_>,
+    vals: &[f32],
+    net: &CostModel,
+    send: &mut FloatBufPool,
+    reduced: &mut Vec<f32>,
+) -> Result<f64> {
+    let mine = send.fill(|buf| buf.extend_from_slice(vals));
+    let board = ep.allgather(Message::Floats(mine))?;
+    reduce_board_floats(&board, vals.len(), reduced)?;
+    Ok(net.allreduce(vals.len() * CostModel::DENSE_ENTRY_BYTES))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::cluster::transport::LocalTransport;
-    use crate::collectives::sparse_allreduce_union;
-    use std::sync::Arc;
+    use crate::collectives::{merge_selections, sparse_allreduce_union};
 
     #[test]
     fn ranked_ops_match_lockstep_arithmetic() {
@@ -87,27 +193,73 @@ mod tests {
         let acc_refs: Vec<&[f32]> = accs.iter().map(|a| a.as_slice()).collect();
         let (sum_ref, t_ref) = sparse_allreduce_union(&acc_refs, &ag_ref.union_idx, &net);
 
-        // transport path
+        // transport path, through per-worker scratch
         let tp = Arc::new(LocalTransport::new(n));
         let mut handles = Vec::new();
         for rank in 0..n {
             let tp = tp.clone();
             let acc = accs[rank].clone();
-            let sel = sels[rank].clone();
+            let sel = Arc::new(sels[rank].clone());
             handles.push(std::thread::spawn(move || {
                 let ep = Endpoint::new(rank, tp.as_ref());
                 let net = CostModel::paper_testbed(2);
-                let ag = allgather_sparse_rk(&ep, sel, &net).unwrap();
-                let (sum, t) = sparse_allreduce_union_rk(&ep, &acc, &ag.union_idx, &net).unwrap();
-                (ag, sum, t)
+                let mut scratch = RoundScratch::new();
+                allgather_sparse_rk(
+                    &ep,
+                    sel,
+                    &net,
+                    &mut scratch.union_idx,
+                    &mut scratch.k_by_rank,
+                )
+                .unwrap();
+                let t = sparse_allreduce_union_rk(
+                    &ep,
+                    &acc,
+                    &scratch.union_idx,
+                    &net,
+                    &mut scratch.send,
+                    &mut scratch.reduced,
+                )
+                .unwrap();
+                (scratch, t)
             }));
         }
         for h in handles {
-            let (ag, sum, t) = h.join().unwrap();
-            assert_eq!(ag.union_idx, ag_ref.union_idx);
-            assert_eq!(ag.k_by_rank, ag_ref.k_by_rank);
-            assert_eq!(sum, sum_ref);
+            let (scratch, t) = h.join().unwrap();
+            assert_eq!(scratch.union_idx, ag_ref.union_idx);
+            assert_eq!(scratch.k_by_rank, ag_ref.k_by_rank);
+            assert_eq!(scratch.reduced, sum_ref);
             assert_eq!(t, t_ref);
+        }
+    }
+
+    #[test]
+    fn dense_allreduce_rk_sums_in_rank_order() {
+        let n = 3;
+        let tp = Arc::new(LocalTransport::new(n));
+        let mut handles = Vec::new();
+        for rank in 0..n {
+            let tp = tp.clone();
+            handles.push(std::thread::spawn(move || {
+                let ep = Endpoint::new(rank, tp.as_ref());
+                let net = CostModel::paper_testbed(3);
+                let mut scratch = RoundScratch::new();
+                let vals = vec![rank as f32, 10.0 * rank as f32];
+                let t = allreduce_dense_rk(
+                    &ep,
+                    &vals,
+                    &net,
+                    &mut scratch.send,
+                    &mut scratch.reduced,
+                )
+                .unwrap();
+                (scratch.reduced, t)
+            }));
+        }
+        for h in handles {
+            let (sum, t) = h.join().unwrap();
+            assert_eq!(sum, vec![3.0, 30.0]);
+            assert!(t > 0.0);
         }
     }
 }

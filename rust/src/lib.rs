@@ -24,14 +24,14 @@
 //!        │   — or the lock-step loop,       buffers (shared-nothing)
 //!        │     kept bit-exact for parity —
 //!        ▼
-//!   cluster::Transport                      data movement, rank-addressed
-//!        │     ├ LocalTransport             in-process rendezvous board
-//!        │     └ net::TcpTransport          one process per rank: framed
-//!        │         (codec + handshake)      checksummed wire, TCP hub
-//!        ▼
-//!   collectives::{merge_selections,         pure merge/reduce arithmetic
-//!       reduce_contributions, …}            shared by every engine
-//!        +
+//!   cluster::Transport                      data movement: Arc-shared
+//!        │     ├ LocalTransport             boards, O(n) fan-out; in-process
+//!        │     └ net::TcpTransport          rendezvous / one process per
+//!        │         (codec + handshake)      rank over a framed checksummed
+//!        ▼                                  wire through a TCP hub
+//!   collectives::{merge_selections_iter,    pure merge/reduce arithmetic
+//!       reduce_contributions_into, …}       shared by every engine, writing
+//!        +                                  into reusable RoundScratch
 //!   collectives::CostModel (α–β clock,      modeled wire time + the
 //!       StragglerCfg jitter/link hook)      straggler/imbalance injector
 //!        ▲
@@ -44,8 +44,11 @@
 //!
 //! Data movement is executed for real (workers exchange actual
 //! index/value vectors over the transport, so correctness is bit-exact)
-//! while the α–β [`collectives::CostModel`] separately charges what each
-//! collective would cost on the modeled cluster. The engine choice
+//! but zero-copy in-process — boards fan out as shared `Arc` slabs and
+//! round buffers are reused, so steady-state collective rounds touch the
+//! heap zero times (`rust/tests/alloc_regression.rs`) — while the α–β
+//! [`collectives::CostModel`] separately charges what each collective
+//! would cost on the modeled cluster's wire. The engine choice
 //! threads through [`cluster::EngineKind`] → `SimCfg`/`RealTrainerCfg` →
 //! the CLI (`--engine threaded|lockstep`); the transport choice through
 //! [`cluster::TransportKind`] (`transport = "tcp"` in TOML, `exdyna

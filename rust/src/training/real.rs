@@ -28,8 +28,8 @@
 use crate::cluster::transport::{Endpoint, LocalTransport, Transport};
 use crate::cluster::EngineKind;
 use crate::collectives::{
-    allgather_sparse_rk, broadcast_selection, broadcast_selection_rk, merge_selections,
-    reduce_contributions, sparse_allreduce_union, sparse_allreduce_union_rk, CostModel,
+    allgather_sparse_rk, allreduce_dense_rk, broadcast_selection, broadcast_selection_rk,
+    merge_selections, sparse_allreduce_union, sparse_allreduce_union_rk, CostModel, RoundScratch,
 };
 use crate::coordinator::selection::compact_masked;
 use crate::coordinator::SelectOutput;
@@ -103,21 +103,23 @@ enum Workload {
     Lm(MarkovText),
 }
 
-/// Everything one rank owns: its sparsifier replica and its error
-/// accumulator (padded length).
+/// Everything one rank owns: its sparsifier replica, its error
+/// accumulator, and the reusable accumulator buffer `e + lr·G` the
+/// per-step core writes into (both padded length; persistent so the
+/// steady-state step allocates neither).
 struct RankState {
     sparsifier: Box<dyn Sparsifier>,
     err: Vec<f32>,
+    acc: Vec<f32>,
 }
 
-/// Output of the shared per-rank compute/select core.
+/// Output of the shared per-rank compute/select core. The accumulator
+/// itself stays in `RankState::acc` (PJRT backend may have already
+/// zeroed its own hits — see `rank_compute_select`).
 struct ComputeSelect {
     loss: f64,
     t_compute: f64,
     t_select: f64,
-    /// Accumulator `e + lr·G` (padded length; PJRT backend may have
-    /// already zeroed its own hits — see `rank_compute_select`).
-    acc: Vec<f32>,
     /// This rank's selection.
     out: SelectOutput,
 }
@@ -133,9 +135,11 @@ struct AggOut {
 }
 
 /// What one rank's threaded step hands back to the harness for merging:
-/// this rank's own scalars plus the (replicated) aggregate. With the
-/// persistent pool the rank states live on the worker threads, so the
-/// post-carry error norm and threshold travel back with the result.
+/// this rank's own scalars plus (rank 0 only) the replicated aggregate.
+/// With the persistent pool the rank states live on the worker threads,
+/// so the post-carry error norm and threshold travel back with the
+/// result; the aggregate is identical on every rank, so only rank 0
+/// copies it out of its scratch buffers.
 struct RankStepOut {
     loss: f64,
     t_compute: f64,
@@ -144,7 +148,8 @@ struct RankStepOut {
     err_norm: f64,
     /// The sparsifier's threshold after `observe` (0 if none).
     delta: f64,
-    agg: AggOut,
+    /// `Some` on rank 0, `None` elsewhere.
+    agg: Option<AggOut>,
 }
 
 /// Engine-agnostic per-iteration outcome the harness records.
@@ -180,7 +185,8 @@ fn fwdbwd(
 }
 
 /// One rank's fwd/bwd + error feedback + selection — the engine-agnostic
-/// core. All mutation is rank-local (`state`); shared inputs are read-only.
+/// core. All mutation is rank-local (`state`, whose persistent `acc`
+/// buffer receives `e + lr·G`); shared inputs are read-only.
 fn rank_compute_select(
     rank: usize,
     t: usize,
@@ -209,18 +215,16 @@ fn rank_compute_select(
         rank,
         n_ranks: n,
     };
-    let mut acc = vec![0f32; n_padded];
-    accumulate_into(&mut acc, &state.err, &grad, lr);
+    accumulate_into(&mut state.acc, &state.err, &grad, lr);
     let st = Instant::now();
     let out = if dense {
-        SelectOutput {
-            idx: (0..n_params as u32).collect(),
-            val: acc[..n_params].to_vec(),
-        }
+        // the dense aggregation never reads the selection — it reduces
+        // the full accumulator directly
+        SelectOutput::default()
     } else if cfg.backend == SelectBackend::Pjrt {
         let plan = state
             .sparsifier
-            .plan(&ctx, &acc[..n_params])?
+            .plan(&ctx, &state.acc[..n_params])?
             .ok_or_else(|| {
                 Error::invalid(format!(
                     "sparsifier '{}' has no window plan; PJRT backend needs one",
@@ -229,7 +233,7 @@ fn rank_compute_select(
             })?;
         let sp = rt.sparsify_step(&state.err, &grad, lr, plan.start, plan.end, plan.delta)?;
         // carry the kernel-produced accumulator (own hits zeroed)
-        acc = sp.new_err;
+        state.acc = sp.new_err;
         let mut out = compact_masked(&sp.selected, plan.start, plan.end);
         debug_assert_eq!(out.len(), sp.count);
         // values in `selected` are acc*mask — identical to acc at the hit
@@ -237,14 +241,13 @@ fn rank_compute_select(
         out.idx.shrink_to_fit();
         out
     } else {
-        state.sparsifier.select(&ctx, &acc[..n_params])?
+        state.sparsifier.select(&ctx, &state.acc[..n_params])?
     };
     let t_select = st.elapsed().as_secs_f64();
     Ok(ComputeSelect {
         loss: loss as f64,
         t_compute,
         t_select,
-        acc,
         out,
     })
 }
@@ -254,7 +257,6 @@ fn rank_compute_select(
 /// replica.
 fn rank_carry_and_observe(
     state: &mut RankState,
-    mut acc: Vec<f32>,
     union_idx: &[u32],
     k_by_rank: &[usize],
     t: usize,
@@ -262,15 +264,17 @@ fn rank_carry_and_observe(
 ) -> Result<()> {
     if !dense {
         for &i in union_idx {
-            acc[i as usize] = 0.0;
+            state.acc[i as usize] = 0.0;
         }
-        std::mem::swap(&mut state.err, &mut acc);
+        std::mem::swap(&mut state.err, &mut state.acc);
     }
     state.sparsifier.observe(t, k_by_rank)
 }
 
 /// One rank's full threaded iteration: the compute/select core plus the
-/// collective aggregation over the transport endpoint.
+/// collective aggregation over the transport endpoint. Union/counts/sums
+/// land in the worker's reusable `scratch`; only rank 0 copies the
+/// (replicated) aggregate out for the harness.
 #[allow(clippy::too_many_arguments)]
 fn rank_step_threaded(
     rank: usize,
@@ -282,6 +286,7 @@ fn rank_step_threaded(
     net: &CostModel,
     cfg: &RealTrainerCfg,
     ep: &Endpoint<'_>,
+    scratch: &mut RoundScratch,
 ) -> Result<RankStepOut> {
     let n = cfg.n_ranks;
     let n_params = rt.meta.n_params;
@@ -293,43 +298,69 @@ fn rank_step_threaded(
         loss,
         t_compute,
         t_select,
-        acc,
         out,
     } = rank_compute_select(rank, t, state, rt, workload, params, cfg)?;
 
-    let (union_idx, k_by_rank, f_ratio, t_comm, g_vals);
+    let (f_ratio, t_comm);
     match state.sparsifier.comm_pattern() {
         CommPattern::DenseAllReduce => {
-            let contributions = ep.allgather_floats(acc[..n_params].to_vec())?;
-            g_vals = reduce_contributions(&contributions);
-            union_idx = (0..n_params as u32).collect();
-            k_by_rank = vec![n_params; n];
-            f_ratio = 1.0;
             // dense all-reduce wire cost, not the sparse one
-            t_comm = net.allreduce(n_params * CostModel::DENSE_ENTRY_BYTES);
+            t_comm = allreduce_dense_rk(
+                ep,
+                &state.acc[..n_params],
+                net,
+                &mut scratch.send,
+                &mut scratch.reduced,
+            )?;
+            scratch.union_idx.clear();
+            scratch.union_idx.extend(0..n_params as u32);
+            scratch.k_by_rank.clear();
+            scratch.k_by_rank.resize(n, n_params);
+            f_ratio = 1.0;
         }
         CommPattern::LeaderBroadcast => {
             let leader = t % n;
-            let (idx, k_by, t_b) = broadcast_selection_rk(ep, out, leader, net)?;
-            let (vals, t_r) = sparse_allreduce_union_rk(ep, &acc[..n_params], &idx, net)?;
-            g_vals = vals;
-            k_by_rank = k_by;
-            union_idx = idx;
+            let t_b = broadcast_selection_rk(
+                ep,
+                Arc::new(out),
+                leader,
+                net,
+                &mut scratch.union_idx,
+                &mut scratch.k_by_rank,
+            )?;
+            let t_r = sparse_allreduce_union_rk(
+                ep,
+                &state.acc[..n_params],
+                &scratch.union_idx,
+                net,
+                &mut scratch.send,
+                &mut scratch.reduced,
+            )?;
             f_ratio = 1.0;
             t_comm = t_b + t_r;
         }
         CommPattern::AllGather => {
-            let ag = allgather_sparse_rk(ep, out, net)?;
-            let (vals, t_r) = sparse_allreduce_union_rk(ep, &acc[..n_params], &ag.union_idx, net)?;
-            g_vals = vals;
-            k_by_rank = ag.k_by_rank;
-            f_ratio = ag.f_ratio;
-            t_comm = ag.time_s + t_r;
-            union_idx = ag.union_idx;
+            let stats = allgather_sparse_rk(
+                ep,
+                Arc::new(out),
+                net,
+                &mut scratch.union_idx,
+                &mut scratch.k_by_rank,
+            )?;
+            let t_r = sparse_allreduce_union_rk(
+                ep,
+                &state.acc[..n_params],
+                &scratch.union_idx,
+                net,
+                &mut scratch.send,
+                &mut scratch.reduced,
+            )?;
+            f_ratio = stats.f_ratio;
+            t_comm = stats.time_s + t_r;
         }
     }
 
-    rank_carry_and_observe(state, acc, &union_idx, &k_by_rank, t, dense)?;
+    rank_carry_and_observe(state, &scratch.union_idx, &scratch.k_by_rank, t, dense)?;
 
     Ok(RankStepOut {
         loss,
@@ -337,13 +368,14 @@ fn rank_step_threaded(
         t_select,
         err_norm: if dense { 0.0 } else { l2_norm(&state.err) },
         delta: state.sparsifier.delta().unwrap_or(0.0) as f64,
-        agg: AggOut {
-            union_idx,
-            g_vals,
-            k_by_rank,
+        // the aggregate is replicated; one copy (rank 0's) is enough
+        agg: (rank == 0).then(|| AggOut {
+            union_idx: scratch.union_idx.clone(),
+            g_vals: scratch.reduced.clone(),
+            k_by_rank: scratch.k_by_rank.clone(),
             f_ratio,
             t_comm,
-        },
+        }),
     })
 }
 
@@ -397,9 +429,13 @@ impl RankPool {
                         transport.as_ref() as &dyn Transport,
                     );
                     let ep = Endpoint::new(rank, transport.as_ref() as &dyn Transport);
+                    // reusable collective buffers, one set per worker,
+                    // alive for the pool's whole lifetime
+                    let mut scratch = RoundScratch::new();
                     while let Ok(StepJob { t, params }) = job_rx.recv() {
                         let out = rank_step_threaded(
                             rank, t, &mut state, &rt, &workload, &params, &net, &cfg, &ep,
+                            &mut scratch,
                         );
                         // release the snapshot BEFORE reporting back, so
                         // the harness's Arc::make_mut never finds a live
@@ -508,6 +544,7 @@ impl RealTrainer {
                 Ok(RankState {
                     sparsifier: make(n_params, cfg.n_ranks)?,
                     err: vec![0f32; n_padded],
+                    acc: vec![0f32; n_padded],
                 })
             })
             .collect::<Result<_>>()?;
@@ -603,7 +640,7 @@ impl RealTrainer {
                 .iter_mut()
                 .map(|c| std::mem::take(&mut c.out))
                 .collect();
-            let accs: Vec<&[f32]> = cores.iter().map(|c| &c.acc[..n_params]).collect();
+            let accs: Vec<&[f32]> = ranks.iter().map(|s| &s.acc[..n_params]).collect();
             match ranks[0].sparsifier.comm_pattern() {
                 CommPattern::DenseAllReduce => {
                     let idx: Vec<u32> = (0..n_params as u32).collect();
@@ -636,8 +673,8 @@ impl RealTrainer {
             }
         }
 
-        for (state, core) in ranks.iter_mut().zip(cores.into_iter()) {
-            rank_carry_and_observe(state, core.acc, &union_idx, &k_by_rank, t, dense)?;
+        for state in ranks.iter_mut() {
+            rank_carry_and_observe(state, &union_idx, &k_by_rank, t, dense)?;
         }
         let err_norm_sum = if dense {
             0.0
@@ -680,15 +717,18 @@ impl RealTrainer {
         let t_compute = per_rank.iter().fold(0.0f64, |a, o| a.max(o.t_compute));
         let t_select = per_rank.iter().fold(0.0f64, |a, o| a.max(o.t_select));
         let err_norm_sum: f64 = per_rank.iter().map(|o| o.err_norm).sum();
-        // every rank computed the identical aggregate; keep rank 0's
+        // every rank computed the identical aggregate; rank 0 shipped it
         let first = per_rank.swap_remove(0);
+        let agg = first
+            .agg
+            .ok_or_else(|| Error::invariant("rank 0 step result carries no aggregate"))?;
         Ok(StepOut {
             losses,
             t_compute,
             t_select,
             err_norm_sum,
             delta: first.delta,
-            agg: first.agg,
+            agg,
         })
     }
 

@@ -32,7 +32,8 @@
 
 use crate::cluster::EngineKind;
 use crate::collectives::{
-    allgather_sparse, broadcast_selection, sparse_allreduce_union, CostModel, StragglerCfg,
+    allreduce::sparse_allreduce_union_iter, broadcast_selection_into, merge_selections_iter,
+    CostModel, StragglerCfg,
 };
 use crate::error::Result;
 use crate::grad::synth::SynthGen;
@@ -125,6 +126,12 @@ pub fn run_lockstep(
     let mut acc = vec![vec![0f32; n_g]; n];
     let mut grad = vec![0f32; n_g];
     let mut last_global_err = 0.0;
+    // reusable round buffers (the lock-step twin of the threaded
+    // engine's RoundScratch): steady-state iterations reuse capacity
+    let mut outs: Vec<crate::coordinator::SelectOutput> = Vec::with_capacity(n);
+    let mut union_idx: Vec<u32> = Vec::new();
+    let mut k_by_rank: Vec<usize> = Vec::new();
+    let mut reduced: Vec<f32> = Vec::new();
 
     for t in 0..cfg.iters {
         let lr = cfg.lr.lr(t);
@@ -140,7 +147,7 @@ pub fn run_lockstep(
             }
         }
         // --- selection (Alg. 1 line 10), parallel across ranks => max
-        let mut outs = Vec::with_capacity(n);
+        outs.clear();
         let mut t_select_max = 0.0f64;
         for (r, sp) in sparsifiers.iter_mut().enumerate() {
             let ctx = RoundCtx {
@@ -158,36 +165,44 @@ pub fn run_lockstep(
             t_select_max = t_select_max.max(st.elapsed().as_secs_f64());
             outs.push(out);
         }
-        // --- aggregation (Alg. 1 lines 11-13)
-        let (union_idx, k_by_rank, f_ratio, t_comm, k_actual);
+        // --- aggregation (Alg. 1 lines 11-13) into the reused buffers
+        let (f_ratio, t_comm, k_actual);
         match sparsifiers[0].comm_pattern() {
             CommPattern::DenseAllReduce => {
-                union_idx = Vec::new();
-                k_by_rank = vec![n_g; n];
+                union_idx.clear();
+                k_by_rank.clear();
+                k_by_rank.resize(n, n_g);
                 f_ratio = 1.0;
                 k_actual = n_g;
                 t_comm = net.allreduce(n_g * CostModel::DENSE_ENTRY_BYTES);
             }
             CommPattern::LeaderBroadcast => {
                 let leader = t % n;
-                let (idx, t_bcast) = broadcast_selection(&outs, leader, &net);
-                let accs: Vec<&[f32]> = acc.iter().map(|v| v.as_slice()).collect();
-                let (_vals, t_red) = sparse_allreduce_union(&accs, &idx, &net);
-                k_by_rank = outs.iter().map(|o| o.len()).collect();
-                k_actual = idx.len();
-                union_idx = idx;
+                let t_bcast = broadcast_selection_into(&outs, leader, &net, &mut union_idx);
+                let t_red = sparse_allreduce_union_iter(
+                    acc.iter().map(|v| v.as_slice()),
+                    &union_idx,
+                    &net,
+                    &mut reduced,
+                );
+                k_by_rank.clear();
+                k_by_rank.extend(outs.iter().map(|o| o.len()));
+                k_actual = union_idx.len();
                 f_ratio = 1.0; // broadcast has no padding concept
                 t_comm = t_bcast + t_red;
             }
             CommPattern::AllGather => {
-                let ag = allgather_sparse(&outs, &net);
-                let accs: Vec<&[f32]> = acc.iter().map(|v| v.as_slice()).collect();
-                let (_vals, t_red) = sparse_allreduce_union(&accs, &ag.union_idx, &net);
-                k_by_rank = ag.k_by_rank.clone();
-                k_actual = ag.union_idx.len();
-                f_ratio = ag.f_ratio;
-                t_comm = ag.time_s + t_red;
-                union_idx = ag.union_idx;
+                let stats =
+                    merge_selections_iter(outs.iter(), &net, &mut union_idx, &mut k_by_rank);
+                let t_red = sparse_allreduce_union_iter(
+                    acc.iter().map(|v| v.as_slice()),
+                    &union_idx,
+                    &net,
+                    &mut reduced,
+                );
+                k_actual = union_idx.len();
+                f_ratio = stats.f_ratio;
+                t_comm = stats.time_s + t_red;
             }
         }
         // --- error carry (Alg. 1 lines 18-19): zero union coords

@@ -1,0 +1,233 @@
+//! Allocation regression pin for the zero-copy collective hot path
+//! (ISSUE 3): steady-state collective rounds on the threaded engine must
+//! perform **zero** transport/merge-path heap allocations, and the board
+//! fan-out must be O(n) refcount bumps, not O(n²·k) payload copies.
+//!
+//! Method: a counting `#[global_allocator]` wraps `System`; each
+//! scenario runs warm-up rounds with counting disabled (buffer pools,
+//! board slabs and scratch capacities reach their working-set size),
+//! then rank 0 enables counting at a round boundary (the transport *is*
+//! a barrier, so the flip is ordered against every peer's steady
+//! rounds), runs the steady rounds, and disables counting before any
+//! thread exits (a final barrier round serializes that too).
+//!
+//! Everything runs inside ONE `#[test]` so no unrelated test-harness
+//! activity can allocate inside a counting window.
+
+use exdyna::cluster::{Endpoint, LocalTransport};
+use exdyna::collectives::{
+    allgather_sparse_rk, sparse_allreduce_union_rk, CostModel, RoundScratch,
+};
+use exdyna::coordinator::{ExDynaCfg, SelectOutput};
+use exdyna::grad::synth::{DecayCfg, SynthGen, SynthModel};
+use exdyna::sparsifiers::make_sparsifier_factory;
+use exdyna::training::sim::{run_sim, SimCfg};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static BYTES: AtomicU64 = AtomicU64::new(0);
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Counts allocations (not deallocations) while `ENABLED`. `realloc`
+/// and `alloc_zeroed` keep their default impls, which route through
+/// `alloc` — so every heap acquisition is counted.
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if ENABLED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+/// Reset counters, run `f`, return (allocations, bytes) acquired while
+/// `f`'s workers had counting enabled. `f` itself controls the window
+/// via `ENABLED` (so warm-up stays uncounted).
+fn measure(f: impl FnOnce()) -> (u64, u64) {
+    ENABLED.store(false, Ordering::SeqCst);
+    ALLOCS.store(0, Ordering::SeqCst);
+    BYTES.store(0, Ordering::SeqCst);
+    f();
+    ENABLED.store(false, Ordering::SeqCst);
+    (ALLOCS.load(Ordering::SeqCst), BYTES.load(Ordering::SeqCst))
+}
+
+/// Scalar all-gathers only: the bare transport round. Every steady round
+/// must be allocation-free (recycled board slabs, no payload).
+fn scalar_rounds(n: usize, warmup: usize, steady: usize) -> (u64, u64) {
+    measure(|| {
+        let tp = Arc::new(LocalTransport::new(n));
+        // preallocated so the main thread's pushes can never land inside
+        // a worker-opened counting window
+        let mut handles = Vec::with_capacity(n);
+        for rank in 0..n {
+            let tp = tp.clone();
+            handles.push(std::thread::spawn(move || {
+                let ep = Endpoint::new(rank, tp.as_ref());
+                for round in 0..(warmup + steady) {
+                    if rank == 0 && round == warmup {
+                        ENABLED.store(true, Ordering::SeqCst);
+                    }
+                    let sum = ep
+                        .allgather_f64_fold((rank + round) as f64, 0.0f64, |a, x| a + x)
+                        .unwrap();
+                    assert!(sum >= 0.0);
+                }
+                if rank == 0 {
+                    ENABLED.store(false, Ordering::SeqCst);
+                }
+                // cooldown barrier: no thread can exit (and run thread
+                // teardown) before rank 0 has disabled counting
+                ep.barrier().unwrap();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    })
+}
+
+/// Full collective iterations — padded selection all-gather + sparse
+/// union all-reduce + a scalar round — through per-worker RoundScratch,
+/// with fixed (pre-built) selections so the measured path is exactly the
+/// transport/merge path.
+fn collective_rounds(n: usize, k: usize, warmup: usize, steady: usize) -> (u64, u64) {
+    measure(|| {
+        let tp = Arc::new(LocalTransport::new(n));
+        let mut handles = Vec::with_capacity(n);
+        for rank in 0..n {
+            let tp = tp.clone();
+            handles.push(std::thread::spawn(move || {
+                let ep = Endpoint::new(rank, tp.as_ref());
+                let net = CostModel::paper_testbed(n);
+                // disjoint per-rank selections => union spans n·k indices
+                let sel = Arc::new(SelectOutput {
+                    idx: ((rank * k) as u32..((rank + 1) * k) as u32).collect(),
+                    val: vec![0.25f32; k],
+                });
+                let acc = vec![0.5f32; n * k];
+                let mut scratch = RoundScratch::new();
+                for round in 0..(warmup + steady) {
+                    if rank == 0 && round == warmup {
+                        ENABLED.store(true, Ordering::SeqCst);
+                    }
+                    let stats = allgather_sparse_rk(
+                        &ep,
+                        Arc::clone(&sel),
+                        &net,
+                        &mut scratch.union_idx,
+                        &mut scratch.k_by_rank,
+                    )
+                    .unwrap();
+                    assert_eq!(scratch.union_idx.len(), n * k);
+                    assert!(stats.time_s > 0.0);
+                    sparse_allreduce_union_rk(
+                        &ep,
+                        &acc,
+                        &scratch.union_idx,
+                        &net,
+                        &mut scratch.send,
+                        &mut scratch.reduced,
+                    )
+                    .unwrap();
+                    assert_eq!(scratch.reduced.len(), n * k);
+                    let t_max = ep
+                        .allgather_f64_fold(rank as f64, 0.0f64, |a, x| a.max(x))
+                        .unwrap();
+                    assert_eq!(t_max, (n - 1) as f64);
+                }
+                if rank == 0 {
+                    ENABLED.store(false, Ordering::SeqCst);
+                }
+                ep.barrier().unwrap();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    })
+}
+
+/// Marginal allocations of one extra threaded-sim iteration (full
+/// engine, ExDyna sparsifier): the difference between a long and a short
+/// run divides out launch/teardown. The transport/merge path contributes
+/// zero (pinned exactly above); what remains is the selection path
+/// (fresh `SelectOutput`s, sparsifier bookkeeping), pinned here to a
+/// small fixed budget so hot-path regressions can't hide in the engine.
+fn sim_marginal_per_iter(iters_short: usize, iters_long: usize) -> (f64, f64) {
+    let n = 4;
+    let model = SynthModel::profile("alloc", 64_000, 8, 5, DecayCfg::default());
+    let gen = SynthGen::new(model, n, 0.5, 17, false);
+    let factory = make_sparsifier_factory("exdyna", 0.002, 0.01, ExDynaCfg::default_for(n)).unwrap();
+    let run = |iters: usize| {
+        let cfg = SimCfg {
+            n_ranks: n,
+            iters,
+            compute_s: 0.01,
+            ..Default::default()
+        };
+        measure(|| {
+            ENABLED.store(true, Ordering::SeqCst);
+            let trace = run_sim(&gen, factory.as_ref(), &cfg).unwrap();
+            ENABLED.store(false, Ordering::SeqCst);
+            assert_eq!(trace.records.len(), iters);
+        })
+    };
+    let (a_short, b_short) = run(iters_short);
+    let (a_long, b_long) = run(iters_long);
+    let span = (iters_long - iters_short) as f64;
+    (
+        (a_long.saturating_sub(a_short)) as f64 / span,
+        (b_long.saturating_sub(b_short)) as f64 / span,
+    )
+}
+
+#[test]
+fn steady_state_collective_rounds_allocate_nothing() {
+    // --- bare transport: recycled slabs make scalar rounds free
+    let (allocs, bytes) = scalar_rounds(4, 8, 200);
+    assert_eq!(
+        (allocs, bytes),
+        (0, 0),
+        "steady scalar all-gather rounds must not allocate"
+    );
+
+    // --- full transport/merge path at two cluster sizes: zero at both,
+    // so per-round payload handling cannot scale with n (let alone n²)
+    let (allocs_2, bytes_2) = collective_rounds(2, 256, 8, 100);
+    assert_eq!(
+        (allocs_2, bytes_2),
+        (0, 0),
+        "n=2 steady collective rounds must not allocate"
+    );
+    let (allocs_8, bytes_8) = collective_rounds(8, 256, 8, 100);
+    assert_eq!(
+        (allocs_8, bytes_8),
+        (0, 0),
+        "n=8 steady collective rounds must not allocate"
+    );
+
+    // --- whole threaded engine: the remaining per-iteration allocations
+    // are the selection path only; keep them under a fixed budget
+    let (allocs_per_iter, bytes_per_iter) = sim_marginal_per_iter(10, 60);
+    assert!(
+        allocs_per_iter <= 400.0,
+        "threaded sim allocates {allocs_per_iter:.1} times/iter — hot-path regression?"
+    );
+    assert!(
+        bytes_per_iter <= 8e6,
+        "threaded sim allocates {bytes_per_iter:.0} B/iter — hot-path regression?"
+    );
+}
