@@ -2,10 +2,10 @@
 //! cluster-engine wall-clock comparison.
 //!
 //! Part 1 (always): ExDyna on the resnet152 profile at n = 2, 4, 8, 16
-//! ranks, run on ALL THREE execution modes — lock-step (single thread),
-//! threaded (one OS thread per rank), and tcp (one OS *process* per
-//! rank over loopback, via `exdyna launch` single-host mode). Reports,
-//! per scale:
+//! ranks, run on ALL FOUR execution modes — lock-step (single thread),
+//! threaded (one OS thread per rank), and tcp/ring (one OS *process*
+//! per rank over loopback sockets, hub-star vs chunked ring, via
+//! `exdyna launch` single-host mode). Reports, per scale:
 //! * host wall-clock of the whole run per mode and the
 //!   lockstep/threaded speedup ratio;
 //! * identical-trace check (all modes must agree bit-exactly on the
@@ -63,55 +63,72 @@ fn main() -> exdyna::Result<()> {
             );
             traces.push(trace);
         }
-        // tcp: the same run as one process per rank over loopback
-        // (single-host launch); wall-clock includes process startup +
-        // rendezvous — the honest cost of crossing the process boundary
-        let tcp_out = tmp.join(format!("tcp_n{ranks}.csv"));
-        let st = Instant::now();
-        let status = std::process::Command::new(launcher)
-            .args(["launch", "--preset", "resnet152", "--ranks", &ranks.to_string()])
-            .args(["--scale", &format!("{scale}")])
-            .args(["--iters", &iters.to_string()])
-            .args(["--density", &format!("{d}")])
-            .args(["--out", tcp_out.to_str().unwrap()])
-            .stdout(std::process::Stdio::null())
-            .stderr(std::process::Stdio::null())
-            .status();
-        let wall_tcp = st.elapsed().as_secs_f64();
-        let tcp_trace = match (&status, exdyna::metrics::Trace::read_csv(&tcp_out)) {
-            (Ok(s), Ok(t)) if s.success() => Some(t),
-            _ => None,
-        };
-        match &tcp_trace {
-            Some(t) => {
-                let (_, _, _, tot) = t.mean_breakdown();
-                println!(
-                    "{ranks},tcp,{:.3},{:.4},{:.6}",
-                    wall_tcp,
-                    tot,
-                    t.mean_density_tail(iters / 3)
-                );
+        // tcp star + ring: the same run as one process per rank over
+        // loopback (single-host launch); wall-clock includes process
+        // startup + rendezvous — the honest cost of crossing the
+        // process boundary, for both socket topologies side by side
+        let mut launch_wall = [0.0f64; 2];
+        let mut launch_traces = Vec::new();
+        for (i, transport) in ["tcp", "ring"].into_iter().enumerate() {
+            let out = tmp.join(format!("{transport}_n{ranks}.csv"));
+            let st = Instant::now();
+            let status = std::process::Command::new(launcher)
+                .args(["launch", "--transport", transport])
+                .args(["--preset", "resnet152", "--ranks", &ranks.to_string()])
+                .args(["--scale", &format!("{scale}")])
+                .args(["--iters", &iters.to_string()])
+                .args(["--density", &format!("{d}")])
+                .args(["--out", out.to_str().unwrap()])
+                .stdout(std::process::Stdio::null())
+                .stderr(std::process::Stdio::null())
+                .status();
+            launch_wall[i] = st.elapsed().as_secs_f64();
+            let trace = match (&status, exdyna::metrics::Trace::read_csv(&out)) {
+                (Ok(s), Ok(t)) if s.success() => Some(t),
+                _ => None,
+            };
+            match &trace {
+                Some(t) => {
+                    let (_, _, _, tot) = t.mean_breakdown();
+                    println!(
+                        "{ranks},{transport},{:.3},{:.4},{:.6}",
+                        launch_wall[i],
+                        tot,
+                        t.mean_density_tail(iters / 3)
+                    );
+                }
+                None => eprintln!("# n = {ranks:<3} {transport} launch failed ({status:?})"),
             }
-            None => eprintln!("# n = {ranks:<3} tcp launch failed ({status:?})"),
+            launch_traces.push(trace);
         }
         let agree = traces[0]
             .records
             .iter()
             .zip(traces[1].records.iter())
             .all(|(a, b)| a.k_actual == b.k_actual && a.delta == b.delta);
-        let agree_tcp = tcp_trace
-            .map(|t| {
-                t.records
-                    .iter()
-                    .zip(traces[0].records.iter())
-                    .all(|(a, b)| a.k_actual == b.k_actual && a.delta == b.delta)
+        let agrees: Vec<bool> = launch_traces
+            .iter()
+            .map(|trace| {
+                trace
+                    .as_ref()
+                    .map(|t| {
+                        t.records
+                            .iter()
+                            .zip(traces[0].records.iter())
+                            .all(|(a, b)| a.k_actual == b.k_actual && a.delta == b.delta)
+                    })
+                    .unwrap_or(false)
             })
-            .unwrap_or(false);
+            .collect();
         eprintln!(
-            "# n = {ranks:<3} lockstep {:.3}s  threaded {:.3}s  tcp {wall_tcp:.3}s  speedup {:.2}x  traces identical: {agree} (tcp: {agree_tcp})",
+            "# n = {ranks:<3} lockstep {:.3}s  threaded {:.3}s  tcp {:.3}s  ring {:.3}s  speedup {:.2}x  traces identical: {agree} (tcp: {} ring: {})",
             wall[0],
             wall[1],
-            wall[0] / wall[1].max(1e-9)
+            launch_wall[0],
+            launch_wall[1],
+            wall[0] / wall[1].max(1e-9),
+            agrees[0],
+            agrees[1]
         );
     }
     std::fs::remove_dir_all(&tmp).ok();

@@ -1,21 +1,29 @@
-//! Transport hot-path microbench (ISSUE 3): per-round harness overhead
-//! of the collective round itself — padded selection all-gather + sparse
-//! union all-reduce + one scalar round — with the model compute and the
-//! sparsifier taken out of the loop (fixed selections), so what's
-//! measured is exactly the cost the paper says must stay negligible.
+//! Transport hot-path microbench (ISSUE 3, extended in ISSUE 4): per-
+//! round harness overhead of the collective round itself — padded
+//! selection all-gather + sparse union all-reduce + one scalar round —
+//! with the model compute and the sparsifier taken out of the loop
+//! (fixed selections), so what's measured is exactly the cost the paper
+//! says must stay negligible.
 //!
 //! Reports, per transport (local = in-process shared-board rendezvous,
-//! tcp = hub-star over loopback sockets) and cluster size n ∈ {2, 8, 16}:
+//! ring-local = in-process chunked ring, tcp = hub-star over loopback
+//! sockets, ring = chunked ring over loopback sockets) and cluster size
+//! n ∈ {2, 8, 16}:
 //! * wall-clock µs per round (whole cluster, steady state);
 //! * heap bytes + allocation count per round (counting global
 //!   allocator, enabled after warm-up) — the "MB copied" axis: with the
 //!   Arc-shared board this is ~0 for the local transport instead of the
 //!   old O(n²·k) per-round board clones.
 //!
+//! A second table prints the *modeled* star-vs-ring wire asymmetry for
+//! the same per-rank payload — the α·(n−1) + β·(n−1)/n·V ring form the
+//! traces charge vs the hub-star shape, and the per-link byte volumes
+//! ((n−1)·B on every ring link vs (n+1)·(n−1)·B on the star's hub NIC).
+//!
 //! Run: `cargo bench --bench transport_hotpath [-- --quick]`
 
-use exdyna::cluster::net::{free_loopback_addr, NetCfg, TcpTransport};
-use exdyna::cluster::{Endpoint, LocalTransport, Transport};
+use exdyna::cluster::testing::{local_cluster, ring_cluster, ring_local_cluster, tcp_cluster};
+use exdyna::cluster::{Endpoint, Transport};
 use exdyna::collectives::{
     allgather_sparse_rk, sparse_allreduce_union_rk, CostModel, RoundScratch,
 };
@@ -125,14 +133,20 @@ impl Row {
     }
 }
 
-fn bench_local(n: usize, warmup: usize, steady: usize) -> Row {
+/// Run the steady loop on a pre-built cluster of any transport; rank 0
+/// owns the counting window and the wall clock.
+fn bench_cluster(
+    mode: &'static str,
+    tps: Vec<Arc<dyn Transport>>,
+    warmup: usize,
+    steady: usize,
+) -> Row {
+    let n = tps.len();
     ENABLED.store(false, Ordering::SeqCst);
     ALLOCS.store(0, Ordering::SeqCst);
     BYTES.store(0, Ordering::SeqCst);
-    let tp = Arc::new(LocalTransport::new(n));
     let mut handles = Vec::with_capacity(n);
-    for rank in 0..n {
-        let tp = tp.clone();
+    for (rank, tp) in tps.into_iter().enumerate() {
         handles.push(std::thread::spawn(move || {
             rank_loop(rank, n, tp.as_ref(), warmup, steady)
         }));
@@ -145,40 +159,7 @@ fn bench_local(n: usize, warmup: usize, steady: usize) -> Row {
         }
     }
     Row {
-        mode: "local",
-        n,
-        steady,
-        wall,
-        allocs: ALLOCS.load(Ordering::SeqCst),
-        bytes: BYTES.load(Ordering::SeqCst),
-    }
-}
-
-fn bench_tcp(n: usize, warmup: usize, steady: usize) -> Row {
-    ENABLED.store(false, Ordering::SeqCst);
-    ALLOCS.store(0, Ordering::SeqCst);
-    BYTES.store(0, Ordering::SeqCst);
-    let addr = free_loopback_addr().unwrap();
-    let cfg = |addr: &str| NetCfg {
-        coord_addr: addr.to_string(),
-        connect_timeout: Duration::from_secs(60),
-        io_timeout: Duration::from_secs(60),
-    };
-    let mut client_handles = Vec::with_capacity(n);
-    for rank in 1..n {
-        let c = cfg(&addr);
-        client_handles.push(std::thread::spawn(move || {
-            let tp = TcpTransport::client(n, rank, &c).unwrap();
-            rank_loop(rank, n, &tp, warmup, steady)
-        }));
-    }
-    let hub = TcpTransport::hub(n, &cfg(&addr)).unwrap();
-    let wall = rank_loop(0, n, &hub, warmup, steady);
-    for h in client_handles {
-        h.join().unwrap();
-    }
-    Row {
-        mode: "tcp",
+        mode,
         n,
         steady,
         wall,
@@ -189,16 +170,40 @@ fn bench_tcp(n: usize, warmup: usize, steady: usize) -> Row {
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
-    let (local_rounds, tcp_rounds) = if quick { (500, 100) } else { (2000, 400) };
+    let (local_rounds, socket_rounds) = if quick { (500, 100) } else { (2000, 400) };
+    let io = Duration::from_secs(60);
     println!(
         "# transport hot path: k = {K_PER_RANK}/rank selection + union all-reduce + scalar round"
     );
     println!("# (allocs/bytes are per whole-cluster round, counted after warm-up)");
     println!("mode,ranks,rounds,us_per_round,allocs_per_round,bytes_per_round");
     for n in [2usize, 8, 16] {
-        bench_local(n, 20, local_rounds).print();
+        bench_cluster("local", local_cluster(n), 20, local_rounds).print();
     }
     for n in [2usize, 8, 16] {
-        bench_tcp(n, 10, tcp_rounds).print();
+        bench_cluster("ring-local", ring_local_cluster(n, io), 20, local_rounds).print();
+    }
+    for n in [2usize, 8, 16] {
+        bench_cluster("tcp", tcp_cluster(n, io).unwrap(), 10, socket_rounds).print();
+    }
+    for n in [2usize, 8, 16] {
+        bench_cluster("ring", ring_cluster(n, io).unwrap(), 10, socket_rounds).print();
+    }
+
+    // modeled star-vs-ring wire asymmetry for the same payload: what
+    // the α–β clock charges (ring, on every transport) next to what the
+    // hub-star harness shape would cost, plus per-link byte volumes
+    let b = K_PER_RANK * CostModel::SPARSE_ENTRY_BYTES;
+    println!("\n# modeled wire per all-gather round at B = {b} bytes/rank (star never charged; shown for the asymmetry)");
+    println!("ranks,ring_model_us,star_model_us,ring_link_bytes,star_hub_bytes");
+    for n in [2usize, 8, 16] {
+        let m = CostModel::paper_testbed(n);
+        println!(
+            "{n},{:.2},{:.2},{},{}",
+            m.allgather(b) * 1e6,
+            m.allgather_star(b) * 1e6,
+            m.allgather_link_bytes_ring(b),
+            m.allgather_link_bytes_star_hub(b),
+        );
     }
 }

@@ -23,13 +23,17 @@
 //! cargo run --release -- launch --rank 3 --world-size 4 --coord-addr 10.0.0.1:29400 &
 //! ```
 //!
+//! Add `--transport ring` to either form to swap the hub star for the
+//! chunked ring (every link then carries the same `n-1` chunks per
+//! round instead of the hub carrying everything twice over).
+//!
 //! The merged trace is bit-identical to `sim --engine threaded` and
-//! `sim --engine lockstep` on the same seed
-//! (`rust/tests/engine_parity.rs` enforces this), so every figure in
-//! `benches/` can be reproduced from a genuinely multi-process run.
-//! In TOML configs the same switch is `transport = "tcp"` plus an
-//! optional `[transport]` section (`coord_addr`, `connect_timeout_s`,
-//! `io_timeout_s`).
+//! `sim --engine lockstep` on the same seed — on both socket
+//! topologies (`rust/tests/engine_parity.rs` enforces this) — so every
+//! figure in `benches/` can be reproduced from a genuinely
+//! multi-process run. In TOML configs the same switch is
+//! `transport = "tcp"` or `"ring"` plus an optional `[transport]`
+//! section (`coord_addr`, `connect_timeout_s`, `io_timeout_s`).
 
 use exdyna::bench::Table;
 use exdyna::cli::{Args, OptSpec};

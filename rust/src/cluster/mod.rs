@@ -12,8 +12,11 @@
 //!   The α–β [`CostModel`] independently charges what the operation
 //!   would cost on the modeled wire (padded payloads, every rank's
 //!   contribution) — the modeled clock always bills the real byte
-//!   volume, regardless of how cheaply the harness moved it. Two
-//!   implementations:
+//!   volume, regardless of how cheaply the harness moved it. The
+//!   modeled collectives are *ring* algorithms (`(n-1)·α +
+//!   (n-1)/n·V·β` per all-gather), so traces are identical on every
+//!   transport; what changes per transport is the harness's real
+//!   traffic shape. Implementations:
 //!   * [`LocalTransport`] — in-process rendezvous (mutex/condvar slot
 //!     board) for one OS thread per rank; published board slabs are
 //!     double-buffered and recycled, so steady-state rounds make zero
@@ -24,7 +27,23 @@
 //!     ([`net::codec`]), persistent per-connection encode/decode
 //!     buffers, a rank-claim handshake ([`net::handshake`]),
 //!     deadline-bounded IO and abort poisoning that closes sockets so
-//!     peers error out instead of hanging.
+//!     peers error out instead of hanging. The hub's NIC carries
+//!     `(n-1)` contributions in plus `(n-1)` whole boards out per
+//!     round — fine on loopback, the build-up pathology on real NICs;
+//!   * [`net::RingTransport`] — chunked TCP ring, one process per
+//!     rank: every rank forwards `n-1` generation-stamped chunks to
+//!     its right neighbor, so per-round traffic is identical on every
+//!     link and matches the cost model's ring assumption
+//!     ([`CostModel::allgather_star`] quantifies the star's modeled
+//!     penalty). Rank 0 doubles as the bootstrap coordinator only;
+//!   * [`RingLocal`] — the in-process twin of the ring (channels, no
+//!     sockets), used by the conformance suite and `RealTrainer` to
+//!     exercise ring semantics without socket overhead.
+//!
+//!   `rust/tests/transport_conformance.rs` runs one shared battery
+//!   (board ordering, NaN bit-exactness, abort poisoning, trace
+//!   parity, ...) over all four, so every future transport inherits
+//!   the full matrix.
 //! * [`worker`] — [`SimWorker`]: one rank's Alg. 1 loop (own sparsifier
 //!   replica, own error/accumulator buffers, own reusable
 //!   [`RoundScratch`]), shared-nothing except the transport. The same
@@ -38,21 +57,25 @@
 //!
 //! [`EngineKind`] selects between the threaded engine and the legacy
 //! lock-step path (kept for bit-exact comparison); [`TransportKind`]
-//! selects the transport (`transport = "tcp"` in TOML, or the `launch`
-//! CLI subcommand). `rust/tests/engine_parity.rs` pins trace equality
-//! across all three execution modes.
+//! selects the transport (`transport = "tcp" | "ring"` in TOML,
+//! `--transport` on the CLI, or the `launch` subcommand).
+//! `rust/tests/engine_parity.rs` pins trace equality across every
+//! execution mode, including real multi-process star and ring runs.
 //!
 //! [CostModel]: crate::collectives::CostModel
 
 pub mod engine;
 pub mod net;
+pub mod ring_local;
+pub mod testing;
 pub mod transport;
 pub mod worker;
 
 pub use engine::{
     run_rank_on_transport, run_threaded, run_threaded_with_stats, ClusterStats,
 };
-pub use net::{NetCfg, TcpTransport};
+pub use net::{NetCfg, RingTransport, TcpTransport};
+pub use ring_local::RingLocal;
 pub use transport::{Endpoint, LocalTransport, Message, Transport};
 pub use worker::SimWorker;
 
@@ -108,8 +131,13 @@ pub enum TransportKind {
     /// In-process rendezvous, one OS thread per rank (the default).
     #[default]
     Local,
-    /// TCP sockets, one process per rank (`exdyna launch`).
+    /// TCP sockets, hub-star, one process per rank (`exdyna launch`).
     Tcp,
+    /// TCP sockets, chunked ring, one process per rank (`exdyna launch
+    /// --transport ring`): every link carries the same `n - 1` messages
+    /// per round instead of the star concentrating 2(n-1) board volumes
+    /// on the hub's NIC.
+    Ring,
 }
 
 impl TransportKind {
@@ -118,8 +146,9 @@ impl TransportKind {
         match s {
             "local" => Ok(TransportKind::Local),
             "tcp" => Ok(TransportKind::Tcp),
+            "ring" => Ok(TransportKind::Ring),
             other => Err(Error::invalid(format!(
-                "unknown transport '{other}' (have: local, tcp)"
+                "unknown transport '{other}' (have: local, tcp, ring)"
             ))),
         }
     }
@@ -129,7 +158,14 @@ impl TransportKind {
         match self {
             TransportKind::Local => "local",
             TransportKind::Tcp => "tcp",
+            TransportKind::Ring => "ring",
         }
+    }
+
+    /// Does this kind run one OS process per rank over sockets (i.e.
+    /// `sim` must defer to `launch`)?
+    pub fn is_multiprocess(&self) -> bool {
+        !matches!(self, TransportKind::Local)
     }
 }
 
@@ -162,11 +198,14 @@ mod tests {
 
     #[test]
     fn transport_kind_roundtrips() {
-        for k in [TransportKind::Local, TransportKind::Tcp] {
+        for k in [TransportKind::Local, TransportKind::Tcp, TransportKind::Ring] {
             assert_eq!(TransportKind::parse(k.name()).unwrap(), k);
             assert_eq!(k.name().parse::<TransportKind>().unwrap(), k);
         }
         assert!(TransportKind::parse("carrier-pigeon").is_err());
         assert_eq!(TransportKind::default(), TransportKind::Local);
+        assert!(!TransportKind::Local.is_multiprocess());
+        assert!(TransportKind::Tcp.is_multiprocess());
+        assert!(TransportKind::Ring.is_multiprocess());
     }
 }

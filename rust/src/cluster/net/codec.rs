@@ -40,8 +40,9 @@ use std::sync::Arc;
 /// Frame magic ("EXDY").
 pub const MAGIC: u32 = 0x4558_4459;
 
-/// Wire protocol version; bumped on any layout change.
-pub const PROTOCOL_VERSION: u16 = 1;
+/// Wire protocol version; bumped on any layout change (v2 added the
+/// ring-rendezvous frames: `HelloRing`, `WelcomeRing`, `RingLink`).
+pub const PROTOCOL_VERSION: u16 = 2;
 
 /// Hard cap on one frame's payload — guards allocation on corrupt
 /// length fields (a selection frame at this size would be ~16M entries,
@@ -81,6 +82,34 @@ pub enum Frame {
     },
     /// Either direction: transport poisoned; the receiver must error out.
     Abort,
+    /// Client → coordinator rank claim for the *ring* transport: like
+    /// [`Frame::Hello`] plus the port of the claimant's own ring
+    /// listener (the coordinator pairs it with the connection's source
+    /// IP to build the neighbor table).
+    HelloRing {
+        /// Claimed world size.
+        world: u32,
+        /// Claimed rank (1..world; rank 0 is the coordinator itself).
+        rank: u32,
+        /// Port of the claimant's bound ring listener.
+        port: u16,
+    },
+    /// Coordinator → client: ring rendezvous complete; dial your right
+    /// neighbor at `right_addr` and accept your left neighbor on your
+    /// own ring listener.
+    WelcomeRing {
+        /// Confirmed world size.
+        world: u32,
+        /// `host:port` of rank `(self + 1) % world`'s ring listener.
+        right_addr: String,
+    },
+    /// Dialer → acceptor on a freshly-established ring link: identifies
+    /// which rank is on the other end (the acceptor validates it is its
+    /// left neighbor).
+    RingLink {
+        /// The dialing rank.
+        rank: u32,
+    },
 }
 
 const KIND_DATA: u8 = 0;
@@ -88,6 +117,9 @@ const KIND_HELLO: u8 = 1;
 const KIND_WELCOME: u8 = 2;
 const KIND_REJECT: u8 = 3;
 const KIND_ABORT: u8 = 4;
+const KIND_HELLO_RING: u8 = 5;
+const KIND_WELCOME_RING: u8 = 6;
+const KIND_RING_LINK: u8 = 7;
 
 const MSG_SELECTION: u8 = 0;
 const MSG_FLOATS: u8 = 1;
@@ -324,6 +356,23 @@ fn encode_payload_into(frame: &Frame, buf: &mut Vec<u8>) -> u8 {
             KIND_REJECT
         }
         Frame::Abort => KIND_ABORT,
+        Frame::HelloRing { world, rank, port } => {
+            put_u32(buf, *world);
+            put_u32(buf, *rank);
+            put_u16(buf, *port);
+            KIND_HELLO_RING
+        }
+        Frame::WelcomeRing { world, right_addr } => {
+            put_u32(buf, *world);
+            let bytes = right_addr.as_bytes();
+            put_u32(buf, bytes.len() as u32);
+            buf.extend_from_slice(bytes);
+            KIND_WELCOME_RING
+        }
+        Frame::RingLink { rank } => {
+            put_u32(buf, *rank);
+            KIND_RING_LINK
+        }
     }
 }
 
@@ -350,6 +399,27 @@ fn decode_payload(kind: u8, payload: &[u8]) -> Result<Frame> {
             Frame::Reject { reason }
         }
         KIND_ABORT => Frame::Abort,
+        KIND_HELLO_RING => {
+            let world = c.u32("hello-ring world size")?;
+            let rank = c.u32("hello-ring rank")?;
+            let b = c.take(2, "hello-ring port")?;
+            Frame::HelloRing {
+                world,
+                rank,
+                port: u16::from_le_bytes([b[0], b[1]]),
+            }
+        }
+        KIND_WELCOME_RING => {
+            let world = c.u32("welcome-ring world size")?;
+            let n = c.u32("welcome-ring addr length")? as usize;
+            let bytes = c.take(n, "welcome-ring addr")?;
+            let right_addr = String::from_utf8(bytes.to_vec())
+                .map_err(|_| Error::protocol("welcome-ring addr is not UTF-8"))?;
+            Frame::WelcomeRing { world, right_addr }
+        }
+        KIND_RING_LINK => Frame::RingLink {
+            rank: c.u32("ring-link rank")?,
+        },
         other => return Err(Error::protocol(format!("unknown frame kind {other}"))),
     };
     c.finish("frame payload")?;
@@ -568,7 +638,7 @@ mod tests {
     impl Strategy for FrameStrat {
         type Value = Frame;
         fn gen(&self, rng: &mut Rng) -> Frame {
-            match rng.usize(6) {
+            match rng.usize(9) {
                 0 | 1 => Frame::Data {
                     generation: rng.next_u64(),
                     msg: gen_message(rng),
@@ -582,6 +652,18 @@ mod tests {
                 },
                 4 => Frame::Reject {
                     reason: format!("reason-{}", rng.usize(1000)),
+                },
+                5 => Frame::HelloRing {
+                    world: rng.usize(64) as u32,
+                    rank: rng.usize(64) as u32,
+                    port: rng.next_u64() as u16,
+                },
+                6 => Frame::WelcomeRing {
+                    world: rng.usize(64) as u32,
+                    right_addr: format!("127.0.0.1:{}", rng.next_u64() as u16),
+                },
+                7 => Frame::RingLink {
+                    rank: rng.usize(64) as u32,
                 },
                 _ => Frame::Abort,
             }
@@ -775,6 +857,31 @@ mod tests {
         let mut empty: &[u8] = &[];
         let e = read_frame(&mut empty).unwrap_err().to_string();
         assert!(e.contains("connection closed by peer"), "{e}");
+    }
+
+    #[test]
+    fn ring_rendezvous_frames_roundtrip() {
+        for f in [
+            Frame::HelloRing {
+                world: 4,
+                rank: 3,
+                port: 61_234,
+            },
+            Frame::WelcomeRing {
+                world: 4,
+                right_addr: "10.0.0.7:29500".to_string(),
+            },
+            Frame::RingLink { rank: 2 },
+        ] {
+            let bytes = encode_frame(&f);
+            assert_eq!(decode_frame(&bytes).unwrap(), f);
+            for k in 0..bytes.len() {
+                assert!(
+                    decode_frame(&bytes[..k]).is_err(),
+                    "truncated ring frame at {k} must be rejected"
+                );
+            }
+        }
     }
 
     #[test]

@@ -17,19 +17,51 @@
 //!   generation-stamped contributions, broadcast the rank-indexed
 //!   board) with read/write timeouts and abort poisoning that closes
 //!   sockets so peers error out instead of hanging.
+//! * [`ring`] — [`RingTransport`]: chunked ring all-gather (every rank
+//!   forwards `n - 1` generation-stamped chunks to its right
+//!   neighbor), with the same deadline/abort semantics; rank 0 is only
+//!   the bootstrap coordinator, not a traffic hub, so per-round bytes
+//!   are identical on every link — the shape the α–β cost model
+//!   assumes.
 //!
 //! The `exdyna launch` CLI subcommand runs one rank per process over
-//! this transport (and forks the whole single-host cluster itself when
-//! no `--rank` is given); `rust/tests/engine_parity.rs` pins the merged
-//! multi-process trace bit-exact against both in-process engines.
+//! either socket transport (`--transport tcp|ring`; it forks the whole
+//! single-host cluster itself when no `--rank` is given);
+//! `rust/tests/engine_parity.rs` pins the merged multi-process traces
+//! bit-exact against both in-process engines, and
+//! `rust/tests/transport_conformance.rs` runs the shared transport
+//! battery over both.
 //!
 //! [Message]: crate::cluster::transport::Message
 //! [Transport]: crate::cluster::transport::Transport
 
 pub mod codec;
 pub mod handshake;
+pub mod ring;
 pub mod tcp;
 
 pub use codec::{Frame, PROTOCOL_VERSION};
 pub use handshake::{free_loopback_addr, NetCfg};
+pub use ring::RingTransport;
 pub use tcp::TcpTransport;
+
+use crate::cluster::transport::Message;
+use crate::error::{Error, Result};
+
+/// Unwrap a round's [`Frame::Data`], validating the generation stamp —
+/// shared by both socket transports (star hub and ring). Any divergence
+/// (wrong round, wrong frame, a peer's abort notice) is a typed error,
+/// never a silent mix of rounds.
+pub(crate) fn expect_data(frame: Frame, want_gen: u64, from: &str) -> Result<Message> {
+    match frame {
+        Frame::Data { generation, msg } if generation == want_gen => Ok(msg),
+        Frame::Data { generation, .. } => Err(Error::protocol(format!(
+            "generation mismatch from {from}: got {generation}, expected {want_gen} — \
+             workers diverged"
+        ))),
+        Frame::Abort => Err(Error::net(format!("peer {from} aborted the cluster"))),
+        other => Err(Error::protocol(format!(
+            "expected Data frame from {from}, got {other:?}"
+        ))),
+    }
+}

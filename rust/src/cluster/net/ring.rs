@@ -1,0 +1,833 @@
+//! [`RingTransport`] — the chunked-ring [`Transport`] impl over TCP.
+//!
+//! Topology: a directed ring. Every rank owns two sockets — one dialed
+//! to its *right* neighbor `(rank + 1) % n` (send side) and one accepted
+//! from its *left* neighbor `(rank + n - 1) % n` (receive side). An
+//! all-gather is the textbook ring algorithm: each rank starts with its
+//! own message in board slot `rank` and runs `n - 1` steps; at step `s`
+//! it forwards slot `(rank - s) mod n` to the right and receives slot
+//! `(rank - s - 1) mod n` from the left, so after `n - 1` hops every
+//! rank holds the full rank-indexed board. Per round, every *link*
+//! carries exactly `n - 1` messages — no node carries more traffic than
+//! any other, unlike the [`TcpTransport`] hub-star, whose hub link
+//! carries the other `n - 1` ranks' contributions in *and* `n - 1`
+//! whole-board fan-outs out (the gradient build-up pathology of the
+//! paper, replayed at the harness layer; see
+//! [`CostModel::allgather_star`] for the modeled asymmetry).
+//!
+//! Rendezvous: rank 0 doubles as the *coordinator* (bootstrap only — it
+//! is not on the data path after setup). Every rank binds its own ring
+//! listener first; ranks `1..n` dial the coordinator address and claim
+//! their rank with [`Frame::HelloRing`] (which also advertises their
+//! ring listener's port). Once every slot is claimed, the coordinator
+//! answers each rank with [`Frame::WelcomeRing`] carrying its right
+//! neighbor's `host:port` and drops the bootstrap connections. Each
+//! rank then dials its right neighbor (identifying itself with
+//! [`Frame::RingLink`]) and accepts its left neighbor on its own
+//! listener, validating the claimed rank. All waits are bounded by
+//! [`NetCfg::connect_timeout`].
+//!
+//! Deadlock freedom: within a step, rank 0 *receives before sending*
+//! while every other rank sends first. A cycle of ranks all blocked in
+//! `write` (possible when payloads exceed the socket buffers) therefore
+//! always has one rank draining its left link, which unblocks its left
+//! neighbor's write, and so on around the ring — progress is guaranteed
+//! for arbitrarily large messages, at worst serializing one hop chain.
+//!
+//! Steady-state reuse mirrors the PR 3 zero-copy work: one persistent
+//! encode and one decode buffer per transport (no per-frame `Vec`), the
+//! slot vector is retained across rounds, and the published board slab
+//! is recycled once the caller has dropped its clone — the remaining
+//! per-round allocations are the socket-decoded payloads themselves,
+//! exactly as on the star transport. Failure semantics are shared with
+//! [`TcpTransport`]: generation-stamped frames turn divergence into
+//! typed [`Error::Protocol`]s, every read/write carries the
+//! [`NetCfg::io_timeout`] deadline, and [`Transport::abort`] poisons the
+//! transport — best-effort [`Frame::Abort`] to both neighbors, then
+//! socket shutdown, so a broken ring surfaces errors on every rank
+//! instead of hanging.
+//!
+//! [`TcpTransport`]: crate::cluster::net::tcp::TcpTransport
+//! [`CostModel::allgather_star`]: crate::collectives::CostModel::allgather_star
+//! [NetCfg]: crate::cluster::net::handshake::NetCfg
+
+use crate::cluster::net::codec::{
+    encode_frame, encode_frame_append, read_frame, read_frame_with, write_bytes, write_frame,
+    Frame,
+};
+use crate::cluster::net::handshake::NetCfg;
+use crate::cluster::transport::{Message, Transport};
+use crate::error::{Error, Result};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// The two ring links of one rank (absent in a single-rank world).
+struct Links {
+    /// Dialed stream to rank `(rank + 1) % n` — the send side.
+    right: TcpStream,
+    /// Accepted stream from rank `(rank + n - 1) % n` — the receive side.
+    left: TcpStream,
+}
+
+struct RingState {
+    links: Option<Links>,
+    generation: u64,
+    /// Rank-indexed slot board, retained across rounds (slots are
+    /// `take()`n into the published slab each round).
+    slots: Vec<Option<Message>>,
+    /// Last round's published slab, kept for recycling: by the next
+    /// round the caller has dropped its clone, so the slab is uniquely
+    /// owned again and can be refilled in place.
+    last: Option<Arc<[Message]>>,
+    /// Persistent encode buffer for outgoing hop frames.
+    enc_buf: Vec<u8>,
+    /// Persistent decode scratch for incoming hop frames.
+    dec_buf: Vec<u8>,
+}
+
+/// Ring transport for one process-local rank of an n-rank cluster.
+pub struct RingTransport {
+    n: usize,
+    rank: usize,
+    state: Mutex<RingState>,
+    /// `try_clone`d link handles used only by [`Transport::abort`],
+    /// which must not take the state lock (a blocked round holds it).
+    shutdown_handles: Vec<TcpStream>,
+    poisoned: AtomicBool,
+}
+
+/// Host part of a `host:port` address (IPv6 `[..]:port` supported).
+fn host_of(addr: &str) -> &str {
+    match addr.rsplit_once(':') {
+        Some((h, _)) => h,
+        None => addr,
+    }
+}
+
+/// A wildcard bind host (rank 0 started with `--coord-addr
+/// 0.0.0.0:…`) cannot be *dialed* — substitute the host this client
+/// actually reached the coordinator through. Only the coordinator's
+/// own ring address can be wildcard (client addresses are built from
+/// observed peer IPs), and only rank `n - 1` receives it.
+fn substitute_wildcard_host(addr: String, fallback_host: &str) -> String {
+    match host_of(&addr) {
+        "0.0.0.0" | "[::]" => match addr.rsplit_once(':') {
+            Some((_, port)) => format!("{fallback_host}:{port}"),
+            None => addr,
+        },
+        _ => addr,
+    }
+}
+
+/// Bind-all ring-listener address in the coordinator's address family
+/// (a bracketed-IPv6 coordinator host means the advertised neighbor
+/// addresses will be IPv6, so the listener must be too).
+fn wildcard_listen_addr(coord_host: &str) -> &'static str {
+    if coord_host.starts_with('[') {
+        "[::]:0"
+    } else {
+        "0.0.0.0:0"
+    }
+}
+
+fn set_round_timeouts(stream: &TcpStream, cfg: &NetCfg) -> Result<()> {
+    stream.set_read_timeout(Some(cfg.io_timeout))?;
+    stream.set_write_timeout(Some(cfg.io_timeout))?;
+    stream.set_nodelay(true)?;
+    Ok(())
+}
+
+/// Dial `addr` (retrying until `deadline` — the neighbor's listener is
+/// bound before its Hello, but its process may be slower to schedule)
+/// and identify as `my_rank` with a [`Frame::RingLink`].
+fn dial_right(addr: &str, my_rank: usize, deadline: Instant, cfg: &NetCfg) -> Result<TcpStream> {
+    let mut stream = loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => break s,
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(Error::net(format!(
+                        "rank {my_rank} cannot reach right neighbor at {addr}: {e}"
+                    )));
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    };
+    set_round_timeouts(&stream, cfg)?;
+    write_frame(
+        &mut stream,
+        &Frame::RingLink {
+            rank: my_rank as u32,
+        },
+    )?;
+    Ok(stream)
+}
+
+/// Accept the left neighbor on this rank's ring listener, validating its
+/// [`Frame::RingLink`] claim; stray connections (port scanners, a
+/// mis-dialed rank) are rejected and the wait continues to `deadline`.
+fn accept_left(
+    listener: &TcpListener,
+    expect_rank: usize,
+    deadline: Instant,
+    cfg: &NetCfg,
+) -> Result<TcpStream> {
+    listener.set_nonblocking(true)?;
+    loop {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            return Err(Error::net(format!(
+                "ring link rendezvous timed out: left neighbor (rank {expect_rank}) \
+                 never dialed in within {:?}",
+                cfg.connect_timeout
+            )));
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_nonblocking(false)?;
+                // the RingLink read must not eat the whole budget
+                stream.set_read_timeout(Some(
+                    remaining.min(cfg.io_timeout).max(Duration::from_millis(10)),
+                ))?;
+                stream.set_write_timeout(Some(cfg.io_timeout))?;
+                let mut stream = stream;
+                match read_frame(&mut stream) {
+                    Ok(Frame::RingLink { rank }) if rank as usize == expect_rank => {
+                        set_round_timeouts(&stream, cfg)?;
+                        return Ok(stream);
+                    }
+                    Ok(Frame::RingLink { rank }) => {
+                        let _ = write_frame(
+                            &mut stream,
+                            &Frame::Reject {
+                                reason: format!(
+                                    "this listener expects rank {expect_rank}, not rank {rank}"
+                                ),
+                            },
+                        );
+                    }
+                    Ok(other) => {
+                        let _ = write_frame(
+                            &mut stream,
+                            &Frame::Reject {
+                                reason: format!("expected RingLink, got {other:?}"),
+                            },
+                        );
+                    }
+                    Err(_) => {
+                        // undecodable garbage: drop it, keep waiting
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(Error::net(format!("ring accept failed: {e}"))),
+        }
+    }
+}
+
+/// Coordinator side of the ring bootstrap: collect one valid
+/// [`Frame::HelloRing`] per rank in `1..n` on the coordinator address,
+/// answer each with its right neighbor's ring address, and return once
+/// every bootstrap stream is released. `my_ring_addr` is rank 0's own
+/// ring listener (rank `n - 1`'s right neighbor).
+fn coordinate_ring(n: usize, cfg: &NetCfg, my_ring_addr: &str) -> Result<Vec<String>> {
+    let listener = TcpListener::bind(&cfg.coord_addr).map_err(|e| {
+        Error::net(format!("ring coordinator cannot bind {}: {e}", cfg.coord_addr))
+    })?;
+    listener.set_nonblocking(true)?;
+    let deadline = Instant::now() + cfg.connect_timeout;
+    let mut peers: Vec<Option<(TcpStream, String)>> = (0..n).map(|_| None).collect();
+    let mut missing = n - 1;
+    while missing > 0 {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            let absent: Vec<String> = peers
+                .iter()
+                .enumerate()
+                .skip(1)
+                .filter(|(_, s)| s.is_none())
+                .map(|(r, _)| r.to_string())
+                .collect();
+            return Err(Error::net(format!(
+                "ring rendezvous timed out after {:?}: still waiting for rank(s) {}",
+                cfg.connect_timeout,
+                absent.join(", ")
+            )));
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_nonblocking(false)?;
+                stream.set_read_timeout(Some(
+                    remaining.min(cfg.io_timeout).max(Duration::from_millis(10)),
+                ))?;
+                stream.set_write_timeout(Some(cfg.io_timeout))?;
+                let mut stream = stream;
+                match read_frame(&mut stream) {
+                    Ok(Frame::HelloRing { world, rank, port }) => {
+                        let reject = if world as usize != n {
+                            Some(format!(
+                                "world size mismatch: claim {world}, coordinator runs {n}"
+                            ))
+                        } else if rank == 0 || rank as usize >= n {
+                            Some(format!("rank {rank} out of range 1..{n}"))
+                        } else if peers[rank as usize].is_some() {
+                            Some(format!("rank {rank} already claimed"))
+                        } else {
+                            None
+                        };
+                        match reject {
+                            Some(reason) => {
+                                let _ = write_frame(&mut stream, &Frame::Reject { reason });
+                            }
+                            None => {
+                                let ip = stream.peer_addr()?.ip();
+                                let ring_addr = SocketAddr::new(ip, port).to_string();
+                                peers[rank as usize] = Some((stream, ring_addr));
+                                missing -= 1;
+                            }
+                        }
+                    }
+                    Ok(Frame::Hello { .. }) => {
+                        let _ = write_frame(
+                            &mut stream,
+                            &Frame::Reject {
+                                reason: "this coordinator runs the ring transport; \
+                                         expected HelloRing (transport mismatch?)"
+                                    .to_string(),
+                            },
+                        );
+                    }
+                    Ok(other) => {
+                        let _ = write_frame(
+                            &mut stream,
+                            &Frame::Reject {
+                                reason: format!("expected HelloRing, got {other:?}"),
+                            },
+                        );
+                    }
+                    Err(_) => {
+                        // undecodable (wrong version / garbage): drop it
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(Error::net(format!("ring coordinator accept failed: {e}"))),
+        }
+    }
+    // every slot claimed: build the rank-indexed ring address table and
+    // release each rank with its right neighbor's address
+    let mut addrs: Vec<String> = vec![my_ring_addr.to_string()];
+    for slot in peers.iter().skip(1) {
+        let (_, addr) = slot.as_ref().expect("all slots claimed above");
+        addrs.push(addr.clone());
+    }
+    for (rank, slot) in peers.iter_mut().enumerate().skip(1) {
+        let (stream, _) = slot.as_mut().expect("all slots claimed above");
+        write_frame(
+            stream,
+            &Frame::WelcomeRing {
+                world: n as u32,
+                right_addr: addrs[(rank + 1) % n].clone(),
+            },
+        )?;
+    }
+    // bootstrap streams drop here; the data path is the ring links only
+    Ok(addrs)
+}
+
+impl RingTransport {
+    /// Rank 0: bind the ring listener and the coordinator address, seat
+    /// ranks `1..n`, then join the ring itself.
+    pub fn hub(n: usize, cfg: &NetCfg) -> Result<Self> {
+        if n == 0 {
+            return Err(Error::invalid("world size must be >= 1"));
+        }
+        if n == 1 {
+            return Ok(Self::linkless(1, 0));
+        }
+        let host = host_of(&cfg.coord_addr);
+        let ring_listener = TcpListener::bind(format!("{host}:0")).map_err(|e| {
+            Error::net(format!("rank 0 cannot bind its ring listener on {host}: {e}"))
+        })?;
+        let my_ring_addr = ring_listener.local_addr()?.to_string();
+        let addrs = coordinate_ring(n, cfg, &my_ring_addr)?;
+        // link establishment gets its own fresh budget: the rendezvous
+        // above may legitimately have consumed most of connect_timeout
+        // waiting for a slow rank, and that rank still needs time to
+        // process its WelcomeRing and dial in
+        let deadline = Instant::now() + cfg.connect_timeout;
+        // dial right first (the neighbor's listener is already bound, so
+        // the connect lands in its backlog), then accept left
+        let right = dial_right(&addrs[1], 0, deadline, cfg)?;
+        let left = accept_left(&ring_listener, n - 1, deadline, cfg)?;
+        Self::assemble(n, 0, right, left)
+    }
+
+    /// Ranks 1..n: bind a ring listener, claim `rank` at the
+    /// coordinator, then dial the right neighbor and accept the left.
+    pub fn client(n: usize, rank: usize, cfg: &NetCfg) -> Result<Self> {
+        if rank == 0 || rank >= n {
+            return Err(Error::invalid(format!(
+                "client rank {rank} out of range 1..{n} (rank 0 is the coordinator)"
+            )));
+        }
+        let ring_listener = TcpListener::bind(wildcard_listen_addr(host_of(&cfg.coord_addr)))
+            .map_err(|e| Error::net(format!("rank {rank} cannot bind its ring listener: {e}")))?;
+        let ring_port = ring_listener.local_addr()?.port();
+        let deadline = Instant::now() + cfg.connect_timeout;
+        // --- bootstrap: claim the rank, learn the right neighbor
+        let mut coord = loop {
+            match TcpStream::connect(&cfg.coord_addr) {
+                Ok(s) => break s,
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(Error::net(format!(
+                            "cannot reach ring coordinator at {} within {:?}: {e}",
+                            cfg.coord_addr, cfg.connect_timeout
+                        )));
+                    }
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+            }
+        };
+        // WelcomeRing may take the whole rendezvous budget (the
+        // coordinator waits for every rank before releasing anyone)
+        coord.set_read_timeout(Some(cfg.connect_timeout))?;
+        coord.set_write_timeout(Some(cfg.io_timeout))?;
+        write_frame(
+            &mut coord,
+            &Frame::HelloRing {
+                world: n as u32,
+                rank: rank as u32,
+                port: ring_port,
+            },
+        )?;
+        let right_addr = match read_frame(&mut coord)? {
+            Frame::WelcomeRing { world, right_addr } if world as usize == n => right_addr,
+            Frame::WelcomeRing { world, .. } => {
+                return Err(Error::protocol(format!(
+                    "coordinator confirmed world {world}, expected {n}"
+                )))
+            }
+            Frame::Reject { reason } => {
+                return Err(Error::protocol(format!(
+                    "coordinator rejected rank {rank}: {reason}"
+                )))
+            }
+            other => {
+                return Err(Error::protocol(format!(
+                    "expected WelcomeRing, got {other:?}"
+                )))
+            }
+        };
+        drop(coord);
+        // the coordinator's own ring address may carry a wildcard bind
+        // host; dial the host this client reached the coordinator on
+        let right_addr = substitute_wildcard_host(right_addr, host_of(&cfg.coord_addr));
+        // --- data path: dial right, accept left, each on a fresh
+        // budget (the WelcomeRing wait alone may legitimately have
+        // consumed the whole rendezvous budget)
+        let deadline = Instant::now() + cfg.connect_timeout;
+        let right = dial_right(&right_addr, rank, deadline, cfg)?;
+        let left = accept_left(&ring_listener, rank - 1, deadline, cfg)?;
+        Self::assemble(n, rank, right, left)
+    }
+
+    fn linkless(n: usize, rank: usize) -> Self {
+        RingTransport {
+            n,
+            rank,
+            state: Mutex::new(RingState {
+                links: None,
+                generation: 0,
+                slots: (0..n).map(|_| None).collect(),
+                last: None,
+                enc_buf: Vec::new(),
+                dec_buf: Vec::new(),
+            }),
+            shutdown_handles: Vec::new(),
+            poisoned: AtomicBool::new(false),
+        }
+    }
+
+    fn assemble(n: usize, rank: usize, right: TcpStream, left: TcpStream) -> Result<Self> {
+        let shutdown_handles = vec![right.try_clone()?, left.try_clone()?];
+        Ok(RingTransport {
+            n,
+            rank,
+            state: Mutex::new(RingState {
+                links: Some(Links { right, left }),
+                generation: 0,
+                slots: (0..n).map(|_| None).collect(),
+                last: None,
+                enc_buf: Vec::new(),
+                dec_buf: Vec::new(),
+            }),
+            shutdown_handles,
+            poisoned: AtomicBool::new(false),
+        })
+    }
+
+    /// The rank this transport speaks for.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+}
+
+/// One forwarding hop out: encode board slot `send_idx` (an `Arc`
+/// refcount bump, not a payload copy) into the persistent buffer and
+/// push it to the right neighbor.
+fn send_step(
+    links: &mut Links,
+    enc_buf: &mut Vec<u8>,
+    slots: &[Option<Message>],
+    send_idx: usize,
+    my_gen: u64,
+    step: usize,
+) -> Result<()> {
+    enc_buf.clear();
+    let fwd = slots[send_idx]
+        .as_ref()
+        .expect("forwarding order fills the slot before it is sent")
+        .clone();
+    encode_frame_append(
+        &Frame::Data {
+            generation: my_gen,
+            msg: fwd,
+        },
+        enc_buf,
+    );
+    write_bytes(&mut links.right, enc_buf)
+        .map_err(|e| Error::net(format!("ring step {step}: sending to right neighbor: {e}")))
+}
+
+/// One forwarding hop in: read a generation-stamped frame from the left
+/// neighbor into board slot `recv_idx`.
+fn recv_step(
+    links: &mut Links,
+    dec_buf: &mut Vec<u8>,
+    slots: &mut [Option<Message>],
+    recv_idx: usize,
+    my_gen: u64,
+    step: usize,
+) -> Result<()> {
+    let frame = read_frame_with(&mut links.left, dec_buf)
+        .map_err(|e| Error::net(format!("ring step {step}: reading from left neighbor: {e}")))?;
+    slots[recv_idx] = Some(super::expect_data(frame, my_gen, "left neighbor")?);
+    Ok(())
+}
+
+impl Transport for RingTransport {
+    fn n_ranks(&self) -> usize {
+        self.n
+    }
+
+    fn allgather(&self, rank: usize, msg: Message) -> Result<Arc<[Message]>> {
+        if rank != self.rank {
+            return Err(Error::invalid(format!(
+                "this process's transport speaks for rank {}, not rank {rank}",
+                self.rank
+            )));
+        }
+        if self.poisoned.load(Ordering::SeqCst) {
+            return Err(Error::net("transport poisoned by a failed worker"));
+        }
+        let mut guard = self.state.lock().unwrap();
+        let RingState {
+            links,
+            generation,
+            slots,
+            last,
+            enc_buf,
+            dec_buf,
+        } = &mut *guard;
+        let my_gen = *generation;
+        let n = self.n;
+        slots[rank] = Some(msg);
+        // any early `?` below leaves the generation unchanged; the failed
+        // worker aborts the transport, so no later round can mix with it
+        if let Some(links) = links.as_mut() {
+            for step in 0..n - 1 {
+                let send_idx = (rank + n - step) % n;
+                let recv_idx = (send_idx + n - 1) % n;
+                if rank == 0 {
+                    // receive-before-send breaks the ring's write cycle
+                    // for payloads larger than the socket buffers (see
+                    // module docs); every other rank sends first
+                    recv_step(links, dec_buf, slots, recv_idx, my_gen, step)?;
+                    send_step(links, enc_buf, slots, send_idx, my_gen, step)?;
+                } else {
+                    send_step(links, enc_buf, slots, send_idx, my_gen, step)?;
+                    recv_step(links, dec_buf, slots, recv_idx, my_gen, step)?;
+                }
+            }
+        }
+        // publish: refill last round's slab in place when the caller has
+        // dropped it, else allocate a fresh one
+        let board = crate::cluster::transport::publish_recycled(slots, last);
+        *generation = my_gen.wrapping_add(1);
+        Ok(board)
+    }
+
+    fn abort(&self) {
+        self.poisoned.store(true, Ordering::SeqCst);
+        let abort_bytes = encode_frame(&Frame::Abort);
+        for h in &self.shutdown_handles {
+            // best-effort polite notice, then force any blocked neighbor
+            // read to return; both may fail on an already-dead socket
+            let mut w: &TcpStream = h;
+            let _ = write_bytes(&mut w, &abort_bytes);
+            let _ = h.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::net::handshake::free_loopback_addr;
+    use crate::cluster::transport::Endpoint;
+    use crate::coordinator::SelectOutput;
+
+    fn cfg(addr: &str) -> NetCfg {
+        NetCfg {
+            coord_addr: addr.to_string(),
+            connect_timeout: Duration::from_secs(30),
+            io_timeout: Duration::from_secs(10),
+        }
+    }
+
+    /// Build an n-rank loopback ring: one joined transport per rank
+    /// (coordinator at index 0), built concurrently.
+    fn loopback_ring(n: usize) -> Vec<Arc<RingTransport>> {
+        let addr = free_loopback_addr().unwrap();
+        let mut client_handles = Vec::new();
+        for rank in 1..n {
+            let c = cfg(&addr);
+            client_handles.push(std::thread::spawn(move || {
+                RingTransport::client(n, rank, &c).map(Arc::new)
+            }));
+        }
+        let hub = Arc::new(RingTransport::hub(n, &cfg(&addr)).unwrap());
+        let mut out = vec![hub];
+        for h in client_handles {
+            out.push(h.join().unwrap().unwrap());
+        }
+        out
+    }
+
+    #[test]
+    fn allgather_is_rank_indexed_over_rounds() {
+        let n = 3;
+        let rounds = 20;
+        let tps = loopback_ring(n);
+        let mut handles = Vec::new();
+        for (rank, tp) in tps.into_iter().enumerate() {
+            handles.push(std::thread::spawn(move || {
+                let ep = Endpoint::new(rank, tp.as_ref());
+                for round in 0..rounds {
+                    let mine = (rank * 1000 + round) as f64;
+                    let got = ep.allgather_f64(mine).unwrap();
+                    let want: Vec<f64> = (0..n).map(|r| (r * 1000 + round) as f64).collect();
+                    assert_eq!(got, want, "rank {rank} round {round}");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn mixed_message_kinds_roundtrip_bit_exactly() {
+        let n = 2;
+        let tps = loopback_ring(n);
+        let mut handles = Vec::new();
+        for (rank, tp) in tps.into_iter().enumerate() {
+            handles.push(std::thread::spawn(move || {
+                let ep = Endpoint::new(rank, tp.as_ref());
+                let sel = Arc::new(SelectOutput {
+                    idx: vec![rank as u32, 100 + rank as u32],
+                    val: vec![rank as f32, f32::NAN],
+                });
+                let sels = ep.allgather_select(sel).unwrap();
+                assert_eq!(sels.len(), n);
+                assert_eq!(sels[rank].idx[0], rank as u32);
+                assert!(sels[0].val[1].is_nan() && sels[1].val[1].is_nan());
+                let floats = ep.allgather_floats(Arc::new(vec![rank as f32; 4])).unwrap();
+                assert_eq!(*floats[1], vec![1.0f32; 4]);
+                let empty = ep
+                    .allgather_select(Arc::new(SelectOutput::default()))
+                    .unwrap();
+                assert!(empty.iter().all(|s| s.is_empty()));
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn large_payloads_cannot_deadlock_the_ring() {
+        // every rank's contribution (512 KB) exceeds typical socket
+        // buffers; the rank-0 receive-first ordering must keep the ring
+        // making progress
+        let n = 3;
+        let k = 128 * 1024;
+        let tps = loopback_ring(n);
+        let mut handles = Vec::new();
+        for (rank, tp) in tps.into_iter().enumerate() {
+            handles.push(std::thread::spawn(move || {
+                let ep = Endpoint::new(rank, tp.as_ref());
+                for round in 0..3 {
+                    let mine = Arc::new(vec![(rank * 10 + round) as f32; k]);
+                    let got = ep.allgather_floats(mine).unwrap();
+                    for (r, v) in got.iter().enumerate() {
+                        assert_eq!(v.len(), k);
+                        assert_eq!(v[0], (r * 10 + round) as f32, "rank {rank} round {round}");
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn wrong_rank_call_is_rejected() {
+        let tps = loopback_ring(2);
+        let err = tps[1]
+            .allgather(0, Message::Scalar(0.0))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("speaks for rank 1"), "{err}");
+    }
+
+    #[test]
+    fn single_rank_world_needs_no_sockets() {
+        let addr = free_loopback_addr().unwrap();
+        let tp = RingTransport::hub(1, &cfg(&addr)).unwrap();
+        let got = tp.allgather(0, Message::Scalar(4.5)).unwrap();
+        assert_eq!(&got[..], &[Message::Scalar(4.5)]);
+    }
+
+    #[test]
+    fn abort_breaks_the_ring_for_every_rank() {
+        let n = 3;
+        let tps = loopback_ring(n);
+        // rank 2 dies; ranks 0 and 1 must error out of the round instead
+        // of waiting forever on forwarded chunks that never arrive
+        tps[2].abort();
+        // surviving ranks follow the worker contract: abort on error so
+        // the poison propagates around the ring instead of each rank
+        // waiting out its own IO deadline
+        let t0 = Arc::clone(&tps[0]);
+        let h0 = std::thread::spawn(move || {
+            let res = t0.allgather(0, Message::Scalar(0.0));
+            if res.is_err() {
+                t0.abort();
+            }
+            res.map(|_| ())
+        });
+        let t1 = Arc::clone(&tps[1]);
+        let h1 = std::thread::spawn(move || {
+            let res = t1.allgather(1, Message::Scalar(1.0));
+            if res.is_err() {
+                t1.abort();
+            }
+            res.map(|_| ())
+        });
+        assert!(h0.join().unwrap().is_err(), "rank 0 must surface the break");
+        assert!(h1.join().unwrap().is_err(), "rank 1 must surface the break");
+        // the aborting side fails fast locally
+        let err = tps[2]
+            .allgather(2, Message::Scalar(2.0))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("poisoned"), "{err}");
+    }
+
+    #[test]
+    fn star_client_is_rejected_with_a_transport_hint() {
+        let n = 2;
+        let addr = free_loopback_addr().unwrap();
+        let probe_addr = addr.clone();
+        let probe = std::thread::spawn(move || {
+            let deadline = Instant::now() + Duration::from_secs(10);
+            let mut stream = loop {
+                match TcpStream::connect(&probe_addr) {
+                    Ok(s) => break s,
+                    Err(e) => {
+                        assert!(Instant::now() < deadline, "connect: {e}");
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                }
+            };
+            stream
+                .set_read_timeout(Some(Duration::from_secs(10)))
+                .unwrap();
+            write_frame(&mut stream, &Frame::Hello { world: 2, rank: 1 }).unwrap();
+            read_frame(&mut stream)
+        });
+        let hub_cfg = NetCfg {
+            coord_addr: addr,
+            connect_timeout: Duration::from_millis(1500),
+            io_timeout: Duration::from_millis(500),
+        };
+        assert!(
+            RingTransport::hub(n, &hub_cfg).is_err(),
+            "a star Hello must not satisfy the ring rendezvous"
+        );
+        match probe.join().unwrap().unwrap() {
+            Frame::Reject { reason } => {
+                assert!(reason.contains("transport mismatch"), "{reason}")
+            }
+            other => panic!("expected Reject, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn host_of_handles_common_forms() {
+        assert_eq!(host_of("127.0.0.1:29400"), "127.0.0.1");
+        assert_eq!(host_of("localhost:0"), "localhost");
+        assert_eq!(host_of("[::1]:29400"), "[::1]");
+    }
+
+    #[test]
+    fn wildcard_coordinator_host_is_substituted_for_dialing() {
+        // rank 0 bound 0.0.0.0; rank n-1 must dial the host it reached
+        // the coordinator through instead
+        assert_eq!(
+            substitute_wildcard_host("0.0.0.0:9001".to_string(), "10.0.0.1"),
+            "10.0.0.1:9001"
+        );
+        assert_eq!(
+            substitute_wildcard_host("[::]:9001".to_string(), "[fd00::1]"),
+            "[fd00::1]:9001"
+        );
+        // real addresses pass through untouched
+        assert_eq!(
+            substitute_wildcard_host("10.0.0.7:9001".to_string(), "10.0.0.1"),
+            "10.0.0.7:9001"
+        );
+        assert_eq!(
+            substitute_wildcard_host("[::1]:9001".to_string(), "ignored"),
+            "[::1]:9001"
+        );
+    }
+
+    #[test]
+    fn client_listener_family_follows_the_coordinator() {
+        assert_eq!(wildcard_listen_addr("127.0.0.1"), "0.0.0.0:0");
+        assert_eq!(wildcard_listen_addr("somehost"), "0.0.0.0:0");
+        assert_eq!(wildcard_listen_addr("[::1]"), "[::]:0");
+    }
+}

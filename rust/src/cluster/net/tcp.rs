@@ -109,20 +109,6 @@ impl TcpTransport {
     pub fn rank(&self) -> usize {
         self.rank
     }
-
-    fn expect_data(frame: Frame, want_gen: u64, from: &str) -> Result<Message> {
-        match frame {
-            Frame::Data { generation, msg } if generation == want_gen => Ok(msg),
-            Frame::Data { generation, .. } => Err(Error::protocol(format!(
-                "generation mismatch from {from}: got {generation}, expected {want_gen} — \
-                 workers diverged"
-            ))),
-            Frame::Abort => Err(Error::net(format!("peer {from} aborted the cluster"))),
-            other => Err(Error::protocol(format!(
-                "expected Data frame from {from}, got {other:?}"
-            ))),
-        }
-    }
 }
 
 impl Transport for TcpTransport {
@@ -162,7 +148,7 @@ impl Transport for TcpTransport {
                     let frame = read_frame_with(stream, dec_buf).map_err(|e| {
                         Error::net(format!("reading rank {r}'s contribution: {e}"))
                     })?;
-                    slots[r] = Some(Self::expect_data(frame, my_gen, &format!("rank {r}"))?);
+                    slots[r] = Some(super::expect_data(frame, my_gen, &format!("rank {r}"))?);
                 }
                 let board: Arc<[Message]> = slots
                     .into_iter()
@@ -205,7 +191,7 @@ impl Transport for TcpTransport {
                     let frame = read_frame_with(hub, dec_buf).map_err(|e| {
                         Error::net(format!("reading board entry {r} from hub: {e}"))
                     })?;
-                    board.push(Self::expect_data(frame, my_gen, "hub")?);
+                    board.push(super::expect_data(frame, my_gen, "hub")?);
                 }
                 board.into()
             }

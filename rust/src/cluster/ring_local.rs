@@ -1,0 +1,328 @@
+//! [`RingLocal`] — the in-process twin of the TCP
+//! [`RingTransport`](crate::cluster::net::RingTransport).
+//!
+//! Same algorithm, no sockets: one unbounded channel per directed ring
+//! link (rank `r` → rank `(r + 1) % n`), one OS thread per rank. An
+//! all-gather runs the identical `n - 1` forwarding steps as the wire
+//! version — each rank pushes board slot `(rank - s) mod n` to its right
+//! neighbor and pops slot `(rank - s - 1) mod n` from its left — with
+//! every hop generation-stamped so cross-round mixing is a typed error,
+//! not silent corruption. Because channel sends never block, the wire
+//! transport's receive-before-send ordering trick is unnecessary here.
+//!
+//! Payloads stay `Arc`-shared end to end (a hop moves a refcount, never
+//! elements) and each rank recycles its published board slab once the
+//! caller drops it, so the only steady-state allocations are the
+//! channel's per-hop nodes — this is the transport the conformance
+//! suite and `RealTrainer` use to exercise ring *semantics* without
+//! socket overhead. Failure semantics match the wire version: every
+//! receive is deadline-bounded ([`RingLocal::with_timeout`]) and
+//! [`Transport::abort`] poisons the transport, waking every blocked
+//! receiver with an error — a broken ring never hangs.
+
+use crate::cluster::transport::{Message, Transport};
+use crate::error::{Error, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// One hop on a ring link.
+enum Hop {
+    /// A forwarded board slot, stamped with the sender's round.
+    Data {
+        generation: u64,
+        msg: Message,
+    },
+    /// Poison notice: the transport was aborted.
+    Abort,
+}
+
+/// One rank's ring endpoint state (each rank's calls come from its own
+/// worker thread; the mutex makes the shared handle `Sync`).
+struct RingRank {
+    /// Send side of the link to rank `(rank + 1) % n`.
+    tx_right: Sender<Hop>,
+    /// Receive side of the link from rank `(rank + n - 1) % n`.
+    rx_left: Receiver<Hop>,
+    generation: u64,
+    /// Rank-indexed slot board, retained across rounds.
+    slots: Vec<Option<Message>>,
+    /// Last round's published slab, kept for recycling.
+    last: Option<Arc<[Message]>>,
+}
+
+/// In-process chunked-ring transport for one OS thread per rank.
+pub struct RingLocal {
+    n: usize,
+    timeout: Duration,
+    poisoned: AtomicBool,
+    ranks: Vec<Mutex<RingRank>>,
+    /// Clones of every link's sender, used by [`Transport::abort`] to
+    /// wake blocked receivers (kept apart from the per-rank state so
+    /// abort never contends with a blocked round's lock).
+    abort_tx: Mutex<Vec<Sender<Hop>>>,
+}
+
+impl RingLocal {
+    /// Ring for `n` ranks with the default 30 s per-round receive
+    /// deadline.
+    pub fn new(n: usize) -> Self {
+        Self::with_timeout(n, Duration::from_secs(30))
+    }
+
+    /// Ring for `n` ranks; a rank whose left neighbor stays silent for
+    /// `timeout` within one round surfaces [`Error::Net`] instead of
+    /// blocking forever.
+    pub fn with_timeout(n: usize, timeout: Duration) -> Self {
+        // link r carries hops from rank r to rank (r + 1) % n
+        let mut txs = Vec::with_capacity(n);
+        let mut rxs: Vec<Option<Receiver<Hop>>> = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel();
+            txs.push(tx);
+            rxs.push(Some(rx));
+        }
+        let ranks = (0..n)
+            .map(|r| {
+                Mutex::new(RingRank {
+                    tx_right: txs[r].clone(),
+                    // rank r's left link is the channel OUT of (r - 1) mod n
+                    rx_left: rxs[(r + n - 1) % n]
+                        .take()
+                        .expect("each link's receiver is claimed exactly once"),
+                    generation: 0,
+                    slots: (0..n).map(|_| None).collect(),
+                    last: None,
+                })
+            })
+            .collect();
+        RingLocal {
+            n,
+            timeout,
+            poisoned: AtomicBool::new(false),
+            ranks,
+            abort_tx: Mutex::new(txs),
+        }
+    }
+
+    fn recv_hop(&self, rk: &mut RingRank, deadline: Instant, step: usize) -> Result<Hop> {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        match rk.rx_left.recv_timeout(remaining) {
+            Ok(hop) => Ok(hop),
+            Err(RecvTimeoutError::Timeout) => Err(Error::net(format!(
+                "ring step {step}: left neighbor stayed silent past the {:?} deadline",
+                self.timeout
+            ))),
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(Error::invariant("ring link disconnected — transport dropped"))
+            }
+        }
+    }
+}
+
+impl Transport for RingLocal {
+    fn n_ranks(&self) -> usize {
+        self.n
+    }
+
+    fn allgather(&self, rank: usize, msg: Message) -> Result<Arc<[Message]>> {
+        if rank >= self.n {
+            return Err(Error::invalid(format!(
+                "rank {rank} out of range (n = {})",
+                self.n
+            )));
+        }
+        if self.poisoned.load(Ordering::SeqCst) {
+            return Err(Error::net("transport poisoned by a failed worker"));
+        }
+        let mut rk = self.ranks[rank].lock().unwrap();
+        let my_gen = rk.generation;
+        let n = self.n;
+        let deadline = Instant::now() + self.timeout;
+        rk.slots[rank] = Some(msg);
+        for step in 0..n - 1 {
+            let send_idx = (rank + n - step) % n;
+            let recv_idx = (send_idx + n - 1) % n;
+            let fwd = rk.slots[send_idx]
+                .as_ref()
+                .expect("forwarding order fills the slot before it is sent")
+                .clone();
+            rk.tx_right
+                .send(Hop::Data {
+                    generation: my_gen,
+                    msg: fwd,
+                })
+                .map_err(|_| Error::invariant("ring link disconnected — transport dropped"))?;
+            match self.recv_hop(&mut rk, deadline, step)? {
+                Hop::Data { generation, msg } if generation == my_gen => {
+                    rk.slots[recv_idx] = Some(msg);
+                }
+                Hop::Data { generation, .. } => {
+                    return Err(Error::protocol(format!(
+                        "generation mismatch from left neighbor: got {generation}, \
+                         expected {my_gen} — workers diverged"
+                    )))
+                }
+                Hop::Abort => {
+                    return Err(Error::net("transport poisoned by a failed worker"))
+                }
+            }
+        }
+        let rk = &mut *rk;
+        let board = crate::cluster::transport::publish_recycled(&mut rk.slots, &mut rk.last);
+        rk.generation = my_gen.wrapping_add(1);
+        Ok(board)
+    }
+
+    fn abort(&self) {
+        self.poisoned.store(true, Ordering::SeqCst);
+        // wake every blocked receiver; sends to healthy links just queue
+        // behind in-flight data and are consumed as the poison notice
+        for tx in self.abort_tx.lock().unwrap().iter() {
+            let _ = tx.send(Hop::Abort);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::transport::Endpoint;
+    use crate::coordinator::SelectOutput;
+
+    #[test]
+    fn single_rank_allgather_is_identity() {
+        let tp = RingLocal::new(1);
+        let ep = Endpoint::new(0, &tp);
+        assert_eq!(ep.allgather_f64(2.5).unwrap(), vec![2.5]);
+        assert_eq!(ep.allgather_f64(3.5).unwrap(), vec![3.5]);
+    }
+
+    #[test]
+    fn multi_rank_allgather_is_rank_indexed_over_rounds() {
+        let n = 4;
+        let rounds = 25;
+        let tp = Arc::new(RingLocal::new(n));
+        let mut handles = Vec::new();
+        for rank in 0..n {
+            let tp = tp.clone();
+            handles.push(std::thread::spawn(move || {
+                let ep = Endpoint::new(rank, tp.as_ref());
+                for round in 0..rounds {
+                    let mine = (rank * 1000 + round) as f64;
+                    let got = ep.allgather_f64(mine).unwrap();
+                    let want: Vec<f64> = (0..n).map(|r| (r * 1000 + round) as f64).collect();
+                    assert_eq!(got, want, "rank {rank} round {round}");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn payloads_are_shared_not_copied() {
+        // a hop moves the Arc, so the received entry is the sender's
+        // buffer — the ring twin keeps the zero-copy payload property
+        let n = 2;
+        let tp = Arc::new(RingLocal::new(n));
+        let payload = Arc::new(vec![1.0f32, 2.0]);
+        let sent = Arc::clone(&payload);
+        let tp1 = tp.clone();
+        let h = std::thread::spawn(move || tp1.allgather(1, Message::Floats(sent)).unwrap());
+        let board0 = tp
+            .allgather(0, Message::Floats(Arc::new(vec![0.5])))
+            .unwrap();
+        h.join().unwrap();
+        match &board0[1] {
+            Message::Floats(v) => {
+                assert!(Arc::ptr_eq(v, &payload), "payload must not be copied")
+            }
+            other => panic!("wrong envelope {other:?}"),
+        }
+    }
+
+    #[test]
+    fn board_slab_is_recycled_across_rounds() {
+        let tp = RingLocal::new(1);
+        let first = tp.allgather(0, Message::Scalar(1.0)).unwrap();
+        let first_ptr = Arc::as_ptr(&first);
+        drop(first);
+        let second = tp.allgather(0, Message::Scalar(2.0)).unwrap();
+        assert_eq!(
+            Arc::as_ptr(&second),
+            first_ptr,
+            "dropped board slab must be reused"
+        );
+        // a retained board is never clobbered
+        let held = tp.allgather(0, Message::Scalar(3.0)).unwrap();
+        let next = tp.allgather(0, Message::Scalar(4.0)).unwrap();
+        assert!(!Arc::ptr_eq(&held, &next));
+        assert_eq!(&held[..], &[Message::Scalar(3.0)]);
+    }
+
+    #[test]
+    fn selections_roundtrip() {
+        let n = 3;
+        let tp = Arc::new(RingLocal::new(n));
+        let mk = |r: usize| SelectOutput {
+            idx: vec![r as u32, 10 + r as u32],
+            val: vec![r as f32, -(r as f32)],
+        };
+        let mut handles = Vec::new();
+        for rank in 0..n {
+            let tp = tp.clone();
+            let mine = Arc::new(mk(rank));
+            handles.push(std::thread::spawn(move || {
+                let ep = Endpoint::new(rank, tp.as_ref());
+                ep.allgather_select(mine).unwrap()
+            }));
+        }
+        for h in handles {
+            let outs = h.join().unwrap();
+            assert_eq!(outs.len(), n);
+            for (r, o) in outs.iter().enumerate() {
+                assert_eq!(o.as_ref(), &mk(r));
+            }
+        }
+    }
+
+    #[test]
+    fn abort_unblocks_waiters_with_error() {
+        let n = 2;
+        let tp = Arc::new(RingLocal::new(n));
+        let tp2 = tp.clone();
+        let waiter = std::thread::spawn(move || {
+            let ep = Endpoint::new(0, tp2.as_ref());
+            ep.allgather_f64(1.0)
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        tp.abort();
+        assert!(
+            waiter.join().unwrap().is_err(),
+            "poisoned ring must error, not hang"
+        );
+        // later calls fail fast
+        let ep = Endpoint::new(1, tp.as_ref());
+        assert!(ep.allgather_f64(2.0).is_err());
+    }
+
+    #[test]
+    fn silent_neighbor_times_out() {
+        let tp = RingLocal::with_timeout(2, Duration::from_millis(100));
+        // rank 1 never deposits; rank 0 must surface a deadline error
+        let err = tp
+            .allgather(0, Message::Scalar(0.0))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("deadline") || err.contains("silent"), "{err}");
+    }
+
+    #[test]
+    fn out_of_range_rank_rejected() {
+        let tp = RingLocal::new(2);
+        assert!(tp.allgather(5, Message::Scalar(0.0)).is_err());
+    }
+}

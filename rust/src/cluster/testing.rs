@@ -1,0 +1,125 @@
+//! Test/bench support: uniform loopback cluster builders for every
+//! [`Transport`] implementation.
+//!
+//! The transport conformance suite (`rust/tests/transport_conformance.rs`)
+//! runs one parameterized battery over every transport; these builders
+//! give it (and the benches) a single shape to construct an n-rank
+//! cluster of any kind: a rank-indexed `Vec<Arc<dyn Transport>>` where
+//! entry `r` is the handle rank `r`'s worker calls `allgather(r, ..)`
+//! on. For the in-process transports every entry is a clone of one
+//! shared transport; for the socket transports each entry is that
+//! rank's own endpoint, built concurrently over a fresh loopback port.
+//!
+//! Not a stable public API — test and bench support only (kept in the
+//! library so integration tests, benches and doc examples share one
+//! copy instead of each test binary re-rolling its own).
+
+use crate::cluster::net::{free_loopback_addr, NetCfg, RingTransport, TcpTransport};
+use crate::cluster::ring_local::RingLocal;
+use crate::cluster::transport::{LocalTransport, Transport};
+use crate::error::Result;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Rank-indexed handles onto one shared [`LocalTransport`].
+pub fn local_cluster(n: usize) -> Vec<Arc<dyn Transport>> {
+    let tp: Arc<dyn Transport> = Arc::new(LocalTransport::new(n));
+    (0..n).map(|_| Arc::clone(&tp)).collect()
+}
+
+/// Rank-indexed handles onto one shared [`RingLocal`] with a test-sized
+/// receive deadline.
+pub fn ring_local_cluster(n: usize, timeout: Duration) -> Vec<Arc<dyn Transport>> {
+    let tp: Arc<dyn Transport> = Arc::new(RingLocal::with_timeout(n, timeout));
+    (0..n).map(|_| Arc::clone(&tp)).collect()
+}
+
+/// A [`NetCfg`] on a fresh loopback port with test-sized deadlines.
+pub fn loopback_net_cfg(io_timeout: Duration) -> Result<NetCfg> {
+    Ok(NetCfg {
+        coord_addr: free_loopback_addr()?,
+        connect_timeout: Duration::from_secs(60),
+        io_timeout,
+    })
+}
+
+/// Concurrently build an n-rank loopback [`TcpTransport`] star (hub at
+/// index 0).
+pub fn tcp_cluster(n: usize, io_timeout: Duration) -> Result<Vec<Arc<dyn Transport>>> {
+    let cfg = loopback_net_cfg(io_timeout)?;
+    let mut clients = Vec::with_capacity(n.saturating_sub(1));
+    for rank in 1..n {
+        let c = cfg.clone();
+        clients.push(std::thread::spawn(move || {
+            TcpTransport::client(n, rank, &c).map(|t| Arc::new(t) as Arc<dyn Transport>)
+        }));
+    }
+    let hub = TcpTransport::hub(n, &cfg).map(|t| Arc::new(t) as Arc<dyn Transport>);
+    collect_cluster(hub, clients)
+}
+
+/// Concurrently build an n-rank loopback [`RingTransport`] ring
+/// (coordinator at index 0).
+pub fn ring_cluster(n: usize, io_timeout: Duration) -> Result<Vec<Arc<dyn Transport>>> {
+    let cfg = loopback_net_cfg(io_timeout)?;
+    let mut clients = Vec::with_capacity(n.saturating_sub(1));
+    for rank in 1..n {
+        let c = cfg.clone();
+        clients.push(std::thread::spawn(move || {
+            RingTransport::client(n, rank, &c).map(|t| Arc::new(t) as Arc<dyn Transport>)
+        }));
+    }
+    let hub = RingTransport::hub(n, &cfg).map(|t| Arc::new(t) as Arc<dyn Transport>);
+    collect_cluster(hub, clients)
+}
+
+type ClientHandle = std::thread::JoinHandle<Result<Arc<dyn Transport>>>;
+
+fn collect_cluster(
+    hub: Result<Arc<dyn Transport>>,
+    clients: Vec<ClientHandle>,
+) -> Result<Vec<Arc<dyn Transport>>> {
+    // join every client before propagating a hub error so a failed
+    // rendezvous can't leak blocked builder threads
+    let joined: Vec<Result<Arc<dyn Transport>>> = clients
+        .into_iter()
+        .map(|h| {
+            h.join()
+                .unwrap_or_else(|_| Err(crate::error::Error::invariant("cluster builder panicked")))
+        })
+        .collect();
+    let mut out = vec![hub?];
+    for c in joined {
+        out.push(c?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::transport::Endpoint;
+
+    fn smoke(tps: Vec<Arc<dyn Transport>>) {
+        let n = tps.len();
+        let mut handles = Vec::new();
+        for (rank, tp) in tps.into_iter().enumerate() {
+            handles.push(std::thread::spawn(move || {
+                let ep = Endpoint::new(rank, tp.as_ref());
+                let got = ep.allgather_f64(rank as f64).unwrap();
+                assert_eq!(got, (0..n).map(|r| r as f64).collect::<Vec<_>>());
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn all_builders_produce_working_clusters() {
+        smoke(local_cluster(3));
+        smoke(ring_local_cluster(3, Duration::from_secs(10)));
+        smoke(tcp_cluster(3, Duration::from_secs(10)).unwrap());
+        smoke(ring_cluster(3, Duration::from_secs(10)).unwrap());
+    }
+}

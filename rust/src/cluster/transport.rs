@@ -338,6 +338,43 @@ impl<'a> Endpoint<'a> {
     }
 }
 
+/// Publish a completed round's slot board as an `Arc<[Message]>` slab,
+/// recycling the previous round's slab when the caller has dropped its
+/// clone (the per-rank twin of [`LocalTransport`]'s double-buffered
+/// rotation, shared by both ring transports): `last` holds our clone of
+/// the previously published board; if it is uniquely owned again it is
+/// refilled in place, otherwise a fresh slab is allocated. Every slot
+/// must be `Some` (the round is complete); slots are left `None` for
+/// the next round.
+pub(crate) fn publish_recycled(
+    slots: &mut [Option<Message>],
+    last: &mut Option<Arc<[Message]>>,
+) -> Arc<[Message]> {
+    let n = slots.len();
+    let recycled = last.take().and_then(|mut slab| {
+        if slab.len() == n && Arc::get_mut(&mut slab).is_some() {
+            Some(slab)
+        } else {
+            None // a caller retained an old board; fall back
+        }
+    });
+    let board: Arc<[Message]> = match recycled {
+        Some(mut slab) => {
+            let dst = Arc::get_mut(&mut slab).expect("uniqueness checked above");
+            for (d, s) in dst.iter_mut().zip(slots.iter_mut()) {
+                *d = s.take().expect("completed round fills every slot");
+            }
+            slab
+        }
+        None => slots
+            .iter_mut()
+            .map(|s| s.take().expect("completed round fills every slot"))
+            .collect(),
+    };
+    *last = Some(Arc::clone(&board));
+    board
+}
+
 /// RAII guard for worker threads: if the holding thread unwinds (a
 /// panic, not an `Err`), the transport is poisoned so peer ranks error
 /// out of their rendezvous instead of blocking forever. The explicit

@@ -234,12 +234,54 @@ impl CostModel {
     }
 
     /// Ring all-gather time where each rank contributes `bytes_per_rank`.
+    ///
+    /// This is the `(n-1)·α + (n-1)/n·V·β` ring form with total volume
+    /// `V = n·bytes_per_rank` — the algorithm every trace charges,
+    /// regardless of which harness transport moved the bytes. The TCP
+    /// ring transport makes the harness's real per-link traffic match
+    /// this assumption; [`CostModel::allgather_star`] quantifies what
+    /// the hub-star harness shape would cost instead.
     pub fn allgather(&self, bytes_per_rank: usize) -> f64 {
         let n = self.topo.n_ranks as f64;
         if self.topo.n_ranks <= 1 {
             return 0.0;
         }
         (n - 1.0) * self.eff_alpha() + (n - 1.0) * bytes_per_rank as f64 * self.eff_beta()
+    }
+
+    /// Modeled time of the same all-gather executed as a hub-mediated
+    /// *star* (the [`TcpTransport`] harness shape): the hub serially
+    /// drains `n-1` contributions of `bytes_per_rank` and then pushes
+    /// the `n·bytes_per_rank` board to each of `n-1` clients through
+    /// its one link — `2(n-1)·α + (n-1)·(n+1)·B·β`. Diagnostics/bench
+    /// accounting only: traces always charge the ring form
+    /// ([`CostModel::allgather`]), which is exactly why star-vs-ring
+    /// parity holds bit-exactly while the star's *harness* traffic is
+    /// ~`(n+1)/2`× heavier on the hub NIC.
+    ///
+    /// [`TcpTransport`]: crate::cluster::net::TcpTransport
+    pub fn allgather_star(&self, bytes_per_rank: usize) -> f64 {
+        let n = self.topo.n_ranks as f64;
+        if self.topo.n_ranks <= 1 {
+            return 0.0;
+        }
+        2.0 * (n - 1.0) * self.eff_alpha()
+            + (n - 1.0) * (n + 1.0) * bytes_per_rank as f64 * self.eff_beta()
+    }
+
+    /// Bytes any single link carries per ring all-gather round:
+    /// `(n-1)·B`, identical on every link — the balanced-traffic
+    /// property the partition design's no-build-up story relies on.
+    pub fn allgather_link_bytes_ring(&self, bytes_per_rank: usize) -> usize {
+        self.topo.n_ranks.saturating_sub(1) * bytes_per_rank
+    }
+
+    /// Bytes the *hub's* link carries per star all-gather round:
+    /// `(n-1)·B` in plus `(n-1)·n·B` out — `(n+1)×` the ring's
+    /// per-link volume.
+    pub fn allgather_link_bytes_star_hub(&self, bytes_per_rank: usize) -> usize {
+        let n = self.topo.n_ranks;
+        n.saturating_sub(1) * bytes_per_rank + n.saturating_sub(1) * n * bytes_per_rank
     }
 
     /// Ring all-reduce time over a `bytes` vector (reduce-scatter +
@@ -343,6 +385,35 @@ mod tests {
         let union_reduce = m.allreduce(n * k / 2 * CostModel::DENSE_ENTRY_BYTES);
         let dense = m.allreduce(n_g * CostModel::DENSE_ENTRY_BYTES);
         assert!(padded + union_reduce > dense * 0.5, "{} vs {}", padded + union_reduce, dense);
+    }
+
+    #[test]
+    fn star_allgather_is_costlier_than_ring_and_single_rank_free() {
+        let m = cm(1);
+        assert_eq!(m.allgather_star(1_000_000), 0.0);
+        assert_eq!(m.allgather_link_bytes_ring(1_000), 0);
+        assert_eq!(m.allgather_link_bytes_star_hub(1_000), 0);
+        for n in [2usize, 4, 8, 16] {
+            let m = cm(n);
+            for bytes in [64usize, 4_096, 1_000_000] {
+                assert!(
+                    m.allgather_star(bytes) > m.allgather(bytes),
+                    "n={n} B={bytes}: the hub star must model slower than the ring"
+                );
+            }
+            // the hub NIC carries (n+1)x the per-link ring volume
+            let ring = m.allgather_link_bytes_ring(1_000);
+            let star = m.allgather_link_bytes_star_hub(1_000);
+            assert_eq!(ring, (n - 1) * 1_000);
+            assert_eq!(star, (n + 1) * ring);
+        }
+        // the exact closed forms, spot-checked at n = 4
+        let m = cm(4);
+        let b = 10_000usize;
+        let a = m.topo.alpha();
+        let beta = m.topo.beta();
+        assert!((m.allgather(b) - (3.0 * a + 3.0 * b as f64 * beta)).abs() < 1e-15);
+        assert!((m.allgather_star(b) - (6.0 * a + 15.0 * b as f64 * beta)).abs() < 1e-15);
     }
 
     #[test]

@@ -25,8 +25,9 @@ pub struct ExperimentConfig {
     pub hard_delta: f32,
     /// Profile scale factor vs the paper's model (1.0 = full size).
     pub scale: f64,
-    /// Which transport moves rank messages (`transport = "tcp"` selects
-    /// the multi-process socket path; `sim` then defers to `launch`).
+    /// Which transport moves rank messages (`transport = "tcp"` /
+    /// `"ring"` selects a multi-process socket path; `sim` then defers
+    /// to `launch`).
     pub transport: TransportKind,
     /// Socket-transport tunables (`[transport]` section).
     pub net: NetCfg,
@@ -285,6 +286,12 @@ link_beta = 8.0
         let c3 = from_toml(&e).unwrap();
         assert_eq!(c3.transport, TransportKind::Local);
         assert!(!c3.sim.straggler.link_active());
+        // the ring transport is selectable from TOML too
+        let r = TomlDoc::parse("[experiment]\npreset = \"lstm\"\ntransport = \"ring\"\n")
+            .unwrap();
+        let c4 = from_toml(&r).unwrap();
+        assert_eq!(c4.transport, TransportKind::Ring);
+        assert!(c4.transport.is_multiprocess());
         // out-of-range link rank is rejected by validate
         let f = TomlDoc::parse(
             "[experiment]\npreset = \"lstm\"\nranks = 4\n[straggler]\nlink_rank = 9\n",

@@ -26,9 +26,11 @@
 //!        ▼
 //!   cluster::Transport                      data movement: Arc-shared
 //!        │     ├ LocalTransport             boards, O(n) fan-out; in-process
-//!        │     └ net::TcpTransport          rendezvous / one process per
-//!        │         (codec + handshake)      rank over a framed checksummed
-//!        ▼                                  wire through a TCP hub
+//!        │     ├ RingLocal                  rendezvous / in-process ring /
+//!        │     ├ net::TcpTransport          one process per rank over a
+//!        │     └ net::RingTransport         framed checksummed wire — hub
+//!        │         (codec + handshake)      star vs chunked ring topology
+//!        ▼
 //!   collectives::{merge_selections_iter,    pure merge/reduce arithmetic
 //!       reduce_contributions_into, …}       shared by every engine, writing
 //!        +                                  into reusable RoundScratch
@@ -48,15 +50,23 @@
 //! round buffers are reused, so steady-state collective rounds touch the
 //! heap zero times (`rust/tests/alloc_regression.rs`) — while the α–β
 //! [`collectives::CostModel`] separately charges what each collective
-//! would cost on the modeled cluster's wire. The engine choice
-//! threads through [`cluster::EngineKind`] → `SimCfg`/`RealTrainerCfg` →
-//! the CLI (`--engine threaded|lockstep`); the transport choice through
-//! [`cluster::TransportKind`] (`transport = "tcp"` in TOML, `exdyna
-//! launch` on the CLI — one process per rank over the
-//! [`cluster::net`] wire protocol, same-host or across hosts).
-//! `rust/tests/engine_parity.rs` proves all execution modes emit
-//! identical traces for a fixed seed — including across the process
-//! boundary.
+//! would cost on the modeled cluster's wire — always the *ring*
+//! collective forms (`(n-1)·α + (n-1)/n·V·β` per all-gather), so
+//! traces are transport-invariant; the harness topologies differ only
+//! in real traffic shape (the hub star concentrates `2(n-1)` board
+//! volumes on one NIC, the ring carries `(n-1)` chunks on every link —
+//! [`collectives::CostModel::allgather_star`] quantifies the
+//! asymmetry). The engine choice threads through
+//! [`cluster::EngineKind`] → `SimCfg`/`RealTrainerCfg` → the CLI
+//! (`--engine threaded|lockstep`); the transport choice through
+//! [`cluster::TransportKind`] (`transport = "tcp" | "ring"` in TOML,
+//! `exdyna launch [--transport ring]` on the CLI — one process per
+//! rank over the [`cluster::net`] wire protocol, same-host or across
+//! hosts). `rust/tests/engine_parity.rs` proves all execution modes
+//! emit identical traces for a fixed seed — including across the
+//! process boundary on both socket topologies — and
+//! `rust/tests/transport_conformance.rs` runs one shared contract
+//! battery over every transport.
 //!
 //! Entry points: [`training::run_sim`] for simulated multi-rank training,
 //! [`training::RealTrainer`] for end-to-end model training,

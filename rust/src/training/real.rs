@@ -389,11 +389,14 @@ struct StepJob {
 /// Persistent rank workers for the threaded engine: one OS thread per
 /// rank, spawned once and kept alive across `step()` calls (ROADMAP
 /// open item — the old harness spawned scoped threads every step). Each
-/// worker owns its [`RankState`] and an endpoint on a shared long-lived
-/// [`LocalTransport`]; the harness feeds [`StepJob`]s and collects
-/// [`RankStepOut`]s over channels. A failed rank aborts the transport so
-/// its peers error out of the round instead of blocking, and the pool
-/// joins every worker on drop.
+/// worker owns its [`RankState`] and its rank's [`Transport`] handle —
+/// clones of one shared long-lived [`LocalTransport`] by default, or
+/// caller-supplied endpoints (TCP star/ring, in-process ring) via
+/// [`RealTrainer::with_transports`]; the aggregation code is
+/// transport-generic either way. The harness feeds [`StepJob`]s and
+/// collects [`RankStepOut`]s over channels. A failed rank aborts the
+/// transport so its peers error out of the round instead of blocking,
+/// and the pool joins every worker on drop.
 struct RankPool {
     jobs: Vec<mpsc::Sender<StepJob>>,
     outs: Vec<mpsc::Receiver<Result<RankStepOut>>>,
@@ -407,28 +410,29 @@ impl RankPool {
         workload: &Arc<Workload>,
         net: CostModel,
         cfg: RealTrainerCfg,
+        transports: Vec<Arc<dyn Transport>>,
     ) -> Self {
         let n = states.len();
-        let transport = Arc::new(LocalTransport::new(n));
+        debug_assert_eq!(transports.len(), n, "one transport handle per rank");
         let mut jobs = Vec::with_capacity(n);
         let mut outs = Vec::with_capacity(n);
         let mut handles = Vec::with_capacity(n);
-        for (rank, mut state) in states.into_iter().enumerate() {
+        for ((rank, mut state), transport) in
+            states.into_iter().enumerate().zip(transports.into_iter())
+        {
             let (job_tx, job_rx) = mpsc::channel::<StepJob>();
             let (out_tx, out_rx) = mpsc::channel::<Result<RankStepOut>>();
             let rt = Arc::clone(rt);
             let workload = Arc::clone(workload);
-            let transport = Arc::clone(&transport);
             let handle = std::thread::Builder::new()
                 .name(format!("rank{rank}"))
                 .spawn(move || {
                     // a worker that panics (instead of returning Err)
                     // must still poison the transport, or its peers
                     // would block forever at the next rendezvous
-                    let _guard = crate::cluster::transport::AbortOnPanic(
-                        transport.as_ref() as &dyn Transport,
-                    );
-                    let ep = Endpoint::new(rank, transport.as_ref() as &dyn Transport);
+                    let _guard =
+                        crate::cluster::transport::AbortOnPanic(transport.as_ref());
+                    let ep = Endpoint::new(rank, transport.as_ref());
                     // reusable collective buffers, one set per worker,
                     // alive for the pool's whole lifetime
                     let mut scratch = RoundScratch::new();
@@ -531,11 +535,60 @@ pub struct RealTrainer {
 impl RealTrainer {
     /// Build a trainer: one sparsifier replica per rank from `make`.
     /// Under the threaded engine this also spawns the persistent rank
-    /// workers, which live until the trainer is dropped.
+    /// workers (over a shared [`LocalTransport`]), which live until the
+    /// trainer is dropped.
     pub fn new(
         rt: ModelRuntime,
         cfg: RealTrainerCfg,
         make: &dyn Fn(usize, usize) -> Result<Box<dyn Sparsifier>>,
+    ) -> Result<Self> {
+        Self::build(rt, cfg, make, None)
+    }
+
+    /// Like [`RealTrainer::new`], but the threaded rank workers run
+    /// over caller-supplied transports — entry `r` is the handle rank
+    /// `r` calls collectives on (e.g. a loopback TCP star/ring built by
+    /// [`crate::cluster::testing`], or clones of one in-process
+    /// transport). The aggregation path is transport-generic, so the
+    /// trace is bit-identical to the default local-transport run
+    /// (`rust/tests/trainer_integration.rs` pins this). The lock-step
+    /// engine has no rank workers to re-wire and is rejected.
+    pub fn with_transports(
+        rt: ModelRuntime,
+        cfg: RealTrainerCfg,
+        make: &dyn Fn(usize, usize) -> Result<Box<dyn Sparsifier>>,
+        transports: Vec<Arc<dyn Transport>>,
+    ) -> Result<Self> {
+        if cfg.engine == EngineKind::Lockstep {
+            return Err(Error::invalid(
+                "with_transports requires the threaded engine: the lock-step \
+                 path aggregates in place and never touches a transport",
+            ));
+        }
+        if transports.len() != cfg.n_ranks {
+            return Err(Error::invalid(format!(
+                "{} transport handles for {} ranks",
+                transports.len(),
+                cfg.n_ranks
+            )));
+        }
+        for (r, tp) in transports.iter().enumerate() {
+            if tp.n_ranks() != cfg.n_ranks {
+                return Err(Error::invalid(format!(
+                    "rank {r}'s transport spans {} ranks, config says {}",
+                    tp.n_ranks(),
+                    cfg.n_ranks
+                )));
+            }
+        }
+        Self::build(rt, cfg, make, Some(transports))
+    }
+
+    fn build(
+        rt: ModelRuntime,
+        cfg: RealTrainerCfg,
+        make: &dyn Fn(usize, usize) -> Result<Box<dyn Sparsifier>>,
+        transports: Option<Vec<Arc<dyn Transport>>>,
     ) -> Result<Self> {
         let n_params = rt.meta.n_params;
         let n_padded = rt.meta.n_padded;
@@ -571,7 +624,13 @@ impl RealTrainer {
         let ranks = match cfg.engine {
             EngineKind::Lockstep => EngineRanks::Inline(states),
             EngineKind::Threaded => {
-                EngineRanks::Pool(RankPool::spawn(states, &rt, &workload, net, cfg))
+                let transports = transports.unwrap_or_else(|| {
+                    let tp: Arc<dyn Transport> = Arc::new(LocalTransport::new(cfg.n_ranks));
+                    (0..cfg.n_ranks).map(|_| Arc::clone(&tp)).collect()
+                });
+                EngineRanks::Pool(RankPool::spawn(
+                    states, &rt, &workload, net, cfg, transports,
+                ))
             }
         };
         Ok(RealTrainer {

@@ -1,8 +1,9 @@
 //! Engine parity: the threaded worker/transport cluster engine, the
-//! legacy lock-step engine, AND the multi-process TCP launch path must
-//! produce identical traces for a fixed seed — while the threaded
-//! engine really runs one OS thread per rank and the TCP path really
-//! runs one process per rank over loopback sockets.
+//! legacy lock-step engine, AND the multi-process socket launch paths
+//! (hub-star `tcp` and chunked `ring`) must produce identical traces
+//! for a fixed seed — while the threaded engine really runs one OS
+//! thread per rank and the socket paths really run one process per rank
+//! over loopback.
 //!
 //! Also pins the empty-round regression: rounds where nothing is
 //! selected carry `f_ratio = NaN` and must not poison
@@ -194,20 +195,24 @@ fn parity_holds_under_link_degradation() {
     }
 }
 
-/// The acceptance test of the socket-transport subsystem: a single-host
-/// `launch` run (one OS process per rank over TCP loopback) must emit a
-/// merged trace bit-identical to both in-process engines on the same
-/// seed. `--ranks 3 --scale 0.01` makes the launcher resolve exactly the
-/// `preset("resnet18", 0.01, 3, 8)` config built below.
-#[test]
-fn tcp_multiprocess_trace_matches_local_and_lockstep() {
+/// Run a single-host `launch` (one OS process per rank over loopback
+/// sockets) with the given transport and return the merged trace rank 0
+/// wrote. `--ranks 3 --scale 0.01` makes the launcher resolve exactly
+/// the `preset("resnet18", 0.01, 3, 8)` config the in-process reference
+/// below builds.
+fn launch_multiprocess(transport: &str) -> Trace {
     let exe = env!("CARGO_BIN_EXE_exdyna");
-    let dir = std::env::temp_dir().join(format!("exdyna_tcp_parity_{}", std::process::id()));
+    let dir = std::env::temp_dir().join(format!(
+        "exdyna_{transport}_parity_{}",
+        std::process::id()
+    ));
     std::fs::create_dir_all(&dir).unwrap();
-    let out = dir.join("tcp_trace.csv");
+    let out = dir.join("trace.csv");
     let output = std::process::Command::new(exe)
         .args([
             "launch",
+            "--transport",
+            transport,
             "--ranks",
             "3",
             "--preset",
@@ -231,15 +236,18 @@ fn tcp_multiprocess_trace_matches_local_and_lockstep() {
         .expect("failed to spawn the single-host launcher");
     assert!(
         output.status.success(),
-        "launch failed (exit {:?})\nstdout:\n{}\nstderr:\n{}",
+        "launch --transport {transport} failed (exit {:?})\nstdout:\n{}\nstderr:\n{}",
         output.status.code(),
         String::from_utf8_lossy(&output.stdout),
         String::from_utf8_lossy(&output.stderr)
     );
-    let tcp = Trace::read_csv(&out).expect("rank 0 must have written the merged trace");
-    assert_eq!(tcp.records.len(), 8);
+    let trace = Trace::read_csv(&out).expect("rank 0 must have written the merged trace");
+    std::fs::remove_dir_all(dir).ok();
+    trace
+}
 
-    // the identical experiment, in-process, on both engines
+/// The in-process reference pair for [`launch_multiprocess`]'s config.
+fn reference_traces() -> (Trace, Trace) {
     let mut cfg = exdyna::config::preset("resnet18", 0.01, 3, 8).unwrap();
     cfg.sim.seed = 17;
     let gen = SynthGen::new(cfg.model.clone(), 3, cfg.sim.rho, cfg.sim.seed, cfg.sim.exact_gen);
@@ -248,10 +256,34 @@ fn tcp_multiprocess_trace_matches_local_and_lockstep() {
     let lock = run_sim(&gen, factory.as_ref(), &cfg.sim).unwrap();
     cfg.sim.engine = EngineKind::Threaded;
     let thr = run_sim(&gen, factory.as_ref(), &cfg.sim).unwrap();
+    (lock, thr)
+}
 
+/// The acceptance test of the socket-transport subsystem: a single-host
+/// `launch` run over the hub-star TCP transport must emit a merged
+/// trace bit-identical to both in-process engines on the same seed.
+#[test]
+fn tcp_multiprocess_trace_matches_local_and_lockstep() {
+    let tcp = launch_multiprocess("tcp");
+    assert_eq!(tcp.records.len(), 8);
+    let (lock, thr) = reference_traces();
     assert_traces_identical(&tcp, &lock, "tcp-multiprocess vs lockstep");
     assert_traces_identical(&tcp, &thr, "tcp-multiprocess vs threaded");
-    std::fs::remove_dir_all(dir).ok();
+}
+
+/// Same acceptance bar for the ring transport (ISSUE 4): a real
+/// multi-process loopback *ring* run — `n - 1` forwarded chunks per
+/// rank instead of a hub star — must stay bit-exact against both
+/// in-process engines. The modeled α–β clock charges ring collectives
+/// on every transport, so any trace difference here would mean the ring
+/// moved different *data*, not different modeled time.
+#[test]
+fn ring_multiprocess_trace_matches_local_and_lockstep() {
+    let ring = launch_multiprocess("ring");
+    assert_eq!(ring.records.len(), 8);
+    let (lock, thr) = reference_traces();
+    assert_traces_identical(&ring, &lock, "ring-multiprocess vs lockstep");
+    assert_traces_identical(&ring, &thr, "ring-multiprocess vs threaded");
 }
 
 #[test]

@@ -6,6 +6,8 @@
 //! the environment lacks them (stub runtime / no `make artifacts`); the
 //! simulated-trainer tests always run.
 
+use exdyna::cluster::testing::{ring_cluster, ring_local_cluster, tcp_cluster};
+use exdyna::cluster::Transport;
 use exdyna::coordinator::{ExDyna, ExDynaCfg};
 use exdyna::grad::synth::{DecayCfg, SynthGen, SynthModel};
 use exdyna::runtime::{pjrt_available, Engine, Manifest, ModelRuntime};
@@ -14,6 +16,8 @@ use exdyna::sparsifiers::make_sparsifier_factory;
 use exdyna::training::real::{RealTrainer, RealTrainerCfg, SelectBackend};
 use exdyna::training::sim::{run_sim, SimCfg};
 use exdyna::training::LrSchedule;
+use std::sync::Arc;
+use std::time::Duration;
 
 fn artifacts_dir() -> std::path::PathBuf {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -184,6 +188,80 @@ fn real_trainer_engines_walk_identical_trajectories() {
         // parallelizes reductions internally
         assert!((a.loss - b.loss).abs() < 1e-6, "t={}: {} vs {}", a.t, a.loss, b.loss);
     }
+}
+
+#[test]
+fn real_trainer_over_socket_and_ring_transports_matches_local() {
+    // ISSUE 4 satellite: RealTrainer's aggregation is transport-generic
+    // — run its persistent rank workers over loopback TCP star, TCP
+    // ring and the in-process ring, and pin each trace (and the final
+    // parameter vector) bit-exact against the default local-transport
+    // threaded engine. Skips loudly on the stub runtime.
+    if mlp_runtime().is_none() {
+        return;
+    }
+    let n = 4;
+    let run = |transports: Option<Vec<Arc<dyn Transport>>>| {
+        let cfg = trainer_cfg(8, SelectBackend::Host);
+        let factory =
+            make_sparsifier_factory("exdyna", 0.01, 0.004, ExDynaCfg::default_for(n)).unwrap();
+        let mut tr = match transports {
+            None => RealTrainer::new(mlp_runtime().unwrap(), cfg, factory.as_ref()).unwrap(),
+            Some(t) => {
+                RealTrainer::with_transports(mlp_runtime().unwrap(), cfg, factory.as_ref(), t)
+                    .unwrap()
+            }
+        };
+        tr.run().unwrap();
+        tr
+    };
+    let reference = run(None);
+    let io = Duration::from_secs(60);
+    let clusters: Vec<(&str, Vec<Arc<dyn Transport>>)> = vec![
+        ("tcp", tcp_cluster(n, io).unwrap()),
+        ("ring", ring_cluster(n, io).unwrap()),
+        ("ring-local", ring_local_cluster(n, io)),
+    ];
+    for (name, tps) in clusters {
+        let tr = run(Some(tps));
+        assert_eq!(
+            reference.params, tr.params,
+            "{name}: parameter trajectories diverged"
+        );
+        for (a, b) in reference.trace.records.iter().zip(tr.trace.records.iter()) {
+            assert_eq!(a.k_actual, b.k_actual, "{name} t={}", a.t);
+            assert_eq!(a.k_sum, b.k_sum, "{name} t={}", a.t);
+            assert_eq!(a.delta.to_bits(), b.delta.to_bits(), "{name} t={}", a.t);
+            assert_eq!(
+                a.global_err.to_bits(),
+                b.global_err.to_bits(),
+                "{name} t={}",
+                a.t
+            );
+            assert_eq!(a.t_comm.to_bits(), b.t_comm.to_bits(), "{name} t={}", a.t);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{name} t={}", a.t);
+        }
+    }
+    // misuse is rejected up front: wrong handle count, lock-step engine
+    let factory =
+        make_sparsifier_factory("exdyna", 0.01, 0.004, ExDynaCfg::default_for(n)).unwrap();
+    let bad = ring_local_cluster(n - 1, io);
+    assert!(RealTrainer::with_transports(
+        mlp_runtime().unwrap(),
+        trainer_cfg(4, SelectBackend::Host),
+        factory.as_ref(),
+        bad
+    )
+    .is_err());
+    let mut lock_cfg = trainer_cfg(4, SelectBackend::Host);
+    lock_cfg.engine = exdyna::cluster::EngineKind::Lockstep;
+    assert!(RealTrainer::with_transports(
+        mlp_runtime().unwrap(),
+        lock_cfg,
+        factory.as_ref(),
+        ring_local_cluster(n, io)
+    )
+    .is_err());
 }
 
 #[test]

@@ -1,0 +1,346 @@
+//! Transport conformance suite (ISSUE 4 satellite): one parameterized
+//! battery, instantiated for every [`Transport`] implementation —
+//! `LocalTransport` (shared board), `RingLocal` (in-process ring),
+//! `TcpTransport` (socket hub star) and `RingTransport` (socket ring) —
+//! so every future transport gets the full matrix for free by adding
+//! one builder line.
+//!
+//! The battery pins the `Transport` contract the engines rely on:
+//! * all-gathers return the *rank-indexed* board, stable over many
+//!   rounds (this doubles as the generation-counting check: a round's
+//!   values can never leak into a neighbor round without tripping it);
+//! * payload fidelity is bit-exact, including NaN bit patterns, empty
+//!   selections and mixed message kinds within one board;
+//! * payloads larger than any socket buffer still complete (the ring's
+//!   deadlock-freedom ordering, the star's fan-out buffering);
+//! * out-of-range / wrong-rank calls are typed errors;
+//! * a failed worker's `abort()` unblocks every peer with an error —
+//!   mid-round peer loss never deadlocks — and later calls fail fast;
+//! * double deposits are typed errors on shared-board transports;
+//! * the full `SimWorker` loop over the transport reproduces the
+//!   threaded engine's trace bit-exactly (deterministic fields).
+//!
+//! The true multi-process star/ring paths (one OS process per rank via
+//! `exdyna launch`) are pinned by `rust/tests/engine_parity.rs`; this
+//! suite covers the transport semantics in-process where every failure
+//! can be injected deterministically.
+
+use exdyna::cluster::testing::{local_cluster, ring_cluster, ring_local_cluster, tcp_cluster};
+use exdyna::cluster::{run_rank_on_transport, run_threaded, Endpoint, Message, Transport};
+use exdyna::coordinator::{ExDyna, ExDynaCfg, SelectOutput};
+use exdyna::error::Result;
+use exdyna::grad::synth::{DecayCfg, SynthGen, SynthModel};
+use exdyna::sparsifiers::Sparsifier;
+use exdyna::training::sim::SimCfg;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+type MkCluster = fn(usize) -> Vec<Arc<dyn Transport>>;
+
+fn mk_local(n: usize) -> Vec<Arc<dyn Transport>> {
+    local_cluster(n)
+}
+
+fn mk_ring_local(n: usize) -> Vec<Arc<dyn Transport>> {
+    ring_local_cluster(n, Duration::from_secs(20))
+}
+
+fn mk_tcp(n: usize) -> Vec<Arc<dyn Transport>> {
+    tcp_cluster(n, Duration::from_secs(20)).expect("loopback star must build")
+}
+
+fn mk_ring(n: usize) -> Vec<Arc<dyn Transport>> {
+    ring_cluster(n, Duration::from_secs(20)).expect("loopback ring must build")
+}
+
+/// Every transport under conformance, by name.
+const TRANSPORTS: &[(&str, MkCluster)] = &[
+    ("local", mk_local),
+    ("ring-local", mk_ring_local),
+    ("tcp", mk_tcp),
+    ("ring", mk_ring),
+];
+
+/// Run `f` once per rank on its own thread; panics propagate with the
+/// transport's name in the context.
+fn per_rank(name: &str, tps: Vec<Arc<dyn Transport>>, f: impl Fn(usize, &dyn Transport) + Send + Sync) {
+    let f = &f;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = tps
+            .iter()
+            .enumerate()
+            .map(|(rank, tp)| {
+                let tp = Arc::clone(tp);
+                scope.spawn(move || f(rank, tp.as_ref()))
+            })
+            .collect();
+        for (rank, h) in handles.into_iter().enumerate() {
+            if h.join().is_err() {
+                panic!("[{name}] rank {rank} worker panicked");
+            }
+        }
+    });
+}
+
+#[test]
+fn boards_are_rank_indexed_and_round_isolated() {
+    for &(name, mk) in TRANSPORTS {
+        for n in [1usize, 2, 4] {
+            let rounds = 25;
+            per_rank(name, mk(n), |rank, tp| {
+                let ep = Endpoint::new(rank, tp);
+                for round in 0..rounds {
+                    let mine = (rank * 1000 + round) as f64;
+                    let got = ep.allgather_f64(mine).unwrap();
+                    let want: Vec<f64> = (0..n).map(|r| (r * 1000 + round) as f64).collect();
+                    assert_eq!(got, want, "[{name}] n={n} rank {rank} round {round}");
+                }
+            });
+        }
+    }
+}
+
+#[test]
+fn payloads_roundtrip_bit_exactly_including_nan_and_empty() {
+    let nan_bits: u32 = 0x7FC0_1234; // payload-carrying NaN
+    for &(name, mk) in TRANSPORTS {
+        let n = 3;
+        per_rank(name, mk(n), |rank, tp| {
+            let ep = Endpoint::new(rank, tp);
+            // selections with NaN values; rank 1 contributes an empty one
+            let sel = if rank == 1 {
+                SelectOutput::default()
+            } else {
+                SelectOutput {
+                    idx: vec![rank as u32, 100 + rank as u32],
+                    val: vec![rank as f32, f32::from_bits(nan_bits)],
+                }
+            };
+            let sels = ep.allgather_select(Arc::new(sel)).unwrap();
+            assert_eq!(sels.len(), n, "[{name}]");
+            assert!(sels[1].is_empty(), "[{name}] empty selection lost");
+            for r in [0usize, 2] {
+                assert_eq!(sels[r].idx, vec![r as u32, 100 + r as u32], "[{name}]");
+                assert_eq!(
+                    sels[r].val[1].to_bits(),
+                    nan_bits,
+                    "[{name}] NaN payload must survive bit-exactly"
+                );
+            }
+            // dense floats, including an empty vector
+            let floats = ep
+                .allgather_floats(Arc::new(if rank == 2 {
+                    Vec::new()
+                } else {
+                    vec![rank as f32; 4]
+                }))
+                .unwrap();
+            assert_eq!(*floats[0], vec![0.0f32; 4], "[{name}]");
+            assert!(floats[2].is_empty(), "[{name}]");
+            // NaN scalar metadata
+            let got = ep
+                .allgather_f64_fold(f64::NAN, 0usize, |acc, x| acc + x.is_nan() as usize)
+                .unwrap();
+            assert_eq!(got, n, "[{name}] NaN scalars must survive");
+        });
+    }
+}
+
+#[test]
+fn mixed_message_kinds_within_one_board_are_preserved() {
+    for &(name, mk) in TRANSPORTS {
+        let n = 3;
+        per_rank(name, mk(n), |rank, tp| {
+            let msg = match rank {
+                0 => Message::Scalar(42.0),
+                1 => Message::Floats(Arc::new(vec![1.5, -2.5])),
+                _ => Message::Selection(Arc::new(SelectOutput {
+                    idx: vec![7],
+                    val: vec![0.25],
+                })),
+            };
+            let board = tp.allgather(rank, msg).unwrap();
+            assert_eq!(board.len(), n, "[{name}]");
+            assert_eq!(board[0], Message::Scalar(42.0), "[{name}]");
+            match &board[1] {
+                Message::Floats(v) => assert_eq!(**v, vec![1.5, -2.5], "[{name}]"),
+                other => panic!("[{name}] wrong envelope {other:?}"),
+            }
+            match &board[2] {
+                Message::Selection(s) => assert_eq!(s.idx, vec![7], "[{name}]"),
+                other => panic!("[{name}] wrong envelope {other:?}"),
+            }
+        });
+    }
+}
+
+#[test]
+fn oversized_payloads_complete_without_deadlock() {
+    // 512 KB per rank exceeds default socket buffers: the star must
+    // buffer its fan-out, the ring must exploit its receive-first
+    // ordering — and neither may corrupt the data
+    let k = 128 * 1024;
+    for &(name, mk) in TRANSPORTS {
+        let n = 3;
+        per_rank(name, mk(n), |rank, tp| {
+            let ep = Endpoint::new(rank, tp);
+            for round in 0..2 {
+                let mine = Arc::new(vec![(rank * 10 + round) as f32; k]);
+                let got = ep.allgather_floats(mine).unwrap();
+                for (r, v) in got.iter().enumerate() {
+                    assert_eq!(v.len(), k, "[{name}]");
+                    assert_eq!(v[0], (r * 10 + round) as f32, "[{name}] round {round}");
+                    assert_eq!(v[k - 1], (r * 10 + round) as f32, "[{name}] round {round}");
+                }
+            }
+        });
+    }
+}
+
+#[test]
+fn out_of_range_rank_is_a_typed_error() {
+    for &(name, mk) in TRANSPORTS {
+        let n = 2;
+        let tps = mk(n);
+        // an impossible rank is rejected on every handle without
+        // touching the cluster (no peer participates in this call)
+        for (i, tp) in tps.iter().enumerate() {
+            let err = tp.allgather(n + 5, Message::Scalar(0.0));
+            assert!(err.is_err(), "[{name}] handle {i} must reject rank {}", n + 5);
+        }
+        // the cluster still works afterwards
+        per_rank(name, tps, |rank, tp| {
+            let ep = Endpoint::new(rank, tp);
+            assert_eq!(ep.allgather_f64(rank as f64).unwrap().len(), n);
+        });
+    }
+}
+
+#[test]
+fn abort_unblocks_all_peers_and_poisons_later_calls() {
+    for &(name, mk) in TRANSPORTS {
+        let n = 3;
+        let tps = mk(n);
+        let started = Instant::now();
+        // ranks 0 and 1 enter the round; rank 2 fails instead of
+        // depositing. Workers follow the engine contract: an erroring
+        // rank aborts its transport so the failure propagates.
+        let mut handles = Vec::new();
+        for rank in 0..2 {
+            let tp = Arc::clone(&tps[rank]);
+            handles.push(std::thread::spawn(move || {
+                let res = tp.allgather(rank, Message::Scalar(rank as f64));
+                if res.is_err() {
+                    tp.abort();
+                }
+                res.map(|_| ())
+            }));
+        }
+        std::thread::sleep(Duration::from_millis(100));
+        tps[2].abort();
+        for (rank, h) in handles.into_iter().enumerate() {
+            let res = h.join().unwrap();
+            assert!(
+                res.is_err(),
+                "[{name}] rank {rank} must error out of the broken round"
+            );
+        }
+        // bounded: abort propagation must beat the 20 s io deadline by a
+        // wide margin (EOF / condvar / channel wake-ups are immediate)
+        assert!(
+            started.elapsed() < Duration::from_secs(15),
+            "[{name}] abort took {:?} — deadline-scale wait means propagation failed",
+            started.elapsed()
+        );
+        // every surviving handle fails fast now
+        let err = tps[2].allgather(2, Message::Scalar(2.0));
+        assert!(err.is_err(), "[{name}] aborted handle must fail fast");
+    }
+}
+
+#[test]
+fn double_deposit_is_rejected_on_shared_board_transports() {
+    // shared-board semantics (LocalTransport): a buggy second deposit
+    // for the same (rank, round) is a typed invariant error in every
+    // build profile. Socket transports cannot express this misuse —
+    // each process speaks for exactly one rank and a second call is the
+    // next round by construction (their wrong-rank rejection is the
+    // equivalent guard, covered above).
+    let tps = local_cluster(2);
+    let tp0 = Arc::clone(&tps[0]);
+    let blocked = std::thread::spawn(move || tp0.allgather(0, Message::Scalar(1.0)));
+    std::thread::sleep(Duration::from_millis(30));
+    let err = tps[0]
+        .allgather(0, Message::Scalar(2.0))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("double-deposited"), "{err}");
+    tps[0].abort();
+    assert!(blocked.join().unwrap().is_err());
+}
+
+/// The end-to-end half of the suite: the unchanged `SimWorker` loop over
+/// each transport must reproduce the threaded engine's trace bit-exactly
+/// on every deterministic field — the conformance form of the
+/// `engine_parity` guarantee.
+#[test]
+fn simworker_traces_are_bit_exact_on_every_transport() {
+    let n = 3;
+    let model = SynthModel::profile("conf", 48_000, 6, 5, DecayCfg::default());
+    let gen = SynthGen::new(model, n, 0.5, 29, false);
+    let cfg = SimCfg {
+        n_ranks: n,
+        iters: 6,
+        compute_s: 0.01,
+        ..Default::default()
+    };
+    let mk_sp = |n_g: usize, nr: usize| -> Result<Box<dyn Sparsifier>> {
+        Ok(Box::new(ExDyna::new(n_g, nr, ExDynaCfg::default_for(nr))?))
+    };
+    let reference = run_threaded(&gen, &mk_sp, &cfg).unwrap();
+    for &(name, mk) in TRANSPORTS {
+        let tps = mk(n);
+        let traces: Vec<_> = std::thread::scope(|scope| {
+            let gen = &gen;
+            let cfg = &cfg;
+            let handles: Vec<_> = tps
+                .iter()
+                .enumerate()
+                .map(|(rank, tp)| {
+                    let tp = Arc::clone(tp);
+                    scope.spawn(move || {
+                        run_rank_on_transport(gen, &mk_sp, cfg, rank, tp.as_ref())
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap().unwrap())
+                .collect()
+        });
+        for (rank, trace) in traces.iter().enumerate() {
+            assert_eq!(
+                trace.records.len(),
+                reference.records.len(),
+                "[{name}] rank {rank}"
+            );
+            for (a, b) in trace.records.iter().zip(reference.records.iter()) {
+                let ctx = format!("[{name}] rank {rank} t={}", a.t);
+                assert_eq!(a.k_actual, b.k_actual, "{ctx}: k_actual");
+                assert_eq!(a.k_sum, b.k_sum, "{ctx}: k_sum");
+                assert_eq!(a.delta.to_bits(), b.delta.to_bits(), "{ctx}: delta");
+                assert_eq!(
+                    a.global_err.to_bits(),
+                    b.global_err.to_bits(),
+                    "{ctx}: global_err"
+                );
+                assert_eq!(a.t_comm.to_bits(), b.t_comm.to_bits(), "{ctx}: t_comm");
+                assert_eq!(
+                    a.t_compute.to_bits(),
+                    b.t_compute.to_bits(),
+                    "{ctx}: t_compute"
+                );
+            }
+        }
+    }
+}
