@@ -5,13 +5,19 @@
 //! ranks, run on ALL FOUR execution modes — lock-step (single thread),
 //! threaded (one OS thread per rank), and tcp/ring (one OS *process*
 //! per rank over loopback sockets, hub-star vs chunked ring, via
-//! `exdyna launch` single-host mode). Reports, per scale:
+//! `exdyna launch` single-host mode) — plus a `threaded+pipe` column
+//! (ISSUE 5): the same threaded run with step-level pipelining on,
+//! whose modeled per-iteration time must be ≤ the additive clock on
+//! EVERY iteration (checked here) while the sparsification trajectory
+//! stays bit-identical. The pipeline on/off sweep is also written to
+//! `BENCH_pipeline_fig8.json`. Reports, per scale:
 //! * host wall-clock of the whole run per mode and the
 //!   lockstep/threaded speedup ratio;
 //! * identical-trace check (all modes must agree bit-exactly on the
 //!   sparsification trajectory — tested properly in
 //!   `rust/tests/engine_parity.rs`);
-//! * simulated per-iteration time (the paper's scalability axis).
+//! * simulated per-iteration time (the paper's scalability axis),
+//!   additive vs overlapped.
 //!
 //! Part 2 (when PJRT + artifacts are available): the original held-out
 //! loss vs simulated time curves for the real MLP across scales.
@@ -42,6 +48,7 @@ fn main() -> exdyna::Result<()> {
     let launcher = env!("CARGO_BIN_EXE_exdyna");
     let tmp = std::env::temp_dir().join(format!("exdyna_fig8_{}", std::process::id()));
     std::fs::create_dir_all(&tmp)?;
+    let mut pipe_json = Vec::new();
     for ranks in [2usize, 4, 8, 16] {
         let cfg = preset("resnet152", scale, ranks, iters)?;
         let gen = SynthGen::new(cfg.model.clone(), ranks, cfg.sim.rho, cfg.sim.seed, false);
@@ -62,6 +69,62 @@ fn main() -> exdyna::Result<()> {
                 trace.mean_density_tail(iters / 3)
             );
             traces.push(trace);
+        }
+        // pipeline ON: same threaded run over split-phase rounds; the
+        // trajectory must be bit-identical and the overlapped clock must
+        // beat (or tie) the additive one on EVERY iteration
+        {
+            let mut sim = cfg.sim;
+            sim.engine = EngineKind::Threaded;
+            sim.pipeline = true;
+            let st = Instant::now();
+            let piped = run_sim(&gen, factory.as_ref(), &sim)?;
+            let pipe_wall = st.elapsed().as_secs_f64();
+            let (_, _, _, tot_pipe) = piped.mean_breakdown();
+            let (_, _, _, tot_add) = traces[1].mean_breakdown();
+            let mut exposed_sum = 0.0;
+            let mut comm_sum = 0.0;
+            for (on, off) in piped.records.iter().zip(traces[1].records.iter()) {
+                assert_eq!(
+                    on.k_actual, off.k_actual,
+                    "n={ranks} t={}: pipelining must not change selection semantics",
+                    on.t
+                );
+                assert_eq!(
+                    on.delta.to_bits(),
+                    off.delta.to_bits(),
+                    "n={ranks} t={}: pipelining must not change the threshold walk",
+                    on.t
+                );
+                let additive = on.t_compute + on.t_select + on.t_comm;
+                assert!(
+                    on.t_total() <= additive,
+                    "n={ranks} t={}: overlapped {} > additive {}",
+                    on.t,
+                    on.t_total(),
+                    additive
+                );
+                exposed_sum += on.t_exposed_comm;
+                comm_sum += on.t_comm;
+            }
+            println!(
+                "{ranks},threaded+pipe,{:.3},{:.4},{:.6}",
+                pipe_wall,
+                tot_pipe,
+                piped.mean_density_tail(iters / 3)
+            );
+            eprintln!(
+                "# n = {ranks:<3} pipeline clock: additive {tot_add:.4}s/iter -> overlapped \
+                 {tot_pipe:.4}s/iter (comm exposed {:.1}%)",
+                100.0 * exposed_sum / comm_sum.max(1e-12)
+            );
+            pipe_json.push(format!(
+                "    {{\"ranks\": {ranks}, \"sim_iter_s_additive\": {tot_add:.6}, \
+                 \"sim_iter_s_overlapped\": {tot_pipe:.6}, \"mean_exposed_comm_s\": {:.6}, \
+                 \"mean_comm_s\": {:.6}, \"wall_s_pipelined\": {pipe_wall:.3}}}",
+                exposed_sum / piped.records.len().max(1) as f64,
+                comm_sum / piped.records.len().max(1) as f64,
+            ));
         }
         // tcp star + ring: the same run as one process per rank over
         // loopback (single-host launch); wall-clock includes process
@@ -132,6 +195,15 @@ fn main() -> exdyna::Result<()> {
         );
     }
     std::fs::remove_dir_all(&tmp).ok();
+    let json = format!(
+        "{{\n  \"bench\": \"fig8_scaleout\",\n  \"iters\": {iters},\n  \"scale\": {scale},\n  \
+         \"rows\": [\n{}\n  ]\n}}\n",
+        pipe_json.join(",\n")
+    );
+    match std::fs::write("BENCH_pipeline_fig8.json", &json) {
+        Ok(()) => eprintln!("# pipeline on/off sweep -> BENCH_pipeline_fig8.json"),
+        Err(e) => eprintln!("# could not write BENCH_pipeline_fig8.json: {e}"),
+    }
 
     // --- Part 2: real-model convergence by scale (needs PJRT + artifacts)
     if !pjrt_available() {

@@ -15,6 +15,15 @@
 //!   Arc-shared board this is ~0 for the local transport instead of the
 //!   old O(n²·k) per-round board clones.
 //!
+//! Every (transport, n) pair is measured twice — blocking rounds and
+//! split-phase *pipelined* rounds (ISSUE 5): the pipelined loop starts
+//! each collective, runs a fixed synthetic compute burn in the flight
+//! window, and finishes — both loops do the identical compute, so the
+//! µs/round delta is exactly the communication time the split phase
+//! hides. The table gains a `+pipe` row per pair, and the whole sweep
+//! is also emitted machine-readably to `BENCH_pipeline.json` so the
+//! perf trajectory is tracked from this PR onward.
+//!
 //! A second table prints the *modeled* star-vs-ring wire asymmetry for
 //! the same per-rank payload — the α·(n−1) + β·(n−1)/n·V ring form the
 //! traces charge vs the hub-star shape, and the per-link byte volumes
@@ -23,9 +32,10 @@
 //! Run: `cargo bench --bench transport_hotpath [-- --quick]`
 
 use exdyna::cluster::testing::{local_cluster, ring_cluster, ring_local_cluster, tcp_cluster};
-use exdyna::cluster::{Endpoint, Transport};
+use exdyna::cluster::{Endpoint, Message, Transport};
 use exdyna::collectives::{
-    allgather_sparse_rk, sparse_allreduce_union_rk, CostModel, RoundScratch,
+    allgather_sparse_finish_rk, allgather_sparse_rk, sparse_allreduce_union_finish_rk,
+    sparse_allreduce_union_rk, sparse_allreduce_union_start_rk, CostModel, RoundScratch,
 };
 use exdyna::coordinator::SelectOutput;
 use std::alloc::{GlobalAlloc, Layout, System};
@@ -58,14 +68,34 @@ static COUNTER: CountingAlloc = CountingAlloc;
 
 const K_PER_RANK: usize = 512;
 
+/// Iterations of the synthetic per-round compute burn. Both loop shapes
+/// run it identically, so the blocking-vs-pipelined µs delta isolates
+/// the communication the split phase hides.
+const BURN_ITERS: usize = 4;
+
+/// Fixed rank-local compute: a few passes over the accumulator. Returns
+/// a sink value so the work cannot be optimized away.
+fn compute_burn(acc: &[f32]) -> f32 {
+    let mut sink = 0.0f32;
+    for pass in 0..BURN_ITERS {
+        for (i, v) in acc.iter().enumerate() {
+            sink += v * ((i + pass) as f32);
+        }
+    }
+    sink
+}
+
 /// One rank's steady loop; rank 0 opens/closes the counting window and
-/// measures the steady wall time.
+/// measures the steady wall time. `pipeline` selects blocking rounds
+/// (compute after the collectives) or split-phase rounds (compute in
+/// the flight windows) — the per-round work is identical either way.
 fn rank_loop(
     rank: usize,
     n: usize,
     tp: &dyn Transport,
     warmup: usize,
     steady: usize,
+    pipeline: bool,
 ) -> Duration {
     let ep = Endpoint::new(rank, tp);
     let net = CostModel::paper_testbed(n);
@@ -74,34 +104,57 @@ fn rank_loop(
         val: vec![0.25f32; K_PER_RANK],
     });
     let acc = vec![0.5f32; n * K_PER_RANK];
-    let mut scratch = RoundScratch::new();
+    let mut scratch = [RoundScratch::new(), RoundScratch::new()];
+    let mut sink = 0.0f32;
     let mut started = Instant::now();
     for round in 0..(warmup + steady) {
         if rank == 0 && round == warmup {
             ENABLED.store(true, Ordering::SeqCst);
             started = Instant::now();
         }
-        allgather_sparse_rk(
-            &ep,
-            Arc::clone(&sel),
-            &net,
-            &mut scratch.union_idx,
-            &mut scratch.k_by_rank,
-        )
-        .unwrap();
-        sparse_allreduce_union_rk(
-            &ep,
-            &acc,
-            &scratch.union_idx,
-            &net,
-            &mut scratch.send,
-            &mut scratch.reduced,
-        )
-        .unwrap();
+        let s = &mut scratch[round % 2];
+        if pipeline {
+            let pending = ep
+                .allgather_start(Message::Selection(Arc::clone(&sel)))
+                .unwrap();
+            sink += compute_burn(&acc);
+            let board = pending.finish().unwrap();
+            allgather_sparse_finish_rk(&board, &net, &mut s.union_idx, &mut s.k_by_rank)
+                .unwrap();
+            drop(board);
+            let pending =
+                sparse_allreduce_union_start_rk(&ep, &acc, &s.union_idx, &mut s.send).unwrap();
+            sink += compute_burn(&acc);
+            let board = pending.finish().unwrap();
+            sparse_allreduce_union_finish_rk(&board, s.union_idx.len(), &net, &mut s.reduced)
+                .unwrap();
+            drop(board);
+        } else {
+            allgather_sparse_rk(
+                &ep,
+                Arc::clone(&sel),
+                &net,
+                &mut s.union_idx,
+                &mut s.k_by_rank,
+            )
+            .unwrap();
+            sink += compute_burn(&acc);
+            sparse_allreduce_union_rk(
+                &ep,
+                &acc,
+                &s.union_idx,
+                &net,
+                &mut s.send,
+                &mut s.reduced,
+            )
+            .unwrap();
+            sink += compute_burn(&acc);
+        }
         ep.allgather_f64_fold(rank as f64, 0.0f64, |a, x| a.max(x))
             .unwrap();
     }
     let steady_wall = started.elapsed();
+    assert!(sink.is_finite());
     if rank == 0 {
         ENABLED.store(false, Ordering::SeqCst);
     }
@@ -110,7 +163,7 @@ fn rank_loop(
 }
 
 struct Row {
-    mode: &'static str,
+    mode: String,
     n: usize,
     steady: usize,
     wall: Duration,
@@ -119,14 +172,17 @@ struct Row {
 }
 
 impl Row {
+    fn us_per_round(&self) -> f64 {
+        self.wall.as_secs_f64() * 1e6 / self.steady as f64
+    }
+
     fn print(&self) {
-        let us = self.wall.as_secs_f64() * 1e6 / self.steady as f64;
         println!(
             "{},{},{},{:.1},{:.1},{:.1}",
             self.mode,
             self.n,
             self.steady,
-            us,
+            self.us_per_round(),
             self.allocs as f64 / self.steady as f64,
             self.bytes as f64 / self.steady as f64,
         );
@@ -136,10 +192,11 @@ impl Row {
 /// Run the steady loop on a pre-built cluster of any transport; rank 0
 /// owns the counting window and the wall clock.
 fn bench_cluster(
-    mode: &'static str,
+    mode: String,
     tps: Vec<Arc<dyn Transport>>,
     warmup: usize,
     steady: usize,
+    pipeline: bool,
 ) -> Row {
     let n = tps.len();
     ENABLED.store(false, Ordering::SeqCst);
@@ -148,7 +205,7 @@ fn bench_cluster(
     let mut handles = Vec::with_capacity(n);
     for (rank, tp) in tps.into_iter().enumerate() {
         handles.push(std::thread::spawn(move || {
-            rank_loop(rank, n, tp.as_ref(), warmup, steady)
+            rank_loop(rank, n, tp.as_ref(), warmup, steady, pipeline)
         }));
     }
     let mut wall = Duration::ZERO;
@@ -175,19 +232,64 @@ fn main() {
     println!(
         "# transport hot path: k = {K_PER_RANK}/rank selection + union all-reduce + scalar round"
     );
+    println!("# each round also runs a fixed synthetic compute burn ({BURN_ITERS} accumulator passes);");
+    println!("# '+pipe' rows run it inside the split-phase flight windows, so the delta to the");
+    println!("# plain row is the communication time the pipeline hides");
     println!("# (allocs/bytes are per whole-cluster round, counted after warm-up)");
     println!("mode,ranks,rounds,us_per_round,allocs_per_round,bytes_per_round");
-    for n in [2usize, 8, 16] {
-        bench_cluster("local", local_cluster(n), 20, local_rounds).print();
+    type Builder = Box<dyn Fn(usize) -> Vec<Arc<dyn Transport>>>;
+    let modes: Vec<(&str, usize, usize, Builder)> = vec![
+        ("local", 20, local_rounds, Box::new(local_cluster)),
+        (
+            "ring-local",
+            20,
+            local_rounds,
+            Box::new(move |n| ring_local_cluster(n, io)),
+        ),
+        (
+            "tcp",
+            10,
+            socket_rounds,
+            Box::new(move |n| tcp_cluster(n, io).unwrap()),
+        ),
+        (
+            "ring",
+            10,
+            socket_rounds,
+            Box::new(move |n| ring_cluster(n, io).unwrap()),
+        ),
+    ];
+    let mut json_rows = Vec::new();
+    for (mode, warmup, rounds, mk) in &modes {
+        for n in [2usize, 8, 16] {
+            let blocking = bench_cluster(mode.to_string(), mk(n), *warmup, *rounds, false);
+            blocking.print();
+            let piped = bench_cluster(format!("{mode}+pipe"), mk(n), *warmup, *rounds, true);
+            piped.print();
+            let hidden_us = (blocking.us_per_round() - piped.us_per_round()).max(0.0);
+            json_rows.push(format!(
+                "    {{\"mode\": \"{mode}\", \"ranks\": {n}, \"rounds\": {rounds}, \
+                 \"us_per_round_blocking\": {:.3}, \"us_per_round_pipelined\": {:.3}, \
+                 \"hidden_us_per_round\": {:.3}, \"allocs_per_round_pipelined\": {:.3}, \
+                 \"bytes_per_round_pipelined\": {:.3}}}",
+                blocking.us_per_round(),
+                piped.us_per_round(),
+                hidden_us,
+                piped.allocs as f64 / piped.steady as f64,
+                piped.bytes as f64 / piped.steady as f64,
+            ));
+        }
     }
-    for n in [2usize, 8, 16] {
-        bench_cluster("ring-local", ring_local_cluster(n, io), 20, local_rounds).print();
-    }
-    for n in [2usize, 8, 16] {
-        bench_cluster("tcp", tcp_cluster(n, io).unwrap(), 10, socket_rounds).print();
-    }
-    for n in [2usize, 8, 16] {
-        bench_cluster("ring", ring_cluster(n, io).unwrap(), 10, socket_rounds).print();
+    // machine-readable pipeline trajectory (µs/round and hidden-vs-
+    // exposed time per transport × scale), tracked from this PR onward
+    let json = format!(
+        "{{\n  \"bench\": \"transport_hotpath\",\n  \"k_per_rank\": {K_PER_RANK},\n  \
+         \"burn_iters\": {BURN_ITERS},\n  \"quick\": {quick},\n  \"rows\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n")
+    );
+    match std::fs::write("BENCH_pipeline.json", &json) {
+        Ok(()) => eprintln!("# pipeline sweep -> BENCH_pipeline.json"),
+        Err(e) => eprintln!("# could not write BENCH_pipeline.json: {e}"),
     }
 
     // modeled star-vs-ring wire asymmetry for the same payload: what

@@ -27,6 +27,18 @@
 //! chunked ring (every link then carries the same `n-1` chunks per
 //! round instead of the hub carrying everything twice over).
 //!
+//! Add `--pipeline` to either form (and to this example, or `sim`) to
+//! overlap iteration t+1's compute with iteration t's collective:
+//! rounds run split-phase (the contribution goes on the wire at start,
+//! the board lands at finish) and the modeled clock charges
+//! `max(compute, comm)` per overlapped pair instead of the sum —
+//! selection semantics stay bit-identical, only the clock fields
+//! change:
+//!
+//! ```text
+//! cargo run --release -- launch --world-size 4 --pipeline --iters 100 --out trace.csv
+//! ```
+//!
 //! The merged trace is bit-identical to `sim --engine threaded` and
 //! `sim --engine lockstep` on the same seed — on both socket
 //! topologies (`rust/tests/engine_parity.rs` enforces this) — so every
@@ -49,20 +61,26 @@ fn main() -> exdyna::Result<()> {
         OptSpec { name: "iters", takes_value: true, help: "iterations per point (default 60)" },
         OptSpec { name: "ranks", takes_value: true, help: "comma list (default 2,4,8,16)" },
         OptSpec { name: "engine", takes_value: true, help: "cluster engine: threaded|lockstep (default threaded)" },
+        OptSpec { name: "pipeline", takes_value: false, help: "overlap iteration t+1's compute with iteration t's collective" },
     ];
     let args = Args::parse(&argv, &specs)?;
     let scale: f64 = args.parse_or("scale", 0.05)?;
     let iters: usize = args.parse_or("iters", 60)?;
     let rank_list: Vec<usize> = args.list_or("ranks", &[2, 4, 8, 16])?;
     let engine = exdyna::cluster::EngineKind::parse(&args.str_or("engine", "threaded"))?;
+    let pipeline = args.flag("pipeline");
 
-    println!("== scale-out sweep: inception-v4 profile (scale {scale}), {iters} iters/point, {engine} engine ==\n");
+    println!(
+        "== scale-out sweep: inception-v4 profile (scale {scale}), {iters} iters/point, {engine} engine{} ==\n",
+        if pipeline { ", pipelined" } else { "" }
+    );
     let mut table = Table::new(&[
         "ranks", "sparsifier", "density", "f(t)", "select_ms", "comm_ms", "total_ms", "vs dense",
     ]);
     for &n in &rank_list {
         let mut cfg = preset("inception-v4", scale, n, iters)?;
         cfg.sim.engine = engine;
+        cfg.sim.pipeline = pipeline;
         let gen = SynthGen::new(cfg.model.clone(), n, cfg.sim.rho, cfg.sim.seed, false);
         let mut dense_total = f64::NAN;
         for sp in ["dense", "exdyna", "hard-threshold", "topk"] {

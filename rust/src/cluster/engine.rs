@@ -73,6 +73,7 @@ pub fn run_rank_on_transport(
     let sp = make_sparsifier(gen.n_g(), n)?;
     let name = sp.name();
     let mut trace = Trace::new(&name, &gen.model.name, n);
+    trace.pipelined = cfg.pipeline;
     // a panicking worker must poison the transport too, not just an Err
     let _guard = crate::cluster::transport::AbortOnPanic(transport);
     let ep = Endpoint::new(rank, transport);
@@ -116,6 +117,7 @@ pub fn run_threaded_with_stats(
         .collect::<Result<_>>()?;
     let name = sparsifiers[0].name();
     let mut trace = Trace::new(&name, &gen.model.name, n);
+    trace.pipelined = cfg.pipeline;
 
     let transport = LocalTransport::new(n);
     let results: Vec<Result<(std::thread::ThreadId, Vec<IterRecord>)>> =

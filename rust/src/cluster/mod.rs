@@ -9,6 +9,13 @@
 //!   `Arc`-shared and an all-gather returns the whole rank-indexed board
 //!   as one shared `Arc<[Message]>` slab, so fanning a round out to n
 //!   ranks is O(n) refcount bumps rather than O(n²·k) element copies.
+//!   Every all-gather also exists split-phase ([`PendingRound`]:
+//!   nonblocking start with the contribution genuinely in flight,
+//!   blocking generation-stamped finish, abort-aware and
+//!   deadline-bounded) — the substrate of step-level pipelining
+//!   (`pipeline = true`), where [`SimWorker`] overlaps iteration t+1's
+//!   compute with iteration t's collective and the clock charges
+//!   `max(compute, comm)` per pair.
 //!   The α–β [`CostModel`] independently charges what the operation
 //!   would cost on the modeled wire (padded payloads, every rank's
 //!   contribution) — the modeled clock always bills the real byte
@@ -76,7 +83,7 @@ pub use engine::{
 };
 pub use net::{NetCfg, RingTransport, TcpTransport};
 pub use ring_local::RingLocal;
-pub use transport::{Endpoint, LocalTransport, Message, Transport};
+pub use transport::{Endpoint, LocalTransport, Message, PendingRound, RoundToken, Transport};
 pub use worker::SimWorker;
 
 use crate::error::{Error, Result};

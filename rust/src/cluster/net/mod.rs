@@ -16,7 +16,10 @@
 //! * [`tcp`] — [`TcpTransport`]: hub-mediated all-gather (collect n
 //!   generation-stamped contributions, broadcast the rank-indexed
 //!   board) with read/write timeouts and abort poisoning that closes
-//!   sockets so peers error out instead of hanging.
+//!   sockets so peers error out instead of hanging. Split-phase rounds
+//!   put the client's contribution on the wire at start and drain the
+//!   board at finish (the hub stashes its own message and collects at
+//!   finish — clients' bytes pile up in the kernel buffers meanwhile).
 //! * [`ring`] — [`RingTransport`]: chunked ring all-gather (every rank
 //!   forwards `n - 1` generation-stamped chunks to its right
 //!   neighbor), with the same deadline/abort semantics; rank 0 is only

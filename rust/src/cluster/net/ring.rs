@@ -33,6 +33,11 @@
 //! always has one rank draining its left link, which unblocks its left
 //! neighbor's write, and so on around the ring — progress is guaranteed
 //! for arbitrarily large messages, at worst serializing one hop chain.
+//! Split-phase rounds keep the same ordering: at start every
+//! non-coordinator rank writes its step-0 chunk eagerly (the overlap
+//! window is genuine transfer time), while rank 0 defers even that
+//! send to finish — it is the ring's designated drainer, so a cluster
+//! fully parked in its overlap windows still cannot write-deadlock.
 //!
 //! Steady-state reuse mirrors the PR 3 zero-copy work: one persistent
 //! encode and one decode buffer per transport (no per-frame `Vec`), the
@@ -56,7 +61,7 @@ use crate::cluster::net::codec::{
     Frame,
 };
 use crate::cluster::net::handshake::NetCfg;
-use crate::cluster::transport::{Message, Transport};
+use crate::cluster::transport::{Message, RoundToken, Transport};
 use crate::error::{Error, Result};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -85,6 +90,9 @@ struct RingState {
     enc_buf: Vec<u8>,
     /// Persistent decode scratch for incoming hop frames.
     dec_buf: Vec<u8>,
+    /// `true` between a split-phase begin and its complete/abandon —
+    /// rejects double-starts (one outstanding round per rank).
+    pending: bool,
 }
 
 /// Ring transport for one process-local rank of an n-rank cluster.
@@ -451,6 +459,7 @@ impl RingTransport {
                 last: None,
                 enc_buf: Vec::new(),
                 dec_buf: Vec::new(),
+                pending: false,
             }),
             shutdown_handles: Vec::new(),
             poisoned: AtomicBool::new(false),
@@ -469,6 +478,7 @@ impl RingTransport {
                 last: None,
                 enc_buf: Vec::new(),
                 dec_buf: Vec::new(),
+                pending: false,
             }),
             shutdown_handles,
             poisoned: AtomicBool::new(false),
@@ -530,6 +540,12 @@ impl Transport for RingTransport {
     }
 
     fn allgather(&self, rank: usize, msg: Message) -> Result<Arc<[Message]>> {
+        // the blocking round is the split phases back to back
+        let token = self.allgather_begin(rank, msg)?;
+        self.allgather_complete(rank, token)
+    }
+
+    fn allgather_begin(&self, rank: usize, msg: Message) -> Result<RoundToken> {
         if rank != self.rank {
             return Err(Error::invalid(format!(
                 "this process's transport speaks for rank {}, not rank {rank}",
@@ -544,13 +560,74 @@ impl Transport for RingTransport {
             links,
             generation,
             slots,
+            enc_buf,
+            pending,
+            ..
+        } = &mut *guard;
+        if *pending {
+            return Err(Error::invariant(format!(
+                "rank {} double-started a split-phase ring round (round {} is \
+                 still in flight — finish or drop it first)",
+                self.rank, *generation
+            )));
+        }
+        let my_gen = *generation;
+        slots[rank] = Some(msg);
+        if let Some(links) = links.as_mut() {
+            if rank != 0 {
+                // every non-coordinator rank sends first within a step,
+                // so its step-0 chunk can go on the wire eagerly — the
+                // overlap window between begin and complete is genuine
+                // transfer time. Rank 0 must keep its receive-before-
+                // send ordering (see the module docs): if it also wrote
+                // eagerly, a cluster fully parked in its overlap windows
+                // could deadlock on full socket buffers with nobody
+                // draining.
+                send_step(links, enc_buf, slots, rank, my_gen, 0)?;
+            }
+        }
+        *pending = true;
+        Ok(RoundToken::deferred(my_gen))
+    }
+
+    fn allgather_complete(&self, rank: usize, token: RoundToken) -> Result<Arc<[Message]>> {
+        if rank != self.rank {
+            return Err(Error::invalid(format!(
+                "this process's transport speaks for rank {}, not rank {rank}",
+                self.rank
+            )));
+        }
+        let mut guard = self.state.lock().unwrap();
+        let RingState {
+            links,
+            generation,
+            slots,
             last,
             enc_buf,
             dec_buf,
+            pending,
         } = &mut *guard;
+        if !*pending {
+            return Err(Error::invariant(format!(
+                "rank {} completing a ring round it never started",
+                self.rank
+            )));
+        }
+        // cleared up front: an erroring round poisons the transport (the
+        // worker contract), so there is nothing left to hand back anyway
+        *pending = false;
         let my_gen = *generation;
+        if token.generation() != my_gen {
+            return Err(Error::invariant(format!(
+                "rank {} completing round {}, but the ring is at round {my_gen}",
+                self.rank,
+                token.generation()
+            )));
+        }
+        if self.poisoned.load(Ordering::SeqCst) {
+            return Err(Error::net("transport poisoned by a failed worker"));
+        }
         let n = self.n;
-        slots[rank] = Some(msg);
         // any early `?` below leaves the generation unchanged; the failed
         // worker aborts the transport, so no later round can mix with it
         if let Some(links) = links.as_mut() {
@@ -564,7 +641,10 @@ impl Transport for RingTransport {
                     recv_step(links, dec_buf, slots, recv_idx, my_gen, step)?;
                     send_step(links, enc_buf, slots, send_idx, my_gen, step)?;
                 } else {
-                    send_step(links, enc_buf, slots, send_idx, my_gen, step)?;
+                    if step > 0 {
+                        // step 0's send already happened in begin
+                        send_step(links, enc_buf, slots, send_idx, my_gen, step)?;
+                    }
                     recv_step(links, dec_buf, slots, recv_idx, my_gen, step)?;
                 }
             }
@@ -574,6 +654,15 @@ impl Transport for RingTransport {
         let board = crate::cluster::transport::publish_recycled(slots, last);
         *generation = my_gen.wrapping_add(1);
         Ok(board)
+    }
+
+    fn allgather_abandon(&self, rank: usize, token: RoundToken) {
+        // peers need this rank's n-1 forwarding hops to complete the
+        // round: run it to completion and discard the board; a broken
+        // ring is poisoned so nobody waits out a dead link
+        if self.allgather_complete(rank, token).is_err() {
+            self.abort();
+        }
     }
 
     fn abort(&self) {

@@ -28,7 +28,7 @@ use crate::cluster::net::codec::{
     encode_frame, encode_frame_append, read_frame_with, write_bytes, Frame,
 };
 use crate::cluster::net::handshake::{client_rendezvous, hub_rendezvous, NetCfg};
-use crate::cluster::transport::{Message, Transport};
+use crate::cluster::transport::{Message, RoundToken, Transport};
 use crate::error::{Error, Result};
 use std::net::{Shutdown, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -49,6 +49,9 @@ struct State {
     enc_buf: Vec<u8>,
     /// Persistent decode scratch for incoming frame bodies.
     dec_buf: Vec<u8>,
+    /// `true` between a split-phase begin and its complete/abandon —
+    /// rejects double-starts (one outstanding round per rank).
+    pending: bool,
 }
 
 /// Socket transport for one process-local rank of an n-rank cluster.
@@ -81,6 +84,7 @@ impl TcpTransport {
                 generation: 0,
                 enc_buf: Vec::new(),
                 dec_buf: Vec::new(),
+                pending: false,
             }),
             shutdown_handles: handles,
             poisoned: AtomicBool::new(false),
@@ -99,6 +103,7 @@ impl TcpTransport {
                 generation: 0,
                 enc_buf: Vec::new(),
                 dec_buf: Vec::new(),
+                pending: false,
             }),
             shutdown_handles: vec![handle],
             poisoned: AtomicBool::new(false),
@@ -117,6 +122,12 @@ impl Transport for TcpTransport {
     }
 
     fn allgather(&self, rank: usize, msg: Message) -> Result<Arc<[Message]>> {
+        // the blocking round is the split phases back to back
+        let token = self.allgather_begin(rank, msg)?;
+        self.allgather_complete(rank, token)
+    }
+
+    fn allgather_begin(&self, rank: usize, msg: Message) -> Result<RoundToken> {
         if rank != self.rank {
             return Err(Error::invalid(format!(
                 "this process's transport speaks for rank {}, not rank {rank}",
@@ -131,14 +142,89 @@ impl Transport for TcpTransport {
             conn,
             generation,
             enc_buf,
-            dec_buf,
+            pending,
+            ..
         } = &mut *guard;
+        if *pending {
+            return Err(Error::invariant(format!(
+                "rank {} double-started a split-phase round (round {} is still \
+                 in flight — finish or drop it first)",
+                self.rank, *generation
+            )));
+        }
         let my_gen = *generation;
+        let token = match conn {
+            Conn::Hub { .. } => {
+                // the hub *receives* first: its own contribution is
+                // stashed on the token and the collect/fan-out runs at
+                // complete. The genuine overlap on the hub side is the
+                // clients' contributions accumulating in the kernel
+                // socket buffers during the begin→complete gap.
+                RoundToken::deferred_with_stash(my_gen, msg)
+            }
+            Conn::Client { hub } => {
+                // the contribution goes on the wire NOW — the overlap
+                // window between begin and complete is real transfer time
+                enc_buf.clear();
+                encode_frame_append(
+                    &Frame::Data {
+                        generation: my_gen,
+                        msg,
+                    },
+                    enc_buf,
+                );
+                write_bytes(hub, enc_buf)
+                    .map_err(|e| Error::net(format!("sending contribution to hub: {e}")))?;
+                RoundToken::deferred(my_gen)
+            }
+        };
+        *pending = true;
+        Ok(token)
+    }
+
+    fn allgather_complete(&self, rank: usize, mut token: RoundToken) -> Result<Arc<[Message]>> {
+        if rank != self.rank {
+            return Err(Error::invalid(format!(
+                "this process's transport speaks for rank {}, not rank {rank}",
+                self.rank
+            )));
+        }
+        let mut guard = self.state.lock().unwrap();
+        let State {
+            conn,
+            generation,
+            enc_buf,
+            dec_buf,
+            pending,
+        } = &mut *guard;
+        if !*pending {
+            return Err(Error::invariant(format!(
+                "rank {} completing a round it never started",
+                self.rank
+            )));
+        }
+        // cleared up front: an erroring round poisons the transport (the
+        // worker contract), so there is nothing left to hand back anyway
+        *pending = false;
+        let my_gen = *generation;
+        if token.generation() != my_gen {
+            return Err(Error::invariant(format!(
+                "rank {} completing round {}, but the transport is at round {my_gen}",
+                self.rank,
+                token.generation()
+            )));
+        }
+        if self.poisoned.load(Ordering::SeqCst) {
+            return Err(Error::net("transport poisoned by a failed worker"));
+        }
         let n = self.n;
         // any early `?` below leaves the generation unchanged; the failed
         // worker aborts the transport, so no later round can mix with it
         let board: Arc<[Message]> = match conn {
             Conn::Hub { peers } => {
+                let msg = token.take_stash().ok_or_else(|| {
+                    Error::invariant("hub round token lost its stashed contribution")
+                })?;
                 let mut slots: Vec<Option<Message>> = (0..n).map(|_| None).collect();
                 slots[0] = Some(msg);
                 for r in 1..n {
@@ -176,16 +262,8 @@ impl Transport for TcpTransport {
                 board
             }
             Conn::Client { hub } => {
-                enc_buf.clear();
-                encode_frame_append(
-                    &Frame::Data {
-                        generation: my_gen,
-                        msg,
-                    },
-                    enc_buf,
-                );
-                write_bytes(hub, enc_buf)
-                    .map_err(|e| Error::net(format!("sending contribution to hub: {e}")))?;
+                // the contribution went out in begin; only the board
+                // read-back remains
                 let mut board = Vec::with_capacity(n);
                 for r in 0..n {
                     let frame = read_frame_with(hub, dec_buf).map_err(|e| {
@@ -198,6 +276,17 @@ impl Transport for TcpTransport {
         };
         *generation = my_gen.wrapping_add(1);
         Ok(board)
+    }
+
+    fn allgather_abandon(&self, rank: usize, token: RoundToken) {
+        // the hub must still collect + fan out (clients are waiting on
+        // the board) and a client must drain its board read-back so the
+        // stream stays round-aligned: run the round to completion and
+        // discard the board; a broken round poisons the transport so
+        // nobody waits out a dead socket
+        if self.allgather_complete(rank, token).is_err() {
+            self.abort();
+        }
     }
 
     fn abort(&self) {

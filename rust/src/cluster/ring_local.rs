@@ -20,7 +20,7 @@
 //! [`Transport::abort`] poisons the transport, waking every blocked
 //! receiver with an error — a broken ring never hangs.
 
-use crate::cluster::transport::{Message, Transport};
+use crate::cluster::transport::{Message, RoundToken, Transport};
 use crate::error::{Error, Result};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -50,6 +50,9 @@ struct RingRank {
     slots: Vec<Option<Message>>,
     /// Last round's published slab, kept for recycling.
     last: Option<Arc<[Message]>>,
+    /// `true` between a split-phase begin and its complete/abandon —
+    /// rejects double-starts (one outstanding round per rank).
+    pending: bool,
 }
 
 /// In-process chunked-ring transport for one OS thread per rank.
@@ -94,6 +97,7 @@ impl RingLocal {
                     generation: 0,
                     slots: (0..n).map(|_| None).collect(),
                     last: None,
+                    pending: false,
                 })
             })
             .collect();
@@ -127,6 +131,12 @@ impl Transport for RingLocal {
     }
 
     fn allgather(&self, rank: usize, msg: Message) -> Result<Arc<[Message]>> {
+        // the blocking round is the split phases back to back
+        let token = self.allgather_begin(rank, msg)?;
+        self.allgather_complete(rank, token)
+    }
+
+    fn allgather_begin(&self, rank: usize, msg: Message) -> Result<RoundToken> {
         if rank >= self.n {
             return Err(Error::invalid(format!(
                 "rank {rank} out of range (n = {})",
@@ -137,16 +147,22 @@ impl Transport for RingLocal {
             return Err(Error::net("transport poisoned by a failed worker"));
         }
         let mut rk = self.ranks[rank].lock().unwrap();
+        if rk.pending {
+            return Err(Error::invariant(format!(
+                "rank {rank} double-started a split-phase ring round (round {} \
+                 is still in flight — finish or drop it first)",
+                rk.generation
+            )));
+        }
         let my_gen = rk.generation;
-        let n = self.n;
-        let deadline = Instant::now() + self.timeout;
         rk.slots[rank] = Some(msg);
-        for step in 0..n - 1 {
-            let send_idx = (rank + n - step) % n;
-            let recv_idx = (send_idx + n - 1) % n;
-            let fwd = rk.slots[send_idx]
+        if self.n > 1 {
+            // the step-0 chunk goes out eagerly (channel sends never
+            // block), so the contribution is genuinely in flight while
+            // the caller computes between begin and complete
+            let fwd = rk.slots[rank]
                 .as_ref()
-                .expect("forwarding order fills the slot before it is sent")
+                .expect("deposited just above")
                 .clone();
             rk.tx_right
                 .send(Hop::Data {
@@ -154,6 +170,58 @@ impl Transport for RingLocal {
                     msg: fwd,
                 })
                 .map_err(|_| Error::invariant("ring link disconnected — transport dropped"))?;
+        }
+        rk.pending = true;
+        Ok(RoundToken::deferred(my_gen))
+    }
+
+    fn allgather_complete(&self, rank: usize, token: RoundToken) -> Result<Arc<[Message]>> {
+        if rank >= self.n {
+            return Err(Error::invalid(format!(
+                "rank {rank} out of range (n = {})",
+                self.n
+            )));
+        }
+        let mut rk = self.ranks[rank].lock().unwrap();
+        if !rk.pending {
+            return Err(Error::invariant(format!(
+                "rank {rank} completing a ring round it never started"
+            )));
+        }
+        // cleared up front: an erroring round poisons the transport (the
+        // worker contract), so there is nothing left to hand back anyway
+        rk.pending = false;
+        let my_gen = rk.generation;
+        if token.generation() != my_gen {
+            return Err(Error::invariant(format!(
+                "rank {rank} completing round {}, but the ring is at round {my_gen}",
+                token.generation()
+            )));
+        }
+        if self.poisoned.load(Ordering::SeqCst) {
+            return Err(Error::net("transport poisoned by a failed worker"));
+        }
+        let n = self.n;
+        let deadline = Instant::now() + self.timeout;
+        for step in 0..n - 1 {
+            let send_idx = (rank + n - step) % n;
+            let recv_idx = (send_idx + n - 1) % n;
+            if step > 0 {
+                // step 0's send already happened in begin; later steps
+                // forward the chunk received in the previous step
+                let fwd = rk.slots[send_idx]
+                    .as_ref()
+                    .expect("forwarding order fills the slot before it is sent")
+                    .clone();
+                rk.tx_right
+                    .send(Hop::Data {
+                        generation: my_gen,
+                        msg: fwd,
+                    })
+                    .map_err(|_| {
+                        Error::invariant("ring link disconnected — transport dropped")
+                    })?;
+            }
             match self.recv_hop(&mut rk, deadline, step)? {
                 Hop::Data { generation, msg } if generation == my_gen => {
                     rk.slots[recv_idx] = Some(msg);
@@ -173,6 +241,15 @@ impl Transport for RingLocal {
         let board = crate::cluster::transport::publish_recycled(&mut rk.slots, &mut rk.last);
         rk.generation = my_gen.wrapping_add(1);
         Ok(board)
+    }
+
+    fn allgather_abandon(&self, rank: usize, token: RoundToken) {
+        // peers need this rank's n-1 forwarding hops to complete the
+        // round: run it to completion and discard the board; if the ring
+        // is broken mid-forward, poison it so nobody waits out a silence
+        if self.allgather_complete(rank, token).is_err() {
+            self.abort();
+        }
     }
 
     fn abort(&self) {

@@ -21,6 +21,34 @@
 //! traces are bit-identical to the copying implementation; only the
 //! harness overhead changes.
 //!
+//! **Split-phase collectives.** Every all-gather also exists as a
+//! nonblocking start/finish pair so the engines can overlap iteration
+//! t+1's compute with iteration t's communication (step-level
+//! pipelining): [`Endpoint::allgather_start`] (or `allgather_start` on
+//! `dyn Transport`) deposits/sends this rank's contribution immediately
+//! and returns a [`PendingRound`]; [`PendingRound::finish`] blocks for
+//! the board. The contract, pinned for all four transports by the
+//! split-phase battery in `rust/tests/transport_conformance.rs`:
+//!
+//! * the contribution is genuinely *in flight* at start — the socket
+//!   transports write the contribution (star client) or the first ring
+//!   chunk eagerly, so peers can make progress during the gap;
+//! * rounds are generation-stamped: finish returns exactly the round it
+//!   started, and cross-round mixing is a typed error;
+//! * at most ONE round may be outstanding per rank — a second start (or
+//!   a blocking all-gather) before finish is a typed error;
+//! * [`Transport::abort`] between start and finish poisons the finish
+//!   within the IO deadline, never a hang;
+//! * dropping a [`PendingRound`] without finishing abandons the round
+//!   without wedging peers (the drop hook forwards/drains whatever the
+//!   peers still need — the deposit made at start always stands).
+//!
+//! Implementations override [`Transport::allgather_begin`] /
+//! [`Transport::allgather_complete`] / [`Transport::allgather_abandon`];
+//! the blocking [`Transport::allgather`] is begin + complete, and a
+//! transport that overrides nothing gets a correct (if overlap-free)
+//! default that completes the round eagerly at start.
+//!
 //! [`LocalTransport`] is the in-process implementation: a rendezvous for
 //! one OS thread per rank, built on a generation-counted slot board
 //! (mutex + condvar). Every round each rank deposits its message; the
@@ -28,10 +56,11 @@
 //! can only enter round `g+1` after consuming round `g`, so the
 //! published board is never overwritten early. Published slabs are
 //! double-buffered and recycled once every rank has moved two rounds on,
-//! so a steady-state round performs **zero heap allocations**
-//! (`rust/tests/alloc_regression.rs` pins this). A failed worker poisons
-//! the transport ([`Transport::abort`]) so peers error out instead of
-//! deadlocking at the rendezvous.
+//! so a steady-state round performs **zero heap allocations** — split-
+//! phase rounds included; [`RoundToken`] and [`PendingRound`] are plain
+//! stack values (`rust/tests/alloc_regression.rs` pins this). A failed
+//! worker poisons the transport ([`Transport::abort`]) so peers error
+//! out instead of deadlocking at the rendezvous.
 //!
 //! [CostModel]: crate::collectives::CostModel
 
@@ -53,6 +82,135 @@ pub enum Message {
     Scalar(f64),
 }
 
+/// Opaque in-flight state of a split-phase all-gather, handed from
+/// [`Transport::allgather_begin`] to [`Transport::allgather_complete`].
+/// Generation-stamped so a finish can never return a different round
+/// than its start. A plain stack value — starting and finishing a round
+/// allocates nothing.
+pub struct RoundToken {
+    generation: u64,
+    /// Board already completed at begin (the default emulation for
+    /// transports that don't implement a native split phase).
+    ready: Option<Arc<[Message]>>,
+    /// This rank's own contribution, when the transport must defer even
+    /// the send to complete-time (the TCP star's hub receives before it
+    /// sends anything).
+    stash: Option<Message>,
+}
+
+impl RoundToken {
+    /// Token for a round whose completion work all happens at finish.
+    pub fn deferred(generation: u64) -> Self {
+        RoundToken {
+            generation,
+            ready: None,
+            stash: None,
+        }
+    }
+
+    /// Like [`RoundToken::deferred`], but carrying the rank's own
+    /// contribution to complete-time.
+    pub fn deferred_with_stash(generation: u64, msg: Message) -> Self {
+        RoundToken {
+            generation,
+            ready: None,
+            stash: Some(msg),
+        }
+    }
+
+    /// Token for a round that was completed eagerly at begin.
+    pub fn ready(generation: u64, board: Arc<[Message]>) -> Self {
+        RoundToken {
+            generation,
+            ready: Some(board),
+            stash: None,
+        }
+    }
+
+    /// The round this token belongs to (transport generation counter).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Take the eagerly-completed board, if any.
+    pub fn take_ready(&mut self) -> Option<Arc<[Message]>> {
+        self.ready.take()
+    }
+
+    /// Take the stashed own-contribution, if any.
+    pub fn take_stash(&mut self) -> Option<Message> {
+        self.stash.take()
+    }
+}
+
+/// One in-flight split-phase all-gather: returned by
+/// [`Endpoint::allgather_start`] / `allgather_start` on `dyn Transport`,
+/// consumed by [`PendingRound::finish`]. Dropping it without finishing
+/// abandons the round safely ([`Transport::allgather_abandon`]): the
+/// contribution made at start stands, peers complete normally, and this
+/// rank may start the next round afterwards.
+pub struct PendingRound<'a> {
+    tp: &'a dyn Transport,
+    rank: usize,
+    token: Option<RoundToken>,
+}
+
+impl<'a> PendingRound<'a> {
+    /// Start a split-phase all-gather for `rank` over `tp`: the
+    /// contribution is deposited / put on the wire before this returns.
+    pub fn start(tp: &'a dyn Transport, rank: usize, msg: Message) -> Result<Self> {
+        let token = tp.allgather_begin(rank, msg)?;
+        Ok(PendingRound {
+            tp,
+            rank,
+            token: Some(token),
+        })
+    }
+
+    /// The rank this round was started for.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// The round's generation stamp.
+    pub fn generation(&self) -> u64 {
+        self.token
+            .as_ref()
+            .map(RoundToken::generation)
+            .unwrap_or(0)
+    }
+
+    /// Block for the round's board. Abort-aware and deadline-bounded
+    /// exactly like the blocking all-gather: a poisoned or wedged round
+    /// is a typed error, never a hang.
+    pub fn finish(mut self) -> Result<Arc<[Message]>> {
+        let token = self
+            .token
+            .take()
+            .expect("finish consumes the pending round exactly once");
+        self.tp.allgather_complete(self.rank, token)
+    }
+}
+
+impl Drop for PendingRound<'_> {
+    fn drop(&mut self) {
+        if let Some(token) = self.token.take() {
+            self.tp.allgather_abandon(self.rank, token);
+        }
+    }
+}
+
+impl<'t> dyn Transport + 't {
+    /// Nonblocking start of an all-gather round (split-phase form of
+    /// [`Transport::allgather`]): rank `rank`'s contribution is
+    /// deposited / put on the wire immediately; `finish()` on the
+    /// returned handle blocks for the rank-indexed board. At most one
+    /// round may be in flight per rank.
+    pub fn allgather_start(&self, rank: usize, msg: Message) -> Result<PendingRound<'_>> {
+        PendingRound::start(self, rank, msg)
+    }
+}
+
 /// Rank-addressed synchronous collectives. Implementations must be
 /// callable concurrently from one thread per rank.
 pub trait Transport: Send + Sync {
@@ -65,6 +223,45 @@ pub trait Transport: Send + Sync {
     /// (enforced by construction: workers run identical control flow off
     /// replicated state).
     fn allgather(&self, rank: usize, msg: Message) -> Result<Arc<[Message]>>;
+
+    /// Nonblocking half of a split-phase all-gather: deposit / put rank
+    /// `rank`'s contribution in flight and return a generation-stamped
+    /// [`RoundToken`] for [`Transport::allgather_complete`]. Native
+    /// implementations must reject a second begin before the first
+    /// round's complete (or abandon) with a typed error — every in-tree
+    /// transport does, and the conformance battery pins it. The default
+    /// emulation completes the whole round eagerly (correct but
+    /// overlap-free) and, being stateless, cannot track an outstanding
+    /// round: under it a "double start" degenerates to two back-to-back
+    /// blocking rounds — the same caller-divergence hazard as calling
+    /// the blocking [`Transport::allgather`] twice. Override all three
+    /// split-phase methods together for the full contract.
+    fn allgather_begin(&self, rank: usize, msg: Message) -> Result<RoundToken> {
+        Ok(RoundToken::ready(0, self.allgather(rank, msg)?))
+    }
+
+    /// Blocking half of a split-phase all-gather: drain the round
+    /// started by [`Transport::allgather_begin`] and return its board.
+    /// Must honor the same abort-poisoning and IO deadlines as the
+    /// blocking [`Transport::allgather`].
+    fn allgather_complete(&self, rank: usize, mut token: RoundToken) -> Result<Arc<[Message]>> {
+        let _ = rank;
+        token.take_ready().ok_or_else(|| {
+            Error::invariant(
+                "transport handed out a deferred RoundToken without overriding \
+                 allgather_complete",
+            )
+        })
+    }
+
+    /// Drop hook for a [`PendingRound`] that is abandoned instead of
+    /// finished. Implementations must leave peers able to complete the
+    /// round (the contribution from begin stands) and this rank able to
+    /// start the next one. The default matches the default begin (the
+    /// round already completed — nothing outstanding).
+    fn allgather_abandon(&self, rank: usize, token: RoundToken) {
+        let _ = (rank, token);
+    }
 
     /// Rendezvous barrier (default: a scalar all-gather).
     fn barrier(&self, rank: usize) -> Result<()> {
@@ -87,6 +284,12 @@ struct Board {
     /// rank can still hold a reference to round `g-1`'s board, so its
     /// slab is uniquely owned again and can be overwritten in place.
     spare: Option<Arc<[Message]>>,
+    /// Per-rank split-phase flag: `true` between a rank's begin and its
+    /// complete (or abandon). Rejects double-starts, and caps the board
+    /// at one outstanding round per rank — which is what guarantees
+    /// `published` still holds round `g` when rank `r` completes `g`
+    /// (no rank can deposit `g+1` before completing `g`).
+    started: Vec<bool>,
     poisoned: bool,
 }
 
@@ -108,6 +311,7 @@ impl LocalTransport {
                 generation: 0,
                 published: Vec::new().into(),
                 spare: None,
+                started: vec![false; n],
                 poisoned: false,
             }),
             cv: Condvar::new(),
@@ -121,6 +325,13 @@ impl Transport for LocalTransport {
     }
 
     fn allgather(&self, rank: usize, msg: Message) -> Result<Arc<[Message]>> {
+        // the blocking round is just the split phases back to back, so
+        // both forms share every invariant check and the recycle path
+        let token = self.allgather_begin(rank, msg)?;
+        self.allgather_complete(rank, token)
+    }
+
+    fn allgather_begin(&self, rank: usize, msg: Message) -> Result<RoundToken> {
         if rank >= self.n {
             return Err(Error::invalid(format!(
                 "rank {rank} out of range (n = {})",
@@ -128,19 +339,37 @@ impl Transport for LocalTransport {
             )));
         }
         let mut b = self.board.lock().unwrap();
-        if b.poisoned {
-            return Err(Error::invariant("transport poisoned by a failed worker"));
-        }
-        if b.slots[rank].is_some() {
-            // a real invariant error in every build profile — a silent
-            // overwrite here would corrupt a peer's board in release mode
-            return Err(Error::invariant(format!(
-                "rank {rank} double-deposited in round {}",
-                b.generation
-            )));
+        loop {
+            if b.poisoned {
+                return Err(Error::invariant("transport poisoned by a failed worker"));
+            }
+            if b.started[rank] {
+                if b.slots[rank].is_some() {
+                    // a real invariant error in every build profile — a
+                    // silent overwrite here would corrupt a peer's board
+                    // in release mode
+                    return Err(Error::invariant(format!(
+                        "rank {rank} double-deposited in round {}",
+                        b.generation
+                    )));
+                }
+                return Err(Error::invariant(format!(
+                    "rank {rank} double-started a split-phase round (round {} \
+                     is still in flight — finish or drop it first)",
+                    b.generation
+                )));
+            }
+            if b.slots[rank].is_none() {
+                break;
+            }
+            // only reachable after an abandon: our previous deposit is
+            // still waiting on slower peers, so the next round isn't
+            // open yet — wait for the publish
+            b = self.cv.wait(b).unwrap();
         }
         let my_gen = b.generation;
         b.slots[rank] = Some(msg);
+        b.started[rank] = true;
         b.arrived += 1;
         if b.arrived == self.n {
             // last arrival: publish the board, open the next round
@@ -170,17 +399,56 @@ impl Transport for LocalTransport {
             board.arrived = 0;
             board.generation = board.generation.wrapping_add(1);
             self.cv.notify_all();
-        } else {
-            while b.generation == my_gen && !b.poisoned {
-                b = self.cv.wait(b).unwrap();
-            }
-            if b.poisoned {
-                return Err(Error::invariant("transport poisoned by a failed worker"));
-            }
+        }
+        Ok(RoundToken::deferred(my_gen))
+    }
+
+    fn allgather_complete(&self, rank: usize, token: RoundToken) -> Result<Arc<[Message]>> {
+        if rank >= self.n {
+            return Err(Error::invalid(format!(
+                "rank {rank} out of range (n = {})",
+                self.n
+            )));
+        }
+        let my_gen = token.generation();
+        let mut b = self.board.lock().unwrap();
+        if !b.started[rank] {
+            return Err(Error::invariant(format!(
+                "rank {rank} completing a round it never started"
+            )));
+        }
+        while b.generation == my_gen && !b.poisoned {
+            b = self.cv.wait(b).unwrap();
+        }
+        b.started[rank] = false;
+        if b.poisoned {
+            return Err(Error::invariant("transport poisoned by a failed worker"));
+        }
+        if b.generation != my_gen.wrapping_add(1) {
+            // unreachable while the one-outstanding-round-per-rank
+            // invariant holds (no rank can deposit g+1 before completing
+            // g); a typed error beats returning the wrong round's board
+            return Err(Error::invariant(format!(
+                "rank {rank}'s round {my_gen} board was already recycled \
+                 (board is at round {}) — rounds overlapped illegally",
+                b.generation
+            )));
         }
         // every rank shares the one published slab — a refcount bump, not
         // a copy; the modeled wire cost is charged by the collectives
         Ok(b.published.clone())
+    }
+
+    fn allgather_abandon(&self, rank: usize, token: RoundToken) {
+        let _ = token;
+        if rank >= self.n {
+            return;
+        }
+        // the deposit from begin stands (peers need it to publish the
+        // round); only the local in-flight flag is released, so a later
+        // begin re-enters once this round publishes
+        let mut b = self.board.lock().unwrap();
+        b.started[rank] = false;
     }
 
     fn abort(&self) {
@@ -276,6 +544,14 @@ impl<'a> Endpoint<'a> {
     /// ([`crate::collectives::ranked`]) build on.
     pub fn allgather(&self, msg: Message) -> Result<Arc<[Message]>> {
         self.tp.allgather(self.rank, msg)
+    }
+
+    /// Split-phase all-gather: the contribution is deposited / put on
+    /// the wire before this returns; `finish()` on the returned handle
+    /// blocks for the board. The pipelined engines run iteration t+1's
+    /// compute between the two halves.
+    pub fn allgather_start(&self, msg: Message) -> Result<PendingRound<'a>> {
+        PendingRound::start(self.tp, self.rank, msg)
     }
 
     /// All-gather per-rank selections (metadata + payload in one round).
@@ -556,6 +832,125 @@ mod tests {
             assert!(!Arc::ptr_eq(&b, &held), "live handle must not be reused");
         }
         assert_eq!(*held, vec![7.0]);
+    }
+
+    #[test]
+    fn split_phase_rounds_match_blocking_rounds() {
+        let n = 3;
+        let rounds = 20;
+        let tp = Arc::new(LocalTransport::new(n));
+        let mut handles = Vec::new();
+        for rank in 0..n {
+            let tp = tp.clone();
+            handles.push(std::thread::spawn(move || {
+                let ep = Endpoint::new(rank, tp.as_ref());
+                for round in 0..rounds {
+                    let mine = (rank * 1000 + round) as f64;
+                    let want: Vec<f64> =
+                        (0..n).map(|r| (r * 1000 + round) as f64).collect();
+                    let got: Vec<f64> = if round % 2 == 0 {
+                        // split phase, with rank-local work in the gap
+                        let pending =
+                            ep.allgather_start(Message::Scalar(mine)).unwrap();
+                        assert_eq!(pending.rank(), rank);
+                        let board = pending.finish().unwrap();
+                        board
+                            .iter()
+                            .map(|m| match m {
+                                Message::Scalar(x) => *x,
+                                other => panic!("wrong envelope {other:?}"),
+                            })
+                            .collect()
+                    } else {
+                        // blocking rounds interleave with split-phase ones
+                        ep.allgather_f64(mine).unwrap()
+                    };
+                    assert_eq!(got, want, "rank {rank} round {round}");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn double_start_is_rejected_and_round_still_lands() {
+        let tp = LocalTransport::new(1);
+        let dynamic: &dyn Transport = &tp;
+        let pending = dynamic.allgather_start(0, Message::Scalar(1.0)).unwrap();
+        let err = dynamic
+            .allgather_start(0, Message::Scalar(2.0))
+            .err()
+            .expect("second start must be rejected")
+            .to_string();
+        assert!(err.contains("double-started"), "{err}");
+        let board = pending.finish().unwrap();
+        assert_eq!(&board[..], &[Message::Scalar(1.0)]);
+        // the transport recovers fully
+        let board = dynamic.allgather(0, Message::Scalar(3.0)).unwrap();
+        assert_eq!(&board[..], &[Message::Scalar(3.0)]);
+    }
+
+    #[test]
+    fn dropped_pending_round_does_not_wedge_peers() {
+        let n = 2;
+        let rounds = 4;
+        let tp = Arc::new(LocalTransport::new(n));
+        let tp1 = tp.clone();
+        let peer = std::thread::spawn(move || {
+            let ep = Endpoint::new(1, tp1.as_ref());
+            for round in 0..rounds {
+                // the peer must see rank 0's deposit in EVERY round,
+                // including the one rank 0 abandoned
+                let got = ep.allgather_f64((1000 + round) as f64).unwrap();
+                assert_eq!(got[0], round as f64, "round {round}");
+            }
+        });
+        let ep = Endpoint::new(0, tp.as_ref());
+        for round in 0..rounds {
+            if round == 1 {
+                let pending = ep.allgather_start(Message::Scalar(round as f64)).unwrap();
+                drop(pending); // walk away without finishing
+            } else {
+                let got = ep.allgather_f64(round as f64).unwrap();
+                assert_eq!(got[1], (1000 + round) as f64);
+            }
+        }
+        peer.join().unwrap();
+    }
+
+    #[test]
+    fn abort_between_start_and_finish_poisons_the_finish() {
+        let tp = Arc::new(LocalTransport::new(2));
+        let pending = (tp.as_ref() as &dyn Transport)
+            .allgather_start(0, Message::Scalar(1.0))
+            .unwrap();
+        tp.abort();
+        assert!(pending.finish().is_err(), "poisoned finish must error");
+    }
+
+    #[test]
+    fn default_split_phase_emulation_is_correct() {
+        // a Transport that overrides nothing still gets a working (if
+        // overlap-free) split phase via the eager default
+        struct Eager(LocalTransport);
+        impl Transport for Eager {
+            fn n_ranks(&self) -> usize {
+                self.0.n_ranks()
+            }
+            fn allgather(&self, rank: usize, msg: Message) -> Result<Arc<[Message]>> {
+                self.0.allgather(rank, msg)
+            }
+            fn abort(&self) {
+                self.0.abort()
+            }
+        }
+        let tp = Eager(LocalTransport::new(1));
+        let dynamic: &dyn Transport = &tp;
+        let pending = dynamic.allgather_start(0, Message::Scalar(7.5)).unwrap();
+        let board = pending.finish().unwrap();
+        assert_eq!(&board[..], &[Message::Scalar(7.5)]);
     }
 
     #[test]

@@ -12,12 +12,33 @@
 //! The scratch keeps steady-state iterations free of transport/merge
 //! heap allocations (`rust/tests/alloc_regression.rs` pins that).
 //!
+//! **Step-level pipelining** (`SimCfg::pipeline`): the worker runs a
+//! software pipeline over the split-phase transport — while iteration
+//! t's sparse all-reduce payload is in flight
+//! ([`Endpoint::allgather_start`]), the worker generates iteration
+//! t+1's gradients, applies the error feedback and runs its
+//! partition-local selection, then lands the round before depositing
+//! t+1. This is legal without changing ANY selection semantics because
+//! (a) the all-reduce contribution is snapshotted into the rotating
+//! send pool *before* the error carry mutates the accumulator, (b) the
+//! reduced sum is discarded by the simulated trainer (only its modeled
+//! wire time is charged), and (c) the carry/observe/select sequence
+//! runs in exactly the sequential order — so the pipelined trace's
+//! deterministic fields are bit-identical to the sequential loop's,
+//! and only the clock gains an honest `t_exposed_comm`
+//! ([`CostModel::overlapped_step`]). Round state is double-buffered
+//! (two [`RoundScratch`] slots alternating by iteration parity) —
+//! headroom for deepening the pipeline past one round in flight, with
+//! the steady-state zero-allocation property of the extra slot pinned
+//! by the alloc-regression suite.
+//!
 //! [StragglerCfg]: crate::collectives::costmodel::StragglerCfg
 
 use crate::cluster::transport::Endpoint;
 use crate::collectives::{
-    allgather_sparse_rk, broadcast_selection_rk, sparse_allreduce_union_rk, CostModel,
-    RoundScratch,
+    allgather_sparse_finish_rk, allgather_sparse_rk, allgather_sparse_start_rk,
+    broadcast_selection_finish_rk, broadcast_selection_rk, sparse_allreduce_union_finish_rk,
+    sparse_allreduce_union_rk, sparse_allreduce_union_start_rk, CostModel, RoundScratch,
 };
 use crate::coordinator::SelectOutput;
 use crate::error::Result;
@@ -63,7 +84,50 @@ impl<'a> SimWorker<'a> {
     /// deterministic field (`k_actual`, `k_sum`, `delta`, `f_ratio`,
     /// `global_err`, modeled times) is identical across ranks; `t_select`
     /// is the all-gathered max so it is identical too.
-    pub fn run(mut self) -> Result<Vec<IterRecord>> {
+    pub fn run(self) -> Result<Vec<IterRecord>> {
+        if self.cfg.pipeline {
+            self.run_pipelined()
+        } else {
+            self.run_sequential()
+        }
+    }
+
+    /// Alg. 1 line 8: generate + accumulate iteration `t`'s gradient
+    /// into `acc` (dense folds the lr into the raw gradient; sparse
+    /// fuses the error feedback).
+    fn accumulate(&self, t: usize, dense: bool, err: &[f32], acc: &mut [f32]) {
+        let lr = self.cfg.lr.lr(t);
+        if dense {
+            self.gen.grad_into(t, self.rank, acc);
+            for a in acc.iter_mut() {
+                *a = lr * *a;
+            }
+        } else {
+            self.gen.accumulate_into(t, self.rank, err, lr, acc);
+        }
+    }
+
+    /// Alg. 1 line 10: partition-local selection for round `t`, with
+    /// the measured wall time this rank contributes to the `t_select`
+    /// critical path.
+    fn measure_select(&mut self, t: usize, dense: bool, acc: &[f32]) -> Result<(SelectOutput, f64)> {
+        let ctx = RoundCtx {
+            t,
+            rank: self.rank,
+            n_ranks: self.cfg.n_ranks,
+        };
+        let st = Instant::now();
+        let out = if dense {
+            SelectOutput::default()
+        } else {
+            self.sp.select(&ctx, acc)?
+        };
+        Ok((out, st.elapsed().as_secs_f64()))
+    }
+
+    /// The default additive-clock loop: every collective is blocking and
+    /// each iteration's compute, selection and communication serialize.
+    fn run_sequential(mut self) -> Result<Vec<IterRecord>> {
         let n = self.cfg.n_ranks;
         let n_g = self.gen.n_g();
         let dense = matches!(self.sp.comm_pattern(), CommPattern::DenseAllReduce);
@@ -77,30 +141,11 @@ impl<'a> SimWorker<'a> {
         let mut last_global_err = 0.0;
 
         for t in 0..self.cfg.iters {
-            let lr = self.cfg.lr.lr(t);
             // --- compute + accumulate (Alg. 1 line 8)
-            if dense {
-                self.gen.grad_into(t, self.rank, &mut acc);
-                for a in acc.iter_mut() {
-                    *a = lr * *a;
-                }
-            } else {
-                self.gen.accumulate_into(t, self.rank, &err, lr, &mut acc);
-            }
+            self.accumulate(t, dense, &err, &mut acc);
 
             // --- selection (Alg. 1 line 10)
-            let ctx = RoundCtx {
-                t,
-                rank: self.rank,
-                n_ranks: n,
-            };
-            let st = Instant::now();
-            let out = if dense {
-                SelectOutput::default()
-            } else {
-                self.sp.select(&ctx, &acc)?
-            };
-            let my_select = st.elapsed().as_secs_f64();
+            let (out, my_select) = self.measure_select(t, dense, &acc)?;
 
             // --- aggregation (Alg. 1 lines 11-13) over the transport;
             // union/counts/sums land in the reusable scratch buffers
@@ -200,7 +245,192 @@ impl<'a> SimWorker<'a> {
                     .max_compute(t, self.cfg.compute_s, n),
                 t_select,
                 t_comm,
+                // additive clock: every modeled comm second is exposed
+                t_exposed_comm: t_comm,
             });
+        }
+        Ok(records)
+    }
+
+    /// The pipelined loop (see the module docs): iteration t's sparse
+    /// all-reduce flies split-phase while iteration t+1's accumulate +
+    /// selection run, with double-buffered round scratch. Deterministic
+    /// trace fields are bit-identical to [`SimWorker::run_sequential`];
+    /// the clock charges `max(compute, comm)` via `t_exposed_comm`.
+    fn run_pipelined(mut self) -> Result<Vec<IterRecord>> {
+        let n = self.cfg.n_ranks;
+        let n_g = self.gen.n_g();
+        let dense = matches!(self.sp.comm_pattern(), CommPattern::DenseAllReduce);
+        let density = self.sp.target_density();
+        let k_user = ((density * n_g as f64).round() as usize).max(1);
+
+        let mut err = vec![0f32; if dense { 0 } else { n_g }];
+        let mut acc = vec![0f32; n_g];
+        // Double-buffered round state, alternating by iteration parity.
+        // In the CURRENT one-round-deep pipeline each round lands inside
+        // its own iteration, so a single scratch would also be correct;
+        // the second slot is headroom for deepening the pipeline (a
+        // reduce left in flight across the iteration boundary would have
+        // its union/counts/send buffers live while t+1's merge lands),
+        // and the alloc-regression suite pins that the extra slot is
+        // reused, never a per-round allocation.
+        let mut scratch = [RoundScratch::new(), RoundScratch::new()];
+        let mut records = Vec::with_capacity(self.cfg.iters);
+        let mut last_global_err = 0.0;
+        if self.cfg.iters == 0 {
+            return Ok(records);
+        }
+
+        // pipeline prologue: iteration 0's compute + selection (every
+        // later iteration's compute/select runs inside the previous
+        // iteration's overlap window)
+        self.accumulate(0, dense, &err, &mut acc);
+        let (mut out, mut my_select) = self.measure_select(0, dense, &acc)?;
+
+        for t in 0..self.cfg.iters {
+            let s = &mut scratch[t % 2];
+            // --- aggregation phase 1: the metadata/selection round.
+            // Nothing that could legally overlap it exists yet (the next
+            // accumulate needs this round's union for the error carry),
+            // so it is started and finished back to back.
+            let (f_ratio, t_meta, k_actual);
+            match self.sp.comm_pattern() {
+                CommPattern::DenseAllReduce => {
+                    s.union_idx.clear();
+                    s.k_by_rank.clear();
+                    s.k_by_rank.resize(n, n_g);
+                    f_ratio = 1.0;
+                    k_actual = n_g;
+                    t_meta = self.net.allreduce(n_g * CostModel::DENSE_ENTRY_BYTES);
+                }
+                CommPattern::LeaderBroadcast => {
+                    let leader = t % n;
+                    let pending = allgather_sparse_start_rk(
+                        &self.ep,
+                        Arc::new(std::mem::take(&mut out)),
+                    )?;
+                    let board = pending.finish()?;
+                    t_meta = broadcast_selection_finish_rk(
+                        &board,
+                        leader,
+                        &self.net,
+                        &mut s.union_idx,
+                        &mut s.k_by_rank,
+                    )?;
+                    k_actual = s.union_idx.len();
+                    f_ratio = 1.0; // broadcast has no padding concept
+                }
+                CommPattern::AllGather => {
+                    let pending = allgather_sparse_start_rk(
+                        &self.ep,
+                        Arc::new(std::mem::take(&mut out)),
+                    )?;
+                    let board = pending.finish()?;
+                    let stats = allgather_sparse_finish_rk(
+                        &board,
+                        &self.net,
+                        &mut s.union_idx,
+                        &mut s.k_by_rank,
+                    )?;
+                    k_actual = s.union_idx.len();
+                    f_ratio = stats.f_ratio;
+                    t_meta = stats.time_s;
+                }
+            }
+
+            // --- aggregation phase 2: put the value reduce in flight.
+            // The contribution (acc at the union coordinates) is
+            // snapshotted into the rotating send pool here, BEFORE the
+            // error carry below mutates the accumulator.
+            let pending_reduce = if dense {
+                None // the dense sim models the reduce, it moves no data
+            } else {
+                Some(sparse_allreduce_union_start_rk(
+                    &self.ep,
+                    &acc,
+                    &s.union_idx,
+                    &mut s.send,
+                )?)
+            };
+
+            // --- error carry (Alg. 1 lines 18-19) + replica feedback,
+            // in exactly the sequential order, while the reduce flies
+            if !dense {
+                for &i in &s.union_idx {
+                    acc[i as usize] = 0.0;
+                }
+                std::mem::swap(&mut err, &mut acc);
+            }
+            self.sp.observe(t, &s.k_by_rank)?;
+            // round t's threshold must be read BEFORE the overlap
+            // window: select(t+1) may adapt it (e.g. SIDCo), and the
+            // sequential loop records the post-observe value
+            let delta = self.sp.delta().unwrap_or(0.0) as f64;
+
+            // --- the overlap window: iteration t+1's gradient
+            // generation, error-feedback accumulation and partition-
+            // local selection run while round t's payload is on the wire
+            let mut next = None;
+            if t + 1 < self.cfg.iters {
+                self.accumulate(t + 1, dense, &err, &mut acc);
+                next = Some(self.measure_select(t + 1, dense, &acc)?);
+            }
+
+            // --- land round t's reduce (sum discarded, exactly like the
+            // sequential sim path; only its modeled time is charged)
+            let t_comm = match pending_reduce {
+                Some(pending) => {
+                    let board = pending.finish()?;
+                    t_meta
+                        + sparse_allreduce_union_finish_rk(
+                            &board,
+                            k_actual,
+                            &self.net,
+                            &mut s.reduced,
+                        )?
+                }
+                None => t_meta,
+            };
+
+            // --- diagnostics (same schedule and inputs as sequential:
+            // `err` carries round t's post-carry error — the overlap
+            // window only read it)
+            if !dense && (t % self.cfg.err_every == 0 || t + 1 == self.cfg.iters) {
+                let norm_sum = self
+                    .ep
+                    .allgather_f64_fold(l2_norm(&err), 0.0f64, |a, x| a + x)?;
+                last_global_err = norm_sum / n as f64;
+            }
+
+            // --- cluster-wide select critical path for round t
+            let t_select = self
+                .ep
+                .allgather_f64_fold(my_select, 0.0f64, |a, x| a.max(x))?;
+
+            let t_compute = self.net.straggler.max_compute(t, self.cfg.compute_s, n);
+            let overlap = self.net.overlapped_step(t_compute, t_comm);
+            records.push(IterRecord {
+                t,
+                loss: f64::NAN,
+                k_user,
+                k_actual,
+                k_sum: s.k_by_rank.iter().sum(),
+                density: k_actual as f64 / n_g as f64,
+                f_ratio,
+                delta,
+                global_err: if dense { 0.0 } else { last_global_err },
+                t_compute,
+                t_select,
+                t_comm,
+                t_exposed_comm: overlap.exposed_s,
+            });
+
+            // rotate the pipeline: t+1's selection becomes the next
+            // round's contribution
+            if let Some((next_out, next_select)) = next {
+                out = next_out;
+                my_select = next_select;
+            }
         }
         Ok(records)
     }

@@ -24,6 +24,18 @@
 //! bottlenecked by their slowest participant, so one degraded link
 //! inflates the effective (α, β) of every collective the rank takes part
 //! in — which in this flat-ring model is all of them.
+//!
+//! **Overlap clock.** The default per-iteration clock is *additive*:
+//! `t_compute + t_select + t_comm`. With step-level pipelining on
+//! (`pipeline = true`), the engines run iteration t's collective
+//! split-phase under iteration t+1's compute, so the honest clock is
+//! `max(compute, comm)` instead of `compute + comm` —
+//! [`CostModel::overlapped_step`] decomposes the collective into its
+//! `hidden` part (`min(compute, comm)`, paid for by compute that runs
+//! anyway) and its `exposed` remainder, which is what the trace then
+//! charges as `t_exposed_comm` (`t_total = t_compute + t_select +
+//! t_exposed_comm`). With pipelining off, `t_exposed_comm = t_comm`
+//! exactly, keeping every existing trace bit-identical.
 
 use super::topology::Topology;
 
@@ -192,6 +204,22 @@ impl StragglerCfg {
     }
 }
 
+/// Decomposition of one pipelined iteration's modeled clock
+/// ([`CostModel::overlapped_step`]): how much of the collective hides
+/// under the overlapping compute and how much stays exposed on the
+/// critical path.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OverlappedStep {
+    /// Wall clock of the overlapped pair: `max(compute_s, comm_s)` =
+    /// `compute_s + exposed_s`.
+    pub step_s: f64,
+    /// Communication hidden behind compute: `min(compute_s, comm_s)`.
+    pub hidden_s: f64,
+    /// Exposed communication remainder: `comm_s - hidden_s` (exactly
+    /// `0.0` when the collective fits entirely under the compute).
+    pub exposed_s: f64,
+}
+
 /// Timing calculator bound to a topology.
 #[derive(Clone, Copy, Debug)]
 pub struct CostModel {
@@ -303,6 +331,43 @@ impl CostModel {
         }
         let hops = (usize::BITS - (n - 1).leading_zeros()) as f64; // ceil(log2 n)
         hops * (self.eff_alpha() + bytes as f64 * self.eff_beta())
+    }
+
+    /// Overlap accounting for step-level pipelining: iteration t's
+    /// collective (`comm_s`, already computed by the α–β forms above)
+    /// runs split-phase under the adjacent iteration's compute
+    /// (`compute_s`), so the pair costs `max(compute_s, comm_s)`
+    /// wall-clock instead of the additive `compute_s + comm_s`. The
+    /// exposed remainder is what [`IterRecord::t_exposed_comm`] charges
+    /// when `pipeline = true`; the default additive clock never calls
+    /// this.
+    ///
+    /// This is the *steady-state* per-iteration convention: each
+    /// iteration's clock pairs its own modeled compute with its own
+    /// modeled comm (what lets every engine compute it independently
+    /// and bit-identically). Pipeline boundary effects — iteration 0's
+    /// compute has no prior round to hide, the final round has no next
+    /// compute to hide under — are deliberately not special-cased, the
+    /// same way the additive clock ignores warm-up; over any run longer
+    /// than a couple of iterations the difference is one fill/drain
+    /// term.
+    ///
+    /// `step_s` is `max(compute_s, comm_s)` bit-for-bit, and a fully
+    /// hidden collective exposes exactly `0.0`. The whole decomposition
+    /// is a pure function of `(compute_s, comm_s)`, so every engine
+    /// computing it from the same modeled inputs produces bit-identical
+    /// clocks — which is what lets the pipelined trace parity tests
+    /// compare `t_exposed_comm` with `to_bits()`.
+    ///
+    /// [`IterRecord::t_exposed_comm`]: crate::metrics::IterRecord::t_exposed_comm
+    pub fn overlapped_step(&self, compute_s: f64, comm_s: f64) -> OverlappedStep {
+        let hidden_s = comm_s.min(compute_s);
+        let exposed_s = comm_s - hidden_s;
+        OverlappedStep {
+            step_s: comm_s.max(compute_s),
+            hidden_s,
+            exposed_s,
+        }
     }
 
     /// Bytes of one sparse (idx u32 + val f32) entry.
@@ -515,6 +580,43 @@ mod tests {
             ..Default::default()
         };
         assert!(sub_one.validate(4).is_err(), "sub-1 link factor is inert");
+    }
+
+    #[test]
+    fn overlapped_step_is_max_plus_exposed_remainder() {
+        let m = cm(8);
+        // comm dominates: exposed = comm - compute, step = comm
+        let ov = m.overlapped_step(0.010, 0.035);
+        assert_eq!(ov.step_s.to_bits(), 0.035f64.to_bits());
+        assert_eq!(ov.hidden_s.to_bits(), 0.010f64.to_bits());
+        assert_eq!(ov.exposed_s.to_bits(), (0.035f64 - 0.010).to_bits());
+        // compute dominates: the collective hides entirely, exposed is
+        // EXACTLY zero (x - x), never a rounding residue
+        let ov = m.overlapped_step(0.050, 0.035);
+        assert_eq!(ov.step_s.to_bits(), 0.050f64.to_bits());
+        assert_eq!(ov.hidden_s.to_bits(), 0.035f64.to_bits());
+        assert_eq!(ov.exposed_s.to_bits(), 0.0f64.to_bits());
+        // equal halves: also fully hidden
+        let ov = m.overlapped_step(0.02, 0.02);
+        assert_eq!(ov.exposed_s, 0.0);
+        assert_eq!(ov.step_s, 0.02);
+        // the overlapped clock never exceeds the additive one, and the
+        // decomposition is conservative on a sweep of magnitudes
+        for compute in [0.0, 1e-6, 0.004, 0.05, 3.0] {
+            for comm in [0.0, 1e-7, 0.004, 0.3] {
+                let ov = m.overlapped_step(compute, comm);
+                assert!(ov.step_s <= compute + comm + 1e-18);
+                assert!(ov.exposed_s <= comm);
+                assert!(ov.hidden_s <= comm && ov.hidden_s <= compute);
+                assert_eq!(ov.step_s.to_bits(), comm.max(compute).to_bits());
+            }
+        }
+        // deterministic: a pure function of its inputs (cross-engine
+        // trace parity relies on this)
+        assert_eq!(
+            m.overlapped_step(0.0123, 0.0456),
+            cm(2).overlapped_step(0.0123, 0.0456)
+        );
     }
 
     #[test]

@@ -40,9 +40,11 @@ pub use allreduce::{
     reduce_contributions, reduce_contributions_into, sparse_allreduce_union,
     sparse_allreduce_union_into, sparse_allreduce_union_iter,
 };
-pub use costmodel::{CostModel, StragglerCfg};
+pub use costmodel::{CostModel, OverlappedStep, StragglerCfg};
 pub use ranked::{
-    allgather_sparse_rk, allreduce_dense_rk, broadcast_selection_rk, sparse_allreduce_union_rk,
-    RoundScratch,
+    allgather_sparse_finish_rk, allgather_sparse_rk, allgather_sparse_start_rk,
+    allreduce_dense_rk, allreduce_dense_start_rk, broadcast_selection_finish_rk,
+    broadcast_selection_rk, sparse_allreduce_union_finish_rk, sparse_allreduce_union_rk,
+    sparse_allreduce_union_start_rk, RoundScratch,
 };
 pub use topology::Topology;

@@ -8,6 +8,13 @@
 //! [`accumulate_contribution`]) — which is what makes the engines
 //! bit-identical for a fixed seed.
 //!
+//! Each transport-backed collective also exists in split-phase form for
+//! the pipelined engines (`*_start_rk` puts the contribution in flight
+//! and returns a [`PendingRound`]; `*_finish_rk` runs the merge/reduce
+//! arithmetic on the landed board) — the finish halves are the very
+//! same cores the blocking forms call, so split-phase rounds stay
+//! bit-identical to blocking ones.
+//!
 //! Everything here is steady-state allocation-free: selections travel as
 //! `Arc<SelectOutput>` (one wrap at the selection boundary), float
 //! contributions come from the caller's rotating
@@ -21,7 +28,9 @@
 use super::allgather::{merge_selections_iter, AllGatherStats};
 use super::allreduce::{accumulate_contribution, gather_contribution_into};
 use super::costmodel::CostModel;
-use crate::cluster::transport::{envelope_mismatch, Endpoint, FloatBufPool, Message};
+use crate::cluster::transport::{
+    envelope_mismatch, Endpoint, FloatBufPool, Message, PendingRound,
+};
 use crate::coordinator::SelectOutput;
 use crate::error::{Error, Result};
 use std::sync::Arc;
@@ -100,7 +109,29 @@ pub fn allgather_sparse_rk(
     k_by_rank: &mut Vec<usize>,
 ) -> Result<AllGatherStats> {
     let board = ep.allgather(Message::Selection(mine))?;
-    let sels = board_selections(&board)?;
+    allgather_sparse_finish_rk(&board, net, union_idx, k_by_rank)
+}
+
+/// Split-phase start of the padded sparse all-gather: the selection is
+/// deposited / put on the wire before this returns. Finish the round
+/// with [`PendingRound::finish`] + [`allgather_sparse_finish_rk`].
+pub fn allgather_sparse_start_rk<'a>(
+    ep: &Endpoint<'a>,
+    mine: Arc<SelectOutput>,
+) -> Result<PendingRound<'a>> {
+    ep.allgather_start(Message::Selection(mine))
+}
+
+/// Merge half of the sparse all-gather, operating on a landed board —
+/// the same [`merge_selections_iter`] arithmetic the blocking form and
+/// the lock-step engine use, so split-phase rounds stay bit-identical.
+pub fn allgather_sparse_finish_rk(
+    board: &[Message],
+    net: &CostModel,
+    union_idx: &mut Vec<u32>,
+    k_by_rank: &mut Vec<usize>,
+) -> Result<AllGatherStats> {
+    let sels = board_selections(board)?;
     Ok(merge_selections_iter(sels, net, union_idx, k_by_rank))
 }
 
@@ -116,7 +147,21 @@ pub fn broadcast_selection_rk(
     k_by_rank: &mut Vec<usize>,
 ) -> Result<f64> {
     let board = ep.allgather(Message::Selection(mine))?;
-    let sels = board_selections(&board)?;
+    broadcast_selection_finish_rk(&board, leader, net, idx, k_by_rank)
+}
+
+/// Leader-extraction half of the CLT-k broadcast, operating on a landed
+/// board (the split-phase finish; the start is
+/// [`allgather_sparse_start_rk`] — both collectives travel as one
+/// selection round).
+pub fn broadcast_selection_finish_rk(
+    board: &[Message],
+    leader: usize,
+    net: &CostModel,
+    idx: &mut Vec<u32>,
+    k_by_rank: &mut Vec<usize>,
+) -> Result<f64> {
+    let sels = board_selections(board)?;
     k_by_rank.clear();
     k_by_rank.extend(sels.clone().map(|o| o.len()));
     let leader_sel = sels.clone().nth(leader).ok_or_else(|| {
@@ -147,8 +192,36 @@ pub fn sparse_allreduce_union_rk(
 ) -> Result<f64> {
     let mine = send.fill(|buf| gather_contribution_into(acc, union_idx, buf));
     let board = ep.allgather(Message::Floats(mine))?;
-    reduce_board_floats(&board, union_idx.len(), reduced)?;
-    Ok(net.allreduce(union_idx.len() * CostModel::DENSE_ENTRY_BYTES))
+    sparse_allreduce_union_finish_rk(&board, union_idx.len(), net, reduced)
+}
+
+/// Split-phase start of the sparse all-reduce: `acc[union_idx]` is
+/// snapshotted into the rotating send pool and put in flight — the
+/// caller is then free to mutate `acc` (error carry) and run the next
+/// iteration's compute while the payload travels. Finish with
+/// [`PendingRound::finish`] + [`sparse_allreduce_union_finish_rk`].
+pub fn sparse_allreduce_union_start_rk<'a>(
+    ep: &Endpoint<'a>,
+    acc: &[f32],
+    union_idx: &[u32],
+    send: &mut FloatBufPool,
+) -> Result<PendingRound<'a>> {
+    let mine = send.fill(|buf| gather_contribution_into(acc, union_idx, buf));
+    ep.allgather_start(Message::Floats(mine))
+}
+
+/// Reduce half of the sparse all-reduce, operating on a landed board of
+/// `len`-element contributions; returns the modeled ring all-reduce
+/// time for that byte volume (also the dense form's finish — the wire
+/// formula only depends on the element count).
+pub fn sparse_allreduce_union_finish_rk(
+    board: &[Message],
+    len: usize,
+    net: &CostModel,
+    reduced: &mut Vec<f32>,
+) -> Result<f64> {
+    reduce_board_floats(board, len, reduced)?;
+    Ok(net.allreduce(len * CostModel::DENSE_ENTRY_BYTES))
 }
 
 /// Dense all-reduce from one rank's perspective: contribute the full
@@ -163,8 +236,19 @@ pub fn allreduce_dense_rk(
 ) -> Result<f64> {
     let mine = send.fill(|buf| buf.extend_from_slice(vals));
     let board = ep.allgather(Message::Floats(mine))?;
-    reduce_board_floats(&board, vals.len(), reduced)?;
-    Ok(net.allreduce(vals.len() * CostModel::DENSE_ENTRY_BYTES))
+    sparse_allreduce_union_finish_rk(&board, vals.len(), net, reduced)
+}
+
+/// Split-phase start of the dense all-reduce: the full vector is
+/// snapshotted into the send pool and put in flight; finish with
+/// [`PendingRound::finish`] + [`sparse_allreduce_union_finish_rk`].
+pub fn allreduce_dense_start_rk<'a>(
+    ep: &Endpoint<'a>,
+    vals: &[f32],
+    send: &mut FloatBufPool,
+) -> Result<PendingRound<'a>> {
+    let mine = send.fill(|buf| buf.extend_from_slice(vals));
+    ep.allgather_start(Message::Floats(mine))
 }
 
 #[cfg(test)]

@@ -112,6 +112,8 @@ pub fn from_toml(doc: &TomlDoc) -> Result<ExperimentConfig> {
     cfg.sim.compute_s = doc.float_or("experiment", "compute_s", cfg.sim.compute_s);
     cfg.sim.engine =
         crate::cluster::EngineKind::parse(&doc.str_or("experiment", "engine", "threaded"))?;
+    // step-level pipelining (default off keeps traces bit-identical)
+    cfg.sim.pipeline = doc.bool_or("experiment", "pipeline", false);
     // [experiment] transport + [transport] — socket-transport tunables
     cfg.transport = TransportKind::parse(&doc.str_or("experiment", "transport", "local"))?;
     cfg.net.coord_addr = doc.str_or("transport", "coord_addr", &cfg.net.coord_addr);
@@ -238,6 +240,7 @@ jitter = 0.1
         .unwrap();
         let c = from_toml(&doc).unwrap();
         assert_eq!(c.sim.engine, crate::cluster::EngineKind::Lockstep);
+        assert!(!c.sim.pipeline, "pipelining must default off");
         assert_eq!(c.sim.straggler.slow_rank, 3);
         assert!((c.sim.straggler.slow_factor - 2.5).abs() < 1e-12);
         assert!((c.sim.straggler.jitter - 0.1).abs() < 1e-12);
@@ -298,6 +301,17 @@ link_beta = 8.0
         )
         .unwrap();
         assert!(from_toml(&f).is_err());
+    }
+
+    #[test]
+    fn toml_pipeline_switch() {
+        let doc = TomlDoc::parse(
+            "[experiment]\npreset = \"resnet18\"\npipeline = true\n",
+        )
+        .unwrap();
+        assert!(from_toml(&doc).unwrap().sim.pipeline);
+        let off = TomlDoc::parse("[experiment]\npreset = \"resnet18\"\n").unwrap();
+        assert!(!from_toml(&off).unwrap().sim.pipeline);
     }
 
     #[test]

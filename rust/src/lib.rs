@@ -62,11 +62,23 @@
 //! [`cluster::TransportKind`] (`transport = "tcp" | "ring"` in TOML,
 //! `exdyna launch [--transport ring]` on the CLI — one process per
 //! rank over the [`cluster::net`] wire protocol, same-host or across
-//! hosts). `rust/tests/engine_parity.rs` proves all execution modes
+//! hosts). Every transport also speaks a **split-phase** collective
+//! form (`allgather_start` → `PendingRound::finish`, contribution in
+//! flight at start), which `pipeline = true` / `--pipeline` turns into
+//! step-level pipelining: iteration t+1's gradient accumulation,
+//! error feedback and partition-local selection run while iteration
+//! t's reduce payload travels, and the α–β clock honestly charges
+//! `max(compute, comm)` per overlapped pair
+//! ([`collectives::CostModel::overlapped_step`], `t_exposed_comm` in
+//! the trace) instead of the additive sum — selection semantics stay
+//! bit-identical, pipelining changes clock fields only.
+//! `rust/tests/engine_parity.rs` proves all execution modes
 //! emit identical traces for a fixed seed — including across the
-//! process boundary on both socket topologies — and
+//! process boundary on both socket topologies, pipelined and not — and
 //! `rust/tests/transport_conformance.rs` runs one shared contract
-//! battery over every transport.
+//! battery (plus the split-phase battery: start/finish ordering,
+//! double-start rejection, abort-poisoned finish, drop-without-finish)
+//! over every transport.
 //!
 //! Entry points: [`training::run_sim`] for simulated multi-rank training,
 //! [`training::RealTrainer`] for end-to-end model training,

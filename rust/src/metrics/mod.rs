@@ -35,14 +35,24 @@ pub struct IterRecord {
     pub t_compute: f64,
     /// Measured gradient-selection seconds.
     pub t_select: f64,
-    /// Modeled communication seconds (α–β clock).
+    /// Modeled communication seconds (α–β clock), full collective
+    /// volume regardless of overlap.
     pub t_comm: f64,
+    /// Communication seconds *exposed* on the iteration's critical
+    /// path. Equal to `t_comm` under the default additive clock; with
+    /// step-level pipelining on it is the remainder of `t_comm` not
+    /// hidden behind `t_compute`
+    /// ([`CostModel::overlapped_step`](crate::collectives::CostModel::overlapped_step)),
+    /// so `t_total = t_compute + t_select + t_exposed_comm`.
+    pub t_exposed_comm: f64,
 }
 
 impl IterRecord {
-    /// Total simulated wall-clock of this iteration.
+    /// Total simulated wall-clock of this iteration: compute + select +
+    /// the *exposed* communication (which is all of `t_comm` unless the
+    /// run was pipelined).
     pub fn t_total(&self) -> f64 {
-        self.t_compute + self.t_select + self.t_comm
+        self.t_compute + self.t_select + self.t_exposed_comm
     }
 }
 
@@ -55,6 +65,10 @@ pub struct Trace {
     pub workload: String,
     /// Number of ranks.
     pub n_ranks: usize,
+    /// Was step-level pipelining on? Controls the CSV schema: pipelined
+    /// traces carry the extra `t_exposed_comm` column; non-pipelined
+    /// traces keep the legacy 13-column layout byte-identical.
+    pub pipelined: bool,
     /// Records in iteration order.
     pub records: Vec<IterRecord>,
 }
@@ -66,6 +80,7 @@ impl Trace {
             sparsifier: sparsifier.to_string(),
             workload: workload.to_string(),
             n_ranks,
+            pipelined: false,
             records: Vec::new(),
         }
     }
@@ -94,12 +109,17 @@ impl Trace {
     }
 
     /// Mean per-iteration breakdown `(compute, select, comm, total)`.
+    /// `comm` is the full modeled collective time; `total` charges only
+    /// the *exposed* communication, so it reflects the overlapped clock
+    /// when the trace was pipelined (for non-pipelined traces the two
+    /// are identical and `total = compute + select + comm` exactly).
     pub fn mean_breakdown(&self) -> (f64, f64, f64, f64) {
         let n = self.records.len().max(1) as f64;
         let c = self.records.iter().map(|r| r.t_compute).sum::<f64>() / n;
         let s = self.records.iter().map(|r| r.t_select).sum::<f64>() / n;
         let m = self.records.iter().map(|r| r.t_comm).sum::<f64>() / n;
-        (c, s, m, c + s + m)
+        let e = self.records.iter().map(|r| r.t_exposed_comm).sum::<f64>() / n;
+        (c, s, m, c + s + e)
     }
 
     /// Cumulative simulated time at each iteration.
@@ -118,9 +138,12 @@ impl Trace {
     /// written with Rust's shortest-round-trip `Display`, so every
     /// finite f64 parses back bit-identical (NaN round-trips as NaN) —
     /// which is what lets `rust/tests/engine_parity.rs` compare a trace
-    /// that crossed a process boundary against an in-process one. CSV
-    /// carries no run metadata, so `sparsifier`/`workload`/`n_ranks` are
-    /// left at their defaults.
+    /// that crossed a process boundary against an in-process one. Both
+    /// schemas are accepted: the legacy 13-column layout (where
+    /// `t_exposed_comm` is taken to equal `t_comm`) and the pipelined
+    /// 14-column layout with the explicit `t_exposed_comm` column. CSV
+    /// carries no other run metadata, so `sparsifier`/`workload`/
+    /// `n_ranks` are left at their defaults.
     pub fn read_csv(path: impl AsRef<Path>) -> crate::error::Result<Self> {
         use crate::error::Error;
         let text = std::fs::read_to_string(&path)?;
@@ -133,15 +156,20 @@ impl Trace {
                 "not a trace CSV (header '{header}')"
             )));
         }
-        let mut trace = Trace::default();
+        let pipelined = header.contains(",t_exposed_comm,");
+        let want_cols = if pipelined { 14 } else { 13 };
+        let mut trace = Trace {
+            pipelined,
+            ..Trace::default()
+        };
         for (ln, line) in lines.enumerate() {
             if line.trim().is_empty() {
                 continue;
             }
             let cols: Vec<&str> = line.split(',').collect();
-            if cols.len() != 13 {
+            if cols.len() != want_cols {
                 return Err(Error::invalid(format!(
-                    "trace CSV row {}: expected 13 columns, got {}",
+                    "trace CSV row {}: expected {want_cols} columns, got {}",
                     ln + 2,
                     cols.len()
                 )));
@@ -156,6 +184,7 @@ impl Trace {
                     Error::invalid(format!("trace CSV row {}: bad float '{}'", ln + 2, cols[i]))
                 })
             };
+            let t_comm = pf(11)?;
             trace.push(IterRecord {
                 t: pu(0)?,
                 loss: pf(1)?,
@@ -168,27 +197,38 @@ impl Trace {
                 global_err: pf(8)?,
                 t_compute: pf(9)?,
                 t_select: pf(10)?,
-                t_comm: pf(11)?,
-                // column 12 (t_total) is derived; recomputed on demand
+                t_comm,
+                t_exposed_comm: if pipelined { pf(12)? } else { t_comm },
+                // last column (t_total) is derived; recomputed on demand
             });
         }
         Ok(trace)
     }
 
-    /// Write the trace as CSV (header + one row per iteration).
+    /// Write the trace as CSV (header + one row per iteration). Non-
+    /// pipelined traces keep the legacy 13-column layout byte-for-byte;
+    /// pipelined traces add the `t_exposed_comm` column before
+    /// `t_total` (and `t_total` already charges only the exposed part).
     pub fn write_csv(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
         if let Some(dir) = path.as_ref().parent() {
             std::fs::create_dir_all(dir)?;
         }
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        writeln!(
-            f,
-            "t,loss,k_user,k_actual,k_sum,density,f_ratio,delta,global_err,t_compute,t_select,t_comm,t_total"
-        )?;
-        for r in &self.records {
+        if self.pipelined {
             writeln!(
                 f,
-                "{},{},{},{},{},{},{},{},{},{},{},{},{}",
+                "t,loss,k_user,k_actual,k_sum,density,f_ratio,delta,global_err,t_compute,t_select,t_comm,t_exposed_comm,t_total"
+            )?;
+        } else {
+            writeln!(
+                f,
+                "t,loss,k_user,k_actual,k_sum,density,f_ratio,delta,global_err,t_compute,t_select,t_comm,t_total"
+            )?;
+        }
+        for r in &self.records {
+            write!(
+                f,
+                "{},{},{},{},{},{},{},{},{},{},{},{}",
                 r.t,
                 r.loss,
                 r.k_user,
@@ -201,8 +241,11 @@ impl Trace {
                 r.t_compute,
                 r.t_select,
                 r.t_comm,
-                r.t_total()
             )?;
+            if self.pipelined {
+                write!(f, ",{}", r.t_exposed_comm)?;
+            }
+            writeln!(f, ",{}", r.t_total())?;
         }
         Ok(())
     }
@@ -220,6 +263,7 @@ mod tests {
             t_compute: 1.0,
             t_select: 0.5,
             t_comm: 2.0,
+            t_exposed_comm: 2.0,
             ..Default::default()
         }
     }
@@ -289,6 +333,50 @@ mod tests {
         assert!(Trace::read_csv(dir.join("bad.csv")).is_err());
         std::fs::write(dir.join("bad2.csv"), "wrong header\n").unwrap();
         assert!(Trace::read_csv(dir.join("bad2.csv")).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn pipelined_csv_round_trips_the_exposed_column() {
+        let mut tr = Trace::new("exdyna", "m", 2);
+        tr.pipelined = true;
+        let mut r = rec(0, 0.001, 1.25);
+        // overlap partially hides the collective
+        r.t_comm = 2.0;
+        r.t_exposed_comm = 1.0 / 3.0;
+        tr.push(r);
+        let dir = std::env::temp_dir().join(format!("exdyna_csv_pipe_{}", std::process::id()));
+        let p = dir.join("t.csv");
+        tr.write_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(
+            text.starts_with("t,loss,") && text.contains(",t_exposed_comm,"),
+            "pipelined header must carry the exposed column: {text}"
+        );
+        let back = Trace::read_csv(&p).unwrap();
+        assert!(back.pipelined);
+        assert_eq!(
+            back.records[0].t_exposed_comm.to_bits(),
+            (1.0f64 / 3.0).to_bits()
+        );
+        assert_eq!(back.records[0].t_comm.to_bits(), 2.0f64.to_bits());
+        // t_total charges the exposed part only
+        assert_eq!(
+            back.records[0].t_total().to_bits(),
+            (1.0f64 + 0.5 + 1.0 / 3.0).to_bits()
+        );
+        // legacy (non-pipelined) traces keep the 13-column layout and
+        // read back with exposed == comm
+        let mut legacy = Trace::new("exdyna", "m", 2);
+        legacy.push(rec(0, 0.001, 1.0));
+        let lp = dir.join("legacy.csv");
+        legacy.write_csv(&lp).unwrap();
+        let text = std::fs::read_to_string(&lp).unwrap();
+        assert!(!text.contains("t_exposed_comm"));
+        assert_eq!(text.lines().next().unwrap().split(',').count(), 13);
+        let back = Trace::read_csv(&lp).unwrap();
+        assert!(!back.pipelined);
+        assert_eq!(back.records[0].t_exposed_comm.to_bits(), 2.0f64.to_bits());
         std::fs::remove_dir_all(dir).ok();
     }
 }

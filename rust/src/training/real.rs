@@ -24,12 +24,24 @@
 //! Parameters stay replicated: the harness applies the identical
 //! aggregated update once per iteration, so both engines walk the same
 //! trajectory.
+//!
+//! With `RealTrainerCfg::pipeline` on, each threaded rank runs its value
+//! reduce *split-phase* ([`Endpoint::allgather_start`]): the
+//! contribution is snapshotted and put in flight, the error carry /
+//! replica feedback / error norm overlap the transfer, and the board is
+//! landed last; the record then charges the overlapped clock
+//! (`t_exposed_comm`). Note the contrast with the synthetic sim: real
+//! gradients depend on the *updated* parameters, so iteration t+1's
+//! fwd/bwd cannot legally start before iteration t's update lands —
+//! the overlap here is within-step, and the trajectory is unchanged.
 
 use crate::cluster::transport::{Endpoint, LocalTransport, Transport};
 use crate::cluster::EngineKind;
 use crate::collectives::{
-    allgather_sparse_rk, allreduce_dense_rk, broadcast_selection, broadcast_selection_rk,
-    merge_selections, sparse_allreduce_union, sparse_allreduce_union_rk, CostModel, RoundScratch,
+    allgather_sparse_rk, allreduce_dense_rk, allreduce_dense_start_rk, broadcast_selection,
+    broadcast_selection_rk, merge_selections, sparse_allreduce_union,
+    sparse_allreduce_union_finish_rk, sparse_allreduce_union_rk,
+    sparse_allreduce_union_start_rk, CostModel, RoundScratch,
 };
 use crate::coordinator::selection::compact_masked;
 use crate::coordinator::SelectOutput;
@@ -71,6 +83,14 @@ pub struct RealTrainerCfg {
     pub eval_every: usize,
     /// Which engine executes the ranks each iteration.
     pub engine: EngineKind,
+    /// Step-level pipelining: run each step's value reduce split-phase,
+    /// overlapped with the error carry / replica feedback / error-norm
+    /// work, and charge the overlapped α–β clock (`t_exposed_comm`).
+    /// The training trajectory is identical either way. (Unlike the
+    /// synthetic sim, iteration t+1's fwd/bwd CANNOT legally start
+    /// before iteration t's update lands — real gradients depend on the
+    /// updated parameters — so the overlap here is within-step.)
+    pub pipeline: bool,
 }
 
 impl Default for RealTrainerCfg {
@@ -83,6 +103,7 @@ impl Default for RealTrainerCfg {
             backend: SelectBackend::Host,
             eval_every: 0,
             engine: EngineKind::default(),
+            pipeline: false,
         }
     }
 }
@@ -275,6 +296,13 @@ fn rank_carry_and_observe(
 /// collective aggregation over the transport endpoint. Union/counts/sums
 /// land in the worker's reusable `scratch`; only rank 0 copies the
 /// (replicated) aggregate out for the harness.
+///
+/// With `cfg.pipeline` on, the (heavy) value reduce runs split-phase:
+/// the contribution is snapshotted into the send pool and put in flight,
+/// then the error carry, replica feedback and post-carry error norm —
+/// none of which read the reduce result — run while the payload
+/// travels, and the board is landed last. The aggregate and the carried
+/// error are identical either way, so the training trajectory is too.
 #[allow(clippy::too_many_arguments)]
 fn rank_step_threaded(
     rank: usize,
@@ -301,26 +329,21 @@ fn rank_step_threaded(
         out,
     } = rank_compute_select(rank, t, state, rt, workload, params, cfg)?;
 
-    let (f_ratio, t_comm);
+    // --- metadata phase: selection all-gather / leader broadcast /
+    // dense bookkeeping (identical in both clock modes)
+    let (f_ratio, t_meta);
     match state.sparsifier.comm_pattern() {
         CommPattern::DenseAllReduce => {
-            // dense all-reduce wire cost, not the sparse one
-            t_comm = allreduce_dense_rk(
-                ep,
-                &state.acc[..n_params],
-                net,
-                &mut scratch.send,
-                &mut scratch.reduced,
-            )?;
             scratch.union_idx.clear();
             scratch.union_idx.extend(0..n_params as u32);
             scratch.k_by_rank.clear();
             scratch.k_by_rank.resize(n, n_params);
             f_ratio = 1.0;
+            t_meta = 0.0;
         }
         CommPattern::LeaderBroadcast => {
             let leader = t % n;
-            let t_b = broadcast_selection_rk(
+            t_meta = broadcast_selection_rk(
                 ep,
                 Arc::new(out),
                 leader,
@@ -328,16 +351,7 @@ fn rank_step_threaded(
                 &mut scratch.union_idx,
                 &mut scratch.k_by_rank,
             )?;
-            let t_r = sparse_allreduce_union_rk(
-                ep,
-                &state.acc[..n_params],
-                &scratch.union_idx,
-                net,
-                &mut scratch.send,
-                &mut scratch.reduced,
-            )?;
             f_ratio = 1.0;
-            t_comm = t_b + t_r;
         }
         CommPattern::AllGather => {
             let stats = allgather_sparse_rk(
@@ -347,26 +361,68 @@ fn rank_step_threaded(
                 &mut scratch.union_idx,
                 &mut scratch.k_by_rank,
             )?;
-            let t_r = sparse_allreduce_union_rk(
+            f_ratio = stats.f_ratio;
+            t_meta = stats.time_s;
+        }
+    }
+
+    // --- value-reduce phase + error carry
+    let reduce_len = if dense {
+        n_params
+    } else {
+        scratch.union_idx.len()
+    };
+    let err_norm;
+    let t_reduce;
+    if cfg.pipeline {
+        // split-phase: snapshot the contribution BEFORE the carry
+        // mutates the accumulator, overlap the rank-local epilogue with
+        // the flight, land the board last
+        let pending = if dense {
+            allreduce_dense_start_rk(ep, &state.acc[..n_params], &mut scratch.send)?
+        } else {
+            sparse_allreduce_union_start_rk(
+                ep,
+                &state.acc[..n_params],
+                &scratch.union_idx,
+                &mut scratch.send,
+            )?
+        };
+        rank_carry_and_observe(state, &scratch.union_idx, &scratch.k_by_rank, t, dense)?;
+        err_norm = if dense { 0.0 } else { l2_norm(&state.err) };
+        let board = pending.finish()?;
+        t_reduce = sparse_allreduce_union_finish_rk(&board, reduce_len, net, &mut scratch.reduced)?;
+    } else {
+        t_reduce = if dense {
+            // dense all-reduce wire cost, not the sparse one (same
+            // formula, full vector length)
+            allreduce_dense_rk(
+                ep,
+                &state.acc[..n_params],
+                net,
+                &mut scratch.send,
+                &mut scratch.reduced,
+            )?
+        } else {
+            sparse_allreduce_union_rk(
                 ep,
                 &state.acc[..n_params],
                 &scratch.union_idx,
                 net,
                 &mut scratch.send,
                 &mut scratch.reduced,
-            )?;
-            f_ratio = stats.f_ratio;
-            t_comm = stats.time_s + t_r;
-        }
+            )?
+        };
+        rank_carry_and_observe(state, &scratch.union_idx, &scratch.k_by_rank, t, dense)?;
+        err_norm = if dense { 0.0 } else { l2_norm(&state.err) };
     }
-
-    rank_carry_and_observe(state, &scratch.union_idx, &scratch.k_by_rank, t, dense)?;
+    let t_comm = t_meta + t_reduce;
 
     Ok(RankStepOut {
         loss,
         t_compute,
         t_select,
-        err_norm: if dense { 0.0 } else { l2_norm(&state.err) },
+        err_norm,
         delta: state.sparsifier.delta().unwrap_or(0.0) as f64,
         // the aggregate is replicated; one copy (rank 0's) is enough
         agg: (rank == 0).then(|| AggOut {
@@ -633,9 +689,11 @@ impl RealTrainer {
                 ))
             }
         };
+        let mut trace = Trace::new(&name, &rt.meta.name, cfg.n_ranks);
+        trace.pipelined = cfg.pipeline;
         Ok(RealTrainer {
             net,
-            trace: Trace::new(&name, &rt.meta.name, cfg.n_ranks),
+            trace,
             ranks,
             params,
             workload,
@@ -817,6 +875,22 @@ impl RealTrainer {
             out.err_norm_sum / n as f64
         };
         let k_actual = agg.union_idx.len();
+        // With pipelining, the modeled clock charges max(compute, comm)
+        // per step — the idealized bucketed-DDP overlap the paper's cost
+        // model assumes, where the collective proceeds under the
+        // backward pass. NOTE this is a *modeling* convention: the
+        // harness's real overlap is within-step only (the reduce flies
+        // under the carry/observe/err-norm epilogue — see the module
+        // docs), so the modeled hidden fraction is an upper bound on
+        // what this harness physically overlaps, exactly like t_comm
+        // itself is modeled rather than measured.
+        let t_exposed_comm = if self.cfg.pipeline {
+            self.net
+                .overlapped_step(out.t_compute, agg.t_comm)
+                .exposed_s
+        } else {
+            agg.t_comm
+        };
         let rec = IterRecord {
             t,
             loss: out.losses / n as f64,
@@ -830,6 +904,7 @@ impl RealTrainer {
             t_compute: out.t_compute,
             t_select: out.t_select,
             t_comm: agg.t_comm,
+            t_exposed_comm,
         };
         self.sim_clock += rec.t_total();
         self.trace.push(rec.clone());

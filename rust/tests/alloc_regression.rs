@@ -14,9 +14,10 @@
 //! Everything runs inside ONE `#[test]` so no unrelated test-harness
 //! activity can allocate inside a counting window.
 
-use exdyna::cluster::{Endpoint, LocalTransport};
+use exdyna::cluster::{Endpoint, LocalTransport, Message};
 use exdyna::collectives::{
-    allgather_sparse_rk, sparse_allreduce_union_rk, CostModel, RoundScratch,
+    allgather_sparse_finish_rk, allgather_sparse_rk, sparse_allreduce_union_finish_rk,
+    sparse_allreduce_union_rk, sparse_allreduce_union_start_rk, CostModel, RoundScratch,
 };
 use exdyna::coordinator::{ExDynaCfg, SelectOutput};
 use exdyna::grad::synth::{DecayCfg, SynthGen, SynthModel};
@@ -160,13 +161,79 @@ fn collective_rounds(n: usize, k: usize, warmup: usize, steady: usize) -> (u64, 
     })
 }
 
+/// Split-phase (pipelined) collective iterations: the same selection
+/// all-gather + union all-reduce, but through `allgather_start` /
+/// `finish` with rank-local work in the gap and DOUBLE-BUFFERED round
+/// scratch, exactly like the pipelined `SimWorker`. `PendingRound` /
+/// `RoundToken` are stack values and the second scratch slot is reused
+/// across rounds, so the steady state must stay at 0 allocs / 0 bytes.
+fn split_phase_rounds(n: usize, k: usize, warmup: usize, steady: usize) -> (u64, u64) {
+    measure(|| {
+        let tp = Arc::new(LocalTransport::new(n));
+        let mut handles = Vec::with_capacity(n);
+        for rank in 0..n {
+            let tp = tp.clone();
+            handles.push(std::thread::spawn(move || {
+                let ep = Endpoint::new(rank, tp.as_ref());
+                let net = CostModel::paper_testbed(n);
+                let sel = Arc::new(SelectOutput {
+                    idx: ((rank * k) as u32..((rank + 1) * k) as u32).collect(),
+                    val: vec![0.25f32; k],
+                });
+                let acc = vec![0.5f32; n * k];
+                let mut scratch = [RoundScratch::new(), RoundScratch::new()];
+                let mut overlap_sink = 0.0f32;
+                for round in 0..(warmup + steady) {
+                    if rank == 0 && round == warmup {
+                        ENABLED.store(true, Ordering::SeqCst);
+                    }
+                    let s = &mut scratch[round % 2];
+                    // split-phase selection all-gather
+                    let pending = ep
+                        .allgather_start(Message::Selection(Arc::clone(&sel)))
+                        .unwrap();
+                    let board = pending.finish().unwrap();
+                    allgather_sparse_finish_rk(
+                        &board,
+                        &net,
+                        &mut s.union_idx,
+                        &mut s.k_by_rank,
+                    )
+                    .unwrap();
+                    drop(board); // release before the next publish
+                    assert_eq!(s.union_idx.len(), n * k);
+                    // split-phase union all-reduce with "compute" in the
+                    // flight window
+                    let pending =
+                        sparse_allreduce_union_start_rk(&ep, &acc, &s.union_idx, &mut s.send)
+                            .unwrap();
+                    overlap_sink += acc[round % acc.len()];
+                    let board = pending.finish().unwrap();
+                    sparse_allreduce_union_finish_rk(&board, n * k, &net, &mut s.reduced)
+                        .unwrap();
+                    drop(board);
+                    assert_eq!(s.reduced.len(), n * k);
+                }
+                assert!(overlap_sink >= 0.0);
+                if rank == 0 {
+                    ENABLED.store(false, Ordering::SeqCst);
+                }
+                ep.barrier().unwrap();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    })
+}
+
 /// Marginal allocations of one extra threaded-sim iteration (full
 /// engine, ExDyna sparsifier): the difference between a long and a short
 /// run divides out launch/teardown. The transport/merge path contributes
 /// zero (pinned exactly above); what remains is the selection path
 /// (fresh `SelectOutput`s, sparsifier bookkeeping), pinned here to a
 /// small fixed budget so hot-path regressions can't hide in the engine.
-fn sim_marginal_per_iter(iters_short: usize, iters_long: usize) -> (f64, f64) {
+fn sim_marginal_per_iter(iters_short: usize, iters_long: usize, pipeline: bool) -> (f64, f64) {
     let n = 4;
     let model = SynthModel::profile("alloc", 64_000, 8, 5, DecayCfg::default());
     let gen = SynthGen::new(model, n, 0.5, 17, false);
@@ -176,6 +243,7 @@ fn sim_marginal_per_iter(iters_short: usize, iters_long: usize) -> (f64, f64) {
             n_ranks: n,
             iters,
             compute_s: 0.01,
+            pipeline,
             ..Default::default()
         };
         measure(|| {
@@ -219,9 +287,26 @@ fn steady_state_collective_rounds_allocate_nothing() {
         "n=8 steady collective rounds must not allocate"
     );
 
+    // --- split-phase (pipelined) path: PendingRound/RoundToken and the
+    // second RoundScratch slot must be reused, never reallocated
+    let (allocs_p2, bytes_p2) = split_phase_rounds(2, 256, 8, 100);
+    assert_eq!(
+        (allocs_p2, bytes_p2),
+        (0, 0),
+        "n=2 steady split-phase rounds must not allocate"
+    );
+    let (allocs_p8, bytes_p8) = split_phase_rounds(8, 256, 8, 100);
+    assert_eq!(
+        (allocs_p8, bytes_p8),
+        (0, 0),
+        "n=8 steady split-phase rounds must not allocate"
+    );
+
     // --- whole threaded engine: the remaining per-iteration allocations
-    // are the selection path only; keep them under a fixed budget
-    let (allocs_per_iter, bytes_per_iter) = sim_marginal_per_iter(10, 60);
+    // are the selection path only; keep them under a fixed budget —
+    // pipelined and not (the pipeline's double scratch + split-phase
+    // rounds must not add steady-state allocations)
+    let (allocs_per_iter, bytes_per_iter) = sim_marginal_per_iter(10, 60, false);
     assert!(
         allocs_per_iter <= 400.0,
         "threaded sim allocates {allocs_per_iter:.1} times/iter — hot-path regression?"
@@ -229,5 +314,14 @@ fn steady_state_collective_rounds_allocate_nothing() {
     assert!(
         bytes_per_iter <= 8e6,
         "threaded sim allocates {bytes_per_iter:.0} B/iter — hot-path regression?"
+    );
+    let (allocs_pipe, bytes_pipe) = sim_marginal_per_iter(10, 60, true);
+    assert!(
+        allocs_pipe <= 400.0,
+        "pipelined threaded sim allocates {allocs_pipe:.1} times/iter — hot-path regression?"
+    );
+    assert!(
+        bytes_pipe <= 8e6,
+        "pipelined threaded sim allocates {bytes_pipe:.0} B/iter — hot-path regression?"
     );
 }

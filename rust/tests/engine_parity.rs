@@ -81,6 +81,12 @@ fn assert_traces_identical(a: &Trace, b: &Trace, ctx: &str) {
             ra.t_comm,
             rb.t_comm
         );
+        assert!(
+            f64_eq(ra.t_exposed_comm, rb.t_exposed_comm),
+            "{ctx} t={t}: t_exposed_comm (modeled) {} vs {}",
+            ra.t_exposed_comm,
+            rb.t_exposed_comm
+        );
         // t_select is measured wall time — engine-dependent by design.
     }
 }
@@ -104,6 +110,79 @@ fn threaded_and_lockstep_traces_identical_for_every_sparsifier() {
         let thr = run_sim(&gen, factory.as_ref(), &cfg(n, 12, EngineKind::Threaded)).unwrap();
         assert_eq!(lock.sparsifier, thr.sparsifier, "{sp}");
         assert_traces_identical(&lock, &thr, sp);
+    }
+}
+
+/// The pipelining acceptance tests (ISSUE 5). (a) With `pipeline` on,
+/// lock-step and threaded traces stay bit-identical for every
+/// sparsifier — the threaded engine genuinely runs split-phase rounds
+/// with the next iteration's compute in the gap, so this proves the
+/// overlap never reorders the selection math. (b) Pipeline on vs off
+/// changes CLOCK fields only: every selection-semantics field is
+/// bit-identical, `t_comm` itself is unchanged, and the exposed
+/// remainder equals `max(0, t_comm - t_compute)` with the pipelined
+/// per-iteration total never exceeding the additive one.
+#[test]
+fn pipelined_traces_bit_exact_across_engines_and_clock_only_vs_off() {
+    let n = 4;
+    for sp in [
+        "exdyna",
+        "exdyna-coarse",
+        "topk",
+        "cltk",
+        "hard-threshold",
+        "sidco",
+        "dense",
+    ] {
+        let gen = small_gen(n);
+        let factory =
+            make_sparsifier_factory(sp, 0.002, 0.01, ExDynaCfg::default_for(n)).unwrap();
+        let mut c_lock = cfg(n, 12, EngineKind::Lockstep);
+        c_lock.pipeline = true;
+        let mut c_thr = cfg(n, 12, EngineKind::Threaded);
+        c_thr.pipeline = true;
+        let lock = run_sim(&gen, factory.as_ref(), &c_lock).unwrap();
+        let thr = run_sim(&gen, factory.as_ref(), &c_thr).unwrap();
+        assert!(lock.pipelined && thr.pipelined, "{sp}");
+        assert_traces_identical(&lock, &thr, &format!("{sp} pipelined"));
+
+        // (b) against the additive-clock run: semantics identical,
+        // clock honestly overlapped
+        let off = run_sim(&gen, factory.as_ref(), &cfg(n, 12, EngineKind::Threaded)).unwrap();
+        assert!(!off.pipelined, "{sp}");
+        for (on, base) in thr.records.iter().zip(off.records.iter()) {
+            let t = on.t;
+            assert_eq!(on.k_actual, base.k_actual, "{sp} t={t}: k_actual");
+            assert_eq!(on.k_sum, base.k_sum, "{sp} t={t}: k_sum");
+            assert!(f64_eq(on.f_ratio, base.f_ratio), "{sp} t={t}: f_ratio");
+            assert!(f64_eq(on.delta, base.delta), "{sp} t={t}: delta");
+            assert!(
+                f64_eq(on.global_err, base.global_err),
+                "{sp} t={t}: global_err"
+            );
+            assert!(
+                f64_eq(on.t_compute, base.t_compute),
+                "{sp} t={t}: t_compute"
+            );
+            assert!(f64_eq(on.t_comm, base.t_comm), "{sp} t={t}: t_comm");
+            // the clock claim: exposed = max(0, comm - compute), and the
+            // pipelined total never exceeds the additive one
+            let want_exposed = on.t_comm - on.t_comm.min(on.t_compute);
+            assert_eq!(
+                on.t_exposed_comm.to_bits(),
+                want_exposed.to_bits(),
+                "{sp} t={t}: exposed remainder"
+            );
+            assert!(
+                on.t_exposed_comm <= on.t_comm,
+                "{sp} t={t}: exposed must not exceed the full collective"
+            );
+            assert_eq!(
+                base.t_exposed_comm.to_bits(),
+                base.t_comm.to_bits(),
+                "{sp} t={t}: additive clock exposes everything"
+            );
+        }
     }
 }
 
@@ -200,10 +279,11 @@ fn parity_holds_under_link_degradation() {
 /// wrote. `--ranks 3 --scale 0.01` makes the launcher resolve exactly
 /// the `preset("resnet18", 0.01, 3, 8)` config the in-process reference
 /// below builds.
-fn launch_multiprocess(transport: &str) -> Trace {
+fn launch_multiprocess(transport: &str, extra: &[&str]) -> Trace {
     let exe = env!("CARGO_BIN_EXE_exdyna");
     let dir = std::env::temp_dir().join(format!(
-        "exdyna_{transport}_parity_{}",
+        "exdyna_{transport}{}_parity_{}",
+        if extra.is_empty() { "" } else { "_extra" },
         std::process::id()
     ));
     std::fs::create_dir_all(&dir).unwrap();
@@ -232,6 +312,7 @@ fn launch_multiprocess(transport: &str) -> Trace {
             "--out",
             out.to_str().unwrap(),
         ])
+        .args(extra)
         .output()
         .expect("failed to spawn the single-host launcher");
     assert!(
@@ -247,9 +328,10 @@ fn launch_multiprocess(transport: &str) -> Trace {
 }
 
 /// The in-process reference pair for [`launch_multiprocess`]'s config.
-fn reference_traces() -> (Trace, Trace) {
+fn reference_traces_with(pipeline: bool) -> (Trace, Trace) {
     let mut cfg = exdyna::config::preset("resnet18", 0.01, 3, 8).unwrap();
     cfg.sim.seed = 17;
+    cfg.sim.pipeline = pipeline;
     let gen = SynthGen::new(cfg.model.clone(), 3, cfg.sim.rho, cfg.sim.seed, cfg.sim.exact_gen);
     let factory = make_sparsifier_factory("exdyna", 0.002, cfg.hard_delta, cfg.exdyna).unwrap();
     cfg.sim.engine = EngineKind::Lockstep;
@@ -259,12 +341,16 @@ fn reference_traces() -> (Trace, Trace) {
     (lock, thr)
 }
 
+fn reference_traces() -> (Trace, Trace) {
+    reference_traces_with(false)
+}
+
 /// The acceptance test of the socket-transport subsystem: a single-host
 /// `launch` run over the hub-star TCP transport must emit a merged
 /// trace bit-identical to both in-process engines on the same seed.
 #[test]
 fn tcp_multiprocess_trace_matches_local_and_lockstep() {
-    let tcp = launch_multiprocess("tcp");
+    let tcp = launch_multiprocess("tcp", &[]);
     assert_eq!(tcp.records.len(), 8);
     let (lock, thr) = reference_traces();
     assert_traces_identical(&tcp, &lock, "tcp-multiprocess vs lockstep");
@@ -279,11 +365,31 @@ fn tcp_multiprocess_trace_matches_local_and_lockstep() {
 /// moved different *data*, not different modeled time.
 #[test]
 fn ring_multiprocess_trace_matches_local_and_lockstep() {
-    let ring = launch_multiprocess("ring");
+    let ring = launch_multiprocess("ring", &[]);
     assert_eq!(ring.records.len(), 8);
     let (lock, thr) = reference_traces();
     assert_traces_identical(&ring, &lock, "ring-multiprocess vs lockstep");
     assert_traces_identical(&ring, &thr, "ring-multiprocess vs threaded");
+}
+
+/// The real multi-process half of the pipelining acceptance: a
+/// single-host `launch --pipeline` run — one OS process per rank, split-
+/// phase rounds over real loopback sockets, the next iteration's compute
+/// genuinely in the begin→finish gap — must emit a merged trace
+/// bit-identical to both in-process pipelined engines, 14-column CSV and
+/// all. The ring is the sharpest transport for this (eager first-chunk
+/// writes + the rank-0 receive-first ordering under split phase).
+#[test]
+fn ring_multiprocess_pipelined_trace_matches_in_process() {
+    let ring = launch_multiprocess("ring", &["--pipeline"]);
+    assert_eq!(ring.records.len(), 8);
+    assert!(
+        ring.pipelined,
+        "a --pipeline launch must write the pipelined (14-column) trace schema"
+    );
+    let (lock, thr) = reference_traces_with(true);
+    assert_traces_identical(&ring, &lock, "ring-multiprocess-pipelined vs lockstep");
+    assert_traces_identical(&ring, &thr, "ring-multiprocess-pipelined vs threaded");
 }
 
 #[test]

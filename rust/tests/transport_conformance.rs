@@ -20,6 +20,15 @@
 //! * the full `SimWorker` loop over the transport reproduces the
 //!   threaded engine's trace bit-exactly (deterministic fields).
 //!
+//! The split-phase battery (ISSUE 5) pins the start/finish contract on
+//! every transport: split-phase rounds interleave with blocking ones
+//! and stay rank-indexed over many rounds, a second start while a round
+//! is in flight is a typed error, an abort between start and finish
+//! poisons the finish within the deadline, dropping a `PendingRound`
+//! without finishing wedges nobody, and the `SimWorker` pipelined loop
+//! (`pipeline = true`) reproduces the threaded engine's pipelined trace
+//! bit-exactly over all four transports.
+//!
 //! The true multi-process star/ring paths (one OS process per rank via
 //! `exdyna launch`) are pinned by `rust/tests/engine_parity.rs`; this
 //! suite covers the transport semantics in-process where every failure
@@ -259,6 +268,128 @@ fn abort_unblocks_all_peers_and_poisons_later_calls() {
 }
 
 #[test]
+fn split_phase_rounds_interleave_with_blocking_rounds() {
+    for &(name, mk) in TRANSPORTS {
+        for n in [1usize, 3] {
+            let rounds = 12;
+            per_rank(name, mk(n), |rank, tp| {
+                let ep = Endpoint::new(rank, tp);
+                for round in 0..rounds {
+                    let mine = (rank * 1000 + round) as f64;
+                    let want: Vec<f64> = (0..n).map(|r| (r * 1000 + round) as f64).collect();
+                    let got: Vec<f64> = if round % 2 == 0 {
+                        // split phase, with rank-local "compute" in the
+                        // begin→finish gap
+                        let pending = ep.allgather_start(Message::Scalar(mine)).unwrap();
+                        let overlap: f64 = (0..64).map(f64::from).sum();
+                        assert!(overlap > 0.0);
+                        let board = pending.finish().unwrap();
+                        board
+                            .iter()
+                            .map(|m| match m {
+                                Message::Scalar(x) => *x,
+                                other => panic!("[{name}] wrong envelope {other:?}"),
+                            })
+                            .collect()
+                    } else {
+                        ep.allgather_f64(mine).unwrap()
+                    };
+                    assert_eq!(got, want, "[{name}] n={n} rank {rank} round {round}");
+                }
+            });
+        }
+    }
+}
+
+#[test]
+fn double_start_is_rejected_while_a_round_is_in_flight() {
+    for &(name, mk) in TRANSPORTS {
+        let tps = mk(1);
+        let tp = tps[0].as_ref();
+        let pending = tp.allgather_start(0, Message::Scalar(1.0)).unwrap();
+        assert!(
+            tp.allgather_start(0, Message::Scalar(2.0)).is_err(),
+            "[{name}] second start while a round is in flight must be rejected"
+        );
+        // the original round still lands, and the transport recovers
+        let board = pending.finish().unwrap();
+        assert_eq!(&board[..], &[Message::Scalar(1.0)], "[{name}]");
+        let board = tp.allgather(0, Message::Scalar(3.0)).unwrap();
+        assert_eq!(&board[..], &[Message::Scalar(3.0)], "[{name}]");
+    }
+}
+
+#[test]
+fn dropping_a_pending_round_does_not_wedge_peers() {
+    for &(name, mk) in TRANSPORTS {
+        let n = 3;
+        let rounds = 4;
+        per_rank(name, mk(n), |rank, tp| {
+            let ep = Endpoint::new(rank, tp);
+            for round in 0..rounds {
+                let mine = (rank * 100 + round) as f64;
+                if rank == 1 && round == 1 {
+                    // start, then walk away: the deposit made at start
+                    // must still reach the peers, and rank 1 must be
+                    // able to rejoin the very next round
+                    let pending = ep.allgather_start(Message::Scalar(mine)).unwrap();
+                    drop(pending);
+                    continue;
+                }
+                let got = ep.allgather_f64(mine).unwrap();
+                let want: Vec<f64> = (0..n).map(|r| (r * 100 + round) as f64).collect();
+                assert_eq!(got, want, "[{name}] rank {rank} round {round}");
+            }
+        });
+    }
+}
+
+#[test]
+fn abort_between_start_and_finish_poisons_the_finish() {
+    for &(name, mk) in TRANSPORTS {
+        let n = 3;
+        let tps = mk(n);
+        let started = Instant::now();
+        // ranks 0 and 1 start a split-phase round and park in their
+        // "overlap window"; rank 2 dies instead of depositing. Both
+        // finishes must surface an error well inside the IO deadline.
+        let barrier = Arc::new(std::sync::Barrier::new(n));
+        let mut handles = Vec::new();
+        for rank in 0..2 {
+            let tp = Arc::clone(&tps[rank]);
+            let barrier = Arc::clone(&barrier);
+            handles.push(std::thread::spawn(move || {
+                let pending = tp
+                    .as_ref()
+                    .allgather_start(rank, Message::Scalar(rank as f64))
+                    .unwrap();
+                barrier.wait();
+                let res = pending.finish();
+                if res.is_err() {
+                    // the worker contract: an erroring rank aborts its
+                    // transport so the poison propagates
+                    tp.abort();
+                }
+                res.map(|_| ())
+            }));
+        }
+        barrier.wait(); // both starts are in flight ...
+        tps[2].abort(); // ... then rank 2 dies without depositing
+        for (rank, h) in handles.into_iter().enumerate() {
+            assert!(
+                h.join().unwrap().is_err(),
+                "[{name}] rank {rank}'s finish must be poisoned, not hang"
+            );
+        }
+        assert!(
+            started.elapsed() < Duration::from_secs(15),
+            "[{name}] abort propagation into a pending finish took {:?}",
+            started.elapsed()
+        );
+    }
+}
+
+#[test]
 fn double_deposit_is_rejected_on_shared_board_transports() {
     // shared-board semantics (LocalTransport): a buggy second deposit
     // for the same (rank, round) is a typed invariant error in every
@@ -288,58 +419,68 @@ fn simworker_traces_are_bit_exact_on_every_transport() {
     let n = 3;
     let model = SynthModel::profile("conf", 48_000, 6, 5, DecayCfg::default());
     let gen = SynthGen::new(model, n, 0.5, 29, false);
-    let cfg = SimCfg {
-        n_ranks: n,
-        iters: 6,
-        compute_s: 0.01,
-        ..Default::default()
-    };
     let mk_sp = |n_g: usize, nr: usize| -> Result<Box<dyn Sparsifier>> {
         Ok(Box::new(ExDyna::new(n_g, nr, ExDynaCfg::default_for(nr))?))
     };
-    let reference = run_threaded(&gen, &mk_sp, &cfg).unwrap();
-    for &(name, mk) in TRANSPORTS {
-        let tps = mk(n);
-        let traces: Vec<_> = std::thread::scope(|scope| {
-            let gen = &gen;
-            let cfg = &cfg;
-            let handles: Vec<_> = tps
-                .iter()
-                .enumerate()
-                .map(|(rank, tp)| {
-                    let tp = Arc::clone(tp);
-                    scope.spawn(move || {
-                        run_rank_on_transport(gen, &mk_sp, cfg, rank, tp.as_ref())
+    // pipeline = true runs the split-phase software pipeline on every
+    // transport — the cross-transport half of the ISSUE 5 acceptance
+    for pipeline in [false, true] {
+        let cfg = SimCfg {
+            n_ranks: n,
+            iters: 6,
+            compute_s: 0.01,
+            pipeline,
+            ..Default::default()
+        };
+        let reference = run_threaded(&gen, &mk_sp, &cfg).unwrap();
+        for &(name, mk) in TRANSPORTS {
+            let tps = mk(n);
+            let traces: Vec<_> = std::thread::scope(|scope| {
+                let gen = &gen;
+                let cfg = &cfg;
+                let handles: Vec<_> = tps
+                    .iter()
+                    .enumerate()
+                    .map(|(rank, tp)| {
+                        let tp = Arc::clone(tp);
+                        scope.spawn(move || {
+                            run_rank_on_transport(gen, &mk_sp, cfg, rank, tp.as_ref())
+                        })
                     })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().unwrap().unwrap())
-                .collect()
-        });
-        for (rank, trace) in traces.iter().enumerate() {
-            assert_eq!(
-                trace.records.len(),
-                reference.records.len(),
-                "[{name}] rank {rank}"
-            );
-            for (a, b) in trace.records.iter().zip(reference.records.iter()) {
-                let ctx = format!("[{name}] rank {rank} t={}", a.t);
-                assert_eq!(a.k_actual, b.k_actual, "{ctx}: k_actual");
-                assert_eq!(a.k_sum, b.k_sum, "{ctx}: k_sum");
-                assert_eq!(a.delta.to_bits(), b.delta.to_bits(), "{ctx}: delta");
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().unwrap().unwrap())
+                    .collect()
+            });
+            for (rank, trace) in traces.iter().enumerate() {
                 assert_eq!(
-                    a.global_err.to_bits(),
-                    b.global_err.to_bits(),
-                    "{ctx}: global_err"
+                    trace.records.len(),
+                    reference.records.len(),
+                    "[{name}] pipeline={pipeline} rank {rank}"
                 );
-                assert_eq!(a.t_comm.to_bits(), b.t_comm.to_bits(), "{ctx}: t_comm");
-                assert_eq!(
-                    a.t_compute.to_bits(),
-                    b.t_compute.to_bits(),
-                    "{ctx}: t_compute"
-                );
+                for (a, b) in trace.records.iter().zip(reference.records.iter()) {
+                    let ctx = format!("[{name}] pipeline={pipeline} rank {rank} t={}", a.t);
+                    assert_eq!(a.k_actual, b.k_actual, "{ctx}: k_actual");
+                    assert_eq!(a.k_sum, b.k_sum, "{ctx}: k_sum");
+                    assert_eq!(a.delta.to_bits(), b.delta.to_bits(), "{ctx}: delta");
+                    assert_eq!(
+                        a.global_err.to_bits(),
+                        b.global_err.to_bits(),
+                        "{ctx}: global_err"
+                    );
+                    assert_eq!(a.t_comm.to_bits(), b.t_comm.to_bits(), "{ctx}: t_comm");
+                    assert_eq!(
+                        a.t_exposed_comm.to_bits(),
+                        b.t_exposed_comm.to_bits(),
+                        "{ctx}: t_exposed_comm"
+                    );
+                    assert_eq!(
+                        a.t_compute.to_bits(),
+                        b.t_compute.to_bits(),
+                        "{ctx}: t_compute"
+                    );
+                }
             }
         }
     }
