@@ -10,7 +10,13 @@
 //! whose modeled per-iteration time must be ≤ the additive clock on
 //! EVERY iteration (checked here) while the sparsification trajectory
 //! stays bit-identical. The pipeline on/off sweep is also written to
-//! `BENCH_pipeline_fig8.json`. Reports, per scale:
+//! `BENCH_pipeline_fig8.json`. A `threaded+rsag` column (ISSUE 6) runs
+//! the same sweep with the reduce-scatter → all-gather collective and
+//! asserts the acceptance bound per iteration at n ∈ {4, 8, 16}:
+//! modeled per-rank received value volume ≤ `(k + (n-1)/n·k)·payload`,
+//! strictly below the all-gather collective's `(n-1)·k·payload`
+//! full-board fan-in; the allgather-vs-rsag sweep is written to
+//! `BENCH_collective_fig8.json`. Reports, per scale:
 //! * host wall-clock of the whole run per mode and the
 //!   lockstep/threaded speedup ratio;
 //! * identical-trace check (all modes must agree bit-exactly on the
@@ -25,7 +31,8 @@
 //! Shape to match the paper: comparable final loss at every scale while
 //! simulated per-iteration cost grows only mildly with n.
 
-use exdyna::cluster::EngineKind;
+use exdyna::cluster::{CollectiveKind, EngineKind};
+use exdyna::collectives::CostModel;
 use exdyna::config::preset;
 use exdyna::coordinator::ExDynaCfg;
 use exdyna::grad::synth::SynthGen;
@@ -49,6 +56,7 @@ fn main() -> exdyna::Result<()> {
     let tmp = std::env::temp_dir().join(format!("exdyna_fig8_{}", std::process::id()));
     std::fs::create_dir_all(&tmp)?;
     let mut pipe_json = Vec::new();
+    let mut collective_json = Vec::new();
     for ranks in [2usize, 4, 8, 16] {
         let cfg = preset("resnet152", scale, ranks, iters)?;
         let gen = SynthGen::new(cfg.model.clone(), ranks, cfg.sim.rho, cfg.sim.seed, false);
@@ -124,6 +132,66 @@ fn main() -> exdyna::Result<()> {
                  \"mean_comm_s\": {:.6}, \"wall_s_pipelined\": {pipe_wall:.3}}}",
                 exposed_sum / piped.records.len().max(1) as f64,
                 comm_sum / piped.records.len().max(1) as f64,
+            ));
+        }
+        // rsag ON: same threaded run over the reduce-scatter →
+        // all-gather collective; the clock model is collective-neutral
+        // (low FP bits may differ — parity is pinned rsag-vs-rsag in
+        // engine_parity), but the modeled received volume must honour
+        // the ISSUE 6 acceptance bound on EVERY iteration at n >= 4
+        {
+            let mut sim = cfg.sim;
+            sim.engine = EngineKind::Threaded;
+            sim.collective = CollectiveKind::Rsag;
+            let st = Instant::now();
+            let rsag = run_sim(&gen, factory.as_ref(), &sim)?;
+            let rsag_wall = st.elapsed().as_secs_f64();
+            let (_, _, _, tot_rsag) = rsag.mean_breakdown();
+            let net = CostModel::paper_testbed(ranks);
+            let mut ag_bytes_sum = 0u128;
+            let mut rsag_bytes_sum = 0u128;
+            for r in &rsag.records {
+                let v = r.k_actual * CostModel::DENSE_ENTRY_BYTES;
+                let ag_recv = net.allgather_recv_bytes_per_rank(v);
+                let rs_recv = net.rsag_recv_bytes_per_rank(v);
+                if ranks >= 4 {
+                    assert!(
+                        rs_recv <= v + (ranks - 1) * v / ranks,
+                        "n={ranks} t={}: rsag recv {rs_recv} B exceeds the \
+                         (k + (n-1)/n*k)*payload bound",
+                        r.t
+                    );
+                    assert!(
+                        rs_recv < ag_recv,
+                        "n={ranks} t={}: rsag recv {rs_recv} B not below the \
+                         (n-1)*k*payload all-gather fan-in {ag_recv} B",
+                        r.t
+                    );
+                }
+                ag_bytes_sum += ag_recv as u128;
+                rsag_bytes_sum += rs_recv as u128;
+            }
+            println!(
+                "{ranks},threaded+rsag,{:.3},{:.4},{:.6}",
+                rsag_wall,
+                tot_rsag,
+                rsag.mean_density_tail(iters / 3)
+            );
+            let iters_f = rsag.records.len().max(1) as f64;
+            let (_, _, _, tot_ag) = traces[1].mean_breakdown();
+            eprintln!(
+                "# n = {ranks:<3} collective volume: allgather {:.0} B/rank/iter -> rsag {:.0} \
+                 B/rank/iter",
+                ag_bytes_sum as f64 / iters_f,
+                rsag_bytes_sum as f64 / iters_f
+            );
+            collective_json.push(format!(
+                "    {{\"ranks\": {ranks}, \"sim_iter_s_allgather\": {tot_ag:.6}, \
+                 \"sim_iter_s_rsag\": {tot_rsag:.6}, \
+                 \"mean_allgather_recv_bytes_per_rank\": {:.1}, \
+                 \"mean_rsag_recv_bytes_per_rank\": {:.1}, \"wall_s_rsag\": {rsag_wall:.3}}}",
+                ag_bytes_sum as f64 / iters_f,
+                rsag_bytes_sum as f64 / iters_f,
             ));
         }
         // tcp star + ring: the same run as one process per rank over
@@ -203,6 +271,15 @@ fn main() -> exdyna::Result<()> {
     match std::fs::write("BENCH_pipeline_fig8.json", &json) {
         Ok(()) => eprintln!("# pipeline on/off sweep -> BENCH_pipeline_fig8.json"),
         Err(e) => eprintln!("# could not write BENCH_pipeline_fig8.json: {e}"),
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"fig8_scaleout\",\n  \"iters\": {iters},\n  \"scale\": {scale},\n  \
+         \"rows\": [\n{}\n  ]\n}}\n",
+        collective_json.join(",\n")
+    );
+    match std::fs::write("BENCH_collective_fig8.json", &json) {
+        Ok(()) => eprintln!("# allgather vs rsag sweep -> BENCH_collective_fig8.json"),
+        Err(e) => eprintln!("# could not write BENCH_collective_fig8.json: {e}"),
     }
 
     // --- Part 2: real-model convergence by scale (needs PJRT + artifacts)

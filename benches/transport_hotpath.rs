@@ -24,6 +24,14 @@
 //! is also emitted machine-readably to `BENCH_pipeline.json` so the
 //! perf trajectory is tracked from this PR onward.
 //!
+//! Each pair is then measured again with the reduce-scatter →
+//! all-gather collective (`+rsag` / `+pipe+rsag` rows, ISSUE 6): same
+//! selection round, same burn, but the value reduce moves
+//! `2(n-1)/n·V` per rank instead of the full `(n-1)·V` board. The
+//! allgather-vs-rsag sweep — measured µs plus the modeled per-rank
+//! received-byte volumes of both forms — lands in
+//! `BENCH_collective.json`.
+//!
 //! A second table prints the *modeled* star-vs-ring wire asymmetry for
 //! the same per-rank payload — the α·(n−1) + β·(n−1)/n·V ring form the
 //! traces charge vs the hub-star shape, and the per-link byte volumes
@@ -32,10 +40,10 @@
 //! Run: `cargo bench --bench transport_hotpath [-- --quick]`
 
 use exdyna::cluster::testing::{local_cluster, ring_cluster, ring_local_cluster, tcp_cluster};
-use exdyna::cluster::{Endpoint, Message, Transport};
+use exdyna::cluster::{CollectiveKind, Endpoint, Message, Transport};
 use exdyna::collectives::{
-    allgather_sparse_finish_rk, allgather_sparse_rk, sparse_allreduce_union_finish_rk,
-    sparse_allreduce_union_rk, sparse_allreduce_union_start_rk, CostModel, RoundScratch,
+    allgather_sparse_finish_rk, allgather_sparse_rk, value_reduce_union_rk,
+    value_reduce_union_start_rk, CostModel, RoundScratch,
 };
 use exdyna::coordinator::SelectOutput;
 use std::alloc::{GlobalAlloc, Layout, System};
@@ -88,7 +96,8 @@ fn compute_burn(acc: &[f32]) -> f32 {
 /// One rank's steady loop; rank 0 opens/closes the counting window and
 /// measures the steady wall time. `pipeline` selects blocking rounds
 /// (compute after the collectives) or split-phase rounds (compute in
-/// the flight windows) — the per-round work is identical either way.
+/// the flight windows); `collective` selects the value-reduce form —
+/// the per-round work is identical in every combination.
 fn rank_loop(
     rank: usize,
     n: usize,
@@ -96,6 +105,7 @@ fn rank_loop(
     warmup: usize,
     steady: usize,
     pipeline: bool,
+    collective: CollectiveKind,
 ) -> Duration {
     let ep = Endpoint::new(rank, tp);
     let net = CostModel::paper_testbed(n);
@@ -123,12 +133,12 @@ fn rank_loop(
                 .unwrap();
             drop(board);
             let pending =
-                sparse_allreduce_union_start_rk(&ep, &acc, &s.union_idx, &mut s.send).unwrap();
+                value_reduce_union_start_rk(&ep, collective, &acc, &s.union_idx, &mut s.send)
+                    .unwrap();
             sink += compute_burn(&acc);
-            let board = pending.finish().unwrap();
-            sparse_allreduce_union_finish_rk(&board, s.union_idx.len(), &net, &mut s.reduced)
+            pending
+                .finish(s.union_idx.len(), &net, &mut s.shards, &mut s.reduced)
                 .unwrap();
-            drop(board);
         } else {
             allgather_sparse_rk(
                 &ep,
@@ -139,12 +149,14 @@ fn rank_loop(
             )
             .unwrap();
             sink += compute_burn(&acc);
-            sparse_allreduce_union_rk(
+            value_reduce_union_rk(
                 &ep,
+                collective,
                 &acc,
                 &s.union_idx,
                 &net,
                 &mut s.send,
+                &mut s.shards,
                 &mut s.reduced,
             )
             .unwrap();
@@ -197,6 +209,7 @@ fn bench_cluster(
     warmup: usize,
     steady: usize,
     pipeline: bool,
+    collective: CollectiveKind,
 ) -> Row {
     let n = tps.len();
     ENABLED.store(false, Ordering::SeqCst);
@@ -205,7 +218,7 @@ fn bench_cluster(
     let mut handles = Vec::with_capacity(n);
     for (rank, tp) in tps.into_iter().enumerate() {
         handles.push(std::thread::spawn(move || {
-            rank_loop(rank, n, tp.as_ref(), warmup, steady, pipeline)
+            rank_loop(rank, n, tp.as_ref(), warmup, steady, pipeline, collective)
         }));
     }
     let mut wall = Duration::ZERO;
@@ -260,12 +273,20 @@ fn main() {
         ),
     ];
     let mut json_rows = Vec::new();
+    let mut collective_rows = Vec::new();
     for (mode, warmup, rounds, mk) in &modes {
         for n in [2usize, 8, 16] {
-            let blocking = bench_cluster(mode.to_string(), mk(n), *warmup, *rounds, false);
+            let ag = CollectiveKind::Allgather;
+            let rs = CollectiveKind::Rsag;
+            let blocking = bench_cluster(mode.to_string(), mk(n), *warmup, *rounds, false, ag);
             blocking.print();
-            let piped = bench_cluster(format!("{mode}+pipe"), mk(n), *warmup, *rounds, true);
+            let piped = bench_cluster(format!("{mode}+pipe"), mk(n), *warmup, *rounds, true, ag);
             piped.print();
+            let rsag = bench_cluster(format!("{mode}+rsag"), mk(n), *warmup, *rounds, false, rs);
+            rsag.print();
+            let rsag_piped =
+                bench_cluster(format!("{mode}+pipe+rsag"), mk(n), *warmup, *rounds, true, rs);
+            rsag_piped.print();
             let hidden_us = (blocking.us_per_round() - piped.us_per_round()).max(0.0);
             json_rows.push(format!(
                 "    {{\"mode\": \"{mode}\", \"ranks\": {n}, \"rounds\": {rounds}, \
@@ -277,6 +298,22 @@ fn main() {
                 hidden_us,
                 piped.allocs as f64 / piped.steady as f64,
                 piped.bytes as f64 / piped.steady as f64,
+            ));
+            // the value reduce moves the n·k-element union as f32s
+            let m = CostModel::paper_testbed(n);
+            let v = n * K_PER_RANK * CostModel::DENSE_ENTRY_BYTES;
+            collective_rows.push(format!(
+                "    {{\"mode\": \"{mode}\", \"ranks\": {n}, \"rounds\": {rounds}, \
+                 \"us_per_round_allgather\": {:.3}, \"us_per_round_rsag\": {:.3}, \
+                 \"us_per_round_allgather_pipelined\": {:.3}, \
+                 \"us_per_round_rsag_pipelined\": {:.3}, \
+                 \"allgather_recv_bytes_per_rank\": {}, \"rsag_recv_bytes_per_rank\": {}}}",
+                blocking.us_per_round(),
+                rsag.us_per_round(),
+                piped.us_per_round(),
+                rsag_piped.us_per_round(),
+                m.allgather_recv_bytes_per_rank(v),
+                m.rsag_recv_bytes_per_rank(v),
             ));
         }
     }
@@ -290,6 +327,19 @@ fn main() {
     match std::fs::write("BENCH_pipeline.json", &json) {
         Ok(()) => eprintln!("# pipeline sweep -> BENCH_pipeline.json"),
         Err(e) => eprintln!("# could not write BENCH_pipeline.json: {e}"),
+    }
+
+    // machine-readable allgather-vs-rsag sweep: measured µs per round
+    // for both collective forms next to the modeled per-rank received
+    // volumes ((n-1)·V full board vs 2(n-1)/n·V shards)
+    let json = format!(
+        "{{\n  \"bench\": \"transport_hotpath\",\n  \"k_per_rank\": {K_PER_RANK},\n  \
+         \"burn_iters\": {BURN_ITERS},\n  \"quick\": {quick},\n  \"rows\": [\n{}\n  ]\n}}\n",
+        collective_rows.join(",\n")
+    );
+    match std::fs::write("BENCH_collective.json", &json) {
+        Ok(()) => eprintln!("# collective sweep -> BENCH_collective.json"),
+        Err(e) => eprintln!("# could not write BENCH_collective.json: {e}"),
     }
 
     // modeled star-vs-ring wire asymmetry for the same payload: what

@@ -39,6 +39,20 @@
 //! cargo run --release -- launch --world-size 4 --pipeline --iters 100 --out trace.csv
 //! ```
 //!
+//! Add `--collective rsag` to either form (and to `sim`, or
+//! `collective = "rsag"` in TOML) to swap the full-board all-gather for
+//! the sparse reduce-scatter → all-gather: each rank owns the index
+//! shard matching its ExDyna partition, reduces incoming contributions
+//! for that shard in flight, and all-gathers only the n reduced shards
+//! — per-rank received value volume drops from `(n-1)·V` to
+//! `2(n-1)/n·V` (the modeled clock is collective-neutral; low FP bits
+//! differ from all-gather because the canonical rsag reduction order is
+//! a different — still deterministic — f32 summation order):
+//!
+//! ```text
+//! cargo run --release -- launch --world-size 4 --collective rsag --iters 100 --out trace.csv
+//! ```
+//!
 //! The merged trace is bit-identical to `sim --engine threaded` and
 //! `sim --engine lockstep` on the same seed — on both socket
 //! topologies (`rust/tests/engine_parity.rs` enforces this) — so every

@@ -65,7 +65,16 @@
 //! [`EngineKind`] selects between the threaded engine and the legacy
 //! lock-step path (kept for bit-exact comparison); [`TransportKind`]
 //! selects the transport (`transport = "tcp" | "ring"` in TOML,
-//! `--transport` on the CLI, or the `launch` subcommand).
+//! `--transport` on the CLI, or the `launch` subcommand); and
+//! [`CollectiveKind`] selects the value-reduce collective
+//! (`collective = "allgather" | "rsag"` in TOML, `--collective` on the
+//! CLI): the default full-board all-gather, or the reduce-scatter →
+//! all-gather ([`Transport::reduce_scatter_allgather`], wrapped
+//! split-phase by [`PendingReduce`]) in which each rank reduces its
+//! 1/n index shard in flight and only the n reduced shards are
+//! all-gathered — per-rank received volume `2(n-1)/n·V` instead of
+//! `(n-1)·V`, with the modeled clock unchanged (it always charged the
+//! rsag-shaped `2(n-1)·α + 2(n-1)/n·V·β` form).
 //! `rust/tests/engine_parity.rs` pins trace equality across every
 //! execution mode, including real multi-process star and ring runs.
 //!
@@ -83,7 +92,10 @@ pub use engine::{
 };
 pub use net::{NetCfg, RingTransport, TcpTransport};
 pub use ring_local::RingLocal;
-pub use transport::{Endpoint, LocalTransport, Message, PendingRound, RoundToken, Transport};
+pub use transport::{
+    Endpoint, FloatBufPool, LocalTransport, Message, PendingReduce, PendingRound, RoundToken,
+    Transport,
+};
 pub use worker::SimWorker;
 
 use crate::error::{Error, Result};
@@ -189,6 +201,56 @@ impl std::fmt::Display for TransportKind {
     }
 }
 
+/// Which collective form moves the value reduce.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CollectiveKind {
+    /// Full-board all-gather + local reduce (the default): every rank
+    /// receives all n contributions — `(n-1)·V` received per rank.
+    #[default]
+    Allgather,
+    /// Reduce-scatter → all-gather: each rank reduces its 1/n index
+    /// shard in flight, then the n reduced shards are all-gathered —
+    /// `2(n-1)/n·V` received per rank, flat in n. Modeled times are
+    /// identical to the default (the clock always charged this shape);
+    /// reduced *values* differ in low bits because the shard sums
+    /// accumulate in ring order rather than rank order.
+    Rsag,
+}
+
+impl CollectiveKind {
+    /// Parse a CLI/config name.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "allgather" => Ok(CollectiveKind::Allgather),
+            "rsag" => Ok(CollectiveKind::Rsag),
+            other => Err(Error::invalid(format!(
+                "unknown collective '{other}' (have: allgather, rsag)"
+            ))),
+        }
+    }
+
+    /// Canonical name (round-trips through [`CollectiveKind::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            CollectiveKind::Allgather => "allgather",
+            CollectiveKind::Rsag => "rsag",
+        }
+    }
+}
+
+impl std::str::FromStr for CollectiveKind {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        CollectiveKind::parse(s)
+    }
+}
+
+impl std::fmt::Display for CollectiveKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -214,5 +276,15 @@ mod tests {
         assert!(!TransportKind::Local.is_multiprocess());
         assert!(TransportKind::Tcp.is_multiprocess());
         assert!(TransportKind::Ring.is_multiprocess());
+    }
+
+    #[test]
+    fn collective_kind_roundtrips() {
+        for k in [CollectiveKind::Allgather, CollectiveKind::Rsag] {
+            assert_eq!(CollectiveKind::parse(k.name()).unwrap(), k);
+            assert_eq!(k.name().parse::<CollectiveKind>().unwrap(), k);
+        }
+        assert!(CollectiveKind::parse("gossip").is_err());
+        assert_eq!(CollectiveKind::default(), CollectiveKind::Allgather);
     }
 }

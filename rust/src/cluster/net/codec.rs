@@ -41,8 +41,9 @@ use std::sync::Arc;
 pub const MAGIC: u32 = 0x4558_4459;
 
 /// Wire protocol version; bumped on any layout change (v2 added the
-/// ring-rendezvous frames: `HelloRing`, `WelcomeRing`, `RingLink`).
-pub const PROTOCOL_VERSION: u16 = 2;
+/// ring-rendezvous frames: `HelloRing`, `WelcomeRing`, `RingLink`; v3
+/// added the reduce-scatter [`Frame::Shard`] frame).
+pub const PROTOCOL_VERSION: u16 = 3;
 
 /// Hard cap on one frame's payload — guards allocation on corrupt
 /// length fields (a selection frame at this size would be ~16M entries,
@@ -110,6 +111,23 @@ pub enum Frame {
         /// The dialing rank.
         rank: u32,
     },
+    /// One reduce-scatter → all-gather hop on the ring: the partial (or,
+    /// in the gather phase, fully reduced) values of one index chunk,
+    /// forwarded right. `step` orders the hops within a round so a
+    /// receiver can detect scheduling divergence, `chunk` names the
+    /// index shard the values belong to ([`shard_bounds`]).
+    ///
+    /// [`shard_bounds`]: crate::collectives::shard_bounds
+    Shard {
+        /// Round counter (must match the receiver's current round).
+        generation: u64,
+        /// Hop number within the round's 2(n-1)-step schedule.
+        step: u32,
+        /// Which index shard these values belong to.
+        chunk: u32,
+        /// The chunk's values (partial sums or the reduced shard).
+        vals: Vec<f32>,
+    },
 }
 
 const KIND_DATA: u8 = 0;
@@ -120,6 +138,7 @@ const KIND_ABORT: u8 = 4;
 const KIND_HELLO_RING: u8 = 5;
 const KIND_WELCOME_RING: u8 = 6;
 const KIND_RING_LINK: u8 = 7;
+const KIND_SHARD: u8 = 8;
 
 const MSG_SELECTION: u8 = 0;
 const MSG_FLOATS: u8 = 1;
@@ -373,6 +392,19 @@ fn encode_payload_into(frame: &Frame, buf: &mut Vec<u8>) -> u8 {
             put_u32(buf, *rank);
             KIND_RING_LINK
         }
+        Frame::Shard {
+            generation,
+            step,
+            chunk,
+            vals,
+        } => {
+            put_u64(buf, *generation);
+            put_u32(buf, *step);
+            put_u32(buf, *chunk);
+            put_u32(buf, vals.len() as u32);
+            put_f32_slab(buf, vals);
+            KIND_SHARD
+        }
     }
 }
 
@@ -420,6 +452,23 @@ fn decode_payload(kind: u8, payload: &[u8]) -> Result<Frame> {
         KIND_RING_LINK => Frame::RingLink {
             rank: c.u32("ring-link rank")?,
         },
+        KIND_SHARD => {
+            let generation = c.u64("shard generation")?;
+            let step = c.u32("shard step")?;
+            let chunk = c.u32("shard chunk")?;
+            let n = c.u32("shard count")? as usize;
+            let total = n
+                .checked_mul(4)
+                .ok_or_else(|| Error::protocol("shard count overflows"))?;
+            c.require(total, "shard payload")?;
+            let vals = c.f32_slab(n, "shard values")?;
+            Frame::Shard {
+                generation,
+                step,
+                chunk,
+                vals,
+            }
+        }
         other => return Err(Error::protocol(format!("unknown frame kind {other}"))),
     };
     c.finish("frame payload")?;
@@ -450,6 +499,35 @@ pub fn encode_frame(frame: &Frame) -> Vec<u8> {
     let mut buf = Vec::new();
     encode_frame_append(frame, &mut buf);
     buf
+}
+
+/// Append one [`Frame::Shard`]'s complete wire bytes straight from a
+/// value slice — byte-identical to `encode_frame_append` on the
+/// equivalent `Frame::Shard`, without building the frame (the ring
+/// transport's reduce-scatter hot path encodes chunk ranges of stashed
+/// contributions and accumulator buffers without a `Vec` per hop).
+pub fn encode_shard_append(
+    buf: &mut Vec<u8>,
+    generation: u64,
+    step: u32,
+    chunk: u32,
+    vals: &[f32],
+) {
+    let frame_start = buf.len();
+    put_u32(buf, MAGIC);
+    put_u16(buf, PROTOCOL_VERSION);
+    buf.push(KIND_SHARD);
+    put_u32(buf, 0); // payload length, patched below
+    let body_start = buf.len();
+    put_u64(buf, generation);
+    put_u32(buf, step);
+    put_u32(buf, chunk);
+    put_u32(buf, vals.len() as u32);
+    put_f32_slab(buf, vals);
+    let len = (buf.len() - body_start) as u32;
+    buf[frame_start + 7..frame_start + 11].copy_from_slice(&len.to_le_bytes());
+    let check = fnv1a(&buf[frame_start..]);
+    put_u32(buf, check);
 }
 
 fn parse_header(h: &[u8; HEADER_LEN]) -> Result<(u8, u32)> {
@@ -638,10 +716,16 @@ mod tests {
     impl Strategy for FrameStrat {
         type Value = Frame;
         fn gen(&self, rng: &mut Rng) -> Frame {
-            match rng.usize(9) {
+            match rng.usize(10) {
                 0 | 1 => Frame::Data {
                     generation: rng.next_u64(),
                     msg: gen_message(rng),
+                },
+                8 => Frame::Shard {
+                    generation: rng.next_u64(),
+                    step: rng.usize(16) as u32,
+                    chunk: rng.usize(16) as u32,
+                    vals: (0..rng.usize(40)).map(|_| gen_f32(rng)).collect(),
                 },
                 2 => Frame::Hello {
                     world: rng.usize(64) as u32,
@@ -882,6 +966,66 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn shard_frames_roundtrip_and_match_the_slice_encoder() {
+        let vals = vec![1.5f32, f32::from_bits(0x7FC0_1234), -0.0, 3.25];
+        let f = Frame::Shard {
+            generation: 9,
+            step: 2,
+            chunk: 1,
+            vals: vals.clone(),
+        };
+        let bytes = encode_frame(&f);
+        // canonical-bytes round trip (PartialEq can't see through NaN)
+        let decoded = decode_frame(&bytes).unwrap();
+        assert_eq!(encode_frame(&decoded), bytes);
+        match decoded {
+            Frame::Shard {
+                generation,
+                step,
+                chunk,
+                vals: got,
+            } => {
+                assert_eq!((generation, step, chunk), (9, 2, 1));
+                let got: Vec<u32> = got.iter().map(|x| x.to_bits()).collect();
+                let want: Vec<u32> = vals.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(got, want, "NaN payload bits must survive");
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+        // the slice encoder is byte-identical — it IS the ring hot path
+        let mut direct = vec![0x5Au8; 3]; // dirty reusable buffer
+        encode_shard_append(&mut direct, 9, 2, 1, &vals);
+        assert_eq!(&direct[3..], &bytes[..]);
+        for k in 0..bytes.len() {
+            assert!(
+                decode_frame(&bytes[..k]).is_err(),
+                "truncated shard frame at {k} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn hostile_shard_count_rejected_before_allocation() {
+        // Shard claiming 50M values (~200 MB) with an empty body
+        let mut payload = Vec::new();
+        put_u64(&mut payload, 0); // generation
+        put_u32(&mut payload, 0); // step
+        put_u32(&mut payload, 0); // chunk
+        put_u32(&mut payload, 50_000_000);
+        let mut frame = Vec::new();
+        put_u32(&mut frame, MAGIC);
+        put_u16(&mut frame, PROTOCOL_VERSION);
+        frame.push(KIND_SHARD);
+        put_u32(&mut frame, payload.len() as u32);
+        frame.extend_from_slice(&payload);
+        let check = fnv1a(&frame);
+        put_u32(&mut frame, check);
+        let err = decode_frame(&frame).unwrap_err();
+        assert!(matches!(err, Error::Protocol(_)), "{err}");
+        assert!(err.to_string().contains("remain"), "{err}");
     }
 
     #[test]

@@ -4,10 +4,12 @@
 //! This is the subsystem that takes the cluster engine across process
 //! (and host) boundaries, std-only:
 //!
-//! * [`codec`] — length-prefixed little-endian framing with a
-//!   magic/version header and FNV-1a checksum for every
-//!   [`Message`] variant plus the handshake frames; NaN payloads
-//!   round-trip bit-exactly, corrupt frames surface
+//! * [`codec`] — length-prefixed little-endian framing (protocol v3)
+//!   with a magic/version header and FNV-1a checksum for every
+//!   [`Message`] variant plus the handshake frames and the
+//!   [`Frame::Shard`] frame carrying one reduced value shard of a
+//!   reduce-scatter → all-gather round; NaN payloads round-trip
+//!   bit-exactly, corrupt frames surface
 //!   [`Error::Protocol`](crate::error::Error::Protocol), never panics.
 //! * [`handshake`] — rank 0 listens as the rendezvous hub; ranks 1..n
 //!   dial in, claim their rank (world size, protocol version and
@@ -20,12 +22,18 @@
 //!   put the client's contribution on the wire at start and drain the
 //!   board at finish (the hub stashes its own message and collects at
 //!   finish — clients' bytes pile up in the kernel buffers meanwhile).
+//!   Reduce-scatter → all-gather rounds are hub-reduced: the hub
+//!   reduces each rank's shard in canonical order and broadcasts the n
+//!   reduced [`Frame::Shard`]s instead of the full board.
 //! * [`ring`] — [`RingTransport`]: chunked ring all-gather (every rank
 //!   forwards `n - 1` generation-stamped chunks to its right
 //!   neighbor), with the same deadline/abort semantics; rank 0 is only
 //!   the bootstrap coordinator, not a traffic hub, so per-round bytes
 //!   are identical on every link — the shape the α–β cost model
-//!   assumes.
+//!   assumes. Its reduce-scatter → all-gather is the textbook
+//!   two-sweep ring: `n - 1` reduce-scatter steps accumulating shard
+//!   partials in canonical order, then `n - 1` all-gather steps moving
+//!   only reduced shards — `2(n-1)/n·V` per link per round.
 //!
 //! The `exdyna launch` CLI subcommand runs one rank per process over
 //! either socket transport (`--transport tcp|ring`; it forks the whole

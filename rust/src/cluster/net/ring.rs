@@ -52,16 +52,30 @@
 //! socket shutdown, so a broken ring surfaces errors on every rank
 //! instead of hanging.
 //!
+//! The reduce-scatter → all-gather collective runs the true chunked
+//! ring schedule over the same two links: phase 1 forwards each index
+//! chunk as a [`Frame::Shard`], every rank adding its own contribution
+//! in place before re-encoding, so after `n - 1` hops rank r holds its
+//! own fully reduced shard summed in the canonical ring order; phase 2
+//! all-gathers the n reduced shards in `n - 1` more hops. Per link and
+//! per round that is `2(n-1)/n · V` bytes instead of the all-gather's
+//! `(n-1) · V` ([`CostModel::rsag_link_bytes_ring`]) — the per-rank
+//! received volume stays flat as the ring grows. Rank 0 keeps its
+//! receive-before-send ordering in both phases, so the deadlock-freedom
+//! argument above carries over unchanged.
+//!
 //! [`TcpTransport`]: crate::cluster::net::tcp::TcpTransport
 //! [`CostModel::allgather_star`]: crate::collectives::CostModel::allgather_star
+//! [`CostModel::rsag_link_bytes_ring`]: crate::collectives::CostModel::rsag_link_bytes_ring
 //! [NetCfg]: crate::cluster::net::handshake::NetCfg
 
 use crate::cluster::net::codec::{
-    encode_frame, encode_frame_append, read_frame, read_frame_with, write_bytes, write_frame,
-    Frame,
+    encode_frame, encode_frame_append, encode_shard_append, read_frame, read_frame_with,
+    write_bytes, write_frame, Frame,
 };
 use crate::cluster::net::handshake::NetCfg;
-use crate::cluster::transport::{Message, RoundToken, Transport};
+use crate::cluster::transport::{FloatBufPool, Message, RoundToken, Transport};
+use crate::collectives::allreduce::shard_bounds;
 use crate::error::{Error, Result};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -534,6 +548,78 @@ fn recv_step(
     Ok(())
 }
 
+/// One reduce-scatter hop out: encode `vals` as a [`Frame::Shard`]
+/// straight from the slice (no intermediate `Vec`) into the persistent
+/// buffer and push it to the right neighbor.
+fn send_shard(
+    links: &mut Links,
+    enc_buf: &mut Vec<u8>,
+    my_gen: u64,
+    step: usize,
+    chunk: usize,
+    vals: &[f32],
+) -> Result<()> {
+    enc_buf.clear();
+    encode_shard_append(enc_buf, my_gen, step as u32, chunk as u32, vals);
+    write_bytes(&mut links.right, enc_buf)
+        .map_err(|e| Error::net(format!("ring step {step}: sending to right neighbor: {e}")))
+}
+
+/// One reduce-scatter hop in: read a [`Frame::Shard`] from the left
+/// neighbor and validate its full schedule stamp (round, step, chunk
+/// id, length) — any divergence is a typed error, never a silent mix
+/// of chunks.
+fn recv_shard(
+    links: &mut Links,
+    dec_buf: &mut Vec<u8>,
+    my_gen: u64,
+    step: usize,
+    chunk: usize,
+    want_len: usize,
+) -> Result<Vec<f32>> {
+    let frame = read_frame_with(&mut links.left, dec_buf)
+        .map_err(|e| Error::net(format!("ring step {step}: reading from left neighbor: {e}")))?;
+    match frame {
+        Frame::Shard {
+            generation,
+            step: got_step,
+            chunk: got_chunk,
+            vals,
+        } => {
+            if generation != my_gen {
+                return Err(Error::protocol(format!(
+                    "generation mismatch from left neighbor: got {generation}, \
+                     expected {my_gen} — workers diverged"
+                )));
+            }
+            if got_step as usize != step || got_chunk as usize != chunk {
+                return Err(Error::protocol(format!(
+                    "reduce-scatter schedule divergence: got chunk {got_chunk} at \
+                     step {got_step}, expected chunk {chunk} at step {step}"
+                )));
+            }
+            if vals.len() != want_len {
+                return Err(Error::protocol(format!(
+                    "chunk {chunk} carries {} values, expected {want_len} — \
+                     contribution lengths diverged",
+                    vals.len()
+                )));
+            }
+            Ok(vals)
+        }
+        Frame::Abort => Err(Error::net(
+            "left neighbor aborted — transport poisoned by a failed worker",
+        )),
+        Frame::Data { .. } => Err(Error::protocol(
+            "expected a reduce-scatter shard from the left neighbor, got a \
+             board frame — workers diverged",
+        )),
+        other => Err(Error::protocol(format!(
+            "expected a reduce-scatter shard, got {other:?}"
+        ))),
+    }
+}
+
 impl Transport for RingTransport {
     fn n_ranks(&self) -> usize {
         self.n
@@ -665,6 +751,194 @@ impl Transport for RingTransport {
         }
     }
 
+    fn rsag_begin(&self, rank: usize, contribution: Arc<Vec<f32>>) -> Result<RoundToken> {
+        if rank != self.rank {
+            return Err(Error::invalid(format!(
+                "this process's transport speaks for rank {}, not rank {rank}",
+                self.rank
+            )));
+        }
+        if self.poisoned.load(Ordering::SeqCst) {
+            return Err(Error::net("transport poisoned by a failed worker"));
+        }
+        let mut guard = self.state.lock().unwrap();
+        let RingState {
+            links,
+            generation,
+            enc_buf,
+            pending,
+            ..
+        } = &mut *guard;
+        if *pending {
+            return Err(Error::invariant(format!(
+                "rank {} double-started a split-phase ring round (round {} is \
+                 still in flight — finish or drop it first)",
+                self.rank, *generation
+            )));
+        }
+        let my_gen = *generation;
+        if let Some(links) = links.as_mut() {
+            if rank != 0 {
+                // same eager step-0 rationale as allgather_begin: every
+                // non-coordinator rank sends first within a step, so its
+                // own slice of chunk (rank - 1) mod n goes on the wire
+                // now; rank 0 stays the ring's designated drainer and
+                // defers even this send to complete
+                let chunk = (rank + self.n - 1) % self.n;
+                let (cs, ce) = shard_bounds(contribution.len(), self.n, chunk);
+                send_shard(links, enc_buf, my_gen, 0, chunk, &contribution[cs..ce])?;
+            }
+        }
+        *pending = true;
+        // the contribution rides the token: complete adds it in place to
+        // every partial that passes through this rank
+        Ok(RoundToken::deferred_with_stash(
+            my_gen,
+            Message::Floats(contribution),
+        ))
+    }
+
+    fn rsag_complete(
+        &self,
+        rank: usize,
+        mut token: RoundToken,
+        shards: &mut FloatBufPool,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        // shard hops are decoded into fresh per-hop buffers (the socket
+        // decode allocates regardless); the pool stays unused here
+        let _ = shards;
+        if rank != self.rank {
+            return Err(Error::invalid(format!(
+                "this process's transport speaks for rank {}, not rank {rank}",
+                self.rank
+            )));
+        }
+        let mut guard = self.state.lock().unwrap();
+        let RingState {
+            links,
+            generation,
+            enc_buf,
+            dec_buf,
+            pending,
+            ..
+        } = &mut *guard;
+        if !*pending {
+            return Err(Error::invariant(format!(
+                "rank {} completing a ring round it never started",
+                self.rank
+            )));
+        }
+        *pending = false;
+        let my_gen = *generation;
+        if token.generation() != my_gen {
+            return Err(Error::invariant(format!(
+                "rank {} completing round {}, but the ring is at round {my_gen}",
+                self.rank,
+                token.generation()
+            )));
+        }
+        if self.poisoned.load(Ordering::SeqCst) {
+            return Err(Error::net("transport poisoned by a failed worker"));
+        }
+        let contribution = match token.take_stash() {
+            Some(Message::Floats(v)) => v,
+            _ => {
+                return Err(Error::invariant(
+                    "ring reduce token lost its stashed contribution",
+                ))
+            }
+        };
+        let n = self.n;
+        let len = contribution.len();
+        out.clear();
+        out.resize(len, 0.0);
+        let links = match links.as_mut() {
+            Some(l) => l,
+            None => {
+                // single-rank world: the reduce is the identity
+                out.copy_from_slice(&contribution);
+                *generation = my_gen.wrapping_add(1);
+                return Ok(());
+            }
+        };
+        // phase 1 — reduce-scatter: at step s forward the partial of
+        // chunk (rank - 1 - s) mod n and receive chunk (rank - 2 - s)
+        // mod n, adding the own contribution in place; after n - 1
+        // steps `carry` is this rank's fully reduced shard, summed in
+        // the canonical ring order (injector rank + 1 first, owner
+        // last). Rank 0 receives before sending in every step — the
+        // send uses the previous step's carry, which is already in
+        // hand, so the drainer ordering costs nothing.
+        let mut carry: Vec<f32> = Vec::new();
+        for step in 0..n - 1 {
+            let recv_chunk = (rank + 2 * n - 2 - step) % n;
+            let (rs, re) = shard_bounds(len, n, recv_chunk);
+            let send_chunk = (rank + 2 * n - 1 - step) % n;
+            if rank == 0 {
+                let mut vals = recv_shard(links, dec_buf, my_gen, step, recv_chunk, re - rs)?;
+                if step == 0 {
+                    let (cs, ce) = shard_bounds(len, n, send_chunk);
+                    send_shard(links, enc_buf, my_gen, step, send_chunk, &contribution[cs..ce])?;
+                } else {
+                    send_shard(links, enc_buf, my_gen, step, send_chunk, &carry)?;
+                }
+                for (v, &x) in vals.iter_mut().zip(contribution[rs..re].iter()) {
+                    *v += x;
+                }
+                carry = vals;
+            } else {
+                if step > 0 {
+                    // step 0's send already happened in begin
+                    send_shard(links, enc_buf, my_gen, step, send_chunk, &carry)?;
+                }
+                let mut vals = recv_shard(links, dec_buf, my_gen, step, recv_chunk, re - rs)?;
+                for (v, &x) in vals.iter_mut().zip(contribution[rs..re].iter()) {
+                    *v += x;
+                }
+                carry = vals;
+            }
+        }
+        // phase 2 — all-gather of the n reduced shards: land the own
+        // shard, then forward reduced chunks for n - 1 more hops,
+        // copying each received shard into `out`
+        let (os, oe) = shard_bounds(len, n, rank);
+        out[os..oe].copy_from_slice(&carry);
+        for t in 0..n - 1 {
+            let step = n - 1 + t;
+            let send_chunk = (rank + n - t) % n;
+            let recv_chunk = (rank + 2 * n - 1 - t) % n;
+            let (rs, re) = shard_bounds(len, n, recv_chunk);
+            if rank == 0 {
+                let vals = recv_shard(links, dec_buf, my_gen, step, recv_chunk, re - rs)?;
+                send_shard(links, enc_buf, my_gen, step, send_chunk, &carry)?;
+                out[rs..re].copy_from_slice(&vals);
+                carry = vals;
+            } else {
+                send_shard(links, enc_buf, my_gen, step, send_chunk, &carry)?;
+                let vals = recv_shard(links, dec_buf, my_gen, step, recv_chunk, re - rs)?;
+                out[rs..re].copy_from_slice(&vals);
+                carry = vals;
+            }
+        }
+        *generation = my_gen.wrapping_add(1);
+        Ok(())
+    }
+
+    fn rsag_abandon(&self, rank: usize, token: RoundToken) {
+        // peers mid-reduce depend on this rank's 2(n-1) hops: run the
+        // round to completion and discard the result; a broken ring is
+        // poisoned so nobody waits out a dead link
+        let mut shards = FloatBufPool::new();
+        let mut out = Vec::new();
+        if self
+            .rsag_complete(rank, token, &mut shards, &mut out)
+            .is_err()
+        {
+            self.abort();
+        }
+    }
+
     fn abort(&self) {
         self.poisoned.store(true, Ordering::SeqCst);
         let abort_bytes = encode_frame(&Frame::Abort);
@@ -726,6 +1000,87 @@ mod tests {
                     let got = ep.allgather_f64(mine).unwrap();
                     let want: Vec<f64> = (0..n).map(|r| (r * 1000 + round) as f64).collect();
                     assert_eq!(got, want, "rank {rank} round {round}");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn rsag_matches_the_canonical_shard_order_over_rounds() {
+        use crate::collectives::allreduce::reduce_contributions_rsag_with;
+
+        // order-probe data: ulp(1e8) = 8 for f32, so 1e8 + 1.0 == 1e8
+        // and the summation order is observable in the result bits
+        let probe = |rank: usize, round: usize, len: usize| -> Vec<f32> {
+            (0..len)
+                .map(|i| [1.0e8f32, 1.0, -1.0e8][(rank + i + round) % 3])
+                .collect()
+        };
+        let n = 3;
+        let len = 10;
+        let rounds = 6;
+        let tps = loopback_ring(n);
+        let mut handles = Vec::new();
+        for (rank, tp) in tps.into_iter().enumerate() {
+            handles.push(std::thread::spawn(move || {
+                let ep = Endpoint::new(rank, tp.as_ref());
+                let mut shards = FloatBufPool::new();
+                let mut out = Vec::new();
+                for round in 0..rounds {
+                    let mine = Arc::new(probe(rank, round, len));
+                    if round % 2 == 0 {
+                        tp.reduce_scatter_allgather(rank, mine, &mut shards, &mut out)
+                            .unwrap();
+                    } else {
+                        // split-phase path lands the identical bits
+                        let token = tp.rsag_begin(rank, mine).unwrap();
+                        tp.rsag_complete(rank, token, &mut shards, &mut out)
+                            .unwrap();
+                    }
+                    let mut want = Vec::new();
+                    let parts: Vec<Vec<f32>> =
+                        (0..n).map(|r| probe(r, round, len)).collect();
+                    reduce_contributions_rsag_with(n, len, |r| &parts[r], &mut want);
+                    let got: Vec<u32> = out.iter().map(|v| v.to_bits()).collect();
+                    let want: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(got, want, "rank {rank} round {round}");
+                    // a board round between reduce rounds must still work
+                    let board = ep.allgather_f64(rank as f64).unwrap();
+                    assert_eq!(board, (0..n).map(|r| r as f64).collect::<Vec<_>>());
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn large_payloads_cannot_deadlock_the_reduce() {
+        // each rank's contribution (512 KB) exceeds typical socket
+        // buffers; rank 0's receive-first ordering must keep the 2(n-1)
+        // hop reduce schedule making progress
+        let n = 3;
+        let len = 128 * 1024;
+        let tps = loopback_ring(n);
+        let mut handles = Vec::new();
+        for (rank, tp) in tps.into_iter().enumerate() {
+            handles.push(std::thread::spawn(move || {
+                let mut shards = FloatBufPool::new();
+                let mut out = Vec::new();
+                for round in 0..2 {
+                    let mine = Arc::new(vec![(rank + round) as f32; len]);
+                    tp.reduce_scatter_allgather(rank, mine, &mut shards, &mut out)
+                        .unwrap();
+                    let want = (0..n).map(|r| (r + round) as f32).sum::<f32>();
+                    assert_eq!(out.len(), len);
+                    assert!(
+                        out.iter().all(|&v| v == want),
+                        "rank {rank} round {round}"
+                    );
                 }
             }));
         }

@@ -13,6 +13,14 @@
 //! running a different round than the hub) into a typed
 //! [`Error::Protocol`] instead of silently mixing rounds.
 //!
+//! The reduce-scatter → all-gather collective keeps the star's begin
+//! path (clients write their contribution eagerly, the hub stashes its
+//! own), but the hub runs the whole canonical reduce itself — inherent
+//! to a star topology — and fans out ONE reduced vector instead of the
+//! n-entry board: per-client received bytes drop from `n·k` to `k`
+//! (the hub's NIC still carries `2(n-1)·k`,
+//! [`CostModel::rsag_link_bytes_star_hub`]).
+//!
 //! Failure semantics:
 //! * every read/write carries the `io_timeout` deadline from [`NetCfg`],
 //!   so a dead or wedged peer surfaces [`Error::Net`] within the timeout
@@ -23,12 +31,15 @@
 //!   frames) rather than waiting out their timeout.
 //!
 //! [NetCfg]: crate::cluster::net::handshake::NetCfg
+//! [CostModel::rsag_link_bytes_star_hub]: crate::collectives::CostModel::rsag_link_bytes_star_hub
 
 use crate::cluster::net::codec::{
     encode_frame, encode_frame_append, read_frame_with, write_bytes, Frame,
 };
 use crate::cluster::net::handshake::{client_rendezvous, hub_rendezvous, NetCfg};
-use crate::cluster::transport::{Message, RoundToken, Transport};
+use crate::cluster::transport::{
+    envelope_mismatch, rsag_reduce_board_into, FloatBufPool, Message, RoundToken, Transport,
+};
 use crate::error::{Error, Result};
 use std::net::{Shutdown, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -289,6 +300,112 @@ impl Transport for TcpTransport {
         }
     }
 
+    fn rsag_complete(
+        &self,
+        rank: usize,
+        mut token: RoundToken,
+        shards: &mut FloatBufPool,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        if rank != self.rank {
+            return Err(Error::invalid(format!(
+                "this process's transport speaks for rank {}, not rank {rank}",
+                self.rank
+            )));
+        }
+        let mut guard = self.state.lock().unwrap();
+        let State {
+            conn,
+            generation,
+            enc_buf,
+            dec_buf,
+            pending,
+        } = &mut *guard;
+        if !*pending {
+            return Err(Error::invariant(format!(
+                "rank {} completing a round it never started",
+                self.rank
+            )));
+        }
+        *pending = false;
+        let my_gen = *generation;
+        if token.generation() != my_gen {
+            return Err(Error::invariant(format!(
+                "rank {} completing round {}, but the transport is at round {my_gen}",
+                self.rank,
+                token.generation()
+            )));
+        }
+        if self.poisoned.load(Ordering::SeqCst) {
+            return Err(Error::net("transport poisoned by a failed worker"));
+        }
+        let n = self.n;
+        match conn {
+            Conn::Hub { peers } => {
+                let msg = token.take_stash().ok_or_else(|| {
+                    Error::invariant("hub round token lost its stashed contribution")
+                })?;
+                let mut board: Vec<Message> = Vec::with_capacity(n);
+                board.push(msg);
+                for r in 1..n {
+                    let stream = peers[r]
+                        .as_mut()
+                        .expect("hub rendezvous filled every peer slot");
+                    let frame = read_frame_with(stream, dec_buf).map_err(|e| {
+                        Error::net(format!("reading rank {r}'s contribution: {e}"))
+                    })?;
+                    board.push(super::expect_data(frame, my_gen, &format!("rank {r}"))?);
+                }
+                // the hub runs the whole canonical reduce — inherent to a
+                // star — and fans out ONE reduced vector: per-client
+                // received bytes drop from n·k to k
+                rsag_reduce_board_into(&board, out)?;
+                let reduced = shards.fill(|buf| buf.extend_from_slice(out));
+                enc_buf.clear();
+                encode_frame_append(
+                    &Frame::Data {
+                        generation: my_gen,
+                        msg: Message::Floats(reduced),
+                    },
+                    enc_buf,
+                );
+                for r in 1..n {
+                    let stream = peers[r].as_mut().expect("peer slot filled");
+                    write_bytes(stream, enc_buf).map_err(|e| {
+                        Error::net(format!("broadcasting reduced vector to rank {r}: {e}"))
+                    })?;
+                }
+            }
+            Conn::Client { hub } => {
+                // the contribution went out in begin; the hub sends back
+                // one already-reduced vector instead of the n-entry board
+                let frame = read_frame_with(hub, dec_buf).map_err(|e| {
+                    Error::net(format!("reading reduced vector from hub: {e}"))
+                })?;
+                match super::expect_data(frame, my_gen, "hub")? {
+                    Message::Floats(v) => {
+                        out.clear();
+                        out.extend_from_slice(&v);
+                    }
+                    other => return Err(envelope_mismatch("Floats", &other)),
+                }
+            }
+        }
+        *generation = my_gen.wrapping_add(1);
+        Ok(())
+    }
+
+    fn rsag_abandon(&self, rank: usize, token: RoundToken) {
+        // same stream-alignment argument as allgather_abandon: run the
+        // round to completion (the hub must reduce + fan out, a client
+        // must drain its reduced-vector read) and discard the result
+        let mut shards = FloatBufPool::new();
+        let mut out = Vec::new();
+        if self.rsag_complete(rank, token, &mut shards, &mut out).is_err() {
+            self.abort();
+        }
+    }
+
     fn abort(&self) {
         self.poisoned.store(true, Ordering::SeqCst);
         let abort_bytes = encode_frame(&Frame::Abort);
@@ -382,6 +499,47 @@ mod tests {
                     .allgather_select(Arc::new(SelectOutput::default()))
                     .unwrap();
                 assert!(empty.iter().all(|s| s.is_empty()));
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn rsag_reduces_on_the_hub_and_fans_out_one_vector() {
+        use crate::collectives::reduce_contributions_rsag_with;
+        let n = 3;
+        let len = 8;
+        // magnitude data makes the canonical order observable in f32
+        fn probe(rank: usize, round: usize, len: usize) -> Vec<f32> {
+            const VALS: [f32; 3] = [1.0e8, 1.0, -1.0e8];
+            (0..len).map(|i| VALS[(rank + i + round) % 3]).collect()
+        }
+        let tps = loopback_cluster(n);
+        let mut handles = Vec::new();
+        for (rank, tp) in tps.into_iter().enumerate() {
+            handles.push(std::thread::spawn(move || {
+                let ep = Endpoint::new(rank, tp.as_ref());
+                let mut shards = crate::cluster::transport::FloatBufPool::new();
+                let mut out = Vec::new();
+                for round in 0..6 {
+                    ep.reduce_scatter_allgather(
+                        Arc::new(probe(rank, round, len)),
+                        &mut shards,
+                        &mut out,
+                    )
+                    .unwrap();
+                    let parts: Vec<Vec<f32>> = (0..n).map(|r| probe(r, round, len)).collect();
+                    let mut want = Vec::new();
+                    reduce_contributions_rsag_with(n, len, |r| &parts[r][..], &mut want);
+                    let got: Vec<u32> = out.iter().map(|x| x.to_bits()).collect();
+                    let want: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
+                    assert_eq!(got, want, "rank {rank} round {round}");
+                    // rounds of either collective kind interleave
+                    let echo = ep.allgather_f64(rank as f64).unwrap();
+                    assert_eq!(echo, (0..n).map(|r| r as f64).collect::<Vec<f64>>());
+                }
             }));
         }
         for h in handles {

@@ -19,8 +19,21 @@
 //! receive is deadline-bounded ([`RingLocal::with_timeout`]) and
 //! [`Transport::abort`] poisons the transport, waking every blocked
 //! receiver with an error — a broken ring never hangs.
+//!
+//! The reduce-scatter → all-gather collective runs the true chunked
+//! ring schedule: phase 1 forwards each index chunk around the ring,
+//! every rank adding its own contribution in place as the partial
+//! passes through ([`Hop::Chunk`] buffers are *moved* down the
+//! channels, mutated, and re-sent — never copied), so after `n - 1`
+//! hops rank r holds its own fully reduced shard summed in the
+//! canonical ring order; phase 2 all-gathers the n reduced shards with
+//! `n - 1` more hops. Chunk buffers ride a per-rank free list (one
+//! leaves at begin, one is absorbed at the end of the gather phase), so
+//! steady-state reduce rounds allocate nothing beyond the channel's hop
+//! nodes.
 
-use crate::cluster::transport::{Message, RoundToken, Transport};
+use crate::cluster::transport::{FloatBufPool, Message, RoundToken, Transport};
+use crate::collectives::allreduce::shard_bounds;
 use crate::error::{Error, Result};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -33,6 +46,16 @@ enum Hop {
     Data {
         generation: u64,
         msg: Message,
+    },
+    /// One reduce-scatter hop: a chunk's partial (or reduced) values,
+    /// stamped with the sender's round and position in the 2(n-1)-step
+    /// schedule. The buffer is moved, mutated in place by the receiver,
+    /// and forwarded — never copied.
+    Chunk {
+        generation: u64,
+        step: usize,
+        chunk: usize,
+        vals: Vec<f32>,
     },
     /// Poison notice: the transport was aborted.
     Abort,
@@ -50,6 +73,11 @@ struct RingRank {
     slots: Vec<Option<Message>>,
     /// Last round's published slab, kept for recycling.
     last: Option<Arc<[Message]>>,
+    /// Free list of reduce-scatter chunk buffers: one is popped per
+    /// reduce round at begin (the injected chunk) and one absorbed at
+    /// the end of the gather phase, so the steady state recirculates a
+    /// fixed set of buffers.
+    chunk_free: Vec<Vec<f32>>,
     /// `true` between a split-phase begin and its complete/abandon —
     /// rejects double-starts (one outstanding round per rank).
     pending: bool,
@@ -97,6 +125,7 @@ impl RingLocal {
                     generation: 0,
                     slots: (0..n).map(|_| None).collect(),
                     last: None,
+                    chunk_free: Vec::new(),
                     pending: false,
                 })
             })
@@ -121,6 +150,54 @@ impl RingLocal {
             Err(RecvTimeoutError::Disconnected) => {
                 Err(Error::invariant("ring link disconnected — transport dropped"))
             }
+        }
+    }
+
+    /// Receive one reduce-scatter hop and validate its full schedule
+    /// stamp (round, step, chunk id, length) — any divergence is a
+    /// typed error, never a silent mix of chunks.
+    fn recv_chunk(
+        &self,
+        rk: &mut RingRank,
+        deadline: Instant,
+        want_gen: u64,
+        want_step: usize,
+        want_chunk: usize,
+        want_len: usize,
+    ) -> Result<Vec<f32>> {
+        match self.recv_hop(rk, deadline, want_step)? {
+            Hop::Chunk {
+                generation,
+                step,
+                chunk,
+                vals,
+            } => {
+                if generation != want_gen {
+                    return Err(Error::protocol(format!(
+                        "generation mismatch from left neighbor: got {generation}, \
+                         expected {want_gen} — workers diverged"
+                    )));
+                }
+                if step != want_step || chunk != want_chunk {
+                    return Err(Error::protocol(format!(
+                        "reduce-scatter schedule divergence: got chunk {chunk} at \
+                         step {step}, expected chunk {want_chunk} at step {want_step}"
+                    )));
+                }
+                if vals.len() != want_len {
+                    return Err(Error::protocol(format!(
+                        "chunk {chunk} carries {} values, expected {want_len} — \
+                         contribution lengths diverged",
+                        vals.len()
+                    )));
+                }
+                Ok(vals)
+            }
+            Hop::Data { .. } => Err(Error::protocol(
+                "expected a reduce-scatter chunk from the left neighbor, got a \
+                 board hop — workers diverged",
+            )),
+            Hop::Abort => Err(Error::net("transport poisoned by a failed worker")),
         }
     }
 }
@@ -232,6 +309,12 @@ impl Transport for RingLocal {
                          expected {my_gen} — workers diverged"
                     )))
                 }
+                Hop::Chunk { .. } => {
+                    return Err(Error::protocol(
+                        "expected a board hop from the left neighbor, got a \
+                         reduce-scatter chunk — workers diverged",
+                    ))
+                }
                 Hop::Abort => {
                     return Err(Error::net("transport poisoned by a failed worker"))
                 }
@@ -248,6 +331,176 @@ impl Transport for RingLocal {
         // round: run it to completion and discard the board; if the ring
         // is broken mid-forward, poison it so nobody waits out a silence
         if self.allgather_complete(rank, token).is_err() {
+            self.abort();
+        }
+    }
+
+    fn rsag_begin(&self, rank: usize, contribution: Arc<Vec<f32>>) -> Result<RoundToken> {
+        if rank >= self.n {
+            return Err(Error::invalid(format!(
+                "rank {rank} out of range (n = {})",
+                self.n
+            )));
+        }
+        if self.poisoned.load(Ordering::SeqCst) {
+            return Err(Error::net("transport poisoned by a failed worker"));
+        }
+        let mut rk = self.ranks[rank].lock().unwrap();
+        if rk.pending {
+            return Err(Error::invariant(format!(
+                "rank {rank} double-started a split-phase ring round (round {} \
+                 is still in flight — finish or drop it first)",
+                rk.generation
+            )));
+        }
+        let my_gen = rk.generation;
+        if self.n > 1 {
+            // the step-0 partial is this rank's own slice of chunk
+            // (rank - 1) mod n, injected eagerly so the reduce is in
+            // flight while the caller computes between begin and
+            // complete; the buffer leaves the free list here and its
+            // twin is absorbed back at the end of the gather phase
+            let n = self.n;
+            let chunk = (rank + n - 1) % n;
+            let (cs, ce) = shard_bounds(contribution.len(), n, chunk);
+            let mut vals = rk.chunk_free.pop().unwrap_or_default();
+            vals.clear();
+            vals.extend_from_slice(&contribution[cs..ce]);
+            rk.tx_right
+                .send(Hop::Chunk {
+                    generation: my_gen,
+                    step: 0,
+                    chunk,
+                    vals,
+                })
+                .map_err(|_| Error::invariant("ring link disconnected — transport dropped"))?;
+        }
+        rk.pending = true;
+        // the contribution rides the token: complete adds it in place to
+        // every partial that passes through this rank
+        Ok(RoundToken::deferred_with_stash(
+            my_gen,
+            Message::Floats(contribution),
+        ))
+    }
+
+    fn rsag_complete(
+        &self,
+        rank: usize,
+        mut token: RoundToken,
+        shards: &mut FloatBufPool,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        // chunk buffers ride the per-rank free list, not the shard pool
+        let _ = shards;
+        if rank >= self.n {
+            return Err(Error::invalid(format!(
+                "rank {rank} out of range (n = {})",
+                self.n
+            )));
+        }
+        let mut rk = self.ranks[rank].lock().unwrap();
+        if !rk.pending {
+            return Err(Error::invariant(format!(
+                "rank {rank} completing a ring round it never started"
+            )));
+        }
+        rk.pending = false;
+        let my_gen = rk.generation;
+        if token.generation() != my_gen {
+            return Err(Error::invariant(format!(
+                "rank {rank} completing round {}, but the ring is at round {my_gen}",
+                token.generation()
+            )));
+        }
+        if self.poisoned.load(Ordering::SeqCst) {
+            return Err(Error::net("transport poisoned by a failed worker"));
+        }
+        let contribution = match token.take_stash() {
+            Some(Message::Floats(v)) => v,
+            _ => {
+                return Err(Error::invariant(
+                    "ring reduce token lost its stashed contribution",
+                ))
+            }
+        };
+        let n = self.n;
+        let len = contribution.len();
+        out.clear();
+        out.resize(len, 0.0);
+        if n == 1 {
+            out.copy_from_slice(&contribution);
+            rk.generation = my_gen.wrapping_add(1);
+            return Ok(());
+        }
+        let deadline = Instant::now() + self.timeout;
+        // phase 1 — reduce-scatter: at step s forward the partial
+        // accumulated at step s - 1 (step 0's injection went out in
+        // begin), then receive chunk (rank - 2 - s) mod n and add the
+        // own contribution in place; after n - 1 steps `carry` is this
+        // rank's fully reduced shard, summed in the canonical ring
+        // order (injector rank + 1 first, owner last)
+        let mut carry: Vec<f32> = Vec::new();
+        for step in 0..n - 1 {
+            if step > 0 {
+                let chunk = (rank + 2 * n - 1 - step) % n;
+                let vals = std::mem::take(&mut carry);
+                rk.tx_right
+                    .send(Hop::Chunk {
+                        generation: my_gen,
+                        step,
+                        chunk,
+                        vals,
+                    })
+                    .map_err(|_| {
+                        Error::invariant("ring link disconnected — transport dropped")
+                    })?;
+            }
+            let chunk = (rank + 2 * n - 2 - step) % n;
+            let (cs, ce) = shard_bounds(len, n, chunk);
+            let mut vals = self.recv_chunk(&mut rk, deadline, my_gen, step, chunk, ce - cs)?;
+            for (v, &x) in vals.iter_mut().zip(contribution[cs..ce].iter()) {
+                *v += x;
+            }
+            carry = vals;
+        }
+        // phase 2 — all-gather of the n reduced shards: land the own
+        // shard, then forward reduced chunks around the ring for n - 1
+        // more hops, copying each received shard into `out`
+        let (os, oe) = shard_bounds(len, n, rank);
+        out[os..oe].copy_from_slice(&carry);
+        for t in 0..n - 1 {
+            let send_chunk = (rank + n - t) % n;
+            let vals = std::mem::take(&mut carry);
+            rk.tx_right
+                .send(Hop::Chunk {
+                    generation: my_gen,
+                    step: n - 1 + t,
+                    chunk: send_chunk,
+                    vals,
+                })
+                .map_err(|_| Error::invariant("ring link disconnected — transport dropped"))?;
+            let chunk = (rank + 2 * n - 1 - t) % n;
+            let (cs, ce) = shard_bounds(len, n, chunk);
+            let vals = self.recv_chunk(&mut rk, deadline, my_gen, n - 1 + t, chunk, ce - cs)?;
+            out[cs..ce].copy_from_slice(&vals);
+            carry = vals;
+        }
+        // absorb the final buffer back into the free list — the twin of
+        // the pop in begin, so steady-state rounds recirculate buffers
+        let spare = std::mem::take(&mut carry);
+        rk.chunk_free.push(spare);
+        rk.generation = my_gen.wrapping_add(1);
+        Ok(())
+    }
+
+    fn rsag_abandon(&self, rank: usize, token: RoundToken) {
+        // peers mid-reduce depend on this rank's 2(n-1) hops: run the
+        // round to completion and discard the result; poison the ring
+        // if it is already broken so nobody waits out a silence
+        let mut shards = FloatBufPool::new();
+        let mut out = Vec::new();
+        if self.rsag_complete(rank, token, &mut shards, &mut out).is_err() {
             self.abort();
         }
     }
@@ -364,6 +617,95 @@ mod tests {
                 assert_eq!(o.as_ref(), &mk(r));
             }
         }
+    }
+
+    #[test]
+    fn rsag_matches_the_canonical_shard_order_over_rounds() {
+        use crate::collectives::allreduce::reduce_contributions_rsag_with;
+
+        // order-probe data: ulp(1e8) = 8 for f32, so 1e8 + 1.0 == 1e8
+        // and the summation order is observable in the result bits
+        let probe = |rank: usize, round: usize, len: usize| -> Vec<f32> {
+            (0..len)
+                .map(|i| [1.0e8f32, 1.0, -1.0e8][(rank + i + round) % 3])
+                .collect()
+        };
+        let n = 4;
+        let len = 11;
+        let rounds = 8;
+        let tp = Arc::new(RingLocal::new(n));
+        let mut handles = Vec::new();
+        for rank in 0..n {
+            let tp = tp.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut shards = FloatBufPool::new();
+                let mut out = Vec::new();
+                for round in 0..rounds {
+                    let mine = Arc::new(probe(rank, round, len));
+                    if round % 2 == 0 {
+                        tp.reduce_scatter_allgather(rank, mine, &mut shards, &mut out)
+                            .unwrap();
+                    } else {
+                        // split-phase path lands the identical bits
+                        let token = tp.rsag_begin(rank, mine).unwrap();
+                        tp.rsag_complete(rank, token, &mut shards, &mut out)
+                            .unwrap();
+                    }
+                    let mut want = Vec::new();
+                    let parts: Vec<Vec<f32>> =
+                        (0..n).map(|r| probe(r, round, len)).collect();
+                    reduce_contributions_rsag_with(n, len, |r| &parts[r], &mut want);
+                    let got: Vec<u32> = out.iter().map(|v| v.to_bits()).collect();
+                    let want: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(got, want, "rank {rank} round {round}");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn rsag_rounds_interleave_with_allgather_rounds() {
+        let n = 3;
+        let len = 6;
+        let tp = Arc::new(RingLocal::new(n));
+        let mut handles = Vec::new();
+        for rank in 0..n {
+            let tp = tp.clone();
+            handles.push(std::thread::spawn(move || {
+                let ep = Endpoint::new(rank, tp.as_ref());
+                let mut shards = FloatBufPool::new();
+                let mut out = Vec::new();
+                for round in 0..6 {
+                    let mine = Arc::new(vec![(rank + round) as f32; len]);
+                    tp.reduce_scatter_allgather(rank, mine, &mut shards, &mut out)
+                        .unwrap();
+                    let want = (0..n).map(|r| (r + round) as f32).sum::<f32>();
+                    assert!(out.iter().all(|&v| v == want), "rank {rank} round {round}");
+                    // a board round between reduce rounds must still work
+                    let got = ep.allgather_f64(rank as f64).unwrap();
+                    assert_eq!(got, (0..n).map(|r| r as f64).collect::<Vec<_>>());
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn single_rank_rsag_is_identity() {
+        let tp = RingLocal::new(1);
+        let mut shards = FloatBufPool::new();
+        let mut out = Vec::new();
+        tp.reduce_scatter_allgather(0, Arc::new(vec![1.0, 2.0]), &mut shards, &mut out)
+            .unwrap();
+        assert_eq!(out, vec![1.0, 2.0]);
+        tp.reduce_scatter_allgather(0, Arc::new(vec![3.0]), &mut shards, &mut out)
+            .unwrap();
+        assert_eq!(out, vec![3.0]);
     }
 
     #[test]

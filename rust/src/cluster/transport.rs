@@ -49,6 +49,34 @@
 //! transport that overrides nothing gets a correct (if overlap-free)
 //! default that completes the round eagerly at start.
 //!
+//! **The reduce-scatter → all-gather collective.** The all-gather moves
+//! the *full* n-message board to every rank — O(n·k) received per rank,
+//! the gradient build-up pathology re-introduced at the collective
+//! layer. [`Transport::reduce_scatter_allgather`] is the second
+//! collective form (`--collective rsag`): each rank owns the index
+//! shard matching its position ([`shard_bounds`]), incoming
+//! contributions are reduced *for that shard only* in flight, and then
+//! just the n reduced shards are all-gathered — `2(n-1)/n·V` received
+//! per rank, flat in n, matching the ring α–β form `2(n-1)·α +
+//! 2(n-1)/n·V·β` the modeled clock always charged for the value
+//! reduce. Shard sums accumulate in the canonical ring order
+//! ([`rsag_rank_order`]: shard c starts at rank c+1 and its owner adds
+//! last), which every implementation shares, so results are bit-exact
+//! across transports and engines — but differ in low bits from the
+//! all-gather collective's rank-order sum, as with any real
+//! reduce-scatter. The split-phase pair
+//! ([`Transport::rsag_begin`] / [`Transport::rsag_complete`], wrapped
+//! by [`PendingReduce`]) carries the exact [`PendingRound`] contract:
+//! contribution in flight at begin, generation-stamped, one
+//! outstanding round per rank with typed double-start rejection
+//! (shared with the all-gather rounds — a rank has ONE in-flight round
+//! of either kind), abort-poisoned finish, drop-without-finish safe
+//! (abandon drains the round so peers never wedge). The default
+//! implementation rides the split-phase all-gather and reduces the
+//! full board locally in canonical order — correct for any transport,
+//! without the bandwidth win; the in-tree transports override it
+//! natively.
+//!
 //! [`LocalTransport`] is the in-process implementation: a rendezvous for
 //! one OS thread per rank, built on a generation-counted slot board
 //! (mutex + condvar). Every round each rank deposits its message; the
@@ -64,6 +92,7 @@
 //!
 //! [CostModel]: crate::collectives::CostModel
 
+use crate::collectives::allreduce::{reduce_contributions_rsag_with, rsag_rank_order, shard_bounds};
 use crate::coordinator::SelectOutput;
 use crate::error::{Error, Result};
 use std::sync::{Arc, Condvar, Mutex};
@@ -200,6 +229,68 @@ impl Drop for PendingRound<'_> {
     }
 }
 
+/// One in-flight split-phase reduce-scatter → all-gather: returned by
+/// [`Endpoint::rsag_start`] / `rsag_start` on `dyn Transport`, consumed
+/// by [`PendingReduce::finish`], which lands the canonically-ordered
+/// SUM of every rank's contribution in the caller's buffer. Dropping it
+/// without finishing abandons the round safely
+/// ([`Transport::rsag_abandon`] drains both phases, so peers mid-reduce
+/// never wedge) and this rank may start the next round afterwards.
+pub struct PendingReduce<'a> {
+    tp: &'a dyn Transport,
+    rank: usize,
+    token: Option<RoundToken>,
+}
+
+impl<'a> PendingReduce<'a> {
+    /// Start a split-phase reduce-scatter → all-gather for `rank` over
+    /// `tp`: the contribution is deposited / put on the wire before
+    /// this returns.
+    pub fn start(tp: &'a dyn Transport, rank: usize, contribution: Arc<Vec<f32>>) -> Result<Self> {
+        let token = tp.rsag_begin(rank, contribution)?;
+        Ok(PendingReduce {
+            tp,
+            rank,
+            token: Some(token),
+        })
+    }
+
+    /// The rank this round was started for.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// The round's generation stamp.
+    pub fn generation(&self) -> u64 {
+        self.token
+            .as_ref()
+            .map(RoundToken::generation)
+            .unwrap_or(0)
+    }
+
+    /// Block for the reduced vector: reduce this rank's shard in
+    /// flight, all-gather the n reduced shards, and assemble the full
+    /// canonically-ordered SUM into `out`. `shards` backs the reduced-
+    /// shard message so steady-state rounds allocate nothing.
+    /// Abort-aware and deadline-bounded exactly like
+    /// [`PendingRound::finish`].
+    pub fn finish(mut self, shards: &mut FloatBufPool, out: &mut Vec<f32>) -> Result<()> {
+        let token = self
+            .token
+            .take()
+            .expect("finish consumes the pending reduce exactly once");
+        self.tp.rsag_complete(self.rank, token, shards, out)
+    }
+}
+
+impl Drop for PendingReduce<'_> {
+    fn drop(&mut self) {
+        if let Some(token) = self.token.take() {
+            self.tp.rsag_abandon(self.rank, token);
+        }
+    }
+}
+
 impl<'t> dyn Transport + 't {
     /// Nonblocking start of an all-gather round (split-phase form of
     /// [`Transport::allgather`]): rank `rank`'s contribution is
@@ -208,6 +299,15 @@ impl<'t> dyn Transport + 't {
     /// round may be in flight per rank.
     pub fn allgather_start(&self, rank: usize, msg: Message) -> Result<PendingRound<'_>> {
         PendingRound::start(self, rank, msg)
+    }
+
+    /// Nonblocking start of a reduce-scatter → all-gather round
+    /// (split-phase form of [`Transport::reduce_scatter_allgather`]).
+    /// Shares the one-outstanding-round-per-rank budget with the
+    /// all-gather rounds: starting either kind while either kind is in
+    /// flight is a typed error.
+    pub fn rsag_start(&self, rank: usize, contribution: Arc<Vec<f32>>) -> Result<PendingReduce<'_>> {
+        PendingReduce::start(self, rank, contribution)
     }
 }
 
@@ -261,6 +361,72 @@ pub trait Transport: Send + Sync {
     /// round already completed — nothing outstanding).
     fn allgather_abandon(&self, rank: usize, token: RoundToken) {
         let _ = (rank, token);
+    }
+
+    /// Synchronous reduce-scatter → all-gather: rank `rank` contributes
+    /// a dense f32 vector (every rank's must have the same length) and
+    /// receives the element-wise SUM over ranks in `out`, summed shard
+    /// by shard in the canonical [`rsag_rank_order`]. Unlike the
+    /// all-gather + local-reduce path, each rank receives only
+    /// `2(n-1)/n` of the vector instead of `n-1` copies of it. `shards`
+    /// backs the reduced-shard buffers so steady-state rounds allocate
+    /// nothing. The default implementation rides the split-phase
+    /// all-gather (correct for any transport, without the bandwidth
+    /// win); in-tree transports override it natively.
+    fn reduce_scatter_allgather(
+        &self,
+        rank: usize,
+        contribution: Arc<Vec<f32>>,
+        shards: &mut FloatBufPool,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let token = self.rsag_begin(rank, contribution)?;
+        self.rsag_complete(rank, token, shards, out)
+    }
+
+    /// Nonblocking half of the split-phase reduce-scatter → all-gather:
+    /// put rank `rank`'s contribution in flight and return a
+    /// generation-stamped [`RoundToken`] for
+    /// [`Transport::rsag_complete`]. Carries the exact
+    /// [`Transport::allgather_begin`] contract — in particular the
+    /// one-outstanding-round-per-rank budget is shared across both
+    /// collective kinds. The default delegates to the all-gather begin
+    /// (the contribution is in flight whenever the transport's
+    /// all-gather begin puts it in flight).
+    fn rsag_begin(&self, rank: usize, contribution: Arc<Vec<f32>>) -> Result<RoundToken> {
+        self.allgather_begin(rank, Message::Floats(contribution))
+    }
+
+    /// Blocking half of the split-phase reduce-scatter → all-gather:
+    /// drain the round started by [`Transport::rsag_begin`] and land
+    /// the canonically-ordered SUM in `out`. Must honor the same
+    /// abort-poisoning and IO deadlines as the all-gather complete. The
+    /// default completes the underlying all-gather and reduces the full
+    /// board locally in canonical order.
+    fn rsag_complete(
+        &self,
+        rank: usize,
+        token: RoundToken,
+        shards: &mut FloatBufPool,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let _ = shards;
+        let board = self.allgather_complete(rank, token)?;
+        rsag_reduce_board_into(&board, out)
+    }
+
+    /// Drop hook for a [`PendingReduce`] that is abandoned instead of
+    /// finished. Unlike the all-gather abandon — where the deposit from
+    /// begin is all peers ever need — an abandoned reduce must still
+    /// run its remaining phases (peers mid-reduce are waiting on this
+    /// rank's partials and reduced shard), so the default completes the
+    /// round and discards the result; the cold-path scratch allocation
+    /// is irrelevant off the steady state. Errors are swallowed: an
+    /// aborted or poisoned round has already released the peers.
+    fn rsag_abandon(&self, rank: usize, token: RoundToken) {
+        let mut shards = FloatBufPool::new();
+        let mut out = Vec::new();
+        let _ = self.rsag_complete(rank, token, &mut shards, &mut out);
     }
 
     /// Rendezvous barrier (default: a scalar all-gather).
@@ -451,6 +617,34 @@ impl Transport for LocalTransport {
         b.started[rank] = false;
     }
 
+    fn rsag_complete(
+        &self,
+        rank: usize,
+        token: RoundToken,
+        shards: &mut FloatBufPool,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        // Native reduce-scatter → all-gather as two board rounds: the
+        // in-flight contribution round publishes the full board
+        // zero-copy (Arc bumps, not element copies), each rank reduces
+        // ONLY its own shard — O(len) compute per rank instead of the
+        // default's O(n·len) — and a second board round gathers the n
+        // reduced shards. Both rounds ride the recycled-slab path and
+        // the shard buffer comes from the pool, so steady-state rounds
+        // allocate nothing (`rust/tests/alloc_regression.rs`).
+        let board = self.allgather_complete(rank, token)?;
+        let mut reduced_len: Result<usize> = Ok(0);
+        let shard = shards.fill(|buf| {
+            reduced_len = reduce_own_shard_into(&board, rank, buf);
+        });
+        let len = reduced_len?;
+        // release our board clone before depositing the shard round so
+        // the contribution slab recycles on schedule
+        drop(board);
+        let shard_board = self.allgather(rank, Message::Floats(shard))?;
+        assemble_shards_into(&shard_board, len, out)
+    }
+
     fn abort(&self) {
         let mut b = self.board.lock().unwrap();
         b.poisoned = true;
@@ -552,6 +746,28 @@ impl<'a> Endpoint<'a> {
     /// compute between the two halves.
     pub fn allgather_start(&self, msg: Message) -> Result<PendingRound<'a>> {
         PendingRound::start(self.tp, self.rank, msg)
+    }
+
+    /// Reduce-scatter → all-gather: contribute a dense f32 vector,
+    /// receive the canonically-ordered SUM over ranks in `out`
+    /// ([`Transport::reduce_scatter_allgather`]). `shards` backs the
+    /// reduced-shard buffers so steady-state rounds allocate nothing.
+    pub fn reduce_scatter_allgather(
+        &self,
+        contribution: Arc<Vec<f32>>,
+        shards: &mut FloatBufPool,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        self.tp
+            .reduce_scatter_allgather(self.rank, contribution, shards, out)
+    }
+
+    /// Split-phase reduce-scatter → all-gather: the contribution is in
+    /// flight before this returns; `finish()` on the returned handle
+    /// blocks for the reduced vector. Shares the one-outstanding-round
+    /// budget with [`Endpoint::allgather_start`].
+    pub fn rsag_start(&self, contribution: Arc<Vec<f32>>) -> Result<PendingReduce<'a>> {
+        PendingReduce::start(self.tp, self.rank, contribution)
     }
 
     /// All-gather per-rank selections (metadata + payload in one round).
@@ -675,6 +891,105 @@ pub(crate) fn envelope_mismatch(want: &str, got: &Message) -> Error {
     Error::invariant(format!(
         "transport envelope mismatch: expected {want}, got {got} — workers diverged"
     ))
+}
+
+/// Validate that every board entry is a [`Message::Floats`] of one
+/// common length and return that length (0 for an empty board). The
+/// shared precondition of every reduce-scatter reduction helper.
+pub(crate) fn floats_board_len(board: &[Message]) -> Result<usize> {
+    let mut len = None;
+    for m in board.iter() {
+        match m {
+            Message::Floats(v) => match len {
+                None => len = Some(v.len()),
+                Some(l) if l == v.len() => {}
+                Some(l) => {
+                    return Err(Error::invariant(format!(
+                        "reduce-scatter contributions disagree on length \
+                         ({l} vs {}) — workers diverged",
+                        v.len()
+                    )))
+                }
+            },
+            other => return Err(envelope_mismatch("Floats", other)),
+        }
+    }
+    Ok(len.unwrap_or(0))
+}
+
+/// Reduce a full contribution board into the canonically-ordered SUM —
+/// the fallback reduction behind the default
+/// [`Transport::rsag_complete`] and the hub side of the TCP star.
+pub(crate) fn rsag_reduce_board_into(board: &[Message], out: &mut Vec<f32>) -> Result<()> {
+    let len = floats_board_len(board)?;
+    reduce_contributions_rsag_with(
+        board.len(),
+        len,
+        |r| match &board[r] {
+            Message::Floats(v) => &v[..],
+            _ => unreachable!("validated by floats_board_len"),
+        },
+        out,
+    );
+    Ok(())
+}
+
+/// Reduce shard `rank` of a full contribution board into `buf` in the
+/// canonical [`rsag_rank_order`], returning the board's full vector
+/// length. `buf` is cleared and sized to the shard; the per-rank
+/// reduce compute is O(len) instead of the full board's O(n·len).
+pub(crate) fn reduce_own_shard_into(
+    board: &[Message],
+    rank: usize,
+    buf: &mut Vec<f32>,
+) -> Result<usize> {
+    let n = board.len();
+    let len = floats_board_len(board)?;
+    let (s, e) = shard_bounds(len, n, rank);
+    buf.clear();
+    buf.resize(e - s, 0.0);
+    for r in rsag_rank_order(n, rank) {
+        let vals = match &board[r] {
+            Message::Floats(v) => &v[s..e],
+            _ => unreachable!("validated by floats_board_len"),
+        };
+        for (o, &x) in buf.iter_mut().zip(vals.iter()) {
+            *o += x;
+        }
+    }
+    Ok(len)
+}
+
+/// Assemble a board of n reduced shards (rank i's entry carries shard
+/// i, [`shard_bounds`]-sized for a `len`-long vector) into the full
+/// reduced vector. The shards partition the index space, so every
+/// element of `out` is written.
+pub(crate) fn assemble_shards_into(
+    shard_board: &[Message],
+    len: usize,
+    out: &mut Vec<f32>,
+) -> Result<()> {
+    let n = shard_board.len();
+    out.clear();
+    out.resize(len, 0.0);
+    for (i, m) in shard_board.iter().enumerate() {
+        let (s, e) = shard_bounds(len, n, i);
+        match m {
+            Message::Floats(v) => {
+                if v.len() != e - s {
+                    return Err(Error::invariant(format!(
+                        "rank {i}'s reduced shard carries {} values, want {} \
+                         — shard layouts diverged",
+                        v.len(),
+                        e - s
+                    )));
+                }
+                out[s..e].copy_from_slice(v);
+            }
+            other => return Err(envelope_mismatch("Floats", other)),
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -965,5 +1280,183 @@ mod tests {
         // the surviving rank must error out, not block forever
         let ep = Endpoint::new(0, tp.as_ref());
         assert!(ep.allgather_f64(0.0).is_err());
+    }
+
+    /// Magnitude data that makes the reduction order observable in f32:
+    /// summing a rotation of {1e8, 1, -1e8} absorbs or keeps the 1
+    /// depending on which value arrives first.
+    fn order_probe(rank: usize, round: usize, len: usize) -> Vec<f32> {
+        const VALS: [f32; 3] = [1.0e8, 1.0, -1.0e8];
+        (0..len).map(|i| VALS[(rank + i + round) % 3]).collect()
+    }
+
+    #[test]
+    fn rsag_lands_the_canonical_shard_order_over_rounds() {
+        let n = 3;
+        let len = 10;
+        let rounds = 12;
+        let tp = Arc::new(LocalTransport::new(n));
+        let mut handles = Vec::new();
+        for rank in 0..n {
+            let tp = tp.clone();
+            handles.push(std::thread::spawn(move || {
+                let ep = Endpoint::new(rank, tp.as_ref());
+                let mut send = FloatBufPool::new();
+                let mut shards = FloatBufPool::new();
+                let mut out = Vec::new();
+                for round in 0..rounds {
+                    let mine =
+                        send.fill(|b| b.extend_from_slice(&order_probe(rank, round, len)));
+                    if round % 2 == 0 {
+                        ep.reduce_scatter_allgather(mine, &mut shards, &mut out)
+                            .unwrap();
+                    } else {
+                        // split phase interleaves with blocking rounds
+                        let pending = ep.rsag_start(mine).unwrap();
+                        assert_eq!(pending.rank(), rank);
+                        pending.finish(&mut shards, &mut out).unwrap();
+                    }
+                    let parts: Vec<Vec<f32>> =
+                        (0..n).map(|r| order_probe(r, round, len)).collect();
+                    let mut want = Vec::new();
+                    reduce_contributions_rsag_with(n, len, |r| &parts[r][..], &mut want);
+                    let got: Vec<u32> = out.iter().map(|x| x.to_bits()).collect();
+                    let want: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
+                    assert_eq!(got, want, "rank {rank} round {round}");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn dropped_pending_reduce_does_not_wedge_peers() {
+        let n = 2;
+        let rounds = 4;
+        let len = 6;
+        let tp = Arc::new(LocalTransport::new(n));
+        let tp1 = tp.clone();
+        let peer = std::thread::spawn(move || {
+            let ep = Endpoint::new(1, tp1.as_ref());
+            let mut shards = FloatBufPool::new();
+            let mut out = Vec::new();
+            for round in 0..rounds {
+                let mine = Arc::new(vec![1.0f32; len]);
+                ep.reduce_scatter_allgather(mine, &mut shards, &mut out)
+                    .unwrap();
+                // rank 0's contribution lands in EVERY round, including
+                // the one rank 0 abandoned (the abandon drains both
+                // phases, so the reduce completes on both sides)
+                assert_eq!(out, vec![(round + 2) as f32; len], "round {round}");
+            }
+        });
+        let ep = Endpoint::new(0, tp.as_ref());
+        let mut shards = FloatBufPool::new();
+        let mut out = Vec::new();
+        for round in 0..rounds {
+            let mine = Arc::new(vec![(round + 1) as f32; len]);
+            if round == 1 {
+                let pending = ep.rsag_start(mine).unwrap();
+                drop(pending); // walk away without finishing
+            } else {
+                ep.reduce_scatter_allgather(mine, &mut shards, &mut out)
+                    .unwrap();
+                assert_eq!(out, vec![(round + 2) as f32; len]);
+            }
+        }
+        peer.join().unwrap();
+    }
+
+    #[test]
+    fn rsag_shares_the_one_outstanding_round_budget() {
+        let tp = LocalTransport::new(1);
+        let dynamic: &dyn Transport = &tp;
+        let mut shards = FloatBufPool::new();
+        let mut out = Vec::new();
+        let pending = dynamic.rsag_start(0, Arc::new(vec![2.0f32, 3.0])).unwrap();
+        // NEITHER collective kind may start while the reduce is in flight
+        let err = dynamic
+            .allgather_start(0, Message::Scalar(1.0))
+            .err()
+            .expect("mixed double start must be rejected")
+            .to_string();
+        assert!(err.contains("double-started"), "{err}");
+        let err = dynamic
+            .rsag_start(0, Arc::new(vec![0.0f32; 2]))
+            .err()
+            .expect("rsag double start must be rejected")
+            .to_string();
+        assert!(err.contains("double-started"), "{err}");
+        pending.finish(&mut shards, &mut out).unwrap();
+        assert_eq!(out, vec![2.0, 3.0]);
+        // and the transport recovers fully
+        dynamic
+            .reduce_scatter_allgather(0, Arc::new(vec![4.0f32, 5.0]), &mut shards, &mut out)
+            .unwrap();
+        assert_eq!(out, vec![4.0, 5.0]);
+    }
+
+    #[test]
+    fn abort_mid_reduce_poisons_the_finish() {
+        let tp = Arc::new(LocalTransport::new(2));
+        let pending = (tp.as_ref() as &dyn Transport)
+            .rsag_start(0, Arc::new(vec![1.0f32; 4]))
+            .unwrap();
+        tp.abort();
+        let mut shards = FloatBufPool::new();
+        let mut out = Vec::new();
+        assert!(
+            pending.finish(&mut shards, &mut out).is_err(),
+            "poisoned reduce must error, not hang"
+        );
+    }
+
+    #[test]
+    fn default_rsag_emulation_matches_the_native_reduce_bit_for_bit() {
+        // a Transport that overrides nothing reduces the full board
+        // locally in the same canonical order the native path uses, so
+        // the sums are bit-identical (only the received volume differs)
+        struct Eager(LocalTransport);
+        impl Transport for Eager {
+            fn n_ranks(&self) -> usize {
+                self.0.n_ranks()
+            }
+            fn allgather(&self, rank: usize, msg: Message) -> Result<Arc<[Message]>> {
+                self.0.allgather(rank, msg)
+            }
+            fn abort(&self) {
+                self.0.abort()
+            }
+        }
+        fn run(tp: Arc<dyn Transport>, n: usize, len: usize) -> Vec<u32> {
+            let mut handles = Vec::new();
+            for rank in 0..n {
+                let tp = tp.clone();
+                handles.push(std::thread::spawn(move || {
+                    let mut shards = FloatBufPool::new();
+                    let mut out = Vec::new();
+                    tp.reduce_scatter_allgather(
+                        rank,
+                        Arc::new(order_probe(rank, 0, len)),
+                        &mut shards,
+                        &mut out,
+                    )
+                    .unwrap();
+                    out.iter().map(|x| x.to_bits()).collect::<Vec<u32>>()
+                }));
+            }
+            let outs: Vec<Vec<u32>> =
+                handles.into_iter().map(|h| h.join().unwrap()).collect();
+            for o in &outs[1..] {
+                assert_eq!(o, &outs[0], "ranks must agree on the reduced vector");
+            }
+            outs.into_iter().next().unwrap()
+        }
+        let (n, len) = (3, 11);
+        let native = run(Arc::new(LocalTransport::new(n)), n, len);
+        let eager = run(Arc::new(Eager(LocalTransport::new(n))), n, len);
+        assert_eq!(native, eager);
     }
 }

@@ -4,11 +4,15 @@
 //! the error accumulator, the gradient buffer, and a [`RoundScratch`] of
 //! reusable collective buffers — and talks to its peers exclusively
 //! through an [`Endpoint`], via the per-rank collectives
-//! ([`allgather_sparse_rk`], [`broadcast_selection_rk`],
-//! [`sparse_allreduce_union_rk`]). Those share their merge/cost
-//! arithmetic with the lock-step collectives (and the [`StragglerCfg`]
-//! compute clock is common too), so for a fixed seed the two engines
-//! yield identical traces — `rust/tests/engine_parity.rs` pins this.
+//! ([`allgather_sparse_rk`], [`broadcast_selection_rk`], and the
+//! value-reduce dispatchers [`value_reduce_union_rk`] /
+//! [`value_reduce_union_start_rk`], which route the reduce through the
+//! configured [`CollectiveKind`](crate::cluster::CollectiveKind) —
+//! full-board all-gather or reduce-scatter → all-gather). Those share
+//! their merge/cost arithmetic with the lock-step collectives (and the
+//! [`StragglerCfg`] compute clock is common too), so for a fixed seed
+//! and collective the two engines yield identical traces —
+//! `rust/tests/engine_parity.rs` pins this.
 //! The scratch keeps steady-state iterations free of transport/merge
 //! heap allocations (`rust/tests/alloc_regression.rs` pins that).
 //!
@@ -37,8 +41,8 @@
 use crate::cluster::transport::Endpoint;
 use crate::collectives::{
     allgather_sparse_finish_rk, allgather_sparse_rk, allgather_sparse_start_rk,
-    broadcast_selection_finish_rk, broadcast_selection_rk, sparse_allreduce_union_finish_rk,
-    sparse_allreduce_union_rk, sparse_allreduce_union_start_rk, CostModel, RoundScratch,
+    broadcast_selection_finish_rk, broadcast_selection_rk, value_reduce_union_rk,
+    value_reduce_union_start_rk, CostModel, RoundScratch,
 };
 use crate::coordinator::SelectOutput;
 use crate::error::Result;
@@ -171,12 +175,14 @@ impl<'a> SimWorker<'a> {
                     )?;
                     // the reduced sum is discarded in the simulated
                     // trainer, exactly like the lock-step path
-                    let t_red = sparse_allreduce_union_rk(
+                    let t_red = value_reduce_union_rk(
                         &self.ep,
+                        self.cfg.collective,
                         &acc,
                         &scratch.union_idx,
                         &self.net,
                         &mut scratch.send,
+                        &mut scratch.shards,
                         &mut scratch.reduced,
                     )?;
                     k_actual = scratch.union_idx.len();
@@ -191,12 +197,14 @@ impl<'a> SimWorker<'a> {
                         &mut scratch.union_idx,
                         &mut scratch.k_by_rank,
                     )?;
-                    let t_red = sparse_allreduce_union_rk(
+                    let t_red = value_reduce_union_rk(
                         &self.ep,
+                        self.cfg.collective,
                         &acc,
                         &scratch.union_idx,
                         &self.net,
                         &mut scratch.send,
+                        &mut scratch.shards,
                         &mut scratch.reduced,
                     )?;
                     k_actual = scratch.union_idx.len();
@@ -345,8 +353,9 @@ impl<'a> SimWorker<'a> {
             let pending_reduce = if dense {
                 None // the dense sim models the reduce, it moves no data
             } else {
-                Some(sparse_allreduce_union_start_rk(
+                Some(value_reduce_union_start_rk(
                     &self.ep,
+                    self.cfg.collective,
                     &acc,
                     &s.union_idx,
                     &mut s.send,
@@ -380,14 +389,8 @@ impl<'a> SimWorker<'a> {
             // sequential sim path; only its modeled time is charged)
             let t_comm = match pending_reduce {
                 Some(pending) => {
-                    let board = pending.finish()?;
                     t_meta
-                        + sparse_allreduce_union_finish_rk(
-                            &board,
-                            k_actual,
-                            &self.net,
-                            &mut s.reduced,
-                        )?
+                        + pending.finish(k_actual, &self.net, &mut s.shards, &mut s.reduced)?
                 }
                 None => t_meta,
             };

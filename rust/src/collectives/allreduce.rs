@@ -73,6 +73,88 @@ pub fn reduce_contributions(per_rank: &[Vec<f32>]) -> Vec<f32> {
     out
 }
 
+/// Half-open bounds `[start, end)` of shard `i` when a `len`-element
+/// index space is chunked evenly across `n` ranks (`i·len/n ..
+/// (i+1)·len/n`). Every rank derives the same boundaries locally, so
+/// shard offsets never travel on the wire.
+pub fn shard_bounds(len: usize, n: usize, i: usize) -> (usize, usize) {
+    debug_assert!(i < n, "shard {i} of {n}");
+    (i * len / n, (i + 1) * len / n)
+}
+
+/// Ranks in the canonical reduce-scatter accumulation order for shard
+/// `c`: `(c+1) % n, (c+2) % n, …, c`. This is exactly the order an
+/// in-flight ring reduce-scatter sums in — the partial for shard `c` is
+/// injected by rank `c+1` and accumulates around the ring until its
+/// owner `c` adds its own contribution last — and every rsag
+/// implementation (shared board, hub star, both rings, and the
+/// lock-step engine) sums in this one order, which is what keeps
+/// reduce-scatter → all-gather rounds bit-exact across all of them.
+/// Floating-point addition is not associative, so the order is part of
+/// the collective's contract; rsag results differ in low bits from the
+/// all-gather collective's rank-order sum, by construction.
+pub fn rsag_rank_order(n: usize, c: usize) -> impl Iterator<Item = usize> {
+    debug_assert!(c < n, "shard {c} of {n}");
+    (0..n).map(move |j| (c + 1 + j) % n)
+}
+
+/// SUM-reduce equal-length per-rank payloads in the reduce-scatter →
+/// all-gather collective's canonical order ([`rsag_rank_order`] within
+/// each [`shard_bounds`] shard) — the order-preserving twin of
+/// [`reduce_contributions_into`], shared by every full-board rsag
+/// reducer (shared-memory transport, hub star, lock-step engine).
+/// `part(r)` returns rank r's `len`-element payload.
+pub fn reduce_contributions_rsag_with<'a>(
+    n: usize,
+    len: usize,
+    part: impl Fn(usize) -> &'a [f32],
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    out.resize(len, 0.0);
+    for c in 0..n {
+        let (s, e) = shard_bounds(len, n, c);
+        for r in rsag_rank_order(n, c) {
+            let vals = part(r);
+            debug_assert_eq!(vals.len(), len);
+            for (o, &x) in out[s..e].iter_mut().zip(vals[s..e].iter()) {
+                *o += x;
+            }
+        }
+    }
+}
+
+/// Sparse all-reduce over the union index set in the reduce-scatter →
+/// all-gather collective's canonical shard order — the lock-step twin
+/// of the transports' native rsag path, gathering `acc[union_idx]`
+/// per rank exactly like [`sparse_allreduce_union_iter`] but summing
+/// each shard in [`rsag_rank_order`]. Returns the same modeled ring
+/// all-reduce time (`2(n-1)·α + 2(n-1)/n·V·β`): the clock always
+/// charged the reduce-scatter → all-gather shape, so switching the
+/// collective changes real data movement and low-order value bits, but
+/// never the modeled wire time.
+pub fn sparse_allreduce_union_rsag_into(
+    accs: &[&[f32]],
+    union_idx: &[u32],
+    net: &CostModel,
+    out: &mut Vec<f32>,
+) -> f64 {
+    let n = accs.len();
+    let len = union_idx.len();
+    out.clear();
+    out.resize(len, 0.0);
+    for c in 0..n {
+        let (s, e) = shard_bounds(len, n, c);
+        for r in rsag_rank_order(n, c) {
+            let acc = accs[r];
+            for (o, &i) in out[s..e].iter_mut().zip(union_idx[s..e].iter()) {
+                *o += acc[i as usize];
+            }
+        }
+    }
+    net.allreduce(len * CostModel::DENSE_ENTRY_BYTES)
+}
+
 /// Sparse all-reduce over the union index set, into a reusable buffer:
 /// every rank contributes `acc_i[idx]` for each union index (Alg. 1
 /// line 12), and `out` receives the SUM over ranks aligned with
@@ -193,5 +275,99 @@ mod tests {
     #[test]
     fn reduce_of_nothing_is_empty() {
         assert!(reduce_contributions(&[]).is_empty());
+    }
+
+    #[test]
+    fn shard_bounds_partition_the_index_space() {
+        for len in [0usize, 1, 5, 7, 16, 1000] {
+            for n in [1usize, 2, 3, 8, 16] {
+                let mut cursor = 0;
+                for i in 0..n {
+                    let (s, e) = shard_bounds(len, n, i);
+                    assert_eq!(s, cursor, "len={len} n={n} shard {i}");
+                    assert!(e >= s);
+                    cursor = e;
+                }
+                assert_eq!(cursor, len, "shards must cover 0..{len} at n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn rsag_rank_order_is_a_rotation_ending_at_the_owner() {
+        for n in [1usize, 2, 3, 8] {
+            for c in 0..n {
+                let order: Vec<usize> = rsag_rank_order(n, c).collect();
+                assert_eq!(order.len(), n);
+                let mut sorted = order.clone();
+                sorted.sort_unstable();
+                assert_eq!(sorted, (0..n).collect::<Vec<_>>(), "permutation");
+                assert_eq!(order[0], (c + 1) % n, "injected by the right neighbor");
+                assert_eq!(order[n - 1], c, "the owner adds its own contribution last");
+            }
+        }
+    }
+
+    #[test]
+    fn rsag_reduce_matches_rank_order_on_order_insensitive_data() {
+        // small integers sum exactly in any order, so the canonical
+        // rsag order must agree with the rank-order reduce on them
+        let accs: Vec<Vec<f32>> = (0..3)
+            .map(|r| (0..7).map(|i| (r * 7 + i) as f32).collect())
+            .collect();
+        let refs: Vec<&[f32]> = accs.iter().map(|a| a.as_slice()).collect();
+        let idx: Vec<u32> = vec![0, 2, 3, 5, 6];
+        let net = CostModel::paper_testbed(3);
+        let (reference, t_ref) = sparse_allreduce_union(&refs, &idx, &net);
+        let mut out = vec![9.0f32; 1]; // stale content must not leak
+        let t = sparse_allreduce_union_rsag_into(&refs, &idx, &net, &mut out);
+        assert_eq!(out, reference);
+        assert_eq!(t.to_bits(), t_ref.to_bits(), "modeled clock is collective-invariant");
+    }
+
+    #[test]
+    fn rsag_reduce_sums_each_shard_in_canonical_order() {
+        // values chosen so f32 addition order is observable: adding the
+        // tiny term before the huge one loses it, after survives — the
+        // canonical order is therefore pinned by exact bit comparison
+        // against a hand-rolled reference
+        let n = 3;
+        let len = 6usize;
+        let accs: Vec<Vec<f32>> = (0..n)
+            .map(|r| {
+                (0..len)
+                    .map(|i| match (r + i) % 3 {
+                        0 => 1.0e8f32,
+                        1 => 1.0f32,
+                        _ => -1.0e8f32,
+                    })
+                    .collect()
+            })
+            .collect();
+        let refs: Vec<&[f32]> = accs.iter().map(|a| a.as_slice()).collect();
+        let idx: Vec<u32> = (0..len as u32).collect();
+        let net = CostModel::paper_testbed(n);
+        let mut out = Vec::new();
+        sparse_allreduce_union_rsag_into(&refs, &idx, &net, &mut out);
+        // hand-rolled canonical reference
+        let mut want = vec![0.0f32; len];
+        for c in 0..n {
+            let (s, e) = shard_bounds(len, n, c);
+            for j in 0..n {
+                let r = (c + 1 + j) % n;
+                for i in s..e {
+                    want[i] += accs[r][i];
+                }
+            }
+        }
+        let out_bits: Vec<u32> = out.iter().map(|v| v.to_bits()).collect();
+        let want_bits: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(out_bits, want_bits);
+        // and the dense order-preserving core agrees bit-for-bit when
+        // the union is the identity
+        let mut dense = Vec::new();
+        reduce_contributions_rsag_with(n, len, |r| refs[r], &mut dense);
+        let dense_bits: Vec<u32> = dense.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(dense_bits, out_bits);
     }
 }

@@ -8,6 +8,28 @@
 //! * ring all-reduce, `B` bytes total vector:  `2(n-1)·α + 2·(n-1)/n·B·β`
 //! * binomial-tree broadcast, `B` bytes:       `⌈log₂n⌉·(α + B·β)`
 //!
+//! **The two collective forms for the value reduce.** The harness can
+//! move a round's float contributions either as a full-board
+//! *all-gather* (every rank receives all n contributions and reduces
+//! locally — per-rank received volume `(n-1)·B`, growing O(n·k)) or as
+//! a *reduce-scatter → all-gather* (`--collective rsag`: each rank
+//! reduces its 1/n shard in flight, then the n reduced shards are
+//! all-gathered — per-rank received volume `2·(n-1)/n·B ≤ 2B`, flat in
+//! n). Their modeled times:
+//!
+//! * all-gather of n full contributions:  `(n-1)·α + (n-1)·B·β`
+//! * reduce-scatter → all-gather:         `2(n-1)·α + 2·(n-1)/n·B·β`
+//!
+//! The trace's value-reduce clock **always** charges the second form
+//! ([`CostModel::allreduce`] ≡
+//! [`CostModel::reduce_scatter_allgather`]) — the model assumed the
+//! efficient collective shape all along, so `--collective rsag` makes
+//! the harness's *real* data movement match what the clock already
+//! bills, and switching collectives never changes modeled times (the
+//! [`CostModel::allgather_recv_bytes_per_rank`] /
+//! [`CostModel::rsag_recv_bytes_per_rank`] helpers quantify the real
+//! received-volume gap the benches report).
+//!
 //! These are *models*, not measurements — the simulator charges them to a
 //! virtual clock so figure shapes (who wins, crossovers) reproduce the
 //! paper's cluster behaviour deterministically on one box.
@@ -323,6 +345,53 @@ impl CostModel {
             + 2.0 * ((n - 1.0) / n) * bytes as f64 * self.eff_beta()
     }
 
+    /// Ring reduce-scatter → all-gather time over a `bytes` total
+    /// vector: `2(n-1)·α + 2(n-1)/n·V·β` — definitionally the ring
+    /// all-reduce decomposition ([`CostModel::allreduce`] returns the
+    /// identical value), named separately so call sites that charge the
+    /// rsag collective say what they mean. Because the value-reduce
+    /// clock always charged this form, `--collective rsag` changes real
+    /// data movement only, never modeled times.
+    pub fn reduce_scatter_allgather(&self, bytes: usize) -> f64 {
+        self.allreduce(bytes)
+    }
+
+    /// Bytes one rank *receives* per all-gather-collective value round
+    /// where every rank contributes the full `bytes` vector: `(n-1)·B`
+    /// — the full-board fan-in that grows O(n·k).
+    pub fn allgather_recv_bytes_per_rank(&self, bytes: usize) -> usize {
+        self.topo.n_ranks.saturating_sub(1) * bytes
+    }
+
+    /// Bytes one rank *receives* per reduce-scatter → all-gather round
+    /// over a `bytes` total vector: `(n-1)/n·B` of in-flight partials
+    /// plus `(n-1)/n·B` of reduced shards = `2(n-1)/n·B ≤ 2B` — flat in
+    /// n, which is the whole point of the collective.
+    pub fn rsag_recv_bytes_per_rank(&self, bytes: usize) -> usize {
+        let n = self.topo.n_ranks;
+        if n <= 1 {
+            return 0;
+        }
+        2 * (n - 1) * bytes / n
+    }
+
+    /// Bytes any single ring link carries per reduce-scatter →
+    /// all-gather round over a `bytes` total vector: `2(n-1)/n·B`,
+    /// identical on every link (each link forwards n-1 partial chunks
+    /// plus n-1 reduced shards of ~`B/n` each).
+    pub fn rsag_link_bytes_ring(&self, bytes: usize) -> usize {
+        self.rsag_recv_bytes_per_rank(bytes)
+    }
+
+    /// Bytes the *hub's* link carries per star-mediated reduce-scatter
+    /// → all-gather round: `(n-1)·B` contributions in plus `(n-1)·B`
+    /// reduced vectors out — already `(n+1)/2×` lighter than the star
+    /// all-gather's hub volume because the hub fans the reduced vector
+    /// instead of the raw n-message board.
+    pub fn rsag_link_bytes_star_hub(&self, bytes: usize) -> usize {
+        2 * self.topo.n_ranks.saturating_sub(1) * bytes
+    }
+
     /// Binomial-tree broadcast of `bytes` from one root.
     pub fn broadcast(&self, bytes: usize) -> f64 {
         let n = self.topo.n_ranks;
@@ -479,6 +548,55 @@ mod tests {
         let beta = m.topo.beta();
         assert!((m.allgather(b) - (3.0 * a + 3.0 * b as f64 * beta)).abs() < 1e-15);
         assert!((m.allgather_star(b) - (6.0 * a + 15.0 * b as f64 * beta)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn rsag_formulas_match_the_allreduce_shape_and_flatten_recv_volume() {
+        // single rank: everything free
+        let m1 = cm(1);
+        assert_eq!(m1.reduce_scatter_allgather(1_000_000), 0.0);
+        assert_eq!(m1.allgather_recv_bytes_per_rank(1_000), 0);
+        assert_eq!(m1.rsag_recv_bytes_per_rank(1_000), 0);
+        assert_eq!(m1.rsag_link_bytes_ring(1_000), 0);
+        assert_eq!(m1.rsag_link_bytes_star_hub(1_000), 0);
+        for n in [2usize, 4, 8, 16] {
+            let m = cm(n);
+            for bytes in [64usize, 4_096, 1_000_000] {
+                // the modeled clock is collective-invariant: rsag is the
+                // very allreduce decomposition the traces always charged
+                assert_eq!(
+                    m.reduce_scatter_allgather(bytes).to_bits(),
+                    m.allreduce(bytes).to_bits()
+                );
+                // per-rank received volume: (n-1)·B board fan-in vs the
+                // flat 2(n-1)/n·B ≤ 2B shard exchange
+                let board = m.allgather_recv_bytes_per_rank(bytes);
+                let shards = m.rsag_recv_bytes_per_rank(bytes);
+                assert_eq!(board, (n - 1) * bytes);
+                assert_eq!(shards, 2 * (n - 1) * bytes / n);
+                assert!(shards <= 2 * bytes, "rsag recv volume is flat in n");
+                assert!(shards <= bytes + (n - 1) * bytes / n + 1);
+                if n > 2 {
+                    assert!(shards < board, "n={n}: rsag must receive less");
+                }
+                // link helpers: ring is balanced at the recv volume, the
+                // hub carries 2(n-1)·B — (n+1)/2× lighter than the star
+                // all-gather's hub
+                assert_eq!(m.rsag_link_bytes_ring(bytes), shards);
+                assert_eq!(m.rsag_link_bytes_star_hub(bytes), 2 * (n - 1) * bytes);
+                assert!(
+                    m.rsag_link_bytes_star_hub(bytes) < m.allgather_link_bytes_star_hub(bytes)
+                );
+            }
+        }
+        // the exact closed form, spot-checked at n = 4: 6α + 1.5·B·β
+        let m = cm(4);
+        let b = 10_000usize;
+        let a = m.topo.alpha();
+        let beta = m.topo.beta();
+        assert!(
+            (m.reduce_scatter_allgather(b) - (6.0 * a + 1.5 * b as f64 * beta)).abs() < 1e-15
+        );
     }
 
     #[test]

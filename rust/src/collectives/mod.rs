@@ -24,6 +24,18 @@
 //! thin wrappers. [`costmodel`] also hosts the deterministic
 //! straggler/jitter hook ([`costmodel::StragglerCfg`]) for imbalance
 //! scenarios.
+//!
+//! The value reduce additionally exists in two *collective* forms
+//! ([`crate::cluster::CollectiveKind`]): the full-board all-gather +
+//! rank-order local reduce, and the reduce-scatter → all-gather
+//! (`rsag`), whose canonical shard arithmetic lives here
+//! ([`shard_bounds`], [`rsag_rank_order`],
+//! [`sparse_allreduce_union_rsag_into`]) and whose engine-side
+//! dispatchers are [`value_reduce_union_rk`] /
+//! [`ranked::PendingValueReduce`]. The modeled wire time is identical
+//! for both forms ([`CostModel::reduce_scatter_allgather`]); what
+//! changes is the harness's real traffic — `2(n-1)/n·V` received per
+//! rank instead of `(n-1)·V` — and the low-order bits of the sums.
 
 pub mod allgather;
 pub mod allreduce;
@@ -37,14 +49,17 @@ pub use allgather::{
 };
 pub use allreduce::{
     accumulate_contribution, dense_allreduce, gather_contribution, gather_contribution_into,
-    reduce_contributions, reduce_contributions_into, sparse_allreduce_union,
-    sparse_allreduce_union_into, sparse_allreduce_union_iter,
+    reduce_contributions, reduce_contributions_into, reduce_contributions_rsag_with,
+    rsag_rank_order, shard_bounds, sparse_allreduce_union, sparse_allreduce_union_into,
+    sparse_allreduce_union_iter, sparse_allreduce_union_rsag_into,
 };
 pub use costmodel::{CostModel, OverlappedStep, StragglerCfg};
 pub use ranked::{
     allgather_sparse_finish_rk, allgather_sparse_rk, allgather_sparse_start_rk,
     allreduce_dense_rk, allreduce_dense_start_rk, broadcast_selection_finish_rk,
-    broadcast_selection_rk, sparse_allreduce_union_finish_rk, sparse_allreduce_union_rk,
-    sparse_allreduce_union_start_rk, RoundScratch,
+    broadcast_selection_rk, rsag_allreduce_dense_rk, rsag_allreduce_union_rk,
+    sparse_allreduce_union_finish_rk, sparse_allreduce_union_rk,
+    sparse_allreduce_union_start_rk, value_reduce_dense_rk, value_reduce_dense_start_rk,
+    value_reduce_union_rk, value_reduce_union_start_rk, PendingValueReduce, RoundScratch,
 };
 pub use topology::Topology;

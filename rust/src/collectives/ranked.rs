@@ -15,6 +15,17 @@
 //! same cores the blocking forms call, so split-phase rounds stay
 //! bit-identical to blocking ones.
 //!
+//! The value reduce exists in BOTH collective forms
+//! ([`CollectiveKind`]): the default full-board all-gather +
+//! rank-order local reduce, and the reduce-scatter → all-gather
+//! (`rsag`), dispatched per call site by [`value_reduce_union_rk`] /
+//! [`value_reduce_dense_rk`] and their split-phase twins via
+//! [`PendingValueReduce`]. The modeled wire time is identical either
+//! way (the α–β clock always charged the rsag-shaped ring formula for
+//! the value reduce); the reduced *values* differ in low bits because
+//! rsag sums each shard in the canonical ring order
+//! ([`crate::collectives::rsag_rank_order`]) instead of rank order.
+//!
 //! Everything here is steady-state allocation-free: selections travel as
 //! `Arc<SelectOutput>` (one wrap at the selection boundary), float
 //! contributions come from the caller's rotating
@@ -29,8 +40,9 @@ use super::allgather::{merge_selections_iter, AllGatherStats};
 use super::allreduce::{accumulate_contribution, gather_contribution_into};
 use super::costmodel::CostModel;
 use crate::cluster::transport::{
-    envelope_mismatch, Endpoint, FloatBufPool, Message, PendingRound,
+    envelope_mismatch, Endpoint, FloatBufPool, Message, PendingReduce, PendingRound,
 };
+use crate::cluster::CollectiveKind;
 use crate::coordinator::SelectOutput;
 use crate::error::{Error, Result};
 use std::sync::Arc;
@@ -51,6 +63,9 @@ pub struct RoundScratch {
     pub reduced: Vec<f32>,
     /// Rotating send buffers for float contributions.
     pub send: FloatBufPool,
+    /// Rotating reduced-shard buffers for the reduce-scatter →
+    /// all-gather collective form.
+    pub shards: FloatBufPool,
 }
 
 impl RoundScratch {
@@ -251,6 +266,156 @@ pub fn allreduce_dense_start_rk<'a>(
     ep.allgather_start(Message::Floats(mine))
 }
 
+/// Sparse reduce-scatter → all-gather over the union index set from one
+/// rank's perspective: contribute `acc[union_idx]` (through the rotating
+/// send pool), receive the canonically-ordered SUM in `reduced`, return
+/// the modeled wire time — bit-identical to the all-gather form's time
+/// (the clock always charged this collective's shape), while the real
+/// per-rank received volume drops from `(n-1)·V` to `2(n-1)/n·V`.
+pub fn rsag_allreduce_union_rk(
+    ep: &Endpoint<'_>,
+    acc: &[f32],
+    union_idx: &[u32],
+    net: &CostModel,
+    send: &mut FloatBufPool,
+    shards: &mut FloatBufPool,
+    reduced: &mut Vec<f32>,
+) -> Result<f64> {
+    let mine = send.fill(|buf| gather_contribution_into(acc, union_idx, buf));
+    ep.reduce_scatter_allgather(mine, shards, reduced)?;
+    Ok(net.reduce_scatter_allgather(union_idx.len() * CostModel::DENSE_ENTRY_BYTES))
+}
+
+/// Dense reduce-scatter → all-gather from one rank's perspective — the
+/// full-vector twin of [`rsag_allreduce_union_rk`].
+pub fn rsag_allreduce_dense_rk(
+    ep: &Endpoint<'_>,
+    vals: &[f32],
+    net: &CostModel,
+    send: &mut FloatBufPool,
+    shards: &mut FloatBufPool,
+    reduced: &mut Vec<f32>,
+) -> Result<f64> {
+    let mine = send.fill(|buf| buf.extend_from_slice(vals));
+    ep.reduce_scatter_allgather(mine, shards, reduced)?;
+    Ok(net.reduce_scatter_allgather(vals.len() * CostModel::DENSE_ENTRY_BYTES))
+}
+
+/// One in-flight value reduce of either collective kind — what the
+/// split-phase dispatchers hand back so the pipelined engines have ONE
+/// call-site shape regardless of `--collective`. Dropping it without
+/// finishing abandons the underlying round safely (both wrapped handles
+/// do).
+pub enum PendingValueReduce<'a> {
+    /// A full-board all-gather round; the reduce happens at finish.
+    Board(PendingRound<'a>),
+    /// A reduce-scatter → all-gather round; the reduce happens in
+    /// flight.
+    Sharded(PendingReduce<'a>),
+}
+
+impl PendingValueReduce<'_> {
+    /// Land the reduced `len`-element vector in `reduced` and return
+    /// the modeled wire time — the same value for both kinds (the clock
+    /// is collective-invariant); only the reduction order and the real
+    /// traffic differ.
+    pub fn finish(
+        self,
+        len: usize,
+        net: &CostModel,
+        shards: &mut FloatBufPool,
+        reduced: &mut Vec<f32>,
+    ) -> Result<f64> {
+        match self {
+            PendingValueReduce::Board(pending) => {
+                let board = pending.finish()?;
+                sparse_allreduce_union_finish_rk(&board, len, net, reduced)
+            }
+            PendingValueReduce::Sharded(pending) => {
+                pending.finish(shards, reduced)?;
+                Ok(net.reduce_scatter_allgather(len * CostModel::DENSE_ENTRY_BYTES))
+            }
+        }
+    }
+}
+
+/// Blocking value reduce over the union index set, dispatched on the
+/// configured collective kind — the single call site the engines use.
+#[allow(clippy::too_many_arguments)]
+pub fn value_reduce_union_rk(
+    ep: &Endpoint<'_>,
+    collective: CollectiveKind,
+    acc: &[f32],
+    union_idx: &[u32],
+    net: &CostModel,
+    send: &mut FloatBufPool,
+    shards: &mut FloatBufPool,
+    reduced: &mut Vec<f32>,
+) -> Result<f64> {
+    match collective {
+        CollectiveKind::Allgather => {
+            sparse_allreduce_union_rk(ep, acc, union_idx, net, send, reduced)
+        }
+        CollectiveKind::Rsag => {
+            rsag_allreduce_union_rk(ep, acc, union_idx, net, send, shards, reduced)
+        }
+    }
+}
+
+/// Split-phase start of the value reduce over the union index set,
+/// dispatched on the configured collective kind. Finish with
+/// [`PendingValueReduce::finish`].
+pub fn value_reduce_union_start_rk<'a>(
+    ep: &Endpoint<'a>,
+    collective: CollectiveKind,
+    acc: &[f32],
+    union_idx: &[u32],
+    send: &mut FloatBufPool,
+) -> Result<PendingValueReduce<'a>> {
+    let mine = send.fill(|buf| gather_contribution_into(acc, union_idx, buf));
+    match collective {
+        CollectiveKind::Allgather => Ok(PendingValueReduce::Board(
+            ep.allgather_start(Message::Floats(mine))?,
+        )),
+        CollectiveKind::Rsag => Ok(PendingValueReduce::Sharded(ep.rsag_start(mine)?)),
+    }
+}
+
+/// Blocking dense value reduce, dispatched on the configured collective
+/// kind — the exact-iteration twin of [`value_reduce_union_rk`].
+pub fn value_reduce_dense_rk(
+    ep: &Endpoint<'_>,
+    collective: CollectiveKind,
+    vals: &[f32],
+    net: &CostModel,
+    send: &mut FloatBufPool,
+    shards: &mut FloatBufPool,
+    reduced: &mut Vec<f32>,
+) -> Result<f64> {
+    match collective {
+        CollectiveKind::Allgather => allreduce_dense_rk(ep, vals, net, send, reduced),
+        CollectiveKind::Rsag => rsag_allreduce_dense_rk(ep, vals, net, send, shards, reduced),
+    }
+}
+
+/// Split-phase start of the dense value reduce, dispatched on the
+/// configured collective kind. Finish with
+/// [`PendingValueReduce::finish`].
+pub fn value_reduce_dense_start_rk<'a>(
+    ep: &Endpoint<'a>,
+    collective: CollectiveKind,
+    vals: &[f32],
+    send: &mut FloatBufPool,
+) -> Result<PendingValueReduce<'a>> {
+    let mine = send.fill(|buf| buf.extend_from_slice(vals));
+    match collective {
+        CollectiveKind::Allgather => Ok(PendingValueReduce::Board(
+            ep.allgather_start(Message::Floats(mine))?,
+        )),
+        CollectiveKind::Rsag => Ok(PendingValueReduce::Sharded(ep.rsag_start(mine)?)),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -314,6 +479,90 @@ mod tests {
             assert_eq!(scratch.k_by_rank, ag_ref.k_by_rank);
             assert_eq!(scratch.reduced, sum_ref);
             assert_eq!(t, t_ref);
+        }
+    }
+
+    #[test]
+    fn value_reduce_dispatchers_route_both_collectives_bit_exactly() {
+        use crate::collectives::allreduce::sparse_allreduce_union_rsag_into;
+        let n = 3;
+        let net = CostModel::paper_testbed(n);
+        // index 0's sum is order-sensitive in f32: canonical order for
+        // shard 0 is ranks [1, 2, 0] (1e8 + 1 absorbs the 1, then -1e8
+        // → 0), rank order is [0, 1, 2] (-1e8 + 1e8 = 0, then +1 → 1)
+        let accs = [
+            vec![-1.0e8f32, 0.0, 0.0],
+            vec![1.0e8, 1.0, 10.0],
+            vec![1.0, 2.0, 20.0],
+        ];
+        let union_idx: Vec<u32> = vec![0, 1, 2];
+        let acc_refs: Vec<&[f32]> = accs.iter().map(|a| a.as_slice()).collect();
+        let (sum_ag, t_ag) = sparse_allreduce_union(&acc_refs, &union_idx, &net);
+        let mut sum_rs = Vec::new();
+        let t_rs = sparse_allreduce_union_rsag_into(&acc_refs, &union_idx, &net, &mut sum_rs);
+        // the modeled clock is collective-invariant ...
+        assert_eq!(t_ag.to_bits(), t_rs.to_bits());
+        // ... while the values legitimately differ in low bits, which
+        // is what makes this test able to catch cross-routed dispatch
+        assert_ne!(sum_ag[0].to_bits(), sum_rs[0].to_bits());
+
+        for kind in [CollectiveKind::Allgather, CollectiveKind::Rsag] {
+            let tp = Arc::new(LocalTransport::new(n));
+            let mut handles = Vec::new();
+            for rank in 0..n {
+                let tp = tp.clone();
+                let acc = accs[rank].clone();
+                let union_idx = union_idx.clone();
+                handles.push(std::thread::spawn(move || {
+                    let ep = Endpoint::new(rank, tp.as_ref());
+                    let net = CostModel::paper_testbed(3);
+                    let mut scratch = RoundScratch::new();
+                    // blocking form
+                    let t = value_reduce_union_rk(
+                        &ep,
+                        kind,
+                        &acc,
+                        &union_idx,
+                        &net,
+                        &mut scratch.send,
+                        &mut scratch.shards,
+                        &mut scratch.reduced,
+                    )
+                    .unwrap();
+                    let blocking = scratch.reduced.clone();
+                    // split-phase form lands the identical sum and time
+                    let pending = value_reduce_union_start_rk(
+                        &ep,
+                        kind,
+                        &acc,
+                        &union_idx,
+                        &mut scratch.send,
+                    )
+                    .unwrap();
+                    let t2 = pending
+                        .finish(
+                            union_idx.len(),
+                            &net,
+                            &mut scratch.shards,
+                            &mut scratch.reduced,
+                        )
+                        .unwrap();
+                    assert_eq!(t.to_bits(), t2.to_bits());
+                    assert_eq!(blocking, scratch.reduced);
+                    (blocking, t)
+                }));
+            }
+            for h in handles {
+                let (sum, t) = h.join().unwrap();
+                let want = match kind {
+                    CollectiveKind::Allgather => &sum_ag,
+                    CollectiveKind::Rsag => &sum_rs,
+                };
+                let got: Vec<u32> = sum.iter().map(|x| x.to_bits()).collect();
+                let want: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(got, want, "collective {kind}");
+                assert_eq!(t.to_bits(), t_ag.to_bits());
+            }
         }
     }
 

@@ -114,6 +114,10 @@ pub fn from_toml(doc: &TomlDoc) -> Result<ExperimentConfig> {
         crate::cluster::EngineKind::parse(&doc.str_or("experiment", "engine", "threaded"))?;
     // step-level pipelining (default off keeps traces bit-identical)
     cfg.sim.pipeline = doc.bool_or("experiment", "pipeline", false);
+    // value-reduce collective form (default all-gather keeps traces
+    // bit-identical; "rsag" switches to reduce-scatter → all-gather)
+    cfg.sim.collective =
+        crate::cluster::CollectiveKind::parse(&doc.str_or("experiment", "collective", "allgather"))?;
     // [experiment] transport + [transport] — socket-transport tunables
     cfg.transport = TransportKind::parse(&doc.str_or("experiment", "transport", "local"))?;
     cfg.net.coord_addr = doc.str_or("transport", "coord_addr", &cfg.net.coord_addr);
@@ -312,6 +316,29 @@ link_beta = 8.0
         assert!(from_toml(&doc).unwrap().sim.pipeline);
         let off = TomlDoc::parse("[experiment]\npreset = \"resnet18\"\n").unwrap();
         assert!(!from_toml(&off).unwrap().sim.pipeline);
+    }
+
+    #[test]
+    fn toml_collective_switch() {
+        use crate::cluster::CollectiveKind;
+        let doc = TomlDoc::parse(
+            "[experiment]\npreset = \"resnet18\"\ncollective = \"rsag\"\n",
+        )
+        .unwrap();
+        assert_eq!(from_toml(&doc).unwrap().sim.collective, CollectiveKind::Rsag);
+        // default stays the full-board all-gather (bit-identical traces)
+        let off = TomlDoc::parse("[experiment]\npreset = \"resnet18\"\n").unwrap();
+        assert_eq!(
+            from_toml(&off).unwrap().sim.collective,
+            CollectiveKind::Allgather
+        );
+        // unknown names are a typed error listing the options
+        let bad = TomlDoc::parse(
+            "[experiment]\npreset = \"resnet18\"\ncollective = \"tree\"\n",
+        )
+        .unwrap();
+        let err = from_toml(&bad).unwrap_err().to_string();
+        assert!(err.contains("allgather, rsag"), "{err}");
     }
 
     #[test]

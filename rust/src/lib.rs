@@ -24,12 +24,13 @@
 //!        │   — or the lock-step loop,       buffers (shared-nothing)
 //!        │     kept bit-exact for parity —
 //!        ▼
-//!   cluster::Transport                      data movement: Arc-shared
-//!        │     ├ LocalTransport             boards, O(n) fan-out; in-process
-//!        │     ├ RingLocal                  rendezvous / in-process ring /
-//!        │     ├ net::TcpTransport          one process per rank over a
-//!        │     └ net::RingTransport         framed checksummed wire — hub
-//!        │         (codec + handshake)      star vs chunked ring topology
+//!   cluster::Transport                      data movement: all-gather
+//!        │     ├ LocalTransport             (Arc-shared boards, O(n)
+//!        │     ├ RingLocal                  fan-out) or reduce-scatter →
+//!        │     ├ net::TcpTransport          all-gather (per-partition
+//!        │     └ net::RingTransport         shards); in-process / one
+//!        │         (codec + handshake)      process per rank over a framed
+//!        │                                  wire — star vs ring topology
 //!        ▼
 //!   collectives::{merge_selections_iter,    pure merge/reduce arithmetic
 //!       reduce_contributions_into, …}       shared by every engine, writing
@@ -72,13 +73,33 @@
 //! ([`collectives::CostModel::overlapped_step`], `t_exposed_comm` in
 //! the trace) instead of the additive sum — selection semantics stay
 //! bit-identical, pipelining changes clock fields only.
+//!
+//! The value reduce itself comes in two collective forms, selected by
+//! [`cluster::CollectiveKind`] (`--collective allgather|rsag` on the
+//! CLI, `collective = "rsag"` in TOML, composable with `--pipeline`):
+//! the default **all-gather** fans the full board to every rank
+//! (`(n-1)·V` received per rank), while **rsag** runs a sparse
+//! reduce-scatter → all-gather — each rank owns the index shard
+//! matching its ExDyna partition, reduces incoming contributions for
+//! that shard in flight, then all-gathers only the n reduced shards,
+//! dropping per-rank received value volume to `2(n-1)/n·V`
+//! ([`collectives::CostModel::rsag_recv_bytes_per_rank`]; the modeled
+//! clock is collective-neutral, so switching collectives changes real
+//! traffic shape, never modeled times). The reduction order is
+//! canonical
+//! ([`collectives::allreduce::reduce_contributions_rsag_with`]), so
+//! rsag traces are bit-exact across every engine and transport — while
+//! legitimately differing from all-gather traces in low FP bits, since
+//! f32 addition is non-associative.
 //! `rust/tests/engine_parity.rs` proves all execution modes
 //! emit identical traces for a fixed seed — including across the
-//! process boundary on both socket topologies, pipelined and not — and
-//! `rust/tests/transport_conformance.rs` runs one shared contract
-//! battery (plus the split-phase battery: start/finish ordering,
-//! double-start rejection, abort-poisoned finish, drop-without-finish)
-//! over every transport.
+//! process boundary on both socket topologies, pipelined and not, for
+//! both collectives — and `rust/tests/transport_conformance.rs` runs
+//! one shared contract battery (plus the split-phase battery:
+//! start/finish ordering, double-start rejection, abort-poisoned
+//! finish, drop-without-finish; plus the rsag battery: canonical-order
+//! bit-exactness, NaN shards, cross-kind round-budget sharing) over
+//! every transport.
 //!
 //! Entry points: [`training::run_sim`] for simulated multi-rank training,
 //! [`training::RealTrainer`] for end-to-end model training,

@@ -36,12 +36,12 @@
 //! the overlap here is within-step, and the trajectory is unchanged.
 
 use crate::cluster::transport::{Endpoint, LocalTransport, Transport};
-use crate::cluster::EngineKind;
+use crate::cluster::{CollectiveKind, EngineKind};
 use crate::collectives::{
-    allgather_sparse_rk, allreduce_dense_rk, allreduce_dense_start_rk, broadcast_selection,
-    broadcast_selection_rk, merge_selections, sparse_allreduce_union,
-    sparse_allreduce_union_finish_rk, sparse_allreduce_union_rk,
-    sparse_allreduce_union_start_rk, CostModel, RoundScratch,
+    allgather_sparse_rk, broadcast_selection, broadcast_selection_rk, merge_selections,
+    sparse_allreduce_union, sparse_allreduce_union_rsag_into, value_reduce_dense_rk,
+    value_reduce_dense_start_rk, value_reduce_union_rk, value_reduce_union_start_rk, CostModel,
+    RoundScratch,
 };
 use crate::coordinator::selection::compact_masked;
 use crate::coordinator::SelectOutput;
@@ -91,6 +91,12 @@ pub struct RealTrainerCfg {
     /// before iteration t's update lands — real gradients depend on the
     /// updated parameters — so the overlap here is within-step.)
     pub pipeline: bool,
+    /// Which collective form carries the value reduce: full-board
+    /// all-gather (default) or reduce-scatter → all-gather. Identical
+    /// modeled clock; the real traffic and the low-order bits of the
+    /// reduced sums (and hence the trajectory) follow the canonical
+    /// order of the selected form.
+    pub collective: CollectiveKind,
 }
 
 impl Default for RealTrainerCfg {
@@ -104,6 +110,7 @@ impl Default for RealTrainerCfg {
             eval_every: 0,
             engine: EngineKind::default(),
             pipeline: false,
+            collective: CollectiveKind::default(),
         }
     }
 }
@@ -379,10 +386,11 @@ fn rank_step_threaded(
         // mutates the accumulator, overlap the rank-local epilogue with
         // the flight, land the board last
         let pending = if dense {
-            allreduce_dense_start_rk(ep, &state.acc[..n_params], &mut scratch.send)?
+            value_reduce_dense_start_rk(ep, cfg.collective, &state.acc[..n_params], &mut scratch.send)?
         } else {
-            sparse_allreduce_union_start_rk(
+            value_reduce_union_start_rk(
                 ep,
+                cfg.collective,
                 &state.acc[..n_params],
                 &scratch.union_idx,
                 &mut scratch.send,
@@ -390,26 +398,29 @@ fn rank_step_threaded(
         };
         rank_carry_and_observe(state, &scratch.union_idx, &scratch.k_by_rank, t, dense)?;
         err_norm = if dense { 0.0 } else { l2_norm(&state.err) };
-        let board = pending.finish()?;
-        t_reduce = sparse_allreduce_union_finish_rk(&board, reduce_len, net, &mut scratch.reduced)?;
+        t_reduce = pending.finish(reduce_len, net, &mut scratch.shards, &mut scratch.reduced)?;
     } else {
         t_reduce = if dense {
             // dense all-reduce wire cost, not the sparse one (same
             // formula, full vector length)
-            allreduce_dense_rk(
+            value_reduce_dense_rk(
                 ep,
+                cfg.collective,
                 &state.acc[..n_params],
                 net,
                 &mut scratch.send,
+                &mut scratch.shards,
                 &mut scratch.reduced,
             )?
         } else {
-            sparse_allreduce_union_rk(
+            value_reduce_union_rk(
                 ep,
+                cfg.collective,
                 &state.acc[..n_params],
                 &scratch.union_idx,
                 net,
                 &mut scratch.send,
+                &mut scratch.shards,
                 &mut scratch.reduced,
             )?
         };
@@ -758,10 +769,25 @@ impl RealTrainer {
                 .map(|c| std::mem::take(&mut c.out))
                 .collect();
             let accs: Vec<&[f32]> = ranks.iter().map(|s| &s.acc[..n_params]).collect();
+            // value-reduce dispatch: same modeled clock for both
+            // collectives; the rsag form sums in the canonical shard
+            // order, bit-identical to the transport-backed engines
+            let net = &self.net;
+            let collective = self.cfg.collective;
+            let value_reduce = |accs: &[&[f32]], idx: &[u32]| -> (Vec<f32>, f64) {
+                match collective {
+                    CollectiveKind::Allgather => sparse_allreduce_union(accs, idx, net),
+                    CollectiveKind::Rsag => {
+                        let mut vals = Vec::new();
+                        let t = sparse_allreduce_union_rsag_into(accs, idx, net, &mut vals);
+                        (vals, t)
+                    }
+                }
+            };
             match ranks[0].sparsifier.comm_pattern() {
                 CommPattern::DenseAllReduce => {
                     let idx: Vec<u32> = (0..n_params as u32).collect();
-                    let (vals, _) = sparse_allreduce_union(&accs, &idx, &self.net);
+                    let (vals, _) = value_reduce(&accs, &idx);
                     g_vals = vals;
                     union_idx = idx;
                     k_by_rank = vec![n_params; n];
@@ -771,7 +797,7 @@ impl RealTrainer {
                 CommPattern::LeaderBroadcast => {
                     let leader = t % n;
                     let (idx, t_b) = broadcast_selection(&outs, leader, &self.net);
-                    let (vals, t_r) = sparse_allreduce_union(&accs, &idx, &self.net);
+                    let (vals, t_r) = value_reduce(&accs, &idx);
                     g_vals = vals;
                     k_by_rank = outs.iter().map(|o| o.len()).collect();
                     union_idx = idx;
@@ -780,7 +806,7 @@ impl RealTrainer {
                 }
                 CommPattern::AllGather => {
                     let ag = merge_selections(&outs, &self.net);
-                    let (vals, t_r) = sparse_allreduce_union(&accs, &ag.union_idx, &self.net);
+                    let (vals, t_r) = value_reduce(&accs, &ag.union_idx);
                     g_vals = vals;
                     k_by_rank = ag.k_by_rank;
                     f_ratio = ag.f_ratio;

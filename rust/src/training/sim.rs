@@ -38,10 +38,10 @@
 //!   ([`CostModel::overlapped_step`]). Selection semantics are
 //!   bit-identical either way — pipelining changes clock fields only.
 
-use crate::cluster::EngineKind;
+use crate::cluster::{CollectiveKind, EngineKind};
 use crate::collectives::{
-    allreduce::sparse_allreduce_union_iter, broadcast_selection_into, merge_selections_iter,
-    CostModel, StragglerCfg,
+    allreduce::{sparse_allreduce_union_iter, sparse_allreduce_union_rsag_into},
+    broadcast_selection_into, merge_selections_iter, CostModel, StragglerCfg,
 };
 use crate::error::Result;
 use crate::grad::synth::SynthGen;
@@ -84,6 +84,13 @@ pub struct SimCfg {
     /// stays bit-identical; with it on, selection semantics are
     /// unchanged and only the clock gains `t_exposed_comm`.
     pub pipeline: bool,
+    /// Which collective form carries the value reduce: full-board
+    /// all-gather (default) or reduce-scatter → all-gather. The modeled
+    /// clock is identical for both (the α–β formula always charged the
+    /// reduce-scatter shape); what changes is the harness's real
+    /// traffic and the low-order bits of the reduced sums (summation
+    /// order).
+    pub collective: CollectiveKind,
 }
 
 impl Default for SimCfg {
@@ -100,6 +107,7 @@ impl Default for SimCfg {
             engine: EngineKind::default(),
             straggler: StragglerCfg::default(),
             pipeline: false,
+            collective: CollectiveKind::default(),
         }
     }
 }
@@ -154,6 +162,26 @@ pub fn run_lockstep(
     let mut k_by_rank: Vec<usize> = Vec::new();
     let mut reduced: Vec<f32> = Vec::new();
 
+    // value-reduce dispatch: both collectives share the modeled clock;
+    // only the canonical summation order (and thus the low-order bits
+    // of the sums) differs — the same dispatch the threaded workers do
+    // through value_reduce_union_rk
+    let value_reduce =
+        |acc: &[Vec<f32>], union_idx: &[u32], reduced: &mut Vec<f32>| -> f64 {
+            match cfg.collective {
+                CollectiveKind::Allgather => sparse_allreduce_union_iter(
+                    acc.iter().map(|v| v.as_slice()),
+                    union_idx,
+                    &net,
+                    reduced,
+                ),
+                CollectiveKind::Rsag => {
+                    let accs: Vec<&[f32]> = acc.iter().map(|v| v.as_slice()).collect();
+                    sparse_allreduce_union_rsag_into(&accs, union_idx, &net, reduced)
+                }
+            }
+        };
+
     for t in 0..cfg.iters {
         let lr = cfg.lr.lr(t);
         // --- compute + accumulate (Alg. 1 line 8), fused into one pass
@@ -200,12 +228,7 @@ pub fn run_lockstep(
             CommPattern::LeaderBroadcast => {
                 let leader = t % n;
                 let t_bcast = broadcast_selection_into(&outs, leader, &net, &mut union_idx);
-                let t_red = sparse_allreduce_union_iter(
-                    acc.iter().map(|v| v.as_slice()),
-                    &union_idx,
-                    &net,
-                    &mut reduced,
-                );
+                let t_red = value_reduce(&acc, &union_idx, &mut reduced);
                 k_by_rank.clear();
                 k_by_rank.extend(outs.iter().map(|o| o.len()));
                 k_actual = union_idx.len();
@@ -215,12 +238,7 @@ pub fn run_lockstep(
             CommPattern::AllGather => {
                 let stats =
                     merge_selections_iter(outs.iter(), &net, &mut union_idx, &mut k_by_rank);
-                let t_red = sparse_allreduce_union_iter(
-                    acc.iter().map(|v| v.as_slice()),
-                    &union_idx,
-                    &net,
-                    &mut reduced,
-                );
+                let t_red = value_reduce(&acc, &union_idx, &mut reduced);
                 k_actual = union_idx.len();
                 f_ratio = stats.f_ratio;
                 t_comm = stats.time_s + t_red;

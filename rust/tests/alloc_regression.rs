@@ -14,10 +14,11 @@
 //! Everything runs inside ONE `#[test]` so no unrelated test-harness
 //! activity can allocate inside a counting window.
 
-use exdyna::cluster::{Endpoint, LocalTransport, Message};
+use exdyna::cluster::{CollectiveKind, Endpoint, LocalTransport, Message};
 use exdyna::collectives::{
     allgather_sparse_finish_rk, allgather_sparse_rk, sparse_allreduce_union_finish_rk,
-    sparse_allreduce_union_rk, sparse_allreduce_union_start_rk, CostModel, RoundScratch,
+    sparse_allreduce_union_rk, sparse_allreduce_union_start_rk, value_reduce_union_rk,
+    value_reduce_union_start_rk, CostModel, RoundScratch,
 };
 use exdyna::coordinator::{ExDynaCfg, SelectOutput};
 use exdyna::grad::synth::{DecayCfg, SynthGen, SynthModel};
@@ -227,6 +228,85 @@ fn split_phase_rounds(n: usize, k: usize, warmup: usize, steady: usize) -> (u64,
     })
 }
 
+/// Reduce-scatter → all-gather rounds (ISSUE 6): the same selection
+/// all-gather + union value reduce, but through the rsag collective —
+/// blocking and split-phase rounds alternate, the reduced-shard buffers
+/// ride `RoundScratch::shards`, and the steady state must stay at
+/// 0 allocs / 0 bytes exactly like the all-gather path. LocalTransport
+/// only: the socket transports allocate in their decode path and the
+/// in-process ring moves channel nodes; their rsag correctness is pinned
+/// by the conformance suite instead.
+fn rsag_rounds(n: usize, k: usize, warmup: usize, steady: usize) -> (u64, u64) {
+    measure(|| {
+        let tp = Arc::new(LocalTransport::new(n));
+        let mut handles = Vec::with_capacity(n);
+        for rank in 0..n {
+            let tp = tp.clone();
+            handles.push(std::thread::spawn(move || {
+                let ep = Endpoint::new(rank, tp.as_ref());
+                let net = CostModel::paper_testbed(n);
+                let sel = Arc::new(SelectOutput {
+                    idx: ((rank * k) as u32..((rank + 1) * k) as u32).collect(),
+                    val: vec![0.25f32; k],
+                });
+                let acc = vec![0.5f32; n * k];
+                let mut scratch = RoundScratch::new();
+                let mut overlap_sink = 0.0f32;
+                for round in 0..(warmup + steady) {
+                    if rank == 0 && round == warmup {
+                        ENABLED.store(true, Ordering::SeqCst);
+                    }
+                    allgather_sparse_rk(
+                        &ep,
+                        Arc::clone(&sel),
+                        &net,
+                        &mut scratch.union_idx,
+                        &mut scratch.k_by_rank,
+                    )
+                    .unwrap();
+                    assert_eq!(scratch.union_idx.len(), n * k);
+                    if round % 2 == 0 {
+                        value_reduce_union_rk(
+                            &ep,
+                            CollectiveKind::Rsag,
+                            &acc,
+                            &scratch.union_idx,
+                            &net,
+                            &mut scratch.send,
+                            &mut scratch.shards,
+                            &mut scratch.reduced,
+                        )
+                        .unwrap();
+                    } else {
+                        // split-phase rsag with "compute" in the window
+                        let pending = value_reduce_union_start_rk(
+                            &ep,
+                            CollectiveKind::Rsag,
+                            &acc,
+                            &scratch.union_idx,
+                            &mut scratch.send,
+                        )
+                        .unwrap();
+                        overlap_sink += acc[round % acc.len()];
+                        pending
+                            .finish(n * k, &net, &mut scratch.shards, &mut scratch.reduced)
+                            .unwrap();
+                    }
+                    assert_eq!(scratch.reduced.len(), n * k);
+                }
+                assert!(overlap_sink >= 0.0);
+                if rank == 0 {
+                    ENABLED.store(false, Ordering::SeqCst);
+                }
+                ep.barrier().unwrap();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    })
+}
+
 /// Marginal allocations of one extra threaded-sim iteration (full
 /// engine, ExDyna sparsifier): the difference between a long and a short
 /// run divides out launch/teardown. The transport/merge path contributes
@@ -300,6 +380,22 @@ fn steady_state_collective_rounds_allocate_nothing() {
         (allocs_p8, bytes_p8),
         (0, 0),
         "n=8 steady split-phase rounds must not allocate"
+    );
+
+    // --- reduce-scatter → all-gather path (ISSUE 6): blocking and
+    // split-phase rsag rounds ride the same recycled pools — zero at
+    // both cluster sizes
+    let (allocs_r2, bytes_r2) = rsag_rounds(2, 256, 8, 100);
+    assert_eq!(
+        (allocs_r2, bytes_r2),
+        (0, 0),
+        "n=2 steady rsag rounds must not allocate"
+    );
+    let (allocs_r8, bytes_r8) = rsag_rounds(8, 256, 8, 100);
+    assert_eq!(
+        (allocs_r8, bytes_r8),
+        (0, 0),
+        "n=8 steady rsag rounds must not allocate"
     );
 
     // --- whole threaded engine: the remaining per-iteration allocations

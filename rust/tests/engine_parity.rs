@@ -5,11 +5,19 @@
 //! thread per rank and the socket paths really run one process per rank
 //! over loopback.
 //!
+//! The reduce-scatter → all-gather collective (ISSUE 6) gets the same
+//! bar: rsag traces must be bit-identical across lock-step, threaded
+//! and a real multi-process `launch --collective rsag` ring run —
+//! always against FRESH rsag references (rsag sums accumulate in the
+//! canonical shard order, so its values legitimately differ from the
+//! all-gather collective's in low bits; parity is rsag-vs-rsag, never
+//! rsag-vs-allgather).
+//!
 //! Also pins the empty-round regression: rounds where nothing is
 //! selected carry `f_ratio = NaN` and must not poison
 //! `Trace::f_ratio_summary`.
 
-use exdyna::cluster::{run_threaded_with_stats, EngineKind};
+use exdyna::cluster::{run_threaded_with_stats, CollectiveKind, EngineKind};
 use exdyna::collectives::StragglerCfg;
 use exdyna::coordinator::ExDynaCfg;
 use exdyna::grad::synth::{DecayCfg, SynthGen, SynthModel};
@@ -281,9 +289,15 @@ fn parity_holds_under_link_degradation() {
 /// below builds.
 fn launch_multiprocess(transport: &str, extra: &[&str]) -> Trace {
     let exe = env!("CARGO_BIN_EXE_exdyna");
+    // fold the extra flags into the scratch-dir name: tests sharing one
+    // process (same pid) must never collide on the trace path
+    let mut tag = String::new();
+    for e in extra {
+        tag.push('_');
+        tag.push_str(e.trim_start_matches('-'));
+    }
     let dir = std::env::temp_dir().join(format!(
-        "exdyna_{transport}{}_parity_{}",
-        if extra.is_empty() { "" } else { "_extra" },
+        "exdyna_{transport}{tag}_parity_{}",
         std::process::id()
     ));
     std::fs::create_dir_all(&dir).unwrap();
@@ -328,10 +342,11 @@ fn launch_multiprocess(transport: &str, extra: &[&str]) -> Trace {
 }
 
 /// The in-process reference pair for [`launch_multiprocess`]'s config.
-fn reference_traces_with(pipeline: bool) -> (Trace, Trace) {
+fn reference_traces_cfg(pipeline: bool, collective: CollectiveKind) -> (Trace, Trace) {
     let mut cfg = exdyna::config::preset("resnet18", 0.01, 3, 8).unwrap();
     cfg.sim.seed = 17;
     cfg.sim.pipeline = pipeline;
+    cfg.sim.collective = collective;
     let gen = SynthGen::new(cfg.model.clone(), 3, cfg.sim.rho, cfg.sim.seed, cfg.sim.exact_gen);
     let factory = make_sparsifier_factory("exdyna", 0.002, cfg.hard_delta, cfg.exdyna).unwrap();
     cfg.sim.engine = EngineKind::Lockstep;
@@ -339,6 +354,10 @@ fn reference_traces_with(pipeline: bool) -> (Trace, Trace) {
     cfg.sim.engine = EngineKind::Threaded;
     let thr = run_sim(&gen, factory.as_ref(), &cfg.sim).unwrap();
     (lock, thr)
+}
+
+fn reference_traces_with(pipeline: bool) -> (Trace, Trace) {
+    reference_traces_cfg(pipeline, CollectiveKind::Allgather)
 }
 
 fn reference_traces() -> (Trace, Trace) {
@@ -390,6 +409,47 @@ fn ring_multiprocess_pipelined_trace_matches_in_process() {
     let (lock, thr) = reference_traces_with(true);
     assert_traces_identical(&ring, &lock, "ring-multiprocess-pipelined vs lockstep");
     assert_traces_identical(&ring, &thr, "ring-multiprocess-pipelined vs threaded");
+}
+
+/// ISSUE 6 acceptance (in-process half): with the reduce-scatter →
+/// all-gather collective selected, lock-step and threaded traces stay
+/// bit-identical — pipelined and not — across comm patterns (exdyna +
+/// topk all-gather, cltk leader broadcast, dense modeled-only reduce).
+/// Fresh rsag references on both sides: the shard-ordered sums are the
+/// trace being pinned, not compared against the all-gather collective.
+#[test]
+fn rsag_traces_bit_exact_across_engines() {
+    let n = 4;
+    for sp in ["exdyna", "topk", "cltk", "dense"] {
+        for pipeline in [false, true] {
+            let gen = small_gen(n);
+            let factory =
+                make_sparsifier_factory(sp, 0.002, 0.01, ExDynaCfg::default_for(n)).unwrap();
+            let mut c_lock = cfg(n, 12, EngineKind::Lockstep);
+            c_lock.collective = CollectiveKind::Rsag;
+            c_lock.pipeline = pipeline;
+            let mut c_thr = cfg(n, 12, EngineKind::Threaded);
+            c_thr.collective = CollectiveKind::Rsag;
+            c_thr.pipeline = pipeline;
+            let lock = run_sim(&gen, factory.as_ref(), &c_lock).unwrap();
+            let thr = run_sim(&gen, factory.as_ref(), &c_thr).unwrap();
+            assert_traces_identical(&lock, &thr, &format!("{sp} rsag pipeline={pipeline}"));
+        }
+    }
+}
+
+/// ISSUE 6 acceptance (multi-process half): a real single-host
+/// `launch --collective rsag` run over the loopback ring — chunked
+/// reduce-scatter + shard all-gather on real sockets, one OS process
+/// per rank — must emit a merged trace bit-identical to both
+/// in-process engines running the same rsag collective.
+#[test]
+fn ring_multiprocess_rsag_trace_matches_in_process() {
+    let ring = launch_multiprocess("ring", &["--collective", "rsag"]);
+    assert_eq!(ring.records.len(), 8);
+    let (lock, thr) = reference_traces_cfg(false, CollectiveKind::Rsag);
+    assert_traces_identical(&ring, &lock, "ring-multiprocess-rsag vs lockstep");
+    assert_traces_identical(&ring, &thr, "ring-multiprocess-rsag vs threaded");
 }
 
 #[test]

@@ -29,13 +29,25 @@
 //! (`pipeline = true`) reproduces the threaded engine's pipelined trace
 //! bit-exactly over all four transports.
 //!
+//! The reduce-scatter → all-gather battery (ISSUE 6) pins the second
+//! collective form on every transport: blocking and split-phase rsag
+//! rounds land the canonical shard-ordered SUM bit-exactly (including
+//! payload-carrying NaNs and shards left empty by `len < n`), rsag and
+//! all-gather rounds interleave and share the one-outstanding-round
+//! budget (a second start of either kind is a typed error), and an
+//! abort between `rsag_start` and `finish` poisons the finish within
+//! the deadline.
+//!
 //! The true multi-process star/ring paths (one OS process per rank via
 //! `exdyna launch`) are pinned by `rust/tests/engine_parity.rs`; this
 //! suite covers the transport semantics in-process where every failure
 //! can be injected deterministically.
 
 use exdyna::cluster::testing::{local_cluster, ring_cluster, ring_local_cluster, tcp_cluster};
-use exdyna::cluster::{run_rank_on_transport, run_threaded, Endpoint, Message, Transport};
+use exdyna::cluster::{
+    run_rank_on_transport, run_threaded, CollectiveKind, Endpoint, FloatBufPool, Message, Transport,
+};
+use exdyna::collectives::allreduce::reduce_contributions_rsag_with;
 use exdyna::coordinator::{ExDyna, ExDynaCfg, SelectOutput};
 use exdyna::error::Result;
 use exdyna::grad::synth::{DecayCfg, SynthGen, SynthModel};
@@ -389,6 +401,194 @@ fn abort_between_start_and_finish_poisons_the_finish() {
     }
 }
 
+/// Values whose sum is order-observable: `ulp(1e8) = 8` for f32, so
+/// `1e8 + 1.0 == 1e8` — any transport summing its shards in a
+/// non-canonical order lands different bits than the reference.
+const PROBE: [f32; 3] = [1.0e8, 1.0, -1.0e8];
+
+/// The order-probe contribution of `rank` for `round`.
+fn probe_contribution(rank: usize, round: usize, len: usize) -> Vec<f32> {
+    (0..len).map(|i| PROBE[(rank + i + round) % 3]).collect()
+}
+
+/// The canonical rsag reference for `round`: every rank's contribution
+/// reduced in the shared shard order (`reduce_contributions_rsag_with`).
+fn rsag_reference(n: usize, round: usize, len: usize, want: &mut Vec<f32>) {
+    let all: Vec<Vec<f32>> = (0..n).map(|r| probe_contribution(r, round, len)).collect();
+    reduce_contributions_rsag_with(n, len, |r| all[r].as_slice(), want);
+}
+
+#[test]
+fn rsag_results_are_canonical_and_round_isolated() {
+    // (4, 3) leaves shard 0 empty (len < n); blocking and split-phase
+    // rounds alternate, and an all-gather round interleaves each round
+    // so generation sharing between the two collective kinds is pinned
+    for &(name, mk) in TRANSPORTS {
+        for (n, len) in [(1usize, 5usize), (2, 9), (4, 3), (4, 11)] {
+            let rounds = 8;
+            per_rank(name, mk(n), |rank, tp| {
+                let ep = Endpoint::new(rank, tp);
+                let mut shards = FloatBufPool::new();
+                let mut out = Vec::new();
+                let mut want = Vec::new();
+                for round in 0..rounds {
+                    let mine = Arc::new(probe_contribution(rank, round, len));
+                    if round % 2 == 0 {
+                        ep.reduce_scatter_allgather(mine, &mut shards, &mut out).unwrap();
+                    } else {
+                        let pending = ep.rsag_start(mine).unwrap();
+                        let overlap: f64 = (0..64).map(f64::from).sum();
+                        assert!(overlap > 0.0);
+                        pending.finish(&mut shards, &mut out).unwrap();
+                    }
+                    rsag_reference(n, round, len, &mut want);
+                    assert_eq!(out.len(), len, "[{name}] n={n} len={len} rank {rank}");
+                    for (i, (a, b)) in out.iter().zip(want.iter()).enumerate() {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "[{name}] n={n} len={len} rank {rank} round {round} i={i}: {a} vs {b}"
+                        );
+                    }
+                    let board = ep.allgather_f64((rank * 100 + round) as f64).unwrap();
+                    let want_board: Vec<f64> = (0..n).map(|r| (r * 100 + round) as f64).collect();
+                    assert_eq!(board, want_board, "[{name}] n={n} rank {rank} round {round}");
+                }
+            });
+        }
+    }
+}
+
+#[test]
+fn rsag_preserves_nan_payloads_bit_exactly() {
+    let nan_bits: u32 = 0x7FC0_1234; // payload-carrying NaN
+    for &(name, mk) in TRANSPORTS {
+        let n = 3;
+        let len = 7;
+        per_rank(name, mk(n), |rank, tp| {
+            let ep = Endpoint::new(rank, tp);
+            let mut shards = FloatBufPool::new();
+            let mut out = Vec::new();
+            // rank 1 plants the NaN at index 2; the peers contribute 0.0
+            // there so the shard sum carries it through the reduce
+            let contribution = |r: usize| -> Vec<f32> {
+                (0..len)
+                    .map(|i| match (i, r) {
+                        (2, 1) => f32::from_bits(nan_bits),
+                        (2, _) => 0.0,
+                        _ => (r * 10 + i) as f32,
+                    })
+                    .collect()
+            };
+            ep.reduce_scatter_allgather(Arc::new(contribution(rank)), &mut shards, &mut out)
+                .unwrap();
+            assert!(out[2].is_nan(), "[{name}] NaN lost in the reduce");
+            // the transport's sum must be bit-identical to the canonical
+            // reference computed with the same summation order — NaN
+            // propagation included
+            let all: Vec<Vec<f32>> = (0..n).map(contribution).collect();
+            let mut want = Vec::new();
+            reduce_contributions_rsag_with(n, len, |r| all[r].as_slice(), &mut want);
+            for i in 0..len {
+                assert_eq!(
+                    out[i].to_bits(),
+                    want[i].to_bits(),
+                    "[{name}] rank {rank} i={i}"
+                );
+            }
+        });
+    }
+}
+
+#[test]
+fn rsag_and_allgather_starts_share_the_one_round_budget() {
+    for &(name, mk) in TRANSPORTS {
+        let tps = mk(1);
+        let tp = tps[0].as_ref();
+        let mut shards = FloatBufPool::new();
+        let mut out = Vec::new();
+        // an rsag round in flight blocks a second start of either kind
+        let pending = tp.rsag_start(0, Arc::new(vec![1.0, 2.0])).unwrap();
+        assert!(
+            tp.rsag_start(0, Arc::new(vec![9.0])).is_err(),
+            "[{name}] second rsag start must be rejected"
+        );
+        assert!(
+            tp.allgather_start(0, Message::Scalar(9.0)).is_err(),
+            "[{name}] all-gather start during an rsag round must be rejected"
+        );
+        pending.finish(&mut shards, &mut out).unwrap();
+        assert_eq!(out, vec![1.0, 2.0], "[{name}]");
+        // and an all-gather round in flight blocks an rsag start
+        let pending = tp.allgather_start(0, Message::Scalar(5.0)).unwrap();
+        assert!(
+            tp.rsag_start(0, Arc::new(vec![1.0])).is_err(),
+            "[{name}] rsag start during an all-gather round must be rejected"
+        );
+        let board = pending.finish().unwrap();
+        assert_eq!(&board[..], &[Message::Scalar(5.0)], "[{name}]");
+        // the transport fully recovers after both rejections
+        tp.reduce_scatter_allgather(0, Arc::new(vec![3.0]), &mut shards, &mut out)
+            .unwrap();
+        assert_eq!(out, vec![3.0], "[{name}]");
+    }
+}
+
+#[test]
+fn abort_poisons_a_pending_rsag_finish() {
+    for &(name, mk) in TRANSPORTS {
+        let n = 3;
+        let tps = mk(n);
+        let started = Instant::now();
+        // ranks 0 and 1 put rsag contributions in flight and park in the
+        // overlap window; rank 2 dies mid-reduce instead of contributing
+        let barrier = Arc::new(std::sync::Barrier::new(n));
+        let mut handles = Vec::new();
+        for rank in 0..2 {
+            let tp = Arc::clone(&tps[rank]);
+            let barrier = Arc::clone(&barrier);
+            handles.push(std::thread::spawn(move || {
+                let pending = tp
+                    .as_ref()
+                    .rsag_start(rank, Arc::new(vec![rank as f32; 8]))
+                    .unwrap();
+                barrier.wait();
+                let mut shards = FloatBufPool::new();
+                let mut out = Vec::new();
+                let res = pending.finish(&mut shards, &mut out);
+                if res.is_err() {
+                    // the worker contract: an erroring rank aborts its
+                    // transport so the poison propagates
+                    tp.abort();
+                }
+                res
+            }));
+        }
+        barrier.wait(); // both starts are in flight ...
+        tps[2].abort(); // ... then rank 2 dies without contributing
+        for (rank, h) in handles.into_iter().enumerate() {
+            assert!(
+                h.join().unwrap().is_err(),
+                "[{name}] rank {rank}'s rsag finish must be poisoned, not hang"
+            );
+        }
+        assert!(
+            started.elapsed() < Duration::from_secs(15),
+            "[{name}] abort propagation into a pending rsag finish took {:?}",
+            started.elapsed()
+        );
+        // later rsag calls fail fast on the poisoned transport
+        let mut shards = FloatBufPool::new();
+        let mut out = Vec::new();
+        assert!(
+            tps[2]
+                .reduce_scatter_allgather(2, Arc::new(vec![0.0]), &mut shards, &mut out)
+                .is_err(),
+            "[{name}] aborted handle must fail fast"
+        );
+    }
+}
+
 #[test]
 fn double_deposit_is_rejected_on_shared_board_transports() {
     // shared-board semantics (LocalTransport): a buggy second deposit
@@ -423,13 +623,21 @@ fn simworker_traces_are_bit_exact_on_every_transport() {
         Ok(Box::new(ExDyna::new(n_g, nr, ExDynaCfg::default_for(nr))?))
     };
     // pipeline = true runs the split-phase software pipeline on every
-    // transport — the cross-transport half of the ISSUE 5 acceptance
-    for pipeline in [false, true] {
+    // transport — the cross-transport half of the ISSUE 5 acceptance;
+    // collective = rsag swaps in the reduce-scatter → all-gather on the
+    // same matrix (the cross-transport half of the ISSUE 6 acceptance)
+    for (pipeline, collective) in [
+        (false, CollectiveKind::Allgather),
+        (true, CollectiveKind::Allgather),
+        (false, CollectiveKind::Rsag),
+        (true, CollectiveKind::Rsag),
+    ] {
         let cfg = SimCfg {
             n_ranks: n,
             iters: 6,
             compute_s: 0.01,
             pipeline,
+            collective,
             ..Default::default()
         };
         let reference = run_threaded(&gen, &mk_sp, &cfg).unwrap();
@@ -457,10 +665,13 @@ fn simworker_traces_are_bit_exact_on_every_transport() {
                 assert_eq!(
                     trace.records.len(),
                     reference.records.len(),
-                    "[{name}] pipeline={pipeline} rank {rank}"
+                    "[{name}] pipeline={pipeline} collective={collective} rank {rank}"
                 );
                 for (a, b) in trace.records.iter().zip(reference.records.iter()) {
-                    let ctx = format!("[{name}] pipeline={pipeline} rank {rank} t={}", a.t);
+                    let ctx = format!(
+                        "[{name}] pipeline={pipeline} collective={collective} rank {rank} t={}",
+                        a.t
+                    );
                     assert_eq!(a.k_actual, b.k_actual, "{ctx}: k_actual");
                     assert_eq!(a.k_sum, b.k_sum, "{ctx}: k_sum");
                     assert_eq!(a.delta.to_bits(), b.delta.to_bits(), "{ctx}: delta");
