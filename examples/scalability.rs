@@ -53,6 +53,24 @@
 //! cargo run --release -- launch --world-size 4 --collective rsag --iters 100 --out trace.csv
 //! ```
 //!
+//! Add `--obs-trace spans.json` to either form (and to `sim`, or
+//! `trace_path` in the TOML `[obs]` section) to record a
+//! chrome://tracing span timeline — compute/select and round
+//! begin/complete spans, one lane per rank, merged across the rank
+//! processes into a single JSON document by the launcher. Add
+//! `--metrics-json metrics.ndjson` to also sink one JSON object per
+//! iteration (every CSV column plus the *measured* host wall-clock per
+//! phase, next to the modeled α–β clock), and `--obs-flight` to attach
+//! per-rank flight recorders that dump the recent protocol events on an
+//! abort. All of it is off by default and leaves traces bit-identical
+//! when on (`rust/tests/obs_observability.rs` pins this, and pins the
+//! measured wire bytes equal to the cost-model predictions):
+//!
+//! ```text
+//! cargo run --release -- launch --world-size 4 --transport ring \
+//!     --obs-trace spans.json --metrics-json metrics.ndjson --iters 100
+//! ```
+//!
 //! The merged trace is bit-identical to `sim --engine threaded` and
 //! `sim --engine lockstep` on the same seed — on both socket
 //! topologies (`rust/tests/engine_parity.rs` enforces this) — so every

@@ -18,8 +18,10 @@ use crate::cluster::worker::SimWorker;
 use crate::error::{Error, Result};
 use crate::grad::synth::SynthGen;
 use crate::metrics::{IterRecord, Trace};
+use crate::obs::{FlightRecorder, ObsCfg, SpanTracer};
 use crate::sparsifiers::Sparsifier;
 use crate::training::sim::{SimCfg, SparsifierFactory};
+use std::time::Instant;
 
 /// When one rank fails, its peers fail their rendezvous with a generic
 /// "transport poisoned" error; surface the original failure instead of
@@ -57,6 +59,24 @@ pub fn run_rank_on_transport(
     rank: usize,
     transport: &dyn Transport,
 ) -> Result<Trace> {
+    run_rank_on_transport_obs(gen, make_sparsifier, cfg, rank, transport, &ObsCfg::default())
+}
+
+/// [`run_rank_on_transport`] with observability: tags the process-wide
+/// logger with this rank, attaches a [`FlightRecorder`] to the
+/// transport when asked, and threads a [`SpanTracer`] through the
+/// worker, writing this rank's `.rank<R>.part` span file on success.
+/// Merging the parts is the caller's job (the `launch` parent, which
+/// outlives all ranks). With `obs` fully off this is exactly
+/// [`run_rank_on_transport`]: nothing is constructed, nothing recorded.
+pub fn run_rank_on_transport_obs(
+    gen: &SynthGen,
+    make_sparsifier: &SparsifierFactory,
+    cfg: &SimCfg,
+    rank: usize,
+    transport: &dyn Transport,
+    obs: &ObsCfg,
+) -> Result<Trace> {
     let n = cfg.n_ranks;
     if n == 0 {
         return Err(Error::invalid("n_ranks must be >= 1"));
@@ -70,6 +90,13 @@ pub fn run_rank_on_transport(
     if rank >= n {
         return Err(Error::invalid(format!("rank {rank} out of range (n = {n})")));
     }
+    if obs.is_active() {
+        crate::obs::log::set_rank(rank);
+    }
+    if obs.flight_recorder {
+        transport.attach_flight_recorder(rank, FlightRecorder::new(rank));
+    }
+    let tracer = obs.tracing().then(|| SpanTracer::new(rank));
     let sp = make_sparsifier(gen.n_g(), n)?;
     let name = sp.name();
     let mut trace = Trace::new(&name, &gen.model.name, n);
@@ -77,13 +104,17 @@ pub fn run_rank_on_transport(
     // a panicking worker must poison the transport too, not just an Err
     let _guard = crate::cluster::transport::AbortOnPanic(transport);
     let ep = Endpoint::new(rank, transport);
-    let worker = SimWorker::new(rank, sp, gen, cfg, ep);
-    let out = worker.run();
+    let worker = SimWorker::new(rank, sp, gen, cfg, ep).with_tracer(tracer);
+    let out = worker.run_traced();
     if out.is_err() {
         // don't leave remote peers blocked at the rendezvous
         transport.abort();
     }
-    for rec in out? {
+    let (records, tracer) = out?;
+    if let (Some(base), Some(tr)) = (obs.trace_path.as_deref(), tracer.as_ref()) {
+        tr.write_part(base)?;
+    }
+    for rec in records {
         trace.push(rec);
     }
     Ok(trace)
@@ -105,6 +136,31 @@ pub fn run_threaded_with_stats(
     make_sparsifier: &SparsifierFactory,
     cfg: &SimCfg,
 ) -> Result<(Trace, ClusterStats)> {
+    run_threaded_with_stats_obs(gen, make_sparsifier, cfg, &ObsCfg::default())
+}
+
+/// [`run_threaded`] with observability switched on: every rank gets a
+/// [`SpanTracer`] against one shared origin (so the merged timeline's
+/// lanes align exactly) and, when asked, a [`FlightRecorder`]; after
+/// the join the engine itself merges the span part files into the final
+/// chrome-trace JSON, since no launch parent outlives these ranks.
+pub fn run_threaded_obs(
+    gen: &SynthGen,
+    make_sparsifier: &SparsifierFactory,
+    cfg: &SimCfg,
+    obs: &ObsCfg,
+) -> Result<Trace> {
+    run_threaded_with_stats_obs(gen, make_sparsifier, cfg, obs).map(|(trace, _)| trace)
+}
+
+/// The one true threaded-engine body: [`run_threaded_with_stats`] and
+/// [`run_threaded_obs`] are thin wrappers over this.
+pub fn run_threaded_with_stats_obs(
+    gen: &SynthGen,
+    make_sparsifier: &SparsifierFactory,
+    cfg: &SimCfg,
+    obs: &ObsCfg,
+) -> Result<(Trace, ClusterStats)> {
     let n = cfg.n_ranks;
     if n == 0 {
         return Err(Error::invalid("n_ranks must be >= 1"));
@@ -120,35 +176,43 @@ pub fn run_threaded_with_stats(
     trace.pipelined = cfg.pipeline;
 
     let transport = LocalTransport::new(n);
-    let results: Vec<Result<(std::thread::ThreadId, Vec<IterRecord>)>> =
-        std::thread::scope(|scope| {
-            let transport = &transport;
-            let mut handles = Vec::with_capacity(n);
-            for (rank, sp) in sparsifiers.into_iter().enumerate() {
-                handles.push(scope.spawn(move || {
-                    // a panic (vs an Err) must also poison the transport,
-                    // or the sibling joins below would block forever
-                    let _guard = crate::cluster::transport::AbortOnPanic(
-                        transport as &dyn Transport,
-                    );
-                    let ep = Endpoint::new(rank, transport as &dyn Transport);
-                    let worker = SimWorker::new(rank, sp, gen, cfg, ep);
-                    let out = worker.run();
-                    if out.is_err() {
-                        // don't leave peers blocked at the rendezvous
-                        transport.abort();
-                    }
-                    out.map(|records| (std::thread::current().id(), records))
-                }));
-            }
-            handles
-                .into_iter()
-                .map(|h| {
-                    h.join()
-                        .unwrap_or_else(|_| Err(Error::invariant("cluster worker panicked")))
-                })
-                .collect()
-        });
+    if obs.flight_recorder {
+        for rank in 0..n {
+            transport.attach_flight_recorder(rank, FlightRecorder::new(rank));
+        }
+    }
+    // one origin for every rank's tracer: lanes in the merged timeline
+    // share t=0
+    let origin = Instant::now();
+    type RankOut = (std::thread::ThreadId, Vec<IterRecord>, Option<SpanTracer>);
+    let results: Vec<Result<RankOut>> = std::thread::scope(|scope| {
+        let transport = &transport;
+        let mut handles = Vec::with_capacity(n);
+        for (rank, sp) in sparsifiers.into_iter().enumerate() {
+            let tracer = obs.tracing().then(|| SpanTracer::with_origin(rank, origin));
+            handles.push(scope.spawn(move || {
+                // a panic (vs an Err) must also poison the transport,
+                // or the sibling joins below would block forever
+                let _guard =
+                    crate::cluster::transport::AbortOnPanic(transport as &dyn Transport);
+                let ep = Endpoint::new(rank, transport as &dyn Transport);
+                let worker = SimWorker::new(rank, sp, gen, cfg, ep).with_tracer(tracer);
+                let out = worker.run_traced();
+                if out.is_err() {
+                    // don't leave peers blocked at the rendezvous
+                    transport.abort();
+                }
+                out.map(|(records, tracer)| (std::thread::current().id(), records, tracer))
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .unwrap_or_else(|_| Err(Error::invariant("cluster worker panicked")))
+            })
+            .collect()
+    });
     let mut per_rank = Vec::with_capacity(n);
     let mut errors = Vec::new();
     for r in results {
@@ -161,9 +225,18 @@ pub fn run_threaded_with_stats(
         return Err(pick_root_cause(errors));
     }
 
+    if let Some(base) = obs.trace_path.as_deref() {
+        for (_, _, tracer) in per_rank.iter() {
+            if let Some(tr) = tracer {
+                tr.write_part(base)?;
+            }
+        }
+        crate::obs::trace::merge(base, n)?;
+    }
+
     // ThreadId is not Ord; count distinct ids by linear scan (n is small)
     let mut distinct: Vec<std::thread::ThreadId> = Vec::with_capacity(n);
-    for (id, _) in per_rank.iter() {
+    for (id, _, _) in per_rank.iter() {
         if !distinct.contains(id) {
             distinct.push(*id);
         }
@@ -174,7 +247,7 @@ pub fn run_threaded_with_stats(
     };
 
     // rank 0's records are the cluster trace (see SimWorker::run docs)
-    let (_, records) = per_rank.into_iter().next().expect("n >= 1");
+    let (_, records, _) = per_rank.into_iter().next().expect("n >= 1");
     for rec in records {
         trace.push(rec);
     }
@@ -265,6 +338,47 @@ mod tests {
         let mut bad = cfg;
         bad.n_ranks = n + 1;
         assert!(run_rank_on_transport(&gen, &mk, &bad, 0, &LocalTransport::new(n)).is_err());
+    }
+
+    #[test]
+    fn obs_run_merges_spans_and_leaves_the_trace_bit_identical() {
+        let n = 2;
+        let model = SynthModel::profile("t", 24_000, 4, 5, DecayCfg::default());
+        let gen = SynthGen::new(model, n, 0.5, 17, false);
+        let cfg = SimCfg {
+            n_ranks: n,
+            iters: 4,
+            compute_s: 0.01,
+            ..Default::default()
+        };
+        let mk = |n_g: usize,
+                  nr: usize|
+         -> crate::error::Result<Box<dyn crate::sparsifiers::Sparsifier>> {
+            Ok(Box::new(ExDyna::new(n_g, nr, ExDynaCfg::default_for(nr))?))
+        };
+        let plain = run_threaded(&gen, &mk, &cfg).unwrap();
+        let dir = std::env::temp_dir().join(format!("exdyna_engine_obs_{}", std::process::id()));
+        let base = dir.join("run.trace.json");
+        let obs = ObsCfg {
+            trace_path: Some(base.clone()),
+            flight_recorder: true,
+            ..ObsCfg::default()
+        };
+        let traced = run_threaded_obs(&gen, &mk, &cfg, &obs).unwrap();
+        // observability must not perturb the deterministic trace
+        assert_eq!(plain.records.len(), traced.records.len());
+        for (a, b) in plain.records.iter().zip(traced.records.iter()) {
+            assert_eq!(a.k_actual, b.k_actual);
+            assert_eq!(a.delta.to_bits(), b.delta.to_bits());
+            assert_eq!(a.t_comm.to_bits(), b.t_comm.to_bits());
+        }
+        // the engine merged the part files into one chrome-trace doc
+        let doc = std::fs::read_to_string(&base).unwrap();
+        assert!(doc.starts_with("{\"traceEvents\":["), "{doc}");
+        assert!(doc.contains("\"pid\":0") && doc.contains("\"pid\":1"));
+        assert!(doc.contains("\"name\":\"compute\"") && doc.contains("\"name\":\"round\""));
+        assert!(!crate::obs::SpanTracer::part_path(&base, 0).exists());
+        std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]

@@ -88,7 +88,8 @@ pub mod transport;
 pub mod worker;
 
 pub use engine::{
-    run_rank_on_transport, run_threaded, run_threaded_with_stats, ClusterStats,
+    run_rank_on_transport, run_rank_on_transport_obs, run_threaded, run_threaded_obs,
+    run_threaded_with_stats, run_threaded_with_stats_obs, ClusterStats,
 };
 pub use net::{NetCfg, RingTransport, TcpTransport};
 pub use ring_local::RingLocal;

@@ -130,6 +130,24 @@ pub enum Frame {
     },
 }
 
+impl Frame {
+    /// Model-level payload bytes this frame carries — the units the
+    /// [`ObsCounters`](crate::obs::ObsCounters) payload account and the
+    /// [`CostModel`](crate::collectives::CostModel) link-byte
+    /// predictions share: the message's entry bytes for [`Frame::Data`],
+    /// 4 B per value for [`Frame::Shard`], and 0 for handshake/control
+    /// frames (they move protocol state, not gradient payload).
+    pub fn payload_bytes(&self) -> usize {
+        match self {
+            Frame::Data { msg, .. } => msg.payload_bytes(),
+            Frame::Shard { vals, .. } => {
+                vals.len() * crate::collectives::CostModel::DENSE_ENTRY_BYTES
+            }
+            _ => 0,
+        }
+    }
+}
+
 const KIND_DATA: u8 = 0;
 const KIND_HELLO: u8 = 1;
 const KIND_WELCOME: u8 = 2;
@@ -607,6 +625,14 @@ fn map_read_err(e: std::io::Error, what: &str) -> Error {
 /// [`Error::Net`], a clean close before the first header byte as a
 /// distinguishable "connection closed" protocol error.
 pub fn read_frame_with(r: &mut impl Read, scratch: &mut Vec<u8>) -> Result<Frame> {
+    read_frame_counted(r, scratch).map(|(frame, _)| frame)
+}
+
+/// Like [`read_frame_with`], but also report the gross wire bytes the
+/// frame occupied on the stream (header + payload + checksum) — what
+/// the obs wire-byte counters bump by, measured at the exact boundary
+/// the bytes crossed.
+pub fn read_frame_counted(r: &mut impl Read, scratch: &mut Vec<u8>) -> Result<(Frame, usize)> {
     let mut header = [0u8; HEADER_LEN];
     // distinguish a clean close (0 bytes) from a mid-frame cut
     let mut got = 0usize;
@@ -647,7 +673,8 @@ pub fn read_frame_with(r: &mut impl Read, scratch: &mut Vec<u8>) -> Result<Frame
             "frame checksum mismatch: stored {stored:#010x}, computed {computed:#010x}"
         )));
     }
-    decode_payload(kind, &frame_buf[..body_end])
+    let frame = decode_payload(kind, &frame_buf[..body_end])?;
+    Ok((frame, HEADER_LEN + need))
 }
 
 /// Read one frame from a stream (allocating wrapper over
@@ -1039,5 +1066,44 @@ mod tests {
         assert_eq!(read_frame_with(&mut cursor, &mut scratch).unwrap(), a);
         assert_eq!(read_frame_with(&mut cursor, &mut scratch).unwrap(), b);
         assert!(read_frame_with(&mut cursor, &mut scratch).is_err());
+    }
+
+    #[test]
+    fn counted_read_reports_the_exact_wire_bytes() {
+        let f = Frame::Data {
+            generation: 5,
+            msg: Message::Floats(Arc::new(vec![1.0f32; 7])),
+        };
+        let bytes = encode_frame(&f);
+        let mut cursor: &[u8] = &bytes;
+        let mut scratch = Vec::new();
+        let (got, gross) = read_frame_counted(&mut cursor, &mut scratch).unwrap();
+        assert_eq!(got, f);
+        assert_eq!(gross, bytes.len(), "gross = header + payload + checksum");
+        assert!(
+            gross > f.payload_bytes(),
+            "framing overhead is real — gross wire bytes strictly exceed payload"
+        );
+    }
+
+    #[test]
+    fn frame_payload_bytes_are_model_units() {
+        let data = Frame::Data {
+            generation: 0,
+            msg: Message::Selection(Arc::new(SelectOutput {
+                idx: vec![1, 2],
+                val: vec![0.0; 2],
+            })),
+        };
+        assert_eq!(data.payload_bytes(), 2 * 8);
+        let shard = Frame::Shard {
+            generation: 0,
+            step: 0,
+            chunk: 0,
+            vals: vec![0.0; 6],
+        };
+        assert_eq!(shard.payload_bytes(), 6 * 4);
+        assert_eq!(Frame::Abort.payload_bytes(), 0, "control frames carry none");
+        assert_eq!(Frame::Hello { world: 2, rank: 1 }.payload_bytes(), 0);
     }
 }

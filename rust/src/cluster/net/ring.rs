@@ -70,16 +70,19 @@
 //! [NetCfg]: crate::cluster::net::handshake::NetCfg
 
 use crate::cluster::net::codec::{
-    encode_frame, encode_frame_append, encode_shard_append, read_frame, read_frame_with,
+    encode_frame, encode_frame_append, encode_shard_append, read_frame, read_frame_counted,
     write_bytes, write_frame, Frame,
 };
 use crate::cluster::net::handshake::NetCfg;
 use crate::cluster::transport::{FloatBufPool, Message, RoundToken, Transport};
+use crate::cluster::CollectiveKind;
 use crate::collectives::allreduce::shard_bounds;
+use crate::collectives::CostModel;
 use crate::error::{Error, Result};
+use crate::obs::{FlightRecorder, ObsCounters, RecKind};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 /// The two ring links of one rank (absent in a single-rank world).
@@ -118,6 +121,11 @@ pub struct RingTransport {
     /// which must not take the state lock (a blocked round holds it).
     shutdown_handles: Vec<TcpStream>,
     poisoned: AtomicBool,
+    /// Wire/payload/round counters for this process's rank, bumped at
+    /// the exact hop read/write sites so gross bytes match the links.
+    obs: ObsCounters,
+    /// `--obs-flight` recorder; empty (and costless) unless attached.
+    flight: OnceLock<Arc<FlightRecorder>>,
 }
 
 /// Host part of a `host:port` address (IPv6 `[..]:port` supported).
@@ -477,6 +485,8 @@ impl RingTransport {
             }),
             shutdown_handles: Vec::new(),
             poisoned: AtomicBool::new(false),
+            obs: ObsCounters::new(),
+            flight: OnceLock::new(),
         }
     }
 
@@ -496,6 +506,8 @@ impl RingTransport {
             }),
             shutdown_handles,
             poisoned: AtomicBool::new(false),
+            obs: ObsCounters::new(),
+            flight: OnceLock::new(),
         })
     }
 
@@ -503,120 +515,184 @@ impl RingTransport {
     pub fn rank(&self) -> usize {
         self.rank
     }
-}
 
-/// One forwarding hop out: encode board slot `send_idx` (an `Arc`
-/// refcount bump, not a payload copy) into the persistent buffer and
-/// push it to the right neighbor.
-fn send_step(
-    links: &mut Links,
-    enc_buf: &mut Vec<u8>,
-    slots: &[Option<Message>],
-    send_idx: usize,
-    my_gen: u64,
-    step: usize,
-) -> Result<()> {
-    enc_buf.clear();
-    let fwd = slots[send_idx]
-        .as_ref()
-        .expect("forwarding order fills the slot before it is sent")
-        .clone();
-    encode_frame_append(
-        &Frame::Data {
-            generation: my_gen,
-            msg: fwd,
-        },
-        enc_buf,
-    );
-    write_bytes(&mut links.right, enc_buf)
-        .map_err(|e| Error::net(format!("ring step {step}: sending to right neighbor: {e}")))
-}
-
-/// One forwarding hop in: read a generation-stamped frame from the left
-/// neighbor into board slot `recv_idx`.
-fn recv_step(
-    links: &mut Links,
-    dec_buf: &mut Vec<u8>,
-    slots: &mut [Option<Message>],
-    recv_idx: usize,
-    my_gen: u64,
-    step: usize,
-) -> Result<()> {
-    let frame = read_frame_with(&mut links.left, dec_buf)
-        .map_err(|e| Error::net(format!("ring step {step}: reading from left neighbor: {e}")))?;
-    slots[recv_idx] = Some(super::expect_data(frame, my_gen, "left neighbor")?);
-    Ok(())
-}
-
-/// One reduce-scatter hop out: encode `vals` as a [`Frame::Shard`]
-/// straight from the slice (no intermediate `Vec`) into the persistent
-/// buffer and push it to the right neighbor.
-fn send_shard(
-    links: &mut Links,
-    enc_buf: &mut Vec<u8>,
-    my_gen: u64,
-    step: usize,
-    chunk: usize,
-    vals: &[f32],
-) -> Result<()> {
-    enc_buf.clear();
-    encode_shard_append(enc_buf, my_gen, step as u32, chunk as u32, vals);
-    write_bytes(&mut links.right, enc_buf)
-        .map_err(|e| Error::net(format!("ring step {step}: sending to right neighbor: {e}")))
-}
-
-/// One reduce-scatter hop in: read a [`Frame::Shard`] from the left
-/// neighbor and validate its full schedule stamp (round, step, chunk
-/// id, length) — any divergence is a typed error, never a silent mix
-/// of chunks.
-fn recv_shard(
-    links: &mut Links,
-    dec_buf: &mut Vec<u8>,
-    my_gen: u64,
-    step: usize,
-    chunk: usize,
-    want_len: usize,
-) -> Result<Vec<f32>> {
-    let frame = read_frame_with(&mut links.left, dec_buf)
-        .map_err(|e| Error::net(format!("ring step {step}: reading from left neighbor: {e}")))?;
-    match frame {
-        Frame::Shard {
-            generation,
-            step: got_step,
-            chunk: got_chunk,
-            vals,
-        } => {
-            if generation != my_gen {
-                return Err(Error::protocol(format!(
-                    "generation mismatch from left neighbor: got {generation}, \
-                     expected {my_gen} — workers diverged"
-                )));
+    /// Read one hop frame from the left link with full obs accounting:
+    /// gross wire bytes at the stream boundary, model-unit payload
+    /// bytes, frame count, and — when a recorder is attached — a flight
+    /// event. Deadline expiries are counted apart from peer loss, and
+    /// either failure dumps the recorder for the postmortem.
+    fn read_counted(
+        &self,
+        left: &mut TcpStream,
+        dec_buf: &mut Vec<u8>,
+        my_gen: u64,
+        step: usize,
+    ) -> Result<Frame> {
+        match read_frame_counted(left, dec_buf) {
+            Ok((frame, gross)) => {
+                self.obs.wire_rx(gross);
+                self.obs.frame_decoded();
+                self.obs.payload_rx(frame.payload_bytes());
+                if let Some(fr) = self.flight.get() {
+                    fr.record(RecKind::FrameRx, my_gen, gross as u64, 0);
+                }
+                Ok(frame)
             }
-            if got_step as usize != step || got_chunk as usize != chunk {
-                return Err(Error::protocol(format!(
-                    "reduce-scatter schedule divergence: got chunk {got_chunk} at \
-                     step {got_step}, expected chunk {chunk} at step {step}"
-                )));
+            Err(e) => {
+                if e.is_timeout() {
+                    self.obs.deadline_wait();
+                    if let Some(fr) = self.flight.get() {
+                        fr.record(RecKind::Deadline, my_gen, 0, 0);
+                        fr.dump_to_log("deadline expiry");
+                    }
+                } else if let Some(fr) = self.flight.get() {
+                    fr.dump_to_log("mid-round peer loss");
+                }
+                Err(Error::net(format!(
+                    "ring step {step}: reading from left neighbor: {e}"
+                )))
             }
-            if vals.len() != want_len {
-                return Err(Error::protocol(format!(
-                    "chunk {chunk} carries {} values, expected {want_len} — \
-                     contribution lengths diverged",
-                    vals.len()
-                )));
-            }
-            Ok(vals)
         }
-        Frame::Abort => Err(Error::net(
-            "left neighbor aborted — transport poisoned by a failed worker",
-        )),
-        Frame::Data { .. } => Err(Error::protocol(
-            "expected a reduce-scatter shard from the left neighbor, got a \
-             board frame — workers diverged",
-        )),
-        other => Err(Error::protocol(format!(
-            "expected a reduce-scatter shard, got {other:?}"
-        ))),
+    }
+
+    /// Write pre-encoded hop bytes to the right link with full obs
+    /// accounting; `payload` is the model-unit byte count carried.
+    fn write_counted(
+        &self,
+        right: &mut TcpStream,
+        bytes: &[u8],
+        payload: usize,
+        my_gen: u64,
+        step: usize,
+    ) -> Result<()> {
+        write_bytes(right, bytes)
+            .map_err(|e| Error::net(format!("ring step {step}: sending to right neighbor: {e}")))?;
+        self.obs.wire_tx(bytes.len());
+        self.obs.payload_tx(payload);
+        if let Some(fr) = self.flight.get() {
+            fr.record(RecKind::FrameTx, my_gen, bytes.len() as u64, payload as u64);
+        }
+        Ok(())
+    }
+
+    /// One forwarding hop out: encode board slot `send_idx` (an `Arc`
+    /// refcount bump, not a payload copy) into the persistent buffer and
+    /// push it to the right neighbor.
+    fn send_step(
+        &self,
+        links: &mut Links,
+        enc_buf: &mut Vec<u8>,
+        slots: &[Option<Message>],
+        send_idx: usize,
+        my_gen: u64,
+        step: usize,
+    ) -> Result<()> {
+        enc_buf.clear();
+        let fwd = slots[send_idx]
+            .as_ref()
+            .expect("forwarding order fills the slot before it is sent")
+            .clone();
+        let payload = fwd.payload_bytes();
+        encode_frame_append(
+            &Frame::Data {
+                generation: my_gen,
+                msg: fwd,
+            },
+            enc_buf,
+        );
+        self.obs.frame_encoded();
+        self.write_counted(&mut links.right, enc_buf, payload, my_gen, step)
+    }
+
+    /// One forwarding hop in: read a generation-stamped frame from the
+    /// left neighbor into board slot `recv_idx`.
+    fn recv_step(
+        &self,
+        links: &mut Links,
+        dec_buf: &mut Vec<u8>,
+        slots: &mut [Option<Message>],
+        recv_idx: usize,
+        my_gen: u64,
+        step: usize,
+    ) -> Result<()> {
+        let frame = self.read_counted(&mut links.left, dec_buf, my_gen, step)?;
+        slots[recv_idx] = Some(super::expect_data(frame, my_gen, "left neighbor")?);
+        Ok(())
+    }
+
+    /// One reduce-scatter hop out: encode `vals` as a [`Frame::Shard`]
+    /// straight from the slice (no intermediate `Vec`) into the
+    /// persistent buffer and push it to the right neighbor.
+    fn send_shard(
+        &self,
+        links: &mut Links,
+        enc_buf: &mut Vec<u8>,
+        my_gen: u64,
+        step: usize,
+        chunk: usize,
+        vals: &[f32],
+    ) -> Result<()> {
+        enc_buf.clear();
+        encode_shard_append(enc_buf, my_gen, step as u32, chunk as u32, vals);
+        self.obs.frame_encoded();
+        let payload = vals.len() * CostModel::DENSE_ENTRY_BYTES;
+        self.write_counted(&mut links.right, enc_buf, payload, my_gen, step)
+    }
+
+    /// One reduce-scatter hop in: read a [`Frame::Shard`] from the left
+    /// neighbor and validate its full schedule stamp (round, step, chunk
+    /// id, length) — any divergence is a typed error, never a silent mix
+    /// of chunks.
+    #[allow(clippy::too_many_arguments)]
+    fn recv_shard(
+        &self,
+        links: &mut Links,
+        dec_buf: &mut Vec<u8>,
+        my_gen: u64,
+        step: usize,
+        chunk: usize,
+        want_len: usize,
+    ) -> Result<Vec<f32>> {
+        let frame = self.read_counted(&mut links.left, dec_buf, my_gen, step)?;
+        match frame {
+            Frame::Shard {
+                generation,
+                step: got_step,
+                chunk: got_chunk,
+                vals,
+            } => {
+                if generation != my_gen {
+                    return Err(Error::protocol(format!(
+                        "generation mismatch from left neighbor: got {generation}, \
+                         expected {my_gen} — workers diverged"
+                    )));
+                }
+                if got_step as usize != step || got_chunk as usize != chunk {
+                    return Err(Error::protocol(format!(
+                        "reduce-scatter schedule divergence: got chunk {got_chunk} at \
+                         step {got_step}, expected chunk {chunk} at step {step}"
+                    )));
+                }
+                if vals.len() != want_len {
+                    return Err(Error::protocol(format!(
+                        "chunk {chunk} carries {} values, expected {want_len} — \
+                         contribution lengths diverged",
+                        vals.len()
+                    )));
+                }
+                Ok(vals)
+            }
+            Frame::Abort => Err(Error::net(
+                "left neighbor aborted — transport poisoned by a failed worker",
+            )),
+            Frame::Data { .. } => Err(Error::protocol(
+                "expected a reduce-scatter shard from the left neighbor, got a \
+                 board frame — workers diverged",
+            )),
+            other => Err(Error::protocol(format!(
+                "expected a reduce-scatter shard, got {other:?}"
+            ))),
+        }
     }
 }
 
@@ -669,10 +745,14 @@ impl Transport for RingTransport {
                 // eagerly, a cluster fully parked in its overlap windows
                 // could deadlock on full socket buffers with nobody
                 // draining.
-                send_step(links, enc_buf, slots, rank, my_gen, 0)?;
+                self.send_step(links, enc_buf, slots, rank, my_gen, 0)?;
             }
         }
         *pending = true;
+        self.obs.round(CollectiveKind::Allgather);
+        if let Some(fr) = self.flight.get() {
+            fr.record(RecKind::RoundBegin, my_gen, 0, 0);
+        }
         Ok(RoundToken::deferred(my_gen))
     }
 
@@ -724,14 +804,14 @@ impl Transport for RingTransport {
                     // receive-before-send breaks the ring's write cycle
                     // for payloads larger than the socket buffers (see
                     // module docs); every other rank sends first
-                    recv_step(links, dec_buf, slots, recv_idx, my_gen, step)?;
-                    send_step(links, enc_buf, slots, send_idx, my_gen, step)?;
+                    self.recv_step(links, dec_buf, slots, recv_idx, my_gen, step)?;
+                    self.send_step(links, enc_buf, slots, send_idx, my_gen, step)?;
                 } else {
                     if step > 0 {
                         // step 0's send already happened in begin
-                        send_step(links, enc_buf, slots, send_idx, my_gen, step)?;
+                        self.send_step(links, enc_buf, slots, send_idx, my_gen, step)?;
                     }
-                    recv_step(links, dec_buf, slots, recv_idx, my_gen, step)?;
+                    self.recv_step(links, dec_buf, slots, recv_idx, my_gen, step)?;
                 }
             }
         }
@@ -739,6 +819,9 @@ impl Transport for RingTransport {
         // dropped it, else allocate a fresh one
         let board = crate::cluster::transport::publish_recycled(slots, last);
         *generation = my_gen.wrapping_add(1);
+        if let Some(fr) = self.flight.get() {
+            fr.record(RecKind::RoundComplete, my_gen, 0, 0);
+        }
         Ok(board)
     }
 
@@ -786,10 +869,14 @@ impl Transport for RingTransport {
                 // defers even this send to complete
                 let chunk = (rank + self.n - 1) % self.n;
                 let (cs, ce) = shard_bounds(contribution.len(), self.n, chunk);
-                send_shard(links, enc_buf, my_gen, 0, chunk, &contribution[cs..ce])?;
+                self.send_shard(links, enc_buf, my_gen, 0, chunk, &contribution[cs..ce])?;
             }
         }
         *pending = true;
+        self.obs.round(CollectiveKind::Rsag);
+        if let Some(fr) = self.flight.get() {
+            fr.record(RecKind::RoundBegin, my_gen, 1, 0);
+        }
         // the contribution rides the token: complete adds it in place to
         // every partial that passes through this rank
         Ok(RoundToken::deferred_with_stash(
@@ -859,6 +946,9 @@ impl Transport for RingTransport {
                 // single-rank world: the reduce is the identity
                 out.copy_from_slice(&contribution);
                 *generation = my_gen.wrapping_add(1);
+                if let Some(fr) = self.flight.get() {
+                    fr.record(RecKind::RoundComplete, my_gen, 1, 0);
+                }
                 return Ok(());
             }
         };
@@ -876,12 +966,20 @@ impl Transport for RingTransport {
             let (rs, re) = shard_bounds(len, n, recv_chunk);
             let send_chunk = (rank + 2 * n - 1 - step) % n;
             if rank == 0 {
-                let mut vals = recv_shard(links, dec_buf, my_gen, step, recv_chunk, re - rs)?;
+                let mut vals =
+                    self.recv_shard(links, dec_buf, my_gen, step, recv_chunk, re - rs)?;
                 if step == 0 {
                     let (cs, ce) = shard_bounds(len, n, send_chunk);
-                    send_shard(links, enc_buf, my_gen, step, send_chunk, &contribution[cs..ce])?;
+                    self.send_shard(
+                        links,
+                        enc_buf,
+                        my_gen,
+                        step,
+                        send_chunk,
+                        &contribution[cs..ce],
+                    )?;
                 } else {
-                    send_shard(links, enc_buf, my_gen, step, send_chunk, &carry)?;
+                    self.send_shard(links, enc_buf, my_gen, step, send_chunk, &carry)?;
                 }
                 for (v, &x) in vals.iter_mut().zip(contribution[rs..re].iter()) {
                     *v += x;
@@ -890,9 +988,10 @@ impl Transport for RingTransport {
             } else {
                 if step > 0 {
                     // step 0's send already happened in begin
-                    send_shard(links, enc_buf, my_gen, step, send_chunk, &carry)?;
+                    self.send_shard(links, enc_buf, my_gen, step, send_chunk, &carry)?;
                 }
-                let mut vals = recv_shard(links, dec_buf, my_gen, step, recv_chunk, re - rs)?;
+                let mut vals =
+                    self.recv_shard(links, dec_buf, my_gen, step, recv_chunk, re - rs)?;
                 for (v, &x) in vals.iter_mut().zip(contribution[rs..re].iter()) {
                     *v += x;
                 }
@@ -910,18 +1009,21 @@ impl Transport for RingTransport {
             let recv_chunk = (rank + 2 * n - 1 - t) % n;
             let (rs, re) = shard_bounds(len, n, recv_chunk);
             if rank == 0 {
-                let vals = recv_shard(links, dec_buf, my_gen, step, recv_chunk, re - rs)?;
-                send_shard(links, enc_buf, my_gen, step, send_chunk, &carry)?;
+                let vals = self.recv_shard(links, dec_buf, my_gen, step, recv_chunk, re - rs)?;
+                self.send_shard(links, enc_buf, my_gen, step, send_chunk, &carry)?;
                 out[rs..re].copy_from_slice(&vals);
                 carry = vals;
             } else {
-                send_shard(links, enc_buf, my_gen, step, send_chunk, &carry)?;
-                let vals = recv_shard(links, dec_buf, my_gen, step, recv_chunk, re - rs)?;
+                self.send_shard(links, enc_buf, my_gen, step, send_chunk, &carry)?;
+                let vals = self.recv_shard(links, dec_buf, my_gen, step, recv_chunk, re - rs)?;
                 out[rs..re].copy_from_slice(&vals);
                 carry = vals;
             }
         }
         *generation = my_gen.wrapping_add(1);
+        if let Some(fr) = self.flight.get() {
+            fr.record(RecKind::RoundComplete, my_gen, 1, 0);
+        }
         Ok(())
     }
 
@@ -940,7 +1042,7 @@ impl Transport for RingTransport {
     }
 
     fn abort(&self) {
-        self.poisoned.store(true, Ordering::SeqCst);
+        let already = self.poisoned.swap(true, Ordering::SeqCst);
         let abort_bytes = encode_frame(&Frame::Abort);
         for h in &self.shutdown_handles {
             // best-effort polite notice, then force any blocked neighbor
@@ -948,6 +1050,26 @@ impl Transport for RingTransport {
             let mut w: &TcpStream = h;
             let _ = write_bytes(&mut w, &abort_bytes);
             let _ = h.shutdown(Shutdown::Both);
+        }
+        if !already {
+            // first poisoning only: count once and dump the recorder at
+            // the generation the ring died at (taking no locks — a
+            // blocked round may hold the state mutex)
+            self.obs.abort();
+            if let Some(fr) = self.flight.get() {
+                fr.record(RecKind::Abort, fr.last_generation(), 0, 0);
+                fr.dump_to_log("abort poisoning");
+            }
+        }
+    }
+
+    fn counters(&self, rank: usize) -> Option<&ObsCounters> {
+        (rank == self.rank).then_some(&self.obs)
+    }
+
+    fn attach_flight_recorder(&self, rank: usize, recorder: Arc<FlightRecorder>) {
+        if rank == self.rank {
+            let _ = self.flight.set(recorder);
         }
     }
 }
@@ -1142,6 +1264,51 @@ mod tests {
         }
         for h in handles {
             h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn per_rank_counters_match_the_ring_link_model() {
+        let n = 3;
+        let len = 12; // divisible by n: shard chunks are equal-sized
+        let tps = loopback_ring(n);
+        let refs = tps.clone();
+        let before: Vec<_> = refs
+            .iter()
+            .enumerate()
+            .map(|(r, tp)| tp.counters(r).unwrap().snapshot())
+            .collect();
+        let mut handles = Vec::new();
+        for (rank, tp) in tps.into_iter().enumerate() {
+            handles.push(std::thread::spawn(move || {
+                let ep = Endpoint::new(rank, tp.as_ref());
+                let mut shards = FloatBufPool::new();
+                let mut out = Vec::new();
+                ep.allgather_floats(Arc::new(vec![rank as f32; len])).unwrap();
+                ep.reduce_scatter_allgather(Arc::new(vec![1.0f32; len]), &mut shards, &mut out)
+                    .unwrap();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let net = CostModel::paper_testbed(n);
+        let b = len * CostModel::DENSE_ENTRY_BYTES;
+        // the ring is symmetric: every rank's link carries exactly
+        // (n-1)·B per all-gather and 2(n-1)/n·B per rsag, each direction
+        let want = (net.allgather_link_bytes_ring(b) + net.rsag_link_bytes_ring(b)) as u64;
+        for (rank, tp) in refs.iter().enumerate() {
+            let d = tp.counters(rank).unwrap().snapshot().since(&before[rank]);
+            assert_eq!(d.payload_tx_bytes, want, "rank {rank} tx");
+            assert_eq!(d.payload_rx_bytes, want, "rank {rank} rx");
+            assert_eq!(d.rounds_allgather, 1, "rank {rank}");
+            assert_eq!(d.rounds_rsag, 1, "rank {rank}");
+            assert_eq!(d.aborts, 0, "rank {rank}");
+            // gross wire bytes strictly exceed payload bytes (framing)
+            assert!(d.wire_tx_bytes > d.payload_tx_bytes, "rank {rank}: {d:?}");
+            assert!(d.wire_rx_bytes > d.payload_rx_bytes, "rank {rank}: {d:?}");
+            // each instance speaks for exactly one rank
+            assert!(tp.counters((rank + 1) % n).is_none());
         }
     }
 

@@ -34,16 +34,18 @@
 //! [CostModel::rsag_link_bytes_star_hub]: crate::collectives::CostModel::rsag_link_bytes_star_hub
 
 use crate::cluster::net::codec::{
-    encode_frame, encode_frame_append, read_frame_with, write_bytes, Frame,
+    encode_frame, encode_frame_append, read_frame_counted, write_bytes, Frame,
 };
 use crate::cluster::net::handshake::{client_rendezvous, hub_rendezvous, NetCfg};
 use crate::cluster::transport::{
     envelope_mismatch, rsag_reduce_board_into, FloatBufPool, Message, RoundToken, Transport,
 };
+use crate::cluster::CollectiveKind;
 use crate::error::{Error, Result};
+use crate::obs::{FlightRecorder, ObsCounters, RecKind};
 use std::net::{Shutdown, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 enum Conn {
     /// Rank 0: one stream per peer rank (slot 0 unused).
@@ -74,6 +76,11 @@ pub struct TcpTransport {
     /// not take the state lock (a blocked round holds it).
     shutdown_handles: Vec<TcpStream>,
     poisoned: AtomicBool,
+    /// Wire/payload/round counters for this process's rank, bumped at
+    /// the exact read/write sites so gross bytes match the stream.
+    obs: ObsCounters,
+    /// `--obs-flight` recorder; empty (and costless) unless attached.
+    flight: OnceLock<Arc<FlightRecorder>>,
 }
 
 impl TcpTransport {
@@ -99,6 +106,8 @@ impl TcpTransport {
             }),
             shutdown_handles: handles,
             poisoned: AtomicBool::new(false),
+            obs: ObsCounters::new(),
+            flight: OnceLock::new(),
         })
     }
 
@@ -118,6 +127,8 @@ impl TcpTransport {
             }),
             shutdown_handles: vec![handle],
             poisoned: AtomicBool::new(false),
+            obs: ObsCounters::new(),
+            flight: OnceLock::new(),
         })
     }
 
@@ -125,20 +136,65 @@ impl TcpTransport {
     pub fn rank(&self) -> usize {
         self.rank
     }
-}
 
-impl Transport for TcpTransport {
-    fn n_ranks(&self) -> usize {
-        self.n
+    /// Read one frame with full obs accounting: gross wire bytes at the
+    /// stream boundary, model-unit payload bytes, frame count, and —
+    /// when a recorder is attached — a flight event. Deadline expiries
+    /// are counted apart from peer loss, and either failure dumps the
+    /// recorder for the postmortem.
+    fn read_counted(
+        &self,
+        stream: &mut TcpStream,
+        dec_buf: &mut Vec<u8>,
+        generation: u64,
+    ) -> Result<Frame> {
+        match read_frame_counted(stream, dec_buf) {
+            Ok((frame, gross)) => {
+                self.obs.wire_rx(gross);
+                self.obs.frame_decoded();
+                self.obs.payload_rx(frame.payload_bytes());
+                if let Some(fr) = self.flight.get() {
+                    fr.record(RecKind::FrameRx, generation, gross as u64, 0);
+                }
+                Ok(frame)
+            }
+            Err(e) => {
+                if e.is_timeout() {
+                    self.obs.deadline_wait();
+                    if let Some(fr) = self.flight.get() {
+                        fr.record(RecKind::Deadline, generation, 0, 0);
+                        fr.dump_to_log("deadline expiry");
+                    }
+                } else if let Some(fr) = self.flight.get() {
+                    fr.dump_to_log("mid-round peer loss");
+                }
+                Err(e)
+            }
+        }
     }
 
-    fn allgather(&self, rank: usize, msg: Message) -> Result<Arc<[Message]>> {
-        // the blocking round is the split phases back to back
-        let token = self.allgather_begin(rank, msg)?;
-        self.allgather_complete(rank, token)
+    /// Write pre-encoded frame bytes with full obs accounting; `payload`
+    /// is the model-unit byte count the buffer carries.
+    fn write_counted(
+        &self,
+        stream: &mut TcpStream,
+        bytes: &[u8],
+        payload: usize,
+        generation: u64,
+    ) -> Result<()> {
+        write_bytes(stream, bytes)?;
+        self.obs.wire_tx(bytes.len());
+        self.obs.payload_tx(payload);
+        if let Some(fr) = self.flight.get() {
+            fr.record(RecKind::FrameTx, generation, bytes.len() as u64, payload as u64);
+        }
+        Ok(())
     }
 
-    fn allgather_begin(&self, rank: usize, msg: Message) -> Result<RoundToken> {
+    /// Shared begin path for both collective kinds: validate, claim the
+    /// round, and (on a client) put the contribution on the wire. The
+    /// trait wrappers add the per-kind round counter on top.
+    fn begin_inner(&self, rank: usize, msg: Message) -> Result<RoundToken> {
         if rank != self.rank {
             return Err(Error::invalid(format!(
                 "this process's transport speaks for rank {}, not rank {rank}",
@@ -176,6 +232,7 @@ impl Transport for TcpTransport {
             Conn::Client { hub } => {
                 // the contribution goes on the wire NOW — the overlap
                 // window between begin and complete is real transfer time
+                let payload = msg.payload_bytes();
                 enc_buf.clear();
                 encode_frame_append(
                     &Frame::Data {
@@ -184,12 +241,46 @@ impl Transport for TcpTransport {
                     },
                     enc_buf,
                 );
-                write_bytes(hub, enc_buf)
+                self.obs.frame_encoded();
+                self.write_counted(hub, enc_buf, payload, my_gen)
                     .map_err(|e| Error::net(format!("sending contribution to hub: {e}")))?;
                 RoundToken::deferred(my_gen)
             }
         };
         *pending = true;
+        Ok(token)
+    }
+}
+
+impl Transport for TcpTransport {
+    fn n_ranks(&self) -> usize {
+        self.n
+    }
+
+    fn allgather(&self, rank: usize, msg: Message) -> Result<Arc<[Message]>> {
+        // the blocking round is the split phases back to back
+        let token = self.allgather_begin(rank, msg)?;
+        self.allgather_complete(rank, token)
+    }
+
+    fn allgather_begin(&self, rank: usize, msg: Message) -> Result<RoundToken> {
+        let token = self.begin_inner(rank, msg)?;
+        self.obs.round(CollectiveKind::Allgather);
+        if let Some(fr) = self.flight.get() {
+            fr.record(RecKind::RoundBegin, token.generation(), 0, 0);
+        }
+        Ok(token)
+    }
+
+    fn rsag_begin(&self, rank: usize, contribution: Arc<Vec<f32>>) -> Result<RoundToken> {
+        // identical wire behaviour to the all-gather begin (the
+        // contribution goes out eagerly); overridden so the round lands
+        // in the rsag counter, not the all-gather one
+        let token = self.begin_inner(rank, Message::Floats(contribution))?;
+        self.obs.round(CollectiveKind::Rsag);
+        if let Some(fr) = self.flight.get() {
+            fr.record(RecKind::RoundBegin, token.generation(), 1, 0);
+        }
         Ok(token)
     }
 
@@ -242,7 +333,7 @@ impl Transport for TcpTransport {
                     let stream = peers[r]
                         .as_mut()
                         .expect("hub rendezvous filled every peer slot");
-                    let frame = read_frame_with(stream, dec_buf).map_err(|e| {
+                    let frame = self.read_counted(stream, dec_buf, my_gen).map_err(|e| {
                         Error::net(format!("reading rank {r}'s contribution: {e}"))
                     })?;
                     slots[r] = Some(super::expect_data(frame, my_gen, &format!("rank {r}"))?);
@@ -263,12 +354,15 @@ impl Transport for TcpTransport {
                         },
                         enc_buf,
                     );
+                    self.obs.frame_encoded();
                 }
+                let board_payload: usize = board.iter().map(|m| m.payload_bytes()).sum();
                 for r in 1..n {
                     let stream = peers[r].as_mut().expect("peer slot filled");
-                    write_bytes(stream, enc_buf).map_err(|e| {
-                        Error::net(format!("broadcasting board to rank {r}: {e}"))
-                    })?;
+                    self.write_counted(stream, enc_buf, board_payload, my_gen)
+                        .map_err(|e| {
+                            Error::net(format!("broadcasting board to rank {r}: {e}"))
+                        })?;
                 }
                 board
             }
@@ -277,7 +371,7 @@ impl Transport for TcpTransport {
                 // read-back remains
                 let mut board = Vec::with_capacity(n);
                 for r in 0..n {
-                    let frame = read_frame_with(hub, dec_buf).map_err(|e| {
+                    let frame = self.read_counted(hub, dec_buf, my_gen).map_err(|e| {
                         Error::net(format!("reading board entry {r} from hub: {e}"))
                     })?;
                     board.push(super::expect_data(frame, my_gen, "hub")?);
@@ -286,6 +380,9 @@ impl Transport for TcpTransport {
             }
         };
         *generation = my_gen.wrapping_add(1);
+        if let Some(fr) = self.flight.get() {
+            fr.record(RecKind::RoundComplete, my_gen, 0, 0);
+        }
         Ok(board)
     }
 
@@ -351,7 +448,7 @@ impl Transport for TcpTransport {
                     let stream = peers[r]
                         .as_mut()
                         .expect("hub rendezvous filled every peer slot");
-                    let frame = read_frame_with(stream, dec_buf).map_err(|e| {
+                    let frame = self.read_counted(stream, dec_buf, my_gen).map_err(|e| {
                         Error::net(format!("reading rank {r}'s contribution: {e}"))
                     })?;
                     board.push(super::expect_data(frame, my_gen, &format!("rank {r}"))?);
@@ -361,25 +458,29 @@ impl Transport for TcpTransport {
                 // received bytes drop from n·k to k
                 rsag_reduce_board_into(&board, out)?;
                 let reduced = shards.fill(|buf| buf.extend_from_slice(out));
+                let reduced_msg = Message::Floats(reduced);
+                let reduced_payload = reduced_msg.payload_bytes();
                 enc_buf.clear();
                 encode_frame_append(
                     &Frame::Data {
                         generation: my_gen,
-                        msg: Message::Floats(reduced),
+                        msg: reduced_msg,
                     },
                     enc_buf,
                 );
+                self.obs.frame_encoded();
                 for r in 1..n {
                     let stream = peers[r].as_mut().expect("peer slot filled");
-                    write_bytes(stream, enc_buf).map_err(|e| {
-                        Error::net(format!("broadcasting reduced vector to rank {r}: {e}"))
-                    })?;
+                    self.write_counted(stream, enc_buf, reduced_payload, my_gen)
+                        .map_err(|e| {
+                            Error::net(format!("broadcasting reduced vector to rank {r}: {e}"))
+                        })?;
                 }
             }
             Conn::Client { hub } => {
                 // the contribution went out in begin; the hub sends back
                 // one already-reduced vector instead of the n-entry board
-                let frame = read_frame_with(hub, dec_buf).map_err(|e| {
+                let frame = self.read_counted(hub, dec_buf, my_gen).map_err(|e| {
                     Error::net(format!("reading reduced vector from hub: {e}"))
                 })?;
                 match super::expect_data(frame, my_gen, "hub")? {
@@ -392,6 +493,9 @@ impl Transport for TcpTransport {
             }
         }
         *generation = my_gen.wrapping_add(1);
+        if let Some(fr) = self.flight.get() {
+            fr.record(RecKind::RoundComplete, my_gen, 1, 0);
+        }
         Ok(())
     }
 
@@ -407,7 +511,7 @@ impl Transport for TcpTransport {
     }
 
     fn abort(&self) {
-        self.poisoned.store(true, Ordering::SeqCst);
+        let already = self.poisoned.swap(true, Ordering::SeqCst);
         let abort_bytes = encode_frame(&Frame::Abort);
         for h in &self.shutdown_handles {
             // best-effort polite notice, then force any blocked peer read
@@ -415,6 +519,26 @@ impl Transport for TcpTransport {
             let mut w: &TcpStream = h;
             let _ = write_bytes(&mut w, &abort_bytes);
             let _ = h.shutdown(Shutdown::Both);
+        }
+        if !already {
+            // first poisoning only: count once and dump the recorder at
+            // the generation the cluster died at (taking no locks — a
+            // blocked round may hold the state mutex)
+            self.obs.abort();
+            if let Some(fr) = self.flight.get() {
+                fr.record(RecKind::Abort, fr.last_generation(), 0, 0);
+                fr.dump_to_log("abort poisoning");
+            }
+        }
+    }
+
+    fn counters(&self, rank: usize) -> Option<&ObsCounters> {
+        (rank == self.rank).then_some(&self.obs)
+    }
+
+    fn attach_flight_recorder(&self, rank: usize, recorder: Arc<FlightRecorder>) {
+        if rank == self.rank {
+            let _ = self.flight.set(recorder);
         }
     }
 }
@@ -555,6 +679,47 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("speaks for rank 1"), "{err}");
+    }
+
+    #[test]
+    fn hub_counters_match_the_star_link_model() {
+        use crate::collectives::CostModel;
+        let n = 3;
+        let len = 12;
+        let tps = loopback_cluster(n);
+        let hub = tps[0].clone();
+        let before = hub.counters(0).unwrap().snapshot();
+        let mut handles = Vec::new();
+        for (rank, tp) in tps.into_iter().enumerate() {
+            handles.push(std::thread::spawn(move || {
+                let ep = Endpoint::new(rank, tp.as_ref());
+                let mut shards = FloatBufPool::new();
+                let mut out = Vec::new();
+                ep.allgather_floats(Arc::new(vec![rank as f32; len])).unwrap();
+                ep.reduce_scatter_allgather(Arc::new(vec![1.0f32; len]), &mut shards, &mut out)
+                    .unwrap();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let d = hub.counters(0).unwrap().snapshot().since(&before);
+        let net = CostModel::paper_testbed(n);
+        let b = len * CostModel::DENSE_ENTRY_BYTES;
+        // the hub's NIC carries exactly what the star link-byte model
+        // charges: (n-1)·B in + (n-1)·n·B out per all-gather round,
+        // (n-1)·B each way per rsag round
+        let want =
+            (net.allgather_link_bytes_star_hub(b) + net.rsag_link_bytes_star_hub(b)) as u64;
+        assert_eq!(d.payload_link_bytes(), want);
+        assert_eq!(d.rounds_allgather, 1);
+        assert_eq!(d.rounds_rsag, 1);
+        assert_eq!(d.aborts, 0);
+        // gross wire bytes strictly exceed payload bytes (framing)
+        assert!(d.wire_rx_bytes > d.payload_rx_bytes, "{d:?}");
+        assert!(d.wire_tx_bytes > d.payload_tx_bytes, "{d:?}");
+        // out-of-process ranks are not this instance's to count
+        assert!(hub.counters(1).is_none());
     }
 
     #[test]

@@ -34,7 +34,9 @@
 
 use crate::cluster::transport::{FloatBufPool, Message, RoundToken, Transport};
 use crate::collectives::allreduce::shard_bounds;
+use crate::collectives::CostModel;
 use crate::error::{Error, Result};
+use crate::obs::ObsCounters;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
@@ -93,6 +95,10 @@ pub struct RingLocal {
     /// wake blocked receivers (kept apart from the per-rank state so
     /// abort never contends with a blocked round's lock).
     abort_tx: Mutex<Vec<Sender<Hop>>>,
+    /// Per-rank wire counters (payload account only — hops move Arcs /
+    /// buffers, not socket bytes, so the wire-byte account stays zero).
+    /// Lock-free, kept outside the per-rank mutex.
+    obs: Vec<ObsCounters>,
 }
 
 impl RingLocal {
@@ -136,17 +142,27 @@ impl RingLocal {
             poisoned: AtomicBool::new(false),
             ranks,
             abort_tx: Mutex::new(txs),
+            obs: (0..n).map(|_| ObsCounters::new()).collect(),
         }
     }
 
-    fn recv_hop(&self, rk: &mut RingRank, deadline: Instant, step: usize) -> Result<Hop> {
+    fn recv_hop(
+        &self,
+        rank: usize,
+        rk: &mut RingRank,
+        deadline: Instant,
+        step: usize,
+    ) -> Result<Hop> {
         let remaining = deadline.saturating_duration_since(Instant::now());
         match rk.rx_left.recv_timeout(remaining) {
             Ok(hop) => Ok(hop),
-            Err(RecvTimeoutError::Timeout) => Err(Error::net(format!(
-                "ring step {step}: left neighbor stayed silent past the {:?} deadline",
-                self.timeout
-            ))),
+            Err(RecvTimeoutError::Timeout) => {
+                self.obs[rank].deadline_wait();
+                Err(Error::net(format!(
+                    "ring step {step}: left neighbor stayed silent past the {:?} deadline",
+                    self.timeout
+                )))
+            }
             Err(RecvTimeoutError::Disconnected) => {
                 Err(Error::invariant("ring link disconnected — transport dropped"))
             }
@@ -156,8 +172,10 @@ impl RingLocal {
     /// Receive one reduce-scatter hop and validate its full schedule
     /// stamp (round, step, chunk id, length) — any divergence is a
     /// typed error, never a silent mix of chunks.
+    #[allow(clippy::too_many_arguments)]
     fn recv_chunk(
         &self,
+        rank: usize,
         rk: &mut RingRank,
         deadline: Instant,
         want_gen: u64,
@@ -165,7 +183,7 @@ impl RingLocal {
         want_chunk: usize,
         want_len: usize,
     ) -> Result<Vec<f32>> {
-        match self.recv_hop(rk, deadline, want_step)? {
+        match self.recv_hop(rank, rk, deadline, want_step)? {
             Hop::Chunk {
                 generation,
                 step,
@@ -191,6 +209,7 @@ impl RingLocal {
                         vals.len()
                     )));
                 }
+                self.obs[rank].payload_rx(vals.len() * CostModel::DENSE_ENTRY_BYTES);
                 Ok(vals)
             }
             Hop::Data { .. } => Err(Error::protocol(
@@ -241,14 +260,17 @@ impl Transport for RingLocal {
                 .as_ref()
                 .expect("deposited just above")
                 .clone();
+            let bytes = fwd.payload_bytes();
             rk.tx_right
                 .send(Hop::Data {
                     generation: my_gen,
                     msg: fwd,
                 })
                 .map_err(|_| Error::invariant("ring link disconnected — transport dropped"))?;
+            self.obs[rank].payload_tx(bytes);
         }
         rk.pending = true;
+        self.obs[rank].round(crate::cluster::CollectiveKind::Allgather);
         Ok(RoundToken::deferred(my_gen))
     }
 
@@ -290,6 +312,7 @@ impl Transport for RingLocal {
                     .as_ref()
                     .expect("forwarding order fills the slot before it is sent")
                     .clone();
+                let bytes = fwd.payload_bytes();
                 rk.tx_right
                     .send(Hop::Data {
                         generation: my_gen,
@@ -298,9 +321,11 @@ impl Transport for RingLocal {
                     .map_err(|_| {
                         Error::invariant("ring link disconnected — transport dropped")
                     })?;
+                self.obs[rank].payload_tx(bytes);
             }
-            match self.recv_hop(&mut rk, deadline, step)? {
+            match self.recv_hop(rank, &mut rk, deadline, step)? {
                 Hop::Data { generation, msg } if generation == my_gen => {
+                    self.obs[rank].payload_rx(msg.payload_bytes());
                     rk.slots[recv_idx] = Some(msg);
                 }
                 Hop::Data { generation, .. } => {
@@ -366,6 +391,7 @@ impl Transport for RingLocal {
             let mut vals = rk.chunk_free.pop().unwrap_or_default();
             vals.clear();
             vals.extend_from_slice(&contribution[cs..ce]);
+            let bytes = vals.len() * CostModel::DENSE_ENTRY_BYTES;
             rk.tx_right
                 .send(Hop::Chunk {
                     generation: my_gen,
@@ -374,8 +400,10 @@ impl Transport for RingLocal {
                     vals,
                 })
                 .map_err(|_| Error::invariant("ring link disconnected — transport dropped"))?;
+            self.obs[rank].payload_tx(bytes);
         }
         rk.pending = true;
+        self.obs[rank].round(crate::cluster::CollectiveKind::Rsag);
         // the contribution rides the token: complete adds it in place to
         // every partial that passes through this rank
         Ok(RoundToken::deferred_with_stash(
@@ -445,6 +473,7 @@ impl Transport for RingLocal {
             if step > 0 {
                 let chunk = (rank + 2 * n - 1 - step) % n;
                 let vals = std::mem::take(&mut carry);
+                let bytes = vals.len() * CostModel::DENSE_ENTRY_BYTES;
                 rk.tx_right
                     .send(Hop::Chunk {
                         generation: my_gen,
@@ -455,10 +484,12 @@ impl Transport for RingLocal {
                     .map_err(|_| {
                         Error::invariant("ring link disconnected — transport dropped")
                     })?;
+                self.obs[rank].payload_tx(bytes);
             }
             let chunk = (rank + 2 * n - 2 - step) % n;
             let (cs, ce) = shard_bounds(len, n, chunk);
-            let mut vals = self.recv_chunk(&mut rk, deadline, my_gen, step, chunk, ce - cs)?;
+            let mut vals =
+                self.recv_chunk(rank, &mut rk, deadline, my_gen, step, chunk, ce - cs)?;
             for (v, &x) in vals.iter_mut().zip(contribution[cs..ce].iter()) {
                 *v += x;
             }
@@ -472,6 +503,7 @@ impl Transport for RingLocal {
         for t in 0..n - 1 {
             let send_chunk = (rank + n - t) % n;
             let vals = std::mem::take(&mut carry);
+            let bytes = vals.len() * CostModel::DENSE_ENTRY_BYTES;
             rk.tx_right
                 .send(Hop::Chunk {
                     generation: my_gen,
@@ -480,9 +512,11 @@ impl Transport for RingLocal {
                     vals,
                 })
                 .map_err(|_| Error::invariant("ring link disconnected — transport dropped"))?;
+            self.obs[rank].payload_tx(bytes);
             let chunk = (rank + 2 * n - 1 - t) % n;
             let (cs, ce) = shard_bounds(len, n, chunk);
-            let vals = self.recv_chunk(&mut rk, deadline, my_gen, n - 1 + t, chunk, ce - cs)?;
+            let vals =
+                self.recv_chunk(rank, &mut rk, deadline, my_gen, n - 1 + t, chunk, ce - cs)?;
             out[cs..ce].copy_from_slice(&vals);
             carry = vals;
         }
@@ -512,6 +546,14 @@ impl Transport for RingLocal {
         for tx in self.abort_tx.lock().unwrap().iter() {
             let _ = tx.send(Hop::Abort);
         }
+        // every rank observes the poisoning at its next hop
+        for c in &self.obs {
+            c.abort();
+        }
+    }
+
+    fn counters(&self, rank: usize) -> Option<&ObsCounters> {
+        self.obs.get(rank)
     }
 }
 
@@ -743,5 +785,47 @@ mod tests {
     fn out_of_range_rank_rejected() {
         let tp = RingLocal::new(2);
         assert!(tp.allgather(5, Message::Scalar(0.0)).is_err());
+    }
+
+    #[test]
+    fn counters_match_the_ring_link_model_per_round() {
+        // every rank contributes B bytes; each ring link must carry
+        // exactly (n-1)·B per all-gather and 2(n-1)/n·V per rsag — the
+        // cost model's link-byte predictions, measured not asserted
+        let n = 4;
+        let len = 8; // divisible by n, so shard arithmetic is exact
+        let tp = Arc::new(RingLocal::new(n));
+        let mut handles = Vec::new();
+        for rank in 0..n {
+            let tp = tp.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut shards = FloatBufPool::new();
+                let mut out = Vec::new();
+                tp.allgather(rank, Message::Floats(Arc::new(vec![0.0f32; len])))
+                    .unwrap();
+                tp.reduce_scatter_allgather(
+                    rank,
+                    Arc::new(vec![1.0f32; len]),
+                    &mut shards,
+                    &mut out,
+                )
+                .unwrap();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let b = len * CostModel::DENSE_ENTRY_BYTES;
+        let net = CostModel::paper_testbed(n);
+        for rank in 0..n {
+            let c = tp.counters(rank).unwrap().snapshot();
+            let want =
+                (net.allgather_link_bytes_ring(b) + net.rsag_link_bytes_ring(b)) as u64;
+            assert_eq!(c.payload_tx_bytes, want, "rank {rank} tx");
+            assert_eq!(c.payload_rx_bytes, want, "rank {rank} rx");
+            assert_eq!(c.rounds_allgather, 1);
+            assert_eq!(c.rounds_rsag, 1);
+            assert_eq!(c.wire_tx_bytes, 0, "no socket, no wire account");
+        }
     }
 }

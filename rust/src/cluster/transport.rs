@@ -93,8 +93,10 @@
 //! [CostModel]: crate::collectives::CostModel
 
 use crate::collectives::allreduce::{reduce_contributions_rsag_with, rsag_rank_order, shard_bounds};
+use crate::collectives::CostModel;
 use crate::coordinator::SelectOutput;
 use crate::error::{Error, Result};
+use crate::obs::{FlightRecorder, ObsCounters};
 use std::sync::{Arc, Condvar, Mutex};
 
 /// One rank's contribution to a collective round. Payloads are behind
@@ -109,6 +111,22 @@ pub enum Message {
     /// One f64 — timing metadata and diagnostics (select wall time,
     /// error norms).
     Scalar(f64),
+}
+
+impl Message {
+    /// Model-level payload bytes of this message — the same units the
+    /// [`CostModel`] link-byte predictions are stated in (8 B per
+    /// sparse (idx, val) entry, 4 B per dense f32, 8 B per scalar).
+    /// The [`ObsCounters`] payload accounts bump by exactly this, which
+    /// is what makes measured payload traffic comparable (and on the
+    /// socket transports: byte-equal) to the model's predictions.
+    pub fn payload_bytes(&self) -> usize {
+        match self {
+            Message::Selection(s) => s.idx.len() * CostModel::SPARSE_ENTRY_BYTES,
+            Message::Floats(v) => v.len() * CostModel::DENSE_ENTRY_BYTES,
+            Message::Scalar(_) => std::mem::size_of::<f64>(),
+        }
+    }
 }
 
 /// Opaque in-flight state of a split-phase all-gather, handed from
@@ -438,6 +456,24 @@ pub trait Transport: Send + Sync {
     /// worker that is about to exit with a failure so peers don't block
     /// forever at the next rendezvous.
     fn abort(&self);
+
+    /// Rank `rank`'s wire counters, when this transport keeps them.
+    /// In-process transports index a shared per-rank array; the socket
+    /// transports (one instance per rank process) answer only for their
+    /// own rank. `None` means "not instrumented" (e.g. test doubles) —
+    /// never "zero traffic".
+    fn counters(&self, rank: usize) -> Option<&ObsCounters> {
+        let _ = rank;
+        None
+    }
+
+    /// Attach a [`FlightRecorder`] for rank `rank`'s protocol events
+    /// (`--obs-flight`). Off by default; the default implementation
+    /// drops the recorder — only the socket transports, where a dump has
+    /// a postmortem story to tell, record and dump.
+    fn attach_flight_recorder(&self, rank: usize, recorder: Arc<FlightRecorder>) {
+        let _ = (rank, recorder);
+    }
 }
 
 struct Board {
@@ -464,6 +500,10 @@ pub struct LocalTransport {
     n: usize,
     board: Mutex<Board>,
     cv: Condvar,
+    /// Per-rank wire counters (payload account only — there is no
+    /// socket, so the wire-byte account stays zero). Indexed by rank;
+    /// lock-free, so bumps never touch the board mutex.
+    obs: Vec<ObsCounters>,
 }
 
 impl LocalTransport {
@@ -481,29 +521,22 @@ impl LocalTransport {
                 poisoned: false,
             }),
             cv: Condvar::new(),
+            obs: (0..n).map(|_| ObsCounters::new()).collect(),
         }
     }
-}
 
-impl Transport for LocalTransport {
-    fn n_ranks(&self) -> usize {
-        self.n
-    }
-
-    fn allgather(&self, rank: usize, msg: Message) -> Result<Arc<[Message]>> {
-        // the blocking round is just the split phases back to back, so
-        // both forms share every invariant check and the recycle path
-        let token = self.allgather_begin(rank, msg)?;
-        self.allgather_complete(rank, token)
-    }
-
-    fn allgather_begin(&self, rank: usize, msg: Message) -> Result<RoundToken> {
+    /// Deposit rank `rank`'s contribution into the current round without
+    /// charging a collective-round counter — shared by both collective
+    /// kinds (which charge their own round) and the rsag shard round
+    /// (an internal hop, not a round of its own).
+    fn begin_inner(&self, rank: usize, msg: Message) -> Result<RoundToken> {
         if rank >= self.n {
             return Err(Error::invalid(format!(
                 "rank {rank} out of range (n = {})",
                 self.n
             )));
         }
+        let payload = msg.payload_bytes();
         let mut b = self.board.lock().unwrap();
         loop {
             if b.poisoned {
@@ -566,7 +599,28 @@ impl Transport for LocalTransport {
             board.generation = board.generation.wrapping_add(1);
             self.cv.notify_all();
         }
+        drop(b);
+        self.obs[rank].payload_tx(payload);
         Ok(RoundToken::deferred(my_gen))
+    }
+}
+
+impl Transport for LocalTransport {
+    fn n_ranks(&self) -> usize {
+        self.n
+    }
+
+    fn allgather(&self, rank: usize, msg: Message) -> Result<Arc<[Message]>> {
+        // the blocking round is just the split phases back to back, so
+        // both forms share every invariant check and the recycle path
+        let token = self.allgather_begin(rank, msg)?;
+        self.allgather_complete(rank, token)
+    }
+
+    fn allgather_begin(&self, rank: usize, msg: Message) -> Result<RoundToken> {
+        let token = self.begin_inner(rank, msg)?;
+        self.obs[rank].round(crate::cluster::CollectiveKind::Allgather);
+        Ok(token)
     }
 
     fn allgather_complete(&self, rank: usize, token: RoundToken) -> Result<Arc<[Message]>> {
@@ -602,7 +656,18 @@ impl Transport for LocalTransport {
         }
         // every rank shares the one published slab — a refcount bump, not
         // a copy; the modeled wire cost is charged by the collectives
-        Ok(b.published.clone())
+        let board = b.published.clone();
+        drop(b);
+        // receive account: everything on the board but our own entry —
+        // the `(n-1)·B` fan-in the recv-bytes predictions are stated in
+        let rx: usize = board
+            .iter()
+            .enumerate()
+            .filter(|(r, _)| *r != rank)
+            .map(|(_, m)| m.payload_bytes())
+            .sum();
+        self.obs[rank].payload_rx(rx);
+        Ok(board)
     }
 
     fn allgather_abandon(&self, rank: usize, token: RoundToken) {
@@ -641,14 +706,32 @@ impl Transport for LocalTransport {
         // release our board clone before depositing the shard round so
         // the contribution slab recycles on schedule
         drop(board);
-        let shard_board = self.allgather(rank, Message::Floats(shard))?;
+        // the shard gather is an internal hop of the rsag round, not a
+        // collective round of its own — skip the round counter
+        let shard_token = self.begin_inner(rank, Message::Floats(shard))?;
+        let shard_board = self.allgather_complete(rank, shard_token)?;
         assemble_shards_into(&shard_board, len, out)
+    }
+
+    fn rsag_begin(&self, rank: usize, contribution: Arc<Vec<f32>>) -> Result<RoundToken> {
+        let token = self.begin_inner(rank, Message::Floats(contribution))?;
+        self.obs[rank].round(crate::cluster::CollectiveKind::Rsag);
+        Ok(token)
     }
 
     fn abort(&self) {
         let mut b = self.board.lock().unwrap();
         b.poisoned = true;
         self.cv.notify_all();
+        drop(b);
+        // every rank observes the poisoning at its next rendezvous
+        for c in &self.obs {
+            c.abort();
+        }
+    }
+
+    fn counters(&self, rank: usize) -> Option<&ObsCounters> {
+        self.obs.get(rank)
     }
 }
 
@@ -1458,5 +1541,61 @@ mod tests {
         let native = run(Arc::new(LocalTransport::new(n)), n, len);
         let eager = run(Arc::new(Eager(LocalTransport::new(n))), n, len);
         assert_eq!(native, eager);
+    }
+
+    #[test]
+    fn message_payload_bytes_match_model_units() {
+        let sel = Message::Selection(Arc::new(SelectOutput {
+            idx: vec![1, 2, 3],
+            val: vec![0.0; 3],
+        }));
+        assert_eq!(sel.payload_bytes(), 3 * 8, "8 B per sparse entry");
+        let floats = Message::Floats(Arc::new(vec![0.0f32; 5]));
+        assert_eq!(floats.payload_bytes(), 5 * 4, "4 B per dense f32");
+        assert_eq!(Message::Scalar(1.0).payload_bytes(), 8);
+    }
+
+    #[test]
+    fn local_counters_track_payload_rounds_and_aborts() {
+        let n = 2;
+        let tp = Arc::new(LocalTransport::new(n));
+        let tp1 = tp.clone();
+        let h = std::thread::spawn(move || {
+            tp1.allgather(1, Message::Floats(Arc::new(vec![0.0f32; 10])))
+                .unwrap()
+        });
+        tp.allgather(0, Message::Floats(Arc::new(vec![0.0f32; 20])))
+            .unwrap();
+        h.join().unwrap();
+        let c0 = tp.counters(0).expect("local is instrumented").snapshot();
+        let c1 = tp.counters(1).unwrap().snapshot();
+        assert_eq!(c0.payload_tx_bytes, 20 * 4);
+        assert_eq!(c0.payload_rx_bytes, 10 * 4, "everything but our own entry");
+        assert_eq!(c1.payload_tx_bytes, 10 * 4);
+        assert_eq!(c1.payload_rx_bytes, 20 * 4);
+        assert_eq!(c0.rounds_allgather, 1);
+        assert_eq!(c0.rounds_rsag, 0);
+        assert_eq!(c0.wire_tx_bytes, 0, "no socket, no wire account");
+        assert!(tp.counters(5).is_none(), "out of range is None");
+        tp.abort();
+        assert_eq!(tp.counters(0).unwrap().snapshot().aborts, 1);
+        assert_eq!(tp.counters(1).unwrap().snapshot().aborts, 1);
+    }
+
+    #[test]
+    fn local_rsag_counts_one_rsag_round_and_no_allgather_round() {
+        let tp = LocalTransport::new(1);
+        let dynamic: &dyn Transport = &tp;
+        let mut shards = FloatBufPool::new();
+        let mut out = Vec::new();
+        dynamic
+            .reduce_scatter_allgather(0, Arc::new(vec![1.0f32; 8]), &mut shards, &mut out)
+            .unwrap();
+        let c = tp.counters(0).unwrap().snapshot();
+        assert_eq!(c.rounds_rsag, 1);
+        assert_eq!(
+            c.rounds_allgather, 0,
+            "the internal shard hop is not a collective round"
+        );
     }
 }

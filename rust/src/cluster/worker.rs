@@ -48,6 +48,7 @@ use crate::coordinator::SelectOutput;
 use crate::error::Result;
 use crate::grad::synth::SynthGen;
 use crate::metrics::IterRecord;
+use crate::obs::SpanTracer;
 use crate::sparsifiers::{CommPattern, RoundCtx, Sparsifier};
 use crate::training::sim::SimCfg;
 use crate::util::stats::l2_norm;
@@ -62,6 +63,8 @@ pub struct SimWorker<'a> {
     cfg: &'a SimCfg,
     net: CostModel,
     ep: Endpoint<'a>,
+    /// `--obs-trace` span tracer; `None` (and costless) unless attached.
+    tracer: Option<SpanTracer>,
 }
 
 impl<'a> SimWorker<'a> {
@@ -81,19 +84,49 @@ impl<'a> SimWorker<'a> {
             cfg,
             net,
             ep,
+            tracer: None,
+        }
+    }
+
+    /// Attach a span tracer; its spans cover compute, selection, and
+    /// the collective rounds of every iteration.
+    pub fn with_tracer(mut self, tracer: Option<SpanTracer>) -> Self {
+        self.tracer = tracer;
+        self
+    }
+
+    /// Span-start stamp (0 when tracing is off — paired with the no-op
+    /// [`SimWorker::span_end`], so the steady state pays nothing).
+    fn span_start(&self) -> u64 {
+        self.tracer.as_ref().map(|tr| tr.now_us()).unwrap_or(0)
+    }
+
+    /// Close a span opened at `start` (no-op when tracing is off).
+    fn span_end(&mut self, name: &'static str, start: u64) {
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.span_since(name, start);
         }
     }
 
     /// Run all iterations; returns this rank's records. Every
     /// deterministic field (`k_actual`, `k_sum`, `delta`, `f_ratio`,
     /// `global_err`, modeled times) is identical across ranks; `t_select`
-    /// is the all-gathered max so it is identical too.
+    /// is the all-gathered max so it is identical too. (The measured
+    /// `m_compute`/`m_comm` wall times are genuinely per-rank and never
+    /// enter the deterministic trace columns.)
     pub fn run(self) -> Result<Vec<IterRecord>> {
-        if self.cfg.pipeline {
-            self.run_pipelined()
+        Ok(self.run_traced()?.0)
+    }
+
+    /// Like [`SimWorker::run`], but hand back the tracer so the caller
+    /// can write its span part file after the thread joins.
+    pub fn run_traced(mut self) -> Result<(Vec<IterRecord>, Option<SpanTracer>)> {
+        let records = if self.cfg.pipeline {
+            self.run_pipelined()?
         } else {
-            self.run_sequential()
-        }
+            self.run_sequential()?
+        };
+        Ok((records, self.tracer.take()))
     }
 
     /// Alg. 1 line 8: generate + accumulate iteration `t`'s gradient
@@ -120,18 +153,21 @@ impl<'a> SimWorker<'a> {
             rank: self.rank,
             n_ranks: self.cfg.n_ranks,
         };
+        let sp0 = self.span_start();
         let st = Instant::now();
         let out = if dense {
             SelectOutput::default()
         } else {
             self.sp.select(&ctx, acc)?
         };
-        Ok((out, st.elapsed().as_secs_f64()))
+        let wall = st.elapsed().as_secs_f64();
+        self.span_end("select", sp0);
+        Ok((out, wall))
     }
 
     /// The default additive-clock loop: every collective is blocking and
     /// each iteration's compute, selection and communication serialize.
-    fn run_sequential(mut self) -> Result<Vec<IterRecord>> {
+    fn run_sequential(&mut self) -> Result<Vec<IterRecord>> {
         let n = self.cfg.n_ranks;
         let n_g = self.gen.n_g();
         let dense = matches!(self.sp.comm_pattern(), CommPattern::DenseAllReduce);
@@ -146,13 +182,19 @@ impl<'a> SimWorker<'a> {
 
         for t in 0..self.cfg.iters {
             // --- compute + accumulate (Alg. 1 line 8)
+            let c0 = self.span_start();
+            let cst = Instant::now();
             self.accumulate(t, dense, &err, &mut acc);
+            self.span_end("compute", c0);
 
             // --- selection (Alg. 1 line 10)
             let (out, my_select) = self.measure_select(t, dense, &acc)?;
+            let m_compute = cst.elapsed().as_secs_f64();
 
             // --- aggregation (Alg. 1 lines 11-13) over the transport;
             // union/counts/sums land in the reusable scratch buffers
+            let r0 = self.span_start();
+            let rst = Instant::now();
             let (f_ratio, t_comm, k_actual);
             match self.sp.comm_pattern() {
                 CommPattern::DenseAllReduce => {
@@ -212,6 +254,8 @@ impl<'a> SimWorker<'a> {
                     t_comm = stats.time_s + t_red;
                 }
             }
+            self.span_end("round", r0);
+            let m_comm = rst.elapsed().as_secs_f64();
 
             // --- error carry (Alg. 1 lines 18-19): zero union coords
             if !dense {
@@ -255,6 +299,8 @@ impl<'a> SimWorker<'a> {
                 t_comm,
                 // additive clock: every modeled comm second is exposed
                 t_exposed_comm: t_comm,
+                m_compute,
+                m_comm,
             });
         }
         Ok(records)
@@ -265,7 +311,7 @@ impl<'a> SimWorker<'a> {
     /// selection run, with double-buffered round scratch. Deterministic
     /// trace fields are bit-identical to [`SimWorker::run_sequential`];
     /// the clock charges `max(compute, comm)` via `t_exposed_comm`.
-    fn run_pipelined(mut self) -> Result<Vec<IterRecord>> {
+    fn run_pipelined(&mut self) -> Result<Vec<IterRecord>> {
         let n = self.cfg.n_ranks;
         let n_g = self.gen.n_g();
         let dense = matches!(self.sp.comm_pattern(), CommPattern::DenseAllReduce);
@@ -292,8 +338,14 @@ impl<'a> SimWorker<'a> {
         // pipeline prologue: iteration 0's compute + selection (every
         // later iteration's compute/select runs inside the previous
         // iteration's overlap window)
+        let c0 = self.span_start();
+        let cst = Instant::now();
         self.accumulate(0, dense, &err, &mut acc);
+        self.span_end("compute", c0);
         let (mut out, mut my_select) = self.measure_select(0, dense, &acc)?;
+        // measured compute+select for the round about to be deposited —
+        // rotated forward each iteration like `out`/`my_select`
+        let mut m_compute_cur = cst.elapsed().as_secs_f64();
 
         for t in 0..self.cfg.iters {
             let s = &mut scratch[t % 2];
@@ -301,6 +353,8 @@ impl<'a> SimWorker<'a> {
             // Nothing that could legally overlap it exists yet (the next
             // accumulate needs this round's union for the error carry),
             // so it is started and finished back to back.
+            let r0 = self.span_start();
+            let rst = Instant::now();
             let (f_ratio, t_meta, k_actual);
             match self.sp.comm_pattern() {
                 CommPattern::DenseAllReduce => {
@@ -361,6 +415,10 @@ impl<'a> SimWorker<'a> {
                     &mut s.send,
                 )?)
             };
+            self.span_end("round:begin", r0);
+            // measured comm so far: the metadata round + putting the
+            // value reduce in flight (the finish below adds the rest)
+            let m_meta = rst.elapsed().as_secs_f64();
 
             // --- error carry (Alg. 1 lines 18-19) + replica feedback,
             // in exactly the sequential order, while the reduce flies
@@ -380,13 +438,20 @@ impl<'a> SimWorker<'a> {
             // generation, error-feedback accumulation and partition-
             // local selection run while round t's payload is on the wire
             let mut next = None;
+            let mut m_compute_next = 0.0;
             if t + 1 < self.cfg.iters {
+                let c0 = self.span_start();
+                let cst = Instant::now();
                 self.accumulate(t + 1, dense, &err, &mut acc);
+                self.span_end("compute", c0);
                 next = Some(self.measure_select(t + 1, dense, &acc)?);
+                m_compute_next = cst.elapsed().as_secs_f64();
             }
 
             // --- land round t's reduce (sum discarded, exactly like the
             // sequential sim path; only its modeled time is charged)
+            let f0 = self.span_start();
+            let fst = Instant::now();
             let t_comm = match pending_reduce {
                 Some(pending) => {
                     t_meta
@@ -394,6 +459,8 @@ impl<'a> SimWorker<'a> {
                 }
                 None => t_meta,
             };
+            self.span_end("round:complete", f0);
+            let m_comm = m_meta + fst.elapsed().as_secs_f64();
 
             // --- diagnostics (same schedule and inputs as sequential:
             // `err` carries round t's post-carry error — the overlap
@@ -426,6 +493,8 @@ impl<'a> SimWorker<'a> {
                 t_select,
                 t_comm,
                 t_exposed_comm: overlap.exposed_s,
+                m_compute: m_compute_cur,
+                m_comm,
             });
 
             // rotate the pipeline: t+1's selection becomes the next
@@ -433,6 +502,7 @@ impl<'a> SimWorker<'a> {
             if let Some((next_out, next_select)) = next {
                 out = next_out;
                 my_select = next_select;
+                m_compute_cur = m_compute_next;
             }
         }
         Ok(records)

@@ -6,6 +6,7 @@ use crate::config::toml::TomlDoc;
 use crate::coordinator::ExDynaCfg;
 use crate::error::{Error, Result};
 use crate::grad::synth::SynthModel;
+use crate::obs::ObsCfg;
 use crate::training::schedule::LrSchedule;
 use crate::training::sim::SimCfg;
 use std::time::Duration;
@@ -31,6 +32,9 @@ pub struct ExperimentConfig {
     pub transport: TransportKind,
     /// Socket-transport tunables (`[transport]` section).
     pub net: NetCfg,
+    /// Observability switches (`[obs]` section / `--obs-trace` etc.) —
+    /// all off by default.
+    pub obs: ObsCfg,
 }
 
 /// Names accepted by [`preset`].
@@ -97,6 +101,7 @@ pub fn preset(name: &str, scale: f64, n_ranks: usize, iters: usize) -> Result<Ex
         scale,
         transport: TransportKind::default(),
         net: NetCfg::default(),
+        obs: ObsCfg::default(),
     })
 }
 
@@ -178,6 +183,16 @@ pub fn from_toml(doc: &TomlDoc) -> Result<ExperimentConfig> {
     cfg.exdyna.threshold.beta = doc.float_or("exdyna", "beta", 2.0);
     cfg.exdyna.threshold.gamma = doc.float_or("exdyna", "gamma", 0.02);
     cfg.hard_delta = doc.float_or("baselines", "hard_delta", cfg.hard_delta as f64) as f32;
+    // [obs] — observability sinks, all off by default
+    cfg.obs.trace_path = doc
+        .get("obs", "trace_path")
+        .and_then(|v| v.as_str())
+        .map(std::path::PathBuf::from);
+    cfg.obs.metrics_json = doc
+        .get("obs", "metrics_json")
+        .and_then(|v| v.as_str())
+        .map(std::path::PathBuf::from);
+    cfg.obs.flight_recorder = doc.bool_or("obs", "flight_recorder", false);
     Ok(cfg)
 }
 
@@ -305,6 +320,34 @@ link_beta = 8.0
         )
         .unwrap();
         assert!(from_toml(&f).is_err());
+    }
+
+    #[test]
+    fn toml_obs_section() {
+        let doc = TomlDoc::parse(
+            r#"
+[experiment]
+preset = "resnet18"
+[obs]
+trace_path = "out/run.trace.json"
+metrics_json = "out/run.ndjson"
+flight_recorder = true
+"#,
+        )
+        .unwrap();
+        let c = from_toml(&doc).unwrap();
+        assert_eq!(
+            c.obs.trace_path.as_deref(),
+            Some(std::path::Path::new("out/run.trace.json"))
+        );
+        assert_eq!(
+            c.obs.metrics_json.as_deref(),
+            Some(std::path::Path::new("out/run.ndjson"))
+        );
+        assert!(c.obs.flight_recorder && c.obs.is_active());
+        // defaults: everything off
+        let d = TomlDoc::parse("[experiment]\npreset = \"lstm\"\n").unwrap();
+        assert!(!from_toml(&d).unwrap().obs.is_active());
     }
 
     #[test]

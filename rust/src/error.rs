@@ -101,6 +101,14 @@ impl Error {
     pub fn net(msg: impl Into<String>) -> Self {
         Error::Net(msg.into())
     }
+
+    /// Did this error originate from an IO deadline expiry? The codec
+    /// maps `WouldBlock`/`TimedOut` reads and writes to [`Error::Net`]
+    /// with a "timed out" message; the obs layer uses this to count
+    /// deadline waits separately from peer loss.
+    pub fn is_timeout(&self) -> bool {
+        matches!(self, Error::Net(m) if m.contains("timed out"))
+    }
 }
 
 #[cfg(test)]
@@ -115,5 +123,13 @@ mod tests {
         assert!(io.to_string().contains("gone"));
         assert!(Error::protocol("bad frame").to_string().starts_with("protocol: "));
         assert!(Error::net("timed out").to_string().starts_with("net: "));
+    }
+
+    #[test]
+    fn timeouts_are_classified() {
+        assert!(Error::net("read timed out waiting for frame header").is_timeout());
+        assert!(Error::net("write timed out").is_timeout());
+        assert!(!Error::net("connection reset").is_timeout());
+        assert!(!Error::protocol("timed out").is_timeout());
     }
 }

@@ -43,6 +43,13 @@
 //!   sparsifiers::*                          per rank (`Sparsifier: Send`)
 //!   runtime::{Engine, ModelRuntime}         PJRT execution of AOT
 //!                                           artifacts (stubbed offline)
+//!   ──────────────────────────────────────────────────────────────────
+//!   obs::{ObsCounters, SpanTracer,          cross-cutting observability:
+//!       AuditReport, FlightRecorder, log}   lock-free wire counters at the
+//!                                           codec boundary, chrome-trace
+//!                                           spans, measured-vs-modeled
+//!                                           audit, abort flight recorder,
+//!                                           leveled stderr logger
 //! ```
 //!
 //! Data movement is executed for real (workers exchange actual
@@ -101,6 +108,18 @@
 //! bit-exactness, NaN shards, cross-kind round-budget sharing) over
 //! every transport.
 //!
+//! Orthogonally to all of the above, the [`obs`] layer measures what
+//! the wire *actually* does: always-on lock-free per-rank counters at
+//! the codec/channel boundary (gross socket bytes on `tcp`/`ring`,
+//! model-unit payload bytes everywhere), an `Option`-gated span tracer
+//! emitting chrome://tracing timelines (`--obs-trace`), an abort
+//! flight recorder (`--obs-flight`), NDJSON metrics (`--metrics-json`)
+//! and the measured-vs-modeled [`obs::AuditReport`] — with
+//! `rust/tests/obs_observability.rs` pinning measured payload traffic
+//! *byte-equal* to the `CostModel` link-byte predictions on the socket
+//! transports, and proving obs-on runs keep traces bit-identical and
+//! steady-state rounds allocation-free.
+//!
 //! Entry points: [`training::run_sim`] for simulated multi-rank training,
 //! [`training::RealTrainer`] for end-to-end model training,
 //! [`cluster::run_rank_on_transport`] for one rank of a distributed
@@ -117,6 +136,7 @@ pub mod coordinator;
 pub mod error;
 pub mod grad;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod sparsifiers;
 pub mod training;

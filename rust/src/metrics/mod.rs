@@ -45,6 +45,17 @@ pub struct IterRecord {
     /// ([`CostModel::overlapped_step`](crate::collectives::CostModel::overlapped_step)),
     /// so `t_total = t_compute + t_select + t_exposed_comm`.
     pub t_exposed_comm: f64,
+    /// *Measured* wall-clock seconds this rank spent computing (gradient
+    /// accumulation + selection) this iteration. Host time, so it is
+    /// non-deterministic; it is therefore excluded from the CSV schema
+    /// (which stays byte-identical across runs) and carried only by the
+    /// NDJSON sink ([`Trace::write_ndjson`]). Zero when the run did not
+    /// collect measured times.
+    pub m_compute: f64,
+    /// *Measured* wall-clock seconds of the communication section —
+    /// the same span of work the modeled `t_comm` charges. Excluded
+    /// from the CSV schema for the same reason as `m_compute`.
+    pub m_comm: f64,
 }
 
 impl IterRecord {
@@ -120,6 +131,17 @@ impl Trace {
         let m = self.records.iter().map(|r| r.t_comm).sum::<f64>() / n;
         let e = self.records.iter().map(|r| r.t_exposed_comm).sum::<f64>() / n;
         (c, s, m, c + s + e)
+    }
+
+    /// Mean *measured* per-iteration `(compute, comm)` wall seconds —
+    /// the host-clock counterpart of [`Trace::mean_breakdown`], used by
+    /// the measured-vs-modeled report. Zeros when the run did not
+    /// collect measured times.
+    pub fn mean_measured(&self) -> (f64, f64) {
+        let n = self.records.len().max(1) as f64;
+        let c = self.records.iter().map(|r| r.m_compute).sum::<f64>() / n;
+        let m = self.records.iter().map(|r| r.m_comm).sum::<f64>() / n;
+        (c, m)
     }
 
     /// Cumulative simulated time at each iteration.
@@ -199,7 +221,10 @@ impl Trace {
                 t_select: pf(10)?,
                 t_comm,
                 t_exposed_comm: if pipelined { pf(12)? } else { t_comm },
-                // last column (t_total) is derived; recomputed on demand
+                // last column (t_total) is derived; recomputed on
+                // demand. Measured times are not part of the CSV schema.
+                m_compute: 0.0,
+                m_comm: 0.0,
             });
         }
         Ok(trace)
@@ -248,6 +273,130 @@ impl Trace {
             writeln!(f, ",{}", r.t_total())?;
         }
         Ok(())
+    }
+
+    /// One record as a single-line JSON object. Floats use Rust's
+    /// shortest-round-trip `Display` (bit-exact on read-back); non-
+    /// finite values (JSON has no NaN/Inf) become `null`.
+    fn record_json(r: &IterRecord) -> String {
+        fn jf(v: f64) -> String {
+            if v.is_finite() {
+                format!("{v}")
+            } else {
+                "null".to_string()
+            }
+        }
+        format!(
+            "{{\"t\":{},\"loss\":{},\"k_user\":{},\"k_actual\":{},\"k_sum\":{},\
+             \"density\":{},\"f_ratio\":{},\"delta\":{},\"global_err\":{},\
+             \"t_compute\":{},\"t_select\":{},\"t_comm\":{},\"t_exposed_comm\":{},\
+             \"t_total\":{},\"m_compute\":{},\"m_comm\":{}}}",
+            r.t,
+            jf(r.loss),
+            r.k_user,
+            r.k_actual,
+            r.k_sum,
+            jf(r.density),
+            jf(r.f_ratio),
+            jf(r.delta),
+            jf(r.global_err),
+            jf(r.t_compute),
+            jf(r.t_select),
+            jf(r.t_comm),
+            jf(r.t_exposed_comm),
+            jf(r.t_total()),
+            jf(r.m_compute),
+            jf(r.m_comm),
+        )
+    }
+
+    /// Write the trace as NDJSON — one JSON object per iteration,
+    /// newline-delimited, loadable line-by-line by `jq`, pandas, or
+    /// chrome://tracing post-processors. Unlike CSV this schema carries
+    /// the *measured* wall-clock fields (`m_compute`, `m_comm`) next to
+    /// the modeled clock, so a single file supports measured-vs-modeled
+    /// comparison offline.
+    pub fn write_ndjson(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        for r in &self.records {
+            writeln!(f, "{}", Self::record_json(r))?;
+        }
+        Ok(())
+    }
+
+    /// Read a trace back from a [`Trace::write_ndjson`] file. The
+    /// parser is deliberately minimal (flat objects, numeric or `null`
+    /// values — exactly what `write_ndjson` emits); unknown keys are
+    /// ignored for forward compatibility and `null` reads back as NaN.
+    /// Like [`Trace::read_csv`], run metadata (`sparsifier`,
+    /// `workload`, `n_ranks`, `pipelined`) is left at defaults.
+    pub fn read_ndjson(path: impl AsRef<Path>) -> crate::error::Result<Self> {
+        use crate::error::Error;
+        let text = std::fs::read_to_string(&path)?;
+        let mut trace = Trace::default();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let body = line
+                .strip_prefix('{')
+                .and_then(|s| s.strip_suffix('}'))
+                .ok_or_else(|| {
+                    Error::invalid(format!("metrics NDJSON line {}: not a JSON object", ln + 1))
+                })?;
+            let mut rec = IterRecord::default();
+            for pair in body.split(',') {
+                let (key, val) = pair.split_once(':').ok_or_else(|| {
+                    Error::invalid(format!("metrics NDJSON line {}: bad pair '{pair}'", ln + 1))
+                })?;
+                let key = key.trim().trim_matches('"');
+                let val = val.trim();
+                let pu = || -> crate::error::Result<usize> {
+                    val.parse().map_err(|_| {
+                        Error::invalid(format!(
+                            "metrics NDJSON line {}: bad integer '{val}' for '{key}'",
+                            ln + 1
+                        ))
+                    })
+                };
+                let pf = || -> crate::error::Result<f64> {
+                    if val == "null" {
+                        return Ok(f64::NAN);
+                    }
+                    val.parse().map_err(|_| {
+                        Error::invalid(format!(
+                            "metrics NDJSON line {}: bad float '{val}' for '{key}'",
+                            ln + 1
+                        ))
+                    })
+                };
+                match key {
+                    "t" => rec.t = pu()?,
+                    "k_user" => rec.k_user = pu()?,
+                    "k_actual" => rec.k_actual = pu()?,
+                    "k_sum" => rec.k_sum = pu()?,
+                    "loss" => rec.loss = pf()?,
+                    "density" => rec.density = pf()?,
+                    "f_ratio" => rec.f_ratio = pf()?,
+                    "delta" => rec.delta = pf()?,
+                    "global_err" => rec.global_err = pf()?,
+                    "t_compute" => rec.t_compute = pf()?,
+                    "t_select" => rec.t_select = pf()?,
+                    "t_comm" => rec.t_comm = pf()?,
+                    "t_exposed_comm" => rec.t_exposed_comm = pf()?,
+                    "m_compute" => rec.m_compute = pf()?,
+                    "m_comm" => rec.m_comm = pf()?,
+                    // t_total is derived; unknown keys are tolerated
+                    _ => {}
+                }
+            }
+            trace.push(rec);
+        }
+        Ok(trace)
     }
 }
 
@@ -333,6 +482,49 @@ mod tests {
         assert!(Trace::read_csv(dir.join("bad.csv")).is_err());
         std::fs::write(dir.join("bad2.csv"), "wrong header\n").unwrap();
         assert!(Trace::read_csv(dir.join("bad2.csv")).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn ndjson_round_trips_bit_exact_with_nan_as_null() {
+        let mut tr = Trace::new("exdyna", "m", 2);
+        let mut r = rec(0, 1.0 / 3.0, f64::NAN);
+        r.loss = f64::NAN;
+        r.delta = 1.234_567_890_123_456_7e-12;
+        r.m_compute = 0.001_234_5;
+        r.m_comm = f64::MIN_POSITIVE;
+        tr.push(r);
+        tr.push(rec(1, 0.001, 1.5));
+        let dir = std::env::temp_dir().join(format!("exdyna_ndjson_rt_{}", std::process::id()));
+        let p = dir.join("t.ndjson");
+        tr.write_ndjson(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        for line in text.lines() {
+            assert!(line.starts_with("{\"t\":") && line.ends_with('}'));
+        }
+        // NaN must appear as JSON null, never as a bare NaN token
+        assert!(text.contains("\"loss\":null"));
+        assert!(!text.contains("NaN"));
+        let back = Trace::read_ndjson(&p).unwrap();
+        assert_eq!(back.records.len(), tr.records.len());
+        for (a, b) in tr.records.iter().zip(back.records.iter()) {
+            assert_eq!(a.t, b.t);
+            assert_eq!(a.k_actual, b.k_actual);
+            assert!(a.loss.to_bits() == b.loss.to_bits() || (a.loss.is_nan() && b.loss.is_nan()));
+            assert!(
+                a.f_ratio.to_bits() == b.f_ratio.to_bits()
+                    || (a.f_ratio.is_nan() && b.f_ratio.is_nan())
+            );
+            assert_eq!(a.delta.to_bits(), b.delta.to_bits());
+            assert_eq!(a.m_compute.to_bits(), b.m_compute.to_bits());
+            assert_eq!(a.m_comm.to_bits(), b.m_comm.to_bits());
+        }
+        // corrupt lines are typed errors, not panics
+        std::fs::write(dir.join("bad.ndjson"), "not json\n").unwrap();
+        assert!(Trace::read_ndjson(dir.join("bad.ndjson")).is_err());
+        std::fs::write(dir.join("bad2.ndjson"), "{\"t\":oops}\n").unwrap();
+        assert!(Trace::read_ndjson(dir.join("bad2.ndjson")).is_err());
         std::fs::remove_dir_all(dir).ok();
     }
 

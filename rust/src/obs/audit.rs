@@ -1,0 +1,240 @@
+//! Measured-vs-modeled audit: do the wire counters agree with the
+//! cost model's link-byte predictions?
+//!
+//! The α–β clock *asserts* per-round link volumes —
+//! [`CostModel::allgather_link_bytes_ring`] /
+//! [`allgather_link_bytes_star_hub`](CostModel::allgather_link_bytes_star_hub)
+//! for the all-gather and [`CostModel::rsag_link_bytes_ring`] /
+//! [`rsag_link_bytes_star_hub`](CostModel::rsag_link_bytes_star_hub)
+//! (with [`CostModel::rsag_recv_bytes_per_rank`] for the receive side)
+//! for reduce-scatter → all-gather. The [`ObsCounters`] *measure* what
+//! the transports actually moved, in the same model-level payload
+//! units. This module joins the two: [`predicted_link_bytes`] evaluates
+//! the model for a (transport, collective, n) cell, and an
+//! [`AuditReport`] renders measured next to predicted per cell.
+//!
+//! For the socket transports the relationship is exact — per round, a
+//! `ring` rank's link carries exactly the ring prediction and the `tcp`
+//! hub's link exactly the star prediction —
+//! `rust/tests/obs_observability.rs` pins byte equality at n ∈ {2, 4}
+//! for both collectives. (`local` is O(n) refcount fan-out rather than
+//! a link, so its payload counters measure boards deposited/observed,
+//! not ring hops; its audit rows are a diagnostic ratio, not a pin.)
+//!
+//! [`ObsCounters`]: crate::obs::counters::ObsCounters
+
+use crate::bench::Table;
+use crate::cluster::{CollectiveKind, TransportKind};
+use crate::collectives::CostModel;
+
+/// Model-predicted payload bytes the *loaded* link carries for one
+/// collective round at `n` ranks — the busiest (and on the ring: every)
+/// link. `payload_bytes` is the per-rank contribution volume for the
+/// all-gather and the total vector volume for rsag, matching how the
+/// [`CostModel`] predictions are stated.
+pub fn predicted_link_bytes(
+    transport: TransportKind,
+    collective: CollectiveKind,
+    n_ranks: usize,
+    payload_bytes: usize,
+) -> usize {
+    let net = CostModel::paper_testbed(n_ranks);
+    match (transport, collective) {
+        (TransportKind::Tcp, CollectiveKind::Allgather) => {
+            net.allgather_link_bytes_star_hub(payload_bytes)
+        }
+        (TransportKind::Tcp, CollectiveKind::Rsag) => net.rsag_link_bytes_star_hub(payload_bytes),
+        // the ring topologies (and local's diagnostic row) use the
+        // balanced ring form — identical on every link
+        (_, CollectiveKind::Allgather) => net.allgather_link_bytes_ring(payload_bytes),
+        (_, CollectiveKind::Rsag) => net.rsag_link_bytes_ring(payload_bytes),
+    }
+}
+
+/// Model-predicted payload bytes one rank *receives* per round (the
+/// paper's `2(n-1)/n·V` rsag claim, `(n-1)·B` for the all-gather).
+pub fn predicted_recv_bytes(
+    collective: CollectiveKind,
+    n_ranks: usize,
+    payload_bytes: usize,
+) -> usize {
+    let net = CostModel::paper_testbed(n_ranks);
+    match collective {
+        CollectiveKind::Allgather => net.allgather_recv_bytes_per_rank(payload_bytes),
+        CollectiveKind::Rsag => net.rsag_recv_bytes_per_rank(payload_bytes),
+    }
+}
+
+/// One audited (transport, collective, n) cell.
+#[derive(Clone, Debug)]
+pub struct AuditRow {
+    /// Transport the traffic was measured on.
+    pub transport: TransportKind,
+    /// Collective kind of the rounds.
+    pub collective: CollectiveKind,
+    /// Cluster size.
+    pub n_ranks: usize,
+    /// Rounds covered by the measurement window.
+    pub rounds: u64,
+    /// Measured payload link bytes (tx + rx on the audited link) over
+    /// the window.
+    pub measured_link_bytes: u64,
+    /// Model-predicted link bytes over the same window.
+    pub predicted_link_bytes: u64,
+}
+
+impl AuditRow {
+    /// Build a row, evaluating the prediction for `rounds` rounds of
+    /// `payload_bytes` each.
+    pub fn new(
+        transport: TransportKind,
+        collective: CollectiveKind,
+        n_ranks: usize,
+        rounds: u64,
+        payload_bytes: usize,
+        measured_link_bytes: u64,
+    ) -> Self {
+        AuditRow {
+            transport,
+            collective,
+            n_ranks,
+            rounds,
+            measured_link_bytes,
+            predicted_link_bytes: rounds
+                * predicted_link_bytes(transport, collective, n_ranks, payload_bytes) as u64,
+        }
+    }
+
+    /// Does measurement equal prediction exactly?
+    pub fn exact(&self) -> bool {
+        self.measured_link_bytes == self.predicted_link_bytes
+    }
+
+    /// measured / predicted (NaN when the prediction is 0).
+    pub fn ratio(&self) -> f64 {
+        self.measured_link_bytes as f64 / self.predicted_link_bytes as f64
+    }
+}
+
+/// A measured-vs-modeled table over several cells.
+#[derive(Clone, Debug, Default)]
+pub struct AuditReport {
+    /// Audited cells.
+    pub rows: Vec<AuditRow>,
+}
+
+impl AuditReport {
+    /// Empty report.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append one cell.
+    pub fn push(&mut self, row: AuditRow) {
+        self.rows.push(row);
+    }
+
+    /// Every row exact?
+    pub fn all_exact(&self) -> bool {
+        self.rows.iter().all(AuditRow::exact)
+    }
+
+    /// Render as an aligned table (`obs::audit` CLI / test output).
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&[
+            "transport",
+            "collective",
+            "n",
+            "rounds",
+            "measured_B",
+            "predicted_B",
+            "ratio",
+        ]);
+        for r in &self.rows {
+            t.row(&[
+                r.transport.to_string(),
+                r.collective.to_string(),
+                r.n_ranks.to_string(),
+                r.rounds.to_string(),
+                r.measured_link_bytes.to_string(),
+                r.predicted_link_bytes.to_string(),
+                if r.exact() {
+                    "exact".to_string()
+                } else {
+                    format!("{:.4}", r.ratio())
+                },
+            ]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn predictions_match_cost_model_formulas() {
+        // B = 800 payload bytes, n = 4
+        let b = 800;
+        assert_eq!(
+            predicted_link_bytes(TransportKind::Ring, CollectiveKind::Allgather, 4, b),
+            3 * b
+        );
+        assert_eq!(
+            predicted_link_bytes(TransportKind::Tcp, CollectiveKind::Allgather, 4, b),
+            3 * b + 3 * 4 * b
+        );
+        assert_eq!(
+            predicted_link_bytes(TransportKind::Ring, CollectiveKind::Rsag, 4, b),
+            2 * 3 * b / 4
+        );
+        assert_eq!(
+            predicted_link_bytes(TransportKind::Tcp, CollectiveKind::Rsag, 4, b),
+            2 * 3 * b
+        );
+        // n = 2 degenerate ring: one hop each way
+        assert_eq!(
+            predicted_link_bytes(TransportKind::Ring, CollectiveKind::Allgather, 2, b),
+            b
+        );
+        assert_eq!(
+            predicted_link_bytes(TransportKind::Ring, CollectiveKind::Rsag, 2, b),
+            b
+        );
+        // receive side: the paper's 2(n-1)/n·V vs (n-1)·B claims
+        assert_eq!(predicted_recv_bytes(CollectiveKind::Allgather, 4, b), 3 * b);
+        assert_eq!(
+            predicted_recv_bytes(CollectiveKind::Rsag, 4, b),
+            2 * 3 * b / 4
+        );
+    }
+
+    #[test]
+    fn report_renders_and_checks_exactness() {
+        let mut rep = AuditReport::new();
+        rep.push(AuditRow::new(
+            TransportKind::Ring,
+            CollectiveKind::Allgather,
+            4,
+            10,
+            800,
+            10 * 3 * 800,
+        ));
+        assert!(rep.all_exact());
+        rep.push(AuditRow::new(
+            TransportKind::Tcp,
+            CollectiveKind::Rsag,
+            4,
+            10,
+            800,
+            999,
+        ));
+        assert!(!rep.all_exact());
+        assert!(!rep.rows[1].exact());
+        let txt = rep.render();
+        assert!(txt.contains("transport") && txt.contains("predicted_B"), "{txt}");
+        assert!(txt.contains("exact"), "{txt}");
+        assert!(txt.contains("ring") && txt.contains("tcp"), "{txt}");
+    }
+}

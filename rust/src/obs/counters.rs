@@ -1,0 +1,252 @@
+//! Per-rank wire counters: lock-free, fixed-size, always on.
+//!
+//! Every transport owns one [`ObsCounters`] per rank and bumps it at the
+//! codec/channel boundary, so the numbers reflect what actually moved —
+//! not what the α–β model says should have moved. Two parallel byte
+//! accounts are kept:
+//!
+//! * **wire bytes** — gross framed bytes as written to / read from the
+//!   socket (header + envelope + payload + checksum). Only the socket
+//!   transports (`tcp`, `ring`) have a wire, so only they bump these.
+//! * **payload bytes** — the model-level entry bytes of each
+//!   [`Message`](crate::cluster::transport::Message) (8 B per sparse
+//!   entry, 4 B per dense float, 8 B per scalar — the same units
+//!   [`CostModel`](crate::collectives::CostModel) predicts in). All four
+//!   transports bump these, which is what lets
+//!   `rust/tests/obs_observability.rs` pin measured payload traffic
+//!   **equal** to `CostModel::allgather_link_bytes_*` /
+//!   `rsag_link_bytes_*` per round.
+//!
+//! Counters are plain relaxed atomics: no locks, no allocation, no
+//! branches on an "enabled" flag — bumping them is cheap enough to leave
+//! on unconditionally, which is how the `alloc_regression` zero-alloc
+//! pins and the bit-exact trace guarantees survive instrumentation.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+/// Lock-free per-rank counters, bumped at the codec/channel boundary.
+#[derive(Debug, Default)]
+pub struct ObsCounters {
+    /// Gross framed bytes written to the socket (tcp/ring only).
+    pub wire_tx_bytes: AtomicU64,
+    /// Gross framed bytes read from the socket (tcp/ring only).
+    pub wire_rx_bytes: AtomicU64,
+    /// Model-level payload bytes sent (all transports).
+    pub payload_tx_bytes: AtomicU64,
+    /// Model-level payload bytes received (all transports).
+    pub payload_rx_bytes: AtomicU64,
+    /// Frames encoded to the wire codec.
+    pub frames_encoded: AtomicU64,
+    /// Frames decoded from the wire codec.
+    pub frames_decoded: AtomicU64,
+    /// All-gather rounds begun.
+    pub rounds_allgather: AtomicU64,
+    /// Reduce-scatter → all-gather rounds begun.
+    pub rounds_rsag: AtomicU64,
+    /// Abort poisonings observed (local aborts + peer abort notices).
+    pub aborts: AtomicU64,
+    /// Receive waits that expired at the IO deadline.
+    pub deadline_waits: AtomicU64,
+}
+
+impl ObsCounters {
+    /// Fresh zeroed counters.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bump gross wire bytes written.
+    #[inline]
+    pub fn wire_tx(&self, bytes: usize) {
+        self.wire_tx_bytes.fetch_add(bytes as u64, Relaxed);
+    }
+
+    /// Bump gross wire bytes read.
+    #[inline]
+    pub fn wire_rx(&self, bytes: usize) {
+        self.wire_rx_bytes.fetch_add(bytes as u64, Relaxed);
+    }
+
+    /// Bump payload bytes sent.
+    #[inline]
+    pub fn payload_tx(&self, bytes: usize) {
+        self.payload_tx_bytes.fetch_add(bytes as u64, Relaxed);
+    }
+
+    /// Bump payload bytes received.
+    #[inline]
+    pub fn payload_rx(&self, bytes: usize) {
+        self.payload_rx_bytes.fetch_add(bytes as u64, Relaxed);
+    }
+
+    /// Bump frames encoded.
+    #[inline]
+    pub fn frame_encoded(&self) {
+        self.frames_encoded.fetch_add(1, Relaxed);
+    }
+
+    /// Bump frames decoded.
+    #[inline]
+    pub fn frame_decoded(&self) {
+        self.frames_decoded.fetch_add(1, Relaxed);
+    }
+
+    /// Bump the round counter for one collective kind.
+    #[inline]
+    pub fn round(&self, kind: crate::cluster::CollectiveKind) {
+        match kind {
+            crate::cluster::CollectiveKind::Allgather => {
+                self.rounds_allgather.fetch_add(1, Relaxed)
+            }
+            crate::cluster::CollectiveKind::Rsag => self.rounds_rsag.fetch_add(1, Relaxed),
+        };
+    }
+
+    /// Bump the abort counter.
+    #[inline]
+    pub fn abort(&self) {
+        self.aborts.fetch_add(1, Relaxed);
+    }
+
+    /// Bump the deadline-expiry counter.
+    #[inline]
+    pub fn deadline_wait(&self) {
+        self.deadline_waits.fetch_add(1, Relaxed);
+    }
+
+    /// Consistent point-in-time copy of every counter.
+    pub fn snapshot(&self) -> CounterSnapshot {
+        CounterSnapshot {
+            wire_tx_bytes: self.wire_tx_bytes.load(Relaxed),
+            wire_rx_bytes: self.wire_rx_bytes.load(Relaxed),
+            payload_tx_bytes: self.payload_tx_bytes.load(Relaxed),
+            payload_rx_bytes: self.payload_rx_bytes.load(Relaxed),
+            frames_encoded: self.frames_encoded.load(Relaxed),
+            frames_decoded: self.frames_decoded.load(Relaxed),
+            rounds_allgather: self.rounds_allgather.load(Relaxed),
+            rounds_rsag: self.rounds_rsag.load(Relaxed),
+            aborts: self.aborts.load(Relaxed),
+            deadline_waits: self.deadline_waits.load(Relaxed),
+        }
+    }
+}
+
+/// Plain-value copy of [`ObsCounters`] at one instant; subtract two to
+/// isolate the traffic of a window of rounds.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CounterSnapshot {
+    /// Gross framed bytes written to the socket.
+    pub wire_tx_bytes: u64,
+    /// Gross framed bytes read from the socket.
+    pub wire_rx_bytes: u64,
+    /// Model-level payload bytes sent.
+    pub payload_tx_bytes: u64,
+    /// Model-level payload bytes received.
+    pub payload_rx_bytes: u64,
+    /// Frames encoded.
+    pub frames_encoded: u64,
+    /// Frames decoded.
+    pub frames_decoded: u64,
+    /// All-gather rounds begun.
+    pub rounds_allgather: u64,
+    /// Rsag rounds begun.
+    pub rounds_rsag: u64,
+    /// Aborts observed.
+    pub aborts: u64,
+    /// Deadline expiries observed.
+    pub deadline_waits: u64,
+}
+
+impl CounterSnapshot {
+    /// Counter increments since `earlier` (saturating, field-wise).
+    pub fn since(&self, earlier: &CounterSnapshot) -> CounterSnapshot {
+        CounterSnapshot {
+            wire_tx_bytes: self.wire_tx_bytes.saturating_sub(earlier.wire_tx_bytes),
+            wire_rx_bytes: self.wire_rx_bytes.saturating_sub(earlier.wire_rx_bytes),
+            payload_tx_bytes: self
+                .payload_tx_bytes
+                .saturating_sub(earlier.payload_tx_bytes),
+            payload_rx_bytes: self
+                .payload_rx_bytes
+                .saturating_sub(earlier.payload_rx_bytes),
+            frames_encoded: self.frames_encoded.saturating_sub(earlier.frames_encoded),
+            frames_decoded: self.frames_decoded.saturating_sub(earlier.frames_decoded),
+            rounds_allgather: self
+                .rounds_allgather
+                .saturating_sub(earlier.rounds_allgather),
+            rounds_rsag: self.rounds_rsag.saturating_sub(earlier.rounds_rsag),
+            aborts: self.aborts.saturating_sub(earlier.aborts),
+            deadline_waits: self.deadline_waits.saturating_sub(earlier.deadline_waits),
+        }
+    }
+
+    /// Both directions of payload traffic — the per-link volume the
+    /// cost-model `*_link_bytes_*` predictions are stated in.
+    pub fn payload_link_bytes(&self) -> u64 {
+        self.payload_tx_bytes + self.payload_rx_bytes
+    }
+
+    /// One-line human rendering (diagnostics, flight-recorder dumps).
+    pub fn render(&self) -> String {
+        format!(
+            "wire tx/rx {}/{} B, payload tx/rx {}/{} B, frames enc/dec {}/{}, \
+             rounds ag/rsag {}/{}, aborts {}, deadline waits {}",
+            self.wire_tx_bytes,
+            self.wire_rx_bytes,
+            self.payload_tx_bytes,
+            self.payload_rx_bytes,
+            self.frames_encoded,
+            self.frames_decoded,
+            self.rounds_allgather,
+            self.rounds_rsag,
+            self.aborts,
+            self.deadline_waits
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bumps_and_snapshots() {
+        let c = ObsCounters::new();
+        c.wire_tx(10);
+        c.wire_rx(20);
+        c.payload_tx(8);
+        c.payload_rx(16);
+        c.frame_encoded();
+        c.frame_decoded();
+        c.round(crate::cluster::CollectiveKind::Allgather);
+        c.round(crate::cluster::CollectiveKind::Rsag);
+        c.abort();
+        c.deadline_wait();
+        let s = c.snapshot();
+        assert_eq!(s.wire_tx_bytes, 10);
+        assert_eq!(s.wire_rx_bytes, 20);
+        assert_eq!(s.payload_tx_bytes, 8);
+        assert_eq!(s.payload_rx_bytes, 16);
+        assert_eq!(s.frames_encoded, 1);
+        assert_eq!(s.frames_decoded, 1);
+        assert_eq!(s.rounds_allgather, 1);
+        assert_eq!(s.rounds_rsag, 1);
+        assert_eq!(s.aborts, 1);
+        assert_eq!(s.deadline_waits, 1);
+        assert_eq!(s.payload_link_bytes(), 24);
+    }
+
+    #[test]
+    fn since_isolates_a_window() {
+        let c = ObsCounters::new();
+        c.payload_tx(100);
+        let before = c.snapshot();
+        c.payload_tx(40);
+        c.payload_rx(60);
+        let d = c.snapshot().since(&before);
+        assert_eq!(d.payload_tx_bytes, 40);
+        assert_eq!(d.payload_rx_bytes, 60);
+        assert_eq!(d.payload_link_bytes(), 100);
+        assert!(d.render().contains("payload tx/rx 40/60"));
+    }
+}

@@ -1,0 +1,203 @@
+//! Flight recorder: a preallocated ring of recent protocol events,
+//! dumped on failure for postmortem debugging of distributed hangs.
+//!
+//! Each rank's socket transport can carry one [`FlightRecorder`]
+//! (`Option`-gated, off by default — attaching it is the only cost
+//! switch). While attached it records a fixed-size ring of the last
+//! [`FLIGHT_CAPACITY`] protocol events — frames sent/received, round
+//! begin/complete transitions with their generation stamps, aborts,
+//! deadline expiries. Nothing is allocated after construction: the ring
+//! is preallocated and old events are overwritten in place.
+//!
+//! On abort poisoning, mid-round peer loss, or deadline expiry the
+//! transport calls [`FlightRecorder::dump_to_log`], which renders the
+//! ring (newest last, with the last seen generation — the *poisoned
+//! generation* — in the header) and emits it as one atomic stderr
+//! write through the leveled logger. CI's injected-abort drill greps
+//! this dump.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, Mutex};
+
+/// Ring capacity: enough to cover several rounds of frame traffic on a
+/// 16-rank cluster while staying trivially preallocatable.
+pub const FLIGHT_CAPACITY: usize = 256;
+
+/// What happened.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecKind {
+    /// A frame went out (`a` = gross wire bytes).
+    FrameTx,
+    /// A frame came in (`a` = gross wire bytes).
+    FrameRx,
+    /// A collective round began (`a` = 0 allgather / 1 rsag).
+    RoundBegin,
+    /// A collective round completed (`a` = 0 allgather / 1 rsag).
+    RoundComplete,
+    /// Abort poisoning (local failure or a peer's notice).
+    Abort,
+    /// A receive wait expired at the IO deadline.
+    Deadline,
+}
+
+impl RecKind {
+    fn name(self) -> &'static str {
+        match self {
+            RecKind::FrameTx => "frame-tx",
+            RecKind::FrameRx => "frame-rx",
+            RecKind::RoundBegin => "round-begin",
+            RecKind::RoundComplete => "round-complete",
+            RecKind::Abort => "abort",
+            RecKind::Deadline => "deadline",
+        }
+    }
+}
+
+/// One recorded protocol event.
+#[derive(Clone, Copy, Debug)]
+pub struct RecEvent {
+    /// Monotone sequence number (never wraps with the ring).
+    pub seq: u64,
+    /// Event kind.
+    pub kind: RecKind,
+    /// Round generation stamp current when the event fired.
+    pub generation: u64,
+    /// Kind-specific detail (bytes, collective kind, ...).
+    pub a: u64,
+    /// Second kind-specific detail.
+    pub b: u64,
+}
+
+struct Ring {
+    buf: Vec<RecEvent>,
+    next: usize,
+    seq: u64,
+}
+
+/// Preallocated per-rank ring buffer of recent protocol events.
+pub struct FlightRecorder {
+    rank: usize,
+    last_generation: AtomicU64,
+    inner: Mutex<Ring>,
+}
+
+impl FlightRecorder {
+    /// Recorder for `rank` with a fully preallocated ring.
+    pub fn new(rank: usize) -> Arc<Self> {
+        Arc::new(FlightRecorder {
+            rank,
+            last_generation: AtomicU64::new(0),
+            inner: Mutex::new(Ring {
+                buf: Vec::with_capacity(FLIGHT_CAPACITY),
+                next: 0,
+                seq: 0,
+            }),
+        })
+    }
+
+    /// Record one event (overwrites the oldest once the ring is full;
+    /// zero allocation in the steady state).
+    pub fn record(&self, kind: RecKind, generation: u64, a: u64, b: u64) {
+        self.last_generation.store(generation, Relaxed);
+        let mut ring = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        let seq = ring.seq;
+        ring.seq += 1;
+        let ev = RecEvent {
+            seq,
+            kind,
+            generation,
+            a,
+            b,
+        };
+        if ring.buf.len() < FLIGHT_CAPACITY {
+            ring.buf.push(ev);
+            ring.next = ring.buf.len() % FLIGHT_CAPACITY;
+        } else {
+            let slot = ring.next;
+            ring.buf[slot] = ev;
+            ring.next = (slot + 1) % FLIGHT_CAPACITY;
+        }
+    }
+
+    /// Generation stamp of the most recent event — on failure, the
+    /// generation the cluster poisoned at.
+    pub fn last_generation(&self) -> u64 {
+        self.last_generation.load(Relaxed)
+    }
+
+    /// Render the ring, oldest event first, newest last. The header
+    /// names the rank, the reason, and the poisoned generation.
+    pub fn dump(&self, why: &str) -> String {
+        let ring = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        let n = ring.buf.len();
+        let mut out = String::with_capacity(64 + n * 48);
+        out.push_str(&format!(
+            "flight recorder dump: rank {} {} at generation {} ({} events, newest last)",
+            self.rank,
+            why,
+            self.last_generation(),
+            n
+        ));
+        // oldest-first: when full, the oldest slot is `next`
+        let start = if n < FLIGHT_CAPACITY { 0 } else { ring.next };
+        for i in 0..n {
+            let e = &ring.buf[(start + i) % n.max(1)];
+            out.push_str(&format!(
+                "\n  #{:<6} gen={:<6} {:<14} a={} b={}",
+                e.seq,
+                e.generation,
+                e.kind.name(),
+                e.a,
+                e.b
+            ));
+        }
+        out
+    }
+
+    /// Dump the ring to stderr through the leveled logger — one atomic
+    /// write, rank-prefixed, at warn level so it survives the default
+    /// filter.
+    pub fn dump_to_log(&self, why: &str) {
+        crate::log_warn!("obs", "{}", self.dump(why));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_dumps_with_generation() {
+        let fr = FlightRecorder::new(2);
+        fr.record(RecKind::RoundBegin, 7, 0, 0);
+        fr.record(RecKind::FrameTx, 7, 123, 0);
+        fr.record(RecKind::Abort, 9, 0, 0);
+        assert_eq!(fr.last_generation(), 9);
+        let d = fr.dump("abort poisoning");
+        assert!(
+            d.starts_with("flight recorder dump: rank 2 abort poisoning at generation 9"),
+            "{d}"
+        );
+        assert!(d.contains("round-begin") && d.contains("frame-tx") && d.contains("abort"));
+        assert!(d.contains("a=123"), "frame bytes recorded: {d}");
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_keeps_order() {
+        let fr = FlightRecorder::new(0);
+        for i in 0..(FLIGHT_CAPACITY as u64 + 10) {
+            fr.record(RecKind::FrameRx, i, i, 0);
+        }
+        let d = fr.dump("deadline expiry");
+        // the first 10 events were overwritten
+        assert!(!d.contains("\n  #0 "), "{d}");
+        assert!(d.contains(&format!("#{}", FLIGHT_CAPACITY as u64 + 9)), "{d}");
+        // oldest surviving event leads, newest trails
+        let first = d.find("  #10 ").expect("oldest survivor rendered");
+        let last = d
+            .find(&format!("#{}", FLIGHT_CAPACITY as u64 + 9))
+            .unwrap();
+        assert!(first < last, "oldest-first ordering: {d}");
+        assert_eq!(fr.last_generation(), FLIGHT_CAPACITY as u64 + 9);
+    }
+}

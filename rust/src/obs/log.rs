@@ -1,0 +1,177 @@
+//! Minimal leveled stderr logger (std-only).
+//!
+//! `EXDYNA_LOG=error|warn|info|debug` selects the level (default
+//! `info`, matching the diagnostics the CLI always printed before this
+//! logger existed). Every line is rendered into one buffer and written
+//! with a single `write_all` under the stderr lock, so concurrent rank
+//! processes/threads never interleave-garble each other's lines; rank
+//! processes call [`set_rank`] once so every line is rank-prefixed.
+//!
+//! Use via the crate-level macros:
+//!
+//! ```ignore
+//! crate::log_info!("launch", "rank {rank} done");
+//! crate::log_warn!("sim", "defaulting factor to {f}");
+//! ```
+
+use std::fmt;
+use std::io::Write;
+use std::sync::atomic::{AtomicIsize, Ordering::Relaxed};
+use std::sync::OnceLock;
+
+/// Log severity, most severe first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Unrecoverable problems.
+    Error,
+    /// Suspicious-but-continuing conditions (also flight-recorder dumps).
+    Warn,
+    /// Run progress (the default level).
+    Info,
+    /// Per-round/protocol detail.
+    Debug,
+}
+
+impl Level {
+    /// Parse an `EXDYNA_LOG` value; unknown strings fall back to `Info`.
+    pub fn parse(s: &str) -> Level {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" | "warning" => Level::Warn,
+            "debug" => Level::Debug,
+            _ => Level::Info,
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+static LEVEL: OnceLock<Level> = OnceLock::new();
+/// This process's rank; -1 until [`set_rank`] is called.
+static RANK: AtomicIsize = AtomicIsize::new(-1);
+
+/// The active level (reads `EXDYNA_LOG` once).
+pub fn level() -> Level {
+    *LEVEL.get_or_init(|| {
+        std::env::var("EXDYNA_LOG")
+            .map(|v| Level::parse(&v))
+            .unwrap_or(Level::Info)
+    })
+}
+
+/// Is `lvl` enabled under the active level?
+#[inline]
+pub fn enabled(lvl: Level) -> bool {
+    lvl <= level()
+}
+
+/// Record this process's rank; every subsequent line is prefixed
+/// `[rank R]`. Call once, from the rank entry point.
+pub fn set_rank(rank: usize) {
+    RANK.store(rank as isize, Relaxed);
+}
+
+/// Render one log line — `[tag][rank R] message` (`warn:`/`error:`
+/// flagged explicitly, `info` left bare to match the CLI's historical
+/// output).
+pub fn format_line(lvl: Level, tag: &str, rank: isize, msg: &str) -> String {
+    let mut line = String::with_capacity(tag.len() + msg.len() + 24);
+    line.push('[');
+    line.push_str(tag);
+    line.push(']');
+    if rank >= 0 {
+        line.push_str("[rank ");
+        line.push_str(&rank.to_string());
+        line.push(']');
+    }
+    line.push(' ');
+    if lvl != Level::Info {
+        line.push_str(lvl.tag());
+        line.push_str(": ");
+    }
+    line.push_str(msg);
+    line.push('\n');
+    line
+}
+
+/// Emit one line at `lvl` (no-op when the level filters it). One
+/// `write_all` under the stderr lock — never interleaved mid-line.
+pub fn write(lvl: Level, tag: &str, args: fmt::Arguments<'_>) {
+    if !enabled(lvl) {
+        return;
+    }
+    let line = format_line(lvl, tag, RANK.load(Relaxed), &args.to_string());
+    let stderr = std::io::stderr();
+    let mut h = stderr.lock();
+    let _ = h.write_all(line.as_bytes());
+    let _ = h.flush();
+}
+
+/// Log at error level: `log_error!("launch", "rank {r} failed")`.
+#[macro_export]
+macro_rules! log_error {
+    ($tag:expr, $($arg:tt)*) => {
+        $crate::obs::log::write($crate::obs::log::Level::Error, $tag, format_args!($($arg)*))
+    };
+}
+
+/// Log at warn level.
+#[macro_export]
+macro_rules! log_warn {
+    ($tag:expr, $($arg:tt)*) => {
+        $crate::obs::log::write($crate::obs::log::Level::Warn, $tag, format_args!($($arg)*))
+    };
+}
+
+/// Log at info level (the default visibility).
+#[macro_export]
+macro_rules! log_info {
+    ($tag:expr, $($arg:tt)*) => {
+        $crate::obs::log::write($crate::obs::log::Level::Info, $tag, format_args!($($arg)*))
+    };
+}
+
+/// Log at debug level (hidden unless `EXDYNA_LOG=debug`).
+#[macro_export]
+macro_rules! log_debug {
+    ($tag:expr, $($arg:tt)*) => {
+        $crate::obs::log::write($crate::obs::log::Level::Debug, $tag, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(Level::parse("error"), Level::Error);
+        assert_eq!(Level::parse("WARN"), Level::Warn);
+        assert_eq!(Level::parse("warning"), Level::Warn);
+        assert_eq!(Level::parse("info"), Level::Info);
+        assert_eq!(Level::parse("debug"), Level::Debug);
+        assert_eq!(Level::parse("garbage"), Level::Info);
+        assert!(Level::Error < Level::Debug, "severity orders the filter");
+    }
+
+    #[test]
+    fn line_format_is_single_write_ready() {
+        let l = format_line(Level::Info, "sim", -1, "starting run");
+        assert_eq!(l, "[sim] starting run\n");
+        let l = format_line(Level::Warn, "launch", 3, "peer lost");
+        assert_eq!(l, "[launch][rank 3] warn: peer lost\n");
+        let l = format_line(Level::Error, "obs", 0, "boom");
+        assert_eq!(l, "[obs][rank 0] error: boom\n");
+        // exactly one trailing newline — the no-garble guarantee rests
+        // on the whole line (newline included) going out in one write
+        assert_eq!(l.matches('\n').count(), 1);
+        assert!(l.ends_with('\n'));
+    }
+}

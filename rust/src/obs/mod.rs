@@ -1,0 +1,99 @@
+//! Wire-level observability: measured-vs-modeled instrumentation.
+//!
+//! The simulation's α–β clock is deliberately decoupled from real data
+//! movement — traces are bit-identical across transports because the
+//! clock charges modeled ring collectives no matter what the wire does.
+//! That decoupling is a feature, but it leaves a question open: *is the
+//! wire actually doing what the model claims?* This layer answers it
+//! with measurement instead of assertion:
+//!
+//! * [`counters`] — per-rank lock-free [`ObsCounters`] (relaxed
+//!   atomics, fixed-size, zero-alloc in the steady state) bumped at the
+//!   codec/channel boundary: gross socket bytes on `tcp`/`ring`,
+//!   model-unit payload bytes on all four transports, frames, rounds by
+//!   collective kind, aborts, deadline waits.
+//! * [`trace`] — an `Option`-gated per-rank [`SpanTracer`] emitting
+//!   chrome://tracing JSON (`--obs-trace`), with rank part files merged
+//!   into one timeline by whoever outlives the ranks.
+//! * [`audit`] — the measured-vs-modeled join: [`AuditReport`] tables
+//!   comparing counter deltas against `CostModel::*_link_bytes_*`
+//!   predictions per (transport, collective, n). For `tcp` and `ring`
+//!   the match is *exact* and pinned by test.
+//! * [`flight`] — an `Option`-gated preallocated [`FlightRecorder`]
+//!   ring of recent protocol events, dumped through the logger on abort
+//!   poisoning, mid-round peer loss, or deadline expiry.
+//! * [`log`] — the minimal leveled stderr logger (`EXDYNA_LOG`) behind
+//!   the crate-wide `log_error!`/`log_warn!`/`log_info!`/`log_debug!`
+//!   macros; single-write lines that never interleave-garble across
+//!   ranks.
+//!
+//! Everything here is off by default and costs nothing when off: the
+//! counters are always-on relaxed atomics (no locks, no allocation —
+//! the `alloc_regression` pins stay green), while the tracer, flight
+//! recorder, and sinks only exist when [`ObsCfg`] asks for them, so
+//! deterministic traces stay bit-identical with obs on or off.
+
+pub mod audit;
+pub mod counters;
+pub mod flight;
+pub mod log;
+pub mod trace;
+
+pub use audit::{predicted_link_bytes, predicted_recv_bytes, AuditReport, AuditRow};
+pub use counters::{CounterSnapshot, ObsCounters};
+pub use flight::{FlightRecorder, RecEvent, RecKind, FLIGHT_CAPACITY};
+pub use trace::{merge as merge_trace_parts, SpanEvent, SpanTracer};
+
+use std::path::PathBuf;
+
+/// Observability switches for one run — all off by default.
+///
+/// Lives on [`ExperimentConfig`](crate::config::ExperimentConfig)
+/// (TOML `[obs]` section) and is resolved from `--obs-trace` /
+/// `--metrics-json` / `--obs-flight` on the CLI; `launch` forwards the
+/// flags to every child rank.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ObsCfg {
+    /// Write a merged chrome-trace JSON timeline here (per-rank
+    /// `.rank<R>.part` files are written first, then fused).
+    pub trace_path: Option<PathBuf>,
+    /// Write NDJSON metrics (one object per iteration record) here.
+    pub metrics_json: Option<PathBuf>,
+    /// Attach a [`FlightRecorder`] to every rank's transport and dump
+    /// it on abort poisoning / peer loss / deadline expiry.
+    pub flight_recorder: bool,
+}
+
+impl ObsCfg {
+    /// Anything switched on?
+    pub fn is_active(&self) -> bool {
+        self.trace_path.is_some() || self.metrics_json.is_some() || self.flight_recorder
+    }
+
+    /// Is span tracing on?
+    pub fn tracing(&self) -> bool {
+        self.trace_path.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn obs_cfg_defaults_off() {
+        let cfg = ObsCfg::default();
+        assert!(!cfg.is_active());
+        assert!(!cfg.tracing());
+        let on = ObsCfg {
+            trace_path: Some(PathBuf::from("/tmp/t.json")),
+            ..ObsCfg::default()
+        };
+        assert!(on.is_active() && on.tracing());
+        let fr = ObsCfg {
+            flight_recorder: true,
+            ..ObsCfg::default()
+        };
+        assert!(fr.is_active() && !fr.tracing());
+    }
+}

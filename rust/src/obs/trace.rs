@@ -1,0 +1,185 @@
+//! Span tracer: chrome://tracing-compatible JSON timelines.
+//!
+//! Each rank owns one [`SpanTracer`] and records complete ("X") spans —
+//! compute, select, round begin→complete windows — as microsecond
+//! offsets from a run-wide origin. At the end of the run every rank
+//! writes a *part file* (`<base>.rank<R>.part`: one JSON event object
+//! per line, no enclosing brackets), and whoever outlives all ranks —
+//! the threaded engine after joining its workers, or the single-host
+//! `launch` parent after its children exit — calls [`merge`] to fuse
+//! the parts into one `{"traceEvents": [...]}` file that
+//! `chrome://tracing` / Perfetto loads directly, with one `pid` lane
+//! per rank. That makes split-phase in-flight windows and pipelined
+//! overlap *visually* inspectable instead of inferred from the clock
+//! columns.
+//!
+//! The tracer is `Option`-gated everywhere it is threaded (off by
+//! default): an obs-off run constructs nothing and records nothing, so
+//! traces stay bit-identical and the zero-alloc pins hold.
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// One complete span (chrome trace "X" event).
+#[derive(Clone, Copy, Debug)]
+pub struct SpanEvent {
+    /// Static span name (compute / select / round:allgather / ...).
+    pub name: &'static str,
+    /// Start, µs since the tracer's origin.
+    pub ts_us: u64,
+    /// Duration in µs.
+    pub dur_us: u64,
+}
+
+/// Per-rank span recorder.
+#[derive(Debug)]
+pub struct SpanTracer {
+    rank: usize,
+    origin: Instant,
+    events: Vec<SpanEvent>,
+}
+
+impl SpanTracer {
+    /// Tracer for `rank` with its own origin (multi-process ranks each
+    /// start near-simultaneously at the rendezvous, so lanes line up
+    /// well enough to read).
+    pub fn new(rank: usize) -> Self {
+        Self::with_origin(rank, Instant::now())
+    }
+
+    /// Tracer for `rank` against a shared `origin` — the threaded
+    /// engine hands every rank the same origin so lanes align exactly.
+    pub fn with_origin(rank: usize, origin: Instant) -> Self {
+        SpanTracer {
+            rank,
+            origin,
+            events: Vec::with_capacity(1024),
+        }
+    }
+
+    /// Microseconds since the origin (span start marker).
+    pub fn now_us(&self) -> u64 {
+        self.origin.elapsed().as_micros() as u64
+    }
+
+    /// Record a span that started at `start_us` and ends now.
+    pub fn span_since(&mut self, name: &'static str, start_us: u64) {
+        let end = self.now_us();
+        self.events.push(SpanEvent {
+            name,
+            ts_us: start_us,
+            dur_us: end.saturating_sub(start_us),
+        });
+    }
+
+    /// Recorded spans so far.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// No spans recorded yet?
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// The part-file path rank `rank` writes next to `base`.
+    pub fn part_path(base: &Path, rank: usize) -> PathBuf {
+        let mut s = base.as_os_str().to_os_string();
+        s.push(format!(".rank{rank}.part"));
+        PathBuf::from(s)
+    }
+
+    /// Write this rank's events as a part file (one JSON object per
+    /// line), ready for [`merge`].
+    pub fn write_part(&self, base: &Path) -> std::io::Result<()> {
+        if let Some(dir) = base.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut out = String::with_capacity(self.events.len() * 80);
+        for e in &self.events {
+            out.push_str(&format!(
+                "{{\"name\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":{},\"tid\":0}}\n",
+                e.name, e.ts_us, e.dur_us, self.rank
+            ));
+        }
+        std::fs::write(Self::part_path(base, self.rank), out)
+    }
+}
+
+/// Fuse the rank part files next to `base` into `base` itself as one
+/// chrome-trace JSON document, then delete the parts. Ranks whose part
+/// file is missing (e.g. a crashed process) are skipped; returns how
+/// many parts were merged.
+pub fn merge(base: &Path, n_ranks: usize) -> std::io::Result<usize> {
+    let mut events: Vec<String> = Vec::new();
+    let mut merged = 0usize;
+    let mut parts: Vec<PathBuf> = Vec::new();
+    for rank in 0..n_ranks {
+        let part = SpanTracer::part_path(base, rank);
+        let Ok(text) = std::fs::read_to_string(&part) else {
+            continue;
+        };
+        merged += 1;
+        parts.push(part);
+        for line in text.lines() {
+            let line = line.trim();
+            if !line.is_empty() {
+                events.push(line.to_string());
+            }
+        }
+    }
+    let mut doc = String::with_capacity(events.iter().map(|e| e.len() + 2).sum::<usize>() + 32);
+    doc.push_str("{\"traceEvents\":[\n");
+    doc.push_str(&events.join(",\n"));
+    doc.push_str("\n]}\n");
+    std::fs::write(base, doc)?;
+    for part in parts {
+        let _ = std::fs::remove_file(part);
+    }
+    Ok(merged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parts_merge_into_one_chrome_trace() {
+        let dir = std::env::temp_dir().join(format!("exdyna_obs_trace_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = dir.join("run.trace.json");
+        let origin = Instant::now();
+        for rank in 0..2 {
+            let mut tr = SpanTracer::with_origin(rank, origin);
+            let s = tr.now_us();
+            tr.span_since("compute", s);
+            let s = tr.now_us();
+            tr.span_since("round:allgather", s);
+            assert_eq!(tr.len(), 2);
+            assert!(!tr.is_empty());
+            tr.write_part(&base).unwrap();
+        }
+        assert!(SpanTracer::part_path(&base, 0).exists());
+        let merged = merge(&base, 2).unwrap();
+        assert_eq!(merged, 2);
+        let doc = std::fs::read_to_string(&base).unwrap();
+        assert!(doc.starts_with("{\"traceEvents\":["), "{doc}");
+        assert!(doc.contains("\"pid\":0") && doc.contains("\"pid\":1"), "{doc}");
+        assert!(doc.contains("\"name\":\"round:allgather\""), "{doc}");
+        // structurally sound: 4 events => 3 separating commas between
+        // objects, balanced braces
+        assert_eq!(doc.matches("{\"name\"").count(), 4);
+        assert_eq!(
+            doc.matches('{').count(),
+            doc.matches('}').count(),
+            "balanced braces: {doc}"
+        );
+        // parts are cleaned up after the merge
+        assert!(!SpanTracer::part_path(&base, 0).exists());
+        // missing ranks are skipped, not an error
+        assert_eq!(merge(&base, 5).unwrap(), 0);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

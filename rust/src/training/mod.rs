@@ -21,4 +21,4 @@ pub mod sim;
 
 pub use real::{RealTrainer, RealTrainerCfg, SelectBackend};
 pub use schedule::LrSchedule;
-pub use sim::{run_lockstep, run_sim, SimCfg, SparsifierFactory};
+pub use sim::{run_lockstep, run_lockstep_obs, run_sim, run_sim_obs, SimCfg, SparsifierFactory};

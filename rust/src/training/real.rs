@@ -176,6 +176,10 @@ struct RankStepOut {
     err_norm: f64,
     /// The sparsifier's threshold after `observe` (0 if none).
     delta: f64,
+    /// Measured wall seconds of this rank's aggregation section
+    /// (metadata phase + value reduce + overlapped epilogue) — the
+    /// host-clock counterpart of the modeled `t_comm`.
+    m_comm: f64,
     /// `Some` on rank 0, `None` elsewhere.
     agg: Option<AggOut>,
 }
@@ -189,6 +193,8 @@ struct StepOut {
     err_norm_sum: f64,
     /// Rank 0's threshold after `observe`.
     delta: f64,
+    /// Max over ranks of the measured aggregation wall seconds.
+    m_comm: f64,
     agg: AggOut,
 }
 
@@ -338,6 +344,7 @@ fn rank_step_threaded(
 
     // --- metadata phase: selection all-gather / leader broadcast /
     // dense bookkeeping (identical in both clock modes)
+    let mst = Instant::now();
     let (f_ratio, t_meta);
     match state.sparsifier.comm_pattern() {
         CommPattern::DenseAllReduce => {
@@ -428,6 +435,7 @@ fn rank_step_threaded(
         err_norm = if dense { 0.0 } else { l2_norm(&state.err) };
     }
     let t_comm = t_meta + t_reduce;
+    let m_comm = mst.elapsed().as_secs_f64();
 
     Ok(RankStepOut {
         loss,
@@ -435,6 +443,7 @@ fn rank_step_threaded(
         t_select,
         err_norm,
         delta: state.sparsifier.delta().unwrap_or(0.0) as f64,
+        m_comm,
         // the aggregate is replicated; one copy (rank 0's) is enough
         agg: (rank == 0).then(|| AggOut {
             union_idx: scratch.union_idx.clone(),
@@ -761,6 +770,7 @@ impl RealTrainer {
         let t_compute = cores.iter().fold(0.0f64, |a, c| a.max(c.t_compute));
         let t_select = cores.iter().fold(0.0f64, |a, c| a.max(c.t_select));
 
+        let mst = Instant::now();
         let (union_idx, k_by_rank, f_ratio, t_comm, g_vals);
         {
             // take the selections out by value — no per-iteration clones
@@ -815,6 +825,7 @@ impl RealTrainer {
                 }
             }
         }
+        let m_comm = mst.elapsed().as_secs_f64();
 
         for state in ranks.iter_mut() {
             rank_carry_and_observe(state, &union_idx, &k_by_rank, t, dense)?;
@@ -832,6 +843,7 @@ impl RealTrainer {
             t_select,
             err_norm_sum,
             delta,
+            m_comm,
             agg: AggOut {
                 union_idx,
                 g_vals,
@@ -859,6 +871,7 @@ impl RealTrainer {
         let losses: f64 = per_rank.iter().map(|o| o.loss).sum();
         let t_compute = per_rank.iter().fold(0.0f64, |a, o| a.max(o.t_compute));
         let t_select = per_rank.iter().fold(0.0f64, |a, o| a.max(o.t_select));
+        let m_comm = per_rank.iter().fold(0.0f64, |a, o| a.max(o.m_comm));
         let err_norm_sum: f64 = per_rank.iter().map(|o| o.err_norm).sum();
         // every rank computed the identical aggregate; rank 0 shipped it
         let first = per_rank.swap_remove(0);
@@ -871,6 +884,7 @@ impl RealTrainer {
             t_select,
             err_norm_sum,
             delta: first.delta,
+            m_comm,
             agg,
         })
     }
@@ -931,6 +945,11 @@ impl RealTrainer {
             t_select: out.t_select,
             t_comm: agg.t_comm,
             t_exposed_comm,
+            // the real trainer's compute/select columns are already
+            // measured wall time; the measured fields just restate them
+            // so NDJSON rows are uniform across trainers
+            m_compute: out.t_compute + out.t_select,
+            m_comm: out.m_comm,
         };
         self.sim_clock += rec.t_total();
         self.trace.push(rec.clone());

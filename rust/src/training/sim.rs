@@ -46,6 +46,7 @@ use crate::collectives::{
 use crate::error::Result;
 use crate::grad::synth::SynthGen;
 use crate::metrics::{IterRecord, Trace};
+use crate::obs::{ObsCfg, SpanTracer};
 use crate::sparsifiers::{CommPattern, RoundCtx, Sparsifier};
 use crate::training::schedule::LrSchedule;
 use crate::util::stats::l2_norm;
@@ -119,9 +120,26 @@ pub fn run_sim(
     make_sparsifier: &SparsifierFactory,
     cfg: &SimCfg,
 ) -> Result<Trace> {
+    run_sim_obs(gen, make_sparsifier, cfg, &ObsCfg::default())
+}
+
+/// [`run_sim`] with observability: span tracing and flight recorders
+/// are threaded through whichever engine runs
+/// ([`crate::cluster::run_threaded_obs`] for threaded,
+/// [`run_lockstep_obs`] for lock-step). Writing the NDJSON metrics sink
+/// from the returned trace is the caller's job — the engines only
+/// *collect*. With `obs` fully off this is exactly [`run_sim`].
+pub fn run_sim_obs(
+    gen: &SynthGen,
+    make_sparsifier: &SparsifierFactory,
+    cfg: &SimCfg,
+    obs: &ObsCfg,
+) -> Result<Trace> {
     match cfg.engine {
-        EngineKind::Threaded => crate::cluster::run_threaded(gen, make_sparsifier, cfg),
-        EngineKind::Lockstep => run_lockstep(gen, make_sparsifier, cfg),
+        EngineKind::Threaded => {
+            crate::cluster::run_threaded_obs(gen, make_sparsifier, cfg, obs)
+        }
+        EngineKind::Lockstep => run_lockstep_obs(gen, make_sparsifier, cfg, obs),
     }
 }
 
@@ -138,6 +156,21 @@ pub fn run_lockstep(
     make_sparsifier: &SparsifierFactory,
     cfg: &SimCfg,
 ) -> Result<Trace> {
+    run_lockstep_obs(gen, make_sparsifier, cfg, &ObsCfg::default())
+}
+
+/// [`run_lockstep`] with observability. Lock-step runs every rank on
+/// the calling thread, so there is one tracer lane (pid 0) and the
+/// measured `m_compute`/`m_comm` cover all ranks' work back-to-back —
+/// still useful as a host-clock sanity reference next to the modeled
+/// clock, and the `--obs-trace` flag works uniformly across engines.
+pub fn run_lockstep_obs(
+    gen: &SynthGen,
+    make_sparsifier: &SparsifierFactory,
+    cfg: &SimCfg,
+    obs: &ObsCfg,
+) -> Result<Trace> {
+    let mut tracer = obs.tracing().then(|| SpanTracer::new(0));
     let n = cfg.n_ranks;
     let n_g = gen.n_g();
     let net = CostModel::paper_testbed(n).with_straggler(cfg.straggler);
@@ -184,6 +217,8 @@ pub fn run_lockstep(
 
     for t in 0..cfg.iters {
         let lr = cfg.lr.lr(t);
+        let c0 = tracer.as_ref().map(|tr| tr.now_us()).unwrap_or(0);
+        let cst = Instant::now();
         // --- compute + accumulate (Alg. 1 line 8), fused into one pass
         for (r, acc_r) in acc.iter_mut().enumerate() {
             if dense {
@@ -195,7 +230,11 @@ pub fn run_lockstep(
                 gen.accumulate_into(t, r, &err[r], lr, acc_r);
             }
         }
+        if let Some(tr) = tracer.as_mut() {
+            tr.span_since("compute", c0);
+        }
         // --- selection (Alg. 1 line 10), parallel across ranks => max
+        let s0 = tracer.as_ref().map(|tr| tr.now_us()).unwrap_or(0);
         outs.clear();
         let mut t_select_max = 0.0f64;
         for (r, sp) in sparsifiers.iter_mut().enumerate() {
@@ -214,7 +253,13 @@ pub fn run_lockstep(
             t_select_max = t_select_max.max(st.elapsed().as_secs_f64());
             outs.push(out);
         }
+        if let Some(tr) = tracer.as_mut() {
+            tr.span_since("select", s0);
+        }
+        let m_compute = cst.elapsed().as_secs_f64();
         // --- aggregation (Alg. 1 lines 11-13) into the reused buffers
+        let r0 = tracer.as_ref().map(|tr| tr.now_us()).unwrap_or(0);
+        let rst = Instant::now();
         let (f_ratio, t_comm, k_actual);
         match sparsifiers[0].comm_pattern() {
             CommPattern::DenseAllReduce => {
@@ -244,6 +289,10 @@ pub fn run_lockstep(
                 t_comm = stats.time_s + t_red;
             }
         }
+        if let Some(tr) = tracer.as_mut() {
+            tr.span_since("round", r0);
+        }
+        let m_comm = rst.elapsed().as_secs_f64();
         // --- error carry (Alg. 1 lines 18-19): zero union coords
         if !dense {
             for r in 0..n {
@@ -282,7 +331,13 @@ pub fn run_lockstep(
             t_select: t_select_max,
             t_comm,
             t_exposed_comm,
+            m_compute,
+            m_comm,
         });
+    }
+    if let (Some(base), Some(tr)) = (obs.trace_path.as_deref(), tracer.as_ref()) {
+        tr.write_part(base)?;
+        crate::obs::trace::merge(base, 1)?;
     }
     Ok(trace)
 }
@@ -388,6 +443,36 @@ mod tests {
             assert_eq!(a.k_actual, b.k_actual);
             assert_eq!(a.delta, b.delta);
         }
+    }
+
+    #[test]
+    fn lockstep_obs_measures_wall_time_and_writes_a_trace() {
+        let n = 2;
+        let gen = small_gen(n);
+        let mk = |n_g: usize, nr: usize| -> Result<Box<dyn Sparsifier>> {
+            Ok(Box::new(ExDyna::new(n_g, nr, ExDynaCfg::default_for(nr))?))
+        };
+        let mut c = cfg(n, 5);
+        c.engine = EngineKind::Lockstep;
+        let plain = run_sim(&gen, &mk, &c).unwrap();
+        // measured fields are collected even with obs off (two Instant
+        // reads per iteration, no allocation) and never enter the CSV
+        assert!(plain.records.iter().all(|r| r.m_compute > 0.0));
+        let dir = std::env::temp_dir().join(format!("exdyna_sim_obs_{}", std::process::id()));
+        let base = dir.join("lockstep.trace.json");
+        let obs = ObsCfg {
+            trace_path: Some(base.clone()),
+            ..ObsCfg::default()
+        };
+        let traced = run_sim_obs(&gen, &mk, &c, &obs).unwrap();
+        for (a, b) in plain.records.iter().zip(traced.records.iter()) {
+            assert_eq!(a.k_actual, b.k_actual);
+            assert_eq!(a.delta.to_bits(), b.delta.to_bits());
+        }
+        let doc = std::fs::read_to_string(&base).unwrap();
+        assert!(doc.starts_with("{\"traceEvents\":["), "{doc}");
+        assert!(doc.contains("\"name\":\"select\"") && doc.contains("\"name\":\"round\""));
+        std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]

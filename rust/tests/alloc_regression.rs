@@ -13,6 +13,11 @@
 //!
 //! Everything runs inside ONE `#[test]` so no unrelated test-harness
 //! activity can allocate inside a counting window.
+//!
+//! The always-on `obs` wire counters (ISSUE 7) are bumped inside these
+//! counted rounds — relaxed atomic adds on fixed-size structs, no heap
+//! — so the zero-allocation pins below also pin the instrumentation's
+//! zero-overhead claim.
 
 use exdyna::cluster::{CollectiveKind, Endpoint, LocalTransport, Message};
 use exdyna::collectives::{

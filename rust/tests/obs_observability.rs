@@ -1,0 +1,216 @@
+//! Observability conformance battery.
+//!
+//! Three guarantees the `obs` layer makes, each pinned here against the
+//! real transports and engines rather than unit fixtures:
+//!
+//! 1. **Measured == modeled, exactly.** The per-rank payload counters
+//!    ([`ObsCounters`](exdyna::obs::ObsCounters)), bumped at the
+//!    codec/channel boundary, must agree byte-for-byte with the
+//!    [`CostModel`](exdyna::collectives::CostModel) link-byte
+//!    predictions for the socket transports — `tcp` (the hub's NIC is
+//!    the star's loaded link) and `ring` (every rank's outgoing link
+//!    carries the balanced ring volume) — at n ∈ {2, 4} for both
+//!    collectives. Not approximately: [`AuditReport::all_exact`].
+//! 2. **Observability never perturbs the run.** A fully-instrumented
+//!    run (span tracer + flight recorders) produces bit-identical
+//!    deterministic trace columns to a plain run, and the merged
+//!    chrome-trace document is well-formed.
+//! 3. **The NDJSON metrics sink round-trips.** A real run's records —
+//!    including the measured `m_compute`/`m_comm` wall-clock fields the
+//!    CSV schema deliberately excludes — survive
+//!    `write_ndjson` → `read_ndjson` bit-exactly.
+
+use exdyna::cluster::testing::{ring_cluster, tcp_cluster};
+use exdyna::cluster::{
+    CollectiveKind, Endpoint, FloatBufPool, Transport, TransportKind,
+};
+use exdyna::collectives::CostModel;
+use exdyna::coordinator::{ExDyna, ExDynaCfg};
+use exdyna::grad::{DecayCfg, SynthGen, SynthModel};
+use exdyna::obs::{predicted_recv_bytes, AuditReport, AuditRow, ObsCfg};
+use exdyna::sparsifiers::Sparsifier;
+use exdyna::training::{run_sim, run_sim_obs, SimCfg};
+use exdyna::Result;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Rounds measured per audited cell (any count works — equality is
+/// per-round linear for a fixed payload; >1 catches per-round constants
+/// sneaking into the counters).
+const ROUNDS: usize = 3;
+/// Dense f32 elements per contribution — divisible by every audited n
+/// so rsag shard chunks are equal-sized and the ring's integer shard
+/// math is exact.
+const LEN: usize = 12;
+
+/// Drive `ROUNDS` rounds of one collective kind across all ranks, one
+/// thread per rank (the socket transports block peer-wise).
+fn run_rounds(tps: &[Arc<dyn Transport>], kind: CollectiveKind) {
+    let mut handles = Vec::new();
+    for (rank, tp) in tps.iter().cloned().enumerate() {
+        handles.push(std::thread::spawn(move || {
+            let ep = Endpoint::new(rank, tp.as_ref());
+            let mut shards = FloatBufPool::new();
+            let mut out = Vec::new();
+            for _ in 0..ROUNDS {
+                match kind {
+                    CollectiveKind::Allgather => {
+                        ep.allgather_floats(Arc::new(vec![rank as f32; LEN])).unwrap();
+                    }
+                    CollectiveKind::Rsag => {
+                        ep.reduce_scatter_allgather(
+                            Arc::new(vec![1.0f32; LEN]),
+                            &mut shards,
+                            &mut out,
+                        )
+                        .unwrap();
+                    }
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn measured_wire_bytes_equal_cost_model_predictions_exactly() {
+    let b = LEN * CostModel::DENSE_ENTRY_BYTES;
+    let timeout = Duration::from_secs(30);
+    let mut report = AuditReport::new();
+    for n in [2usize, 4] {
+        // tcp star: the hub's NIC is the loaded link the star formula
+        // prices — both directions ((n-1)·B in, (n-1)·n·B out per
+        // all-gather round), measured as the hub's tx+rx payload delta
+        let tps = tcp_cluster(n, timeout).unwrap();
+        for kind in [CollectiveKind::Allgather, CollectiveKind::Rsag] {
+            let before = tps[0].counters(0).unwrap().snapshot();
+            run_rounds(&tps, kind);
+            let d = tps[0].counters(0).unwrap().snapshot().since(&before);
+            assert_eq!(d.aborts, 0, "tcp n={n} {kind}");
+            report.push(AuditRow::new(
+                TransportKind::Tcp,
+                kind,
+                n,
+                ROUNDS as u64,
+                b,
+                d.payload_link_bytes(),
+            ));
+        }
+        // ring: per-link traffic is balanced, so EVERY rank's outgoing
+        // link must carry exactly the ring prediction (tx alone — the
+        // physical link r → r+1 is rank r's tx side)
+        let tps = ring_cluster(n, timeout).unwrap();
+        for kind in [CollectiveKind::Allgather, CollectiveKind::Rsag] {
+            let before: Vec<_> = tps
+                .iter()
+                .enumerate()
+                .map(|(r, tp)| tp.counters(r).unwrap().snapshot())
+                .collect();
+            run_rounds(&tps, kind);
+            for (rank, tp) in tps.iter().enumerate() {
+                let d = tp.counters(rank).unwrap().snapshot().since(&before[rank]);
+                assert_eq!(d.aborts, 0, "ring n={n} {kind} rank {rank}");
+                // receive side: the paper's per-rank volume claims —
+                // (n-1)·B for the all-gather, 2(n-1)/n·V for rsag
+                assert_eq!(
+                    d.payload_rx_bytes,
+                    (ROUNDS * predicted_recv_bytes(kind, n, b)) as u64,
+                    "ring n={n} {kind} rank {rank} recv"
+                );
+                report.push(AuditRow::new(
+                    TransportKind::Ring,
+                    kind,
+                    n,
+                    ROUNDS as u64,
+                    b,
+                    d.payload_tx_bytes,
+                ));
+            }
+        }
+    }
+    assert!(
+        report.all_exact(),
+        "measured wire bytes diverge from the cost model:\n{}",
+        report.render()
+    );
+    // 2 tcp cells per n, plus one ring cell per (rank, collective)
+    assert_eq!(report.rows.len(), 2 * 2 + 2 * (2 + 4));
+}
+
+fn small_gen(n: usize) -> SynthGen {
+    let model = SynthModel::profile("obs-t", 24_000, 4, 5, DecayCfg::default());
+    SynthGen::new(model, n, 0.5, 23, false)
+}
+
+fn mk(n_g: usize, n: usize) -> Result<Box<dyn Sparsifier>> {
+    Ok(Box::new(ExDyna::new(n_g, n, ExDynaCfg::default_for(n))?))
+}
+
+#[test]
+fn full_instrumentation_leaves_the_deterministic_trace_bit_identical() {
+    let n = 4;
+    let gen = small_gen(n);
+    let cfg = SimCfg {
+        n_ranks: n,
+        iters: 6,
+        ..Default::default()
+    };
+    let plain = run_sim(&gen, &mk, &cfg).unwrap();
+    let dir = std::env::temp_dir().join(format!("exdyna_obs_conf_{}", std::process::id()));
+    let base = dir.join("sim.trace.json");
+    let obs = ObsCfg {
+        trace_path: Some(base.clone()),
+        flight_recorder: true,
+        ..ObsCfg::default()
+    };
+    let traced = run_sim_obs(&gen, &mk, &cfg, &obs).unwrap();
+    assert_eq!(plain.records.len(), traced.records.len());
+    for (a, c) in plain.records.iter().zip(traced.records.iter()) {
+        // every deterministic column, to the bit
+        assert_eq!(a.k_actual, c.k_actual);
+        assert_eq!(a.k_sum, c.k_sum);
+        assert_eq!(a.delta.to_bits(), c.delta.to_bits());
+        assert_eq!(a.density.to_bits(), c.density.to_bits());
+        assert_eq!(a.t_compute.to_bits(), c.t_compute.to_bits());
+        assert_eq!(a.t_comm.to_bits(), c.t_comm.to_bits());
+        assert_eq!(a.loss.to_bits(), c.loss.to_bits());
+    }
+    let doc = std::fs::read_to_string(&base).unwrap();
+    assert!(doc.starts_with("{\"traceEvents\":["), "{doc}");
+    for rank in 0..n {
+        assert!(doc.contains(&format!("\"pid\":{rank}")), "missing rank {rank} lane");
+    }
+    assert!(doc.contains("\"name\":\"compute\"") && doc.contains("\"name\":\"round\""));
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn ndjson_sink_round_trips_a_real_run_bit_exactly() {
+    let n = 4;
+    let gen = small_gen(n);
+    let cfg = SimCfg {
+        n_ranks: n,
+        iters: 5,
+        ..Default::default()
+    };
+    let trace = run_sim(&gen, &mk, &cfg).unwrap();
+    // the threaded engine measures host wall-clock even with obs off
+    assert!(trace.records.iter().all(|r| r.m_compute > 0.0));
+    let dir = std::env::temp_dir().join(format!("exdyna_obs_ndjson_{}", std::process::id()));
+    let path = dir.join("metrics.ndjson");
+    trace.write_ndjson(&path).unwrap();
+    let back = exdyna::metrics::Trace::read_ndjson(&path).unwrap();
+    assert_eq!(back.records.len(), trace.records.len());
+    for (a, c) in trace.records.iter().zip(back.records.iter()) {
+        assert_eq!(a.t, c.t);
+        assert_eq!(a.k_actual, c.k_actual);
+        assert_eq!(a.delta.to_bits(), c.delta.to_bits());
+        assert_eq!(a.t_comm.to_bits(), c.t_comm.to_bits());
+        // the measured fields the CSV schema excludes ride along
+        assert_eq!(a.m_compute.to_bits(), c.m_compute.to_bits());
+        assert_eq!(a.m_comm.to_bits(), c.m_comm.to_bits());
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
