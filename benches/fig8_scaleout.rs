@@ -16,7 +16,14 @@
 //! modeled per-rank received value volume ≤ `(k + (n-1)/n·k)·payload`,
 //! strictly below the all-gather collective's `(n-1)·k·payload`
 //! full-board fan-in; the allgather-vs-rsag sweep is written to
-//! `BENCH_collective_fig8.json`. Reports, per scale:
+//! `BENCH_collective_fig8.json`. A `threaded+rsag+sparse` column
+//! (ISSUE 8) re-runs the rsag sweep with truly sparse `(index, value)`
+//! entry-list shards (`--sparse-shards`) under an explicit per-hop
+//! re-top-k cap, asserts the modeled per-rank sparse entry volume
+//! stays under the `2k·SPARSE_ENTRY_BYTES` acceptance bound on every
+//! iteration and strictly below the dense-union rsag volume on the run
+//! mean at n ∈ {4, 8, 16}, and lands the dense-vs-sparse sweep in
+//! `BENCH_sparse_fig8.json`. Reports, per scale:
 //! * host wall-clock of the whole run per mode and the
 //!   lockstep/threaded speedup ratio;
 //! * identical-trace check (all modes must agree bit-exactly on the
@@ -57,6 +64,7 @@ fn main() -> exdyna::Result<()> {
     std::fs::create_dir_all(&tmp)?;
     let mut pipe_json = Vec::new();
     let mut collective_json = Vec::new();
+    let mut sparse_json = Vec::new();
     for ranks in [2usize, 4, 8, 16] {
         let cfg = preset("resnet152", scale, ranks, iters)?;
         let gen = SynthGen::new(cfg.model.clone(), ranks, cfg.sim.rho, cfg.sim.seed, false);
@@ -194,6 +202,76 @@ fn main() -> exdyna::Result<()> {
                 rsag_bytes_sum as f64 / iters_f,
             ));
         }
+        // sparse shards ON (ISSUE 8): the rsag sweep again, but the
+        // value reduce carries truly sparse (index, value) entry lists
+        // under an explicit per-hop re-top-k cap. The trajectory
+        // legitimately differs from the dense-shard runs (per-rank
+        // error carry + residual feedback), so the dense-vs-sparse
+        // volume comparison is made on THIS run's unions: per
+        // iteration the entry volume must honour the 2k acceptance
+        // bound, and on the run mean it must stay strictly below what
+        // dense union-length rsag shards would have carried for the
+        // same unions at n >= 4.
+        {
+            let mut sim = cfg.sim;
+            sim.engine = EngineKind::Threaded;
+            sim.collective = CollectiveKind::Rsag;
+            sim.sparse_shards = true;
+            let k_user = ((d * gen.n_g() as f64).round() as usize).max(1);
+            let shard_k = (k_user / (ranks * ranks)).max(1);
+            sim.shard_k = shard_k;
+            let st = Instant::now();
+            let sp = run_sim(&gen, factory.as_ref(), &sim)?;
+            let sp_wall = st.elapsed().as_secs_f64();
+            let (_, _, _, tot_sp) = sp.mean_breakdown();
+            let net = CostModel::paper_testbed(ranks);
+            let cap_entries = ranks * shard_k;
+            let mut dense_bytes_sum = 0u128;
+            let mut sparse_bytes_sum = 0u128;
+            for r in &sp.records {
+                let entries = r.k_actual.min(cap_entries);
+                let sp_recv = net.rsag_sparse_recv_bytes_per_rank(entries);
+                let dn_recv =
+                    net.rsag_recv_bytes_per_rank(r.k_actual * CostModel::DENSE_ENTRY_BYTES);
+                assert!(
+                    sp_recv <= 2 * k_user * CostModel::SPARSE_ENTRY_BYTES,
+                    "n={ranks} t={}: sparse recv {sp_recv} B exceeds the \
+                     2k*SPARSE_ENTRY_BYTES acceptance bound",
+                    r.t
+                );
+                dense_bytes_sum += dn_recv as u128;
+                sparse_bytes_sum += sp_recv as u128;
+            }
+            if ranks >= 4 {
+                assert!(
+                    sparse_bytes_sum < dense_bytes_sum,
+                    "n={ranks}: mean sparse recv {sparse_bytes_sum} B not below the \
+                     dense-union rsag volume {dense_bytes_sum} B"
+                );
+            }
+            println!(
+                "{ranks},threaded+rsag+sparse,{:.3},{:.4},{:.6}",
+                sp_wall,
+                tot_sp,
+                sp.mean_density_tail(iters / 3)
+            );
+            let iters_f = sp.records.len().max(1) as f64;
+            eprintln!(
+                "# n = {ranks:<3} sparse shards (cap {shard_k}/hop): dense rsag {:.0} \
+                 B/rank/iter -> sparse {:.0} B/rank/iter",
+                dense_bytes_sum as f64 / iters_f,
+                sparse_bytes_sum as f64 / iters_f
+            );
+            sparse_json.push(format!(
+                "    {{\"ranks\": {ranks}, \"shard_k\": {shard_k}, \
+                 \"sim_iter_s_sparse\": {tot_sp:.6}, \
+                 \"mean_dense_rsag_recv_bytes_per_rank\": {:.1}, \
+                 \"mean_sparse_rsag_recv_bytes_per_rank\": {:.1}, \
+                 \"wall_s_sparse\": {sp_wall:.3}}}",
+                dense_bytes_sum as f64 / iters_f,
+                sparse_bytes_sum as f64 / iters_f,
+            ));
+        }
         // tcp star + ring: the same run as one process per rank over
         // loopback (single-host launch); wall-clock includes process
         // startup + rendezvous — the honest cost of crossing the
@@ -280,6 +358,15 @@ fn main() -> exdyna::Result<()> {
     match std::fs::write("BENCH_collective_fig8.json", &json) {
         Ok(()) => eprintln!("# allgather vs rsag sweep -> BENCH_collective_fig8.json"),
         Err(e) => eprintln!("# could not write BENCH_collective_fig8.json: {e}"),
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"fig8_scaleout\",\n  \"iters\": {iters},\n  \"scale\": {scale},\n  \
+         \"rows\": [\n{}\n  ]\n}}\n",
+        sparse_json.join(",\n")
+    );
+    match std::fs::write("BENCH_sparse_fig8.json", &json) {
+        Ok(()) => eprintln!("# dense vs sparse rsag sweep -> BENCH_sparse_fig8.json"),
+        Err(e) => eprintln!("# could not write BENCH_sparse_fig8.json: {e}"),
     }
 
     // --- Part 2: real-model convergence by scale (needs PJRT + artifacts)

@@ -32,6 +32,13 @@
 //! received-byte volumes of both forms — lands in
 //! `BENCH_collective.json`.
 //!
+//! The dense-vs-sparse rsag sweep (ISSUE 8) measures the same pairs
+//! with the truly sparse `--sparse-shards` value reduce (`+sparse` /
+//! `+pipe+sparse` rows, per-hop cap `K/n`) at n ∈ {4, 8, 16}, asserts
+//! the modeled per-rank sparse receive volume stays strictly below the
+//! dense rsag's and under the `2k` entry bound, and lands the sweep in
+//! `BENCH_sparse.json`.
+//!
 //! A second table prints the *modeled* star-vs-ring wire asymmetry for
 //! the same per-rank payload — the α·(n−1) + β·(n−1)/n·V ring form the
 //! traces charge vs the hub-star shape, and the per-link byte volumes
@@ -43,7 +50,8 @@ use exdyna::cluster::testing::{local_cluster, ring_cluster, ring_local_cluster, 
 use exdyna::cluster::{CollectiveKind, Endpoint, Message, Transport};
 use exdyna::collectives::{
     allgather_sparse_finish_rk, allgather_sparse_rk, value_reduce_union_rk,
-    value_reduce_union_start_rk, CostModel, RoundScratch,
+    value_reduce_union_sparse_rk, value_reduce_union_sparse_start_rk, value_reduce_union_start_rk,
+    CostModel, RoundScratch,
 };
 use exdyna::coordinator::SelectOutput;
 use std::alloc::{GlobalAlloc, Layout, System};
@@ -98,6 +106,10 @@ fn compute_burn(acc: &[f32]) -> f32 {
 /// (compute after the collectives) or split-phase rounds (compute in
 /// the flight windows); `collective` selects the value-reduce form —
 /// the per-round work is identical in every combination.
+/// `sparse_shard_k = Some(cap)` swaps the rsag value reduce for the
+/// truly sparse `(index, value)` entry-list form (ISSUE 8) with the
+/// given per-hop re-top-k cap.
+#[allow(clippy::too_many_arguments)]
 fn rank_loop(
     rank: usize,
     n: usize,
@@ -106,6 +118,7 @@ fn rank_loop(
     steady: usize,
     pipeline: bool,
     collective: CollectiveKind,
+    sparse_shard_k: Option<usize>,
 ) -> Duration {
     let ep = Endpoint::new(rank, tp);
     let net = CostModel::paper_testbed(n);
@@ -132,13 +145,30 @@ fn rank_loop(
             allgather_sparse_finish_rk(&board, &net, &mut s.union_idx, &mut s.k_by_rank)
                 .unwrap();
             drop(board);
-            let pending =
-                value_reduce_union_start_rk(&ep, collective, &acc, &s.union_idx, &mut s.send)
-                    .unwrap();
-            sink += compute_burn(&acc);
-            pending
-                .finish(s.union_idx.len(), &net, &mut s.shards, &mut s.reduced)
+            let union_len = s.union_idx.len();
+            if let Some(cap) = sparse_shard_k {
+                let pending = value_reduce_union_sparse_start_rk(
+                    &ep,
+                    &acc,
+                    &sel.idx,
+                    &s.union_idx,
+                    cap,
+                    &mut s.sparse.send,
+                )
                 .unwrap();
+                sink += compute_burn(&acc);
+                pending
+                    .finish_sparse(union_len, &net, &mut s.sparse, &mut s.reduced)
+                    .unwrap();
+            } else {
+                let pending =
+                    value_reduce_union_start_rk(&ep, collective, &acc, &s.union_idx, &mut s.send)
+                        .unwrap();
+                sink += compute_burn(&acc);
+                pending
+                    .finish(union_len, &net, &mut s.shards, &mut s.reduced)
+                    .unwrap();
+            }
         } else {
             allgather_sparse_rk(
                 &ep,
@@ -149,17 +179,31 @@ fn rank_loop(
             )
             .unwrap();
             sink += compute_burn(&acc);
-            value_reduce_union_rk(
-                &ep,
-                collective,
-                &acc,
-                &s.union_idx,
-                &net,
-                &mut s.send,
-                &mut s.shards,
-                &mut s.reduced,
-            )
-            .unwrap();
+            if let Some(cap) = sparse_shard_k {
+                value_reduce_union_sparse_rk(
+                    &ep,
+                    &acc,
+                    &sel.idx,
+                    &s.union_idx,
+                    cap,
+                    &net,
+                    &mut s.sparse,
+                    &mut s.reduced,
+                )
+                .unwrap();
+            } else {
+                value_reduce_union_rk(
+                    &ep,
+                    collective,
+                    &acc,
+                    &s.union_idx,
+                    &net,
+                    &mut s.send,
+                    &mut s.shards,
+                    &mut s.reduced,
+                )
+                .unwrap();
+            }
             sink += compute_burn(&acc);
         }
         ep.allgather_f64_fold(rank as f64, 0.0f64, |a, x| a.max(x))
@@ -203,6 +247,7 @@ impl Row {
 
 /// Run the steady loop on a pre-built cluster of any transport; rank 0
 /// owns the counting window and the wall clock.
+#[allow(clippy::too_many_arguments)]
 fn bench_cluster(
     mode: String,
     tps: Vec<Arc<dyn Transport>>,
@@ -210,6 +255,7 @@ fn bench_cluster(
     steady: usize,
     pipeline: bool,
     collective: CollectiveKind,
+    sparse_shard_k: Option<usize>,
 ) -> Row {
     let n = tps.len();
     ENABLED.store(false, Ordering::SeqCst);
@@ -218,7 +264,16 @@ fn bench_cluster(
     let mut handles = Vec::with_capacity(n);
     for (rank, tp) in tps.into_iter().enumerate() {
         handles.push(std::thread::spawn(move || {
-            rank_loop(rank, n, tp.as_ref(), warmup, steady, pipeline, collective)
+            rank_loop(
+                rank,
+                n,
+                tp.as_ref(),
+                warmup,
+                steady,
+                pipeline,
+                collective,
+                sparse_shard_k,
+            )
         }));
     }
     let mut wall = Duration::ZERO;
@@ -278,14 +333,24 @@ fn main() {
         for n in [2usize, 8, 16] {
             let ag = CollectiveKind::Allgather;
             let rs = CollectiveKind::Rsag;
-            let blocking = bench_cluster(mode.to_string(), mk(n), *warmup, *rounds, false, ag);
+            let blocking =
+                bench_cluster(mode.to_string(), mk(n), *warmup, *rounds, false, ag, None);
             blocking.print();
-            let piped = bench_cluster(format!("{mode}+pipe"), mk(n), *warmup, *rounds, true, ag);
+            let piped =
+                bench_cluster(format!("{mode}+pipe"), mk(n), *warmup, *rounds, true, ag, None);
             piped.print();
-            let rsag = bench_cluster(format!("{mode}+rsag"), mk(n), *warmup, *rounds, false, rs);
+            let rsag =
+                bench_cluster(format!("{mode}+rsag"), mk(n), *warmup, *rounds, false, rs, None);
             rsag.print();
-            let rsag_piped =
-                bench_cluster(format!("{mode}+pipe+rsag"), mk(n), *warmup, *rounds, true, rs);
+            let rsag_piped = bench_cluster(
+                format!("{mode}+pipe+rsag"),
+                mk(n),
+                *warmup,
+                *rounds,
+                true,
+                rs,
+                None,
+            );
             rsag_piped.print();
             let hidden_us = (blocking.us_per_round() - piped.us_per_round()).max(0.0);
             json_rows.push(format!(
@@ -340,6 +405,78 @@ fn main() {
     match std::fs::write("BENCH_collective.json", &json) {
         Ok(()) => eprintln!("# collective sweep -> BENCH_collective.json"),
         Err(e) => eprintln!("# could not write BENCH_collective.json: {e}"),
+    }
+
+    // dense-vs-sparse rsag sweep (ISSUE 8): the same union, but the
+    // value reduce ships `(index, value)` entry lists with the per-hop
+    // cap `K/n`, so a rank receives 2(n-1)/n·n·(K/n)·8 = 2(n-1)·(K/n)·8
+    // entry bytes instead of the dense union's 2(n-1)·K·4 — a 2/n
+    // ratio, asserted below for every audited n
+    println!("\n# dense vs truly sparse rsag (cap = K/n per shard): '+sparse' rows ship entry lists");
+    println!("mode,ranks,rounds,us_per_round,allocs_per_round,bytes_per_round");
+    let mut sparse_rows = Vec::new();
+    for (mode, warmup, rounds, mk) in &modes {
+        for n in [4usize, 8, 16] {
+            let shard_k = K_PER_RANK / n;
+            let rs = CollectiveKind::Rsag;
+            let dense =
+                bench_cluster(format!("{mode}+rsag"), mk(n), *warmup, *rounds, false, rs, None);
+            dense.print();
+            let sparse = bench_cluster(
+                format!("{mode}+rsag+sparse"),
+                mk(n),
+                *warmup,
+                *rounds,
+                false,
+                rs,
+                Some(shard_k),
+            );
+            sparse.print();
+            let sparse_piped = bench_cluster(
+                format!("{mode}+pipe+rsag+sparse"),
+                mk(n),
+                *warmup,
+                *rounds,
+                true,
+                rs,
+                Some(shard_k),
+            );
+            sparse_piped.print();
+            let m = CostModel::paper_testbed(n);
+            let v = n * K_PER_RANK * CostModel::DENSE_ENTRY_BYTES;
+            let entries = n * shard_k; // post-cap live entries per round
+            let dense_recv = m.rsag_recv_bytes_per_rank(v);
+            let sparse_recv = m.rsag_sparse_recv_bytes_per_rank(entries);
+            assert!(
+                sparse_recv < dense_recv,
+                "{mode} n={n}: sparse rsag must receive fewer bytes per rank \
+                 ({sparse_recv} vs {dense_recv})"
+            );
+            assert!(
+                sparse_recv <= 2 * K_PER_RANK * CostModel::SPARSE_ENTRY_BYTES,
+                "{mode} n={n}: per-rank sparse receive {sparse_recv} exceeds the 2k-entry bound"
+            );
+            sparse_rows.push(format!(
+                "    {{\"mode\": \"{mode}\", \"ranks\": {n}, \"rounds\": {rounds}, \
+                 \"shard_k\": {shard_k}, \
+                 \"us_per_round_rsag_dense\": {:.3}, \"us_per_round_rsag_sparse\": {:.3}, \
+                 \"us_per_round_rsag_sparse_pipelined\": {:.3}, \
+                 \"dense_recv_bytes_per_rank\": {dense_recv}, \
+                 \"sparse_recv_bytes_per_rank\": {sparse_recv}}}",
+                dense.us_per_round(),
+                sparse.us_per_round(),
+                sparse_piped.us_per_round(),
+            ));
+        }
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"transport_hotpath\",\n  \"k_per_rank\": {K_PER_RANK},\n  \
+         \"burn_iters\": {BURN_ITERS},\n  \"quick\": {quick},\n  \"rows\": [\n{}\n  ]\n}}\n",
+        sparse_rows.join(",\n")
+    );
+    match std::fs::write("BENCH_sparse.json", &json) {
+        Ok(()) => eprintln!("# dense-vs-sparse sweep -> BENCH_sparse.json"),
+        Err(e) => eprintln!("# could not write BENCH_sparse.json: {e}"),
     }
 
     // modeled star-vs-ring wire asymmetry for the same payload: what

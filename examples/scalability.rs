@@ -53,6 +53,19 @@
 //! cargo run --release -- launch --world-size 4 --collective rsag --iters 100 --out trace.csv
 //! ```
 //!
+//! Add `--sparse-shards` on top of `--collective rsag` (or
+//! `sparse_shards = true` in TOML) to make the shards truly sparse:
+//! the value reduce carries `(index, value)` entry lists holding only
+//! each rank's own selections instead of dense union-length shards, so
+//! real received volume shrinks to `2(n-1)/n·E` entries. `--shard-k N`
+//! caps every hop's entry list with a re-top-k whose discarded mass
+//! feeds back into error feedback (default: automatic `ceil(max_k/n)`):
+//!
+//! ```text
+//! cargo run --release -- launch --world-size 4 --collective rsag \
+//!     --sparse-shards --iters 100 --out trace.csv
+//! ```
+//!
 //! Add `--obs-trace spans.json` to either form (and to `sim`, or
 //! `trace_path` in the TOML `[obs]` section) to record a
 //! chrome://tracing span timeline — compute/select and round

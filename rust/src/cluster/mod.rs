@@ -75,6 +75,15 @@
 //! all-gathered — per-rank received volume `2(n-1)/n·V` instead of
 //! `(n-1)·V`, with the modeled clock unchanged (it always charged the
 //! rsag-shaped `2(n-1)·α + 2(n-1)/n·V·β` form).
+//! With `--sparse-shards` the rsag round sheds its dense padding too:
+//! shards travel as `(index, value)` entry lists holding only live
+//! selections ([`Transport::rsag_sparse`], split-phase via
+//! [`PendingSparseReduce`], wire form [`net::codec::Frame::SparseShard`]),
+//! an optional per-hop re-top-k (`--shard-k`) caps every hop and its
+//! discards return to the contributing rank as an error-feedback
+//! residual — so per-rank received volume drops from dense
+//! `2(n-1)/n·V` toward the live-entry volume
+//! ([`CostModel::rsag_sparse_recv_bytes_per_rank`]).
 //! `rust/tests/engine_parity.rs` pins trace equality across every
 //! execution mode, including real multi-process star and ring runs.
 //!
@@ -94,8 +103,8 @@ pub use engine::{
 pub use net::{NetCfg, RingTransport, TcpTransport};
 pub use ring_local::RingLocal;
 pub use transport::{
-    Endpoint, FloatBufPool, LocalTransport, Message, PendingReduce, PendingRound, RoundToken,
-    Transport,
+    Endpoint, FloatBufPool, LocalTransport, Message, PendingReduce, PendingRound,
+    PendingSparseReduce, RoundToken, SparseBufPool, SparseRound, Transport,
 };
 pub use worker::SimWorker;
 

@@ -32,6 +32,7 @@
 //! buffer instead of allocating per frame.
 
 use crate::cluster::transport::Message;
+use crate::collectives::SparseVec;
 use crate::coordinator::SelectOutput;
 use crate::error::{Error, Result};
 use std::io::{Read, Write};
@@ -42,8 +43,10 @@ pub const MAGIC: u32 = 0x4558_4459;
 
 /// Wire protocol version; bumped on any layout change (v2 added the
 /// ring-rendezvous frames: `HelloRing`, `WelcomeRing`, `RingLink`; v3
-/// added the reduce-scatter [`Frame::Shard`] frame).
-pub const PROTOCOL_VERSION: u16 = 3;
+/// added the reduce-scatter [`Frame::Shard`] frame; v4 added the truly
+/// sparse forms: the [`Message::Sparse`] entry-list payload and the
+/// [`Frame::SparseShard`] ring hop).
+pub const PROTOCOL_VERSION: u16 = 4;
 
 /// Hard cap on one frame's payload — guards allocation on corrupt
 /// length fields (a selection frame at this size would be ~16M entries,
@@ -128,6 +131,27 @@ pub enum Frame {
         /// The chunk's values (partial sums or the reduced shard).
         vals: Vec<f32>,
     },
+    /// One **sparse** reduce-scatter → all-gather hop (protocol v4,
+    /// `--sparse-shards`): the `(index, value)` entries of one shard's
+    /// partial (or reduced) list, forwarded right. Indices are
+    /// *shard-local* (`global − shard_start`), strictly increasing and
+    /// `< shard_len` — the decoder rejects anything else as a typed
+    /// [`Error::Protocol`] before any reduce touches the entries.
+    SparseShard {
+        /// Round counter (must match the receiver's current round).
+        generation: u64,
+        /// Hop number within the round's 2(n-1)-step schedule.
+        step: u32,
+        /// Which index shard these entries belong to.
+        chunk: u32,
+        /// The shard's length — the exclusive bound every index must
+        /// respect (carried so validation needs no out-of-band state).
+        shard_len: u32,
+        /// Shard-local positions, strictly increasing.
+        idx: Vec<u32>,
+        /// Values aligned with `idx`.
+        vals: Vec<f32>,
+    },
 }
 
 impl Frame {
@@ -136,12 +160,18 @@ impl Frame {
     /// [`CostModel`](crate::collectives::CostModel) link-byte
     /// predictions share: the message's entry bytes for [`Frame::Data`],
     /// 4 B per value for [`Frame::Shard`], and 0 for handshake/control
-    /// frames (they move protocol state, not gradient payload).
+    /// frames (they move protocol state, not gradient payload). A
+    /// [`Frame::SparseShard`] charges
+    /// [`SPARSE_ENTRY_BYTES`](crate::collectives::CostModel::SPARSE_ENTRY_BYTES)
+    /// per entry.
     pub fn payload_bytes(&self) -> usize {
         match self {
             Frame::Data { msg, .. } => msg.payload_bytes(),
             Frame::Shard { vals, .. } => {
                 vals.len() * crate::collectives::CostModel::DENSE_ENTRY_BYTES
+            }
+            Frame::SparseShard { idx, .. } => {
+                idx.len() * crate::collectives::CostModel::SPARSE_ENTRY_BYTES
             }
             _ => 0,
         }
@@ -157,10 +187,35 @@ const KIND_HELLO_RING: u8 = 5;
 const KIND_WELCOME_RING: u8 = 6;
 const KIND_RING_LINK: u8 = 7;
 const KIND_SHARD: u8 = 8;
+const KIND_SPARSE_SHARD: u8 = 9;
 
 const MSG_SELECTION: u8 = 0;
 const MSG_FLOATS: u8 = 1;
 const MSG_SCALAR: u8 = 2;
+const MSG_SPARSE: u8 = 3;
+
+/// Validate a decoded sparse index slab: strictly increasing and, when
+/// the exclusive `bound` is known, within it. Runs *before* any reduce
+/// touches the entries, so a hostile or bit-flipped frame dies here as
+/// a typed [`Error::Protocol`], never as a panic deeper in the shard
+/// arithmetic. (Indices being sorted, the last one is the maximum — one
+/// comparison settles the bound.)
+fn check_sparse_idx(idx: &[u32], bound: Option<u32>, what: &str) -> Result<()> {
+    if let Some(bad) = idx.windows(2).find(|w| w[0] >= w[1]) {
+        return Err(Error::protocol(format!(
+            "{what} indices must be strictly increasing (got {} then {})",
+            bad[0], bad[1]
+        )));
+    }
+    if let (Some(b), Some(&last)) = (bound, idx.last()) {
+        if last >= b {
+            return Err(Error::protocol(format!(
+                "{what} index {last} out of shard bounds (shard_len {b})"
+            )));
+        }
+    }
+    Ok(())
+}
 
 const FNV_SEED: u32 = 0x811C_9DC5;
 
@@ -337,6 +392,12 @@ fn encode_message(buf: &mut Vec<u8>, msg: &Message) {
             buf.push(MSG_SCALAR);
             put_f64(buf, *x);
         }
+        Message::Sparse(s) => {
+            buf.push(MSG_SPARSE);
+            put_u32(buf, s.idx.len() as u32);
+            put_u32_slab(buf, &s.idx);
+            put_f32_slab(buf, &s.val);
+        }
     }
 }
 
@@ -364,6 +425,21 @@ fn decode_message(c: &mut Cursor<'_>) -> Result<Message> {
             Ok(Message::Floats(Arc::new(v)))
         }
         MSG_SCALAR => Ok(Message::Scalar(c.f64("scalar")?)),
+        MSG_SPARSE => {
+            let n = c.u32("sparse count")? as usize;
+            // idx + val slabs: 8 bytes per declared entry, proven
+            // present before either vector is allocated
+            let total = n
+                .checked_mul(8)
+                .ok_or_else(|| Error::protocol("sparse count overflows"))?;
+            c.require(total, "sparse payload")?;
+            let idx = c.u32_slab(n, "sparse indices")?;
+            let val = c.f32_slab(n, "sparse values")?;
+            // positions bound against the round's union at the
+            // transport layer, where the union length is known
+            check_sparse_idx(&idx, None, "sparse message")?;
+            Ok(Message::Sparse(Arc::new(SparseVec { idx, val })))
+        }
         other => Err(Error::protocol(format!("unknown message kind {other}"))),
     }
 }
@@ -422,6 +498,23 @@ fn encode_payload_into(frame: &Frame, buf: &mut Vec<u8>) -> u8 {
             put_u32(buf, vals.len() as u32);
             put_f32_slab(buf, vals);
             KIND_SHARD
+        }
+        Frame::SparseShard {
+            generation,
+            step,
+            chunk,
+            shard_len,
+            idx,
+            vals,
+        } => {
+            put_u64(buf, *generation);
+            put_u32(buf, *step);
+            put_u32(buf, *chunk);
+            put_u32(buf, *shard_len);
+            put_u32(buf, idx.len() as u32);
+            put_u32_slab(buf, idx);
+            put_f32_slab(buf, vals);
+            KIND_SPARSE_SHARD
         }
     }
 }
@@ -487,6 +580,28 @@ fn decode_payload(kind: u8, payload: &[u8]) -> Result<Frame> {
                 vals,
             }
         }
+        KIND_SPARSE_SHARD => {
+            let generation = c.u64("sparse-shard generation")?;
+            let step = c.u32("sparse-shard step")?;
+            let chunk = c.u32("sparse-shard chunk")?;
+            let shard_len = c.u32("sparse-shard length")?;
+            let n = c.u32("sparse-shard count")? as usize;
+            let total = n
+                .checked_mul(8)
+                .ok_or_else(|| Error::protocol("sparse-shard count overflows"))?;
+            c.require(total, "sparse-shard payload")?;
+            let idx = c.u32_slab(n, "sparse-shard indices")?;
+            let vals = c.f32_slab(n, "sparse-shard values")?;
+            check_sparse_idx(&idx, Some(shard_len), "sparse-shard")?;
+            Frame::SparseShard {
+                generation,
+                step,
+                chunk,
+                shard_len,
+                idx,
+                vals,
+            }
+        }
         other => return Err(Error::protocol(format!("unknown frame kind {other}"))),
     };
     c.finish("frame payload")?;
@@ -541,6 +656,40 @@ pub fn encode_shard_append(
     put_u32(buf, step);
     put_u32(buf, chunk);
     put_u32(buf, vals.len() as u32);
+    put_f32_slab(buf, vals);
+    let len = (buf.len() - body_start) as u32;
+    buf[frame_start + 7..frame_start + 11].copy_from_slice(&len.to_le_bytes());
+    let check = fnv1a(&buf[frame_start..]);
+    put_u32(buf, check);
+}
+
+/// Append one [`Frame::SparseShard`]'s complete wire bytes straight
+/// from `(idx, vals)` slices — byte-identical to `encode_frame_append`
+/// on the equivalent frame, without building it (the ring transport's
+/// sparse reduce-scatter hot path encodes partial entry lists out of
+/// reusable buffers without a `Vec` per hop). `idx` is shard-local.
+pub fn encode_sparse_shard_append(
+    buf: &mut Vec<u8>,
+    generation: u64,
+    step: u32,
+    chunk: u32,
+    shard_len: u32,
+    idx: &[u32],
+    vals: &[f32],
+) {
+    debug_assert_eq!(idx.len(), vals.len());
+    let frame_start = buf.len();
+    put_u32(buf, MAGIC);
+    put_u16(buf, PROTOCOL_VERSION);
+    buf.push(KIND_SPARSE_SHARD);
+    put_u32(buf, 0); // payload length, patched below
+    let body_start = buf.len();
+    put_u64(buf, generation);
+    put_u32(buf, step);
+    put_u32(buf, chunk);
+    put_u32(buf, shard_len);
+    put_u32(buf, idx.len() as u32);
+    put_u32_slab(buf, idx);
     put_f32_slab(buf, vals);
     let len = (buf.len() - body_start) as u32;
     buf[frame_start + 7..frame_start + 11].copy_from_slice(&len.to_le_bytes());
@@ -720,8 +869,21 @@ mod tests {
         }
     }
 
+    /// `n` strictly increasing positions with random gaps — the only
+    /// index shape the sparse decoders accept.
+    fn gen_sparse_idx(rng: &mut Rng, n: usize) -> Vec<u32> {
+        let mut idx = Vec::with_capacity(n);
+        let mut next = 0u32;
+        for _ in 0..n {
+            next += rng.usize(3) as u32;
+            idx.push(next);
+            next += 1;
+        }
+        idx
+    }
+
     fn gen_message(rng: &mut Rng) -> Message {
-        match rng.usize(3) {
+        match rng.usize(4) {
             0 => {
                 let n = rng.usize(40); // 0 => empty selection
                 let idx: Vec<u32> = (0..n).map(|_| rng.next_u64() as u32).collect();
@@ -731,6 +893,12 @@ mod tests {
             1 => {
                 let n = rng.usize(40);
                 Message::Floats(Arc::new((0..n).map(|_| gen_f32(rng)).collect()))
+            }
+            2 => {
+                let n = rng.usize(40); // 0 => empty entry list
+                let idx = gen_sparse_idx(rng, n);
+                let val: Vec<f32> = (0..n).map(|_| gen_f32(rng)).collect();
+                Message::Sparse(Arc::new(SparseVec { idx, val }))
             }
             _ => Message::Scalar(if rng.usize(4) == 0 {
                 f64::NAN
@@ -743,7 +911,7 @@ mod tests {
     impl Strategy for FrameStrat {
         type Value = Frame;
         fn gen(&self, rng: &mut Rng) -> Frame {
-            match rng.usize(10) {
+            match rng.usize(11) {
                 0 | 1 => Frame::Data {
                     generation: rng.next_u64(),
                     msg: gen_message(rng),
@@ -754,6 +922,19 @@ mod tests {
                     chunk: rng.usize(16) as u32,
                     vals: (0..rng.usize(40)).map(|_| gen_f32(rng)).collect(),
                 },
+                9 => {
+                    let n = rng.usize(40);
+                    let idx = gen_sparse_idx(rng, n);
+                    let shard_len = idx.last().map_or(0, |&l| l + 1) + rng.usize(8) as u32;
+                    Frame::SparseShard {
+                        generation: rng.next_u64(),
+                        step: rng.usize(16) as u32,
+                        chunk: rng.usize(16) as u32,
+                        shard_len,
+                        idx,
+                        vals: (0..n).map(|_| gen_f32(rng)).collect(),
+                    }
+                }
                 2 => Frame::Hello {
                     world: rng.usize(64) as u32,
                     rank: rng.usize(64) as u32,
@@ -1056,6 +1237,163 @@ mod tests {
     }
 
     #[test]
+    fn sparse_shard_frames_roundtrip_and_match_the_slice_encoder() {
+        let idx = vec![0u32, 3, 4, 9];
+        let vals = vec![1.5f32, f32::from_bits(0x7FC0_1234), -0.0, 3.25];
+        let f = Frame::SparseShard {
+            generation: 9,
+            step: 2,
+            chunk: 1,
+            shard_len: 10,
+            idx: idx.clone(),
+            vals: vals.clone(),
+        };
+        let bytes = encode_frame(&f);
+        // canonical-bytes round trip (PartialEq can't see through NaN)
+        let decoded = decode_frame(&bytes).unwrap();
+        assert_eq!(encode_frame(&decoded), bytes);
+        match decoded {
+            Frame::SparseShard {
+                generation,
+                step,
+                chunk,
+                shard_len,
+                idx: gi,
+                vals: gv,
+            } => {
+                assert_eq!((generation, step, chunk, shard_len), (9, 2, 1, 10));
+                assert_eq!(gi, idx);
+                let gv: Vec<u32> = gv.iter().map(|x| x.to_bits()).collect();
+                let want: Vec<u32> = vals.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(gv, want, "NaN payload bits must survive");
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+        // the slice encoder is byte-identical — it IS the ring hot path
+        let mut direct = vec![0x5Au8; 3]; // dirty reusable buffer
+        encode_sparse_shard_append(&mut direct, 9, 2, 1, 10, &idx, &vals);
+        assert_eq!(&direct[3..], &bytes[..]);
+        for k in 0..bytes.len() {
+            assert!(
+                decode_frame(&bytes[..k]).is_err(),
+                "truncated sparse-shard frame at {k} must be rejected"
+            );
+        }
+        // an empty entry list is a legal hop (a rank with nothing
+        // selected in this shard still forwards)
+        let empty = Frame::SparseShard {
+            generation: 1,
+            step: 0,
+            chunk: 0,
+            shard_len: 5,
+            idx: vec![],
+            vals: vec![],
+        };
+        assert_eq!(decode_frame(&encode_frame(&empty)).unwrap(), empty);
+    }
+
+    /// Hand-build a checksummed sparse-shard frame from a raw payload —
+    /// the only way to get hostile indices past the FNV check and into
+    /// the index validator.
+    fn sparse_shard_frame_from_payload(payload: &[u8]) -> Vec<u8> {
+        let mut frame = Vec::new();
+        put_u32(&mut frame, MAGIC);
+        put_u16(&mut frame, PROTOCOL_VERSION);
+        frame.push(KIND_SPARSE_SHARD);
+        put_u32(&mut frame, payload.len() as u32);
+        frame.extend_from_slice(payload);
+        let check = fnv1a(&frame);
+        put_u32(&mut frame, check);
+        frame
+    }
+
+    #[test]
+    fn hostile_sparse_shard_count_rejected_before_allocation() {
+        // claiming 50M entries (~400 MB) with an empty body
+        let mut payload = Vec::new();
+        put_u64(&mut payload, 0); // generation
+        put_u32(&mut payload, 0); // step
+        put_u32(&mut payload, 0); // chunk
+        put_u32(&mut payload, 100); // shard_len
+        put_u32(&mut payload, 50_000_000);
+        let err = decode_frame(&sparse_shard_frame_from_payload(&payload)).unwrap_err();
+        assert!(matches!(err, Error::Protocol(_)), "{err}");
+        assert!(err.to_string().contains("remain"), "{err}");
+    }
+
+    #[test]
+    fn non_increasing_and_out_of_bounds_sparse_indices_rejected() {
+        let build = |idx: &[u32], shard_len: u32| {
+            let mut payload = Vec::new();
+            put_u64(&mut payload, 7); // generation
+            put_u32(&mut payload, 1); // step
+            put_u32(&mut payload, 2); // chunk
+            put_u32(&mut payload, shard_len);
+            put_u32(&mut payload, idx.len() as u32);
+            put_u32_slab(&mut payload, idx);
+            put_f32_slab(&mut payload, &vec![1.0f32; idx.len()]);
+            sparse_shard_frame_from_payload(&payload)
+        };
+        // out of order
+        let err = decode_frame(&build(&[0, 5, 3], 10)).unwrap_err();
+        assert!(matches!(err, Error::Protocol(_)), "{err}");
+        assert!(err.to_string().contains("strictly increasing"), "{err}");
+        // duplicate
+        let err = decode_frame(&build(&[0, 3, 3], 10)).unwrap_err();
+        assert!(err.to_string().contains("strictly increasing"), "{err}");
+        // past the declared shard length (== and >)
+        for bad in [10u32, 11, 1_000_000] {
+            let err = decode_frame(&build(&[0, 3, bad], 10)).unwrap_err();
+            assert!(matches!(err, Error::Protocol(_)), "{err}");
+            assert!(err.to_string().contains("out of shard bounds"), "{err}");
+        }
+        // the boundary cases stay legal
+        assert!(decode_frame(&build(&[0, 3, 9], 10)).is_ok());
+        assert!(decode_frame(&build(&[], 0)).is_ok());
+        // a sparse *message* with unsorted positions is equally typed
+        let mut payload = Vec::new();
+        put_u64(&mut payload, 0); // generation
+        payload.push(MSG_SPARSE);
+        put_u32(&mut payload, 2);
+        put_u32_slab(&mut payload, &[4, 4]);
+        put_f32_slab(&mut payload, &[1.0, 2.0]);
+        let mut frame = Vec::new();
+        put_u32(&mut frame, MAGIC);
+        put_u16(&mut frame, PROTOCOL_VERSION);
+        frame.push(KIND_DATA);
+        put_u32(&mut frame, payload.len() as u32);
+        frame.extend_from_slice(&payload);
+        let check = fnv1a(&frame);
+        put_u32(&mut frame, check);
+        let err = decode_frame(&frame).unwrap_err();
+        assert!(matches!(err, Error::Protocol(_)), "{err}");
+        assert!(err.to_string().contains("strictly increasing"), "{err}");
+    }
+
+    #[test]
+    fn every_single_byte_flip_on_a_sparse_shard_is_rejected() {
+        let f = Frame::SparseShard {
+            generation: 3,
+            step: 1,
+            chunk: 0,
+            shard_len: 8,
+            idx: vec![1, 4, 6],
+            vals: vec![1.5, -2.5, 0.0],
+        };
+        let bytes = encode_frame(&f);
+        for pos in 0..bytes.len() {
+            for flip in [0x01u8, 0x80] {
+                let mut c = bytes.clone();
+                c[pos] ^= flip;
+                assert!(
+                    decode_frame(&c).is_err(),
+                    "flip {flip:#x} at byte {pos} must be rejected"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn two_frames_stream_back_to_back_through_one_scratch_buffer() {
         let a = Frame::Hello { world: 4, rank: 2 };
         let b = Frame::Welcome { world: 4 };
@@ -1103,6 +1441,23 @@ mod tests {
             vals: vec![0.0; 6],
         };
         assert_eq!(shard.payload_bytes(), 6 * 4);
+        let sparse = Frame::SparseShard {
+            generation: 0,
+            step: 0,
+            chunk: 0,
+            shard_len: 16,
+            idx: vec![0, 5, 9],
+            vals: vec![0.0; 3],
+        };
+        assert_eq!(sparse.payload_bytes(), 3 * 8);
+        let sparse_msg = Frame::Data {
+            generation: 0,
+            msg: Message::Sparse(Arc::new(SparseVec {
+                idx: vec![2, 7],
+                val: vec![0.0; 2],
+            })),
+        };
+        assert_eq!(sparse_msg.payload_bytes(), 2 * 8);
         assert_eq!(Frame::Abort.payload_bytes(), 0, "control frames carry none");
         assert_eq!(Frame::Hello { world: 2, rank: 1 }.payload_bytes(), 0);
     }

@@ -4,12 +4,15 @@
 //! This is the subsystem that takes the cluster engine across process
 //! (and host) boundaries, std-only:
 //!
-//! * [`codec`] — length-prefixed little-endian framing (protocol v3)
+//! * [`codec`] — length-prefixed little-endian framing (protocol v4)
 //!   with a magic/version header and FNV-1a checksum for every
-//!   [`Message`] variant plus the handshake frames and the
+//!   [`Message`] variant plus the handshake frames, the
 //!   [`Frame::Shard`] frame carrying one reduced value shard of a
-//!   reduce-scatter → all-gather round; NaN payloads round-trip
-//!   bit-exactly, corrupt frames surface
+//!   reduce-scatter → all-gather round, and the v4
+//!   [`Frame::SparseShard`] frame carrying one `--sparse-shards` hop's
+//!   `(index, value)` entry list (shard-local strictly-increasing
+//!   indices, counts validated before allocation); NaN payloads
+//!   round-trip bit-exactly, corrupt frames surface
 //!   [`Error::Protocol`](crate::error::Error::Protocol), never panics.
 //! * [`handshake`] — rank 0 listens as the rendezvous hub; ranks 1..n
 //!   dial in, claim their rank (world size, protocol version and
@@ -24,7 +27,11 @@
 //!   finish — clients' bytes pile up in the kernel buffers meanwhile).
 //!   Reduce-scatter → all-gather rounds are hub-reduced: the hub
 //!   reduces each rank's shard in canonical order and broadcasts the n
-//!   reduced [`Frame::Shard`]s instead of the full board.
+//!   reduced [`Frame::Shard`]s instead of the full board. Under
+//!   `--sparse-shards` the clients ship [`Frame::SparseShard`] entry
+//!   lists, the hub runs the canonical sparse merge (with the per-hop
+//!   cap), returns the reduced entry list, and routes each rank's
+//!   re-top-k residual back to it.
 //! * [`ring`] — [`RingTransport`]: chunked ring all-gather (every rank
 //!   forwards `n - 1` generation-stamped chunks to its right
 //!   neighbor), with the same deadline/abort semantics; rank 0 is only
@@ -33,7 +40,10 @@
 //!   assumes. Its reduce-scatter → all-gather is the textbook
 //!   two-sweep ring: `n - 1` reduce-scatter steps accumulating shard
 //!   partials in canonical order, then `n - 1` all-gather steps moving
-//!   only reduced shards — `2(n-1)/n·V` per link per round.
+//!   only reduced shards — `2(n-1)/n·V` per link per round. Under
+//!   `--sparse-shards` the same hop schedule forwards
+//!   [`Frame::SparseShard`] entry lists (indices re-based shard-local
+//!   on the wire), shrinking each hop to its live entries.
 //!
 //! The `exdyna launch` CLI subcommand runs one rank per process over
 //! either socket transport (`--transport tcp|ring`; it forks the whole

@@ -64,19 +64,38 @@
 //! receive-before-send ordering in both phases, so the deadlock-freedom
 //! argument above carries over unchanged.
 //!
+//! Under `--sparse-shards` the same 2(n-1)-hop schedule runs with
+//! [`Frame::SparseShard`] hops instead: each hop carries only a
+//! shard's live `(index, value)` entries (indices re-based to
+//! shard-local on the wire, back to global on receive), so a hop costs
+//! `entries · 8 B` instead of `shard_len · 4 B`. The injector re-top-ks
+//! its own slice *before* the step-0 send when `shard_k > 0`, every
+//! rank re-top-ks the merged partial before forwarding, and each cap's
+//! discards stay on the capping rank as its residual (canonicalized at
+//! complete) — exactly the [`reduce_sparse_shard_with`] schedule, so
+//! the reduced entries and residuals are bit-identical to every other
+//! transport ([`CostModel::rsag_sparse_link_bytes_ring`] predicts the
+//! uncapped per-link volume).
+//!
+//! [`reduce_sparse_shard_with`]: crate::collectives::reduce_sparse_shard_with
+//! [`CostModel::rsag_sparse_link_bytes_ring`]: crate::collectives::CostModel::rsag_sparse_link_bytes_ring
 //! [`TcpTransport`]: crate::cluster::net::tcp::TcpTransport
 //! [`CostModel::allgather_star`]: crate::collectives::CostModel::allgather_star
 //! [`CostModel::rsag_link_bytes_ring`]: crate::collectives::CostModel::rsag_link_bytes_ring
 //! [NetCfg]: crate::cluster::net::handshake::NetCfg
 
 use crate::cluster::net::codec::{
-    encode_frame, encode_frame_append, encode_shard_append, read_frame, read_frame_counted,
-    write_bytes, write_frame, Frame,
+    encode_frame, encode_frame_append, encode_shard_append, encode_sparse_shard_append,
+    read_frame, read_frame_counted, write_bytes, write_frame, Frame,
 };
 use crate::cluster::net::handshake::NetCfg;
-use crate::cluster::transport::{FloatBufPool, Message, RoundToken, Transport};
+use crate::cluster::transport::{FloatBufPool, Message, RoundToken, SparseRound, Transport};
 use crate::cluster::CollectiveKind;
 use crate::collectives::allreduce::shard_bounds;
+use crate::collectives::sparse::{
+    canonicalize_residual, merge_add_sparse, reduce_sparse_contributions_with, retain_top_k,
+    SparseReduceScratch, SparseVec,
+};
 use crate::collectives::CostModel;
 use crate::error::{Error, Result};
 use crate::obs::{FlightRecorder, ObsCounters, RecKind};
@@ -110,6 +129,21 @@ struct RingState {
     /// `true` between a split-phase begin and its complete/abandon —
     /// rejects double-starts (one outstanding round per rank).
     pending: bool,
+    /// Sparse-rsag injector-slice staging buffer (begin and rank 0's
+    /// deferred step-0 send build the capped slice here).
+    sv_send: SparseVec,
+    /// Entries the begin-time injector cap discarded, carried until
+    /// complete hands over the caller's residual buffer (one
+    /// outstanding round per rank, so one stash suffices).
+    residual_stash: SparseVec,
+    /// [`retain_top_k`] permutation scratch, reused across hops.
+    perm: Vec<u32>,
+    /// Global → shard-local index staging for outgoing sparse hops.
+    rebase: Vec<u32>,
+    /// Sparse-rsag phase-2 staging: reduced entry lists per chunk, so
+    /// the output can be assembled in position order. Grown lazily to
+    /// `n`, cleared every round.
+    shard_parts: Vec<SparseVec>,
 }
 
 /// Ring transport for one process-local rank of an n-rank cluster.
@@ -482,6 +516,11 @@ impl RingTransport {
                 enc_buf: Vec::new(),
                 dec_buf: Vec::new(),
                 pending: false,
+                sv_send: SparseVec::new(),
+                residual_stash: SparseVec::new(),
+                perm: Vec::new(),
+                rebase: Vec::new(),
+                shard_parts: Vec::new(),
             }),
             shutdown_handles: Vec::new(),
             poisoned: AtomicBool::new(false),
@@ -503,6 +542,11 @@ impl RingTransport {
                 enc_buf: Vec::new(),
                 dec_buf: Vec::new(),
                 pending: false,
+                sv_send: SparseVec::new(),
+                residual_stash: SparseVec::new(),
+                perm: Vec::new(),
+                rebase: Vec::new(),
+                shard_parts: Vec::new(),
             }),
             shutdown_handles,
             poisoned: AtomicBool::new(false),
@@ -691,6 +735,113 @@ impl RingTransport {
             )),
             other => Err(Error::protocol(format!(
                 "expected a reduce-scatter shard, got {other:?}"
+            ))),
+        }
+    }
+
+    /// One sparse reduce-scatter hop out: re-base the entry list's
+    /// global positions to shard-local (`bounds.0` is the shard start)
+    /// in the persistent staging buffer, encode a
+    /// [`Frame::SparseShard`] straight from the slices, and push it to
+    /// the right neighbor. A hop charges `entries · 8 B` of payload.
+    #[allow(clippy::too_many_arguments)]
+    fn send_sparse_shard(
+        &self,
+        links: &mut Links,
+        enc_buf: &mut Vec<u8>,
+        rebase: &mut Vec<u32>,
+        my_gen: u64,
+        step: usize,
+        chunk: usize,
+        bounds: (usize, usize),
+        sv: &SparseVec,
+    ) -> Result<()> {
+        let (cs, ce) = bounds;
+        rebase.clear();
+        rebase.extend(sv.idx.iter().map(|&i| i - cs as u32));
+        enc_buf.clear();
+        encode_sparse_shard_append(
+            enc_buf,
+            my_gen,
+            step as u32,
+            chunk as u32,
+            (ce - cs) as u32,
+            rebase,
+            &sv.val,
+        );
+        self.obs.frame_encoded();
+        if let Some(fr) = self.flight.get() {
+            fr.record(RecKind::SparseShard, my_gen, sv.len() as u64, 0);
+        }
+        self.write_counted(&mut links.right, enc_buf, sv.payload_bytes(), my_gen, step)
+    }
+
+    /// One sparse reduce-scatter hop in: read a [`Frame::SparseShard`]
+    /// from the left neighbor, validate its full schedule stamp (round,
+    /// step, chunk id, shard length) and re-base the shard-local
+    /// positions back to global. The codec already rejected unsorted or
+    /// out-of-shard-bounds indices as typed errors at decode.
+    fn recv_sparse_shard(
+        &self,
+        links: &mut Links,
+        dec_buf: &mut Vec<u8>,
+        my_gen: u64,
+        step: usize,
+        chunk: usize,
+        bounds: (usize, usize),
+    ) -> Result<SparseVec> {
+        let frame = self.read_counted(&mut links.left, dec_buf, my_gen, step)?;
+        match frame {
+            Frame::SparseShard {
+                generation,
+                step: got_step,
+                chunk: got_chunk,
+                shard_len,
+                mut idx,
+                vals,
+            } => {
+                if generation != my_gen {
+                    return Err(Error::protocol(format!(
+                        "generation mismatch from left neighbor: got {generation}, \
+                         expected {my_gen} — workers diverged"
+                    )));
+                }
+                if got_step as usize != step || got_chunk as usize != chunk {
+                    return Err(Error::protocol(format!(
+                        "sparse reduce-scatter schedule divergence: got chunk \
+                         {got_chunk} at step {got_step}, expected chunk {chunk} at \
+                         step {step}"
+                    )));
+                }
+                let (cs, ce) = bounds;
+                if shard_len as usize != ce - cs {
+                    return Err(Error::protocol(format!(
+                        "sparse chunk {chunk} claims shard length {shard_len}, \
+                         expected {} — union lengths diverged",
+                        ce - cs
+                    )));
+                }
+                for i in idx.iter_mut() {
+                    *i += cs as u32;
+                }
+                if let Some(fr) = self.flight.get() {
+                    fr.record(RecKind::SparseShard, my_gen, idx.len() as u64, 1);
+                }
+                Ok(SparseVec { idx, val: vals })
+            }
+            Frame::Abort => Err(Error::net(
+                "left neighbor aborted — transport poisoned by a failed worker",
+            )),
+            Frame::Shard { .. } => Err(Error::protocol(
+                "expected a sparse shard from the left neighbor, got a dense one — \
+                 workers disagree about --sparse-shards",
+            )),
+            Frame::Data { .. } => Err(Error::protocol(
+                "expected a sparse reduce-scatter shard from the left neighbor, got \
+                 a board frame — workers diverged",
+            )),
+            other => Err(Error::protocol(format!(
+                "expected a sparse reduce-scatter shard, got {other:?}"
             ))),
         }
     }
@@ -1041,6 +1192,327 @@ impl Transport for RingTransport {
         }
     }
 
+    fn rsag_sparse_begin(
+        &self,
+        rank: usize,
+        contribution: Arc<SparseVec>,
+        round: SparseRound,
+    ) -> Result<RoundToken> {
+        if rank != self.rank {
+            return Err(Error::invalid(format!(
+                "this process's transport speaks for rank {}, not rank {rank}",
+                self.rank
+            )));
+        }
+        if self.poisoned.load(Ordering::SeqCst) {
+            return Err(Error::net("transport poisoned by a failed worker"));
+        }
+        let mut guard = self.state.lock().unwrap();
+        let RingState {
+            links,
+            generation,
+            enc_buf,
+            pending,
+            sv_send,
+            residual_stash,
+            perm,
+            rebase,
+            ..
+        } = &mut *guard;
+        if *pending {
+            return Err(Error::invariant(format!(
+                "rank {} double-started a split-phase ring round (round {} is \
+                 still in flight — finish or drop it first)",
+                self.rank, *generation
+            )));
+        }
+        if let Some(&last) = contribution.idx.last() {
+            if last as usize >= round.union_len {
+                return Err(Error::invariant(format!(
+                    "rank {rank}'s sparse contribution indexes position {last}, \
+                     union length is {} — workers diverged",
+                    round.union_len
+                )));
+            }
+        }
+        let my_gen = *generation;
+        if let Some(links) = links.as_mut() {
+            if rank != 0 {
+                // same eager step-0 rationale as rsag_begin, with the
+                // sparse twist: the injector slice is re-top-k'd before
+                // it ever hits the wire, and the cap's discards wait in
+                // the stash until complete hands over the caller's
+                // residual buffer. Rank 0 stays the designated drainer
+                // and defers even this send to complete.
+                let chunk = (rank + self.n - 1) % self.n;
+                let (cs, ce) = shard_bounds(round.union_len, self.n, chunk);
+                let (ci, cv) = contribution.range(cs, ce);
+                sv_send.copy_from(ci, cv);
+                if round.shard_k > 0 && sv_send.len() > round.shard_k {
+                    retain_top_k(sv_send, round.shard_k, perm, |i, v| {
+                        residual_stash.push_entry(i, v)
+                    });
+                }
+                self.send_sparse_shard(
+                    links,
+                    enc_buf,
+                    rebase,
+                    my_gen,
+                    0,
+                    chunk,
+                    (cs, ce),
+                    sv_send,
+                )?;
+            }
+        }
+        *pending = true;
+        self.obs.round(CollectiveKind::Rsag);
+        if let Some(fr) = self.flight.get() {
+            fr.record(RecKind::RoundBegin, my_gen, 2, 0);
+        }
+        // the contribution rides the token: complete merges it into
+        // every partial that passes through this rank
+        Ok(RoundToken::deferred_with_stash(
+            my_gen,
+            Message::Sparse(contribution),
+        ))
+    }
+
+    fn rsag_sparse_complete(
+        &self,
+        rank: usize,
+        mut token: RoundToken,
+        round: SparseRound,
+        scratch: &mut SparseReduceScratch,
+        out: &mut SparseVec,
+        residual: &mut SparseVec,
+    ) -> Result<()> {
+        if rank != self.rank {
+            return Err(Error::invalid(format!(
+                "this process's transport speaks for rank {}, not rank {rank}",
+                self.rank
+            )));
+        }
+        let mut guard = self.state.lock().unwrap();
+        let RingState {
+            links,
+            generation,
+            enc_buf,
+            dec_buf,
+            pending,
+            sv_send,
+            residual_stash,
+            perm,
+            rebase,
+            shard_parts,
+            ..
+        } = &mut *guard;
+        if !*pending {
+            return Err(Error::invariant(format!(
+                "rank {} completing a ring round it never started",
+                self.rank
+            )));
+        }
+        *pending = false;
+        let my_gen = *generation;
+        if token.generation() != my_gen {
+            return Err(Error::invariant(format!(
+                "rank {} completing round {}, but the ring is at round {my_gen}",
+                self.rank,
+                token.generation()
+            )));
+        }
+        if self.poisoned.load(Ordering::SeqCst) {
+            return Err(Error::net("transport poisoned by a failed worker"));
+        }
+        let contribution = match token.take_stash() {
+            Some(Message::Sparse(v)) => v,
+            _ => {
+                return Err(Error::invariant(
+                    "ring sparse reduce token lost its stashed contribution",
+                ))
+            }
+        };
+        let n = self.n;
+        let len = round.union_len;
+        // the begin-time injector-cap discards lead this rank's
+        // residual; canonicalization at the end makes the collection
+        // order immaterial
+        residual.clear();
+        for (&i, &v) in residual_stash.idx.iter().zip(residual_stash.val.iter()) {
+            residual.push_entry(i, v);
+        }
+        residual_stash.clear();
+        let links = match links.as_mut() {
+            Some(l) => l,
+            None => {
+                // single-rank world: the canonical one-rank replay
+                reduce_sparse_contributions_with(
+                    1,
+                    len,
+                    |_| (&contribution.idx[..], &contribution.val[..]),
+                    round.shard_k,
+                    scratch,
+                    out,
+                    |_, i, v| residual.push_entry(i, v),
+                );
+                canonicalize_residual(residual, scratch);
+                *generation = my_gen.wrapping_add(1);
+                if let Some(fr) = self.flight.get() {
+                    fr.record(RecKind::RoundComplete, my_gen, 2, 0);
+                }
+                return Ok(());
+            }
+        };
+        // phase 1 — sparse reduce-scatter: same hop schedule as the
+        // dense rsag, but each hop is the shard's live entry list; the
+        // receiving rank merges its own slice into the partial
+        // (partial first — the canonical [`reduce_sparse_shard_with`]
+        // order) and re-top-ks the result before forwarding, keeping
+        // the cap's discards as its own residual. Rank 0 receives
+        // before sending in every step and defers its injector send to
+        // step 0 here, capping it exactly as begin does for the others.
+        let mut carry = SparseVec::new();
+        for step in 0..n - 1 {
+            let recv_chunk = (rank + 2 * n - 2 - step) % n;
+            let (rs, re) = shard_bounds(len, n, recv_chunk);
+            let send_chunk = (rank + 2 * n - 1 - step) % n;
+            let (ss, se) = shard_bounds(len, n, send_chunk);
+            if rank == 0 {
+                let sv =
+                    self.recv_sparse_shard(links, dec_buf, my_gen, step, recv_chunk, (rs, re))?;
+                if step == 0 {
+                    let (ci, cv) = contribution.range(ss, se);
+                    sv_send.copy_from(ci, cv);
+                    if round.shard_k > 0 && sv_send.len() > round.shard_k {
+                        retain_top_k(sv_send, round.shard_k, perm, |i, v| {
+                            residual.push_entry(i, v)
+                        });
+                    }
+                    self.send_sparse_shard(
+                        links,
+                        enc_buf,
+                        rebase,
+                        my_gen,
+                        step,
+                        send_chunk,
+                        (ss, se),
+                        sv_send,
+                    )?;
+                } else {
+                    self.send_sparse_shard(
+                        links,
+                        enc_buf,
+                        rebase,
+                        my_gen,
+                        step,
+                        send_chunk,
+                        (ss, se),
+                        &carry,
+                    )?;
+                }
+                let (ci, cv) = contribution.range(rs, re);
+                merge_add_sparse(&sv.idx, &sv.val, ci, cv, &mut scratch.merged);
+                std::mem::swap(&mut carry, &mut scratch.merged);
+            } else {
+                if step > 0 {
+                    // step 0's send already happened in begin
+                    self.send_sparse_shard(
+                        links,
+                        enc_buf,
+                        rebase,
+                        my_gen,
+                        step,
+                        send_chunk,
+                        (ss, se),
+                        &carry,
+                    )?;
+                }
+                let sv =
+                    self.recv_sparse_shard(links, dec_buf, my_gen, step, recv_chunk, (rs, re))?;
+                let (ci, cv) = contribution.range(rs, re);
+                merge_add_sparse(&sv.idx, &sv.val, ci, cv, &mut scratch.merged);
+                std::mem::swap(&mut carry, &mut scratch.merged);
+            }
+            if round.shard_k > 0 && carry.len() > round.shard_k {
+                retain_top_k(&mut carry, round.shard_k, perm, |i, v| {
+                    residual.push_entry(i, v)
+                });
+            }
+        }
+        // phase 2 — all-gather of the n reduced entry lists, staged
+        // per chunk so `out` assembles in position order
+        if shard_parts.len() < n {
+            shard_parts.resize_with(n, SparseVec::new);
+        }
+        shard_parts[rank].copy_from(&carry.idx, &carry.val);
+        for t in 0..n - 1 {
+            let step = n - 1 + t;
+            let send_chunk = (rank + n - t) % n;
+            let (ss, se) = shard_bounds(len, n, send_chunk);
+            let recv_chunk = (rank + 2 * n - 1 - t) % n;
+            let (rs, re) = shard_bounds(len, n, recv_chunk);
+            if rank == 0 {
+                let sv =
+                    self.recv_sparse_shard(links, dec_buf, my_gen, step, recv_chunk, (rs, re))?;
+                self.send_sparse_shard(
+                    links,
+                    enc_buf,
+                    rebase,
+                    my_gen,
+                    step,
+                    send_chunk,
+                    (ss, se),
+                    &carry,
+                )?;
+                shard_parts[recv_chunk].copy_from(&sv.idx, &sv.val);
+                carry = sv;
+            } else {
+                self.send_sparse_shard(
+                    links,
+                    enc_buf,
+                    rebase,
+                    my_gen,
+                    step,
+                    send_chunk,
+                    (ss, se),
+                    &carry,
+                )?;
+                let sv =
+                    self.recv_sparse_shard(links, dec_buf, my_gen, step, recv_chunk, (rs, re))?;
+                shard_parts[recv_chunk].copy_from(&sv.idx, &sv.val);
+                carry = sv;
+            }
+        }
+        out.clear();
+        for part in shard_parts.iter_mut().take(n) {
+            out.idx.extend_from_slice(&part.idx);
+            out.val.extend_from_slice(&part.val);
+            part.clear();
+        }
+        canonicalize_residual(residual, scratch);
+        *generation = my_gen.wrapping_add(1);
+        if let Some(fr) = self.flight.get() {
+            fr.record(RecKind::RoundComplete, my_gen, 2, 0);
+        }
+        Ok(())
+    }
+
+    fn rsag_sparse_abandon(&self, rank: usize, token: RoundToken, round: SparseRound) {
+        // peers mid-reduce depend on this rank's 2(n-1) hops: run the
+        // round to completion into throwaway buffers; a broken ring is
+        // poisoned so nobody waits out a dead link
+        let mut scratch = SparseReduceScratch::new();
+        let mut out = SparseVec::new();
+        let mut residual = SparseVec::new();
+        if self
+            .rsag_sparse_complete(rank, token, round, &mut scratch, &mut out, &mut residual)
+            .is_err()
+        {
+            self.abort();
+        }
+    }
+
     fn abort(&self) {
         let already = self.poisoned.swap(true, Ordering::SeqCst);
         let abort_bytes = encode_frame(&Frame::Abort);
@@ -1172,6 +1644,92 @@ mod tests {
                     // a board round between reduce rounds must still work
                     let board = ep.allgather_f64(rank as f64).unwrap();
                     assert_eq!(board, (0..n).map(|r| r as f64).collect::<Vec<_>>());
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn sparse_rsag_matches_the_lockstep_twin_bit_for_bit() {
+        use crate::collectives::sparse::sparse_shard_allreduce_lockstep;
+
+        // overlapping order-probe selections: ulp(1e8) = 8 for f32, so
+        // the canonical merge order is observable in the reduced bits
+        let probe = |rank: usize, round: usize, len: usize| -> SparseVec {
+            let mut sv = SparseVec::new();
+            for p in 0..len {
+                if (p + rank) % 3 != 0 {
+                    sv.push_entry(p as u32, [1.0e8f32, 1.0, -1.0e8][(rank + p + round) % 3]);
+                }
+            }
+            sv
+        };
+        let n = 3;
+        let len = 11;
+        let rounds = 6;
+        let tps = loopback_ring(n);
+        let mut handles = Vec::new();
+        for (rank, tp) in tps.into_iter().enumerate() {
+            handles.push(std::thread::spawn(move || {
+                let mut scratch = SparseReduceScratch::new();
+                let mut out = SparseVec::new();
+                let mut residual = SparseVec::new();
+                for round in 0..rounds {
+                    // alternate uncapped and per-hop re-top-k rounds,
+                    // and blocking vs split-phase entry points
+                    let shard_k = if round % 2 == 0 { 0 } else { 2 };
+                    let sr = SparseRound {
+                        union_len: len,
+                        shard_k,
+                    };
+                    let mine = Arc::new(probe(rank, round, len));
+                    if round % 2 == 0 {
+                        tp.rsag_sparse(rank, mine, sr, &mut scratch, &mut out, &mut residual)
+                            .unwrap();
+                    } else {
+                        let token = tp.rsag_sparse_begin(rank, mine, sr).unwrap();
+                        tp.rsag_sparse_complete(
+                            rank,
+                            token,
+                            sr,
+                            &mut scratch,
+                            &mut out,
+                            &mut residual,
+                        )
+                        .unwrap();
+                    }
+                    let contribs: Vec<SparseVec> = (0..n).map(|r| probe(r, round, len)).collect();
+                    let mut ls = SparseReduceScratch::new();
+                    let mut entries = SparseVec::new();
+                    let mut reduced = Vec::new();
+                    let mut residuals: Vec<SparseVec> =
+                        (0..n).map(|_| SparseVec::new()).collect();
+                    let net = CostModel::paper_testbed(n);
+                    let _ = sparse_shard_allreduce_lockstep(
+                        &contribs,
+                        len,
+                        shard_k,
+                        &net,
+                        &mut ls,
+                        &mut entries,
+                        &mut reduced,
+                        &mut residuals,
+                    );
+                    assert_eq!(out.idx, entries.idx, "rank {rank} round {round}");
+                    let got: Vec<u32> = out.val.iter().map(|v| v.to_bits()).collect();
+                    let want: Vec<u32> = entries.val.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(got, want, "rank {rank} round {round}");
+                    assert_eq!(
+                        residual.idx, residuals[rank].idx,
+                        "rank {rank} round {round} residual positions"
+                    );
+                    let got_r: Vec<u32> = residual.val.iter().map(|v| v.to_bits()).collect();
+                    let want_r: Vec<u32> =
+                        residuals[rank].val.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(got_r, want_r, "rank {rank} round {round} residual values");
                 }
             }));
         }

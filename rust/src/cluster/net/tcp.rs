@@ -38,9 +38,13 @@ use crate::cluster::net::codec::{
 };
 use crate::cluster::net::handshake::{client_rendezvous, hub_rendezvous, NetCfg};
 use crate::cluster::transport::{
-    envelope_mismatch, rsag_reduce_board_into, FloatBufPool, Message, RoundToken, Transport,
+    envelope_mismatch, rsag_reduce_board_into, FloatBufPool, Message, RoundToken, SparseRound,
+    Transport,
 };
 use crate::cluster::CollectiveKind;
+use crate::collectives::sparse::{
+    canonicalize_residual, reduce_sparse_contributions_with, SparseReduceScratch, SparseVec,
+};
 use crate::error::{Error, Result};
 use crate::obs::{FlightRecorder, ObsCounters, RecKind};
 use std::net::{Shutdown, TcpStream};
@@ -510,6 +514,214 @@ impl Transport for TcpTransport {
         }
     }
 
+    fn rsag_sparse_begin(
+        &self,
+        rank: usize,
+        contribution: Arc<SparseVec>,
+        round: SparseRound,
+    ) -> Result<RoundToken> {
+        // identical wire behaviour to the dense rsag begin: a client's
+        // entry list goes out eagerly as one Message::Sparse, the hub
+        // stashes its own until the collect at complete
+        let _ = round;
+        let token = self.begin_inner(rank, Message::Sparse(contribution))?;
+        self.obs.round(CollectiveKind::Rsag);
+        if let Some(fr) = self.flight.get() {
+            fr.record(RecKind::RoundBegin, token.generation(), 2, 0);
+        }
+        Ok(token)
+    }
+
+    fn rsag_sparse_complete(
+        &self,
+        rank: usize,
+        mut token: RoundToken,
+        round: SparseRound,
+        scratch: &mut SparseReduceScratch,
+        out: &mut SparseVec,
+        residual: &mut SparseVec,
+    ) -> Result<()> {
+        if rank != self.rank {
+            return Err(Error::invalid(format!(
+                "this process's transport speaks for rank {}, not rank {rank}",
+                self.rank
+            )));
+        }
+        let mut guard = self.state.lock().unwrap();
+        let State {
+            conn,
+            generation,
+            enc_buf,
+            dec_buf,
+            pending,
+        } = &mut *guard;
+        if !*pending {
+            return Err(Error::invariant(format!(
+                "rank {} completing a round it never started",
+                self.rank
+            )));
+        }
+        *pending = false;
+        let my_gen = *generation;
+        if token.generation() != my_gen {
+            return Err(Error::invariant(format!(
+                "rank {} completing round {}, but the transport is at round {my_gen}",
+                self.rank,
+                token.generation()
+            )));
+        }
+        if self.poisoned.load(Ordering::SeqCst) {
+            return Err(Error::net("transport poisoned by a failed worker"));
+        }
+        let n = self.n;
+        let bound_check = |s: &SparseVec, who: &str| -> Result<()> {
+            match s.idx.last() {
+                Some(&last) if last as usize >= round.union_len => Err(Error::protocol(format!(
+                    "{who}'s sparse entries index position {last}, union length \
+                     is {} — workers diverged",
+                    round.union_len
+                ))),
+                _ => Ok(()),
+            }
+        };
+        match conn {
+            Conn::Hub { peers } => {
+                let msg = token.take_stash().ok_or_else(|| {
+                    Error::invariant("hub round token lost its stashed contribution")
+                })?;
+                let mut board: Vec<Message> = Vec::with_capacity(n);
+                board.push(msg);
+                for r in 1..n {
+                    let stream = peers[r]
+                        .as_mut()
+                        .expect("hub rendezvous filled every peer slot");
+                    let frame = self.read_counted(stream, dec_buf, my_gen).map_err(|e| {
+                        Error::net(format!("reading rank {r}'s contribution: {e}"))
+                    })?;
+                    board.push(super::expect_data(frame, my_gen, &format!("rank {r}"))?);
+                }
+                for (r, m) in board.iter().enumerate() {
+                    match m {
+                        Message::Sparse(s) => bound_check(s, &format!("rank {r}"))?,
+                        other => return Err(envelope_mismatch("Sparse", other)),
+                    }
+                }
+                // the hub replays the whole canonical reduce — inherent
+                // to a star — so it also owns every rank's re-selection
+                // discards and mails each rank its own residual back
+                let mut residuals: Vec<SparseVec> = (0..n).map(|_| SparseVec::new()).collect();
+                reduce_sparse_contributions_with(
+                    n,
+                    round.union_len,
+                    |r| match &board[r] {
+                        Message::Sparse(s) => (&s.idx[..], &s.val[..]),
+                        _ => unreachable!("validated above"),
+                    },
+                    round.shard_k,
+                    scratch,
+                    out,
+                    |owner, i, v| residuals[owner].push_entry(i, v),
+                );
+                for res in residuals.iter_mut() {
+                    canonicalize_residual(res, scratch);
+                }
+                // fan out the reduced entries (one encode, n-1 writes)
+                let reduced_msg = Message::Sparse(Arc::new(out.clone()));
+                let reduced_payload = reduced_msg.payload_bytes();
+                enc_buf.clear();
+                encode_frame_append(
+                    &Frame::Data {
+                        generation: my_gen,
+                        msg: reduced_msg,
+                    },
+                    enc_buf,
+                );
+                self.obs.frame_encoded();
+                for r in 1..n {
+                    let stream = peers[r].as_mut().expect("peer slot filled");
+                    self.write_counted(stream, enc_buf, reduced_payload, my_gen)
+                        .map_err(|e| {
+                            Error::net(format!("broadcasting reduced entries to rank {r}: {e}"))
+                        })?;
+                }
+                // residual frames travel only under an active cap — at
+                // shard_k == 0 every residual is empty and the frames
+                // are skipped entirely, so uncapped sparse rounds keep
+                // the exact star byte form the model predicts
+                if round.shard_k > 0 {
+                    for r in 1..n {
+                        let res_msg =
+                            Message::Sparse(Arc::new(std::mem::take(&mut residuals[r])));
+                        let res_payload = res_msg.payload_bytes();
+                        enc_buf.clear();
+                        encode_frame_append(
+                            &Frame::Data {
+                                generation: my_gen,
+                                msg: res_msg,
+                            },
+                            enc_buf,
+                        );
+                        self.obs.frame_encoded();
+                        let stream = peers[r].as_mut().expect("peer slot filled");
+                        self.write_counted(stream, enc_buf, res_payload, my_gen)
+                            .map_err(|e| {
+                                Error::net(format!("sending residual to rank {r}: {e}"))
+                            })?;
+                    }
+                }
+                let own = &residuals[0];
+                residual.copy_from(&own.idx, &own.val);
+            }
+            Conn::Client { hub } => {
+                // the contribution went out in begin; the hub sends back
+                // the reduced entries and (only under a cap) this rank's
+                // residual
+                let frame = self.read_counted(hub, dec_buf, my_gen).map_err(|e| {
+                    Error::net(format!("reading reduced entries from hub: {e}"))
+                })?;
+                match super::expect_data(frame, my_gen, "hub")? {
+                    Message::Sparse(s) => {
+                        bound_check(&s, "hub's reduced entries")?;
+                        out.copy_from(&s.idx, &s.val);
+                    }
+                    other => return Err(envelope_mismatch("Sparse", &other)),
+                }
+                residual.clear();
+                if round.shard_k > 0 {
+                    let frame = self.read_counted(hub, dec_buf, my_gen).map_err(|e| {
+                        Error::net(format!("reading residual from hub: {e}"))
+                    })?;
+                    match super::expect_data(frame, my_gen, "hub")? {
+                        Message::Sparse(s) => {
+                            bound_check(&s, "hub's residual")?;
+                            residual.copy_from(&s.idx, &s.val);
+                        }
+                        other => return Err(envelope_mismatch("Sparse", &other)),
+                    }
+                }
+            }
+        }
+        *generation = my_gen.wrapping_add(1);
+        if let Some(fr) = self.flight.get() {
+            fr.record(RecKind::RoundComplete, my_gen, 2, 0);
+        }
+        Ok(())
+    }
+
+    fn rsag_sparse_abandon(&self, rank: usize, token: RoundToken, round: SparseRound) {
+        // same stream-alignment argument as rsag_abandon: the hub must
+        // reduce + fan out, a client must drain its read-backs
+        let mut scratch = SparseReduceScratch::new();
+        let mut out = SparseVec::new();
+        let mut residual = SparseVec::new();
+        if self
+            .rsag_sparse_complete(rank, token, round, &mut scratch, &mut out, &mut residual)
+            .is_err()
+        {
+            self.abort();
+        }
+    }
+
     fn abort(&self) {
         let already = self.poisoned.swap(true, Ordering::SeqCst);
         let abort_bytes = encode_frame(&Frame::Abort);
@@ -663,6 +875,86 @@ mod tests {
                     // rounds of either collective kind interleave
                     let echo = ep.allgather_f64(rank as f64).unwrap();
                     assert_eq!(echo, (0..n).map(|r| r as f64).collect::<Vec<f64>>());
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn sparse_rsag_reduces_on_the_hub_and_mails_residuals() {
+        use crate::collectives::sparse_shard_allreduce_lockstep;
+        use crate::collectives::CostModel;
+        let n = 3;
+        let len = 10;
+        // strided disjoint selections with magnitude probes: caps force
+        // real re-selection and the f32 bits expose order divergence
+        fn probe(rank: usize, round: usize, n: usize, len: usize) -> SparseVec {
+            const VALS: [f32; 3] = [1.0e8, 1.0, -1.0e8];
+            let mut sv = SparseVec::new();
+            let mut pos = rank;
+            while pos < len {
+                sv.push(pos as u32, VALS[(rank + pos + round) % 3]);
+                pos += n;
+            }
+            sv
+        }
+        let tps = loopback_cluster(n);
+        let mut handles = Vec::new();
+        for (rank, tp) in tps.into_iter().enumerate() {
+            handles.push(std::thread::spawn(move || {
+                let mut scratch = SparseReduceScratch::new();
+                let mut out = SparseVec::new();
+                let mut residual = SparseVec::new();
+                for round in 0..6 {
+                    let shard_k = if round % 2 == 0 { 0 } else { 1 };
+                    let rd = SparseRound {
+                        union_len: len,
+                        shard_k,
+                    };
+                    let mine = Arc::new(probe(rank, round, n, len));
+                    tp.rsag_sparse(rank, mine, rd, &mut scratch, &mut out, &mut residual)
+                        .unwrap();
+                    let contribs: Vec<SparseVec> =
+                        (0..n).map(|r| probe(r, round, n, len)).collect();
+                    let net = CostModel::paper_testbed(n);
+                    let mut tw_scratch = SparseReduceScratch::new();
+                    let mut tw_entries = SparseVec::new();
+                    let mut tw_reduced = Vec::new();
+                    let mut tw_residuals: Vec<SparseVec> =
+                        (0..n).map(|_| SparseVec::new()).collect();
+                    sparse_shard_allreduce_lockstep(
+                        &contribs,
+                        len,
+                        shard_k,
+                        &net,
+                        &mut tw_scratch,
+                        &mut tw_entries,
+                        &mut tw_reduced,
+                        &mut tw_residuals,
+                    );
+                    assert_eq!(out.idx, tw_entries.idx, "rank {rank} round {round}");
+                    let got: Vec<u32> = out.val.iter().map(|x| x.to_bits()).collect();
+                    let want: Vec<u32> =
+                        tw_entries.val.iter().map(|x| x.to_bits()).collect();
+                    assert_eq!(got, want, "rank {rank} round {round} values");
+                    assert_eq!(
+                        residual.idx, tw_residuals[rank].idx,
+                        "rank {rank} round {round} residual positions"
+                    );
+                    let got: Vec<u32> =
+                        residual.val.iter().map(|x| x.to_bits()).collect();
+                    let want: Vec<u32> =
+                        tw_residuals[rank].val.iter().map(|x| x.to_bits()).collect();
+                    assert_eq!(got, want, "rank {rank} round {round} residual values");
+                    // rounds of every collective kind interleave
+                    let echo = Endpoint::new(rank, tp.as_ref()).allgather_f64(rank as f64);
+                    assert_eq!(
+                        echo.unwrap(),
+                        (0..n).map(|r| r as f64).collect::<Vec<f64>>()
+                    );
                 }
             }));
         }

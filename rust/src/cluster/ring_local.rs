@@ -31,9 +31,27 @@
 //! leaves at begin, one is absorbed at the end of the gather phase), so
 //! steady-state reduce rounds allocate nothing beyond the channel's hop
 //! nodes.
+//!
+//! The truly sparse rsag (`--sparse-shards`) runs the same two-phase
+//! schedule with [`Hop::SparseChunk`] hops carrying `(position, value)`
+//! entry lists instead of dense slices: the injector re-top-k's its own
+//! slice before the step-0 send, every rank merge-adds its entries as
+//! the partial passes through and re-applies the cap — keeping its own
+//! discards as the residual the worker feeds back into error feedback —
+//! and phase 2 forwards the reduced entry lists. The merge/cap schedule
+//! is exactly [`reduce_sparse_shard_with`]'s canonical order, so
+//! reduced entries and residuals are bit-identical to the board replay
+//! and the wire ring, while each hop moves `entries · 8 B` instead of
+//! `chunk_len · 4 B`.
+//!
+//! [`reduce_sparse_shard_with`]: crate::collectives::reduce_sparse_shard_with
 
-use crate::cluster::transport::{FloatBufPool, Message, RoundToken, Transport};
+use crate::cluster::transport::{FloatBufPool, Message, RoundToken, SparseRound, Transport};
 use crate::collectives::allreduce::shard_bounds;
+use crate::collectives::sparse::{
+    canonicalize_residual, merge_add_sparse, reduce_sparse_contributions_with, retain_top_k,
+    SparseReduceScratch, SparseVec,
+};
 use crate::collectives::CostModel;
 use crate::error::{Error, Result};
 use crate::obs::ObsCounters;
@@ -59,6 +77,17 @@ enum Hop {
         chunk: usize,
         vals: Vec<f32>,
     },
+    /// One truly sparse rsag hop: a chunk's partial (or reduced)
+    /// `(position, value)` entries, stamped like [`Hop::Chunk`].
+    /// Positions are global union offsets (there is no wire to re-base
+    /// for); the buffer is moved, merged into by the receiver, and
+    /// forwarded — never copied.
+    SparseChunk {
+        generation: u64,
+        step: usize,
+        chunk: usize,
+        sv: SparseVec,
+    },
     /// Poison notice: the transport was aborted.
     Abort,
 }
@@ -80,6 +109,19 @@ struct RingRank {
     /// the end of the gather phase, so the steady state recirculates a
     /// fixed set of buffers.
     chunk_free: Vec<Vec<f32>>,
+    /// Free list of sparse chunk buffers — the [`Hop::SparseChunk`]
+    /// twin of `chunk_free`.
+    sparse_free: Vec<SparseVec>,
+    /// Discards from the begin-time injector cap of a sparse reduce,
+    /// carried to complete-time where the caller's residual buffer
+    /// becomes available. One outstanding round per rank, so one stash.
+    residual_stash: SparseVec,
+    /// Permutation scratch for the begin-time re-top-k.
+    perm: Vec<u32>,
+    /// Per-chunk reduced-entry staging for a sparse reduce's gather
+    /// phase (chunks arrive in ring order, `out` must end in position
+    /// order). Grown to n lazily, cleared every round.
+    shard_parts: Vec<SparseVec>,
     /// `true` between a split-phase begin and its complete/abandon —
     /// rejects double-starts (one outstanding round per rank).
     pending: bool,
@@ -132,6 +174,10 @@ impl RingLocal {
                     slots: (0..n).map(|_| None).collect(),
                     last: None,
                     chunk_free: Vec::new(),
+                    sparse_free: Vec::new(),
+                    residual_stash: SparseVec::new(),
+                    perm: Vec::new(),
+                    shard_parts: Vec::new(),
                     pending: false,
                 })
             })
@@ -214,6 +260,71 @@ impl RingLocal {
             }
             Hop::Data { .. } => Err(Error::protocol(
                 "expected a reduce-scatter chunk from the left neighbor, got a \
+                 board hop — workers diverged",
+            )),
+            Hop::SparseChunk { .. } => Err(Error::protocol(
+                "expected a dense reduce-scatter chunk from the left neighbor, \
+                 got a sparse one — workers diverged on --sparse-shards",
+            )),
+            Hop::Abort => Err(Error::net("transport poisoned by a failed worker")),
+        }
+    }
+
+    /// Receive one sparse rsag hop and validate its full schedule stamp
+    /// plus the entries' shard bounds `[cs, ce)` — any divergence is a
+    /// typed error, never a silent mix of chunks.
+    #[allow(clippy::too_many_arguments)]
+    fn recv_sparse_chunk(
+        &self,
+        rank: usize,
+        rk: &mut RingRank,
+        deadline: Instant,
+        want_gen: u64,
+        want_step: usize,
+        want_chunk: usize,
+        bounds: (usize, usize),
+    ) -> Result<SparseVec> {
+        match self.recv_hop(rank, rk, deadline, want_step)? {
+            Hop::SparseChunk {
+                generation,
+                step,
+                chunk,
+                sv,
+            } => {
+                if generation != want_gen {
+                    return Err(Error::protocol(format!(
+                        "generation mismatch from left neighbor: got {generation}, \
+                         expected {want_gen} — workers diverged"
+                    )));
+                }
+                if step != want_step || chunk != want_chunk {
+                    return Err(Error::protocol(format!(
+                        "sparse rsag schedule divergence: got chunk {chunk} at \
+                         step {step}, expected chunk {want_chunk} at step {want_step}"
+                    )));
+                }
+                let (cs, ce) = bounds;
+                let in_bounds = match (sv.idx.first(), sv.idx.last()) {
+                    (Some(&first), Some(&last)) => {
+                        first as usize >= cs && (last as usize) < ce
+                    }
+                    _ => true, // an empty chunk is always in bounds
+                };
+                if !in_bounds {
+                    return Err(Error::protocol(format!(
+                        "sparse chunk {chunk} carries positions outside its shard \
+                         [{cs}, {ce}) — union layouts diverged"
+                    )));
+                }
+                self.obs[rank].payload_rx(sv.payload_bytes());
+                Ok(sv)
+            }
+            Hop::Chunk { .. } => Err(Error::protocol(
+                "expected a sparse rsag chunk from the left neighbor, got a \
+                 dense one — workers diverged on --sparse-shards",
+            )),
+            Hop::Data { .. } => Err(Error::protocol(
+                "expected a sparse rsag chunk from the left neighbor, got a \
                  board hop — workers diverged",
             )),
             Hop::Abort => Err(Error::net("transport poisoned by a failed worker")),
@@ -334,7 +445,7 @@ impl Transport for RingLocal {
                          expected {my_gen} — workers diverged"
                     )))
                 }
-                Hop::Chunk { .. } => {
+                Hop::Chunk { .. } | Hop::SparseChunk { .. } => {
                     return Err(Error::protocol(
                         "expected a board hop from the left neighbor, got a \
                          reduce-scatter chunk — workers diverged",
@@ -535,6 +646,245 @@ impl Transport for RingLocal {
         let mut shards = FloatBufPool::new();
         let mut out = Vec::new();
         if self.rsag_complete(rank, token, &mut shards, &mut out).is_err() {
+            self.abort();
+        }
+    }
+
+    fn rsag_sparse_begin(
+        &self,
+        rank: usize,
+        contribution: Arc<SparseVec>,
+        round: SparseRound,
+    ) -> Result<RoundToken> {
+        if rank >= self.n {
+            return Err(Error::invalid(format!(
+                "rank {rank} out of range (n = {})",
+                self.n
+            )));
+        }
+        if self.poisoned.load(Ordering::SeqCst) {
+            return Err(Error::net("transport poisoned by a failed worker"));
+        }
+        if let Some(&last) = contribution.idx.last() {
+            if last as usize >= round.union_len {
+                return Err(Error::invariant(format!(
+                    "sparse contribution indexes position {last}, union length \
+                     is {} — workers diverged",
+                    round.union_len
+                )));
+            }
+        }
+        let mut rk = self.ranks[rank].lock().unwrap();
+        if rk.pending {
+            return Err(Error::invariant(format!(
+                "rank {rank} double-started a split-phase ring round (round {} \
+                 is still in flight — finish or drop it first)",
+                rk.generation
+            )));
+        }
+        let my_gen = rk.generation;
+        if self.n > 1 {
+            // the step-0 injection is this rank's own slice of chunk
+            // (rank - 1) mod n. The injector's copy is the first merge
+            // of the canonical schedule (merge into an empty partial),
+            // so the per-hop cap applies HERE too — its discards are
+            // this rank's residual, stashed until complete-time when
+            // the caller's residual buffer is in hand.
+            let n = self.n;
+            let chunk = (rank + n - 1) % n;
+            let (cs, ce) = shard_bounds(round.union_len, n, chunk);
+            let (ci, cv) = contribution.range(cs, ce);
+            let mut sv = rk.sparse_free.pop().unwrap_or_default();
+            sv.copy_from(ci, cv);
+            if round.shard_k > 0 && sv.len() > round.shard_k {
+                let rk = &mut *rk;
+                let (perm, stash) = (&mut rk.perm, &mut rk.residual_stash);
+                retain_top_k(&mut sv, round.shard_k, perm, |i, v| stash.push_entry(i, v));
+            }
+            let bytes = sv.payload_bytes();
+            rk.tx_right
+                .send(Hop::SparseChunk {
+                    generation: my_gen,
+                    step: 0,
+                    chunk,
+                    sv,
+                })
+                .map_err(|_| Error::invariant("ring link disconnected — transport dropped"))?;
+            self.obs[rank].payload_tx(bytes);
+        }
+        rk.pending = true;
+        self.obs[rank].round(crate::cluster::CollectiveKind::Rsag);
+        // the contribution rides the token: complete merges its
+        // per-chunk slices into every partial that passes through
+        Ok(RoundToken::deferred_with_stash(
+            my_gen,
+            Message::Sparse(contribution),
+        ))
+    }
+
+    fn rsag_sparse_complete(
+        &self,
+        rank: usize,
+        mut token: RoundToken,
+        round: SparseRound,
+        scratch: &mut SparseReduceScratch,
+        out: &mut SparseVec,
+        residual: &mut SparseVec,
+    ) -> Result<()> {
+        if rank >= self.n {
+            return Err(Error::invalid(format!(
+                "rank {rank} out of range (n = {})",
+                self.n
+            )));
+        }
+        let mut rk = self.ranks[rank].lock().unwrap();
+        if !rk.pending {
+            return Err(Error::invariant(format!(
+                "rank {rank} completing a ring round it never started"
+            )));
+        }
+        rk.pending = false;
+        let my_gen = rk.generation;
+        if token.generation() != my_gen {
+            return Err(Error::invariant(format!(
+                "rank {rank} completing round {}, but the ring is at round {my_gen}",
+                token.generation()
+            )));
+        }
+        if self.poisoned.load(Ordering::SeqCst) {
+            return Err(Error::net("transport poisoned by a failed worker"));
+        }
+        let contribution = match token.take_stash() {
+            Some(Message::Sparse(s)) => s,
+            _ => {
+                return Err(Error::invariant(
+                    "ring sparse reduce token lost its stashed contribution",
+                ))
+            }
+        };
+        let n = self.n;
+        let len = round.union_len;
+        // the begin-time injector discards open this rank's residual
+        residual.clear();
+        {
+            let stash = &mut rk.residual_stash;
+            for (&i, &v) in stash.idx.iter().zip(stash.val.iter()) {
+                residual.push_entry(i, v);
+            }
+            stash.clear();
+        }
+        if n == 1 {
+            reduce_sparse_contributions_with(
+                1,
+                len,
+                |_| (&contribution.idx, &contribution.val),
+                round.shard_k,
+                scratch,
+                out,
+                |_, i, v| residual.push_entry(i, v),
+            );
+            canonicalize_residual(residual, scratch);
+            rk.generation = my_gen.wrapping_add(1);
+            return Ok(());
+        }
+        let deadline = Instant::now() + self.timeout;
+        // phase 1 — sparse reduce-scatter: forward the partial merged at
+        // the previous step (step 0's injection went out in begin),
+        // receive chunk (rank - 2 - s) mod n, merge-add the own slice
+        // (partial first — the canonical per-coordinate order), and
+        // re-apply the cap, keeping the discards as this rank's
+        // residual; after n - 1 steps `carry` holds this rank's fully
+        // reduced shard entries
+        let mut carry = SparseVec::new();
+        for step in 0..n - 1 {
+            if step > 0 {
+                let chunk = (rank + 2 * n - 1 - step) % n;
+                let sv = std::mem::take(&mut carry);
+                let bytes = sv.payload_bytes();
+                rk.tx_right
+                    .send(Hop::SparseChunk {
+                        generation: my_gen,
+                        step,
+                        chunk,
+                        sv,
+                    })
+                    .map_err(|_| {
+                        Error::invariant("ring link disconnected — transport dropped")
+                    })?;
+                self.obs[rank].payload_tx(bytes);
+            }
+            let chunk = (rank + 2 * n - 2 - step) % n;
+            let (cs, ce) = shard_bounds(len, n, chunk);
+            let mut partial =
+                self.recv_sparse_chunk(rank, &mut rk, deadline, my_gen, step, chunk, (cs, ce))?;
+            let (ci, cv) = contribution.range(cs, ce);
+            merge_add_sparse(&partial.idx, &partial.val, ci, cv, &mut scratch.merged);
+            std::mem::swap(&mut partial, &mut scratch.merged);
+            if round.shard_k > 0 && partial.len() > round.shard_k {
+                retain_top_k(&mut partial, round.shard_k, &mut scratch.perm, |i, v| {
+                    residual.push_entry(i, v)
+                });
+            }
+            carry = partial;
+        }
+        // phase 2 — all-gather of the n reduced entry lists: stage the
+        // own shard, forward reduced chunks for n - 1 more hops, and
+        // stage each received one (chunks arrive in ring order, not
+        // position order, so `out` is assembled chunk by chunk at the
+        // end)
+        while rk.shard_parts.len() < n {
+            rk.shard_parts.push(SparseVec::new());
+        }
+        rk.shard_parts[rank].copy_from(&carry.idx, &carry.val);
+        for t in 0..n - 1 {
+            let send_chunk = (rank + n - t) % n;
+            let sv = std::mem::take(&mut carry);
+            let bytes = sv.payload_bytes();
+            rk.tx_right
+                .send(Hop::SparseChunk {
+                    generation: my_gen,
+                    step: n - 1 + t,
+                    chunk: send_chunk,
+                    sv,
+                })
+                .map_err(|_| Error::invariant("ring link disconnected — transport dropped"))?;
+            self.obs[rank].payload_tx(bytes);
+            let chunk = (rank + 2 * n - 1 - t) % n;
+            let (cs, ce) = shard_bounds(len, n, chunk);
+            let sv = self
+                .recv_sparse_chunk(rank, &mut rk, deadline, my_gen, n - 1 + t, chunk, (cs, ce))?;
+            rk.shard_parts[chunk].copy_from(&sv.idx, &sv.val);
+            carry = sv;
+        }
+        // absorb the final buffer back into the free list — the twin of
+        // the pop in begin, so steady-state rounds recirculate buffers
+        let spare = std::mem::take(&mut carry);
+        rk.sparse_free.push(spare);
+        // assemble: shard c's positions all precede shard c+1's, so a
+        // chunk-order walk lands `out` sorted
+        out.clear();
+        for c in 0..n {
+            let p = &mut rk.shard_parts[c];
+            out.idx.extend_from_slice(&p.idx);
+            out.val.extend_from_slice(&p.val);
+            p.clear();
+        }
+        canonicalize_residual(residual, scratch);
+        rk.generation = my_gen.wrapping_add(1);
+        Ok(())
+    }
+
+    fn rsag_sparse_abandon(&self, rank: usize, token: RoundToken, round: SparseRound) {
+        // peers mid-reduce depend on this rank's 2(n-1) hops: run the
+        // round to completion and discard the result; poison the ring
+        // if it is already broken so nobody waits out a silence
+        let mut scratch = SparseReduceScratch::new();
+        let mut out = SparseVec::new();
+        let mut residual = SparseVec::new();
+        if self
+            .rsag_sparse_complete(rank, token, round, &mut scratch, &mut out, &mut residual)
+            .is_err()
+        {
             self.abort();
         }
     }
@@ -785,6 +1135,141 @@ mod tests {
     fn out_of_range_rank_rejected() {
         let tp = RingLocal::new(2);
         assert!(tp.allgather(5, Message::Scalar(0.0)).is_err());
+    }
+
+    #[test]
+    fn sparse_rsag_matches_the_lockstep_twin_bit_for_bit() {
+        use crate::collectives::sparse_shard_allreduce_lockstep;
+
+        // strided disjoint selections with order-probe magnitudes: every
+        // shard sees entries from several ranks, caps force real
+        // re-selection, and the f32 bits expose any order divergence
+        let probe = |rank: usize, round: usize, n: usize, len: usize| -> SparseVec {
+            const VALS: [f32; 3] = [1.0e8, 1.0, -1.0e8];
+            let mut sv = SparseVec::new();
+            let mut pos = rank;
+            while pos < len {
+                sv.push(pos as u32, VALS[(rank + pos + round) % 3]);
+                pos += n;
+            }
+            sv
+        };
+        let n = 4;
+        let len = 13;
+        let rounds = 8;
+        let tp = Arc::new(RingLocal::new(n));
+        let mut handles = Vec::new();
+        for rank in 0..n {
+            let tp = tp.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut scratch = SparseReduceScratch::new();
+                let mut out = SparseVec::new();
+                let mut residual = SparseVec::new();
+                for round in 0..rounds {
+                    let shard_k = if round % 3 == 0 { 0 } else { 2 };
+                    let rd = SparseRound {
+                        union_len: len,
+                        shard_k,
+                    };
+                    let mine = Arc::new(probe(rank, round, n, len));
+                    if round % 2 == 0 {
+                        tp.rsag_sparse(rank, mine, rd, &mut scratch, &mut out, &mut residual)
+                            .unwrap();
+                    } else {
+                        // split-phase path lands the identical bits
+                        let token = tp.rsag_sparse_begin(rank, mine, rd).unwrap();
+                        tp.rsag_sparse_complete(
+                            rank,
+                            token,
+                            rd,
+                            &mut scratch,
+                            &mut out,
+                            &mut residual,
+                        )
+                        .unwrap();
+                    }
+                    let contribs: Vec<SparseVec> =
+                        (0..n).map(|r| probe(r, round, n, len)).collect();
+                    let net = CostModel::paper_testbed(n);
+                    let mut tw_scratch = SparseReduceScratch::new();
+                    let mut tw_entries = SparseVec::new();
+                    let mut tw_reduced = Vec::new();
+                    let mut tw_residuals: Vec<SparseVec> =
+                        (0..n).map(|_| SparseVec::new()).collect();
+                    sparse_shard_allreduce_lockstep(
+                        &contribs,
+                        len,
+                        shard_k,
+                        &net,
+                        &mut tw_scratch,
+                        &mut tw_entries,
+                        &mut tw_reduced,
+                        &mut tw_residuals,
+                    );
+                    assert_eq!(out.idx, tw_entries.idx, "rank {rank} round {round}");
+                    let got: Vec<u32> = out.val.iter().map(|x| x.to_bits()).collect();
+                    let want: Vec<u32> =
+                        tw_entries.val.iter().map(|x| x.to_bits()).collect();
+                    assert_eq!(got, want, "rank {rank} round {round} values");
+                    assert_eq!(
+                        residual.idx, tw_residuals[rank].idx,
+                        "rank {rank} round {round} residual positions"
+                    );
+                    let got: Vec<u32> =
+                        residual.val.iter().map(|x| x.to_bits()).collect();
+                    let want: Vec<u32> =
+                        tw_residuals[rank].val.iter().map(|x| x.to_bits()).collect();
+                    assert_eq!(got, want, "rank {rank} round {round} residual values");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn sparse_rsag_counters_match_the_sparse_link_model() {
+        // full-overlap contributions with no cap keep every partial and
+        // reduced chunk exactly shard-sized, so each rank's payload
+        // traffic must equal the model's 2(n-1)/n · E · 8 B prediction
+        // byte-exact (len divisible by n keeps shards equal)
+        let n = 4;
+        let len = 12;
+        let tp = Arc::new(RingLocal::new(n));
+        let rd = SparseRound {
+            union_len: len,
+            shard_k: 0,
+        };
+        let mut handles = Vec::new();
+        for rank in 0..n {
+            let tp = tp.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut sv = SparseVec::new();
+                for i in 0..len {
+                    sv.push(i as u32, (rank + 1) as f32);
+                }
+                let mut scratch = SparseReduceScratch::new();
+                let mut out = SparseVec::new();
+                let mut residual = SparseVec::new();
+                tp.rsag_sparse(rank, Arc::new(sv), rd, &mut scratch, &mut out, &mut residual)
+                    .unwrap();
+                assert_eq!(out.len(), len, "uncapped full overlap keeps the union");
+                assert!(residual.is_empty());
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let net = CostModel::paper_testbed(n);
+        let want = net.rsag_sparse_link_bytes_ring(len) as u64;
+        for rank in 0..n {
+            let c = tp.counters(rank).unwrap().snapshot();
+            assert_eq!(c.payload_tx_bytes, want, "rank {rank} tx");
+            assert_eq!(c.payload_rx_bytes, want, "rank {rank} rx");
+            assert_eq!(c.rounds_rsag, 1);
+            assert_eq!(c.rounds_allgather, 0);
+        }
     }
 
     #[test]

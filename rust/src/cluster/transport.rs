@@ -93,6 +93,9 @@
 //! [CostModel]: crate::collectives::CostModel
 
 use crate::collectives::allreduce::{reduce_contributions_rsag_with, rsag_rank_order, shard_bounds};
+use crate::collectives::sparse::{
+    canonicalize_residual, reduce_sparse_contributions_with, SparseReduceScratch, SparseVec,
+};
 use crate::collectives::CostModel;
 use crate::coordinator::SelectOutput;
 use crate::error::{Error, Result};
@@ -111,6 +114,10 @@ pub enum Message {
     /// One f64 — timing metadata and diagnostics (select wall time,
     /// error norms).
     Scalar(f64),
+    /// Sorted `(position, value)` entry list — the truly sparse rsag
+    /// contribution (`--sparse-shards`): positions index the round's
+    /// union, and only the rank's own selections are present.
+    Sparse(Arc<SparseVec>),
 }
 
 impl Message {
@@ -125,6 +132,7 @@ impl Message {
             Message::Selection(s) => s.idx.len() * CostModel::SPARSE_ENTRY_BYTES,
             Message::Floats(v) => v.len() * CostModel::DENSE_ENTRY_BYTES,
             Message::Scalar(_) => std::mem::size_of::<f64>(),
+            Message::Sparse(s) => s.payload_bytes(),
         }
     }
 }
@@ -309,6 +317,98 @@ impl Drop for PendingReduce<'_> {
     }
 }
 
+/// The shared envelope of one truly sparse rsag round
+/// (`--sparse-shards`): every rank derives the same values from the
+/// round's gathered selections, so the transports can validate and
+/// shard without any extra negotiation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SparseRound {
+    /// Length of the round's union index space — sparse positions are
+    /// `u32` offsets into `0..union_len`, sharded by
+    /// [`shard_bounds`](crate::collectives::shard_bounds).
+    pub union_len: usize,
+    /// Per-shard re-selection cap: after each canonical merge a shard
+    /// holding more than `shard_k` entries is re-top-k'd
+    /// ([`crate::collectives::retain_top_k`]) and the discards become
+    /// the merging rank's residual. `0` disables re-selection (shards
+    /// grow to the union of their contributions).
+    pub shard_k: usize,
+}
+
+/// One in-flight split-phase truly sparse reduce-scatter → all-gather:
+/// returned by [`Endpoint::rsag_sparse_start`] / `rsag_sparse_start` on
+/// `dyn Transport`, consumed by [`PendingSparseReduce::finish`], which
+/// lands the canonically reduced, possibly re-top-k'd `(index, value)`
+/// entry list in `out` and this rank's re-selection discards in
+/// `residual`. Dropping it without finishing abandons the round safely
+/// ([`Transport::rsag_sparse_abandon`]) and this rank may start the
+/// next round afterwards.
+pub struct PendingSparseReduce<'a> {
+    tp: &'a dyn Transport,
+    rank: usize,
+    round: SparseRound,
+    token: Option<RoundToken>,
+}
+
+impl<'a> PendingSparseReduce<'a> {
+    /// Start a split-phase sparse rsag for `rank` over `tp`: the sparse
+    /// contribution is deposited / put on the wire before this returns.
+    pub fn start(
+        tp: &'a dyn Transport,
+        rank: usize,
+        contribution: Arc<SparseVec>,
+        round: SparseRound,
+    ) -> Result<Self> {
+        let token = tp.rsag_sparse_begin(rank, contribution, round)?;
+        Ok(PendingSparseReduce {
+            tp,
+            rank,
+            round,
+            token: Some(token),
+        })
+    }
+
+    /// The rank this round was started for.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// The round's generation stamp.
+    pub fn generation(&self) -> u64 {
+        self.token
+            .as_ref()
+            .map(RoundToken::generation)
+            .unwrap_or(0)
+    }
+
+    /// Block for the reduced entries: `out` receives the canonically
+    /// reduced (and per-hop re-selected, when `shard_k > 0`) entry
+    /// list, `residual` this rank's discards in canonical form.
+    /// Abort-aware and deadline-bounded exactly like
+    /// [`PendingReduce::finish`].
+    pub fn finish(
+        mut self,
+        scratch: &mut SparseReduceScratch,
+        out: &mut SparseVec,
+        residual: &mut SparseVec,
+    ) -> Result<()> {
+        let token = self
+            .token
+            .take()
+            .expect("finish consumes the pending sparse reduce exactly once");
+        self.tp
+            .rsag_sparse_complete(self.rank, token, self.round, scratch, out, residual)
+    }
+}
+
+impl Drop for PendingSparseReduce<'_> {
+    fn drop(&mut self) {
+        if let Some(token) = self.token.take() {
+            self.tp.rsag_sparse_abandon(self.rank, token, self.round);
+        }
+    }
+}
+
 impl<'t> dyn Transport + 't {
     /// Nonblocking start of an all-gather round (split-phase form of
     /// [`Transport::allgather`]): rank `rank`'s contribution is
@@ -326,6 +426,19 @@ impl<'t> dyn Transport + 't {
     /// flight is a typed error.
     pub fn rsag_start(&self, rank: usize, contribution: Arc<Vec<f32>>) -> Result<PendingReduce<'_>> {
         PendingReduce::start(self, rank, contribution)
+    }
+
+    /// Nonblocking start of a truly sparse reduce-scatter → all-gather
+    /// round (split-phase form of [`Transport::rsag_sparse`]). Shares
+    /// the one-outstanding-round-per-rank budget with every other
+    /// collective kind.
+    pub fn rsag_sparse_start(
+        &self,
+        rank: usize,
+        contribution: Arc<SparseVec>,
+        round: SparseRound,
+    ) -> Result<PendingSparseReduce<'_>> {
+        PendingSparseReduce::start(self, rank, contribution, round)
     }
 }
 
@@ -445,6 +558,84 @@ pub trait Transport: Send + Sync {
         let mut shards = FloatBufPool::new();
         let mut out = Vec::new();
         let _ = self.rsag_complete(rank, token, &mut shards, &mut out);
+    }
+
+    /// Truly sparse reduce-scatter → all-gather (`--sparse-shards`):
+    /// rank `rank` contributes a sorted `(position, value)` entry list
+    /// over the round's union index space and receives in `out` the
+    /// canonically reduced entries — each shard merged in
+    /// [`rsag_rank_order`], re-top-k'd after every merge when
+    /// `round.shard_k > 0` — and in `residual` its OWN re-selection
+    /// discards (the entries it merged in that a later cap dropped),
+    /// canonicalized to a sorted entry list for error feedback. Unlike
+    /// the dense rsag, shards travel as entry lists, so the received
+    /// volume tracks `2(n-1)/n · entries · 8 B`
+    /// ([`CostModel::rsag_sparse_recv_bytes_per_rank`]) instead of
+    /// `2(n-1)/n · union_len · 4 B`. Reduced entries and residuals are
+    /// bit-exact across every transport because all of them share the
+    /// one canonical merge schedule. The default implementation rides
+    /// the split-phase all-gather and replays the canonical reduce on
+    /// the full board — correct for any transport, without the
+    /// bandwidth win; native transports override it.
+    fn rsag_sparse(
+        &self,
+        rank: usize,
+        contribution: Arc<SparseVec>,
+        round: SparseRound,
+        scratch: &mut SparseReduceScratch,
+        out: &mut SparseVec,
+        residual: &mut SparseVec,
+    ) -> Result<()> {
+        let token = self.rsag_sparse_begin(rank, contribution, round)?;
+        self.rsag_sparse_complete(rank, token, round, scratch, out, residual)
+    }
+
+    /// Nonblocking half of the split-phase sparse rsag: put rank
+    /// `rank`'s entry list in flight and return a generation-stamped
+    /// [`RoundToken`] for [`Transport::rsag_sparse_complete`]. Carries
+    /// the exact [`Transport::rsag_begin`] contract, including the
+    /// shared one-outstanding-round-per-rank budget. The default
+    /// delegates to the all-gather begin.
+    fn rsag_sparse_begin(
+        &self,
+        rank: usize,
+        contribution: Arc<SparseVec>,
+        round: SparseRound,
+    ) -> Result<RoundToken> {
+        let _ = round;
+        self.allgather_begin(rank, Message::Sparse(contribution))
+    }
+
+    /// Blocking half of the split-phase sparse rsag: drain the round
+    /// started by [`Transport::rsag_sparse_begin`] and land the reduced
+    /// entries in `out` and this rank's canonical residual in
+    /// `residual`. Must honor the same abort-poisoning and IO deadlines
+    /// as the dense rsag complete. The default completes the underlying
+    /// all-gather and replays the canonical reduce on the full board.
+    fn rsag_sparse_complete(
+        &self,
+        rank: usize,
+        token: RoundToken,
+        round: SparseRound,
+        scratch: &mut SparseReduceScratch,
+        out: &mut SparseVec,
+        residual: &mut SparseVec,
+    ) -> Result<()> {
+        let board = self.allgather_complete(rank, token)?;
+        rsag_sparse_reduce_board_into(&board, rank, round, scratch, out, residual)
+    }
+
+    /// Drop hook for a [`PendingSparseReduce`] that is abandoned
+    /// instead of finished. As with [`Transport::rsag_abandon`], peers
+    /// mid-reduce may still be waiting on this rank's merges, so the
+    /// default completes the round into throwaway buffers and discards
+    /// the result; errors are swallowed (an aborted round has already
+    /// released the peers).
+    fn rsag_sparse_abandon(&self, rank: usize, token: RoundToken, round: SparseRound) {
+        let mut scratch = SparseReduceScratch::new();
+        let mut out = SparseVec::new();
+        let mut residual = SparseVec::new();
+        let _ = self.rsag_sparse_complete(rank, token, round, &mut scratch, &mut out, &mut residual);
     }
 
     /// Rendezvous barrier (default: a scalar all-gather).
@@ -719,6 +910,23 @@ impl Transport for LocalTransport {
         Ok(token)
     }
 
+    fn rsag_sparse_begin(
+        &self,
+        rank: usize,
+        contribution: Arc<SparseVec>,
+        round: SparseRound,
+    ) -> Result<RoundToken> {
+        // one zero-copy board round plus the default complete's full
+        // canonical replay IS the native sparse rsag here: the board
+        // fan-out is Arc bumps, so there is no shard hop to save, and
+        // the replay derives every rank's reduced entries and residual
+        // in one pass. Only the round counter needs charging.
+        let _ = round;
+        let token = self.begin_inner(rank, Message::Sparse(contribution))?;
+        self.obs[rank].round(crate::cluster::CollectiveKind::Rsag);
+        Ok(token)
+    }
+
     fn abort(&self) {
         let mut b = self.board.lock().unwrap();
         b.poisoned = true;
@@ -791,6 +999,54 @@ impl Default for FloatBufPool {
     }
 }
 
+/// Rotating pool of reusable `Arc<SparseVec>` send buffers for
+/// [`Message::Sparse`] contributions — the entry-list twin of
+/// [`FloatBufPool`], with the identical three-slot reuse-distance
+/// argument and the identical fall-back-to-fresh guarantee when a
+/// caller retains a board longer than the steady state.
+pub struct SparseBufPool {
+    bufs: [Arc<SparseVec>; 3],
+    next: usize,
+}
+
+impl SparseBufPool {
+    /// Empty pool; buffers grow to the working-set size on first use.
+    pub fn new() -> Self {
+        SparseBufPool {
+            bufs: [
+                Arc::new(SparseVec::new()),
+                Arc::new(SparseVec::new()),
+                Arc::new(SparseVec::new()),
+            ],
+            next: 0,
+        }
+    }
+
+    /// Hand out a shareable entry list, cleared and then filled by
+    /// `fill`.
+    pub fn fill(&mut self, fill: impl FnOnce(&mut SparseVec)) -> Arc<SparseVec> {
+        let idx = self.next;
+        self.next = (idx + 1) % self.bufs.len();
+        let slot = &mut self.bufs[idx];
+        if Arc::get_mut(slot).is_none() {
+            // a peer still holds the handle from this slot's last round
+            // — fall back to a fresh buffer (reuse is an optimization,
+            // never a correctness assumption)
+            *slot = Arc::new(SparseVec::new());
+        }
+        let buf = Arc::get_mut(slot).expect("slot is uniquely owned here");
+        buf.clear();
+        fill(buf);
+        Arc::clone(slot)
+    }
+}
+
+impl Default for SparseBufPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// One rank's handle onto a transport: typed all-gather helpers that
 /// unwrap the [`Message`] envelope (an envelope mismatch means workers
 /// diverged in control flow — an invariant error, never silent).
@@ -851,6 +1107,34 @@ impl<'a> Endpoint<'a> {
     /// budget with [`Endpoint::allgather_start`].
     pub fn rsag_start(&self, contribution: Arc<Vec<f32>>) -> Result<PendingReduce<'a>> {
         PendingReduce::start(self.tp, self.rank, contribution)
+    }
+
+    /// Truly sparse rsag: contribute a sorted `(position, value)` entry
+    /// list, receive the canonically reduced entries in `out` and this
+    /// rank's re-selection residual in `residual`
+    /// ([`Transport::rsag_sparse`]).
+    pub fn rsag_sparse(
+        &self,
+        contribution: Arc<SparseVec>,
+        round: SparseRound,
+        scratch: &mut SparseReduceScratch,
+        out: &mut SparseVec,
+        residual: &mut SparseVec,
+    ) -> Result<()> {
+        self.tp
+            .rsag_sparse(self.rank, contribution, round, scratch, out, residual)
+    }
+
+    /// Split-phase truly sparse rsag: the entry list is in flight
+    /// before this returns; `finish()` on the returned handle blocks
+    /// for the reduced entries and residual. Shares the
+    /// one-outstanding-round budget with every other collective start.
+    pub fn rsag_sparse_start(
+        &self,
+        contribution: Arc<SparseVec>,
+        round: SparseRound,
+    ) -> Result<PendingSparseReduce<'a>> {
+        PendingSparseReduce::start(self.tp, self.rank, contribution, round)
     }
 
     /// All-gather per-rank selections (metadata + payload in one round).
@@ -970,6 +1254,7 @@ pub(crate) fn envelope_mismatch(want: &str, got: &Message) -> Error {
         Message::Selection(_) => "Selection",
         Message::Floats(_) => "Floats",
         Message::Scalar(_) => "Scalar",
+        Message::Sparse(_) => "Sparse",
     };
     Error::invariant(format!(
         "transport envelope mismatch: expected {want}, got {got} — workers diverged"
@@ -1014,6 +1299,60 @@ pub(crate) fn rsag_reduce_board_into(board: &[Message], out: &mut Vec<f32>) -> R
         },
         out,
     );
+    Ok(())
+}
+
+/// Replay the canonical sparse rsag reduce on a full contribution
+/// board: validate every entry is a [`Message::Sparse`] inside the
+/// round's union bounds, reduce all shards in canonical order with the
+/// round's re-selection cap, keep the discards attributed to `rank` as
+/// its residual, and canonicalize that residual to a sorted entry
+/// list. The fallback reduction behind the default
+/// [`Transport::rsag_sparse_complete`], the whole reduction on
+/// [`LocalTransport`] (where the board fan-out is free), and the hub
+/// side of the TCP star.
+pub(crate) fn rsag_sparse_reduce_board_into(
+    board: &[Message],
+    rank: usize,
+    round: SparseRound,
+    scratch: &mut SparseReduceScratch,
+    out: &mut SparseVec,
+    residual: &mut SparseVec,
+) -> Result<()> {
+    for (r, m) in board.iter().enumerate() {
+        match m {
+            Message::Sparse(s) => {
+                if let Some(&last) = s.idx.last() {
+                    if last as usize >= round.union_len {
+                        return Err(Error::invariant(format!(
+                            "rank {r}'s sparse contribution indexes position {last}, \
+                             union length is {} — workers diverged",
+                            round.union_len
+                        )));
+                    }
+                }
+            }
+            other => return Err(envelope_mismatch("Sparse", other)),
+        }
+    }
+    residual.clear();
+    reduce_sparse_contributions_with(
+        board.len(),
+        round.union_len,
+        |r| match &board[r] {
+            Message::Sparse(s) => (&s.idx[..], &s.val[..]),
+            _ => unreachable!("validated above"),
+        },
+        round.shard_k,
+        scratch,
+        out,
+        |owner, pos, v| {
+            if owner == rank {
+                residual.push_entry(pos, v);
+            }
+        },
+    );
+    canonicalize_residual(residual, scratch);
     Ok(())
 }
 
@@ -1580,6 +1919,255 @@ mod tests {
         tp.abort();
         assert_eq!(tp.counters(0).unwrap().snapshot().aborts, 1);
         assert_eq!(tp.counters(1).unwrap().snapshot().aborts, 1);
+    }
+
+    /// Strided sparse contribution with order-probe magnitudes: rank r
+    /// selects positions r, r+n, r+2n, … below `len`, so selections
+    /// are disjoint but every shard sees entries from several ranks.
+    fn sparse_probe(rank: usize, round: usize, n: usize, len: usize) -> SparseVec {
+        const VALS: [f32; 3] = [1.0e8, 1.0, -1.0e8];
+        let mut sv = SparseVec::new();
+        let mut pos = rank;
+        while pos < len {
+            sv.push(pos as u32, VALS[(rank + pos + round) % 3]);
+            pos += n;
+        }
+        sv
+    }
+
+    #[test]
+    fn sparse_rsag_matches_the_lockstep_twin_bit_for_bit() {
+        // blocking and split-phase sparse rounds, capped and uncapped,
+        // against the lock-step core — reduced entries AND residuals
+        // must agree bitwise on every rank over many rounds
+        let n = 3;
+        let len = 14;
+        let rounds = 12;
+        let tp = Arc::new(LocalTransport::new(n));
+        let mut handles = Vec::new();
+        for rank in 0..n {
+            let tp = tp.clone();
+            handles.push(std::thread::spawn(move || {
+                let ep = Endpoint::new(rank, tp.as_ref());
+                let mut send = SparseBufPool::new();
+                let mut scratch = SparseReduceScratch::new();
+                let mut out = SparseVec::new();
+                let mut residual = SparseVec::new();
+                for round in 0..rounds {
+                    let shard_k = if round % 3 == 0 { 0 } else { 2 };
+                    let rd = SparseRound {
+                        union_len: len,
+                        shard_k,
+                    };
+                    let probe = sparse_probe(rank, round, n, len);
+                    let mine = send.fill(|b| b.copy_from(&probe.idx, &probe.val));
+                    if round % 2 == 0 {
+                        ep.rsag_sparse(mine, rd, &mut scratch, &mut out, &mut residual)
+                            .unwrap();
+                    } else {
+                        let pending = ep.rsag_sparse_start(mine, rd).unwrap();
+                        assert_eq!(pending.rank(), rank);
+                        pending
+                            .finish(&mut scratch, &mut out, &mut residual)
+                            .unwrap();
+                    }
+                    // the lock-step twin, rebuilt from the same inputs
+                    let contribs: Vec<SparseVec> =
+                        (0..n).map(|r| sparse_probe(r, round, n, len)).collect();
+                    let net = crate::collectives::CostModel::paper_testbed(n);
+                    let mut tw_scratch = SparseReduceScratch::new();
+                    let mut tw_entries = SparseVec::new();
+                    let mut tw_reduced = Vec::new();
+                    let mut tw_residuals: Vec<SparseVec> =
+                        (0..n).map(|_| SparseVec::new()).collect();
+                    crate::collectives::sparse_shard_allreduce_lockstep(
+                        &contribs,
+                        len,
+                        shard_k,
+                        &net,
+                        &mut tw_scratch,
+                        &mut tw_entries,
+                        &mut tw_reduced,
+                        &mut tw_residuals,
+                    );
+                    assert_eq!(out.idx, tw_entries.idx, "rank {rank} round {round}");
+                    let got: Vec<u32> = out.val.iter().map(|x| x.to_bits()).collect();
+                    let want: Vec<u32> =
+                        tw_entries.val.iter().map(|x| x.to_bits()).collect();
+                    assert_eq!(got, want, "rank {rank} round {round} values");
+                    assert_eq!(
+                        residual.idx, tw_residuals[rank].idx,
+                        "rank {rank} round {round} residual positions"
+                    );
+                    let got: Vec<u32> = residual.val.iter().map(|x| x.to_bits()).collect();
+                    let want: Vec<u32> =
+                        tw_residuals[rank].val.iter().map(|x| x.to_bits()).collect();
+                    assert_eq!(got, want, "rank {rank} round {round} residual values");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn sparse_rsag_shares_the_one_outstanding_round_budget() {
+        let tp = LocalTransport::new(1);
+        let dynamic: &dyn Transport = &tp;
+        let rd = SparseRound {
+            union_len: 4,
+            shard_k: 0,
+        };
+        let mut sv = SparseVec::new();
+        sv.push(1, 2.5);
+        let pending = dynamic.rsag_sparse_start(0, Arc::new(sv), rd).unwrap();
+        let err = dynamic
+            .allgather_start(0, Message::Scalar(1.0))
+            .err()
+            .expect("mixed double start must be rejected")
+            .to_string();
+        assert!(err.contains("double-started"), "{err}");
+        let err = dynamic
+            .rsag_sparse_start(0, Arc::new(SparseVec::new()), rd)
+            .err()
+            .expect("sparse double start must be rejected")
+            .to_string();
+        assert!(err.contains("double-started"), "{err}");
+        let mut scratch = SparseReduceScratch::new();
+        let mut out = SparseVec::new();
+        let mut residual = SparseVec::new();
+        pending.finish(&mut scratch, &mut out, &mut residual).unwrap();
+        assert_eq!(out.idx, vec![1]);
+        assert_eq!(out.val, vec![2.5]);
+        assert!(residual.is_empty(), "uncapped round has no residual");
+    }
+
+    #[test]
+    fn dropped_pending_sparse_reduce_does_not_wedge_peers() {
+        let n = 2;
+        let rounds = 4;
+        let len = 6;
+        let tp = Arc::new(LocalTransport::new(n));
+        let tp1 = tp.clone();
+        let rd = SparseRound {
+            union_len: len,
+            shard_k: 0,
+        };
+        let peer = std::thread::spawn(move || {
+            let ep = Endpoint::new(1, tp1.as_ref());
+            let mut scratch = SparseReduceScratch::new();
+            let mut out = SparseVec::new();
+            let mut residual = SparseVec::new();
+            for round in 0..rounds {
+                let mut sv = SparseVec::new();
+                sv.push(1, 1.0);
+                ep.rsag_sparse(Arc::new(sv), rd, &mut scratch, &mut out, &mut residual)
+                    .unwrap();
+                // rank 0's entry lands in EVERY round, including the
+                // one rank 0 abandoned
+                assert_eq!(out.idx, vec![0, 1], "round {round}");
+                assert_eq!(out.val, vec![(round + 1) as f32, 1.0], "round {round}");
+            }
+        });
+        let ep = Endpoint::new(0, tp.as_ref());
+        let mut scratch = SparseReduceScratch::new();
+        let mut out = SparseVec::new();
+        let mut residual = SparseVec::new();
+        for round in 0..rounds {
+            let mut sv = SparseVec::new();
+            sv.push(0, (round + 1) as f32);
+            if round == 1 {
+                let pending = ep.rsag_sparse_start(Arc::new(sv), rd).unwrap();
+                drop(pending); // walk away without finishing
+            } else {
+                ep.rsag_sparse(Arc::new(sv), rd, &mut scratch, &mut out, &mut residual)
+                    .unwrap();
+                assert_eq!(out.val, vec![(round + 1) as f32, 1.0]);
+            }
+        }
+        peer.join().unwrap();
+    }
+
+    #[test]
+    fn sparse_buf_pool_reuses_released_buffers() {
+        let mut pool = SparseBufPool::new();
+        let a = pool.fill(|b| b.push(3, 1.5));
+        assert_eq!(a.idx, vec![3]);
+        let a_ptr = Arc::as_ptr(&a);
+        drop(a);
+        let mut seen = false;
+        for i in 0..6 {
+            let b = pool.fill(|b| b.push(i, i as f32));
+            seen |= Arc::as_ptr(&b) == a_ptr;
+            assert_eq!(b.idx, vec![i], "cleared before refill");
+        }
+        assert!(seen, "released buffer must be recycled");
+        let held = pool.fill(|b| b.push(7, 7.0));
+        for i in 0..6 {
+            let b = pool.fill(|b| b.push(i, i as f32));
+            assert!(!Arc::ptr_eq(&b, &held), "live handle must not be reused");
+        }
+        assert_eq!(held.idx, vec![7]);
+    }
+
+    #[test]
+    fn local_sparse_rsag_counters_track_entry_bytes_and_rounds() {
+        let n = 2;
+        let len = 8;
+        let tp = Arc::new(LocalTransport::new(n));
+        let rd = SparseRound {
+            union_len: len,
+            shard_k: 0,
+        };
+        let tp1 = tp.clone();
+        let h = std::thread::spawn(move || {
+            let mut sv = SparseVec::new();
+            for i in 0..3 {
+                sv.push(i * 2 + 1, 1.0);
+            }
+            let mut scratch = SparseReduceScratch::new();
+            let mut out = SparseVec::new();
+            let mut residual = SparseVec::new();
+            tp1.rsag_sparse(1, Arc::new(sv), rd, &mut scratch, &mut out, &mut residual)
+                .unwrap();
+        });
+        let mut sv = SparseVec::new();
+        sv.push(0, 2.0);
+        sv.push(4, 2.0);
+        let mut scratch = SparseReduceScratch::new();
+        let mut out = SparseVec::new();
+        let mut residual = SparseVec::new();
+        tp.rsag_sparse(0, Arc::new(sv), rd, &mut scratch, &mut out, &mut residual)
+            .unwrap();
+        h.join().unwrap();
+        let c0 = tp.counters(0).unwrap().snapshot();
+        let c1 = tp.counters(1).unwrap().snapshot();
+        assert_eq!(c0.payload_tx_bytes, 2 * 8, "8 B per sparse entry");
+        assert_eq!(c0.payload_rx_bytes, 3 * 8, "peer's entries only");
+        assert_eq!(c1.payload_tx_bytes, 3 * 8);
+        assert_eq!(c1.payload_rx_bytes, 2 * 8);
+        assert_eq!(c0.rounds_rsag, 1);
+        assert_eq!(c0.rounds_allgather, 0);
+    }
+
+    #[test]
+    fn sparse_contribution_out_of_union_bounds_is_a_typed_error() {
+        let tp = LocalTransport::new(1);
+        let mut sv = SparseVec::new();
+        sv.push(9, 1.0);
+        let rd = SparseRound {
+            union_len: 8,
+            shard_k: 0,
+        };
+        let mut scratch = SparseReduceScratch::new();
+        let mut out = SparseVec::new();
+        let mut residual = SparseVec::new();
+        let err = tp
+            .rsag_sparse(0, Arc::new(sv), rd, &mut scratch, &mut out, &mut residual)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("union length"), "{err}");
     }
 
     #[test]

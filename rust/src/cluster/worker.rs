@@ -42,6 +42,7 @@ use crate::cluster::transport::Endpoint;
 use crate::collectives::{
     allgather_sparse_finish_rk, allgather_sparse_rk, allgather_sparse_start_rk,
     broadcast_selection_finish_rk, broadcast_selection_rk, value_reduce_union_rk,
+    value_reduce_union_sparse_rk, value_reduce_union_sparse_start_rk,
     value_reduce_union_start_rk, CostModel, RoundScratch,
 };
 use crate::coordinator::SelectOutput;
@@ -50,7 +51,7 @@ use crate::grad::synth::SynthGen;
 use crate::metrics::IterRecord;
 use crate::obs::SpanTracer;
 use crate::sparsifiers::{CommPattern, RoundCtx, Sparsifier};
-use crate::training::sim::SimCfg;
+use crate::training::sim::{check_sparse_shards, effective_shard_k, SimCfg};
 use crate::util::stats::l2_norm;
 use std::sync::Arc;
 use std::time::Instant;
@@ -171,6 +172,8 @@ impl<'a> SimWorker<'a> {
         let n = self.cfg.n_ranks;
         let n_g = self.gen.n_g();
         let dense = matches!(self.sp.comm_pattern(), CommPattern::DenseAllReduce);
+        check_sparse_shards(self.cfg, self.sp.comm_pattern())?;
+        let sparse = self.cfg.sparse_shards;
         let density = self.sp.target_density();
         let k_user = ((density * n_g as f64).round() as usize).max(1);
 
@@ -232,6 +235,13 @@ impl<'a> SimWorker<'a> {
                     t_comm = t_bcast + t_red;
                 }
                 CommPattern::AllGather => {
+                    if sparse {
+                        // the board deposit consumes `out`; the sparse
+                        // contribution and error carry need our own
+                        // selection after the union lands
+                        scratch.own_idx.clear();
+                        scratch.own_idx.extend_from_slice(&out.idx);
+                    }
                     let stats = allgather_sparse_rk(
                         &self.ep,
                         Arc::new(out),
@@ -239,16 +249,29 @@ impl<'a> SimWorker<'a> {
                         &mut scratch.union_idx,
                         &mut scratch.k_by_rank,
                     )?;
-                    let t_red = value_reduce_union_rk(
-                        &self.ep,
-                        self.cfg.collective,
-                        &acc,
-                        &scratch.union_idx,
-                        &self.net,
-                        &mut scratch.send,
-                        &mut scratch.shards,
-                        &mut scratch.reduced,
-                    )?;
+                    let t_red = if sparse {
+                        value_reduce_union_sparse_rk(
+                            &self.ep,
+                            &acc,
+                            &scratch.own_idx,
+                            &scratch.union_idx,
+                            effective_shard_k(self.cfg, &scratch.k_by_rank),
+                            &self.net,
+                            &mut scratch.sparse,
+                            &mut scratch.reduced,
+                        )?
+                    } else {
+                        value_reduce_union_rk(
+                            &self.ep,
+                            self.cfg.collective,
+                            &acc,
+                            &scratch.union_idx,
+                            &self.net,
+                            &mut scratch.send,
+                            &mut scratch.shards,
+                            &mut scratch.reduced,
+                        )?
+                    };
                     k_actual = scratch.union_idx.len();
                     f_ratio = stats.f_ratio;
                     t_comm = stats.time_s + t_red;
@@ -257,10 +280,24 @@ impl<'a> SimWorker<'a> {
             self.span_end("round", r0);
             let m_comm = rst.elapsed().as_secs_f64();
 
-            // --- error carry (Alg. 1 lines 18-19): zero union coords
+            // --- error carry (Alg. 1 lines 18-19): zero union coords.
+            // Under --sparse-shards only our OWN selections left the
+            // node, so only those are zeroed, and the per-hop re-top-k
+            // residuals (positions into the union) are added back — the
+            // discarded mass re-enters error feedback.
             if !dense {
-                for &i in &scratch.union_idx {
-                    acc[i as usize] = 0.0;
+                if sparse {
+                    for &i in &scratch.own_idx {
+                        acc[i as usize] = 0.0;
+                    }
+                    let res = &scratch.sparse.residual;
+                    for (&pos, &v) in res.idx.iter().zip(res.val.iter()) {
+                        acc[scratch.union_idx[pos as usize] as usize] += v;
+                    }
+                } else {
+                    for &i in &scratch.union_idx {
+                        acc[i as usize] = 0.0;
+                    }
                 }
                 std::mem::swap(&mut err, &mut acc);
             }
@@ -315,6 +352,8 @@ impl<'a> SimWorker<'a> {
         let n = self.cfg.n_ranks;
         let n_g = self.gen.n_g();
         let dense = matches!(self.sp.comm_pattern(), CommPattern::DenseAllReduce);
+        check_sparse_shards(self.cfg, self.sp.comm_pattern())?;
+        let sparse = self.cfg.sparse_shards;
         let density = self.sp.target_density();
         let k_user = ((density * n_g as f64).round() as usize).max(1);
 
@@ -383,6 +422,10 @@ impl<'a> SimWorker<'a> {
                     f_ratio = 1.0; // broadcast has no padding concept
                 }
                 CommPattern::AllGather => {
+                    if sparse {
+                        s.own_idx.clear();
+                        s.own_idx.extend_from_slice(&out.idx);
+                    }
                     let pending = allgather_sparse_start_rk(
                         &self.ep,
                         Arc::new(std::mem::take(&mut out)),
@@ -404,8 +447,28 @@ impl<'a> SimWorker<'a> {
             // The contribution (acc at the union coordinates) is
             // snapshotted into the rotating send pool here, BEFORE the
             // error carry below mutates the accumulator.
+            //
+            // --sparse-shards cannot leave the reduce in flight across
+            // the overlap window: its residual must land in `err`
+            // before iteration t+1's accumulate reads it — a true data
+            // dependency. The sparse round is therefore started and
+            // finished back to back here and the clock stays honestly
+            // additive (no `overlapped_step` credit below).
+            let mut t_red_done = 0.0;
             let pending_reduce = if dense {
                 None // the dense sim models the reduce, it moves no data
+            } else if sparse {
+                let pending = value_reduce_union_sparse_start_rk(
+                    &self.ep,
+                    &acc,
+                    &s.own_idx,
+                    &s.union_idx,
+                    effective_shard_k(self.cfg, &s.k_by_rank),
+                    &mut s.sparse.send,
+                )?;
+                t_red_done =
+                    pending.finish_sparse(k_actual, &self.net, &mut s.sparse, &mut s.reduced)?;
+                None
             } else {
                 Some(value_reduce_union_start_rk(
                     &self.ep,
@@ -422,9 +485,21 @@ impl<'a> SimWorker<'a> {
 
             // --- error carry (Alg. 1 lines 18-19) + replica feedback,
             // in exactly the sequential order, while the reduce flies
+            // (sparse mode already landed it above, so its residual is
+            // available here exactly like in the sequential loop)
             if !dense {
-                for &i in &s.union_idx {
-                    acc[i as usize] = 0.0;
+                if sparse {
+                    for &i in &s.own_idx {
+                        acc[i as usize] = 0.0;
+                    }
+                    let res = &s.sparse.residual;
+                    for (&pos, &v) in res.idx.iter().zip(res.val.iter()) {
+                        acc[s.union_idx[pos as usize] as usize] += v;
+                    }
+                } else {
+                    for &i in &s.union_idx {
+                        acc[i as usize] = 0.0;
+                    }
                 }
                 std::mem::swap(&mut err, &mut acc);
             }
@@ -457,7 +532,8 @@ impl<'a> SimWorker<'a> {
                     t_meta
                         + pending.finish(k_actual, &self.net, &mut s.shards, &mut s.reduced)?
                 }
-                None => t_meta,
+                // dense sim (0.0) or a sparse round landed up front
+                None => t_meta + t_red_done,
             };
             self.span_end("round:complete", f0);
             let m_comm = m_meta + fst.elapsed().as_secs_f64();
@@ -478,7 +554,13 @@ impl<'a> SimWorker<'a> {
                 .allgather_f64_fold(my_select, 0.0f64, |a, x| a.max(x))?;
 
             let t_compute = self.net.straggler.max_compute(t, self.cfg.compute_s, n);
-            let overlap = self.net.overlapped_step(t_compute, t_comm);
+            // sparse mode serialized the reduce (residual dependency),
+            // so no overlap credit — matches the lock-step twin
+            let t_exposed_comm = if sparse {
+                t_comm
+            } else {
+                self.net.overlapped_step(t_compute, t_comm).exposed_s
+            };
             records.push(IterRecord {
                 t,
                 loss: f64::NAN,
@@ -492,7 +574,7 @@ impl<'a> SimWorker<'a> {
                 t_compute,
                 t_select,
                 t_comm,
-                t_exposed_comm: overlap.exposed_s,
+                t_exposed_comm,
                 m_compute: m_compute_cur,
                 m_comm,
             });

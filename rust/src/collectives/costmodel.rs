@@ -30,6 +30,16 @@
 //! [`CostModel::rsag_recv_bytes_per_rank`] helpers quantify the real
 //! received-volume gap the benches report).
 //!
+//! With `--sparse-shards` the rsag shards carry `(index, value)` entry
+//! lists instead of dense union slices, so the byte helpers get sparse
+//! twins keyed on *entry counts*:
+//! [`CostModel::rsag_sparse_recv_bytes_per_rank`]`(E) =
+//! 2(n-1)/n·E·SPARSE_ENTRY_BYTES`, with ring/star link forms
+//! ([`CostModel::rsag_sparse_link_bytes_ring`] /
+//! [`CostModel::rsag_sparse_link_bytes_star_hub`]). The α–β *clock*
+//! stays collective-neutral — sparse shards change measured bytes, not
+//! modeled times.
+//!
 //! These are *models*, not measurements — the simulator charges them to a
 //! virtual clock so figure shapes (who wins, crossovers) reproduce the
 //! paper's cluster behaviour deterministically on one box.
@@ -392,6 +402,36 @@ impl CostModel {
         2 * self.topo.n_ranks.saturating_sub(1) * bytes
     }
 
+    /// Bytes one rank *receives* per **sparse** reduce-scatter →
+    /// all-gather round (`--sparse-shards`) moving `entries` total
+    /// `(index, value)` entries: `2(n-1)/n·E·SPARSE_ENTRY_BYTES` —
+    /// the dense form's `2(n-1)/n·B` with the dense union volume `B =
+    /// V·4` replaced by the entry volume `E·8`. With disjoint
+    /// selections `E = Σk_i ≈ k`, so this is `≈ 2k·8/… ` flat in n and
+    /// strictly below the dense rsag's `2(n-1)/n·V·4` whenever `E·2 <
+    /// V` (union twice as large as any rank's selection — the regime
+    /// sparsification lives in). Exact for uncapped full-overlap
+    /// rounds, an upper bound once the per-hop cap discards entries.
+    pub fn rsag_sparse_recv_bytes_per_rank(&self, entries: usize) -> usize {
+        self.rsag_recv_bytes_per_rank(entries * Self::SPARSE_ENTRY_BYTES)
+    }
+
+    /// Bytes any single ring link carries per sparse reduce-scatter →
+    /// all-gather round over `entries` total entries: identical to
+    /// [`CostModel::rsag_sparse_recv_bytes_per_rank`] — the sparse ring
+    /// keeps the dense ring's balanced-link property (each link forwards
+    /// n-1 partial shards plus n-1 reduced shards of ~`E/n` entries).
+    pub fn rsag_sparse_link_bytes_ring(&self, entries: usize) -> usize {
+        self.rsag_sparse_recv_bytes_per_rank(entries)
+    }
+
+    /// Bytes the *hub's* link carries per star-mediated sparse rsag
+    /// round over `entries` total entries: `(n-1)·E·8` contributions in
+    /// plus `(n-1)·E·8` reduced entry lists out.
+    pub fn rsag_sparse_link_bytes_star_hub(&self, entries: usize) -> usize {
+        self.rsag_link_bytes_star_hub(entries * Self::SPARSE_ENTRY_BYTES)
+    }
+
     /// Binomial-tree broadcast of `bytes` from one root.
     pub fn broadcast(&self, bytes: usize) -> f64 {
         let n = self.topo.n_ranks;
@@ -597,6 +637,39 @@ mod tests {
         assert!(
             (m.reduce_scatter_allgather(b) - (6.0 * a + 1.5 * b as f64 * beta)).abs() < 1e-15
         );
+    }
+
+    #[test]
+    fn sparse_rsag_byte_forms_are_entry_scaled_rsag_forms() {
+        let m1 = cm(1);
+        assert_eq!(m1.rsag_sparse_recv_bytes_per_rank(1_000), 0);
+        assert_eq!(m1.rsag_sparse_link_bytes_ring(1_000), 0);
+        assert_eq!(m1.rsag_sparse_link_bytes_star_hub(1_000), 0);
+        for n in [2usize, 4, 8, 16] {
+            let m = cm(n);
+            for entries in [0usize, 12, 512, 100_000] {
+                let bytes = entries * CostModel::SPARSE_ENTRY_BYTES;
+                assert_eq!(
+                    m.rsag_sparse_recv_bytes_per_rank(entries),
+                    2 * (n - 1) * bytes / n
+                );
+                assert_eq!(
+                    m.rsag_sparse_link_bytes_ring(entries),
+                    m.rsag_sparse_recv_bytes_per_rank(entries)
+                );
+                assert_eq!(m.rsag_sparse_link_bytes_star_hub(entries), 2 * (n - 1) * bytes);
+            }
+            // the win condition the benches assert: with E entries on
+            // the wire vs a V-float dense union, sparse receives less
+            // whenever 2E < V
+            let v = 8 * 512usize; // dense union floats
+            let e = 512usize; // total sparse entries
+            assert!(
+                m.rsag_sparse_recv_bytes_per_rank(e)
+                    < m.rsag_recv_bytes_per_rank(v * CostModel::DENSE_ENTRY_BYTES),
+                "n={n}: sparse entries must undercut the dense union"
+            );
+        }
     }
 
     #[test]

@@ -36,11 +36,22 @@
 //! for both forms ([`CostModel::reduce_scatter_allgather`]); what
 //! changes is the harness's real traffic — `2(n-1)/n·V` received per
 //! rank instead of `(n-1)·V` — and the low-order bits of the sums.
+//!
+//! The rsag form additionally exists in a *truly sparse* flavour
+//! (`--sparse-shards`, [`sparse`]): shards travel as `(index, value)`
+//! entry lists holding only each rank's own selections, with an
+//! optional per-hop re-top-k ([`sparse::retain_top_k`]) whose discards
+//! are collected as per-rank residuals and fed back into error
+//! feedback. The canonical merge order is still
+//! [`rsag_rank_order`]-per-shard, so sparse-rsag traces stay bit-exact
+//! across every transport; [`CostModel::rsag_sparse_recv_bytes_per_rank`]
+//! quantifies the byte win.
 
 pub mod allgather;
 pub mod allreduce;
 pub mod costmodel;
 pub mod ranked;
+pub mod sparse;
 pub mod topology;
 
 pub use allgather::{
@@ -54,12 +65,18 @@ pub use allreduce::{
     sparse_allreduce_union_iter, sparse_allreduce_union_rsag_into,
 };
 pub use costmodel::{CostModel, OverlappedStep, StragglerCfg};
+pub use sparse::{
+    auto_shard_k, canonicalize_residual, gather_sparse_contribution_into, merge_add_sparse,
+    reduce_sparse_contributions_with, reduce_sparse_shard_with, retain_top_k, scatter_sparse_into,
+    sparse_shard_allreduce_lockstep, SparseReduceScratch, SparseVec,
+};
 pub use ranked::{
     allgather_sparse_finish_rk, allgather_sparse_rk, allgather_sparse_start_rk,
     allreduce_dense_rk, allreduce_dense_start_rk, broadcast_selection_finish_rk,
     broadcast_selection_rk, rsag_allreduce_dense_rk, rsag_allreduce_union_rk,
     sparse_allreduce_union_finish_rk, sparse_allreduce_union_rk,
     sparse_allreduce_union_start_rk, value_reduce_dense_rk, value_reduce_dense_start_rk,
-    value_reduce_union_rk, value_reduce_union_start_rk, PendingValueReduce, RoundScratch,
+    value_reduce_union_rk, value_reduce_union_sparse_rk, value_reduce_union_sparse_start_rk,
+    value_reduce_union_start_rk, PendingValueReduce, RoundScratch, SparseRoundScratch,
 };
 pub use topology::Topology;

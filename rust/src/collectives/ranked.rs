@@ -25,6 +25,11 @@
 //! the value reduce); the reduced *values* differ in low bits because
 //! rsag sums each shard in the canonical ring order
 //! ([`crate::collectives::rsag_rank_order`]) instead of rank order.
+//! Under `--sparse-shards` the rsag form additionally runs truly
+//! sparse ([`value_reduce_union_sparse_rk`] / `_start_rk`): only each
+//! rank's own `(position, value)` entries travel, and the per-hop
+//! re-top-k's discards come back as this rank's residual in
+//! [`SparseRoundScratch::residual`] for error feedback.
 //!
 //! Everything here is steady-state allocation-free: selections travel as
 //! `Arc<SelectOutput>` (one wrap at the selection boundary), float
@@ -39,8 +44,12 @@
 use super::allgather::{merge_selections_iter, AllGatherStats};
 use super::allreduce::{accumulate_contribution, gather_contribution_into};
 use super::costmodel::CostModel;
+use super::sparse::{
+    gather_sparse_contribution_into, scatter_sparse_into, SparseReduceScratch, SparseVec,
+};
 use crate::cluster::transport::{
     envelope_mismatch, Endpoint, FloatBufPool, Message, PendingReduce, PendingRound,
+    PendingSparseReduce, SparseBufPool, SparseRound,
 };
 use crate::cluster::CollectiveKind;
 use crate::coordinator::SelectOutput;
@@ -66,9 +75,43 @@ pub struct RoundScratch {
     /// Rotating reduced-shard buffers for the reduce-scatter →
     /// all-gather collective form.
     pub shards: FloatBufPool,
+    /// Buffers of the truly sparse rsag form (`--sparse-shards`).
+    pub sparse: SparseRoundScratch,
+    /// Staged copy of this rank's own selected indices for
+    /// `--sparse-shards` rounds — saved before the selection board
+    /// deposit consumes the [`SelectOutput`], because the sparse
+    /// contribution and the own-coordinate error carry both need it
+    /// after the union lands.
+    pub own_idx: Vec<u32>,
 }
 
 impl RoundScratch {
+    /// Empty scratch; buffers size themselves on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// The `--sparse-shards` slice of a worker's round scratch: rotating
+/// sparse send buffers, the canonical-merge double-buffer, and the
+/// per-round landing buffers for the reduced entry list and this
+/// rank's residual. Retained across rounds like the rest of
+/// [`RoundScratch`], so sparse rounds stay steady-state
+/// allocation-free on the in-process transports.
+#[derive(Default)]
+pub struct SparseRoundScratch {
+    /// Rotating send buffers for sparse contributions.
+    pub send: SparseBufPool,
+    /// Merge scratch for the canonical sparse reduce.
+    pub scratch: SparseReduceScratch,
+    /// Reduced entry list of the last sparse round.
+    pub entries: SparseVec,
+    /// This rank's canonicalized re-selection residual of the last
+    /// sparse round — the error-feedback add-back.
+    pub residual: SparseVec,
+}
+
+impl SparseRoundScratch {
     /// Empty scratch; buffers size themselves on first use.
     pub fn new() -> Self {
         Self::default()
@@ -312,13 +355,19 @@ pub enum PendingValueReduce<'a> {
     /// A reduce-scatter → all-gather round; the reduce happens in
     /// flight.
     Sharded(PendingReduce<'a>),
+    /// A truly sparse rsag round (`--sparse-shards`); finish with
+    /// [`PendingValueReduce::finish_sparse`], which also surfaces the
+    /// re-selection residual.
+    Sparse(PendingSparseReduce<'a>),
 }
 
 impl PendingValueReduce<'_> {
     /// Land the reduced `len`-element vector in `reduced` and return
     /// the modeled wire time — the same value for both kinds (the clock
     /// is collective-invariant); only the reduction order and the real
-    /// traffic differ.
+    /// traffic differ. A `--sparse-shards` round must go through
+    /// [`PendingValueReduce::finish_sparse`] instead (its residual
+    /// needs a landing buffer).
     pub fn finish(
         self,
         len: usize,
@@ -335,6 +384,37 @@ impl PendingValueReduce<'_> {
                 pending.finish(shards, reduced)?;
                 Ok(net.reduce_scatter_allgather(len * CostModel::DENSE_ENTRY_BYTES))
             }
+            PendingValueReduce::Sparse(_) => Err(Error::invariant(
+                "a --sparse-shards round must be finished with finish_sparse — \
+                 engine dispatch diverged",
+            )),
+        }
+    }
+
+    /// Sparse twin of [`PendingValueReduce::finish`]: land the reduced
+    /// entries scattered into the dense `len`-element `reduced` buffer
+    /// (zeros at unselected union positions), leave the reduced entry
+    /// list in `sparse.entries` and this rank's canonical residual in
+    /// `sparse.residual`, and return the modeled wire time — still the
+    /// collective-neutral dense-union charge; what shrinks is the real
+    /// traffic ([`CostModel::rsag_sparse_recv_bytes_per_rank`]).
+    pub fn finish_sparse(
+        self,
+        len: usize,
+        net: &CostModel,
+        sparse: &mut SparseRoundScratch,
+        reduced: &mut Vec<f32>,
+    ) -> Result<f64> {
+        match self {
+            PendingValueReduce::Sparse(pending) => {
+                pending.finish(&mut sparse.scratch, &mut sparse.entries, &mut sparse.residual)?;
+                scatter_sparse_into(&sparse.entries, len, reduced);
+                Ok(net.reduce_scatter_allgather(len * CostModel::DENSE_ENTRY_BYTES))
+            }
+            _ => Err(Error::invariant(
+                "finish_sparse on a dense value-reduce round — engine dispatch \
+                 diverged",
+            )),
         }
     }
 }
@@ -379,6 +459,52 @@ pub fn value_reduce_union_start_rk<'a>(
         )),
         CollectiveKind::Rsag => Ok(PendingValueReduce::Sharded(ep.rsag_start(mine)?)),
     }
+}
+
+/// Blocking truly sparse value reduce over the union index set
+/// (`--sparse-shards`, rsag only): contribute `acc` at this rank's OWN
+/// selected coordinates (`own_idx`, global positions — the entries
+/// other ranks did not select never travel), receive the canonically
+/// reduced union values scattered into `reduced`, and collect this
+/// rank's re-selection discards in `sparse.residual` for error
+/// feedback. `shard_k` is the per-hop re-top-k cap (0 = uncapped;
+/// [`crate::collectives::auto_shard_k`] picks the paper-shaped
+/// default). The modeled time equals the dense rsag's — what changes
+/// is the measured traffic.
+#[allow(clippy::too_many_arguments)]
+pub fn value_reduce_union_sparse_rk(
+    ep: &Endpoint<'_>,
+    acc: &[f32],
+    own_idx: &[u32],
+    union_idx: &[u32],
+    shard_k: usize,
+    net: &CostModel,
+    sparse: &mut SparseRoundScratch,
+    reduced: &mut Vec<f32>,
+) -> Result<f64> {
+    let pending =
+        value_reduce_union_sparse_start_rk(ep, acc, own_idx, union_idx, shard_k, &mut sparse.send)?;
+    pending.finish_sparse(union_idx.len(), net, sparse, reduced)
+}
+
+/// Split-phase start of the truly sparse value reduce: the entry list
+/// `(union position, acc value)` over this rank's own selections is
+/// snapshotted into the rotating sparse send pool and put in flight.
+/// Finish with [`PendingValueReduce::finish_sparse`].
+pub fn value_reduce_union_sparse_start_rk<'a>(
+    ep: &Endpoint<'a>,
+    acc: &[f32],
+    own_idx: &[u32],
+    union_idx: &[u32],
+    shard_k: usize,
+    send: &mut SparseBufPool,
+) -> Result<PendingValueReduce<'a>> {
+    let mine = send.fill(|sv| gather_sparse_contribution_into(acc, own_idx, union_idx, sv));
+    let round = SparseRound {
+        union_len: union_idx.len(),
+        shard_k,
+    };
+    Ok(PendingValueReduce::Sparse(ep.rsag_sparse_start(mine, round)?))
 }
 
 /// Blocking dense value reduce, dispatched on the configured collective
@@ -564,6 +690,144 @@ mod tests {
                 assert_eq!(t.to_bits(), t_ag.to_bits());
             }
         }
+    }
+
+    #[test]
+    fn sparse_value_reduce_matches_the_lockstep_twin_bit_for_bit() {
+        use crate::collectives::sparse::sparse_shard_allreduce_lockstep;
+
+        // overlapping order-probe selections over a 9-coordinate
+        // gradient; the union spans every selected coordinate
+        let n = 3;
+        let grad_len = 9usize;
+        let own: Vec<Vec<u32>> = vec![vec![0, 2, 4, 6, 8], vec![1, 2, 5, 6], vec![0, 1, 7, 8]];
+        let accs: Vec<Vec<f32>> = (0..n)
+            .map(|r| {
+                (0..grad_len)
+                    .map(|i| [1.0e8f32, 1.0, -1.0e8][(r + i) % 3])
+                    .collect()
+            })
+            .collect();
+        let mut union_idx: Vec<u32> = own.iter().flatten().copied().collect();
+        union_idx.sort_unstable();
+        union_idx.dedup();
+
+        for shard_k in [0usize, 2] {
+            // lock-step reference
+            let contribs: Vec<SparseVec> = (0..n)
+                .map(|r| {
+                    let mut sv = SparseVec::new();
+                    gather_sparse_contribution_into(&accs[r], &own[r], &union_idx, &mut sv);
+                    sv
+                })
+                .collect();
+            let net = CostModel::paper_testbed(n);
+            let mut ls = SparseReduceScratch::new();
+            let mut entries = SparseVec::new();
+            let mut reduced_ref = Vec::new();
+            let mut residuals_ref: Vec<SparseVec> = (0..n).map(|_| SparseVec::new()).collect();
+            let t_ref = sparse_shard_allreduce_lockstep(
+                &contribs,
+                union_idx.len(),
+                shard_k,
+                &net,
+                &mut ls,
+                &mut entries,
+                &mut reduced_ref,
+                &mut residuals_ref,
+            );
+
+            let tp = Arc::new(LocalTransport::new(n));
+            let mut handles = Vec::new();
+            for rank in 0..n {
+                let tp = tp.clone();
+                let acc = accs[rank].clone();
+                let own_idx = own[rank].clone();
+                let union_idx = union_idx.clone();
+                handles.push(std::thread::spawn(move || {
+                    let ep = Endpoint::new(rank, tp.as_ref());
+                    let net = CostModel::paper_testbed(3);
+                    let mut scratch = RoundScratch::new();
+                    // blocking form
+                    let t = value_reduce_union_sparse_rk(
+                        &ep,
+                        &acc,
+                        &own_idx,
+                        &union_idx,
+                        shard_k,
+                        &net,
+                        &mut scratch.sparse,
+                        &mut scratch.reduced,
+                    )
+                    .unwrap();
+                    let blocking = scratch.reduced.clone();
+                    let blocking_res = scratch.sparse.residual.clone();
+                    // split-phase form lands the identical bits
+                    let pending = value_reduce_union_sparse_start_rk(
+                        &ep,
+                        &acc,
+                        &own_idx,
+                        &union_idx,
+                        shard_k,
+                        &mut scratch.sparse.send,
+                    )
+                    .unwrap();
+                    let t2 = pending
+                        .finish_sparse(
+                            union_idx.len(),
+                            &net,
+                            &mut scratch.sparse,
+                            &mut scratch.reduced,
+                        )
+                        .unwrap();
+                    assert_eq!(t.to_bits(), t2.to_bits());
+                    assert_eq!(blocking, scratch.reduced);
+                    assert_eq!(blocking_res, scratch.sparse.residual);
+                    (scratch, t)
+                }));
+            }
+            for (rank, h) in handles.into_iter().enumerate() {
+                let (scratch, t) = h.join().unwrap();
+                let got: Vec<u32> = scratch.reduced.iter().map(|x| x.to_bits()).collect();
+                let want: Vec<u32> = reduced_ref.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(got, want, "rank {rank} shard_k {shard_k}");
+                assert_eq!(
+                    scratch.sparse.entries, entries,
+                    "rank {rank} shard_k {shard_k} entries"
+                );
+                assert_eq!(
+                    scratch.sparse.residual, residuals_ref[rank],
+                    "rank {rank} shard_k {shard_k} residual"
+                );
+                assert_eq!(t.to_bits(), t_ref.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn mismatched_sparse_finish_is_a_typed_error() {
+        let tp = Arc::new(LocalTransport::new(1));
+        let ep = Endpoint::new(0, tp.as_ref());
+        let mut scratch = RoundScratch::new();
+        let net = CostModel::paper_testbed(1);
+        // a dense round finished through the sparse path
+        let pending =
+            value_reduce_dense_start_rk(&ep, CollectiveKind::Allgather, &[1.0], &mut scratch.send)
+                .unwrap();
+        let err = pending
+            .finish_sparse(1, &net, &mut scratch.sparse, &mut scratch.reduced)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("finish_sparse"), "{err}");
+        // a sparse round finished through the dense path
+        let pending =
+            value_reduce_union_sparse_start_rk(&ep, &[1.0], &[0], &[0], 0, &mut scratch.sparse.send)
+                .unwrap();
+        let err = pending
+            .finish(1, &net, &mut scratch.shards, &mut scratch.reduced)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("finish_sparse"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,706 @@
+//! Sparse `(index, value)` shard arithmetic for the reduce-scatter →
+//! all-gather collective (`--sparse-shards`, ISSUE 8).
+//!
+//! The dense rsag path moves `shard_len` floats per shard even when a
+//! rank only *selected* `k/n` of them. The sparse form instead puts each
+//! rank's own `(union position, value)` pairs on the wire — entries the
+//! rank did not select never travel and simply stay in its error
+//! accumulator — so shard bytes shrink from `shard_len · 4` toward
+//! `(k/n) · SPARSE_ENTRY_BYTES`, the paper's near-optimal `O(k)`
+//! sparsification cost.
+//!
+//! Two properties make the collective honest:
+//!
+//! * **One canonical reduction.** Every transport reduces shard `c` by
+//!   merging contributions in [`rsag_rank_order`]`(n, c)` — the exact
+//!   order a chunked ring naturally accumulates in (injector `c+1`
+//!   first, owner `c` last) — with the optional per-hop re-top-k applied
+//!   after each merge. The shared-board, hub-star and lock-step
+//!   implementations *replay* this sequence ([`reduce_sparse_shard_with`] /
+//!   [`reduce_sparse_contributions_with`]), the two rings *are* this
+//!   sequence, so sparse-rsag results are bit-exact everywhere.
+//! * **Conservation under re-selection.** With a per-hop cap
+//!   (`--shard-k`), entries discarded after rank `r`'s merge step are
+//!   routed to rank `r`'s residual buffer ([`reduce_sparse_shard_with`]'s
+//!   `on_discard(r, …)`) — in a ring that is literally the rank holding
+//!   the partial — and the caller feeds them back into that rank's error
+//!   feedback next iteration. Nothing vanishes: residuals + delivered
+//!   sums equal the canonical accumulation of every contribution.
+//!
+//! The cap itself defaults to [`auto_shard_k`] (`⌈k_max/n⌉`) when
+//! `--sparse-shards` is on without an explicit `--shard-k`, which bounds
+//! per-rank received volume by `2(n-1)·⌈k_max/n⌉·SPARSE_ENTRY_BYTES ≈
+//! 2·k` entries' worth of bytes per round
+//! ([`CostModel::rsag_sparse_recv_bytes_per_rank`]).
+
+use super::allreduce::{rsag_rank_order, shard_bounds};
+use super::costmodel::CostModel;
+
+/// A sorted sparse vector: strictly increasing `idx` (u32 positions into
+/// some index space — here, positions into the round's union) with one
+/// value per index. This is the payload sparse rsag moves, both as a
+/// rank's contribution and as a reduced/partial shard.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SparseVec {
+    /// Strictly increasing positions.
+    pub idx: Vec<u32>,
+    /// Values aligned with `idx`.
+    pub val: Vec<f32>,
+}
+
+impl SparseVec {
+    /// Empty vector; buffers size themselves on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of stored entries.
+    pub fn len(&self) -> usize {
+        debug_assert_eq!(self.idx.len(), self.val.len());
+        self.idx.len()
+    }
+
+    /// `true` when no entries are stored.
+    pub fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+
+    /// Drop all entries, retaining capacity.
+    pub fn clear(&mut self) {
+        self.idx.clear();
+        self.val.clear();
+    }
+
+    /// Append one entry (caller keeps `idx` strictly increasing).
+    pub fn push(&mut self, idx: u32, val: f32) {
+        debug_assert!(self.idx.last().map_or(true, |&last| last < idx));
+        self.idx.push(idx);
+        self.val.push(val);
+    }
+
+    /// Append one entry with no ordering contract — residual collectors
+    /// accumulate discards in canonical *hop* order (a ring rank sees
+    /// its chunks in ring-schedule order, not position order);
+    /// [`canonicalize_residual`] restores the sorted form afterwards.
+    pub fn push_entry(&mut self, idx: u32, val: f32) {
+        self.idx.push(idx);
+        self.val.push(val);
+    }
+
+    /// Replace contents with a copy of `(idx, val)` slices.
+    pub fn copy_from(&mut self, idx: &[u32], val: &[f32]) {
+        debug_assert_eq!(idx.len(), val.len());
+        self.idx.clear();
+        self.idx.extend_from_slice(idx);
+        self.val.clear();
+        self.val.extend_from_slice(val);
+    }
+
+    /// Model-unit wire bytes of this payload: one
+    /// [`CostModel::SPARSE_ENTRY_BYTES`] (index + value) per entry.
+    pub fn payload_bytes(&self) -> usize {
+        self.len() * CostModel::SPARSE_ENTRY_BYTES
+    }
+
+    /// The sub-slices whose positions fall in `[s, e)` — a shard's view
+    /// of this vector, found by binary search (positions are sorted).
+    pub fn range(&self, s: usize, e: usize) -> (&[u32], &[f32]) {
+        let lo = self.idx.partition_point(|&i| (i as usize) < s);
+        let hi = self.idx.partition_point(|&i| (i as usize) < e);
+        (&self.idx[lo..hi], &self.val[lo..hi])
+    }
+}
+
+/// Reusable buffers for the canonical sparse reduction: the running
+/// partial, the merge double-buffer and the re-top-k permutation. One
+/// per worker, retained across rounds, so steady-state sparse rounds
+/// allocate nothing.
+#[derive(Default)]
+pub struct SparseReduceScratch {
+    /// Running partial shard during the canonical accumulation.
+    pub(crate) partial: SparseVec,
+    /// Merge output double-buffer (swapped with `partial` per step —
+    /// the ring transports borrow it as their per-hop merge target).
+    pub(crate) merged: SparseVec,
+    /// Re-top-k permutation scratch.
+    pub(crate) perm: Vec<u32>,
+}
+
+impl SparseReduceScratch {
+    /// Empty scratch; buffers size themselves on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Merge-add `b` into `a` (both strictly increasing), writing the union
+/// into `out` (cleared first). On a shared position the value is
+/// `a + b` — the running partial accumulates first, the newly merged
+/// contribution second, which is exactly the per-coordinate order the
+/// canonical in-flight ring sum produces.
+pub fn merge_add_sparse(
+    a_idx: &[u32],
+    a_val: &[f32],
+    b_idx: &[u32],
+    b_val: &[f32],
+    out: &mut SparseVec,
+) {
+    debug_assert_eq!(a_idx.len(), a_val.len());
+    debug_assert_eq!(b_idx.len(), b_val.len());
+    out.clear();
+    out.idx.reserve(a_idx.len() + b_idx.len());
+    out.val.reserve(a_idx.len() + b_idx.len());
+    let (mut i, mut j) = (0, 0);
+    while i < a_idx.len() && j < b_idx.len() {
+        match a_idx[i].cmp(&b_idx[j]) {
+            std::cmp::Ordering::Less => {
+                out.idx.push(a_idx[i]);
+                out.val.push(a_val[i]);
+                i += 1;
+            }
+            std::cmp::Ordering::Greater => {
+                out.idx.push(b_idx[j]);
+                out.val.push(b_val[j]);
+                j += 1;
+            }
+            std::cmp::Ordering::Equal => {
+                out.idx.push(a_idx[i]);
+                out.val.push(a_val[i] + b_val[j]);
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    out.idx.extend_from_slice(&a_idx[i..]);
+    out.val.extend_from_slice(&a_val[i..]);
+    out.idx.extend_from_slice(&b_idx[j..]);
+    out.val.extend_from_slice(&b_val[j..]);
+}
+
+/// Deterministic per-hop re-selection: retain the `k` entries with the
+/// largest `|value|` (f32 total order, so NaN/∞ sort deterministically;
+/// ties keep the lower position), emitting every discarded entry in
+/// position order through `on_discard`. No-op when `sv` already fits.
+/// In-place and allocation-free given a warm `perm` scratch.
+pub fn retain_top_k(
+    sv: &mut SparseVec,
+    k: usize,
+    perm: &mut Vec<u32>,
+    mut on_discard: impl FnMut(u32, f32),
+) {
+    let m = sv.len();
+    if m <= k {
+        return;
+    }
+    perm.clear();
+    perm.extend(0..m as u32);
+    let val = &sv.val;
+    perm.sort_unstable_by(|&a, &b| {
+        let (fa, fb) = (val[a as usize].abs(), val[b as usize].abs());
+        fb.total_cmp(&fa).then(a.cmp(&b))
+    });
+    // positions are strictly increasing in `idx`, so sorting each half
+    // by array position restores position order within it
+    perm[..k].sort_unstable();
+    perm[k..].sort_unstable();
+    for p in k..m {
+        let p = perm[p] as usize;
+        on_discard(sv.idx[p], sv.val[p]);
+    }
+    // left-compact the kept entries (kept positions ascend, and the
+    // d-th kept position is always >= d, so this never clobbers)
+    for d in 0..k {
+        let p = perm[d] as usize;
+        sv.idx[d] = sv.idx[p];
+        sv.val[d] = sv.val[p];
+    }
+    sv.idx.truncate(k);
+    sv.val.truncate(k);
+}
+
+/// Canonicalize a residual collection in place: sort by position (the
+/// collection order as tie-break, making the comparator a total order
+/// without a stable sort's allocation) and sum any duplicate positions
+/// in that order. A rank merges at most once per shard and shards are
+/// disjoint, so within one round duplicates cannot occur — but the
+/// *collection* order differs by transport (a ring rank meets its
+/// chunks in ring-schedule order, the board replay in shard order), and
+/// this pass lands every transport on the identical strictly-increasing
+/// list, bit for bit: the form residuals travel in ([`Message::Sparse`]
+/// decodes reject anything unsorted) and apply to error feedback in.
+///
+/// [`Message::Sparse`]: crate::cluster::Message::Sparse
+pub fn canonicalize_residual(res: &mut SparseVec, scratch: &mut SparseReduceScratch) {
+    let m = res.len();
+    if m <= 1 {
+        return;
+    }
+    let perm = &mut scratch.perm;
+    perm.clear();
+    perm.extend(0..m as u32);
+    let idx = &res.idx;
+    perm.sort_unstable_by(|&a, &b| idx[a as usize].cmp(&idx[b as usize]).then(a.cmp(&b)));
+    let out = &mut scratch.merged;
+    out.clear();
+    for &p in perm.iter() {
+        let p = p as usize;
+        if out.idx.last() == Some(&res.idx[p]) {
+            *out.val.last_mut().expect("idx and val stay aligned") += res.val[p];
+        } else {
+            out.idx.push(res.idx[p]);
+            out.val.push(res.val[p]);
+        }
+    }
+    std::mem::swap(res, out);
+}
+
+/// Canonically reduce one shard's sparse contributions, appending the
+/// reduced entries (positions ascending) to `out`. `contrib(r)` returns
+/// rank `r`'s `(positions, values)` for this shard; ranks are merged in
+/// [`rsag_rank_order`]`(n, c)` with the per-hop cap applied after each
+/// merge — `shard_k == 0` disables re-selection. Every discarded entry
+/// is routed through `on_discard(merging rank, position, value)`: the
+/// rank whose merge step overflowed the cap is the rank that — in a
+/// physical ring — holds the partial and keeps the residual.
+pub fn reduce_sparse_shard_with<'a>(
+    n: usize,
+    c: usize,
+    contrib: impl Fn(usize) -> (&'a [u32], &'a [f32]),
+    shard_k: usize,
+    scratch: &mut SparseReduceScratch,
+    out: &mut SparseVec,
+    mut on_discard: impl FnMut(usize, u32, f32),
+) {
+    scratch.partial.clear();
+    for r in rsag_rank_order(n, c) {
+        let (ci, cv) = contrib(r);
+        merge_add_sparse(
+            &scratch.partial.idx,
+            &scratch.partial.val,
+            ci,
+            cv,
+            &mut scratch.merged,
+        );
+        std::mem::swap(&mut scratch.partial, &mut scratch.merged);
+        if shard_k > 0 && scratch.partial.len() > shard_k {
+            retain_top_k(&mut scratch.partial, shard_k, &mut scratch.perm, |i, v| {
+                on_discard(r, i, v)
+            });
+        }
+    }
+    out.idx.extend_from_slice(&scratch.partial.idx);
+    out.val.extend_from_slice(&scratch.partial.val);
+}
+
+/// Canonically reduce a full board of sparse contributions over a
+/// `len`-position union: every shard in order, each via
+/// [`reduce_sparse_shard_with`], so `out` (cleared first) ends sorted
+/// across the whole union. `contrib(r)` returns rank `r`'s full
+/// contribution; shard sub-ranges are carved out by binary search. This
+/// is the replay the shared-board transport, the hub star and the
+/// lock-step engine all run — and the two rings reproduce hop by hop.
+pub fn reduce_sparse_contributions_with<'a>(
+    n: usize,
+    len: usize,
+    contrib: impl Fn(usize) -> (&'a [u32], &'a [f32]),
+    shard_k: usize,
+    scratch: &mut SparseReduceScratch,
+    out: &mut SparseVec,
+    mut on_discard: impl FnMut(usize, u32, f32),
+) {
+    out.clear();
+    for c in 0..n {
+        let (s, e) = shard_bounds(len, n, c);
+        reduce_sparse_shard_with(
+            n,
+            c,
+            |r| {
+                let (idx, val) = contrib(r);
+                let lo = idx.partition_point(|&i| (i as usize) < s);
+                let hi = idx.partition_point(|&i| (i as usize) < e);
+                (&idx[lo..hi], &val[lo..hi])
+            },
+            shard_k,
+            scratch,
+            out,
+            &mut on_discard,
+        );
+    }
+}
+
+/// One rank's sparse rsag payload: its OWN selected indices (`own_idx`,
+/// sorted global coordinates — a subset of `union_idx`) mapped to union
+/// positions, carrying the accumulator value at each coordinate. This
+/// replaces the dense path's `acc[union_idx]` gather: coordinates the
+/// rank did not select never travel and stay in its error feedback.
+pub fn gather_sparse_contribution_into(
+    acc: &[f32],
+    own_idx: &[u32],
+    union_idx: &[u32],
+    out: &mut SparseVec,
+) {
+    out.clear();
+    out.idx.reserve(own_idx.len());
+    out.val.reserve(own_idx.len());
+    let mut p = 0usize;
+    for &g in own_idx {
+        while p < union_idx.len() && union_idx[p] < g {
+            p += 1;
+        }
+        debug_assert!(
+            p < union_idx.len() && union_idx[p] == g,
+            "own selection {g} missing from the union"
+        );
+        out.idx.push(p as u32);
+        out.val.push(acc[g as usize]);
+        p += 1;
+    }
+}
+
+/// The automatic per-hop cap when `--sparse-shards` is on without an
+/// explicit `--shard-k`: `⌈k_max/n⌉` where `k_max` is the round's
+/// largest per-rank selection — every rank derives the identical cap
+/// from the already-all-gathered `k_by_rank`, so no extra round is
+/// needed and traces stay bit-exact. Bounds per-rank received volume by
+/// `2(n-1)·⌈k_max/n⌉` entries per round, ≈ `2·k` entries' worth.
+pub fn auto_shard_k(n: usize, k_by_rank: &[usize]) -> usize {
+    let k_max = k_by_rank.iter().copied().max().unwrap_or(0);
+    ((k_max + n - 1) / n).max(1)
+}
+
+/// Scatter reduced sparse entries into a dense `len`-element vector
+/// (zeros elsewhere) — the bridge back to the engines' dense
+/// `reduced` buffer, so everything downstream of the collective is
+/// untouched by the wire format.
+pub fn scatter_sparse_into(entries: &SparseVec, len: usize, out: &mut Vec<f32>) {
+    out.clear();
+    out.resize(len, 0.0);
+    for (&i, &v) in entries.idx.iter().zip(entries.val.iter()) {
+        out[i as usize] = v;
+    }
+}
+
+/// Lock-step twin of the transports' sparse rsag round: canonically
+/// reduce every rank's sparse contribution (with the per-hop cap),
+/// route each rank's residuals into `residuals[r]`, scatter the reduced
+/// entries into the dense `reduced` buffer, and return the modeled wire
+/// time — which stays the collective-neutral dense-union α–β charge
+/// (`2(n-1)·α + 2(n-1)/n·V·β`): the clock models the dense collective,
+/// while [`CostModel::rsag_sparse_recv_bytes_per_rank`] describes what
+/// the sparse harness actually moves.
+pub fn sparse_shard_allreduce_lockstep(
+    contribs: &[SparseVec],
+    union_len: usize,
+    shard_k: usize,
+    net: &CostModel,
+    scratch: &mut SparseReduceScratch,
+    entries: &mut SparseVec,
+    reduced: &mut Vec<f32>,
+    residuals: &mut [SparseVec],
+) -> f64 {
+    let n = contribs.len();
+    debug_assert_eq!(residuals.len(), n);
+    for r in residuals.iter_mut() {
+        r.clear();
+    }
+    reduce_sparse_contributions_with(
+        n,
+        union_len,
+        |r| (&contribs[r].idx, &contribs[r].val),
+        shard_k,
+        scratch,
+        entries,
+        |owner, i, v| residuals[owner].push_entry(i, v),
+    );
+    for r in residuals.iter_mut() {
+        canonicalize_residual(r, scratch);
+    }
+    scatter_sparse_into(entries, union_len, reduced);
+    net.allreduce(union_len * CostModel::DENSE_ENTRY_BYTES)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(entries: &[(u32, f32)]) -> SparseVec {
+        let mut out = SparseVec::new();
+        for &(i, v) in entries {
+            out.push(i, v);
+        }
+        out
+    }
+
+    #[test]
+    fn merge_add_unions_and_sums_shared_positions() {
+        let a = sv(&[(0, 1.0), (3, 2.0), (7, 4.0)]);
+        let b = sv(&[(1, 10.0), (3, 20.0), (9, 30.0)]);
+        let mut out = SparseVec::new();
+        merge_add_sparse(&a.idx, &a.val, &b.idx, &b.val, &mut out);
+        assert_eq!(out, sv(&[(0, 1.0), (1, 10.0), (3, 22.0), (7, 4.0), (9, 30.0)]));
+        // empty sides
+        merge_add_sparse(&[], &[], &b.idx, &b.val, &mut out);
+        assert_eq!(out, b);
+        merge_add_sparse(&a.idx, &a.val, &[], &[], &mut out);
+        assert_eq!(out, a);
+    }
+
+    #[test]
+    fn merge_add_accumulates_partial_before_contribution() {
+        // order-probe: partial 1e8, contribution 1.0 → 1e8 (the 1 is
+        // absorbed); the reverse order would be observable
+        let a = sv(&[(2, 1.0e8)]);
+        let b = sv(&[(2, 1.0)]);
+        let mut out = SparseVec::new();
+        merge_add_sparse(&a.idx, &a.val, &b.idx, &b.val, &mut out);
+        assert_eq!(out.val[0].to_bits(), (1.0e8f32 + 1.0).to_bits());
+    }
+
+    #[test]
+    fn retain_top_k_keeps_largest_and_discards_in_position_order() {
+        let mut s = sv(&[(0, 1.0), (2, -9.0), (5, 3.0), (6, -2.0), (8, 7.0)]);
+        let mut perm = Vec::new();
+        let mut dropped = Vec::new();
+        retain_top_k(&mut s, 3, &mut perm, |i, v| dropped.push((i, v)));
+        assert_eq!(s, sv(&[(2, -9.0), (5, 3.0), (8, 7.0)]));
+        assert_eq!(dropped, vec![(0, 1.0), (6, -2.0)]);
+        // already small enough → untouched, nothing discarded
+        dropped.clear();
+        retain_top_k(&mut s, 3, &mut perm, |i, v| dropped.push((i, v)));
+        assert_eq!(s.len(), 3);
+        assert!(dropped.is_empty());
+    }
+
+    #[test]
+    fn retain_top_k_breaks_ties_toward_lower_positions() {
+        let mut s = sv(&[(1, 2.0), (4, -2.0), (9, 2.0)]);
+        let mut perm = Vec::new();
+        let mut dropped = Vec::new();
+        retain_top_k(&mut s, 2, &mut perm, |i, v| dropped.push((i, v)));
+        assert_eq!(s, sv(&[(1, 2.0), (4, -2.0)]));
+        assert_eq!(dropped, vec![(9, 2.0)]);
+    }
+
+    #[test]
+    fn residual_canonicalization_is_collection_order_invariant() {
+        let mut scratch = SparseReduceScratch::new();
+        // ring-schedule collection order vs shard-order collection of
+        // the same discard set must land on identical bits
+        let mut ring_order = SparseVec::new();
+        for (i, v) in [(9u32, 2.5f32), (1, -1.0), (4, 0.5)] {
+            ring_order.push_entry(i, v);
+        }
+        let mut shard_order = SparseVec::new();
+        for (i, v) in [(1u32, -1.0f32), (4, 0.5), (9, 2.5)] {
+            shard_order.push_entry(i, v);
+        }
+        canonicalize_residual(&mut ring_order, &mut scratch);
+        canonicalize_residual(&mut shard_order, &mut scratch);
+        assert_eq!(ring_order, shard_order);
+        assert_eq!(ring_order, sv(&[(1, -1.0), (4, 0.5), (9, 2.5)]));
+        // duplicates sum in collection order (defensive: one round
+        // cannot produce them, but the transform must stay total)
+        let mut dup = SparseVec::new();
+        dup.push_entry(3, 1.0e8);
+        dup.push_entry(3, 1.0);
+        canonicalize_residual(&mut dup, &mut scratch);
+        assert_eq!(dup.len(), 1);
+        assert_eq!(dup.val[0].to_bits(), (1.0e8f32 + 1.0).to_bits());
+        // empty and singleton are untouched
+        let mut single = sv(&[(7, 1.5)]);
+        canonicalize_residual(&mut single, &mut scratch);
+        assert_eq!(single, sv(&[(7, 1.5)]));
+    }
+
+    #[test]
+    fn shard_reduce_follows_the_canonical_order() {
+        // shard 0 of 3 over positions [0, 2): order is ranks 1, 2, 0;
+        // order-probe values make the sequence observable in the bits
+        let contribs = [
+            sv(&[(0, -1.0e8)]),
+            sv(&[(0, 1.0e8)]),
+            sv(&[(0, 1.0)]),
+        ];
+        let mut scratch = SparseReduceScratch::new();
+        let mut out = SparseVec::new();
+        reduce_sparse_shard_with(
+            3,
+            0,
+            |r| (&contribs[r].idx[..], &contribs[r].val[..]),
+            0,
+            &mut scratch,
+            &mut out,
+            |_, _, _| panic!("no cap, no discards"),
+        );
+        // canonical: 1e8 (rank 1) + 1.0 (rank 2) = 1e8, then -1e8 (rank 0) → 0
+        let want = ((1.0e8f32 + 1.0) + -1.0e8).to_bits();
+        assert_eq!(out.val[0].to_bits(), want);
+        assert_ne!(want, 1.0f32.to_bits(), "probe must be order-sensitive");
+    }
+
+    #[test]
+    fn full_reduce_conserves_mass_under_re_selection() {
+        // integer-valued entries sum exactly, so delivered + residuals
+        // must equal the total contribution mass bit-for-bit
+        let n = 4;
+        let len = 16usize;
+        let contribs: Vec<SparseVec> = (0..n)
+            .map(|r| {
+                let mut s = SparseVec::new();
+                for p in 0..len {
+                    if (p + r) % 2 == 0 {
+                        s.push(p as u32, (1 + r + p) as f32);
+                    }
+                }
+                s
+            })
+            .collect();
+        let total: f64 = contribs
+            .iter()
+            .flat_map(|c| c.val.iter())
+            .map(|&v| v as f64)
+            .sum();
+        let mut scratch = SparseReduceScratch::new();
+        let mut out = SparseVec::new();
+        let mut residual_sum = 0.0f64;
+        reduce_sparse_contributions_with(
+            n,
+            len,
+            |r| (&contribs[r].idx[..], &contribs[r].val[..]),
+            2,
+            &mut scratch,
+            &mut out,
+            |_, _, v| residual_sum += v as f64,
+        );
+        assert!(out.len() <= 2 * n, "every shard capped at 2 entries");
+        let delivered: f64 = out.val.iter().map(|&v| v as f64).sum();
+        assert_eq!(delivered + residual_sum, total);
+        // positions stay sorted across shard boundaries
+        assert!(out.idx.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn uncapped_full_reduce_matches_the_dense_canonical_reduce() {
+        // with every position present in every contribution, the sparse
+        // reduce must land bit-exactly on the dense canonical reducer
+        use crate::collectives::allreduce::reduce_contributions_rsag_with;
+        let n = 3;
+        let len = 7usize;
+        let dense: Vec<Vec<f32>> = (0..n)
+            .map(|r| {
+                (0..len)
+                    .map(|i| [1.0e8f32, 1.0, -1.0e8][(r + i) % 3])
+                    .collect()
+            })
+            .collect();
+        let contribs: Vec<SparseVec> = dense
+            .iter()
+            .map(|v| {
+                let mut s = SparseVec::new();
+                for (i, &x) in v.iter().enumerate() {
+                    s.push(i as u32, x);
+                }
+                s
+            })
+            .collect();
+        let mut want = Vec::new();
+        reduce_contributions_rsag_with(n, len, |r| &dense[r], &mut want);
+        let mut scratch = SparseReduceScratch::new();
+        let mut out = SparseVec::new();
+        reduce_sparse_contributions_with(
+            n,
+            len,
+            |r| (&contribs[r].idx[..], &contribs[r].val[..]),
+            0,
+            &mut scratch,
+            &mut out,
+            |_, _, _| panic!("no cap, no discards"),
+        );
+        assert_eq!(out.idx, (0..len as u32).collect::<Vec<_>>());
+        let got: Vec<u32> = out.val.iter().map(|v| v.to_bits()).collect();
+        let want: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn nan_values_pass_through_bit_exactly_when_uncapped() {
+        let quiet = f32::from_bits(0x7FC0_1234);
+        let contribs = [sv(&[(1, quiet)]), sv(&[(3, -0.0)])];
+        let mut scratch = SparseReduceScratch::new();
+        let mut out = SparseVec::new();
+        reduce_sparse_contributions_with(
+            2,
+            4,
+            |r| (&contribs[r].idx[..], &contribs[r].val[..]),
+            0,
+            &mut scratch,
+            &mut out,
+            |_, _, _| panic!("no cap, no discards"),
+        );
+        assert_eq!(out.idx, vec![1, 3]);
+        assert_eq!(out.val[0].to_bits(), quiet.to_bits());
+        assert_eq!(out.val[1].to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn gather_maps_own_selections_to_union_positions() {
+        let acc = vec![0.0f32, 10.0, 20.0, 30.0, 40.0, 50.0];
+        let union_idx = vec![1u32, 2, 4, 5];
+        let own = vec![2u32, 5];
+        let mut out = SparseVec::new();
+        gather_sparse_contribution_into(&acc, &own, &union_idx, &mut out);
+        assert_eq!(out, sv(&[(1, 20.0), (3, 50.0)]));
+        // empty selection → empty payload
+        gather_sparse_contribution_into(&acc, &[], &union_idx, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn auto_cap_is_k_max_over_n_rounded_up_and_never_zero() {
+        assert_eq!(auto_shard_k(4, &[512, 500, 512, 100]), 128);
+        assert_eq!(auto_shard_k(4, &[513, 1, 1, 1]), 129);
+        assert_eq!(auto_shard_k(8, &[0, 0]), 1);
+        assert_eq!(auto_shard_k(3, &[2]), 1);
+    }
+
+    #[test]
+    fn lockstep_twin_scatters_and_routes_residuals() {
+        let n = 2;
+        let len = 4usize;
+        // both ranks contribute both shards; cap 1 forces a discard at
+        // the owner's (last) merge step of each shard
+        let contribs = vec![
+            sv(&[(0, 1.0), (2, 8.0), (3, 1.0)]),
+            sv(&[(1, 2.0), (2, 4.0)]),
+        ];
+        let net = CostModel::paper_testbed(n);
+        let mut scratch = SparseReduceScratch::new();
+        let mut entries = SparseVec::new();
+        let mut reduced = Vec::new();
+        let mut residuals = vec![SparseVec::new(), SparseVec::new()];
+        let t = sparse_shard_allreduce_lockstep(
+            &contribs,
+            len,
+            1,
+            &net,
+            &mut scratch,
+            &mut entries,
+            &mut reduced,
+            &mut residuals,
+        );
+        // shard 0 = positions [0,2): rank 1 merges (1,2.0), rank 0 merges
+        // (0,1.0) → cap 1 keeps (1,2.0), discards (0,1.0) at rank 0.
+        // shard 1 = positions [2,4): rank 0 merges (2,8.0),(3,1.0) → cap
+        // keeps (2,8.0), discards (3,1.0) at rank 0; rank 1 merges
+        // (2,4.0) → (2,12.0).
+        assert_eq!(entries, sv(&[(1, 2.0), (2, 12.0)]));
+        assert_eq!(reduced, vec![0.0, 2.0, 12.0, 0.0]);
+        assert_eq!(residuals[0], sv(&[(0, 1.0), (3, 1.0)]));
+        assert!(residuals[1].is_empty());
+        // the modeled clock stays the collective-neutral dense charge
+        assert_eq!(
+            t.to_bits(),
+            net.allreduce(len * CostModel::DENSE_ENTRY_BYTES).to_bits()
+        );
+    }
+}

@@ -123,6 +123,9 @@ pub fn from_toml(doc: &TomlDoc) -> Result<ExperimentConfig> {
     // bit-identical; "rsag" switches to reduce-scatter → all-gather)
     cfg.sim.collective =
         crate::cluster::CollectiveKind::parse(&doc.str_or("experiment", "collective", "allgather"))?;
+    // truly sparse rsag shards + optional per-hop re-top-k cap
+    cfg.sim.sparse_shards = doc.bool_or("experiment", "sparse_shards", false);
+    cfg.sim.shard_k = doc.int_or("experiment", "shard_k", 0).max(0) as usize;
     // [experiment] transport + [transport] — socket-transport tunables
     cfg.transport = TransportKind::parse(&doc.str_or("experiment", "transport", "local"))?;
     cfg.net.coord_addr = doc.str_or("transport", "coord_addr", &cfg.net.coord_addr);

@@ -28,9 +28,11 @@
 //!        │     ├ LocalTransport             (Arc-shared boards, O(n)
 //!        │     ├ RingLocal                  fan-out) or reduce-scatter →
 //!        │     ├ net::TcpTransport          all-gather (per-partition
-//!        │     └ net::RingTransport         shards); in-process / one
-//!        │         (codec + handshake)      process per rank over a framed
-//!        │                                  wire — star vs ring topology
+//!        │     └ net::RingTransport         shards, dense or truly sparse
+//!        │         (codec + handshake)      (index, value) entry lists);
+//!        │                                  in-process / one process per
+//!        │                                  rank over a framed wire —
+//!        │                                  star vs ring topology
 //!        ▼
 //!   collectives::{merge_selections_iter,    pure merge/reduce arithmetic
 //!       reduce_contributions_into, …}       shared by every engine, writing
@@ -97,7 +99,18 @@
 //! ([`collectives::allreduce::reduce_contributions_rsag_with`]), so
 //! rsag traces are bit-exact across every engine and transport — while
 //! legitimately differing from all-gather traces in low FP bits, since
-//! f32 addition is non-associative.
+//! f32 addition is non-associative. On top of rsag,
+//! `--sparse-shards` makes the shards **truly sparse**: each rank
+//! contributes `(index, value)` entry lists holding only its own
+//! selections (protocol-v4 `Frame::SparseShard`, native on all four
+//! transports), an optional per-hop re-top-k (`--shard-k`) bounds
+//! every hop's entry list with the discarded mass routed back into
+//! error feedback as per-rank residuals, and real received volume
+//! shrinks to `2(n-1)/n·E` entries
+//! ([`collectives::CostModel::rsag_sparse_recv_bytes_per_rank`]) —
+//! the canonical sparse reduce
+//! ([`collectives::reduce_sparse_contributions_with`]) keeps those
+//! traces bit-exact across every engine and transport too.
 //! `rust/tests/engine_parity.rs` proves all execution modes
 //! emit identical traces for a fixed seed — including across the
 //! process boundary on both socket topologies, pipelined and not, for

@@ -65,6 +65,30 @@ pub fn predicted_recv_bytes(
     }
 }
 
+/// Model-predicted payload bytes the loaded link carries for one
+/// `--sparse-shards` rsag round moving `entries` total live entries
+/// (the cap-free case: every hop carries a full shard's entry list at
+/// [`CostModel::SPARSE_ENTRY_BYTES`] each).
+pub fn predicted_sparse_link_bytes(
+    transport: TransportKind,
+    n_ranks: usize,
+    entries: usize,
+) -> usize {
+    let net = CostModel::paper_testbed(n_ranks);
+    match transport {
+        TransportKind::Tcp => net.rsag_sparse_link_bytes_star_hub(entries),
+        _ => net.rsag_sparse_link_bytes_ring(entries),
+    }
+}
+
+/// Model-predicted payload bytes one rank *receives* per
+/// `--sparse-shards` rsag round moving `entries` total live entries —
+/// the sparse analogue of the `2(n-1)/n·V` claim with `V` shrunk to
+/// the live entry volume.
+pub fn predicted_sparse_recv_bytes(n_ranks: usize, entries: usize) -> usize {
+    CostModel::paper_testbed(n_ranks).rsag_sparse_recv_bytes_per_rank(entries)
+}
+
 /// One audited (transport, collective, n) cell.
 #[derive(Clone, Debug)]
 pub struct AuditRow {
@@ -81,6 +105,9 @@ pub struct AuditRow {
     pub measured_link_bytes: u64,
     /// Model-predicted link bytes over the same window.
     pub predicted_link_bytes: u64,
+    /// Whether the rounds ran in `--sparse-shards` form (entry-list
+    /// payloads predicted by the `rsag_sparse_*` formulas).
+    pub sparse: bool,
 }
 
 impl AuditRow {
@@ -102,6 +129,29 @@ impl AuditRow {
             measured_link_bytes,
             predicted_link_bytes: rounds
                 * predicted_link_bytes(transport, collective, n_ranks, payload_bytes) as u64,
+            sparse: false,
+        }
+    }
+
+    /// Build a `--sparse-shards` rsag row: the prediction charges
+    /// `entries` live entries per round through the `rsag_sparse_*`
+    /// formulas instead of a dense payload volume.
+    pub fn new_sparse(
+        transport: TransportKind,
+        n_ranks: usize,
+        rounds: u64,
+        entries: usize,
+        measured_link_bytes: u64,
+    ) -> Self {
+        AuditRow {
+            transport,
+            collective: CollectiveKind::Rsag,
+            n_ranks,
+            rounds,
+            measured_link_bytes,
+            predicted_link_bytes: rounds
+                * predicted_sparse_link_bytes(transport, n_ranks, entries) as u64,
+            sparse: true,
         }
     }
 
@@ -153,7 +203,11 @@ impl AuditReport {
         for r in &self.rows {
             t.row(&[
                 r.transport.to_string(),
-                r.collective.to_string(),
+                if r.sparse {
+                    format!("{}-sparse", r.collective)
+                } else {
+                    r.collective.to_string()
+                },
                 r.n_ranks.to_string(),
                 r.rounds.to_string(),
                 r.measured_link_bytes.to_string(),
@@ -208,6 +262,34 @@ mod tests {
             predicted_recv_bytes(CollectiveKind::Rsag, 4, b),
             2 * 3 * b / 4
         );
+    }
+
+    #[test]
+    fn sparse_predictions_match_cost_model_formulas() {
+        // E = 120 live entries, 8 bytes each
+        let e = 120;
+        let eb = e * CostModel::SPARSE_ENTRY_BYTES;
+        assert_eq!(
+            predicted_sparse_link_bytes(TransportKind::Ring, 4, e),
+            2 * 3 * eb / 4
+        );
+        assert_eq!(
+            predicted_sparse_link_bytes(TransportKind::Tcp, 4, e),
+            2 * 3 * eb
+        );
+        assert_eq!(predicted_sparse_recv_bytes(4, e), 2 * 3 * eb / 4);
+        // a sparse row renders distinguishably and pins exactness
+        let row = AuditRow::new_sparse(
+            TransportKind::Ring,
+            4,
+            10,
+            e,
+            (10 * 2 * 3 * eb / 4) as u64,
+        );
+        assert!(row.exact());
+        let mut rep = AuditReport::new();
+        rep.push(row);
+        assert!(rep.render().contains("rsag-sparse"), "{}", rep.render());
     }
 
     #[test]

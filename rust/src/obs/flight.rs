@@ -30,14 +30,19 @@ pub enum RecKind {
     FrameTx,
     /// A frame came in (`a` = gross wire bytes).
     FrameRx,
-    /// A collective round began (`a` = 0 allgather / 1 rsag).
+    /// A collective round began (`a` = 0 allgather / 1 rsag /
+    /// 2 sparse rsag).
     RoundBegin,
-    /// A collective round completed (`a` = 0 allgather / 1 rsag).
+    /// A collective round completed (`a` = 0 allgather / 1 rsag /
+    /// 2 sparse rsag).
     RoundComplete,
     /// Abort poisoning (local failure or a peer's notice).
     Abort,
     /// A receive wait expired at the IO deadline.
     Deadline,
+    /// A `--sparse-shards` entry-list hop moved (`a` = entry count,
+    /// `b` = 0 sent / 1 received).
+    SparseShard,
 }
 
 impl RecKind {
@@ -49,6 +54,7 @@ impl RecKind {
             RecKind::RoundComplete => "round-complete",
             RecKind::Abort => "abort",
             RecKind::Deadline => "deadline",
+            RecKind::SparseShard => "sparse-shard",
         }
     }
 }

@@ -39,7 +39,10 @@ pub mod flight;
 pub mod log;
 pub mod trace;
 
-pub use audit::{predicted_link_bytes, predicted_recv_bytes, AuditReport, AuditRow};
+pub use audit::{
+    predicted_link_bytes, predicted_recv_bytes, predicted_sparse_link_bytes,
+    predicted_sparse_recv_bytes, AuditReport, AuditRow,
+};
 pub use counters::{CounterSnapshot, ObsCounters};
 pub use flight::{FlightRecorder, RecEvent, RecKind, FLIGHT_CAPACITY};
 pub use trace::{merge as merge_trace_parts, SpanEvent, SpanTracer};

@@ -41,9 +41,11 @@
 use crate::cluster::{CollectiveKind, EngineKind};
 use crate::collectives::{
     allreduce::{sparse_allreduce_union_iter, sparse_allreduce_union_rsag_into},
-    broadcast_selection_into, merge_selections_iter, CostModel, StragglerCfg,
+    auto_shard_k, broadcast_selection_into, gather_sparse_contribution_into,
+    merge_selections_iter, sparse_shard_allreduce_lockstep, CostModel, SparseReduceScratch,
+    SparseVec, StragglerCfg,
 };
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::grad::synth::SynthGen;
 use crate::metrics::{IterRecord, Trace};
 use crate::obs::{ObsCfg, SpanTracer};
@@ -92,6 +94,24 @@ pub struct SimCfg {
     /// traffic and the low-order bits of the reduced sums (summation
     /// order).
     pub collective: CollectiveKind,
+    /// Truly sparse rsag shards (`--sparse-shards`): the value reduce
+    /// carries `(index, value)` entry lists holding only each rank's
+    /// own selections instead of dense union-length shards, with
+    /// per-hop re-top-k discards fed back into error feedback as
+    /// per-rank residuals. Requires `collective = Rsag` and an
+    /// all-gather comm pattern. The modeled clock is unchanged (it
+    /// always charged the dense-union rsag shape); what shrinks is the
+    /// harness's real traffic
+    /// ([`CostModel::rsag_sparse_recv_bytes_per_rank`]). With
+    /// `pipeline` on, the residual feedback is a true data dependency
+    /// (iteration t+1's accumulate reads it), so the value reduce
+    /// cannot overlap and the clock stays honestly additive.
+    pub sparse_shards: bool,
+    /// Per-hop re-top-k cap for `--sparse-shards` (`--shard-k`); `0`
+    /// picks the automatic `ceil(max_i k_i / n)` cap
+    /// ([`auto_shard_k`]), which bounds every hop's entry list by the
+    /// per-rank selection budget.
+    pub shard_k: usize,
 }
 
 impl Default for SimCfg {
@@ -109,7 +129,41 @@ impl Default for SimCfg {
             straggler: StragglerCfg::default(),
             pipeline: false,
             collective: CollectiveKind::default(),
+            sparse_shards: false,
+            shard_k: 0,
         }
+    }
+}
+
+/// `--sparse-shards` preconditions, shared by both engines: the
+/// entry-list shards ride the rsag hop schedule, and the sparse error
+/// carry needs every rank's *own* selection on the wire — so the dense
+/// and leader-broadcast (CLT-k) patterns are out (their non-leader
+/// ranks contribute values at coordinates they never selected).
+pub(crate) fn check_sparse_shards(cfg: &SimCfg, pattern: CommPattern) -> Result<()> {
+    if !cfg.sparse_shards {
+        return Ok(());
+    }
+    if cfg.collective != CollectiveKind::Rsag {
+        return Err(Error::invalid(
+            "--sparse-shards requires --collective rsag (the entry-list shards ride the reduce-scatter schedule)",
+        ));
+    }
+    if !matches!(pattern, CommPattern::AllGather) {
+        return Err(Error::invalid(
+            "--sparse-shards requires an all-gather selection pattern (each rank ships its own selections); the dense and CLT-k baselines carry dense shards",
+        ));
+    }
+    Ok(())
+}
+
+/// The per-hop cap a `--sparse-shards` round actually runs with:
+/// `cfg.shard_k` when set, else the automatic `ceil(max_i k_i / n)`.
+pub(crate) fn effective_shard_k(cfg: &SimCfg, k_by_rank: &[usize]) -> usize {
+    if cfg.shard_k > 0 {
+        cfg.shard_k
+    } else {
+        auto_shard_k(cfg.n_ranks, k_by_rank)
     }
 }
 
@@ -180,6 +234,8 @@ pub fn run_lockstep_obs(
     let density = sparsifiers[0].target_density();
     let k_user = ((density * n_g as f64).round() as usize).max(1);
     let dense = matches!(sparsifiers[0].comm_pattern(), CommPattern::DenseAllReduce);
+    check_sparse_shards(cfg, sparsifiers[0].comm_pattern())?;
+    let sparse = cfg.sparse_shards;
 
     let mut trace = Trace::new(&name, &gen.model.name, n);
     trace.pipelined = cfg.pipeline;
@@ -194,6 +250,12 @@ pub fn run_lockstep_obs(
     let mut union_idx: Vec<u32> = Vec::new();
     let mut k_by_rank: Vec<usize> = Vec::new();
     let mut reduced: Vec<f32> = Vec::new();
+    // --sparse-shards lock-step state: per-rank entry-list contributions
+    // and residuals plus the shared reduce scratch (empty unless on)
+    let mut contribs: Vec<SparseVec> = vec![SparseVec::new(); if sparse { n } else { 0 }];
+    let mut residuals: Vec<SparseVec> = vec![SparseVec::new(); if sparse { n } else { 0 }];
+    let mut sp_scratch = SparseReduceScratch::new();
+    let mut sp_entries = SparseVec::new();
 
     // value-reduce dispatch: both collectives share the modeled clock;
     // only the canonical summation order (and thus the low-order bits
@@ -283,7 +345,32 @@ pub fn run_lockstep_obs(
             CommPattern::AllGather => {
                 let stats =
                     merge_selections_iter(outs.iter(), &net, &mut union_idx, &mut k_by_rank);
-                let t_red = value_reduce(&acc, &union_idx, &mut reduced);
+                let t_red = if sparse {
+                    // truly sparse rsag: each rank contributes only its
+                    // own (index, value) entries; per-hop re-top-k
+                    // discards route back to their merging rank
+                    let shard_k = effective_shard_k(cfg, &k_by_rank);
+                    for (r, out) in outs.iter().enumerate() {
+                        gather_sparse_contribution_into(
+                            &acc[r],
+                            &out.idx,
+                            &union_idx,
+                            &mut contribs[r],
+                        );
+                    }
+                    sparse_shard_allreduce_lockstep(
+                        &contribs,
+                        union_idx.len(),
+                        shard_k,
+                        &net,
+                        &mut sp_scratch,
+                        &mut sp_entries,
+                        &mut reduced,
+                        &mut residuals,
+                    )
+                } else {
+                    value_reduce(&acc, &union_idx, &mut reduced)
+                };
                 k_actual = union_idx.len();
                 f_ratio = stats.f_ratio;
                 t_comm = stats.time_s + t_red;
@@ -293,11 +380,25 @@ pub fn run_lockstep_obs(
             tr.span_since("round", r0);
         }
         let m_comm = rst.elapsed().as_secs_f64();
-        // --- error carry (Alg. 1 lines 18-19): zero union coords
+        // --- error carry (Alg. 1 lines 18-19): zero union coords.
+        // Under --sparse-shards only this rank's OWN selections left the
+        // node, so only those are zeroed, and the per-hop re-top-k
+        // residuals (positions into the union) are added back — the
+        // discarded mass re-enters error feedback instead of vanishing.
         if !dense {
             for r in 0..n {
-                for &i in &union_idx {
-                    acc[r][i as usize] = 0.0;
+                if sparse {
+                    for &i in &outs[r].idx {
+                        acc[r][i as usize] = 0.0;
+                    }
+                    let res = &residuals[r];
+                    for (&pos, &v) in res.idx.iter().zip(res.val.iter()) {
+                        acc[r][union_idx[pos as usize] as usize] += v;
+                    }
+                } else {
+                    for &i in &union_idx {
+                        acc[r][i as usize] = 0.0;
+                    }
                 }
                 std::mem::swap(&mut err[r], &mut acc[r]);
             }
@@ -312,7 +413,10 @@ pub fn run_lockstep_obs(
                 err.iter().map(|e| l2_norm(e)).sum::<f64>() / n as f64;
         }
         let t_compute = net.straggler.max_compute(t, cfg.compute_s, n);
-        let t_exposed_comm = if cfg.pipeline {
+        // Pipelining cannot hide a --sparse-shards reduce: its residual
+        // must land in `err` before iteration t+1's accumulate reads
+        // it, so the clock stays honestly additive in that mode.
+        let t_exposed_comm = if cfg.pipeline && !sparse {
             net.overlapped_step(t_compute, t_comm).exposed_s
         } else {
             t_comm

@@ -23,7 +23,8 @@ use exdyna::cluster::{CollectiveKind, Endpoint, LocalTransport, Message};
 use exdyna::collectives::{
     allgather_sparse_finish_rk, allgather_sparse_rk, sparse_allreduce_union_finish_rk,
     sparse_allreduce_union_rk, sparse_allreduce_union_start_rk, value_reduce_union_rk,
-    value_reduce_union_start_rk, CostModel, RoundScratch,
+    value_reduce_union_sparse_rk, value_reduce_union_sparse_start_rk, value_reduce_union_start_rk,
+    CostModel, RoundScratch,
 };
 use exdyna::coordinator::{ExDynaCfg, SelectOutput};
 use exdyna::grad::synth::{DecayCfg, SynthGen, SynthModel};
@@ -312,6 +313,94 @@ fn rsag_rounds(n: usize, k: usize, warmup: usize, steady: usize) -> (u64, u64) {
     })
 }
 
+/// Truly sparse reduce-scatter → all-gather rounds (ISSUE 8): the
+/// value reduce rides `(index, value)` entry lists through the rotating
+/// `SparseBufPool` and the retained `SparseRoundScratch`, with the
+/// per-hop re-top-k cap ACTIVE (`shard_k = k/2` sheds half of every
+/// shard into the residual each round) — blocking and split-phase
+/// rounds alternate, and the steady state must stay at 0 allocs /
+/// 0 bytes just like the dense paths.
+fn sparse_rsag_rounds(n: usize, k: usize, warmup: usize, steady: usize) -> (u64, u64) {
+    measure(|| {
+        let tp = Arc::new(LocalTransport::new(n));
+        let mut handles = Vec::with_capacity(n);
+        for rank in 0..n {
+            let tp = tp.clone();
+            handles.push(std::thread::spawn(move || {
+                let ep = Endpoint::new(rank, tp.as_ref());
+                let net = CostModel::paper_testbed(n);
+                // disjoint per-rank selections => union spans n·k
+                // indices, every shard holds exactly k live entries
+                let sel = Arc::new(SelectOutput {
+                    idx: ((rank * k) as u32..((rank + 1) * k) as u32).collect(),
+                    val: vec![0.25f32; k],
+                });
+                let acc: Vec<f32> = (0..n * k).map(|i| (i % 7) as f32 + 0.5).collect();
+                let shard_k = k / 2;
+                let mut scratch = RoundScratch::new();
+                let mut overlap_sink = 0.0f32;
+                for round in 0..(warmup + steady) {
+                    if rank == 0 && round == warmup {
+                        ENABLED.store(true, Ordering::SeqCst);
+                    }
+                    allgather_sparse_rk(
+                        &ep,
+                        Arc::clone(&sel),
+                        &net,
+                        &mut scratch.union_idx,
+                        &mut scratch.k_by_rank,
+                    )
+                    .unwrap();
+                    let union_len = scratch.union_idx.len();
+                    assert_eq!(union_len, n * k);
+                    if round % 2 == 0 {
+                        value_reduce_union_sparse_rk(
+                            &ep,
+                            &acc,
+                            &sel.idx,
+                            &scratch.union_idx,
+                            shard_k,
+                            &net,
+                            &mut scratch.sparse,
+                            &mut scratch.reduced,
+                        )
+                        .unwrap();
+                    } else {
+                        // split-phase sparse rsag, "compute" in the gap
+                        let pending = value_reduce_union_sparse_start_rk(
+                            &ep,
+                            &acc,
+                            &sel.idx,
+                            &scratch.union_idx,
+                            shard_k,
+                            &mut scratch.sparse.send,
+                        )
+                        .unwrap();
+                        overlap_sink += acc[round % acc.len()];
+                        pending
+                            .finish_sparse(union_len, &net, &mut scratch.sparse, &mut scratch.reduced)
+                            .unwrap();
+                    }
+                    assert_eq!(scratch.reduced.len(), n * k);
+                    // the cap sheds n·(k - shard_k) entries per round,
+                    // spread over the ranks' residuals — the merge path
+                    // under test includes the re-top-k and the
+                    // canonicalized error-feedback hand-back
+                    assert_eq!(scratch.sparse.entries.len(), n * shard_k);
+                }
+                assert!(overlap_sink >= 0.0);
+                if rank == 0 {
+                    ENABLED.store(false, Ordering::SeqCst);
+                }
+                ep.barrier().unwrap();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    })
+}
+
 /// Marginal allocations of one extra threaded-sim iteration (full
 /// engine, ExDyna sparsifier): the difference between a long and a short
 /// run divides out launch/teardown. The transport/merge path contributes
@@ -401,6 +490,22 @@ fn steady_state_collective_rounds_allocate_nothing() {
         (allocs_r8, bytes_r8),
         (0, 0),
         "n=8 steady rsag rounds must not allocate"
+    );
+
+    // --- truly sparse rsag path (ISSUE 8): entry-list rounds with the
+    // re-top-k cap active ride the rotating sparse pools — zero at both
+    // cluster sizes
+    let (allocs_s2, bytes_s2) = sparse_rsag_rounds(2, 256, 8, 100);
+    assert_eq!(
+        (allocs_s2, bytes_s2),
+        (0, 0),
+        "n=2 steady sparse rsag rounds must not allocate"
+    );
+    let (allocs_s8, bytes_s8) = sparse_rsag_rounds(8, 256, 8, 100);
+    assert_eq!(
+        (allocs_s8, bytes_s8),
+        (0, 0),
+        "n=8 steady sparse rsag rounds must not allocate"
     );
 
     // --- whole threaded engine: the remaining per-iteration allocations

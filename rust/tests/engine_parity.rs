@@ -13,6 +13,14 @@
 //! all-gather collective's in low bits; parity is rsag-vs-rsag, never
 //! rsag-vs-allgather).
 //!
+//! The truly sparse rsag form (ISSUE 8, `--sparse-shards`) gets it
+//! too: with entry-list shards and the per-hop re-top-k feeding its
+//! discards back into error feedback, lock-step, threaded and a real
+//! multi-process `launch --collective rsag --sparse-shards` ring run
+//! must all land the same bits — again against fresh sparse
+//! references (the re-top-k residual changes the error-feedback
+//! stream, so sparse traces legitimately differ from dense rsag).
+//!
 //! Also pins the empty-round regression: rounds where nothing is
 //! selected carry `f_ratio = NaN` and must not poison
 //! `Trace::f_ratio_summary`.
@@ -450,6 +458,99 @@ fn ring_multiprocess_rsag_trace_matches_in_process() {
     let (lock, thr) = reference_traces_cfg(false, CollectiveKind::Rsag);
     assert_traces_identical(&ring, &lock, "ring-multiprocess-rsag vs lockstep");
     assert_traces_identical(&ring, &thr, "ring-multiprocess-rsag vs threaded");
+}
+
+/// ISSUE 8 acceptance (in-process half): with `--sparse-shards` the
+/// value reduce really moves `(index, value)` entry lists and the
+/// re-top-k residual feeds back into each rank's error state — and
+/// lock-step vs threaded traces stay bit-identical, pipelined and not
+/// (the pipelined sparse round serializes its reduce on BOTH engines:
+/// the residual must land in the error state before the next
+/// iteration's accumulate), at the automatic cap and at an explicit
+/// aggressive one.
+#[test]
+fn sparse_rsag_traces_bit_exact_across_engines() {
+    let n = 4;
+    // all-gather-pattern sparsifiers only: sparse shards require every
+    // rank to ship its own selections (cltk/dense are rejected up front)
+    for sp in ["exdyna", "topk"] {
+        for pipeline in [false, true] {
+            for shard_k in [0usize, 24] {
+                let gen = small_gen(n);
+                let factory =
+                    make_sparsifier_factory(sp, 0.002, 0.01, ExDynaCfg::default_for(n)).unwrap();
+                let mut c_lock = cfg(n, 12, EngineKind::Lockstep);
+                c_lock.collective = CollectiveKind::Rsag;
+                c_lock.pipeline = pipeline;
+                c_lock.sparse_shards = true;
+                c_lock.shard_k = shard_k;
+                let mut c_thr = cfg(n, 12, EngineKind::Threaded);
+                c_thr.collective = CollectiveKind::Rsag;
+                c_thr.pipeline = pipeline;
+                c_thr.sparse_shards = true;
+                c_thr.shard_k = shard_k;
+                let lock = run_sim(&gen, factory.as_ref(), &c_lock).unwrap();
+                let thr = run_sim(&gen, factory.as_ref(), &c_thr).unwrap();
+                assert_traces_identical(
+                    &lock,
+                    &thr,
+                    &format!("{sp} sparse-rsag pipeline={pipeline} shard_k={shard_k}"),
+                );
+            }
+        }
+    }
+}
+
+/// Sparse mode is rejected up front for comm patterns that cannot
+/// carry it (cltk's leader broadcast, the dense baseline) — a typed
+/// config error on both engines, not a wrong-answer run.
+#[test]
+fn sparse_rsag_rejects_non_allgather_patterns() {
+    let n = 4;
+    for sp in ["cltk", "dense"] {
+        for engine in [EngineKind::Lockstep, EngineKind::Threaded] {
+            let gen = small_gen(n);
+            let factory =
+                make_sparsifier_factory(sp, 0.002, 0.01, ExDynaCfg::default_for(n)).unwrap();
+            let mut c = cfg(n, 4, engine);
+            c.collective = CollectiveKind::Rsag;
+            c.sparse_shards = true;
+            let err = run_sim(&gen, factory.as_ref(), &c).unwrap_err().to_string();
+            assert!(
+                err.contains("all-gather selection pattern"),
+                "{sp} {engine}: {err}"
+            );
+        }
+    }
+}
+
+/// The in-process reference pair for the `--sparse-shards` launch run.
+fn reference_traces_sparse() -> (Trace, Trace) {
+    let mut cfg = exdyna::config::preset("resnet18", 0.01, 3, 8).unwrap();
+    cfg.sim.seed = 17;
+    cfg.sim.collective = CollectiveKind::Rsag;
+    cfg.sim.sparse_shards = true;
+    let gen = SynthGen::new(cfg.model.clone(), 3, cfg.sim.rho, cfg.sim.seed, cfg.sim.exact_gen);
+    let factory = make_sparsifier_factory("exdyna", 0.002, cfg.hard_delta, cfg.exdyna).unwrap();
+    cfg.sim.engine = EngineKind::Lockstep;
+    let lock = run_sim(&gen, factory.as_ref(), &cfg.sim).unwrap();
+    cfg.sim.engine = EngineKind::Threaded;
+    let thr = run_sim(&gen, factory.as_ref(), &cfg.sim).unwrap();
+    (lock, thr)
+}
+
+/// ISSUE 8 acceptance (multi-process half): a real single-host
+/// `launch --collective rsag --sparse-shards` run over the loopback
+/// ring — `Frame::SparseShard` entry lists on real sockets, one OS
+/// process per rank — must emit a merged trace bit-identical to both
+/// in-process engines running the same sparse collective.
+#[test]
+fn ring_multiprocess_sparse_rsag_trace_matches_in_process() {
+    let ring = launch_multiprocess("ring", &["--collective", "rsag", "--sparse-shards"]);
+    assert_eq!(ring.records.len(), 8);
+    let (lock, thr) = reference_traces_sparse();
+    assert_traces_identical(&ring, &lock, "ring-multiprocess-sparse-rsag vs lockstep");
+    assert_traces_identical(&ring, &thr, "ring-multiprocess-sparse-rsag vs threaded");
 }
 
 #[test]

@@ -10,7 +10,9 @@
 //!    predictions for the socket transports — `tcp` (the hub's NIC is
 //!    the star's loaded link) and `ring` (every rank's outgoing link
 //!    carries the balanced ring volume) — at n ∈ {2, 4} for both
-//!    collectives. Not approximately: [`AuditReport::all_exact`].
+//!    collectives, and for the `--sparse-shards` rsag entry lists
+//!    against the `rsag_sparse_*` formulas. Not approximately:
+//!    [`AuditReport::all_exact`].
 //! 2. **Observability never perturbs the run.** A fully-instrumented
 //!    run (span tracer + flight recorders) produces bit-identical
 //!    deterministic trace columns to a plain run, and the merged
@@ -22,12 +24,12 @@
 
 use exdyna::cluster::testing::{ring_cluster, tcp_cluster};
 use exdyna::cluster::{
-    CollectiveKind, Endpoint, FloatBufPool, Transport, TransportKind,
+    CollectiveKind, Endpoint, FloatBufPool, SparseRound, Transport, TransportKind,
 };
-use exdyna::collectives::CostModel;
+use exdyna::collectives::{CostModel, SparseReduceScratch, SparseVec};
 use exdyna::coordinator::{ExDyna, ExDynaCfg};
 use exdyna::grad::{DecayCfg, SynthGen, SynthModel};
-use exdyna::obs::{predicted_recv_bytes, AuditReport, AuditRow, ObsCfg};
+use exdyna::obs::{predicted_recv_bytes, predicted_sparse_recv_bytes, AuditReport, AuditRow, ObsCfg};
 use exdyna::sparsifiers::Sparsifier;
 use exdyna::training::{run_sim, run_sim_obs, SimCfg};
 use exdyna::Result;
@@ -66,6 +68,47 @@ fn run_rounds(tps: &[Arc<dyn Transport>], kind: CollectiveKind) {
                         .unwrap();
                     }
                 }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+/// Drive `ROUNDS` truly sparse rsag rounds across all ranks: every rank
+/// contributes all `LEN` positions (full overlap), so the round moves
+/// exactly `LEN` live entries and the `rsag_sparse_*` predictions apply
+/// with `entries = LEN`. `shard_k = 0` keeps re-selection off — no
+/// residual frames ride along to perturb the byte count.
+fn run_sparse_rounds(tps: &[Arc<dyn Transport>]) {
+    let round = SparseRound {
+        union_len: LEN,
+        shard_k: 0,
+    };
+    let mut handles = Vec::new();
+    for (rank, tp) in tps.iter().cloned().enumerate() {
+        handles.push(std::thread::spawn(move || {
+            let ep = Endpoint::new(rank, tp.as_ref());
+            let mut scratch = SparseReduceScratch::new();
+            let mut out = SparseVec::new();
+            let mut residual = SparseVec::new();
+            let mut contribution = SparseVec::new();
+            for i in 0..LEN {
+                contribution.push(i as u32, 1.0 + rank as f32);
+            }
+            let contribution = Arc::new(contribution);
+            for _ in 0..ROUNDS {
+                ep.rsag_sparse(
+                    Arc::clone(&contribution),
+                    round,
+                    &mut scratch,
+                    &mut out,
+                    &mut residual,
+                )
+                .unwrap();
+                assert_eq!(out.len(), LEN, "rank {rank}: full-overlap union");
+                assert!(residual.is_empty(), "rank {rank}: shard_k=0 has no residual");
             }
         }));
     }
@@ -137,6 +180,66 @@ fn measured_wire_bytes_equal_cost_model_predictions_exactly() {
     );
     // 2 tcp cells per n, plus one ring cell per (rank, collective)
     assert_eq!(report.rows.len(), 2 * 2 + 2 * (2 + 4));
+}
+
+#[test]
+fn sparse_shard_wire_bytes_equal_cost_model_predictions_exactly() {
+    // full-overlap contributions: every rank selects all LEN positions,
+    // so the round's live entry count is exactly LEN and the sparse
+    // formulas apply with entries = LEN (LEN divisible by every audited
+    // n keeps the ring's shard slices equal-sized)
+    let timeout = Duration::from_secs(30);
+    let mut report = AuditReport::new();
+    for n in [2usize, 4] {
+        // tcp star: (n-1) entry lists in, (n-1) reduced entry lists
+        // out — 2(n-1)·E·8 on the hub's link, measured as its payload
+        // tx+rx delta (no residual frames: shard_k = 0)
+        let tps = tcp_cluster(n, timeout).unwrap();
+        let before = tps[0].counters(0).unwrap().snapshot();
+        run_sparse_rounds(&tps);
+        let d = tps[0].counters(0).unwrap().snapshot().since(&before);
+        assert_eq!(d.aborts, 0, "tcp n={n} sparse");
+        report.push(AuditRow::new_sparse(
+            TransportKind::Tcp,
+            n,
+            ROUNDS as u64,
+            LEN,
+            d.payload_link_bytes(),
+        ));
+        // ring: the two-sweep schedule is balanced, so every rank must
+        // receive exactly 2(n-1)/n·E·8 per round and its outgoing link
+        // must carry the same (tx side of the physical link r → r+1)
+        let tps = ring_cluster(n, timeout).unwrap();
+        let before: Vec<_> = tps
+            .iter()
+            .enumerate()
+            .map(|(r, tp)| tp.counters(r).unwrap().snapshot())
+            .collect();
+        run_sparse_rounds(&tps);
+        for (rank, tp) in tps.iter().enumerate() {
+            let d = tp.counters(rank).unwrap().snapshot().since(&before[rank]);
+            assert_eq!(d.aborts, 0, "ring n={n} sparse rank {rank}");
+            assert_eq!(
+                d.payload_rx_bytes,
+                (ROUNDS * predicted_sparse_recv_bytes(n, LEN)) as u64,
+                "ring n={n} sparse rank {rank} recv"
+            );
+            report.push(AuditRow::new_sparse(
+                TransportKind::Ring,
+                n,
+                ROUNDS as u64,
+                LEN,
+                d.payload_tx_bytes,
+            ));
+        }
+    }
+    assert!(
+        report.all_exact(),
+        "sparse-shard wire bytes diverge from the cost model:\n{}",
+        report.render()
+    );
+    // one tcp cell per n, plus one ring cell per rank
+    assert_eq!(report.rows.len(), 2 + (2 + 4));
 }
 
 fn small_gen(n: usize) -> SynthGen {

@@ -38,6 +38,15 @@
 //! abort between `rsag_start` and `finish` poisons the finish within
 //! the deadline.
 //!
+//! The truly sparse rsag battery (ISSUE 8) pins `--sparse-shards` on
+//! every transport: blocking and split-phase sparse rounds land the
+//! canonical reduced `(index, value)` entry list and each rank's
+//! re-top-k residual bit-exactly (including payload-carrying NaNs,
+//! empty contributions and per-hop caps), residual mass is conserved —
+//! uncapped totals equal capped totals plus discards, position-wise —
+//! and the `SimWorker` loop with `sparse_shards = true` reproduces the
+//! lockstep engine's sparse trace bit-exactly over all four transports.
+//!
 //! The true multi-process star/ring paths (one OS process per rank via
 //! `exdyna launch`) are pinned by `rust/tests/engine_parity.rs`; this
 //! suite covers the transport semantics in-process where every failure
@@ -45,9 +54,13 @@
 
 use exdyna::cluster::testing::{local_cluster, ring_cluster, ring_local_cluster, tcp_cluster};
 use exdyna::cluster::{
-    run_rank_on_transport, run_threaded, CollectiveKind, Endpoint, FloatBufPool, Message, Transport,
+    run_rank_on_transport, run_threaded, CollectiveKind, Endpoint, FloatBufPool, Message,
+    SparseRound, Transport,
 };
 use exdyna::collectives::allreduce::reduce_contributions_rsag_with;
+use exdyna::collectives::{
+    canonicalize_residual, reduce_sparse_contributions_with, SparseReduceScratch, SparseVec,
+};
 use exdyna::coordinator::{ExDyna, ExDynaCfg, SelectOutput};
 use exdyna::error::Result;
 use exdyna::grad::synth::{DecayCfg, SynthGen, SynthModel};
@@ -589,6 +602,244 @@ fn abort_poisons_a_pending_rsag_finish() {
     }
 }
 
+/// One rank's sparse contribution for a round: every rank shares
+/// position 0 (PROBE-valued, so any non-canonical merge order lands
+/// different bits there), owns the stride-`n` comb `p % n == rank` for
+/// `p ≥ 1`, and rank 1 sits a round out entirely every fourth round
+/// (the empty-contribution case).
+fn sparse_probe_contribution(rank: usize, round: usize, n: usize, len: usize) -> SparseVec {
+    let mut sv = SparseVec::new();
+    if rank == 1 && n > 1 && round % 4 == 2 {
+        return sv;
+    }
+    sv.push(0, PROBE[(rank + round) % 3]);
+    for p in 1..len {
+        if p % n == rank {
+            sv.push(p as u32, (rank * 100 + p + round) as f32);
+        }
+    }
+    sv
+}
+
+/// The canonical sparse rsag reference for one round: the reduced entry
+/// list and every rank's canonicalized residual, from the same
+/// shard-ordered merge (`reduce_sparse_contributions_with`) the
+/// lockstep engine runs.
+fn sparse_reference(
+    n: usize,
+    len: usize,
+    shard_k: usize,
+    contribs: &[SparseVec],
+    want_out: &mut SparseVec,
+    want_res: &mut Vec<SparseVec>,
+) {
+    let mut scratch = SparseReduceScratch::new();
+    want_res.clear();
+    want_res.resize_with(n, SparseVec::new);
+    reduce_sparse_contributions_with(
+        n,
+        len,
+        |r| (&contribs[r].idx[..], &contribs[r].val[..]),
+        shard_k,
+        &mut scratch,
+        want_out,
+        |owner, i, v| want_res[owner].push_entry(i, v),
+    );
+    for res in want_res.iter_mut() {
+        canonicalize_residual(res, &mut scratch);
+    }
+}
+
+/// Bitwise equality of two sparse entry lists, with context.
+fn assert_sparse_eq(got: &SparseVec, want: &SparseVec, ctx: &str) {
+    assert_eq!(got.idx, want.idx, "{ctx}: entry positions");
+    assert_eq!(got.val.len(), want.val.len(), "{ctx}");
+    for (i, (a, b)) in got.val.iter().zip(want.val.iter()).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{ctx} entry {i} (pos {}): {a} vs {b}",
+            got.idx[i]
+        );
+    }
+}
+
+#[test]
+fn sparse_rsag_entry_lists_and_residuals_are_canonical_on_every_transport() {
+    // shard_k = 0 runs uncapped (no residual may appear); shard_k > 0
+    // exercises the per-hop re-top-k and the residual routing. (4, 11)
+    // has ragged shards; (1, 5) is the single-rank world; blocking and
+    // split-phase rounds alternate so both halves share one battery.
+    for &(name, mk) in TRANSPORTS {
+        for (n, len, shard_k) in [
+            (1usize, 5usize, 0usize),
+            (2, 9, 0),
+            (3, 12, 2),
+            (4, 11, 1),
+            (4, 12, 0),
+        ] {
+            let rounds = 6;
+            let round_cfg = SparseRound {
+                union_len: len,
+                shard_k,
+            };
+            per_rank(name, mk(n), |rank, tp| {
+                let ep = Endpoint::new(rank, tp);
+                let mut scratch = SparseReduceScratch::new();
+                let mut out = SparseVec::new();
+                let mut residual = SparseVec::new();
+                let mut want_out = SparseVec::new();
+                let mut want_res = Vec::new();
+                for round in 0..rounds {
+                    let contribs: Vec<SparseVec> = (0..n)
+                        .map(|r| sparse_probe_contribution(r, round, n, len))
+                        .collect();
+                    let mine = Arc::new(contribs[rank].clone());
+                    if round % 2 == 0 {
+                        ep.rsag_sparse(mine, round_cfg, &mut scratch, &mut out, &mut residual)
+                            .unwrap();
+                    } else {
+                        let pending = ep.rsag_sparse_start(mine, round_cfg).unwrap();
+                        let overlap: f64 = (0..64).map(f64::from).sum();
+                        assert!(overlap > 0.0);
+                        pending.finish(&mut scratch, &mut out, &mut residual).unwrap();
+                    }
+                    sparse_reference(n, len, shard_k, &contribs, &mut want_out, &mut want_res);
+                    let ctx = format!(
+                        "[{name}] n={n} len={len} shard_k={shard_k} rank {rank} round {round}"
+                    );
+                    assert_sparse_eq(&out, &want_out, &format!("{ctx}: reduced"));
+                    if shard_k == 0 {
+                        assert!(residual.is_empty(), "{ctx}: uncapped rounds shed nothing");
+                    }
+                    assert_sparse_eq(&residual, &want_res[rank], &format!("{ctx}: residual"));
+                }
+            });
+        }
+    }
+}
+
+#[test]
+fn sparse_rsag_preserves_nan_payloads_bit_exactly() {
+    let nan_bits: u32 = 0x7FC0_1234; // payload-carrying NaN
+    for &(name, mk) in TRANSPORTS {
+        let n = 3;
+        let len = 9;
+        let round_cfg = SparseRound {
+            union_len: len,
+            shard_k: 0,
+        };
+        // rank 1 plants the NaN at position 4; ranks 0 and 2 contribute
+        // 0.0 there, so the canonical merge must carry the NaN through
+        let contribution = |r: usize| -> SparseVec {
+            let mut sv = SparseVec::new();
+            sv.push(r as u32, (r + 1) as f32);
+            sv.push(
+                4,
+                if r == 1 { f32::from_bits(nan_bits) } else { 0.0 },
+            );
+            sv.push((6 + r) as u32, -(r as f32));
+            sv
+        };
+        per_rank(name, mk(n), |rank, tp| {
+            let ep = Endpoint::new(rank, tp);
+            let mut scratch = SparseReduceScratch::new();
+            let mut out = SparseVec::new();
+            let mut residual = SparseVec::new();
+            ep.rsag_sparse(
+                Arc::new(contribution(rank)),
+                round_cfg,
+                &mut scratch,
+                &mut out,
+                &mut residual,
+            )
+            .unwrap();
+            let nan_entry = out.idx.iter().position(|&i| i == 4).expect("position 4 reduced");
+            assert!(out.val[nan_entry].is_nan(), "[{name}] NaN lost in the sparse merge");
+            let contribs: Vec<SparseVec> = (0..n).map(contribution).collect();
+            let mut want_out = SparseVec::new();
+            let mut want_res = Vec::new();
+            sparse_reference(n, len, 0, &contribs, &mut want_out, &mut want_res);
+            assert_sparse_eq(&out, &want_out, &format!("[{name}] rank {rank}"));
+        });
+    }
+}
+
+#[test]
+fn sparse_rsag_residuals_conserve_mass_under_the_cap() {
+    // full-overlap integer-valued contributions: every sum is exact in
+    // f32, so capped + shed must reproduce the uncapped totals not just
+    // approximately but exactly, position by position
+    for &(name, mk) in TRANSPORTS {
+        let n = 4;
+        let len = 16;
+        let shard_k = 2; // < len/n = 4 entries per shard: the cap bites
+        let round_cfg = SparseRound {
+            union_len: len,
+            shard_k,
+        };
+        let contribution = |r: usize| -> SparseVec {
+            let mut sv = SparseVec::new();
+            for p in 0..len {
+                sv.push(p as u32, ((r + 1) * (p + 1) % 13) as f32);
+            }
+            sv
+        };
+        per_rank(name, mk(n), |rank, tp| {
+            let ep = Endpoint::new(rank, tp);
+            let mut scratch = SparseReduceScratch::new();
+            let mut out = SparseVec::new();
+            let mut residual = SparseVec::new();
+            ep.rsag_sparse(
+                Arc::new(contribution(rank)),
+                round_cfg,
+                &mut scratch,
+                &mut out,
+                &mut residual,
+            )
+            .unwrap();
+            assert!(
+                out.len() <= n * shard_k,
+                "[{name}] rank {rank}: cap leaked — {} entries over {} shards of {shard_k}",
+                out.len(),
+                n
+            );
+            // gather every rank's residual (deterministic canonical
+            // attribution: recompute all of them from the reference)
+            let contribs: Vec<SparseVec> = (0..n).map(contribution).collect();
+            let mut want_out = SparseVec::new();
+            let mut want_res = Vec::new();
+            sparse_reference(n, len, shard_k, &contribs, &mut want_out, &mut want_res);
+            assert_sparse_eq(&residual, &want_res[rank], &format!("[{name}] rank {rank}"));
+            // position-wise conservation against the uncapped reduce
+            let mut uncapped = SparseVec::new();
+            let mut none = Vec::new();
+            sparse_reference(n, len, 0, &contribs, &mut uncapped, &mut none);
+            let mut total = vec![0.0f32; len];
+            for (&i, &v) in out.idx.iter().zip(out.val.iter()) {
+                total[i as usize] += v;
+            }
+            for res in &want_res {
+                for (&i, &v) in res.idx.iter().zip(res.val.iter()) {
+                    total[i as usize] += v;
+                }
+            }
+            for (&i, &v) in uncapped.idx.iter().zip(uncapped.val.iter()) {
+                assert_eq!(
+                    total[i as usize], v,
+                    "[{name}] rank {rank} pos {i}: delivered + shed must equal the \
+                     uncapped total exactly"
+                );
+                total[i as usize] = 0.0;
+            }
+            assert!(
+                total.iter().all(|&x| x == 0.0),
+                "[{name}] rank {rank}: mass appeared at positions the uncapped reduce never touched"
+            );
+        });
+    }
+}
+
 #[test]
 fn double_deposit_is_rejected_on_shared_board_transports() {
     // shared-board semantics (LocalTransport): a buggy second deposit
@@ -625,12 +876,18 @@ fn simworker_traces_are_bit_exact_on_every_transport() {
     // pipeline = true runs the split-phase software pipeline on every
     // transport — the cross-transport half of the ISSUE 5 acceptance;
     // collective = rsag swaps in the reduce-scatter → all-gather on the
-    // same matrix (the cross-transport half of the ISSUE 6 acceptance)
-    for (pipeline, collective) in [
-        (false, CollectiveKind::Allgather),
-        (true, CollectiveKind::Allgather),
-        (false, CollectiveKind::Rsag),
-        (true, CollectiveKind::Rsag),
+    // same matrix (the cross-transport half of the ISSUE 6 acceptance);
+    // sparse = true carries the value reduce as `--sparse-shards` entry
+    // lists (the cross-transport half of the ISSUE 8 acceptance — the
+    // pipelined sparse round serializes its reduce, so both engines
+    // charge it additively)
+    for (pipeline, collective, sparse) in [
+        (false, CollectiveKind::Allgather, false),
+        (true, CollectiveKind::Allgather, false),
+        (false, CollectiveKind::Rsag, false),
+        (true, CollectiveKind::Rsag, false),
+        (false, CollectiveKind::Rsag, true),
+        (true, CollectiveKind::Rsag, true),
     ] {
         let cfg = SimCfg {
             n_ranks: n,
@@ -638,6 +895,7 @@ fn simworker_traces_are_bit_exact_on_every_transport() {
             compute_s: 0.01,
             pipeline,
             collective,
+            sparse_shards: sparse,
             ..Default::default()
         };
         let reference = run_threaded(&gen, &mk_sp, &cfg).unwrap();
@@ -665,11 +923,12 @@ fn simworker_traces_are_bit_exact_on_every_transport() {
                 assert_eq!(
                     trace.records.len(),
                     reference.records.len(),
-                    "[{name}] pipeline={pipeline} collective={collective} rank {rank}"
+                    "[{name}] pipeline={pipeline} collective={collective} sparse={sparse} rank {rank}"
                 );
                 for (a, b) in trace.records.iter().zip(reference.records.iter()) {
                     let ctx = format!(
-                        "[{name}] pipeline={pipeline} collective={collective} rank {rank} t={}",
+                        "[{name}] pipeline={pipeline} collective={collective} sparse={sparse} \
+                         rank {rank} t={}",
                         a.t
                     );
                     assert_eq!(a.k_actual, b.k_actual, "{ctx}: k_actual");
