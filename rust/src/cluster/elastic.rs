@@ -1,0 +1,993 @@
+//! Epoch-based elastic membership: survivors of a dead rank re-form
+//! the cluster instead of aborting, and a restarted rank rejoins at an
+//! epoch boundary.
+//!
+//! The moving parts:
+//!
+//! * [`Membership`] — what a rank needs from its cluster while running:
+//!   an iteration-start [`Membership::probe`] (does anyone want a
+//!   reform?), a [`Membership::reform`] that blocks until the next
+//!   epoch is formed and hands back a fresh [`Seat`], and an
+//!   [`Membership::on_chaos_kill`] notification for the injected-death
+//!   path.
+//! * [`ElasticCluster`] — the in-process implementation (one OS thread
+//!   per rank over [`LocalTransport`] or [`RingLocal`]): a mutex/condvar
+//!   barrier where the survivors of a fault deposit their claims and
+//!   the last arrival builds the next epoch's transport. Because the
+//!   whole cluster shares one address space it can also bank a killed
+//!   rank's error-feedback accumulator and hand it back on rejoin —
+//!   EF mass is conserved across an in-process kill/rejoin cycle.
+//! * [`SocketMember`] — the one-process-per-rank implementation,
+//!   delegating to the wire protocol in
+//!   [`net::elastic`](crate::cluster::net::elastic): original rank 0
+//!   keeps the rendezvous listener as the [`EpochCoordinator`], every
+//!   other rank re-dials it at each boundary. A restarted process lost
+//!   its memory, so a socket rejoin restores only the sparsifier
+//!   snapshot carried by the Welcome, not the EF accumulator.
+//! * [`run_elastic_seat`] — one rank's recovery loop: run
+//!   [`SimWorker::run_state`] over the current seat; on a membership
+//!   fault ([`Error::is_membership_fault`] or
+//!   [`Error::looks_like_peer_loss`]) poison the old transport, export
+//!   the sparsifier state, re-form, and resume from
+//!   [`WorkerState::start_t`] — the error carry and replica feedback of
+//!   every completed iteration survive, so no threshold step is ever
+//!   replayed.
+//! * [`run_elastic_threaded`] — the thread-per-rank driver (the
+//!   `sim --elastic` path), chaos injection included.
+//!
+//! Epoch fencing is structural: every re-formation builds a brand-new
+//! epoch-stamped transport, so no data frame needs an epoch tag and the
+//! round generation restarts at 0 per epoch. The per-epoch world is
+//! re-tiled over the survivors ([`Sparsifier::reform`] →
+//! [`PartitionLayout::retile`](crate::coordinator::PartitionLayout::retile)),
+//! while each worker's *data* stream stays pinned to its original rank
+//! ([`SimWorker::with_data_rank`]) — shrinking the world changes who
+//! owns which gradient partition, never which gradients exist.
+
+use crate::cluster::net::elastic::{
+    join_ring, join_star, reform_ring_client, reform_star_client, EpochCoordinator, EpochSeat,
+};
+use crate::cluster::net::{NetCfg, RingTransport, TcpTransport};
+use crate::cluster::ring_local::RingLocal;
+use crate::cluster::transport::{AbortOnPanic, Endpoint, LocalTransport, Transport};
+use crate::cluster::worker::{SimWorker, WorkerState};
+use crate::error::{Error, Result};
+use crate::grad::synth::SynthGen;
+use crate::metrics::{IterRecord, Trace};
+use crate::sparsifiers::Sparsifier;
+use crate::training::sim::{SimCfg, SparsifierFactory};
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::{Condvar, Mutex};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Elastic-membership knobs (`--elastic`, `--chaos-kill-at`).
+#[derive(Clone, Debug)]
+pub struct ElasticCfg {
+    /// Recover from membership faults instead of aborting the run.
+    pub enabled: bool,
+    /// Deterministic fault injection: `(iteration, original rank)` at
+    /// which the rank dies ([`Error::ChaosKilled`]) — the crash is
+    /// simulated, so the victim never sends abort frames itself.
+    pub chaos_kill_at: Option<(usize, usize)>,
+    /// Upper bound on re-formations before a rank gives up (a backstop
+    /// against a flapping cluster re-forming forever).
+    pub max_epochs: u64,
+    /// How long a re-formation waits for missing survivors before
+    /// declaring them dead.
+    pub grace: Duration,
+}
+
+impl Default for ElasticCfg {
+    fn default() -> Self {
+        ElasticCfg {
+            enabled: false,
+            chaos_kill_at: None,
+            max_epochs: 8,
+            grace: Duration::from_secs(2),
+        }
+    }
+}
+
+/// Parse the `--chaos-kill-at ITER:RANK` form.
+pub fn parse_kill_at(s: &str) -> Result<(usize, usize)> {
+    let bad = || {
+        Error::invalid(format!(
+            "--chaos-kill-at wants ITER:RANK (e.g. 5:2), got '{s}'"
+        ))
+    };
+    let (t, r) = s.split_once(':').ok_or_else(bad)?;
+    Ok((
+        t.trim().parse().map_err(|_| bad())?,
+        r.trim().parse().map_err(|_| bad())?,
+    ))
+}
+
+/// Everything one rank needs to run one epoch: its dense rank, the
+/// epoch's membership, the freshly built transport, and (for a
+/// late joiner) the state restored at the boundary.
+pub struct Seat {
+    /// The membership epoch this seat belongs to.
+    pub epoch: u64,
+    /// This rank's dense seat index within the epoch.
+    pub rank: usize,
+    /// Original ranks of every member, indexed by dense rank.
+    pub world: Vec<u32>,
+    /// Iteration the epoch resumes at.
+    pub resume_t: usize,
+    /// The epoch's transport (built fresh per epoch — epoch fencing is
+    /// structural, see the module docs).
+    pub transport: Arc<dyn Transport>,
+    /// Sparsifier state snapshot to import (late joiners only).
+    pub sp_import: Option<Vec<u8>>,
+    /// Error-feedback accumulator to restore (in-process rejoin only;
+    /// a restarted process has genuinely lost its accumulator).
+    pub err_restore: Option<Vec<f32>>,
+}
+
+impl From<EpochSeat> for Seat {
+    fn from(s: EpochSeat) -> Seat {
+        Seat {
+            epoch: s.epoch,
+            rank: s.rank,
+            world: s.world,
+            resume_t: s.resume_t as usize,
+            transport: s.transport,
+            sp_import: (!s.snapshot.is_empty()).then_some(s.snapshot),
+            err_restore: None,
+        }
+    }
+}
+
+/// A rank's view of its elastic cluster while running.
+pub trait Membership: Send + Sync {
+    /// Blocks until the next epoch is formed and this rank is seated.
+    /// `next_t` is where this rank's [`WorkerState`] will resume;
+    /// `export` is its sparsifier snapshot (forwarded to joiners by
+    /// whichever survivor the implementation elects as donor); `lost`
+    /// is the original rank this rank believes died, when the fault
+    /// carried an attribution ([`Error::PeerLost`]).
+    fn reform(
+        &self,
+        orig_rank: usize,
+        next_t: usize,
+        export: Option<Vec<u8>>,
+        lost: Option<u32>,
+    ) -> Result<Seat>;
+
+    /// The injected death fired on `orig_rank`: record whatever the
+    /// implementation can salvage (the in-process cluster banks the EF
+    /// accumulator and poisons the shared transport on the victim's
+    /// behalf; the socket implementation does nothing — dropped sockets
+    /// are the death notice).
+    fn on_chaos_kill(&self, orig_rank: usize, err: &[f32]);
+
+    /// Iteration-start probe: `Err(Error::Reform)` when the cluster
+    /// should re-form at this boundary (e.g. a joiner is parked).
+    fn probe(&self, orig_rank: usize, t: usize) -> Result<()>;
+}
+
+/// Which in-process transport an [`ElasticCluster`] re-forms.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElasticFlavor {
+    /// [`LocalTransport`] (mutex/condvar slot board).
+    Local,
+    /// [`RingLocal`] (in-process ring twin).
+    Ring,
+}
+
+/// A formed seat waiting for its rank to pick it up.
+struct PendingSeat {
+    epoch: u64,
+    rank: usize,
+    world: Vec<u32>,
+    resume_t: usize,
+    transport: Arc<dyn Transport>,
+    sp_import: Option<Vec<u8>>,
+    err_restore: Option<Vec<f32>>,
+}
+
+impl PendingSeat {
+    fn into_seat(self) -> Seat {
+        Seat {
+            epoch: self.epoch,
+            rank: self.rank,
+            world: self.world,
+            resume_t: self.resume_t,
+            transport: self.transport,
+            sp_import: self.sp_import,
+            err_restore: self.err_restore,
+        }
+    }
+}
+
+struct EState {
+    epoch: u64,
+    /// Original ranks of the current epoch's members, sorted.
+    world: Vec<u32>,
+    /// The current epoch's transport (so a chaos kill can poison it on
+    /// the victim's behalf — the in-process waits are untimed).
+    transport: Arc<dyn Transport>,
+    dead: BTreeSet<u32>,
+    /// Ranks waiting to be seated at the next boundary.
+    joiners: BTreeSet<u32>,
+    /// Survivor claims for the pending re-formation: orig rank → the
+    /// iteration it resumes at.
+    arrived: BTreeMap<u32, usize>,
+    /// Survivor sparsifier snapshots (donor source for joiners).
+    exports: BTreeMap<u32, Vec<u8>>,
+    /// Banked error-feedback accumulators of dead ranks, restored on
+    /// rejoin so EF mass is conserved across a kill/rejoin cycle.
+    err_bank: BTreeMap<u32, Vec<f32>>,
+    /// Formed seats awaiting pickup, by original rank.
+    seats: BTreeMap<u32, PendingSeat>,
+}
+
+/// In-process elastic membership: one shared barrier all rank threads
+/// re-form through. See the module docs for the protocol.
+pub struct ElasticCluster {
+    flavor: ElasticFlavor,
+    grace: Duration,
+    /// Receive deadline for the [`RingLocal`] flavor (the local flavor's
+    /// waits are untimed and rely on abort poisoning).
+    ring_timeout: Duration,
+    st: Mutex<EState>,
+    cv: Condvar,
+}
+
+impl ElasticCluster {
+    /// A cluster of `n` ranks at epoch 0.
+    pub fn new(
+        n: usize,
+        flavor: ElasticFlavor,
+        grace: Duration,
+        ring_timeout: Duration,
+    ) -> Result<Self> {
+        if n == 0 {
+            return Err(Error::invalid("world size must be >= 1"));
+        }
+        let transport = Self::build_transport(flavor, n, 0, ring_timeout);
+        Ok(ElasticCluster {
+            flavor,
+            grace,
+            ring_timeout,
+            st: Mutex::new(EState {
+                epoch: 0,
+                world: (0..n as u32).collect(),
+                transport,
+                dead: BTreeSet::new(),
+                joiners: BTreeSet::new(),
+                arrived: BTreeMap::new(),
+                exports: BTreeMap::new(),
+                err_bank: BTreeMap::new(),
+                seats: BTreeMap::new(),
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    fn build_transport(
+        flavor: ElasticFlavor,
+        n: usize,
+        epoch: u64,
+        ring_timeout: Duration,
+    ) -> Arc<dyn Transport> {
+        match flavor {
+            ElasticFlavor::Local => Arc::new(LocalTransport::new_at_epoch(n, epoch)),
+            ElasticFlavor::Ring => Arc::new(RingLocal::with_timeout_at_epoch(n, ring_timeout, epoch)),
+        }
+    }
+
+    /// This rank's seat in the current (normally initial) epoch.
+    pub fn initial_seat(&self, orig_rank: usize) -> Result<Seat> {
+        let st = self.st.lock().unwrap();
+        let orig = orig_rank as u32;
+        let rank = st
+            .world
+            .iter()
+            .position(|&r| r == orig)
+            .ok_or_else(|| {
+                Error::invalid(format!(
+                    "rank {orig_rank} is not a member (world {:?})",
+                    st.world
+                ))
+            })?;
+        Ok(Seat {
+            epoch: st.epoch,
+            rank,
+            world: st.world.clone(),
+            resume_t: 0,
+            transport: st.transport.clone(),
+            sp_import: None,
+            err_restore: None,
+        })
+    }
+
+    /// Rejoin a previously dead rank at the next epoch boundary. Live
+    /// members learn of the registration through their next
+    /// [`Membership::probe`] and force a re-formation; this call blocks
+    /// until seated (with the banked EF accumulator and the donor's
+    /// sparsifier snapshot restored) or the join window runs out.
+    pub fn join(&self, orig_rank: usize) -> Result<Seat> {
+        let me = orig_rank as u32;
+        let mut st = self.st.lock().unwrap();
+        if st.world.contains(&me) && !st.dead.contains(&me) {
+            return Err(Error::invalid(format!(
+                "rank {orig_rank} is already a live member"
+            )));
+        }
+        st.joiners.insert(me);
+        self.cv.notify_all();
+        let deadline = Instant::now() + self.grace.saturating_mul(4);
+        loop {
+            if let Some(ps) = st.seats.remove(&me) {
+                return Ok(ps.into_seat());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                st.joiners.remove(&me);
+                return Err(Error::protocol(
+                    "elastic join timed out waiting for an epoch boundary",
+                ));
+            }
+            let (g, _) = self.cv.wait_timeout(st, deadline - now).unwrap();
+            st = g;
+        }
+    }
+
+    /// Build the next epoch from the claims on the table: members are
+    /// exactly the arrived survivors plus the registered joiners.
+    /// Requires the lock; wake the waiters after.
+    fn form(&self, st: &mut EState) {
+        let mut world: Vec<u32> = st
+            .arrived
+            .keys()
+            .copied()
+            .chain(st.joiners.iter().copied())
+            .collect();
+        world.sort_unstable();
+        world.dedup();
+        let epoch = st.epoch + 1;
+        let n = world.len();
+        let transport = Self::build_transport(self.flavor, n, epoch, self.ring_timeout);
+        let resume_t = st.arrived.values().copied().max().unwrap_or(0);
+        // joiners inherit state from the lowest-ranked survivor that
+        // offered a snapshot (BTreeMap keys iterate ascending)
+        let donor: Option<Vec<u8>> = st.arrived.keys().find_map(|r| st.exports.get(r).cloned());
+        for (idx, &orig) in world.iter().enumerate() {
+            let fresh = st.joiners.contains(&orig);
+            st.seats.insert(
+                orig,
+                PendingSeat {
+                    epoch,
+                    rank: idx,
+                    world: world.clone(),
+                    resume_t,
+                    transport: transport.clone(),
+                    sp_import: if fresh { donor.clone() } else { None },
+                    err_restore: if fresh { st.err_bank.remove(&orig) } else { None },
+                },
+            );
+            st.dead.remove(&orig);
+        }
+        crate::log_info!(
+            "elastic",
+            "cluster re-formed: epoch {epoch} world {world:?} resume_t {resume_t}"
+        );
+        st.epoch = epoch;
+        st.world = world;
+        st.transport = transport;
+        st.arrived.clear();
+        st.exports.clear();
+        st.joiners.clear();
+    }
+}
+
+impl Membership for ElasticCluster {
+    fn reform(
+        &self,
+        orig_rank: usize,
+        next_t: usize,
+        export: Option<Vec<u8>>,
+        lost: Option<u32>,
+    ) -> Result<Seat> {
+        let me = orig_rank as u32;
+        let mut st = self.st.lock().unwrap();
+        // arriving proves liveness, whatever anyone reported
+        st.dead.remove(&me);
+        if let Some(l) = lost {
+            if l != me {
+                st.dead.insert(l);
+            }
+        }
+        st.arrived.insert(me, next_t);
+        if let Some(b) = export {
+            st.exports.insert(me, b);
+        }
+        self.cv.notify_all();
+        let deadline = Instant::now() + self.grace;
+        loop {
+            if let Some(ps) = st.seats.remove(&me) {
+                return Ok(ps.into_seat());
+            }
+            let survivors: Vec<u32> = st
+                .world
+                .iter()
+                .copied()
+                .filter(|r| !st.dead.contains(r))
+                .collect();
+            if !survivors.is_empty() && survivors.iter().all(|r| st.arrived.contains_key(r)) {
+                self.form(&mut st);
+                self.cv.notify_all();
+                continue;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                // grace ran out: whoever never arrived is dead — form
+                // the epoch from the claims actually on the table
+                let missing: Vec<u32> = survivors
+                    .into_iter()
+                    .filter(|r| !st.arrived.contains_key(r))
+                    .collect();
+                for r in missing {
+                    st.dead.insert(r);
+                }
+                self.form(&mut st);
+                self.cv.notify_all();
+                continue;
+            }
+            let (g, _) = self.cv.wait_timeout(st, deadline - now).unwrap();
+            st = g;
+        }
+    }
+
+    fn on_chaos_kill(&self, orig_rank: usize, err: &[f32]) {
+        let me = orig_rank as u32;
+        let mut st = self.st.lock().unwrap();
+        st.dead.insert(me);
+        st.arrived.remove(&me);
+        if !err.is_empty() {
+            st.err_bank.insert(me, err.to_vec());
+        }
+        // a crashed rank sends no abort frames, but the in-process
+        // waits are untimed: poison on the victim's behalf so survivors
+        // observe the death instead of blocking forever
+        match st.world.iter().position(|&r| r == me) {
+            Some(rank) => st.transport.abort_from(rank),
+            None => st.transport.abort(),
+        }
+        self.cv.notify_all();
+    }
+
+    fn probe(&self, _orig_rank: usize, _t: usize) -> Result<()> {
+        let st = self.st.lock().unwrap();
+        if st.joiners.is_empty() {
+            Ok(())
+        } else {
+            Err(Error::Reform {
+                epoch: st.epoch + 1,
+            })
+        }
+    }
+}
+
+struct SockState {
+    /// `Some` only on original rank 0 — the retained rendezvous
+    /// listener and its parked claims.
+    coord: Option<EpochCoordinator>,
+    epoch: u64,
+    world: Vec<u32>,
+}
+
+/// One process's membership handle in a socket cluster (star or ring),
+/// delegating to the wire protocol in
+/// [`net::elastic`](crate::cluster::net::elastic).
+pub struct SocketMember {
+    cfg: NetCfg,
+    ring: bool,
+    st: Mutex<SockState>,
+}
+
+impl SocketMember {
+    /// Original rank 0: bind the retained rendezvous listener and form
+    /// the initial epoch.
+    pub fn coordinator(
+        n: usize,
+        cfg: &NetCfg,
+        ring: bool,
+        grace: Duration,
+    ) -> Result<(Self, Seat)> {
+        let coord = EpochCoordinator::bind(cfg, grace)?;
+        let es = if ring {
+            coord.form_initial_ring(n)?
+        } else {
+            coord.form_initial_star(n)?
+        };
+        let world = es.world.clone();
+        let m = SocketMember {
+            cfg: cfg.clone(),
+            ring,
+            st: Mutex::new(SockState {
+                coord: Some(coord),
+                epoch: 0,
+                world,
+            }),
+        };
+        Ok((m, es.into()))
+    }
+
+    /// A non-zero original rank: the ordinary epoch-0 client connect.
+    pub fn client(n: usize, orig_rank: usize, cfg: &NetCfg, ring: bool) -> Result<(Self, Seat)> {
+        if orig_rank == 0 {
+            return Err(Error::invalid(
+                "original rank 0 is the coordinator; use SocketMember::coordinator",
+            ));
+        }
+        let tp: Arc<dyn Transport> = if ring {
+            Arc::new(RingTransport::client(n, orig_rank, cfg)?)
+        } else {
+            Arc::new(TcpTransport::client(n, orig_rank, cfg)?)
+        };
+        let world: Vec<u32> = (0..n as u32).collect();
+        let seat = Seat {
+            epoch: 0,
+            rank: orig_rank,
+            world: world.clone(),
+            resume_t: 0,
+            transport: tp,
+            sp_import: None,
+            err_restore: None,
+        };
+        let m = SocketMember {
+            cfg: cfg.clone(),
+            ring,
+            st: Mutex::new(SockState {
+                coord: None,
+                epoch: 0,
+                world,
+            }),
+        };
+        Ok((m, seat))
+    }
+
+    /// A restarted process with no seat yet: dial the coordinator and
+    /// wait out the next epoch boundary. The returned seat carries the
+    /// donor's sparsifier snapshot (a restarted process has lost its
+    /// own state).
+    pub fn rejoin(orig_rank: usize, cfg: &NetCfg, ring: bool) -> Result<(Self, Seat)> {
+        let es = if ring {
+            join_ring(cfg, orig_rank as u32)?
+        } else {
+            join_star(cfg, orig_rank as u32)?
+        };
+        let m = SocketMember {
+            cfg: cfg.clone(),
+            ring,
+            st: Mutex::new(SockState {
+                coord: None,
+                epoch: es.epoch,
+                world: es.world.clone(),
+            }),
+        };
+        Ok((m, es.into()))
+    }
+}
+
+impl Membership for SocketMember {
+    fn reform(
+        &self,
+        orig_rank: usize,
+        next_t: usize,
+        export: Option<Vec<u8>>,
+        lost: Option<u32>,
+    ) -> Result<Seat> {
+        let mut st = self.st.lock().unwrap();
+        let epoch = st.epoch + 1;
+        let es = if st.coord.is_some() {
+            let prev_world = st.world.clone();
+            let known_dead: Vec<u32> = lost.into_iter().collect();
+            let snapshot = export.unwrap_or_default();
+            let coord = st.coord.as_mut().expect("checked above");
+            if self.ring {
+                coord.reform_ring(epoch, &prev_world, &known_dead, next_t as u64, &snapshot)?
+            } else {
+                coord.reform_star(epoch, &prev_world, &known_dead, next_t as u64, &snapshot)?
+            }
+        } else if self.ring {
+            reform_ring_client(&self.cfg, epoch, orig_rank as u32, next_t as u64)?
+        } else {
+            reform_star_client(&self.cfg, epoch, orig_rank as u32, next_t as u64)?
+        };
+        st.epoch = es.epoch;
+        st.world = es.world.clone();
+        Ok(es.into())
+    }
+
+    fn on_chaos_kill(&self, _orig_rank: usize, _err: &[f32]) {
+        // a simulated crash sends nothing — peers detect the death by
+        // the dropped sockets, exactly like a real process death
+    }
+
+    fn probe(&self, _orig_rank: usize, _t: usize) -> Result<()> {
+        let mut st = self.st.lock().unwrap();
+        let next = st.epoch + 1;
+        if let Some(coord) = st.coord.as_mut() {
+            if coord.poll_join()? {
+                return Err(Error::Reform { epoch: next });
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One rank's elastic recovery loop over an initial [`Seat`]: run the
+/// worker; on a membership fault poison the old transport, carry the
+/// sparsifier (and export a snapshot for any joiner), re-form through
+/// `home`, and resume from [`WorkerState::start_t`]. Returns the rank's
+/// records on completion, the terminal error otherwise — the injected
+/// chaos death surfaces as [`Error::ChaosKilled`].
+pub fn run_elastic_seat(
+    gen: &SynthGen,
+    cfg: &SimCfg,
+    orig_rank: usize,
+    sp0: Box<dyn Sparsifier>,
+    mut seat: Seat,
+    home: &dyn Membership,
+    ecfg: &ElasticCfg,
+) -> Result<Vec<IterRecord>> {
+    if cfg.pipeline {
+        return Err(Error::invalid(
+            "elastic membership requires the sequential loop; drop --pipeline",
+        ));
+    }
+    let mut state = WorkerState::new();
+    let mut sp = Some(sp0);
+    let mut first = true;
+    loop {
+        let n = seat.world.len();
+        let mut epoch_cfg = *cfg;
+        epoch_cfg.n_ranks = n;
+        let mut replica = sp.take().expect("the loop always refills the replica");
+        if !first {
+            // re-tile the partition layout over the epoch's world (and
+            // drop any half-finished round the fault tore down)
+            replica.reform(n)?;
+        }
+        first = false;
+        if let Some(bytes) = seat.sp_import.take() {
+            replica.import_state(&bytes)?;
+        }
+        if let Some(err) = seat.err_restore.take() {
+            state.err = err;
+        }
+        state.start_t = state.start_t.max(seat.resume_t);
+
+        let chaos = ecfg.chaos_kill_at;
+        let probe: Box<dyn FnMut(usize) -> Result<()> + '_> = Box::new(move |t| {
+            if chaos == Some((t, orig_rank)) {
+                return Err(Error::ChaosKilled { rank: orig_rank, t });
+            }
+            home.probe(orig_rank, t)
+        });
+        let guard = AbortOnPanic(seat.transport.as_ref());
+        let ep = Endpoint::new(seat.rank, seat.transport.as_ref());
+        let mut worker = SimWorker::new(seat.rank, replica, gen, &epoch_cfg, ep)
+            .with_epoch(seat.epoch)
+            .with_data_rank(orig_rank)
+            .with_probe(probe);
+        let out = worker.run_state(&mut state);
+        let replica = worker.into_sparsifier();
+        drop(guard);
+        match out {
+            Ok(()) => return Ok(state.records),
+            Err(e @ Error::ChaosKilled { .. }) => {
+                home.on_chaos_kill(orig_rank, &state.err);
+                return Err(e);
+            }
+            Err(e)
+                if (e.is_membership_fault() || e.looks_like_peer_loss())
+                    && seat.epoch < ecfg.max_epochs =>
+            {
+                let lost = match &e {
+                    Error::PeerLost { rank, .. } => seat.world.get(*rank).copied(),
+                    _ => None,
+                };
+                crate::log_info!(
+                    "elastic",
+                    "rank {orig_rank} (epoch {} seat {}) lost the cluster ({e}); \
+                     re-forming at epoch {}",
+                    seat.epoch,
+                    seat.rank,
+                    seat.epoch + 1
+                );
+                // always poison before leaving: the in-process waits
+                // are untimed, and closed sockets fail peers over fast
+                seat.transport.abort();
+                let export = replica.export_state();
+                sp = Some(replica);
+                seat = home.reform(orig_rank, state.start_t, export, lost)?;
+                crate::log_info!(
+                    "elastic",
+                    "rank {orig_rank} seated: epoch {} seat {} world {:?} resume_t {}",
+                    seat.epoch,
+                    seat.rank,
+                    seat.world,
+                    seat.resume_t
+                );
+            }
+            Err(e) => {
+                seat.transport.abort();
+                return Err(e);
+            }
+        }
+    }
+}
+
+/// Thread-per-rank elastic driver (the `sim --elastic` path): like
+/// [`run_threaded`](crate::cluster::run_threaded) but every rank runs
+/// the recovery loop over a shared [`ElasticCluster`], so an injected
+/// death shrinks the cluster instead of failing the run. The trace is
+/// the lowest-ranked survivor's records.
+pub fn run_elastic_threaded(
+    gen: &SynthGen,
+    make_sparsifier: &SparsifierFactory,
+    cfg: &SimCfg,
+    flavor: ElasticFlavor,
+    ecfg: &ElasticCfg,
+) -> Result<Trace> {
+    let n = cfg.n_ranks;
+    if n == 0 {
+        return Err(Error::invalid("n_ranks must be >= 1"));
+    }
+    if cfg.pipeline {
+        return Err(Error::invalid(
+            "elastic membership requires the sequential loop; drop --pipeline",
+        ));
+    }
+    if let Some((_, victim)) = ecfg.chaos_kill_at {
+        if victim >= n {
+            return Err(Error::invalid(format!(
+                "--chaos-kill-at names rank {victim}, but the world has {n} ranks"
+            )));
+        }
+    }
+    let cluster = ElasticCluster::new(n, flavor, ecfg.grace, Duration::from_secs(30))?;
+    // replicas are built on the launcher thread (the factory need not
+    // be Sync), then each is moved onto its rank's thread
+    let mut replicas = Vec::with_capacity(n);
+    for _ in 0..n {
+        replicas.push(make_sparsifier(gen.n_g(), n)?);
+    }
+    let name = replicas[0].name();
+    let results: Vec<Result<Vec<IterRecord>>> = std::thread::scope(|s| {
+        let cluster = &cluster;
+        let handles: Vec<_> = replicas
+            .into_iter()
+            .enumerate()
+            .map(|(rank, sp)| {
+                s.spawn(move || {
+                    let seat = cluster.initial_seat(rank)?;
+                    run_elastic_seat(gen, cfg, rank, sp, seat, cluster, ecfg)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .unwrap_or_else(|_| Err(Error::invariant("elastic worker panicked")))
+            })
+            .collect()
+    });
+    let mut canonical: Option<Vec<IterRecord>> = None;
+    for res in results {
+        match res {
+            Ok(records) => {
+                if canonical.is_none() {
+                    canonical = Some(records);
+                }
+            }
+            // the injected death is the experiment, not a run failure
+            Err(Error::ChaosKilled { .. }) => {}
+            Err(e) => return Err(e),
+        }
+    }
+    let records = canonical.ok_or_else(|| {
+        Error::invariant("every rank was chaos-killed; no survivor produced a trace")
+    })?;
+    let mut trace = Trace::new(&name, &gen.model.name, n);
+    trace.pipelined = false;
+    for rec in records {
+        trace.push(rec);
+    }
+    Ok(trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::engine::run_threaded;
+    use crate::coordinator::{ExDyna, ExDynaCfg};
+    use crate::grad::synth::{DecayCfg, SynthModel};
+
+    fn sim_cfg(n: usize, iters: usize) -> SimCfg {
+        SimCfg {
+            n_ranks: n,
+            iters,
+            compute_s: 0.01,
+            ..Default::default()
+        }
+    }
+
+    fn gen(n: usize) -> SynthGen {
+        let model = SynthModel::profile("t", 24_000, 4, 5, DecayCfg::default());
+        SynthGen::new(model, n, 0.5, 17, false)
+    }
+
+    fn mk(n_g: usize, nr: usize) -> Result<Box<dyn Sparsifier>> {
+        Ok(Box::new(ExDyna::new(n_g, nr, ExDynaCfg::default_for(nr))?))
+    }
+
+    fn ecfg(kill: Option<(usize, usize)>) -> ElasticCfg {
+        ElasticCfg {
+            enabled: true,
+            chaos_kill_at: kill,
+            max_epochs: 8,
+            grace: Duration::from_secs(5),
+        }
+    }
+
+    #[test]
+    fn kill_at_parses_and_rejects_garbage() {
+        assert_eq!(parse_kill_at("5:2").unwrap(), (5, 2));
+        assert_eq!(parse_kill_at(" 10 : 0 ").unwrap(), (10, 0));
+        assert!(parse_kill_at("5").is_err());
+        assert!(parse_kill_at("a:b").is_err());
+        assert!(parse_kill_at("5:2:1").is_err());
+    }
+
+    #[test]
+    fn fault_free_elastic_matches_the_plain_threaded_trace() {
+        let n = 3;
+        let g = gen(n);
+        let cfg = sim_cfg(n, 8);
+        let plain = run_threaded(&g, &mk, &cfg).unwrap();
+        let elastic =
+            run_elastic_threaded(&g, &mk, &cfg, ElasticFlavor::Local, &ecfg(None)).unwrap();
+        assert_eq!(plain.records.len(), elastic.records.len());
+        for (a, b) in plain.records.iter().zip(elastic.records.iter()) {
+            assert_eq!(a.t, b.t);
+            assert_eq!(a.k_actual, b.k_actual);
+            assert_eq!(a.k_sum, b.k_sum);
+            assert_eq!(a.delta.to_bits(), b.delta.to_bits());
+            assert_eq!(a.global_err.to_bits(), b.global_err.to_bits());
+            assert_eq!(b.epoch, 0, "fault-free run never leaves epoch 0");
+        }
+    }
+
+    #[test]
+    fn survivors_outlive_a_chaos_kill_on_the_local_flavor() {
+        let n = 4;
+        let iters = 12;
+        let g = gen(n);
+        let cfg = sim_cfg(n, iters);
+        let trace =
+            run_elastic_threaded(&g, &mk, &cfg, ElasticFlavor::Local, &ecfg(Some((5, 2)))).unwrap();
+        // the transition may cost each survivor the record of the
+        // iteration the fault interrupted
+        assert!(
+            trace.records.len() >= iters - 2,
+            "expected >= {} records, got {}",
+            iters - 2,
+            trace.records.len()
+        );
+        assert_eq!(trace.records.last().unwrap().t, iters - 1);
+        assert_eq!(trace.records.first().unwrap().epoch, 0);
+        assert_eq!(
+            trace.records.last().unwrap().epoch,
+            1,
+            "the tail must run in the re-formed epoch"
+        );
+        let flip = trace.records.iter().filter(|r| r.epoch == 1).count();
+        assert!(flip > 0 && flip < trace.records.len());
+    }
+
+    #[test]
+    fn survivors_outlive_a_chaos_kill_on_the_ring_flavor() {
+        let n = 3;
+        let iters = 10;
+        let g = gen(n);
+        let cfg = sim_cfg(n, iters);
+        let trace =
+            run_elastic_threaded(&g, &mk, &cfg, ElasticFlavor::Ring, &ecfg(Some((4, 1)))).unwrap();
+        assert!(trace.records.len() >= iters - 2);
+        assert_eq!(trace.records.last().unwrap().t, iters - 1);
+        assert_eq!(trace.records.last().unwrap().epoch, 1);
+    }
+
+    #[test]
+    fn a_killed_rank_rejoins_with_its_error_feedback_restored() {
+        let n = 3;
+        let iters = 60;
+        let kill_t = 5;
+        let g = gen(n);
+        let cfg = sim_cfg(n, iters);
+        let cluster = Arc::new(
+            ElasticCluster::new(n, ElasticFlavor::Local, Duration::from_secs(5), {
+                Duration::from_secs(30)
+            })
+            .unwrap(),
+        );
+        let e = ecfg(Some((kill_t, 1)));
+        let results: Vec<Result<Vec<IterRecord>>> = std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for rank in 0..n {
+                let cluster = Arc::clone(&cluster);
+                let sp = mk(g.n_g(), n).unwrap();
+                let cfg = &cfg;
+                let g = &g;
+                let e = &e;
+                handles.push(s.spawn(move || {
+                    let seat = cluster.initial_seat(rank)?;
+                    run_elastic_seat(g, cfg, rank, sp, seat, cluster.as_ref(), e)
+                }));
+            }
+            // the victim's replacement: retry until the death lands,
+            // then wait out the boundary
+            let cluster2 = Arc::clone(&cluster);
+            let cfg = &cfg;
+            let g = &g;
+            let e2 = ElasticCfg {
+                chaos_kill_at: None,
+                ..e.clone()
+            };
+            handles.push(s.spawn(move || {
+                let deadline = Instant::now() + Duration::from_secs(20);
+                let seat = loop {
+                    match cluster2.join(1) {
+                        Ok(seat) => break seat,
+                        Err(_) if Instant::now() < deadline => {
+                            std::thread::sleep(Duration::from_micros(500))
+                        }
+                        Err(err) => return Err(err),
+                    }
+                };
+                assert!(
+                    seat.err_restore.is_some(),
+                    "in-process rejoin must restore the banked EF accumulator"
+                );
+                assert!(seat.sp_import.is_some(), "joiner inherits the donor snapshot");
+                // the registration usually lands after the shrink epoch
+                // formed (epoch >= 2), but can ride the shrink boundary
+                // itself (epoch 1) — both are correct seatings
+                assert!(seat.epoch >= 1, "rejoin happens at an epoch boundary");
+                run_elastic_seat(g, cfg, 1, mk(g.n_g(), seat.world.len()).unwrap(), seat,
+                    cluster2.as_ref(), &e2)
+            }));
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join()
+                        .unwrap_or_else(|_| Err(Error::invariant("worker panicked")))
+                })
+                .collect()
+        });
+        // ranks 0 and 2 survive end to end; rank 1 dies; the rejoiner
+        // finishes the tail of the run
+        assert!(results[0].is_ok(), "rank 0: {:?}", results[0].as_ref().err());
+        assert!(matches!(results[1], Err(Error::ChaosKilled { rank: 1, t }) if t == kill_t));
+        assert!(results[2].is_ok(), "rank 2: {:?}", results[2].as_ref().err());
+        let rejoined = results[3].as_ref().expect("rejoiner must finish");
+        assert!(!rejoined.is_empty(), "rejoiner must complete iterations");
+        assert_eq!(rejoined.last().unwrap().t, iters - 1);
+        assert!(rejoined.first().unwrap().epoch >= 1);
+        let survivor = results[0].as_ref().unwrap();
+        assert_eq!(survivor.last().unwrap().t, iters - 1);
+        // once the rejoiner is seated the world is back to 3 ranks and
+        // every member sees the same final epoch
+        assert_eq!(
+            survivor.last().unwrap().epoch,
+            rejoined.last().unwrap().epoch
+        );
+    }
+}

@@ -23,13 +23,16 @@ use crate::sparsifiers::Sparsifier;
 use crate::training::sim::{SimCfg, SparsifierFactory};
 use std::time::Instant;
 
-/// When one rank fails, its peers fail their rendezvous with a generic
-/// "transport poisoned" error; surface the original failure instead of
+/// When one rank fails, its peers fail their rendezvous with a
+/// poisoned-transport fault — the typed [`Error::PeerLost`] /
+/// [`Error::Poisoned`] (or, from older string paths, an `Invariant`
+/// mentioning "poisoned"); surface the original failure instead of
 /// whichever rank happened to be joined first.
 pub(crate) fn pick_root_cause(errors: Vec<Error>) -> Error {
     let mut fallback = None;
     for e in errors {
-        let is_poison = matches!(&e, Error::Invariant(m) if m.contains("poisoned"));
+        let is_poison = e.is_membership_fault()
+            || matches!(&e, Error::Invariant(m) if m.contains("poisoned"));
         if !is_poison {
             return e;
         }
@@ -412,6 +415,16 @@ mod tests {
             "transport poisoned by a failed worker",
         )]);
         assert!(picked.to_string().contains("poisoned"));
+        // the typed membership faults are poison noise too
+        let errs = vec![
+            Error::peer_lost(2, 9),
+            Error::invalid("the real problem"),
+            Error::poisoned(9),
+        ];
+        let picked = pick_root_cause(errs);
+        assert!(picked.to_string().contains("the real problem"), "{picked}");
+        let picked = pick_root_cause(vec![Error::peer_lost(1, 3)]);
+        assert!(picked.to_string().contains("rank 1"), "{picked}");
     }
 
     #[test]

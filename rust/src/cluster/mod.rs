@@ -61,6 +61,14 @@
 //!   a [`LocalTransport`] and merge the records;
 //!   [`run_rank_on_transport`]: run one rank of a multi-process cluster
 //!   over any transport (the `exdyna launch` path).
+//! * [`elastic`] — epoch-based elastic membership (`--elastic`): when a
+//!   rank dies mid-round the survivors drain the poisoned transport,
+//!   re-form a brand-new epoch-stamped transport over the remaining
+//!   ranks, re-tile the selection partition, and resume from the last
+//!   committed iteration — instead of the whole cluster aborting. A
+//!   restarted rank rejoins at an epoch boundary with a state snapshot.
+//!   `--chaos-kill-at ITER:RANK` injects a deterministic death for
+//!   testing the recovery path end to end.
 //!
 //! [`EngineKind`] selects between the threaded engine and the legacy
 //! lock-step path (kept for bit-exact comparison); [`TransportKind`]
@@ -89,6 +97,7 @@
 //!
 //! [CostModel]: crate::collectives::CostModel
 
+pub mod elastic;
 pub mod engine;
 pub mod net;
 pub mod ring_local;
@@ -96,6 +105,10 @@ pub mod testing;
 pub mod transport;
 pub mod worker;
 
+pub use elastic::{
+    parse_kill_at, run_elastic_seat, run_elastic_threaded, ElasticCfg, ElasticCluster,
+    ElasticFlavor, Membership, Seat, SocketMember,
+};
 pub use engine::{
     run_rank_on_transport, run_rank_on_transport_obs, run_threaded, run_threaded_obs,
     run_threaded_with_stats, run_threaded_with_stats_obs, ClusterStats,
@@ -106,7 +119,7 @@ pub use transport::{
     Endpoint, FloatBufPool, LocalTransport, Message, PendingReduce, PendingRound,
     PendingSparseReduce, RoundToken, SparseBufPool, SparseRound, Transport,
 };
-pub use worker::SimWorker;
+pub use worker::{SimWorker, WorkerState};
 
 use crate::error::{Error, Result};
 

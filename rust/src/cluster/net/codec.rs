@@ -45,8 +45,15 @@ pub const MAGIC: u32 = 0x4558_4459;
 /// ring-rendezvous frames: `HelloRing`, `WelcomeRing`, `RingLink`; v3
 /// added the reduce-scatter [`Frame::Shard`] frame; v4 added the truly
 /// sparse forms: the [`Message::Sparse`] entry-list payload and the
-/// [`Frame::SparseShard`] ring hop).
-pub const PROTOCOL_VERSION: u16 = 4;
+/// [`Frame::SparseShard`] ring hop; v5 added elastic membership: the
+/// [`Frame::Abort`] rank/generation stamp and the epoch re-rendezvous
+/// frames [`Frame::HelloEpoch`], [`Frame::WelcomeEpoch`],
+/// [`Frame::HelloJoin`]).
+pub const PROTOCOL_VERSION: u16 = 5;
+
+/// Sentinel for [`Frame::Abort`]'s `rank` when the aborting rank is
+/// unknown (e.g. a poison observed without an identified source).
+pub const ABORT_RANK_UNKNOWN: u32 = u32::MAX;
 
 /// Hard cap on one frame's payload — guards allocation on corrupt
 /// length fields (a selection frame at this size would be ~16M entries,
@@ -84,8 +91,17 @@ pub enum Frame {
         /// Human-readable refusal reason.
         reason: String,
     },
-    /// Either direction: transport poisoned; the receiver must error out.
-    Abort,
+    /// Either direction: transport poisoned; the receiver must error
+    /// out. Since v5 the notice is stamped with who aborted and at
+    /// which round, so the receiver surfaces a typed
+    /// [`Error::PeerLost`](crate::error::Error::PeerLost) instead of a
+    /// stringly "peer aborted".
+    Abort {
+        /// The aborting rank, or [`ABORT_RANK_UNKNOWN`].
+        rank: u32,
+        /// The round generation the aborting rank was at.
+        generation: u64,
+    },
     /// Client → coordinator rank claim for the *ring* transport: like
     /// [`Frame::Hello`] plus the port of the claimant's own ring
     /// listener (the coordinator pairs it with the connection's source
@@ -152,6 +168,50 @@ pub enum Frame {
         /// Values aligned with `idx`.
         vals: Vec<f32>,
     },
+    /// Survivor → coordinator claim in an epoch re-rendezvous
+    /// (protocol v5): after a membership fault the survivor reconnects
+    /// to the bootstrap coordinator and reports which epoch it wants to
+    /// form, its *original* rank, the next iteration it can resume
+    /// from, and (ring only) the port of its freshly bound ring
+    /// listener.
+    HelloEpoch {
+        /// The epoch the sender wants to form (current + 1).
+        epoch: u64,
+        /// The sender's original (epoch-0) rank.
+        orig_rank: u32,
+        /// First iteration the sender has not yet completed.
+        next_t: u64,
+        /// Port of the sender's new ring listener (0 for the star).
+        port: u16,
+    },
+    /// Late joiner → coordinator (protocol v5): ask to be seated at the
+    /// next epoch boundary. The coordinator parks the claim and forces
+    /// a reform at its next iteration boundary.
+    HelloJoin {
+        /// The joiner's original rank (its synthetic gradient stream).
+        orig_rank: u32,
+        /// Port of the joiner's new ring listener (0 for the star).
+        port: u16,
+    },
+    /// Coordinator → member: the epoch is formed (protocol v5). Carries
+    /// the member's new dense rank, the full membership (original ranks
+    /// in seat order), the iteration the epoch resumes at, the member's
+    /// right-neighbor address (ring only, empty for the star) and a
+    /// sparsifier state snapshot for joiners (empty for survivors).
+    WelcomeEpoch {
+        /// The epoch just formed.
+        epoch: u64,
+        /// The receiver's new dense rank within the epoch.
+        rank: u32,
+        /// Original ranks of every member, indexed by new dense rank.
+        world: Vec<u32>,
+        /// Iteration the epoch resumes at.
+        resume_t: u64,
+        /// `host:port` of the receiver's right ring neighbor ("" = star).
+        right_addr: String,
+        /// Opaque sparsifier state for joiners (empty for survivors).
+        snapshot: Vec<u8>,
+    },
 }
 
 impl Frame {
@@ -188,6 +248,9 @@ const KIND_WELCOME_RING: u8 = 6;
 const KIND_RING_LINK: u8 = 7;
 const KIND_SHARD: u8 = 8;
 const KIND_SPARSE_SHARD: u8 = 9;
+const KIND_HELLO_EPOCH: u8 = 10;
+const KIND_HELLO_JOIN: u8 = 11;
+const KIND_WELCOME_EPOCH: u8 = 12;
 
 const MSG_SELECTION: u8 = 0;
 const MSG_FLOATS: u8 = 1;
@@ -468,7 +531,11 @@ fn encode_payload_into(frame: &Frame, buf: &mut Vec<u8>) -> u8 {
             buf.extend_from_slice(bytes);
             KIND_REJECT
         }
-        Frame::Abort => KIND_ABORT,
+        Frame::Abort { rank, generation } => {
+            put_u32(buf, *rank);
+            put_u64(buf, *generation);
+            KIND_ABORT
+        }
         Frame::HelloRing { world, rank, port } => {
             put_u32(buf, *world);
             put_u32(buf, *rank);
@@ -516,6 +583,43 @@ fn encode_payload_into(frame: &Frame, buf: &mut Vec<u8>) -> u8 {
             put_f32_slab(buf, vals);
             KIND_SPARSE_SHARD
         }
+        Frame::HelloEpoch {
+            epoch,
+            orig_rank,
+            next_t,
+            port,
+        } => {
+            put_u64(buf, *epoch);
+            put_u32(buf, *orig_rank);
+            put_u64(buf, *next_t);
+            put_u16(buf, *port);
+            KIND_HELLO_EPOCH
+        }
+        Frame::HelloJoin { orig_rank, port } => {
+            put_u32(buf, *orig_rank);
+            put_u16(buf, *port);
+            KIND_HELLO_JOIN
+        }
+        Frame::WelcomeEpoch {
+            epoch,
+            rank,
+            world,
+            resume_t,
+            right_addr,
+            snapshot,
+        } => {
+            put_u64(buf, *epoch);
+            put_u32(buf, *rank);
+            put_u32(buf, world.len() as u32);
+            put_u32_slab(buf, world);
+            put_u64(buf, *resume_t);
+            let addr = right_addr.as_bytes();
+            put_u32(buf, addr.len() as u32);
+            buf.extend_from_slice(addr);
+            put_u32(buf, snapshot.len() as u32);
+            buf.extend_from_slice(snapshot);
+            KIND_WELCOME_EPOCH
+        }
     }
 }
 
@@ -541,7 +645,10 @@ fn decode_payload(kind: u8, payload: &[u8]) -> Result<Frame> {
                 .map_err(|_| Error::protocol("reject reason is not UTF-8"))?;
             Frame::Reject { reason }
         }
-        KIND_ABORT => Frame::Abort,
+        KIND_ABORT => Frame::Abort {
+            rank: c.u32("abort rank")?,
+            generation: c.u64("abort generation")?,
+        },
         KIND_HELLO_RING => {
             let world = c.u32("hello-ring world size")?;
             let rank = c.u32("hello-ring rank")?;
@@ -600,6 +707,51 @@ fn decode_payload(kind: u8, payload: &[u8]) -> Result<Frame> {
                 shard_len,
                 idx,
                 vals,
+            }
+        }
+        KIND_HELLO_EPOCH => {
+            let epoch = c.u64("hello-epoch epoch")?;
+            let orig_rank = c.u32("hello-epoch rank")?;
+            let next_t = c.u64("hello-epoch next_t")?;
+            let b = c.take(2, "hello-epoch port")?;
+            Frame::HelloEpoch {
+                epoch,
+                orig_rank,
+                next_t,
+                port: u16::from_le_bytes([b[0], b[1]]),
+            }
+        }
+        KIND_HELLO_JOIN => {
+            let orig_rank = c.u32("hello-join rank")?;
+            let b = c.take(2, "hello-join port")?;
+            Frame::HelloJoin {
+                orig_rank,
+                port: u16::from_le_bytes([b[0], b[1]]),
+            }
+        }
+        KIND_WELCOME_EPOCH => {
+            let epoch = c.u64("welcome-epoch epoch")?;
+            let rank = c.u32("welcome-epoch rank")?;
+            let n = c.u32("welcome-epoch world size")? as usize;
+            let total = n
+                .checked_mul(4)
+                .ok_or_else(|| Error::protocol("welcome-epoch world size overflows"))?;
+            c.require(total, "welcome-epoch world")?;
+            let world = c.u32_slab(n, "welcome-epoch world")?;
+            let resume_t = c.u64("welcome-epoch resume_t")?;
+            let alen = c.u32("welcome-epoch addr length")? as usize;
+            let abytes = c.take(alen, "welcome-epoch addr")?;
+            let right_addr = String::from_utf8(abytes.to_vec())
+                .map_err(|_| Error::protocol("welcome-epoch addr is not UTF-8"))?;
+            let slen = c.u32("welcome-epoch snapshot length")? as usize;
+            let snapshot = c.take(slen, "welcome-epoch snapshot")?.to_vec();
+            Frame::WelcomeEpoch {
+                epoch,
+                rank,
+                world,
+                resume_t,
+                right_addr,
+                snapshot,
             }
         }
         other => return Err(Error::protocol(format!("unknown frame kind {other}"))),
@@ -911,10 +1063,32 @@ mod tests {
     impl Strategy for FrameStrat {
         type Value = Frame;
         fn gen(&self, rng: &mut Rng) -> Frame {
-            match rng.usize(11) {
+            match rng.usize(14) {
                 0 | 1 => Frame::Data {
                     generation: rng.next_u64(),
                     msg: gen_message(rng),
+                },
+                10 => Frame::HelloEpoch {
+                    epoch: rng.next_u64(),
+                    orig_rank: rng.usize(64) as u32,
+                    next_t: rng.next_u64(),
+                    port: rng.next_u64() as u16,
+                },
+                11 => Frame::HelloJoin {
+                    orig_rank: rng.usize(64) as u32,
+                    port: rng.next_u64() as u16,
+                },
+                12 => Frame::WelcomeEpoch {
+                    epoch: rng.next_u64(),
+                    rank: rng.usize(64) as u32,
+                    world: (0..rng.usize(8)).map(|r| r as u32).collect(),
+                    resume_t: rng.next_u64(),
+                    right_addr: if rng.usize(2) == 0 {
+                        String::new()
+                    } else {
+                        format!("127.0.0.1:{}", rng.next_u64() as u16)
+                    },
+                    snapshot: (0..rng.usize(32)).map(|_| rng.next_u64() as u8).collect(),
                 },
                 8 => Frame::Shard {
                     generation: rng.next_u64(),
@@ -957,7 +1131,14 @@ mod tests {
                 7 => Frame::RingLink {
                     rank: rng.usize(64) as u32,
                 },
-                _ => Frame::Abort,
+                _ => Frame::Abort {
+                    rank: if rng.usize(3) == 0 {
+                        ABORT_RANK_UNKNOWN
+                    } else {
+                        rng.usize(64) as u32
+                    },
+                    generation: rng.next_u64(),
+                },
             }
         }
     }
@@ -1132,7 +1313,10 @@ mod tests {
 
     #[test]
     fn version_and_magic_mismatches_are_typed() {
-        let good = encode_frame(&Frame::Abort);
+        let good = encode_frame(&Frame::Abort {
+            rank: 1,
+            generation: 0,
+        });
         let mut bad_magic = good.clone();
         bad_magic[0] ^= 0xFF;
         let e = decode_frame(&bad_magic).unwrap_err().to_string();
@@ -1458,7 +1642,60 @@ mod tests {
             })),
         };
         assert_eq!(sparse_msg.payload_bytes(), 2 * 8);
-        assert_eq!(Frame::Abort.payload_bytes(), 0, "control frames carry none");
+        assert_eq!(
+            Frame::Abort {
+                rank: 0,
+                generation: 3
+            }
+            .payload_bytes(),
+            0,
+            "control frames carry none"
+        );
         assert_eq!(Frame::Hello { world: 2, rank: 1 }.payload_bytes(), 0);
+    }
+
+    #[test]
+    fn epoch_rendezvous_frames_roundtrip() {
+        for f in [
+            Frame::HelloEpoch {
+                epoch: 3,
+                orig_rank: 2,
+                next_t: 17,
+                port: 45_021,
+            },
+            Frame::HelloJoin {
+                orig_rank: 2,
+                port: 0,
+            },
+            Frame::WelcomeEpoch {
+                epoch: 3,
+                rank: 1,
+                world: vec![0, 2, 3],
+                resume_t: 17,
+                right_addr: "127.0.0.1:29501".to_string(),
+                snapshot: vec![1, 2, 3, 4],
+            },
+            Frame::WelcomeEpoch {
+                epoch: 1,
+                rank: 0,
+                world: vec![0],
+                resume_t: 0,
+                right_addr: String::new(),
+                snapshot: Vec::new(),
+            },
+            Frame::Abort {
+                rank: ABORT_RANK_UNKNOWN,
+                generation: 9,
+            },
+        ] {
+            let bytes = encode_frame(&f);
+            assert_eq!(decode_frame(&bytes).unwrap(), f);
+            for k in 0..bytes.len() {
+                assert!(
+                    decode_frame(&bytes[..k]).is_err(),
+                    "truncated epoch frame at {k} must be rejected"
+                );
+            }
+        }
     }
 }

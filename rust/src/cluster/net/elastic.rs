@@ -1,0 +1,895 @@
+//! Epoch re-formation for the socket transports (protocol v5).
+//!
+//! One process dies and the survivors re-form instead of aborting: that
+//! is the whole module. The bootstrap coordinator (original rank 0 — it
+//! must outlive the run; chaos tooling refuses to kill it) binds the
+//! rendezvous address ONCE, in an [`EpochCoordinator`], and keeps the
+//! listener across membership epochs. Epoch 0 is the ordinary star/ring
+//! rendezvous run over that retained listener. When a rank dies
+//! mid-round, every survivor's collective fails with a typed membership
+//! fault ([`Error::PeerLost`](crate::error::Error::PeerLost) /
+//! [`Error::Poisoned`](crate::error::Error::Poisoned)); survivors drain
+//! the poisoned transport, reconnect to the SAME coordinator address,
+//! and claim a seat in epoch `e + 1` with [`Frame::HelloEpoch`]. The
+//! coordinator collects claims until every expected survivor has
+//! arrived or a grace window expires — non-arrivals are declared dead —
+//! then answers each member with [`Frame::WelcomeEpoch`]: its new dense
+//! rank, the membership table (original ranks in seat order), the
+//! iteration to resume from (the max of the survivors' `next_t`, so no
+//! completed work is replayed), and, on the ring, its right neighbor's
+//! address.
+//!
+//! Transport rebuild, not repair: a re-formation constructs a brand-new
+//! [`TcpTransport`]/[`RingTransport`] stamped with the new epoch, so
+//! data frames need no epoch tag — fresh sockets isolate epochs
+//! naturally and the round generation restarts at 0. On the star the
+//! `HelloEpoch` rendezvous streams *become* the data-path streams; on
+//! the ring members advertise a freshly bound ring listener in their
+//! claim and re-link from the `WelcomeEpoch` address table.
+//!
+//! Late joiners: a restarted rank dials the coordinator with
+//! [`Frame::HelloJoin`] at any time. The coordinator's iteration-start
+//! probe ([`EpochCoordinator::poll_join`]) parks the claim and reports
+//! it; the elastic runner then forces a reform at the boundary, and the
+//! parked joiner is seated in the new epoch with a sparsifier state
+//! snapshot (the coordinator's own export) riding its `WelcomeEpoch`.
+
+use crate::cluster::net::codec::{read_frame, write_frame, Frame};
+use crate::cluster::net::handshake::{
+    bind_with_retry, hub_rendezvous_on, set_round_timeouts, NetCfg,
+};
+use crate::cluster::net::ring::{
+    accept_left, coordinate_ring_on, dial_right, host_of, substitute_wildcard_host,
+    wildcard_listen_addr, RingTransport,
+};
+use crate::cluster::net::tcp::TcpTransport;
+use crate::cluster::transport::Transport;
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One formed seat: everything a rank needs to run an epoch.
+pub struct EpochSeat {
+    /// The epoch this seat belongs to.
+    pub epoch: u64,
+    /// This rank's new dense rank within the epoch.
+    pub rank: usize,
+    /// Original ranks of every member, indexed by new dense rank.
+    pub world: Vec<u32>,
+    /// Iteration the epoch resumes at (0 for the initial formation).
+    pub resume_t: u64,
+    /// Sparsifier state snapshot (non-empty only for late joiners).
+    pub snapshot: Vec<u8>,
+    /// The freshly built transport, stamped with `epoch`.
+    pub transport: Arc<dyn Transport>,
+}
+
+/// A claim accepted outside a reform window, held until the next one.
+enum Parked {
+    /// A [`Frame::HelloJoin`]: a restarted rank waiting to be seated.
+    Joiner {
+        orig_rank: u32,
+        port: u16,
+        stream: TcpStream,
+    },
+    /// A [`Frame::HelloEpoch`] that raced ahead of the coordinator's
+    /// own fault detection.
+    Survivor {
+        orig_rank: u32,
+        next_t: u64,
+        port: u16,
+        stream: TcpStream,
+    },
+}
+
+impl Parked {
+    fn orig_rank(&self) -> u32 {
+        match self {
+            Parked::Joiner { orig_rank, .. } | Parked::Survivor { orig_rank, .. } => *orig_rank,
+        }
+    }
+}
+
+/// One member's claim, collected during a reform window.
+struct Arrival {
+    next_t: u64,
+    port: u16,
+    stream: TcpStream,
+    /// `true` for a fresh joiner (gets the state snapshot), `false`
+    /// for a survivor carrying its own state forward.
+    fresh: bool,
+}
+
+/// The coordinator's decision for one epoch: who sits where, and from
+/// which iteration the epoch resumes.
+struct EpochPlan {
+    /// Original ranks by new dense rank; `world[0] == 0` always.
+    world: Vec<u32>,
+    resume_t: u64,
+    /// Claims by original rank (the coordinator itself is absent).
+    members: BTreeMap<u32, Arrival>,
+}
+
+/// Original rank 0's persistent half of the elastic protocol: the
+/// retained rendezvous listener plus any claims parked between epochs.
+pub struct EpochCoordinator {
+    listener: TcpListener,
+    cfg: NetCfg,
+    /// How long a reform waits for missing survivors before declaring
+    /// them dead. All survivors fail the same round, so they arrive
+    /// within milliseconds of each other; the window only runs out when
+    /// someone is genuinely gone.
+    grace: Duration,
+    parked: Vec<Parked>,
+}
+
+impl EpochCoordinator {
+    /// Bind the retained rendezvous listener (with the same
+    /// retry-with-backoff as the plain hub, closing the free-port
+    /// TOCTOU race under `launch`).
+    pub fn bind(cfg: &NetCfg, grace: Duration) -> Result<Self> {
+        let deadline = Instant::now() + cfg.connect_timeout;
+        let listener = bind_with_retry(&cfg.coord_addr, deadline)?;
+        Ok(EpochCoordinator {
+            listener,
+            cfg: cfg.clone(),
+            grace,
+            parked: Vec::new(),
+        })
+    }
+
+    /// Epoch 0, star: the ordinary hub rendezvous over the retained
+    /// listener; the rendezvous streams become the data-path streams.
+    pub fn form_initial_star(&self, n: usize) -> Result<EpochSeat> {
+        if n == 0 {
+            return Err(Error::invalid("world size must be >= 1"));
+        }
+        let peers = hub_rendezvous_on(&self.listener, n, &self.cfg)?;
+        let tp = TcpTransport::hub_from_parts(n, peers, 0)?;
+        Ok(EpochSeat {
+            epoch: 0,
+            rank: 0,
+            world: (0..n as u32).collect(),
+            resume_t: 0,
+            snapshot: Vec::new(),
+            transport: Arc::new(tp),
+        })
+    }
+
+    /// Epoch 0, ring: the ordinary ring bootstrap over the retained
+    /// listener, then dial-right / accept-left as usual.
+    pub fn form_initial_ring(&self, n: usize) -> Result<EpochSeat> {
+        if n == 0 {
+            return Err(Error::invalid("world size must be >= 1"));
+        }
+        let tp: Arc<dyn Transport> = if n == 1 {
+            Arc::new(RingTransport::linkless(1, 0, 0))
+        } else {
+            let host = host_of(&self.cfg.coord_addr);
+            let ring_listener = TcpListener::bind(format!("{host}:0")).map_err(|e| {
+                Error::net(format!("rank 0 cannot bind its ring listener on {host}: {e}"))
+            })?;
+            let my_ring_addr = ring_listener.local_addr()?.to_string();
+            let addrs = coordinate_ring_on(&self.listener, n, &self.cfg, &my_ring_addr)?;
+            let deadline = Instant::now() + self.cfg.connect_timeout;
+            let right = dial_right(&addrs[1], 0, deadline, &self.cfg)?;
+            let left = accept_left(&ring_listener, n - 1, deadline, &self.cfg)?;
+            Arc::new(RingTransport::assemble(n, 0, right, left, 0)?)
+        };
+        Ok(EpochSeat {
+            epoch: 0,
+            rank: 0,
+            world: (0..n as u32).collect(),
+            resume_t: 0,
+            snapshot: Vec::new(),
+            transport: tp,
+        })
+    }
+
+    /// Iteration-start probe: drain the retained listener without
+    /// blocking, parking any [`Frame::HelloJoin`] (and any
+    /// [`Frame::HelloEpoch`] that raced ahead of this rank's own fault
+    /// detection). Returns `true` when a claim is waiting — the caller
+    /// must then force a reform at this boundary.
+    pub fn poll_join(&mut self) -> Result<bool> {
+        self.listener.set_nonblocking(true)?;
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(false)?;
+                    // a parked claimant already sent its frame; the
+                    // short deadline only guards against garbage dials
+                    stream.set_read_timeout(Some(Duration::from_millis(250)))?;
+                    stream.set_write_timeout(Some(self.cfg.io_timeout))?;
+                    let mut stream = stream;
+                    match read_frame(&mut stream) {
+                        Ok(Frame::HelloJoin { orig_rank, port }) if orig_rank != 0 => {
+                            // a reconnect supersedes an older claim for
+                            // the same rank (the old process is gone)
+                            self.parked.retain(|p| p.orig_rank() != orig_rank);
+                            self.parked.push(Parked::Joiner {
+                                orig_rank,
+                                port,
+                                stream,
+                            });
+                        }
+                        Ok(Frame::HelloEpoch {
+                            orig_rank,
+                            next_t,
+                            port,
+                            ..
+                        }) if orig_rank != 0 => {
+                            self.parked.retain(|p| p.orig_rank() != orig_rank);
+                            self.parked.push(Parked::Survivor {
+                                orig_rank,
+                                next_t,
+                                port,
+                                stream,
+                            });
+                        }
+                        Ok(other) => {
+                            let _ = write_frame(
+                                &mut stream,
+                                &Frame::Reject {
+                                    reason: format!(
+                                        "expected HelloJoin between epochs, got {other:?}"
+                                    ),
+                                },
+                            );
+                        }
+                        Err(_) => {
+                            // undecodable garbage: drop it
+                        }
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) => return Err(Error::net(format!("join probe accept failed: {e}"))),
+            }
+        }
+        Ok(!self.parked.is_empty())
+    }
+
+    /// Collect the claims for `epoch`: parked claims first, then the
+    /// retained listener until every expected survivor has arrived or
+    /// the grace window expires. `prev_world` is the previous epoch's
+    /// membership (original ranks); `known_dead` are ranks the caller
+    /// already knows are gone (from the typed fault's attribution), so
+    /// a fully attributed failure re-forms without waiting out the
+    /// grace window.
+    fn collect(
+        &mut self,
+        epoch: u64,
+        prev_world: &[u32],
+        known_dead: &[u32],
+        my_next_t: u64,
+    ) -> Result<EpochPlan> {
+        let mut members: BTreeMap<u32, Arrival> = BTreeMap::new();
+        for p in self.parked.drain(..) {
+            match p {
+                Parked::Joiner {
+                    orig_rank,
+                    port,
+                    stream,
+                } => {
+                    members.insert(
+                        orig_rank,
+                        Arrival {
+                            next_t: 0,
+                            port,
+                            stream,
+                            fresh: true,
+                        },
+                    );
+                }
+                Parked::Survivor {
+                    orig_rank,
+                    next_t,
+                    port,
+                    stream,
+                } => {
+                    members.insert(
+                        orig_rank,
+                        Arrival {
+                            next_t,
+                            port,
+                            stream,
+                            fresh: false,
+                        },
+                    );
+                }
+            }
+        }
+        let expected: Vec<u32> = prev_world
+            .iter()
+            .copied()
+            .filter(|&r| r != 0 && !known_dead.contains(&r))
+            .collect();
+        self.listener.set_nonblocking(true)?;
+        let start = Instant::now();
+        let grace_deadline = start + self.grace;
+        loop {
+            if expected.iter().all(|r| members.contains_key(r)) {
+                break;
+            }
+            let remaining = grace_deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                // whoever is still missing is dead: the survivors form
+                // the epoch without them
+                break;
+            }
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(false)?;
+                    stream.set_read_timeout(Some(
+                        remaining.min(self.cfg.io_timeout).max(Duration::from_millis(10)),
+                    ))?;
+                    stream.set_write_timeout(Some(self.cfg.io_timeout))?;
+                    let mut stream = stream;
+                    match read_frame(&mut stream) {
+                        Ok(Frame::HelloEpoch {
+                            epoch: e,
+                            orig_rank,
+                            next_t,
+                            port,
+                        }) => {
+                            let reject = if e != epoch {
+                                Some(format!(
+                                    "coordinator is forming epoch {epoch}, claim wants {e}"
+                                ))
+                            } else if orig_rank == 0 {
+                                Some("rank 0 is the coordinator".to_string())
+                            } else if members.contains_key(&orig_rank) {
+                                Some(format!("rank {orig_rank} already claimed this epoch"))
+                            } else {
+                                None
+                            };
+                            match reject {
+                                Some(reason) => {
+                                    let _ = write_frame(&mut stream, &Frame::Reject { reason });
+                                }
+                                None => {
+                                    members.insert(
+                                        orig_rank,
+                                        Arrival {
+                                            next_t,
+                                            port,
+                                            stream,
+                                            fresh: false,
+                                        },
+                                    );
+                                }
+                            }
+                        }
+                        Ok(Frame::HelloJoin { orig_rank, port }) if orig_rank != 0 => {
+                            // a joiner landing inside the window is
+                            // seated right away
+                            if !members.contains_key(&orig_rank) {
+                                members.insert(
+                                    orig_rank,
+                                    Arrival {
+                                        next_t: 0,
+                                        port,
+                                        stream,
+                                        fresh: true,
+                                    },
+                                );
+                            }
+                        }
+                        Ok(other) => {
+                            let _ = write_frame(
+                                &mut stream,
+                                &Frame::Reject {
+                                    reason: format!(
+                                        "mid-run epoch reform in progress; got {other:?}"
+                                    ),
+                                },
+                            );
+                        }
+                        Err(_) => {
+                            // undecodable garbage: drop it
+                        }
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(Error::net(format!("reform accept failed: {e}"))),
+            }
+        }
+        let mut world: Vec<u32> = Vec::with_capacity(members.len() + 1);
+        world.push(0);
+        world.extend(members.keys().copied());
+        world.sort_unstable();
+        let resume_t = members
+            .values()
+            .filter(|a| !a.fresh)
+            .map(|a| a.next_t)
+            .fold(my_next_t, u64::max);
+        Ok(EpochPlan {
+            world,
+            resume_t,
+            members,
+        })
+    }
+
+    /// Re-form the star at `epoch`: collect the claims, seat everyone,
+    /// and turn the rendezvous streams into the new star's data-path
+    /// streams. `snapshot` is this rank's sparsifier export, forwarded
+    /// to joiners only.
+    pub fn reform_star(
+        &mut self,
+        epoch: u64,
+        prev_world: &[u32],
+        known_dead: &[u32],
+        my_next_t: u64,
+        snapshot: &[u8],
+    ) -> Result<EpochSeat> {
+        let plan = self.collect(epoch, prev_world, known_dead, my_next_t)?;
+        let n = plan.world.len();
+        let mut members = plan.members;
+        let mut peers: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
+        for (new_rank, &orig) in plan.world.iter().enumerate() {
+            if orig == 0 {
+                continue;
+            }
+            let mut arr = members
+                .remove(&orig)
+                .expect("world was built from the member set");
+            write_frame(
+                &mut arr.stream,
+                &Frame::WelcomeEpoch {
+                    epoch,
+                    rank: new_rank as u32,
+                    world: plan.world.clone(),
+                    resume_t: plan.resume_t,
+                    right_addr: String::new(),
+                    snapshot: if arr.fresh {
+                        snapshot.to_vec()
+                    } else {
+                        Vec::new()
+                    },
+                },
+            )?;
+            set_round_timeouts(&arr.stream, &self.cfg)?;
+            peers[new_rank] = Some(arr.stream);
+        }
+        let tp = TcpTransport::hub_from_parts(n, peers, epoch)?;
+        Ok(EpochSeat {
+            epoch,
+            rank: 0,
+            world: plan.world,
+            resume_t: plan.resume_t,
+            snapshot: Vec::new(),
+            transport: Arc::new(tp),
+        })
+    }
+
+    /// Re-form the ring at `epoch`: collect the claims, advertise the
+    /// new neighbor table, drop the rendezvous streams, and re-link.
+    pub fn reform_ring(
+        &mut self,
+        epoch: u64,
+        prev_world: &[u32],
+        known_dead: &[u32],
+        my_next_t: u64,
+        snapshot: &[u8],
+    ) -> Result<EpochSeat> {
+        let plan = self.collect(epoch, prev_world, known_dead, my_next_t)?;
+        let n = plan.world.len();
+        let mut members = plan.members;
+        let tp: Arc<dyn Transport> = if n == 1 {
+            Arc::new(RingTransport::linkless(1, 0, epoch))
+        } else {
+            let host = host_of(&self.cfg.coord_addr);
+            let ring_listener = TcpListener::bind(format!("{host}:0")).map_err(|e| {
+                Error::net(format!("rank 0 cannot bind its ring listener on {host}: {e}"))
+            })?;
+            let my_ring_addr = ring_listener.local_addr()?.to_string();
+            // rank-indexed ring addresses: the coordinator's fresh
+            // listener plus each member's advertised port at the IP it
+            // dialed in from
+            let mut addrs: Vec<String> = Vec::with_capacity(n);
+            for &orig in plan.world.iter() {
+                if orig == 0 {
+                    addrs.push(my_ring_addr.clone());
+                } else {
+                    let arr = members
+                        .get(&orig)
+                        .expect("world was built from the member set");
+                    let ip = arr.stream.peer_addr()?.ip();
+                    addrs.push(SocketAddr::new(ip, arr.port).to_string());
+                }
+            }
+            for (new_rank, &orig) in plan.world.iter().enumerate() {
+                if orig == 0 {
+                    continue;
+                }
+                let mut arr = members
+                    .remove(&orig)
+                    .expect("world was built from the member set");
+                write_frame(
+                    &mut arr.stream,
+                    &Frame::WelcomeEpoch {
+                        epoch,
+                        rank: new_rank as u32,
+                        world: plan.world.clone(),
+                        resume_t: plan.resume_t,
+                        right_addr: addrs[(new_rank + 1) % n].clone(),
+                        snapshot: if arr.fresh {
+                            snapshot.to_vec()
+                        } else {
+                            Vec::new()
+                        },
+                    },
+                )?;
+                // rendezvous stream drops here; the data path is the
+                // fresh ring links only
+            }
+            let deadline = Instant::now() + self.cfg.connect_timeout;
+            let right = dial_right(&addrs[1], 0, deadline, &self.cfg)?;
+            let left = accept_left(&ring_listener, n - 1, deadline, &self.cfg)?;
+            Arc::new(RingTransport::assemble(n, 0, right, left, epoch)?)
+        };
+        Ok(EpochSeat {
+            epoch,
+            rank: 0,
+            world: plan.world,
+            resume_t: plan.resume_t,
+            snapshot: Vec::new(),
+            transport: tp,
+        })
+    }
+}
+
+/// Dial the retained coordinator address, retrying until the connect
+/// timeout (between windows a joiner's connect can be refused while the
+/// backlog churns).
+fn dial_coord(cfg: &NetCfg) -> Result<TcpStream> {
+    let deadline = Instant::now() + cfg.connect_timeout;
+    loop {
+        match TcpStream::connect(&cfg.coord_addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(Error::net(format!(
+                        "cannot reach the epoch coordinator at {} within {:?}: {e}",
+                        cfg.coord_addr, cfg.connect_timeout
+                    )));
+                }
+                std::thread::sleep(Duration::from_millis(25));
+            }
+        }
+    }
+}
+
+/// The fields of a received [`Frame::WelcomeEpoch`].
+struct Welcome {
+    epoch: u64,
+    rank: usize,
+    world: Vec<u32>,
+    resume_t: u64,
+    right_addr: String,
+    snapshot: Vec<u8>,
+}
+
+/// Read the coordinator's answer; `want_epoch` is checked for survivors
+/// (who know which epoch they are claiming) and skipped for joiners
+/// (who take whatever epoch forms next).
+fn expect_welcome(stream: &mut TcpStream, want_epoch: Option<u64>) -> Result<Welcome> {
+    match read_frame(stream)? {
+        Frame::WelcomeEpoch {
+            epoch,
+            rank,
+            world,
+            resume_t,
+            right_addr,
+            snapshot,
+        } => {
+            if let Some(want) = want_epoch {
+                if epoch != want {
+                    return Err(Error::protocol(format!(
+                        "coordinator formed epoch {epoch}, this rank claimed {want}"
+                    )));
+                }
+            }
+            Ok(Welcome {
+                epoch,
+                rank: rank as usize,
+                world,
+                resume_t,
+                right_addr,
+                snapshot,
+            })
+        }
+        Frame::Reject { reason } => Err(Error::protocol(format!(
+            "coordinator rejected the epoch claim: {reason}"
+        ))),
+        other => Err(Error::protocol(format!(
+            "expected WelcomeEpoch, got {other:?}"
+        ))),
+    }
+}
+
+/// Survivor side of a star re-formation: claim a seat in `epoch` and
+/// keep the rendezvous stream as the new data-path stream to the hub.
+pub fn reform_star_client(
+    cfg: &NetCfg,
+    epoch: u64,
+    orig_rank: u32,
+    next_t: u64,
+) -> Result<EpochSeat> {
+    let mut stream = dial_coord(cfg)?;
+    // the Welcome may take the whole reform budget (the coordinator
+    // waits out the grace window for slower survivors)
+    stream.set_read_timeout(Some(cfg.connect_timeout))?;
+    stream.set_write_timeout(Some(cfg.io_timeout))?;
+    write_frame(
+        &mut stream,
+        &Frame::HelloEpoch {
+            epoch,
+            orig_rank,
+            next_t,
+            port: 0,
+        },
+    )?;
+    let w = expect_welcome(&mut stream, Some(epoch))?;
+    set_round_timeouts(&stream, cfg)?;
+    let n = w.world.len();
+    let tp = TcpTransport::client_from_parts(n, w.rank, stream, epoch)?;
+    Ok(EpochSeat {
+        epoch: w.epoch,
+        rank: w.rank,
+        world: w.world,
+        resume_t: w.resume_t,
+        snapshot: w.snapshot,
+        transport: Arc::new(tp),
+    })
+}
+
+/// Survivor side of a ring re-formation: bind a fresh ring listener,
+/// claim a seat in `epoch`, then re-link from the advertised table.
+pub fn reform_ring_client(
+    cfg: &NetCfg,
+    epoch: u64,
+    orig_rank: u32,
+    next_t: u64,
+) -> Result<EpochSeat> {
+    let ring_listener = TcpListener::bind(wildcard_listen_addr(host_of(&cfg.coord_addr)))
+        .map_err(|e| Error::net(format!("cannot bind a reform ring listener: {e}")))?;
+    let port = ring_listener.local_addr()?.port();
+    let mut coord = dial_coord(cfg)?;
+    coord.set_read_timeout(Some(cfg.connect_timeout))?;
+    coord.set_write_timeout(Some(cfg.io_timeout))?;
+    write_frame(
+        &mut coord,
+        &Frame::HelloEpoch {
+            epoch,
+            orig_rank,
+            next_t,
+            port,
+        },
+    )?;
+    let w = expect_welcome(&mut coord, Some(epoch))?;
+    drop(coord);
+    ring_links_from_welcome(cfg, &ring_listener, w)
+}
+
+/// Joiner side, star: ask to be seated at the next boundary; the
+/// returned seat carries the coordinator's sparsifier snapshot.
+pub fn join_star(cfg: &NetCfg, orig_rank: u32) -> Result<EpochSeat> {
+    let mut stream = dial_coord(cfg)?;
+    // the Welcome arrives at the next epoch boundary, one iteration +
+    // grace + reform away at worst
+    stream.set_read_timeout(Some(cfg.connect_timeout))?;
+    stream.set_write_timeout(Some(cfg.io_timeout))?;
+    write_frame(&mut stream, &Frame::HelloJoin { orig_rank, port: 0 })?;
+    let w = expect_welcome(&mut stream, None)?;
+    set_round_timeouts(&stream, cfg)?;
+    let n = w.world.len();
+    let epoch = w.epoch;
+    let tp = TcpTransport::client_from_parts(n, w.rank, stream, epoch)?;
+    Ok(EpochSeat {
+        epoch,
+        rank: w.rank,
+        world: w.world,
+        resume_t: w.resume_t,
+        snapshot: w.snapshot,
+        transport: Arc::new(tp),
+    })
+}
+
+/// Joiner side, ring: bind a fresh ring listener, ask to be seated at
+/// the next boundary, then re-link from the advertised table.
+pub fn join_ring(cfg: &NetCfg, orig_rank: u32) -> Result<EpochSeat> {
+    let ring_listener = TcpListener::bind(wildcard_listen_addr(host_of(&cfg.coord_addr)))
+        .map_err(|e| Error::net(format!("cannot bind a rejoin ring listener: {e}")))?;
+    let port = ring_listener.local_addr()?.port();
+    let mut coord = dial_coord(cfg)?;
+    coord.set_read_timeout(Some(cfg.connect_timeout))?;
+    coord.set_write_timeout(Some(cfg.io_timeout))?;
+    write_frame(&mut coord, &Frame::HelloJoin { orig_rank, port })?;
+    let w = expect_welcome(&mut coord, None)?;
+    drop(coord);
+    ring_links_from_welcome(cfg, &ring_listener, w)
+}
+
+/// Shared ring tail: dial the advertised right neighbor, accept the
+/// left one, and assemble the new-epoch transport.
+fn ring_links_from_welcome(
+    cfg: &NetCfg,
+    ring_listener: &TcpListener,
+    w: Welcome,
+) -> Result<EpochSeat> {
+    let n = w.world.len();
+    let epoch = w.epoch;
+    // the coordinator's own ring address may carry a wildcard bind
+    // host; dial the host this rank reached the coordinator on
+    let right_addr = substitute_wildcard_host(w.right_addr, host_of(&cfg.coord_addr));
+    let deadline = Instant::now() + cfg.connect_timeout;
+    let right = dial_right(&right_addr, w.rank, deadline, cfg)?;
+    let left = accept_left(ring_listener, w.rank - 1, deadline, cfg)?;
+    let tp = RingTransport::assemble(n, w.rank, right, left, epoch)?;
+    Ok(EpochSeat {
+        epoch,
+        rank: w.rank,
+        world: w.world,
+        resume_t: w.resume_t,
+        snapshot: w.snapshot,
+        transport: Arc::new(tp),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::net::handshake::free_loopback_addr;
+    use crate::cluster::transport::Endpoint;
+
+    fn cfg(addr: &str) -> NetCfg {
+        NetCfg {
+            coord_addr: addr.to_string(),
+            connect_timeout: Duration::from_secs(20),
+            io_timeout: Duration::from_secs(10),
+        }
+    }
+
+    /// Drive one allgather round over a seat and check the board is
+    /// rank-indexed over the seat's world.
+    fn one_round(seat: &EpochSeat) {
+        let ep = Endpoint::new(seat.rank, seat.transport.as_ref());
+        let got = ep.allgather_f64(seat.world[seat.rank] as f64).unwrap();
+        let want: Vec<f64> = seat.world.iter().map(|&r| r as f64).collect();
+        assert_eq!(got, want, "epoch {} rank {}", seat.epoch, seat.rank);
+    }
+
+    /// Full star lifecycle: form 3 ranks at epoch 0, kill rank 1,
+    /// re-form at epoch 1 with the survivors, then seat rank 1 back at
+    /// epoch 2 via HelloJoin with the snapshot riding its Welcome.
+    #[test]
+    fn star_reforms_after_a_death_and_seats_a_rejoiner() {
+        let addr = free_loopback_addr().unwrap();
+        let c = cfg(&addr);
+        let c1 = c.clone();
+        let c2 = c.clone();
+        // gate h2's epoch-2 claim until the joiner's claim has been
+        // parked, so the coordinator's poll_join loop deterministically
+        // sees the HelloJoin first
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        let h1 = std::thread::spawn(move || {
+            let tp = TcpTransport::client(3, 1, &c1).unwrap();
+            // rank 1 "dies": its transport simply drops
+            drop(tp);
+        });
+        let h2 = std::thread::spawn(move || {
+            let tp = TcpTransport::client(3, 2, &c2).unwrap();
+            drop(tp);
+            // survive into epoch 1 (claim arrives while the
+            // coordinator is still collecting)
+            let seat = reform_star_client(&c2, 1, 2, 7).unwrap();
+            assert_eq!(seat.world, vec![0, 2]);
+            assert_eq!(seat.rank, 1, "dense re-rank");
+            assert_eq!(seat.resume_t, 7, "resume at the max survivor next_t");
+            assert!(seat.snapshot.is_empty(), "survivors carry their own state");
+            one_round(&seat);
+            // epoch 2: the restarted rank 1 is back
+            rx.recv().unwrap();
+            let seat = reform_star_client(&c2, 2, 2, 9).unwrap();
+            assert_eq!(seat.world, vec![0, 1, 2]);
+            assert_eq!(seat.rank, 2);
+            one_round(&seat);
+        });
+        let mut coord = EpochCoordinator::bind(&c, Duration::from_millis(800)).unwrap();
+        let seat0 = coord.form_initial_star(3).unwrap();
+        assert_eq!(seat0.epoch, 0);
+        assert_eq!(seat0.world, vec![0, 1, 2]);
+        h1.join().unwrap();
+        // rank 1 is known dead (the typed fault attributed it), so the
+        // reform does not wait out the grace window for it
+        let seat1 = coord.reform_star(1, &[0, 1, 2], &[1], 5, b"state-e1").unwrap();
+        assert_eq!(seat1.epoch, 1);
+        assert_eq!(seat1.world, vec![0, 2]);
+        assert_eq!(seat1.resume_t, 7);
+        assert_eq!(seat1.transport.epoch(), 1);
+        one_round(&seat1);
+        // the dead rank restarts and asks back in
+        let c3 = c.clone();
+        let h3 = std::thread::spawn(move || {
+            let seat = join_star(&c3, 1).unwrap();
+            assert_eq!(seat.epoch, 2);
+            assert_eq!(seat.world, vec![0, 1, 2]);
+            assert_eq!(seat.rank, 1);
+            assert_eq!(seat.resume_t, 9);
+            assert_eq!(seat.snapshot, b"state-e2", "joiner gets the snapshot");
+            one_round(&seat);
+        });
+        // wait for the join claim to land, as the runner's probe would
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !coord.poll_join().unwrap() {
+            assert!(Instant::now() < deadline, "join claim never arrived");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        tx.send(()).unwrap();
+        let seat2 = coord.reform_star(2, &[0, 2], &[], 9, b"state-e2").unwrap();
+        assert_eq!(seat2.world, vec![0, 1, 2]);
+        one_round(&seat2);
+        h2.join().unwrap();
+        h3.join().unwrap();
+    }
+
+    /// Ring re-formation: 3 ranks at epoch 0, rank 2 dies, survivors
+    /// re-link as a 2-ring at epoch 1 over fresh listeners.
+    #[test]
+    fn ring_reforms_with_fresh_links() {
+        let addr = free_loopback_addr().unwrap();
+        let c = cfg(&addr);
+        let c1 = c.clone();
+        let c2 = c.clone();
+        let h1 = std::thread::spawn(move || {
+            let tp = RingTransport::client(3, 1, &c1).unwrap();
+            drop(tp);
+            let seat = reform_ring_client(&c1, 1, 1, 4).unwrap();
+            assert_eq!(seat.world, vec![0, 1]);
+            assert_eq!(seat.rank, 1);
+            assert_eq!(seat.resume_t, 4);
+            assert_eq!(seat.transport.epoch(), 1);
+            one_round(&seat);
+        });
+        let h2 = std::thread::spawn(move || {
+            // rank 2 "dies" after the initial formation
+            let tp = RingTransport::client(3, 2, &c2).unwrap();
+            drop(tp);
+        });
+        let mut coord = EpochCoordinator::bind(&c, Duration::from_millis(800)).unwrap();
+        let seat0 = coord.form_initial_ring(3).unwrap();
+        assert_eq!(seat0.transport.epoch(), 0);
+        h2.join().unwrap();
+        let seat1 = coord.reform_ring(1, &[0, 1, 2], &[2], 3, &[]).unwrap();
+        assert_eq!(seat1.epoch, 1);
+        assert_eq!(seat1.world, vec![0, 1]);
+        assert_eq!(seat1.resume_t, 4);
+        one_round(&seat1);
+        h1.join().unwrap();
+    }
+
+    /// A lone survivor forms a single-rank epoch once the grace window
+    /// runs out on everyone else.
+    #[test]
+    fn grace_expiry_forms_a_singleton_epoch() {
+        let addr = free_loopback_addr().unwrap();
+        let c = cfg(&addr);
+        let mut coord = EpochCoordinator::bind(&c, Duration::from_millis(200)).unwrap();
+        // no initial formation needed: reform only consults prev_world
+        let seat = coord.reform_ring(1, &[0, 1], &[], 6, &[]).unwrap();
+        assert_eq!(seat.world, vec![0]);
+        assert_eq!(seat.resume_t, 6);
+        assert_eq!(seat.rank, 0);
+        one_round(&seat);
+        // the star path degenerates the same way
+        let seat = coord.reform_star(2, &[0], &[], 8, &[]).unwrap();
+        assert_eq!(seat.world, vec![0]);
+        assert_eq!(seat.transport.epoch(), 2);
+        one_round(&seat);
+    }
+}

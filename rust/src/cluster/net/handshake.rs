@@ -19,6 +19,20 @@
 //! Welcome wait by the same budget, and every stream gets `io_timeout`
 //! read/write deadlines before it is handed to the transport.
 //!
+//! Two failure modes the rendezvous rides out rather than aborting on:
+//!
+//! * **bind races** — the launcher hands out coordinator ports probed
+//!   free with [`free_loopback_addr`], whose probe listener is dropped
+//!   before the hub binds; [`bind_with_retry`] retries `AddrInUse`
+//!   with backoff inside the rendezvous budget instead of failing the
+//!   whole cluster on the window.
+//! * **dead claimants** — a claimant that dies after Hello but before
+//!   Welcome used to burn its rank slot forever (the hub then timed
+//!   out waiting for a rank that could never arrive). The accept loop
+//!   now probes seated claimants and releases the slot on EOF (or on a
+//!   claimant that speaks before Welcome), so a restarted rank can
+//!   re-claim it.
+//!
 //! [`codec`]: crate::cluster::net::codec
 
 use crate::cluster::net::codec::{read_frame, write_frame, Frame};
@@ -51,20 +65,54 @@ impl Default for NetCfg {
     }
 }
 
-fn set_round_timeouts(stream: &TcpStream, cfg: &NetCfg) -> Result<()> {
+pub(crate) fn set_round_timeouts(stream: &TcpStream, cfg: &NetCfg) -> Result<()> {
     stream.set_read_timeout(Some(cfg.io_timeout))?;
     stream.set_write_timeout(Some(cfg.io_timeout))?;
     stream.set_nodelay(true)?;
     Ok(())
 }
 
+/// Bind `addr`, retrying `AddrInUse` with backoff until `deadline`.
+/// Closes the window between a [`free_loopback_addr`] probe (or a
+/// previous epoch's teardown) and the real bind — transient occupancy
+/// is waited out instead of failing the rendezvous.
+pub(crate) fn bind_with_retry(addr: &str, deadline: Instant) -> Result<TcpListener> {
+    let mut wait = Duration::from_millis(10);
+    loop {
+        match TcpListener::bind(addr) {
+            Ok(l) => return Ok(l),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::AddrInUse
+                    && Instant::now() < deadline =>
+            {
+                std::thread::sleep(
+                    wait.min(deadline.saturating_duration_since(Instant::now())),
+                );
+                wait = (wait * 2).min(Duration::from_millis(250));
+            }
+            Err(e) => return Err(Error::net(format!("hub cannot bind {addr}: {e}"))),
+        }
+    }
+}
+
 /// Hub side: bind `coord_addr`, collect one valid [`Frame::Hello`] per
 /// rank in `1..n`, then release everyone with [`Frame::Welcome`].
 /// Returns the streams rank-indexed (slot 0, the hub itself, is `None`).
 pub fn hub_rendezvous(n: usize, cfg: &NetCfg) -> Result<Vec<Option<TcpStream>>> {
-    let listener = TcpListener::bind(&cfg.coord_addr).map_err(|e| {
-        Error::net(format!("hub cannot bind {}: {e}", cfg.coord_addr))
-    })?;
+    let deadline = Instant::now() + cfg.connect_timeout;
+    let listener = bind_with_retry(&cfg.coord_addr, deadline)?;
+    hub_rendezvous_on(&listener, n, cfg)
+}
+
+/// [`hub_rendezvous`] over an existing listener — the elastic
+/// coordinator retains its listener across membership epochs (losing
+/// the bound port would strand survivors and joiners alike), so the
+/// accept loop must be callable without re-binding.
+pub(crate) fn hub_rendezvous_on(
+    listener: &TcpListener,
+    n: usize,
+    cfg: &NetCfg,
+) -> Result<Vec<Option<TcpStream>>> {
     listener.set_nonblocking(true)?;
     let deadline = Instant::now() + cfg.connect_timeout;
     let mut peers: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
@@ -133,6 +181,9 @@ pub fn hub_rendezvous(n: usize, cfg: &NetCfg) -> Result<Vec<Option<TcpStream>>> 
                 }
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                // quiet moment: probe seated claimants so one that died
+                // after Hello releases its slot instead of burning it
+                missing += release_dead_claimants(&mut peers);
                 std::thread::sleep(Duration::from_millis(5));
             }
             Err(e) => return Err(Error::net(format!("hub accept failed: {e}"))),
@@ -145,6 +196,40 @@ pub fn hub_rendezvous(n: usize, cfg: &NetCfg) -> Result<Vec<Option<TcpStream>>> 
         write_frame(stream, &Frame::Welcome { world: n as u32 })?;
     }
     Ok(peers)
+}
+
+/// Probe each seated claimant with a nonblocking 1-byte read: EOF (the
+/// claimant died before Welcome), an error, or any premature bytes (a
+/// seated claimant must stay silent until Welcome) releases the rank
+/// slot so a replacement can claim it. Returns the number of slots
+/// released; live claimants are restored to blocking mode untouched.
+fn release_dead_claimants(peers: &mut [Option<TcpStream>]) -> usize {
+    use std::io::Read;
+    let mut released = 0;
+    for slot in peers.iter_mut().skip(1) {
+        let Some(stream) = slot else { continue };
+        let dead = if stream.set_nonblocking(true).is_err() {
+            true
+        } else {
+            let mut probe = [0u8; 1];
+            let verdict = match stream.read(&mut probe) {
+                Ok(0) => true,
+                Ok(_) => true,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => false,
+                Err(_) => true,
+            };
+            if !verdict {
+                // restore blocking before the stream is used again
+                let _ = stream.set_nonblocking(false);
+            }
+            verdict
+        };
+        if dead {
+            *slot = None;
+            released += 1;
+        }
+    }
+    released
 }
 
 fn rendezvous_timeout(peers: &[Option<TcpStream>], cfg: &NetCfg) -> Error {
@@ -266,6 +351,60 @@ mod tests {
         let err = hub_rendezvous(3, &cfg).unwrap_err().to_string();
         assert!(err.contains("timed out"), "{err}");
         assert!(err.contains('1') && err.contains('2'), "missing ranks listed: {err}");
+    }
+
+    #[test]
+    fn hub_bind_retries_while_the_port_drains() {
+        // hold the coordinator port, release it shortly after the hub
+        // starts binding — the rendezvous must ride out the occupancy
+        let addr = free_loopback_addr().unwrap();
+        let holder = TcpListener::bind(&addr).unwrap();
+        let cfg = quick_cfg(&addr);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(200));
+            drop(holder);
+        });
+        let peers = hub_rendezvous(1, &cfg).unwrap();
+        assert!(peers.iter().all(|p| p.is_none()));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn dead_claimant_releases_its_slot_for_a_replacement() {
+        let addr = free_loopback_addr().unwrap();
+        let cfg = quick_cfg(&addr);
+        // a claimant seats rank 1, then dies before Welcome
+        let addr2 = addr.clone();
+        let flaky = std::thread::spawn(move || {
+            let mut s = loop {
+                match TcpStream::connect(&addr2) {
+                    Ok(s) => break s,
+                    Err(_) => std::thread::sleep(Duration::from_millis(10)),
+                }
+            };
+            write_frame(&mut s, &Frame::Hello { world: 3, rank: 1 }).unwrap();
+            std::thread::sleep(Duration::from_millis(100));
+            drop(s);
+        });
+        // a healthy rank 2 arrives late, keeping the hub in its accept
+        // loop while the flaky claimant's death is discovered
+        let cfg2 = cfg.clone();
+        let late = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(300));
+            client_rendezvous(3, 2, &cfg2)
+        });
+        // the replacement re-claims rank 1 — before this fix the hub
+        // answered "rank 1 already claimed" forever and timed out
+        let cfg3 = cfg.clone();
+        let replacement = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(500));
+            client_rendezvous(3, 1, &cfg3)
+        });
+        let peers = hub_rendezvous(3, &cfg).unwrap();
+        assert!(peers[1].is_some() && peers[2].is_some());
+        flaky.join().unwrap();
+        late.join().unwrap().unwrap();
+        replacement.join().unwrap().unwrap();
     }
 
     #[test]

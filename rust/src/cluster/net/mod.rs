@@ -4,20 +4,30 @@
 //! This is the subsystem that takes the cluster engine across process
 //! (and host) boundaries, std-only:
 //!
-//! * [`codec`] — length-prefixed little-endian framing (protocol v4)
+//! * [`codec`] — length-prefixed little-endian framing (protocol v5)
 //!   with a magic/version header and FNV-1a checksum for every
 //!   [`Message`] variant plus the handshake frames, the
 //!   [`Frame::Shard`] frame carrying one reduced value shard of a
-//!   reduce-scatter → all-gather round, and the v4
+//!   reduce-scatter → all-gather round, and the
 //!   [`Frame::SparseShard`] frame carrying one `--sparse-shards` hop's
 //!   `(index, value)` entry list (shard-local strictly-increasing
 //!   indices, counts validated before allocation); NaN payloads
 //!   round-trip bit-exactly, corrupt frames surface
 //!   [`Error::Protocol`](crate::error::Error::Protocol), never panics.
+//!   v5 adds the elastic-membership frames: [`Frame::Abort`] now
+//!   stamps the aborting rank and round generation (so survivors get a
+//!   typed [`Error::PeerLost`](crate::error::Error::PeerLost) naming
+//!   who died, not a generic poison string), and
+//!   [`Frame::HelloEpoch`] / [`Frame::HelloJoin`] /
+//!   [`Frame::WelcomeEpoch`] carry the epoch re-formation rendezvous.
 //! * [`handshake`] — rank 0 listens as the rendezvous hub; ranks 1..n
 //!   dial in, claim their rank (world size, protocol version and
 //!   duplicate claims validated), and are released together. All waits
-//!   are deadline-bounded ([`NetCfg`]).
+//!   are deadline-bounded ([`NetCfg`]). The hub binds with
+//!   retry-with-backoff (closing the free-port TOCTOU race under
+//!   `launch`) and releases a claimed rank slot if its claimant dies
+//!   before the coordinated `Welcome`, so a crashed-and-restarted rank
+//!   can re-claim instead of wedging the rendezvous.
 //! * [`tcp`] — [`TcpTransport`]: hub-mediated all-gather (collect n
 //!   generation-stamped contributions, broadcast the rank-indexed
 //!   board) with read/write timeouts and abort poisoning that closes
@@ -44,6 +54,24 @@
 //!   `--sparse-shards` the same hop schedule forwards
 //!   [`Frame::SparseShard`] entry lists (indices re-based shard-local
 //!   on the wire), shrinking each hop to its live entries.
+//! * [`elastic`] — epoch-based membership (protocol v5): the bootstrap
+//!   coordinator (original rank 0) retains its rendezvous listener in
+//!   an [`elastic::EpochCoordinator`] across membership epochs. When a
+//!   rank dies mid-round, survivors drain the poisoned transport and
+//!   reconnect with [`Frame::HelloEpoch`]; the coordinator collects
+//!   claims until every expected survivor arrives (ranks attributed
+//!   dead by the typed fault are excluded up front) or a grace window
+//!   expires, then seats everyone at epoch `e + 1` with
+//!   [`Frame::WelcomeEpoch`] — new dense rank, membership table,
+//!   resume iteration (max survivor `next_t`, so completed work is
+//!   never replayed), and on the ring the right neighbor's address. A
+//!   restarted rank rejoins at the next boundary via
+//!   [`Frame::HelloJoin`], its `WelcomeEpoch` carrying a sparsifier
+//!   state snapshot. **Epoch fencing is structural**: a re-formation
+//!   builds a brand-new epoch-stamped transport over fresh sockets, so
+//!   data frames need no epoch tag — a straggler from epoch `e` cannot
+//!   write into epoch `e + 1` because the old sockets are gone, and
+//!   the round generation restarts at 0 per epoch.
 //!
 //! The `exdyna launch` CLI subcommand runs one rank per process over
 //! either socket transport (`--transport tcp|ring`; it forks the whole
@@ -57,11 +85,13 @@
 //! [Transport]: crate::cluster::transport::Transport
 
 pub mod codec;
+pub mod elastic;
 pub mod handshake;
 pub mod ring;
 pub mod tcp;
 
 pub use codec::{Frame, PROTOCOL_VERSION};
+pub use elastic::{EpochCoordinator, EpochSeat};
 pub use handshake::{free_loopback_addr, NetCfg};
 pub use ring::RingTransport;
 pub use tcp::TcpTransport;
@@ -80,9 +110,20 @@ pub(crate) fn expect_data(frame: Frame, want_gen: u64, from: &str) -> Result<Mes
             "generation mismatch from {from}: got {generation}, expected {want_gen} — \
              workers diverged"
         ))),
-        Frame::Abort => Err(Error::net(format!("peer {from} aborted the cluster"))),
+        Frame::Abort { rank, generation } => Err(abort_error(rank, generation)),
         other => Err(Error::protocol(format!(
             "expected Data frame from {from}, got {other:?}"
         ))),
+    }
+}
+
+/// Map a received [`Frame::Abort`] stamp to its typed membership fault:
+/// a known aborting rank is [`Error::PeerLost`], an unknown one is
+/// [`Error::Poisoned`].
+pub(crate) fn abort_error(rank: u32, generation: u64) -> Error {
+    if rank == codec::ABORT_RANK_UNKNOWN {
+        Error::poisoned(generation)
+    } else {
+        Error::peer_lost(rank as usize, generation)
     }
 }

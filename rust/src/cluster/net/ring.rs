@@ -48,9 +48,12 @@
 //! [`TcpTransport`]: generation-stamped frames turn divergence into
 //! typed [`Error::Protocol`]s, every read/write carries the
 //! [`NetCfg::io_timeout`] deadline, and [`Transport::abort`] poisons the
-//! transport — best-effort [`Frame::Abort`] to both neighbors, then
-//! socket shutdown, so a broken ring surfaces errors on every rank
-//! instead of hanging.
+//! transport — best-effort [`Frame::Abort`] to both neighbors (stamped
+//! with the failed rank and round generation, so the poison's origin
+//! survives the trip around the ring as a typed
+//! [`Error::PeerLost`](crate::error::Error::PeerLost)), then socket
+//! shutdown, so a broken ring surfaces errors on every rank instead of
+//! hanging.
 //!
 //! The reduce-scatter → all-gather collective runs the true chunked
 //! ring schedule over the same two links: phase 1 forwards each index
@@ -88,7 +91,7 @@ use crate::cluster::net::codec::{
     encode_frame, encode_frame_append, encode_shard_append, encode_sparse_shard_append,
     read_frame, read_frame_counted, write_bytes, write_frame, Frame,
 };
-use crate::cluster::net::handshake::NetCfg;
+use crate::cluster::net::handshake::{bind_with_retry, NetCfg};
 use crate::cluster::transport::{FloatBufPool, Message, RoundToken, SparseRound, Transport};
 use crate::cluster::CollectiveKind;
 use crate::collectives::allreduce::shard_bounds;
@@ -100,9 +103,12 @@ use crate::collectives::CostModel;
 use crate::error::{Error, Result};
 use crate::obs::{FlightRecorder, ObsCounters, RecKind};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
+
+/// Sentinel for [`RingTransport::poisoned_by`]: nobody attributed yet.
+const NO_ATTRIBUTION: u64 = u64::MAX;
 
 /// The two ring links of one rank (absent in a single-rank world).
 struct Links {
@@ -151,10 +157,21 @@ pub struct RingTransport {
     n: usize,
     rank: usize,
     state: Mutex<RingState>,
+    /// Membership epoch this ring was formed at: 0 for the initial
+    /// rendezvous, bumped instances are assembled by the elastic layer
+    /// after a re-formation.
+    epoch: u64,
     /// `try_clone`d link handles used only by [`Transport::abort`],
     /// which must not take the state lock (a blocked round holds it).
     shutdown_handles: Vec<TcpStream>,
     poisoned: AtomicBool,
+    /// Rank attributed with the poisoning ([`NO_ATTRIBUTION`] until
+    /// poisoned; first attribution wins and rides the forwarded notice).
+    poisoned_by: AtomicU64,
+    /// Mirror of the state generation, updated at begin/complete, so
+    /// [`Transport::abort`] can stamp its notice without taking the
+    /// state lock (a blocked — or panicking — round may hold it).
+    gen_mirror: AtomicU64,
     /// Wire/payload/round counters for this process's rank, bumped at
     /// the exact hop read/write sites so gross bytes match the links.
     obs: ObsCounters,
@@ -163,7 +180,7 @@ pub struct RingTransport {
 }
 
 /// Host part of a `host:port` address (IPv6 `[..]:port` supported).
-fn host_of(addr: &str) -> &str {
+pub(crate) fn host_of(addr: &str) -> &str {
     match addr.rsplit_once(':') {
         Some((h, _)) => h,
         None => addr,
@@ -175,7 +192,7 @@ fn host_of(addr: &str) -> &str {
 /// actually reached the coordinator through. Only the coordinator's
 /// own ring address can be wildcard (client addresses are built from
 /// observed peer IPs), and only rank `n - 1` receives it.
-fn substitute_wildcard_host(addr: String, fallback_host: &str) -> String {
+pub(crate) fn substitute_wildcard_host(addr: String, fallback_host: &str) -> String {
     match host_of(&addr) {
         "0.0.0.0" | "[::]" => match addr.rsplit_once(':') {
             Some((_, port)) => format!("{fallback_host}:{port}"),
@@ -188,7 +205,7 @@ fn substitute_wildcard_host(addr: String, fallback_host: &str) -> String {
 /// Bind-all ring-listener address in the coordinator's address family
 /// (a bracketed-IPv6 coordinator host means the advertised neighbor
 /// addresses will be IPv6, so the listener must be too).
-fn wildcard_listen_addr(coord_host: &str) -> &'static str {
+pub(crate) fn wildcard_listen_addr(coord_host: &str) -> &'static str {
     if coord_host.starts_with('[') {
         "[::]:0"
     } else {
@@ -206,7 +223,12 @@ fn set_round_timeouts(stream: &TcpStream, cfg: &NetCfg) -> Result<()> {
 /// Dial `addr` (retrying until `deadline` — the neighbor's listener is
 /// bound before its Hello, but its process may be slower to schedule)
 /// and identify as `my_rank` with a [`Frame::RingLink`].
-fn dial_right(addr: &str, my_rank: usize, deadline: Instant, cfg: &NetCfg) -> Result<TcpStream> {
+pub(crate) fn dial_right(
+    addr: &str,
+    my_rank: usize,
+    deadline: Instant,
+    cfg: &NetCfg,
+) -> Result<TcpStream> {
     let mut stream = loop {
         match TcpStream::connect(addr) {
             Ok(s) => break s,
@@ -233,7 +255,7 @@ fn dial_right(addr: &str, my_rank: usize, deadline: Instant, cfg: &NetCfg) -> Re
 /// Accept the left neighbor on this rank's ring listener, validating its
 /// [`Frame::RingLink`] claim; stray connections (port scanners, a
 /// mis-dialed rank) are rejected and the wait continues to `deadline`.
-fn accept_left(
+pub(crate) fn accept_left(
     listener: &TcpListener,
     expect_rank: usize,
     deadline: Instant,
@@ -300,9 +322,23 @@ fn accept_left(
 /// every bootstrap stream is released. `my_ring_addr` is rank 0's own
 /// ring listener (rank `n - 1`'s right neighbor).
 fn coordinate_ring(n: usize, cfg: &NetCfg, my_ring_addr: &str) -> Result<Vec<String>> {
-    let listener = TcpListener::bind(&cfg.coord_addr).map_err(|e| {
-        Error::net(format!("ring coordinator cannot bind {}: {e}", cfg.coord_addr))
-    })?;
+    // retry-with-backoff closes the free-port TOCTOU race under
+    // `launch`, exactly as on the star hub (see `bind_with_retry`)
+    let deadline = Instant::now() + cfg.connect_timeout;
+    let listener = bind_with_retry(&cfg.coord_addr, deadline)?;
+    coordinate_ring_on(&listener, n, cfg, my_ring_addr)
+}
+
+/// [`coordinate_ring`] over an already-bound coordinator listener. The
+/// elastic coordinator retains its listener across membership epochs
+/// (survivors and late joiners re-rendezvous on the same address), so
+/// the bootstrap accept loop must be callable without re-binding.
+pub(crate) fn coordinate_ring_on(
+    listener: &TcpListener,
+    n: usize,
+    cfg: &NetCfg,
+    my_ring_addr: &str,
+) -> Result<Vec<String>> {
     listener.set_nonblocking(true)?;
     let deadline = Instant::now() + cfg.connect_timeout;
     let mut peers: Vec<Option<(TcpStream, String)>> = (0..n).map(|_| None).collect();
@@ -414,7 +450,7 @@ impl RingTransport {
             return Err(Error::invalid("world size must be >= 1"));
         }
         if n == 1 {
-            return Ok(Self::linkless(1, 0));
+            return Ok(Self::linkless(1, 0, 0));
         }
         let host = host_of(&cfg.coord_addr);
         let ring_listener = TcpListener::bind(format!("{host}:0")).map_err(|e| {
@@ -431,7 +467,7 @@ impl RingTransport {
         // the connect lands in its backlog), then accept left
         let right = dial_right(&addrs[1], 0, deadline, cfg)?;
         let left = accept_left(&ring_listener, n - 1, deadline, cfg)?;
-        Self::assemble(n, 0, right, left)
+        Self::assemble(n, 0, right, left, 0)
     }
 
     /// Ranks 1..n: bind a ring listener, claim `rank` at the
@@ -501,10 +537,12 @@ impl RingTransport {
         let deadline = Instant::now() + cfg.connect_timeout;
         let right = dial_right(&right_addr, rank, deadline, cfg)?;
         let left = accept_left(&ring_listener, rank - 1, deadline, cfg)?;
-        Self::assemble(n, rank, right, left)
+        Self::assemble(n, rank, right, left, 0)
     }
 
-    fn linkless(n: usize, rank: usize) -> Self {
+    /// A single-rank ring needs no links; the elastic layer also uses
+    /// this when a re-formation leaves one survivor.
+    pub(crate) fn linkless(n: usize, rank: usize, epoch: u64) -> Self {
         RingTransport {
             n,
             rank,
@@ -522,14 +560,26 @@ impl RingTransport {
                 rebase: Vec::new(),
                 shard_parts: Vec::new(),
             }),
+            epoch,
             shutdown_handles: Vec::new(),
             poisoned: AtomicBool::new(false),
+            poisoned_by: AtomicU64::new(NO_ATTRIBUTION),
+            gen_mirror: AtomicU64::new(0),
             obs: ObsCounters::new(),
             flight: OnceLock::new(),
         }
     }
 
-    fn assemble(n: usize, rank: usize, right: TcpStream, left: TcpStream) -> Result<Self> {
+    /// Wire two established links into a transport. The elastic layer
+    /// re-enters here after an epoch re-formation, with links dialed
+    /// from `WelcomeEpoch`-advertised addresses.
+    pub(crate) fn assemble(
+        n: usize,
+        rank: usize,
+        right: TcpStream,
+        left: TcpStream,
+        epoch: u64,
+    ) -> Result<Self> {
         let shutdown_handles = vec![right.try_clone()?, left.try_clone()?];
         Ok(RingTransport {
             n,
@@ -548,11 +598,63 @@ impl RingTransport {
                 rebase: Vec::new(),
                 shard_parts: Vec::new(),
             }),
+            epoch,
             shutdown_handles,
             poisoned: AtomicBool::new(false),
+            poisoned_by: AtomicU64::new(NO_ATTRIBUTION),
+            gen_mirror: AtomicU64::new(0),
             obs: ObsCounters::new(),
             flight: OnceLock::new(),
         })
+    }
+
+    /// The typed fault a poisoned ring surfaces: attributed to the rank
+    /// that died when known, anonymous otherwise.
+    fn poison_fault(&self) -> Error {
+        let generation = self.gen_mirror.load(Ordering::SeqCst);
+        match self.poisoned_by.load(Ordering::SeqCst) {
+            NO_ATTRIBUTION => Error::poisoned(generation),
+            r => Error::peer_lost(r as usize, generation),
+        }
+    }
+
+    /// Poison the ring, attributing the failure to `by` (first
+    /// attribution wins): best-effort [`Frame::Abort`] notice to both
+    /// neighbors — stamped with the attributed rank and the mirrored
+    /// generation, so the poison's origin survives the trip around the
+    /// ring — then socket shutdown so blocked neighbors error out
+    /// immediately. Every call lands a flight event; the counter bump
+    /// and recorder dump fire on the first poisoning only.
+    fn poison(&self, by: usize) {
+        let already = self.poisoned.swap(true, Ordering::SeqCst);
+        let _ = self.poisoned_by.compare_exchange(
+            NO_ATTRIBUTION,
+            by as u64,
+            Ordering::SeqCst,
+            Ordering::SeqCst,
+        );
+        let attributed = self.poisoned_by.load(Ordering::SeqCst);
+        let generation = self.gen_mirror.load(Ordering::SeqCst);
+        let abort_bytes = encode_frame(&Frame::Abort {
+            rank: attributed as u32,
+            generation,
+        });
+        for h in &self.shutdown_handles {
+            // best-effort polite notice, then force any blocked neighbor
+            // read to return; both may fail on an already-dead socket
+            let mut w: &TcpStream = h;
+            let _ = write_bytes(&mut w, &abort_bytes);
+            let _ = h.shutdown(Shutdown::Both);
+        }
+        if let Some(fr) = self.flight.get() {
+            fr.record(RecKind::Abort, generation, attributed, 0);
+            if !already {
+                fr.dump_to_log("abort poisoning");
+            }
+        }
+        if !already {
+            self.obs.abort();
+        }
     }
 
     /// The rank this transport speaks for.
@@ -726,9 +828,7 @@ impl RingTransport {
                 }
                 Ok(vals)
             }
-            Frame::Abort => Err(Error::net(
-                "left neighbor aborted — transport poisoned by a failed worker",
-            )),
+            Frame::Abort { rank, generation } => Err(super::abort_error(rank, generation)),
             Frame::Data { .. } => Err(Error::protocol(
                 "expected a reduce-scatter shard from the left neighbor, got a \
                  board frame — workers diverged",
@@ -829,9 +929,7 @@ impl RingTransport {
                 }
                 Ok(SparseVec { idx, val: vals })
             }
-            Frame::Abort => Err(Error::net(
-                "left neighbor aborted — transport poisoned by a failed worker",
-            )),
+            Frame::Abort { rank, generation } => Err(super::abort_error(rank, generation)),
             Frame::Shard { .. } => Err(Error::protocol(
                 "expected a sparse shard from the left neighbor, got a dense one — \
                  workers disagree about --sparse-shards",
@@ -866,7 +964,7 @@ impl Transport for RingTransport {
             )));
         }
         if self.poisoned.load(Ordering::SeqCst) {
-            return Err(Error::net("transport poisoned by a failed worker"));
+            return Err(self.poison_fault());
         }
         let mut guard = self.state.lock().unwrap();
         let RingState {
@@ -885,6 +983,7 @@ impl Transport for RingTransport {
             )));
         }
         let my_gen = *generation;
+        self.gen_mirror.store(my_gen, Ordering::SeqCst);
         slots[rank] = Some(msg);
         if let Some(links) = links.as_mut() {
             if rank != 0 {
@@ -934,6 +1033,7 @@ impl Transport for RingTransport {
         // worker contract), so there is nothing left to hand back anyway
         *pending = false;
         let my_gen = *generation;
+        self.gen_mirror.store(my_gen, Ordering::SeqCst);
         if token.generation() != my_gen {
             return Err(Error::invariant(format!(
                 "rank {} completing round {}, but the ring is at round {my_gen}",
@@ -942,7 +1042,7 @@ impl Transport for RingTransport {
             )));
         }
         if self.poisoned.load(Ordering::SeqCst) {
-            return Err(Error::net("transport poisoned by a failed worker"));
+            return Err(self.poison_fault());
         }
         let n = self.n;
         // any early `?` below leaves the generation unchanged; the failed
@@ -970,6 +1070,7 @@ impl Transport for RingTransport {
         // dropped it, else allocate a fresh one
         let board = crate::cluster::transport::publish_recycled(slots, last);
         *generation = my_gen.wrapping_add(1);
+        self.gen_mirror.store(my_gen.wrapping_add(1), Ordering::SeqCst);
         if let Some(fr) = self.flight.get() {
             fr.record(RecKind::RoundComplete, my_gen, 0, 0);
         }
@@ -993,7 +1094,7 @@ impl Transport for RingTransport {
             )));
         }
         if self.poisoned.load(Ordering::SeqCst) {
-            return Err(Error::net("transport poisoned by a failed worker"));
+            return Err(self.poison_fault());
         }
         let mut guard = self.state.lock().unwrap();
         let RingState {
@@ -1011,6 +1112,7 @@ impl Transport for RingTransport {
             )));
         }
         let my_gen = *generation;
+        self.gen_mirror.store(my_gen, Ordering::SeqCst);
         if let Some(links) = links.as_mut() {
             if rank != 0 {
                 // same eager step-0 rationale as allgather_begin: every
@@ -1069,6 +1171,7 @@ impl Transport for RingTransport {
         }
         *pending = false;
         let my_gen = *generation;
+        self.gen_mirror.store(my_gen, Ordering::SeqCst);
         if token.generation() != my_gen {
             return Err(Error::invariant(format!(
                 "rank {} completing round {}, but the ring is at round {my_gen}",
@@ -1077,7 +1180,7 @@ impl Transport for RingTransport {
             )));
         }
         if self.poisoned.load(Ordering::SeqCst) {
-            return Err(Error::net("transport poisoned by a failed worker"));
+            return Err(self.poison_fault());
         }
         let contribution = match token.take_stash() {
             Some(Message::Floats(v)) => v,
@@ -1097,6 +1200,7 @@ impl Transport for RingTransport {
                 // single-rank world: the reduce is the identity
                 out.copy_from_slice(&contribution);
                 *generation = my_gen.wrapping_add(1);
+        self.gen_mirror.store(my_gen.wrapping_add(1), Ordering::SeqCst);
                 if let Some(fr) = self.flight.get() {
                     fr.record(RecKind::RoundComplete, my_gen, 1, 0);
                 }
@@ -1172,6 +1276,7 @@ impl Transport for RingTransport {
             }
         }
         *generation = my_gen.wrapping_add(1);
+        self.gen_mirror.store(my_gen.wrapping_add(1), Ordering::SeqCst);
         if let Some(fr) = self.flight.get() {
             fr.record(RecKind::RoundComplete, my_gen, 1, 0);
         }
@@ -1205,7 +1310,7 @@ impl Transport for RingTransport {
             )));
         }
         if self.poisoned.load(Ordering::SeqCst) {
-            return Err(Error::net("transport poisoned by a failed worker"));
+            return Err(self.poison_fault());
         }
         let mut guard = self.state.lock().unwrap();
         let RingState {
@@ -1236,6 +1341,7 @@ impl Transport for RingTransport {
             }
         }
         let my_gen = *generation;
+        self.gen_mirror.store(my_gen, Ordering::SeqCst);
         if let Some(links) = links.as_mut() {
             if rank != 0 {
                 // same eager step-0 rationale as rsag_begin, with the
@@ -1315,6 +1421,7 @@ impl Transport for RingTransport {
         }
         *pending = false;
         let my_gen = *generation;
+        self.gen_mirror.store(my_gen, Ordering::SeqCst);
         if token.generation() != my_gen {
             return Err(Error::invariant(format!(
                 "rank {} completing round {}, but the ring is at round {my_gen}",
@@ -1323,7 +1430,7 @@ impl Transport for RingTransport {
             )));
         }
         if self.poisoned.load(Ordering::SeqCst) {
-            return Err(Error::net("transport poisoned by a failed worker"));
+            return Err(self.poison_fault());
         }
         let contribution = match token.take_stash() {
             Some(Message::Sparse(v)) => v,
@@ -1358,6 +1465,7 @@ impl Transport for RingTransport {
                 );
                 canonicalize_residual(residual, scratch);
                 *generation = my_gen.wrapping_add(1);
+        self.gen_mirror.store(my_gen.wrapping_add(1), Ordering::SeqCst);
                 if let Some(fr) = self.flight.get() {
                     fr.record(RecKind::RoundComplete, my_gen, 2, 0);
                 }
@@ -1492,6 +1600,7 @@ impl Transport for RingTransport {
         }
         canonicalize_residual(residual, scratch);
         *generation = my_gen.wrapping_add(1);
+        self.gen_mirror.store(my_gen.wrapping_add(1), Ordering::SeqCst);
         if let Some(fr) = self.flight.get() {
             fr.record(RecKind::RoundComplete, my_gen, 2, 0);
         }
@@ -1514,25 +1623,17 @@ impl Transport for RingTransport {
     }
 
     fn abort(&self) {
-        let already = self.poisoned.swap(true, Ordering::SeqCst);
-        let abort_bytes = encode_frame(&Frame::Abort);
-        for h in &self.shutdown_handles {
-            // best-effort polite notice, then force any blocked neighbor
-            // read to return; both may fail on an already-dead socket
-            let mut w: &TcpStream = h;
-            let _ = write_bytes(&mut w, &abort_bytes);
-            let _ = h.shutdown(Shutdown::Both);
-        }
-        if !already {
-            // first poisoning only: count once and dump the recorder at
-            // the generation the ring died at (taking no locks — a
-            // blocked round may hold the state mutex)
-            self.obs.abort();
-            if let Some(fr) = self.flight.get() {
-                fr.record(RecKind::Abort, fr.last_generation(), 0, 0);
-                fr.dump_to_log("abort poisoning");
-            }
-        }
+        // a local abort means THIS worker failed: neighbors learn which
+        // rank died from the stamped notice
+        self.poison(self.rank);
+    }
+
+    fn abort_from(&self, rank: usize) {
+        self.poison(rank);
+    }
+
+    fn epoch(&self) -> u64 {
+        self.epoch
     }
 
     fn counters(&self, rank: usize) -> Option<&ObsCounters> {
@@ -1922,6 +2023,28 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("poisoned"), "{err}");
+    }
+
+    #[test]
+    fn attributed_abort_surfaces_peer_lost() {
+        let tps = loopback_ring(2);
+        tps[0].abort_from(1);
+        let err = tps[0].allgather(0, Message::Scalar(0.0)).unwrap_err();
+        assert!(err.is_membership_fault(), "{err}");
+        assert!(err.to_string().contains("peer rank 1 lost"), "{err}");
+        // the first attribution wins: a later local abort does not
+        // rewrite the postmortem
+        tps[0].abort();
+        let err = tps[0].allgather(0, Message::Scalar(0.0)).unwrap_err();
+        assert!(err.to_string().contains("peer rank 1 lost"), "{err}");
+    }
+
+    #[test]
+    fn epoch_stamp_rides_the_constructor() {
+        let tp = RingTransport::linkless(1, 0, 4);
+        assert_eq!(tp.epoch(), 4);
+        let got = tp.allgather(0, Message::Scalar(1.5)).unwrap();
+        assert_eq!(&got[..], &[Message::Scalar(1.5)]);
     }
 
     #[test]

@@ -26,9 +26,16 @@
 //!   so a dead or wedged peer surfaces [`Error::Net`] within the timeout
 //!   on every rank — no deadlocks;
 //! * [`Transport::abort`] poisons the transport: it best-effort sends
-//!   [`Frame::Abort`] and then shuts both socket directions down, so
-//!   peers blocked in a read error out immediately (EOF / garbage
-//!   frames) rather than waiting out their timeout.
+//!   [`Frame::Abort`] — stamped with the failed rank and the round
+//!   generation — and then shuts both socket directions down, so peers
+//!   blocked in a read error out immediately (EOF / garbage frames)
+//!   rather than waiting out their timeout. A poisoned transport
+//!   surfaces the typed [`Error::PeerLost`] (or [`Error::Poisoned`]
+//!   when no attribution arrived), which the elastic layer reads as
+//!   "drain this epoch and re-form".
+//!
+//! [Error::PeerLost]: crate::error::Error::PeerLost
+//! [Error::Poisoned]: crate::error::Error::Poisoned
 //!
 //! [NetCfg]: crate::cluster::net::handshake::NetCfg
 //! [CostModel::rsag_link_bytes_star_hub]: crate::collectives::CostModel::rsag_link_bytes_star_hub
@@ -48,8 +55,11 @@ use crate::collectives::sparse::{
 use crate::error::{Error, Result};
 use crate::obs::{FlightRecorder, ObsCounters, RecKind};
 use std::net::{Shutdown, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
+
+/// Sentinel for [`TcpTransport::poisoned_by`]: nobody attributed yet.
+const NO_ATTRIBUTION: u64 = u64::MAX;
 
 enum Conn {
     /// Rank 0: one stream per peer rank (slot 0 unused).
@@ -76,10 +86,21 @@ pub struct TcpTransport {
     n: usize,
     rank: usize,
     state: Mutex<State>,
+    /// Membership epoch this transport was formed at: 0 for the initial
+    /// rendezvous, bumped instances are assembled by the elastic layer
+    /// after a re-formation.
+    epoch: u64,
     /// `try_clone`d handles used only by [`Transport::abort`], which must
     /// not take the state lock (a blocked round holds it).
     shutdown_handles: Vec<TcpStream>,
     poisoned: AtomicBool,
+    /// Rank attributed with the poisoning ([`NO_ATTRIBUTION`] until
+    /// poisoned; first attribution wins).
+    poisoned_by: AtomicU64,
+    /// Mirror of the state generation, updated at begin/complete, so
+    /// [`Transport::abort`] can stamp its notice without taking the
+    /// state lock (a blocked — or panicking — round may hold it).
+    gen_mirror: AtomicU64,
     /// Wire/payload/round counters for this process's rank, bumped at
     /// the exact read/write sites so gross bytes match the stream.
     obs: ObsCounters,
@@ -94,6 +115,17 @@ impl TcpTransport {
             return Err(Error::invalid("world size must be >= 1"));
         }
         let peers = hub_rendezvous(n, cfg)?;
+        Self::hub_from_parts(n, peers, 0)
+    }
+
+    /// Rank 0 over already-rendezvoused streams. The elastic layer uses
+    /// this after an epoch re-formation: the `HelloEpoch` rendezvous
+    /// streams *become* the data-path streams of the new star.
+    pub(crate) fn hub_from_parts(
+        n: usize,
+        peers: Vec<Option<TcpStream>>,
+        epoch: u64,
+    ) -> Result<Self> {
         let mut handles = Vec::new();
         for s in peers.iter().flatten() {
             handles.push(s.try_clone()?);
@@ -108,8 +140,11 @@ impl TcpTransport {
                 dec_buf: Vec::new(),
                 pending: false,
             }),
+            epoch,
             shutdown_handles: handles,
             poisoned: AtomicBool::new(false),
+            poisoned_by: AtomicU64::new(NO_ATTRIBUTION),
+            gen_mirror: AtomicU64::new(0),
             obs: ObsCounters::new(),
             flight: OnceLock::new(),
         })
@@ -118,6 +153,17 @@ impl TcpTransport {
     /// Ranks 1..n: dial the hub and claim `rank`.
     pub fn client(n: usize, rank: usize, cfg: &NetCfg) -> Result<Self> {
         let hub = client_rendezvous(n, rank, cfg)?;
+        Self::client_from_parts(n, rank, hub, 0)
+    }
+
+    /// Ranks 1..n over an already-rendezvoused hub stream (the epoch
+    /// re-formation path, mirroring [`TcpTransport::hub_from_parts`]).
+    pub(crate) fn client_from_parts(
+        n: usize,
+        rank: usize,
+        hub: TcpStream,
+        epoch: u64,
+    ) -> Result<Self> {
         let handle = hub.try_clone()?;
         Ok(TcpTransport {
             n,
@@ -129,8 +175,11 @@ impl TcpTransport {
                 dec_buf: Vec::new(),
                 pending: false,
             }),
+            epoch,
             shutdown_handles: vec![handle],
             poisoned: AtomicBool::new(false),
+            poisoned_by: AtomicU64::new(NO_ATTRIBUTION),
+            gen_mirror: AtomicU64::new(0),
             obs: ObsCounters::new(),
             flight: OnceLock::new(),
         })
@@ -139,6 +188,52 @@ impl TcpTransport {
     /// The rank this transport speaks for.
     pub fn rank(&self) -> usize {
         self.rank
+    }
+
+    /// The typed fault a poisoned transport surfaces: attributed to the
+    /// rank that died when known, anonymous otherwise.
+    fn poison_fault(&self, generation: u64) -> Error {
+        match self.poisoned_by.load(Ordering::SeqCst) {
+            NO_ATTRIBUTION => Error::poisoned(generation),
+            r => Error::peer_lost(r as usize, generation),
+        }
+    }
+
+    /// Poison the transport, attributing the failure to `by`: best-effort
+    /// [`Frame::Abort`] notice (stamped from the generation mirror — the
+    /// state lock may be held by the very round that is failing), then
+    /// shut every socket down so blocked peers error out immediately.
+    /// Every call lands a flight event; the counter bump and recorder
+    /// dump fire on the first poisoning only.
+    fn poison(&self, by: usize) {
+        let already = self.poisoned.swap(true, Ordering::SeqCst);
+        let _ = self.poisoned_by.compare_exchange(
+            NO_ATTRIBUTION,
+            by as u64,
+            Ordering::SeqCst,
+            Ordering::SeqCst,
+        );
+        let generation = self.gen_mirror.load(Ordering::SeqCst);
+        let abort_bytes = encode_frame(&Frame::Abort {
+            rank: by as u32,
+            generation,
+        });
+        for h in &self.shutdown_handles {
+            // best-effort polite notice, then force any blocked peer read
+            // to return; both may fail on an already-dead socket
+            let mut w: &TcpStream = h;
+            let _ = write_bytes(&mut w, &abort_bytes);
+            let _ = h.shutdown(Shutdown::Both);
+        }
+        if let Some(fr) = self.flight.get() {
+            fr.record(RecKind::Abort, generation, by as u64, 0);
+            if !already {
+                fr.dump_to_log("abort poisoning");
+            }
+        }
+        if !already {
+            self.obs.abort();
+        }
     }
 
     /// Read one frame with full obs accounting: gross wire bytes at the
@@ -206,7 +301,7 @@ impl TcpTransport {
             )));
         }
         if self.poisoned.load(Ordering::SeqCst) {
-            return Err(Error::net("transport poisoned by a failed worker"));
+            return Err(self.poison_fault(self.gen_mirror.load(Ordering::SeqCst)));
         }
         let mut guard = self.state.lock().unwrap();
         let State {
@@ -224,6 +319,7 @@ impl TcpTransport {
             )));
         }
         let my_gen = *generation;
+        self.gen_mirror.store(my_gen, Ordering::SeqCst);
         let token = match conn {
             Conn::Hub { .. } => {
                 // the hub *receives* first: its own contribution is
@@ -321,7 +417,7 @@ impl Transport for TcpTransport {
             )));
         }
         if self.poisoned.load(Ordering::SeqCst) {
-            return Err(Error::net("transport poisoned by a failed worker"));
+            return Err(self.poison_fault(my_gen));
         }
         let n = self.n;
         // any early `?` below leaves the generation unchanged; the failed
@@ -384,6 +480,7 @@ impl Transport for TcpTransport {
             }
         };
         *generation = my_gen.wrapping_add(1);
+        self.gen_mirror.store(my_gen.wrapping_add(1), Ordering::SeqCst);
         if let Some(fr) = self.flight.get() {
             fr.record(RecKind::RoundComplete, my_gen, 0, 0);
         }
@@ -438,7 +535,7 @@ impl Transport for TcpTransport {
             )));
         }
         if self.poisoned.load(Ordering::SeqCst) {
-            return Err(Error::net("transport poisoned by a failed worker"));
+            return Err(self.poison_fault(my_gen));
         }
         let n = self.n;
         match conn {
@@ -497,6 +594,7 @@ impl Transport for TcpTransport {
             }
         }
         *generation = my_gen.wrapping_add(1);
+        self.gen_mirror.store(my_gen.wrapping_add(1), Ordering::SeqCst);
         if let Some(fr) = self.flight.get() {
             fr.record(RecKind::RoundComplete, my_gen, 1, 0);
         }
@@ -571,7 +669,7 @@ impl Transport for TcpTransport {
             )));
         }
         if self.poisoned.load(Ordering::SeqCst) {
-            return Err(Error::net("transport poisoned by a failed worker"));
+            return Err(self.poison_fault(my_gen));
         }
         let n = self.n;
         let bound_check = |s: &SparseVec, who: &str| -> Result<()> {
@@ -702,6 +800,7 @@ impl Transport for TcpTransport {
             }
         }
         *generation = my_gen.wrapping_add(1);
+        self.gen_mirror.store(my_gen.wrapping_add(1), Ordering::SeqCst);
         if let Some(fr) = self.flight.get() {
             fr.record(RecKind::RoundComplete, my_gen, 2, 0);
         }
@@ -723,25 +822,17 @@ impl Transport for TcpTransport {
     }
 
     fn abort(&self) {
-        let already = self.poisoned.swap(true, Ordering::SeqCst);
-        let abort_bytes = encode_frame(&Frame::Abort);
-        for h in &self.shutdown_handles {
-            // best-effort polite notice, then force any blocked peer read
-            // to return; both may fail on an already-dead socket
-            let mut w: &TcpStream = h;
-            let _ = write_bytes(&mut w, &abort_bytes);
-            let _ = h.shutdown(Shutdown::Both);
-        }
-        if !already {
-            // first poisoning only: count once and dump the recorder at
-            // the generation the cluster died at (taking no locks — a
-            // blocked round may hold the state mutex)
-            self.obs.abort();
-            if let Some(fr) = self.flight.get() {
-                fr.record(RecKind::Abort, fr.last_generation(), 0, 0);
-                fr.dump_to_log("abort poisoning");
-            }
-        }
+        // a local abort means THIS worker failed: peers learn which rank
+        // died from the stamped notice
+        self.poison(self.rank);
+    }
+
+    fn abort_from(&self, rank: usize) {
+        self.poison(rank);
+    }
+
+    fn epoch(&self) -> u64 {
+        self.epoch
     }
 
     fn counters(&self, rank: usize) -> Option<&ObsCounters> {
@@ -1020,5 +1111,27 @@ mod tests {
         let tp = TcpTransport::hub(1, &cfg(&addr)).unwrap();
         let got = tp.allgather(0, Message::Scalar(4.5)).unwrap();
         assert_eq!(&got[..], &[Message::Scalar(4.5)]);
+    }
+
+    #[test]
+    fn poisoned_transport_surfaces_the_attributed_fault() {
+        let tps = loopback_cluster(2);
+        tps[0].abort_from(1);
+        let err = tps[0].allgather(0, Message::Scalar(1.0)).unwrap_err();
+        assert!(err.is_membership_fault(), "{err}");
+        assert!(err.to_string().contains("peer rank 1 lost"), "{err}");
+        // the first attribution wins: a later anonymous-looking abort
+        // (a local failure) does not rewrite the postmortem
+        tps[0].abort();
+        let err = tps[0].allgather(0, Message::Scalar(1.0)).unwrap_err();
+        assert!(err.to_string().contains("peer rank 1 lost"), "{err}");
+    }
+
+    #[test]
+    fn from_parts_constructor_stamps_the_epoch() {
+        let tp = TcpTransport::hub_from_parts(1, vec![None], 3).unwrap();
+        assert_eq!(tp.epoch(), 3);
+        let got = tp.allgather(0, Message::Scalar(2.5)).unwrap();
+        assert_eq!(&got[..], &[Message::Scalar(2.5)]);
     }
 }

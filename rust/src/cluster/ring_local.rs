@@ -46,7 +46,9 @@
 //!
 //! [`reduce_sparse_shard_with`]: crate::collectives::reduce_sparse_shard_with
 
-use crate::cluster::transport::{FloatBufPool, Message, RoundToken, SparseRound, Transport};
+use crate::cluster::transport::{
+    poison_error, FloatBufPool, Message, RoundToken, SparseRound, Transport,
+};
 use crate::collectives::allreduce::shard_bounds;
 use crate::collectives::sparse::{
     canonicalize_residual, merge_add_sparse, reduce_sparse_contributions_with, retain_top_k,
@@ -88,8 +90,9 @@ enum Hop {
         chunk: usize,
         sv: SparseVec,
     },
-    /// Poison notice: the transport was aborted.
-    Abort,
+    /// Poison notice: the transport was aborted, by the named rank when
+    /// the aborter identified itself ([`Transport::abort_from`]).
+    Abort { by: Option<usize> },
 }
 
 /// One rank's ring endpoint state (each rank's calls come from its own
@@ -130,8 +133,15 @@ struct RingRank {
 /// In-process chunked-ring transport for one OS thread per rank.
 pub struct RingLocal {
     n: usize,
+    epoch: u64,
     timeout: Duration,
     poisoned: AtomicBool,
+    /// The rank whose failure poisoned the ring, when the aborter
+    /// identified itself; first attribution wins.
+    poisoned_by: Mutex<Option<usize>>,
+    /// Guards the per-rank abort-counter bump so repeated aborts (the
+    /// elastic teardown path aborts defensively) count once.
+    abort_counted: AtomicBool,
     ranks: Vec<Mutex<RingRank>>,
     /// Clones of every link's sender, used by [`Transport::abort`] to
     /// wake blocked receivers (kept apart from the per-rank state so
@@ -154,6 +164,12 @@ impl RingLocal {
     /// `timeout` within one round surfaces [`Error::Net`] instead of
     /// blocking forever.
     pub fn with_timeout(n: usize, timeout: Duration) -> Self {
+        Self::with_timeout_at_epoch(n, timeout, 0)
+    }
+
+    /// Ring for `n` ranks formed at membership epoch `epoch` — the
+    /// elastic recovery path builds one of these per re-formation.
+    pub fn with_timeout_at_epoch(n: usize, timeout: Duration, epoch: u64) -> Self {
         // link r carries hops from rank r to rank (r + 1) % n
         let mut txs = Vec::with_capacity(n);
         let mut rxs: Vec<Option<Receiver<Hop>>> = Vec::with_capacity(n);
@@ -184,11 +200,47 @@ impl RingLocal {
             .collect();
         RingLocal {
             n,
+            epoch,
             timeout,
             poisoned: AtomicBool::new(false),
+            poisoned_by: Mutex::new(None),
+            abort_counted: AtomicBool::new(false),
             ranks,
             abort_tx: Mutex::new(txs),
             obs: (0..n).map(|_| ObsCounters::new()).collect(),
+        }
+    }
+
+    /// Typed fault for an observed poisoning: [`Error::PeerLost`] when
+    /// the aborter identified itself, [`Error::Poisoned`] otherwise,
+    /// stamped with the round this rank observed the poisoning at.
+    fn poison_fault(&self, generation: u64) -> Error {
+        poison_error(*self.poisoned_by.lock().unwrap(), generation)
+    }
+
+    fn poison(&self, by: Option<usize>) {
+        self.poisoned.store(true, Ordering::SeqCst);
+        // first attribution wins; the hops carry the winning one so
+        // every receiver reports the same culprit
+        let by = {
+            let mut p = self.poisoned_by.lock().unwrap();
+            if p.is_none() {
+                *p = by;
+            }
+            *p
+        };
+        // wake every blocked receiver; sends to healthy links just queue
+        // behind in-flight data and are consumed as the poison notice
+        for tx in self.abort_tx.lock().unwrap().iter() {
+            let _ = tx.send(Hop::Abort { by });
+        }
+        // every rank observes the poisoning at its next hop; the counter
+        // describes the one poisoning, however many defensive abort
+        // calls repeat it
+        if !self.abort_counted.swap(true, Ordering::Relaxed) {
+            for c in &self.obs {
+                c.abort();
+            }
         }
     }
 
@@ -266,7 +318,7 @@ impl RingLocal {
                 "expected a dense reduce-scatter chunk from the left neighbor, \
                  got a sparse one — workers diverged on --sparse-shards",
             )),
-            Hop::Abort => Err(Error::net("transport poisoned by a failed worker")),
+            Hop::Abort { by } => Err(poison_error(by, want_gen)),
         }
     }
 
@@ -327,7 +379,7 @@ impl RingLocal {
                 "expected a sparse rsag chunk from the left neighbor, got a \
                  board hop — workers diverged",
             )),
-            Hop::Abort => Err(Error::net("transport poisoned by a failed worker")),
+            Hop::Abort { by } => Err(poison_error(by, want_gen)),
         }
     }
 }
@@ -350,10 +402,10 @@ impl Transport for RingLocal {
                 self.n
             )));
         }
-        if self.poisoned.load(Ordering::SeqCst) {
-            return Err(Error::net("transport poisoned by a failed worker"));
-        }
         let mut rk = self.ranks[rank].lock().unwrap();
+        if self.poisoned.load(Ordering::SeqCst) {
+            return Err(self.poison_fault(rk.generation));
+        }
         if rk.pending {
             return Err(Error::invariant(format!(
                 "rank {rank} double-started a split-phase ring round (round {} \
@@ -409,7 +461,7 @@ impl Transport for RingLocal {
             )));
         }
         if self.poisoned.load(Ordering::SeqCst) {
-            return Err(Error::net("transport poisoned by a failed worker"));
+            return Err(self.poison_fault(my_gen));
         }
         let n = self.n;
         let deadline = Instant::now() + self.timeout;
@@ -451,9 +503,7 @@ impl Transport for RingLocal {
                          reduce-scatter chunk — workers diverged",
                     ))
                 }
-                Hop::Abort => {
-                    return Err(Error::net("transport poisoned by a failed worker"))
-                }
+                Hop::Abort { by } => return Err(poison_error(by, my_gen)),
             }
         }
         let rk = &mut *rk;
@@ -478,10 +528,10 @@ impl Transport for RingLocal {
                 self.n
             )));
         }
-        if self.poisoned.load(Ordering::SeqCst) {
-            return Err(Error::net("transport poisoned by a failed worker"));
-        }
         let mut rk = self.ranks[rank].lock().unwrap();
+        if self.poisoned.load(Ordering::SeqCst) {
+            return Err(self.poison_fault(rk.generation));
+        }
         if rk.pending {
             return Err(Error::invariant(format!(
                 "rank {rank} double-started a split-phase ring round (round {} \
@@ -553,7 +603,7 @@ impl Transport for RingLocal {
             )));
         }
         if self.poisoned.load(Ordering::SeqCst) {
-            return Err(Error::net("transport poisoned by a failed worker"));
+            return Err(self.poison_fault(my_gen));
         }
         let contribution = match token.take_stash() {
             Some(Message::Floats(v)) => v,
@@ -663,7 +713,8 @@ impl Transport for RingLocal {
             )));
         }
         if self.poisoned.load(Ordering::SeqCst) {
-            return Err(Error::net("transport poisoned by a failed worker"));
+            let rk = self.ranks[rank].lock().unwrap();
+            return Err(self.poison_fault(rk.generation));
         }
         if let Some(&last) = contribution.idx.last() {
             if last as usize >= round.union_len {
@@ -752,7 +803,7 @@ impl Transport for RingLocal {
             )));
         }
         if self.poisoned.load(Ordering::SeqCst) {
-            return Err(Error::net("transport poisoned by a failed worker"));
+            return Err(self.poison_fault(my_gen));
         }
         let contribution = match token.take_stash() {
             Some(Message::Sparse(s)) => s,
@@ -890,16 +941,15 @@ impl Transport for RingLocal {
     }
 
     fn abort(&self) {
-        self.poisoned.store(true, Ordering::SeqCst);
-        // wake every blocked receiver; sends to healthy links just queue
-        // behind in-flight data and are consumed as the poison notice
-        for tx in self.abort_tx.lock().unwrap().iter() {
-            let _ = tx.send(Hop::Abort);
-        }
-        // every rank observes the poisoning at its next hop
-        for c in &self.obs {
-            c.abort();
-        }
+        self.poison(None);
+    }
+
+    fn abort_from(&self, rank: usize) {
+        self.poison(Some(rank));
+    }
+
+    fn epoch(&self) -> u64 {
+        self.epoch
     }
 
     fn counters(&self, rank: usize) -> Option<&ObsCounters> {
@@ -1118,6 +1168,38 @@ mod tests {
         // later calls fail fast
         let ep = Endpoint::new(1, tp.as_ref());
         assert!(ep.allgather_f64(2.0).is_err());
+    }
+
+    #[test]
+    fn attributed_abort_surfaces_peer_lost_and_counts_once() {
+        let n = 2;
+        let tp = Arc::new(RingLocal::new(n));
+        assert_eq!((tp.as_ref() as &dyn Transport).epoch(), 0);
+        let tp2 = tp.clone();
+        let waiter = std::thread::spawn(move || {
+            let ep = Endpoint::new(0, tp2.as_ref());
+            ep.allgather_f64(1.0)
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        tp.abort_from(1);
+        let err = waiter.join().unwrap().unwrap_err();
+        assert!(err.is_membership_fault(), "{err}");
+        assert!(err.to_string().contains("peer rank 1 lost"), "{err}");
+        // later calls fail fast with the same attribution, and repeated
+        // defensive aborts keep the counter at the one poisoning
+        tp.abort();
+        let err = tp.allgather(1, Message::Scalar(0.0)).unwrap_err();
+        assert!(err.to_string().contains("peer rank 1 lost"), "{err}");
+        assert_eq!(tp.counters(0).unwrap().snapshot().aborts, 1);
+        assert_eq!(tp.counters(1).unwrap().snapshot().aborts, 1);
+    }
+
+    #[test]
+    fn epoch_constructor_stamps_the_transport() {
+        let tp = RingLocal::with_timeout_at_epoch(1, Duration::from_secs(5), 2);
+        assert_eq!((&tp as &dyn Transport).epoch(), 2);
+        let ep = Endpoint::new(0, &tp);
+        assert_eq!(ep.allgather_f64(7.0).unwrap(), vec![7.0]);
     }
 
     #[test]

@@ -14,6 +14,7 @@
 //! library so integration tests, benches and doc examples share one
 //! copy instead of each test binary re-rolling its own).
 
+use crate::cluster::elastic::{Seat, SocketMember};
 use crate::cluster::net::{free_loopback_addr, NetCfg, RingTransport, TcpTransport};
 use crate::cluster::ring_local::RingLocal;
 use crate::cluster::transport::{LocalTransport, Transport};
@@ -71,6 +72,41 @@ pub fn ring_cluster(n: usize, io_timeout: Duration) -> Result<Vec<Arc<dyn Transp
     }
     let hub = RingTransport::hub(n, &cfg).map(|t| Arc::new(t) as Arc<dyn Transport>);
     collect_cluster(hub, clients)
+}
+
+/// Concurrently build an n-rank loopback *elastic* socket cluster
+/// (star when `ring` is false): rank-indexed `(membership handle,
+/// initial seat)` pairs with the coordinator at index 0, plus the
+/// [`NetCfg`] a restarted rank would rejoin through.
+pub fn elastic_socket_cluster(
+    n: usize,
+    ring: bool,
+    grace: Duration,
+    io_timeout: Duration,
+) -> Result<(NetCfg, Vec<(SocketMember, Seat)>)> {
+    let cfg = loopback_net_cfg(io_timeout)?;
+    let mut clients = Vec::with_capacity(n.saturating_sub(1));
+    for rank in 1..n {
+        let c = cfg.clone();
+        clients.push(std::thread::spawn(move || {
+            SocketMember::client(n, rank, &c, ring)
+        }));
+    }
+    let hub = SocketMember::coordinator(n, &cfg, ring, grace);
+    // join every client before propagating a hub error so a failed
+    // rendezvous can't leak blocked builder threads
+    let joined: Vec<Result<(SocketMember, Seat)>> = clients
+        .into_iter()
+        .map(|h| {
+            h.join()
+                .unwrap_or_else(|_| Err(crate::error::Error::invariant("cluster builder panicked")))
+        })
+        .collect();
+    let mut out = vec![hub?];
+    for c in joined {
+        out.push(c?);
+    }
+    Ok((cfg, out))
 }
 
 type ClientHandle = std::thread::JoinHandle<Result<Arc<dyn Transport>>>;

@@ -100,6 +100,7 @@ use crate::collectives::CostModel;
 use crate::coordinator::SelectOutput;
 use crate::error::{Error, Result};
 use crate::obs::{FlightRecorder, ObsCounters};
+use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
 use std::sync::{Arc, Condvar, Mutex};
 
 /// One rank's contribution to a collective round. Payloads are behind
@@ -648,6 +649,26 @@ pub trait Transport: Send + Sync {
     /// forever at the next rendezvous.
     fn abort(&self);
 
+    /// Poison the transport on behalf of a *known* failing rank, so
+    /// peers surface [`Error::PeerLost`](crate::error::Error::PeerLost)
+    /// naming the culprit instead of the anonymous
+    /// [`Error::Poisoned`](crate::error::Error::Poisoned). The elastic
+    /// recovery path uses the attribution to report which member died;
+    /// the default discards it and poisons anonymously.
+    fn abort_from(&self, rank: usize) {
+        let _ = rank;
+        self.abort();
+    }
+
+    /// Membership epoch this transport instance was formed at. Epoch 0
+    /// is the initial formation; the elastic recovery path builds a
+    /// fresh transport per re-formation, so a transport's epoch is
+    /// fixed for its whole lifetime (data frames need no epoch stamp —
+    /// fresh channels per epoch isolate epochs naturally).
+    fn epoch(&self) -> u64 {
+        0
+    }
+
     /// Rank `rank`'s wire counters, when this transport keeps them.
     /// In-process transports index a shared per-rank array; the socket
     /// transports (one instance per rank process) answer only for their
@@ -684,24 +705,40 @@ struct Board {
     /// (no rank can deposit `g+1` before completing `g`).
     started: Vec<bool>,
     poisoned: bool,
+    /// The rank whose failure poisoned the board, when the aborter
+    /// identified itself ([`Transport::abort_from`]); `None` for an
+    /// anonymous [`Transport::abort`]. First attribution wins.
+    poisoned_by: Option<usize>,
 }
 
 /// In-process transport for one OS thread per rank.
 pub struct LocalTransport {
     n: usize,
+    epoch: u64,
     board: Mutex<Board>,
     cv: Condvar,
     /// Per-rank wire counters (payload account only — there is no
     /// socket, so the wire-byte account stays zero). Indexed by rank;
     /// lock-free, so bumps never touch the board mutex.
     obs: Vec<ObsCounters>,
+    /// Guards the per-rank abort-counter bump so repeated aborts (the
+    /// elastic teardown path aborts defensively) count once, matching
+    /// the one poisoning they all describe.
+    abort_counted: AtomicBool,
 }
 
 impl LocalTransport {
     /// Transport for `n` ranks.
     pub fn new(n: usize) -> Self {
+        Self::new_at_epoch(n, 0)
+    }
+
+    /// Transport for `n` ranks formed at membership epoch `epoch` — the
+    /// elastic recovery path builds one of these per re-formation.
+    pub fn new_at_epoch(n: usize, epoch: u64) -> Self {
         LocalTransport {
             n,
+            epoch,
             board: Mutex::new(Board {
                 slots: (0..n).map(|_| None).collect(),
                 arrived: 0,
@@ -710,9 +747,11 @@ impl LocalTransport {
                 spare: None,
                 started: vec![false; n],
                 poisoned: false,
+                poisoned_by: None,
             }),
             cv: Condvar::new(),
             obs: (0..n).map(|_| ObsCounters::new()).collect(),
+            abort_counted: AtomicBool::new(false),
         }
     }
 
@@ -731,7 +770,7 @@ impl LocalTransport {
         let mut b = self.board.lock().unwrap();
         loop {
             if b.poisoned {
-                return Err(Error::invariant("transport poisoned by a failed worker"));
+                return Err(poison_error(b.poisoned_by, b.generation));
             }
             if b.started[rank] {
                 if b.slots[rank].is_some() {
@@ -833,7 +872,7 @@ impl Transport for LocalTransport {
         }
         b.started[rank] = false;
         if b.poisoned {
-            return Err(Error::invariant("transport poisoned by a failed worker"));
+            return Err(poison_error(b.poisoned_by, b.generation));
         }
         if b.generation != my_gen.wrapping_add(1) {
             // unreachable while the one-outstanding-round-per-rank
@@ -928,18 +967,51 @@ impl Transport for LocalTransport {
     }
 
     fn abort(&self) {
-        let mut b = self.board.lock().unwrap();
-        b.poisoned = true;
-        self.cv.notify_all();
-        drop(b);
-        // every rank observes the poisoning at its next rendezvous
-        for c in &self.obs {
-            c.abort();
-        }
+        self.poison(None);
+    }
+
+    fn abort_from(&self, rank: usize) {
+        self.poison(Some(rank));
+    }
+
+    fn epoch(&self) -> u64 {
+        self.epoch
     }
 
     fn counters(&self, rank: usize) -> Option<&ObsCounters> {
         self.obs.get(rank)
+    }
+}
+
+impl LocalTransport {
+    fn poison(&self, by: Option<usize>) {
+        let mut b = self.board.lock().unwrap();
+        b.poisoned = true;
+        if b.poisoned_by.is_none() {
+            b.poisoned_by = by;
+        }
+        self.cv.notify_all();
+        drop(b);
+        // every rank observes the poisoning at its next rendezvous; the
+        // counter describes the one poisoning, however many defensive
+        // abort calls repeat it
+        if !self.abort_counted.swap(true, Relaxed) {
+            for c in &self.obs {
+                c.abort();
+            }
+        }
+    }
+}
+
+/// Typed poison error for an in-process board: an attributed poisoning
+/// is [`Error::PeerLost`] naming the failed rank, an anonymous one is
+/// [`Error::Poisoned`]; both carry the round generation the survivors
+/// observed the poisoning at. Shared by [`LocalTransport`] and the
+/// in-process ring.
+pub(crate) fn poison_error(by: Option<usize>, generation: u64) -> Error {
+    match by {
+        Some(rank) => Error::peer_lost(rank, generation),
+        None => Error::poisoned(generation),
     }
 }
 
@@ -1919,6 +1991,41 @@ mod tests {
         tp.abort();
         assert_eq!(tp.counters(0).unwrap().snapshot().aborts, 1);
         assert_eq!(tp.counters(1).unwrap().snapshot().aborts, 1);
+        // the elastic teardown path aborts defensively — repeats still
+        // describe the one poisoning
+        tp.abort();
+        tp.abort_from(1);
+        assert_eq!(tp.counters(0).unwrap().snapshot().aborts, 1);
+    }
+
+    #[test]
+    fn attributed_abort_surfaces_peer_lost_with_the_rank() {
+        let tp = Arc::new(LocalTransport::new(2));
+        assert_eq!((tp.as_ref() as &dyn Transport).epoch(), 0);
+        tp.abort_from(1);
+        let ep = Endpoint::new(0, tp.as_ref());
+        let err = ep.allgather_f64(0.0).unwrap_err();
+        assert!(err.is_membership_fault(), "{err}");
+        let msg = err.to_string();
+        assert!(msg.contains("peer rank 1 lost"), "{msg}");
+        // first attribution wins over later anonymous poisonings
+        tp.abort();
+        let err = ep.allgather_f64(0.0).unwrap_err().to_string();
+        assert!(err.contains("peer rank 1 lost"), "{err}");
+    }
+
+    #[test]
+    fn anonymous_abort_surfaces_the_poisoned_fault() {
+        let tp = Arc::new(LocalTransport::new_at_epoch(2, 3));
+        assert_eq!((tp.as_ref() as &dyn Transport).epoch(), 3);
+        tp.abort();
+        let ep = Endpoint::new(0, tp.as_ref());
+        let err = ep.allgather_f64(0.0).unwrap_err();
+        assert!(err.is_membership_fault(), "{err}");
+        assert!(
+            err.to_string().contains("transport poisoned by a failed worker"),
+            "{err}"
+        );
     }
 
     /// Strided sparse contribution with order-probe magnitudes: rank r

@@ -46,7 +46,7 @@ use crate::collectives::{
     value_reduce_union_start_rk, CostModel, RoundScratch,
 };
 use crate::coordinator::SelectOutput;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::grad::synth::SynthGen;
 use crate::metrics::IterRecord;
 use crate::obs::SpanTracer;
@@ -56,9 +56,43 @@ use crate::util::stats::l2_norm;
 use std::sync::Arc;
 use std::time::Instant;
 
+/// Cross-epoch worker state for the elastic runner: where to resume,
+/// the error-feedback accumulator, and the records completed so far.
+/// A plain run uses a fresh one internally; the elastic loop threads
+/// one instance through every epoch's [`SimWorker::run_state`] call so
+/// error-feedback mass and the trace survive a re-formation.
+#[derive(Default)]
+pub struct WorkerState {
+    /// First iteration the next [`SimWorker::run_state`] call executes.
+    /// Advances to `t + 1` as soon as iteration `t`'s error carry and
+    /// replica feedback have landed, so a fault during the trailing
+    /// diagnostics never replays completed selection state (the record
+    /// for that iteration is dropped instead — an elastic trace may be
+    /// up to one record short per epoch transition).
+    pub start_t: usize,
+    /// Error-feedback accumulator `e_t` (empty for dense runs).
+    pub err: Vec<f32>,
+    /// Records of completed iterations across all epochs so far.
+    pub records: Vec<IterRecord>,
+}
+
+impl WorkerState {
+    /// Fresh state starting at iteration 0 with zero error feedback.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
 /// One simulated rank running on its own OS thread.
 pub struct SimWorker<'a> {
     rank: usize,
+    /// Original rank whose synthetic gradient stream this worker
+    /// consumes — equal to `rank` except after an elastic re-formation,
+    /// where `rank` becomes the new dense seat index but the data
+    /// stream must stay the one the worker was born with.
+    data_rank: usize,
+    /// Membership epoch stamped into this worker's records.
+    epoch: u64,
     sp: Box<dyn Sparsifier>,
     gen: &'a SynthGen,
     cfg: &'a SimCfg,
@@ -66,6 +100,9 @@ pub struct SimWorker<'a> {
     ep: Endpoint<'a>,
     /// `--obs-trace` span tracer; `None` (and costless) unless attached.
     tracer: Option<SpanTracer>,
+    /// Iteration-start probe (chaos injection, membership polling);
+    /// `None` (and costless) unless attached.
+    probe: Option<Box<dyn FnMut(usize) -> Result<()> + 'a>>,
 }
 
 impl<'a> SimWorker<'a> {
@@ -80,12 +117,15 @@ impl<'a> SimWorker<'a> {
         let net = CostModel::paper_testbed(cfg.n_ranks).with_straggler(cfg.straggler);
         SimWorker {
             rank,
+            data_rank: rank,
+            epoch: 0,
             sp,
             gen,
             cfg,
             net,
             ep,
             tracer: None,
+            probe: None,
         }
     }
 
@@ -94,6 +134,35 @@ impl<'a> SimWorker<'a> {
     pub fn with_tracer(mut self, tracer: Option<SpanTracer>) -> Self {
         self.tracer = tracer;
         self
+    }
+
+    /// Stamp the membership epoch this worker's records belong to.
+    pub fn with_epoch(mut self, epoch: u64) -> Self {
+        self.epoch = epoch;
+        self
+    }
+
+    /// Pin the synthetic gradient stream to an original rank (elastic
+    /// re-seating changes the transport rank, never the data stream).
+    pub fn with_data_rank(mut self, data_rank: usize) -> Self {
+        self.data_rank = data_rank;
+        self
+    }
+
+    /// Install an iteration-start probe: called with `t` before each
+    /// iteration's compute. An `Err` tears the iteration down before
+    /// any selection state advances — the chaos-kill and join-poll
+    /// hooks of the elastic runner.
+    pub fn with_probe(mut self, probe: Box<dyn FnMut(usize) -> Result<()> + 'a>) -> Self {
+        self.probe = Some(probe);
+        self
+    }
+
+    /// Hand the sparsifier replica back — the elastic recovery loop
+    /// carries it (threshold trajectory and all) into the next epoch's
+    /// worker instead of rebuilding from scratch.
+    pub fn into_sparsifier(self) -> Box<dyn Sparsifier> {
+        self.sp
     }
 
     /// Span-start stamp (0 when tracing is off — paired with the no-op
@@ -123,6 +192,12 @@ impl<'a> SimWorker<'a> {
     /// can write its span part file after the thread joins.
     pub fn run_traced(mut self) -> Result<(Vec<IterRecord>, Option<SpanTracer>)> {
         let records = if self.cfg.pipeline {
+            if self.probe.is_some() {
+                return Err(Error::invalid(
+                    "iteration probes (elastic/chaos) require the sequential loop; \
+                     drop --pipeline",
+                ));
+            }
             self.run_pipelined()?
         } else {
             self.run_sequential()?
@@ -136,12 +211,12 @@ impl<'a> SimWorker<'a> {
     fn accumulate(&self, t: usize, dense: bool, err: &[f32], acc: &mut [f32]) {
         let lr = self.cfg.lr.lr(t);
         if dense {
-            self.gen.grad_into(t, self.rank, acc);
+            self.gen.grad_into(t, self.data_rank, acc);
             for a in acc.iter_mut() {
                 *a = lr * *a;
             }
         } else {
-            self.gen.accumulate_into(t, self.rank, err, lr, acc);
+            self.gen.accumulate_into(t, self.data_rank, err, lr, acc);
         }
     }
 
@@ -169,6 +244,20 @@ impl<'a> SimWorker<'a> {
     /// The default additive-clock loop: every collective is blocking and
     /// each iteration's compute, selection and communication serialize.
     fn run_sequential(&mut self) -> Result<Vec<IterRecord>> {
+        let mut state = WorkerState::new();
+        self.run_state(&mut state)?;
+        Ok(state.records)
+    }
+
+    /// The sequential loop over externally-owned [`WorkerState`]: runs
+    /// iterations `state.start_t..cfg.iters`, appending records and
+    /// carrying the error accumulator in `state`. On an `Err` the state
+    /// is left resumable — a follow-up call (typically on a NEW worker
+    /// over a re-formed transport) continues from `state.start_t`
+    /// without replaying any completed selection/threshold step. This
+    /// is the elastic runner's engine; [`SimWorker::run`] is the plain
+    /// fresh-state wrapper.
+    pub fn run_state(&mut self, state: &mut WorkerState) -> Result<()> {
         let n = self.cfg.n_ranks;
         let n_g = self.gen.n_g();
         let dense = matches!(self.sp.comm_pattern(), CommPattern::DenseAllReduce);
@@ -177,17 +266,35 @@ impl<'a> SimWorker<'a> {
         let density = self.sp.target_density();
         let k_user = ((density * n_g as f64).round() as usize).max(1);
 
-        let mut err = vec![0f32; if dense { 0 } else { n_g }];
+        if dense {
+            state.err.clear();
+        } else if state.err.len() != n_g {
+            if state.err.is_empty() {
+                state.err.resize(n_g, 0.0);
+            } else {
+                return Err(Error::invalid(format!(
+                    "worker state carries an error accumulator of {} elements, model has {n_g}",
+                    state.err.len()
+                )));
+            }
+        }
         let mut acc = vec![0f32; n_g];
         let mut scratch = RoundScratch::new();
-        let mut records = Vec::with_capacity(self.cfg.iters);
+        state
+            .records
+            .reserve(self.cfg.iters.saturating_sub(state.start_t));
         let mut last_global_err = 0.0;
 
-        for t in 0..self.cfg.iters {
+        for t in state.start_t..self.cfg.iters {
+            // --- membership/chaos probe (elastic runs only)
+            if let Some(probe) = self.probe.as_mut() {
+                probe(t)?;
+            }
+
             // --- compute + accumulate (Alg. 1 line 8)
             let c0 = self.span_start();
             let cst = Instant::now();
-            self.accumulate(t, dense, &err, &mut acc);
+            self.accumulate(t, dense, &state.err, &mut acc);
             self.span_end("compute", c0);
 
             // --- selection (Alg. 1 line 10)
@@ -299,17 +406,20 @@ impl<'a> SimWorker<'a> {
                         acc[i as usize] = 0.0;
                     }
                 }
-                std::mem::swap(&mut err, &mut acc);
+                std::mem::swap(&mut state.err, &mut acc);
             }
 
             // --- feedback to the replica (Alg. 5 + Alg. 3 input)
             self.sp.observe(t, &scratch.k_by_rank)?;
+            // iteration t's selection state is committed: a fault below
+            // must resume at t + 1, never replay the threshold step
+            state.start_t = t + 1;
 
             // --- diagnostics (same schedule on every rank)
             if !dense && (t % self.cfg.err_every == 0 || t + 1 == self.cfg.iters) {
                 let norm_sum = self
                     .ep
-                    .allgather_f64_fold(l2_norm(&err), 0.0f64, |a, x| a + x)?;
+                    .allgather_f64_fold(l2_norm(&state.err), 0.0f64, |a, x| a + x)?;
                 last_global_err = norm_sum / n as f64;
             }
 
@@ -318,7 +428,7 @@ impl<'a> SimWorker<'a> {
                 .ep
                 .allgather_f64_fold(my_select, 0.0f64, |a, x| a.max(x))?;
 
-            records.push(IterRecord {
+            state.records.push(IterRecord {
                 t,
                 loss: f64::NAN,
                 k_user,
@@ -338,9 +448,10 @@ impl<'a> SimWorker<'a> {
                 t_exposed_comm: t_comm,
                 m_compute,
                 m_comm,
+                epoch: self.epoch,
             });
         }
-        Ok(records)
+        Ok(())
     }
 
     /// The pipelined loop (see the module docs): iteration t's sparse
@@ -577,6 +688,10 @@ impl<'a> SimWorker<'a> {
                 t_exposed_comm,
                 m_compute: m_compute_cur,
                 m_comm,
+                // the pipelined loop never runs under elastic membership
+                // (run_traced rejects the combination), so epoch is
+                // whatever the builder set — 0 in every current caller
+                epoch: self.epoch,
             });
 
             // rotate the pipeline: t+1's selection becomes the next

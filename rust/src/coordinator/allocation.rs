@@ -70,6 +70,15 @@ impl Allocator {
         &self.layout
     }
 
+    /// Re-form the allocator over `n_new` workers — the elastic
+    /// membership path. The block grid is preserved and re-tiled
+    /// ([`PartitionLayout::retile`]); migration history is dropped, so
+    /// every survivor computes the identical post-reform topology.
+    pub fn reform(&mut self, n_new: usize) -> Result<()> {
+        self.layout = self.layout.retile(n_new)?;
+        Ok(())
+    }
+
     /// Partition index assigned to `rank` at iteration `t` (Alg. 3 l.29).
     pub fn partition_of(&self, t: usize, rank: usize) -> usize {
         let n = self.layout.n_partitions();
@@ -277,6 +286,27 @@ mod tests {
             a.layout().validate().unwrap();
             assert_eq!(a.layout().blk_part.iter().sum::<usize>(), 6400);
         }
+    }
+
+    #[test]
+    fn reform_retiles_and_keeps_allocating() {
+        let mut a = alloc(32 * 640, 640, 4);
+        // skew the topology first so reform has something to flatten
+        a.rebalance(1, &[100000, 10, 100000, 10]).unwrap();
+        a.reform(3).unwrap();
+        assert_eq!(a.layout().n_partitions(), 3);
+        a.layout().validate().unwrap();
+        // allocation still works over the new world and tiles [0, n_g)
+        let ranges: Vec<(usize, usize)> = (0..3).map(|r| {
+            let p = a.partition_of(5, r);
+            a.layout().elem_range(p)
+        }).collect();
+        let total: usize = ranges.iter().map(|(s, e)| e - s).sum();
+        assert_eq!(total, 32 * 640);
+        // growing back also works (a rejoin at a later epoch)
+        a.reform(5).unwrap();
+        assert_eq!(a.layout().n_partitions(), 5);
+        a.layout().validate().unwrap();
     }
 
     #[test]

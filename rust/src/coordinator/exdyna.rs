@@ -14,8 +14,12 @@ use super::allocation::{AllocationCfg, Allocator};
 use super::partition::PartitionLayout;
 use super::selection::{select_indices, SelectOutput};
 use super::threshold::{OnlineThreshold, ThresholdCfg};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::sparsifiers::{RoundCtx, SelectPlan, Sparsifier};
+
+/// Byte length of the [`Sparsifier::export_state`] snapshot:
+/// δ (f32) + steps (u64) + warm flag (u8), all little-endian.
+const STATE_LEN: usize = 4 + 8 + 1;
 
 /// Full ExDyna configuration.
 #[derive(Clone, Copy, Debug)]
@@ -151,6 +155,39 @@ impl Sparsifier for ExDyna {
     fn target_density(&self) -> f64 {
         self.cfg.density
     }
+
+    fn reform(&mut self, n_ranks: usize) -> Result<()> {
+        // Alg. 3 state is a function of the rank count: re-tile the block
+        // grid over the new world (identical on every survivor). The
+        // learned threshold carries forward unchanged — it tracks the
+        // global k', which membership does not reset.
+        self.allocator.reform(n_ranks)?;
+        // stale counts are indexed by the dead world's ranks
+        self.pending_k = None;
+        self.last_window = (0, 0);
+        Ok(())
+    }
+
+    fn export_state(&self) -> Option<Vec<u8>> {
+        let mut out = Vec::with_capacity(STATE_LEN);
+        out.extend_from_slice(&self.threshold.delta().to_le_bytes());
+        out.extend_from_slice(&(self.threshold.steps() as u64).to_le_bytes());
+        out.push(self.threshold.is_warm() as u8);
+        Some(out)
+    }
+
+    fn import_state(&mut self, bytes: &[u8]) -> Result<()> {
+        if bytes.len() != STATE_LEN {
+            return Err(Error::invalid(format!(
+                "ExDyna state snapshot must be {STATE_LEN} bytes (got {})",
+                bytes.len()
+            )));
+        }
+        let delta = f32::from_le_bytes(bytes[0..4].try_into().expect("length checked"));
+        let steps = u64::from_le_bytes(bytes[4..12].try_into().expect("length checked")) as usize;
+        let warm = bytes[12] != 0;
+        self.threshold.restore(delta, steps, warm)
+    }
 }
 
 #[cfg(test)]
@@ -268,6 +305,69 @@ mod tests {
         let bp = &reps[0].layout().blk_part;
         assert!(bp.iter().all(|&b| b == bp[0]), "{bp:?}");
         assert_eq!(reps[0].name(), "exdyna-coarse");
+    }
+
+    #[test]
+    fn reform_shrinks_the_world_and_keeps_selecting_exclusively() {
+        let n = 4;
+        let n_g = 32 * 2048;
+        let cfg = ExDynaCfg::default_for(n);
+        let (mut reps, _) = drive(n, n_g, 10, cfg);
+        let delta_before = reps[0].delta().unwrap();
+        // rank 3 dies; survivors re-form for a 3-rank world
+        reps.truncate(3);
+        for rep in reps.iter_mut() {
+            rep.reform(3).unwrap();
+            assert_eq!(rep.layout().n_partitions(), 3);
+            rep.layout().validate().unwrap();
+            assert_eq!(rep.delta().unwrap(), delta_before, "δ carries forward");
+        }
+        // the post-reform rounds still select exclusively and identically
+        for t in 10..16 {
+            let acc = gaussian(1000 + t as u64, n_g, 0.01);
+            let mut k_by_rank = vec![0usize; 3];
+            let mut all_idx: Vec<u32> = Vec::new();
+            for (r, rep) in reps.iter_mut().enumerate() {
+                let ctx = RoundCtx {
+                    t,
+                    rank: r,
+                    n_ranks: 3,
+                };
+                let out = rep.select(&ctx, &acc).unwrap();
+                k_by_rank[r] = out.len();
+                all_idx.extend_from_slice(&out.idx);
+            }
+            let mut dedup = all_idx.clone();
+            dedup.sort_unstable();
+            dedup.dedup();
+            assert_eq!(dedup.len(), all_idx.len(), "build-up at t={t}");
+            for rep in reps.iter_mut() {
+                rep.observe(t, &k_by_rank).unwrap();
+            }
+        }
+        let l0 = reps[0].layout().clone();
+        for rep in &reps[1..] {
+            assert_eq!(*rep.layout(), l0, "post-reform topology diverged");
+        }
+    }
+
+    #[test]
+    fn state_snapshot_round_trips_into_a_fresh_replica() {
+        let n = 4;
+        let n_g = 32 * 2048;
+        let cfg = ExDynaCfg::default_for(n);
+        let (reps, _) = drive(n, n_g, 20, cfg);
+        let snap = reps[0].export_state().unwrap();
+        // a restarted rank builds a fresh replica and adopts the snapshot
+        let mut joiner = ExDyna::new(n_g, n, cfg).unwrap();
+        assert_ne!(joiner.delta(), reps[0].delta(), "warm-up moved δ");
+        joiner.import_state(&snap).unwrap();
+        assert_eq!(joiner.delta(), reps[0].delta());
+        // truncated or corrupt snapshots are rejected
+        assert!(joiner.import_state(&snap[..snap.len() - 1]).is_err());
+        let mut bad = snap.clone();
+        bad[0..4].copy_from_slice(&(-1.0f32).to_le_bytes());
+        assert!(joiner.import_state(&bad).is_err());
     }
 
     #[test]

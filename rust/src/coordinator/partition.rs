@@ -82,6 +82,46 @@ impl PartitionLayout {
         self.blk_part.len()
     }
 
+    /// Re-tile the same block grid over `n_new` partitions — the elastic
+    /// membership path after a rank is lost or rejoins. `n_g`, `sz_blk`
+    /// and `n_blocks` are preserved (the gradient vector and its block
+    /// grid do not change when membership does); only the
+    /// blocks-per-partition split is redistributed, quotient+remainder
+    /// exactly as in [`PartitionLayout::new`]. Any migration history is
+    /// deliberately dropped: survivors re-learn the imbalance from the
+    /// next round's counts, which keeps the re-tile deterministic from
+    /// `(layout, n_new)` alone on every surviving rank.
+    pub fn retile(&self, n_new: usize) -> Result<Self> {
+        if n_new == 0 {
+            return Err(Error::invalid("retile needs n_new > 0"));
+        }
+        if self.n_blocks < n_new {
+            return Err(Error::invalid(format!(
+                "need at least one block per worker: n_b={} < n={n_new}",
+                self.n_blocks
+            )));
+        }
+        let quotient = self.n_blocks / n_new;
+        let remainder = self.n_blocks % n_new;
+        let mut blk_part = vec![0usize; n_new];
+        for (i, bp) in blk_part.iter_mut().enumerate() {
+            *bp = if i < remainder { quotient + 1 } else { quotient };
+        }
+        let mut blk_pos = vec![0usize; n_new];
+        for i in 1..n_new {
+            blk_pos[i] = blk_pos[i - 1] + blk_part[i - 1];
+        }
+        let out = PartitionLayout {
+            n_g: self.n_g,
+            sz_blk: self.sz_blk,
+            n_blocks: self.n_blocks,
+            blk_part,
+            blk_pos,
+        };
+        out.validate()?;
+        Ok(out)
+    }
+
     /// Element range `[start, end)` of partition `p`. The partition owning
     /// the final block also owns the remainder tail `[n_b*sz_blk, n_g)`.
     pub fn elem_range(&self, p: usize) -> (usize, usize) {
@@ -184,6 +224,34 @@ mod tests {
         assert!(PartitionLayout::new(100, 4, 0).is_err());
         assert!(PartitionLayout::new(100, 2, 4).is_err()); // fewer blocks than workers
         assert!(PartitionLayout::new(100, 4, 2).is_err()); // sz_blk < 32
+    }
+
+    #[test]
+    fn retile_preserves_the_grid_and_tiles_the_new_world() {
+        let l = PartitionLayout::new(32 * 640, 640, 4).unwrap();
+        for n_new in [1usize, 2, 3, 4, 5, 7] {
+            let r = l.retile(n_new).unwrap();
+            r.validate().unwrap();
+            assert_eq!(r.n_g, l.n_g);
+            assert_eq!(r.sz_blk, l.sz_blk);
+            assert_eq!(r.n_blocks, l.n_blocks);
+            assert_eq!(r.n_partitions(), n_new);
+            assert_eq!(r.blk_part.iter().sum::<usize>(), l.n_blocks);
+        }
+        assert!(l.retile(0).is_err());
+        assert!(l.retile(641).is_err()); // more workers than blocks
+    }
+
+    #[test]
+    fn retile_of_a_migrated_layout_rebalances_evenly() {
+        // a layout skewed by migration re-tiles to the quotient split
+        let mut l = PartitionLayout::new(32 * 640, 640, 4).unwrap();
+        l.blk_part = vec![300, 100, 140, 100];
+        l.blk_pos = vec![0, 300, 400, 540];
+        l.validate().unwrap();
+        let r = l.retile(3).unwrap();
+        assert_eq!(r.blk_part, vec![214, 213, 213]);
+        r.validate().unwrap();
     }
 
     #[test]

@@ -106,6 +106,27 @@ impl OnlineThreshold {
         self.steps
     }
 
+    /// Whether the scaler is still in the warm-up regime (exam never
+    /// entered the hysteresis band yet).
+    pub fn is_warm(&self) -> bool {
+        self.warm
+    }
+
+    /// Restore the threshold trajectory from a snapshot — the elastic
+    /// late-joiner path, where a fresh replica adopts a survivor's
+    /// learned δ instead of re-running warm-up from δ₀.
+    pub fn restore(&mut self, delta: f32, steps: usize, warm: bool) -> Result<()> {
+        if !(delta > 0.0 && delta.is_finite()) {
+            return Err(Error::invalid(format!(
+                "restored delta must be positive and finite (got {delta})"
+            )));
+        }
+        self.delta = delta;
+        self.steps = steps;
+        self.warm = warm;
+        Ok(())
+    }
+
     /// Alg. 5: scale δ given user-set `k` and actual `k'`. Returns the
     /// applied scaling factor.
     pub fn update(&mut self, k: usize, k_actual: usize) -> f64 {

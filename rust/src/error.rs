@@ -34,6 +34,45 @@ pub enum Error {
     /// Network-level transport failures (connect/read/write timeouts,
     /// peers lost mid-round, aborted clusters).
     Net(String),
+
+    /// A specific peer died mid-round and poisoned the transport — the
+    /// typed replacement for the old stringly
+    /// `Error::net("transport poisoned by a failed worker")`, carrying
+    /// who was lost and at which round so the elastic recovery path can
+    /// act without string matching.
+    PeerLost {
+        /// The lost peer's rank (in the epoch the transport served).
+        rank: usize,
+        /// The round generation the loss was observed at.
+        generation: u64,
+    },
+
+    /// The transport was poisoned but the failing rank is unknown
+    /// (e.g. a poison flag observed after the fact, or an abort notice
+    /// that did not identify its sender).
+    Poisoned {
+        /// The round generation the poisoning was observed at.
+        generation: u64,
+    },
+
+    /// A membership reform was requested (a joiner is parked at the
+    /// coordinator, or a survivor asked the cluster to re-form): drain
+    /// the current round and re-rendezvous at the next epoch. Not a
+    /// failure of this rank.
+    Reform {
+        /// The epoch the cluster is re-forming into.
+        epoch: u64,
+    },
+
+    /// Deterministic chaos fault injection (`--chaos-kill-at`) fired on
+    /// this rank: it must tear down without aborting the transport,
+    /// simulating a crash.
+    ChaosKilled {
+        /// The killed rank.
+        rank: usize,
+        /// The iteration the kill fired at.
+        t: usize,
+    },
 }
 
 impl fmt::Display for Error {
@@ -47,6 +86,21 @@ impl fmt::Display for Error {
             Error::InvalidArg(m) => write!(f, "invalid argument: {m}"),
             Error::Protocol(m) => write!(f, "protocol: {m}"),
             Error::Net(m) => write!(f, "net: {m}"),
+            Error::PeerLost { rank, generation } => write!(
+                f,
+                "net: transport poisoned by a failed worker: peer rank {rank} \
+                 lost at generation {generation}"
+            ),
+            Error::Poisoned { generation } => write!(
+                f,
+                "net: transport poisoned by a failed worker (generation {generation})"
+            ),
+            Error::Reform { epoch } => {
+                write!(f, "membership: reform requested for epoch {epoch}")
+            }
+            Error::ChaosKilled { rank, t } => {
+                write!(f, "chaos: rank {rank} killed at iteration {t}")
+            }
         }
     }
 }
@@ -102,12 +156,66 @@ impl Error {
         Error::Net(msg.into())
     }
 
+    /// Helper for a typed peer-loss poisoning.
+    pub fn peer_lost(rank: usize, generation: u64) -> Self {
+        Error::PeerLost { rank, generation }
+    }
+
+    /// Helper for an anonymous poisoning.
+    pub fn poisoned(generation: u64) -> Self {
+        Error::Poisoned { generation }
+    }
+
     /// Did this error originate from an IO deadline expiry? The codec
     /// maps `WouldBlock`/`TimedOut` reads and writes to [`Error::Net`]
     /// with a "timed out" message; the obs layer uses this to count
     /// deadline waits separately from peer loss.
     pub fn is_timeout(&self) -> bool {
         matches!(self, Error::Net(m) if m.contains("timed out"))
+    }
+
+    /// Is this one of the typed membership-fault variants the elastic
+    /// recovery path acts on directly?
+    pub fn is_membership_fault(&self) -> bool {
+        matches!(
+            self,
+            Error::PeerLost { .. } | Error::Poisoned { .. } | Error::Reform { .. }
+        )
+    }
+
+    /// Conservative classifier for "a peer probably died": the typed
+    /// membership faults, plus the net/io/protocol shapes a real socket
+    /// crash surfaces as (reset, closed, broken pipe, abort notices,
+    /// deadline expiry on a silent neighbor, legacy poison strings).
+    /// Divergence errors ("workers diverged") deliberately do NOT match
+    /// — diverged state must stay terminal, never retried.
+    pub fn looks_like_peer_loss(&self) -> bool {
+        if self.is_membership_fault() {
+            return true;
+        }
+        let msg_is_lossy = |m: &str| {
+            m.contains("closed")
+                || m.contains("reset")
+                || m.contains("broken pipe")
+                || m.contains("timed out")
+                || m.contains("aborted")
+                || m.contains("poisoned")
+                || m.contains("silent")
+        };
+        match self {
+            Error::Net(m) | Error::Protocol(m) => msg_is_lossy(m),
+            Error::Invariant(m) => m.contains("poisoned"),
+            Error::Io(e) => matches!(
+                e.kind(),
+                std::io::ErrorKind::ConnectionReset
+                    | std::io::ErrorKind::ConnectionAborted
+                    | std::io::ErrorKind::BrokenPipe
+                    | std::io::ErrorKind::UnexpectedEof
+                    | std::io::ErrorKind::TimedOut
+                    | std::io::ErrorKind::WouldBlock
+            ),
+            _ => false,
+        }
     }
 }
 
@@ -131,5 +239,40 @@ mod tests {
         assert!(Error::net("write timed out").is_timeout());
         assert!(!Error::net("connection reset").is_timeout());
         assert!(!Error::protocol("timed out").is_timeout());
+    }
+
+    #[test]
+    fn membership_faults_keep_the_poisoned_marker() {
+        // callers (and older tests) grep for "poisoned" — both typed
+        // poison variants must keep carrying it
+        let lost = Error::peer_lost(2, 7).to_string();
+        assert!(lost.contains("transport poisoned by a failed worker"), "{lost}");
+        assert!(lost.contains("rank 2"), "{lost}");
+        assert!(lost.contains("generation 7"), "{lost}");
+        let anon = Error::poisoned(3).to_string();
+        assert!(anon.contains("transport poisoned by a failed worker"), "{anon}");
+        assert!(Error::peer_lost(0, 0).is_membership_fault());
+        assert!(Error::poisoned(0).is_membership_fault());
+        assert!(Error::Reform { epoch: 1 }.is_membership_fault());
+        assert!(!Error::ChaosKilled { rank: 1, t: 5 }.is_membership_fault());
+    }
+
+    #[test]
+    fn peer_loss_classifier_is_conservative() {
+        assert!(Error::peer_lost(1, 4).looks_like_peer_loss());
+        assert!(Error::poisoned(4).looks_like_peer_loss());
+        assert!(Error::net("connection reset").looks_like_peer_loss());
+        assert!(Error::protocol("connection closed by peer").looks_like_peer_loss());
+        assert!(Error::net("read timed out waiting for frame header").looks_like_peer_loss());
+        let io: Error =
+            std::io::Error::new(std::io::ErrorKind::BrokenPipe, "pipe").into();
+        assert!(io.looks_like_peer_loss());
+        // divergence stays terminal
+        assert!(!Error::protocol(
+            "generation mismatch from peer: got 3, expected 4 — workers diverged"
+        )
+        .looks_like_peer_loss());
+        assert!(!Error::invariant("double-deposited").looks_like_peer_loss());
+        assert!(!Error::config("x").looks_like_peer_loss());
     }
 }

@@ -56,6 +56,11 @@ pub struct IterRecord {
     /// the same span of work the modeled `t_comm` charges. Excluded
     /// from the CSV schema for the same reason as `m_compute`.
     pub m_comm: f64,
+    /// Membership epoch this iteration ran in (0 unless an elastic run
+    /// re-formed the cluster). Like the measured times, this is carried
+    /// only by the NDJSON sink — fault-free traces keep the CSV schema
+    /// byte-identical.
+    pub epoch: u64,
 }
 
 impl IterRecord {
@@ -222,9 +227,11 @@ impl Trace {
                 t_comm,
                 t_exposed_comm: if pipelined { pf(12)? } else { t_comm },
                 // last column (t_total) is derived; recomputed on
-                // demand. Measured times are not part of the CSV schema.
+                // demand. Measured times and the membership epoch are
+                // not part of the CSV schema.
                 m_compute: 0.0,
                 m_comm: 0.0,
+                epoch: 0,
             });
         }
         Ok(trace)
@@ -290,7 +297,7 @@ impl Trace {
             "{{\"t\":{},\"loss\":{},\"k_user\":{},\"k_actual\":{},\"k_sum\":{},\
              \"density\":{},\"f_ratio\":{},\"delta\":{},\"global_err\":{},\
              \"t_compute\":{},\"t_select\":{},\"t_comm\":{},\"t_exposed_comm\":{},\
-             \"t_total\":{},\"m_compute\":{},\"m_comm\":{}}}",
+             \"t_total\":{},\"m_compute\":{},\"m_comm\":{},\"epoch\":{}}}",
             r.t,
             jf(r.loss),
             r.k_user,
@@ -307,6 +314,7 @@ impl Trace {
             jf(r.t_total()),
             jf(r.m_compute),
             jf(r.m_comm),
+            r.epoch,
         )
     }
 
@@ -390,6 +398,7 @@ impl Trace {
                     "t_exposed_comm" => rec.t_exposed_comm = pf()?,
                     "m_compute" => rec.m_compute = pf()?,
                     "m_comm" => rec.m_comm = pf()?,
+                    "epoch" => rec.epoch = pu()? as u64,
                     // t_total is derived; unknown keys are tolerated
                     _ => {}
                 }
@@ -493,6 +502,7 @@ mod tests {
         r.delta = 1.234_567_890_123_456_7e-12;
         r.m_compute = 0.001_234_5;
         r.m_comm = f64::MIN_POSITIVE;
+        r.epoch = 2;
         tr.push(r);
         tr.push(rec(1, 0.001, 1.5));
         let dir = std::env::temp_dir().join(format!("exdyna_ndjson_rt_{}", std::process::id()));
@@ -519,6 +529,7 @@ mod tests {
             assert_eq!(a.delta.to_bits(), b.delta.to_bits());
             assert_eq!(a.m_compute.to_bits(), b.m_compute.to_bits());
             assert_eq!(a.m_comm.to_bits(), b.m_comm.to_bits());
+            assert_eq!(a.epoch, b.epoch, "membership epoch rides the NDJSON");
         }
         // corrupt lines are typed errors, not panics
         std::fs::write(dir.join("bad.ndjson"), "not json\n").unwrap();

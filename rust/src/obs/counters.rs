@@ -47,6 +47,9 @@ pub struct ObsCounters {
     pub aborts: AtomicU64,
     /// Receive waits that expired at the IO deadline.
     pub deadline_waits: AtomicU64,
+    /// Membership reforms survived (epoch transitions this rank rode
+    /// through on the elastic recovery path).
+    pub reforms: AtomicU64,
 }
 
 impl ObsCounters {
@@ -114,6 +117,12 @@ impl ObsCounters {
         self.deadline_waits.fetch_add(1, Relaxed);
     }
 
+    /// Bump the membership-reform counter.
+    #[inline]
+    pub fn reform(&self) {
+        self.reforms.fetch_add(1, Relaxed);
+    }
+
     /// Consistent point-in-time copy of every counter.
     pub fn snapshot(&self) -> CounterSnapshot {
         CounterSnapshot {
@@ -127,6 +136,7 @@ impl ObsCounters {
             rounds_rsag: self.rounds_rsag.load(Relaxed),
             aborts: self.aborts.load(Relaxed),
             deadline_waits: self.deadline_waits.load(Relaxed),
+            reforms: self.reforms.load(Relaxed),
         }
     }
 }
@@ -155,6 +165,8 @@ pub struct CounterSnapshot {
     pub aborts: u64,
     /// Deadline expiries observed.
     pub deadline_waits: u64,
+    /// Membership reforms survived.
+    pub reforms: u64,
 }
 
 impl CounterSnapshot {
@@ -177,6 +189,7 @@ impl CounterSnapshot {
             rounds_rsag: self.rounds_rsag.saturating_sub(earlier.rounds_rsag),
             aborts: self.aborts.saturating_sub(earlier.aborts),
             deadline_waits: self.deadline_waits.saturating_sub(earlier.deadline_waits),
+            reforms: self.reforms.saturating_sub(earlier.reforms),
         }
     }
 
@@ -190,7 +203,7 @@ impl CounterSnapshot {
     pub fn render(&self) -> String {
         format!(
             "wire tx/rx {}/{} B, payload tx/rx {}/{} B, frames enc/dec {}/{}, \
-             rounds ag/rsag {}/{}, aborts {}, deadline waits {}",
+             rounds ag/rsag {}/{}, aborts {}, deadline waits {}, reforms {}",
             self.wire_tx_bytes,
             self.wire_rx_bytes,
             self.payload_tx_bytes,
@@ -200,7 +213,8 @@ impl CounterSnapshot {
             self.rounds_allgather,
             self.rounds_rsag,
             self.aborts,
-            self.deadline_waits
+            self.deadline_waits,
+            self.reforms
         )
     }
 }
@@ -222,6 +236,7 @@ mod tests {
         c.round(crate::cluster::CollectiveKind::Rsag);
         c.abort();
         c.deadline_wait();
+        c.reform();
         let s = c.snapshot();
         assert_eq!(s.wire_tx_bytes, 10);
         assert_eq!(s.wire_rx_bytes, 20);
@@ -233,6 +248,7 @@ mod tests {
         assert_eq!(s.rounds_rsag, 1);
         assert_eq!(s.aborts, 1);
         assert_eq!(s.deadline_waits, 1);
+        assert_eq!(s.reforms, 1);
         assert_eq!(s.payload_link_bytes(), 24);
     }
 

@@ -43,6 +43,11 @@ pub enum RecKind {
     /// A `--sparse-shards` entry-list hop moved (`a` = entry count,
     /// `b` = 0 sent / 1 received).
     SparseShard,
+    /// A specific peer was observed lost (`a` = lost rank).
+    PeerLost,
+    /// A membership reform: this rank re-formed into a new epoch
+    /// (`a` = new epoch, `b` = new world size).
+    Reform,
 }
 
 impl RecKind {
@@ -55,6 +60,8 @@ impl RecKind {
             RecKind::Abort => "abort",
             RecKind::Deadline => "deadline",
             RecKind::SparseShard => "sparse-shard",
+            RecKind::PeerLost => "peer-lost",
+            RecKind::Reform => "reform",
         }
     }
 }

@@ -115,6 +115,32 @@ pub trait Sparsifier: Send {
     fn is_sorting_based(&self) -> bool {
         false
     }
+
+    /// Re-form this replica for a new world size at an elastic membership
+    /// epoch boundary. Coordination state that is a function of the rank
+    /// count (partition topology, per-rank bookkeeping) must be rebuilt
+    /// deterministically so every survivor lands on the identical
+    /// topology; learned scalar state (thresholds) carries forward.
+    /// Sparsifiers whose state is world-size-independent keep the
+    /// default no-op.
+    fn reform(&mut self, _n_ranks: usize) -> Result<()> {
+        Ok(())
+    }
+
+    /// Serialize the replicated coordination state (threshold trajectory
+    /// etc.) for a late joiner's snapshot. `None` (the default) means
+    /// this sparsifier has nothing a joiner could not rebuild from
+    /// scratch.
+    fn export_state(&self) -> Option<Vec<u8>> {
+        None
+    }
+
+    /// Restore state exported by a surviving replica's
+    /// [`Sparsifier::export_state`] — the late-joiner path. The default
+    /// accepts and ignores the snapshot.
+    fn import_state(&mut self, _bytes: &[u8]) -> Result<()> {
+        Ok(())
+    }
 }
 
 /// Build a per-rank sparsifier factory by name — the single registry the

@@ -950,6 +950,7 @@ impl RealTrainer {
             // so NDJSON rows are uniform across trainers
             m_compute: out.t_compute + out.t_select,
             m_comm: out.m_comm,
+            epoch: 0,
         };
         self.sim_clock += rec.t_total();
         self.trace.push(rec.clone());

@@ -437,6 +437,7 @@ pub fn run_lockstep_obs(
             t_exposed_comm,
             m_compute,
             m_comm,
+            epoch: 0,
         });
     }
     if let (Some(base), Some(tr)) = (obs.trace_path.as_deref(), tracer.as_ref()) {

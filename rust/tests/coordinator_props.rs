@@ -619,6 +619,90 @@ fn prop_rebalanced_partition_selections_are_duplicate_free() {
     );
 }
 
+/// ISSUE 9 satellite — the elastic membership path: when a rank dies or
+/// rejoins, every survivor re-tiles the SAME block grid over the new
+/// world with `PartitionLayout::retile`. Over random grids, arbitrary
+/// chains of shrinks and regrowths, and migration-skewed starting
+/// layouts, the re-tile must conserve the grid (`n_g`, `sz_blk`, block
+/// total), stay valid, tile `[0, n_g)` disjointly, and land the
+/// quotient+remainder balance — so two survivors re-tiling
+/// independently always agree.
+#[test]
+fn prop_retile_conserves_the_grid_over_membership_chains() {
+    check(
+        113,
+        60,
+        &Pair(PartitionStrat, UsizeRange { lo: 1, hi: 8 }),
+        |&((n_g, n_b, n), steps)| {
+            let layout = PartitionLayout::new(n_g, n_b, n).map_err(|e| e.to_string())?;
+            // skew the layout first: retile must work from any migration
+            // history, not just the balanced initial split
+            let mut a = Allocator::new(
+                layout,
+                AllocationCfg {
+                    alpha: 1.5,
+                    blk_move: 2,
+                    min_blk: 1,
+                },
+            )
+            .map_err(|e| e.to_string())?;
+            let mut rng = Rng::new((n_g ^ (n * 131)) as u64);
+            for t in 1..=5 {
+                let k: Vec<usize> = (0..n)
+                    .map(|r| if r == 0 { 10_000 } else { rng.usize(100) })
+                    .collect();
+                a.rebalance(t, &k).map_err(|e| e.to_string())?;
+            }
+            let mut l = a.layout().clone();
+            for step in 0..steps {
+                // shrink below or grow past the previous world, but
+                // never past one-block-per-partition
+                let n_new = (1 + rng.usize(n + 2)).min(l.n_blocks);
+                let r = l.retile(n_new).map_err(|e| format!("step {step}: {e}"))?;
+                r.validate().map_err(|e| format!("step {step}: {e}"))?;
+                if r.n_g != l.n_g || r.sz_blk != l.sz_blk || r.n_blocks != l.n_blocks {
+                    return Err(format!("step {step}: retile changed the block grid"));
+                }
+                if r.n_partitions() != n_new {
+                    return Err(format!("step {step}: wrong partition count"));
+                }
+                if r.blk_part.iter().sum::<usize>() != l.n_blocks {
+                    return Err(format!("step {step}: block total changed"));
+                }
+                if r.blk_part.iter().any(|&b| b < 1) {
+                    return Err(format!("step {step}: empty partition"));
+                }
+                // balanced to within one block: deterministic from
+                // (grid, n_new) alone, so every survivor agrees
+                let min = r.blk_part.iter().min().unwrap();
+                let max = r.blk_part.iter().max().unwrap();
+                if max - min > 1 {
+                    return Err(format!("step {step}: unbalanced re-tile {:?}", r.blk_part));
+                }
+                // element windows tile [0, n_g) disjointly
+                let mut covered = 0usize;
+                for p in 0..n_new {
+                    let (s, e) = r.elem_range(p);
+                    if s != covered || e < s {
+                        return Err(format!(
+                            "step {step}: partition {p} window [{s},{e}) breaks the tiling \
+                             at {covered}"
+                        ));
+                    }
+                    covered = e;
+                }
+                if covered != n_g {
+                    return Err(format!(
+                        "step {step}: windows cover {covered} of {n_g} elements"
+                    ));
+                }
+                l = r;
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn prop_error_feedback_conservation_in_sim_round() {
     // one full exdyna round: selected ∪ carried == accumulator exactly

@@ -47,16 +47,31 @@
 //! and the `SimWorker` loop with `sparse_shards = true` reproduces the
 //! lockstep engine's sparse trace bit-exactly over all four transports.
 //!
+//! The chaos battery (ISSUE 9) pins the elastic-membership contract on
+//! every transport: a `--chaos-kill-at`-style injected rank death must
+//! leave the survivors with a complete run — they drain the poisoned
+//! epoch, re-form at epoch+1 over the shrunken world, and reach the
+//! final iteration having lost at most one record per transition —
+//! while the victim reports its death as the typed `ChaosKilled` error
+//! rather than a run failure; on the socket star a killed rank can
+//! rejoin at an epoch boundary and is re-seated with the donor's
+//! sparsifier snapshot.
+//!
 //! The true multi-process star/ring paths (one OS process per rank via
 //! `exdyna launch`) are pinned by `rust/tests/engine_parity.rs`; this
 //! suite covers the transport semantics in-process where every failure
 //! can be injected deterministically.
 
-use exdyna::cluster::testing::{local_cluster, ring_cluster, ring_local_cluster, tcp_cluster};
-use exdyna::cluster::{
-    run_rank_on_transport, run_threaded, CollectiveKind, Endpoint, FloatBufPool, Message,
-    SparseRound, Transport,
+use exdyna::cluster::testing::{
+    elastic_socket_cluster, local_cluster, ring_cluster, ring_local_cluster, tcp_cluster,
 };
+use exdyna::cluster::{
+    run_elastic_seat, run_elastic_threaded, run_rank_on_transport, run_threaded, CollectiveKind,
+    ElasticCfg, ElasticFlavor, Endpoint, FloatBufPool, Message, SocketMember, SparseRound,
+    Transport,
+};
+use exdyna::error::Error;
+use exdyna::metrics::IterRecord;
 use exdyna::collectives::allreduce::reduce_contributions_rsag_with;
 use exdyna::collectives::{
     canonicalize_residual, reduce_sparse_contributions_with, SparseReduceScratch, SparseVec,
@@ -859,6 +874,207 @@ fn double_deposit_is_rejected_on_shared_board_transports() {
     assert!(err.contains("double-deposited"), "{err}");
     tps[0].abort();
     assert!(blocked.join().unwrap().is_err());
+}
+
+/// Small synthetic workload shared by the chaos batteries.
+fn chaos_gen(n: usize) -> SynthGen {
+    let model = SynthModel::profile("chaos", 24_000, 4, 5, DecayCfg::default());
+    SynthGen::new(model, n, 0.5, 31, false)
+}
+
+fn chaos_cfg(n: usize, iters: usize) -> SimCfg {
+    SimCfg {
+        n_ranks: n,
+        iters,
+        compute_s: 0.01,
+        ..Default::default()
+    }
+}
+
+fn chaos_ecfg(kill: (usize, usize), grace: Duration) -> ElasticCfg {
+    ElasticCfg {
+        enabled: true,
+        chaos_kill_at: Some(kill),
+        grace,
+        ..ElasticCfg::default()
+    }
+}
+
+/// Survivor-side acceptance for a chaos run: the run reached the final
+/// iteration, lost at most one record per epoch transition, and
+/// actually crossed an epoch boundary.
+fn assert_survivor_records(name: &str, rank: usize, recs: &[IterRecord], iters: usize) {
+    assert!(!recs.is_empty(), "[{name}] rank {rank}: no records");
+    assert!(
+        recs.len() >= iters - 2,
+        "[{name}] rank {rank}: only {} of {iters} records survived the transition",
+        recs.len()
+    );
+    assert_eq!(
+        recs.last().unwrap().t,
+        iters - 1,
+        "[{name}] rank {rank}: the run never reached the last iteration"
+    );
+    assert_eq!(
+        recs.first().unwrap().epoch,
+        0,
+        "[{name}] rank {rank}: first record must be from epoch 0"
+    );
+    assert!(
+        recs.last().unwrap().epoch >= 1,
+        "[{name}] rank {rank}: no epoch transition in the trace"
+    );
+}
+
+/// ISSUE 9, in-process half: a chaos kill mid-run must leave the
+/// survivors with a complete trace on both in-process transports
+/// (shared board and in-process ring), re-formed at epoch+1.
+#[test]
+fn chaos_kill_survivors_recover_in_process() {
+    for (name, flavor) in [
+        ("local", ElasticFlavor::Local),
+        ("ring-local", ElasticFlavor::Ring),
+    ] {
+        let (n, iters, kill) = (4usize, 12usize, (5usize, 2usize));
+        let gen = chaos_gen(n);
+        let mk_sp = |n_g: usize, nr: usize| -> Result<Box<dyn Sparsifier>> {
+            Ok(Box::new(ExDyna::new(n_g, nr, ExDynaCfg::default_for(nr))?))
+        };
+        let cfg = chaos_cfg(n, iters);
+        let ecfg = chaos_ecfg(kill, Duration::from_secs(5));
+        let trace = run_elastic_threaded(&gen, &mk_sp, &cfg, flavor, &ecfg)
+            .unwrap_or_else(|e| panic!("[{name}] elastic run failed: {e}"));
+        assert_survivor_records(name, 0, &trace.records, iters);
+    }
+}
+
+/// ISSUE 9, socket half: the same chaos kill over the loopback star and
+/// ring — the victim's dropped sockets are the death notice, the
+/// coordinator re-forms the epoch over the survivors, and every
+/// survivor completes the run.
+#[test]
+fn chaos_kill_survivors_recover_on_socket_transports() {
+    for (name, ring) in [("tcp", false), ("ring", true)] {
+        let (n, iters, kill) = (4usize, 12usize, (5usize, 2usize));
+        let gen = chaos_gen(n);
+        let cfg = chaos_cfg(n, iters);
+        let ecfg = chaos_ecfg(kill, Duration::from_secs(3));
+        let (_net, members) = elastic_socket_cluster(n, ring, ecfg.grace, Duration::from_secs(20))
+            .unwrap_or_else(|e| panic!("[{name}] elastic cluster must build: {e}"));
+        let results: Vec<Result<Vec<IterRecord>>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = members
+                .into_iter()
+                .enumerate()
+                .map(|(rank, (member, seat))| {
+                    let (gen, cfg, ecfg) = (&gen, &cfg, &ecfg);
+                    scope.spawn(move || {
+                        let sp: Box<dyn Sparsifier> = Box::new(
+                            ExDyna::new(gen.n_g(), n, ExDynaCfg::default_for(n)).unwrap(),
+                        );
+                        run_elastic_seat(gen, cfg, rank, sp, seat, &member, ecfg)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("chaos worker must not panic"))
+                .collect()
+        });
+        match &results[kill.1] {
+            Err(Error::ChaosKilled { rank, t }) => {
+                assert_eq!((*t, *rank), kill, "[{name}] wrong kill site");
+            }
+            other => panic!("[{name}] the victim must report its injected death, got {other:?}"),
+        }
+        for rank in (0..n).filter(|&r| r != kill.1) {
+            let recs = results[rank]
+                .as_ref()
+                .unwrap_or_else(|e| panic!("[{name}] survivor {rank} failed: {e}"));
+            assert_survivor_records(name, rank, recs, iters);
+        }
+    }
+}
+
+/// ISSUE 9, rejoin half: after the chaos kill on the socket star, the
+/// dead rank's replacement registers a join claim; the coordinator
+/// seats it at the next epoch boundary carrying the donor's sparsifier
+/// snapshot, and the re-grown cluster finishes the run together.
+#[test]
+fn a_chaos_killed_rank_rejoins_the_socket_star_with_state_restored() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    let (n, iters, kill) = (3usize, 40usize, (4usize, 1usize));
+    let gen = chaos_gen(n);
+    let cfg = chaos_cfg(n, iters);
+    let ecfg = chaos_ecfg(kill, Duration::from_secs(2));
+    let (net, members) = elastic_socket_cluster(n, false, ecfg.grace, Duration::from_secs(20))
+        .expect("elastic star must build");
+    let died = AtomicBool::new(false);
+    let (results, rejoin) = std::thread::scope(|scope| {
+        let handles: Vec<_> = members
+            .into_iter()
+            .enumerate()
+            .map(|(rank, (member, seat))| {
+                let (gen, cfg, ecfg, died) = (&gen, &cfg, &ecfg, &died);
+                scope.spawn(move || {
+                    let sp: Box<dyn Sparsifier> = Box::new(
+                        ExDyna::new(gen.n_g(), n, ExDynaCfg::default_for(n)).unwrap(),
+                    );
+                    let out = run_elastic_seat(gen, cfg, rank, sp, seat, &member, ecfg);
+                    if matches!(out, Err(Error::ChaosKilled { .. })) {
+                        died.store(true, Ordering::SeqCst);
+                    }
+                    out
+                })
+            })
+            .collect();
+        let rejoiner = {
+            let (gen, cfg, ecfg, died, net) = (&gen, &cfg, &ecfg, &died, &net);
+            scope.spawn(move || {
+                // the replacement process starts the moment the victim
+                // is gone (a restart supervisor, in production terms)
+                while !died.load(Ordering::SeqCst) {
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+                let (member, seat) = SocketMember::rejoin(kill.1, net, false)?;
+                assert!(
+                    seat.sp_import.is_some(),
+                    "a rejoin seat must carry the donor's sparsifier snapshot"
+                );
+                assert!(seat.epoch >= 1, "rejoiner must land at a re-formed epoch");
+                let sp: Box<dyn Sparsifier> = Box::new(
+                    ExDyna::new(gen.n_g(), n, ExDynaCfg::default_for(n)).unwrap(),
+                );
+                run_elastic_seat(gen, cfg, kill.1, sp, seat, &member, ecfg)
+            })
+        };
+        let results: Vec<Result<Vec<IterRecord>>> = handles
+            .into_iter()
+            .map(|h| h.join().expect("chaos worker must not panic"))
+            .collect();
+        let rejoin = rejoiner.join().expect("rejoiner must not panic");
+        (results, rejoin)
+    });
+    match &results[kill.1] {
+        Err(Error::ChaosKilled { rank, t }) => assert_eq!((*t, *rank), kill, "wrong kill site"),
+        other => panic!("the victim must report its injected death, got {other:?}"),
+    }
+    for rank in (0..n).filter(|&r| r != kill.1) {
+        let recs = results[rank]
+            .as_ref()
+            .unwrap_or_else(|e| panic!("survivor {rank} failed: {e}"));
+        assert_survivor_records("tcp-rejoin", rank, recs, iters);
+    }
+    let recs = rejoin.expect("the rejoined rank must finish the run");
+    assert!(!recs.is_empty(), "rejoiner produced no records");
+    assert_eq!(
+        recs.last().unwrap().t,
+        iters - 1,
+        "rejoiner must reach the last iteration"
+    );
+    assert!(
+        recs.first().unwrap().epoch >= 1,
+        "rejoiner records must carry the re-formed epoch"
+    );
 }
 
 /// The end-to-end half of the suite: the unchanged `SimWorker` loop over
