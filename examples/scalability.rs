@@ -66,6 +66,28 @@
 //!     --sparse-shards --iters 100 --out trace.csv
 //! ```
 //!
+//! Add `--elastic` to make membership survive rank deaths, and
+//! `--chaos-kill-at ITER:RANK` (implies `--elastic`) to inject a
+//! deterministic death mid-run. Rank 0 is a legal victim: every member
+//! pre-binds a standby listener whose address rides the succession
+//! table of each epoch's welcome, so when the coordinator dies the
+//! survivors walk the table, the lowest surviving original rank
+//! promotes its standby into the new coordinator (the
+//! `CoordinatorPromoted` log line), and the run finishes one epoch
+//! later with the merged trace written by the senior survivor.
+//! Schedules chain multiple kill sites with commas:
+//!
+//! ```text
+//! # kill the coordinator at iteration 5; survivors promote and finish
+//! cargo run --release -- launch --transport ring --world-size 4 \
+//!     --elastic --chaos-kill-at 5:0 --iters 100 --out trace.csv
+//!
+//! # two faults back to back: rank 0 at iter 4, then the freshly
+//! # promoted coordinator (rank 1) at iter 8 — survivors end at epoch 2
+//! cargo run --release -- launch --transport ring --world-size 4 \
+//!     --elastic --chaos-kill-at 4:0,8:1 --iters 100 --out trace.csv
+//! ```
+//!
 //! Add `--obs-trace spans.json` to either form (and to `sim`, or
 //! `trace_path` in the TOML `[obs]` section) to record a
 //! chrome://tracing span timeline — compute/select and round

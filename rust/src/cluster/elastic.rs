@@ -19,11 +19,42 @@
 //!   EF mass is conserved across an in-process kill/rejoin cycle.
 //! * [`SocketMember`] — the one-process-per-rank implementation,
 //!   delegating to the wire protocol in
-//!   [`net::elastic`](crate::cluster::net::elastic): original rank 0
-//!   keeps the rendezvous listener as the [`EpochCoordinator`], every
-//!   other rank re-dials it at each boundary. A restarted process lost
-//!   its memory, so a socket rejoin restores only the sparsifier
-//!   snapshot carried by the Welcome, not the EF accumulator.
+//!   [`net::elastic`](crate::cluster::net::elastic). Any member can be
+//!   the coordinator: original rank 0 starts as one (it binds the
+//!   bootstrap rendezvous listener), every other member pre-binds a
+//!   standby listener and is seated with the epoch's succession table.
+//!   A restarted process lost its memory, so a socket rejoin restores
+//!   only the sparsifier snapshot carried by the Welcome, not the EF
+//!   accumulator.
+//!
+//! # The promotion state machine
+//!
+//! A [`SocketMember`] is always in exactly one of two roles, and only
+//! ever moves one way:
+//!
+//! ```text
+//!   member ──(walk finds every predecessor dead)──▶ coordinator
+//! ```
+//!
+//! * **member** (`coord: None`): holds a pre-bound standby listener
+//!   whose address rides every succession table. On a membership fault
+//!   it walks the table with
+//!   [`reform_via_succession`]: the first *live* entry ahead of it is
+//!   the rightful coordinator (a refused dial can only mean death —
+//!   standbys outlive every epoch), so it claims its seat there.
+//! * **coordinator** (`coord: Some`): answers claims on its listener —
+//!   the bootstrap rendezvous socket for original rank 0, the activated
+//!   standby for a promoted member. Claims from ranks *below* the
+//!   sitting coordinator are rejected, so the seat-0 invariant (the
+//!   coordinator is always the lowest live original rank) survives even
+//!   a dead rank 0 coming back from the grave.
+//!
+//! The walk returns [`ReformOutcome::Promote`] only after *observing*
+//! a refused dial to every candidate ahead — attribution alone never
+//! promotes — which makes the promotion unique: for any set of deaths,
+//! exactly one survivor (the lowest, see [`elect_coordinator`]) sees an
+//! all-dead prefix. Everyone else parks a claim at that survivor's
+//! standby and is seated when it promotes and re-forms.
 //! * [`run_elastic_seat`] — one rank's recovery loop: run
 //!   [`SimWorker::run_state`] over the current seat; on a membership
 //!   fault ([`Error::is_membership_fault`] or
@@ -45,9 +76,11 @@
 //! owns which gradient partition, never which gradients exist.
 
 use crate::cluster::net::elastic::{
-    join_ring, join_star, reform_ring_client, reform_star_client, EpochCoordinator, EpochSeat,
+    bind_standby, join_ring, join_star, reform_ring_client, reform_star_client,
+    reform_via_succession, EpochCoordinator, EpochSeat, ReformOutcome,
 };
-use crate::cluster::net::{NetCfg, RingTransport, TcpTransport};
+use crate::cluster::net::NetCfg;
+use crate::obs::{FlightRecorder, RecKind};
 use crate::cluster::ring_local::RingLocal;
 use crate::cluster::transport::{AbortOnPanic, Endpoint, LocalTransport, Transport};
 use crate::cluster::worker::{SimWorker, WorkerState};
@@ -66,10 +99,11 @@ use std::time::{Duration, Instant};
 pub struct ElasticCfg {
     /// Recover from membership faults instead of aborting the run.
     pub enabled: bool,
-    /// Deterministic fault injection: `(iteration, original rank)` at
-    /// which the rank dies ([`Error::ChaosKilled`]) — the crash is
-    /// simulated, so the victim never sends abort frames itself.
-    pub chaos_kill_at: Option<(usize, usize)>,
+    /// Deterministic fault injection schedule: `(iteration, original
+    /// rank)` sites at which a rank dies ([`Error::ChaosKilled`]) — the
+    /// crash is simulated, so a victim never sends abort frames itself.
+    /// Empty = fault-free.
+    pub chaos_kill_at: Vec<(usize, usize)>,
     /// Upper bound on re-formations before a rank gives up (a backstop
     /// against a flapping cluster re-forming forever).
     pub max_epochs: u64,
@@ -82,25 +116,51 @@ impl Default for ElasticCfg {
     fn default() -> Self {
         ElasticCfg {
             enabled: false,
-            chaos_kill_at: None,
+            chaos_kill_at: Vec::new(),
             max_epochs: 8,
             grace: Duration::from_secs(2),
         }
     }
 }
 
-/// Parse the `--chaos-kill-at ITER:RANK` form.
-pub fn parse_kill_at(s: &str) -> Result<(usize, usize)> {
-    let bad = || {
-        Error::invalid(format!(
-            "--chaos-kill-at wants ITER:RANK (e.g. 5:2), got '{s}'"
-        ))
-    };
-    let (t, r) = s.split_once(':').ok_or_else(bad)?;
-    Ok((
-        t.trim().parse().map_err(|_| bad())?,
-        r.trim().parse().map_err(|_| bad())?,
-    ))
+/// Parse a `--chaos-kill-at` schedule: comma-separated `ITER:RANK`
+/// sites (e.g. `5:2` or `4:0,8:1`). A rank may appear at most once —
+/// a chaos-killed process never comes back to be killed again.
+pub fn parse_kill_at(s: &str) -> Result<Vec<(usize, usize)>> {
+    let mut sites: Vec<(usize, usize)> = Vec::new();
+    for part in s.split(',') {
+        let bad = || {
+            Error::invalid(format!(
+                "--chaos-kill-at wants a schedule of ITER:RANK sites \
+                 (e.g. 5:2 or 4:0,8:1), got '{part}' in '{s}'"
+            ))
+        };
+        let (t, r) = part.split_once(':').ok_or_else(bad)?;
+        let site: (usize, usize) = (
+            t.trim().parse().map_err(|_| bad())?,
+            r.trim().parse().map_err(|_| bad())?,
+        );
+        if sites.iter().any(|&(_, rank)| rank == site.1) {
+            return Err(Error::invalid(format!(
+                "--chaos-kill-at names rank {} twice in '{s}': a killed \
+                 rank cannot die again",
+                site.1
+            )));
+        }
+        sites.push(site);
+    }
+    Ok(sites)
+}
+
+/// The coordinator a survivor set elects: the lowest original rank in
+/// `world` that is not in `dead`. Deterministic (a pure minimum — every
+/// survivor computes the same answer from the same inputs) and total
+/// (any world with at least one survivor elects someone; a member is
+/// excluded only by being dead). This is the function the socket
+/// succession walk realizes over the wire, one refused dial per dead
+/// predecessor.
+pub fn elect_coordinator(world: &[u32], dead: &BTreeSet<u32>) -> Option<u32> {
+    world.iter().copied().filter(|r| !dead.contains(r)).min()
 }
 
 /// Everything one rank needs to run one epoch: its dense rank, the
@@ -203,6 +263,9 @@ impl PendingSeat {
 
 struct EState {
     epoch: u64,
+    /// The elected coordinator ([`elect_coordinator`] over the current
+    /// world) — tracked so a succession is observable in the twin too.
+    coordinator: u32,
     /// Original ranks of the current epoch's members, sorted.
     world: Vec<u32>,
     /// The current epoch's transport (so a chaos kill can poison it on
@@ -253,6 +316,7 @@ impl ElasticCluster {
             ring_timeout,
             st: Mutex::new(EState {
                 epoch: 0,
+                coordinator: 0,
                 world: (0..n as u32).collect(),
                 transport,
                 dead: BTreeSet::new(),
@@ -374,6 +438,17 @@ impl ElasticCluster {
             "elastic",
             "cluster re-formed: epoch {epoch} world {world:?} resume_t {resume_t}"
         );
+        if let Some(coord) = elect_coordinator(&world, &BTreeSet::new()) {
+            if coord != st.coordinator {
+                crate::log_info!(
+                    "elastic",
+                    "CoordinatorPromoted: rank {coord} takes over from rank {} at \
+                     epoch {epoch}",
+                    st.coordinator
+                );
+                st.coordinator = coord;
+            }
+        }
         st.epoch = epoch;
         st.world = world;
         st.transport = transport;
@@ -472,24 +547,34 @@ impl Membership for ElasticCluster {
 }
 
 struct SockState {
-    /// `Some` only on original rank 0 — the retained rendezvous
-    /// listener and its parked claims.
+    /// `Some` while this member is the coordinator — the rendezvous
+    /// listener (bootstrap or activated standby) and its parked claims.
     coord: Option<EpochCoordinator>,
+    /// The pre-bound standby listener (members only; taken on
+    /// promotion, `None` once this member coordinates).
+    standby: Option<std::net::TcpListener>,
+    /// The standby listener's advertised port (0 on the coordinator).
+    standby_port: u16,
     epoch: u64,
     world: Vec<u32>,
+    /// The current epoch's succession table, seat-aligned with `world`.
+    succession: Vec<String>,
 }
 
 /// One process's membership handle in a socket cluster (star or ring),
 /// delegating to the wire protocol in
-/// [`net::elastic`](crate::cluster::net::elastic).
+/// [`net::elastic`](crate::cluster::net::elastic). Symmetric: any
+/// member can be promoted to coordinator (see the module docs).
 pub struct SocketMember {
     cfg: NetCfg,
     ring: bool,
+    grace: Duration,
+    flight: Option<Arc<FlightRecorder>>,
     st: Mutex<SockState>,
 }
 
 impl SocketMember {
-    /// Original rank 0: bind the retained rendezvous listener and form
+    /// Original rank 0: bind the bootstrap rendezvous listener and form
     /// the initial epoch.
     pub fn coordinator(
         n: usize,
@@ -497,79 +582,118 @@ impl SocketMember {
         ring: bool,
         grace: Duration,
     ) -> Result<(Self, Seat)> {
-        let coord = EpochCoordinator::bind(cfg, grace)?;
+        let mut coord = EpochCoordinator::bind(cfg, grace)?;
         let es = if ring {
             coord.form_initial_ring(n)?
         } else {
             coord.form_initial_star(n)?
         };
-        let world = es.world.clone();
         let m = SocketMember {
             cfg: cfg.clone(),
             ring,
+            grace,
+            flight: None,
             st: Mutex::new(SockState {
                 coord: Some(coord),
+                standby: None,
+                standby_port: 0,
                 epoch: 0,
-                world,
+                world: es.world.clone(),
+                succession: es.succession.clone(),
             }),
         };
         Ok((m, es.into()))
     }
 
-    /// A non-zero original rank: the ordinary epoch-0 client connect.
-    pub fn client(n: usize, orig_rank: usize, cfg: &NetCfg, ring: bool) -> Result<(Self, Seat)> {
+    /// A non-zero original rank: pre-bind the standby listener, then
+    /// claim the epoch-0 seat over the same `HelloEpoch` exchange every
+    /// later epoch uses — the succession table rides the first Welcome.
+    pub fn client(
+        n: usize,
+        orig_rank: usize,
+        cfg: &NetCfg,
+        ring: bool,
+        grace: Duration,
+    ) -> Result<(Self, Seat)> {
         if orig_rank == 0 {
             return Err(Error::invalid(
                 "original rank 0 is the coordinator; use SocketMember::coordinator",
             ));
         }
-        let tp: Arc<dyn Transport> = if ring {
-            Arc::new(RingTransport::client(n, orig_rank, cfg)?)
-        } else {
-            Arc::new(TcpTransport::client(n, orig_rank, cfg)?)
-        };
-        let world: Vec<u32> = (0..n as u32).collect();
-        let seat = Seat {
-            epoch: 0,
-            rank: orig_rank,
-            world: world.clone(),
-            resume_t: 0,
-            transport: tp,
-            sp_import: None,
-            err_restore: None,
-        };
-        let m = SocketMember {
-            cfg: cfg.clone(),
-            ring,
-            st: Mutex::new(SockState {
-                coord: None,
-                epoch: 0,
-                world,
-            }),
-        };
-        Ok((m, seat))
-    }
-
-    /// A restarted process with no seat yet: dial the coordinator and
-    /// wait out the next epoch boundary. The returned seat carries the
-    /// donor's sparsifier snapshot (a restarted process has lost its
-    /// own state).
-    pub fn rejoin(orig_rank: usize, cfg: &NetCfg, ring: bool) -> Result<(Self, Seat)> {
+        if orig_rank >= n {
+            return Err(Error::invalid(format!(
+                "original rank {orig_rank} is outside the initial world of {n}"
+            )));
+        }
+        let (standby, standby_port) = bind_standby(cfg)?;
         let es = if ring {
-            join_ring(cfg, orig_rank as u32)?
+            reform_ring_client(cfg, 0, orig_rank as u32, 0, standby_port)?
         } else {
-            join_star(cfg, orig_rank as u32)?
+            reform_star_client(cfg, 0, orig_rank as u32, 0, standby_port)?
         };
         let m = SocketMember {
             cfg: cfg.clone(),
             ring,
+            grace,
+            flight: None,
             st: Mutex::new(SockState {
                 coord: None,
-                epoch: es.epoch,
+                standby: Some(standby),
+                standby_port,
+                epoch: 0,
                 world: es.world.clone(),
+                succession: es.succession.clone(),
             }),
         };
         Ok((m, es.into()))
+    }
+
+    /// A restarted process with no seat yet: pre-bind a standby, dial
+    /// the coordinator, and wait out the next epoch boundary. The
+    /// returned seat carries the donor's sparsifier snapshot (a
+    /// restarted process has lost its own state).
+    pub fn rejoin(
+        orig_rank: usize,
+        cfg: &NetCfg,
+        ring: bool,
+        grace: Duration,
+    ) -> Result<(Self, Seat)> {
+        let (standby, standby_port) = bind_standby(cfg)?;
+        let es = if ring {
+            join_ring(cfg, orig_rank as u32, standby_port)?
+        } else {
+            join_star(cfg, orig_rank as u32, standby_port)?
+        };
+        let m = SocketMember {
+            cfg: cfg.clone(),
+            ring,
+            grace,
+            flight: None,
+            st: Mutex::new(SockState {
+                coord: None,
+                standby: Some(standby),
+                standby_port,
+                epoch: es.epoch,
+                world: es.world.clone(),
+                succession: es.succession.clone(),
+            }),
+        };
+        Ok((m, es.into()))
+    }
+
+    /// Attach a flight recorder: promotion and dial-retry events are
+    /// recorded alongside the transport's protocol events.
+    pub fn with_flight(mut self, flight: Arc<FlightRecorder>) -> Self {
+        self.flight = Some(flight);
+        self
+    }
+
+    /// The original rank seated at seat 0 of the current world — the
+    /// member that owns the run outputs (merged trace, metrics) when the
+    /// run completes. Starts as rank 0; moves only on a succession.
+    pub fn senior_rank(&self) -> u32 {
+        let st = self.st.lock().unwrap();
+        st.world.first().copied().unwrap_or(0)
     }
 }
 
@@ -583,23 +707,94 @@ impl Membership for SocketMember {
     ) -> Result<Seat> {
         let mut st = self.st.lock().unwrap();
         let epoch = st.epoch + 1;
-        let es = if st.coord.is_some() {
-            let prev_world = st.world.clone();
+        let prev_world = st.world.clone();
+        let snapshot = export.unwrap_or_default();
+        let es = if let Some(coord) = st.coord.as_mut() {
             let known_dead: Vec<u32> = lost.into_iter().collect();
-            let snapshot = export.unwrap_or_default();
-            let coord = st.coord.as_mut().expect("checked above");
             if self.ring {
                 coord.reform_ring(epoch, &prev_world, &known_dead, next_t as u64, &snapshot)?
             } else {
                 coord.reform_star(epoch, &prev_world, &known_dead, next_t as u64, &snapshot)?
             }
-        } else if self.ring {
-            reform_ring_client(&self.cfg, epoch, orig_rank as u32, next_t as u64)?
         } else {
-            reform_star_client(&self.cfg, epoch, orig_rank as u32, next_t as u64)?
+            // a member walks the succession table: the first live entry
+            // ahead of it is the coordinator (old or freshly promoted);
+            // an all-dead prefix means this member is next in line
+            let outcome = reform_via_succession(
+                &self.cfg,
+                self.ring,
+                epoch,
+                orig_rank as u32,
+                next_t as u64,
+                st.standby_port,
+                &prev_world,
+                &st.succession,
+                lost,
+                self.flight.as_deref(),
+            )?;
+            match outcome {
+                ReformOutcome::Seated(es) => es,
+                ReformOutcome::Promote => {
+                    let my_seat = prev_world
+                        .iter()
+                        .position(|&r| r == orig_rank as u32)
+                        .expect("the walk verified this rank's seat");
+                    let standby = st
+                        .standby
+                        .take()
+                        .expect("a member that can promote holds its standby");
+                    let advertised = st.succession[my_seat].clone();
+                    let mut coord = EpochCoordinator::promote(
+                        standby,
+                        orig_rank as u32,
+                        advertised,
+                        &self.cfg,
+                        self.grace,
+                    );
+                    st.standby_port = 0;
+                    crate::log_info!(
+                        "elastic",
+                        "CoordinatorPromoted: rank {orig_rank} activates its standby \
+                         as the epoch {epoch} rendezvous (old coordinator rank {} is \
+                         dead)",
+                        prev_world[0]
+                    );
+                    if let Some(fr) = &self.flight {
+                        fr.record(RecKind::CoordinatorPromoted, 0, orig_rank as u64, epoch);
+                    }
+                    // the walk proved every predecessor dead; fold in
+                    // the fault's own attribution too
+                    let mut known_dead: Vec<u32> = prev_world[..my_seat].to_vec();
+                    if let Some(l) = lost {
+                        if !known_dead.contains(&l) {
+                            known_dead.push(l);
+                        }
+                    }
+                    let es = if self.ring {
+                        coord.reform_ring(
+                            epoch,
+                            &prev_world,
+                            &known_dead,
+                            next_t as u64,
+                            &snapshot,
+                        )?
+                    } else {
+                        coord.reform_star(
+                            epoch,
+                            &prev_world,
+                            &known_dead,
+                            next_t as u64,
+                            &snapshot,
+                        )?
+                    };
+                    st.coord = Some(coord);
+                    es
+                }
+            }
         };
         st.epoch = es.epoch;
         st.world = es.world.clone();
+        st.succession = es.succession.clone();
         Ok(es.into())
     }
 
@@ -662,9 +857,9 @@ pub fn run_elastic_seat(
         }
         state.start_t = state.start_t.max(seat.resume_t);
 
-        let chaos = ecfg.chaos_kill_at;
+        let chaos = ecfg.chaos_kill_at.clone();
         let probe: Box<dyn FnMut(usize) -> Result<()> + '_> = Box::new(move |t| {
-            if chaos == Some((t, orig_rank)) {
+            if chaos.iter().any(|&(kt, kr)| kt == t && kr == orig_rank) {
                 return Err(Error::ChaosKilled { rank: orig_rank, t });
             }
             home.probe(orig_rank, t)
@@ -744,7 +939,19 @@ pub fn run_elastic_threaded(
             "elastic membership requires the sequential loop; drop --pipeline",
         ));
     }
-    if let Some((_, victim)) = ecfg.chaos_kill_at {
+    if ecfg.chaos_kill_at.len() > 1 {
+        // the thread-per-rank engine joins every rank's recovery loop
+        // at the end and selects the first surviving trace; a second
+        // kill site would silently be honored by the probe but the
+        // engine has no per-site assertions or rejoin choreography for
+        // it — reject rather than half-run the schedule
+        return Err(Error::config(format!(
+            "the in-process elastic engine supports a single --chaos-kill-at \
+             site; got a schedule of {} — use `launch` for multi-fault drills",
+            ecfg.chaos_kill_at.len()
+        )));
+    }
+    for &(_, victim) in &ecfg.chaos_kill_at {
         if victim >= n {
             return Err(Error::invalid(format!(
                 "--chaos-kill-at names rank {victim}, but the world has {n} ranks"
@@ -828,10 +1035,10 @@ mod tests {
         Ok(Box::new(ExDyna::new(n_g, nr, ExDynaCfg::default_for(nr))?))
     }
 
-    fn ecfg(kill: Option<(usize, usize)>) -> ElasticCfg {
+    fn ecfg(kill: &[(usize, usize)]) -> ElasticCfg {
         ElasticCfg {
             enabled: true,
-            chaos_kill_at: kill,
+            chaos_kill_at: kill.to_vec(),
             max_epochs: 8,
             grace: Duration::from_secs(5),
         }
@@ -839,11 +1046,30 @@ mod tests {
 
     #[test]
     fn kill_at_parses_and_rejects_garbage() {
-        assert_eq!(parse_kill_at("5:2").unwrap(), (5, 2));
-        assert_eq!(parse_kill_at(" 10 : 0 ").unwrap(), (10, 0));
+        assert_eq!(parse_kill_at("5:2").unwrap(), vec![(5, 2)]);
+        assert_eq!(parse_kill_at(" 10 : 0 ").unwrap(), vec![(10, 0)]);
+        assert_eq!(parse_kill_at("4:0,8:1").unwrap(), vec![(4, 0), (8, 1)]);
         assert!(parse_kill_at("5").is_err());
         assert!(parse_kill_at("a:b").is_err());
         assert!(parse_kill_at("5:2:1").is_err());
+        assert!(parse_kill_at("4:0,").is_err(), "trailing comma is garbage");
+        assert!(
+            parse_kill_at("4:1,8:1").is_err(),
+            "a killed rank cannot die twice"
+        );
+    }
+
+    #[test]
+    fn succession_election_is_deterministic_and_total() {
+        let world: Vec<u32> = vec![0, 1, 2, 3];
+        let dead = BTreeSet::new();
+        assert_eq!(elect_coordinator(&world, &dead), Some(0));
+        let dead: BTreeSet<u32> = [0].into();
+        assert_eq!(elect_coordinator(&world, &dead), Some(1));
+        let dead: BTreeSet<u32> = [0, 1].into();
+        assert_eq!(elect_coordinator(&world, &dead), Some(2));
+        let dead: BTreeSet<u32> = [0, 1, 2, 3].into();
+        assert_eq!(elect_coordinator(&world, &dead), None);
     }
 
     #[test]
@@ -853,7 +1079,7 @@ mod tests {
         let cfg = sim_cfg(n, 8);
         let plain = run_threaded(&g, &mk, &cfg).unwrap();
         let elastic =
-            run_elastic_threaded(&g, &mk, &cfg, ElasticFlavor::Local, &ecfg(None)).unwrap();
+            run_elastic_threaded(&g, &mk, &cfg, ElasticFlavor::Local, &ecfg(&[])).unwrap();
         assert_eq!(plain.records.len(), elastic.records.len());
         for (a, b) in plain.records.iter().zip(elastic.records.iter()) {
             assert_eq!(a.t, b.t);
@@ -872,7 +1098,7 @@ mod tests {
         let g = gen(n);
         let cfg = sim_cfg(n, iters);
         let trace =
-            run_elastic_threaded(&g, &mk, &cfg, ElasticFlavor::Local, &ecfg(Some((5, 2)))).unwrap();
+            run_elastic_threaded(&g, &mk, &cfg, ElasticFlavor::Local, &ecfg(&[(5, 2)])).unwrap();
         // the transition may cost each survivor the record of the
         // iteration the fault interrupted
         assert!(
@@ -899,10 +1125,64 @@ mod tests {
         let g = gen(n);
         let cfg = sim_cfg(n, iters);
         let trace =
-            run_elastic_threaded(&g, &mk, &cfg, ElasticFlavor::Ring, &ecfg(Some((4, 1)))).unwrap();
+            run_elastic_threaded(&g, &mk, &cfg, ElasticFlavor::Ring, &ecfg(&[(4, 1)])).unwrap();
         assert!(trace.records.len() >= iters - 2);
         assert_eq!(trace.records.last().unwrap().t, iters - 1);
         assert_eq!(trace.records.last().unwrap().epoch, 1);
+    }
+
+    /// The coordinator is a casualty like any other in the in-process
+    /// twin: killing original rank 0 promotes rank 1 and the survivors
+    /// finish the run at epoch 1.
+    #[test]
+    fn survivors_outlive_a_rank0_kill_on_the_local_flavor() {
+        let n = 4;
+        let iters = 12;
+        let g = gen(n);
+        let cfg = sim_cfg(n, iters);
+        let trace =
+            run_elastic_threaded(&g, &mk, &cfg, ElasticFlavor::Local, &ecfg(&[(5, 0)])).unwrap();
+        assert!(trace.records.len() >= iters - 2);
+        assert_eq!(trace.records.last().unwrap().t, iters - 1);
+        assert_eq!(
+            trace.records.last().unwrap().epoch,
+            1,
+            "survivors re-form after the coordinator's death"
+        );
+    }
+
+    #[test]
+    fn survivors_outlive_a_rank0_kill_on_the_ring_flavor() {
+        let n = 3;
+        let iters = 10;
+        let g = gen(n);
+        let cfg = sim_cfg(n, iters);
+        let trace =
+            run_elastic_threaded(&g, &mk, &cfg, ElasticFlavor::Ring, &ecfg(&[(4, 0)])).unwrap();
+        assert!(trace.records.len() >= iters - 2);
+        assert_eq!(trace.records.last().unwrap().t, iters - 1);
+        assert_eq!(trace.records.last().unwrap().epoch, 1);
+    }
+
+    /// The in-process engine honors exactly one kill site; a longer
+    /// schedule is a typed config error, not a silently dropped tail.
+    #[test]
+    fn a_multi_site_schedule_is_rejected_in_process() {
+        let n = 4;
+        let g = gen(n);
+        let cfg = sim_cfg(n, 12);
+        let err = run_elastic_threaded(
+            &g,
+            &mk,
+            &cfg,
+            ElasticFlavor::Local,
+            &ecfg(&[(4, 0), (8, 1)]),
+        )
+        .unwrap_err();
+        assert!(
+            matches!(err, Error::Config(_)),
+            "expected Error::Config, got {err:?}"
+        );
     }
 
     #[test]
@@ -918,7 +1198,7 @@ mod tests {
             })
             .unwrap(),
         );
-        let e = ecfg(Some((kill_t, 1)));
+        let e = ecfg(&[(kill_t, 1)]);
         let results: Vec<Result<Vec<IterRecord>>> = std::thread::scope(|s| {
             let mut handles = Vec::new();
             for rank in 0..n {
@@ -938,7 +1218,7 @@ mod tests {
             let cfg = &cfg;
             let g = &g;
             let e2 = ElasticCfg {
-                chaos_kill_at: None,
+                chaos_kill_at: Vec::new(),
                 ..e.clone()
             };
             handles.push(s.spawn(move || {

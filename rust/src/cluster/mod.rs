@@ -106,8 +106,8 @@ pub mod transport;
 pub mod worker;
 
 pub use elastic::{
-    parse_kill_at, run_elastic_seat, run_elastic_threaded, ElasticCfg, ElasticCluster,
-    ElasticFlavor, Membership, Seat, SocketMember,
+    elect_coordinator, parse_kill_at, run_elastic_seat, run_elastic_threaded, ElasticCfg,
+    ElasticCluster, ElasticFlavor, Membership, Seat, SocketMember,
 };
 pub use engine::{
     run_rank_on_transport, run_rank_on_transport_obs, run_threaded, run_threaded_obs,

@@ -48,8 +48,12 @@ pub const MAGIC: u32 = 0x4558_4459;
 /// [`Frame::SparseShard`] ring hop; v5 added elastic membership: the
 /// [`Frame::Abort`] rank/generation stamp and the epoch re-rendezvous
 /// frames [`Frame::HelloEpoch`], [`Frame::WelcomeEpoch`],
-/// [`Frame::HelloJoin`]).
-pub const PROTOCOL_VERSION: u16 = 5;
+/// [`Frame::HelloJoin`]; v6 added coordinator succession: the hello
+/// frames advertise the claimant's pre-bound standby listener port and
+/// [`Frame::WelcomeEpoch`] carries the ordered succession address list
+/// every member re-rendezvouses against when the coordinator itself
+/// dies).
+pub const PROTOCOL_VERSION: u16 = 6;
 
 /// Sentinel for [`Frame::Abort`]'s `rank` when the aborting rank is
 /// unknown (e.g. a poison observed without an identified source).
@@ -183,6 +187,10 @@ pub enum Frame {
         next_t: u64,
         /// Port of the sender's new ring listener (0 for the star).
         port: u16,
+        /// Port of the sender's pre-bound standby listener (protocol
+        /// v6) — the socket it would coordinate the next epoch on if
+        /// promoted. 0 = no standby advertised (never promotable).
+        standby_port: u16,
     },
     /// Late joiner → coordinator (protocol v5): ask to be seated at the
     /// next epoch boundary. The coordinator parks the claim and forces
@@ -192,12 +200,17 @@ pub enum Frame {
         orig_rank: u32,
         /// Port of the joiner's new ring listener (0 for the star).
         port: u16,
+        /// Port of the joiner's pre-bound standby listener (protocol
+        /// v6, see [`Frame::HelloEpoch::standby_port`]).
+        standby_port: u16,
     },
-    /// Coordinator → member: the epoch is formed (protocol v5). Carries
-    /// the member's new dense rank, the full membership (original ranks
-    /// in seat order), the iteration the epoch resumes at, the member's
-    /// right-neighbor address (ring only, empty for the star) and a
-    /// sparsifier state snapshot for joiners (empty for survivors).
+    /// Coordinator → member: the epoch is formed (protocol v5; v6 adds
+    /// the succession list). Carries the member's new dense rank, the
+    /// full membership (original ranks in seat order), the iteration
+    /// the epoch resumes at, the member's right-neighbor address (ring
+    /// only, empty for the star), a sparsifier state snapshot for
+    /// joiners (empty for survivors), and the ordered coordinator
+    /// succession list.
     WelcomeEpoch {
         /// The epoch just formed.
         epoch: u64,
@@ -211,6 +224,13 @@ pub enum Frame {
         right_addr: String,
         /// Opaque sparsifier state for joiners (empty for survivors).
         snapshot: Vec<u8>,
+        /// Coordinator succession (protocol v6), indexed by seat: entry
+        /// `i` is the `host:port` the member at seat `i` would
+        /// coordinate the next re-rendezvous on — the current
+        /// coordinator's own rendezvous address at its seat, each other
+        /// member's standby listener at theirs ("" = that member
+        /// advertised no standby and is skipped in the walk).
+        succession: Vec<String>,
     },
 }
 
@@ -588,16 +608,23 @@ fn encode_payload_into(frame: &Frame, buf: &mut Vec<u8>) -> u8 {
             orig_rank,
             next_t,
             port,
+            standby_port,
         } => {
             put_u64(buf, *epoch);
             put_u32(buf, *orig_rank);
             put_u64(buf, *next_t);
             put_u16(buf, *port);
+            put_u16(buf, *standby_port);
             KIND_HELLO_EPOCH
         }
-        Frame::HelloJoin { orig_rank, port } => {
+        Frame::HelloJoin {
+            orig_rank,
+            port,
+            standby_port,
+        } => {
             put_u32(buf, *orig_rank);
             put_u16(buf, *port);
+            put_u16(buf, *standby_port);
             KIND_HELLO_JOIN
         }
         Frame::WelcomeEpoch {
@@ -607,6 +634,7 @@ fn encode_payload_into(frame: &Frame, buf: &mut Vec<u8>) -> u8 {
             resume_t,
             right_addr,
             snapshot,
+            succession,
         } => {
             put_u64(buf, *epoch);
             put_u32(buf, *rank);
@@ -618,6 +646,12 @@ fn encode_payload_into(frame: &Frame, buf: &mut Vec<u8>) -> u8 {
             buf.extend_from_slice(addr);
             put_u32(buf, snapshot.len() as u32);
             buf.extend_from_slice(snapshot);
+            put_u32(buf, succession.len() as u32);
+            for entry in succession {
+                let bytes = entry.as_bytes();
+                put_u32(buf, bytes.len() as u32);
+                buf.extend_from_slice(bytes);
+            }
             KIND_WELCOME_EPOCH
         }
     }
@@ -714,19 +748,25 @@ fn decode_payload(kind: u8, payload: &[u8]) -> Result<Frame> {
             let orig_rank = c.u32("hello-epoch rank")?;
             let next_t = c.u64("hello-epoch next_t")?;
             let b = c.take(2, "hello-epoch port")?;
+            let port = u16::from_le_bytes([b[0], b[1]]);
+            let s = c.take(2, "hello-epoch standby port")?;
             Frame::HelloEpoch {
                 epoch,
                 orig_rank,
                 next_t,
-                port: u16::from_le_bytes([b[0], b[1]]),
+                port,
+                standby_port: u16::from_le_bytes([s[0], s[1]]),
             }
         }
         KIND_HELLO_JOIN => {
             let orig_rank = c.u32("hello-join rank")?;
             let b = c.take(2, "hello-join port")?;
+            let port = u16::from_le_bytes([b[0], b[1]]);
+            let s = c.take(2, "hello-join standby port")?;
             Frame::HelloJoin {
                 orig_rank,
-                port: u16::from_le_bytes([b[0], b[1]]),
+                port,
+                standby_port: u16::from_le_bytes([s[0], s[1]]),
             }
         }
         KIND_WELCOME_EPOCH => {
@@ -745,6 +785,24 @@ fn decode_payload(kind: u8, payload: &[u8]) -> Result<Frame> {
                 .map_err(|_| Error::protocol("welcome-epoch addr is not UTF-8"))?;
             let slen = c.u32("welcome-epoch snapshot length")? as usize;
             let snapshot = c.take(slen, "welcome-epoch snapshot")?.to_vec();
+            let sn = c.u32("welcome-epoch succession size")? as usize;
+            // each entry needs at least its 4-byte length prefix, so a
+            // corrupt count is rejected before the Vec is sized from it
+            c.require(
+                sn.checked_mul(4)
+                    .ok_or_else(|| Error::protocol("welcome-epoch succession size overflows"))?,
+                "welcome-epoch succession",
+            )?;
+            let mut succession = Vec::with_capacity(sn);
+            for _ in 0..sn {
+                let elen = c.u32("welcome-epoch succession entry length")? as usize;
+                let ebytes = c.take(elen, "welcome-epoch succession entry")?;
+                succession.push(
+                    String::from_utf8(ebytes.to_vec()).map_err(|_| {
+                        Error::protocol("welcome-epoch succession entry is not UTF-8")
+                    })?,
+                );
+            }
             Frame::WelcomeEpoch {
                 epoch,
                 rank,
@@ -752,6 +810,7 @@ fn decode_payload(kind: u8, payload: &[u8]) -> Result<Frame> {
                 resume_t,
                 right_addr,
                 snapshot,
+                succession,
             }
         }
         other => return Err(Error::protocol(format!("unknown frame kind {other}"))),
@@ -1073,10 +1132,12 @@ mod tests {
                     orig_rank: rng.usize(64) as u32,
                     next_t: rng.next_u64(),
                     port: rng.next_u64() as u16,
+                    standby_port: rng.next_u64() as u16,
                 },
                 11 => Frame::HelloJoin {
                     orig_rank: rng.usize(64) as u32,
                     port: rng.next_u64() as u16,
+                    standby_port: rng.next_u64() as u16,
                 },
                 12 => Frame::WelcomeEpoch {
                     epoch: rng.next_u64(),
@@ -1089,6 +1150,15 @@ mod tests {
                         format!("127.0.0.1:{}", rng.next_u64() as u16)
                     },
                     snapshot: (0..rng.usize(32)).map(|_| rng.next_u64() as u8).collect(),
+                    succession: (0..rng.usize(6))
+                        .map(|_| {
+                            if rng.usize(4) == 0 {
+                                String::new()
+                            } else {
+                                format!("127.0.0.1:{}", rng.next_u64() as u16)
+                            }
+                        })
+                        .collect(),
                 },
                 8 => Frame::Shard {
                     generation: rng.next_u64(),
@@ -1662,10 +1732,12 @@ mod tests {
                 orig_rank: 2,
                 next_t: 17,
                 port: 45_021,
+                standby_port: 45_022,
             },
             Frame::HelloJoin {
                 orig_rank: 2,
                 port: 0,
+                standby_port: 39_999,
             },
             Frame::WelcomeEpoch {
                 epoch: 3,
@@ -1674,6 +1746,11 @@ mod tests {
                 resume_t: 17,
                 right_addr: "127.0.0.1:29501".to_string(),
                 snapshot: vec![1, 2, 3, 4],
+                succession: vec![
+                    "127.0.0.1:29500".to_string(),
+                    "127.0.0.1:40001".to_string(),
+                    String::new(),
+                ],
             },
             Frame::WelcomeEpoch {
                 epoch: 1,
@@ -1682,6 +1759,7 @@ mod tests {
                 resume_t: 0,
                 right_addr: String::new(),
                 snapshot: Vec::new(),
+                succession: Vec::new(),
             },
             Frame::Abort {
                 rank: ABORT_RANK_UNKNOWN,

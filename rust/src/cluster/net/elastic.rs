@@ -1,23 +1,43 @@
-//! Epoch re-formation for the socket transports (protocol v5).
+//! Epoch re-formation for the socket transports (protocol v6).
 //!
 //! One process dies and the survivors re-form instead of aborting: that
-//! is the whole module. The bootstrap coordinator (original rank 0 — it
-//! must outlive the run; chaos tooling refuses to kill it) binds the
-//! rendezvous address ONCE, in an [`EpochCoordinator`], and keeps the
-//! listener across membership epochs. Epoch 0 is the ordinary star/ring
-//! rendezvous run over that retained listener. When a rank dies
-//! mid-round, every survivor's collective fails with a typed membership
-//! fault ([`Error::PeerLost`](crate::error::Error::PeerLost) /
+//! is the whole module. The current coordinator (original rank 0 at
+//! first; any member after a succession) binds a rendezvous listener
+//! ONCE, in an [`EpochCoordinator`], and keeps it across membership
+//! epochs. Epoch 0 under the elastic path is formed through the same
+//! [`Frame::HelloEpoch`]/[`Frame::WelcomeEpoch`] exchange as every
+//! re-formation, so the succession table below rides every seating.
+//! When a rank dies mid-round, every survivor's collective fails with a
+//! typed membership fault
+//! ([`Error::PeerLost`](crate::error::Error::PeerLost) /
 //! [`Error::Poisoned`](crate::error::Error::Poisoned)); survivors drain
-//! the poisoned transport, reconnect to the SAME coordinator address,
-//! and claim a seat in epoch `e + 1` with [`Frame::HelloEpoch`]. The
-//! coordinator collects claims until every expected survivor has
-//! arrived or a grace window expires — non-arrivals are declared dead —
-//! then answers each member with [`Frame::WelcomeEpoch`]: its new dense
-//! rank, the membership table (original ranks in seat order), the
-//! iteration to resume from (the max of the survivors' `next_t`, so no
-//! completed work is replayed), and, on the ring, its right neighbor's
-//! address.
+//! the poisoned transport, re-rendezvous (see below), and claim a seat
+//! in epoch `e + 1` with [`Frame::HelloEpoch`]. The coordinator
+//! collects claims until every expected survivor has arrived or a grace
+//! window expires — non-arrivals are declared dead — then answers each
+//! member with [`Frame::WelcomeEpoch`]: its new dense rank, the
+//! membership table (original ranks in seat order), the iteration to
+//! resume from (the max of the survivors' `next_t`, so no completed
+//! work is replayed), on the ring its right neighbor's address, and the
+//! coordinator succession table.
+//!
+//! Coordinator succession (protocol v6): the coordinator is no longer a
+//! fixed process. Every member pre-binds one *standby* listener for the
+//! life of its process and advertises the port in each claim; each
+//! `WelcomeEpoch` carries the seat-ordered succession table — the
+//! coordinator's own rendezvous address at seat 0, every other member's
+//! standby address at its seat. After a fault, survivors walk that
+//! table in order with [`reform_via_succession`]: each entry is dialed
+//! with bounded exponential backoff, a live entry's (pre-bound) standby
+//! listener accepts the claim and the survivor simply waits to be
+//! seated, while a dead entry refuses the dial and the walk moves on.
+//! A survivor that reaches its own seat with every earlier entry dead
+//! returns [`ReformOutcome::Promote`]: it is the lowest-ranked live
+//! member, so it — deterministically and uniquely — converts its
+//! standby listener into the new [`EpochCoordinator`]
+//! ([`EpochCoordinator::promote`]) and forms the epoch from the
+//! membership snapshot it already holds. A dead rank 0 therefore costs
+//! one epoch, not the run.
 //!
 //! Transport rebuild, not repair: a re-formation constructs a brand-new
 //! [`TcpTransport`]/[`RingTransport`] stamped with the new epoch, so
@@ -36,10 +56,10 @@
 
 use crate::cluster::net::codec::{read_frame, write_frame, Frame};
 use crate::cluster::net::handshake::{
-    bind_with_retry, hub_rendezvous_on, set_round_timeouts, NetCfg,
+    bind_with_retry, dial_with_backoff, set_round_timeouts, DialBackoff, NetCfg,
 };
 use crate::cluster::net::ring::{
-    accept_left, coordinate_ring_on, dial_right, host_of, substitute_wildcard_host,
+    accept_left, dial_right, host_of, substitute_wildcard_host,
     wildcard_listen_addr, RingTransport,
 };
 use crate::cluster::net::tcp::TcpTransport;
@@ -62,6 +82,11 @@ pub struct EpochSeat {
     pub resume_t: u64,
     /// Sparsifier state snapshot (non-empty only for late joiners).
     pub snapshot: Vec<u8>,
+    /// Coordinator succession table, seat-indexed and aligned with
+    /// `world`: the address the member at each seat would coordinate
+    /// the next re-rendezvous on ("" = no standby advertised). Walked
+    /// by [`reform_via_succession`] when the coordinator itself dies.
+    pub succession: Vec<String>,
     /// The freshly built transport, stamped with `epoch`.
     pub transport: Arc<dyn Transport>,
 }
@@ -72,6 +97,7 @@ enum Parked {
     Joiner {
         orig_rank: u32,
         port: u16,
+        standby_port: u16,
         stream: TcpStream,
     },
     /// A [`Frame::HelloEpoch`] that raced ahead of the coordinator's
@@ -80,6 +106,7 @@ enum Parked {
         orig_rank: u32,
         next_t: u64,
         port: u16,
+        standby_port: u16,
         stream: TcpStream,
     },
 }
@@ -96,6 +123,9 @@ impl Parked {
 struct Arrival {
     next_t: u64,
     port: u16,
+    /// Advertised standby listener port (0 = none), paired with the
+    /// claim stream's source IP to build the succession table.
+    standby_port: u16,
     stream: TcpStream,
     /// `true` for a fresh joiner (gets the state snapshot), `false`
     /// for a survivor carrying its own state forward.
@@ -105,18 +135,26 @@ struct Arrival {
 /// The coordinator's decision for one epoch: who sits where, and from
 /// which iteration the epoch resumes.
 struct EpochPlan {
-    /// Original ranks by new dense rank; `world[0] == 0` always.
+    /// Original ranks by new dense rank; seat 0 is always the current
+    /// coordinator (the lowest live original rank).
     world: Vec<u32>,
     resume_t: u64,
     /// Claims by original rank (the coordinator itself is absent).
     members: BTreeMap<u32, Arrival>,
 }
 
-/// Original rank 0's persistent half of the elastic protocol: the
-/// retained rendezvous listener plus any claims parked between epochs.
+/// The current coordinator's persistent half of the elastic protocol:
+/// the retained rendezvous listener plus any claims parked between
+/// epochs. Originally rank 0's; after a succession, the promoted
+/// member's activated standby listener.
 pub struct EpochCoordinator {
     listener: TcpListener,
     cfg: NetCfg,
+    /// This coordinator's original rank (0 until a succession).
+    my_orig: u32,
+    /// The address members dial this coordinator's `listener` on — its
+    /// own entry in the succession tables it publishes.
+    advertised_addr: String,
     /// How long a reform waits for missing survivors before declaring
     /// them dead. All survivors fail the same round, so they arrive
     /// within milliseconds of each other; the window only runs out when
@@ -135,57 +173,96 @@ impl EpochCoordinator {
         Ok(EpochCoordinator {
             listener,
             cfg: cfg.clone(),
+            my_orig: 0,
+            advertised_addr: cfg.coord_addr.clone(),
             grace,
             parked: Vec::new(),
         })
     }
 
-    /// Epoch 0, star: the ordinary hub rendezvous over the retained
-    /// listener; the rendezvous streams become the data-path streams.
-    pub fn form_initial_star(&self, n: usize) -> Result<EpochSeat> {
-        if n == 0 {
-            return Err(Error::invalid("world size must be >= 1"));
+    /// Succession takeover: a promoted member's pre-bound standby
+    /// listener becomes the new epoch rendezvous. `advertised_addr` is
+    /// this member's own entry from the succession table it was seated
+    /// with — the address every other survivor walks to, and the entry
+    /// published for seat 0 of the tables this coordinator forms.
+    pub fn promote(
+        standby: TcpListener,
+        my_orig: u32,
+        advertised_addr: String,
+        cfg: &NetCfg,
+        grace: Duration,
+    ) -> Self {
+        EpochCoordinator {
+            listener: standby,
+            cfg: cfg.clone(),
+            my_orig,
+            advertised_addr,
+            grace,
+            parked: Vec::new(),
         }
-        let peers = hub_rendezvous_on(&self.listener, n, &self.cfg)?;
-        let tp = TcpTransport::hub_from_parts(n, peers, 0)?;
-        Ok(EpochSeat {
-            epoch: 0,
-            rank: 0,
-            world: (0..n as u32).collect(),
-            resume_t: 0,
-            snapshot: Vec::new(),
-            transport: Arc::new(tp),
-        })
     }
 
-    /// Epoch 0, ring: the ordinary ring bootstrap over the retained
-    /// listener, then dial-right / accept-left as usual.
-    pub fn form_initial_ring(&self, n: usize) -> Result<EpochSeat> {
+    /// This coordinator's original rank.
+    pub fn orig_rank(&self) -> u32 {
+        self.my_orig
+    }
+
+    /// Host this coordinator binds fresh (ring) listeners on: the host
+    /// members reach it at, falling back to the bootstrap rendezvous
+    /// host while the advertised address carries a wildcard.
+    fn bind_host(&self) -> &str {
+        let h = host_of(&self.advertised_addr);
+        if h == "0.0.0.0" || h == "[::]" {
+            host_of(&self.cfg.coord_addr)
+        } else {
+            h
+        }
+    }
+
+    /// The seat-ordered succession table for `world`: this
+    /// coordinator's own rendezvous address at its seat, each member's
+    /// standby address (claim-stream source IP + advertised port) at
+    /// theirs.
+    fn succession_for(&self, world: &[u32], members: &BTreeMap<u32, Arrival>) -> Result<Vec<String>> {
+        world
+            .iter()
+            .map(|&orig| {
+                if orig == self.my_orig {
+                    return Ok(self.advertised_addr.clone());
+                }
+                let arr = members
+                    .get(&orig)
+                    .expect("world was built from the member set");
+                if arr.standby_port == 0 {
+                    return Ok(String::new());
+                }
+                let ip = arr.stream.peer_addr()?.ip();
+                Ok(SocketAddr::new(ip, arr.standby_port).to_string())
+            })
+            .collect()
+    }
+
+    /// Epoch 0, star: the epoch rendezvous over the retained listener
+    /// with a complete world required — every rank in `1..n` must claim
+    /// before the connect timeout. Runs the same
+    /// `HelloEpoch`/`WelcomeEpoch` exchange as every re-formation so
+    /// the succession table rides the initial seating too.
+    pub fn form_initial_star(&mut self, n: usize) -> Result<EpochSeat> {
         if n == 0 {
             return Err(Error::invalid("world size must be >= 1"));
         }
-        let tp: Arc<dyn Transport> = if n == 1 {
-            Arc::new(RingTransport::linkless(1, 0, 0))
-        } else {
-            let host = host_of(&self.cfg.coord_addr);
-            let ring_listener = TcpListener::bind(format!("{host}:0")).map_err(|e| {
-                Error::net(format!("rank 0 cannot bind its ring listener on {host}: {e}"))
-            })?;
-            let my_ring_addr = ring_listener.local_addr()?.to_string();
-            let addrs = coordinate_ring_on(&self.listener, n, &self.cfg, &my_ring_addr)?;
-            let deadline = Instant::now() + self.cfg.connect_timeout;
-            let right = dial_right(&addrs[1], 0, deadline, &self.cfg)?;
-            let left = accept_left(&ring_listener, n - 1, deadline, &self.cfg)?;
-            Arc::new(RingTransport::assemble(n, 0, right, left, 0)?)
-        };
-        Ok(EpochSeat {
-            epoch: 0,
-            rank: 0,
-            world: (0..n as u32).collect(),
-            resume_t: 0,
-            snapshot: Vec::new(),
-            transport: tp,
-        })
+        let world0: Vec<u32> = (0..n as u32).collect();
+        self.star_epoch(0, &world0, &[], 0, &[], true)
+    }
+
+    /// Epoch 0, ring: like [`EpochCoordinator::form_initial_star`] but
+    /// the members re-link as a ring from the advertised table.
+    pub fn form_initial_ring(&mut self, n: usize) -> Result<EpochSeat> {
+        if n == 0 {
+            return Err(Error::invalid("world size must be >= 1"));
+        }
+        let world0: Vec<u32> = (0..n as u32).collect();
+        self.ring_epoch(0, &world0, &[], 0, &[], true)
     }
 
     /// Iteration-start probe: drain the retained listener without
@@ -205,13 +282,18 @@ impl EpochCoordinator {
                     stream.set_write_timeout(Some(self.cfg.io_timeout))?;
                     let mut stream = stream;
                     match read_frame(&mut stream) {
-                        Ok(Frame::HelloJoin { orig_rank, port }) if orig_rank != 0 => {
+                        Ok(Frame::HelloJoin {
+                            orig_rank,
+                            port,
+                            standby_port,
+                        }) if orig_rank > self.my_orig => {
                             // a reconnect supersedes an older claim for
                             // the same rank (the old process is gone)
                             self.parked.retain(|p| p.orig_rank() != orig_rank);
                             self.parked.push(Parked::Joiner {
                                 orig_rank,
                                 port,
+                                standby_port,
                                 stream,
                             });
                         }
@@ -219,13 +301,15 @@ impl EpochCoordinator {
                             orig_rank,
                             next_t,
                             port,
+                            standby_port,
                             ..
-                        }) if orig_rank != 0 => {
+                        }) if orig_rank > self.my_orig => {
                             self.parked.retain(|p| p.orig_rank() != orig_rank);
                             self.parked.push(Parked::Survivor {
                                 orig_rank,
                                 next_t,
                                 port,
+                                standby_port,
                                 stream,
                             });
                         }
@@ -253,17 +337,21 @@ impl EpochCoordinator {
 
     /// Collect the claims for `epoch`: parked claims first, then the
     /// retained listener until every expected survivor has arrived or
-    /// the grace window expires. `prev_world` is the previous epoch's
+    /// the window expires. `prev_world` is the previous epoch's
     /// membership (original ranks); `known_dead` are ranks the caller
     /// already knows are gone (from the typed fault's attribution), so
     /// a fully attributed failure re-forms without waiting out the
-    /// grace window.
+    /// grace window. `initial` switches the window semantics: the
+    /// initial formation waits the full connect timeout, requires every
+    /// expected rank, and admits no one else; a reform waits only the
+    /// grace window and seats whoever shows up.
     fn collect(
         &mut self,
         epoch: u64,
         prev_world: &[u32],
         known_dead: &[u32],
         my_next_t: u64,
+        initial: bool,
     ) -> Result<EpochPlan> {
         let mut members: BTreeMap<u32, Arrival> = BTreeMap::new();
         for p in self.parked.drain(..) {
@@ -271,6 +359,7 @@ impl EpochCoordinator {
                 Parked::Joiner {
                     orig_rank,
                     port,
+                    standby_port,
                     stream,
                 } => {
                     members.insert(
@@ -278,6 +367,7 @@ impl EpochCoordinator {
                         Arrival {
                             next_t: 0,
                             port,
+                            standby_port,
                             stream,
                             fresh: true,
                         },
@@ -287,6 +377,7 @@ impl EpochCoordinator {
                     orig_rank,
                     next_t,
                     port,
+                    standby_port,
                     stream,
                 } => {
                     members.insert(
@@ -294,6 +385,7 @@ impl EpochCoordinator {
                         Arrival {
                             next_t,
                             port,
+                            standby_port,
                             stream,
                             fresh: false,
                         },
@@ -304,17 +396,29 @@ impl EpochCoordinator {
         let expected: Vec<u32> = prev_world
             .iter()
             .copied()
-            .filter(|&r| r != 0 && !known_dead.contains(&r))
+            .filter(|&r| r != self.my_orig && !known_dead.contains(&r))
             .collect();
         self.listener.set_nonblocking(true)?;
-        let start = Instant::now();
-        let grace_deadline = start + self.grace;
+        let window = if initial { self.cfg.connect_timeout } else { self.grace };
+        let deadline = Instant::now() + window;
         loop {
             if expected.iter().all(|r| members.contains_key(r)) {
                 break;
             }
-            let remaining = grace_deadline.saturating_duration_since(Instant::now());
+            let remaining = deadline.saturating_duration_since(Instant::now());
             if remaining.is_zero() {
+                if initial {
+                    let absent: Vec<String> = expected
+                        .iter()
+                        .filter(|r| !members.contains_key(r))
+                        .map(|r| r.to_string())
+                        .collect();
+                    return Err(Error::net(format!(
+                        "epoch rendezvous timed out after {window:?}: still waiting \
+                         for rank(s) {}",
+                        absent.join(", ")
+                    )));
+                }
                 // whoever is still missing is dead: the survivors form
                 // the epoch without them
                 break;
@@ -333,13 +437,28 @@ impl EpochCoordinator {
                             orig_rank,
                             next_t,
                             port,
+                            standby_port,
                         }) => {
                             let reject = if e != epoch {
                                 Some(format!(
                                     "coordinator is forming epoch {epoch}, claim wants {e}"
                                 ))
-                            } else if orig_rank == 0 {
-                                Some("rank 0 is the coordinator".to_string())
+                            } else if orig_rank == self.my_orig {
+                                Some(format!("rank {orig_rank} is the coordinator"))
+                            } else if orig_rank < self.my_orig {
+                                // seat 0 must stay the lowest original
+                                // rank: a lower rank coming back after a
+                                // succession would displace the sitting
+                                // coordinator
+                                Some(format!(
+                                    "rank {orig_rank} precedes coordinator rank {} in the \
+                                     succession order",
+                                    self.my_orig
+                                ))
+                            } else if initial && !expected.contains(&orig_rank) {
+                                Some(format!(
+                                    "rank {orig_rank} is not part of the initial world"
+                                ))
                             } else if members.contains_key(&orig_rank) {
                                 Some(format!("rank {orig_rank} already claimed this epoch"))
                             } else {
@@ -355,6 +474,7 @@ impl EpochCoordinator {
                                         Arrival {
                                             next_t,
                                             port,
+                                            standby_port,
                                             stream,
                                             fresh: false,
                                         },
@@ -362,7 +482,11 @@ impl EpochCoordinator {
                                 }
                             }
                         }
-                        Ok(Frame::HelloJoin { orig_rank, port }) if orig_rank != 0 => {
+                        Ok(Frame::HelloJoin {
+                            orig_rank,
+                            port,
+                            standby_port,
+                        }) if orig_rank > self.my_orig && !initial => {
                             // a joiner landing inside the window is
                             // seated right away
                             if !members.contains_key(&orig_rank) {
@@ -371,6 +495,7 @@ impl EpochCoordinator {
                                     Arrival {
                                         next_t: 0,
                                         port,
+                                        standby_port,
                                         stream,
                                         fresh: true,
                                     },
@@ -399,7 +524,7 @@ impl EpochCoordinator {
             }
         }
         let mut world: Vec<u32> = Vec::with_capacity(members.len() + 1);
-        world.push(0);
+        world.push(self.my_orig);
         world.extend(members.keys().copied());
         world.sort_unstable();
         let resume_t = members
@@ -426,12 +551,39 @@ impl EpochCoordinator {
         my_next_t: u64,
         snapshot: &[u8],
     ) -> Result<EpochSeat> {
-        let plan = self.collect(epoch, prev_world, known_dead, my_next_t)?;
+        self.star_epoch(epoch, prev_world, known_dead, my_next_t, snapshot, false)
+    }
+
+    /// Re-form the ring at `epoch`: collect the claims, advertise the
+    /// new neighbor table, drop the rendezvous streams, and re-link.
+    pub fn reform_ring(
+        &mut self,
+        epoch: u64,
+        prev_world: &[u32],
+        known_dead: &[u32],
+        my_next_t: u64,
+        snapshot: &[u8],
+    ) -> Result<EpochSeat> {
+        self.ring_epoch(epoch, prev_world, known_dead, my_next_t, snapshot, false)
+    }
+
+    fn star_epoch(
+        &mut self,
+        epoch: u64,
+        prev_world: &[u32],
+        known_dead: &[u32],
+        my_next_t: u64,
+        snapshot: &[u8],
+        initial: bool,
+    ) -> Result<EpochSeat> {
+        let plan = self.collect(epoch, prev_world, known_dead, my_next_t, initial)?;
         let n = plan.world.len();
+        let succession = self.succession_for(&plan.world, &plan.members)?;
+        let my_seat = self.my_seat(&plan.world);
         let mut members = plan.members;
         let mut peers: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
         for (new_rank, &orig) in plan.world.iter().enumerate() {
-            if orig == 0 {
+            if orig == self.my_orig {
                 continue;
             }
             let mut arr = members
@@ -450,6 +602,7 @@ impl EpochCoordinator {
                     } else {
                         Vec::new()
                     },
+                    succession: succession.clone(),
                 },
             )?;
             set_round_timeouts(&arr.stream, &self.cfg)?;
@@ -458,33 +611,37 @@ impl EpochCoordinator {
         let tp = TcpTransport::hub_from_parts(n, peers, epoch)?;
         Ok(EpochSeat {
             epoch,
-            rank: 0,
+            rank: my_seat,
             world: plan.world,
             resume_t: plan.resume_t,
             snapshot: Vec::new(),
+            succession,
             transport: Arc::new(tp),
         })
     }
 
-    /// Re-form the ring at `epoch`: collect the claims, advertise the
-    /// new neighbor table, drop the rendezvous streams, and re-link.
-    pub fn reform_ring(
+    fn ring_epoch(
         &mut self,
         epoch: u64,
         prev_world: &[u32],
         known_dead: &[u32],
         my_next_t: u64,
         snapshot: &[u8],
+        initial: bool,
     ) -> Result<EpochSeat> {
-        let plan = self.collect(epoch, prev_world, known_dead, my_next_t)?;
+        let plan = self.collect(epoch, prev_world, known_dead, my_next_t, initial)?;
         let n = plan.world.len();
+        let succession = self.succession_for(&plan.world, &plan.members)?;
+        let my_seat = self.my_seat(&plan.world);
         let mut members = plan.members;
         let tp: Arc<dyn Transport> = if n == 1 {
             Arc::new(RingTransport::linkless(1, 0, epoch))
         } else {
-            let host = host_of(&self.cfg.coord_addr);
+            let host = self.bind_host();
             let ring_listener = TcpListener::bind(format!("{host}:0")).map_err(|e| {
-                Error::net(format!("rank 0 cannot bind its ring listener on {host}: {e}"))
+                Error::net(format!(
+                    "the coordinator cannot bind its ring listener on {host}: {e}"
+                ))
             })?;
             let my_ring_addr = ring_listener.local_addr()?.to_string();
             // rank-indexed ring addresses: the coordinator's fresh
@@ -492,7 +649,7 @@ impl EpochCoordinator {
             // dialed in from
             let mut addrs: Vec<String> = Vec::with_capacity(n);
             for &orig in plan.world.iter() {
-                if orig == 0 {
+                if orig == self.my_orig {
                     addrs.push(my_ring_addr.clone());
                 } else {
                     let arr = members
@@ -503,7 +660,7 @@ impl EpochCoordinator {
                 }
             }
             for (new_rank, &orig) in plan.world.iter().enumerate() {
-                if orig == 0 {
+                if orig == self.my_orig {
                     continue;
                 }
                 let mut arr = members
@@ -522,46 +679,63 @@ impl EpochCoordinator {
                         } else {
                             Vec::new()
                         },
+                        succession: succession.clone(),
                     },
                 )?;
                 // rendezvous stream drops here; the data path is the
                 // fresh ring links only
             }
             let deadline = Instant::now() + self.cfg.connect_timeout;
-            let right = dial_right(&addrs[1], 0, deadline, &self.cfg)?;
-            let left = accept_left(&ring_listener, n - 1, deadline, &self.cfg)?;
-            Arc::new(RingTransport::assemble(n, 0, right, left, epoch)?)
+            let right = dial_right(&addrs[(my_seat + 1) % n], my_seat, deadline, &self.cfg)?;
+            let left = accept_left(&ring_listener, (my_seat + n - 1) % n, deadline, &self.cfg)?;
+            Arc::new(RingTransport::assemble(n, my_seat, right, left, epoch)?)
         };
         Ok(EpochSeat {
             epoch,
-            rank: 0,
+            rank: my_seat,
             world: plan.world,
             resume_t: plan.resume_t,
             snapshot: Vec::new(),
+            succession,
             transport: tp,
         })
     }
+
+    /// This coordinator's dense seat within `world` — seat 0, since the
+    /// coordinator is always the lowest live original rank.
+    fn my_seat(&self, world: &[u32]) -> usize {
+        world
+            .iter()
+            .position(|&r| r == self.my_orig)
+            .expect("the coordinator sits in its own world")
+    }
 }
 
-/// Dial the retained coordinator address, retrying until the connect
-/// timeout (between windows a joiner's connect can be refused while the
-/// backlog churns).
-fn dial_coord(cfg: &NetCfg) -> Result<TcpStream> {
+/// Pre-bind a member's standby listener: the socket it would
+/// coordinate the next epoch on if promoted. Bound once per process at
+/// seating time and kept for the process lifetime — a *live* member's
+/// succession entry therefore always accepts (a survivor's claim just
+/// waits in the backlog until the member notices the fault and
+/// promotes), while a refused dial reliably means the member is dead.
+/// That asymmetry is what makes the succession walk's promotion
+/// decision deterministic and split-brain free.
+pub fn bind_standby(cfg: &NetCfg) -> Result<(TcpListener, u16)> {
+    let listener = TcpListener::bind(wildcard_listen_addr(host_of(&cfg.coord_addr)))
+        .map_err(|e| Error::net(format!("cannot bind a standby listener: {e}")))?;
+    let port = listener.local_addr()?.port();
+    Ok((listener, port))
+}
+
+/// Dial an epoch coordinator address with the shared backoff train.
+fn dial_coord_at(addr: &str, cfg: &NetCfg, orig_rank: u32) -> Result<TcpStream> {
     let deadline = Instant::now() + cfg.connect_timeout;
-    loop {
-        match TcpStream::connect(&cfg.coord_addr) {
-            Ok(s) => return Ok(s),
-            Err(e) => {
-                if Instant::now() >= deadline {
-                    return Err(Error::net(format!(
-                        "cannot reach the epoch coordinator at {} within {:?}: {e}",
-                        cfg.coord_addr, cfg.connect_timeout
-                    )));
-                }
-                std::thread::sleep(Duration::from_millis(25));
-            }
-        }
-    }
+    dial_with_backoff(
+        addr,
+        "the epoch coordinator",
+        deadline,
+        orig_rank as u64,
+        None,
+    )
 }
 
 /// The fields of a received [`Frame::WelcomeEpoch`].
@@ -572,6 +746,7 @@ struct Welcome {
     resume_t: u64,
     right_addr: String,
     snapshot: Vec<u8>,
+    succession: Vec<String>,
 }
 
 /// Read the coordinator's answer; `want_epoch` is checked for survivors
@@ -586,6 +761,7 @@ fn expect_welcome(stream: &mut TcpStream, want_epoch: Option<u64>) -> Result<Wel
             resume_t,
             right_addr,
             snapshot,
+            succession,
         } => {
             if let Some(want) = want_epoch {
                 if epoch != want {
@@ -601,6 +777,7 @@ fn expect_welcome(stream: &mut TcpStream, want_epoch: Option<u64>) -> Result<Wel
                 resume_t,
                 right_addr,
                 snapshot,
+                succession,
             })
         }
         Frame::Reject { reason } => Err(Error::protocol(format!(
@@ -612,80 +789,22 @@ fn expect_welcome(stream: &mut TcpStream, want_epoch: Option<u64>) -> Result<Wel
     }
 }
 
-/// Survivor side of a star re-formation: claim a seat in `epoch` and
-/// keep the rendezvous stream as the new data-path stream to the hub.
-pub fn reform_star_client(
+/// Send `hello` over a connected coordinator stream, await the seating,
+/// and keep the stream as the new star's data path. `welcome_wait`
+/// bounds the wait for the Welcome (the coordinator may wait out the
+/// grace window, or — on a succession — first have to notice the fault
+/// itself).
+fn await_star_seat(
+    mut stream: TcpStream,
     cfg: &NetCfg,
-    epoch: u64,
-    orig_rank: u32,
-    next_t: u64,
+    hello: &Frame,
+    want_epoch: Option<u64>,
+    welcome_wait: Duration,
 ) -> Result<EpochSeat> {
-    let mut stream = dial_coord(cfg)?;
-    // the Welcome may take the whole reform budget (the coordinator
-    // waits out the grace window for slower survivors)
-    stream.set_read_timeout(Some(cfg.connect_timeout))?;
+    stream.set_read_timeout(Some(welcome_wait.max(Duration::from_millis(10))))?;
     stream.set_write_timeout(Some(cfg.io_timeout))?;
-    write_frame(
-        &mut stream,
-        &Frame::HelloEpoch {
-            epoch,
-            orig_rank,
-            next_t,
-            port: 0,
-        },
-    )?;
-    let w = expect_welcome(&mut stream, Some(epoch))?;
-    set_round_timeouts(&stream, cfg)?;
-    let n = w.world.len();
-    let tp = TcpTransport::client_from_parts(n, w.rank, stream, epoch)?;
-    Ok(EpochSeat {
-        epoch: w.epoch,
-        rank: w.rank,
-        world: w.world,
-        resume_t: w.resume_t,
-        snapshot: w.snapshot,
-        transport: Arc::new(tp),
-    })
-}
-
-/// Survivor side of a ring re-formation: bind a fresh ring listener,
-/// claim a seat in `epoch`, then re-link from the advertised table.
-pub fn reform_ring_client(
-    cfg: &NetCfg,
-    epoch: u64,
-    orig_rank: u32,
-    next_t: u64,
-) -> Result<EpochSeat> {
-    let ring_listener = TcpListener::bind(wildcard_listen_addr(host_of(&cfg.coord_addr)))
-        .map_err(|e| Error::net(format!("cannot bind a reform ring listener: {e}")))?;
-    let port = ring_listener.local_addr()?.port();
-    let mut coord = dial_coord(cfg)?;
-    coord.set_read_timeout(Some(cfg.connect_timeout))?;
-    coord.set_write_timeout(Some(cfg.io_timeout))?;
-    write_frame(
-        &mut coord,
-        &Frame::HelloEpoch {
-            epoch,
-            orig_rank,
-            next_t,
-            port,
-        },
-    )?;
-    let w = expect_welcome(&mut coord, Some(epoch))?;
-    drop(coord);
-    ring_links_from_welcome(cfg, &ring_listener, w)
-}
-
-/// Joiner side, star: ask to be seated at the next boundary; the
-/// returned seat carries the coordinator's sparsifier snapshot.
-pub fn join_star(cfg: &NetCfg, orig_rank: u32) -> Result<EpochSeat> {
-    let mut stream = dial_coord(cfg)?;
-    // the Welcome arrives at the next epoch boundary, one iteration +
-    // grace + reform away at worst
-    stream.set_read_timeout(Some(cfg.connect_timeout))?;
-    stream.set_write_timeout(Some(cfg.io_timeout))?;
-    write_frame(&mut stream, &Frame::HelloJoin { orig_rank, port: 0 })?;
-    let w = expect_welcome(&mut stream, None)?;
+    write_frame(&mut stream, hello)?;
+    let w = expect_welcome(&mut stream, want_epoch)?;
     set_round_timeouts(&stream, cfg)?;
     let n = w.world.len();
     let epoch = w.epoch;
@@ -696,29 +815,296 @@ pub fn join_star(cfg: &NetCfg, orig_rank: u32) -> Result<EpochSeat> {
         world: w.world,
         resume_t: w.resume_t,
         snapshot: w.snapshot,
+        succession: w.succession,
         transport: Arc::new(tp),
     })
 }
 
+/// Ring twin of [`await_star_seat`]: the coordinator stream only
+/// carries the seating; the data path is re-linked from the advertised
+/// neighbor table afterwards. `dialed_addr` is the address the
+/// coordinator was actually reached at — after a succession that is no
+/// longer `cfg.coord_addr`, and wildcard bind hosts in the neighbor
+/// table must be substituted with it.
+fn await_ring_seat(
+    mut coord: TcpStream,
+    cfg: &NetCfg,
+    dialed_addr: &str,
+    ring_listener: &TcpListener,
+    hello: &Frame,
+    want_epoch: Option<u64>,
+    welcome_wait: Duration,
+) -> Result<EpochSeat> {
+    coord.set_read_timeout(Some(welcome_wait.max(Duration::from_millis(10))))?;
+    coord.set_write_timeout(Some(cfg.io_timeout))?;
+    write_frame(&mut coord, hello)?;
+    let w = expect_welcome(&mut coord, want_epoch)?;
+    drop(coord);
+    ring_links_from_welcome(cfg, dialed_addr, ring_listener, w)
+}
+
+/// Survivor side of a star re-formation against a *live* coordinator:
+/// claim a seat in `epoch` at the bootstrap rendezvous address and keep
+/// the stream as the new data-path stream to the hub. (When the
+/// coordinator itself may be the casualty, use
+/// [`reform_via_succession`] instead.)
+pub fn reform_star_client(
+    cfg: &NetCfg,
+    epoch: u64,
+    orig_rank: u32,
+    next_t: u64,
+    standby_port: u16,
+) -> Result<EpochSeat> {
+    let stream = dial_coord_at(&cfg.coord_addr, cfg, orig_rank)?;
+    let hello = Frame::HelloEpoch {
+        epoch,
+        orig_rank,
+        next_t,
+        port: 0,
+        standby_port,
+    };
+    await_star_seat(stream, cfg, &hello, Some(epoch), cfg.connect_timeout)
+}
+
+/// Survivor side of a ring re-formation against a *live* coordinator:
+/// bind a fresh ring listener, claim a seat in `epoch`, then re-link
+/// from the advertised table.
+pub fn reform_ring_client(
+    cfg: &NetCfg,
+    epoch: u64,
+    orig_rank: u32,
+    next_t: u64,
+    standby_port: u16,
+) -> Result<EpochSeat> {
+    let ring_listener = TcpListener::bind(wildcard_listen_addr(host_of(&cfg.coord_addr)))
+        .map_err(|e| Error::net(format!("cannot bind a reform ring listener: {e}")))?;
+    let port = ring_listener.local_addr()?.port();
+    let coord = dial_coord_at(&cfg.coord_addr, cfg, orig_rank)?;
+    let hello = Frame::HelloEpoch {
+        epoch,
+        orig_rank,
+        next_t,
+        port,
+        standby_port,
+    };
+    await_ring_seat(
+        coord,
+        cfg,
+        &cfg.coord_addr,
+        &ring_listener,
+        &hello,
+        Some(epoch),
+        cfg.connect_timeout,
+    )
+}
+
+/// The outcome of walking the succession table after a fault.
+pub enum ReformOutcome {
+    /// Seated by a (possibly freshly promoted) coordinator.
+    Seated(EpochSeat),
+    /// Every candidate ahead of this member in the succession order is
+    /// dead: this member is the lowest surviving original rank and must
+    /// promote its standby listener into the new [`EpochCoordinator`].
+    Promote,
+}
+
+/// Walk the succession table to claim a seat in `epoch` after a fault
+/// that may have taken the coordinator itself.
+///
+/// Entries are tried in seat order. A dead entry refuses the dial (its
+/// listener died with its process) and the walk moves on; a live entry
+/// accepts — its standby is pre-bound — and the claim simply waits
+/// until that member either seats us (it is, or becomes, the
+/// coordinator) or the budget runs out. The first pass skips the entry
+/// the fault was attributed to (`lost`); later passes dial it too, so
+/// a misattribution costs one refused connect, not a seat. When every
+/// candidate ahead of `orig_rank` is unreachable the walk returns
+/// [`ReformOutcome::Promote`]: by the pre-bound-listener invariant they
+/// are all dead, so this member is the lowest survivor and exactly one
+/// member ever promotes. All dials ride [`DialBackoff`]'s jittered
+/// train and the whole walk is bounded by the connect timeout.
+#[allow(clippy::too_many_arguments)]
+pub fn reform_via_succession(
+    cfg: &NetCfg,
+    ring: bool,
+    epoch: u64,
+    orig_rank: u32,
+    next_t: u64,
+    standby_port: u16,
+    world: &[u32],
+    succession: &[String],
+    lost: Option<u32>,
+    flight: Option<&crate::obs::FlightRecorder>,
+) -> Result<ReformOutcome> {
+    let my_seat = world
+        .iter()
+        .position(|&r| r == orig_rank)
+        .ok_or_else(|| {
+            Error::invalid(format!(
+                "rank {orig_rank} is not part of the world it is re-forming from"
+            ))
+        })?;
+    if succession.len() != world.len() {
+        return Err(Error::protocol(format!(
+            "succession table covers {} seats, world has {}",
+            succession.len(),
+            world.len()
+        )));
+    }
+    let (ring_listener, ring_port) = if ring {
+        let l = TcpListener::bind(wildcard_listen_addr(host_of(&cfg.coord_addr)))
+            .map_err(|e| Error::net(format!("cannot bind a reform ring listener: {e}")))?;
+        let p = l.local_addr()?.port();
+        (Some(l), p)
+    } else {
+        (None, 0)
+    };
+    let hello = Frame::HelloEpoch {
+        epoch,
+        orig_rank,
+        next_t,
+        port: ring_port,
+        standby_port,
+    };
+    let deadline = Instant::now() + cfg.connect_timeout;
+    let mut backoff = DialBackoff::new(orig_rank as u64);
+    let mut skip_lost = true;
+    loop {
+        let mut live_predecessor = false;
+        let mut skipped = false;
+        for seat in 0..my_seat {
+            let entry = &succession[seat];
+            if entry.is_empty() {
+                // no standby advertised: not a coordinator candidate
+                continue;
+            }
+            if skip_lost && lost == Some(world[seat]) {
+                // the fault named this member; don't burn a dial on it
+                // (a dead host's connect can hang through SYN retries)
+                // while a live candidate may be waiting further on
+                skipped = true;
+                continue;
+            }
+            let addr =
+                substitute_wildcard_host(entry.clone(), host_of(&cfg.coord_addr));
+            let stream = match TcpStream::connect(&addr) {
+                Ok(s) => s,
+                Err(e) => {
+                    crate::log_debug!(
+                        "elastic",
+                        "succession seat {seat} (rank {}) refused at {addr}: {e}",
+                        world[seat]
+                    );
+                    continue;
+                }
+            };
+            live_predecessor = true;
+            let wait = deadline.saturating_duration_since(Instant::now());
+            let claimed = match &ring_listener {
+                Some(l) => {
+                    await_ring_seat(stream, cfg, &addr, l, &hello, Some(epoch), wait)
+                }
+                None => await_star_seat(stream, cfg, &hello, Some(epoch), wait),
+            };
+            match claimed {
+                Ok(seat) => return Ok(ReformOutcome::Seated(seat)),
+                Err(e) if Instant::now() < deadline => {
+                    // the candidate died under us (e.g. a second kill
+                    // racing the reform): keep walking — whoever is
+                    // next in line will take over
+                    crate::log_debug!(
+                        "elastic",
+                        "claim against succession seat {seat} (rank {}) failed ({e}); \
+                         walking on",
+                        world[seat]
+                    );
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        if !live_predecessor {
+            if skipped {
+                // every dialed predecessor is dead, but the attributed
+                // one was skipped: promotion must rest on an observed
+                // refusal, not on attribution alone — run a confirming
+                // pass that dials everyone
+                skip_lost = false;
+                continue;
+            }
+            if succession[my_seat].is_empty() {
+                return Err(Error::net(
+                    "every coordinator candidate ahead in the succession order is \
+                     dead and this member advertised no standby listener",
+                ));
+            }
+            return Ok(ReformOutcome::Promote);
+        }
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            return Err(Error::net(format!(
+                "no succession candidate seated rank {orig_rank} for epoch {epoch} \
+                 within {:?}",
+                cfg.connect_timeout
+            )));
+        }
+        let wait = backoff.next_wait().min(remaining);
+        if let Some(fr) = flight {
+            fr.record(
+                crate::obs::RecKind::DialRetry,
+                0,
+                backoff.attempt,
+                wait.as_millis() as u64,
+            );
+        }
+        skip_lost = false;
+        std::thread::sleep(wait);
+    }
+}
+
+/// Joiner side, star: ask to be seated at the next boundary; the
+/// returned seat carries the coordinator's sparsifier snapshot.
+pub fn join_star(cfg: &NetCfg, orig_rank: u32, standby_port: u16) -> Result<EpochSeat> {
+    let stream = dial_coord_at(&cfg.coord_addr, cfg, orig_rank)?;
+    // the Welcome arrives at the next epoch boundary, one iteration +
+    // grace + reform away at worst
+    let hello = Frame::HelloJoin {
+        orig_rank,
+        port: 0,
+        standby_port,
+    };
+    await_star_seat(stream, cfg, &hello, None, cfg.connect_timeout)
+}
+
 /// Joiner side, ring: bind a fresh ring listener, ask to be seated at
 /// the next boundary, then re-link from the advertised table.
-pub fn join_ring(cfg: &NetCfg, orig_rank: u32) -> Result<EpochSeat> {
+pub fn join_ring(cfg: &NetCfg, orig_rank: u32, standby_port: u16) -> Result<EpochSeat> {
     let ring_listener = TcpListener::bind(wildcard_listen_addr(host_of(&cfg.coord_addr)))
         .map_err(|e| Error::net(format!("cannot bind a rejoin ring listener: {e}")))?;
     let port = ring_listener.local_addr()?.port();
-    let mut coord = dial_coord(cfg)?;
-    coord.set_read_timeout(Some(cfg.connect_timeout))?;
-    coord.set_write_timeout(Some(cfg.io_timeout))?;
-    write_frame(&mut coord, &Frame::HelloJoin { orig_rank, port })?;
-    let w = expect_welcome(&mut coord, None)?;
-    drop(coord);
-    ring_links_from_welcome(cfg, &ring_listener, w)
+    let coord = dial_coord_at(&cfg.coord_addr, cfg, orig_rank)?;
+    let hello = Frame::HelloJoin {
+        orig_rank,
+        port,
+        standby_port,
+    };
+    await_ring_seat(
+        coord,
+        cfg,
+        &cfg.coord_addr,
+        &ring_listener,
+        &hello,
+        None,
+        cfg.connect_timeout,
+    )
 }
 
 /// Shared ring tail: dial the advertised right neighbor, accept the
-/// left one, and assemble the new-epoch transport.
+/// left one, and assemble the new-epoch transport. `dialed_addr` is
+/// where this rank actually reached the coordinator — the substitute
+/// host for any wildcard bind address in the neighbor table.
 fn ring_links_from_welcome(
     cfg: &NetCfg,
+    dialed_addr: &str,
     ring_listener: &TcpListener,
     w: Welcome,
 ) -> Result<EpochSeat> {
@@ -726,7 +1112,7 @@ fn ring_links_from_welcome(
     let epoch = w.epoch;
     // the coordinator's own ring address may carry a wildcard bind
     // host; dial the host this rank reached the coordinator on
-    let right_addr = substitute_wildcard_host(w.right_addr, host_of(&cfg.coord_addr));
+    let right_addr = substitute_wildcard_host(w.right_addr, host_of(dialed_addr));
     let deadline = Instant::now() + cfg.connect_timeout;
     let right = dial_right(&right_addr, w.rank, deadline, cfg)?;
     let left = accept_left(ring_listener, w.rank - 1, deadline, cfg)?;
@@ -737,6 +1123,7 @@ fn ring_links_from_welcome(
         world: w.world,
         resume_t: w.resume_t,
         snapshot: w.snapshot,
+        succession: w.succession,
         transport: Arc::new(tp),
     })
 }
@@ -778,16 +1165,30 @@ mod tests {
         // sees the HelloJoin first
         let (tx, rx) = std::sync::mpsc::channel::<()>();
         let h1 = std::thread::spawn(move || {
-            let tp = TcpTransport::client(3, 1, &c1).unwrap();
+            let seat = reform_star_client(&c1, 0, 1, 0, 0).unwrap();
+            assert_eq!(seat.world, vec![0, 1, 2]);
+            one_round(&seat);
             // rank 1 "dies": its transport simply drops
-            drop(tp);
+            drop(seat);
         });
         let h2 = std::thread::spawn(move || {
-            let tp = TcpTransport::client(3, 2, &c2).unwrap();
-            drop(tp);
+            let (_standby, sb_port) = bind_standby(&c2).unwrap();
+            let seat = reform_star_client(&c2, 0, 2, 0, sb_port).unwrap();
+            assert_eq!(
+                seat.succession[0], c2.coord_addr,
+                "seat 0 of the table is the rendezvous address"
+            );
+            assert_eq!(seat.succession[1], "", "rank 1 advertised no standby");
+            assert!(
+                seat.succession[2].ends_with(&format!(":{sb_port}")),
+                "rank 2's entry carries its standby port: {:?}",
+                seat.succession
+            );
+            one_round(&seat);
+            drop(seat);
             // survive into epoch 1 (claim arrives while the
             // coordinator is still collecting)
-            let seat = reform_star_client(&c2, 1, 2, 7).unwrap();
+            let seat = reform_star_client(&c2, 1, 2, 7, sb_port).unwrap();
             assert_eq!(seat.world, vec![0, 2]);
             assert_eq!(seat.rank, 1, "dense re-rank");
             assert_eq!(seat.resume_t, 7, "resume at the max survivor next_t");
@@ -795,7 +1196,7 @@ mod tests {
             one_round(&seat);
             // epoch 2: the restarted rank 1 is back
             rx.recv().unwrap();
-            let seat = reform_star_client(&c2, 2, 2, 9).unwrap();
+            let seat = reform_star_client(&c2, 2, 2, 9, sb_port).unwrap();
             assert_eq!(seat.world, vec![0, 1, 2]);
             assert_eq!(seat.rank, 2);
             one_round(&seat);
@@ -804,6 +1205,7 @@ mod tests {
         let seat0 = coord.form_initial_star(3).unwrap();
         assert_eq!(seat0.epoch, 0);
         assert_eq!(seat0.world, vec![0, 1, 2]);
+        one_round(&seat0);
         h1.join().unwrap();
         // rank 1 is known dead (the typed fault attributed it), so the
         // reform does not wait out the grace window for it
@@ -816,7 +1218,7 @@ mod tests {
         // the dead rank restarts and asks back in
         let c3 = c.clone();
         let h3 = std::thread::spawn(move || {
-            let seat = join_star(&c3, 1).unwrap();
+            let seat = join_star(&c3, 1, 0).unwrap();
             assert_eq!(seat.epoch, 2);
             assert_eq!(seat.world, vec![0, 1, 2]);
             assert_eq!(seat.rank, 1);
@@ -847,9 +1249,10 @@ mod tests {
         let c1 = c.clone();
         let c2 = c.clone();
         let h1 = std::thread::spawn(move || {
-            let tp = RingTransport::client(3, 1, &c1).unwrap();
-            drop(tp);
-            let seat = reform_ring_client(&c1, 1, 1, 4).unwrap();
+            let seat = reform_ring_client(&c1, 0, 1, 0, 0).unwrap();
+            one_round(&seat);
+            drop(seat);
+            let seat = reform_ring_client(&c1, 1, 1, 4, 0).unwrap();
             assert_eq!(seat.world, vec![0, 1]);
             assert_eq!(seat.rank, 1);
             assert_eq!(seat.resume_t, 4);
@@ -858,12 +1261,14 @@ mod tests {
         });
         let h2 = std::thread::spawn(move || {
             // rank 2 "dies" after the initial formation
-            let tp = RingTransport::client(3, 2, &c2).unwrap();
-            drop(tp);
+            let seat = reform_ring_client(&c2, 0, 2, 0, 0).unwrap();
+            one_round(&seat);
+            drop(seat);
         });
         let mut coord = EpochCoordinator::bind(&c, Duration::from_millis(800)).unwrap();
         let seat0 = coord.form_initial_ring(3).unwrap();
         assert_eq!(seat0.transport.epoch(), 0);
+        one_round(&seat0);
         h2.join().unwrap();
         let seat1 = coord.reform_ring(1, &[0, 1, 2], &[2], 3, &[]).unwrap();
         assert_eq!(seat1.epoch, 1);
@@ -871,6 +1276,81 @@ mod tests {
         assert_eq!(seat1.resume_t, 4);
         one_round(&seat1);
         h1.join().unwrap();
+    }
+
+    /// Coordinator death: rank 0 forms epoch 0 and dies; rank 1 walks
+    /// the succession table, finds every predecessor gone, promotes its
+    /// pre-bound standby listener, and seats rank 2 — which walked the
+    /// same table and parked its claim at rank 1's standby.
+    #[test]
+    fn succession_promotes_the_lowest_survivor_after_the_coordinator_dies() {
+        let addr = free_loopback_addr().unwrap();
+        let c = cfg(&addr);
+        let c1 = c.clone();
+        let c2 = c.clone();
+        let h1 = std::thread::spawn(move || {
+            let (standby, sb_port) = bind_standby(&c1).unwrap();
+            let seat0 = reform_star_client(&c1, 0, 1, 0, sb_port).unwrap();
+            let world0 = seat0.world.clone();
+            let succ0 = seat0.succession.clone();
+            one_round(&seat0);
+            drop(seat0);
+            // the fault is attributed to rank 0: walk the table
+            let outcome = reform_via_succession(
+                &c1, false, 1, 1, 5, sb_port, &world0, &succ0, Some(0), None,
+            )
+            .unwrap();
+            assert!(
+                matches!(outcome, ReformOutcome::Promote),
+                "rank 1 is the lowest survivor"
+            );
+            let mut coord = EpochCoordinator::promote(
+                standby,
+                1,
+                succ0[1].clone(),
+                &c1,
+                Duration::from_millis(800),
+            );
+            assert_eq!(coord.orig_rank(), 1);
+            let seat1 = coord.reform_star(1, &world0, &[0], 5, &[]).unwrap();
+            assert_eq!(seat1.world, vec![1, 2]);
+            assert_eq!(seat1.rank, 0, "the promoted coordinator sits at seat 0");
+            assert_eq!(
+                seat1.succession[0], succ0[1],
+                "the new table leads with the promoted member's standby"
+            );
+            one_round(&seat1);
+        });
+        let h2 = std::thread::spawn(move || {
+            let (_standby, sb_port) = bind_standby(&c2).unwrap();
+            let seat0 = reform_star_client(&c2, 0, 2, 0, sb_port).unwrap();
+            let world0 = seat0.world.clone();
+            let succ0 = seat0.succession.clone();
+            one_round(&seat0);
+            drop(seat0);
+            let outcome = reform_via_succession(
+                &c2, false, 1, 2, 5, sb_port, &world0, &succ0, Some(0), None,
+            )
+            .unwrap();
+            let seat1 = match outcome {
+                ReformOutcome::Seated(s) => s,
+                ReformOutcome::Promote => panic!("rank 1 precedes rank 2 in the succession"),
+            };
+            assert_eq!(seat1.epoch, 1);
+            assert_eq!(seat1.world, vec![1, 2]);
+            assert_eq!(seat1.rank, 1);
+            assert_eq!(seat1.resume_t, 5);
+            one_round(&seat1);
+        });
+        let mut coord = EpochCoordinator::bind(&c, Duration::from_millis(800)).unwrap();
+        let seat0 = coord.form_initial_star(3).unwrap();
+        assert_eq!(seat0.succession[0], addr);
+        one_round(&seat0);
+        // rank 0 dies: seat and rendezvous listener both close
+        drop(seat0);
+        drop(coord);
+        h1.join().unwrap();
+        h2.join().unwrap();
     }
 
     /// A lone survivor forms a single-rank epoch once the grace window

@@ -95,6 +95,96 @@ pub(crate) fn bind_with_retry(addr: &str, deadline: Instant) -> Result<TcpListen
     }
 }
 
+/// Bounded exponential backoff with deterministic jitter for dial
+/// retries: base wait 10 ms doubling to a 250 ms cap (mirroring
+/// [`bind_with_retry`]), plus a jitter drawn from an LCG seeded with
+/// the dialer's original rank — every rank's retry train is
+/// reproducible run-to-run, yet distinct ranks desynchronize instead
+/// of hammering a recovering coordinator in lockstep.
+pub(crate) struct DialBackoff {
+    base: Duration,
+    lcg: u64,
+    /// Retry attempts taken so far (0 until the first wait).
+    pub attempt: u64,
+}
+
+impl DialBackoff {
+    /// Backoff train seeded from `seed` (the dialer's original rank).
+    pub fn new(seed: u64) -> Self {
+        DialBackoff {
+            base: Duration::from_millis(10),
+            // one LCG step ensures rank 0's stream differs from the raw
+            // seed progression of rank 1
+            lcg: seed
+                .wrapping_mul(6_364_136_223_846_793_005)
+                .wrapping_add(1_442_695_040_888_963_407),
+            attempt: 0,
+        }
+    }
+
+    /// Next wait: current base plus up to half a base of jitter; the
+    /// base then doubles toward the 250 ms cap.
+    pub fn next_wait(&mut self) -> Duration {
+        self.attempt += 1;
+        self.lcg = self
+            .lcg
+            .wrapping_mul(6_364_136_223_846_793_005)
+            .wrapping_add(1_442_695_040_888_963_407);
+        let half = (self.base.as_millis() as u64 / 2).max(1);
+        let jitter = Duration::from_millis((self.lcg >> 33) % half);
+        let wait = self.base + jitter;
+        self.base = (self.base * 2).min(Duration::from_millis(250));
+        wait
+    }
+}
+
+/// Dial `addr`, retrying with [`DialBackoff`] until `deadline` — the
+/// shared connect path for every rendezvous/epoch dial (the listener
+/// may still be binding, or a succession takeover may still be in
+/// flight). Each retry is recorded as a
+/// [`RecKind::DialRetry`](crate::obs::RecKind::DialRetry) event when a
+/// flight recorder is attached. The total retry budget is exactly the
+/// caller's deadline: the last sleep is clipped to it and expiry
+/// surfaces the underlying connect error.
+pub(crate) fn dial_with_backoff(
+    addr: &str,
+    what: &str,
+    deadline: Instant,
+    seed: u64,
+    flight: Option<&crate::obs::FlightRecorder>,
+) -> Result<TcpStream> {
+    let mut backoff = DialBackoff::new(seed);
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                let now = Instant::now();
+                if now >= deadline {
+                    return Err(Error::net(format!(
+                        "cannot reach {what} at {addr} within the rendezvous budget: {e}"
+                    )));
+                }
+                let wait = backoff.next_wait().min(deadline - now);
+                if let Some(fr) = flight {
+                    fr.record(
+                        crate::obs::RecKind::DialRetry,
+                        0,
+                        backoff.attempt,
+                        wait.as_millis() as u64,
+                    );
+                }
+                crate::log_debug!(
+                    "net",
+                    "DialRetry: {what} at {addr} not accepting yet (attempt {}, backing off {:?}): {e}",
+                    backoff.attempt,
+                    wait
+                );
+                std::thread::sleep(wait);
+            }
+        }
+    }
+}
+
 /// Hub side: bind `coord_addr`, collect one valid [`Frame::Hello`] per
 /// rank in `1..n`, then release everyone with [`Frame::Welcome`].
 /// Returns the streams rank-indexed (slot 0, the hub itself, is `None`).
@@ -257,20 +347,7 @@ pub fn client_rendezvous(n: usize, rank: usize, cfg: &NetCfg) -> Result<TcpStrea
         )));
     }
     let deadline = Instant::now() + cfg.connect_timeout;
-    let mut stream = loop {
-        match TcpStream::connect(&cfg.coord_addr) {
-            Ok(s) => break s,
-            Err(e) => {
-                if Instant::now() >= deadline {
-                    return Err(Error::net(format!(
-                        "cannot reach hub at {} within {:?}: {e}",
-                        cfg.coord_addr, cfg.connect_timeout
-                    )));
-                }
-                std::thread::sleep(Duration::from_millis(25));
-            }
-        }
-    };
+    let mut stream = dial_with_backoff(&cfg.coord_addr, "hub", deadline, rank as u64, None)?;
     // Welcome may take up to the full rendezvous budget (the hub waits
     // for every rank before releasing anyone)
     stream.set_read_timeout(Some(cfg.connect_timeout))?;

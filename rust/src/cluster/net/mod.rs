@@ -4,7 +4,7 @@
 //! This is the subsystem that takes the cluster engine across process
 //! (and host) boundaries, std-only:
 //!
-//! * [`codec`] — length-prefixed little-endian framing (protocol v5)
+//! * [`codec`] — length-prefixed little-endian framing (protocol v6)
 //!   with a magic/version header and FNV-1a checksum for every
 //!   [`Message`] variant plus the handshake frames, the
 //!   [`Frame::Shard`] frame carrying one reduced value shard of a
@@ -20,10 +20,21 @@
 //!   who died, not a generic poison string), and
 //!   [`Frame::HelloEpoch`] / [`Frame::HelloJoin`] /
 //!   [`Frame::WelcomeEpoch`] carry the epoch re-formation rendezvous.
+//!   v6 adds coordinator succession: both hello frames advertise the
+//!   claimant's pre-bound standby-listener port, and every
+//!   `WelcomeEpoch` carries the seat-ordered **succession table** —
+//!   the address each member would coordinate the next re-rendezvous
+//!   on (`""` = no standby advertised) — so survivors of a dead
+//!   coordinator know exactly where to re-rendezvous without any
+//!   central party.
 //! * [`handshake`] — rank 0 listens as the rendezvous hub; ranks 1..n
 //!   dial in, claim their rank (world size, protocol version and
 //!   duplicate claims validated), and are released together. All waits
-//!   are deadline-bounded ([`NetCfg`]). The hub binds with
+//!   are deadline-bounded ([`NetCfg`]), and every rendezvous/epoch
+//!   dial rides a bounded exponential-backoff train with
+//!   deterministic per-rank jitter (`handshake::DialBackoff`) capped
+//!   at the rendezvous deadline — a slow coordinator bind is absorbed
+//!   instead of surfacing as a spurious peer loss. The hub binds with
 //!   retry-with-backoff (closing the free-port TOCTOU race under
 //!   `launch`) and releases a claimed rank slot if its claimant dies
 //!   before the coordinated `Welcome`, so a crashed-and-restarted rank
@@ -54,11 +65,20 @@
 //!   `--sparse-shards` the same hop schedule forwards
 //!   [`Frame::SparseShard`] entry lists (indices re-based shard-local
 //!   on the wire), shrinking each hop to its live entries.
-//! * [`elastic`] — epoch-based membership (protocol v5): the bootstrap
+//! * [`elastic`] — epoch-based membership (protocol v6): the bootstrap
 //!   coordinator (original rank 0) retains its rendezvous listener in
-//!   an [`elastic::EpochCoordinator`] across membership epochs. When a
-//!   rank dies mid-round, survivors drain the poisoned transport and
-//!   reconnect with [`Frame::HelloEpoch`]; the coordinator collects
+//!   an [`elastic::EpochCoordinator`] across membership epochs, and
+//!   every other member pre-binds a *standby* listener whose address
+//!   rides the succession table of each `WelcomeEpoch`. When a rank
+//!   dies mid-round, survivors drain the poisoned transport and
+//!   reconnect with [`Frame::HelloEpoch`] — walking the succession
+//!   table in seat order ([`elastic::reform_via_succession`]) when the
+//!   casualty might be the coordinator itself: a refused dial proves
+//!   death (standbys live as long as their process), so the first live
+//!   entry is the rightful coordinator, and a member that observes an
+//!   all-dead prefix promotes its own standby into the new
+//!   [`elastic::EpochCoordinator`] ([`elastic::ReformOutcome`]) — a
+//!   dead rank 0 costs one epoch, not the run. The coordinator collects
 //!   claims until every expected survivor arrives (ranks attributed
 //!   dead by the typed fault are excluded up front) or a grace window
 //!   expires, then seats everyone at epoch `e + 1` with
@@ -91,7 +111,7 @@ pub mod ring;
 pub mod tcp;
 
 pub use codec::{Frame, PROTOCOL_VERSION};
-pub use elastic::{EpochCoordinator, EpochSeat};
+pub use elastic::{EpochCoordinator, EpochSeat, ReformOutcome};
 pub use handshake::{free_loopback_addr, NetCfg};
 pub use ring::RingTransport;
 pub use tcp::TcpTransport;

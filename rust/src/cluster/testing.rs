@@ -89,7 +89,7 @@ pub fn elastic_socket_cluster(
     for rank in 1..n {
         let c = cfg.clone();
         clients.push(std::thread::spawn(move || {
-            SocketMember::client(n, rank, &c, ring)
+            SocketMember::client(n, rank, &c, ring, grace)
         }));
     }
     let hub = SocketMember::coordinator(n, &cfg, ring, grace);

@@ -48,6 +48,13 @@ pub enum RecKind {
     /// A membership reform: this rank re-formed into a new epoch
     /// (`a` = new epoch, `b` = new world size).
     Reform,
+    /// A coordinator succession: the member with the lowest surviving
+    /// original rank took over the epoch rendezvous (`a` = promoted
+    /// original rank, `b` = the epoch it coordinates).
+    CoordinatorPromoted,
+    /// A rendezvous/epoch dial was retried under backoff (`a` = attempt
+    /// number, `b` = backoff wait in milliseconds).
+    DialRetry,
 }
 
 impl RecKind {
@@ -62,6 +69,8 @@ impl RecKind {
             RecKind::SparseShard => "sparse-shard",
             RecKind::PeerLost => "peer-lost",
             RecKind::Reform => "reform",
+            RecKind::CoordinatorPromoted => "coord-promoted",
+            RecKind::DialRetry => "dial-retry",
         }
     }
 }

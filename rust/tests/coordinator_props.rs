@@ -703,6 +703,103 @@ fn prop_retile_conserves_the_grid_over_membership_chains() {
     );
 }
 
+/// ISSUE 10 satellite — coordinator succession: over arbitrary worlds
+/// and arbitrary death orders, `elect_coordinator` must be
+/// deterministic (always the minimum live original rank — the answer
+/// every survivor computes independently), total (any survivor set
+/// elects someone; only an all-dead world elects nobody), never elect
+/// a dead rank, independent of the seat ordering of the world slice,
+/// and monotone — succession only ever moves to a *higher* original
+/// rank, so two survivors can never disagree about who yields to whom.
+#[test]
+fn prop_coordinator_succession_is_deterministic_and_total() {
+    use exdyna::cluster::elect_coordinator;
+    use std::collections::BTreeSet;
+
+    struct DeathOrderStrat;
+    impl Strategy for DeathOrderStrat {
+        // (seat-ordered world of distinct original ranks, death order)
+        type Value = (Vec<u32>, Vec<usize>);
+        fn gen(&self, rng: &mut Rng) -> Self::Value {
+            let n = 1 + rng.usize(16);
+            let mut world = Vec::with_capacity(n);
+            let mut next = rng.usize(3) as u32;
+            for _ in 0..n {
+                world.push(next);
+                next += 1 + rng.usize(4) as u32;
+            }
+            let mut order: Vec<usize> = (0..n).collect();
+            for i in (1..n).rev() {
+                let j = rng.usize(i + 1);
+                order.swap(i, j);
+            }
+            (world, order)
+        }
+        fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+            let (world, order) = v;
+            if world.len() > 1 {
+                let half = world.len() / 2;
+                let w: Vec<u32> = world[..half].to_vec();
+                let o: Vec<usize> = (0..half).collect();
+                vec![(w, o)]
+            } else {
+                Vec::new()
+            }
+        }
+    }
+
+    check(114, 300, &DeathOrderStrat, |(world, order)| {
+        let n = world.len();
+        let mut dead: BTreeSet<u32> = BTreeSet::new();
+        let mut prev = elect_coordinator(world, &dead)
+            .ok_or("a fully live world must elect a coordinator")?;
+        if prev != world[0] {
+            return Err(format!(
+                "initial coordinator {prev} is not seat 0 ({})",
+                world[0]
+            ));
+        }
+        for (step, &die) in order.iter().enumerate() {
+            dead.insert(world[die]);
+            let elected = elect_coordinator(world, &dead);
+            let min_live = world.iter().copied().filter(|r| !dead.contains(r)).min();
+            if elected != min_live {
+                return Err(format!(
+                    "step {step}: elected {elected:?} but the minimum live rank is {min_live:?}"
+                ));
+            }
+            // seat-order independence: the election is a property of the
+            // membership SET, so a reversed seat listing must agree
+            let rev: Vec<u32> = world.iter().rev().copied().collect();
+            if elect_coordinator(&rev, &dead) != elected {
+                return Err(format!("step {step}: election depends on seat order"));
+            }
+            if step + 1 == n {
+                if elected.is_some() {
+                    return Err("all ranks dead, yet someone was elected".into());
+                }
+            } else {
+                let c = elected.ok_or_else(|| {
+                    format!(
+                        "step {step}: no coordinator elected with {} survivors left",
+                        n - step - 1
+                    )
+                })?;
+                if dead.contains(&c) {
+                    return Err(format!("step {step}: elected the dead rank {c}"));
+                }
+                if c < prev {
+                    return Err(format!(
+                        "step {step}: succession moved backwards ({prev} -> {c})"
+                    ));
+                }
+                prev = c;
+            }
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_error_feedback_conservation_in_sim_round() {
     // one full exdyna round: selected ∪ carried == accumulator exactly

@@ -21,6 +21,11 @@
 //!    including the measured `m_compute`/`m_comm` wall-clock fields the
 //!    CSV schema deliberately excludes — survive
 //!    `write_ndjson` → `read_ndjson` bit-exactly.
+//! 4. **The audit survives an epoch boundary.** After the coordinator
+//!    dies and a successor is promoted, the re-formed world of n − 1 is
+//!    a first-class ring: its measured payload bytes must still equal
+//!    the cost-model predictions exactly — the counters neither drift,
+//!    double-count the re-rendezvous, nor keep pricing the old world.
 
 use exdyna::cluster::testing::{ring_cluster, tcp_cluster};
 use exdyna::cluster::{
@@ -240,6 +245,124 @@ fn sparse_shard_wire_bytes_equal_cost_model_predictions_exactly() {
     );
     // one tcp cell per n, plus one ring cell per rank
     assert_eq!(report.rows.len(), 2 + (2 + 4));
+}
+
+/// ISSUE 10 satellite — guarantee 4: the wire audit across a promotion
+/// epoch boundary. A 4-rank elastic ring completes one epoch-0 round,
+/// the coordinator (original rank 0) dies, rank 1 promotes its standby
+/// and the survivors re-form at epoch 1 as a 3-rank world; the audited
+/// rounds on the *new* transports must match the cost model for n = 3
+/// exactly, on every survivor's link, for both collectives.
+#[test]
+fn wire_audit_stays_exact_across_a_promotion_epoch_boundary() {
+    use exdyna::cluster::testing::elastic_socket_cluster;
+    use exdyna::cluster::Membership;
+
+    let n = 4usize;
+    let b = LEN * CostModel::DENSE_ENTRY_BYTES;
+    let (_net, members) =
+        elastic_socket_cluster(n, true, Duration::from_secs(2), Duration::from_secs(30))
+            .expect("elastic ring must build");
+    let rows: Vec<Vec<AuditRow>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = members
+            .into_iter()
+            .enumerate()
+            .map(|(rank, (member, seat))| {
+                scope.spawn(move || -> Vec<AuditRow> {
+                    // epoch 0: one full-world round, so the boundary is
+                    // crossed with non-zero counters on every rank
+                    {
+                        let ep = Endpoint::new(seat.rank, seat.transport.as_ref());
+                        ep.allgather_floats(Arc::new(vec![rank as f32; LEN])).unwrap();
+                    }
+                    if rank == 0 {
+                        // the coordinator dies: poison the ring links and
+                        // close the rendezvous listener (member drop), so
+                        // the survivors' succession walk sees the refusal
+                        std::thread::sleep(Duration::from_millis(50));
+                        seat.transport.abort();
+                        drop(member);
+                        return Vec::new();
+                    }
+                    let err = {
+                        let ep = Endpoint::new(seat.rank, seat.transport.as_ref());
+                        ep.allgather_floats(Arc::new(vec![0.0f32; LEN]))
+                            .expect_err("the dead coordinator must poison the round")
+                    };
+                    assert!(
+                        err.is_membership_fault() || err.looks_like_peer_loss(),
+                        "rank {rank}: unexpected fault {err}"
+                    );
+                    seat.transport.abort();
+                    let seat = member
+                        .reform(rank, 2, None, Some(0))
+                        .unwrap_or_else(|e| panic!("rank {rank} failed to re-form: {e}"));
+                    assert_eq!(seat.epoch, 1, "rank {rank}: wrong epoch");
+                    assert_eq!(seat.world, vec![1, 2, 3], "rank {rank}: wrong world");
+                    let n_new = seat.world.len();
+                    let ep = Endpoint::new(seat.rank, seat.transport.as_ref());
+                    let mut shards = FloatBufPool::new();
+                    let mut out = Vec::new();
+                    let mut rows = Vec::new();
+                    for kind in [CollectiveKind::Allgather, CollectiveKind::Rsag] {
+                        let before = seat.transport.counters(seat.rank).unwrap().snapshot();
+                        for _ in 0..ROUNDS {
+                            match kind {
+                                CollectiveKind::Allgather => {
+                                    ep.allgather_floats(Arc::new(vec![rank as f32; LEN]))
+                                        .unwrap();
+                                }
+                                CollectiveKind::Rsag => {
+                                    ep.reduce_scatter_allgather(
+                                        Arc::new(vec![1.0f32; LEN]),
+                                        &mut shards,
+                                        &mut out,
+                                    )
+                                    .unwrap();
+                                }
+                            }
+                        }
+                        let d = seat
+                            .transport
+                            .counters(seat.rank)
+                            .unwrap()
+                            .snapshot()
+                            .since(&before);
+                        assert_eq!(d.aborts, 0, "epoch 1 {kind} rank {rank}");
+                        assert_eq!(
+                            d.payload_rx_bytes,
+                            (ROUNDS * predicted_recv_bytes(kind, n_new, b)) as u64,
+                            "epoch 1 {kind} rank {rank} recv"
+                        );
+                        rows.push(AuditRow::new(
+                            TransportKind::Ring,
+                            kind,
+                            n_new,
+                            ROUNDS as u64,
+                            b,
+                            d.payload_tx_bytes,
+                        ));
+                    }
+                    rows
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("audit worker must not panic"))
+            .collect()
+    });
+    let mut report = AuditReport::new();
+    for row in rows.into_iter().flatten() {
+        report.push(row);
+    }
+    assert!(
+        report.all_exact(),
+        "post-promotion wire bytes diverge from the cost model:\n{}",
+        report.render()
+    );
+    // one ring cell per survivor per collective
+    assert_eq!(report.rows.len(), 2 * (n - 1));
 }
 
 fn small_gen(n: usize) -> SynthGen {

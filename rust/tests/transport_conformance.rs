@@ -891,10 +891,10 @@ fn chaos_cfg(n: usize, iters: usize) -> SimCfg {
     }
 }
 
-fn chaos_ecfg(kill: (usize, usize), grace: Duration) -> ElasticCfg {
+fn chaos_ecfg(kill: &[(usize, usize)], grace: Duration) -> ElasticCfg {
     ElasticCfg {
         enabled: true,
-        chaos_kill_at: Some(kill),
+        chaos_kill_at: kill.to_vec(),
         grace,
         ..ElasticCfg::default()
     }
@@ -941,10 +941,34 @@ fn chaos_kill_survivors_recover_in_process() {
             Ok(Box::new(ExDyna::new(n_g, nr, ExDynaCfg::default_for(nr))?))
         };
         let cfg = chaos_cfg(n, iters);
-        let ecfg = chaos_ecfg(kill, Duration::from_secs(5));
+        let ecfg = chaos_ecfg(&[kill], Duration::from_secs(5));
         let trace = run_elastic_threaded(&gen, &mk_sp, &cfg, flavor, &ecfg)
             .unwrap_or_else(|e| panic!("[{name}] elastic run failed: {e}"));
         assert_survivor_records(name, 0, &trace.records, iters);
+    }
+}
+
+/// ISSUE 10, in-process half: killing rank 0 itself must not end the
+/// run — the in-process twin promotes the lowest surviving original
+/// rank to coordinator and the survivors finish at epoch 1 on both
+/// elastic flavors. The engine's canonical trace is the lowest-ranked
+/// survivor's (rank 1 here, the promoted coordinator).
+#[test]
+fn chaos_kill_rank0_promotes_a_successor_in_process() {
+    for (name, flavor) in [
+        ("local", ElasticFlavor::Local),
+        ("ring-local", ElasticFlavor::Ring),
+    ] {
+        let (n, iters, kill) = (4usize, 12usize, (5usize, 0usize));
+        let gen = chaos_gen(n);
+        let mk_sp = |n_g: usize, nr: usize| -> Result<Box<dyn Sparsifier>> {
+            Ok(Box::new(ExDyna::new(n_g, nr, ExDynaCfg::default_for(nr))?))
+        };
+        let cfg = chaos_cfg(n, iters);
+        let ecfg = chaos_ecfg(&[kill], Duration::from_secs(5));
+        let trace = run_elastic_threaded(&gen, &mk_sp, &cfg, flavor, &ecfg)
+            .unwrap_or_else(|e| panic!("[{name}] elastic run failed: {e}"));
+        assert_survivor_records(name, 1, &trace.records, iters);
     }
 }
 
@@ -958,7 +982,7 @@ fn chaos_kill_survivors_recover_on_socket_transports() {
         let (n, iters, kill) = (4usize, 12usize, (5usize, 2usize));
         let gen = chaos_gen(n);
         let cfg = chaos_cfg(n, iters);
-        let ecfg = chaos_ecfg(kill, Duration::from_secs(3));
+        let ecfg = chaos_ecfg(&[kill], Duration::from_secs(3));
         let (_net, members) = elastic_socket_cluster(n, ring, ecfg.grace, Duration::from_secs(20))
             .unwrap_or_else(|e| panic!("[{name}] elastic cluster must build: {e}"));
         let results: Vec<Result<Vec<IterRecord>>> = std::thread::scope(|scope| {
@@ -995,6 +1019,119 @@ fn chaos_kill_survivors_recover_on_socket_transports() {
     }
 }
 
+/// ISSUE 10, socket half: killing the *coordinator* (original rank 0)
+/// on the loopback star and ring. The survivors observe the refused
+/// dial to the dead coordinator, walk the succession table, and the
+/// lowest surviving original rank (rank 1) promotes its pre-bound
+/// standby listener into the epoch-1 coordinator; every survivor
+/// finishes the run seated under the new senior.
+#[test]
+fn chaos_kill_rank0_promotes_a_successor_on_socket_transports() {
+    for (name, ring) in [("tcp", false), ("ring", true)] {
+        let (n, iters, kill) = (4usize, 12usize, (5usize, 0usize));
+        let gen = chaos_gen(n);
+        let cfg = chaos_cfg(n, iters);
+        let ecfg = chaos_ecfg(&[kill], Duration::from_secs(3));
+        let (_net, members) = elastic_socket_cluster(n, ring, ecfg.grace, Duration::from_secs(20))
+            .unwrap_or_else(|e| panic!("[{name}] elastic cluster must build: {e}"));
+        let results: Vec<Result<(Vec<IterRecord>, u32)>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = members
+                .into_iter()
+                .enumerate()
+                .map(|(rank, (member, seat))| {
+                    let (gen, cfg, ecfg) = (&gen, &cfg, &ecfg);
+                    scope.spawn(move || {
+                        let sp: Box<dyn Sparsifier> = Box::new(
+                            ExDyna::new(gen.n_g(), n, ExDynaCfg::default_for(n)).unwrap(),
+                        );
+                        run_elastic_seat(gen, cfg, rank, sp, seat, &member, ecfg)
+                            .map(|recs| (recs, member.senior_rank()))
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("chaos worker must not panic"))
+                .collect()
+        });
+        match &results[0] {
+            Err(Error::ChaosKilled { rank, t }) => {
+                assert_eq!((*t, *rank), kill, "[{name}] wrong kill site");
+            }
+            other => panic!("[{name}] the coordinator must report its death, got {other:?}"),
+        }
+        for rank in 1..n {
+            let (recs, senior) = results[rank]
+                .as_ref()
+                .unwrap_or_else(|e| panic!("[{name}] survivor {rank} failed: {e}"));
+            assert_survivor_records(name, rank, recs, iters);
+            assert_eq!(
+                *senior, 1,
+                "[{name}] rank {rank}: the lowest surviving original rank must be senior"
+            );
+        }
+    }
+}
+
+/// ISSUE 10, multi-fault half: a two-kill schedule over the socket star
+/// — rank 0 dies at iteration 4, then the freshly *promoted*
+/// coordinator (rank 1) dies at iteration 8. The remaining survivors
+/// walk the succession table a second time, rank 2 promotes, and both
+/// finish the run at epoch >= 2.
+#[test]
+fn a_two_kill_schedule_survives_back_to_back_coordinator_deaths() {
+    let (n, iters) = (4usize, 12usize);
+    let schedule = [(4usize, 0usize), (8usize, 1usize)];
+    let gen = chaos_gen(n);
+    let cfg = chaos_cfg(n, iters);
+    let ecfg = chaos_ecfg(&schedule, Duration::from_secs(3));
+    let (_net, members) = elastic_socket_cluster(n, false, ecfg.grace, Duration::from_secs(20))
+        .expect("elastic star must build");
+    let results: Vec<Result<(Vec<IterRecord>, u32)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = members
+            .into_iter()
+            .enumerate()
+            .map(|(rank, (member, seat))| {
+                let (gen, cfg, ecfg) = (&gen, &cfg, &ecfg);
+                scope.spawn(move || {
+                    let sp: Box<dyn Sparsifier> = Box::new(
+                        ExDyna::new(gen.n_g(), n, ExDynaCfg::default_for(n)).unwrap(),
+                    );
+                    run_elastic_seat(gen, cfg, rank, sp, seat, &member, ecfg)
+                        .map(|recs| (recs, member.senior_rank()))
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("chaos worker must not panic"))
+            .collect()
+    });
+    for &(t, victim) in &schedule {
+        match &results[victim] {
+            Err(Error::ChaosKilled { rank, t: kt }) => {
+                assert_eq!((*kt, *rank), (t, victim), "wrong kill site for rank {victim}");
+            }
+            other => panic!("rank {victim} must report its injected death, got {other:?}"),
+        }
+    }
+    for rank in 2..n {
+        let (recs, senior) = results[rank]
+            .as_ref()
+            .unwrap_or_else(|e| panic!("survivor {rank} failed: {e}"));
+        assert_survivor_records("two-kill", rank, recs, iters);
+        assert!(
+            recs.last().unwrap().epoch >= 2,
+            "rank {rank}: two coordinator deaths must cost two epochs, trace ends at epoch {}",
+            recs.last().unwrap().epoch
+        );
+        assert_eq!(
+            *senior, 2,
+            "rank {rank}: after both deaths the senior must be rank 2"
+        );
+    }
+}
+
 /// ISSUE 9, rejoin half: after the chaos kill on the socket star, the
 /// dead rank's replacement registers a join claim; the coordinator
 /// seats it at the next epoch boundary carrying the donor's sparsifier
@@ -1005,7 +1142,7 @@ fn a_chaos_killed_rank_rejoins_the_socket_star_with_state_restored() {
     let (n, iters, kill) = (3usize, 40usize, (4usize, 1usize));
     let gen = chaos_gen(n);
     let cfg = chaos_cfg(n, iters);
-    let ecfg = chaos_ecfg(kill, Duration::from_secs(2));
+    let ecfg = chaos_ecfg(&[kill], Duration::from_secs(2));
     let (net, members) = elastic_socket_cluster(n, false, ecfg.grace, Duration::from_secs(20))
         .expect("elastic star must build");
     let died = AtomicBool::new(false);
@@ -1035,7 +1172,7 @@ fn a_chaos_killed_rank_rejoins_the_socket_star_with_state_restored() {
                 while !died.load(Ordering::SeqCst) {
                     std::thread::sleep(Duration::from_micros(200));
                 }
-                let (member, seat) = SocketMember::rejoin(kill.1, net, false)?;
+                let (member, seat) = SocketMember::rejoin(kill.1, net, false, ecfg.grace)?;
                 assert!(
                     seat.sp_import.is_some(),
                     "a rejoin seat must carry the donor's sparsifier snapshot"
